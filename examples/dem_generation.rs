@@ -1,0 +1,89 @@
+//! DEM generation — the paper's motivating geosciences workload: build a
+//! raster digital elevation model from a scattered LiDAR-like survey.
+//!
+//! ```bash
+//! cargo run --release --example dem_generation -- [nx] [ny] [n_samples]
+//! ```
+//!
+//! Interpolates the analytic terrain surface with (a) standard IDW
+//! (alpha = 2, Shepard 1968) and (b) AIDW, reports the RMSE of each
+//! against ground truth — demonstrating *why* adaptive alpha exists —
+//! and writes `dem_aidw.pgm` / `dem_idw.pgm` / `dem_truth.pgm`.
+
+use aidw::aidw::serial::rmse;
+use aidw::prelude::*;
+use aidw::raster::Raster;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let nx: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(96);
+    let ny: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(96);
+    let n_samples: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(3000);
+
+    let side = 100.0;
+    // survey concentrated in clusters (flight lines / accessible areas)
+    // plus scattered fill — a realistic mixed-density acquisition, the
+    // regime where adaptive alpha matters
+    let mut data = workload::clustered(n_samples * 7 / 10, side, 12, 3.0, 7);
+    let fill = workload::uniform_square(n_samples * 3 / 10, side, 8);
+    for i in 0..fill.len() {
+        data.push(fill.xs[i], fill.ys[i], 0.0);
+    }
+    // sample the true surface at every survey point
+    for i in 0..data.len() {
+        data.zs[i] = workload::terrain_height(data.xs[i], data.ys[i], side);
+    }
+    println!(
+        "survey: {} samples (70% clustered, 30% scattered), raster {nx}x{ny}",
+        data.len()
+    );
+
+    let queries = workload::raster_queries(nx, ny, side);
+    let truth: Vec<f64> = queries
+        .iter()
+        .map(|&(x, y)| workload::terrain_height(x, y, side))
+        .collect();
+
+    // --- standard IDW (constant alpha = 2) ------------------------------
+    let t0 = std::time::Instant::now();
+    let z_idw = aidw::aidw::serial::idw_serial(&data, &queries, 2.0);
+    let t_idw = t0.elapsed().as_secs_f64();
+
+    // --- AIDW through the coordinator -----------------------------------
+    let coord = Coordinator::with_defaults()?;
+    coord.register_dataset("survey", data)?;
+    let t1 = std::time::Instant::now();
+    let resp = coord.interpolate(aidw::coordinator::InterpolationRequest::new(
+        "survey",
+        queries.clone(),
+    ))?;
+    let t_aidw = t1.elapsed().as_secs_f64();
+    let z_aidw = resp.values;
+
+    // --- report ----------------------------------------------------------
+    let rmse_idw = rmse(&z_idw, &truth);
+    let rmse_aidw = rmse(&z_aidw, &truth);
+    println!("\n                      RMSE      time");
+    println!("standard IDW (a=2):  {rmse_idw:7.3}   {:7.1} ms", t_idw * 1e3);
+    println!(
+        "AIDW ({:?}):  {rmse_aidw:7.3}   {:7.1} ms  (kNN {:.1} ms + interp {:.1} ms)",
+        coord.backend(),
+        t_aidw * 1e3,
+        resp.knn_s * 1e3,
+        resp.interp_s * 1e3
+    );
+    println!(
+        "\nAIDW improves RMSE by {:.1}% over standard IDW on this mixed-density survey",
+        100.0 * (rmse_idw - rmse_aidw) / rmse_idw
+    );
+
+    for (name, vals) in [
+        ("dem_truth.pgm", &truth),
+        ("dem_idw.pgm", &z_idw),
+        ("dem_aidw.pgm", &z_aidw),
+    ] {
+        Raster::new(nx, ny, vals.clone()).write_pgm(std::path::Path::new(name))?;
+        println!("wrote {name}");
+    }
+    Ok(())
+}

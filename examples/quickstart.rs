@@ -1,0 +1,62 @@
+//! Quickstart: interpolate scattered samples with AIDW in a few lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Shows both entry points:
+//! 1. the one-call pure-rust pipeline (`aidw::pipeline::interpolate_improved`);
+//! 2. the serving coordinator (grid kNN + PJRT artifacts when present).
+
+use aidw::prelude::*;
+
+fn main() -> Result<()> {
+    // --- 1. generate a toy survey: 2000 scattered samples of a terrain ---
+    let side = 100.0;
+    let data = workload::terrain_samples(2000, side, 0.5, 42);
+    println!("data: {} samples over a {side}x{side} region", data.len());
+
+    // --- 2. the one-call API -------------------------------------------
+    let queries = workload::raster_queries(8, 8, side);
+    let params = AidwParams::default(); // k=10, alpha levels per Lu & Wong
+    let z = pipeline::interpolate_improved(&data, &queries, &params);
+    println!("\npure-rust improved pipeline (grid kNN + adaptive IDW):");
+    for row in 0..4 {
+        let vals: Vec<String> =
+            (0..4).map(|c| format!("{:6.1}", z[row * 8 + c])).collect();
+        println!("  z[{row}][0..4] = {}", vals.join(" "));
+    }
+
+    // --- 3. the serving coordinator ------------------------------------
+    let coord = Coordinator::with_defaults()?;
+    println!("\ncoordinator backend: {:?}", coord.backend());
+    coord.register_dataset("survey", data)?;
+    let resp = coord.interpolate(
+        ::aidw::coordinator::InterpolationRequest::new("survey", queries.clone()),
+    )?;
+    println!(
+        "coordinator: {} predictions  (kNN {:.1} ms, interpolation {:.1} ms)",
+        resp.values.len(),
+        resp.knn_s * 1e3,
+        resp.interp_s * 1e3
+    );
+
+    // both paths agree
+    let max_diff = z
+        .iter()
+        .zip(&resp.values)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("max |pure-rust - coordinator| = {max_diff:.2e}");
+
+    // ground-truth check: the terrain is analytic, so we can score RMSE
+    let truth: Vec<f64> = queries
+        .iter()
+        .map(|&(x, y)| workload::terrain_height(x, y, side))
+        .collect();
+    println!(
+        "RMSE vs analytic terrain: {:.2}",
+        serial::rmse(&resp.values, &truth)
+    );
+    Ok(())
+}

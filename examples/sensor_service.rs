@@ -1,0 +1,99 @@
+//! Sensor-network serving — a PM2.5-style deployment (cf. Li et al. 2014
+//! in the paper's related work): a TCP interpolation service fed by a
+//! sparse station network, queried concurrently by many clients that each
+//! want a city-block raster of the pollution field.
+//!
+//! ```bash
+//! cargo run --release --example sensor_service -- [n_stations] [n_clients]
+//! ```
+//!
+//! Demonstrates the full serving stack: TCP JSON protocol -> dynamic
+//! batcher -> two-stage pipeline; reports per-client latency and service
+//! throughput, plus batching effectiveness from the coordinator metrics.
+
+use std::sync::Arc;
+
+use aidw::coordinator::{Coordinator, CoordinatorConfig};
+use aidw::prelude::*;
+use aidw::service::{Client, Server};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_stations: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let n_clients: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    // --- serve -----------------------------------------------------------
+    let coord = Arc::new(Coordinator::new(CoordinatorConfig::default())?);
+    println!("coordinator backend: {:?}", coord.backend());
+    let server = Server::start(coord.clone(), "127.0.0.1:0")?;
+    let addr = server.addr();
+    println!("sensor service on {addr}");
+
+    // --- register the station network -------------------------------------
+    let side = 100.0; // a 100x100 km region
+    let stations = workload::sensor_stations(n_stations, side, 17);
+    {
+        let mut admin = Client::connect(addr)?;
+        admin.register("pm25", &stations)?;
+    }
+    println!("registered {n_stations} stations (hotspot-biased placement)");
+
+    // --- concurrent clients ------------------------------------------------
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        handles.push(std::thread::spawn(move || -> (usize, f64, f64) {
+            let mut client = Client::connect(addr).expect("connect");
+            // each client asks for a 16x16 raster over its own district
+            let mut rng = aidw::rng::Pcg32::seeded(1000 + c as u64);
+            let ox = rng.uniform(0.0, side * 0.75);
+            let oy = rng.uniform(0.0, side * 0.75);
+            let mut queries = Vec::with_capacity(256);
+            for j in 0..16 {
+                for i in 0..16 {
+                    queries.push((
+                        ox + (i as f64 + 0.5) * side * 0.25 / 16.0,
+                        oy + (j as f64 + 0.5) * side * 0.25 / 16.0,
+                    ));
+                }
+            }
+            let t = std::time::Instant::now();
+            let z = client.interpolate("pm25", &queries).expect("interpolate");
+            let dt = t.elapsed().as_secs_f64();
+            let mean = z.iter().sum::<f64>() / z.len() as f64;
+            (z.len(), dt, mean)
+        }));
+    }
+    let mut total_queries = 0usize;
+    let mut latencies = Vec::new();
+    for h in handles {
+        let (n, dt, mean) = h.join().expect("client thread");
+        total_queries += n;
+        latencies.push(dt);
+        println!("  client done: {n} queries in {:.1} ms (mean PM2.5 {mean:.1})", dt * 1e3);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // --- report -------------------------------------------------------------
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = latencies[latencies.len() / 2];
+    let p_max = latencies[latencies.len() - 1];
+    println!("\n{n_clients} concurrent clients, {total_queries} queries total");
+    println!("wall time {:.1} ms -> {:.0} queries/s", wall * 1e3, total_queries as f64 / wall);
+    println!("client latency: p50 {:.1} ms, max {:.1} ms", p50 * 1e3, p_max * 1e3);
+
+    let m = coord.metrics();
+    println!(
+        "coordinator: {} requests folded into {} batches (mean latency {:.1} ms, p99 {:.1} ms)",
+        m.requests,
+        m.batches,
+        m.mean_latency_s * 1e3,
+        m.p99_latency_s * 1e3
+    );
+    println!(
+        "stage split: kNN {:.1} ms, interpolation {:.1} ms",
+        m.knn_s * 1e3,
+        m.interp_s * 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,214 @@
+"""AOT pipeline: lower every L2 artifact to HLO text + manifest.json.
+
+``make artifacts`` runs this once at build time; the rust runtime then
+loads ``artifacts/*.hlo.txt`` through ``HloModuleProto::from_text_file``
+and python is never on the request path again.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Every artifact is lowered with ``return_tuple=True``; the rust side unwraps
+the result tuple.  ``manifest.json`` records the exact input/output
+shapes+dtypes so the runtime can validate calls before dispatch.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# --------------------------------------------------------------------------
+# Artifact registry
+# --------------------------------------------------------------------------
+
+# Production shapes: Q-batch 1024 queries, M-chunk 4096 data points, k-buffer
+# 16 wide (runtime k <= 16 slices columns).  Test shapes are smaller so the
+# integration tests compile fast.
+Q_PROD, M_PROD = 1024, 4096
+Q_TEST, M_TEST = 256, 1024
+# k-buffer width = the paper's k: the extract-min merge costs K passes per
+# tile, so K_BUF 16 -> 10 bought a 1.6x on the original-algorithm kNN stage
+# (EXPERIMENTS.md §Perf).  Re-emit with a wider K_BUF for runtime k > 10.
+K_BUF = 10
+K_DEFAULT = 10  # paper's k
+# Local-AIDW (extension A5) neighbor-panel width: stage 2 weights each
+# query over its N_LOCAL gathered nearest neighbors instead of all m.
+N_LOCAL = 64
+N_LOCAL_TEST = 32
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def _arg(name, *shape):
+    return {"name": name, "dtype": "f32", "shape": list(shape)}
+
+
+def _interp_chunk_args(q, m):
+    specs = [_spec(q), _spec(q), _spec(q), _spec(m), _spec(m), _spec(m), _spec(m)]
+    descr = [_arg("qx", q), _arg("qy", q), _arg("alpha", q),
+             _arg("dx", m), _arg("dy", m), _arg("dz", m), _arg("valid", m)]
+    return specs, descr
+
+
+def _knn_chunk_args(q, m, kbuf):
+    specs = [_spec(q), _spec(q), _spec(m), _spec(m), _spec(m), _spec(q, kbuf)]
+    descr = [_arg("qx", q), _arg("qy", q), _arg("dx", m), _arg("dy", m),
+             _arg("valid", m), _arg("best_in", q, kbuf)]
+    return specs, descr
+
+
+def _fused_args(q, m):
+    specs = [_spec(q), _spec(q), _spec(m), _spec(m), _spec(m), _spec(m),
+             _spec(), _spec()]
+    descr = [_arg("qx", q), _arg("qy", q), _arg("dx", m), _arg("dy", m),
+             _arg("dz", m), _arg("valid", m), _arg("n_eff"), _arg("area")]
+    return specs, descr
+
+
+def _local_args(q, n):
+    specs = [_spec(q), _spec(q), _spec(q), _spec(),
+             _spec(q, n), _spec(q, n), _spec(q, n), _spec(q, n)]
+    descr = [_arg("qx", q), _arg("qy", q), _arg("r_obs", q), _arg("r_exp"),
+             _arg("nx", q, n), _arg("ny", q, n), _arg("nz", q, n),
+             _arg("nvalid", q, n)]
+    return specs, descr
+
+
+def _oneshot_args(q, m):
+    specs = [_spec(q), _spec(q), _spec(q), _spec(),
+             _spec(m), _spec(m), _spec(m), _spec(m)]
+    descr = [_arg("qx", q), _arg("qy", q), _arg("r_obs", q), _arg("r_exp"),
+             _arg("dx", m), _arg("dy", m), _arg("dz", m), _arg("valid", m)]
+    return specs, descr
+
+
+def _registry():
+    """name -> (fn, input_specs, input_descr, output_descr)."""
+    arts = {}
+
+    for q, m, tag in [(Q_PROD, M_PROD, "prod"), (Q_TEST, M_TEST, "test")]:
+        specs, descr = _interp_chunk_args(q, m)
+        outs = [_arg("sum_w", q), _arg("sum_wz", q)]
+        arts[f"interp_naive_chunk_q{q}_m{m}"] = (
+            model.interp_naive_chunk_artifact, specs, descr, outs)
+        arts[f"interp_tiled_chunk_q{q}_m{m}"] = (
+            model.interp_tiled_chunk_artifact, specs, descr, outs)
+
+        kspecs, kdescr = _knn_chunk_args(q, m, K_BUF)
+        arts[f"knn_chunk_q{q}_m{m}_k{K_BUF}"] = (
+            model.knn_chunk, kspecs, kdescr, [_arg("best_out", q, K_BUF)])
+
+        arts[f"alpha_q{q}"] = (
+            model.alpha_stage, [_spec(q), _spec()],
+            [_arg("r_obs", q), _arg("r_exp")], [_arg("alpha", q)])
+
+        arts[f"knn_finalize_q{q}_k{K_DEFAULT}"] = (
+            functools.partial(model.knn_finalize, k_used=K_DEFAULT),
+            [_spec(q, K_BUF)], [_arg("best", q, K_BUF)], [_arg("r_obs", q)])
+
+        n_local = N_LOCAL if tag == "prod" else N_LOCAL_TEST
+        lspecs, ldescr = _local_args(q, n_local)
+        arts[f"local_interp_q{q}_n{n_local}"] = (
+            model.local_interp_artifact, lspecs, ldescr, [_arg("z", q)])
+
+    # Fused originals + improved one-shots at test size (integration tests
+    # and the small-problem fast path).
+    q, m = Q_TEST, M_TEST
+    fspecs, fdescr = _fused_args(q, m)
+    for tiled, tag in [(False, "naive"), (True, "tiled")]:
+        arts[f"original_fused_{tag}_q{q}_m{m}_k{K_DEFAULT}"] = (
+            functools.partial(model.original_fused, k=K_DEFAULT, tiled=tiled),
+            fspecs, fdescr, [_arg("z", q)])
+    ospecs, odescr = _oneshot_args(q, m)
+    for tiled, tag in [(False, "naive"), (True, "tiled")]:
+        arts[f"improved_oneshot_{tag}_q{q}_m{m}"] = (
+            functools.partial(model.improved_interp_oneshot, tiled=tiled),
+            ospecs, odescr, [_arg("z", q)])
+
+    return arts
+
+
+# --------------------------------------------------------------------------
+# Lowering
+# --------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_artifact(fn, specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def emit(out_dir: str, only: str | None = None, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 1, "q_prod": Q_PROD, "m_prod": M_PROD,
+                "q_test": Q_TEST, "m_test": M_TEST,
+                "k_buf": K_BUF, "k_default": K_DEFAULT,
+                "n_local": N_LOCAL, "n_local_test": N_LOCAL_TEST,
+                "artifacts": []}
+    for name, (fn, specs, in_descr, out_descr) in sorted(_registry().items()):
+        if only and only not in name:
+            continue
+        fname = f"{name}.hlo.txt"
+        text = lower_artifact(fn, specs)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({
+            "name": name, "file": fname,
+            "inputs": in_descr, "outputs": out_descr,
+        })
+        if verbose:
+            print(f"  {fname}  ({len(text)/1024:.0f} KiB)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json "
+              f"to {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=None,
+                    help="artifact directory (default: <repo>/artifacts)")
+    ap.add_argument("--only", default=None,
+                    help="substring filter over artifact names")
+    ap.add_argument("--list", action="store_true", help="list and exit")
+    args = ap.parse_args()
+
+    if args.list:
+        for name in sorted(_registry()):
+            print(name)
+        return
+
+    out_dir = args.out_dir
+    if out_dir is None:
+        here = os.path.dirname(os.path.abspath(__file__))
+        out_dir = os.path.join(os.path.dirname(os.path.dirname(here)),
+                               "artifacts")
+    emit(out_dir, only=args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: block-tiled AIDW weighted interpolation (paper §4.2.2).
+
+The paper's *tiled* CUDA kernel stages data-point coordinates through shared
+memory so every thread in a block reads each data point from fast memory.
+On TPU the same insight maps to the BlockSpec schedule: the (Q, M) iteration
+space is cut into (Q_BLK, D_BLK) tiles; for each grid step Pallas stages one
+query panel and one data tile into VMEM, and the kernel accumulates the
+partial inverse-distance sums in the output block, which stays resident in
+VMEM across the data-tile axis (``arbitrary`` / sequential semantics).
+
+HBM traffic drops from O(Q*M) point reads (the naive kernel) to
+O(M * Q/Q_BLK) — exactly the paper's ``n / threadsPerBlock`` reduction.
+
+CPU note: the artifact is lowered with ``interpret=True`` so the grid loop
+becomes plain HLO (scan + dynamic-slice); the tiling survives as loop
+blocking, which is also the right optimization for CPU caches.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Squared-distance floor — keep identical to ref.EPS_D2.
+EPS_D2 = 1e-12
+
+# Default tile shape.  (256 queries x 512 data points) keeps the per-step
+# working set at ~0.7 MB f32 (query panel 256*3 + data tile 512*4 + a
+# 256x512 weight tile) — far below the 16 MiB VMEM budget; the weight tile
+# dominates and is the term to shrink first if k tiles are fused later.
+Q_BLK_DEFAULT = 256
+D_BLK_DEFAULT = 512
+
+
+def _interp_kernel(qx_ref, qy_ref, alpha_ref, dx_ref, dy_ref, dz_ref,
+                   valid_ref, sw_ref, swz_ref):
+    """One (q-block, d-block) grid step: accumulate partial IDW sums.
+
+    Grid layout is (num_q_blocks, num_d_blocks); axis 0 is parallel across
+    query blocks, axis 1 sequentially streams data tiles (the accumulator
+    output block is revisited, so axis 1 must be ``arbitrary``).
+    """
+    d_step = pl.program_id(1)
+
+    # First data tile for this query block: zero the accumulators.
+    @pl.when(d_step == 0)
+    def _init():
+        sw_ref[...] = jnp.zeros_like(sw_ref)
+        swz_ref[...] = jnp.zeros_like(swz_ref)
+
+    qx = qx_ref[...]          # (Q_BLK,)
+    qy = qy_ref[...]
+    alpha = alpha_ref[...]
+    dx = dx_ref[...]          # (D_BLK,)
+    dy = dy_ref[...]
+    dz = dz_ref[...]
+    valid = valid_ref[...]
+
+    ddx = qx[:, None] - dx[None, :]
+    ddy = qy[:, None] - dy[None, :]
+    d2 = jnp.maximum(ddx * ddx + ddy * ddy, EPS_D2)
+    # w = d^-alpha = exp(-alpha/2 * log d2); padding lanes are zeroed by the
+    # valid mask instead of a branch (no divergence).
+    w = jnp.exp(-0.5 * alpha[:, None] * jnp.log(d2)) * valid[None, :]
+
+    sw_ref[...] += jnp.sum(w, axis=1)
+    swz_ref[...] += jnp.sum(w * dz[None, :], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("q_blk", "d_blk"))
+def interp_tiled_partial(qx, qy, alpha, dx, dy, dz, valid,
+                         q_blk=Q_BLK_DEFAULT, d_blk=D_BLK_DEFAULT):
+    """Tiled partial IDW sums: returns (sum_w, sum_wz) per query.
+
+    Shapes: qx/qy/alpha (Q,), dx/dy/dz/valid (M,); Q % q_blk == 0 and
+    M % d_blk == 0 (the rust coordinator pads to artifact shape).
+    """
+    nq, nd = qx.shape[0], dx.shape[0]
+    assert nq % q_blk == 0 and nd % d_blk == 0, (nq, nd, q_blk, d_blk)
+    grid = (nq // q_blk, nd // d_blk)
+
+    qspec = pl.BlockSpec((q_blk,), lambda i, j: (i,))
+    dspec = pl.BlockSpec((d_blk,), lambda i, j: (j,))
+    ospec = pl.BlockSpec((q_blk,), lambda i, j: (i,))
+
+    sw, swz = pl.pallas_call(
+        _interp_kernel,
+        grid=grid,
+        in_specs=[qspec, qspec, qspec, dspec, dspec, dspec, dspec],
+        out_specs=[ospec, ospec],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq,), jnp.float32),
+            jax.ShapeDtypeStruct((nq,), jnp.float32),
+        ],
+        interpret=True,  # CPU-PJRT target; see module docstring.
+    )(qx, qy, alpha, dx, dy, dz, valid)
+    return sw, swz
+
+
+def interp_tiled(qx, qy, alpha, dx, dy, dz, valid,
+                 q_blk=Q_BLK_DEFAULT, d_blk=D_BLK_DEFAULT):
+    """Full tiled interpolation: partial sums -> prediction (Eq. 1)."""
+    sw, swz = interp_tiled_partial(qx, qy, alpha, dx, dy, dz, valid,
+                                   q_blk=q_blk, d_blk=d_blk)
+    return swz / sw

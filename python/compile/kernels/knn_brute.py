@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: tiled brute-force kNN distances (the *original*
+algorithm's search, paper §2.3 / Mei et al. 2015).
+
+The paper's original GPU AIDW finds the k nearest data points for every
+interpolated point with a per-thread global scan: keep a sorted k-buffer of
+the smallest squared distances, stream every data point through it.  This
+kernel reproduces that formulation as a tile-parallel program:
+
+  * the (Q, M) space is tiled exactly like the interpolation kernel;
+  * each grid step computes a (Q_BLK, D_BLK) tile of squared distances and
+    merges it into the running per-query k-buffer held in the output block
+    (VMEM-resident across the data axis);
+  * the merge extracts the k smallest of concat(kbuf, tile) by k rounds of
+    vectorized extract-min (see `topk_small`) — the natural SIMD
+    re-expression of the paper's insert-and-swap selection.  A full
+    `jnp.sort` merge is 3.4x slower on CPU-XLA (EXPERIMENTS.md §Perf);
+    `lax.top_k` would be faster still but lowers to the `topk` HLO op,
+    which xla_extension 0.5.1's text parser rejects;
+  * squared distances only; sqrt is deferred to the epilogue (paper
+    §4.1.4's "remarkable implementation detail").
+
+The k-buffer width is fixed at compile time (pad k up; the runtime slices
+the first k columns it needs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.aidw_tiled import D_BLK_DEFAULT, Q_BLK_DEFAULT
+
+# Sentinel for "no point": +inf keeps padded lanes out of every k-buffer.
+# (a python float, not a jnp scalar — pallas kernels must not capture traced
+# constants from module scope)
+INF = float("inf")
+
+
+def topk_small(m, k):
+    """The k smallest values per row of `m`, ascending: (Q, k).
+
+    k rounds of vectorized extract-min: take the row minimum, knock the
+    first occurrence out with +inf, repeat.  All operations are wide
+    vector min/compare — ~3.4x faster than XLA's generic comparator sort
+    at the (Q=256, 528) merge width this kernel runs at (EXPERIMENTS.md
+    §Perf), and it lowers to plain HLO the 0.5.1 text parser accepts.
+    """
+    cols = jax.lax.broadcasted_iota(jnp.int32, m.shape, 1)
+
+    def body(m, _):
+        v = jnp.min(m, axis=1)
+        idx = jnp.argmin(m, axis=1)  # first occurrence -> duplicates survive
+        mask = cols == idx[:, None]
+        return jnp.where(mask, INF, m), v
+
+    _, vs = jax.lax.scan(body, m, None, length=k)
+    return vs.T
+
+
+def _knn_kernel(k, qx_ref, qy_ref, dx_ref, dy_ref, valid_ref, best_ref):
+    """One (q-block, d-block) step: merge a distance tile into the k-buffer."""
+    d_step = pl.program_id(1)
+
+    @pl.when(d_step == 0)
+    def _init():
+        best_ref[...] = jnp.full_like(best_ref, INF)
+
+    qx = qx_ref[...]
+    qy = qy_ref[...]
+    dx = dx_ref[...]
+    dy = dy_ref[...]
+    valid = valid_ref[...]
+
+    ddx = qx[:, None] - dx[None, :]
+    ddy = qy[:, None] - dy[None, :]
+    d2 = ddx * ddx + ddy * ddy
+    d2 = jnp.where(valid[None, :] > 0, d2, INF)
+
+    merged = jnp.concatenate([best_ref[...], d2], axis=1)
+    best_ref[...] = topk_small(merged, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "q_blk", "d_blk"))
+def knn_brute_topk(qx, qy, dx, dy, valid, k,
+                   q_blk=Q_BLK_DEFAULT, d_blk=D_BLK_DEFAULT):
+    """k smallest squared distances per query, ascending: (Q, k) f32.
+
+    Q % q_blk == 0, M % d_blk == 0 (runtime pads); masked lanes never win.
+    """
+    nq, nd = qx.shape[0], dx.shape[0]
+    assert nq % q_blk == 0 and nd % d_blk == 0, (nq, nd, q_blk, d_blk)
+    grid = (nq // q_blk, nd // d_blk)
+
+    qspec = pl.BlockSpec((q_blk,), lambda i, j: (i,))
+    dspec = pl.BlockSpec((d_blk,), lambda i, j: (j,))
+    ospec = pl.BlockSpec((q_blk, k), lambda i, j: (i, 0))
+
+    best = pl.pallas_call(
+        functools.partial(_knn_kernel, k),
+        grid=grid,
+        in_specs=[qspec, qspec, dspec, dspec, dspec],
+        out_specs=ospec,
+        out_shape=jax.ShapeDtypeStruct((nq, k), jnp.float32),
+        interpret=True,  # CPU-PJRT target
+    )(qx, qy, dx, dy, valid)
+    return best
+
+
+def merge_topk(best_a, best_b):
+    """Merge two sorted k-buffers (the chunk-streaming combine inside the
+    `knn_chunk` artifact; associative + commutative over chunks)."""
+    k = best_a.shape[1]
+    return topk_small(jnp.concatenate([best_a, best_b], axis=1), k)
+
+
+def knn_brute_avg_distance(qx, qy, dx, dy, valid, k,
+                           q_blk=Q_BLK_DEFAULT, d_blk=D_BLK_DEFAULT):
+    """Average distance to the k nearest points (Eq. 3): kernel + epilogue.
+
+    sqrt happens exactly once, here, per the paper's deferred-sqrt detail.
+    """
+    best = knn_brute_topk(qx, qy, dx, dy, valid, k, q_blk=q_blk, d_blk=d_blk)
+    return jnp.mean(jnp.sqrt(best), axis=1)

@@ -1,0 +1,143 @@
+"""L2: the AIDW compute graphs that get AOT-lowered to PJRT artifacts.
+
+Each public function here is one *artifact*: a fixed-shape jax function that
+``aot.py`` lowers to HLO text for the rust runtime.  The rust coordinator
+streams arbitrary problem sizes through these fixed shapes:
+
+  * queries are padded up to the artifact's Q and processed in Q-batches;
+  * data points are streamed in M-sized chunks with a 0/1 validity mask;
+  * ``interp_*_chunk`` returns partial sums (sum w, sum w*z) which the
+    coordinator accumulates and divides (the decomposition is exact —
+    see python/tests/test_model.py::test_chunked_equals_oneshot);
+  * ``knn_chunk`` threads a sorted k-buffer of squared distances through
+    the chunk stream (monoid merge, also exact).
+
+Two interpolation variants mirror the paper's §4.2:
+
+  * ``interp_naive_chunk``  — dense broadcast over the whole chunk (the
+    paper's global-memory kernel: every thread re-reads every data point);
+  * ``interp_tiled_chunk``  — the Pallas block-tiled kernel (the paper's
+    shared-memory kernel: data staged tile-by-tile into fast memory).
+
+The *original* algorithm (Mei et al. 2015) fuses brute-force kNN into the
+same pass; ``original_fused`` reproduces it for the Table-1/3 baselines.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile import alpha as alpha_mod
+from compile.kernels import ref
+from compile.kernels.aidw_tiled import interp_tiled_partial
+from compile.kernels.knn_brute import knn_brute_topk, merge_topk
+from compile.kernels.local_interp import interp_local
+
+
+# --------------------------------------------------------------------------
+# Stage 2 artifacts: weighted interpolating (Eq. 1)
+# --------------------------------------------------------------------------
+
+def interp_naive_chunk(qx, qy, alpha, dx, dy, dz, valid):
+    """Naive (global-memory analog) partial IDW sums over one data chunk.
+
+    Returns (sum_w, sum_wz), each (Q,) f32.
+    """
+    return ref.weighted_partial_sums(qx, qy, dx, dy, dz, alpha, valid)
+
+
+def interp_tiled_chunk(qx, qy, alpha, dx, dy, dz, valid):
+    """Tiled (shared-memory analog, L1 Pallas) partial IDW sums."""
+    return interp_tiled_partial(qx, qy, alpha, dx, dy, dz, valid)
+
+
+# --------------------------------------------------------------------------
+# Stage 1 artifacts: adaptive alpha (Eqs. 2-6) and brute kNN (original alg.)
+# --------------------------------------------------------------------------
+
+def alpha_stage(r_obs, r_exp):
+    """Adaptive power parameter from observed avg kNN distances.
+
+    r_obs: (Q,) f32, r_exp: () f32 scalar.  Returns alpha (Q,) f32.
+    """
+    return (alpha_mod.adaptive_alpha(r_obs, r_exp),)
+
+
+def knn_chunk(qx, qy, dx, dy, valid, best_in):
+    """Stream one data chunk through the brute-force kNN k-buffer.
+
+    best_in/best_out: (Q, K) sorted ascending squared distances (inf-padded
+    before the first chunk).  The merge is associative and commutative over
+    chunks, so the rust coordinator can fold chunks in any order.
+    """
+    k = best_in.shape[1]
+    chunk_best = knn_brute_topk(qx, qy, dx, dy, valid, k)
+    return (merge_topk(best_in, chunk_best),)
+
+
+def knn_finalize(best, k_used):
+    """Epilogue: average distance over the first k_used columns (Eq. 3).
+
+    Emitted per-k (k is static in HLO); the single deferred sqrt lives here.
+    """
+    return (jnp.mean(jnp.sqrt(best[:, :k_used]), axis=1),)
+
+
+# --------------------------------------------------------------------------
+# Fused one-shot artifacts (small sizes: integration tests + the original
+# algorithm baseline at exact paper semantics)
+# --------------------------------------------------------------------------
+
+def original_fused(qx, qy, dx, dy, dz, valid, n_eff, area, k, tiled):
+    """The *original* GPU AIDW (Mei et al. 2015): brute kNN + Eq. 2-6 +
+    weighted interpolation in one executable.
+
+    n_eff: () f32 — number of real (unmasked) data points; area: () f32.
+    """
+    best = knn_brute_topk(qx, qy, dx, dy, valid, k)
+    r_obs = jnp.mean(jnp.sqrt(best), axis=1)
+    r_exp = alpha_mod.expected_nn_distance(n_eff, area)
+    a = alpha_mod.adaptive_alpha(r_obs, r_exp)
+    if tiled:
+        sw, swz = interp_tiled_partial(qx, qy, a, dx, dy, dz, valid)
+    else:
+        sw, swz = ref.weighted_partial_sums(qx, qy, dx, dy, dz, a, valid)
+    return (swz / sw,)
+
+
+def improved_interp_oneshot(qx, qy, r_obs, r_exp, dx, dy, dz, valid, tiled):
+    """Improved-algorithm stage 2 in one call: alpha pipeline + weighting.
+
+    Stage 1 (grid kNN) runs in rust; its per-query r_obs feeds in here.
+    Used by integration tests and the small-problem fast path (no chunk
+    streaming when the whole problem fits one artifact).
+    """
+    a = alpha_mod.adaptive_alpha(r_obs, r_exp)
+    if tiled:
+        sw, swz = interp_tiled_partial(qx, qy, a, dx, dy, dz, valid)
+    else:
+        sw, swz = ref.weighted_partial_sums(qx, qy, dx, dy, dz, a, valid)
+    return (swz / sw,)
+
+
+def local_interp_artifact(qx, qy, r_obs, r_exp, nx, ny, nz, nvalid):
+    """Local-AIDW stage 2 (extension A5): alpha pipeline + gathered-neighbor
+    weighting in one executable.  The rust stage 1 supplies each query's N
+    nearest neighbors (coords/values/mask) from its grid search.
+    """
+    a = alpha_mod.adaptive_alpha(r_obs, r_exp)
+    return (interp_local(qx, qy, a, nx, ny, nz, nvalid),)
+
+
+# Tuple-returning wrappers for chunk artifacts (AOT lowers with
+# return_tuple=True; keeping the tuple explicit here makes the manifest's
+# output arity obvious).
+
+def interp_naive_chunk_artifact(qx, qy, alpha, dx, dy, dz, valid):
+    sw, swz = interp_naive_chunk(qx, qy, alpha, dx, dy, dz, valid)
+    return (sw, swz)
+
+
+def interp_tiled_chunk_artifact(qx, qy, alpha, dx, dy, dz, valid):
+    sw, swz = interp_tiled_chunk(qx, qy, alpha, dx, dy, dz, valid)
+    return (sw, swz)

@@ -1,0 +1,136 @@
+"""Unit + property tests for the adaptive-alpha pipeline (paper Eqs. 2-6)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import alpha as am
+
+
+class TestExpectedNNDistance:
+    def test_eq2_unit_square(self):
+        # n=100 points in a unit square: r_exp = 1/(2*sqrt(100)) = 0.05
+        assert np.isclose(float(am.expected_nn_distance(100.0, 1.0)), 0.05)
+
+    def test_eq2_scales_with_area(self):
+        # doubling the area scales r_exp by sqrt(2)
+        r1 = float(am.expected_nn_distance(64.0, 1.0))
+        r2 = float(am.expected_nn_distance(64.0, 2.0))
+        assert np.isclose(r2 / r1, np.sqrt(2.0), rtol=1e-6)
+
+    def test_eq2_denser_is_smaller(self):
+        assert float(am.expected_nn_distance(1000.0, 1.0)) < \
+            float(am.expected_nn_distance(10.0, 1.0))
+
+
+class TestFuzzyMembership:
+    def test_eq5_clamps_below(self):
+        assert float(am.fuzzy_membership(-0.5)) == 0.0
+        assert float(am.fuzzy_membership(0.0)) == 0.0
+
+    def test_eq5_clamps_above(self):
+        assert float(am.fuzzy_membership(2.0)) == 1.0
+        assert float(am.fuzzy_membership(5.0)) == 1.0
+
+    def test_eq5_midpoint(self):
+        # R = R_max/2 = 1: mu = 0.5 - 0.5*cos(pi/2) = 0.5
+        assert np.isclose(float(am.fuzzy_membership(1.0)), 0.5, atol=1e-7)
+
+    def test_eq5_quarter(self):
+        # R = 0.5: mu = 0.5 - 0.5*cos(pi/4)
+        expect = 0.5 - 0.5 * np.cos(np.pi / 4)
+        assert np.isclose(float(am.fuzzy_membership(0.5)), expect, rtol=1e-6)
+
+    @given(st.floats(min_value=-10.0, max_value=10.0, allow_nan=False))
+    @settings(max_examples=50, deadline=None)
+    def test_eq5_bounded(self, r):
+        mu = float(am.fuzzy_membership(jnp.float32(r)))
+        assert 0.0 <= mu <= 1.0
+
+    @given(st.lists(st.floats(min_value=0.0, max_value=2.0), min_size=2,
+                    max_size=8))
+    @settings(max_examples=30, deadline=None)
+    def test_eq5_monotone_in_range(self, rs):
+        rs = sorted(rs)
+        mus = np.asarray(am.fuzzy_membership(jnp.asarray(rs, jnp.float32)))
+        assert np.all(np.diff(mus) >= -1e-6)
+
+
+class TestAlphaMapping:
+    def test_eq6_plateaus(self):
+        a = am.ALPHA_LEVELS_DEFAULT
+        assert float(am.alpha_from_membership(0.0)) == a[0]
+        assert float(am.alpha_from_membership(0.05)) == a[0]
+        assert float(am.alpha_from_membership(0.95)) == a[-1]
+        assert float(am.alpha_from_membership(1.0)) == a[-1]
+
+    def test_eq6_knots_hit_levels(self):
+        # mu = 0.1, 0.3, 0.5, 0.7, 0.9 map exactly to alpha_1..alpha_5
+        for mu, expect in zip((0.1, 0.3, 0.5, 0.7, 0.9),
+                              am.ALPHA_LEVELS_DEFAULT):
+            got = float(am.alpha_from_membership(jnp.float32(mu)))
+            assert np.isclose(got, expect, atol=1e-6), (mu, got, expect)
+
+    def test_eq6_segment_midpoints(self):
+        # halfway between knots: exact average of adjacent levels
+        a = am.ALPHA_LEVELS_DEFAULT
+        for i, mu in enumerate((0.2, 0.4, 0.6, 0.8)):
+            expect = 0.5 * (a[i] + a[i + 1])
+            got = float(am.alpha_from_membership(jnp.float32(mu)))
+            assert np.isclose(got, expect, atol=1e-6)
+
+    def test_eq6_equals_interp_table(self):
+        # the branchy Eq. 6 must coincide with jnp.interp over the knot table
+        mus, alphas = am.knot_table()
+        grid = jnp.linspace(0.0, 1.0, 501)
+        branchy = am.alpha_from_membership(grid)
+        table = jnp.interp(grid, jnp.asarray(mus), jnp.asarray(alphas))
+        np.testing.assert_allclose(np.asarray(branchy), np.asarray(table),
+                                   atol=2e-6)
+
+    @given(st.floats(min_value=0.0, max_value=1.0, allow_nan=False))
+    @settings(max_examples=50, deadline=None)
+    def test_eq6_bounded_by_levels(self, mu):
+        a = float(am.alpha_from_membership(jnp.float32(mu)))
+        lv = am.ALPHA_LEVELS_DEFAULT
+        assert min(lv) - 1e-6 <= a <= max(lv) + 1e-6
+
+    @given(st.lists(st.floats(min_value=0.0, max_value=1.0), min_size=2,
+                    max_size=8))
+    @settings(max_examples=30, deadline=None)
+    def test_eq6_monotone_for_increasing_levels(self, mus):
+        mus = sorted(mus)
+        out = np.asarray(am.alpha_from_membership(jnp.asarray(mus, jnp.float32)))
+        assert np.all(np.diff(out) >= -1e-5)
+
+    def test_eq6_custom_levels(self):
+        levels = (1.0, 1.5, 2.5, 3.5, 5.0)
+        got = float(am.alpha_from_membership(jnp.float32(0.3), levels))
+        assert np.isclose(got, 1.5, atol=1e-6)
+
+
+class TestFullPipeline:
+    def test_dense_pattern_low_alpha(self):
+        # r_obs << r_exp (clustered): R ~ 0 -> mu 0 -> alpha_1
+        a = float(am.adaptive_alpha(jnp.float32(0.001), jnp.float32(1.0)))
+        assert np.isclose(a, am.ALPHA_LEVELS_DEFAULT[0])
+
+    def test_sparse_pattern_high_alpha(self):
+        # r_obs >> r_exp (dispersed): R >= 2 -> mu 1 -> alpha_5
+        a = float(am.adaptive_alpha(jnp.float32(5.0), jnp.float32(1.0)))
+        assert np.isclose(a, am.ALPHA_LEVELS_DEFAULT[-1])
+
+    def test_random_pattern_middle_alpha(self):
+        # r_obs == r_exp: R = 1 -> mu = 0.5 -> alpha_3
+        a = float(am.adaptive_alpha(jnp.float32(1.0), jnp.float32(1.0)))
+        assert np.isclose(a, am.ALPHA_LEVELS_DEFAULT[2], atol=1e-5)
+
+    @given(st.floats(min_value=1e-3, max_value=10.0),
+           st.floats(min_value=1e-3, max_value=10.0))
+    @settings(max_examples=50, deadline=None)
+    def test_alpha_always_in_level_range(self, r_obs, r_exp):
+        a = float(am.adaptive_alpha(jnp.float32(r_obs), jnp.float32(r_exp)))
+        lv = am.ALPHA_LEVELS_DEFAULT
+        assert min(lv) - 1e-6 <= a <= max(lv) + 1e-6

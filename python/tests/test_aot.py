@@ -1,0 +1,70 @@
+"""AOT emission tests: artifacts lower to parseable HLO text and the
+manifest describes them accurately."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def emitted(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    # only the small/test-size artifacts: keeps the suite fast
+    manifest = aot.emit(out, only="q256", verbose=False)
+    return out, manifest
+
+
+class TestEmission:
+    def test_registry_is_nonempty(self):
+        names = aot._registry()
+        assert len(names) >= 12
+
+    def test_all_q256_artifacts_emitted(self, emitted):
+        out, manifest = emitted
+        assert len(manifest["artifacts"]) >= 6
+        for art in manifest["artifacts"]:
+            path = os.path.join(out, art["file"])
+            assert os.path.exists(path), art["name"]
+            assert os.path.getsize(path) > 100
+
+    def test_hlo_text_has_entry(self, emitted):
+        out, manifest = emitted
+        for art in manifest["artifacts"]:
+            text = open(os.path.join(out, art["file"])).read()
+            assert "ENTRY" in text, art["name"]
+            assert "HloModule" in text, art["name"]
+
+    def test_hlo_no_custom_calls(self, emitted):
+        # interpret=True must have eliminated Mosaic custom-calls — a
+        # custom-call in the text would be unloadable on the CPU client
+        out, manifest = emitted
+        for art in manifest["artifacts"]:
+            text = open(os.path.join(out, art["file"])).read()
+            assert "custom-call" not in text, art["name"]
+
+    def test_manifest_input_arity_matches_hlo(self, emitted):
+        # each manifest input corresponds to one HLO entry parameter
+        out, manifest = emitted
+        for art in manifest["artifacts"]:
+            text = open(os.path.join(out, art["file"])).read()
+            # parameters of the ENTRY computation (ENTRY is the last block
+            # in jax-emitted HLO text) appear as "... = f32[...] parameter(i)"
+            entry = text[text.index("ENTRY"):]
+            n_params = entry.count(" parameter(")
+            assert n_params == len(art["inputs"]), art["name"]
+
+    def test_manifest_roundtrips_json(self, emitted):
+        out, _ = emitted
+        with open(os.path.join(out, "manifest.json")) as f:
+            m = json.load(f)
+        assert m["version"] == 1
+        assert m["k_default"] == 10
+        names = [a["name"] for a in m["artifacts"]]
+        assert len(names) == len(set(names))
+
+    def test_only_filter(self, tmp_path):
+        manifest = aot.emit(str(tmp_path), only="alpha_q256", verbose=False)
+        assert [a["name"] for a in manifest["artifacts"]] == ["alpha_q256"]

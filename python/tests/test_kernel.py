@@ -1,0 +1,173 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (block-divisible), masks, alphas and k; every
+kernel output must match ref.py within fp32 tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.aidw_tiled import interp_tiled, interp_tiled_partial
+from compile.kernels.knn_brute import (knn_brute_avg_distance,
+                                       knn_brute_topk, merge_topk)
+
+
+def make_points(rng, q, m, scale=100.0):
+    qx = jnp.asarray(rng.uniform(0, scale, q), jnp.float32)
+    qy = jnp.asarray(rng.uniform(0, scale, q), jnp.float32)
+    dx = jnp.asarray(rng.uniform(0, scale, m), jnp.float32)
+    dy = jnp.asarray(rng.uniform(0, scale, m), jnp.float32)
+    dz = jnp.asarray(rng.uniform(-50, 50, m), jnp.float32)
+    return qx, qy, dx, dy, dz
+
+
+class TestInterpTiled:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(1)
+        qx, qy, dx, dy, dz = make_points(rng, 256, 1024)
+        alpha = jnp.asarray(rng.uniform(0.5, 4.0, 256), jnp.float32)
+        valid = jnp.ones(1024, jnp.float32)
+        got = interp_tiled(qx, qy, alpha, dx, dy, dz, valid)
+        want = ref.weighted_interpolate(qx, qy, dx, dy, dz, alpha)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=1e-4)
+
+    def test_partial_sums_match_ref(self):
+        rng = np.random.default_rng(2)
+        qx, qy, dx, dy, dz = make_points(rng, 256, 512)
+        alpha = jnp.full(256, 2.0, jnp.float32)
+        valid = jnp.ones(512, jnp.float32)
+        sw, swz = interp_tiled_partial(qx, qy, alpha, dx, dy, dz, valid)
+        rsw, rswz = ref.weighted_partial_sums(qx, qy, dx, dy, dz, alpha, valid)
+        np.testing.assert_allclose(np.asarray(sw), np.asarray(rsw), rtol=2e-5)
+        np.testing.assert_allclose(np.asarray(swz), np.asarray(rswz), rtol=2e-5, atol=1e-3)
+
+    def test_mask_excludes_padding(self):
+        # padded garbage points with valid=0 must not change the result
+        rng = np.random.default_rng(3)
+        qx, qy, dx, dy, dz = make_points(rng, 256, 512)
+        alpha = jnp.full(256, 2.0, jnp.float32)
+        pad_x = jnp.concatenate([dx, jnp.full(512, 12345.0, jnp.float32)])
+        pad_y = jnp.concatenate([dy, jnp.full(512, -999.0, jnp.float32)])
+        pad_z = jnp.concatenate([dz, jnp.full(512, 1e6, jnp.float32)])
+        valid = jnp.concatenate([jnp.ones(512), jnp.zeros(512)]).astype(jnp.float32)
+        got = interp_tiled(qx, qy, alpha, pad_x, pad_y, pad_z, valid)
+        want = ref.weighted_interpolate(qx, qy, dx, dy, dz, alpha)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=1e-4)
+
+    def test_prediction_within_z_range(self):
+        # weights are positive: prediction is a convex combination of z
+        rng = np.random.default_rng(4)
+        qx, qy, dx, dy, dz = make_points(rng, 256, 512)
+        alpha = jnp.asarray(rng.uniform(0.5, 4.0, 256), jnp.float32)
+        valid = jnp.ones(512, jnp.float32)
+        z = np.asarray(interp_tiled(qx, qy, alpha, dx, dy, dz, valid))
+        assert np.all(z >= float(jnp.min(dz)) - 1e-3)
+        assert np.all(z <= float(jnp.max(dz)) + 1e-3)
+
+    def test_query_on_data_point_recovers_value(self):
+        # query exactly at a data point: weight blows up (d2 floored at
+        # EPS_D2) and the prediction collapses to that point's z
+        rng = np.random.default_rng(5)
+        qx, qy, dx, dy, dz = make_points(rng, 256, 512)
+        qx = qx.at[0].set(dx[7]); qy = qy.at[0].set(dy[7])
+        alpha = jnp.full(256, 3.0, jnp.float32)
+        valid = jnp.ones(512, jnp.float32)
+        z = np.asarray(interp_tiled(qx, qy, alpha, dx, dy, dz, valid))
+        assert np.isclose(z[0], float(dz[7]), atol=1e-2)
+
+    @given(q_blocks=st.integers(1, 2), d_blocks=st.integers(1, 3),
+           seed=st.integers(0, 2**31 - 1),
+           alpha_const=st.floats(0.5, 4.0))
+    @settings(max_examples=8, deadline=None)
+    def test_hypothesis_shapes(self, q_blocks, d_blocks, seed, alpha_const):
+        rng = np.random.default_rng(seed)
+        q, m = 256 * q_blocks, 512 * d_blocks
+        qx, qy, dx, dy, dz = make_points(rng, q, m)
+        alpha = jnp.full(q, alpha_const, jnp.float32)
+        valid = jnp.ones(m, jnp.float32)
+        got = interp_tiled(qx, qy, alpha, dx, dy, dz, valid)
+        want = ref.weighted_interpolate(qx, qy, dx, dy, dz, alpha)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-5, atol=1e-3)
+
+
+class TestKnnBrute:
+    def test_matches_ref_topk(self):
+        rng = np.random.default_rng(10)
+        qx, qy, dx, dy, _ = make_points(rng, 256, 1024)
+        valid = jnp.ones(1024, jnp.float32)
+        got = knn_brute_topk(qx, qy, dx, dy, valid, 16)
+        want = ref.knn_topk_sq(qx, qy, dx, dy, 16)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_avg_distance_matches_ref(self):
+        rng = np.random.default_rng(11)
+        qx, qy, dx, dy, _ = make_points(rng, 256, 512)
+        valid = jnp.ones(512, jnp.float32)
+        got = knn_brute_avg_distance(qx, qy, dx, dy, valid, 10)
+        want = ref.knn_avg_distance(qx, qy, dx, dy, 10)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5)
+
+    def test_sorted_ascending(self):
+        rng = np.random.default_rng(12)
+        qx, qy, dx, dy, _ = make_points(rng, 256, 512)
+        valid = jnp.ones(512, jnp.float32)
+        best = np.asarray(knn_brute_topk(qx, qy, dx, dy, valid, 16))
+        assert np.all(np.diff(best, axis=1) >= 0)
+
+    def test_mask_excludes_padding(self):
+        rng = np.random.default_rng(13)
+        qx, qy, dx, dy, _ = make_points(rng, 256, 512)
+        # padded points sit exactly on the queries — nearest possible — but
+        # must be ignored
+        pad_x = jnp.concatenate([dx, qx, qx])
+        pad_y = jnp.concatenate([dy, qy, qy])
+        valid = jnp.concatenate([jnp.ones(512), jnp.zeros(512)]).astype(jnp.float32)
+        got = knn_brute_topk(qx, qy, pad_x, pad_y, valid, 16)
+        want = ref.knn_topk_sq(qx, qy, dx, dy, 16)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_merge_topk_is_monoid(self):
+        # merging chunk k-buffers == k-buffer of the union
+        rng = np.random.default_rng(14)
+        qx, qy, dx, dy, _ = make_points(rng, 256, 1024)
+        valid = jnp.ones(512, jnp.float32)
+        a = knn_brute_topk(qx, qy, dx[:512], dy[:512], valid, 16)
+        b = knn_brute_topk(qx, qy, dx[512:], dy[512:], valid, 16)
+        merged = merge_topk(a, b)
+        want = ref.knn_topk_sq(qx, qy, dx, dy, 16)
+        np.testing.assert_allclose(np.asarray(merged), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+        # commutativity
+        np.testing.assert_array_equal(np.asarray(merge_topk(b, a)),
+                                      np.asarray(merged))
+
+    @given(seed=st.integers(0, 2**31 - 1), k=st.sampled_from([1, 4, 10, 16]))
+    @settings(max_examples=8, deadline=None)
+    def test_hypothesis_k_sweep(self, seed, k):
+        rng = np.random.default_rng(seed)
+        qx, qy, dx, dy, _ = make_points(rng, 256, 512)
+        valid = jnp.ones(512, jnp.float32)
+        got = knn_brute_topk(qx, qy, dx, dy, valid, k)
+        want = ref.knn_topk_sq(qx, qy, dx, dy, k)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_duplicate_points(self):
+        # ties (duplicate data points) must still yield k entries
+        qx = jnp.zeros(256, jnp.float32)
+        qy = jnp.zeros(256, jnp.float32)
+        dx = jnp.ones(512, jnp.float32)   # all identical
+        dy = jnp.ones(512, jnp.float32)
+        valid = jnp.ones(512, jnp.float32)
+        best = np.asarray(knn_brute_topk(qx, qy, dx, dy, valid, 10))
+        np.testing.assert_allclose(best, 2.0, rtol=1e-6)

@@ -1,0 +1,90 @@
+"""Local-interpolation kernel (extension A5) vs the pure-jnp oracle, and
+its end-to-end agreement with dense AIDW when the panel covers all data."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import alpha as am
+from compile import model
+from compile.kernels import ref
+from compile.kernels.local_interp import interp_local
+
+
+def make_panel(seed, q, n, scale=100.0):
+    rng = np.random.default_rng(seed)
+    qx = jnp.asarray(rng.uniform(0, scale, q), jnp.float32)
+    qy = jnp.asarray(rng.uniform(0, scale, q), jnp.float32)
+    alpha = jnp.asarray(rng.uniform(0.5, 4.0, q), jnp.float32)
+    nx = jnp.asarray(rng.uniform(0, scale, (q, n)), jnp.float32)
+    ny = jnp.asarray(rng.uniform(0, scale, (q, n)), jnp.float32)
+    nz = jnp.asarray(rng.uniform(-50, 50, (q, n)), jnp.float32)
+    nvalid = jnp.ones((q, n), jnp.float32)
+    return qx, qy, alpha, nx, ny, nz, nvalid
+
+
+class TestLocalKernel:
+    def test_matches_oracle(self):
+        qx, qy, alpha, nx, ny, nz, nvalid = make_panel(1, 256, 32)
+        got = interp_local(qx, qy, alpha, nx, ny, nz, nvalid)
+        want = ref.local_weighted_interpolate(qx, qy, alpha, nx, ny, nz, nvalid)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=1e-4)
+
+    def test_mask_ignores_padded_slots(self):
+        qx, qy, alpha, nx, ny, nz, nvalid = make_panel(2, 256, 32)
+        # poison the last 8 neighbor slots, mask them off
+        nx = nx.at[:, 24:].set(1e9)
+        nz = nz.at[:, 24:].set(1e9)
+        nvalid = nvalid.at[:, 24:].set(0.0)
+        got = interp_local(qx, qy, alpha, nx, ny, nz, nvalid)
+        want = ref.local_weighted_interpolate(
+            qx, qy, alpha, nx[:, :24], ny[:, :24], nz[:, :24],
+            jnp.ones((256, 24), jnp.float32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=1e-4)
+
+    def test_prediction_is_convex(self):
+        qx, qy, alpha, nx, ny, nz, nvalid = make_panel(3, 256, 32)
+        z = np.asarray(interp_local(qx, qy, alpha, nx, ny, nz, nvalid))
+        assert np.all(z >= float(jnp.min(nz)) - 1e-3)
+        assert np.all(z <= float(jnp.max(nz)) + 1e-3)
+
+    @given(q_blocks=st.integers(1, 2), n=st.sampled_from([8, 32, 64]),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=6, deadline=None)
+    def test_hypothesis_shapes(self, q_blocks, n, seed):
+        q = 256 * q_blocks
+        qx, qy, alpha, nx, ny, nz, nvalid = make_panel(seed, q, n)
+        got = interp_local(qx, qy, alpha, nx, ny, nz, nvalid)
+        want = ref.local_weighted_interpolate(qx, qy, alpha, nx, ny, nz, nvalid)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-5, atol=1e-3)
+
+
+class TestLocalArtifact:
+    def test_full_panel_equals_dense_aidw(self):
+        # when the neighbor panel holds the entire dataset, local AIDW must
+        # equal the dense reference exactly
+        q, m, k = 256, 32, 10
+        rng = np.random.default_rng(40)
+        qx = jnp.asarray(rng.uniform(0, 100, q), jnp.float32)
+        qy = jnp.asarray(rng.uniform(0, 100, q), jnp.float32)
+        dx = jnp.asarray(rng.uniform(0, 100, m), jnp.float32)
+        dy = jnp.asarray(rng.uniform(0, 100, m), jnp.float32)
+        dz = jnp.asarray(rng.uniform(-50, 50, m), jnp.float32)
+        area = (jnp.max(dx) - jnp.min(dx)) * (jnp.max(dy) - jnp.min(dy))
+        r_obs = ref.knn_avg_distance(qx, qy, dx, dy, k)
+        r_exp = am.expected_nn_distance(m, area)
+        # panel = all m points for every query
+        nx = jnp.broadcast_to(dx, (q, m))
+        ny = jnp.broadcast_to(dy, (q, m))
+        nz = jnp.broadcast_to(dz, (q, m))
+        nvalid = jnp.ones((q, m), jnp.float32)
+        (got,) = model.local_interp_artifact(qx, qy, r_obs, r_exp,
+                                             nx, ny, nz, nvalid)
+        want = ref.aidw(qx, qy, dx, dy, dz, k)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-5, atol=1e-3)

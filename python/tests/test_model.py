@@ -1,0 +1,181 @@
+"""L2 model tests: chunk-streaming decompositions are exact, fused artifacts
+match the dense reference, and padding is inert — the contracts the rust
+coordinator relies on.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import alpha as am
+from compile import model
+from compile.kernels import ref
+
+
+def make_problem(seed, q, m, scale=100.0):
+    rng = np.random.default_rng(seed)
+    qx = jnp.asarray(rng.uniform(0, scale, q), jnp.float32)
+    qy = jnp.asarray(rng.uniform(0, scale, q), jnp.float32)
+    dx = jnp.asarray(rng.uniform(0, scale, m), jnp.float32)
+    dy = jnp.asarray(rng.uniform(0, scale, m), jnp.float32)
+    dz = jnp.asarray(rng.uniform(-50, 50, m), jnp.float32)
+    return qx, qy, dx, dy, dz
+
+
+class TestChunkedInterpolation:
+    """sum_w/sum_wz accumulate exactly over data chunks."""
+
+    @pytest.mark.parametrize("variant", ["naive", "tiled"])
+    def test_chunked_equals_oneshot(self, variant):
+        q, m, chunk = 256, 2048, 512
+        qx, qy, dx, dy, dz = make_problem(20, q, m)
+        alpha = jnp.full(q, 2.5, jnp.float32)
+        fn = (model.interp_naive_chunk if variant == "naive"
+              else model.interp_tiled_chunk)
+        sw = jnp.zeros(q, jnp.float32)
+        swz = jnp.zeros(q, jnp.float32)
+        valid = jnp.ones(chunk, jnp.float32)
+        for s in range(0, m, chunk):
+            psw, pswz = fn(qx, qy, alpha, dx[s:s + chunk], dy[s:s + chunk],
+                           dz[s:s + chunk], valid)
+            sw = sw + psw
+            swz = swz + pswz
+        got = swz / sw
+        want = ref.weighted_interpolate(qx, qy, dx, dy, dz, alpha)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-5, atol=1e-3)
+
+    def test_last_chunk_padding(self):
+        # m = 1536 streamed as 512-chunks: last chunk half padding
+        q, m, chunk = 256, 1280, 512
+        qx, qy, dx, dy, dz = make_problem(21, q, m)
+        alpha = jnp.full(q, 2.0, jnp.float32)
+        sw = jnp.zeros(q, jnp.float32)
+        swz = jnp.zeros(q, jnp.float32)
+        for s in range(0, m, chunk):
+            e = min(s + chunk, m)
+            n = e - s
+            pad = chunk - n
+            cx = jnp.concatenate([dx[s:e], jnp.zeros(pad, jnp.float32)])
+            cy = jnp.concatenate([dy[s:e], jnp.zeros(pad, jnp.float32)])
+            cz = jnp.concatenate([dz[s:e], jnp.zeros(pad, jnp.float32)])
+            cv = jnp.concatenate([jnp.ones(n), jnp.zeros(pad)]).astype(jnp.float32)
+            psw, pswz = model.interp_naive_chunk(qx, qy, alpha, cx, cy, cz, cv)
+            sw = sw + psw
+            swz = swz + pswz
+        got = swz / sw
+        want = ref.weighted_interpolate(qx, qy, dx, dy, dz, alpha)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-5, atol=1e-3)
+
+    def test_naive_and_tiled_agree(self):
+        q, m = 256, 1024
+        qx, qy, dx, dy, dz = make_problem(22, q, m)
+        alpha = jnp.asarray(np.random.default_rng(22).uniform(0.5, 4, q),
+                            jnp.float32)
+        valid = jnp.ones(m, jnp.float32)
+        n_sw, n_swz = model.interp_naive_chunk(qx, qy, alpha, dx, dy, dz, valid)
+        t_sw, t_swz = model.interp_tiled_chunk(qx, qy, alpha, dx, dy, dz, valid)
+        np.testing.assert_allclose(np.asarray(n_sw), np.asarray(t_sw), rtol=2e-5)
+        np.testing.assert_allclose(np.asarray(n_swz), np.asarray(t_swz),
+                                   rtol=2e-5, atol=1e-2)
+
+
+class TestChunkedKnn:
+    def test_knn_chunk_stream_equals_full(self):
+        q, m, chunk, kbuf = 256, 2048, 1024, 16
+        qx, qy, dx, dy, _ = make_problem(30, q, m)
+        best = jnp.full((q, kbuf), jnp.inf, jnp.float32)
+        valid = jnp.ones(chunk, jnp.float32)
+        for s in range(0, m, chunk):
+            (best,) = model.knn_chunk(qx, qy, dx[s:s + chunk],
+                                      dy[s:s + chunk], valid, best)
+        want = ref.knn_topk_sq(qx, qy, dx, dy, kbuf)
+        np.testing.assert_allclose(np.asarray(best), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_knn_finalize_eq3(self):
+        q, m, kbuf, k = 256, 1024, 16, 10
+        qx, qy, dx, dy, _ = make_problem(31, q, m)
+        best = ref.knn_topk_sq(qx, qy, dx, dy, kbuf)
+        (r_obs,) = model.knn_finalize(best, k)
+        want = ref.knn_avg_distance(qx, qy, dx, dy, k)
+        np.testing.assert_allclose(np.asarray(r_obs), np.asarray(want),
+                                   rtol=1e-6)
+
+    def test_fold_order_invariance(self):
+        # the chunk merge is commutative: fold chunks in reverse order
+        q, m, chunk, kbuf = 256, 2048, 1024, 16
+        qx, qy, dx, dy, _ = make_problem(32, q, m)
+        valid = jnp.ones(chunk, jnp.float32)
+        starts = list(range(0, m, chunk))
+        results = []
+        for order in (starts, starts[::-1]):
+            best = jnp.full((q, kbuf), jnp.inf, jnp.float32)
+            for s in order:
+                (best,) = model.knn_chunk(qx, qy, dx[s:s + chunk],
+                                          dy[s:s + chunk], valid, best)
+            results.append(np.asarray(best))
+        np.testing.assert_array_equal(results[0], results[1])
+
+
+class TestFusedArtifacts:
+    @pytest.mark.parametrize("tiled", [False, True])
+    def test_original_fused_matches_ref_aidw(self, tiled):
+        q, m, k = 256, 1024, 10
+        qx, qy, dx, dy, dz = make_problem(40, q, m)
+        valid = jnp.ones(m, jnp.float32)
+        area = (jnp.max(dx) - jnp.min(dx)) * (jnp.max(dy) - jnp.min(dy))
+        (got,) = model.original_fused(qx, qy, dx, dy, dz, valid,
+                                      jnp.float32(m), area, k=k, tiled=tiled)
+        want = ref.aidw(qx, qy, dx, dy, dz, k)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-5, atol=1e-3)
+
+    @pytest.mark.parametrize("tiled", [False, True])
+    def test_improved_oneshot_matches_ref(self, tiled):
+        # feed the oracle's r_obs (standing in for the rust grid kNN) and
+        # check stage 2 alone reproduces full AIDW
+        q, m, k = 256, 1024, 10
+        qx, qy, dx, dy, dz = make_problem(41, q, m)
+        valid = jnp.ones(m, jnp.float32)
+        area = (jnp.max(dx) - jnp.min(dx)) * (jnp.max(dy) - jnp.min(dy))
+        r_obs = ref.knn_avg_distance(qx, qy, dx, dy, k)
+        r_exp = am.expected_nn_distance(m, area)
+        (got,) = model.improved_interp_oneshot(qx, qy, r_obs, r_exp,
+                                               dx, dy, dz, valid, tiled=tiled)
+        want = ref.aidw(qx, qy, dx, dy, dz, k)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-5, atol=1e-3)
+
+    def test_alpha_stage_matches_pipeline(self):
+        q = 256
+        rng = np.random.default_rng(42)
+        r_obs = jnp.asarray(rng.uniform(0.01, 3.0, q), jnp.float32)
+        r_exp = jnp.float32(0.7)
+        (got,) = model.alpha_stage(r_obs, r_exp)
+        want = am.adaptive_alpha(r_obs, r_exp)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestAccuracyStory:
+    def test_aidw_adapts_alpha_across_density(self):
+        """Clustered data -> alpha near alpha_1; sparse -> alpha near
+        alpha_5.  This is the paper's motivation for AIDW (Sec. 2.2)."""
+        rng = np.random.default_rng(50)
+        # dense cluster in [0,1]^2 embedded in a [0,100]^2 region
+        dxc = jnp.asarray(rng.uniform(0, 1, 512), jnp.float32)
+        dyc = jnp.asarray(rng.uniform(0, 1, 512), jnp.float32)
+        area = jnp.float32(100.0 * 100.0)
+        r_exp = am.expected_nn_distance(512, area)  # expects sparse pattern
+        r_obs_dense = ref.knn_avg_distance(dxc[:4], dyc[:4], dxc, dyc, 10)
+        a_dense = np.asarray(am.adaptive_alpha(r_obs_dense, r_exp))
+        assert np.all(a_dense <= am.ALPHA_LEVELS_DEFAULT[1])
+        # genuinely dispersed points over the whole region
+        dxs = jnp.asarray(rng.uniform(0, 100, 512), jnp.float32)
+        dys = jnp.asarray(rng.uniform(0, 100, 512), jnp.float32)
+        r_obs_sparse = ref.knn_avg_distance(dxs[:4], dys[:4], dxs, dys, 10)
+        a_sparse = np.asarray(am.adaptive_alpha(r_obs_sparse, r_exp))
+        assert np.all(a_sparse >= a_dense)

@@ -1,0 +1,66 @@
+//! **Ablation A1** — sensitivity of the grid kNN to the cell width.
+//!
+//! The paper fixes cell width = r_exp (Eq. 2).  This ablation sweeps a
+//! multiplier over that choice and reports grid-build time, search time,
+//! and candidates visited per query — showing Eq. 2 sits near the
+//! build/search sweet spot (small cells: bigger grid + more rings; large
+//! cells: fewer rings but many more candidates per ring).
+//!
+//! `cargo bench --bench ablation_cellwidth -- --sizes 16384`
+
+use aidw::benchlib::{BenchArgs, Table};
+use aidw::benchsuite::{print_header, size_label, standard_workload, MeasureOpts};
+use aidw::grid::{EvenGrid, GridConfig};
+use aidw::knn::grid_knn::{grid_knn_avg_distances_on, GridKnnConfig};
+use aidw::pool::Pool;
+
+fn main() {
+    let args = BenchArgs::parse(&[16 * 1024]);
+    let n = args.sizes[0];
+    let pool = Pool::machine_sized();
+    print_header("Ablation A1: grid cell-width factor (1.0 = paper's Eq. 2)", &[n]);
+
+    let opts = MeasureOpts::default();
+    let (data, queries) = standard_workload(n, &opts);
+
+    let mut table = Table::new(&[
+        "factor",
+        "cells",
+        "build (ms)",
+        "search (ms)",
+        "total (ms)",
+        "cand/query",
+        "max ring",
+    ]);
+    let mut best = (f64::INFINITY, 0.0f64);
+    for factor in [0.25, 0.5, 1.0, 2.0, 4.0, 8.0] {
+        let cfg = GridConfig { cell_width_factor: factor, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        let grid = EvenGrid::build_on(&pool, &data, None, &cfg).unwrap();
+        let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = std::time::Instant::now();
+        let (out, stats) =
+            grid_knn_avg_distances_on(&pool, &grid, &queries, &GridKnnConfig::default());
+        let search_ms = t1.elapsed().as_secs_f64() * 1e3;
+        std::hint::black_box(out);
+        let total = build_ms + search_ms;
+        if total < best.0 {
+            best = (total, factor);
+        }
+        table.row(&[
+            format!("{factor:.2}"),
+            format!("{}", grid.n_cells()),
+            format!("{build_ms:.1}"),
+            format!("{search_ms:.1}"),
+            format!("{total:.1}"),
+            format!("{:.1}", stats.candidates as f64 / queries.len() as f64),
+            format!("{}", stats.max_level),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nbest total at factor {} (paper's Eq.-2 choice is factor 1.0; n = {})",
+        best.1,
+        size_label(n)
+    );
+}

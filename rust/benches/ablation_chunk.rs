@@ -1,0 +1,58 @@
+//! **Ablation A3** — artifact shape (query batch Q x data chunk M) for the
+//! streamed stage-2 interpolation.
+//!
+//! The production artifacts are (Q=1024, M=4096); the test artifacts are
+//! (Q=256, M=1024).  Smaller shapes mean more PJRT dispatches per problem
+//! (call overhead) but smaller working sets; this quantifies the tradeoff
+//! that picked the production shape.
+//!
+//! `cargo bench --bench ablation_chunk -- --sizes 8192`
+
+use aidw::aidw::params::AidwParams;
+use aidw::benchlib::{BenchArgs, Table};
+use aidw::benchsuite::{print_header, standard_workload, MeasureOpts};
+use aidw::knn::brute::brute_knn_avg_distances_on;
+use aidw::pool::Pool;
+use aidw::runtime::{artifacts_available, default_artifact_dir, AidwExecutor, Engine, Variant};
+
+fn main() {
+    let args = BenchArgs::parse(&[8 * 1024]);
+    let n = args.sizes[0];
+    if !artifacts_available() {
+        eprintln!("ablation_chunk: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::new(&default_artifact_dir()).expect("engine");
+    let pool = Pool::machine_sized();
+    print_header("Ablation A3: artifact shape (Q x M) for streamed interpolation", &[n]);
+
+    let opts = MeasureOpts::default();
+    let (data, queries) = standard_workload(n, &opts);
+    let params = AidwParams::default();
+    let r_obs =
+        brute_knn_avg_distances_on(&pool, &data.xs, &data.ys, &queries, params.k);
+
+    let man = engine.manifest();
+    let shapes = [(man.q_test, man.m_test), (man.q_prod, man.m_prod)];
+
+    let mut table = Table::new(&["Q x M", "dispatches", "naive (ms)", "tiled (ms)"]);
+    for (q, m) in shapes {
+        let exec = AidwExecutor::with_shapes(&engine, q, m);
+        exec.warmup().expect("warmup");
+        let dispatches =
+            ((queries.len() + q - 1) / q) * ((data.len() + m - 1) / m);
+        let mut cells = vec![format!("{q} x {m}"), format!("{dispatches}")];
+        for variant in [Variant::Naive, Variant::Tiled] {
+            let t0 = std::time::Instant::now();
+            let (out, _) = exec
+                .improved_aidw(&data, &queries, &r_obs, &params, variant)
+                .expect("improved");
+            std::hint::black_box(out);
+            cells.push(format!("{:.1}", t0.elapsed().as_secs_f64() * 1e3));
+        }
+        table.row(&cells);
+    }
+    table.print();
+    println!("\nlarger artifacts amortize dispatch overhead; VMEM-analog working-set");
+    println!("pressure eventually reverses the trend on real accelerators (DESIGN.md §Perf).");
+}

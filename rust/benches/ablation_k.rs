@@ -1,0 +1,67 @@
+//! **Ablation A2** — sensitivity to k (number of nearest neighbors).
+//!
+//! The paper fixes k = 10.  This sweeps k for both kNN engines: brute
+//! force degrades gently (k only affects the buffer insertion) while grid
+//! search grows with the rings needed to gather k exact neighbors.
+//!
+//! `cargo bench --bench ablation_k -- --sizes 16384`
+
+use aidw::benchlib::{BenchArgs, Table};
+use aidw::benchsuite::{print_header, standard_workload, MeasureOpts};
+use aidw::grid::{EvenGrid, GridConfig};
+use aidw::knn::brute::brute_knn_avg_distances_on;
+use aidw::knn::grid_knn::{grid_knn_avg_distances_on, GridKnnConfig};
+use aidw::pool::Pool;
+
+fn main() {
+    let args = BenchArgs::parse(&[16 * 1024]);
+    let n = args.sizes[0];
+    let pool = Pool::machine_sized();
+    print_header("Ablation A2: k sweep for both kNN engines", &[n]);
+
+    let opts = MeasureOpts::default();
+    let (data, queries) = standard_workload(n, &opts);
+    // brute force over all queries is O(n*m); subsample queries for it
+    let sub = queries.len().min(2048);
+    let grid = EvenGrid::build_on(&pool, &data, None, &GridConfig::default()).unwrap();
+
+    let mut table = Table::new(&[
+        "k",
+        "grid kNN (ms)",
+        "cand/query",
+        "brute kNN (ms, scaled)",
+        "grid/brute %",
+    ]);
+    for k in [1usize, 4, 8, 10, 16, 32, 64] {
+        let t0 = std::time::Instant::now();
+        let (out, stats) = grid_knn_avg_distances_on(
+            &pool,
+            &grid,
+            &queries,
+            &GridKnnConfig { k, ..Default::default() },
+        );
+        let grid_ms = t0.elapsed().as_secs_f64() * 1e3;
+        std::hint::black_box(out);
+
+        let t1 = std::time::Instant::now();
+        std::hint::black_box(brute_knn_avg_distances_on(
+            &pool,
+            &data.xs,
+            &data.ys,
+            &queries[..sub],
+            k,
+        ));
+        let brute_ms =
+            t1.elapsed().as_secs_f64() * 1e3 * (queries.len() as f64 / sub as f64);
+
+        table.row(&[
+            format!("{k}"),
+            format!("{grid_ms:.1}"),
+            format!("{:.1}", stats.candidates as f64 / queries.len() as f64),
+            format!("{brute_ms:.0}"),
+            format!("{:.2}", 100.0 * grid_ms / brute_ms),
+        ]);
+    }
+    table.print();
+    println!("\n(brute time scaled from a {sub}-query subsample; exact O(n*m) scaling)");
+}

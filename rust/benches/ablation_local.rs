@@ -1,0 +1,92 @@
+//! **Ablation A5** — local AIDW (extension): weighting over the N nearest
+//! neighbors vs the paper's dense all-m weighting.
+//!
+//! The paper's conclusion flags the weighted-interpolating stage (>95% of
+//! runtime at scale, Table 2) as the next optimization target; localized
+//! weighting is the classical answer.  This bench sweeps N and reports
+//! runtime + RMSE against the dense result.
+//!
+//! `cargo bench --bench ablation_local -- --sizes 16384`
+
+use aidw::aidw::local::{interpolate_local_on, LocalConfig};
+use aidw::aidw::params::AidwParams;
+use aidw::aidw::serial::rmse;
+use aidw::benchlib::{BenchArgs, Table};
+use aidw::benchsuite::{measure_improved, print_header, standard_workload, MeasureOpts};
+use aidw::pool::Pool;
+use aidw::runtime::{artifacts_available, default_artifact_dir, AidwExecutor, Engine, Variant};
+
+fn main() {
+    let args = BenchArgs::parse(&[16 * 1024]);
+    let n_size = args.sizes[0];
+    let pool = Pool::machine_sized();
+    print_header("Ablation A5: local AIDW (N-neighbor weighting) vs dense", &[n_size]);
+
+    let opts = MeasureOpts::default();
+    let (data, queries) = standard_workload(n_size, &opts);
+    let params = AidwParams::default();
+
+    // dense reference: the improved tiled pipeline (PJRT when available,
+    // else the pure-rust stage 2)
+    let (dense_ms, dense_z) = if artifacts_available() {
+        let engine = Engine::new(&default_artifact_dir()).expect("engine");
+        let exec = AidwExecutor::new(&engine);
+        exec.warmup().expect("warmup");
+        let times = measure_improved(&pool, &exec, &data, &queries, &params, Variant::Tiled)
+            .expect("dense");
+        // re-run to capture values (measure_improved discards them)
+        let grid = aidw::grid::EvenGrid::build_on(&pool, &data, None, &Default::default()).unwrap();
+        let (r_obs, _) = aidw::knn::grid_knn::grid_knn_avg_distances_on(
+            &pool, &grid, &queries,
+            &aidw::knn::grid_knn::GridKnnConfig { k: params.k, ..Default::default() });
+        let (z, _) = exec
+            .improved_aidw(&data, &queries, &r_obs, &params, Variant::Tiled)
+            .expect("dense values");
+        (times.total_ms(), z)
+    } else {
+        let t0 = std::time::Instant::now();
+        let (z, _) = aidw::aidw::pipeline::interpolate_improved_on(
+            &pool, &data, &queries, &params,
+            aidw::knn::grid_knn::RingRule::Exact);
+        (t0.elapsed().as_secs_f64() * 1e3, z)
+    };
+
+    let (zlo, zhi) = data.z_range().unwrap();
+    let zspan = zhi - zlo;
+
+    let mut table = Table::new(&[
+        "variant",
+        "time (ms)",
+        "speedup vs dense",
+        "RMSE vs dense",
+        "RMSE % of z-range",
+    ]);
+    table.row(&[
+        format!("dense (all {} points)", data.len()),
+        format!("{dense_ms:.1}"),
+        "1.00x".into(),
+        "0".into(),
+        "0".into(),
+    ]);
+    for n in [16usize, 32, 64, 128, 256] {
+        let cfg = LocalConfig { n_neighbors: n, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        let z = interpolate_local_on(&pool, &data, &queries, &params, &cfg).expect("local");
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let err = rmse(&z, &dense_z);
+        table.row(&[
+            format!("local N={n}"),
+            format!("{ms:.1}"),
+            format!("{:.1}x", dense_ms / ms),
+            format!("{err:.4}"),
+            format!("{:.3}", 100.0 * err / zspan),
+        ]);
+    }
+    table.print();
+    println!("\nreading: the error is the tail mass of d^-alpha weights beyond the N-th");
+    println!("neighbor (shrinks ~1/2 per N doubling).  The crossover sits near N=64 at");
+    println!("this size: gathering many *exact* neighbors costs superlinear ring");
+    println!("expansion, while the dense stage is vectorized O(m).  Since dense cost");
+    println!("scales with m and local cost does not, the local advantage at fixed N");
+    println!("grows linearly with dataset size (try --sizes 65536).");
+}

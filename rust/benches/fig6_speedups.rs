@@ -1,0 +1,46 @@
+//! **Figure 6** — speedups of the improved GPU-analog AIDW (naive + tiled)
+//! over the serial CPU algorithm, per size.
+//!
+//! Paper peaks: 543x (naive) and 1017x (tiled) at 1000K on a GT730M.
+//! On CPU-PJRT the absolute factors are smaller; the *shape* to reproduce
+//! is: speedup grows with size, and tiled > naive at every size.
+//!
+//! `cargo bench --bench fig6_speedups -- --sizes 4096,16384`
+
+use aidw::benchlib::{fmt_x, BenchArgs, Table};
+use aidw::benchsuite::{measure_size, print_header, size_label, MeasureOpts};
+use aidw::pool::Pool;
+use aidw::runtime::{artifacts_available, default_artifact_dir, Engine};
+
+fn main() {
+    let args = BenchArgs::parse(&[4 * 1024, 16 * 1024]);
+    if !artifacts_available() {
+        eprintln!("fig6: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::new(&default_artifact_dir()).expect("engine");
+    let pool = Pool::machine_sized();
+    print_header("Figure 6: speedups of improved AIDW over the serial algorithm", &args.sizes);
+
+    let opts = MeasureOpts::default();
+    let mut table = Table::new(&["size", "naive speedup", "tiled speedup"]);
+    let mut series = Vec::new();
+    for &n in &args.sizes {
+        eprintln!("  measuring n = {} ...", size_label(n));
+        let m = measure_size(&engine, &pool, n, &opts).expect("measure");
+        let serial = m.serial_ms.unwrap();
+        let s_naive = serial / m.improved_naive.total_ms();
+        let s_tiled = serial / m.improved_tiled.total_ms();
+        table.row(&[size_label(n), fmt_x(s_naive), fmt_x(s_tiled)]);
+        series.push((n, s_naive, s_tiled));
+    }
+    table.print();
+
+    println!("\nshape checks (paper Fig. 6):");
+    let tiled_ge_naive = series.iter().all(|&(_, sn, st)| st >= sn * 0.95);
+    println!("  tiled >= naive at every size: {}", if tiled_ge_naive { "OK" } else { "VIOLATED" });
+    if series.len() >= 2 {
+        let grows = series.windows(2).all(|w| w[1].2 >= w[0].2 * 0.8);
+        println!("  tiled speedup non-decreasing with size: {}", if grows { "OK" } else { "VIOLATED" });
+    }
+}

@@ -1,0 +1,56 @@
+//! **Figure 7** — workload percentage of the two stages (kNN search vs
+//! weighted interpolating) in the improved algorithm, naive and tiled.
+//!
+//! Paper shape: interpolation dominates and its share *grows* with size;
+//! the kNN share decays toward ~1%.
+//!
+//! `cargo bench --bench fig7_workload -- --sizes 4096,16384`
+
+use aidw::benchlib::{BenchArgs, Table};
+use aidw::benchsuite::{measure_size, print_header, size_label, MeasureOpts};
+use aidw::pool::Pool;
+use aidw::runtime::{artifacts_available, default_artifact_dir, Engine};
+
+fn main() {
+    let args = BenchArgs::parse(&[4 * 1024, 16 * 1024]);
+    if !artifacts_available() {
+        eprintln!("fig7: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::new(&default_artifact_dir()).expect("engine");
+    let pool = Pool::machine_sized();
+    print_header("Figure 7: workload split between the two stages (improved AIDW)", &args.sizes);
+
+    let opts = MeasureOpts { serial: false, ..Default::default() };
+    let mut table = Table::new(&[
+        "size",
+        "naive kNN %",
+        "naive interp %",
+        "tiled kNN %",
+        "tiled interp %",
+    ]);
+    let mut knn_shares = Vec::new();
+    for &n in &args.sizes {
+        eprintln!("  measuring n = {} ...", size_label(n));
+        let m = measure_size(&engine, &pool, n, &opts).expect("measure");
+        let pn = 100.0 * m.improved_naive.knn_ms / m.improved_naive.total_ms();
+        let pt = 100.0 * m.improved_tiled.knn_ms / m.improved_tiled.total_ms();
+        table.row(&[
+            size_label(n),
+            format!("{pn:.1}"),
+            format!("{:.1}", 100.0 - pn),
+            format!("{pt:.1}"),
+            format!("{:.1}", 100.0 - pt),
+        ]);
+        knn_shares.push(pt);
+    }
+    table.print();
+
+    if knn_shares.len() >= 2 {
+        let decays = knn_shares.windows(2).all(|w| w[1] <= w[0] * 1.2);
+        println!(
+            "\nkNN share decays with size (paper shape): {}",
+            if decays { "OK" } else { "VIOLATED" }
+        );
+    }
+}

@@ -1,0 +1,47 @@
+//! **Figure 8** — speedup of the improved algorithm over the original
+//! algorithm, naive and tiled.
+//!
+//! Paper: improved naive >= 2.02x original naive; improved tiled >= 2.54x
+//! original tiled.  Shape to reproduce: improved wins at every size, by a
+//! growing factor (the brute kNN is O(n*m), the grid kNN ~O(n)).
+//!
+//! `cargo bench --bench fig8_improved_vs_original -- --sizes 4096,16384`
+
+use aidw::benchlib::{fmt_x, BenchArgs, Table};
+use aidw::benchsuite::{measure_size, print_header, size_label, MeasureOpts};
+use aidw::pool::Pool;
+use aidw::runtime::{artifacts_available, default_artifact_dir, Engine};
+
+fn main() {
+    let args = BenchArgs::parse(&[4 * 1024, 16 * 1024]);
+    if !artifacts_available() {
+        eprintln!("fig8: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::new(&default_artifact_dir()).expect("engine");
+    let pool = Pool::machine_sized();
+    print_header("Figure 8: speedup of improved over original AIDW", &args.sizes);
+
+    let opts = MeasureOpts { serial: false, ..Default::default() };
+    let mut table = Table::new(&["size", "naive", "tiled"]);
+    let mut min_naive = f64::INFINITY;
+    let mut min_tiled = f64::INFINITY;
+    for &n in &args.sizes {
+        eprintln!("  measuring n = {} ...", size_label(n));
+        let m = measure_size(&engine, &pool, n, &opts).expect("measure");
+        let sn = m.original_naive.total_ms() / m.improved_naive.total_ms();
+        let st = m.original_tiled.total_ms() / m.improved_tiled.total_ms();
+        min_naive = min_naive.min(sn);
+        min_tiled = min_tiled.min(st);
+        table.row(&[size_label(n), fmt_x(sn), fmt_x(st)]);
+    }
+    table.print();
+
+    println!("\npaper: improved is at least 2.02x (naive) / 2.54x (tiled) faster on a GT730M.");
+    println!(
+        "measured minima here: naive {} / tiled {}  ({})",
+        fmt_x(min_naive),
+        fmt_x(min_tiled),
+        if min_naive > 1.0 && min_tiled > 1.0 { "improved wins everywhere: OK" } else { "VIOLATED" }
+    );
+}

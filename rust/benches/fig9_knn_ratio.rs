@@ -1,0 +1,67 @@
+//! **Figure 9** — running time of the kNN search in the improved algorithm
+//! as a percentage of the original algorithm's kNN time.
+//!
+//! Paper: drops below 1% at one million points.  Shape: the percentage
+//! decays monotonically with size (grid kNN is ~O(n), brute is O(n*m)).
+//!
+//! `cargo bench --bench fig9_knn_ratio -- --sizes 4096,16384,32768`
+//! (the brute-kNN baseline is O(n*m): 64K+ sizes take minutes per point)
+
+use aidw::aidw::params::AidwParams;
+use aidw::benchlib::{BenchArgs, Table};
+use aidw::benchsuite::{print_header, size_label, standard_workload, MeasureOpts};
+use aidw::grid::{EvenGrid, GridConfig};
+use aidw::knn::grid_knn::{grid_knn_avg_distances_on, GridKnnConfig};
+use aidw::pool::Pool;
+use aidw::runtime::{artifacts_available, default_artifact_dir, AidwExecutor, Engine};
+
+fn main() {
+    let args = BenchArgs::parse(&[4 * 1024, 16 * 1024, 32 * 1024]);
+    if !artifacts_available() {
+        eprintln!("fig9: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::new(&default_artifact_dir()).expect("engine");
+    let exec = AidwExecutor::new(&engine);
+    exec.warmup().expect("warmup");
+    let pool = Pool::machine_sized();
+    let params = AidwParams::default();
+    print_header("Figure 9: improved kNN time as % of original kNN time", &args.sizes);
+
+    let opts = MeasureOpts::default();
+    let mut table = Table::new(&["size", "original kNN (ms)", "improved kNN (ms)", "ratio %"]);
+    let mut ratios = Vec::new();
+    for &n in &args.sizes {
+        eprintln!("  measuring n = {} ...", size_label(n));
+        let (data, queries) = standard_workload(n, &opts);
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(exec.run_knn_brute(&data, &queries, params.k).expect("knn"));
+        let orig_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = std::time::Instant::now();
+        let grid = EvenGrid::build_on(&pool, &data, None, &GridConfig::default()).unwrap();
+        std::hint::black_box(grid_knn_avg_distances_on(
+            &pool,
+            &grid,
+            &queries,
+            &GridKnnConfig { k: params.k, ..Default::default() },
+        ));
+        let impr_ms = t1.elapsed().as_secs_f64() * 1e3;
+        let ratio = 100.0 * impr_ms / orig_ms;
+        ratios.push(ratio);
+        table.row(&[
+            size_label(n),
+            format!("{orig_ms:.1}"),
+            format!("{impr_ms:.1}"),
+            format!("{ratio:.2}"),
+        ]);
+    }
+    table.print();
+
+    if ratios.len() >= 2 {
+        let decays = ratios.windows(2).all(|w| w[1] <= w[0]);
+        println!(
+            "\nratio decays with size (paper shape, -> <1% at 1M): {}",
+            if decays { "OK" } else { "VIOLATED" }
+        );
+    }
+}

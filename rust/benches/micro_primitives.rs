@@ -1,0 +1,82 @@
+//! Microbenchmarks of the parallel primitives (the Thrust analogs) —
+//! grid-build cost model inputs for DESIGN.md §Perf.
+//!
+//! `cargo bench --bench micro_primitives -- --sizes 1048576`
+
+use aidw::benchlib::{bench, BenchArgs, Table};
+use aidw::pool::Pool;
+use aidw::primitives::{reduce, scan, sort};
+use aidw::rng::Pcg32;
+
+fn main() {
+    let args = BenchArgs::parse(&[1 << 20]);
+    let n = args.sizes[0];
+    let pool = Pool::machine_sized();
+    println!("\n=== primitives microbench (n = {n}, {} threads) ===\n", pool.threads());
+
+    let mut rng = Pcg32::seeded(5);
+    let keys: Vec<u32> = (0..n).map(|_| rng.below(1 << 18)).collect();
+    let vals: Vec<u32> = (0..n as u32).collect();
+    let floats: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let ones: Vec<u32> = vec![1; n];
+
+    let mut table = Table::new(&["primitive", "mean (ms)", "Melem/s"]);
+
+    let s = bench(1, args.reps, || {
+        let mut k = keys.clone();
+        let mut v = vals.clone();
+        sort::radix_sort_by_key(&pool, &mut k, &mut v);
+        k
+    });
+    table.row(&[
+        "radix_sort_by_key (18-bit keys)".into(),
+        format!("{:.2}", s.mean_ms()),
+        format!("{:.0}", n as f64 / s.mean_s / 1e6),
+    ]);
+
+    let s = bench(1, args.reps, || {
+        let mut k = keys.clone();
+        let mut v = vals.clone();
+        let mut pairs: Vec<(u32, u32)> = k.drain(..).zip(v.drain(..)).collect();
+        pairs.sort_by_key(|p| p.0);
+        pairs
+    });
+    table.row(&[
+        "std stable sort (reference)".into(),
+        format!("{:.2}", s.mean_ms()),
+        format!("{:.0}", n as f64 / s.mean_s / 1e6),
+    ]);
+
+    let mut sorted = keys.clone();
+    sorted.sort_unstable();
+    let s = bench(1, args.reps, || reduce::counts_by_key(&sorted));
+    table.row(&[
+        "counts_by_key (reduce_by_key)".into(),
+        format!("{:.2}", s.mean_ms()),
+        format!("{:.0}", n as f64 / s.mean_s / 1e6),
+    ]);
+
+    let s = bench(1, args.reps, || reduce::segment_heads(&sorted));
+    table.row(&[
+        "segment_heads (unique_by_key)".into(),
+        format!("{:.2}", s.mean_ms()),
+        format!("{:.0}", n as f64 / s.mean_s / 1e6),
+    ]);
+
+    let mut out = vec![0u32; n];
+    let s = bench(1, args.reps, || scan::exclusive_scan(&pool, &ones, &mut out));
+    table.row(&[
+        "exclusive_scan".into(),
+        format!("{:.2}", s.mean_ms()),
+        format!("{:.0}", n as f64 / s.mean_s / 1e6),
+    ]);
+
+    let s = bench(1, args.reps, || reduce::parallel_minmax(&pool, &floats));
+    table.row(&[
+        "parallel_minmax".into(),
+        format!("{:.2}", s.mean_ms()),
+        format!("{:.0}", n as f64 / s.mean_s / 1e6),
+    ]);
+
+    table.print();
+}

@@ -1,0 +1,66 @@
+//! **Table 1** — execution time (ms) of the CPU serial baseline and the
+//! four GPU-analog AIDW versions across problem sizes.
+//!
+//! Paper row order: CPU/Serial, Original naive, Original tiled,
+//! Improved naive, Improved tiled.  Expected shape: improved < original,
+//! tiled < naive, serial orders of magnitude above all.
+//!
+//! `cargo bench --bench table1_exec_time -- --sizes 4096,16384 --paper-sizes`
+
+use aidw::benchlib::{fmt_ms, BenchArgs, Table};
+use aidw::benchsuite::{measure_size, print_header, size_label, MeasureOpts, SizeMeasurement};
+use aidw::pool::Pool;
+use aidw::runtime::{artifacts_available, default_artifact_dir, Engine};
+
+fn main() {
+    let args = BenchArgs::parse(&[4 * 1024, 16 * 1024]);
+    if !artifacts_available() {
+        eprintln!("table1: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::new(&default_artifact_dir()).expect("engine");
+    let pool = Pool::machine_sized();
+    print_header("Table 1: execution time (ms) of CPU and GPU-analog AIDW versions", &args.sizes);
+
+    let opts = MeasureOpts::default();
+    let measurements: Vec<SizeMeasurement> = args
+        .sizes
+        .iter()
+        .map(|&n| {
+            eprintln!("  measuring n = {} ...", size_label(n));
+            measure_size(&engine, &pool, n, &opts).expect("measure")
+        })
+        .collect();
+
+    let mut headers = vec!["Version".to_string()];
+    headers.extend(args.sizes.iter().map(|&n| size_label(n)));
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr_refs);
+
+    let row = |name: &str, f: &dyn Fn(&SizeMeasurement) -> f64| -> Vec<String> {
+        let mut cells = vec![name.to_string()];
+        cells.extend(measurements.iter().map(|m| fmt_ms(f(m))));
+        cells
+    };
+    table.row(&row("CPU/Serial (f64)", &|m| m.serial_ms.unwrap_or(f64::NAN)));
+    table.row(&row("Original naive", &|m| m.original_naive.total_ms()));
+    table.row(&row("Original tiled", &|m| m.original_tiled.total_ms()));
+    table.row(&row("Improved naive", &|m| m.improved_naive.total_ms()));
+    table.row(&row("Improved tiled", &|m| m.improved_tiled.total_ms()));
+    table.print();
+
+    if measurements.iter().any(|m| m.serial_extrapolated) {
+        println!("\n(serial times marked: extrapolated O(n*m) from a query subsample; see benchsuite.rs)");
+    }
+    println!("\npaper expectation: improved < original and tiled < naive at every size.");
+    for m in &measurements {
+        let ok_improved = m.improved_tiled.total_ms() < m.original_tiled.total_ms();
+        let ok_tiled = m.improved_tiled.total_ms() <= m.improved_naive.total_ms() * 1.10;
+        println!(
+            "  n={}: improved<original {}  tiled<=naive {}",
+            size_label(m.n),
+            if ok_improved { "OK" } else { "VIOLATED" },
+            if ok_tiled { "OK" } else { "VIOLATED" },
+        );
+    }
+}

@@ -1,0 +1,56 @@
+//! **Table 2** — execution time of the kNN-search stage vs the weighted-
+//! interpolating stage inside the *improved* algorithm.
+//!
+//! Paper rows: "kNN Search (Both versions)", "Weighted Interpolating
+//! (Improved naive)", "Weighted Interpolating (Improved tiled)".
+//! Expected shape: the kNN share shrinks with size (toward ~1%).
+//!
+//! `cargo bench --bench table2_stage_split -- --sizes 4096,16384`
+
+use aidw::benchlib::{fmt_ms, BenchArgs, Table};
+use aidw::benchsuite::{measure_size, print_header, size_label, MeasureOpts, SizeMeasurement};
+use aidw::pool::Pool;
+use aidw::runtime::{artifacts_available, default_artifact_dir, Engine};
+
+fn main() {
+    let args = BenchArgs::parse(&[4 * 1024, 16 * 1024]);
+    if !artifacts_available() {
+        eprintln!("table2: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::new(&default_artifact_dir()).expect("engine");
+    let pool = Pool::machine_sized();
+    print_header("Table 2: stage split inside the improved GPU-analog AIDW", &args.sizes);
+
+    let opts = MeasureOpts { serial: false, ..Default::default() };
+    let ms: Vec<SizeMeasurement> = args
+        .sizes
+        .iter()
+        .map(|&n| {
+            eprintln!("  measuring n = {} ...", size_label(n));
+            measure_size(&engine, &pool, n, &opts).expect("measure")
+        })
+        .collect();
+
+    let mut headers = vec!["Stage".to_string()];
+    headers.extend(args.sizes.iter().map(|&n| size_label(n)));
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr_refs);
+
+    let mut knn_row = vec!["kNN Search (both versions)".to_string()];
+    knn_row.extend(ms.iter().map(|m| fmt_ms(m.improved_tiled.knn_ms)));
+    table.row(&knn_row);
+    let mut naive_row = vec!["Weighted Interp (improved naive)".to_string()];
+    naive_row.extend(ms.iter().map(|m| fmt_ms(m.improved_naive.interp_ms)));
+    table.row(&naive_row);
+    let mut tiled_row = vec!["Weighted Interp (improved tiled)".to_string()];
+    tiled_row.extend(ms.iter().map(|m| fmt_ms(m.improved_tiled.interp_ms)));
+    table.row(&tiled_row);
+    table.print();
+
+    println!("\nkNN share of total (tiled): should FALL with size (paper: -> ~1%)");
+    for m in &ms {
+        let share = 100.0 * m.improved_tiled.knn_ms / m.improved_tiled.total_ms();
+        println!("  n={}: {:.1}%", size_label(m.n), share);
+    }
+}

@@ -1,0 +1,90 @@
+//! **Table 3** — execution time of the kNN-search *stage only*: original
+//! algorithm (brute force) vs improved algorithm (grid local search).
+//!
+//! Note: in the paper the original algorithm's kNN time is obtained by
+//! subtraction (its kNN is fused into the interpolation kernel); here the
+//! streamed brute-kNN stage is timed directly.  The original naive/tiled
+//! rows share one kNN implementation, exactly as the paper's remark about
+//! the first stage being identical.
+//!
+//! `cargo bench --bench table3_knn_compare -- --sizes 4096,16384`
+
+use aidw::aidw::params::AidwParams;
+use aidw::benchlib::{fmt_ms, BenchArgs, Table};
+use aidw::benchsuite::{print_header, size_label, standard_workload, MeasureOpts};
+use aidw::grid::{EvenGrid, GridConfig};
+use aidw::knn::grid_knn::{grid_knn_avg_distances_on, GridKnnConfig};
+use aidw::pool::Pool;
+use aidw::runtime::{artifacts_available, default_artifact_dir, AidwExecutor, Engine};
+
+fn main() {
+    let args = BenchArgs::parse(&[4 * 1024, 16 * 1024]);
+    if !artifacts_available() {
+        eprintln!("table3: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::new(&default_artifact_dir()).expect("engine");
+    let exec = AidwExecutor::new(&engine);
+    exec.warmup().expect("warmup");
+    let pool = Pool::machine_sized();
+    let params = AidwParams::default();
+    print_header("Table 3: kNN-search stage time, original vs improved", &args.sizes);
+
+    let opts = MeasureOpts::default();
+    let mut original_ms = Vec::new();
+    let mut improved_ms = Vec::new();
+    for &n in &args.sizes {
+        eprintln!("  measuring n = {} ...", size_label(n));
+        let (data, queries) = standard_workload(n, &opts);
+
+        // original: streamed brute-force kNN on PJRT (incl. transfers)
+        let t0 = std::time::Instant::now();
+        let r1 = exec.run_knn_brute(&data, &queries, params.k).expect("knn");
+        original_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+
+        // improved: grid build + ring-expansion local search (rust)
+        let t1 = std::time::Instant::now();
+        let grid = EvenGrid::build_on(&pool, &data, None, &GridConfig::default()).unwrap();
+        let (r2, stats) = grid_knn_avg_distances_on(
+            &pool,
+            &grid,
+            &queries,
+            &GridKnnConfig { k: params.k, ..Default::default() },
+        );
+        improved_ms.push(t1.elapsed().as_secs_f64() * 1e3);
+
+        // sanity: both stages agree
+        for (a, b) in r1.iter().zip(&r2) {
+            assert!((a - b).abs() < 1e-3 * b.max(1e-3), "kNN mismatch {a} vs {b}");
+        }
+        eprintln!(
+            "    grid kNN visited {:.1} candidates/query (vs {} brute)",
+            stats.candidates as f64 / queries.len() as f64,
+            n
+        );
+    }
+
+    let mut headers = vec!["Version".to_string()];
+    headers.extend(args.sizes.iter().map(|&n| size_label(n)));
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr_refs);
+    let mut r1 = vec!["Original naive (brute kNN)".to_string()];
+    r1.extend(original_ms.iter().map(|&v| fmt_ms(v)));
+    table.row(&r1);
+    let mut r2 = vec!["Original tiled (same kNN)".to_string()];
+    r2.extend(original_ms.iter().map(|&v| fmt_ms(v)));
+    table.row(&r2);
+    let mut r3 = vec!["Two improved versions (grid)".to_string()];
+    r3.extend(improved_ms.iter().map(|&v| fmt_ms(v)));
+    table.row(&r3);
+    table.print();
+
+    println!("\nimproved/original kNN ratio (paper: shrinks to <1% at 1000K):");
+    for (i, &n) in args.sizes.iter().enumerate() {
+        println!(
+            "  n={}: {:.2}%",
+            size_label(n),
+            100.0 * improved_ms[i] / original_ms[i]
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! The adaptive power-parameter pipeline (Eqs. 2-6) — rust mirror of
+//! `python/compile/alpha.py`.  The integration test `it_runtime` checks
+//! this implementation against the AOT-compiled `alpha_*` artifact
+//! value-for-value, so the two layers cannot drift apart.
+
+use crate::aidw::params::AidwParams;
+
+/// Eq. 2: expected nearest-neighbor distance of a random pattern,
+/// `r_exp = 1 / (2 * sqrt(n / A))`.
+#[inline]
+pub fn expected_nn_distance(n_points: f64, area: f64) -> f64 {
+    1.0 / (2.0 * (n_points / area).sqrt())
+}
+
+/// Eq. 4: nearest-neighbor statistic `R(S0) = r_obs / r_exp`.
+#[inline]
+pub fn nn_statistic(r_obs: f64, r_exp: f64) -> f64 {
+    r_obs / r_exp
+}
+
+/// Eq. 5: cosine fuzzy membership, clamped to [0, 1].
+#[inline]
+pub fn fuzzy_membership(r_stat: f64, r_min: f64, r_max: f64) -> f64 {
+    if r_stat <= r_min {
+        0.0
+    } else if r_stat >= r_max {
+        1.0
+    } else {
+        (0.5 - 0.5 * (std::f64::consts::PI / r_max * (r_stat - r_min)).cos()).clamp(0.0, 1.0)
+    }
+}
+
+/// Eq. 6: triangular membership mapping mu_R to a distance-decay alpha
+/// over the five levels.  Branch-for-branch as printed in the paper.
+#[inline]
+pub fn alpha_from_membership(mu: f64, levels: &[f64; 5]) -> f64 {
+    let [a1, a2, a3, a4, a5] = *levels;
+    if mu <= 0.1 {
+        a1
+    } else if mu <= 0.3 {
+        a1 * (1.0 - 5.0 * (mu - 0.1)) + 5.0 * a2 * (mu - 0.1)
+    } else if mu <= 0.5 {
+        5.0 * a3 * (mu - 0.3) + a2 * (1.0 - 5.0 * (mu - 0.3))
+    } else if mu <= 0.7 {
+        a3 * (1.0 - 5.0 * (mu - 0.5)) + 5.0 * a4 * (mu - 0.5)
+    } else if mu <= 0.9 {
+        5.0 * a5 * (mu - 0.7) + a4 * (1.0 - 5.0 * (mu - 0.7))
+    } else {
+        a5
+    }
+}
+
+/// Full Eq. 2-6 pipeline: observed average kNN distance -> adaptive alpha.
+#[inline]
+pub fn adaptive_alpha(r_obs: f64, r_exp: f64, params: &AidwParams) -> f64 {
+    let r_stat = nn_statistic(r_obs, r_exp);
+    let mu = fuzzy_membership(r_stat, params.r_min, params.r_max);
+    alpha_from_membership(mu, &params.alpha_levels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> AidwParams {
+        AidwParams::default()
+    }
+
+    #[test]
+    fn eq2_reference_values() {
+        assert!((expected_nn_distance(100.0, 1.0) - 0.05).abs() < 1e-15);
+        let r1 = expected_nn_distance(64.0, 1.0);
+        let r2 = expected_nn_distance(64.0, 2.0);
+        assert!((r2 / r1 - 2f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq5_shape() {
+        assert_eq!(fuzzy_membership(-1.0, 0.0, 2.0), 0.0);
+        assert_eq!(fuzzy_membership(0.0, 0.0, 2.0), 0.0);
+        assert_eq!(fuzzy_membership(2.0, 0.0, 2.0), 1.0);
+        assert_eq!(fuzzy_membership(99.0, 0.0, 2.0), 1.0);
+        assert!((fuzzy_membership(1.0, 0.0, 2.0) - 0.5).abs() < 1e-12);
+        // monotone on a fine sweep
+        let mut prev = -1.0;
+        for i in 0..=200 {
+            let mu = fuzzy_membership(i as f64 * 0.01, 0.0, 2.0);
+            assert!(mu >= prev - 1e-12);
+            prev = mu;
+        }
+    }
+
+    #[test]
+    fn eq6_knots_and_midpoints() {
+        let lv = p().alpha_levels;
+        for (mu, want) in [(0.1, lv[0]), (0.3, lv[1]), (0.5, lv[2]), (0.7, lv[3]), (0.9, lv[4])] {
+            assert!((alpha_from_membership(mu, &lv) - want).abs() < 1e-12, "mu={mu}");
+        }
+        for (i, mu) in [(0usize, 0.2), (1, 0.4), (2, 0.6), (3, 0.8)] {
+            let want = 0.5 * (lv[i] + lv[i + 1]);
+            assert!((alpha_from_membership(mu, &lv) - want).abs() < 1e-12);
+        }
+        assert_eq!(alpha_from_membership(0.0, &lv), lv[0]);
+        assert_eq!(alpha_from_membership(1.0, &lv), lv[4]);
+    }
+
+    #[test]
+    fn eq6_continuous_at_breakpoints() {
+        let lv = p().alpha_levels;
+        for bp in [0.1, 0.3, 0.5, 0.7, 0.9] {
+            let lo = alpha_from_membership(bp - 1e-9, &lv);
+            let hi = alpha_from_membership(bp + 1e-9, &lv);
+            assert!((lo - hi).abs() < 1e-6, "discontinuity at {bp}");
+        }
+    }
+
+    #[test]
+    fn pipeline_density_semantics() {
+        let params = p();
+        // clustered: r_obs << r_exp -> lowest alpha
+        assert_eq!(adaptive_alpha(0.001, 1.0, &params), params.alpha_levels[0]);
+        // dispersed: r_obs >> r_exp -> highest alpha
+        assert_eq!(adaptive_alpha(10.0, 1.0, &params), params.alpha_levels[4]);
+        // random: R = 1 -> mu = 0.5 -> alpha_3
+        assert!((adaptive_alpha(1.0, 1.0, &params) - params.alpha_levels[2]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_python_knot_table() {
+        // sanity vs the jnp.interp formulation used in python tests
+        let lv = p().alpha_levels;
+        let knots_mu = [0.0, 0.1, 0.3, 0.5, 0.7, 0.9, 1.0];
+        let knots_a = [lv[0], lv[0], lv[1], lv[2], lv[3], lv[4], lv[4]];
+        for i in 0..=100 {
+            let mu = i as f64 / 100.0;
+            // linear interp over the knot table
+            let j = knots_mu.iter().rposition(|&m| m <= mu).unwrap().min(5);
+            let t = if knots_mu[j + 1] > knots_mu[j] {
+                (mu - knots_mu[j]) / (knots_mu[j + 1] - knots_mu[j])
+            } else {
+                0.0
+            };
+            let want = knots_a[j] + t * (knots_a[j + 1] - knots_a[j]);
+            let got = alpha_from_membership(mu, &lv);
+            assert!((got - want).abs() < 1e-9, "mu={mu}: {got} vs {want}");
+        }
+    }
+}

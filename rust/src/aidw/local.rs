@@ -1,0 +1,169 @@
+//! Local AIDW — the extension the paper's own conclusion calls for.
+//!
+//! §5.2.3 observes that after the fast kNN search the *weighted
+//! interpolating* stage dominates (>95% of runtime at scale) and that
+//! "further optimizations may need to be employed to improve the
+//! efficiency of the weighted interpolating".  The standard remedy —
+//! already present in Shepard's 1968 formulation and in Lu & Wong's
+//! discussion of neighborhoods — is **localized weighting**: interpolate
+//! over the N nearest data points instead of all m.  Complexity falls
+//! from O(n·m) to O(n·(N + grid search)), at a controlled accuracy cost
+//! (weights decay as d^-alpha, so far points contribute vanishingly).
+//!
+//! The neighbor lists come from the same grid pass that feeds the alpha
+//! statistic (one search serves both stages), so the extension reuses the
+//! paper's own data structure end to end.  Ablation A5
+//! (`cargo bench --bench ablation_local`) quantifies the speed/accuracy
+//! trade across N.
+
+use crate::aidw::alpha;
+use crate::aidw::params::AidwParams;
+use crate::error::Result;
+use crate::geom::{dist2, PointSet, EPS_D2};
+use crate::grid::{EvenGrid, GridConfig};
+use crate::knn::grid_knn::{grid_knn_neighbors, RingRule};
+use crate::pool::{self, Pool};
+
+/// Local-AIDW configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct LocalConfig {
+    /// Neighbors used in the weighted average (N >= params.k).
+    pub n_neighbors: usize,
+    /// Ring rule for the neighbor search.
+    pub rule: RingRule,
+}
+
+impl Default for LocalConfig {
+    fn default() -> Self {
+        LocalConfig { n_neighbors: 32, rule: RingRule::Exact }
+    }
+}
+
+/// Local AIDW: one grid pass for (neighbors, r_obs), then Eq. 1 restricted
+/// to each query's N nearest points.
+pub fn interpolate_local(
+    data: &PointSet,
+    queries: &[(f64, f64)],
+    params: &AidwParams,
+    cfg: &LocalConfig,
+) -> Result<Vec<f64>> {
+    interpolate_local_on(pool::global(), data, queries, params, cfg)
+}
+
+/// [`interpolate_local`] on an explicit pool.
+pub fn interpolate_local_on(
+    pool: &Pool,
+    data: &PointSet,
+    queries: &[(f64, f64)],
+    params: &AidwParams,
+    cfg: &LocalConfig,
+) -> Result<Vec<f64>> {
+    assert!(!data.is_empty(), "no data points");
+    let grid = EvenGrid::build_on(pool, data, None, &GridConfig::default())?;
+    let n = cfg.n_neighbors.max(params.k).max(1);
+    let k_alpha = params.k.min(data.len()).max(1);
+    let (nbr_idx, r_obs) = grid_knn_neighbors(pool, &grid, queries, n, k_alpha, cfg.rule);
+
+    let area = params.area.unwrap_or_else(|| data.bounds().area());
+    let r_exp = alpha::expected_nn_distance(data.len() as f64, area);
+
+    let mut out = vec![0f64; queries.len()];
+    {
+        struct SendPtr<T>(*mut T);
+        unsafe impl<T> Send for SendPtr<T> {}
+        unsafe impl<T> Sync for SendPtr<T> {}
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        pool.parallel_for(queries.len(), 64, |range| {
+            let op = &out_ptr;
+            for qi in range {
+                let (qx, qy) = queries[qi];
+                let a = alpha::adaptive_alpha(r_obs[qi], r_exp, params);
+                let mut sw = 0.0f64;
+                let mut swz = 0.0f64;
+                for &pid in &nbr_idx[qi * n..(qi + 1) * n] {
+                    if pid == u32::MAX {
+                        continue; // padding (fewer than N points exist)
+                    }
+                    let i = pid as usize;
+                    let d2 = dist2(qx, qy, data.xs[i], data.ys[i]).max(EPS_D2);
+                    let w = (-0.5 * a * d2.ln()).exp();
+                    sw += w;
+                    swz += w * data.zs[i];
+                }
+                unsafe { *op.0.add(qi) = swz / sw };
+            }
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aidw::serial;
+    use crate::workload;
+
+    #[test]
+    fn n_equals_m_reproduces_global_aidw() {
+        let data = workload::uniform_square(300, 50.0, 311);
+        let queries = workload::uniform_square(60, 50.0, 312).xy();
+        let params = AidwParams::default();
+        let cfg = LocalConfig { n_neighbors: 300, ..Default::default() };
+        let got = interpolate_local(&data, &queries, &params, &cfg).unwrap();
+        let want = serial::aidw_serial(&data, &queries, &params);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn accuracy_improves_with_n() {
+        let data = workload::uniform_square(2000, 100.0, 313);
+        let queries = workload::uniform_square(100, 100.0, 314).xy();
+        let params = AidwParams::default();
+        let global = serial::aidw_serial(&data, &queries, &params);
+        let mut prev_err = f64::INFINITY;
+        for n in [16usize, 64, 256, 1024] {
+            let cfg = LocalConfig { n_neighbors: n, ..Default::default() };
+            let local = interpolate_local(&data, &queries, &params, &cfg).unwrap();
+            let err = serial::rmse(&local, &global);
+            assert!(
+                err <= prev_err + 1e-9,
+                "error did not shrink: n={n} err={err} prev={prev_err}"
+            );
+            prev_err = err;
+        }
+        // with 256 of 2000 points the localized answer is already close
+        let cfg = LocalConfig { n_neighbors: 256, ..Default::default() };
+        let local = interpolate_local(&data, &queries, &params, &cfg).unwrap();
+        let (lo, hi) = data.z_range().unwrap();
+        assert!(serial::rmse(&local, &global) < 0.05 * (hi - lo));
+    }
+
+    #[test]
+    fn prediction_within_range_and_exact_hits() {
+        let data = workload::terrain_samples(800, 100.0, 0.0, 315);
+        let mut queries = workload::uniform_square(50, 100.0, 316).xy();
+        queries[0] = (data.xs[3], data.ys[3]); // exact hit
+        let params = AidwParams::default();
+        let got = interpolate_local(&data, &queries, &params, &LocalConfig::default()).unwrap();
+        let (lo, hi) = data.z_range().unwrap();
+        for &z in &got {
+            assert!(z >= lo - 1e-9 && z <= hi + 1e-9);
+        }
+        assert!((got[0] - data.zs[3]).abs() < 1e-3);
+    }
+
+    #[test]
+    fn small_dataset_smaller_than_n() {
+        let data = workload::uniform_square(5, 10.0, 317);
+        let queries = vec![(5.0, 5.0), (0.0, 0.0)];
+        let params = AidwParams::default();
+        let got = interpolate_local(&data, &queries, &params, &LocalConfig::default()).unwrap();
+        // N > m: must degrade to global weighting over all 5 points
+        let want = serial::aidw_serial(&data, &queries, &params);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9);
+        }
+    }
+}

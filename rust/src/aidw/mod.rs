@@ -1,0 +1,19 @@
+//! AIDW interpolation: the paper's Eqs. 1-6 in rust.
+//!
+//! * [`params`] — the knobs (k, alpha levels, fuzzy bounds);
+//! * [`alpha`]  — the adaptive power-parameter pipeline (Eqs. 2-6), the
+//!   exact mirror of `python/compile/alpha.py` (cross-checked by the
+//!   integration tests against the PJRT `alpha_*` artifact);
+//! * [`serial`] — the double-precision serial CPU baseline (the paper's
+//!   Table-1 "CPU/Serial" column) plus standard IDW;
+//! * [`pipeline`] — the pure-rust *improved* pipeline (grid kNN + parallel
+//!   weighting): the CPU fallback when no PJRT artifacts are present, and
+//!   the reference the coordinator's PJRT path is validated against.
+
+pub mod alpha;
+pub mod local;
+pub mod params;
+pub mod pipeline;
+pub mod serial;
+
+pub use params::AidwParams;

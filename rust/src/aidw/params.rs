@@ -1,0 +1,79 @@
+//! AIDW parameters.
+
+/// Tunables of the AIDW algorithm (paper §2.2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AidwParams {
+    /// Number of nearest neighbors for the spatial-pattern statistic
+    /// (Eq. 3).  The paper's experiments use k = 10.
+    pub k: usize,
+    /// The five distance-decay levels alpha_1..alpha_5 of Eq. 6.
+    pub alpha_levels: [f64; 5],
+    /// Fuzzy-membership bounds of Eq. 5 (paper default 0.0 / 2.0).
+    pub r_min: f64,
+    pub r_max: f64,
+    /// Optional explicit study-region area `A` of Eq. 2; default is the
+    /// data bounding-box area.
+    pub area: Option<f64>,
+}
+
+impl Default for AidwParams {
+    fn default() -> Self {
+        AidwParams {
+            k: 10,
+            alpha_levels: [0.5, 1.0, 2.0, 3.0, 4.0],
+            r_min: 0.0,
+            r_max: 2.0,
+            area: None,
+        }
+    }
+}
+
+impl AidwParams {
+    /// Validate parameter sanity; returns a message on failure.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.k == 0 {
+            return Err("k must be >= 1".into());
+        }
+        if !(self.r_max > self.r_min) {
+            return Err(format!("r_max ({}) must exceed r_min ({})", self.r_max, self.r_min));
+        }
+        if self.alpha_levels.iter().any(|a| !a.is_finite() || *a <= 0.0) {
+            return Err("alpha levels must be positive finite".into());
+        }
+        if let Some(a) = self.area {
+            if !(a > 0.0) {
+                return Err("explicit area must be positive".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper() {
+        let p = AidwParams::default();
+        assert_eq!(p.k, 10);
+        assert_eq!(p.alpha_levels, [0.5, 1.0, 2.0, 3.0, 4.0]);
+        assert_eq!((p.r_min, p.r_max), (0.0, 2.0));
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_catches_bad_params() {
+        let mut p = AidwParams { k: 0, ..Default::default() };
+        assert!(p.validate().is_err());
+        p.k = 5;
+        p.r_max = 0.0;
+        assert!(p.validate().is_err());
+        p.r_max = 2.0;
+        p.alpha_levels[2] = -1.0;
+        assert!(p.validate().is_err());
+        p.alpha_levels[2] = 2.0;
+        p.area = Some(0.0);
+        assert!(p.validate().is_err());
+    }
+}

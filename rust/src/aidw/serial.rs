@@ -1,0 +1,159 @@
+//! Serial CPU reference implementations — the paper's baseline column.
+//!
+//! The Table-1 "CPU/Serial" baseline is AIDW in **double precision** on a
+//! single thread, with the original algorithm's brute-force kNN embedded
+//! per query (Mei et al. 2015).  Also provides standard constant-alpha IDW
+//! (Shepard 1968) for the accuracy comparisons.
+
+use crate::aidw::alpha;
+use crate::aidw::params::AidwParams;
+use crate::geom::{dist2, PointSet, EPS_D2};
+use crate::knn::kbuffer::KBuffer;
+
+/// Serial AIDW (the paper's CPU baseline): for every query, brute-force
+/// kNN for r_obs, Eqs. 2-6 for alpha, then the Eq.-1 weighted average over
+/// all data points.  O(n·m); single-threaded by design.
+pub fn aidw_serial(data: &PointSet, queries: &[(f64, f64)], params: &AidwParams) -> Vec<f64> {
+    let m = data.len();
+    assert!(m > 0, "no data points");
+    let area = params.area.unwrap_or_else(|| data.bounds().area());
+    let r_exp = alpha::expected_nn_distance(m as f64, area);
+
+    let mut out = Vec::with_capacity(queries.len());
+    let mut buf = KBuffer::new(params.k.min(m).max(1));
+    for &(qx, qy) in queries {
+        // Stage 1: kNN (brute force, as in the original serial algorithm)
+        buf.clear();
+        for i in 0..m {
+            buf.insert(dist2(qx, qy, data.xs[i], data.ys[i]));
+        }
+        let r_obs = buf.avg_distance();
+        let a = alpha::adaptive_alpha(r_obs, r_exp, params);
+
+        // Stage 2: Eq.-1 weighting over all data points
+        out.push(weighted_average(data, qx, qy, a));
+    }
+    out
+}
+
+/// Standard IDW (Shepard 1968) with constant alpha — the method AIDW
+/// improves on; serial double precision.
+pub fn idw_serial(data: &PointSet, queries: &[(f64, f64)], alpha_const: f64) -> Vec<f64> {
+    assert!(!data.is_empty(), "no data points");
+    queries
+        .iter()
+        .map(|&(qx, qy)| weighted_average(data, qx, qy, alpha_const))
+        .collect()
+}
+
+/// Eq. 1 for a single query: `sum(w_i z_i) / sum(w_i)`, `w = d^-alpha`.
+/// Matches the artifact kernels' numerics: squared distances floored at
+/// [`EPS_D2`], weights via `exp(-alpha/2 * ln d2)`.
+#[inline]
+pub fn weighted_average(data: &PointSet, qx: f64, qy: f64, a: f64) -> f64 {
+    let mut sw = 0.0f64;
+    let mut swz = 0.0f64;
+    for i in 0..data.len() {
+        let d2 = dist2(qx, qy, data.xs[i], data.ys[i]).max(EPS_D2);
+        let w = (-0.5 * a * d2.ln()).exp();
+        sw += w;
+        swz += w * data.zs[i];
+    }
+    swz / sw
+}
+
+/// Root-mean-square error against ground truth (accuracy metric for the
+/// examples and EXPERIMENTS.md).
+pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = pred.iter().zip(truth).map(|(p, t)| (p - t) * (p - t)).sum();
+    (s / pred.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload;
+
+    #[test]
+    fn prediction_is_convex_combination() {
+        let data = workload::uniform_square(300, 50.0, 41);
+        let queries = workload::uniform_square(50, 50.0, 42).xy();
+        let out = aidw_serial(&data, &queries, &AidwParams::default());
+        let (lo, hi) = data.z_range().unwrap();
+        for &z in &out {
+            assert!(z >= lo - 1e-9 && z <= hi + 1e-9);
+        }
+    }
+
+    #[test]
+    fn query_at_data_point_recovers_value() {
+        let data = workload::uniform_square(200, 50.0, 43);
+        let q = vec![(data.xs[11], data.ys[11])];
+        let out = aidw_serial(&data, &q, &AidwParams::default());
+        assert!((out[0] - data.zs[11]).abs() < 1e-3, "{} vs {}", out[0], data.zs[11]);
+        let idw = idw_serial(&data, &q, 2.0);
+        assert!((idw[0] - data.zs[11]).abs() < 1e-3);
+    }
+
+    #[test]
+    fn constant_field_is_reproduced_exactly() {
+        let mut data = workload::uniform_square(100, 10.0, 44);
+        data.zs.iter_mut().for_each(|z| *z = 7.5);
+        let queries = workload::uniform_square(20, 10.0, 45).xy();
+        for z in aidw_serial(&data, &queries, &AidwParams::default()) {
+            assert!((z - 7.5).abs() < 1e-9);
+        }
+        for z in idw_serial(&data, &queries, 3.0) {
+            assert!((z - 7.5).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn aidw_differs_from_standard_idw_on_mixed_density() {
+        // on clustered data the adaptive alpha must actually change
+        // predictions relative to constant alpha=2
+        let data = workload::clustered(600, 100.0, 4, 1.5, 46);
+        let queries = workload::uniform_square(80, 100.0, 47).xy();
+        let aidw = aidw_serial(&data, &queries, &AidwParams::default());
+        let idw = idw_serial(&data, &queries, 2.0);
+        let diff: f64 = aidw.iter().zip(&idw).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-6, "adaptive alpha had no effect");
+    }
+
+    #[test]
+    fn single_data_point() {
+        let mut data = PointSet::default();
+        data.push(1.0, 1.0, 42.0);
+        let mut p = AidwParams::default();
+        p.area = Some(1.0); // bbox of one point is empty
+        let out = aidw_serial(&data, &[(5.0, 5.0)], &p);
+        assert!((out[0] - 42.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rmse_basics() {
+        assert_eq!(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(rmse(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn explicit_area_changes_alpha_regime() {
+        let data = workload::uniform_square(400, 10.0, 48);
+        let queries = workload::uniform_square(30, 10.0, 49).xy();
+        // huge declared area -> r_exp huge -> R ~ 0 -> alpha_1 everywhere;
+        // tiny declared area -> r_exp tiny -> R huge -> alpha_5 everywhere
+        let mut p_lo = AidwParams::default();
+        p_lo.area = Some(1e9);
+        let mut p_hi = AidwParams::default();
+        p_hi.area = Some(1e-9);
+        let lo = aidw_serial(&data, &queries, &p_lo);
+        let hi = aidw_serial(&data, &queries, &p_hi);
+        let diff: f64 = lo.iter().zip(&hi).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-9);
+    }
+}

@@ -1,0 +1,257 @@
+//! Benchmark harness (criterion is unavailable offline): wall-clock timing
+//! with warmup, repetition statistics, and paper-style table printing.
+//!
+//! Every bench binary under `rust/benches/` uses this module and prints
+//! rows in the same format as the paper's tables, so `cargo bench` output
+//! maps 1:1 onto Table 1-3 / Fig 6-9 of the paper.
+
+use std::time::Instant;
+
+/// Summary statistics of repeated timed runs (seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub reps: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub std_s: f64,
+}
+
+impl Sample {
+    /// Mean in milliseconds (the paper's unit).
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+}
+
+/// Time `f` once (seconds).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run `f` with `warmup` unmeasured runs then `reps` measured ones.
+pub fn bench<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Sample {
+    assert!(reps >= 1);
+    for _ in 0..warmup {
+        let _ = std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let out = f();
+        times.push(t0.elapsed().as_secs_f64());
+        std::hint::black_box(out);
+    }
+    summarize(&times)
+}
+
+/// Adaptive repetitions: run until `budget_s` of measured time or
+/// `max_reps`, whichever first (min 1 rep).  Keeps big-size benches from
+/// dominating the suite while small sizes still average many reps.
+pub fn bench_budgeted<T>(warmup: usize, budget_s: f64, max_reps: usize, mut f: impl FnMut() -> T) -> Sample {
+    for _ in 0..warmup {
+        let _ = std::hint::black_box(f());
+    }
+    let mut times = Vec::new();
+    let mut spent = 0.0;
+    while times.is_empty() || (spent < budget_s && times.len() < max_reps) {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box(out);
+        times.push(dt);
+        spent += dt;
+    }
+    summarize(&times)
+}
+
+fn summarize(times: &[f64]) -> Sample {
+    let n = times.len();
+    let mean = times.iter().sum::<f64>() / n as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n as f64;
+    Sample { reps: n, mean_s: mean, min_s: min, max_s: max, std_s: var.sqrt() }
+}
+
+/// Fixed-width table printer for paper-style output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with column headers.
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..cols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (c, cell) in cells.iter().enumerate() {
+                line.push_str(&format!("{:>w$} | ", cell, w = widths[c]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&fmt_row(&sep, &widths));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format milliseconds like the paper's tables (3 significant-ish digits).
+pub fn fmt_ms(ms: f64) -> String {
+    if ms >= 100.0 {
+        format!("{ms:.0}")
+    } else if ms >= 10.0 {
+        format!("{ms:.1}")
+    } else {
+        format!("{ms:.2}")
+    }
+}
+
+/// Format a speedup ratio.
+pub fn fmt_x(r: f64) -> String {
+    if r >= 100.0 {
+        format!("{r:.0}x")
+    } else {
+        format!("{r:.2}x")
+    }
+}
+
+/// Parse bench CLI args of the form `--sizes 4096,16384 --reps 3`.
+/// Unknown args are ignored (cargo bench passes `--bench`).
+pub struct BenchArgs {
+    pub sizes: Vec<usize>,
+    pub reps: usize,
+    pub budget_s: f64,
+    pub paper_sizes: bool,
+    pub quick: bool,
+}
+
+impl BenchArgs {
+    /// Parse from `std::env::args`, with per-bench default sizes.
+    pub fn parse(default_sizes: &[usize]) -> BenchArgs {
+        let args: Vec<String> = std::env::args().collect();
+        let mut out = BenchArgs {
+            sizes: default_sizes.to_vec(),
+            reps: 3,
+            budget_s: 10.0,
+            paper_sizes: false,
+            quick: false,
+        };
+        let mut i = 0;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--sizes" if i + 1 < args.len() => {
+                    out.sizes = args[i + 1]
+                        .split(',')
+                        .filter_map(|s| s.trim().parse().ok())
+                        .collect();
+                    i += 1;
+                }
+                "--reps" if i + 1 < args.len() => {
+                    out.reps = args[i + 1].parse().unwrap_or(out.reps);
+                    i += 1;
+                }
+                "--budget" if i + 1 < args.len() => {
+                    out.budget_s = args[i + 1].parse().unwrap_or(out.budget_s);
+                    i += 1;
+                }
+                "--paper-sizes" => {
+                    // the paper's 5 sizes (1K = 1024); serial baselines at
+                    // the top sizes take hours — see EXPERIMENTS.md
+                    out.sizes = vec![10, 50, 100, 500, 1000]
+                        .into_iter()
+                        .map(|k| k * 1024)
+                        .collect();
+                    out.paper_sizes = true;
+                }
+                "--quick" => {
+                    out.quick = true;
+                    out.budget_s = 2.0;
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_reps() {
+        let s = bench(1, 5, || 42u64);
+        assert_eq!(s.reps, 5);
+        assert!(s.min_s <= s.mean_s && s.mean_s <= s.max_s);
+    }
+
+    #[test]
+    fn budgeted_respects_caps() {
+        let s = bench_budgeted(0, 10.0, 4, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert!(s.reps <= 4);
+        let s2 = bench_budgeted(0, 0.0, 100, || ());
+        assert_eq!(s2.reps, 1);
+    }
+
+    #[test]
+    fn timing_is_sane() {
+        let (_, dt) = time_once(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(dt >= 0.004, "{dt}");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "long_header"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["100000".into(), "x".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ms(123.4), "123");
+        assert_eq!(fmt_ms(12.34), "12.3");
+        assert_eq!(fmt_ms(1.234), "1.23");
+        assert_eq!(fmt_x(543.2), "543x");
+        assert_eq!(fmt_x(2.5), "2.50x");
+    }
+}

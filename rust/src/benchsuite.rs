@@ -1,0 +1,227 @@
+//! Shared measurement logic for the paper-reproduction benches.
+//!
+//! Every bench binary under `rust/benches/` needs the same five
+//! measurements the paper's §5 takes at each problem size (n = m points,
+//! uniform square, k = 10):
+//!
+//! * CPU serial AIDW (f64)                         — Table 1 baseline
+//! * original algorithm, naive + tiled             — brute kNN on PJRT
+//! * improved algorithm, naive + tiled             — grid kNN + PJRT
+//!
+//! with each run split into its kNN and interpolation stages.  This module
+//! measures them once; the per-table benches format the slices they need.
+//!
+//! **Serial extrapolation**: the paper's serial baseline at 1000K took
+//! 18.7 hours; on this testbed we measure a query subsample and scale by
+//! the O(n·m) query ratio (exact for this embarrassingly parallel loop).
+//! The subsample cap is configurable and the extrapolation is flagged in
+//! the output.
+
+use crate::aidw::params::AidwParams;
+use crate::aidw::serial;
+use crate::error::Result;
+use crate::geom::PointSet;
+use crate::grid::{EvenGrid, GridConfig};
+use crate::knn::grid_knn::{grid_knn_avg_distances_on, GridKnnConfig, RingRule};
+use crate::pool::Pool;
+use crate::runtime::{AidwExecutor, Engine, Variant};
+use crate::workload;
+
+/// Stage times of one algorithm variant at one size (milliseconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VariantTimes {
+    pub knn_ms: f64,
+    pub interp_ms: f64,
+}
+
+impl VariantTimes {
+    pub fn total_ms(&self) -> f64 {
+        self.knn_ms + self.interp_ms
+    }
+}
+
+/// All five measurements at one problem size.
+#[derive(Debug, Clone, Copy)]
+pub struct SizeMeasurement {
+    /// n = m (data points = interpolated points).
+    pub n: usize,
+    /// Serial baseline (ms); None when skipped.  `serial_extrapolated`
+    /// notes whether it was scaled from a query subsample.
+    pub serial_ms: Option<f64>,
+    pub serial_extrapolated: bool,
+    pub original_naive: VariantTimes,
+    pub original_tiled: VariantTimes,
+    pub improved_naive: VariantTimes,
+    pub improved_tiled: VariantTimes,
+}
+
+/// Measurement options.
+#[derive(Debug, Clone, Copy)]
+pub struct MeasureOpts {
+    /// Measure the serial baseline (skippable for kNN-only benches).
+    pub serial: bool,
+    /// Serial query-subsample cap (extrapolated above this).
+    pub serial_sub_cap: usize,
+    /// Workload seed.
+    pub seed: u64,
+    /// Region side length.
+    pub side: f64,
+}
+
+impl Default for MeasureOpts {
+    fn default() -> Self {
+        MeasureOpts { serial: true, serial_sub_cap: 2048, seed: 42, side: 100.0 }
+    }
+}
+
+/// The paper's size label ("10K" = 10*1024 points).
+pub fn size_label(n: usize) -> String {
+    if n % 1024 == 0 {
+        format!("{}K", n / 1024)
+    } else {
+        format!("{n}")
+    }
+}
+
+/// The standard workload at size n (paper §5.1: n = m, uniform square).
+pub fn standard_workload(n: usize, opts: &MeasureOpts) -> (PointSet, Vec<(f64, f64)>) {
+    let data = workload::uniform_square(n, opts.side, opts.seed);
+    let queries = workload::uniform_square(n, opts.side, opts.seed + 1).xy();
+    (data, queries)
+}
+
+/// Serial AIDW time (ms), extrapolating from a query subsample when the
+/// problem exceeds `sub_cap`.  Returns (ms, extrapolated?).
+pub fn measure_serial(
+    data: &PointSet,
+    queries: &[(f64, f64)],
+    params: &AidwParams,
+    sub_cap: usize,
+) -> (f64, bool) {
+    let sub = queries.len().min(sub_cap.max(1));
+    let t0 = std::time::Instant::now();
+    let out = serial::aidw_serial(data, &queries[..sub], params);
+    let dt = t0.elapsed().as_secs_f64();
+    std::hint::black_box(out);
+    let scale = queries.len() as f64 / sub as f64;
+    (dt * scale * 1e3, sub < queries.len())
+}
+
+/// One variant of the *original* algorithm (brute-force kNN on PJRT).
+pub fn measure_original(
+    exec: &AidwExecutor,
+    data: &PointSet,
+    queries: &[(f64, f64)],
+    params: &AidwParams,
+    variant: Variant,
+) -> Result<VariantTimes> {
+    let (out, times) = exec.original_aidw(data, queries, params, variant)?;
+    std::hint::black_box(out);
+    Ok(VariantTimes { knn_ms: times.knn_s * 1e3, interp_ms: times.interp_s * 1e3 })
+}
+
+/// One variant of the *improved* algorithm: rust grid kNN (stage 1)
+/// + PJRT alpha/interpolation (stage 2).  Grid build time is included in
+/// the kNN stage, as in the paper.
+pub fn measure_improved(
+    pool: &Pool,
+    exec: &AidwExecutor,
+    data: &PointSet,
+    queries: &[(f64, f64)],
+    params: &AidwParams,
+    variant: Variant,
+) -> Result<VariantTimes> {
+    let t0 = std::time::Instant::now();
+    let grid = EvenGrid::build_on(pool, data, None, &GridConfig::default())?;
+    let (r_obs, _) = grid_knn_avg_distances_on(
+        pool,
+        &grid,
+        queries,
+        &GridKnnConfig { k: params.k, rule: RingRule::Exact },
+    );
+    let grid_knn_s = t0.elapsed().as_secs_f64();
+    let (out, times) = exec.improved_aidw(data, queries, &r_obs, params, variant)?;
+    std::hint::black_box(out);
+    Ok(VariantTimes {
+        knn_ms: (grid_knn_s + times.knn_s) * 1e3,
+        interp_ms: times.interp_s * 1e3,
+    })
+}
+
+/// Measure all five versions at one size.
+pub fn measure_size(
+    engine: &Engine,
+    pool: &Pool,
+    n: usize,
+    opts: &MeasureOpts,
+) -> Result<SizeMeasurement> {
+    let params = AidwParams::default();
+    let (data, queries) = standard_workload(n, opts);
+    let exec = AidwExecutor::new(engine);
+    exec.warmup()?;
+
+    let (serial_ms, serial_extrapolated) = if opts.serial {
+        let (ms, ex) = measure_serial(&data, &queries, &params, opts.serial_sub_cap);
+        (Some(ms), ex)
+    } else {
+        (None, false)
+    };
+
+    Ok(SizeMeasurement {
+        n,
+        serial_ms,
+        serial_extrapolated,
+        original_naive: measure_original(&exec, &data, &queries, &params, Variant::Naive)?,
+        original_tiled: measure_original(&exec, &data, &queries, &params, Variant::Tiled)?,
+        improved_naive: measure_improved(pool, &exec, &data, &queries, &params, Variant::Naive)?,
+        improved_tiled: measure_improved(pool, &exec, &data, &queries, &params, Variant::Tiled)?,
+    })
+}
+
+/// Standard bench header printed by every table/figure bench.
+pub fn print_header(title: &str, sizes: &[usize]) {
+    println!("\n=== {title} ===");
+    println!(
+        "workload: n = m, uniform square, k = 10, single-precision PJRT \
+         (CPU) vs f64 serial"
+    );
+    println!(
+        "sizes: {}",
+        sizes.iter().map(|&n| size_label(n)).collect::<Vec<_>>().join(", ")
+    );
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_labels() {
+        assert_eq!(size_label(10 * 1024), "10K");
+        assert_eq!(size_label(1000 * 1024), "1000K");
+        assert_eq!(size_label(1000), "1000");
+    }
+
+    #[test]
+    fn serial_measurement_extrapolates() {
+        let opts = MeasureOpts::default();
+        let (data, queries) = standard_workload(512, &opts);
+        let params = AidwParams::default();
+        let (full_ms, ex_full) = measure_serial(&data, &queries, &params, 4096);
+        assert!(!ex_full);
+        let (sub_ms, ex_sub) = measure_serial(&data, &queries, &params, 128);
+        assert!(ex_sub);
+        // extrapolation should land in the same ballpark (loose: timing)
+        assert!(sub_ms > 0.1 * full_ms && sub_ms < 10.0 * full_ms,
+                "sub {sub_ms} vs full {full_ms}");
+    }
+
+    #[test]
+    fn standard_workload_shapes() {
+        let opts = MeasureOpts::default();
+        let (d, q) = standard_workload(100, &opts);
+        assert_eq!(d.len(), 100);
+        assert_eq!(q.len(), 100);
+    }
+}

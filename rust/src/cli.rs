@@ -1,0 +1,122 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `aidw <subcommand> [--flag value|--switch] ...`.  Flags are
+//! declared per subcommand in `main.rs`; unknown flags are errors.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line: a subcommand plus `--key value` / `--switch` flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `args` (without argv[0]).  `switch_names` lists flags that
+    /// take no value.
+    pub fn parse(args: &[String], switch_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        if i < args.len() && !args[i].starts_with("--") {
+            out.subcommand = args[i].clone();
+            i += 1;
+        }
+        while i < args.len() {
+            let a = &args[i];
+            let Some(name) = a.strip_prefix("--") else {
+                return Err(Error::InvalidArgument(format!("unexpected positional '{a}'")));
+            };
+            if switch_names.contains(&name) {
+                out.switches.push(name.to_string());
+                i += 1;
+            } else {
+                let val = args
+                    .get(i + 1)
+                    .ok_or_else(|| Error::InvalidArgument(format!("--{name} needs a value")))?;
+                out.flags.insert(name.to_string(), val.clone());
+                i += 2;
+            }
+        }
+        Ok(out)
+    }
+
+    /// String flag.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// String flag with default.
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Numeric flag with default.
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::InvalidArgument(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    /// f64 flag with default.
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::InvalidArgument(format!("--{name} expects a number, got '{v}'"))),
+        }
+    }
+
+    /// Boolean switch presence.
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse(&sv(&["serve", "--port", "9000", "--verbose"]), &["verbose"]).unwrap();
+        assert_eq!(a.subcommand, "serve");
+        assert_eq!(a.get("port"), Some("9000"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+        assert_eq!(a.get_usize("port", 1).unwrap(), 9000);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&["run"]), &[]).unwrap();
+        assert_eq!(a.get_or("mode", "tiled"), "tiled");
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.get_f64("x", 2.5).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["x", "--port"]), &[]).is_err());
+        assert!(Args::parse(&sv(&["x", "--port", "nan_int"]), &[])
+            .unwrap()
+            .get_usize("port", 0)
+            .is_err());
+    }
+
+    #[test]
+    fn positional_after_sub_is_error() {
+        assert!(Args::parse(&sv(&["x", "stray"]), &[]).is_err());
+    }
+}

@@ -1,0 +1,261 @@
+//! Dynamic batcher: bounded job queue with linger-based batch formation.
+//!
+//! Requests targeting the same (dataset, variant, k) are coalesced into one
+//! batch so stage 1 runs one grid-kNN sweep and stage 2 streams one padded
+//! query tensor — the interpolation-serving analog of vLLM-style continuous
+//! batching.  A bounded queue provides backpressure: submissions beyond
+//! `max_queue` are rejected immediately rather than queued unboundedly.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::Job;
+use crate::error::{Error, Result};
+use crate::runtime::Variant;
+
+/// Batch-formation policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Max total queries folded into one batch.
+    pub max_queries: usize,
+    /// How long to linger for more compatible jobs once one is pending.
+    pub linger: Duration,
+    /// Queue capacity (jobs) before submissions are rejected.
+    pub max_queue: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_queries: 8192,
+            linger: Duration::from_millis(2),
+            max_queue: 1024,
+        }
+    }
+}
+
+/// A formed batch: compatible jobs to run together.
+pub(crate) struct Batch {
+    pub jobs: Vec<Job>,
+    pub dataset: String,
+    pub variant: Option<Variant>,
+    pub k: Option<usize>,
+    /// Total queries across jobs.
+    pub total_queries: usize,
+}
+
+/// The bounded, condvar-signalled job queue.
+pub(crate) struct JobQueue {
+    inner: Mutex<QueueState>,
+    cond: Condvar,
+    policy: BatchPolicy,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+impl JobQueue {
+    pub fn new(policy: BatchPolicy) -> Self {
+        JobQueue {
+            inner: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            cond: Condvar::new(),
+            policy,
+        }
+    }
+
+    /// Enqueue a job; rejects when full or closed (backpressure).
+    pub fn push(&self, job: Job) -> Result<()> {
+        let mut st = self.inner.lock().unwrap();
+        if st.closed {
+            return Err(Error::Unavailable("coordinator shut down".into()));
+        }
+        if st.jobs.len() >= self.policy.max_queue {
+            return Err(Error::Unavailable(format!(
+                "queue full ({} jobs); retry later",
+                st.jobs.len()
+            )));
+        }
+        st.jobs.push_back(job);
+        drop(st);
+        self.cond.notify_one();
+        Ok(())
+    }
+
+    /// Queue depth (diagnostics).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().jobs.len()
+    }
+
+    /// Close the queue; wakes the dispatcher so it can drain and exit.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cond.notify_all();
+    }
+
+    /// Pull the next batch: blocks for work, lingers briefly to coalesce
+    /// compatible jobs, respects `max_queries`.  Returns None once closed
+    /// and drained.
+    pub fn next_batch(&self) -> Option<Batch> {
+        let mut st = self.inner.lock().unwrap();
+        // wait for a first job (or shutdown)
+        loop {
+            if let Some(first) = st.jobs.pop_front() {
+                drop(st);
+                return Some(self.fill_batch(first));
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cond.wait(st).unwrap();
+        }
+    }
+
+    /// Grow a batch around `first`, lingering for compatible arrivals.
+    fn fill_batch(&self, first: Job) -> Batch {
+        let dataset = first.request.dataset.clone();
+        let variant = first.request.variant;
+        let k = first.request.k;
+        let mut total = first.request.queries.len();
+        let mut jobs = vec![first];
+        let deadline = Instant::now() + self.policy.linger;
+
+        loop {
+            let mut st = self.inner.lock().unwrap();
+            // take every currently-queued compatible job (preserving FIFO
+            // order of incompatible ones)
+            let mut i = 0;
+            while i < st.jobs.len() && total < self.policy.max_queries {
+                let compat = {
+                    let j = &st.jobs[i];
+                    j.request.dataset == dataset
+                        && j.request.variant == variant
+                        && j.request.k == k
+                        && total + j.request.queries.len() <= self.policy.max_queries
+                };
+                if compat {
+                    let j = st.jobs.remove(i).unwrap();
+                    total += j.request.queries.len();
+                    jobs.push(j);
+                } else {
+                    i += 1;
+                }
+            }
+            if total >= self.policy.max_queries || st.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            // linger: wait for more arrivals up to the deadline
+            let (st2, timeout) = self.cond.wait_timeout(st, deadline - now).unwrap();
+            drop(st2);
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        Batch { jobs, dataset, variant, k, total_queries: total }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::InterpolationRequest;
+    use std::sync::mpsc;
+
+    fn job(dataset: &str, nq: usize) -> (Job, mpsc::Receiver<Result<crate::coordinator::request::InterpolationResponse>>) {
+        let (tx, rx) = mpsc::channel();
+        let queries = vec![(0.0, 0.0); nq];
+        (
+            Job {
+                request: InterpolationRequest::new(dataset, queries),
+                respond: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn coalesces_same_dataset() {
+        let q = JobQueue::new(BatchPolicy {
+            linger: Duration::from_millis(1),
+            ..Default::default()
+        });
+        let (j1, _r1) = job("a", 10);
+        let (j2, _r2) = job("a", 20);
+        let (j3, _r3) = job("b", 5);
+        q.push(j1).unwrap();
+        q.push(j2).unwrap();
+        q.push(j3).unwrap();
+        let b1 = q.next_batch().unwrap();
+        assert_eq!(b1.dataset, "a");
+        assert_eq!(b1.jobs.len(), 2);
+        assert_eq!(b1.total_queries, 30);
+        let b2 = q.next_batch().unwrap();
+        assert_eq!(b2.dataset, "b");
+        assert_eq!(b2.total_queries, 5);
+    }
+
+    #[test]
+    fn respects_max_queries() {
+        let q = JobQueue::new(BatchPolicy {
+            max_queries: 25,
+            linger: Duration::from_millis(1),
+            ..Default::default()
+        });
+        let (j1, _r1) = job("a", 20);
+        let (j2, _r2) = job("a", 10);
+        q.push(j1).unwrap();
+        q.push(j2).unwrap();
+        let b1 = q.next_batch().unwrap();
+        assert_eq!(b1.jobs.len(), 1, "20+10 > 25 must not merge");
+        let b2 = q.next_batch().unwrap();
+        assert_eq!(b2.total_queries, 10);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let q = JobQueue::new(BatchPolicy { max_queue: 2, ..Default::default() });
+        let (j1, _r1) = job("a", 1);
+        let (j2, _r2) = job("a", 1);
+        let (j3, _r3) = job("a", 1);
+        q.push(j1).unwrap();
+        q.push(j2).unwrap();
+        assert!(matches!(q.push(j3), Err(Error::Unavailable(_))));
+        assert_eq!(q.depth(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = JobQueue::new(BatchPolicy {
+            linger: Duration::from_millis(0),
+            ..Default::default()
+        });
+        let (j1, _r1) = job("a", 1);
+        q.push(j1).unwrap();
+        q.close();
+        assert!(q.next_batch().is_some());
+        assert!(q.next_batch().is_none());
+        let (j2, _r2) = job("a", 1);
+        assert!(q.push(j2).is_err());
+    }
+
+    #[test]
+    fn blocking_wakeup_from_other_thread() {
+        let q = std::sync::Arc::new(JobQueue::new(BatchPolicy {
+            linger: Duration::from_millis(0),
+            ..Default::default()
+        }));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.next_batch().map(|b| b.total_queries));
+        std::thread::sleep(Duration::from_millis(20));
+        let (j, _r) = job("x", 7);
+        q.push(j).unwrap();
+        assert_eq!(h.join().unwrap(), Some(7));
+    }
+}

@@ -1,0 +1,146 @@
+//! Dataset registry: named point sets with their prebuilt grid index.
+//!
+//! Building the even grid is a per-dataset cost, not a per-request cost —
+//! the registry builds it once at registration (the serving analog of the
+//! paper's one-time grid construction) and every request reuses it.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::aidw::alpha;
+use crate::error::{Error, Result};
+use crate::geom::PointSet;
+use crate::grid::{EvenGrid, GridConfig};
+use crate::pool::Pool;
+
+/// A registered dataset: points + spatial index + cached Eq.-2 constant.
+#[derive(Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub points: PointSet,
+    pub grid: EvenGrid,
+    /// Expected NN distance (Eq. 2) over the dataset's own bounds.
+    pub r_exp: f64,
+    /// Study-region area used for r_exp.
+    pub area: f64,
+}
+
+impl Dataset {
+    /// Build a dataset: constructs the grid index immediately.
+    pub fn build(
+        pool: &Pool,
+        name: &str,
+        points: PointSet,
+        grid_cfg: &GridConfig,
+        area_override: Option<f64>,
+    ) -> Result<Dataset> {
+        if points.is_empty() {
+            return Err(Error::InvalidArgument(format!("dataset '{name}' has no points")));
+        }
+        let grid = EvenGrid::build_on(pool, &points, None, grid_cfg)?;
+        let area = area_override.unwrap_or_else(|| points.bounds().area().max(f64::MIN_POSITIVE));
+        let r_exp = alpha::expected_nn_distance(points.len() as f64, area);
+        Ok(Dataset { name: name.to_string(), points, grid, r_exp, area })
+    }
+}
+
+/// Thread-safe name -> dataset map.
+#[derive(Debug, Default)]
+pub struct DatasetRegistry {
+    map: RwLock<HashMap<String, Arc<Dataset>>>,
+}
+
+impl DatasetRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or replace) a dataset.
+    pub fn insert(&self, ds: Dataset) {
+        self.map.write().unwrap().insert(ds.name.clone(), Arc::new(ds));
+    }
+
+    /// Fetch by name.
+    pub fn get(&self, name: &str) -> Result<Arc<Dataset>> {
+        self.map
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::UnknownDataset(name.to_string()))
+    }
+
+    /// Remove a dataset; true if it existed.
+    pub fn remove(&self, name: &str) -> bool {
+        self.map.write().unwrap().remove(name).is_some()
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.map.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload;
+
+    #[test]
+    fn build_and_lookup() {
+        let reg = DatasetRegistry::new();
+        let pool = Pool::new(2);
+        let pts = workload::uniform_square(500, 50.0, 61);
+        let ds = Dataset::build(&pool, "d1", pts, &GridConfig::default(), None).unwrap();
+        assert!(ds.r_exp > 0.0);
+        reg.insert(ds);
+        assert_eq!(reg.len(), 1);
+        let got = reg.get("d1").unwrap();
+        assert_eq!(got.points.len(), 500);
+        assert_eq!(got.grid.n_points(), 500);
+        assert!(reg.get("nope").is_err());
+        assert_eq!(reg.names(), vec!["d1".to_string()]);
+        assert!(reg.remove("d1"));
+        assert!(!reg.remove("d1"));
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn empty_dataset_rejected() {
+        let pool = Pool::new(1);
+        let r = Dataset::build(&pool, "e", PointSet::default(), &GridConfig::default(), None);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn replace_updates() {
+        let reg = DatasetRegistry::new();
+        let pool = Pool::new(1);
+        for n in [100usize, 200] {
+            let pts = workload::uniform_square(n, 10.0, 62);
+            reg.insert(Dataset::build(&pool, "d", pts, &GridConfig::default(), None).unwrap());
+        }
+        assert_eq!(reg.get("d").unwrap().points.len(), 200);
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn area_override_changes_r_exp() {
+        let pool = Pool::new(1);
+        let pts = workload::uniform_square(100, 10.0, 63);
+        let a = Dataset::build(&pool, "a", pts.clone(), &GridConfig::default(), None).unwrap();
+        let b = Dataset::build(&pool, "b", pts, &GridConfig::default(), Some(1e6)).unwrap();
+        assert!(b.r_exp > a.r_exp);
+        assert_eq!(b.area, 1e6);
+    }
+}

@@ -1,0 +1,151 @@
+//! Coordinator metrics: lock-free counters + latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Exponential-bucket latency histogram (microseconds, 1us..~17min).
+#[derive(Debug, Default)]
+pub struct LatencyHisto {
+    /// bucket i counts latencies in [2^i, 2^(i+1)) microseconds
+    buckets: [AtomicU64; 30],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl LatencyHisto {
+    /// Record one latency.
+    pub fn record(&self, seconds: f64) {
+        let us = (seconds * 1e6).max(0.0) as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(29);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in seconds (0 when empty).
+    pub fn mean_s(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64 / 1e6
+    }
+
+    /// Approximate quantile (bucket upper bound), seconds.
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return (1u64 << (i + 1)) as f64 / 1e6;
+            }
+        }
+        (1u64 << 30) as f64 / 1e6
+    }
+}
+
+/// Coordinator-wide counters.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub queries: AtomicU64,
+    pub batches: AtomicU64,
+    pub rejected: AtomicU64,
+    pub errors: AtomicU64,
+    /// Cumulative stage seconds (microsecond fixed point).
+    knn_us: AtomicU64,
+    interp_us: AtomicU64,
+    pub latency: LatencyHisto,
+}
+
+impl Metrics {
+    pub fn add_stage_times(&self, knn_s: f64, interp_s: f64) {
+        self.knn_us.fetch_add((knn_s * 1e6) as u64, Ordering::Relaxed);
+        self.interp_us.fetch_add((interp_s * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn knn_seconds(&self) -> f64 {
+        self.knn_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    pub fn interp_seconds(&self) -> f64 {
+        self.interp_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Plain-data snapshot for reporting.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            queries: self.queries.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            knn_s: self.knn_seconds(),
+            interp_s: self.interp_seconds(),
+            mean_latency_s: self.latency.mean_s(),
+            p99_latency_s: self.latency.quantile_s(0.99),
+        }
+    }
+}
+
+/// Point-in-time copy of the metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub queries: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub knn_s: f64,
+    pub interp_s: f64,
+    pub mean_latency_s: f64,
+    pub p99_latency_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histo_mean_and_quantile() {
+        let h = LatencyHisto::default();
+        for _ in 0..90 {
+            h.record(0.001); // 1000us -> bucket 9
+        }
+        for _ in 0..10 {
+            h.record(0.1); // 100000us
+        }
+        assert_eq!(h.count(), 100);
+        let mean = h.mean_s();
+        assert!((mean - 0.0109).abs() < 1e-3, "{mean}");
+        assert!(h.quantile_s(0.5) < 0.01);
+        assert!(h.quantile_s(0.99) > 0.05);
+    }
+
+    #[test]
+    fn empty_histo() {
+        let h = LatencyHisto::default();
+        assert_eq!(h.mean_s(), 0.0);
+        assert_eq!(h.quantile_s(0.99), 0.0);
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let m = Metrics::default();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.add_stage_times(1.5, 2.5);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert!((s.knn_s - 1.5).abs() < 1e-5);
+        assert!((s.interp_s - 2.5).abs() < 1e-5);
+    }
+}

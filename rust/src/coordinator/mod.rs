@@ -1,0 +1,670 @@
+//! The L3 coordinator — the serving system around the paper's algorithm.
+//!
+//! ```text
+//!  clients ──► bounded JobQueue ──► dispatcher thread      stage-2 thread
+//!                 (backpressure)     │ batch formation       │ owns Engine
+//!                                    │ STAGE 1: grid kNN     │ STAGE 2: alpha +
+//!                                    │ (CPU pool, rust)      │ streamed interp
+//!                                    └── sync_channel(depth) ┘ (PJRT artifacts)
+//! ```
+//!
+//! The two stages run in separate threads connected by a bounded channel,
+//! so stage 1 of batch *i+1* overlaps stage 2 of batch *i* — the paper's
+//! two-stage decomposition (Fig. 1) turned into a serving pipeline.
+//! Python is never involved: stage 2 executes AOT artifacts through PJRT,
+//! or falls back to the pure-rust kernel when artifacts are absent.
+
+pub mod batcher;
+pub mod dataset;
+pub mod metrics;
+pub mod request;
+pub mod snapshot;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use crate::aidw::alpha;
+use crate::aidw::params::AidwParams;
+use crate::aidw::pipeline::weighted_stage_on;
+use crate::error::{Error, Result};
+use crate::geom::PointSet;
+use crate::grid::GridConfig;
+use crate::knn::grid_knn::{grid_knn_avg_distances_on, GridKnnConfig, RingRule};
+use crate::pool::Pool;
+use crate::runtime::{AidwExecutor, Engine};
+
+pub use crate::runtime::Variant;
+pub use batcher::BatchPolicy;
+pub use dataset::{Dataset, DatasetRegistry};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{Backend, InterpolationRequest, InterpolationResponse, Ticket};
+
+use batcher::{Batch, JobQueue};
+use request::Job;
+
+/// Stage-2 engine selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineMode {
+    /// Use PJRT artifacts if present, else pure-rust fallback.
+    #[default]
+    Auto,
+    /// Require PJRT artifacts (error at startup when missing).
+    PjrtRequired,
+    /// Force the pure-rust stage 2 (benchmark baseline / no artifacts).
+    CpuOnly,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Artifact directory (None = default dir / $AIDW_ARTIFACTS).
+    pub artifact_dir: Option<std::path::PathBuf>,
+    pub engine_mode: EngineMode,
+    /// Use the small q256/m1024 artifacts (fast XLA compiles — tests).
+    pub test_shapes: bool,
+    /// Default kernel variant for requests that don't specify one.
+    pub default_variant: Variant,
+    /// AIDW parameters (k, alpha levels, ...).
+    pub params: AidwParams,
+    pub grid: GridConfig,
+    pub batch: BatchPolicy,
+    /// kNN ring rule (Exact by default).
+    pub ring_rule: RingRule,
+    /// Worker width for stage 1 (None = machine-sized).
+    pub stage1_threads: Option<usize>,
+    /// Bounded depth of the stage-1 -> stage-2 channel.
+    pub pipeline_depth: usize,
+    /// Local-AIDW mode (extension A5): when set, stage 2 weights each
+    /// query over its N nearest neighbors instead of all data points.
+    /// Stage 1 gathers the neighbor ids in the same grid pass that feeds
+    /// alpha.  None = the paper's dense weighting.
+    pub local_neighbors: Option<usize>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            artifact_dir: None,
+            engine_mode: EngineMode::Auto,
+            test_shapes: false,
+            default_variant: Variant::Tiled,
+            params: AidwParams::default(),
+            grid: GridConfig::default(),
+            batch: BatchPolicy::default(),
+            ring_rule: RingRule::Exact,
+            stage1_threads: None,
+            pipeline_depth: 2,
+            local_neighbors: None,
+        }
+    }
+}
+
+/// A batch after stage 1, waiting for stage 2.
+struct Stage2Job {
+    batch: Batch,
+    queries: Vec<(f64, f64)>,
+    r_obs: Vec<f64>,
+    /// Local mode only: row-major (queries x n) neighbor indices.
+    neighbors: Option<(Vec<u32>, usize)>,
+    dataset: Arc<Dataset>,
+    knn_s: f64,
+}
+
+struct Shared {
+    registry: DatasetRegistry,
+    queue: JobQueue,
+    metrics: Metrics,
+    config: CoordinatorConfig,
+    pool: Pool,
+    running: AtomicBool,
+}
+
+/// The interpolation service coordinator.  See module docs.
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    dispatcher: Option<JoinHandle<()>>,
+    stage2: Option<JoinHandle<()>>,
+    /// Which backend stage 2 is using (resolved at startup).
+    backend: Backend,
+}
+
+impl Coordinator {
+    /// Start the coordinator (spawns the pipeline threads).
+    pub fn new(config: CoordinatorConfig) -> Result<Coordinator> {
+        config.params.validate().map_err(Error::InvalidArgument)?;
+        // Resolve the stage-2 backend up front so startup fails fast.
+        let artifact_dir = config
+            .artifact_dir
+            .clone()
+            .unwrap_or_else(crate::runtime::default_artifact_dir);
+        let backend = match config.engine_mode {
+            EngineMode::CpuOnly => Backend::CpuFallback,
+            EngineMode::PjrtRequired => {
+                if !artifact_dir.join("manifest.json").exists() {
+                    return Err(Error::Artifact(format!(
+                        "PJRT required but no manifest at {}",
+                        artifact_dir.display()
+                    )));
+                }
+                Backend::Pjrt
+            }
+            EngineMode::Auto => {
+                if artifact_dir.join("manifest.json").exists() {
+                    Backend::Pjrt
+                } else {
+                    Backend::CpuFallback
+                }
+            }
+        };
+
+        let pool = match config.stage1_threads {
+            Some(n) => Pool::new(n),
+            None => Pool::machine_sized(),
+        };
+        let shared = Arc::new(Shared {
+            registry: DatasetRegistry::new(),
+            queue: JobQueue::new(config.batch),
+            metrics: Metrics::default(),
+            config,
+            pool,
+            running: AtomicBool::new(true),
+        });
+
+        // stage-1 -> stage-2 bounded channel
+        let (tx, rx) = mpsc::sync_channel::<Stage2Job>(shared.config.pipeline_depth);
+
+        let dispatcher = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("aidw-dispatch".into())
+                .spawn(move || dispatcher_loop(shared, tx))
+                .map_err(Error::Io)?
+        };
+        let stage2 = {
+            let shared = shared.clone();
+            let dir = artifact_dir.clone();
+            std::thread::Builder::new()
+                .name("aidw-stage2".into())
+                .spawn(move || stage2_loop(shared, rx, backend, dir))
+                .map_err(Error::Io)?
+        };
+
+        Ok(Coordinator { shared, dispatcher: Some(dispatcher), stage2: Some(stage2), backend })
+    }
+
+    /// Coordinator with default config.
+    pub fn with_defaults() -> Result<Coordinator> {
+        Coordinator::new(CoordinatorConfig::default())
+    }
+
+    /// The stage-2 backend in use.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Register a dataset (builds its grid index now).
+    pub fn register_dataset(&self, name: &str, points: PointSet) -> Result<()> {
+        let ds = Dataset::build(
+            &self.shared.pool,
+            name,
+            points,
+            &self.shared.config.grid,
+            self.shared.config.params.area,
+        )?;
+        self.shared.registry.insert(ds);
+        Ok(())
+    }
+
+    /// Remove a dataset.
+    pub fn drop_dataset(&self, name: &str) -> bool {
+        self.shared.registry.remove(name)
+    }
+
+    /// Registered dataset names.
+    pub fn datasets(&self) -> Vec<String> {
+        self.shared.registry.names()
+    }
+
+    /// Submit asynchronously; returns a ticket to await.
+    pub fn submit(&self, request: InterpolationRequest) -> Result<Ticket> {
+        if request.queries.is_empty() {
+            return Err(Error::InvalidArgument("empty query list".into()));
+        }
+        // fail fast on unknown datasets (cheap read-lock check)
+        self.shared.registry.get(&request.dataset)?;
+        self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.shared
+            .metrics
+            .queries
+            .fetch_add(request.queries.len() as u64, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let job = Job { request, respond: tx, enqueued: std::time::Instant::now() };
+        match self.shared.queue.push(job) {
+            Ok(()) => Ok(Ticket { rx }),
+            Err(e) => {
+                self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Submit and block for the response.
+    pub fn interpolate(&self, request: InterpolationRequest) -> Result<InterpolationResponse> {
+        self.submit(request)?.wait()
+    }
+
+    /// Convenience: values only.
+    pub fn interpolate_values(&self, dataset: &str, queries: Vec<(f64, f64)>) -> Result<Vec<f64>> {
+        Ok(self.interpolate(InterpolationRequest::new(dataset, queries))?.values)
+    }
+
+    /// Persist every registered dataset to `<dir>/<name>.aidw`.
+    pub fn save_datasets(&self, dir: &std::path::Path) -> Result<usize> {
+        let names = self.shared.registry.names();
+        for name in &names {
+            let ds = self.shared.registry.get(name)?;
+            snapshot::save_dataset(dir, name, &ds.points)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Register every snapshot found in `dir` (grid indexes are rebuilt).
+    pub fn load_datasets(&self, dir: &std::path::Path) -> Result<usize> {
+        let loaded = snapshot::load_dir(dir)?;
+        let count = loaded.len();
+        for (name, pts) in loaded {
+            self.register_dataset(&name, pts)?;
+        }
+        Ok(count)
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Current queue depth (diagnostics / backpressure observers).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.depth()
+    }
+
+    /// Graceful shutdown: drains queued work, then stops the threads.
+    pub fn shutdown(&mut self) {
+        if self.shared.running.swap(false, Ordering::SeqCst) {
+            self.shared.queue.close();
+            if let Some(h) = self.dispatcher.take() {
+                let _ = h.join();
+            }
+            if let Some(h) = self.stage2.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Dispatcher: batch formation + stage 1 (grid kNN) on the CPU pool.
+fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
+    while let Some(batch) = shared.queue.next_batch() {
+        shared.metrics.batches.fetch_add(1, Ordering::Relaxed);
+
+        let dataset = match shared.registry.get(&batch.dataset) {
+            Ok(ds) => ds,
+            Err(e) => {
+                fail_batch(&shared, batch, &e);
+                continue;
+            }
+        };
+
+        // concatenate all queries of the batch
+        let mut queries = Vec::with_capacity(batch.total_queries);
+        for job in &batch.jobs {
+            queries.extend_from_slice(&job.request.queries);
+        }
+
+        // STAGE 1: grid kNN (the paper's fast kNN search).  In local mode
+        // the same grid pass also gathers each query's neighbor ids.
+        let t0 = std::time::Instant::now();
+        let k = batch
+            .k
+            .unwrap_or(shared.config.params.k)
+            .min(dataset.points.len())
+            .max(1);
+        let (r_obs, neighbors) = match shared.config.local_neighbors {
+            Some(n) => {
+                let n = n.max(k);
+                let (idx, r_obs) = crate::knn::grid_knn::grid_knn_neighbors(
+                    &shared.pool,
+                    &dataset.grid,
+                    &queries,
+                    n,
+                    k,
+                    shared.config.ring_rule,
+                );
+                (r_obs, Some((idx, n)))
+            }
+            None => {
+                let knn_cfg = GridKnnConfig { k, rule: shared.config.ring_rule };
+                let (r_obs, _) =
+                    grid_knn_avg_distances_on(&shared.pool, &dataset.grid, &queries, &knn_cfg);
+                (r_obs, None)
+            }
+        };
+        let knn_s = t0.elapsed().as_secs_f64();
+
+        let job = Stage2Job { batch, queries, r_obs, neighbors, dataset, knn_s };
+        if tx.send(job).is_err() {
+            break; // stage 2 is gone
+        }
+    }
+    // dropping tx closes the stage-2 loop
+}
+
+/// Stage 2: adaptive alpha + streamed weighted interpolation.
+fn stage2_loop(
+    shared: Arc<Shared>,
+    rx: mpsc::Receiver<Stage2Job>,
+    backend: Backend,
+    artifact_dir: std::path::PathBuf,
+) {
+    // The Engine lives entirely in this thread (PJRT handles are not
+    // shared across threads).
+    let engine = match backend {
+        Backend::Pjrt => match Engine::new(&artifact_dir) {
+            Ok(e) => Some(e),
+            Err(err) => {
+                eprintln!("aidw: engine init failed ({err}); using CPU fallback");
+                None
+            }
+        },
+        Backend::CpuFallback => None,
+    };
+
+    while let Ok(sj) = rx.recv() {
+        let result = run_stage2(&shared, &engine, &sj);
+        match result {
+            Ok((values, knn_extra_s, interp_s)) => {
+                let knn_s = sj.knn_s + knn_extra_s;
+                shared.metrics.add_stage_times(knn_s, interp_s);
+                respond_batch(&shared, sj, values, knn_s, interp_s, match engine {
+                    Some(_) => Backend::Pjrt,
+                    None => Backend::CpuFallback,
+                });
+            }
+            Err(e) => {
+                shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                let msg = e.to_string();
+                for job in sj.batch.jobs {
+                    let _ = job.respond.send(Err(Error::Service(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+/// Execute stage 2 for one batch; returns (values, extra_knn_s, interp_s).
+fn run_stage2(
+    shared: &Shared,
+    engine: &Option<Engine>,
+    sj: &Stage2Job,
+) -> Result<(Vec<f64>, f64, f64)> {
+    let variant = sj.batch.variant.unwrap_or(shared.config.default_variant);
+    let params = &shared.config.params;
+    match engine {
+        Some(engine) => {
+            let exec = if shared.config.test_shapes {
+                AidwExecutor::new_test_shapes(engine)
+            } else {
+                AidwExecutor::new(engine)
+            };
+            let mut p = params.clone();
+            p.area = Some(sj.dataset.area);
+            let (values, times) = match &sj.neighbors {
+                Some((idx, n)) => exec.local_aidw(
+                    &sj.dataset.points,
+                    &sj.queries,
+                    &sj.r_obs,
+                    idx,
+                    *n,
+                    &p,
+                )?,
+                None => exec.improved_aidw(
+                    &sj.dataset.points,
+                    &sj.queries,
+                    &sj.r_obs,
+                    &p,
+                    variant,
+                )?,
+            };
+            Ok((values, times.knn_s, times.interp_s))
+        }
+        None => {
+            // pure-rust stage 2
+            let t0 = std::time::Instant::now();
+            let alphas: Vec<f64> = sj
+                .r_obs
+                .iter()
+                .map(|&ro| alpha::adaptive_alpha(ro, sj.dataset.r_exp, params))
+                .collect();
+            let alpha_s = t0.elapsed().as_secs_f64();
+            let t1 = std::time::Instant::now();
+            let values = match &sj.neighbors {
+                Some((idx, n)) => local_weighted_cpu(
+                    &shared.pool, &sj.dataset.points, &sj.queries, &alphas, idx, *n),
+                None => weighted_stage_on(
+                    &shared.pool, &sj.dataset.points, &sj.queries, &alphas),
+            };
+            Ok((values, alpha_s, t1.elapsed().as_secs_f64()))
+        }
+    }
+}
+
+/// CPU local weighting with precomputed alphas (stage-2 fallback of the
+/// local mode; mirrors `aidw::local` but reuses this batch's stage-1
+/// neighbor gather instead of searching again).
+fn local_weighted_cpu(
+    pool: &Pool,
+    data: &crate::geom::PointSet,
+    queries: &[(f64, f64)],
+    alphas: &[f64],
+    nbr_idx: &[u32],
+    n: usize,
+) -> Vec<f64> {
+    use crate::geom::{dist2, EPS_D2};
+    let mut out = vec![0f64; queries.len()];
+    pool.for_each_slice_mut(&mut out, 64, |offset, chunk| {
+        for (j, slot) in chunk.iter_mut().enumerate() {
+            let qi = offset + j;
+            let (qx, qy) = queries[qi];
+            let a = alphas[qi];
+            let mut sw = 0.0f64;
+            let mut swz = 0.0f64;
+            for &pid in &nbr_idx[qi * n..(qi + 1) * n] {
+                if pid == u32::MAX {
+                    continue;
+                }
+                let i = pid as usize;
+                let d2 = dist2(qx, qy, data.xs[i], data.ys[i]).max(EPS_D2);
+                let w = (-0.5 * a * d2.ln()).exp();
+                sw += w;
+                swz += w * data.zs[i];
+            }
+            *slot = swz / sw;
+        }
+    });
+    out
+}
+
+/// Split batch results back per job and respond.
+fn respond_batch(
+    shared: &Shared,
+    sj: Stage2Job,
+    values: Vec<f64>,
+    knn_s: f64,
+    interp_s: f64,
+    backend: Backend,
+) {
+    let total = sj.queries.len();
+    let mut offset = 0usize;
+    for job in sj.batch.jobs {
+        let n = job.request.queries.len();
+        let slice = values[offset..offset + n].to_vec();
+        offset += n;
+        shared
+            .metrics
+            .latency
+            .record(job.enqueued.elapsed().as_secs_f64());
+        let _ = job.respond.send(Ok(InterpolationResponse {
+            values: slice,
+            knn_s,
+            interp_s,
+            batch_queries: total,
+            backend,
+        }));
+    }
+}
+
+fn fail_batch(shared: &Shared, batch: Batch, err: &Error) {
+    shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+    let msg = err.to_string();
+    for job in batch.jobs {
+        let _ = job.respond.send(Err(Error::Service(msg.clone())));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload;
+
+    fn cpu_coordinator() -> Coordinator {
+        let cfg = CoordinatorConfig {
+            engine_mode: EngineMode::CpuOnly,
+            ..Default::default()
+        };
+        Coordinator::new(cfg).unwrap()
+    }
+
+    #[test]
+    fn register_and_interpolate_cpu() {
+        let c = cpu_coordinator();
+        assert_eq!(c.backend(), Backend::CpuFallback);
+        let pts = workload::uniform_square(400, 50.0, 71);
+        c.register_dataset("d", pts.clone()).unwrap();
+        assert_eq!(c.datasets(), vec!["d".to_string()]);
+        let queries = workload::uniform_square(50, 50.0, 72).xy();
+        let resp = c
+            .interpolate(InterpolationRequest::new("d", queries.clone()))
+            .unwrap();
+        assert_eq!(resp.values.len(), 50);
+        assert_eq!(resp.backend, Backend::CpuFallback);
+        // matches the serial reference
+        let want = crate::aidw::serial::aidw_serial(&pts, &queries, &AidwParams::default());
+        for (g, w) in resp.values.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9, "{g} vs {w}");
+        }
+        let m = c.metrics();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.queries, 50);
+        assert!(m.batches >= 1);
+    }
+
+    #[test]
+    fn unknown_dataset_fails_fast() {
+        let c = cpu_coordinator();
+        let err = c
+            .interpolate(InterpolationRequest::new("missing", vec![(0.0, 0.0)]))
+            .unwrap_err();
+        assert!(matches!(err, Error::UnknownDataset(_)), "{err}");
+    }
+
+    #[test]
+    fn empty_queries_rejected() {
+        let c = cpu_coordinator();
+        let pts = workload::uniform_square(50, 10.0, 73);
+        c.register_dataset("d", pts).unwrap();
+        assert!(c.interpolate(InterpolationRequest::new("d", vec![])).is_err());
+    }
+
+    #[test]
+    fn concurrent_submissions_batch_together() {
+        let c = std::sync::Arc::new(cpu_coordinator());
+        let pts = workload::uniform_square(600, 50.0, 74);
+        c.register_dataset("d", pts).unwrap();
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let queries = workload::uniform_square(25, 50.0, 100 + t).xy();
+                c.interpolate(InterpolationRequest::new("d", queries)).unwrap()
+            }));
+        }
+        let resps: Vec<InterpolationResponse> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(resps.iter().all(|r| r.values.len() == 25));
+        // at least some requests shared a batch (probabilistic but the
+        // linger window makes it overwhelmingly likely under contention)
+        let m = c.metrics();
+        assert_eq!(m.requests, 8);
+        assert!(m.batches <= 8);
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_rejects_after() {
+        let mut c = cpu_coordinator();
+        let pts = workload::uniform_square(50, 10.0, 75);
+        c.register_dataset("d", pts).unwrap();
+        c.shutdown();
+        c.shutdown();
+        assert!(c
+            .interpolate(InterpolationRequest::new("d", vec![(1.0, 1.0)]))
+            .is_err());
+    }
+
+    #[test]
+    fn local_mode_cpu_matches_local_pipeline() {
+        let cfg = CoordinatorConfig {
+            engine_mode: EngineMode::CpuOnly,
+            local_neighbors: Some(48),
+            ..Default::default()
+        };
+        let c = Coordinator::new(cfg).unwrap();
+        let pts = workload::uniform_square(1000, 80.0, 78);
+        c.register_dataset("d", pts.clone()).unwrap();
+        let queries = workload::uniform_square(60, 80.0, 79).xy();
+        let got = c.interpolate_values("d", queries.clone()).unwrap();
+        let want = crate::aidw::local::interpolate_local(
+            &pts,
+            &queries,
+            &AidwParams::default(),
+            &crate::aidw::local::LocalConfig { n_neighbors: 48, ..Default::default() },
+        )
+        .unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn per_request_k_override() {
+        let c = cpu_coordinator();
+        let pts = workload::uniform_square(300, 50.0, 76);
+        c.register_dataset("d", pts.clone()).unwrap();
+        let queries = workload::uniform_square(20, 50.0, 77).xy();
+        let mut req = InterpolationRequest::new("d", queries.clone());
+        req.k = Some(3);
+        let got = c.interpolate(req).unwrap();
+        let mut p = AidwParams::default();
+        p.k = 3;
+        let want = crate::aidw::serial::aidw_serial(&pts, &queries, &p);
+        for (g, w) in got.values.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9);
+        }
+    }
+}

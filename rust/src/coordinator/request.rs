@@ -1,0 +1,72 @@
+//! Request/response types flowing through the coordinator.
+
+use std::sync::mpsc;
+
+use crate::error::Result;
+use crate::runtime::Variant;
+
+/// One interpolation request: queries against a registered dataset.
+#[derive(Debug, Clone)]
+pub struct InterpolationRequest {
+    pub dataset: String,
+    pub queries: Vec<(f64, f64)>,
+    /// Override the coordinator's default kernel variant.
+    pub variant: Option<Variant>,
+    /// Override k for this request (must be <= compiled k-buffer).
+    pub k: Option<usize>,
+}
+
+impl InterpolationRequest {
+    pub fn new(dataset: &str, queries: Vec<(f64, f64)>) -> Self {
+        InterpolationRequest { dataset: dataset.to_string(), queries, variant: None, k: None }
+    }
+}
+
+/// The prediction values plus execution metadata.
+#[derive(Debug, Clone)]
+pub struct InterpolationResponse {
+    pub values: Vec<f64>,
+    /// Stage-1 (kNN + alpha) seconds for the batch this request rode in.
+    pub knn_s: f64,
+    /// Stage-2 (weighted interpolating) seconds for the batch.
+    pub interp_s: f64,
+    /// Queries in the batch (how much sharing this request got).
+    pub batch_queries: usize,
+    /// Which engine ran stage 2.
+    pub backend: Backend,
+}
+
+/// Stage-2 execution backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT artifact on PJRT (the paper's GPU analog).
+    Pjrt,
+    /// Pure-rust fallback (no artifacts present).
+    CpuFallback,
+}
+
+/// In-flight job: request + response channel.
+pub(crate) struct Job {
+    pub request: InterpolationRequest,
+    pub respond: mpsc::Sender<Result<InterpolationResponse>>,
+    pub enqueued: std::time::Instant,
+}
+
+/// Handle for awaiting an async submission.
+pub struct Ticket {
+    pub(crate) rx: mpsc::Receiver<Result<InterpolationResponse>>,
+}
+
+impl Ticket {
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<InterpolationResponse> {
+        self.rx.recv().map_err(|_| {
+            crate::error::Error::Unavailable("coordinator dropped the job".into())
+        })?
+    }
+
+    /// Poll without blocking.
+    pub fn try_wait(&self) -> Option<Result<InterpolationResponse>> {
+        self.rx.try_recv().ok()
+    }
+}

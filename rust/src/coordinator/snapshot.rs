@@ -1,0 +1,195 @@
+//! Dataset persistence: binary snapshots of registered datasets so a
+//! service restart does not need clients to re-upload their point sets.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "AIDWSNP1" | u64 n | n×f64 xs | n×f64 ys | n×f64 zs
+//! ```
+//! The grid index is *not* serialized — rebuilding it is an O(n) sort
+//! (faster than deserializing on modern cores) and keeps the format
+//! independent of index-layout changes.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::geom::PointSet;
+
+const MAGIC: &[u8; 8] = b"AIDWSNP1";
+
+/// Serialize a point set to the writer.
+pub fn write_points<W: Write>(w: &mut W, pts: &PointSet) -> Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&(pts.len() as u64).to_le_bytes())?;
+    for channel in [&pts.xs, &pts.ys, &pts.zs] {
+        for &v in channel.iter() {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Deserialize a point set from the reader.
+pub fn read_points<R: Read>(r: &mut R) -> Result<PointSet> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::InvalidArgument(format!(
+            "bad snapshot magic {:?} (expected {MAGIC:?})",
+            &magic
+        )));
+    }
+    let mut nb = [0u8; 8];
+    r.read_exact(&mut nb)?;
+    let n = u64::from_le_bytes(nb) as usize;
+    // sanity cap: 2^33 points = 192 GiB — reject obviously corrupt headers
+    if n > (1 << 33) {
+        return Err(Error::InvalidArgument(format!("implausible point count {n}")));
+    }
+    let mut read_channel = |n: usize| -> Result<Vec<f64>> {
+        let mut buf = vec![0u8; n * 8];
+        r.read_exact(&mut buf)?;
+        Ok(buf
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    };
+    let xs = read_channel(n)?;
+    let ys = read_channel(n)?;
+    let zs = read_channel(n)?;
+    for v in xs.iter().chain(&ys).chain(&zs) {
+        if !v.is_finite() {
+            return Err(Error::InvalidArgument("non-finite value in snapshot".into()));
+        }
+    }
+    Ok(PointSet::from_soa(xs, ys, zs))
+}
+
+/// Save one dataset to `<dir>/<name>.aidw`.
+pub fn save_dataset(dir: &Path, name: &str, pts: &PointSet) -> Result<()> {
+    if name.is_empty() || name.contains(['/', '\\', '\0']) {
+        return Err(Error::InvalidArgument(format!("unsafe dataset name '{name}'")));
+    }
+    std::fs::create_dir_all(dir)?;
+    let tmp = dir.join(format!(".{name}.aidw.tmp"));
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        write_points(&mut f, pts)?;
+        f.flush()?;
+    }
+    // atomic publish
+    std::fs::rename(&tmp, dir.join(format!("{name}.aidw")))?;
+    Ok(())
+}
+
+/// Load every `*.aidw` snapshot in `dir`: returns (name, points) pairs,
+/// sorted by name.  Unreadable files produce errors, not silent skips.
+pub fn load_dir(dir: &Path) -> Result<Vec<(String, PointSet)>> {
+    let mut out = Vec::new();
+    if !dir.exists() {
+        return Ok(out);
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("aidw") {
+            continue;
+        }
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .ok_or_else(|| Error::InvalidArgument(format!("bad snapshot path {path:?}")))?
+            .to_string();
+        let mut f = std::io::BufReader::new(std::fs::File::open(&path)?);
+        let pts = read_points(&mut f)
+            .map_err(|e| Error::InvalidArgument(format!("{}: {e}", path.display())))?;
+        out.push((name, pts));
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("aidw_snap_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let pts = workload::uniform_square(500, 100.0, 401);
+        let mut buf = Vec::new();
+        write_points(&mut buf, &pts).unwrap();
+        assert_eq!(buf.len(), 8 + 8 + 3 * 500 * 8);
+        let back = read_points(&mut &buf[..]).unwrap();
+        assert_eq!(back.xs, pts.xs);
+        assert_eq!(back.ys, pts.ys);
+        assert_eq!(back.zs, pts.zs);
+    }
+
+    #[test]
+    fn empty_set_roundtrips() {
+        let pts = crate::geom::PointSet::default();
+        let mut buf = Vec::new();
+        write_points(&mut buf, &pts).unwrap();
+        assert_eq!(read_points(&mut &buf[..]).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn corrupt_inputs_rejected() {
+        // bad magic
+        assert!(read_points(&mut &b"NOTMAGIC\0\0\0\0\0\0\0\0"[..]).is_err());
+        // truncated body
+        let pts = workload::uniform_square(10, 1.0, 402);
+        let mut buf = Vec::new();
+        write_points(&mut buf, &pts).unwrap();
+        assert!(read_points(&mut &buf[..buf.len() - 5]).is_err());
+        // implausible count
+        let mut huge = MAGIC.to_vec();
+        huge.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(read_points(&mut &huge[..]).is_err());
+        // non-finite payload
+        let mut nan = MAGIC.to_vec();
+        nan.extend_from_slice(&1u64.to_le_bytes());
+        nan.extend_from_slice(&f64::NAN.to_le_bytes());
+        nan.extend_from_slice(&1f64.to_le_bytes());
+        nan.extend_from_slice(&1f64.to_le_bytes());
+        assert!(read_points(&mut &nan[..]).is_err());
+    }
+
+    #[test]
+    fn save_and_load_dir() {
+        let dir = tmpdir("dir");
+        let a = workload::uniform_square(100, 10.0, 403);
+        let b = workload::terrain_samples(50, 10.0, 0.0, 404);
+        save_dataset(&dir, "alpha", &a).unwrap();
+        save_dataset(&dir, "beta", &b).unwrap();
+        std::fs::write(dir.join("ignore.txt"), b"noise").unwrap();
+        let loaded = load_dir(&dir).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].0, "alpha");
+        assert_eq!(loaded[0].1.len(), 100);
+        assert_eq!(loaded[1].0, "beta");
+        assert_eq!(loaded[1].1.zs, b.zs);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unsafe_names_rejected() {
+        let dir = tmpdir("names");
+        let pts = workload::uniform_square(5, 1.0, 405);
+        assert!(save_dataset(&dir, "../evil", &pts).is_err());
+        assert!(save_dataset(&dir, "", &pts).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_empty() {
+        let got = load_dir(Path::new("/nonexistent/aidw_snapshots")).unwrap();
+        assert!(got.is_empty());
+    }
+}

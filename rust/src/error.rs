@@ -1,0 +1,52 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by the aidw library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Artifact directory missing or malformed (run `make artifacts`).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// The PJRT layer (xla crate) failed.
+    #[error("xla/pjrt error: {0}")]
+    Xla(String),
+
+    /// A request referenced an unknown dataset.
+    #[error("unknown dataset: {0}")]
+    UnknownDataset(String),
+
+    /// Invalid request or configuration parameters.
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+
+    /// kNN search cannot satisfy k (fewer than k data points).
+    #[error("k={k} exceeds data points available ({available})")]
+    InsufficientData { k: usize, available: usize },
+
+    /// JSON parse error (service protocol / manifest).
+    #[error("json error at byte {offset}: {message}")]
+    Json { offset: usize, message: String },
+
+    /// Service-level failure (bind, connect, protocol).
+    #[error("service error: {0}")]
+    Service(String),
+
+    /// The coordinator is shutting down / queue closed.
+    #[error("coordinator unavailable: {0}")]
+    Unavailable(String),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,230 @@
+//! Planar geometry primitives: points, bounding boxes, distances.
+//!
+//! AIDW operates on scattered 2.5D samples: planar (x, y) position plus a
+//! scalar value z (elevation, concentration, ...).  Point storage is
+//! Structure-of-Arrays throughout — the paper's §4.2.1 data layout — which
+//! is also what the PJRT artifacts consume directly.
+
+/// Squared-distance floor used by the weighting kernels (identical to
+/// `EPS_D2` in `python/compile/kernels/ref.py` so fp paths agree).
+pub const EPS_D2: f64 = 1e-12;
+
+/// Squared Euclidean distance between two planar points.
+#[inline(always)]
+pub fn dist2(ax: f64, ay: f64, bx: f64, by: f64) -> f64 {
+    let dx = ax - bx;
+    let dy = ay - by;
+    dx * dx + dy * dy
+}
+
+/// Single-precision squared distance (GPU-analog paths are f32).
+#[inline(always)]
+pub fn dist2_f32(ax: f32, ay: f32, bx: f32, by: f32) -> f32 {
+    let dx = ax - bx;
+    let dy = ay - by;
+    dx * dx + dy * dy
+}
+
+/// Axis-aligned bounding box of a planar region.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Aabb {
+    pub min_x: f64,
+    pub min_y: f64,
+    pub max_x: f64,
+    pub max_y: f64,
+}
+
+impl Aabb {
+    /// The empty box (inverted bounds; `extend` fixes it up).
+    pub const EMPTY: Aabb = Aabb {
+        min_x: f64::INFINITY,
+        min_y: f64::INFINITY,
+        max_x: f64::NEG_INFINITY,
+        max_y: f64::NEG_INFINITY,
+    };
+
+    /// Box from explicit bounds.
+    pub fn new(min_x: f64, min_y: f64, max_x: f64, max_y: f64) -> Self {
+        Aabb { min_x, min_y, max_x, max_y }
+    }
+
+    /// Bounding box of a set of coordinates (serial fold).
+    pub fn from_points(xs: &[f64], ys: &[f64]) -> Self {
+        let mut b = Aabb::EMPTY;
+        for (&x, &y) in xs.iter().zip(ys) {
+            b.extend(x, y);
+        }
+        b
+    }
+
+    /// Grow to include a point.
+    #[inline]
+    pub fn extend(&mut self, x: f64, y: f64) {
+        self.min_x = self.min_x.min(x);
+        self.min_y = self.min_y.min(y);
+        self.max_x = self.max_x.max(x);
+        self.max_y = self.max_y.max(y);
+    }
+
+    /// Union of two boxes.
+    pub fn union(&self, other: &Aabb) -> Aabb {
+        Aabb {
+            min_x: self.min_x.min(other.min_x),
+            min_y: self.min_y.min(other.min_y),
+            max_x: self.max_x.max(other.max_x),
+            max_y: self.max_y.max(other.max_y),
+        }
+    }
+
+    /// Width (x extent); zero for the empty box.
+    pub fn width(&self) -> f64 {
+        (self.max_x - self.min_x).max(0.0)
+    }
+
+    /// Height (y extent); zero for the empty box.
+    pub fn height(&self) -> f64 {
+        (self.max_y - self.min_y).max(0.0)
+    }
+
+    /// Area of the region — the `A` of Eq. 2.
+    pub fn area(&self) -> f64 {
+        self.width() * self.height()
+    }
+
+    /// True if the box contains the point (inclusive bounds).
+    pub fn contains(&self, x: f64, y: f64) -> bool {
+        x >= self.min_x && x <= self.max_x && y >= self.min_y && y <= self.max_y
+    }
+
+    /// True if no point was ever added.
+    pub fn is_empty(&self) -> bool {
+        self.min_x > self.max_x || self.min_y > self.max_y
+    }
+}
+
+/// A scattered set of 2.5D samples in SoA layout.
+#[derive(Debug, Clone, Default)]
+pub struct PointSet {
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+    pub zs: Vec<f64>,
+}
+
+impl PointSet {
+    /// Empty set with reserved capacity.
+    pub fn with_capacity(n: usize) -> Self {
+        PointSet {
+            xs: Vec::with_capacity(n),
+            ys: Vec::with_capacity(n),
+            zs: Vec::with_capacity(n),
+        }
+    }
+
+    /// Build from parallel SoA vectors (must be equal length).
+    pub fn from_soa(xs: Vec<f64>, ys: Vec<f64>, zs: Vec<f64>) -> Self {
+        assert_eq!(xs.len(), ys.len());
+        assert_eq!(xs.len(), zs.len());
+        PointSet { xs, ys, zs }
+    }
+
+    /// Number of points.
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// True when the set holds no points.
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Append one sample.
+    pub fn push(&mut self, x: f64, y: f64, z: f64) {
+        self.xs.push(x);
+        self.ys.push(y);
+        self.zs.push(z);
+    }
+
+    /// Planar positions only (query sets carry no z).
+    pub fn xy(&self) -> Vec<(f64, f64)> {
+        self.xs.iter().zip(&self.ys).map(|(&x, &y)| (x, y)).collect()
+    }
+
+    /// Bounding box of the positions.
+    pub fn bounds(&self) -> Aabb {
+        Aabb::from_points(&self.xs, &self.ys)
+    }
+
+    /// Min/max of the value channel, or None if empty.
+    pub fn z_range(&self) -> Option<(f64, f64)> {
+        if self.is_empty() {
+            return None;
+        }
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &z in &self.zs {
+            lo = lo.min(z);
+            hi = hi.max(z);
+        }
+        Some((lo, hi))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist2_basics() {
+        assert_eq!(dist2(0.0, 0.0, 3.0, 4.0), 25.0);
+        assert_eq!(dist2(1.0, 1.0, 1.0, 1.0), 0.0);
+        assert_eq!(dist2_f32(0.0, 0.0, 3.0, 4.0), 25.0);
+    }
+
+    #[test]
+    fn aabb_from_points() {
+        let b = Aabb::from_points(&[1.0, -2.0, 3.0], &[0.5, 4.0, -1.0]);
+        assert_eq!(b, Aabb::new(-2.0, -1.0, 3.0, 4.0));
+        assert_eq!(b.width(), 5.0);
+        assert_eq!(b.height(), 5.0);
+        assert_eq!(b.area(), 25.0);
+    }
+
+    #[test]
+    fn aabb_empty() {
+        let b = Aabb::EMPTY;
+        assert!(b.is_empty());
+        assert_eq!(b.area(), 0.0);
+        let b2 = Aabb::from_points(&[], &[]);
+        assert!(b2.is_empty());
+    }
+
+    #[test]
+    fn aabb_contains_and_union() {
+        let a = Aabb::new(0.0, 0.0, 1.0, 1.0);
+        let b = Aabb::new(2.0, 2.0, 3.0, 3.0);
+        assert!(a.contains(0.5, 0.5));
+        assert!(a.contains(1.0, 1.0)); // inclusive
+        assert!(!a.contains(1.1, 0.5));
+        let u = a.union(&b);
+        assert!(u.contains(1.5, 1.5));
+        assert_eq!(u.area(), 9.0);
+    }
+
+    #[test]
+    fn pointset_roundtrip() {
+        let mut p = PointSet::with_capacity(2);
+        p.push(1.0, 2.0, 3.0);
+        p.push(-1.0, 0.0, 5.0);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.xy(), vec![(1.0, 2.0), (-1.0, 0.0)]);
+        assert_eq!(p.z_range(), Some((3.0, 5.0)));
+        let b = p.bounds();
+        assert_eq!(b, Aabb::new(-1.0, 0.0, 1.0, 2.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn pointset_soa_length_mismatch_panics() {
+        let _ = PointSet::from_soa(vec![1.0], vec![1.0, 2.0], vec![1.0]);
+    }
+}

@@ -1,0 +1,545 @@
+//! The even planar grid — the paper's space-partitioning structure
+//! (§3.2.1-3.2.3, Figs. 2-3) in CSR form.
+//!
+//! Construction mirrors the paper's GPU pipeline step by step:
+//!
+//! 1. bounding box via parallel minmax (`thrust::minmax_element` analog);
+//! 2. square cell width from Eq. 2 — the expected nearest-neighbor distance
+//!    of a random pattern — times a tunable factor (ablation A1);
+//! 3. `nCol = (maxX - minX + w) / w`, `nRow = (maxY - minY + w) / w`
+//!    (the paper's exact formulas);
+//! 4. per-point cell ids `gid = row * nCol + col` in parallel;
+//! 5. stable radix `sort_by_key(gid, point_index)`;
+//! 6. segmented reduction/scan (counts + segment heads) folded into a dense
+//!    `cell_start` CSR offset array;
+//! 7. gather of the coordinate arrays into cell order, so a cell's points
+//!    are one contiguous cache-friendly slice.
+
+use crate::error::{Error, Result};
+use crate::geom::{Aabb, PointSet};
+use crate::pool::{self, Pool};
+use crate::primitives::{reduce, scan, sort};
+
+/// Grid construction parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct GridConfig {
+    /// Multiplier on the Eq.-2 cell width (1.0 = the paper's choice).
+    /// Larger cells mean fewer, fuller cells; ablation A1 sweeps this.
+    pub cell_width_factor: f64,
+    /// Optional explicit cell width (overrides Eq. 2 entirely).
+    pub explicit_cell_width: Option<f64>,
+    /// Hard cap on cell count (guards against degenerate tiny widths).
+    pub max_cells: usize,
+}
+
+impl Default for GridConfig {
+    fn default() -> Self {
+        GridConfig {
+            cell_width_factor: 1.0,
+            explicit_cell_width: None,
+            max_cells: 1 << 26, // 64M cells ~ 256 MB of offsets
+        }
+    }
+}
+
+/// The even grid over a point set, with points stored cell-contiguously.
+#[derive(Debug, Clone)]
+pub struct EvenGrid {
+    bounds: Aabb,
+    cell_width: f64,
+    n_rows: usize,
+    n_cols: usize,
+    /// CSR offsets: points of cell `c` sit at `sorted index start[c]..start[c+1]`.
+    cell_start: Vec<u32>,
+    /// Original index of each point, in cell-sorted order.
+    point_index: Vec<u32>,
+    /// Coordinates/values gathered into cell-sorted order.
+    xs: Vec<f64>,
+    ys: Vec<f64>,
+    zs: Vec<f64>,
+}
+
+impl EvenGrid {
+    /// Build the grid over `points`, optionally extending the partitioned
+    /// region to also cover `extra_bounds` (the paper partitions the region
+    /// enclosing *both* data and interpolated points; a serving deployment
+    /// passes the expected query region here).
+    pub fn build(points: &PointSet, extra_bounds: Option<Aabb>, cfg: &GridConfig) -> Result<Self> {
+        Self::build_on(pool::global(), points, extra_bounds, cfg)
+    }
+
+    /// [`EvenGrid::build`] on an explicit pool (tests/benches).
+    pub fn build_on(
+        pool: &Pool,
+        points: &PointSet,
+        extra_bounds: Option<Aabb>,
+        cfg: &GridConfig,
+    ) -> Result<Self> {
+        let n = points.len();
+        if n == 0 {
+            return Err(Error::InvalidArgument("cannot build grid over empty point set".into()));
+        }
+
+        // 1. bounding box (parallel minmax, Thrust analog)
+        let (min_x, max_x) = reduce::parallel_minmax(pool, &points.xs).unwrap();
+        let (min_y, max_y) = reduce::parallel_minmax(pool, &points.ys).unwrap();
+        let mut bounds = Aabb::new(min_x, min_y, max_x, max_y);
+        if let Some(extra) = extra_bounds {
+            if !extra.is_empty() {
+                bounds = bounds.union(&extra);
+            }
+        }
+
+        // 2. cell width: Eq. 2 (expected NN distance) * factor
+        let area = bounds.area().max(f64::MIN_POSITIVE);
+        let r_exp = 1.0 / (2.0 * ((n as f64) / area).sqrt());
+        let mut cell_width = match cfg.explicit_cell_width {
+            Some(w) => w,
+            None => r_exp * cfg.cell_width_factor,
+        };
+        if !cell_width.is_finite() || cell_width <= 0.0 {
+            // degenerate geometry (all points coincident): one cell
+            cell_width = 1.0;
+        }
+
+        // 3. rows/cols per the paper's integer formulas, capped
+        let mut n_cols = ((bounds.width() + cell_width) / cell_width) as usize;
+        let mut n_rows = ((bounds.height() + cell_width) / cell_width) as usize;
+        n_cols = n_cols.max(1);
+        n_rows = n_rows.max(1);
+        while n_cols * n_rows > cfg.max_cells {
+            cell_width *= 2.0;
+            n_cols = (((bounds.width() + cell_width) / cell_width) as usize).max(1);
+            n_rows = (((bounds.height() + cell_width) / cell_width) as usize).max(1);
+        }
+        let n_cells = n_rows * n_cols;
+
+        // 4. per-point cell ids (parallel; one "GPU thread" per point)
+        let mut keys = vec![0u32; n];
+        {
+            let xs = &points.xs;
+            let ys = &points.ys;
+            let keys_ptr = SendPtr(keys.as_mut_ptr());
+            pool.parallel_for(n, 1 << 14, |r| {
+                let kp = keys_ptr;
+                for i in r {
+                    let (row, col) =
+                        locate(xs[i], ys[i], &bounds, cell_width, n_rows, n_cols);
+                    unsafe { *kp.0.add(i) = (row * n_cols + col) as u32 };
+                }
+            });
+        }
+
+        // 5. stable sort of point indices by cell id
+        let mut sorted_keys = keys;
+        let mut point_index: Vec<u32> = (0..n as u32).collect();
+        sort::radix_sort_by_key(pool, &mut sorted_keys, &mut point_index);
+
+        // 6. CSR offsets from the segmented counts: scatter counts into a
+        //    dense per-cell array, then exclusive scan (Fig. 3)
+        let (unique_cells, counts) = reduce::counts_by_key(&sorted_keys);
+        let mut dense_counts = vec![0u32; n_cells];
+        for (&cell, &count) in unique_cells.iter().zip(&counts) {
+            dense_counts[cell as usize] = count;
+        }
+        let mut cell_start = vec![0u32; n_cells + 1];
+        let total = scan::exclusive_scan(pool, &dense_counts, &mut cell_start[..n_cells]);
+        cell_start[n_cells] = total;
+        debug_assert_eq!(total as usize, n);
+
+        // 7. gather coordinates into cell order
+        let mut xs = vec![0f64; n];
+        let mut ys = vec![0f64; n];
+        let mut zs = vec![0f64; n];
+        {
+            let (gx, gy, gz) =
+                (SendPtr(xs.as_mut_ptr()), SendPtr(ys.as_mut_ptr()), SendPtr(zs.as_mut_ptr()));
+            let idx = &point_index;
+            let sx = &points.xs;
+            let sy = &points.ys;
+            let sz = &points.zs;
+            pool.parallel_for(n, 1 << 14, |r| {
+                let (gx, gy, gz) = (gx, gy, gz);
+                for i in r {
+                    let src = idx[i] as usize;
+                    unsafe {
+                        *gx.0.add(i) = sx[src];
+                        *gy.0.add(i) = sy[src];
+                        *gz.0.add(i) = sz[src];
+                    }
+                }
+            });
+        }
+
+        Ok(EvenGrid {
+            bounds,
+            cell_width,
+            n_rows,
+            n_cols,
+            cell_start,
+            point_index,
+            xs,
+            ys,
+            zs,
+        })
+    }
+
+    /// Region the grid partitions.
+    pub fn bounds(&self) -> Aabb {
+        self.bounds
+    }
+
+    /// Square cell width.
+    pub fn cell_width(&self) -> f64 {
+        self.cell_width
+    }
+
+    /// Grid dimensions (rows, cols).
+    pub fn dims(&self) -> (usize, usize) {
+        (self.n_rows, self.n_cols)
+    }
+
+    /// Total number of cells.
+    pub fn n_cells(&self) -> usize {
+        self.n_rows * self.n_cols
+    }
+
+    /// Number of indexed points.
+    pub fn n_points(&self) -> usize {
+        self.point_index.len()
+    }
+
+    /// (row, col) of the cell containing (x, y), clamped to the grid.
+    pub fn locate(&self, x: f64, y: f64) -> (usize, usize) {
+        locate(x, y, &self.bounds, self.cell_width, self.n_rows, self.n_cols)
+    }
+
+    /// Cell-sorted coordinate arrays (for bulk export to the runtime).
+    pub fn sorted_coords(&self) -> (&[f64], &[f64], &[f64]) {
+        (&self.xs, &self.ys, &self.zs)
+    }
+
+    /// Original point index of each cell-sorted slot.
+    pub fn sorted_index(&self) -> &[u32] {
+        &self.point_index
+    }
+
+    /// The points of one cell as (xs, ys, zs, original_indices) slices.
+    pub fn cell_points(&self, row: usize, col: usize) -> (&[f64], &[f64], &[f64], &[u32]) {
+        let c = row * self.n_cols + col;
+        let a = self.cell_start[c] as usize;
+        let b = self.cell_start[c + 1] as usize;
+        (&self.xs[a..b], &self.ys[a..b], &self.zs[a..b], &self.point_index[a..b])
+    }
+
+    /// Number of points in one cell.
+    pub fn cell_count(&self, row: usize, col: usize) -> usize {
+        let c = row * self.n_cols + col;
+        (self.cell_start[c + 1] - self.cell_start[c]) as usize
+    }
+
+    /// Visit every cell of the square *ring* at Chebyshev distance `level`
+    /// from (row, col): `level == 0` is the center cell itself.  Cells
+    /// outside the grid are skipped.  Returns the number of points seen.
+    pub fn for_ring<F>(&self, row: usize, col: usize, level: usize, mut f: F) -> usize
+    where
+        F: FnMut(&[f64], &[f64], &[f64], &[u32]),
+    {
+        let (r0, c0) = (row as isize, col as isize);
+        let lv = level as isize;
+        let mut seen = 0usize;
+        let visit = |r: isize, c: isize, f: &mut F, seen: &mut usize| {
+            if r < 0 || c < 0 || r >= self.n_rows as isize || c >= self.n_cols as isize {
+                return;
+            }
+            let (xs, ys, zs, idx) = self.cell_points(r as usize, c as usize);
+            *seen += xs.len();
+            if !xs.is_empty() {
+                f(xs, ys, zs, idx);
+            }
+        };
+        if level == 0 {
+            visit(r0, c0, &mut f, &mut seen);
+            return seen;
+        }
+        // top and bottom rows of the ring
+        for c in (c0 - lv)..=(c0 + lv) {
+            visit(r0 - lv, c, &mut f, &mut seen);
+            visit(r0 + lv, c, &mut f, &mut seen);
+        }
+        // left and right columns, excluding corners already visited
+        for r in (r0 - lv + 1)..=(r0 + lv - 1) {
+            visit(r, c0 - lv, &mut f, &mut seen);
+            visit(r, c0 + lv, &mut f, &mut seen);
+        }
+        seen
+    }
+
+    /// True when the square of Chebyshev radius `level` around (row, col)
+    /// covers the whole grid — no point lies outside it.
+    pub fn ring_exhausted(&self, row: usize, col: usize, level: usize) -> bool {
+        let lv = level as isize;
+        let (r, c) = (row as isize, col as isize);
+        r - lv < 0
+            && c - lv < 0
+            && r + lv >= self.n_rows as isize - 1
+            && c + lv >= self.n_cols as isize - 1
+    }
+
+    /// Lower bound on the distance from (x, y) to any cell *outside* the
+    /// square of Chebyshev radius `level` around its own cell.  `None` when
+    /// the square already covers the whole grid.  This powers the exact
+    /// kNN termination criterion.
+    pub fn min_dist_beyond(&self, x: f64, y: f64, row: usize, col: usize, level: usize) -> Option<f64> {
+        if self.ring_exhausted(row, col, level) {
+            return None;
+        }
+        let w = self.cell_width;
+        let lv = level as f64;
+        let mut d = f64::INFINITY;
+        // distance to the 4 edges of the visited square, ignoring edges
+        // beyond the grid boundary (nothing lives there)
+        let left_edge = self.bounds.min_x + (col as f64 - lv) * w;
+        let right_edge = self.bounds.min_x + (col as f64 + lv + 1.0) * w;
+        let bottom_edge = self.bounds.min_y + (row as f64 - lv) * w;
+        let top_edge = self.bounds.min_y + (row as f64 + lv + 1.0) * w;
+        if col as isize - level as isize >= 0 {
+            d = d.min(x - left_edge);
+        }
+        if col + level + 1 < self.n_cols {
+            d = d.min(right_edge - x);
+        }
+        if row as isize - level as isize >= 0 {
+            d = d.min(y - bottom_edge);
+        }
+        if row + level + 1 < self.n_rows {
+            d = d.min(top_edge - y);
+        }
+        Some(d.max(0.0))
+    }
+
+    /// Histogram statistics over cell occupancy (diagnostics / DESIGN.md).
+    pub fn occupancy_stats(&self) -> GridStats {
+        let n_cells = self.n_cells();
+        let mut empty = 0usize;
+        let mut max = 0usize;
+        for c in 0..n_cells {
+            let cnt = (self.cell_start[c + 1] - self.cell_start[c]) as usize;
+            if cnt == 0 {
+                empty += 1;
+            }
+            max = max.max(cnt);
+        }
+        GridStats {
+            n_cells,
+            n_points: self.n_points(),
+            empty_cells: empty,
+            max_per_cell: max,
+            mean_per_cell: self.n_points() as f64 / n_cells as f64,
+        }
+    }
+}
+
+/// Occupancy summary of a built grid.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GridStats {
+    pub n_cells: usize,
+    pub n_points: usize,
+    pub empty_cells: usize,
+    pub max_per_cell: usize,
+    pub mean_per_cell: f64,
+}
+
+/// Cell coordinates of (x, y) — the paper's `(p - min) / w` with clamping so
+/// out-of-region queries fall into the nearest border cell.
+#[inline]
+fn locate(x: f64, y: f64, b: &Aabb, w: f64, n_rows: usize, n_cols: usize) -> (usize, usize) {
+    let col = ((x - b.min_x) / w).floor() as isize;
+    let row = ((y - b.min_y) / w).floor() as isize;
+    let col = col.clamp(0, n_cols as isize - 1) as usize;
+    let row = row.clamp(0, n_rows as isize - 1) as usize;
+    (row, col)
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+    use crate::workload;
+
+    fn grid_for(n: usize, seed: u64) -> (PointSet, EvenGrid) {
+        let pts = workload::uniform_square(n, 100.0, seed);
+        let grid = EvenGrid::build(&pts, None, &GridConfig::default()).unwrap();
+        (pts, grid)
+    }
+
+    #[test]
+    fn empty_set_rejected() {
+        let pts = PointSet::default();
+        assert!(EvenGrid::build(&pts, None, &GridConfig::default()).is_err());
+    }
+
+    #[test]
+    fn csr_partitions_all_points() {
+        let (pts, grid) = grid_for(5000, 1);
+        assert_eq!(grid.n_points(), 5000);
+        // cell_start is monotone and ends at n
+        let cs = &grid.cell_start;
+        assert_eq!(cs[0], 0);
+        assert_eq!(*cs.last().unwrap() as usize, pts.len());
+        for w in cs.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        // point_index is a permutation
+        let mut seen = grid.point_index.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..5000u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn every_point_is_in_its_cell() {
+        let (pts, grid) = grid_for(2000, 2);
+        let (n_rows, n_cols) = grid.dims();
+        for row in 0..n_rows {
+            for col in 0..n_cols {
+                let (xs, ys, _, idx) = grid.cell_points(row, col);
+                for j in 0..xs.len() {
+                    let (r2, c2) = grid.locate(xs[j], ys[j]);
+                    assert_eq!((r2, c2), (row, col));
+                    // gathered coords match the original arrays
+                    let orig = idx[j] as usize;
+                    assert_eq!(xs[j], pts.xs[orig]);
+                    assert_eq!(ys[j], pts.ys[orig]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eq2_cell_width() {
+        let (pts, grid) = grid_for(10_000, 3);
+        let b = pts.bounds();
+        let expect = 1.0 / (2.0 * (10_000.0 / b.area()).sqrt());
+        assert!((grid.cell_width() - expect).abs() < 1e-12);
+        // Eq.-2 width -> mean occupancy ~ 0.25 points/cell
+        let stats = grid.occupancy_stats();
+        assert!(stats.mean_per_cell > 0.15 && stats.mean_per_cell < 0.35,
+                "{stats:?}");
+    }
+
+    #[test]
+    fn explicit_cell_width_respected() {
+        let pts = workload::uniform_square(500, 100.0, 4);
+        let cfg = GridConfig { explicit_cell_width: Some(10.0), ..Default::default() };
+        let grid = EvenGrid::build(&pts, None, &cfg).unwrap();
+        assert_eq!(grid.cell_width(), 10.0);
+        let (rows, cols) = grid.dims();
+        assert!(rows >= 10 && rows <= 11, "{rows}");
+        assert!(cols >= 10 && cols <= 11, "{cols}");
+    }
+
+    #[test]
+    fn max_cells_cap_enforced() {
+        let pts = workload::uniform_square(1000, 100.0, 5);
+        let cfg = GridConfig {
+            explicit_cell_width: Some(1e-4), // would be ~1e12 cells
+            max_cells: 4096,
+            ..Default::default()
+        };
+        let grid = EvenGrid::build(&pts, None, &cfg).unwrap();
+        assert!(grid.n_cells() <= 4096);
+        assert_eq!(grid.n_points(), 1000);
+    }
+
+    #[test]
+    fn locate_clamps_outside_queries() {
+        let (_, grid) = grid_for(100, 6);
+        let (n_rows, n_cols) = grid.dims();
+        assert_eq!(grid.locate(-1e9, -1e9), (0, 0));
+        assert_eq!(grid.locate(1e9, 1e9), (n_rows - 1, n_cols - 1));
+    }
+
+    #[test]
+    fn ring_visits_each_cell_once() {
+        let (_, grid) = grid_for(3000, 7);
+        let (n_rows, n_cols) = grid.dims();
+        let (r0, c0) = (n_rows / 2, n_cols / 2);
+        // union of rings 0..=L == square of radius L, counted exactly once
+        let mut total = 0usize;
+        for level in 0..=3usize {
+            total += grid.for_ring(r0, c0, level, |_, _, _, _| {});
+        }
+        let mut expect = 0usize;
+        for r in r0.saturating_sub(3)..=(r0 + 3).min(n_rows - 1) {
+            for c in c0.saturating_sub(3)..=(c0 + 3).min(n_cols - 1) {
+                expect += grid.cell_count(r, c);
+            }
+        }
+        assert_eq!(total, expect);
+    }
+
+    #[test]
+    fn ring_exhaustion() {
+        let (_, grid) = grid_for(200, 8);
+        let (n_rows, n_cols) = grid.dims();
+        let max_dim = n_rows.max(n_cols);
+        assert!(!grid.ring_exhausted(0, 0, 0));
+        assert!(grid.ring_exhausted(0, 0, max_dim));
+        assert!(grid.ring_exhausted(n_rows / 2, n_cols / 2, max_dim));
+    }
+
+    #[test]
+    fn min_dist_beyond_is_lower_bound() {
+        let (pts, grid) = grid_for(4000, 9);
+        let mut rng = Pcg32::seeded(99);
+        for _ in 0..200 {
+            let qx = rng.uniform(0.0, 100.0);
+            let qy = rng.uniform(0.0, 100.0);
+            let (row, col) = grid.locate(qx, qy);
+            for level in 0..4usize {
+                let Some(bound) = grid.min_dist_beyond(qx, qy, row, col, level) else {
+                    continue;
+                };
+                // every point OUTSIDE the level-square must be at least
+                // `bound` away
+                for i in 0..pts.len() {
+                    let (r, c) = grid.locate(pts.xs[i], pts.ys[i]);
+                    let cheby =
+                        (r as isize - row as isize).abs().max((c as isize - col as isize).abs());
+                    if cheby as usize > level {
+                        let d = crate::geom::dist2(qx, qy, pts.xs[i], pts.ys[i]).sqrt();
+                        assert!(
+                            d >= bound - 1e-9,
+                            "point {i} at cheby {cheby} dist {d} < bound {bound} (level {level})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn coincident_points_degenerate_geometry() {
+        let mut pts = PointSet::default();
+        for _ in 0..32 {
+            pts.push(5.0, 5.0, 1.0);
+        }
+        let grid = EvenGrid::build(&pts, None, &GridConfig::default()).unwrap();
+        assert_eq!(grid.n_points(), 32);
+        assert_eq!(grid.dims(), (1, 1));
+    }
+
+    #[test]
+    fn extra_bounds_extend_region() {
+        let pts = workload::uniform_square(500, 10.0, 11);
+        let extra = Aabb::new(-10.0, -10.0, 30.0, 30.0);
+        let grid = EvenGrid::build(&pts, Some(extra), &GridConfig::default()).unwrap();
+        assert!(grid.bounds().contains(-10.0, -10.0));
+        assert!(grid.bounds().contains(30.0, 30.0));
+    }
+}

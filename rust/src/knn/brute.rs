@@ -1,0 +1,140 @@
+//! Brute-force kNN — the *original* algorithm's search (paper §3.1,
+//! Mei et al. 2015): for every query, stream all m data points through a
+//! k-buffer.  O(n·m) total; trivially parallel across queries.
+
+use crate::geom::dist2;
+use crate::knn::kbuffer::KBuffer;
+use crate::pool::{self, Pool};
+
+/// Average distance to the k nearest data points for every query (Eq. 3),
+/// by exhaustive scan.  Parallel across queries.
+pub fn brute_knn_avg_distances(
+    dx: &[f64],
+    dy: &[f64],
+    queries: &[(f64, f64)],
+    k: usize,
+) -> Vec<f64> {
+    brute_knn_avg_distances_on(pool::global(), dx, dy, queries, k)
+}
+
+/// [`brute_knn_avg_distances`] on an explicit pool.
+pub fn brute_knn_avg_distances_on(
+    pool: &Pool,
+    dx: &[f64],
+    dy: &[f64],
+    queries: &[(f64, f64)],
+    k: usize,
+) -> Vec<f64> {
+    assert_eq!(dx.len(), dy.len());
+    let mut out = vec![0f64; queries.len()];
+    pool.for_each_slice_mut(&mut out, 64, |offset, chunk| {
+        let mut buf = KBuffer::new(k);
+        for (j, slot) in chunk.iter_mut().enumerate() {
+            let (qx, qy) = queries[offset + j];
+            buf.clear();
+            for i in 0..dx.len() {
+                buf.insert(dist2(qx, qy, dx[i], dy[i]));
+            }
+            *slot = buf.avg_distance();
+        }
+    });
+    out
+}
+
+/// The k smallest squared distances per query (ascending) — the raw
+/// k-buffer contents, used by property tests as the exactness oracle.
+pub fn brute_knn_topk(
+    pool: &Pool,
+    dx: &[f64],
+    dy: &[f64],
+    queries: &[(f64, f64)],
+    k: usize,
+) -> Vec<Vec<f64>> {
+    assert_eq!(dx.len(), dy.len());
+    let results = pool.map_ranges(queries.len(), 64, |r| {
+        let mut local = Vec::with_capacity(r.end - r.start);
+        let mut buf = KBuffer::new(k);
+        for &(qx, qy) in &queries[r] {
+            buf.clear();
+            for i in 0..dx.len() {
+                buf.insert(dist2(qx, qy, dx[i], dy[i]));
+            }
+            local.push(buf.as_slice().to_vec());
+        }
+        local
+    });
+    results.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pool::Pool;
+    use crate::workload;
+
+    #[test]
+    fn tiny_handmade_case() {
+        // data on a line, query at origin: nearest are 1, 2 -> avg 1.5
+        let dx = [1.0, -2.0, 5.0, 10.0];
+        let dy = [0.0, 0.0, 0.0, 0.0];
+        let got = brute_knn_avg_distances(&dx, &dy, &[(0.0, 0.0)], 2);
+        assert!((got[0] - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn k_equals_m_uses_all_points() {
+        let dx = [3.0, 0.0];
+        let dy = [4.0, 1.0];
+        let got = brute_knn_avg_distances(&dx, &dy, &[(0.0, 0.0)], 2);
+        assert!((got[0] - 3.0).abs() < 1e-12); // (5 + 1)/2
+    }
+
+    #[test]
+    fn k_larger_than_m_averages_available() {
+        // paper's kernels assume m >= k; we degrade gracefully
+        let dx = [3.0];
+        let dy = [4.0];
+        let got = brute_knn_avg_distances(&dx, &dy, &[(0.0, 0.0)], 8);
+        assert!((got[0] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_full_sort_reference() {
+        let pts = workload::uniform_square(400, 50.0, 21);
+        let queries: Vec<(f64, f64)> =
+            workload::uniform_square(37, 50.0, 22).xy();
+        let k = 10;
+        let got = brute_knn_avg_distances(&pts.xs, &pts.ys, &queries, k);
+        for (qi, &(qx, qy)) in queries.iter().enumerate() {
+            let mut ds: Vec<f64> = (0..pts.len())
+                .map(|i| dist2(qx, qy, pts.xs[i], pts.ys[i]).sqrt())
+                .collect();
+            ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let want = ds[..k].iter().sum::<f64>() / k as f64;
+            assert!((got[qi] - want).abs() < 1e-9, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn pool_width_invariant() {
+        let pts = workload::uniform_square(300, 10.0, 23);
+        let queries: Vec<(f64, f64)> = workload::uniform_square(100, 10.0, 24).xy();
+        let a = brute_knn_avg_distances_on(&Pool::new(1), &pts.xs, &pts.ys, &queries, 5);
+        let b = brute_knn_avg_distances_on(&Pool::new(4), &pts.xs, &pts.ys, &queries, 5);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn topk_is_sorted_prefix() {
+        let pts = workload::uniform_square(200, 10.0, 25);
+        let queries: Vec<(f64, f64)> = workload::uniform_square(20, 10.0, 26).xy();
+        let top = brute_knn_topk(&Pool::new(2), &pts.xs, &pts.ys, &queries, 6);
+        assert_eq!(top.len(), queries.len());
+        for row in &top {
+            assert_eq!(row.len(), 6);
+            for w in row.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+        }
+    }
+}

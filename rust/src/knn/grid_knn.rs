@@ -1,0 +1,464 @@
+//! Grid-accelerated kNN — the paper's *fast kNN search* (§3.2.4, Fig. 5),
+//! the core contribution of the improved algorithm.
+//!
+//! Per query:
+//!
+//! 1. locate the query's cell (row/col arithmetic, clamped);
+//! 2. iteratively expand square rings of cells until at least k candidate
+//!    points have been seen;
+//! 3. apply a termination rule:
+//!    * [`RingRule::PaperPlusOne`] — the paper's Remark: after the level L
+//!      at which ≥ k candidates exist, expand exactly one more ring so
+//!      near-boundary neighbors in ring L+1 are not missed (Fig. 4);
+//!    * [`RingRule::Exact`] (default) — keep expanding until no cell
+//!      outside the visited square can hold a point closer than the
+//!      current k-th distance (lower bound from
+//!      [`crate::grid::EvenGrid::min_dist_beyond`]).  This is provably
+//!      exact for any query position and point distribution; on the
+//!      paper's uniform workloads it visits the same rings as the paper's
+//!      rule almost always (ablation A4 quantifies the difference).
+//! 4. insert candidate squared distances into a [`KBuffer`]; sqrt only in
+//!    the Eq.-3 epilogue.
+//!
+//! Parallel across queries; zero allocation inside the per-query loop.
+
+use crate::geom::dist2;
+use crate::grid::EvenGrid;
+use crate::knn::kbuffer::KBuffer;
+use crate::pool::{self, Pool};
+
+/// Ring-expansion termination rule (ablation A4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RingRule {
+    /// Provably exact: expand while an unvisited cell could beat the k-th
+    /// distance.
+    #[default]
+    Exact,
+    /// The paper's heuristic: first level with ≥ k candidates, plus one.
+    PaperPlusOne,
+}
+
+/// Grid kNN configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct GridKnnConfig {
+    /// Number of nearest neighbors (the paper uses k = 10).
+    pub k: usize,
+    /// Termination rule.
+    pub rule: RingRule,
+}
+
+impl Default for GridKnnConfig {
+    fn default() -> Self {
+        GridKnnConfig { k: 10, rule: RingRule::Exact }
+    }
+}
+
+/// Search statistics (perf diagnostics; aggregated by benches).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct KnnStats {
+    /// Total candidate points whose distance was computed.
+    pub candidates: u64,
+    /// Total rings visited across queries.
+    pub rings: u64,
+    /// Max ring level reached by any query.
+    pub max_level: usize,
+}
+
+/// Average distance to the k nearest data points for each query (Eq. 3),
+/// via grid local search.  Parallel across queries.
+pub fn grid_knn_avg_distances(
+    grid: &EvenGrid,
+    queries: &[(f64, f64)],
+    cfg: &GridKnnConfig,
+) -> Vec<f64> {
+    grid_knn_avg_distances_on(pool::global(), grid, queries, cfg).0
+}
+
+/// [`grid_knn_avg_distances`] on an explicit pool, returning search stats.
+pub fn grid_knn_avg_distances_on(
+    pool: &Pool,
+    grid: &EvenGrid,
+    queries: &[(f64, f64)],
+    cfg: &GridKnnConfig,
+) -> (Vec<f64>, KnnStats) {
+    let mut out = vec![0f64; queries.len()];
+    let stats_parts: Vec<KnnStats> = {
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        pool.map_ranges(queries.len(), 64, |r| {
+            let op = out_ptr;
+            let mut buf = KBuffer::new(cfg.k);
+            let mut stats = KnnStats::default();
+            for qi in r {
+                let (qx, qy) = queries[qi];
+                let avg = single_query(grid, qx, qy, cfg, &mut buf, &mut stats);
+                unsafe { *op.0.add(qi) = avg };
+            }
+            stats
+        })
+    };
+    let mut stats = KnnStats::default();
+    for s in stats_parts {
+        stats.candidates += s.candidates;
+        stats.rings += s.rings;
+        stats.max_level = stats.max_level.max(s.max_level);
+    }
+    (out, stats)
+}
+
+/// The k smallest squared distances per query — exactness oracle interface
+/// mirroring [`crate::knn::brute::brute_knn_topk`].
+pub fn grid_knn_topk(
+    pool: &Pool,
+    grid: &EvenGrid,
+    queries: &[(f64, f64)],
+    cfg: &GridKnnConfig,
+) -> Vec<Vec<f64>> {
+    let results = pool.map_ranges(queries.len(), 64, |r| {
+        let mut buf = KBuffer::new(cfg.k);
+        let mut stats = KnnStats::default();
+        let mut local = Vec::with_capacity(r.end - r.start);
+        for qi in r {
+            let (qx, qy) = queries[qi];
+            single_query(grid, qx, qy, cfg, &mut buf, &mut stats);
+            local.push(buf.as_slice().to_vec());
+        }
+        local
+    });
+    results.into_iter().flatten().collect()
+}
+
+/// Neighbor lists for the local-weighting extension: for each query, the
+/// `n_neighbors` nearest data points' **original indices** (row-major
+/// `(queries.len(), n_neighbors)`, `u32::MAX`-padded when fewer points
+/// exist) plus the Eq.-3 average distance over the first `k_alpha` of them.
+///
+/// One grid pass serves both stage-1 products: the alpha statistic needs
+/// k distances, the local stage 2 needs N >= k neighbor ids — the buffer
+/// is sized to `max(k_alpha, n_neighbors)` and searched once.
+pub fn grid_knn_neighbors(
+    pool: &Pool,
+    grid: &EvenGrid,
+    queries: &[(f64, f64)],
+    n_neighbors: usize,
+    k_alpha: usize,
+    rule: RingRule,
+) -> (Vec<u32>, Vec<f64>) {
+    assert!(n_neighbors >= 1 && k_alpha >= 1);
+    let width = n_neighbors.max(k_alpha);
+    let mut idx_out = vec![u32::MAX; queries.len() * n_neighbors];
+    let mut r_obs = vec![0f64; queries.len()];
+    {
+        let idx_ptr = SendPtr(idx_out.as_mut_ptr());
+        let r_ptr = SendPtr(r_obs.as_mut_ptr());
+        pool.parallel_for(queries.len(), 64, |range| {
+            let ip = idx_ptr;
+            let rp = r_ptr;
+            let mut buf = crate::knn::kbuffer::KBufferIdx::new(width);
+            let cfg = GridKnnConfig { k: width, rule };
+            let mut stats = KnnStats::default();
+            for qi in range {
+                let (qx, qy) = queries[qi];
+                single_query_idx(grid, qx, qy, &cfg, &mut buf, &mut stats);
+                unsafe {
+                    *rp.0.add(qi) = buf.avg_distance(k_alpha);
+                    let dst = ip.0.add(qi * n_neighbors);
+                    for (j, &id) in buf.idx_slice()[..n_neighbors].iter().enumerate() {
+                        *dst.add(j) = id;
+                    }
+                }
+            }
+        });
+    }
+    (idx_out, r_obs)
+}
+
+/// One query's ring-expansion search with index tracking (the
+/// [`grid_knn_neighbors`] worker; mirrors [`single_query`]).
+fn single_query_idx(
+    grid: &EvenGrid,
+    qx: f64,
+    qy: f64,
+    cfg: &GridKnnConfig,
+    buf: &mut crate::knn::kbuffer::KBufferIdx,
+    stats: &mut KnnStats,
+) {
+    buf.clear();
+    let (row, col) = grid.locate(qx, qy);
+    let mut level = 0usize;
+    let mut k_level: Option<usize> = None;
+    let mut seen = 0usize;
+    loop {
+        seen += grid.for_ring(row, col, level, |xs, ys, _zs, idx| {
+            for j in 0..xs.len() {
+                buf.insert(dist2(qx, qy, xs[j], ys[j]), idx[j]);
+            }
+        });
+        stats.rings += 1;
+        if k_level.is_none() && seen >= cfg.k {
+            k_level = Some(level);
+        }
+        if grid.ring_exhausted(row, col, level) {
+            break;
+        }
+        match cfg.rule {
+            RingRule::PaperPlusOne => {
+                if let Some(kl) = k_level {
+                    if level >= kl + 1 {
+                        break;
+                    }
+                }
+            }
+            RingRule::Exact => {
+                if buf.full() {
+                    match grid.min_dist_beyond(qx, qy, row, col, level) {
+                        None => break,
+                        Some(bound) => {
+                            if bound * bound >= buf.kth_d2() {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        level += 1;
+    }
+    stats.candidates += seen as u64;
+}
+
+/// One query's ring-expansion search.  Leaves the k-buffer filled; returns
+/// the Eq.-3 average distance.
+fn single_query(
+    grid: &EvenGrid,
+    qx: f64,
+    qy: f64,
+    cfg: &GridKnnConfig,
+    buf: &mut KBuffer,
+    stats: &mut KnnStats,
+) -> f64 {
+    buf.clear();
+    let (row, col) = grid.locate(qx, qy);
+    let mut level = 0usize;
+    // level (if any) at which cumulative candidates first reached k —
+    // drives the PaperPlusOne rule
+    let mut k_level: Option<usize> = None;
+    let mut seen = 0usize;
+
+    loop {
+        seen += grid.for_ring(row, col, level, |xs, ys, _zs, _idx| {
+            for j in 0..xs.len() {
+                buf.insert(dist2(qx, qy, xs[j], ys[j]));
+            }
+        });
+        stats.rings += 1;
+        stats.max_level = stats.max_level.max(level);
+
+        if k_level.is_none() && seen >= cfg.k {
+            k_level = Some(level);
+        }
+
+        if grid.ring_exhausted(row, col, level) {
+            break; // whole grid visited — nothing more to find
+        }
+
+        match cfg.rule {
+            RingRule::PaperPlusOne => {
+                // stop one ring after the level that reached k candidates
+                if let Some(kl) = k_level {
+                    if level >= kl + 1 {
+                        break;
+                    }
+                }
+            }
+            RingRule::Exact => {
+                if buf.full() {
+                    match grid.min_dist_beyond(qx, qy, row, col, level) {
+                        None => break,
+                        Some(bound) => {
+                            if bound * bound >= buf.kth_d2() {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        level += 1;
+    }
+    stats.candidates += seen as u64;
+    buf.avg_distance()
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::{EvenGrid, GridConfig};
+    use crate::knn::brute;
+    use crate::pool::Pool;
+    use crate::workload;
+
+    fn setup(n: usize, nq: usize, seed: u64) -> (EvenGrid, Vec<(f64, f64)>) {
+        let pts = workload::uniform_square(n, 100.0, seed);
+        let grid = EvenGrid::build(&pts, None, &GridConfig::default()).unwrap();
+        let queries = workload::uniform_square(nq, 100.0, seed + 1000).xy();
+        (grid, queries)
+    }
+
+    #[test]
+    fn exact_rule_matches_brute_force() {
+        let pts = workload::uniform_square(2000, 100.0, 31);
+        let grid = EvenGrid::build(&pts, None, &GridConfig::default()).unwrap();
+        let queries = workload::uniform_square(300, 100.0, 32).xy();
+        let pool = Pool::new(2);
+        let cfg = GridKnnConfig { k: 10, rule: RingRule::Exact };
+        let got = grid_knn_topk(&pool, &grid, &queries, &cfg);
+        let want = brute::brute_knn_topk(&pool, &pts.xs, &pts.ys, &queries, 10);
+        for (qi, (g, w)) in got.iter().zip(&want).enumerate() {
+            for (a, b) in g.iter().zip(w) {
+                assert!((a - b).abs() < 1e-9, "query {qi}: {g:?} vs {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn avg_distances_match_brute() {
+        let (grid, queries) = setup(1500, 200, 33);
+        let pts_coords = grid.sorted_coords();
+        let pool = Pool::new(2);
+        let cfg = GridKnnConfig::default();
+        let (got, stats) = grid_knn_avg_distances_on(&pool, &grid, &queries, &cfg);
+        let want = brute::brute_knn_avg_distances_on(
+            &pool, pts_coords.0, pts_coords.1, &queries, cfg.k);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9);
+        }
+        // the local search must touch far fewer candidates than brute force
+        assert!(
+            (stats.candidates as usize) < 1500 * queries.len() / 4,
+            "{stats:?}"
+        );
+    }
+
+    #[test]
+    fn paper_rule_close_to_exact_on_uniform_data() {
+        // on the paper's uniform workloads the +1 heuristic should agree
+        // with the exact rule nearly always
+        let (grid, queries) = setup(3000, 400, 34);
+        let pool = Pool::new(2);
+        let exact = grid_knn_topk(&pool, &grid, &queries,
+                                  &GridKnnConfig { k: 10, rule: RingRule::Exact });
+        let paper = grid_knn_topk(&pool, &grid, &queries,
+                                  &GridKnnConfig { k: 10, rule: RingRule::PaperPlusOne });
+        let mismatches = exact
+            .iter()
+            .zip(&paper)
+            .filter(|(a, b)| {
+                a.iter().zip(b.iter()).any(|(x, y)| (x - y).abs() > 1e-9)
+            })
+            .count();
+        assert!(
+            mismatches * 100 <= queries.len(), // <= 1%
+            "paper rule diverged on {mismatches}/{} queries",
+            queries.len()
+        );
+    }
+
+    #[test]
+    fn queries_outside_region_clamp_and_succeed() {
+        let (grid, _) = setup(800, 0, 35);
+        let far = vec![(-50.0, -50.0), (500.0, 500.0), (50.0, -100.0)];
+        let pool = Pool::new(1);
+        let cfg = GridKnnConfig::default();
+        let (got, _) = grid_knn_avg_distances_on(&pool, &grid, &far, &cfg);
+        let coords = grid.sorted_coords();
+        let want = brute::brute_knn_avg_distances_on(&pool, coords.0, coords.1, &far, cfg.k);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn k_exceeding_points_uses_all() {
+        let pts = workload::uniform_square(6, 10.0, 36);
+        let grid = EvenGrid::build(&pts, None, &GridConfig::default()).unwrap();
+        let pool = Pool::new(1);
+        let cfg = GridKnnConfig { k: 50, rule: RingRule::Exact };
+        let queries = vec![(5.0, 5.0)];
+        let (got, _) = grid_knn_avg_distances_on(&pool, &grid, &queries, &cfg);
+        let want = brute::brute_knn_avg_distances_on(&pool, &pts.xs, &pts.ys, &queries, 50);
+        assert!((got[0] - want[0]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clustered_distribution_still_exact() {
+        // clusters break the uniform-density assumption behind the paper's
+        // +1 rule; the Exact rule must still match brute force
+        let pts = workload::clustered(2000, 100.0, 8, 2.0, 37);
+        let grid = EvenGrid::build(&pts, None, &GridConfig::default()).unwrap();
+        let queries = workload::uniform_square(200, 100.0, 38).xy();
+        let pool = Pool::new(2);
+        let cfg = GridKnnConfig { k: 10, rule: RingRule::Exact };
+        let got = grid_knn_topk(&pool, &grid, &queries, &cfg);
+        let want = brute::brute_knn_topk(&pool, &pts.xs, &pts.ys, &queries, 10);
+        for (g, w) in got.iter().zip(&want) {
+            for (a, b) in g.iter().zip(w) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn neighbors_match_brute_force_ids() {
+        let pts = workload::uniform_square(1200, 100.0, 301);
+        let grid = EvenGrid::build(&pts, None, &GridConfig::default()).unwrap();
+        let queries = workload::uniform_square(150, 100.0, 302).xy();
+        let pool = Pool::new(2);
+        let n = 8;
+        let (idx, r_obs) =
+            grid_knn_neighbors(&pool, &grid, &queries, n, 5, RingRule::Exact);
+        assert_eq!(idx.len(), queries.len() * n);
+        for (qi, &(qx, qy)) in queries.iter().enumerate() {
+            // brute-force reference ordering
+            let mut ds: Vec<(f64, u32)> = (0..pts.len())
+                .map(|i| (crate::geom::dist2(qx, qy, pts.xs[i], pts.ys[i]), i as u32))
+                .collect();
+            ds.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let got = &idx[qi * n..(qi + 1) * n];
+            for (j, &g) in got.iter().enumerate() {
+                // allow tie permutations: distance must match exactly
+                let gd = crate::geom::dist2(qx, qy, pts.xs[g as usize], pts.ys[g as usize]);
+                assert!((gd - ds[j].0).abs() < 1e-12, "q{qi} slot {j}");
+            }
+            // r_obs over the first 5
+            let want: f64 = ds[..5].iter().map(|p| p.0.sqrt()).sum::<f64>() / 5.0;
+            assert!((r_obs[qi] - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn neighbors_pad_when_data_is_small() {
+        let pts = workload::uniform_square(3, 10.0, 303);
+        let grid = EvenGrid::build(&pts, None, &GridConfig::default()).unwrap();
+        let pool = Pool::new(1);
+        let (idx, r_obs) = grid_knn_neighbors(
+            &pool, &grid, &[(5.0, 5.0)], 8, 10, RingRule::Exact);
+        assert_eq!(idx.len(), 8);
+        assert_eq!(idx.iter().filter(|&&i| i != u32::MAX).count(), 3);
+        assert!(r_obs[0] > 0.0);
+    }
+
+    #[test]
+    fn query_on_data_point_sees_zero_distance() {
+        let pts = workload::uniform_square(500, 50.0, 39);
+        let grid = EvenGrid::build(&pts, None, &GridConfig::default()).unwrap();
+        let pool = Pool::new(1);
+        let q = vec![(pts.xs[17], pts.ys[17])];
+        let top = grid_knn_topk(&pool, &grid, &q, &GridKnnConfig::default());
+        assert!(top[0][0] < 1e-18);
+    }
+}

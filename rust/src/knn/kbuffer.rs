@@ -1,0 +1,319 @@
+//! The fixed-k insertion buffer — the paper's in-thread nearest-neighbor
+//! accumulator (§3.1 steps 1-3): a sorted array of the k smallest squared
+//! distances maintained by compare-replace-bubble, no heap, no allocation
+//! in the search loop.
+
+/// Sorted ascending buffer of the k smallest squared distances seen so far.
+///
+/// Semantics match the paper's in-kernel loop exactly:
+/// * while fewer than k distances have been seen, every insert is accepted;
+/// * afterwards an insert is accepted iff it beats the current k-th
+///   distance, which it replaces before bubbling down into sorted place.
+#[derive(Debug, Clone)]
+pub struct KBuffer {
+    d2: Vec<f64>,
+    len: usize,
+}
+
+impl KBuffer {
+    /// Buffer for the k smallest squared distances (k >= 1).
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "k must be positive");
+        KBuffer { d2: vec![f64::INFINITY; k], len: 0 }
+    }
+
+    /// Capacity k.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.d2.len()
+    }
+
+    /// Number of real distances inserted (saturates at k).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no distance has been inserted.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// True once k distances have been accepted.
+    #[inline]
+    pub fn full(&self) -> bool {
+        self.len == self.d2.len()
+    }
+
+    /// Current k-th (largest retained) squared distance; +inf until full.
+    #[inline]
+    pub fn kth_d2(&self) -> f64 {
+        self.d2[self.d2.len() - 1]
+    }
+
+    /// Offer a squared distance; keeps the buffer sorted ascending.
+    #[inline]
+    pub fn insert(&mut self, d2: f64) {
+        let k = self.d2.len();
+        if d2 >= self.d2[k - 1] {
+            return; // not better than the k-th (also handles the filling
+                    // phase: slots are +inf)
+        }
+        // replace the k-th, bubble toward the front (paper's swap loop)
+        let mut i = k - 1;
+        self.d2[i] = d2;
+        while i > 0 && self.d2[i - 1] > self.d2[i] {
+            self.d2.swap(i - 1, i);
+            i -= 1;
+        }
+        if self.len < k {
+            self.len += 1;
+        }
+    }
+
+    /// Reset for reuse (no reallocation).
+    #[inline]
+    pub fn clear(&mut self) {
+        self.d2.fill(f64::INFINITY);
+        self.len = 0;
+    }
+
+    /// The retained squared distances, ascending (`+inf` in unfilled slots).
+    pub fn as_slice(&self) -> &[f64] {
+        &self.d2
+    }
+
+    /// Average *distance* (not squared) over the filled slots — Eq. 3's
+    /// r_obs, with the single deferred sqrt per neighbor happening here.
+    pub fn avg_distance(&self) -> f64 {
+        if self.len == 0 {
+            return 0.0;
+        }
+        let s: f64 = self.d2[..self.len].iter().map(|&d| d.sqrt()).sum();
+        s / self.len as f64
+    }
+}
+
+/// A k-buffer that also tracks *which* point produced each distance —
+/// the index-carrying variant used by the local-weighting extension
+/// (EXPERIMENTS.md ablation A5), where stage 2 needs the neighbor ids,
+/// not just their distances.
+#[derive(Debug, Clone)]
+pub struct KBufferIdx {
+    d2: Vec<f64>,
+    idx: Vec<u32>,
+    len: usize,
+}
+
+impl KBufferIdx {
+    /// Buffer for the k nearest (distance, index) pairs.
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "k must be positive");
+        KBufferIdx { d2: vec![f64::INFINITY; k], idx: vec![u32::MAX; k], len: 0 }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.d2.len()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn full(&self) -> bool {
+        self.len == self.d2.len()
+    }
+
+    #[inline]
+    pub fn kth_d2(&self) -> f64 {
+        self.d2[self.d2.len() - 1]
+    }
+
+    /// Offer a (squared distance, point index) pair.
+    #[inline]
+    pub fn insert(&mut self, d2: f64, idx: u32) {
+        let k = self.d2.len();
+        if d2 >= self.d2[k - 1] {
+            return;
+        }
+        let mut i = k - 1;
+        self.d2[i] = d2;
+        self.idx[i] = idx;
+        while i > 0 && self.d2[i - 1] > self.d2[i] {
+            self.d2.swap(i - 1, i);
+            self.idx.swap(i - 1, i);
+            i -= 1;
+        }
+        if self.len < k {
+            self.len += 1;
+        }
+    }
+
+    #[inline]
+    pub fn clear(&mut self) {
+        self.d2.fill(f64::INFINITY);
+        self.idx.fill(u32::MAX);
+        self.len = 0;
+    }
+
+    /// Sorted squared distances (ascending; +inf padding).
+    pub fn d2_slice(&self) -> &[f64] {
+        &self.d2
+    }
+
+    /// Point indices aligned with [`KBufferIdx::d2_slice`] (u32::MAX padding).
+    pub fn idx_slice(&self) -> &[u32] {
+        &self.idx
+    }
+
+    /// Eq.-3 average distance over the first `k_used` filled slots.
+    pub fn avg_distance(&self, k_used: usize) -> f64 {
+        let n = k_used.min(self.len);
+        if n == 0 {
+            return 0.0;
+        }
+        let s: f64 = self.d2[..n].iter().map(|&d| d.sqrt()).sum();
+        s / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn keeps_k_smallest_sorted() {
+        let mut b = KBuffer::new(3);
+        for d in [9.0, 1.0, 5.0, 3.0, 7.0, 0.5] {
+            b.insert(d);
+        }
+        assert_eq!(b.as_slice(), &[0.5, 1.0, 3.0]);
+        assert!(b.full());
+        assert_eq!(b.kth_d2(), 3.0);
+    }
+
+    #[test]
+    fn filling_phase() {
+        let mut b = KBuffer::new(4);
+        assert!(b.is_empty());
+        b.insert(2.0);
+        assert_eq!(b.len(), 1);
+        assert!(!b.full());
+        assert_eq!(b.kth_d2(), f64::INFINITY);
+        b.insert(1.0);
+        b.insert(3.0);
+        b.insert(0.1);
+        assert!(b.full());
+        assert_eq!(b.as_slice(), &[0.1, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn rejects_larger_than_kth() {
+        let mut b = KBuffer::new(2);
+        b.insert(1.0);
+        b.insert(2.0);
+        b.insert(10.0);
+        assert_eq!(b.as_slice(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn duplicates_allowed() {
+        let mut b = KBuffer::new(3);
+        for _ in 0..5 {
+            b.insert(1.0);
+        }
+        assert_eq!(b.as_slice(), &[1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn matches_sort_reference() {
+        let mut rng = Pcg32::seeded(17);
+        for k in [1usize, 2, 5, 10, 32] {
+            let ds: Vec<f64> = (0..500).map(|_| rng.uniform(0.0, 100.0)).collect();
+            let mut b = KBuffer::new(k);
+            for &d in &ds {
+                b.insert(d);
+            }
+            let mut want = ds.clone();
+            want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            want.truncate(k);
+            assert_eq!(b.as_slice(), &want[..], "k={k}");
+        }
+    }
+
+    #[test]
+    fn avg_distance_is_eq3() {
+        let mut b = KBuffer::new(2);
+        b.insert(9.0); // d = 3
+        b.insert(16.0); // d = 4
+        assert!((b.avg_distance() - 3.5).abs() < 1e-12);
+        // partial fill averages over what exists
+        let mut p = KBuffer::new(8);
+        p.insert(4.0);
+        assert!((p.avg_distance() - 2.0).abs() < 1e-12);
+        assert_eq!(KBuffer::new(3).avg_distance(), 0.0);
+    }
+
+    #[test]
+    fn clear_reuses() {
+        let mut b = KBuffer::new(2);
+        b.insert(1.0);
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.kth_d2(), f64::INFINITY);
+    }
+
+    #[test]
+    fn idx_buffer_tracks_indices() {
+        let mut b = KBufferIdx::new(3);
+        for (i, d) in [9.0, 1.0, 5.0, 3.0, 7.0, 0.5].iter().enumerate() {
+            b.insert(*d, i as u32);
+        }
+        assert_eq!(b.d2_slice(), &[0.5, 1.0, 3.0]);
+        assert_eq!(b.idx_slice(), &[5, 1, 3]);
+        assert!(b.full());
+    }
+
+    #[test]
+    fn idx_buffer_matches_plain_buffer() {
+        let mut rng = Pcg32::seeded(77);
+        for k in [1usize, 4, 10] {
+            let ds: Vec<f64> = (0..300).map(|_| rng.uniform(0.0, 50.0)).collect();
+            let mut plain = KBuffer::new(k);
+            let mut withidx = KBufferIdx::new(k);
+            for (i, &d) in ds.iter().enumerate() {
+                plain.insert(d);
+                withidx.insert(d, i as u32);
+            }
+            assert_eq!(plain.as_slice(), withidx.d2_slice());
+            // the recorded indices really point at those distances
+            for (slot, &i) in withidx.idx_slice().iter().enumerate() {
+                assert_eq!(ds[i as usize], withidx.d2_slice()[slot]);
+            }
+            assert!((plain.avg_distance() - withidx.avg_distance(k)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn idx_buffer_partial_avg() {
+        let mut b = KBufferIdx::new(4);
+        b.insert(4.0, 0); // d=2
+        b.insert(16.0, 1); // d=4
+        assert!((b.avg_distance(1) - 2.0).abs() < 1e-12);
+        assert!((b.avg_distance(2) - 3.0).abs() < 1e-12);
+        assert!((b.avg_distance(10) - 3.0).abs() < 1e-12); // clamps to len
+        b.clear();
+        assert_eq!(b.avg_distance(4), 0.0);
+        assert_eq!(b.idx_slice(), &[u32::MAX; 4]);
+    }
+}

@@ -1,0 +1,21 @@
+//! k-nearest-neighbor search engines.
+//!
+//! Two implementations, mirroring the paper's "original" vs "improved"
+//! algorithms:
+//!
+//! * [`brute`] — the original global scan: every data point streamed
+//!   through a per-query k-buffer (paper §2.3 / Mei et al. 2015);
+//! * [`grid_knn`] — the improved local search over the [`crate::grid`]
+//!   even grid with iterative ring expansion (paper §3.2.4).
+//!
+//! Both defer `sqrt` to the epilogue (squared distances throughout) and
+//! share the [`kbuffer::KBuffer`] insertion structure — the paper's
+//! "compare with the k-th distance, replace, bubble into place" loop.
+
+pub mod brute;
+pub mod grid_knn;
+pub mod kbuffer;
+
+pub use brute::brute_knn_avg_distances;
+pub use grid_knn::{grid_knn_avg_distances, GridKnnConfig, RingRule};
+pub use kbuffer::KBuffer;

@@ -1,0 +1,70 @@
+//! # aidw — Adaptive IDW interpolation with fast grid kNN search
+//!
+//! A production-grade reproduction of *Improving GPU-accelerated Adaptive
+//! IDW Interpolation Algorithm Using Fast kNN Search* (Mei, Xu & Xu 2016,
+//! doi:10.1186/s40064-016-3035-2) as a three-layer rust + JAX/Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: even-grid spatial index, grid
+//!   kNN with ring expansion, parallel primitives (radix sort-by-key,
+//!   segmented reduce/scan), dataset registry, dynamic batcher, two-stage
+//!   pipeline scheduler, and a TCP JSON interpolation service.
+//! * **L2 (python/compile/model.py)** — the AIDW compute graphs (Eq. 1-6),
+//!   AOT-lowered to HLO text at build time (`make artifacts`).
+//! * **L1 (python/compile/kernels/)** — Pallas block-tiled kernels for the
+//!   weighted-interpolation and brute-force-kNN hot loops.
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! AOT artifacts through the PJRT CPU client (`xla` crate) and the
+//! [`coordinator`] streams arbitrary problem sizes through their fixed
+//! shapes.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use aidw::prelude::*;
+//!
+//! // 1000 scattered data points in a 100x100 region
+//! let pts = workload::uniform_square(1000, 100.0, 42);
+//! let queries = workload::uniform_square(500, 100.0, 7);
+//!
+//! // pure-rust improved pipeline (grid kNN + adaptive IDW)
+//! let params = AidwParams::default();
+//! let out = pipeline::interpolate_improved(&pts, &queries.xy(), &params);
+//! assert_eq!(out.len(), 500);
+//! ```
+//!
+//! The PJRT-backed path (paper's GPU analog) goes through
+//! [`coordinator::Coordinator`]; see `examples/quickstart.rs`.
+
+pub mod aidw;
+pub mod benchlib;
+pub mod benchsuite;
+pub mod cli;
+pub mod coordinator;
+pub mod error;
+pub mod geom;
+pub mod grid;
+pub mod jsonio;
+pub mod knn;
+pub mod pool;
+pub mod primitives;
+pub mod proptest;
+pub mod raster;
+pub mod rng;
+pub mod runtime;
+pub mod service;
+pub mod workload;
+
+pub use error::{Error, Result};
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::aidw::{params::AidwParams, pipeline, serial};
+    pub use crate::coordinator::{Coordinator, CoordinatorConfig, Variant};
+    pub use crate::error::{Error, Result};
+    pub use crate::geom::{Aabb, PointSet};
+    pub use crate::grid::EvenGrid;
+    pub use crate::knn::{brute, grid_knn};
+    pub use crate::runtime::Engine;
+    pub use crate::workload;
+}

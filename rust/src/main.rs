@@ -1,0 +1,213 @@
+//! `aidw` — CLI for the AIDW interpolation service.
+//!
+//! Subcommands:
+//!   serve        start the TCP JSON service
+//!   interpolate  one-shot interpolation over a generated/loaded workload
+//!   info         artifact + engine diagnostics
+//!   generate     write a synthetic workload to CSV
+//!
+//! Run `aidw help` for flags.
+
+use std::sync::Arc;
+
+use aidw::aidw::params::AidwParams;
+use aidw::cli::Args;
+use aidw::coordinator::{Coordinator, CoordinatorConfig, EngineMode, InterpolationRequest};
+use aidw::error::{Error, Result};
+use aidw::geom::PointSet;
+use aidw::runtime::Variant;
+use aidw::service::Server;
+use aidw::workload;
+
+const HELP: &str = "\
+aidw — Adaptive IDW interpolation with fast grid kNN search
+       (Mei, Xu & Xu 2016; rust + JAX/Pallas AOT via PJRT)
+
+USAGE:
+  aidw serve       [--addr 127.0.0.1:7878] [--cpu-only] [--k 10] [--local N]
+                   [--snapshots DIR]
+  aidw interpolate [--data N] [--queries N] [--side 100] [--seed 42]
+                   [--variant naive|tiled] [--k 10] [--cpu-only]
+                   [--dist uniform|clustered|terrain] [--file pts.csv]
+                   [--out out.csv]
+  aidw generate    [--n N] [--side 100] [--seed 42]
+                   [--dist uniform|clustered|terrain|sensors] --out file.csv
+  aidw info
+  aidw help
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["cpu-only", "verbose"])?;
+    match args.subcommand.as_str() {
+        "serve" => serve(&args),
+        "interpolate" => interpolate(&args),
+        "generate" => generate(&args),
+        "info" => info(),
+        "" | "help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => Err(Error::InvalidArgument(format!(
+            "unknown subcommand '{other}' (try `aidw help`)"
+        ))),
+    }
+}
+
+fn coordinator_from(args: &Args) -> Result<Coordinator> {
+    let mut cfg = CoordinatorConfig::default();
+    if args.has("cpu-only") {
+        cfg.engine_mode = EngineMode::CpuOnly;
+    }
+    cfg.params = AidwParams { k: args.get_usize("k", 10)?, ..Default::default() };
+    // --local N: A5 extension — stage 2 over N nearest neighbors only
+    if let Some(n) = args.get("local") {
+        let n: usize = n
+            .parse()
+            .map_err(|_| Error::InvalidArgument("--local expects an integer".into()))?;
+        cfg.local_neighbors = Some(n);
+    }
+    Coordinator::new(cfg)
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    let coord = Arc::new(coordinator_from(args)?);
+    println!("aidw service: backend={:?}", coord.backend());
+    // --snapshots DIR: restore persisted datasets at startup
+    if let Some(dir) = args.get("snapshots") {
+        let n = coord.load_datasets(std::path::Path::new(dir))?;
+        println!("restored {n} dataset(s) from {dir}");
+    }
+    let server = Server::start(coord, &addr)?;
+    println!("listening on {}", server.addr());
+    println!("protocol: newline-delimited JSON; see rust/src/service/protocol.rs");
+    // serve until killed
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn make_points(dist: &str, n: usize, side: f64, seed: u64) -> Result<PointSet> {
+    Ok(match dist {
+        "uniform" => workload::uniform_square(n, side, seed),
+        "clustered" => workload::clustered(n, side, 8, side / 50.0, seed),
+        "terrain" => workload::terrain_samples(n, side, 0.5, seed),
+        "sensors" => workload::sensor_stations(n, side, seed),
+        other => {
+            return Err(Error::InvalidArgument(format!("unknown distribution '{other}'")))
+        }
+    })
+}
+
+/// Data source: `--file pts.csv` wins over the generated `--dist`.
+fn load_or_make(args: &Args, n: usize, side: f64, seed: u64) -> Result<PointSet> {
+    match args.get("file") {
+        Some(path) => workload::csvio::load_points(std::path::Path::new(path)),
+        None => make_points(&args.get_or("dist", "uniform"), n, side, seed),
+    }
+}
+
+fn interpolate(args: &Args) -> Result<()> {
+    let n_data = args.get_usize("data", 4096)?;
+    let n_queries = args.get_usize("queries", 4096)?;
+    let side = args.get_f64("side", 100.0)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let dist = args.get_or("dist", "uniform");
+    let variant: Variant = args.get_or("variant", "tiled").parse()?;
+
+    let data = load_or_make(args, n_data, side, seed)?;
+    let n_data = data.len();
+    let queries = workload::uniform_square(n_queries, side, seed + 1).xy();
+
+    let coord = coordinator_from(args)?;
+    println!(
+        "backend={:?}  data={}  queries={}  dist={}  variant={:?}",
+        coord.backend(),
+        n_data,
+        n_queries,
+        dist,
+        variant
+    );
+    coord.register_dataset("cli", data)?;
+    let t0 = std::time::Instant::now();
+    let mut req = InterpolationRequest::new("cli", queries.clone());
+    req.variant = Some(variant);
+    let resp = coord.interpolate(req)?;
+    let total = t0.elapsed().as_secs_f64();
+    println!(
+        "done in {:.3}s  (stage1 kNN {:.3}s, stage2 interp {:.3}s)",
+        total, resp.knn_s, resp.interp_s
+    );
+    println!(
+        "throughput: {:.0} queries/s",
+        n_queries as f64 / total
+    );
+
+    if let Some(out) = args.get("out") {
+        let mut csv = String::from("x,y,z\n");
+        for (q, z) in queries.iter().zip(&resp.values) {
+            csv.push_str(&format!("{},{},{}\n", q.0, q.1, z));
+        }
+        std::fs::write(out, csv)?;
+        println!("wrote {out}");
+    } else {
+        let show = resp.values.len().min(5);
+        println!("first {show} predictions: {:?}", &resp.values[..show]);
+    }
+    Ok(())
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 10240)?;
+    let side = args.get_f64("side", 100.0)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let dist = args.get_or("dist", "uniform");
+    let out = args
+        .get("out")
+        .ok_or_else(|| Error::InvalidArgument("--out is required".into()))?;
+    let pts = make_points(&dist, n, side, seed)?;
+    let mut csv = String::from("x,y,z\n");
+    for i in 0..pts.len() {
+        csv.push_str(&format!("{},{},{}\n", pts.xs[i], pts.ys[i], pts.zs[i]));
+    }
+    std::fs::write(out, csv)?;
+    println!("wrote {n} {dist} points to {out}");
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    let dir = aidw::runtime::default_artifact_dir();
+    println!("artifact dir: {}", dir.display());
+    if !dir.join("manifest.json").exists() {
+        println!("no manifest found — run `make artifacts`");
+        return Ok(());
+    }
+    let engine = aidw::runtime::Engine::new(&dir)?;
+    let man = engine.manifest();
+    println!("platform: {}", engine.platform());
+    println!(
+        "shapes: prod q{} m{}, test q{} m{}, k_buf {}",
+        man.q_prod, man.m_prod, man.q_test, man.m_test, man.k_buf
+    );
+    println!("artifacts ({}):", man.artifacts.len());
+    for a in &man.artifacts {
+        println!(
+            "  {:<44} {} in / {} out",
+            a.name,
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    Ok(())
+}

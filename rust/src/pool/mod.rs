@@ -1,0 +1,216 @@
+//! Data-parallel execution substrate.
+//!
+//! The paper's GPU launches (one CUDA thread per point, §4.1.2/§4.2.1) map
+//! here to chunked data-parallel loops across CPU cores.  No rayon/tokio in
+//! the offline vendor set, so this is a small from-scratch layer on
+//! crossbeam scoped threads:
+//!
+//! * [`Pool::parallel_for`] — run a closure over disjoint index ranges;
+//! * [`Pool::map_ranges`] — same, collecting one result per range;
+//! * chunk granularity adapts to `len` so small inputs stay single-thread
+//!   (spawn cost ≫ work for tiny loops).
+//!
+//! On a 1-core testbed the pool degrades to inline execution with zero
+//! spawn overhead, which keeps microbenchmarks honest.
+
+use std::ops::Range;
+use std::sync::OnceLock;
+
+/// A data-parallel executor with a fixed worker width.
+#[derive(Debug, Clone)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// Pool of explicit width (>= 1).
+    pub fn new(threads: usize) -> Self {
+        Pool { threads: threads.max(1) }
+    }
+
+    /// Pool sized to the machine (`available_parallelism`).
+    pub fn machine_sized() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Pool::new(n)
+    }
+
+    /// Worker width.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Split `0..len` into at most `threads` contiguous ranges of at least
+    /// `min_chunk` elements and run `f` on each, in parallel.
+    ///
+    /// `f` must be `Sync` (it is shared by reference across workers); use
+    /// interior mutability or disjoint output slices for writes.
+    pub fn parallel_for<F>(&self, len: usize, min_chunk: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        let ranges = self.split(len, min_chunk);
+        match ranges.len() {
+            0 => {}
+            1 => f(ranges.into_iter().next().unwrap()),
+            _ => {
+                crossbeam_utils::thread::scope(|s| {
+                    for r in ranges {
+                        let f = &f;
+                        s.spawn(move |_| f(r));
+                    }
+                })
+                .expect("pool worker panicked");
+            }
+        }
+    }
+
+    /// Parallel map over ranges: returns one `T` per range, in range order.
+    pub fn map_ranges<T, F>(&self, len: usize, min_chunk: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(Range<usize>) -> T + Sync,
+    {
+        let ranges = self.split(len, min_chunk);
+        match ranges.len() {
+            0 => Vec::new(),
+            1 => vec![f(ranges.into_iter().next().unwrap())],
+            _ => crossbeam_utils::thread::scope(|s| {
+                let handles: Vec<_> = ranges
+                    .into_iter()
+                    .map(|r| {
+                        let f = &f;
+                        s.spawn(move |_| f(r))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            })
+            .expect("pool worker panicked"),
+        }
+    }
+
+    /// Parallel in-place transform of a mutable slice: each worker owns a
+    /// disjoint sub-slice.
+    pub fn for_each_slice_mut<T, F>(&self, data: &mut [T], min_chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let len = data.len();
+        let ranges = self.split(len, min_chunk);
+        match ranges.len() {
+            0 => {}
+            1 => f(0, data),
+            _ => {
+                crossbeam_utils::thread::scope(|s| {
+                    let mut rest = data;
+                    let mut consumed = 0usize;
+                    for r in ranges {
+                        let take = r.end - r.start;
+                        let (head, tail) = rest.split_at_mut(take);
+                        let f = &f;
+                        let offset = consumed;
+                        s.spawn(move |_| f(offset, head));
+                        consumed += take;
+                        rest = tail;
+                    }
+                })
+                .expect("pool worker panicked");
+            }
+        }
+    }
+
+    /// Chunk plan: at most `threads` ranges, each at least `min_chunk` long
+    /// (except possibly the last), covering `0..len` exactly.
+    fn split(&self, len: usize, min_chunk: usize) -> Vec<Range<usize>> {
+        if len == 0 {
+            return Vec::new();
+        }
+        let min_chunk = min_chunk.max(1);
+        let max_workers = (len + min_chunk - 1) / min_chunk;
+        let workers = self.threads.min(max_workers).max(1);
+        let chunk = (len + workers - 1) / workers;
+        (0..workers)
+            .map(|i| (i * chunk)..((i + 1) * chunk).min(len))
+            .filter(|r| r.start < r.end)
+            .collect()
+    }
+}
+
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
+
+/// The shared machine-sized pool.
+pub fn global() -> &'static Pool {
+    GLOBAL.get_or_init(Pool::machine_sized)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn split_covers_exactly() {
+        let p = Pool::new(4);
+        for len in [0usize, 1, 3, 7, 100, 1001] {
+            let ranges = p.split(len, 8);
+            let total: usize = ranges.iter().map(|r| r.end - r.start).sum();
+            assert_eq!(total, len, "len={len}");
+            // contiguity
+            let mut expect = 0;
+            for r in &ranges {
+                assert_eq!(r.start, expect);
+                expect = r.end;
+            }
+        }
+    }
+
+    #[test]
+    fn small_input_stays_single_range() {
+        let p = Pool::new(8);
+        assert_eq!(p.split(10, 64).len(), 1);
+    }
+
+    #[test]
+    fn parallel_for_touches_everything() {
+        let p = Pool::new(4);
+        let n = 10_000;
+        let counter = AtomicUsize::new(0);
+        p.parallel_for(n, 16, |r| {
+            counter.fetch_add(r.end - r.start, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), n);
+    }
+
+    #[test]
+    fn map_ranges_in_order() {
+        let p = Pool::new(4);
+        let sums = p.map_ranges(1000, 1, |r| r.start);
+        let mut sorted = sums.clone();
+        sorted.sort_unstable();
+        assert_eq!(sums, sorted);
+    }
+
+    #[test]
+    fn for_each_slice_mut_disjoint_writes() {
+        let p = Pool::new(4);
+        let mut v = vec![0usize; 4096];
+        p.for_each_slice_mut(&mut v, 16, |offset, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = offset + i;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i);
+        }
+    }
+
+    #[test]
+    fn zero_len_is_noop() {
+        let p = Pool::new(4);
+        p.parallel_for(0, 1, |_| panic!("must not run"));
+        let out: Vec<u8> = p.map_ranges(0, 1, |_| 0u8);
+        assert!(out.is_empty());
+    }
+}

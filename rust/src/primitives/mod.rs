@@ -1,0 +1,18 @@
+//! Parallel primitives — the from-scratch analogs of the Thrust calls the
+//! paper builds its grid on (§4.1):
+//!
+//! | paper (Thrust)               | here                                  |
+//! |------------------------------|---------------------------------------|
+//! | `sort_by_key(keys, values)`  | [`sort::radix_sort_by_key`]           |
+//! | `reduce_by_key` (counts)     | [`reduce::counts_by_key`]             |
+//! | `unique_by_key` (head index) | [`reduce::segment_heads`]             |
+//! | `minmax_element`             | [`reduce::parallel_minmax`]           |
+//! | (scan)                       | [`scan::exclusive_scan`] & friends    |
+//!
+//! All primitives are deterministic and parallel over the [`crate::pool`]
+//! executor; each has a simple serial reference it is property-tested
+//! against.
+
+pub mod reduce;
+pub mod scan;
+pub mod sort;

@@ -1,0 +1,146 @@
+//! Segmented reductions over key-sorted sequences and parallel min/max —
+//! the `reduce_by_key` / `unique_by_key` / `minmax_element` analogs that
+//! turn a cell-sorted point list into the grid's CSR layout (paper Fig. 3).
+
+use crate::pool::Pool;
+
+const PAR_MIN_CHUNK: usize = 1 << 14;
+
+/// Given keys sorted ascending, return `(unique_keys, counts)` — the
+/// `thrust::reduce_by_key` with all-ones values of Fig. 3(a).
+pub fn counts_by_key(keys: &[u32]) -> (Vec<u32>, Vec<u32>) {
+    let mut uniques = Vec::new();
+    let mut counts = Vec::new();
+    let mut it = keys.iter();
+    if let Some(&first) = it.next() {
+        let mut cur = first;
+        let mut count = 1u32;
+        for &k in it {
+            debug_assert!(k >= cur, "keys must be sorted");
+            if k == cur {
+                count += 1;
+            } else {
+                uniques.push(cur);
+                counts.push(count);
+                cur = k;
+                count = 1;
+            }
+        }
+        uniques.push(cur);
+        counts.push(count);
+    }
+    (uniques, counts)
+}
+
+/// Given keys sorted ascending, return the index of the first element of
+/// each segment — `thrust::unique_by_key` over (key, position) of Fig. 3(b).
+pub fn segment_heads(keys: &[u32]) -> Vec<u32> {
+    let mut heads = Vec::new();
+    let mut prev: Option<u32> = None;
+    for (i, &k) in keys.iter().enumerate() {
+        if prev != Some(k) {
+            heads.push(i as u32);
+            prev = Some(k);
+        }
+    }
+    heads
+}
+
+/// Parallel (min, max) over a f64 slice — `thrust::minmax_element`.
+/// Returns None for an empty slice.
+pub fn parallel_minmax(pool: &Pool, xs: &[f64]) -> Option<(f64, f64)> {
+    if xs.is_empty() {
+        return None;
+    }
+    let partials = pool.map_ranges(xs.len(), PAR_MIN_CHUNK, |r| {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &x in &xs[r] {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        (lo, hi)
+    });
+    Some(partials.into_iter().fold(
+        (f64::INFINITY, f64::NEG_INFINITY),
+        |(alo, ahi), (lo, hi)| (alo.min(lo), ahi.max(hi)),
+    ))
+}
+
+/// Parallel sum of f64 (used by metrics and benches).
+pub fn parallel_sum(pool: &Pool, xs: &[f64]) -> f64 {
+    pool.map_ranges(xs.len(), PAR_MIN_CHUNK, |r| xs[r].iter().sum::<f64>())
+        .into_iter()
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn counts_basic() {
+        let keys = [0u32, 0, 1, 1, 1, 4, 7, 7];
+        let (u, c) = counts_by_key(&keys);
+        assert_eq!(u, vec![0, 1, 4, 7]);
+        assert_eq!(c, vec![2, 3, 1, 2]);
+    }
+
+    #[test]
+    fn counts_empty_and_singleton() {
+        assert_eq!(counts_by_key(&[]), (vec![], vec![]));
+        assert_eq!(counts_by_key(&[9]), (vec![9], vec![1]));
+    }
+
+    #[test]
+    fn counts_sum_to_len() {
+        let mut rng = Pcg32::seeded(2);
+        let mut keys: Vec<u32> = (0..5000).map(|_| rng.below(100)).collect();
+        keys.sort_unstable();
+        let (_, c) = counts_by_key(&keys);
+        assert_eq!(c.iter().sum::<u32>() as usize, keys.len());
+    }
+
+    #[test]
+    fn heads_align_with_counts() {
+        let mut rng = Pcg32::seeded(4);
+        let mut keys: Vec<u32> = (0..5000).map(|_| rng.below(64)).collect();
+        keys.sort_unstable();
+        let (u, c) = counts_by_key(&keys);
+        let h = segment_heads(&keys);
+        assert_eq!(h.len(), u.len());
+        // head[i+1] = head[i] + count[i]
+        for i in 0..h.len() - 1 {
+            assert_eq!(h[i + 1], h[i] + c[i]);
+        }
+        // every head points at the first occurrence of its key
+        for (&head, &key) in h.iter().zip(&u) {
+            assert_eq!(keys[head as usize], key);
+            if head > 0 {
+                assert_ne!(keys[head as usize - 1], key);
+            }
+        }
+    }
+
+    #[test]
+    fn minmax_matches_serial() {
+        let pool = Pool::new(4);
+        let mut rng = Pcg32::seeded(6);
+        let xs: Vec<f64> = (0..100_000).map(|_| rng.uniform(-5.0, 9.0)).collect();
+        let (lo, hi) = parallel_minmax(&pool, &xs).unwrap();
+        let slo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let shi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(lo, slo);
+        assert_eq!(hi, shi);
+        assert_eq!(parallel_minmax(&pool, &[]), None);
+    }
+
+    #[test]
+    fn sum_matches_serial() {
+        let pool = Pool::new(4);
+        let xs: Vec<f64> = (0..10_000).map(|i| i as f64).collect();
+        let got = parallel_sum(&pool, &xs);
+        assert!((got - 49_995_000.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,135 @@
+//! Prefix sums — the scan family backing segment-head computation
+//! (paper Fig. 3(b)) and the radix sort's rank phase.
+
+use crate::pool::Pool;
+
+const PAR_MIN_CHUNK: usize = 1 << 15;
+
+/// Serial exclusive scan: `out[i] = sum(xs[..i])`.  Returns the total.
+pub fn exclusive_scan_serial(xs: &[u32], out: &mut [u32]) -> u32 {
+    debug_assert_eq!(xs.len(), out.len());
+    let mut acc = 0u32;
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = acc;
+        acc += x;
+    }
+    acc
+}
+
+/// Parallel exclusive scan (two-pass: chunk totals, then offset fix-up).
+/// Returns the grand total.
+pub fn exclusive_scan(pool: &Pool, xs: &[u32], out: &mut [u32]) -> u32 {
+    assert_eq!(xs.len(), out.len());
+    let n = xs.len();
+    if n < PAR_MIN_CHUNK * 2 || pool.threads() == 1 {
+        return exclusive_scan_serial(xs, out);
+    }
+    // Pass 1: local scans + chunk totals.
+    let ranges: Vec<std::ops::Range<usize>> =
+        pool.map_ranges(n, PAR_MIN_CHUNK, |r| r);
+    let totals: Vec<u32> = {
+        // compute local scans into `out` in parallel
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        crossbeam_utils::thread::scope(|s| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .cloned()
+                .map(|r| {
+                    let xs = &xs[r.clone()];
+                    let op = out_ptr;
+                    s.spawn(move |_| {
+                        let op = op;
+                        let mut acc = 0u32;
+                        for (i, &x) in xs.iter().enumerate() {
+                            unsafe { *op.0.add(r.start + i) = acc };
+                            acc += x;
+                        }
+                        acc
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+        .expect("scan worker panicked")
+    };
+    // Pass 2: offsets of each chunk, then parallel fix-up.
+    let mut offsets = vec![0u32; totals.len()];
+    let grand = exclusive_scan_serial(&totals, &mut offsets);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    crossbeam_utils::thread::scope(|s| {
+        for (r, off) in ranges.iter().cloned().zip(offsets.iter().copied()) {
+            if off == 0 {
+                continue;
+            }
+            let op = out_ptr;
+            s.spawn(move |_| {
+                let op = op;
+                for i in r {
+                    unsafe { *op.0.add(i) += off };
+                }
+            });
+        }
+    })
+    .expect("scan fixup worker panicked");
+    grand
+}
+
+/// Inclusive scan built on the exclusive one.
+pub fn inclusive_scan(pool: &Pool, xs: &[u32], out: &mut [u32]) -> u32 {
+    let total = exclusive_scan(pool, xs, out);
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o += x;
+    }
+    total
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn serial_basics() {
+        let xs = [1u32, 2, 3, 4];
+        let mut out = [0u32; 4];
+        let total = exclusive_scan_serial(&xs, &mut out);
+        assert_eq!(out, [0, 1, 3, 6]);
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn empty() {
+        let mut out: [u32; 0] = [];
+        assert_eq!(exclusive_scan_serial(&[], &mut out), 0);
+        let pool = Pool::new(4);
+        assert_eq!(exclusive_scan(&pool, &[], &mut []), 0);
+    }
+
+    #[test]
+    fn parallel_matches_serial_large() {
+        let pool = Pool::new(4);
+        let mut rng = Pcg32::seeded(3);
+        let xs: Vec<u32> = (0..200_000).map(|_| rng.below(10)).collect();
+        let mut want = vec![0u32; xs.len()];
+        let wt = exclusive_scan_serial(&xs, &mut want);
+        let mut got = vec![0u32; xs.len()];
+        let gt = exclusive_scan(&pool, &xs, &mut got);
+        assert_eq!(wt, gt);
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn inclusive_shifts_by_element() {
+        let pool = Pool::new(2);
+        let xs = [5u32, 0, 2];
+        let mut out = [0u32; 3];
+        let total = inclusive_scan(&pool, &xs, &mut out);
+        assert_eq!(out, [5, 5, 7]);
+        assert_eq!(total, 7);
+    }
+}

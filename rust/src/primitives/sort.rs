@@ -1,0 +1,244 @@
+//! Stable parallel LSD radix sort by u32 key — the `thrust::sort_by_key`
+//! analog that groups grid points by cell id (paper §4.1.3).
+//!
+//! Classic 8-bit-digit LSD with the three-phase parallel scheme:
+//!
+//! 1. **histogram** — each worker counts digit occurrences in its chunk;
+//! 2. **rank** — one exclusive scan over the 256×workers table in
+//!    (digit-major, worker-minor) order assigns every (worker, digit) its
+//!    global scatter base;
+//! 3. **scatter** — workers place their elements independently; within a
+//!    worker the original order is preserved, so the sort is stable.
+//!
+//! Keys for an even grid are cell ids `< nRow*nCol`, so the pass count
+//! adapts to the maximum key: a 2^16-cell grid sorts in 2 passes.
+
+use crate::pool::Pool;
+
+const RADIX_BITS: usize = 8;
+const RADIX: usize = 1 << RADIX_BITS;
+const PAR_MIN_CHUNK: usize = 1 << 14;
+
+/// Sort `values` by `keys` (stable).  Both slices are permuted in place.
+pub fn radix_sort_by_key(pool: &Pool, keys: &mut Vec<u32>, values: &mut Vec<u32>) {
+    assert_eq!(keys.len(), values.len());
+    let n = keys.len();
+    if n <= 1 {
+        return;
+    }
+    let max_key = parallel_max(pool, keys);
+    let passes = passes_for(max_key);
+
+    let mut src_k = std::mem::take(keys);
+    let mut src_v = std::mem::take(values);
+    let mut dst_k = vec![0u32; n];
+    let mut dst_v = vec![0u32; n];
+
+    for pass in 0..passes {
+        let shift = pass * RADIX_BITS;
+        radix_pass(pool, &src_k, &src_v, &mut dst_k, &mut dst_v, shift);
+        std::mem::swap(&mut src_k, &mut dst_k);
+        std::mem::swap(&mut src_v, &mut dst_v);
+    }
+    *keys = src_k;
+    *values = src_v;
+}
+
+/// Sort a permutation `index` so that `keys[index[i]]` is ascending, without
+/// moving `keys` — the gather-form used when several parallel arrays must be
+/// reordered once at the end.
+pub fn argsort_by_key(pool: &Pool, keys: &[u32], index: &mut Vec<u32>) {
+    assert_eq!(keys.len(), index.len());
+    // sort (key copy, index) pairs
+    let mut kcopy: Vec<u32> = index.iter().map(|&i| keys[i as usize]).collect();
+    radix_sort_by_key(pool, &mut kcopy, index);
+}
+
+fn passes_for(max_key: u32) -> usize {
+    let bits = 32 - max_key.leading_zeros() as usize;
+    ((bits + RADIX_BITS - 1) / RADIX_BITS).max(1)
+}
+
+fn radix_pass(
+    pool: &Pool,
+    src_k: &[u32],
+    src_v: &[u32],
+    dst_k: &mut [u32],
+    dst_v: &mut [u32],
+    shift: usize,
+) {
+    let n = src_k.len();
+    let digit = |k: u32| ((k >> shift) as usize) & (RADIX - 1);
+
+    // Phase 1: per-worker histograms.
+    let chunk_hists: Vec<(usize, [u32; RADIX])> =
+        pool.map_ranges(n, PAR_MIN_CHUNK, |r| {
+            let mut h = [0u32; RADIX];
+            for &k in &src_k[r.clone()] {
+                h[digit(k)] += 1;
+            }
+            (r.start, h)
+        });
+
+    // Phase 2: digit-major, worker-minor exclusive scan -> scatter bases.
+    let workers = chunk_hists.len();
+    let mut bases = vec![[0u32; RADIX]; workers];
+    let mut running = 0u32;
+    for d in 0..RADIX {
+        for w in 0..workers {
+            bases[w][d] = running;
+            running += chunk_hists[w].1[d];
+        }
+    }
+    debug_assert_eq!(running as usize, n);
+
+    // Phase 3: independent stable scatter per worker.
+    //
+    // Safety: every (worker, digit) writes a disjoint destination range
+    // [bases[w][d], bases[w][d] + hist[w][d]); ranges tile 0..n exactly, so
+    // no two workers alias.  Raw pointers sidestep &mut aliasing across the
+    // scope (same trick a GPU scatter kernel plays with global memory).
+    let dst_k_ptr = SendPtr(dst_k.as_mut_ptr());
+    let dst_v_ptr = SendPtr(dst_v.as_mut_ptr());
+    let ranges: Vec<std::ops::Range<usize>> = {
+        let mut v = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let start = chunk_hists[w].0;
+            let end = chunk_hists
+                .get(w + 1)
+                .map(|c| c.0)
+                .unwrap_or(n);
+            v.push(start..end);
+        }
+        v
+    };
+    crossbeam_utils::thread::scope(|s| {
+        for (w, r) in ranges.into_iter().enumerate() {
+            let mut base = bases[w];
+            let dk = dst_k_ptr;
+            let dv = dst_v_ptr;
+            let src_k = &src_k[r.clone()];
+            let src_v = &src_v[r];
+            s.spawn(move |_| {
+                let dk = dk; // move the Send wrapper into the thread
+                let dv = dv;
+                for (&k, &v) in src_k.iter().zip(src_v) {
+                    let d = digit(k);
+                    let at = base[d] as usize;
+                    base[d] += 1;
+                    unsafe {
+                        *dk.0.add(at) = k;
+                        *dv.0.add(at) = v;
+                    }
+                }
+            });
+        }
+    })
+    .expect("radix scatter worker panicked");
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+fn parallel_max(pool: &Pool, xs: &[u32]) -> u32 {
+    pool.map_ranges(xs.len(), PAR_MIN_CHUNK, |r| {
+        xs[r].iter().copied().max().unwrap_or(0)
+    })
+    .into_iter()
+    .max()
+    .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn reference_sort(keys: &[u32], values: &[u32]) -> (Vec<u32>, Vec<u32>) {
+        let mut pairs: Vec<(u32, u32)> =
+            keys.iter().copied().zip(values.iter().copied()).collect();
+        pairs.sort_by_key(|p| p.0); // std stable sort
+        (pairs.iter().map(|p| p.0).collect(), pairs.iter().map(|p| p.1).collect())
+    }
+
+    fn check(keys: Vec<u32>, pool_width: usize) {
+        let pool = Pool::new(pool_width);
+        let values: Vec<u32> = (0..keys.len() as u32).collect();
+        let (want_k, want_v) = reference_sort(&keys, &values);
+        let mut k = keys;
+        let mut v = values;
+        radix_sort_by_key(&pool, &mut k, &mut v);
+        assert_eq!(k, want_k);
+        assert_eq!(v, want_v, "stability violated");
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        check(vec![], 4);
+        check(vec![7], 4);
+    }
+
+    #[test]
+    fn small_dense_keys() {
+        check(vec![3, 1, 2, 1, 0, 3, 1], 4);
+    }
+
+    #[test]
+    fn random_small_keyspace() {
+        let mut rng = Pcg32::seeded(5);
+        let keys: Vec<u32> = (0..10_000).map(|_| rng.below(64)).collect();
+        check(keys, 4);
+    }
+
+    #[test]
+    fn random_large_keyspace() {
+        let mut rng = Pcg32::seeded(6);
+        let keys: Vec<u32> = (0..50_000).map(|_| rng.next_u32()).collect();
+        check(keys, 4);
+    }
+
+    #[test]
+    fn already_sorted_and_reversed() {
+        check((0..1000).collect(), 2);
+        check((0..1000).rev().collect(), 2);
+    }
+
+    #[test]
+    fn all_equal_keys_preserve_order() {
+        check(vec![42; 5000], 4);
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let mut rng = Pcg32::seeded(8);
+        let keys: Vec<u32> = (0..5000).map(|_| rng.below(1000)).collect();
+        check(keys, 1);
+    }
+
+    #[test]
+    fn pass_count_adapts() {
+        assert_eq!(passes_for(0), 1);
+        assert_eq!(passes_for(255), 1);
+        assert_eq!(passes_for(256), 2);
+        assert_eq!(passes_for(65_535), 2);
+        assert_eq!(passes_for(65_536), 3);
+        assert_eq!(passes_for(u32::MAX), 4);
+    }
+
+    #[test]
+    fn argsort_gather_form() {
+        let pool = Pool::new(4);
+        let mut rng = Pcg32::seeded(10);
+        let keys: Vec<u32> = (0..8000).map(|_| rng.below(512)).collect();
+        let mut idx: Vec<u32> = (0..keys.len() as u32).collect();
+        argsort_by_key(&pool, &keys, &mut idx);
+        for w in idx.windows(2) {
+            assert!(keys[w[0] as usize] <= keys[w[1] as usize]);
+        }
+        let mut seen = idx.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..keys.len() as u32).collect::<Vec<_>>());
+    }
+}

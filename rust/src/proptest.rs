@@ -1,0 +1,150 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! Deterministic: cases derive from a fixed seed, and a failing case
+//! reports its case-seed so it can be replayed exactly.  Shrinking is
+//! size-based: generators receive a `size` hint that the runner lowers
+//! when re-testing after a failure, reporting the smallest size that
+//! still fails.
+
+use crate::rng::Pcg32;
+
+/// Configuration of a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Max generator size hint.
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xA1D3, max_size: 1024 }
+    }
+}
+
+/// Outcome of a single case.
+pub enum CaseResult {
+    Pass,
+    Fail(String),
+}
+
+/// Run `prop` over `cfg.cases` generated cases.  `gen` receives
+/// (rng, size) and builds an input; `prop` checks it.
+///
+/// Panics with a replayable report on the first failure, after attempting
+/// size reduction.
+pub fn check<T, G, P>(cfg: Config, name: &str, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg32, usize) -> T,
+    P: FnMut(&T) -> CaseResult,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ ((case as u64) << 32) ^ 0x9E3779B97F4A7C15u64.wrapping_mul(case as u64 + 1);
+        // ramp the size up over the run: early cases are small
+        let size = ((cfg.max_size as f64) * ((case + 1) as f64 / cfg.cases as f64)).ceil() as usize;
+        let size = size.max(1);
+        let mut rng = Pcg32::seeded(case_seed);
+        let input = gen(&mut rng, size);
+        if let CaseResult::Fail(msg) = prop(&input) {
+            // try smaller sizes with the same seed to get a smaller repro
+            let mut best_size = size;
+            let mut best_msg = msg;
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Pcg32::seeded(case_seed);
+                let small = gen(&mut rng, s);
+                match prop(&small) {
+                    CaseResult::Fail(m) => {
+                        best_size = s;
+                        best_msg = m;
+                        s /= 2;
+                    }
+                    CaseResult::Pass => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, \
+                 size {best_size}): {best_msg}"
+            );
+        }
+    }
+}
+
+/// Helper: assert with a formatted failure message.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return $crate::proptest::CaseResult::Fail(format!($($fmt)*));
+        }
+    };
+}
+
+/// Helper: property passed.
+pub fn pass() -> CaseResult {
+    CaseResult::Pass
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            Config { cases: 10, ..Default::default() },
+            "trivial",
+            |rng, size| rng.below((size as u32).max(1)) as usize,
+            |_| {
+                count += 1;
+                pass()
+            },
+        );
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must_fail' failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            Config::default(),
+            "must_fail",
+            |rng, size| (0..size).map(|_| rng.next_u32()).collect::<Vec<_>>(),
+            |v| {
+                if v.len() >= 4 {
+                    CaseResult::Fail("too long".into())
+                } else {
+                    pass()
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_inputs_per_seed() {
+        let mut first: Vec<u32> = Vec::new();
+        check(
+            Config { cases: 5, seed: 7, max_size: 100 },
+            "record",
+            |rng, _| rng.next_u32(),
+            |&x| {
+                first.push(x);
+                pass()
+            },
+        );
+        let mut second: Vec<u32> = Vec::new();
+        check(
+            Config { cases: 5, seed: 7, max_size: 100 },
+            "record2",
+            |rng, _| rng.next_u32(),
+            |&x| {
+                second.push(x);
+                pass()
+            },
+        );
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,120 @@
+//! Raster output — DEM grids and PGM image export for the examples
+//! (the paper's motivating workload is DEM generation from LiDAR clouds).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::Result;
+
+/// A row-major raster of interpolated values.
+#[derive(Debug, Clone)]
+pub struct Raster {
+    pub width: usize,
+    pub height: usize,
+    pub values: Vec<f64>,
+}
+
+impl Raster {
+    /// Raster from row-major values (len must equal width*height).
+    pub fn new(width: usize, height: usize, values: Vec<f64>) -> Self {
+        assert_eq!(values.len(), width * height);
+        Raster { width, height, values }
+    }
+
+    /// Value at (col, row).
+    pub fn at(&self, col: usize, row: usize) -> f64 {
+        self.values[row * self.width + col]
+    }
+
+    /// Min/max of the values (0,0 for empty).
+    pub fn range(&self) -> (f64, f64) {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &v in &self.values {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if lo > hi {
+            (0.0, 0.0)
+        } else {
+            (lo, hi)
+        }
+    }
+
+    /// Write as binary PGM (P5), normalizing values to 0..255.
+    pub fn write_pgm(&self, path: &Path) -> Result<()> {
+        let (lo, hi) = self.range();
+        let scale = if hi > lo { 255.0 / (hi - lo) } else { 0.0 };
+        let mut buf = Vec::with_capacity(self.values.len() + 64);
+        write!(buf, "P5\n{} {}\n255\n", self.width, self.height)?;
+        for &v in &self.values {
+            buf.push(((v - lo) * scale).round().clamp(0.0, 255.0) as u8);
+        }
+        std::fs::write(path, buf)?;
+        Ok(())
+    }
+
+    /// Mean absolute difference to another raster of identical shape
+    /// (used by examples to compare interpolation variants).
+    pub fn mean_abs_diff(&self, other: &Raster) -> f64 {
+        assert_eq!(self.values.len(), other.values.len());
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        let s: f64 = self
+            .values
+            .iter()
+            .zip(&other.values)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        s / self.values.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn at_and_range() {
+        let r = Raster::new(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.at(0, 0), 1.0);
+        assert_eq!(r.at(1, 1), 4.0);
+        assert_eq!(r.range(), (1.0, 4.0));
+    }
+
+    #[test]
+    fn pgm_roundtrip_header() {
+        let dir = std::env::temp_dir().join("aidw_raster_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.pgm");
+        let r = Raster::new(3, 2, vec![0.0, 0.5, 1.0, 1.5, 2.0, 2.5]);
+        r.write_pgm(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P5\n3 2\n255\n"));
+        assert_eq!(bytes.len(), "P5\n3 2\n255\n".len() + 6);
+        // min maps to 0, max to 255
+        assert_eq!(bytes[bytes.len() - 6], 0);
+        assert_eq!(bytes[bytes.len() - 1], 255);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn constant_raster_writes_zeros() {
+        let dir = std::env::temp_dir().join("aidw_raster_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.pgm");
+        let r = Raster::new(2, 1, vec![5.0, 5.0]);
+        r.write_pgm(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[bytes.len() - 2..], &[0, 0]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mean_abs_diff_works() {
+        let a = Raster::new(2, 1, vec![1.0, 3.0]);
+        let b = Raster::new(2, 1, vec![2.0, 1.0]);
+        assert!((a.mean_abs_diff(&b) - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,467 @@
+//! Streaming executor: runs arbitrary problem sizes through the
+//! fixed-shape AOT artifacts.
+//!
+//! The chunking algebra (validated end-to-end by `python/tests/
+//! test_model.py` and `rust/tests/it_runtime.rs`):
+//!
+//! * **interpolation** — `(sum_w, sum_wz)` partial sums accumulate over
+//!   data chunks (f64 accumulation on the rust side to avoid f32 partial-
+//!   sum drift), predictions = `sum_wz / sum_w` per query;
+//! * **brute kNN** — the sorted k-buffer `(Q, K_BUF)` literal threads
+//!   through `knn_chunk_*` calls (monoid merge), epilogue
+//!   `mean(sqrt(best[:, :k]))` in rust;
+//! * queries pad up to the artifact Q with the last real query (harmless:
+//!   padded outputs are dropped); data chunks pad with `valid = 0`.
+//!
+//! Timing: literal construction (H2D analog) and result readback (D2H) are
+//! *inside* the timed regions, matching the paper's measurement protocol
+//! (§5.1: transfer overhead included, data generation excluded).
+
+use crate::aidw::alpha;
+use crate::aidw::params::AidwParams;
+use crate::error::{Error, Result};
+use crate::geom::PointSet;
+use crate::runtime::{lit_mat, lit_scalar, lit_vec, Engine};
+
+/// Which interpolation kernel variant to run (paper §4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Variant {
+    /// Global-memory analog (dense broadcast artifact).
+    Naive,
+    /// Shared-memory analog (Pallas block-tiled artifact).
+    #[default]
+    Tiled,
+}
+
+impl Variant {
+    /// Artifact-name fragment.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Variant::Naive => "naive",
+            Variant::Tiled => "tiled",
+        }
+    }
+}
+
+impl std::str::FromStr for Variant {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "naive" => Ok(Variant::Naive),
+            "tiled" => Ok(Variant::Tiled),
+            other => Err(Error::InvalidArgument(format!("unknown variant '{other}'"))),
+        }
+    }
+}
+
+/// Wall-clock split between the two pipeline stages (paper Table 2).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStageTimes {
+    /// Stage 1: kNN search (+ alpha determination), seconds.
+    pub knn_s: f64,
+    /// Stage 2: weighted interpolating, seconds.
+    pub interp_s: f64,
+}
+
+impl ExecStageTimes {
+    /// Total seconds.
+    pub fn total_s(&self) -> f64 {
+        self.knn_s + self.interp_s
+    }
+}
+
+/// f32 SoA view of a dataset, pre-chunked for an artifact's M.
+struct ChunkedData {
+    /// Per chunk: (dx, dy, dz, valid) literals, built once and reused
+    /// across every query batch.
+    chunks: Vec<[xla::Literal; 4]>,
+}
+
+/// High-level AIDW execution over an [`Engine`].
+pub struct AidwExecutor<'e> {
+    engine: &'e Engine,
+    /// Query batch size (artifact Q).
+    q: usize,
+    /// Data chunk size (artifact M).
+    m: usize,
+    /// Compiled k-buffer width.
+    k_buf: usize,
+    /// Local-interp neighbor-panel width (0 = no local artifact).
+    n_local: usize,
+}
+
+impl<'e> AidwExecutor<'e> {
+    /// Executor over the production-shape artifacts (Q=1024, M=4096).
+    pub fn new(engine: &'e Engine) -> Self {
+        let man = engine.manifest();
+        AidwExecutor {
+            engine,
+            q: man.q_prod,
+            m: man.m_prod,
+            k_buf: man.k_buf,
+            n_local: man.n_local,
+        }
+    }
+
+    /// Executor over the small test-shape artifacts (fast compiles).
+    pub fn new_test_shapes(engine: &'e Engine) -> Self {
+        let man = engine.manifest();
+        AidwExecutor {
+            engine,
+            q: man.q_test,
+            m: man.m_test,
+            k_buf: man.k_buf,
+            n_local: man.n_local_test,
+        }
+    }
+
+    /// Executor with explicit artifact shapes (must exist in the manifest).
+    pub fn with_shapes(engine: &'e Engine, q: usize, m: usize) -> Self {
+        let man = engine.manifest();
+        let n_local = if q == man.q_test { man.n_local_test } else { man.n_local };
+        AidwExecutor { engine, q, m, k_buf: man.k_buf, n_local }
+    }
+
+    /// The (Q, M) artifact shape this executor streams through.
+    pub fn shapes(&self) -> (usize, usize) {
+        (self.q, self.m)
+    }
+
+    fn interp_artifact(&self, v: Variant) -> String {
+        format!("interp_{}_chunk_q{}_m{}", v.tag(), self.q, self.m)
+    }
+
+    fn knn_artifact(&self) -> String {
+        format!("knn_chunk_q{}_m{}_k{}", self.q, self.m, self.k_buf)
+    }
+
+    fn alpha_artifact(&self) -> String {
+        format!("alpha_q{}", self.q)
+    }
+
+    /// Pre-compile every artifact this executor can touch (keeps XLA
+    /// compile time out of benchmark loops).
+    pub fn warmup(&self) -> Result<()> {
+        self.engine.warmup(&self.interp_artifact(Variant::Naive))?;
+        self.engine.warmup(&self.interp_artifact(Variant::Tiled))?;
+        self.engine.warmup(&self.knn_artifact())?;
+        self.engine.warmup(&self.alpha_artifact())?;
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // The paper's two algorithms
+    // -----------------------------------------------------------------
+
+    /// **Improved algorithm** (the paper's contribution): stage 1 = grid
+    /// kNN on the rust side (r_obs supplied by the caller's grid search),
+    /// alpha on PJRT; stage 2 = streamed weighted interpolation on PJRT.
+    pub fn improved_aidw(
+        &self,
+        data: &PointSet,
+        queries: &[(f64, f64)],
+        r_obs: &[f64],
+        params: &AidwParams,
+        variant: Variant,
+    ) -> Result<(Vec<f64>, ExecStageTimes)> {
+        assert_eq!(queries.len(), r_obs.len());
+        let mut times = ExecStageTimes::default();
+
+        // stage 1 epilogue: adaptive alpha on PJRT
+        let t0 = std::time::Instant::now();
+        let area = params.area.unwrap_or_else(|| data.bounds().area());
+        let r_exp = alpha::expected_nn_distance(data.len() as f64, area) as f32;
+        let alphas = self.run_alpha(r_obs, r_exp, params)?;
+        times.knn_s = t0.elapsed().as_secs_f64();
+
+        // stage 2: streamed weighting
+        let t1 = std::time::Instant::now();
+        let out = self.run_interp(data, queries, &alphas, variant)?;
+        times.interp_s = t1.elapsed().as_secs_f64();
+        Ok((out, times))
+    }
+
+    /// **Original algorithm** (Mei et al. 2015 baseline): stage 1 = brute
+    /// force kNN *on PJRT* (streamed k-buffer), then alpha, then the same
+    /// streamed stage 2.
+    pub fn original_aidw(
+        &self,
+        data: &PointSet,
+        queries: &[(f64, f64)],
+        params: &AidwParams,
+        variant: Variant,
+    ) -> Result<(Vec<f64>, ExecStageTimes)> {
+        let mut times = ExecStageTimes::default();
+        let t0 = std::time::Instant::now();
+        let r_obs = self.run_knn_brute(data, queries, params.k)?;
+        let area = params.area.unwrap_or_else(|| data.bounds().area());
+        let r_exp = alpha::expected_nn_distance(data.len() as f64, area) as f32;
+        let alphas = self.run_alpha(&r_obs, r_exp, params)?;
+        times.knn_s = t0.elapsed().as_secs_f64();
+
+        let t1 = std::time::Instant::now();
+        let out = self.run_interp(data, queries, &alphas, variant)?;
+        times.interp_s = t1.elapsed().as_secs_f64();
+        Ok((out, times))
+    }
+
+    /// **Local AIDW** (extension A5): stage 2 over each query's gathered
+    /// N nearest neighbors instead of all m points — O(n·N), one
+    /// dispatch per query batch, no chunk streaming.
+    ///
+    /// `nbr_idx` is the row-major (queries × n_row) neighbor-index matrix
+    /// from [`crate::knn::grid_knn::grid_knn_neighbors`] (`u32::MAX` =
+    /// padding).  The first `min(n_row, panel)` ids per row feed the
+    /// compiled panel; the panel width comes from the manifest.
+    pub fn local_aidw(
+        &self,
+        data: &PointSet,
+        queries: &[(f64, f64)],
+        r_obs: &[f64],
+        nbr_idx: &[u32],
+        n_row: usize,
+        params: &AidwParams,
+    ) -> Result<(Vec<f64>, ExecStageTimes)> {
+        if self.n_local == 0 {
+            return Err(Error::Artifact(
+                "no local-interp artifact in manifest (re-run make artifacts)".into(),
+            ));
+        }
+        assert_eq!(queries.len(), r_obs.len());
+        assert_eq!(nbr_idx.len(), queries.len() * n_row);
+        let name = format!("local_interp_q{}_n{}", self.q, self.n_local);
+        let n_used = n_row.min(self.n_local);
+
+        let mut times = ExecStageTimes::default();
+        let t0 = std::time::Instant::now();
+        let area = params.area.unwrap_or_else(|| data.bounds().area());
+        let r_exp =
+            alpha::expected_nn_distance(data.len() as f64, area) as f32;
+        times.knn_s = t0.elapsed().as_secs_f64();
+
+        let t1 = std::time::Instant::now();
+        let nq = queries.len();
+        let panel = self.q * self.n_local;
+        let mut qx = vec![0f32; self.q];
+        let mut qy = vec![0f32; self.q];
+        let mut qr = vec![0f32; self.q];
+        let mut nx = vec![0f32; panel];
+        let mut ny = vec![0f32; panel];
+        let mut nz = vec![0f32; panel];
+        let mut nvalid = vec![0f32; panel];
+        let mut out = Vec::with_capacity(nq);
+        let mut s = 0usize;
+        while s < nq {
+            let e = (s + self.q).min(nq);
+            nvalid.fill(0.0);
+            for i in 0..self.q {
+                let src = (s + i).min(nq - 1);
+                qx[i] = queries[src].0 as f32;
+                qy[i] = queries[src].1 as f32;
+                qr[i] = r_obs[src] as f32;
+                let row = &nbr_idx[src * n_row..src * n_row + n_used];
+                for (j, &pid) in row.iter().enumerate() {
+                    let slot = i * self.n_local + j;
+                    if pid == u32::MAX {
+                        break; // padding is sorted to the tail
+                    }
+                    let p = pid as usize;
+                    nx[slot] = data.xs[p] as f32;
+                    ny[slot] = data.ys[p] as f32;
+                    nz[slot] = data.zs[p] as f32;
+                    nvalid[slot] = 1.0;
+                }
+            }
+            let outs = self.engine.execute_f32(
+                &name,
+                &[
+                    lit_vec(&qx),
+                    lit_vec(&qy),
+                    lit_vec(&qr),
+                    lit_scalar(r_exp),
+                    lit_mat(&nx, self.q, self.n_local)?,
+                    lit_mat(&ny, self.q, self.n_local)?,
+                    lit_mat(&nz, self.q, self.n_local)?,
+                    lit_mat(&nvalid, self.q, self.n_local)?,
+                ],
+            )?;
+            for &z in &outs[0][..e - s] {
+                out.push(z as f64);
+            }
+            s = e;
+        }
+        times.interp_s = t1.elapsed().as_secs_f64();
+        Ok((out, times))
+    }
+
+    // -----------------------------------------------------------------
+    // Stage primitives
+    // -----------------------------------------------------------------
+
+    /// Adaptive alpha (Eqs. 2-6) on PJRT, batched over queries.
+    pub fn run_alpha(&self, r_obs: &[f64], r_exp: f32, params: &AidwParams) -> Result<Vec<f32>> {
+        // non-default alpha levels / fuzzy bounds are not baked into the
+        // artifact; fall back to the rust mirror for those
+        let default = AidwParams::default();
+        if params.alpha_levels != default.alpha_levels
+            || params.r_min != default.r_min
+            || params.r_max != default.r_max
+        {
+            return Ok(r_obs
+                .iter()
+                .map(|&ro| alpha::adaptive_alpha(ro, r_exp as f64, params) as f32)
+                .collect());
+        }
+        let name = self.alpha_artifact();
+        let n = r_obs.len();
+        let mut out = Vec::with_capacity(n);
+        let mut batch = vec![0f32; self.q];
+        let mut s = 0usize;
+        while s < n {
+            let e = (s + self.q).min(n);
+            for (i, slot) in batch.iter_mut().enumerate() {
+                // pad with the last real value
+                *slot = r_obs[(s + i).min(n - 1)] as f32;
+            }
+            let outs = self
+                .engine
+                .execute_f32(&name, &[lit_vec(&batch), lit_scalar(r_exp)])?;
+            out.extend_from_slice(&outs[0][..e - s]);
+            s = e;
+        }
+        Ok(out)
+    }
+
+    /// Streamed weighted interpolation (stage 2): per query batch, fold
+    /// every data chunk's partial sums.
+    pub fn run_interp(
+        &self,
+        data: &PointSet,
+        queries: &[(f64, f64)],
+        alphas: &[f32],
+        variant: Variant,
+    ) -> Result<Vec<f64>> {
+        assert_eq!(queries.len(), alphas.len());
+        let name = self.interp_artifact(variant);
+        let chunked = self.chunk_data(data);
+        let n = queries.len();
+        let mut out = Vec::with_capacity(n);
+
+        let mut qx = vec![0f32; self.q];
+        let mut qy = vec![0f32; self.q];
+        let mut qa = vec![0f32; self.q];
+        let mut s = 0usize;
+        while s < n {
+            let e = (s + self.q).min(n);
+            for i in 0..self.q {
+                let src = (s + i).min(n - 1);
+                qx[i] = queries[src].0 as f32;
+                qy[i] = queries[src].1 as f32;
+                qa[i] = alphas[src];
+            }
+            let ql = [lit_vec(&qx), lit_vec(&qy), lit_vec(&qa)];
+
+            let mut sw = vec![0f64; self.q];
+            let mut swz = vec![0f64; self.q];
+            for chunk in &chunked.chunks {
+                let inputs: Vec<&xla::Literal> = ql.iter().chain(chunk.iter()).collect();
+                let outs = self.engine.execute(&name, &inputs)?;
+                let psw = outs[0].to_vec::<f32>()?;
+                let pswz = outs[1].to_vec::<f32>()?;
+                for i in 0..self.q {
+                    sw[i] += psw[i] as f64;
+                    swz[i] += pswz[i] as f64;
+                }
+            }
+            for i in 0..(e - s) {
+                out.push(swz[i] / sw[i]);
+            }
+            s = e;
+        }
+        Ok(out)
+    }
+
+    /// Streamed brute-force kNN (stage 1 of the original algorithm):
+    /// returns Eq.-3 average distances.
+    pub fn run_knn_brute(
+        &self,
+        data: &PointSet,
+        queries: &[(f64, f64)],
+        k: usize,
+    ) -> Result<Vec<f64>> {
+        if k > self.k_buf {
+            return Err(Error::InvalidArgument(format!(
+                "k={k} exceeds compiled k-buffer width {}",
+                self.k_buf
+            )));
+        }
+        let k = k.min(data.len()).max(1);
+        let name = self.knn_artifact();
+        let chunked = self.chunk_data(data);
+        let n = queries.len();
+        let mut out = Vec::with_capacity(n);
+
+        let mut qx = vec![0f32; self.q];
+        let mut qy = vec![0f32; self.q];
+        let init_best = vec![f32::INFINITY; self.q * self.k_buf];
+        let mut s = 0usize;
+        while s < n {
+            let e = (s + self.q).min(n);
+            for i in 0..self.q {
+                let src = (s + i).min(n - 1);
+                qx[i] = queries[src].0 as f32;
+                qy[i] = queries[src].1 as f32;
+            }
+            let qxl = lit_vec(&qx);
+            let qyl = lit_vec(&qy);
+            let mut best = lit_mat(&init_best, self.q, self.k_buf)?;
+            for chunk in &chunked.chunks {
+                let inputs: Vec<&xla::Literal> =
+                    vec![&qxl, &qyl, &chunk[0], &chunk[1], &chunk[3], &best];
+                let outs = self.engine.execute(&name, &inputs)?;
+                best = outs.into_iter().next().unwrap();
+            }
+            // epilogue (Eq. 3): mean of sqrt over the first k columns
+            let flat = best.to_vec::<f32>()?;
+            for qi in 0..(e - s) {
+                let row = &flat[qi * self.k_buf..qi * self.k_buf + k];
+                let avg =
+                    row.iter().map(|&d2| (d2 as f64).sqrt()).sum::<f64>() / k as f64;
+                out.push(avg);
+            }
+            s = e;
+        }
+        Ok(out)
+    }
+
+    /// Split a dataset into M-sized (dx, dy, dz, valid) literal chunks.
+    fn chunk_data(&self, data: &PointSet) -> ChunkedData {
+        let n = data.len();
+        let mut chunks = Vec::with_capacity((n + self.m - 1) / self.m);
+        let mut dx = vec![0f32; self.m];
+        let mut dy = vec![0f32; self.m];
+        let mut dz = vec![0f32; self.m];
+        let mut valid = vec![0f32; self.m];
+        let mut s = 0usize;
+        while s < n {
+            let e = (s + self.m).min(n);
+            let len = e - s;
+            for i in 0..self.m {
+                if i < len {
+                    dx[i] = data.xs[s + i] as f32;
+                    dy[i] = data.ys[s + i] as f32;
+                    dz[i] = data.zs[s + i] as f32;
+                    valid[i] = 1.0;
+                } else {
+                    dx[i] = 0.0;
+                    dy[i] = 0.0;
+                    dz[i] = 0.0;
+                    valid[i] = 0.0;
+                }
+            }
+            chunks.push([lit_vec(&dx), lit_vec(&dy), lit_vec(&dz), lit_vec(&valid)]);
+            s = e;
+        }
+        ChunkedData { chunks }
+    }
+}

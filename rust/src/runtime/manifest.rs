@@ -1,0 +1,212 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` and the
+//! rust runtime.  `manifest.json` records every AOT artifact's input/output
+//! tensor shapes so calls are validated *before* they reach PJRT.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::jsonio::Json;
+
+/// One tensor's declared shape/dtype.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    /// Only f32 is used by this model family.
+    pub dtype: String,
+    /// Dimensions; empty = scalar.
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Total element count (1 for scalars).
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT-compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    /// Production batch shape (queries per batch).
+    pub q_prod: usize,
+    /// Production data-chunk length.
+    pub m_prod: usize,
+    /// Small test-size shapes.
+    pub q_test: usize,
+    pub m_test: usize,
+    /// Compiled k-buffer width (runtime k <= k_buf).
+    pub k_buf: usize,
+    /// Paper-default k.
+    pub k_default: usize,
+    /// Neighbor-panel widths of the local-interp artifacts (extension A5).
+    pub n_local: usize,
+    pub n_local_test: usize,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                path.display()
+            ))
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (split out for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let field = |k: &str| -> Result<usize> {
+            v.get(k)
+                .as_usize()
+                .ok_or_else(|| Error::Artifact(format!("manifest missing numeric '{k}'")))
+        };
+        let version = field("version")?;
+        if version != 1 {
+            return Err(Error::Artifact(format!("unsupported manifest version {version}")));
+        }
+        let arts = v
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| Error::Artifact("manifest missing 'artifacts'".into()))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            artifacts.push(ArtifactSpec {
+                name: a
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| Error::Artifact("artifact missing name".into()))?
+                    .to_string(),
+                file: a
+                    .get("file")
+                    .as_str()
+                    .ok_or_else(|| Error::Artifact("artifact missing file".into()))?
+                    .to_string(),
+                inputs: parse_tensors(a.get("inputs"))?,
+                outputs: parse_tensors(a.get("outputs"))?,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            q_prod: field("q_prod")?,
+            m_prod: field("m_prod")?,
+            q_test: field("q_test")?,
+            m_test: field("m_test")?,
+            k_buf: field("k_buf")?,
+            k_default: field("k_default")?,
+            // optional (older manifests): local artifacts absent -> 0
+            n_local: v.get("n_local").as_usize().unwrap_or(0),
+            n_local_test: v.get("n_local_test").as_usize().unwrap_or(0),
+            artifacts,
+        })
+    }
+
+    /// Find an artifact by exact name.
+    pub fn find(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::Artifact(format!("artifact '{name}' not in manifest")))
+    }
+
+    /// All artifact names (diagnostics).
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+}
+
+fn parse_tensors(v: &Json) -> Result<Vec<TensorSpec>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| Error::Artifact("tensor list missing".into()))?;
+    arr.iter()
+        .map(|t| {
+            let shape = t
+                .get("shape")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| Error::Artifact("bad shape dim".into()))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorSpec {
+                name: t
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| Error::Artifact("tensor missing name".into()))?
+                    .to_string(),
+                dtype: t.get("dtype").as_str().unwrap_or("f32").to_string(),
+                shape,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "q_prod": 1024, "m_prod": 4096,
+      "q_test": 256, "m_test": 1024, "k_buf": 16, "k_default": 10,
+      "artifacts": [
+        {"name": "alpha_q256", "file": "alpha_q256.hlo.txt",
+         "inputs": [{"name": "r_obs", "dtype": "f32", "shape": [256]},
+                     {"name": "r_exp", "dtype": "f32", "shape": []}],
+         "outputs": [{"name": "alpha", "dtype": "f32", "shape": [256]}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert_eq!(m.q_prod, 1024);
+        assert_eq!(m.k_buf, 16);
+        let a = m.find("alpha_q256").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![256]);
+        assert_eq!(a.inputs[0].elements(), 256);
+        assert_eq!(a.inputs[1].shape, Vec::<usize>::new());
+        assert_eq!(a.inputs[1].elements(), 1);
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert!(m.find("nope").is_err());
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(Path::new("/tmp/x"), &bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // when `make artifacts` has run, the real manifest must load
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.len() >= 10);
+            assert!(m.find("interp_tiled_chunk_q1024_m4096").is_ok());
+        }
+    }
+}

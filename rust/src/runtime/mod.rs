@@ -1,0 +1,189 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute from
+//! the request path.
+//!
+//! ```text
+//! PjRtClient::cpu()
+//!   └─ HloModuleProto::from_text_file(artifacts/<name>.hlo.txt)
+//!        └─ XlaComputation::from_proto  ─ client.compile ─►  cache
+//!             └─ exe.execute(&[Literal]) ─► tuple of output Literals
+//! ```
+//!
+//! Compilation is lazy and cached per artifact name; the first touch of an
+//! artifact pays the XLA compile, every later call is execute-only.  All
+//! shape validation happens against the manifest before PJRT sees the call.
+
+pub mod executor;
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+pub use executor::{AidwExecutor, ExecStageTimes, Variant};
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+
+use crate::error::{Error, Result};
+
+/// The PJRT engine: client + manifest + compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative compile seconds (observability).
+    compile_s: Mutex<f64>,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("platform", &self.client.platform_name())
+            .field("artifacts", &self.manifest.artifacts.len())
+            .finish()
+    }
+}
+
+impl Engine {
+    /// Create a CPU-PJRT engine over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            compile_s: Mutex::new(0.0),
+        })
+    }
+
+    /// Engine over the default `artifacts/` directory next to Cargo.toml,
+    /// or `$AIDW_ARTIFACTS` when set.
+    pub fn from_default_dir() -> Result<Engine> {
+        Engine::new(&default_artifact_dir())
+    }
+
+    /// The manifest describing available artifacts.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name ("cpu" here; "cuda"/"tpu" with other plugins).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Seconds spent in XLA compilation so far.
+    pub fn compile_seconds(&self) -> f64 {
+        *self.compile_s.lock().unwrap()
+    }
+
+    /// Force-compile an artifact now (warmup; avoids paying compile time
+    /// inside benchmark timing loops).
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        self.executable(name).map(|_| ())
+    }
+
+    /// Compile (or fetch cached) executable for `name`.
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.find(name)?;
+        let path = self.manifest.dir.join(&spec.file);
+        if !path.exists() {
+            return Err(Error::Artifact(format!(
+                "artifact file {} missing; run `make artifacts`",
+                path.display()
+            )));
+        }
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        *self.compile_s.lock().unwrap() += t0.elapsed().as_secs_f64();
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with validated inputs; returns the output
+    /// literals (the AOT tuple unwrapped).
+    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        name: &str,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let spec = self.manifest.find(name)?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::InvalidArgument(format!(
+                "artifact '{name}' expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (lit, ts) in inputs.iter().zip(&spec.inputs) {
+            let n = lit.borrow().element_count();
+            if n != ts.elements() {
+                return Err(Error::InvalidArgument(format!(
+                    "artifact '{name}' input '{}' expects {} elements, got {n}",
+                    ts.name,
+                    ts.elements()
+                )));
+            }
+        }
+        let exe = self.executable(name)?;
+        let result = exe.execute(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let outs = lit.to_tuple()?;
+        if outs.len() != spec.outputs.len() {
+            return Err(Error::Artifact(format!(
+                "artifact '{name}' returned {} outputs, manifest says {}",
+                outs.len(),
+                spec.outputs.len()
+            )));
+        }
+        Ok(outs)
+    }
+
+    /// Execute and pull each output out as a f32 vec.
+    pub fn execute_f32<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        name: &str,
+        inputs: &[L],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.execute(name, inputs)?
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(Error::from))
+            .collect()
+    }
+}
+
+/// `artifacts/` next to Cargo.toml, overridable via `$AIDW_ARTIFACTS`.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("AIDW_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True when AOT artifacts are present (examples fall back to the pure-rust
+/// pipeline when not).
+pub fn artifacts_available() -> bool {
+    default_artifact_dir().join("manifest.json").exists()
+}
+
+/// Build a rank-1 f32 literal.
+pub fn lit_vec(xs: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(xs)
+}
+
+/// Build a rank-2 f32 literal from row-major data.
+pub fn lit_mat(xs: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(xs.len(), rows * cols);
+    xla::Literal::vec1(xs)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(Error::from)
+}
+
+/// Build a rank-0 (scalar) f32 literal.
+pub fn lit_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}

@@ -1,0 +1,224 @@
+//! TCP interpolation service: newline-delimited JSON over a
+//! [`crate::coordinator::Coordinator`], plus the matching blocking client.
+//!
+//! One OS thread per connection (std-only; no tokio offline).  All heavy
+//! work is delegated to the coordinator's pipeline, so connection threads
+//! only parse/serialize.
+
+pub mod protocol;
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::{Coordinator, InterpolationRequest};
+use crate::error::{Error, Result};
+use crate::geom::PointSet;
+use crate::jsonio::Json;
+use protocol::Request;
+
+/// A running TCP server.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving on `addr` (use port 0 for an OS-assigned
+    /// port; the bound address is available via [`Server::addr`]).
+    pub fn start(coordinator: Arc<Coordinator>, addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("aidw-accept".into())
+            .spawn(move || {
+                // short accept timeout so the stop flag is observed
+                listener
+                    .set_nonblocking(true)
+                    .expect("nonblocking listener");
+                let mut conn_threads = Vec::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let coord = coordinator.clone();
+                            let h = std::thread::spawn(move || {
+                                let _ = handle_connection(stream, coord);
+                            });
+                            conn_threads.push(h);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for h in conn_threads {
+                    let _ = h.join();
+                }
+            })
+            .map_err(Error::Io)?;
+        Ok(Server { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound socket address.
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join (open connections finish their in-flight
+    /// request and close on next read).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match Request::decode(&line) {
+            Err(e) => protocol::err_line(&e.to_string()),
+            Ok(req) => dispatch(&coord, req),
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+fn dispatch(coord: &Coordinator, req: Request) -> String {
+    match req {
+        Request::Ping => protocol::ok_pong(),
+        Request::Register { dataset, xs, ys, zs } => {
+            let pts = PointSet::from_soa(xs, ys, zs);
+            match coord.register_dataset(&dataset, pts) {
+                Ok(()) => protocol::ok_empty(),
+                Err(e) => protocol::err_line(&e.to_string()),
+            }
+        }
+        Request::Interpolate { dataset, qx, qy, variant, k } => {
+            let queries: Vec<(f64, f64)> = qx.into_iter().zip(qy).collect();
+            let mut r = InterpolationRequest::new(&dataset, queries);
+            r.variant = variant;
+            r.k = k;
+            match coord.interpolate(r) {
+                Ok(resp) => protocol::ok_values(
+                    &resp.values,
+                    resp.knn_s,
+                    resp.interp_s,
+                    resp.batch_queries,
+                ),
+                Err(e) => protocol::err_line(&e.to_string()),
+            }
+        }
+        Request::Drop { dataset } => {
+            if coord.drop_dataset(&dataset) {
+                protocol::ok_empty()
+            } else {
+                protocol::err_line(&format!("unknown dataset: {dataset}"))
+            }
+        }
+        Request::Datasets => protocol::ok_names(&coord.datasets()),
+        Request::Metrics => protocol::ok_metrics(&coord.metrics()),
+    }
+}
+
+/// Blocking client for the JSON-line protocol.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    /// Connect to a running server.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    fn call(&mut self, req: &Request) -> Result<Json> {
+        let line = req.encode();
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply)?;
+        if reply.is_empty() {
+            return Err(Error::Service("server closed connection".into()));
+        }
+        let v = Json::parse(reply.trim_end())?;
+        if v.get("ok").as_bool() != Some(true) {
+            return Err(Error::Service(
+                v.get("error").as_str().unwrap_or("unknown error").to_string(),
+            ));
+        }
+        Ok(v)
+    }
+
+    /// Liveness check.
+    pub fn ping(&mut self) -> Result<()> {
+        self.call(&Request::Ping).map(|_| ())
+    }
+
+    /// Upload a dataset.
+    pub fn register(&mut self, dataset: &str, pts: &PointSet) -> Result<()> {
+        self.call(&Request::Register {
+            dataset: dataset.to_string(),
+            xs: pts.xs.clone(),
+            ys: pts.ys.clone(),
+            zs: pts.zs.clone(),
+        })
+        .map(|_| ())
+    }
+
+    /// Interpolate; returns predicted values.
+    pub fn interpolate(&mut self, dataset: &str, queries: &[(f64, f64)]) -> Result<Vec<f64>> {
+        let v = self.call(&Request::Interpolate {
+            dataset: dataset.to_string(),
+            qx: queries.iter().map(|q| q.0).collect(),
+            qy: queries.iter().map(|q| q.1).collect(),
+            variant: None,
+            k: None,
+        })?;
+        v.get("z").to_f64_vec()
+    }
+
+    /// List datasets.
+    pub fn datasets(&mut self) -> Result<Vec<String>> {
+        let v = self.call(&Request::Datasets)?;
+        Ok(v.get("datasets")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|n| n.as_str().map(str::to_string))
+            .collect())
+    }
+
+    /// Fetch metrics as raw JSON.
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.call(&Request::Metrics)
+    }
+}

@@ -1,0 +1,226 @@
+//! Wire protocol: newline-delimited JSON over TCP.
+//!
+//! Requests:
+//! ```json
+//! {"op":"ping"}
+//! {"op":"register","dataset":"d","xs":[..],"ys":[..],"zs":[..]}
+//! {"op":"interpolate","dataset":"d","qx":[..],"qy":[..],
+//!  "variant":"tiled","k":10}
+//! {"op":"drop","dataset":"d"}
+//! {"op":"datasets"}
+//! {"op":"metrics"}
+//! ```
+//! Responses: `{"ok":true, ...}` or `{"ok":false,"error":"..."}`.
+
+use crate::coordinator::MetricsSnapshot;
+use crate::error::{Error, Result};
+use crate::jsonio::Json;
+use crate::runtime::Variant;
+
+/// A decoded client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Ping,
+    Register { dataset: String, xs: Vec<f64>, ys: Vec<f64>, zs: Vec<f64> },
+    Interpolate { dataset: String, qx: Vec<f64>, qy: Vec<f64>, variant: Option<Variant>, k: Option<usize> },
+    Drop { dataset: String },
+    Datasets,
+    Metrics,
+}
+
+impl Request {
+    /// Decode one JSON line.
+    pub fn decode(line: &str) -> Result<Request> {
+        let v = Json::parse(line)?;
+        let op = v
+            .get("op")
+            .as_str()
+            .ok_or_else(|| Error::Service("missing 'op'".into()))?;
+        let dataset = || -> Result<String> {
+            v.get("dataset")
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| Error::Service("missing 'dataset'".into()))
+        };
+        match op {
+            "ping" => Ok(Request::Ping),
+            "register" => {
+                let xs = v.get("xs").to_f64_vec()?;
+                let ys = v.get("ys").to_f64_vec()?;
+                let zs = v.get("zs").to_f64_vec()?;
+                if xs.len() != ys.len() || xs.len() != zs.len() {
+                    return Err(Error::Service("xs/ys/zs length mismatch".into()));
+                }
+                Ok(Request::Register { dataset: dataset()?, xs, ys, zs })
+            }
+            "interpolate" => {
+                let qx = v.get("qx").to_f64_vec()?;
+                let qy = v.get("qy").to_f64_vec()?;
+                if qx.len() != qy.len() {
+                    return Err(Error::Service("qx/qy length mismatch".into()));
+                }
+                let variant = match v.get("variant").as_str() {
+                    None => None,
+                    Some(s) => Some(s.parse::<Variant>()?),
+                };
+                let k = v.get("k").as_usize();
+                Ok(Request::Interpolate { dataset: dataset()?, qx, qy, variant, k })
+            }
+            "drop" => Ok(Request::Drop { dataset: dataset()? }),
+            "datasets" => Ok(Request::Datasets),
+            "metrics" => Ok(Request::Metrics),
+            other => Err(Error::Service(format!("unknown op '{other}'"))),
+        }
+    }
+
+    /// Encode to a JSON line (client side).
+    pub fn encode(&self) -> String {
+        match self {
+            Request::Ping => Json::obj(vec![("op", Json::Str("ping".into()))]).to_string(),
+            Request::Register { dataset, xs, ys, zs } => Json::obj(vec![
+                ("op", Json::Str("register".into())),
+                ("dataset", Json::Str(dataset.clone())),
+                ("xs", Json::num_array(xs)),
+                ("ys", Json::num_array(ys)),
+                ("zs", Json::num_array(zs)),
+            ])
+            .to_string(),
+            Request::Interpolate { dataset, qx, qy, variant, k } => {
+                let mut fields = vec![
+                    ("op", Json::Str("interpolate".into())),
+                    ("dataset", Json::Str(dataset.clone())),
+                    ("qx", Json::num_array(qx)),
+                    ("qy", Json::num_array(qy)),
+                ];
+                if let Some(v) = variant {
+                    fields.push(("variant", Json::Str(v.tag().into())));
+                }
+                if let Some(k) = k {
+                    fields.push(("k", Json::Num(*k as f64)));
+                }
+                Json::obj(fields).to_string()
+            }
+            Request::Drop { dataset } => Json::obj(vec![
+                ("op", Json::Str("drop".into())),
+                ("dataset", Json::Str(dataset.clone())),
+            ])
+            .to_string(),
+            Request::Datasets => Json::obj(vec![("op", Json::Str("datasets".into()))]).to_string(),
+            Request::Metrics => Json::obj(vec![("op", Json::Str("metrics".into()))]).to_string(),
+        }
+    }
+}
+
+/// Server response helpers.
+pub fn ok_empty() -> String {
+    Json::obj(vec![("ok", Json::Bool(true))]).to_string()
+}
+
+pub fn ok_values(values: &[f64], knn_s: f64, interp_s: f64, batch_queries: usize) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("z", Json::num_array(values)),
+        ("knn_s", Json::Num(knn_s)),
+        ("interp_s", Json::Num(interp_s)),
+        ("batch_queries", Json::Num(batch_queries as f64)),
+    ])
+    .to_string()
+}
+
+pub fn ok_pong() -> String {
+    Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]).to_string()
+}
+
+pub fn ok_names(names: &[String]) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        (
+            "datasets",
+            Json::Arr(names.iter().map(|n| Json::Str(n.clone())).collect()),
+        ),
+    ])
+    .to_string()
+}
+
+pub fn ok_metrics(m: &MetricsSnapshot) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("requests", Json::Num(m.requests as f64)),
+        ("queries", Json::Num(m.queries as f64)),
+        ("batches", Json::Num(m.batches as f64)),
+        ("rejected", Json::Num(m.rejected as f64)),
+        ("errors", Json::Num(m.errors as f64)),
+        ("knn_s", Json::Num(m.knn_s)),
+        ("interp_s", Json::Num(m.interp_s)),
+        ("mean_latency_s", Json::Num(m.mean_latency_s)),
+        ("p99_latency_s", Json::Num(m.p99_latency_s)),
+    ])
+    .to_string()
+}
+
+pub fn err_line(msg: &str) -> String {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let cases = vec![
+            Request::Ping,
+            Request::Register {
+                dataset: "d".into(),
+                xs: vec![1.0],
+                ys: vec![2.0],
+                zs: vec![3.0],
+            },
+            Request::Interpolate {
+                dataset: "d".into(),
+                qx: vec![0.5],
+                qy: vec![1.5],
+                variant: Some(Variant::Tiled),
+                k: Some(5),
+            },
+            Request::Interpolate {
+                dataset: "d".into(),
+                qx: vec![],
+                qy: vec![],
+                variant: None,
+                k: None,
+            },
+            Request::Drop { dataset: "d".into() },
+            Request::Datasets,
+            Request::Metrics,
+        ];
+        for r in cases {
+            let line = r.encode();
+            let back = Request::decode(&line).unwrap();
+            assert_eq!(back, r, "{line}");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_bad_input() {
+        assert!(Request::decode("{}").is_err());
+        assert!(Request::decode(r#"{"op":"register","dataset":"d","xs":[1],"ys":[],"zs":[]}"#).is_err());
+        assert!(Request::decode(r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[]}"#).is_err());
+        assert!(Request::decode(r#"{"op":"wat"}"#).is_err());
+        assert!(Request::decode("not json").is_err());
+        assert!(Request::decode(r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"variant":"bogus"}"#).is_err());
+    }
+
+    #[test]
+    fn response_lines_parse() {
+        let l = ok_values(&[1.0, 2.0], 0.1, 0.2, 64);
+        let v = crate::jsonio::Json::parse(&l).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true));
+        assert_eq!(v.get("z").to_f64_vec().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(v.get("batch_queries").as_usize(), Some(64));
+        let e = err_line("boom");
+        let v = crate::jsonio::Json::parse(&e).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(false));
+        assert_eq!(v.get("error").as_str(), Some("boom"));
+    }
+}

@@ -1,0 +1,108 @@
+//! CSV import/export for point sets — lets the CLI and examples run on
+//! real survey data (x,y,z rows) rather than only generated workloads.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::geom::PointSet;
+
+/// Parse `x,y,z` rows (header optional, `#` comments skipped).
+pub fn parse_points(text: &str) -> Result<PointSet> {
+    let mut pts = PointSet::default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cells: Vec<&str> = line.split(',').map(str::trim).collect();
+        if cells.len() < 3 {
+            return Err(Error::InvalidArgument(format!(
+                "line {}: expected x,y,z, got '{line}'",
+                lineno + 1
+            )));
+        }
+        // header row: skip if the first cell is not numeric
+        match (
+            cells[0].parse::<f64>(),
+            cells[1].parse::<f64>(),
+            cells[2].parse::<f64>(),
+        ) {
+            (Ok(x), Ok(y), Ok(z)) => {
+                if !(x.is_finite() && y.is_finite() && z.is_finite()) {
+                    return Err(Error::InvalidArgument(format!(
+                        "line {}: non-finite value",
+                        lineno + 1
+                    )));
+                }
+                pts.push(x, y, z);
+            }
+            _ if lineno == 0 => continue, // header
+            _ => {
+                return Err(Error::InvalidArgument(format!(
+                    "line {}: unparseable numbers in '{line}'",
+                    lineno + 1
+                )))
+            }
+        }
+    }
+    Ok(pts)
+}
+
+/// Load a CSV file of `x,y,z` samples.
+pub fn load_points(path: &Path) -> Result<PointSet> {
+    parse_points(&std::fs::read_to_string(path)?)
+}
+
+/// Write a point set as `x,y,z` CSV (with header).
+pub fn save_points(path: &Path, pts: &PointSet) -> Result<()> {
+    let mut out = String::with_capacity(pts.len() * 32 + 8);
+    out.push_str("x,y,z\n");
+    for i in 0..pts.len() {
+        out.push_str(&format!("{},{},{}\n", pts.xs[i], pts.ys[i], pts.zs[i]));
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_with_and_without_header() {
+        let with = parse_points("x,y,z\n1,2,3\n4,5,6\n").unwrap();
+        assert_eq!(with.len(), 2);
+        assert_eq!((with.xs[1], with.ys[1], with.zs[1]), (4.0, 5.0, 6.0));
+        let without = parse_points("1,2,3\n4,5,6").unwrap();
+        assert_eq!(without.len(), 2);
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let p = parse_points("# survey\n\n1,2,3\n  # more\n4,5,6\n").unwrap();
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_points("1,2\n").is_err());
+        assert!(parse_points("x,y,z\n1,2,zebra\n").is_err());
+        assert!(parse_points("x,y,z\n1,2,inf\n").is_err());
+    }
+
+    #[test]
+    fn roundtrip_via_file() {
+        let dir = std::env::temp_dir().join("aidw_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pts.csv");
+        let pts = crate::workload::uniform_square(50, 10.0, 9);
+        save_points(&path, &pts).unwrap();
+        let back = load_points(&path).unwrap();
+        assert_eq!(back.len(), 50);
+        for i in 0..50 {
+            assert!((back.xs[i] - pts.xs[i]).abs() < 1e-12);
+            assert!((back.zs[i] - pts.zs[i]).abs() < 1e-12);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

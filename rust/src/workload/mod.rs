@@ -1,0 +1,194 @@
+//! Workload generators — the paper's test data (§5.1) plus richer
+//! distributions for ablations and examples.
+//!
+//! The paper generates both data points and interpolated points uniformly
+//! at random inside a square, sizes {10K..1000K} with 1K = 1024.  The
+//! terrain generator provides a *ground-truth surface* so examples can
+//! report interpolation RMSE (accuracy, not just speed).
+
+pub mod csvio;
+
+use crate::geom::PointSet;
+use crate::rng::Pcg32;
+
+/// The paper's "1K" unit (1K = 1024 points).
+pub const PAPER_K: usize = 1024;
+
+/// `n` points uniform in `[0, side]^2`, z uniform in [0, 100) — the
+/// paper's §5.1 workload.
+pub fn uniform_square(n: usize, side: f64, seed: u64) -> PointSet {
+    let mut rng = Pcg32::seeded(seed);
+    let mut pts = PointSet::with_capacity(n);
+    for _ in 0..n {
+        let x = rng.uniform(0.0, side);
+        let y = rng.uniform(0.0, side);
+        let z = rng.uniform(0.0, 100.0);
+        pts.push(x, y, z);
+    }
+    pts
+}
+
+/// `n` points in `n_clusters` Gaussian blobs of std `sigma` inside
+/// `[0, side]^2` — stresses the adaptive alpha (dense clusters get low
+/// alpha, sparse gaps high alpha) and the grid's occupancy skew.
+pub fn clustered(n: usize, side: f64, n_clusters: usize, sigma: f64, seed: u64) -> PointSet {
+    assert!(n_clusters >= 1);
+    let mut rng = Pcg32::seeded(seed);
+    let centers: Vec<(f64, f64)> = (0..n_clusters)
+        .map(|_| (rng.uniform(0.1 * side, 0.9 * side), rng.uniform(0.1 * side, 0.9 * side)))
+        .collect();
+    let mut pts = PointSet::with_capacity(n);
+    for i in 0..n {
+        let (cx, cy) = centers[i % n_clusters];
+        let x = (cx + sigma * rng.normal()).clamp(0.0, side);
+        let y = (cy + sigma * rng.normal()).clamp(0.0, side);
+        let z = rng.uniform(0.0, 100.0);
+        pts.push(x, y, z);
+    }
+    pts
+}
+
+/// Analytic DEM-like terrain: two ridges + a basin over `[0, side]^2`.
+/// Used as ground truth for accuracy experiments.
+pub fn terrain_height(x: f64, y: f64, side: f64) -> f64 {
+    let u = x / side;
+    let v = y / side;
+    let ridge1 = 40.0 * (-((u - 0.3) * (u - 0.3) + (v - 0.7) * (v - 0.7)) / 0.05).exp();
+    let ridge2 = 25.0 * (-((u - 0.75) * (u - 0.75) + (v - 0.35) * (v - 0.35)) / 0.02).exp();
+    let rolling = 8.0 * ((6.0 * u).sin() * (5.0 * v).cos());
+    let basin = -15.0 * (-((u - 0.5) * (u - 0.5) + (v - 0.1) * (v - 0.1)) / 0.03).exp();
+    100.0 + ridge1 + ridge2 + rolling + basin
+}
+
+/// `n` scattered samples of the analytic terrain (optionally with noise) —
+/// a LiDAR-like survey of a known surface.
+pub fn terrain_samples(n: usize, side: f64, noise: f64, seed: u64) -> PointSet {
+    let mut rng = Pcg32::seeded(seed);
+    let mut pts = PointSet::with_capacity(n);
+    for _ in 0..n {
+        let x = rng.uniform(0.0, side);
+        let y = rng.uniform(0.0, side);
+        let z = terrain_height(x, y, side) + noise * rng.normal();
+        pts.push(x, y, z);
+    }
+    pts
+}
+
+/// Station-like sparse sensor network: `n` stations biased toward a few
+/// "urban" hotspots, values with spatial correlation — the PM2.5-style
+/// serving workload (cf. Li et al. 2014 in the paper's related work).
+pub fn sensor_stations(n: usize, side: f64, seed: u64) -> PointSet {
+    let mut rng = Pcg32::seeded(seed);
+    let hotspots: Vec<(f64, f64, f64)> = (0..5)
+        .map(|_| {
+            (rng.uniform(0.2 * side, 0.8 * side),
+             rng.uniform(0.2 * side, 0.8 * side),
+             rng.uniform(30.0, 80.0))
+        })
+        .collect();
+    let mut pts = PointSet::with_capacity(n);
+    for _ in 0..n {
+        // 70% of stations cluster near hotspots, 30% rural background
+        let (x, y) = if rng.next_f64() < 0.7 {
+            let h = rng.below(hotspots.len() as u32) as usize;
+            ((hotspots[h].0 + 0.05 * side * rng.normal()).clamp(0.0, side),
+             (hotspots[h].1 + 0.05 * side * rng.normal()).clamp(0.0, side))
+        } else {
+            (rng.uniform(0.0, side), rng.uniform(0.0, side))
+        };
+        // concentration: sum of hotspot plumes + background + noise
+        let mut z = 10.0;
+        for &(hx, hy, amp) in &hotspots {
+            let d2 = crate::geom::dist2(x, y, hx, hy);
+            z += amp * (-d2 / (0.02 * side * side)).exp();
+        }
+        z += 2.0 * rng.normal();
+        pts.push(x, y, z.max(0.0));
+    }
+    pts
+}
+
+/// Regular raster of query positions (nx * ny cell centers over the
+/// region) — DEM generation queries.
+pub fn raster_queries(nx: usize, ny: usize, side: f64) -> Vec<(f64, f64)> {
+    let mut q = Vec::with_capacity(nx * ny);
+    for j in 0..ny {
+        for i in 0..nx {
+            let x = (i as f64 + 0.5) * side / nx as f64;
+            let y = (j as f64 + 0.5) * side / ny as f64;
+            q.push((x, y));
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_stays_in_bounds() {
+        let pts = uniform_square(1000, 50.0, 1);
+        assert_eq!(pts.len(), 1000);
+        for i in 0..pts.len() {
+            assert!((0.0..50.0).contains(&pts.xs[i]));
+            assert!((0.0..50.0).contains(&pts.ys[i]));
+            assert!((0.0..100.0).contains(&pts.zs[i]));
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = uniform_square(100, 10.0, 7);
+        let b = uniform_square(100, 10.0, 7);
+        assert_eq!(a.xs, b.xs);
+        let c = uniform_square(100, 10.0, 8);
+        assert_ne!(a.xs, c.xs);
+    }
+
+    #[test]
+    fn clustered_is_clumpier_than_uniform() {
+        // mean NN distance of clustered data must be well below uniform's
+        let side = 100.0;
+        let uni = uniform_square(1000, side, 2);
+        let clu = clustered(1000, side, 5, 1.0, 2);
+        let mean_nn = |p: &PointSet| {
+            let q: Vec<(f64, f64)> = p.xy();
+            let d = crate::knn::brute::brute_knn_avg_distances(&p.xs, &p.ys, &q, 2);
+            d.iter().sum::<f64>() / d.len() as f64
+        };
+        assert!(mean_nn(&clu) < 0.5 * mean_nn(&uni));
+    }
+
+    #[test]
+    fn terrain_is_deterministic_and_bounded() {
+        let side = 100.0;
+        for &(x, y) in &[(0.0, 0.0), (50.0, 50.0), (99.0, 1.0)] {
+            let h = terrain_height(x, y, side);
+            assert!(h > 50.0 && h < 160.0, "h={h}");
+            assert_eq!(h, terrain_height(x, y, side));
+        }
+        let s = terrain_samples(200, side, 0.0, 3);
+        for i in 0..s.len() {
+            assert!((s.zs[i] - terrain_height(s.xs[i], s.ys[i], side)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sensor_values_nonnegative() {
+        let pts = sensor_stations(500, 100.0, 4);
+        assert!(pts.zs.iter().all(|&z| z >= 0.0));
+        // hotspot structure: spread of values should be substantial
+        let (lo, hi) = pts.z_range().unwrap();
+        assert!(hi - lo > 20.0);
+    }
+
+    #[test]
+    fn raster_covers_region() {
+        let q = raster_queries(4, 3, 12.0);
+        assert_eq!(q.len(), 12);
+        assert_eq!(q[0], (1.5, 2.0));
+        let (lx, ly) = q[q.len() - 1];
+        assert!((lx - 10.5).abs() < 1e-12 && (ly - 10.0).abs() < 1e-12);
+    }
+}

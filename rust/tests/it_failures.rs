@@ -1,0 +1,152 @@
+//! Failure injection: corrupt artifacts, malformed manifests, truncated
+//! HLO, hostile protocol input — the runtime must fail loudly and
+//! specifically, never crash or silently mis-serve.
+
+use std::sync::Arc;
+
+use aidw::coordinator::{Coordinator, CoordinatorConfig, EngineMode};
+use aidw::runtime::{Engine, Manifest};
+use aidw::service::Server;
+use aidw::workload;
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("aidw_fail_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+const MINI_MANIFEST: &str = r#"{
+  "version": 1, "q_prod": 8, "m_prod": 8, "q_test": 8, "m_test": 8,
+  "k_buf": 4, "k_default": 4, "n_local": 0, "n_local_test": 0,
+  "artifacts": [
+    {"name": "broken", "file": "broken.hlo.txt",
+     "inputs": [{"name": "x", "dtype": "f32", "shape": [8]}],
+     "outputs": [{"name": "y", "dtype": "f32", "shape": [8]}]}
+  ]
+}"#;
+
+#[test]
+fn missing_artifact_dir_is_a_clear_error() {
+    let err = Engine::new(std::path::Path::new("/nonexistent/aidw")).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn malformed_manifest_variants() {
+    let dir = scratch("manifest");
+    for (tag, text) in [
+        ("not json", "this is not json"),
+        ("empty object", "{}"),
+        ("bad version", &MINI_MANIFEST.replace("\"version\": 1", "\"version\": 99")),
+        ("artifact missing name", &MINI_MANIFEST.replace("\"name\": \"broken\",", "")),
+        ("shape not numeric", &MINI_MANIFEST.replace("[8]", "[\"x\"]")),
+    ] {
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        assert!(
+            Manifest::load(&dir).is_err(),
+            "{tag}: malformed manifest accepted"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_hlo_fails_at_compile_not_crash() {
+    let dir = scratch("hlo");
+    std::fs::write(dir.join("manifest.json"), MINI_MANIFEST).unwrap();
+    // listed artifact file missing entirely
+    let engine = Engine::new(&dir).unwrap();
+    let inputs = [aidw::runtime::lit_vec(&[0f32; 8])];
+    let err = engine.execute_f32("broken", &inputs).unwrap_err();
+    assert!(err.to_string().contains("make artifacts"), "{err}");
+    // garbage HLO text
+    std::fs::write(dir.join("broken.hlo.txt"), "HloModule mangled\nENTRY {").unwrap();
+    let engine = Engine::new(&dir).unwrap();
+    assert!(engine.execute_f32("broken", &inputs).is_err());
+    // truncated real artifact
+    let real_dir = aidw::runtime::default_artifact_dir();
+    if real_dir.join("alpha_q256.hlo.txt").exists() {
+        let text = std::fs::read_to_string(real_dir.join("alpha_q256.hlo.txt")).unwrap();
+        std::fs::write(dir.join("broken.hlo.txt"), &text[..text.len() / 2]).unwrap();
+        let engine = Engine::new(&dir).unwrap();
+        assert!(engine.execute_f32("broken", &inputs).is_err());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn protocol_fuzz_never_kills_the_connection_loop() {
+    use std::io::{BufRead, BufReader, Write};
+    let coord = Arc::new(
+        Coordinator::new(CoordinatorConfig {
+            engine_mode: EngineMode::CpuOnly,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let server = Server::start(coord, "127.0.0.1:0").unwrap();
+    let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    let hostile: &[&str] = &[
+        "",
+        "{",
+        "[]",
+        "null",
+        "{\"op\":null}",
+        "{\"op\":\"interpolate\"}",
+        "{\"op\":\"register\",\"dataset\":\"\\u0000\",\"xs\":[],\"ys\":[],\"zs\":[]}",
+        "{\"op\":\"interpolate\",\"dataset\":\"x\",\"qx\":[1e999],\"qy\":[0]}",
+        &"x".repeat(100_000),
+        "{\"op\":\"interpolate\",\"dataset\":\"x\",\"qx\":\"notarray\",\"qy\":[]}",
+    ];
+    for line in hostile {
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        stream.flush().unwrap();
+        if line.trim().is_empty() {
+            continue; // blank lines are skipped by the server, no reply
+        }
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert!(
+            reply.contains("\"ok\":false") || reply.contains("\"ok\":true"),
+            "no structured reply to {line:?}: {reply:?}"
+        );
+    }
+    // the connection is still healthy after the fuzz barrage
+    stream.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    assert!(reply.contains("\"pong\""), "{reply}");
+}
+
+#[test]
+fn snapshot_roundtrip_through_coordinator() {
+    let dir = scratch("snap");
+    let c1 = Coordinator::new(CoordinatorConfig {
+        engine_mode: EngineMode::CpuOnly,
+        ..Default::default()
+    })
+    .unwrap();
+    let pts = workload::terrain_samples(400, 50.0, 0.0, 501);
+    c1.register_dataset("survey", pts).unwrap();
+    c1.register_dataset("other", workload::uniform_square(100, 10.0, 502)).unwrap();
+    assert_eq!(c1.save_datasets(&dir).unwrap(), 2);
+
+    let c2 = Coordinator::new(CoordinatorConfig {
+        engine_mode: EngineMode::CpuOnly,
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(c2.load_datasets(&dir).unwrap(), 2);
+    assert_eq!(c2.datasets(), vec!["other".to_string(), "survey".to_string()]);
+
+    // restored service answers identically to the original
+    let queries = workload::uniform_square(40, 50.0, 503).xy();
+    let a = c1.interpolate_values("survey", queries.clone()).unwrap();
+    let b = c2.interpolate_values("survey", queries).unwrap();
+    assert_eq!(a, b);
+    std::fs::remove_dir_all(&dir).ok();
+}

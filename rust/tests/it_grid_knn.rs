@@ -1,0 +1,194 @@
+//! Property tests over the grid + kNN substrates: the grid kNN must be
+//! *exactly* the brute-force kNN (the paper's correctness requirement),
+//! across point distributions, k values, grid densities and query
+//! placements.  Uses the crate's own mini property-testing framework.
+
+use aidw::geom::PointSet;
+use aidw::grid::{EvenGrid, GridConfig};
+use aidw::knn::brute;
+use aidw::knn::grid_knn::{grid_knn_topk, GridKnnConfig, RingRule};
+use aidw::pool::Pool;
+use aidw::proptest::{check, pass, CaseResult, Config};
+use aidw::rng::Pcg32;
+use aidw::workload;
+
+/// A random kNN problem instance.
+#[derive(Debug)]
+struct Problem {
+    data: PointSet,
+    queries: Vec<(f64, f64)>,
+    k: usize,
+    cell_factor: f64,
+}
+
+fn gen_problem(rng: &mut Pcg32, size: usize) -> Problem {
+    let n = 20 + rng.below(size.max(2) as u32) as usize;
+    let nq = 1 + rng.below(40) as usize;
+    let side = rng.uniform(1.0, 200.0);
+    let dist = rng.below(3);
+    let seed = rng.next_u64();
+    let data = match dist {
+        0 => workload::uniform_square(n, side, seed),
+        1 => workload::clustered(n, side, 1 + rng.below(6) as usize, side / 40.0, seed),
+        _ => workload::terrain_samples(n, side, 1.0, seed),
+    };
+    // queries both inside and outside the region
+    let mut queries = Vec::with_capacity(nq);
+    for _ in 0..nq {
+        let margin = side * 0.3;
+        queries.push((
+            rng.uniform(-margin, side + margin),
+            rng.uniform(-margin, side + margin),
+        ));
+    }
+    let k = 1 + rng.below(16) as usize;
+    let cell_factor = rng.uniform(0.3, 3.0);
+    Problem { data, queries, k, cell_factor }
+}
+
+#[test]
+fn prop_grid_knn_exact_equals_brute() {
+    let pool = Pool::new(2);
+    check(
+        Config { cases: 60, seed: 0xBEEF, max_size: 800 },
+        "grid_knn_exact_equals_brute",
+        gen_problem,
+        |p| {
+            let cfg = GridConfig { cell_width_factor: p.cell_factor, ..Default::default() };
+            let grid = EvenGrid::build_on(&pool, &p.data, None, &cfg).unwrap();
+            let k = p.k.min(p.data.len());
+            let knn = GridKnnConfig { k, rule: RingRule::Exact };
+            let got = grid_knn_topk(&pool, &grid, &p.queries, &knn);
+            let want = brute::brute_knn_topk(&pool, &p.data.xs, &p.data.ys, &p.queries, k);
+            for (qi, (g, w)) in got.iter().zip(&want).enumerate() {
+                for (j, (a, b)) in g.iter().zip(w).enumerate() {
+                    if (a - b).abs() > 1e-9 {
+                        return CaseResult::Fail(format!(
+                            "query {qi} slot {j}: grid {a} vs brute {b} \
+                             (n={}, k={k}, factor={:.2})",
+                            p.data.len(),
+                            p.cell_factor
+                        ));
+                    }
+                }
+            }
+            pass()
+        },
+    );
+}
+
+#[test]
+fn prop_csr_is_permutation_partition() {
+    let pool = Pool::new(2);
+    check(
+        Config { cases: 40, seed: 0xC5A, max_size: 2000 },
+        "csr_partition",
+        |rng, size| {
+            let n = 1 + rng.below(size.max(2) as u32) as usize;
+            let side = rng.uniform(0.5, 100.0);
+            workload::clustered(n, side, 1 + rng.below(4) as usize, side / 20.0, rng.next_u64())
+        },
+        |pts| {
+            let grid = EvenGrid::build_on(&pool, pts, None, &GridConfig::default()).unwrap();
+            // sorted_index is a permutation of 0..n
+            let mut idx = grid.sorted_index().to_vec();
+            idx.sort_unstable();
+            for (i, &v) in idx.iter().enumerate() {
+                if v as usize != i {
+                    return CaseResult::Fail(format!("index {i} -> {v}, not a permutation"));
+                }
+            }
+            // every cell's points locate back to that cell
+            let (rows, cols) = grid.dims();
+            let mut total = 0usize;
+            for r in 0..rows {
+                for c in 0..cols {
+                    let (xs, ys, _, _) = grid.cell_points(r, c);
+                    total += xs.len();
+                    for j in 0..xs.len() {
+                        if grid.locate(xs[j], ys[j]) != (r, c) {
+                            return CaseResult::Fail(format!(
+                                "point ({}, {}) stored in cell ({r},{c}) but locates to {:?}",
+                                xs[j],
+                                ys[j],
+                                grid.locate(xs[j], ys[j])
+                            ));
+                        }
+                    }
+                }
+            }
+            if total != pts.len() {
+                return CaseResult::Fail(format!("CSR holds {total} of {} points", pts.len()));
+            }
+            pass()
+        },
+    );
+}
+
+#[test]
+fn prop_paper_rule_superset_candidates_rarely_wrong() {
+    // The paper's +1-ring heuristic: quantify exactness on uniform data
+    // (the distribution the paper tests).  Tolerate < 2% mismatching
+    // queries across the whole run; the Exact rule is the default anyway.
+    let pool = Pool::new(2);
+    let mut total_queries = 0usize;
+    let mut mismatches = 0usize;
+    let mut rng = Pcg32::seeded(0xF00D);
+    for _ in 0..30 {
+        let n = 200 + rng.below(2000) as usize;
+        let side = 100.0;
+        let data = workload::uniform_square(n, side, rng.next_u64());
+        let queries: Vec<(f64, f64)> = (0..50)
+            .map(|_| (rng.uniform(0.0, side), rng.uniform(0.0, side)))
+            .collect();
+        let grid = EvenGrid::build_on(&pool, &data, None, &GridConfig::default()).unwrap();
+        let k = 10.min(n);
+        let exact = grid_knn_topk(&pool, &grid, &queries, &GridKnnConfig { k, rule: RingRule::Exact });
+        let paper =
+            grid_knn_topk(&pool, &grid, &queries, &GridKnnConfig { k, rule: RingRule::PaperPlusOne });
+        total_queries += queries.len();
+        for (e, p) in exact.iter().zip(&paper) {
+            if e.iter().zip(p).any(|(a, b)| (a - b).abs() > 1e-9) {
+                mismatches += 1;
+            }
+        }
+    }
+    assert!(
+        (mismatches as f64) < 0.02 * total_queries as f64,
+        "paper +1 rule mismatched {mismatches}/{total_queries} queries"
+    );
+}
+
+#[test]
+fn prop_radix_sort_equals_std_sort() {
+    let pool = Pool::new(3);
+    check(
+        Config { cases: 50, seed: 0x50F7, max_size: 30_000 },
+        "radix_equals_std",
+        |rng, size| {
+            let n = rng.below(size.max(2) as u32) as usize;
+            let bits = rng.below(20);
+            let key_space = 1 + rng.below(1 << bits) as u32;
+            let keys: Vec<u32> = (0..n).map(|_| rng.below(key_space)).collect();
+            keys
+        },
+        |keys| {
+            let mut k = keys.clone();
+            let mut v: Vec<u32> = (0..keys.len() as u32).collect();
+            aidw::primitives::sort::radix_sort_by_key(&pool, &mut k, &mut v);
+            let mut want: Vec<(u32, u32)> =
+                keys.iter().copied().zip(0..keys.len() as u32).collect();
+            want.sort_by_key(|p| p.0);
+            for (i, ((gk, gv), (wk, wv))) in
+                k.iter().zip(&v).zip(want.iter().map(|p| (&p.0, &p.1))).enumerate()
+            {
+                if gk != wk || gv != wv {
+                    return CaseResult::Fail(format!(
+                        "slot {i}: got ({gk},{gv}) want ({wk},{wv})"
+                    ));
+                }
+            }
+            pass()
+        },
+    );
+}

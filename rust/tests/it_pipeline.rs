@@ -1,0 +1,209 @@
+//! Integration: the full coordinator pipeline (batching + stage 1 grid kNN
+//! + stage 2 PJRT) against the serial double-precision reference, and the
+//! coordinator's serving behaviors (batching, backpressure, overrides).
+
+use std::sync::Arc;
+
+use aidw::aidw::params::AidwParams;
+use aidw::aidw::serial;
+use aidw::coordinator::{
+    Backend, BatchPolicy, Coordinator, CoordinatorConfig, EngineMode, InterpolationRequest,
+};
+use aidw::runtime::{artifacts_available, Variant};
+use aidw::workload;
+
+fn pjrt_coordinator() -> Option<Coordinator> {
+    if !artifacts_available() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    let cfg = CoordinatorConfig {
+        engine_mode: EngineMode::PjrtRequired,
+        test_shapes: true, // fast XLA compiles
+        ..Default::default()
+    };
+    Some(Coordinator::new(cfg).expect("coordinator"))
+}
+
+#[test]
+fn pjrt_pipeline_matches_serial_reference() {
+    let Some(c) = pjrt_coordinator() else { return };
+    assert_eq!(c.backend(), Backend::Pjrt);
+    let data = workload::uniform_square(1200, 100.0, 101);
+    let queries = workload::uniform_square(300, 100.0, 102).xy();
+    c.register_dataset("d", data.clone()).unwrap();
+    let resp = c
+        .interpolate(InterpolationRequest::new("d", queries.clone()))
+        .unwrap();
+    assert_eq!(resp.backend, Backend::Pjrt);
+    let want = serial::aidw_serial(&data, &queries, &AidwParams::default());
+    for (i, (g, w)) in resp.values.iter().zip(&want).enumerate() {
+        let tol = 1e-2 * w.abs().max(1.0);
+        assert!((g - w).abs() < tol, "z[{i}]: pjrt {g} vs serial {w}");
+    }
+    assert!(resp.knn_s > 0.0 && resp.interp_s > 0.0);
+}
+
+#[test]
+fn variants_agree_through_the_service() {
+    let Some(c) = pjrt_coordinator() else { return };
+    let data = workload::clustered(800, 100.0, 5, 2.0, 103);
+    c.register_dataset("d", data).unwrap();
+    let queries = workload::uniform_square(200, 100.0, 104).xy();
+    let mut naive = InterpolationRequest::new("d", queries.clone());
+    naive.variant = Some(Variant::Naive);
+    let mut tiled = InterpolationRequest::new("d", queries);
+    tiled.variant = Some(Variant::Tiled);
+    let zn = c.interpolate(naive).unwrap().values;
+    let zt = c.interpolate(tiled).unwrap().values;
+    for (a, b) in zn.iter().zip(&zt) {
+        assert!((a - b).abs() < 1e-2 * a.abs().max(1.0), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn multiple_datasets_are_isolated() {
+    let Some(c) = pjrt_coordinator() else { return };
+    let flat = {
+        let mut p = workload::uniform_square(300, 50.0, 105);
+        p.zs.iter_mut().for_each(|z| *z = 1.0);
+        p
+    };
+    let steep = {
+        let mut p = workload::uniform_square(300, 50.0, 106);
+        p.zs.iter_mut().for_each(|z| *z = 100.0);
+        p
+    };
+    c.register_dataset("flat", flat).unwrap();
+    c.register_dataset("steep", steep).unwrap();
+    let queries = workload::uniform_square(50, 50.0, 107).xy();
+    let zf = c.interpolate_values("flat", queries.clone()).unwrap();
+    let zs = c.interpolate_values("steep", queries).unwrap();
+    assert!(zf.iter().all(|&z| (z - 1.0).abs() < 1e-6));
+    assert!(zs.iter().all(|&z| (z - 100.0).abs() < 1e-4));
+}
+
+#[test]
+fn async_tickets_and_batch_sharing() {
+    let Some(c) = pjrt_coordinator() else { return };
+    let c = Arc::new(c);
+    let data = workload::uniform_square(500, 50.0, 108);
+    c.register_dataset("d", data).unwrap();
+    // submit many small async requests; the linger window coalesces them
+    let tickets: Vec<_> = (0..12)
+        .map(|i| {
+            let queries = workload::uniform_square(16, 50.0, 200 + i).xy();
+            c.submit(InterpolationRequest::new("d", queries)).unwrap()
+        })
+        .collect();
+    let mut max_batch = 0usize;
+    for t in tickets {
+        let r = t.wait().unwrap();
+        assert_eq!(r.values.len(), 16);
+        max_batch = max_batch.max(r.batch_queries);
+    }
+    // at least one batch must have carried more than one request's queries
+    assert!(max_batch >= 32, "no batching observed (max batch {max_batch})");
+    let m = c.metrics();
+    assert_eq!(m.requests, 12);
+    assert!(m.batches < 12, "batches {} not < requests", m.batches);
+}
+
+#[test]
+fn backpressure_rejects_gracefully() {
+    if !artifacts_available() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let cfg = CoordinatorConfig {
+        engine_mode: EngineMode::CpuOnly, // deterministic timing
+        batch: BatchPolicy { max_queue: 1, ..Default::default() },
+        ..Default::default()
+    };
+    let c = Coordinator::new(cfg).unwrap();
+    let data = workload::uniform_square(20_000, 100.0, 109);
+    c.register_dataset("big", data).unwrap();
+    // first (slow) job occupies the pipeline; flood the 1-slot queue
+    let t1 = c
+        .submit(InterpolationRequest::new(
+            "big",
+            workload::uniform_square(512, 100.0, 110).xy(),
+        ))
+        .unwrap();
+    let mut rejected = 0;
+    let mut accepted = Vec::new();
+    for i in 0..20 {
+        match c.submit(InterpolationRequest::new(
+            "big",
+            workload::uniform_square(512, 100.0, 300 + i).xy(),
+        )) {
+            Ok(t) => accepted.push(t),
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "queue never filled");
+    assert!(t1.wait().is_ok());
+    for t in accepted {
+        assert!(t.wait().is_ok());
+    }
+    assert_eq!(c.metrics().rejected as usize, rejected);
+}
+
+#[test]
+fn local_mode_pjrt_through_the_coordinator() {
+    if !artifacts_available() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let cfg = CoordinatorConfig {
+        engine_mode: EngineMode::PjrtRequired,
+        test_shapes: true,
+        local_neighbors: Some(32), // matches the q256 local artifact panel
+        ..Default::default()
+    };
+    let c = Coordinator::new(cfg).unwrap();
+    let data = workload::uniform_square(2000, 100.0, 113);
+    c.register_dataset("d", data.clone()).unwrap();
+    let queries = workload::uniform_square(200, 100.0, 114).xy();
+    let resp = c
+        .interpolate(InterpolationRequest::new("d", queries.clone()))
+        .unwrap();
+    assert_eq!(resp.backend, Backend::Pjrt);
+    // agrees with the pure-rust local pipeline
+    let want = aidw::aidw::local::interpolate_local(
+        &data,
+        &queries,
+        &AidwParams::default(),
+        &aidw::aidw::local::LocalConfig { n_neighbors: 32, ..Default::default() },
+    )
+    .unwrap();
+    for (i, (g, w)) in resp.values.iter().zip(&want).enumerate() {
+        let tol = 1e-2 * w.abs().max(1.0);
+        assert!((g - w).abs() < tol, "z[{i}]: {g} vs {w}");
+    }
+    // and stays close to the dense serial reference (N=32 of 2000)
+    let dense = serial::aidw_serial(&data, &queries, &AidwParams::default());
+    let err = serial::rmse(&resp.values, &dense);
+    let (lo, hi) = data.z_range().unwrap();
+    assert!(err < 0.05 * (hi - lo), "rmse {err}");
+}
+
+#[test]
+fn cpu_and_pjrt_backends_agree() {
+    let Some(pjrt) = pjrt_coordinator() else { return };
+    let cpu = Coordinator::new(CoordinatorConfig {
+        engine_mode: EngineMode::CpuOnly,
+        ..Default::default()
+    })
+    .unwrap();
+    let data = workload::terrain_samples(900, 100.0, 0.0, 111);
+    pjrt.register_dataset("t", data.clone()).unwrap();
+    cpu.register_dataset("t", data).unwrap();
+    let queries = workload::uniform_square(150, 100.0, 112).xy();
+    let zp = pjrt.interpolate_values("t", queries.clone()).unwrap();
+    let zc = cpu.interpolate_values("t", queries).unwrap();
+    for (i, (a, b)) in zp.iter().zip(&zc).enumerate() {
+        let tol = 1e-2 * b.abs().max(1.0);
+        assert!((a - b).abs() < tol, "z[{i}]: pjrt {a} vs cpu {b}");
+    }
+}

@@ -1,0 +1,245 @@
+//! Integration: PJRT runtime vs the rust double-precision references.
+//!
+//! These tests require AOT artifacts (`make artifacts`).  They are skipped
+//! (with a loud message) when the artifacts are missing so plain
+//! `cargo test` works in a fresh checkout, but CI/Makefile always builds
+//! artifacts first.
+
+use aidw::aidw::params::AidwParams;
+use aidw::aidw::{alpha, serial};
+use aidw::knn::brute;
+use aidw::pool::Pool;
+use aidw::runtime::{artifacts_available, default_artifact_dir, AidwExecutor, Engine, Variant};
+use aidw::workload;
+
+fn engine_or_skip() -> Option<Engine> {
+    if !artifacts_available() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(&default_artifact_dir()).expect("engine"))
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(engine) = engine_or_skip() else { return };
+    let man = engine.manifest();
+    let knn_name = format!("knn_chunk_q1024_m4096_k{}", man.k_buf);
+    for name in [
+        "interp_naive_chunk_q1024_m4096",
+        "interp_tiled_chunk_q1024_m4096",
+        knn_name.as_str(),
+        "alpha_q1024",
+        "interp_tiled_chunk_q256_m1024",
+        "original_fused_tiled_q256_m1024_k10",
+    ] {
+        assert!(man.find(name).is_ok(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn alpha_artifact_matches_rust_mirror() {
+    let Some(engine) = engine_or_skip() else { return };
+    let exec = AidwExecutor::new_test_shapes(&engine);
+    let params = AidwParams::default();
+    let r_obs: Vec<f64> = (0..500).map(|i| 0.005 * i as f64).collect();
+    let r_exp = 0.7f32;
+    let got = exec.run_alpha(&r_obs, r_exp, &params).expect("alpha");
+    assert_eq!(got.len(), r_obs.len());
+    for (i, (&g, &ro)) in got.iter().zip(&r_obs).enumerate() {
+        let want = alpha::adaptive_alpha(ro, r_exp as f64, &params);
+        assert!(
+            (g as f64 - want).abs() < 1e-5,
+            "alpha[{i}]: pjrt {g} vs rust {want}"
+        );
+    }
+}
+
+#[test]
+fn knn_artifact_matches_rust_brute_force() {
+    let Some(engine) = engine_or_skip() else { return };
+    let exec = AidwExecutor::new_test_shapes(&engine);
+    let data = workload::uniform_square(2500, 100.0, 81); // forces 3 chunks
+    let queries = workload::uniform_square(300, 100.0, 82).xy(); // 2 q-batches
+    let k = 10;
+    let got = exec.run_knn_brute(&data, &queries, k).expect("knn");
+    let want = brute::brute_knn_avg_distances_on(&Pool::new(1), &data.xs, &data.ys, &queries, k);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (g - w).abs() < 1e-3 * w.max(1e-3),
+            "r_obs[{i}]: pjrt {g} vs rust {w}"
+        );
+    }
+}
+
+#[test]
+fn interp_chunked_matches_serial_both_variants() {
+    let Some(engine) = engine_or_skip() else { return };
+    let exec = AidwExecutor::new_test_shapes(&engine);
+    let data = workload::uniform_square(2000, 100.0, 83);
+    let queries = workload::uniform_square(400, 100.0, 84).xy();
+    let params = AidwParams::default();
+    let want = serial::aidw_serial(&data, &queries, &params);
+
+    for variant in [Variant::Naive, Variant::Tiled] {
+        let (got, times) = exec
+            .original_aidw(&data, &queries, &params, variant)
+            .expect("original_aidw");
+        assert_eq!(got.len(), queries.len());
+        assert!(times.knn_s > 0.0 && times.interp_s > 0.0);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            let tol = 1e-2 * w.abs().max(1.0); // f32 vs f64 weighting
+            assert!((g - w).abs() < tol, "{variant:?} z[{i}]: pjrt {g} vs serial {w}");
+        }
+    }
+}
+
+#[test]
+fn improved_path_matches_serial() {
+    let Some(engine) = engine_or_skip() else { return };
+    let exec = AidwExecutor::new_test_shapes(&engine);
+    let data = workload::uniform_square(1500, 100.0, 85);
+    let queries = workload::uniform_square(300, 100.0, 86).xy();
+    let params = AidwParams::default();
+
+    // stage 1 in rust (grid kNN == brute here)
+    let r_obs =
+        brute::brute_knn_avg_distances_on(&Pool::new(1), &data.xs, &data.ys, &queries, params.k);
+    let (got, _) = exec
+        .improved_aidw(&data, &queries, &r_obs, &params, Variant::Tiled)
+        .expect("improved");
+    let want = serial::aidw_serial(&data, &queries, &params);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        let tol = 1e-2 * w.abs().max(1.0);
+        assert!((g - w).abs() < tol, "z[{i}]: {g} vs {w}");
+    }
+}
+
+#[test]
+fn padding_sizes_are_exact() {
+    // sizes straddling the q256/m1024 artifact boundaries
+    let Some(engine) = engine_or_skip() else { return };
+    let exec = AidwExecutor::new_test_shapes(&engine);
+    let params = AidwParams::default();
+    for (n_data, n_q) in [(1, 1), (255, 3), (1024, 256), (1025, 257), (3000, 513)] {
+        let data = workload::uniform_square(n_data, 50.0, 87);
+        let queries = workload::uniform_square(n_q, 50.0, 88).xy();
+        let (got, _) = exec
+            .original_aidw(&data, &queries, &params, Variant::Naive)
+            .unwrap_or_else(|e| panic!("n_data={n_data} n_q={n_q}: {e}"));
+        assert_eq!(got.len(), n_q);
+        let want = serial::aidw_serial(&data, &queries, &params);
+        for (g, w) in got.iter().zip(&want) {
+            let tol = 1e-2 * w.abs().max(1.0);
+            assert!((g - w).abs() < tol, "n_data={n_data} n_q={n_q}: {g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn k_exceeding_kbuf_is_rejected() {
+    let Some(engine) = engine_or_skip() else { return };
+    let exec = AidwExecutor::new_test_shapes(&engine);
+    let data = workload::uniform_square(100, 10.0, 89);
+    let queries = vec![(5.0, 5.0)];
+    assert!(exec.run_knn_brute(&data, &queries, 99).is_err());
+}
+
+#[test]
+fn engine_rejects_wrong_arity_and_shape() {
+    let Some(engine) = engine_or_skip() else { return };
+    let man_q = engine.manifest().q_test;
+    // wrong input count
+    let r = engine.execute_f32("alpha_q256", &[aidw::runtime::lit_vec(&vec![0.5f32; man_q])]);
+    assert!(r.is_err());
+    // wrong element count
+    let r = engine.execute_f32(
+        "alpha_q256",
+        &[
+            aidw::runtime::lit_vec(&[0.5f32; 7]),
+            aidw::runtime::lit_scalar(1.0),
+        ],
+    );
+    assert!(r.is_err());
+    // unknown artifact
+    let r = engine.execute_f32("nonexistent", &[aidw::runtime::lit_scalar(1.0)]);
+    assert!(r.is_err());
+}
+
+#[test]
+fn local_artifact_matches_rust_local_pipeline() {
+    let Some(engine) = engine_or_skip() else { return };
+    let exec = AidwExecutor::new_test_shapes(&engine);
+    let data = workload::uniform_square(2000, 100.0, 95);
+    let queries = workload::uniform_square(300, 100.0, 96).xy();
+    let params = AidwParams::default();
+    let pool = Pool::new(1);
+
+    // rust stage 1: neighbors + r_obs in one grid pass
+    let n = engine.manifest().n_local_test;
+    assert!(n >= 16, "local artifact missing from manifest");
+    let grid = aidw::grid::EvenGrid::build_on(&pool, &data, None, &Default::default()).unwrap();
+    let (nbr, r_obs) = aidw::knn::grid_knn::grid_knn_neighbors(
+        &pool, &grid, &queries, n, params.k,
+        aidw::knn::grid_knn::RingRule::Exact);
+
+    // PJRT local stage 2
+    let (got, times) = exec
+        .local_aidw(&data, &queries, &r_obs, &nbr, n, &params)
+        .expect("local_aidw");
+    assert!(times.interp_s > 0.0);
+
+    // pure-rust local pipeline reference
+    let want = aidw::aidw::local::interpolate_local_on(
+        &pool, &data, &queries, &params,
+        &aidw::aidw::local::LocalConfig { n_neighbors: n, ..Default::default() })
+        .unwrap();
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        let tol = 1e-2 * w.abs().max(1.0);
+        assert!((g - w).abs() < tol, "z[{i}]: pjrt {g} vs rust {w}");
+    }
+
+    // and close to the dense serial answer (N=32 of 2000 points)
+    let dense = serial::aidw_serial(&data, &queries, &params);
+    let err = aidw::aidw::serial::rmse(&got, &dense);
+    let (lo, hi) = data.z_range().unwrap();
+    assert!(err < 0.05 * (hi - lo), "local vs dense rmse {err}");
+}
+
+#[test]
+fn fused_artifact_smoke() {
+    let Some(engine) = engine_or_skip() else { return };
+    let man = engine.manifest();
+    let q = man.q_test;
+    let m = man.m_test;
+    let data = workload::uniform_square(m, 100.0, 90);
+    let queries = workload::uniform_square(q, 100.0, 91).xy();
+    let b = data.bounds();
+    let qx: Vec<f32> = queries.iter().map(|p| p.0 as f32).collect();
+    let qy: Vec<f32> = queries.iter().map(|p| p.1 as f32).collect();
+    let dx: Vec<f32> = data.xs.iter().map(|&v| v as f32).collect();
+    let dy: Vec<f32> = data.ys.iter().map(|&v| v as f32).collect();
+    let dz: Vec<f32> = data.zs.iter().map(|&v| v as f32).collect();
+    let valid = vec![1f32; m];
+    let outs = engine
+        .execute_f32(
+            &format!("original_fused_tiled_q{q}_m{m}_k10"),
+            &[
+                aidw::runtime::lit_vec(&qx),
+                aidw::runtime::lit_vec(&qy),
+                aidw::runtime::lit_vec(&dx),
+                aidw::runtime::lit_vec(&dy),
+                aidw::runtime::lit_vec(&dz),
+                aidw::runtime::lit_vec(&valid),
+                aidw::runtime::lit_scalar(m as f32),
+                aidw::runtime::lit_scalar(b.area() as f32),
+            ],
+        )
+        .expect("fused exec");
+    let want = serial::aidw_serial(&data, &queries, &AidwParams::default());
+    assert_eq!(outs[0].len(), q);
+    for (i, (g, w)) in outs[0].iter().zip(&want).enumerate() {
+        let tol = 1e-2 * w.abs().max(1.0);
+        assert!(((*g as f64) - w).abs() < tol, "z[{i}]: {g} vs {w}");
+    }
+}

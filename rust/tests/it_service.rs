@@ -1,0 +1,106 @@
+//! Integration: the TCP JSON service end to end — register, interpolate,
+//! metrics, error paths, concurrent clients.
+
+use std::sync::Arc;
+
+use aidw::aidw::params::AidwParams;
+use aidw::aidw::serial;
+use aidw::coordinator::{Coordinator, CoordinatorConfig, EngineMode};
+use aidw::service::{Client, Server};
+use aidw::workload;
+
+fn start_server() -> (Server, std::net::SocketAddr) {
+    let cfg = CoordinatorConfig {
+        engine_mode: EngineMode::CpuOnly, // service tests don't need PJRT
+        ..Default::default()
+    };
+    let coord = Arc::new(Coordinator::new(cfg).unwrap());
+    let server = Server::start(coord, "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+    (server, addr)
+}
+
+#[test]
+fn full_session_register_interpolate_metrics() {
+    let (_server, addr) = start_server();
+    let mut client = Client::connect(addr).unwrap();
+    client.ping().unwrap();
+
+    let data = workload::uniform_square(400, 50.0, 121);
+    client.register("d", &data).unwrap();
+    assert_eq!(client.datasets().unwrap(), vec!["d".to_string()]);
+
+    let queries = workload::uniform_square(60, 50.0, 122).xy();
+    let got = client.interpolate("d", &queries).unwrap();
+    assert_eq!(got.len(), 60);
+    let want = serial::aidw_serial(&data, &queries, &AidwParams::default());
+    for (g, w) in got.iter().zip(&want) {
+        // JSON float roundtrip keeps full f64 precision via {n} formatting
+        assert!((g - w).abs() < 1e-9, "{g} vs {w}");
+    }
+
+    let m = client.metrics().unwrap();
+    assert_eq!(m.get("requests").as_usize(), Some(1));
+    assert_eq!(m.get("queries").as_usize(), Some(60));
+}
+
+#[test]
+fn error_paths_are_reported() {
+    let (_server, addr) = start_server();
+    let mut client = Client::connect(addr).unwrap();
+    // unknown dataset
+    let err = client.interpolate("ghost", &[(0.0, 0.0)]).unwrap_err();
+    assert!(err.to_string().contains("ghost"), "{err}");
+    // register with mismatched lengths is rejected at the protocol level
+    use std::io::{BufRead, Write};
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    stream
+        .write_all(b"{\"op\":\"register\",\"dataset\":\"x\",\"xs\":[1],\"ys\":[],\"zs\":[]}\n")
+        .unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":false"), "{line}");
+    // garbage JSON gets an error, not a hangup
+    stream.write_all(b"this is not json\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":false"), "{line}");
+}
+
+#[test]
+fn concurrent_clients_share_the_coordinator() {
+    let (_server, addr) = start_server();
+    {
+        let mut c = Client::connect(addr).unwrap();
+        c.register("d", &workload::uniform_square(300, 50.0, 123)).unwrap();
+    }
+    let mut handles = Vec::new();
+    for t in 0..6u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            let queries = workload::uniform_square(20, 50.0, 400 + t).xy();
+            c.interpolate("d", &queries).unwrap().len()
+        }));
+    }
+    for h in handles {
+        assert_eq!(h.join().unwrap(), 20);
+    }
+}
+
+#[test]
+fn drop_dataset_via_protocol() {
+    let (_server, addr) = start_server();
+    let mut client = Client::connect(addr).unwrap();
+    client.register("tmp", &workload::uniform_square(50, 10.0, 124)).unwrap();
+    assert_eq!(client.datasets().unwrap().len(), 1);
+    // raw drop op
+    use std::io::{BufRead, Write};
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    stream.write_all(b"{\"op\":\"drop\",\"dataset\":\"tmp\"}\n").unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "{line}");
+    assert!(client.datasets().unwrap().is_empty());
+}
