@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Tier-1 verification in one command:
+#   ./ci.sh            build + test (+ fmt check when rustfmt is present)
+#   AIDW_CI_STRICT=1 ./ci.sh   make formatting drift fatal
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    if ! cargo fmt --check; then
+        if [ "${AIDW_CI_STRICT:-0}" = "1" ]; then
+            echo "FAIL: formatting drift (AIDW_CI_STRICT=1)"
+            exit 1
+        fi
+        echo "WARN: formatting drift (non-fatal; set AIDW_CI_STRICT=1 to enforce)"
+    fi
+else
+    echo "rustfmt unavailable; skipping format check"
+fi
+
+echo "ci.sh: OK"

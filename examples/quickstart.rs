@@ -4,9 +4,9 @@
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Shows both entry points:
-//! 1. the one-call pure-rust pipeline (`aidw::pipeline::interpolate_improved`);
-//! 2. the serving coordinator (grid kNN + PJRT artifacts when present).
+//! One facade (`AidwSession`) covers every execution path, and one
+//! options type (`QueryOptions`) tunes every request — the same knobs
+//! the serving coordinator and the TCP protocol v2 accept.
 
 use aidw::prelude::*;
 
@@ -15,11 +15,12 @@ fn main() -> Result<()> {
     let side = 100.0;
     let data = workload::terrain_samples(2000, side, 0.5, 42);
     println!("data: {} samples over a {side}x{side} region", data.len());
-
-    // --- 2. the one-call API -------------------------------------------
     let queries = workload::raster_queries(8, 8, side);
-    let params = AidwParams::default(); // k=10, alpha levels per Lu & Wong
-    let z = pipeline::interpolate_improved(&data, &queries, &params);
+
+    // --- 2. the pure-rust improved pipeline ----------------------------
+    let fast = AidwSession::in_process();
+    fast.register("survey", data.clone())?;
+    let z = fast.interpolate_values("survey", &queries, &QueryOptions::default())?;
     println!("\npure-rust improved pipeline (grid kNN + adaptive IDW):");
     for row in 0..4 {
         let vals: Vec<String> =
@@ -27,27 +28,44 @@ fn main() -> Result<()> {
         println!("  z[{row}][0..4] = {}", vals.join(" "));
     }
 
-    // --- 3. the serving coordinator ------------------------------------
-    let coord = Coordinator::with_defaults()?;
-    println!("\ncoordinator backend: {:?}", coord.backend());
-    coord.register_dataset("survey", data)?;
-    let resp = coord.interpolate(
-        ::aidw::coordinator::InterpolationRequest::new("survey", queries.clone()),
-    )?;
+    // --- 3. the serving coordinator, same facade -----------------------
+    let serving = AidwSession::serving(CoordinatorConfig::default())?;
+    println!("\nserving backend: {}", serving.backend_label());
+    serving.register("survey", data)?;
+    let reply = serving.interpolate("survey", &queries, &QueryOptions::default())?;
     println!(
         "coordinator: {} predictions  (kNN {:.1} ms, interpolation {:.1} ms)",
-        resp.values.len(),
-        resp.knn_s * 1e3,
-        resp.interp_s * 1e3
+        reply.values.len(),
+        reply.knn_s * 1e3,
+        reply.interp_s * 1e3
     );
 
     // both paths agree
     let max_diff = z
         .iter()
-        .zip(&resp.values)
+        .zip(&reply.values)
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f64, f64::max);
     println!("max |pure-rust - coordinator| = {max_diff:.2e}");
+
+    // --- 4. per-request tuning -----------------------------------------
+    // restrict stage 2 to each query's 64 nearest neighbors (A5) and use
+    // the paper's ring heuristic — per request, no reconfiguration
+    let tuned = serving.interpolate(
+        "survey",
+        &queries,
+        &QueryOptions::new()
+            .k(16)
+            .local_neighbors(64)
+            .ring_rule(grid_knn::RingRule::PaperPlusOne),
+    )?;
+    let o = &tuned.options; // the response echoes what actually ran
+    println!(
+        "tuned request ran with k={}, ring={}, local={:?}",
+        o.k,
+        o.ring_rule.tag(),
+        o.local_neighbors
+    );
 
     // ground-truth check: the terrain is analytic, so we can score RMSE
     let truth: Vec<f64> = queries
@@ -55,8 +73,9 @@ fn main() -> Result<()> {
         .map(|&(x, y)| workload::terrain_height(x, y, side))
         .collect();
     println!(
-        "RMSE vs analytic terrain: {:.2}",
-        serial::rmse(&resp.values, &truth)
+        "RMSE vs analytic terrain: dense {:.2}, local-64 {:.2}",
+        serial::rmse(&reply.values, &truth),
+        serial::rmse(&tuned.values, &truth),
     );
     Ok(())
 }

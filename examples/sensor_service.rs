@@ -7,9 +7,13 @@
 //! cargo run --release --example sensor_service -- [n_stations] [n_clients]
 //! ```
 //!
-//! Demonstrates the full serving stack: TCP JSON protocol -> dynamic
-//! batcher -> two-stage pipeline; reports per-client latency and service
-//! throughput, plus batching effectiveness from the coordinator metrics.
+//! Demonstrates the full serving stack: TCP JSON protocol v2 -> dynamic
+//! batcher -> two-stage pipeline.  Even-numbered clients use the server
+//! defaults; odd-numbered clients override options per request
+//! (localized stage 2 over 64 neighbors) — the batcher keeps the two
+//! populations in separate batches while still coalescing within each.
+//! Reports per-client latency, service throughput, and batching
+//! effectiveness from the coordinator metrics.
 
 use std::sync::Arc;
 
@@ -38,11 +42,11 @@ fn main() -> Result<()> {
     }
     println!("registered {n_stations} stations (hotspot-biased placement)");
 
-    // --- concurrent clients ------------------------------------------------
+    // --- concurrent clients, mixed per-request options ---------------------
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for c in 0..n_clients {
-        handles.push(std::thread::spawn(move || -> (usize, f64, f64) {
+        handles.push(std::thread::spawn(move || -> (usize, f64, f64, String) {
             let mut client = Client::connect(addr).expect("connect");
             // each client asks for a 16x16 raster over its own district
             let mut rng = aidw::rng::Pcg32::seeded(1000 + c as u64);
@@ -57,20 +61,36 @@ fn main() -> Result<()> {
                     ));
                 }
             }
+            // odd clients localize stage 2 to 64 neighbors (protocol v2)
+            let options = if c % 2 == 1 {
+                QueryOptions::new().local_neighbors(64)
+            } else {
+                QueryOptions::default()
+            };
             let t = std::time::Instant::now();
-            let z = client.interpolate("pm25", &queries).expect("interpolate");
+            let reply = client
+                .interpolate_with("pm25", &queries, options)
+                .expect("interpolate");
             let dt = t.elapsed().as_secs_f64();
-            let mean = z.iter().sum::<f64>() / z.len() as f64;
-            (z.len(), dt, mean)
+            let mean = reply.values.iter().sum::<f64>() / reply.values.len() as f64;
+            // the response echoes the resolved options for audit
+            let mode = match reply.options.as_ref().and_then(|o| o.local_neighbors) {
+                Some(n) => format!("local-{n}"),
+                None => "dense".to_string(),
+            };
+            (reply.values.len(), dt, mean, mode)
         }));
     }
     let mut total_queries = 0usize;
     let mut latencies = Vec::new();
     for h in handles {
-        let (n, dt, mean) = h.join().expect("client thread");
+        let (n, dt, mean, mode) = h.join().expect("client thread");
         total_queries += n;
         latencies.push(dt);
-        println!("  client done: {n} queries in {:.1} ms (mean PM2.5 {mean:.1})", dt * 1e3);
+        println!(
+            "  client done ({mode}): {n} queries in {:.1} ms (mean PM2.5 {mean:.1})",
+            dt * 1e3
+        );
     }
     let wall = t0.elapsed().as_secs_f64();
 

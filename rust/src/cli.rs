@@ -74,6 +74,25 @@ impl Args {
         }
     }
 
+    /// Comma-separated f64 list flag (e.g. `--alpha-levels 0.5,1,2,3,4`);
+    /// None when the flag is absent.
+    pub fn get_f64_list(&self, name: &str) -> Result<Option<Vec<f64>>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim().parse::<f64>().map_err(|_| {
+                        Error::InvalidArgument(format!(
+                            "--{name} expects comma-separated numbers, got '{v}'"
+                        ))
+                    })
+                })
+                .collect::<Result<Vec<f64>>>()
+                .map(Some),
+        }
+    }
+
     /// Boolean switch presence.
     pub fn has(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
@@ -104,6 +123,18 @@ mod tests {
         assert_eq!(a.get_or("mode", "tiled"), "tiled");
         assert_eq!(a.get_usize("n", 7).unwrap(), 7);
         assert_eq!(a.get_f64("x", 2.5).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn f64_list_parses() {
+        let a = Args::parse(&sv(&["x", "--alpha-levels", "0.5,1, 2,3,4"]), &[]).unwrap();
+        assert_eq!(
+            a.get_f64_list("alpha-levels").unwrap(),
+            Some(vec![0.5, 1.0, 2.0, 3.0, 4.0])
+        );
+        assert_eq!(a.get_f64_list("missing").unwrap(), None);
+        let bad = Args::parse(&sv(&["x", "--alpha-levels", "1,oops"]), &[]).unwrap();
+        assert!(bad.get_f64_list("alpha-levels").is_err());
     }
 
     #[test]

@@ -1,18 +1,21 @@
 //! Dynamic batcher: bounded job queue with linger-based batch formation.
 //!
-//! Requests targeting the same (dataset, variant, k) are coalesced into one
-//! batch so stage 1 runs one grid-kNN sweep and stage 2 streams one padded
-//! query tensor — the interpolation-serving analog of vLLM-style continuous
-//! batching.  A bounded queue provides backpressure: submissions beyond
+//! Requests are coalesced into one batch only when they target the same
+//! dataset **and** resolve to identical [`ResolvedOptions`] — k, variant,
+//! ring rule, local mode, alpha levels, fuzzy bounds, and area all key the
+//! admission, because a batch runs one grid-kNN sweep and one stage-2
+//! launch whose semantics every member must share.  (The old key was just
+//! dataset + k, which would silently mis-serve mixed ring rules or local
+//! modes.)  A bounded queue provides backpressure: submissions beyond
 //! `max_queue` are rejected immediately rather than queued unboundedly.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::coordinator::options::ResolvedOptions;
 use crate::coordinator::request::Job;
 use crate::error::{Error, Result};
-use crate::runtime::Variant;
 
 /// Batch-formation policy.
 #[derive(Debug, Clone, Copy)]
@@ -35,12 +38,12 @@ impl Default for BatchPolicy {
     }
 }
 
-/// A formed batch: compatible jobs to run together.
+/// A formed batch: option-compatible jobs to run together.
 pub(crate) struct Batch {
     pub jobs: Vec<Job>,
     pub dataset: String,
-    pub variant: Option<Variant>,
-    pub k: Option<usize>,
+    /// The batch admission key: every member resolved to these options.
+    pub options: ResolvedOptions,
     /// Total queries across jobs.
     pub total_queries: usize,
 }
@@ -116,8 +119,7 @@ impl JobQueue {
     /// Grow a batch around `first`, lingering for compatible arrivals.
     fn fill_batch(&self, first: Job) -> Batch {
         let dataset = first.request.dataset.clone();
-        let variant = first.request.variant;
-        let k = first.request.k;
+        let options = first.resolved;
         let mut total = first.request.queries.len();
         let mut jobs = vec![first];
         let deadline = Instant::now() + self.policy.linger;
@@ -131,8 +133,7 @@ impl JobQueue {
                 let compat = {
                     let j = &st.jobs[i];
                     j.request.dataset == dataset
-                        && j.request.variant == variant
-                        && j.request.k == k
+                        && j.resolved == options
                         && total + j.request.queries.len() <= self.policy.max_queries
                 };
                 if compat {
@@ -157,7 +158,7 @@ impl JobQueue {
                 break;
             }
         }
-        Batch { jobs, dataset, variant, k, total_queries: total }
+        Batch { jobs, dataset, options, total_queries: total }
     }
 }
 
@@ -165,19 +166,27 @@ impl JobQueue {
 mod tests {
     use super::*;
     use crate::coordinator::request::InterpolationRequest;
+    use crate::knn::grid_knn::RingRule;
     use std::sync::mpsc;
 
-    fn job(dataset: &str, nq: usize) -> (Job, mpsc::Receiver<Result<crate::coordinator::request::InterpolationResponse>>) {
+    type RespRx = mpsc::Receiver<Result<crate::coordinator::request::InterpolationResponse>>;
+
+    fn job_with(dataset: &str, nq: usize, resolved: ResolvedOptions) -> (Job, RespRx) {
         let (tx, rx) = mpsc::channel();
         let queries = vec![(0.0, 0.0); nq];
         (
             Job {
                 request: InterpolationRequest::new(dataset, queries),
+                resolved,
                 respond: tx,
                 enqueued: Instant::now(),
             },
             rx,
         )
+    }
+
+    fn job(dataset: &str, nq: usize) -> (Job, RespRx) {
+        job_with(dataset, nq, ResolvedOptions::default())
     }
 
     #[test]
@@ -199,6 +208,39 @@ mod tests {
         let b2 = q.next_batch().unwrap();
         assert_eq!(b2.dataset, "b");
         assert_eq!(b2.total_queries, 5);
+    }
+
+    #[test]
+    fn mixed_options_never_share_a_batch() {
+        let q = JobQueue::new(BatchPolicy {
+            linger: Duration::from_millis(1),
+            ..Default::default()
+        });
+        let base = ResolvedOptions::default();
+        let other_k = ResolvedOptions { k: 3, ..base };
+        let other_ring = ResolvedOptions { ring_rule: RingRule::PaperPlusOne, ..base };
+        let other_local = ResolvedOptions { local_neighbors: Some(32), ..base };
+        let other_alpha =
+            ResolvedOptions { alpha_levels: [1.0, 2.0, 3.0, 4.0, 5.0], ..base };
+        let (j1, _r1) = job_with("a", 4, base);
+        let (j2, _r2) = job_with("a", 4, other_k);
+        let (j3, _r3) = job_with("a", 4, other_ring);
+        let (j4, _r4) = job_with("a", 4, other_local);
+        let (j5, _r5) = job_with("a", 4, other_alpha);
+        let (j6, _r6) = job_with("a", 4, base); // compatible with j1
+        for j in [j1, j2, j3, j4, j5, j6] {
+            q.push(j).unwrap();
+        }
+        // first batch: j1 + j6 (same resolved options), nothing else
+        let b1 = q.next_batch().unwrap();
+        assert_eq!(b1.jobs.len(), 2);
+        assert_eq!(b1.options, base);
+        // the four incompatible jobs each form their own batch, in order
+        for want in [other_k, other_ring, other_local, other_alpha] {
+            let b = q.next_batch().unwrap();
+            assert_eq!(b.jobs.len(), 1);
+            assert_eq!(b.options, want);
+        }
     }
 
     #[test]

@@ -13,10 +13,18 @@
 //! two-stage decomposition (Fig. 1) turned into a serving pipeline.
 //! Python is never involved: stage 2 executes AOT artifacts through PJRT,
 //! or falls back to the pure-rust kernel when artifacts are absent.
+//!
+//! Every request carries its own [`QueryOptions`] — k, kernel variant,
+//! ring rule, local mode, alpha levels, fuzzy bounds, area — resolved
+//! against [`CoordinatorConfig`] defaults at submit time.  Batches form
+//! only among option-identical jobs, and both stages read the batch's
+//! [`ResolvedOptions`] instead of the shared config, so one coordinator
+//! concurrently serves arbitrarily mixed tunings.
 
 pub mod batcher;
 pub mod dataset;
 pub mod metrics;
+pub mod options;
 pub mod request;
 pub mod snapshot;
 
@@ -38,6 +46,7 @@ pub use crate::runtime::Variant;
 pub use batcher::BatchPolicy;
 pub use dataset::{Dataset, DatasetRegistry};
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use options::{LocalMode, QueryOptions, ResolvedOptions};
 pub use request::{Backend, InterpolationRequest, InterpolationResponse, Ticket};
 
 use batcher::{Batch, JobQueue};
@@ -55,7 +64,9 @@ pub enum EngineMode {
     CpuOnly,
 }
 
-/// Coordinator configuration.
+/// Coordinator configuration — the *defaults* requests inherit; every
+/// algorithmic knob here can be overridden per request via
+/// [`QueryOptions`].
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     /// Artifact directory (None = default dir / $AIDW_ARTIFACTS).
@@ -65,18 +76,18 @@ pub struct CoordinatorConfig {
     pub test_shapes: bool,
     /// Default kernel variant for requests that don't specify one.
     pub default_variant: Variant,
-    /// AIDW parameters (k, alpha levels, ...).
+    /// Default AIDW parameters (k, alpha levels, fuzzy bounds, area).
     pub params: AidwParams,
     pub grid: GridConfig,
     pub batch: BatchPolicy,
-    /// kNN ring rule (Exact by default).
+    /// Default kNN ring rule (Exact by default).
     pub ring_rule: RingRule,
     /// Worker width for stage 1 (None = machine-sized).
     pub stage1_threads: Option<usize>,
     /// Bounded depth of the stage-1 -> stage-2 channel.
     pub pipeline_depth: usize,
-    /// Local-AIDW mode (extension A5): when set, stage 2 weights each
-    /// query over its N nearest neighbors instead of all data points.
+    /// Default local-AIDW mode (extension A5): when set, stage 2 weights
+    /// each query over its N nearest neighbors instead of all data points.
     /// Stage 1 gathers the neighbor ids in the same grid pass that feeds
     /// alpha.  None = the paper's dense weighting.
     pub local_neighbors: Option<usize>,
@@ -203,6 +214,11 @@ impl Coordinator {
         self.backend
     }
 
+    /// The configuration requests resolve their options against.
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.shared.config
+    }
+
     /// Register a dataset (builds its grid index now).
     pub fn register_dataset(&self, name: &str, points: PointSet) -> Result<()> {
         let ds = Dataset::build(
@@ -227,21 +243,38 @@ impl Coordinator {
     }
 
     /// Submit asynchronously; returns a ticket to await.
+    ///
+    /// Fails fast — before the job reaches any pipeline thread — on empty
+    /// queries, unknown datasets, and invalid option overrides (`k == 0`,
+    /// `r_max <= r_min`, non-positive alpha levels, ...).
     pub fn submit(&self, request: InterpolationRequest) -> Result<Ticket> {
         if request.queries.is_empty() {
             return Err(Error::InvalidArgument("empty query list".into()));
         }
         // fail fast on unknown datasets (cheap read-lock check)
         self.shared.registry.get(&request.dataset)?;
-        self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        self.shared
-            .metrics
-            .queries
-            .fetch_add(request.queries.len() as u64, Ordering::Relaxed);
+        // resolve per-request options against config defaults and validate
+        let resolved = request.options.resolve(&self.shared.config);
+        resolved.validate()?;
+        let n_queries = request.queries.len() as u64;
         let (tx, rx) = mpsc::channel();
-        let job = Job { request, respond: tx, enqueued: std::time::Instant::now() };
+        let job = Job {
+            request,
+            resolved,
+            respond: tx,
+            enqueued: std::time::Instant::now(),
+        };
         match self.shared.queue.push(job) {
-            Ok(()) => Ok(Ticket { rx }),
+            Ok(()) => {
+                // count only accepted jobs (rejected submissions used to
+                // inflate both counters)
+                self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                self.shared
+                    .metrics
+                    .queries
+                    .fetch_add(n_queries, Ordering::Relaxed);
+                Ok(Ticket { rx })
+            }
             Err(e) => {
                 self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(e)
@@ -309,7 +342,8 @@ impl Drop for Coordinator {
     }
 }
 
-/// Dispatcher: batch formation + stage 1 (grid kNN) on the CPU pool.
+/// Dispatcher: batch formation + stage 1 (grid kNN) on the CPU pool, per
+/// the batch's resolved options.
 fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
     while let Some(batch) = shared.queue.next_batch() {
         shared.metrics.batches.fetch_add(1, Ordering::Relaxed);
@@ -328,15 +362,13 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
             queries.extend_from_slice(&job.request.queries);
         }
 
-        // STAGE 1: grid kNN (the paper's fast kNN search).  In local mode
-        // the same grid pass also gathers each query's neighbor ids.
+        // STAGE 1: grid kNN (the paper's fast kNN search), driven by the
+        // batch's options.  In local mode the same grid pass also gathers
+        // each query's neighbor ids.
         let t0 = std::time::Instant::now();
-        let k = batch
-            .k
-            .unwrap_or(shared.config.params.k)
-            .min(dataset.points.len())
-            .max(1);
-        let (r_obs, neighbors) = match shared.config.local_neighbors {
+        let opts = batch.options;
+        let k = opts.k.min(dataset.points.len()).max(1);
+        let (r_obs, neighbors) = match opts.local_neighbors {
             Some(n) => {
                 let n = n.max(k);
                 let (idx, r_obs) = crate::knn::grid_knn::grid_knn_neighbors(
@@ -345,12 +377,12 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
                     &queries,
                     n,
                     k,
-                    shared.config.ring_rule,
+                    opts.ring_rule,
                 );
                 (r_obs, Some((idx, n)))
             }
             None => {
-                let knn_cfg = GridKnnConfig { k, rule: shared.config.ring_rule };
+                let knn_cfg = GridKnnConfig { k, rule: opts.ring_rule };
                 let (r_obs, _) =
                     grid_knn_avg_distances_on(&shared.pool, &dataset.grid, &queries, &knn_cfg);
                 (r_obs, None)
@@ -408,14 +440,24 @@ fn stage2_loop(
     }
 }
 
+/// The effective AIDW parameter block for a batch: resolved options with
+/// the dataset's area substituted when no explicit override was given and
+/// k clamped to the dataset size (what stage 1 actually searched with).
+fn effective_params(opts: &ResolvedOptions, dataset: &Dataset) -> AidwParams {
+    let mut p = opts.params();
+    p.k = opts.k.min(dataset.points.len()).max(1);
+    p.area = Some(opts.area.unwrap_or(dataset.area));
+    p
+}
+
 /// Execute stage 2 for one batch; returns (values, extra_knn_s, interp_s).
 fn run_stage2(
     shared: &Shared,
     engine: &Option<Engine>,
     sj: &Stage2Job,
 ) -> Result<(Vec<f64>, f64, f64)> {
-    let variant = sj.batch.variant.unwrap_or(shared.config.default_variant);
-    let params = &shared.config.params;
+    let opts = &sj.batch.options;
+    let params = effective_params(opts, &sj.dataset);
     match engine {
         Some(engine) => {
             let exec = if shared.config.test_shapes {
@@ -423,8 +465,6 @@ fn run_stage2(
             } else {
                 AidwExecutor::new(engine)
             };
-            let mut p = params.clone();
-            p.area = Some(sj.dataset.area);
             let (values, times) = match &sj.neighbors {
                 Some((idx, n)) => exec.local_aidw(
                     &sj.dataset.points,
@@ -432,25 +472,31 @@ fn run_stage2(
                     &sj.r_obs,
                     idx,
                     *n,
-                    &p,
+                    &params,
                 )?,
                 None => exec.improved_aidw(
                     &sj.dataset.points,
                     &sj.queries,
                     &sj.r_obs,
-                    &p,
-                    variant,
+                    &params,
+                    opts.variant,
                 )?,
             };
             Ok((values, times.knn_s, times.interp_s))
         }
         None => {
-            // pure-rust stage 2
+            // pure-rust stage 2; recompute r_exp only when the request
+            // overrode the area (else the dataset's cached Eq.-2 constant
+            // is exact)
+            let r_exp = match opts.area {
+                Some(a) => alpha::expected_nn_distance(sj.dataset.points.len() as f64, a),
+                None => sj.dataset.r_exp,
+            };
             let t0 = std::time::Instant::now();
             let alphas: Vec<f64> = sj
                 .r_obs
                 .iter()
-                .map(|&ro| alpha::adaptive_alpha(ro, sj.dataset.r_exp, params))
+                .map(|&ro| alpha::adaptive_alpha(ro, r_exp, &params))
                 .collect();
             let alpha_s = t0.elapsed().as_secs_f64();
             let t1 = std::time::Instant::now();
@@ -501,7 +547,8 @@ fn local_weighted_cpu(
     out
 }
 
-/// Split batch results back per job and respond.
+/// Split batch results back per job and respond, echoing the resolved
+/// options (with the dataset's area substituted) for client-side audit.
 fn respond_batch(
     shared: &Shared,
     sj: Stage2Job,
@@ -510,6 +557,10 @@ fn respond_batch(
     interp_s: f64,
     backend: Backend,
 ) {
+    let mut echoed = sj.batch.options;
+    echoed.area = Some(echoed.area.unwrap_or(sj.dataset.area));
+    // the audit record reports what ran: k is clamped to the dataset size
+    echoed.k = echoed.k.min(sj.dataset.points.len()).max(1);
     let total = sj.queries.len();
     let mut offset = 0usize;
     for job in sj.batch.jobs {
@@ -526,6 +577,7 @@ fn respond_batch(
             interp_s,
             batch_queries: total,
             backend,
+            options: echoed,
         }));
     }
 }
@@ -564,6 +616,11 @@ mod tests {
             .unwrap();
         assert_eq!(resp.values.len(), 50);
         assert_eq!(resp.backend, Backend::CpuFallback);
+        // the response echoes the fully-resolved options
+        assert_eq!(resp.options.k, 10);
+        assert_eq!(resp.options.ring_rule, RingRule::Exact);
+        assert_eq!(resp.options.local_neighbors, None);
+        assert!(resp.options.area.is_some(), "area must be filled in");
         // matches the serial reference
         let want = crate::aidw::serial::aidw_serial(&pts, &queries, &AidwParams::default());
         for (g, w) in resp.values.iter().zip(&want) {
@@ -590,6 +647,30 @@ mod tests {
         let pts = workload::uniform_square(50, 10.0, 73);
         c.register_dataset("d", pts).unwrap();
         assert!(c.interpolate(InterpolationRequest::new("d", vec![])).is_err());
+    }
+
+    #[test]
+    fn invalid_options_rejected_at_submit() {
+        let c = cpu_coordinator();
+        let pts = workload::uniform_square(50, 10.0, 73);
+        c.register_dataset("d", pts).unwrap();
+        let q = vec![(1.0, 1.0)];
+        for bad in [
+            QueryOptions::new().k(0),
+            QueryOptions::new().r_bounds(2.0, 1.0),
+            QueryOptions::new().alpha_levels([0.0, 1.0, 2.0, 3.0, 4.0]),
+            QueryOptions::new().area(-1.0),
+            QueryOptions::new().local_neighbors(0),
+        ] {
+            let err = c
+                .submit(InterpolationRequest::new("d", q.clone()).with_options(bad.clone()))
+                .unwrap_err();
+            assert!(matches!(err, Error::InvalidArgument(_)), "{bad:?}: {err}");
+        }
+        // invalid submissions must not inflate the accepted counters
+        let m = c.metrics();
+        assert_eq!(m.requests, 0);
+        assert_eq!(m.queries, 0);
     }
 
     #[test]
@@ -628,6 +709,22 @@ mod tests {
     }
 
     #[test]
+    fn rejected_submissions_do_not_count_as_requests() {
+        let mut c = cpu_coordinator();
+        let pts = workload::uniform_square(50, 10.0, 85);
+        c.register_dataset("d", pts).unwrap();
+        c.shutdown(); // queue closed -> push fails
+        let err = c
+            .submit(InterpolationRequest::new("d", vec![(1.0, 1.0)]))
+            .unwrap_err();
+        assert!(matches!(err, Error::Unavailable(_)), "{err}");
+        let m = c.metrics();
+        assert_eq!(m.requests, 0, "rejected submit must not count");
+        assert_eq!(m.queries, 0);
+        assert_eq!(m.rejected, 1);
+    }
+
+    #[test]
     fn local_mode_cpu_matches_local_pipeline() {
         let cfg = CoordinatorConfig {
             engine_mode: EngineMode::CpuOnly,
@@ -657,14 +754,91 @@ mod tests {
         let pts = workload::uniform_square(300, 50.0, 76);
         c.register_dataset("d", pts.clone()).unwrap();
         let queries = workload::uniform_square(20, 50.0, 77).xy();
-        let mut req = InterpolationRequest::new("d", queries.clone());
-        req.k = Some(3);
-        let got = c.interpolate(req).unwrap();
+        let got = c
+            .interpolate(InterpolationRequest::new("d", queries.clone()).with_k(3))
+            .unwrap();
+        assert_eq!(got.options.k, 3, "resolved echo must report the override");
         let mut p = AidwParams::default();
         p.k = 3;
         let want = crate::aidw::serial::aidw_serial(&pts, &queries, &p);
         for (g, w) in got.values.iter().zip(&want) {
             assert!((g - w).abs() < 1e-9);
+        }
+        // oversized k clamps to the dataset size, and the echo reports
+        // the clamped value (what stage 1 actually searched with)
+        let resp = c
+            .interpolate(InterpolationRequest::new("d", queries.clone()).with_k(10_000))
+            .unwrap();
+        assert_eq!(resp.options.k, 300);
+        let mut p = AidwParams::default();
+        p.k = 10_000; // serial reference clamps internally the same way
+        let want = crate::aidw::serial::aidw_serial(&pts, &queries, &p);
+        for (g, w) in resp.values.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn per_request_local_override_on_dense_coordinator() {
+        // coordinator defaults to dense; one request opts into local mode
+        let c = cpu_coordinator();
+        let pts = workload::uniform_square(800, 80.0, 81);
+        c.register_dataset("d", pts.clone()).unwrap();
+        let queries = workload::uniform_square(40, 80.0, 82).xy();
+        let resp = c
+            .interpolate(
+                InterpolationRequest::new("d", queries.clone())
+                    .with_options(QueryOptions::new().local_neighbors(64)),
+            )
+            .unwrap();
+        assert_eq!(resp.options.local_neighbors, Some(64));
+        let want = crate::aidw::local::interpolate_local(
+            &pts,
+            &queries,
+            &AidwParams::default(),
+            &crate::aidw::local::LocalConfig { n_neighbors: 64, ..Default::default() },
+        )
+        .unwrap();
+        for (g, w) in resp.values.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn per_request_area_override_changes_alpha_regime() {
+        let c = cpu_coordinator();
+        let pts = workload::uniform_square(400, 10.0, 83);
+        c.register_dataset("d", pts.clone()).unwrap();
+        let queries = workload::uniform_square(30, 10.0, 84).xy();
+        let lo = c
+            .interpolate(
+                InterpolationRequest::new("d", queries.clone())
+                    .with_options(QueryOptions::new().area(1e9)),
+            )
+            .unwrap();
+        let hi = c
+            .interpolate(
+                InterpolationRequest::new("d", queries.clone())
+                    .with_options(QueryOptions::new().area(1e-9)),
+            )
+            .unwrap();
+        assert_eq!(lo.options.area, Some(1e9));
+        assert_eq!(hi.options.area, Some(1e-9));
+        let diff: f64 = lo
+            .values
+            .iter()
+            .zip(&hi.values)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 1e-9, "area override had no effect");
+        // each matches its serial reference
+        for (resp, area) in [(&lo, 1e9), (&hi, 1e-9)] {
+            let mut p = AidwParams::default();
+            p.area = Some(area);
+            let want = crate::aidw::serial::aidw_serial(&pts, &queries, &p);
+            for (g, w) in resp.values.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-9, "{g} vs {w}");
+            }
         }
     }
 }

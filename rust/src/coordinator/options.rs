@@ -1,0 +1,306 @@
+//! Per-request query options — the knobs of the paper's two-stage
+//! pipeline, settable on every request instead of frozen at coordinator
+//! construction.
+//!
+//! [`QueryOptions`] is the *partial* form clients build: every field is
+//! optional and defaults to the coordinator's [`super::CoordinatorConfig`].
+//! At submit time the coordinator resolves it against its config into a
+//! [`ResolvedOptions`] — the fully-concrete form that (a) keys batch
+//! admission (only option-identical jobs may share a grid-kNN sweep and a
+//! stage-2 tensor), (b) drives both pipeline stages, and (c) is echoed on
+//! the [`super::InterpolationResponse`] so clients can audit what actually
+//! ran.
+//!
+//! ```
+//! use aidw::coordinator::QueryOptions;
+//! use aidw::knn::grid_knn::RingRule;
+//!
+//! let opts = QueryOptions::new()
+//!     .k(16)
+//!     .ring_rule(RingRule::PaperPlusOne)
+//!     .local_neighbors(64)
+//!     .alpha_levels([0.5, 1.0, 2.0, 3.0, 4.0]);
+//! assert_eq!(opts.k, Some(16));
+//! ```
+
+use crate::aidw::params::AidwParams;
+use crate::error::{Error, Result};
+use crate::knn::grid_knn::RingRule;
+use crate::runtime::Variant;
+
+use super::CoordinatorConfig;
+
+/// Stage-2 weighting scope override.
+///
+/// Three states matter per request: inherit the coordinator's mode
+/// (`None` in [`QueryOptions::local`]), force the paper's dense weighting
+/// over all data points (`Dense`), or restrict to the N nearest neighbors
+/// (`Nearest(n)`, extension A5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LocalMode {
+    /// Weight every data point (the paper's Eq. 1).
+    Dense,
+    /// Weight only the N nearest neighbors gathered in stage 1.
+    Nearest(usize),
+}
+
+/// Per-request overrides; unset fields fall back to the coordinator
+/// config.  Build fluently: `QueryOptions::new().k(16).area(1e4)`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct QueryOptions {
+    /// Neighbors for the spatial-pattern statistic (Eq. 3).
+    pub k: Option<usize>,
+    /// Stage-2 kernel variant (naive / tiled).
+    pub variant: Option<Variant>,
+    /// Ring-expansion termination rule for the grid kNN.
+    pub ring_rule: Option<RingRule>,
+    /// Stage-2 weighting scope (dense vs N nearest).
+    pub local: Option<LocalMode>,
+    /// The five distance-decay levels of Eq. 6.
+    pub alpha_levels: Option<[f64; 5]>,
+    /// Fuzzy-membership lower bound of Eq. 5.
+    pub r_min: Option<f64>,
+    /// Fuzzy-membership upper bound of Eq. 5.
+    pub r_max: Option<f64>,
+    /// Explicit study-region area `A` of Eq. 2 (default: dataset bounds).
+    pub area: Option<f64>,
+}
+
+impl QueryOptions {
+    /// All-defaults options (inherit everything from the coordinator).
+    pub fn new() -> QueryOptions {
+        QueryOptions::default()
+    }
+
+    /// Override k for the Eq.-3 statistic.
+    pub fn k(mut self, k: usize) -> Self {
+        self.k = Some(k);
+        self
+    }
+
+    /// Override the stage-2 kernel variant.
+    pub fn variant(mut self, v: Variant) -> Self {
+        self.variant = Some(v);
+        self
+    }
+
+    /// Override the kNN ring-expansion rule.
+    pub fn ring_rule(mut self, rule: RingRule) -> Self {
+        self.ring_rule = Some(rule);
+        self
+    }
+
+    /// Restrict stage 2 to the `n` nearest neighbors (extension A5).
+    pub fn local_neighbors(mut self, n: usize) -> Self {
+        self.local = Some(LocalMode::Nearest(n));
+        self
+    }
+
+    /// Force the paper's dense weighting even when the coordinator
+    /// defaults to local mode.
+    pub fn dense(mut self) -> Self {
+        self.local = Some(LocalMode::Dense);
+        self
+    }
+
+    /// Override the five alpha decay levels of Eq. 6.
+    pub fn alpha_levels(mut self, levels: [f64; 5]) -> Self {
+        self.alpha_levels = Some(levels);
+        self
+    }
+
+    /// Override the fuzzy-membership bounds of Eq. 5.
+    pub fn r_bounds(mut self, r_min: f64, r_max: f64) -> Self {
+        self.r_min = Some(r_min);
+        self.r_max = Some(r_max);
+        self
+    }
+
+    /// Override the study-region area of Eq. 2.
+    pub fn area(mut self, area: f64) -> Self {
+        self.area = Some(area);
+        self
+    }
+
+    /// True when no field overrides the coordinator defaults.
+    pub fn is_default(&self) -> bool {
+        *self == QueryOptions::default()
+    }
+
+    /// Resolve against coordinator defaults into the concrete form.
+    pub fn resolve(&self, config: &CoordinatorConfig) -> ResolvedOptions {
+        ResolvedOptions {
+            k: self.k.unwrap_or(config.params.k),
+            variant: self.variant.unwrap_or(config.default_variant),
+            ring_rule: self.ring_rule.unwrap_or(config.ring_rule),
+            local_neighbors: match self.local {
+                None => config.local_neighbors,
+                Some(LocalMode::Dense) => None,
+                Some(LocalMode::Nearest(n)) => Some(n),
+            },
+            alpha_levels: self.alpha_levels.unwrap_or(config.params.alpha_levels),
+            r_min: self.r_min.unwrap_or(config.params.r_min),
+            r_max: self.r_max.unwrap_or(config.params.r_max),
+            area: self.area.or(config.params.area),
+        }
+    }
+}
+
+/// Fully-resolved per-batch options: every knob concrete.  Doubles as the
+/// batch-admission key (jobs sharing a batch must be `==` here) and the
+/// audit record echoed on responses.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResolvedOptions {
+    /// Clamped to the dataset size at execution time; the response echo
+    /// reports the clamped value.
+    pub k: usize,
+    pub variant: Variant,
+    pub ring_rule: RingRule,
+    /// `Some(n)` = stage 2 over the n nearest neighbors; `None` = dense.
+    pub local_neighbors: Option<usize>,
+    pub alpha_levels: [f64; 5],
+    pub r_min: f64,
+    pub r_max: f64,
+    /// `None` = the dataset's own bounding-box area (substituted in the
+    /// response echo once the dataset is known).
+    pub area: Option<f64>,
+}
+
+impl Default for ResolvedOptions {
+    fn default() -> Self {
+        let p = AidwParams::default();
+        ResolvedOptions {
+            k: p.k,
+            variant: Variant::default(),
+            ring_rule: RingRule::default(),
+            local_neighbors: None,
+            alpha_levels: p.alpha_levels,
+            r_min: p.r_min,
+            r_max: p.r_max,
+            area: None,
+        }
+    }
+}
+
+impl ResolvedOptions {
+    /// The AIDW parameter block these options describe.
+    pub fn params(&self) -> AidwParams {
+        AidwParams {
+            k: self.k,
+            alpha_levels: self.alpha_levels,
+            r_min: self.r_min,
+            r_max: self.r_max,
+            area: self.area,
+        }
+    }
+
+    /// Fail fast on nonsense before any pipeline thread sees the job
+    /// (`AidwParams::validate` semantics plus the local-mode knob).
+    pub fn validate(&self) -> Result<()> {
+        self.params().validate().map_err(Error::InvalidArgument)?;
+        if self.local_neighbors == Some(0) {
+            return Err(Error::InvalidArgument(
+                "local_neighbors must be >= 1 (or unset for dense weighting)".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn config() -> CoordinatorConfig {
+        CoordinatorConfig::default()
+    }
+
+    #[test]
+    fn empty_options_resolve_to_config() {
+        let cfg = config();
+        let r = QueryOptions::new().resolve(&cfg);
+        assert_eq!(r, ResolvedOptions::default());
+        assert!(QueryOptions::new().is_default());
+        assert!(r.validate().is_ok());
+    }
+
+    #[test]
+    fn builder_overrides_stick() {
+        let cfg = config();
+        let r = QueryOptions::new()
+            .k(17)
+            .variant(Variant::Naive)
+            .ring_rule(RingRule::PaperPlusOne)
+            .local_neighbors(64)
+            .alpha_levels([1.0, 2.0, 3.0, 4.0, 5.0])
+            .r_bounds(0.5, 1.5)
+            .area(123.0)
+            .resolve(&cfg);
+        assert_eq!(r.k, 17);
+        assert_eq!(r.variant, Variant::Naive);
+        assert_eq!(r.ring_rule, RingRule::PaperPlusOne);
+        assert_eq!(r.local_neighbors, Some(64));
+        assert_eq!(r.alpha_levels, [1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!((r.r_min, r.r_max), (0.5, 1.5));
+        assert_eq!(r.area, Some(123.0));
+        assert!(r.validate().is_ok());
+    }
+
+    #[test]
+    fn dense_override_beats_config_local_mode() {
+        let mut cfg = config();
+        cfg.local_neighbors = Some(48);
+        let inherit = QueryOptions::new().resolve(&cfg);
+        assert_eq!(inherit.local_neighbors, Some(48));
+        let dense = QueryOptions::new().dense().resolve(&cfg);
+        assert_eq!(dense.local_neighbors, None);
+        let narrower = QueryOptions::new().local_neighbors(16).resolve(&cfg);
+        assert_eq!(narrower.local_neighbors, Some(16));
+    }
+
+    #[test]
+    fn validation_rejects_bad_overrides() {
+        let cfg = config();
+        assert!(QueryOptions::new().k(0).resolve(&cfg).validate().is_err());
+        assert!(QueryOptions::new()
+            .r_bounds(2.0, 1.0)
+            .resolve(&cfg)
+            .validate()
+            .is_err());
+        assert!(QueryOptions::new()
+            .alpha_levels([0.5, 1.0, -2.0, 3.0, 4.0])
+            .resolve(&cfg)
+            .validate()
+            .is_err());
+        assert!(QueryOptions::new().area(0.0).resolve(&cfg).validate().is_err());
+        let mut zero_local = QueryOptions::new();
+        zero_local.local = Some(LocalMode::Nearest(0));
+        assert!(zero_local.resolve(&cfg).validate().is_err());
+    }
+
+    #[test]
+    fn partial_r_bound_override_validates_against_config_default() {
+        // r_min alone, above the config's r_max = 2.0 -> invalid
+        let cfg = config();
+        let mut o = QueryOptions::new();
+        o.r_min = Some(3.0);
+        assert!(o.resolve(&cfg).validate().is_err());
+        o.r_min = Some(1.0);
+        assert!(o.resolve(&cfg).validate().is_ok());
+    }
+
+    #[test]
+    fn resolved_equality_is_the_batch_key() {
+        let cfg = config();
+        // explicit default == inherited default (they may share a batch)
+        let explicit = QueryOptions::new().k(cfg.params.k).resolve(&cfg);
+        let inherited = QueryOptions::new().resolve(&cfg);
+        assert_eq!(explicit, inherited);
+        // any differing knob separates
+        assert_ne!(QueryOptions::new().k(11).resolve(&cfg), inherited);
+        assert_ne!(
+            QueryOptions::new().ring_rule(RingRule::PaperPlusOne).resolve(&cfg),
+            inherited
+        );
+    }
+}

@@ -2,23 +2,56 @@
 
 use std::sync::mpsc;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::runtime::Variant;
 
-/// One interpolation request: queries against a registered dataset.
+use super::options::{QueryOptions, ResolvedOptions};
+
+/// One interpolation request: queries against a registered dataset, plus
+/// per-request [`QueryOptions`] (builder style — the public fields of the
+/// old API are gone).
+///
+/// ```
+/// use aidw::coordinator::InterpolationRequest;
+/// use aidw::coordinator::QueryOptions;
+///
+/// let req = InterpolationRequest::new("survey", vec![(1.0, 2.0)])
+///     .with_options(QueryOptions::new().k(16).local_neighbors(64));
+/// assert_eq!(req.options.k, Some(16));
+/// ```
 #[derive(Debug, Clone)]
 pub struct InterpolationRequest {
     pub dataset: String,
     pub queries: Vec<(f64, f64)>,
-    /// Override the coordinator's default kernel variant.
-    pub variant: Option<Variant>,
-    /// Override k for this request (must be <= compiled k-buffer).
-    pub k: Option<usize>,
+    /// Per-request overrides; unset fields inherit the coordinator config.
+    pub options: QueryOptions,
 }
 
 impl InterpolationRequest {
     pub fn new(dataset: &str, queries: Vec<(f64, f64)>) -> Self {
-        InterpolationRequest { dataset: dataset.to_string(), queries, variant: None, k: None }
+        InterpolationRequest {
+            dataset: dataset.to_string(),
+            queries,
+            options: QueryOptions::default(),
+        }
+    }
+
+    /// Replace the whole options block.
+    pub fn with_options(mut self, options: QueryOptions) -> Self {
+        self.options = options;
+        self
+    }
+
+    /// Fluent shorthand for [`QueryOptions::k`].
+    pub fn with_k(mut self, k: usize) -> Self {
+        self.options.k = Some(k);
+        self
+    }
+
+    /// Fluent shorthand for [`QueryOptions::variant`].
+    pub fn with_variant(mut self, v: Variant) -> Self {
+        self.options.variant = Some(v);
+        self
     }
 }
 
@@ -34,6 +67,9 @@ pub struct InterpolationResponse {
     pub batch_queries: usize,
     /// Which engine ran stage 2.
     pub backend: Backend,
+    /// The fully-resolved options this request actually ran with (the
+    /// audit record: config defaults substituted, dataset area filled in).
+    pub options: ResolvedOptions,
 }
 
 /// Stage-2 execution backend.
@@ -45,9 +81,12 @@ pub enum Backend {
     CpuFallback,
 }
 
-/// In-flight job: request + response channel.
+/// In-flight job: request + resolved options + response channel.
 pub(crate) struct Job {
     pub request: InterpolationRequest,
+    /// Options resolved against the coordinator config at submit time —
+    /// the batch-admission key.
+    pub resolved: ResolvedOptions,
     pub respond: mpsc::Sender<Result<InterpolationResponse>>,
     pub enqueued: std::time::Instant,
 }
@@ -66,7 +105,46 @@ impl Ticket {
     }
 
     /// Poll without blocking.
+    ///
+    /// `None` means *not ready yet — poll again*.  A dropped job (the
+    /// coordinator shut down or panicked before responding) surfaces as
+    /// `Some(Err(Unavailable))` instead of hanging the poller forever.
     pub fn try_wait(&self) -> Option<Result<InterpolationResponse>> {
-        self.rx.try_recv().ok()
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(Error::Unavailable(
+                "coordinator dropped the job".into(),
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_sets_options() {
+        let req = InterpolationRequest::new("d", vec![(0.0, 0.0)])
+            .with_k(5)
+            .with_variant(Variant::Naive);
+        assert_eq!(req.options.k, Some(5));
+        assert_eq!(req.options.variant, Some(Variant::Naive));
+        assert_eq!(req.dataset, "d");
+    }
+
+    #[test]
+    fn try_wait_distinguishes_pending_from_dropped() {
+        // pending: sender alive, nothing sent
+        let (tx, rx) = mpsc::channel::<Result<InterpolationResponse>>();
+        let t = Ticket { rx };
+        assert!(t.try_wait().is_none());
+        // dropped: sender gone without a response
+        drop(tx);
+        match t.try_wait() {
+            Some(Err(Error::Unavailable(_))) => {}
+            other => panic!("expected Unavailable, got {:?}", other.map(|r| r.is_ok())),
+        }
     }
 }

@@ -1,45 +1,72 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled Display — no derive crates in the
+//! offline vendor set).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the aidw library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Artifact directory missing or malformed (run `make artifacts`).
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// The PJRT layer (xla crate) failed.
-    #[error("xla/pjrt error: {0}")]
     Xla(String),
 
     /// A request referenced an unknown dataset.
-    #[error("unknown dataset: {0}")]
     UnknownDataset(String),
 
     /// Invalid request or configuration parameters.
-    #[error("invalid argument: {0}")]
     InvalidArgument(String),
 
     /// kNN search cannot satisfy k (fewer than k data points).
-    #[error("k={k} exceeds data points available ({available})")]
     InsufficientData { k: usize, available: usize },
 
     /// JSON parse error (service protocol / manifest).
-    #[error("json error at byte {offset}: {message}")]
     Json { offset: usize, message: String },
 
     /// Service-level failure (bind, connect, protocol).
-    #[error("service error: {0}")]
     Service(String),
 
-    /// The coordinator is shutting down / queue closed.
-    #[error("coordinator unavailable: {0}")]
+    /// The coordinator is shutting down / queue closed / job dropped.
     Unavailable(String),
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Xla(m) => write!(f, "xla/pjrt error: {m}"),
+            Error::UnknownDataset(m) => write!(f, "unknown dataset: {m}"),
+            Error::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
+            Error::InsufficientData { k, available } => {
+                write!(f, "k={k} exceeds data points available ({available})")
+            }
+            Error::Json { offset, message } => {
+                write!(f, "json error at byte {offset}: {message}")
+            }
+            Error::Service(m) => write!(f, "service error: {m}"),
+            Error::Unavailable(m) => write!(f, "coordinator unavailable: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {

@@ -38,6 +38,29 @@ pub enum RingRule {
     PaperPlusOne,
 }
 
+impl RingRule {
+    /// Wire/CLI tag (protocol v2 `ring` field).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            RingRule::Exact => "exact",
+            RingRule::PaperPlusOne => "paper+1",
+        }
+    }
+}
+
+impl std::str::FromStr for RingRule {
+    type Err = crate::error::Error;
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "exact" => Ok(RingRule::Exact),
+            "paper+1" | "paper_plus_one" => Ok(RingRule::PaperPlusOne),
+            other => Err(crate::error::Error::InvalidArgument(format!(
+                "unknown ring rule '{other}' (expected 'exact' or 'paper+1')"
+            ))),
+        }
+    }
+}
+
 /// Grid kNN configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct GridKnnConfig {

@@ -20,21 +20,32 @@
 //!
 //! ## Quick start
 //!
+//! One facade — [`session::AidwSession`] — covers every execution path
+//! (serial reference, pure-rust pipeline, serving coordinator), and one
+//! options type — [`coordinator::QueryOptions`] — tunes every request:
+//!
 //! ```no_run
 //! use aidw::prelude::*;
 //!
 //! // 1000 scattered data points in a 100x100 region
 //! let pts = workload::uniform_square(1000, 100.0, 42);
-//! let queries = workload::uniform_square(500, 100.0, 7);
+//! let queries = workload::uniform_square(500, 100.0, 7).xy();
 //!
-//! // pure-rust improved pipeline (grid kNN + adaptive IDW)
-//! let params = AidwParams::default();
-//! let out = pipeline::interpolate_improved(&pts, &queries.xy(), &params);
-//! assert_eq!(out.len(), 500);
+//! let session = AidwSession::in_process(); // pure-rust improved pipeline
+//! session.register("survey", pts).unwrap();
+//!
+//! // per-request tuning: k, ring rule, local mode, alpha levels, ...
+//! let z = session
+//!     .interpolate_values("survey", &queries, &QueryOptions::new().k(16))
+//!     .unwrap();
+//! assert_eq!(z.len(), 500);
 //! ```
 //!
-//! The PJRT-backed path (paper's GPU analog) goes through
-//! [`coordinator::Coordinator`]; see `examples/quickstart.rs`.
+//! The serving path (dynamic batching, PJRT artifacts when present, the
+//! TCP protocol) is `AidwSession::serving(CoordinatorConfig::default())`
+//! or the [`coordinator::Coordinator`] directly; every option above is
+//! also settable per request over the wire (protocol v2, see
+//! [`service::protocol`]).  See `examples/quickstart.rs`.
 
 pub mod aidw;
 pub mod benchlib;
@@ -53,6 +64,7 @@ pub mod raster;
 pub mod rng;
 pub mod runtime;
 pub mod service;
+pub mod session;
 pub mod workload;
 
 pub use error::{Error, Result};
@@ -60,11 +72,15 @@ pub use error::{Error, Result};
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::aidw::{params::AidwParams, pipeline, serial};
-    pub use crate::coordinator::{Coordinator, CoordinatorConfig, Variant};
+    pub use crate::coordinator::{
+        Coordinator, CoordinatorConfig, InterpolationRequest, LocalMode, QueryOptions,
+        ResolvedOptions, Variant,
+    };
     pub use crate::error::{Error, Result};
     pub use crate::geom::{Aabb, PointSet};
     pub use crate::grid::EvenGrid;
     pub use crate::knn::{brute, grid_knn};
     pub use crate::runtime::Engine;
+    pub use crate::session::{AidwSession, SessionReply};
     pub use crate::workload;
 }

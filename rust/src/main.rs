@@ -1,22 +1,28 @@
 //! `aidw` — CLI for the AIDW interpolation service.
 //!
 //! Subcommands:
-//!   serve        start the TCP JSON service
+//!   serve        start the TCP JSON service (protocol v2)
 //!   interpolate  one-shot interpolation over a generated/loaded workload
 //!   info         artifact + engine diagnostics
 //!   generate     write a synthetic workload to CSV
 //!
-//! Run `aidw help` for flags.
+//! Run `aidw help` for flags.  Every per-request tuning knob of
+//! `QueryOptions` (k, variant, ring rule, local mode, alpha levels, fuzzy
+//! bounds, area) has a flag on `interpolate`; `serve` flags set the
+//! coordinator *defaults* that protocol-v2 clients may override per
+//! request.
 
 use std::sync::Arc;
 
 use aidw::aidw::params::AidwParams;
 use aidw::cli::Args;
-use aidw::coordinator::{Coordinator, CoordinatorConfig, EngineMode, InterpolationRequest};
+use aidw::coordinator::{CoordinatorConfig, EngineMode, QueryOptions};
 use aidw::error::{Error, Result};
 use aidw::geom::PointSet;
+use aidw::knn::grid_knn::RingRule;
 use aidw::runtime::Variant;
 use aidw::service::Server;
+use aidw::session::AidwSession;
 use aidw::workload;
 
 const HELP: &str = "\
@@ -24,16 +30,23 @@ aidw — Adaptive IDW interpolation with fast grid kNN search
        (Mei, Xu & Xu 2016; rust + JAX/Pallas AOT via PJRT)
 
 USAGE:
-  aidw serve       [--addr 127.0.0.1:7878] [--cpu-only] [--k 10] [--local N]
-                   [--snapshots DIR]
-  aidw interpolate [--data N] [--queries N] [--side 100] [--seed 42]
-                   [--variant naive|tiled] [--k 10] [--cpu-only]
+  aidw serve       [--addr 127.0.0.1:7878] [--cpu-only] [--k 10]
+                   [--ring exact|paper+1] [--local N] [--snapshots DIR]
+  aidw interpolate [--engine serving|pipeline|serial] [--cpu-only]
+                   [--data N] [--queries N] [--side 100] [--seed 42]
+                   [--variant naive|tiled] [--k 10] [--ring exact|paper+1]
+                   [--local N] [--alpha-levels 0.5,1,2,3,4]
+                   [--rmin 0] [--rmax 2] [--area A]
                    [--dist uniform|clustered|terrain] [--file pts.csv]
                    [--out out.csv]
   aidw generate    [--n N] [--side 100] [--seed 42]
                    [--dist uniform|clustered|terrain|sensors] --out file.csv
   aidw info
   aidw help
+
+`serve` flags set coordinator defaults; `interpolate` flags are
+per-request QueryOptions (protocol v2 exposes the same fields on the
+wire).  `--local 0` forces dense weighting.
 ";
 
 fn main() {
@@ -64,34 +77,89 @@ fn run(argv: &[String]) -> Result<()> {
     }
 }
 
-fn coordinator_from(args: &Args) -> Result<Coordinator> {
+/// Coordinator defaults from `serve`-style flags.
+fn config_from(args: &Args) -> Result<CoordinatorConfig> {
     let mut cfg = CoordinatorConfig::default();
     if args.has("cpu-only") {
         cfg.engine_mode = EngineMode::CpuOnly;
     }
     cfg.params = AidwParams { k: args.get_usize("k", 10)?, ..Default::default() };
+    if let Some(r) = args.get("ring") {
+        cfg.ring_rule = r.parse::<RingRule>()?;
+    }
     // --local N: A5 extension — stage 2 over N nearest neighbors only
     if let Some(n) = args.get("local") {
         let n: usize = n
             .parse()
             .map_err(|_| Error::InvalidArgument("--local expects an integer".into()))?;
-        cfg.local_neighbors = Some(n);
+        if n > 0 {
+            cfg.local_neighbors = Some(n);
+        }
     }
-    Coordinator::new(cfg)
+    Ok(cfg)
+}
+
+/// Per-request QueryOptions from `interpolate`-style flags.
+fn options_from(args: &Args) -> Result<QueryOptions> {
+    let mut o = QueryOptions::new();
+    if let Some(v) = args.get("variant") {
+        o = o.variant(v.parse::<Variant>()?);
+    }
+    if args.get("k").is_some() {
+        o = o.k(args.get_usize("k", 10)?);
+    }
+    if let Some(r) = args.get("ring") {
+        o = o.ring_rule(r.parse::<RingRule>()?);
+    }
+    if let Some(n) = args.get("local") {
+        let n: usize = n
+            .parse()
+            .map_err(|_| Error::InvalidArgument("--local expects an integer".into()))?;
+        o = if n == 0 { o.dense() } else { o.local_neighbors(n) };
+    }
+    if let Some(levels) = args.get_f64_list("alpha-levels")? {
+        if levels.len() != 5 {
+            return Err(Error::InvalidArgument(format!(
+                "--alpha-levels expects 5 values, got {}",
+                levels.len()
+            )));
+        }
+        o = o.alpha_levels([levels[0], levels[1], levels[2], levels[3], levels[4]]);
+    }
+    // set each bound only when its flag is present, so a lone --rmin
+    // doesn't turn the library's r_max default into an explicit override
+    if args.get("rmin").is_some() {
+        o.r_min = Some(args.get_f64("rmin", 0.0)?);
+    }
+    if args.get("rmax").is_some() {
+        o.r_max = Some(args.get_f64("rmax", 0.0)?);
+    }
+    if args.get("area").is_some() {
+        o = o.area(args.get_f64("area", 0.0)?);
+    }
+    Ok(o)
 }
 
 fn serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7878");
-    let coord = Arc::new(coordinator_from(args)?);
-    println!("aidw service: backend={:?}", coord.backend());
+    let session = AidwSession::serving(config_from(args)?)?;
+    println!("aidw service: backend={}", session.backend_label());
     // --snapshots DIR: restore persisted datasets at startup
     if let Some(dir) = args.get("snapshots") {
-        let n = coord.load_datasets(std::path::Path::new(dir))?;
+        let n = session
+            .coordinator()
+            .expect("serving session")
+            .load_datasets(std::path::Path::new(dir))?;
         println!("restored {n} dataset(s) from {dir}");
     }
+    // hand the coordinator over to the TCP server
+    let coord = match session.into_coordinator() {
+        Some(c) => Arc::new(c),
+        None => unreachable!("serving session always has a coordinator"),
+    };
     let server = Server::start(coord, &addr)?;
     println!("listening on {}", server.addr());
-    println!("protocol: newline-delimited JSON; see rust/src/service/protocol.rs");
+    println!("protocol v2: newline-delimited JSON; see rust/src/service/protocol.rs");
     // serve until killed
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -124,30 +192,50 @@ fn interpolate(args: &Args) -> Result<()> {
     let side = args.get_f64("side", 100.0)?;
     let seed = args.get_usize("seed", 42)? as u64;
     let dist = args.get_or("dist", "uniform");
-    let variant: Variant = args.get_or("variant", "tiled").parse()?;
 
     let data = load_or_make(args, n_data, side, seed)?;
     let n_data = data.len();
     let queries = workload::uniform_square(n_queries, side, seed + 1).xy();
 
-    let coord = coordinator_from(args)?;
+    // one facade, three engines: per-request options are identical across
+    // them, so --engine switches the execution path without rewiring
+    let session = match args.get_or("engine", "serving").as_str() {
+        "serving" => AidwSession::serving(config_from(args)?)?,
+        "pipeline" => AidwSession::in_process(),
+        "serial" => AidwSession::serial(),
+        other => {
+            return Err(Error::InvalidArgument(format!(
+                "unknown engine '{other}' (serving|pipeline|serial)"
+            )))
+        }
+    };
+    let options = options_from(args)?;
     println!(
-        "backend={:?}  data={}  queries={}  dist={}  variant={:?}",
-        coord.backend(),
+        "backend={}  data={}  queries={}  dist={}",
+        session.backend_label(),
         n_data,
         n_queries,
-        dist,
-        variant
+        dist
     );
-    coord.register_dataset("cli", data)?;
+    session.register("cli", data)?;
     let t0 = std::time::Instant::now();
-    let mut req = InterpolationRequest::new("cli", queries.clone());
-    req.variant = Some(variant);
-    let resp = coord.interpolate(req)?;
+    let reply = session.interpolate("cli", &queries, &options)?;
     let total = t0.elapsed().as_secs_f64();
+    let o = &reply.options;
+    println!(
+        "ran with: k={} variant={} ring={} local={} alpha_levels={:?}",
+        o.k,
+        o.variant.tag(),
+        o.ring_rule.tag(),
+        match o.local_neighbors {
+            Some(n) => format!("nearest-{n}"),
+            None => "dense".into(),
+        },
+        o.alpha_levels,
+    );
     println!(
         "done in {:.3}s  (stage1 kNN {:.3}s, stage2 interp {:.3}s)",
-        total, resp.knn_s, resp.interp_s
+        total, reply.knn_s, reply.interp_s
     );
     println!(
         "throughput: {:.0} queries/s",
@@ -156,14 +244,14 @@ fn interpolate(args: &Args) -> Result<()> {
 
     if let Some(out) = args.get("out") {
         let mut csv = String::from("x,y,z\n");
-        for (q, z) in queries.iter().zip(&resp.values) {
+        for (q, z) in queries.iter().zip(&reply.values) {
             csv.push_str(&format!("{},{},{}\n", q.0, q.1, z));
         }
         std::fs::write(out, csv)?;
         println!("wrote {out}");
     } else {
-        let show = resp.values.len().min(5);
-        println!("first {show} predictions: {:?}", &resp.values[..show]);
+        let show = reply.values.len().min(5);
+        println!("first {show} predictions: {:?}", &reply.values[..show]);
     }
     Ok(())
 }

@@ -1,9 +1,11 @@
-//! TCP interpolation service: newline-delimited JSON over a
-//! [`crate::coordinator::Coordinator`], plus the matching blocking client.
+//! TCP interpolation service: newline-delimited JSON (protocol v2, see
+//! [`protocol`]) over a [`crate::coordinator::Coordinator`], plus the
+//! matching blocking client.
 //!
 //! One OS thread per connection (std-only; no tokio offline).  All heavy
 //! work is delegated to the coordinator's pipeline, so connection threads
-//! only parse/serialize.
+//! only parse/serialize.  Per-request tuning rides on the `interpolate`
+//! op's option fields and flows straight into [`QueryOptions`].
 
 pub mod protocol;
 
@@ -12,7 +14,7 @@ use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use crate::coordinator::{Coordinator, InterpolationRequest};
+use crate::coordinator::{Coordinator, InterpolationRequest, QueryOptions, ResolvedOptions};
 use crate::error::{Error, Result};
 use crate::geom::PointSet;
 use crate::jsonio::Json;
@@ -95,7 +97,8 @@ fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
             continue;
         }
         let reply = match Request::decode(&line) {
-            Err(e) => protocol::err_line(&e.to_string()),
+            // anything unparseable is the client's fault: bad_request
+            Err(e) => protocol::err_line("bad_request", &e.to_string()),
             Ok(req) => dispatch(&coord, req),
         };
         writer.write_all(reply.as_bytes())?;
@@ -112,34 +115,45 @@ fn dispatch(coord: &Coordinator, req: Request) -> String {
             let pts = PointSet::from_soa(xs, ys, zs);
             match coord.register_dataset(&dataset, pts) {
                 Ok(()) => protocol::ok_empty(),
-                Err(e) => protocol::err_line(&e.to_string()),
+                Err(e) => protocol::err_for(&e),
             }
         }
-        Request::Interpolate { dataset, qx, qy, variant, k } => {
+        Request::Interpolate { dataset, qx, qy, options } => {
             let queries: Vec<(f64, f64)> = qx.into_iter().zip(qy).collect();
-            let mut r = InterpolationRequest::new(&dataset, queries);
-            r.variant = variant;
-            r.k = k;
-            match coord.interpolate(r) {
+            let req = InterpolationRequest::new(&dataset, queries).with_options(options);
+            match coord.interpolate(req) {
                 Ok(resp) => protocol::ok_values(
                     &resp.values,
                     resp.knn_s,
                     resp.interp_s,
                     resp.batch_queries,
+                    &resp.options,
                 ),
-                Err(e) => protocol::err_line(&e.to_string()),
+                Err(e) => protocol::err_for(&e),
             }
         }
         Request::Drop { dataset } => {
             if coord.drop_dataset(&dataset) {
                 protocol::ok_empty()
             } else {
-                protocol::err_line(&format!("unknown dataset: {dataset}"))
+                protocol::err_for(&Error::UnknownDataset(dataset))
             }
         }
         Request::Datasets => protocol::ok_names(&coord.datasets()),
         Request::Metrics => protocol::ok_metrics(&coord.metrics()),
     }
+}
+
+/// A successful `interpolate` reply, decoded (client side).
+#[derive(Debug, Clone)]
+pub struct InterpolationReply {
+    pub values: Vec<f64>,
+    pub knn_s: f64,
+    pub interp_s: f64,
+    pub batch_queries: usize,
+    /// The server's fully-resolved options audit (None against a v1
+    /// server that doesn't echo them).
+    pub options: Option<ResolvedOptions>,
 }
 
 /// Blocking client for the JSON-line protocol.
@@ -171,9 +185,25 @@ impl Client {
         }
         let v = Json::parse(reply.trim_end())?;
         if v.get("ok").as_bool() != Some(true) {
-            return Err(Error::Service(
-                v.get("error").as_str().unwrap_or("unknown error").to_string(),
-            ));
+            let msg = v.get("error").as_str().unwrap_or("unknown error");
+            // map the v2 machine code back onto typed errors, stripping
+            // the Display prefix the server baked into the message so the
+            // variant doesn't re-add it
+            fn strip(msg: &str, prefix: &str) -> String {
+                msg.strip_prefix(prefix).unwrap_or(msg).to_string()
+            }
+            return Err(match v.get("code").as_str() {
+                Some("unknown_dataset") => {
+                    Error::UnknownDataset(strip(msg, "unknown dataset: "))
+                }
+                Some("invalid_argument") => {
+                    Error::InvalidArgument(strip(msg, "invalid argument: "))
+                }
+                Some("unavailable") => {
+                    Error::Unavailable(strip(msg, "coordinator unavailable: "))
+                }
+                _ => Error::Service(msg.to_string()),
+            });
         }
         Ok(v)
     }
@@ -194,16 +224,34 @@ impl Client {
         .map(|_| ())
     }
 
-    /// Interpolate; returns predicted values.
+    /// Interpolate with server-default options; returns predicted values.
     pub fn interpolate(&mut self, dataset: &str, queries: &[(f64, f64)]) -> Result<Vec<f64>> {
+        Ok(self
+            .interpolate_with(dataset, queries, QueryOptions::default())?
+            .values)
+    }
+
+    /// Interpolate with per-request [`QueryOptions`] (protocol v2);
+    /// returns the full reply including the resolved-options audit.
+    pub fn interpolate_with(
+        &mut self,
+        dataset: &str,
+        queries: &[(f64, f64)],
+        options: QueryOptions,
+    ) -> Result<InterpolationReply> {
         let v = self.call(&Request::Interpolate {
             dataset: dataset.to_string(),
             qx: queries.iter().map(|q| q.0).collect(),
             qy: queries.iter().map(|q| q.1).collect(),
-            variant: None,
-            k: None,
+            options,
         })?;
-        v.get("z").to_f64_vec()
+        Ok(InterpolationReply {
+            values: v.get("z").to_f64_vec()?,
+            knn_s: v.get("knn_s").as_f64().unwrap_or(0.0),
+            interp_s: v.get("interp_s").as_f64().unwrap_or(0.0),
+            batch_queries: v.get("batch_queries").as_usize().unwrap_or(0),
+            options: protocol::options_from_json(v.get("options")),
+        })
     }
 
     /// List datasets.

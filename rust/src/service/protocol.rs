@@ -1,20 +1,52 @@
-//! Wire protocol: newline-delimited JSON over TCP.
+//! Wire protocol **v2**: newline-delimited JSON over TCP.
 //!
 //! Requests:
 //! ```json
 //! {"op":"ping"}
 //! {"op":"register","dataset":"d","xs":[..],"ys":[..],"zs":[..]}
 //! {"op":"interpolate","dataset":"d","qx":[..],"qy":[..],
-//!  "variant":"tiled","k":10}
+//!  "variant":"tiled","k":10,
+//!  "ring":"exact","local_n":64,"alpha_levels":[0.5,1,2,3,4],
+//!  "r_min":0.0,"r_max":2.0,"area":1e4}
 //! {"op":"drop","dataset":"d"}
 //! {"op":"datasets"}
 //! {"op":"metrics"}
 //! ```
-//! Responses: `{"ok":true, ...}` or `{"ok":false,"error":"..."}`.
+//!
+//! Every `interpolate` tuning field is optional and defaults to the
+//! serving coordinator's configuration ([`QueryOptions`] semantics):
+//!
+//! * `k` — neighbors for the Eq.-3 spatial-pattern statistic (v1);
+//! * `variant` — stage-2 kernel, `"naive"` or `"tiled"` (v1);
+//! * `ring` — kNN ring-expansion rule, `"exact"` or `"paper+1"` (v2);
+//! * `local_n` — stage-2 weighting scope: `n >= 1` restricts to the n
+//!   nearest neighbors, `0` forces dense weighting over all points even
+//!   when the server defaults to local mode (v2);
+//! * `alpha_levels` — the five Eq.-6 decay levels (v2);
+//! * `r_min` / `r_max` — Eq.-5 fuzzy-membership bounds (v2);
+//! * `area` — explicit Eq.-2 study-region area (v2).
+//!
+//! Responses: `{"ok":true, ...}` or
+//! `{"ok":false,"code":"<machine_code>","error":"<message>"}`.  Error
+//! codes: `bad_request` (malformed line / unknown op / bad field),
+//! `unknown_dataset`, `invalid_argument` (option validation),
+//! `unavailable` (backpressure or shutdown), `internal` (pipeline
+//! failure).  Successful `interpolate` responses echo the fully-resolved
+//! options under `"options"` so clients can audit what actually ran.
+//!
+//! **Compatibility guarantee (v1 → v2):** every v1 request line is also a
+//! valid v2 line with identical meaning (the v2 fields are strictly
+//! additive), and v2 success/error responses keep every v1 field —
+//! `error` on failures, `z`/`knn_s`/`interp_s`/`batch_queries` on
+//! interpolate — so v1 clients keep working unchanged against a v2
+//! server.  `Request::encode` emits only the fields a request actually
+//! sets, so a default-options request is byte-compatible with v1.
 
+use crate::coordinator::options::{LocalMode, QueryOptions, ResolvedOptions};
 use crate::coordinator::MetricsSnapshot;
 use crate::error::{Error, Result};
 use crate::jsonio::Json;
+use crate::knn::grid_knn::RingRule;
 use crate::runtime::Variant;
 
 /// A decoded client request.
@@ -22,7 +54,7 @@ use crate::runtime::Variant;
 pub enum Request {
     Ping,
     Register { dataset: String, xs: Vec<f64>, ys: Vec<f64>, zs: Vec<f64> },
-    Interpolate { dataset: String, qx: Vec<f64>, qy: Vec<f64>, variant: Option<Variant>, k: Option<usize> },
+    Interpolate { dataset: String, qx: Vec<f64>, qy: Vec<f64>, options: QueryOptions },
     Drop { dataset: String },
     Datasets,
     Metrics,
@@ -59,12 +91,8 @@ impl Request {
                 if qx.len() != qy.len() {
                     return Err(Error::Service("qx/qy length mismatch".into()));
                 }
-                let variant = match v.get("variant").as_str() {
-                    None => None,
-                    Some(s) => Some(s.parse::<Variant>()?),
-                };
-                let k = v.get("k").as_usize();
-                Ok(Request::Interpolate { dataset: dataset()?, qx, qy, variant, k })
+                let options = decode_options(&v)?;
+                Ok(Request::Interpolate { dataset: dataset()?, qx, qy, options })
             }
             "drop" => Ok(Request::Drop { dataset: dataset()? }),
             "datasets" => Ok(Request::Datasets),
@@ -85,19 +113,14 @@ impl Request {
                 ("zs", Json::num_array(zs)),
             ])
             .to_string(),
-            Request::Interpolate { dataset, qx, qy, variant, k } => {
+            Request::Interpolate { dataset, qx, qy, options } => {
                 let mut fields = vec![
                     ("op", Json::Str("interpolate".into())),
                     ("dataset", Json::Str(dataset.clone())),
                     ("qx", Json::num_array(qx)),
                     ("qy", Json::num_array(qy)),
                 ];
-                if let Some(v) = variant {
-                    fields.push(("variant", Json::Str(v.tag().into())));
-                }
-                if let Some(k) = k {
-                    fields.push(("k", Json::Num(*k as f64)));
-                }
+                encode_options(options, &mut fields);
                 Json::obj(fields).to_string()
             }
             Request::Drop { dataset } => Json::obj(vec![
@@ -111,18 +134,166 @@ impl Request {
     }
 }
 
-/// Server response helpers.
+/// A present-but-mistyped field is the client's error, not a silent
+/// fall-back to server defaults.
+fn opt_usize(v: &Json, key: &str) -> Result<Option<usize>> {
+    match v.get(key) {
+        Json::Null => Ok(None),
+        x => x.as_usize().map(Some).ok_or_else(|| {
+            Error::Service(format!("'{key}' must be a non-negative integer"))
+        }),
+    }
+}
+
+fn opt_f64(v: &Json, key: &str) -> Result<Option<f64>> {
+    match v.get(key) {
+        Json::Null => Ok(None),
+        x => x
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| Error::Service(format!("'{key}' must be a number"))),
+    }
+}
+
+fn opt_str<'a>(v: &'a Json, key: &str) -> Result<Option<&'a str>> {
+    match v.get(key) {
+        Json::Null => Ok(None),
+        x => x
+            .as_str()
+            .map(Some)
+            .ok_or_else(|| Error::Service(format!("'{key}' must be a string"))),
+    }
+}
+
+/// Pull the optional tuning fields of an `interpolate` op into
+/// [`QueryOptions`] (absent fields stay `None` = server default).
+fn decode_options(v: &Json) -> Result<QueryOptions> {
+    let mut o = QueryOptions::default();
+    if let Some(s) = opt_str(v, "variant")? {
+        o.variant = Some(s.parse::<Variant>()?);
+    }
+    o.k = opt_usize(v, "k")?;
+    if let Some(s) = opt_str(v, "ring")? {
+        o.ring_rule = Some(s.parse::<RingRule>()?);
+    }
+    if let Some(n) = opt_usize(v, "local_n")? {
+        o.local = Some(if n == 0 { LocalMode::Dense } else { LocalMode::Nearest(n) });
+    }
+    match v.get("alpha_levels") {
+        Json::Null => {}
+        levels => {
+            let xs = levels.to_f64_vec()?;
+            if xs.len() != 5 {
+                return Err(Error::Service(format!(
+                    "alpha_levels must have 5 entries, got {}",
+                    xs.len()
+                )));
+            }
+            o.alpha_levels = Some([xs[0], xs[1], xs[2], xs[3], xs[4]]);
+        }
+    }
+    o.r_min = opt_f64(v, "r_min")?;
+    o.r_max = opt_f64(v, "r_max")?;
+    o.area = opt_f64(v, "area")?;
+    Ok(o)
+}
+
+/// Append the set fields of [`QueryOptions`] to a JSON object under
+/// construction (unset fields are omitted — v1 byte compatibility).
+fn encode_options(o: &QueryOptions, fields: &mut Vec<(&str, Json)>) {
+    if let Some(v) = o.variant {
+        fields.push(("variant", Json::Str(v.tag().into())));
+    }
+    if let Some(k) = o.k {
+        fields.push(("k", Json::Num(k as f64)));
+    }
+    if let Some(rule) = o.ring_rule {
+        fields.push(("ring", Json::Str(rule.tag().into())));
+    }
+    if let Some(mode) = o.local {
+        let n = match mode {
+            LocalMode::Dense => 0,
+            LocalMode::Nearest(n) => n,
+        };
+        fields.push(("local_n", Json::Num(n as f64)));
+    }
+    if let Some(levels) = o.alpha_levels {
+        fields.push(("alpha_levels", Json::num_array(&levels)));
+    }
+    if let Some(r) = o.r_min {
+        fields.push(("r_min", Json::Num(r)));
+    }
+    if let Some(r) = o.r_max {
+        fields.push(("r_max", Json::Num(r)));
+    }
+    if let Some(a) = o.area {
+        fields.push(("area", Json::Num(a)));
+    }
+}
+
+/// The resolved-options audit object echoed on interpolate responses.
+pub fn options_json(o: &ResolvedOptions) -> Json {
+    let mut fields = vec![
+        ("k", Json::Num(o.k as f64)),
+        ("variant", Json::Str(o.variant.tag().into())),
+        ("ring", Json::Str(o.ring_rule.tag().into())),
+        (
+            "local_n",
+            Json::Num(o.local_neighbors.unwrap_or(0) as f64),
+        ),
+        ("alpha_levels", Json::num_array(&o.alpha_levels)),
+        ("r_min", Json::Num(o.r_min)),
+        ("r_max", Json::Num(o.r_max)),
+    ];
+    if let Some(a) = o.area {
+        fields.push(("area", Json::Num(a)));
+    }
+    Json::obj(fields)
+}
+
+/// Parse an echoed options object back (client side); `None` when absent
+/// or malformed (e.g. talking to a v1 server).
+pub fn options_from_json(v: &Json) -> Option<ResolvedOptions> {
+    let k = v.get("k").as_usize()?;
+    let variant = v.get("variant").as_str()?.parse::<Variant>().ok()?;
+    let ring_rule = v.get("ring").as_str()?.parse::<RingRule>().ok()?;
+    let local_n = v.get("local_n").as_usize()?;
+    let levels = v.get("alpha_levels").to_f64_vec().ok()?;
+    if levels.len() != 5 {
+        return None;
+    }
+    Some(ResolvedOptions {
+        k,
+        variant,
+        ring_rule,
+        local_neighbors: if local_n == 0 { None } else { Some(local_n) },
+        alpha_levels: [levels[0], levels[1], levels[2], levels[3], levels[4]],
+        r_min: v.get("r_min").as_f64()?,
+        r_max: v.get("r_max").as_f64()?,
+        area: v.get("area").as_f64(),
+    })
+}
+
+// ---- server response helpers -------------------------------------------
+
 pub fn ok_empty() -> String {
     Json::obj(vec![("ok", Json::Bool(true))]).to_string()
 }
 
-pub fn ok_values(values: &[f64], knn_s: f64, interp_s: f64, batch_queries: usize) -> String {
+pub fn ok_values(
+    values: &[f64],
+    knn_s: f64,
+    interp_s: f64,
+    batch_queries: usize,
+    options: &ResolvedOptions,
+) -> String {
     Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("z", Json::num_array(values)),
         ("knn_s", Json::Num(knn_s)),
         ("interp_s", Json::Num(interp_s)),
         ("batch_queries", Json::Num(batch_queries as f64)),
+        ("options", options_json(options)),
     ])
     .to_string()
 }
@@ -158,8 +329,30 @@ pub fn ok_metrics(m: &MetricsSnapshot) -> String {
     .to_string()
 }
 
-pub fn err_line(msg: &str) -> String {
-    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))]).to_string()
+/// The machine-readable code for an error (protocol v2).
+pub fn code_for(e: &Error) -> &'static str {
+    match e {
+        Error::UnknownDataset(_) => "unknown_dataset",
+        Error::InvalidArgument(_) | Error::InsufficientData { .. } => "invalid_argument",
+        Error::Unavailable(_) => "unavailable",
+        Error::Json { .. } => "bad_request",
+        _ => "internal",
+    }
+}
+
+/// An error line with an explicit code.
+pub fn err_line(code: &str, msg: &str) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("code", Json::Str(code.into())),
+        ("error", Json::Str(msg.into())),
+    ])
+    .to_string()
+}
+
+/// An error line for a library error (code derived from the variant).
+pub fn err_for(e: &Error) -> String {
+    err_line(code_for(e), &e.to_string())
 }
 
 #[cfg(test)]
@@ -180,15 +373,34 @@ mod tests {
                 dataset: "d".into(),
                 qx: vec![0.5],
                 qy: vec![1.5],
-                variant: Some(Variant::Tiled),
-                k: Some(5),
+                options: QueryOptions::new().variant(Variant::Tiled).k(5),
             },
             Request::Interpolate {
                 dataset: "d".into(),
                 qx: vec![],
                 qy: vec![],
-                variant: None,
-                k: None,
+                options: QueryOptions::default(),
+            },
+            // full v2 option surface
+            Request::Interpolate {
+                dataset: "d".into(),
+                qx: vec![1.0],
+                qy: vec![2.0],
+                options: QueryOptions::new()
+                    .k(7)
+                    .variant(Variant::Naive)
+                    .ring_rule(RingRule::PaperPlusOne)
+                    .local_neighbors(64)
+                    .alpha_levels([0.5, 1.0, 2.0, 3.0, 4.0])
+                    .r_bounds(0.25, 1.75)
+                    .area(1e4),
+            },
+            // forced-dense override (local_n = 0 on the wire)
+            Request::Interpolate {
+                dataset: "d".into(),
+                qx: vec![1.0],
+                qy: vec![2.0],
+                options: QueryOptions::new().dense(),
             },
             Request::Drop { dataset: "d".into() },
             Request::Datasets,
@@ -202,6 +414,42 @@ mod tests {
     }
 
     #[test]
+    fn v1_lines_still_decode_unchanged() {
+        // exact v1 client lines (as the previous protocol emitted them)
+        let cases = [
+            (r#"{"op":"ping"}"#, Request::Ping),
+            (
+                r#"{"dataset":"d","k":5,"op":"interpolate","qx":[0.5],"qy":[1.5],"variant":"tiled"}"#,
+                Request::Interpolate {
+                    dataset: "d".into(),
+                    qx: vec![0.5],
+                    qy: vec![1.5],
+                    options: QueryOptions::new().variant(Variant::Tiled).k(5),
+                },
+            ),
+            (
+                r#"{"dataset":"d","op":"interpolate","qx":[],"qy":[]}"#,
+                Request::Interpolate {
+                    dataset: "d".into(),
+                    qx: vec![],
+                    qy: vec![],
+                    options: QueryOptions::default(),
+                },
+            ),
+            (
+                r#"{"dataset":"d","op":"drop"}"#,
+                Request::Drop { dataset: "d".into() },
+            ),
+        ];
+        for (line, want) in cases {
+            let got = Request::decode(line).unwrap();
+            assert_eq!(got, want, "{line}");
+            // and the v1 subset round-trips byte-identically
+            assert_eq!(got.encode(), line, "v1 re-encode changed");
+        }
+    }
+
+    #[test]
     fn decode_rejects_bad_input() {
         assert!(Request::decode("{}").is_err());
         assert!(Request::decode(r#"{"op":"register","dataset":"d","xs":[1],"ys":[],"zs":[]}"#).is_err());
@@ -209,18 +457,68 @@ mod tests {
         assert!(Request::decode(r#"{"op":"wat"}"#).is_err());
         assert!(Request::decode("not json").is_err());
         assert!(Request::decode(r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"variant":"bogus"}"#).is_err());
+        assert!(Request::decode(r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"ring":"bogus"}"#).is_err());
+        assert!(Request::decode(r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"alpha_levels":[1,2,3]}"#).is_err());
+        // present-but-mistyped option fields must not silently fall back
+        // to server defaults
+        assert!(Request::decode(r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"k":"16"}"#).is_err());
+        assert!(Request::decode(r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"local_n":64.5}"#).is_err());
+        assert!(Request::decode(r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"r_min":"0"}"#).is_err());
+        assert!(Request::decode(r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"variant":5}"#).is_err());
+        assert!(Request::decode(r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"k":-1}"#).is_err());
     }
 
     #[test]
     fn response_lines_parse() {
-        let l = ok_values(&[1.0, 2.0], 0.1, 0.2, 64);
+        let opts = ResolvedOptions { area: Some(25.0), ..Default::default() };
+        let l = ok_values(&[1.0, 2.0], 0.1, 0.2, 64, &opts);
         let v = crate::jsonio::Json::parse(&l).unwrap();
         assert_eq!(v.get("ok").as_bool(), Some(true));
         assert_eq!(v.get("z").to_f64_vec().unwrap(), vec![1.0, 2.0]);
         assert_eq!(v.get("batch_queries").as_usize(), Some(64));
-        let e = err_line("boom");
-        let v = crate::jsonio::Json::parse(&e).unwrap();
-        assert_eq!(v.get("ok").as_bool(), Some(false));
-        assert_eq!(v.get("error").as_str(), Some("boom"));
+        // the options echo round-trips
+        let echoed = options_from_json(v.get("options")).unwrap();
+        assert_eq!(echoed, opts);
+    }
+
+    #[test]
+    fn options_echo_roundtrip_nondefault() {
+        let opts = ResolvedOptions {
+            k: 7,
+            variant: Variant::Naive,
+            ring_rule: RingRule::PaperPlusOne,
+            local_neighbors: Some(48),
+            alpha_levels: [1.0, 2.0, 3.0, 4.0, 5.0],
+            r_min: 0.25,
+            r_max: 1.75,
+            area: Some(1e4),
+        };
+        let j = options_json(&opts);
+        assert_eq!(options_from_json(&j), Some(opts));
+        // absent/garbage -> None (v1 server)
+        assert_eq!(options_from_json(&Json::Null), None);
+    }
+
+    #[test]
+    fn error_lines_carry_codes() {
+        let cases = [
+            (Error::UnknownDataset("g".into()), "unknown_dataset"),
+            (Error::InvalidArgument("k".into()), "invalid_argument"),
+            (Error::Unavailable("full".into()), "unavailable"),
+            (Error::Service("boom".into()), "internal"),
+        ];
+        for (e, want) in cases {
+            assert_eq!(code_for(&e), want);
+            let line = err_for(&e);
+            let v = crate::jsonio::Json::parse(&line).unwrap();
+            assert_eq!(v.get("ok").as_bool(), Some(false));
+            assert_eq!(v.get("code").as_str(), Some(want));
+            // v1 field retained
+            assert!(v.get("error").as_str().is_some());
+        }
+        let line = err_line("bad_request", "no");
+        let v = crate::jsonio::Json::parse(&line).unwrap();
+        assert_eq!(v.get("code").as_str(), Some("bad_request"));
+        assert_eq!(v.get("error").as_str(), Some("no"));
     }
 }

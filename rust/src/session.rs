@@ -1,0 +1,397 @@
+//! [`AidwSession`] — one facade over every execution path.
+//!
+//! The library grew four parallel entry points with four calling
+//! conventions: [`crate::aidw::serial`] (the paper's CPU baseline),
+//! [`crate::aidw::pipeline`] (pure-rust two-stage), [`crate::aidw::local`]
+//! (A5 localized weighting), and the serving
+//! [`crate::coordinator::Coordinator`].  Examples and the CLI hand-wired
+//! each.  `AidwSession` unifies them: register named datasets, then
+//! interpolate with per-request [`QueryOptions`] — the same options type
+//! the coordinator and the TCP protocol speak — and the session routes to
+//! the right implementation.
+//!
+//! ```no_run
+//! use aidw::prelude::*;
+//!
+//! let session = AidwSession::in_process();
+//! session.register("survey", workload::uniform_square(1000, 100.0, 42)).unwrap();
+//! let queries = workload::uniform_square(64, 100.0, 7).xy();
+//! let z = session
+//!     .interpolate_values("survey", &queries, &QueryOptions::new().k(16))
+//!     .unwrap();
+//! assert_eq!(z.len(), 64);
+//! ```
+//!
+//! Modes:
+//!
+//! * [`AidwSession::serial`] — single-threaded double-precision reference
+//!   (brute-force kNN; `ring_rule`/`variant` have no effect);
+//! * [`AidwSession::in_process`] — pure-rust improved pipeline on a
+//!   thread pool, honoring `ring_rule` and `local_neighbors`;
+//! * [`AidwSession::serving`] — the full coordinator (batching, PJRT
+//!   artifacts when present, metrics); identical results, plus sharing.
+//!
+//! All three produce predictions that agree to within the accuracy
+//! envelope the integration tests pin down (serial vs pipeline is exact
+//! to 1e-9 with the exact ring rule).
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::aidw::local::{interpolate_local_on, LocalConfig};
+use crate::aidw::pipeline::interpolate_improved_on;
+use crate::aidw::serial;
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, InterpolationRequest, QueryOptions, ResolvedOptions,
+};
+use crate::error::{Error, Result};
+use crate::geom::PointSet;
+use crate::pool::Pool;
+
+/// What a session interpolation ran and produced — the facade's common
+/// denominator of [`crate::coordinator::InterpolationResponse`].
+#[derive(Debug, Clone)]
+pub struct SessionReply {
+    pub values: Vec<f64>,
+    /// Stage-1 seconds (0 for the serial reference, which interleaves
+    /// the stages per query).
+    pub knn_s: f64,
+    /// Stage-2 seconds (total wall time for the serial reference).
+    pub interp_s: f64,
+    /// The fully-resolved options the run used (audit record).
+    pub options: ResolvedOptions,
+}
+
+enum Exec {
+    /// The paper's serial CPU baseline (reference numerics).
+    Serial,
+    /// Pure-rust improved pipeline on an in-process pool.
+    Pipeline(Pool),
+    /// Full serving coordinator.
+    Serving(Coordinator),
+}
+
+/// One facade over serial / pipeline / local / coordinator execution.
+/// See module docs.
+pub struct AidwSession {
+    exec: Exec,
+    /// Defaults per-request options resolve against (mirrors what the
+    /// coordinator does server-side).
+    defaults: CoordinatorConfig,
+    /// In-process dataset store (Serial / Pipeline modes only).
+    datasets: RwLock<HashMap<String, Arc<PointSet>>>,
+}
+
+impl AidwSession {
+    /// Serial reference session (single thread, brute-force kNN).
+    pub fn serial() -> AidwSession {
+        AidwSession::serial_with(CoordinatorConfig::default())
+    }
+
+    /// Serial reference with explicit option defaults.
+    pub fn serial_with(defaults: CoordinatorConfig) -> AidwSession {
+        AidwSession {
+            exec: Exec::Serial,
+            defaults,
+            datasets: RwLock::new(HashMap::new()),
+        }
+    }
+
+    /// Pure-rust improved pipeline on a machine-sized pool.
+    pub fn in_process() -> AidwSession {
+        AidwSession::in_process_with(CoordinatorConfig::default())
+    }
+
+    /// Pure-rust pipeline with explicit option defaults
+    /// (`stage1_threads` selects the pool width).
+    pub fn in_process_with(defaults: CoordinatorConfig) -> AidwSession {
+        let pool = match defaults.stage1_threads {
+            Some(n) => Pool::new(n),
+            None => Pool::machine_sized(),
+        };
+        AidwSession {
+            exec: Exec::Pipeline(pool),
+            defaults,
+            datasets: RwLock::new(HashMap::new()),
+        }
+    }
+
+    /// Full serving coordinator (batching, PJRT artifacts when present).
+    pub fn serving(config: CoordinatorConfig) -> Result<AidwSession> {
+        let defaults = config.clone();
+        Ok(AidwSession {
+            exec: Exec::Serving(Coordinator::new(config)?),
+            defaults,
+            datasets: RwLock::new(HashMap::new()),
+        })
+    }
+
+    /// Serving session with default config.
+    pub fn serving_default() -> Result<AidwSession> {
+        AidwSession::serving(CoordinatorConfig::default())
+    }
+
+    /// Human-readable execution-path label (for CLI/example banners).
+    pub fn backend_label(&self) -> String {
+        match &self.exec {
+            Exec::Serial => "serial-reference".into(),
+            Exec::Pipeline(pool) => format!("pure-rust-pipeline({} threads)", pool.threads()),
+            Exec::Serving(c) => format!("coordinator({:?})", c.backend()),
+        }
+    }
+
+    /// The underlying coordinator (Serving mode only) for advanced use:
+    /// metrics, snapshots, async tickets, the TCP server.
+    pub fn coordinator(&self) -> Option<&Coordinator> {
+        match &self.exec {
+            Exec::Serving(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    /// Consume the session, returning the owned coordinator (Serving
+    /// mode only) — e.g. to hand to [`crate::service::Server::start`].
+    pub fn into_coordinator(self) -> Option<Coordinator> {
+        match self.exec {
+            Exec::Serving(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    /// Register (or replace) a named dataset.
+    pub fn register(&self, name: &str, points: PointSet) -> Result<()> {
+        match &self.exec {
+            Exec::Serving(c) => c.register_dataset(name, points),
+            _ => {
+                if points.is_empty() {
+                    return Err(Error::InvalidArgument(format!(
+                        "dataset '{name}' has no points"
+                    )));
+                }
+                self.datasets
+                    .write()
+                    .unwrap()
+                    .insert(name.to_string(), Arc::new(points));
+                Ok(())
+            }
+        }
+    }
+
+    /// Remove a dataset; true if it existed.
+    pub fn drop_dataset(&self, name: &str) -> bool {
+        match &self.exec {
+            Exec::Serving(c) => c.drop_dataset(name),
+            _ => self.datasets.write().unwrap().remove(name).is_some(),
+        }
+    }
+
+    /// Registered dataset names, sorted.
+    pub fn datasets(&self) -> Vec<String> {
+        match &self.exec {
+            Exec::Serving(c) => c.datasets(),
+            _ => {
+                let mut v: Vec<String> =
+                    self.datasets.read().unwrap().keys().cloned().collect();
+                v.sort();
+                v
+            }
+        }
+    }
+
+    /// Interpolate `queries` against `dataset` with per-request options.
+    pub fn interpolate(
+        &self,
+        dataset: &str,
+        queries: &[(f64, f64)],
+        options: &QueryOptions,
+    ) -> Result<SessionReply> {
+        if queries.is_empty() {
+            return Err(Error::InvalidArgument("empty query list".into()));
+        }
+        match &self.exec {
+            Exec::Serving(c) => {
+                let resp = c.interpolate(
+                    InterpolationRequest::new(dataset, queries.to_vec())
+                        .with_options(options.clone()),
+                )?;
+                Ok(SessionReply {
+                    values: resp.values,
+                    knn_s: resp.knn_s,
+                    interp_s: resp.interp_s,
+                    options: resp.options,
+                })
+            }
+            Exec::Serial => self.run_in_process(dataset, queries, options, None),
+            Exec::Pipeline(pool) => {
+                // borrow the pool out of the enum for the run
+                self.run_in_process(dataset, queries, options, Some(pool))
+            }
+        }
+    }
+
+    /// Convenience: values only.
+    pub fn interpolate_values(
+        &self,
+        dataset: &str,
+        queries: &[(f64, f64)],
+        options: &QueryOptions,
+    ) -> Result<Vec<f64>> {
+        Ok(self.interpolate(dataset, queries, options)?.values)
+    }
+
+    /// Shared Serial/Pipeline execution (pool = None -> serial paths).
+    fn run_in_process(
+        &self,
+        dataset: &str,
+        queries: &[(f64, f64)],
+        options: &QueryOptions,
+        pool: Option<&Pool>,
+    ) -> Result<SessionReply> {
+        let resolved = options.resolve(&self.defaults);
+        resolved.validate()?;
+        let pts = self
+            .datasets
+            .read()
+            .unwrap()
+            .get(dataset)
+            .cloned()
+            .ok_or_else(|| Error::UnknownDataset(dataset.to_string()))?;
+        let params = resolved.params();
+
+        let t0 = std::time::Instant::now();
+        let (values, knn_s, interp_s) = match (pool, resolved.local_neighbors) {
+            (None, None) => {
+                let v = serial::aidw_serial(&pts, queries, &params);
+                (v, 0.0, t0.elapsed().as_secs_f64())
+            }
+            (None, Some(n)) => {
+                // serial-flavored local run: single-thread pool
+                let cfg = LocalConfig { n_neighbors: n, rule: resolved.ring_rule };
+                let v = interpolate_local_on(&Pool::new(1), &pts, queries, &params, &cfg)?;
+                (v, 0.0, t0.elapsed().as_secs_f64())
+            }
+            (Some(pool), None) => {
+                let (v, times) =
+                    interpolate_improved_on(pool, &pts, queries, &params, resolved.ring_rule);
+                (v, times.knn_s, times.interp_s)
+            }
+            (Some(pool), Some(n)) => {
+                let cfg = LocalConfig { n_neighbors: n, rule: resolved.ring_rule };
+                let v = interpolate_local_on(pool, &pts, queries, &params, &cfg)?;
+                (v, 0.0, t0.elapsed().as_secs_f64())
+            }
+        };
+        let mut echoed = resolved;
+        echoed.area = Some(resolved.area.unwrap_or_else(|| pts.bounds().area()));
+        Ok(SessionReply { values, knn_s, interp_s, options: echoed })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aidw::params::AidwParams;
+    use crate::coordinator::EngineMode;
+    use crate::workload;
+
+    fn data() -> PointSet {
+        workload::uniform_square(500, 50.0, 401)
+    }
+
+    fn queries() -> Vec<(f64, f64)> {
+        workload::uniform_square(40, 50.0, 402).xy()
+    }
+
+    #[test]
+    fn all_modes_agree_on_defaults() {
+        let pts = data();
+        let q = queries();
+        let want = serial::aidw_serial(&pts, &q, &AidwParams::default());
+
+        let serial_s = AidwSession::serial();
+        serial_s.register("d", pts.clone()).unwrap();
+        let pipeline_s = AidwSession::in_process();
+        pipeline_s.register("d", pts.clone()).unwrap();
+        let serving_s = AidwSession::serving(CoordinatorConfig {
+            engine_mode: EngineMode::CpuOnly,
+            ..Default::default()
+        })
+        .unwrap();
+        serving_s.register("d", pts).unwrap();
+
+        for s in [&serial_s, &pipeline_s, &serving_s] {
+            let got = s
+                .interpolate_values("d", &q, &QueryOptions::default())
+                .unwrap();
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-9, "{}: {g} vs {w}", s.backend_label());
+            }
+        }
+    }
+
+    #[test]
+    fn options_route_to_local_mode() {
+        let pts = data();
+        let q = queries();
+        let s = AidwSession::in_process();
+        s.register("d", pts.clone()).unwrap();
+        let reply = s
+            .interpolate("d", &q, &QueryOptions::new().local_neighbors(64))
+            .unwrap();
+        assert_eq!(reply.options.local_neighbors, Some(64));
+        let want = crate::aidw::local::interpolate_local(
+            &pts,
+            &q,
+            &AidwParams::default(),
+            &LocalConfig { n_neighbors: 64, ..Default::default() },
+        )
+        .unwrap();
+        for (g, w) in reply.values.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn unknown_dataset_and_bad_options_fail() {
+        let s = AidwSession::in_process();
+        s.register("d", data()).unwrap();
+        let q = queries();
+        assert!(matches!(
+            s.interpolate_values("ghost", &q, &QueryOptions::default()),
+            Err(Error::UnknownDataset(_))
+        ));
+        assert!(matches!(
+            s.interpolate_values("d", &q, &QueryOptions::new().k(0)),
+            Err(Error::InvalidArgument(_))
+        ));
+        assert!(s.interpolate_values("d", &[], &QueryOptions::default()).is_err());
+        assert!(s.register("empty", PointSet::default()).is_err());
+    }
+
+    #[test]
+    fn registry_basics_in_process() {
+        let s = AidwSession::serial();
+        assert!(s.datasets().is_empty());
+        s.register("b", data()).unwrap();
+        s.register("a", data()).unwrap();
+        assert_eq!(s.datasets(), vec!["a".to_string(), "b".to_string()]);
+        assert!(s.drop_dataset("a"));
+        assert!(!s.drop_dataset("a"));
+        assert!(s.coordinator().is_none());
+    }
+
+    #[test]
+    fn serving_mode_exposes_coordinator() {
+        let s = AidwSession::serving(CoordinatorConfig {
+            engine_mode: EngineMode::CpuOnly,
+            ..Default::default()
+        })
+        .unwrap();
+        s.register("d", data()).unwrap();
+        let _ = s
+            .interpolate_values("d", &queries(), &QueryOptions::default())
+            .unwrap();
+        let m = s.coordinator().unwrap().metrics();
+        assert_eq!(m.requests, 1);
+    }
+}

@@ -1,0 +1,241 @@
+//! Integration: per-request `QueryOptions` end to end — one coordinator
+//! concurrently serving mixed tunings (k / ring rule / local mode / alpha
+//! levels / area), each request matching its own serial reference, and
+//! the same guarantee through the TCP protocol v2.
+
+use std::sync::Arc;
+
+use aidw::aidw::local::{interpolate_local, LocalConfig};
+use aidw::aidw::params::AidwParams;
+use aidw::aidw::pipeline::interpolate_improved_on;
+use aidw::aidw::serial;
+use aidw::coordinator::{
+    Coordinator, CoordinatorConfig, EngineMode, InterpolationRequest, QueryOptions,
+};
+use aidw::knn::grid_knn::RingRule;
+use aidw::pool::Pool;
+use aidw::service::{Client, Server};
+use aidw::workload;
+
+fn cpu_coordinator() -> Coordinator {
+    Coordinator::new(CoordinatorConfig {
+        engine_mode: EngineMode::CpuOnly,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// Reference values for a given option set, computed outside the
+/// coordinator (serial / pipeline / local references).
+fn reference(
+    pts: &aidw::geom::PointSet,
+    queries: &[(f64, f64)],
+    opts: &QueryOptions,
+) -> Vec<f64> {
+    let mut p = AidwParams::default();
+    if let Some(k) = opts.k {
+        p.k = k;
+    }
+    if let Some(levels) = opts.alpha_levels {
+        p.alpha_levels = levels;
+    }
+    if let Some(a) = opts.area {
+        p.area = Some(a);
+    }
+    match opts.local {
+        Some(aidw::coordinator::LocalMode::Nearest(n)) => interpolate_local(
+            pts,
+            queries,
+            &p,
+            &LocalConfig {
+                n_neighbors: n,
+                rule: opts.ring_rule.unwrap_or(RingRule::Exact),
+            },
+        )
+        .unwrap(),
+        _ => match opts.ring_rule {
+            // the paper's +1 heuristic can pick a slightly different
+            // neighbor set than brute force; mirror it with the pipeline
+            Some(RingRule::PaperPlusOne) => {
+                interpolate_improved_on(&Pool::new(2), pts, queries, &p, RingRule::PaperPlusOne).0
+            }
+            _ => serial::aidw_serial(pts, queries, &p),
+        },
+    }
+}
+
+#[test]
+fn mixed_options_concurrently_match_their_references() {
+    let c = Arc::new(cpu_coordinator());
+    let pts = workload::uniform_square(1200, 80.0, 501);
+    c.register_dataset("d", pts.clone()).unwrap();
+
+    let groups: Vec<QueryOptions> = vec![
+        QueryOptions::default(),
+        QueryOptions::new().k(3),
+        QueryOptions::new().ring_rule(RingRule::PaperPlusOne),
+        QueryOptions::new().local_neighbors(48),
+        QueryOptions::new().alpha_levels([1.0, 1.5, 2.5, 3.5, 4.5]),
+        QueryOptions::new().area(1e6),
+    ];
+    const PER_GROUP: usize = 3;
+    const NQ: usize = 15;
+
+    // fire every request concurrently so incompatible option sets are in
+    // the queue during the same linger windows
+    let mut handles = Vec::new();
+    for (gi, opts) in groups.iter().enumerate() {
+        for r in 0..PER_GROUP {
+            let c = c.clone();
+            let opts = opts.clone();
+            let seed = 600 + (gi * PER_GROUP + r) as u64;
+            handles.push(std::thread::spawn(move || {
+                let queries = workload::uniform_square(NQ, 80.0, seed).xy();
+                let resp = c
+                    .interpolate(
+                        InterpolationRequest::new("d", queries.clone())
+                            .with_options(opts.clone()),
+                    )
+                    .unwrap();
+                (opts, queries, resp)
+            }));
+        }
+    }
+
+    for h in handles {
+        let (opts, queries, resp) = h.join().unwrap();
+        // no batch may span option groups: a batch can hold at most this
+        // group's total queries
+        assert!(
+            resp.batch_queries <= PER_GROUP * NQ,
+            "batch spanned option groups ({} queries)",
+            resp.batch_queries
+        );
+        // the echo reports the request's own resolved options
+        if let Some(k) = opts.k {
+            assert_eq!(resp.options.k, k);
+        }
+        if let Some(rule) = opts.ring_rule {
+            assert_eq!(resp.options.ring_rule, rule);
+        }
+        match opts.local {
+            Some(aidw::coordinator::LocalMode::Nearest(n)) => {
+                assert_eq!(resp.options.local_neighbors, Some(n))
+            }
+            _ => assert_eq!(resp.options.local_neighbors, None),
+        }
+        // and the values match this option set's reference exactly
+        let want = reference(&pts, &queries, &opts);
+        for (g, w) in resp.values.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9, "{opts:?}: {g} vs {w}");
+        }
+    }
+
+    let m = c.metrics();
+    assert_eq!(m.requests as usize, groups.len() * PER_GROUP);
+    assert_eq!(m.errors, 0);
+}
+
+#[test]
+fn mixed_options_over_tcp_protocol_v2() {
+    let coord = Arc::new(cpu_coordinator());
+    let server = Server::start(coord, "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+
+    let pts = workload::uniform_square(900, 60.0, 511);
+    {
+        let mut admin = Client::connect(addr).unwrap();
+        admin.register("d", &pts).unwrap();
+    }
+
+    let cases: Vec<QueryOptions> = vec![
+        QueryOptions::default(),
+        QueryOptions::new().local_neighbors(64),
+        QueryOptions::new().ring_rule(RingRule::PaperPlusOne).k(5),
+        QueryOptions::new().alpha_levels([0.5, 1.0, 2.0, 3.0, 5.0]),
+    ];
+    let mut handles = Vec::new();
+    for (i, opts) in cases.into_iter().enumerate() {
+        let pts = pts.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            let queries = workload::uniform_square(20, 60.0, 700 + i as u64).xy();
+            let reply = client
+                .interpolate_with("d", &queries, opts.clone())
+                .unwrap();
+            // the v2 echo lets the client audit what ran
+            let echoed = reply.options.expect("v2 server echoes options");
+            if let Some(k) = opts.k {
+                assert_eq!(echoed.k, k);
+            }
+            match opts.local {
+                Some(aidw::coordinator::LocalMode::Nearest(n)) => {
+                    assert_eq!(echoed.local_neighbors, Some(n))
+                }
+                _ => assert_eq!(echoed.local_neighbors, None),
+            }
+            assert!(echoed.area.is_some(), "server fills in the dataset area");
+            let want = reference(&pts, &queries, &opts);
+            for (g, w) in reply.values.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-9, "{opts:?}: {g} vs {w}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn invalid_options_rejected_with_code_over_tcp() {
+    let coord = Arc::new(cpu_coordinator());
+    let server = Server::start(coord, "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+    let mut client = Client::connect(addr).unwrap();
+    client
+        .register("d", &workload::uniform_square(100, 10.0, 521))
+        .unwrap();
+    // k = 0 fails validation at submit; the client maps the
+    // invalid_argument code back onto a typed error
+    let err = client
+        .interpolate_with("d", &[(1.0, 1.0)], QueryOptions::new().k(0))
+        .unwrap_err();
+    assert!(
+        matches!(err, aidw::Error::InvalidArgument(_)),
+        "want InvalidArgument, got {err}"
+    );
+    // r_max <= r_min likewise
+    let err = client
+        .interpolate_with("d", &[(1.0, 1.0)], QueryOptions::new().r_bounds(2.0, 1.0))
+        .unwrap_err();
+    assert!(matches!(err, aidw::Error::InvalidArgument(_)), "{err}");
+    // the connection stays usable after rejected requests
+    assert_eq!(
+        client.interpolate("d", &[(1.0, 1.0)]).unwrap().len(),
+        1
+    );
+}
+
+#[test]
+fn async_tickets_poll_with_try_wait() {
+    let c = cpu_coordinator();
+    let pts = workload::uniform_square(400, 50.0, 531);
+    c.register_dataset("d", pts).unwrap();
+    let queries = workload::uniform_square(30, 50.0, 532).xy();
+    let ticket = c
+        .submit(InterpolationRequest::new("d", queries))
+        .unwrap();
+    // poll until ready — None strictly means "not finished yet"
+    let mut spins = 0usize;
+    let resp = loop {
+        match ticket.try_wait() {
+            Some(r) => break r.unwrap(),
+            None => {
+                spins += 1;
+                assert!(spins < 100_000, "poller hung");
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+        }
+    };
+    assert_eq!(resp.values.len(), 30);
+}

@@ -50,10 +50,8 @@ fn variants_agree_through_the_service() {
     let data = workload::clustered(800, 100.0, 5, 2.0, 103);
     c.register_dataset("d", data).unwrap();
     let queries = workload::uniform_square(200, 100.0, 104).xy();
-    let mut naive = InterpolationRequest::new("d", queries.clone());
-    naive.variant = Some(Variant::Naive);
-    let mut tiled = InterpolationRequest::new("d", queries);
-    tiled.variant = Some(Variant::Tiled);
+    let naive = InterpolationRequest::new("d", queries.clone()).with_variant(Variant::Naive);
+    let tiled = InterpolationRequest::new("d", queries).with_variant(Variant::Tiled);
     let zn = c.interpolate(naive).unwrap().values;
     let zt = c.interpolate(tiled).unwrap().values;
     for (a, b) in zn.iter().zip(&zt) {

@@ -89,6 +89,64 @@ fn concurrent_clients_share_the_coordinator() {
 }
 
 #[test]
+fn v1_raw_lines_still_served_and_v2_errors_carry_codes() {
+    let (_server, addr) = start_server();
+    use std::io::{BufRead, Write};
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+
+    // register via a raw v1 line
+    stream
+        .write_all(b"{\"op\":\"register\",\"dataset\":\"d\",\"xs\":[0,1,0,1],\"ys\":[0,0,1,1],\"zs\":[1,2,3,4]}\n")
+        .unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "{line}");
+
+    // a verbatim v1 interpolate line (k + variant only) still works
+    stream
+        .write_all(b"{\"op\":\"interpolate\",\"dataset\":\"d\",\"qx\":[0.5],\"qy\":[0.5],\"variant\":\"tiled\",\"k\":2}\n")
+        .unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let v = aidw::jsonio::Json::parse(line.trim_end()).unwrap();
+    assert_eq!(v.get("ok").as_bool(), Some(true), "{line}");
+    assert_eq!(v.get("z").to_f64_vec().unwrap().len(), 1);
+    // v1 response fields all present
+    assert!(v.get("knn_s").as_f64().is_some());
+    assert!(v.get("interp_s").as_f64().is_some());
+    assert!(v.get("batch_queries").as_usize().is_some());
+    // v2 addition: the resolved-options echo reports the override
+    assert_eq!(v.get("options").get("k").as_usize(), Some(2));
+
+    // v2 structured error codes on the wire
+    stream
+        .write_all(b"{\"op\":\"interpolate\",\"dataset\":\"ghost\",\"qx\":[1],\"qy\":[1]}\n")
+        .unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let v = aidw::jsonio::Json::parse(line.trim_end()).unwrap();
+    assert_eq!(v.get("ok").as_bool(), Some(false));
+    assert_eq!(v.get("code").as_str(), Some("unknown_dataset"), "{line}");
+    assert!(v.get("error").as_str().is_some(), "v1 error field retained");
+
+    stream.write_all(b"garbage\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let v = aidw::jsonio::Json::parse(line.trim_end()).unwrap();
+    assert_eq!(v.get("code").as_str(), Some("bad_request"), "{line}");
+
+    // invalid per-request option -> invalid_argument
+    stream
+        .write_all(b"{\"op\":\"interpolate\",\"dataset\":\"d\",\"qx\":[1],\"qy\":[1],\"r_min\":5,\"r_max\":1}\n")
+        .unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let v = aidw::jsonio::Json::parse(line.trim_end()).unwrap();
+    assert_eq!(v.get("code").as_str(), Some("invalid_argument"), "{line}");
+}
+
+#[test]
 fn drop_dataset_via_protocol() {
     let (_server, addr) = start_server();
     let mut client = Client::connect(addr).unwrap();

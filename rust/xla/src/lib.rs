@@ -1,0 +1,183 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! Mirrors exactly the API surface the `aidw` crate touches —
+//! [`PjRtClient`], [`PjRtLoadedExecutable`], [`Literal`],
+//! [`HloModuleProto`], [`XlaComputation`] — so the whole serving stack
+//! builds and tests without an XLA toolchain.  Every runtime entry point
+//! ([`PjRtClient::cpu`]) fails with a descriptive error, which the
+//! coordinator already treats as "no PJRT: use the pure-rust stage-2
+//! fallback".  [`Literal`] is fully functional (it is plain host memory),
+//! so literal-construction code paths stay exercised by tests.
+//!
+//! Swapping in the real bindings is a one-line change in `Cargo.toml`.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real crate's `xla::Error` shape (Display +
+/// std::error::Error).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT unavailable (offline xla stub; swap in the real `xla` crate to enable artifacts)"
+    ))
+}
+
+/// Marker trait for element types [`Literal::to_vec`] can extract.
+pub trait NativeType: Copy {
+    fn from_f32(x: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+}
+
+impl NativeType for f64 {
+    fn from_f32(x: f32) -> Self {
+        x as f64
+    }
+}
+
+/// A host-side tensor literal (rank-0/1/2 f32, or a tuple of literals).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1(xs: &[f32]) -> Literal {
+        Literal { data: xs.to_vec(), dims: vec![xs.len() as i64], tuple: None }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar(x: f32) -> Literal {
+        Literal { data: vec![x], dims: vec![], tuple: None }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {:?}",
+                self.data.len(),
+                dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec(), tuple: None })
+    }
+
+    /// Total element count.
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from_f32(x)).collect())
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        self.tuple
+            .ok_or_else(|| Error("to_tuple on a non-tuple literal".into()))
+    }
+}
+
+/// Parsed HLO module (stub: never constructible at runtime).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        Err(unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client (stub: construction fails, signalling "no accelerator").
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.element_count(), 4);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(l.to_tuple().is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_fail_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nope.hlo.txt").is_err());
+    }
+}
