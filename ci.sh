@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 verification in one command:
-#   ./ci.sh            build + test (+ fmt check when rustfmt is present)
+#   ./ci.sh            build + full test suite + live-subsystem integration
+#                      test (+ fmt check when rustfmt is present)
 #   AIDW_CI_STRICT=1 ./ci.sh   make formatting drift fatal
 set -euo pipefail
 cd "$(dirname "$0")/rust"
@@ -11,8 +12,17 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# The live mutation subsystem (epoch/delta/WAL) is tier-1: run its
+# integration test explicitly so a test-filter or harness change can never
+# silently drop the kill-and-restart / compaction-consistency coverage.
+echo "== cargo test -q --test it_live =="
+cargo test -q --test it_live
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
+    # Part of tier-1, but fatal only under AIDW_CI_STRICT=1: rustfmt output
+    # differs across toolchain versions, and tier-1 must not brick on a
+    # formatting disagreement between contributor toolchains.
     if ! cargo fmt --check; then
         if [ "${AIDW_CI_STRICT:-0}" = "1" ]; then
             echo "FAIL: formatting drift (AIDW_CI_STRICT=1)"

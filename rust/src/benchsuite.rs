@@ -22,6 +22,7 @@ use crate::aidw::serial;
 use crate::error::Result;
 use crate::geom::PointSet;
 use crate::grid::{EvenGrid, GridConfig};
+use crate::jsonio::Json;
 use crate::knn::grid_knn::{grid_knn_avg_distances_on, GridKnnConfig, RingRule};
 use crate::pool::Pool;
 use crate::runtime::{AidwExecutor, Engine, Variant};
@@ -178,6 +179,137 @@ pub fn measure_size(
     })
 }
 
+/// CPU-only measurements at one size — what the `aidw bench` subcommand
+/// runs on artifact-free testbeds: the serial baseline plus the pure-rust
+/// improved pipeline under both ring rules, stage-split.
+#[derive(Debug, Clone, Copy)]
+pub struct CpuSizeMeasurement {
+    pub n: usize,
+    pub serial_ms: Option<f64>,
+    pub serial_extrapolated: bool,
+    pub improved_exact: VariantTimes,
+    pub improved_paper1: VariantTimes,
+}
+
+/// Measure the CPU-only suite at one size.
+pub fn measure_size_cpu(pool: &Pool, n: usize, opts: &MeasureOpts) -> CpuSizeMeasurement {
+    let params = AidwParams::default();
+    let (data, queries) = standard_workload(n, opts);
+    let (serial_ms, serial_extrapolated) = if opts.serial {
+        let (ms, ex) = measure_serial(&data, &queries, &params, opts.serial_sub_cap);
+        (Some(ms), ex)
+    } else {
+        (None, false)
+    };
+    let run = |rule: RingRule| -> VariantTimes {
+        let (out, times) =
+            crate::aidw::pipeline::interpolate_improved_on(pool, &data, &queries, &params, rule);
+        std::hint::black_box(out);
+        VariantTimes { knn_ms: times.knn_s * 1e3, interp_ms: times.interp_s * 1e3 }
+    };
+    CpuSizeMeasurement {
+        n,
+        serial_ms,
+        serial_extrapolated,
+        improved_exact: run(RingRule::Exact),
+        improved_paper1: run(RingRule::PaperPlusOne),
+    }
+}
+
+fn variant_json(v: &VariantTimes) -> Json {
+    Json::obj(vec![
+        ("knn_ms", Json::Num(v.knn_ms)),
+        ("interp_ms", Json::Num(v.interp_ms)),
+        ("total_ms", Json::Num(v.total_ms())),
+    ])
+}
+
+/// `BENCH_aidw.json` document for a CPU-only run: sizes × variants ×
+/// stage times, self-describing enough to diff across PRs.
+pub fn cpu_bench_json(results: &[CpuSizeMeasurement], threads: usize, seed: u64) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("aidw".into())),
+        ("backend", Json::Str("cpu".into())),
+        ("threads", Json::Num(threads as f64)),
+        ("seed", Json::Num(seed as f64)),
+        // the measurements run with the library defaults
+        ("k", Json::Num(AidwParams::default().k as f64)),
+        (
+            "sizes",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|m| {
+                        let mut fields = vec![
+                            ("n", Json::Num(m.n as f64)),
+                            ("label", Json::Str(size_label(m.n))),
+                        ];
+                        if let Some(s) = m.serial_ms {
+                            fields.push(("serial_ms", Json::Num(s)));
+                            fields.push((
+                                "serial_extrapolated",
+                                Json::Bool(m.serial_extrapolated),
+                            ));
+                        }
+                        fields.push((
+                            "variants",
+                            Json::obj(vec![
+                                ("improved_exact", variant_json(&m.improved_exact)),
+                                ("improved_paper1", variant_json(&m.improved_paper1)),
+                            ]),
+                        ));
+                        Json::obj(fields)
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// `BENCH_aidw.json` document for a full PJRT run (all five paper
+/// versions per size).
+pub fn pjrt_bench_json(results: &[SizeMeasurement], threads: usize, seed: u64) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("aidw".into())),
+        ("backend", Json::Str("pjrt".into())),
+        ("threads", Json::Num(threads as f64)),
+        ("seed", Json::Num(seed as f64)),
+        // the measurements run with the library defaults
+        ("k", Json::Num(AidwParams::default().k as f64)),
+        (
+            "sizes",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|m| {
+                        let mut fields = vec![
+                            ("n", Json::Num(m.n as f64)),
+                            ("label", Json::Str(size_label(m.n))),
+                        ];
+                        if let Some(s) = m.serial_ms {
+                            fields.push(("serial_ms", Json::Num(s)));
+                            fields.push((
+                                "serial_extrapolated",
+                                Json::Bool(m.serial_extrapolated),
+                            ));
+                        }
+                        fields.push((
+                            "variants",
+                            Json::obj(vec![
+                                ("original_naive", variant_json(&m.original_naive)),
+                                ("original_tiled", variant_json(&m.original_tiled)),
+                                ("improved_naive", variant_json(&m.improved_naive)),
+                                ("improved_tiled", variant_json(&m.improved_tiled)),
+                            ]),
+                        ));
+                        Json::obj(fields)
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// Standard bench header printed by every table/figure bench.
 pub fn print_header(title: &str, sizes: &[usize]) {
     println!("\n=== {title} ===");
@@ -223,5 +355,35 @@ mod tests {
         let (d, q) = standard_workload(100, &opts);
         assert_eq!(d.len(), 100);
         assert_eq!(q.len(), 100);
+    }
+
+    #[test]
+    fn cpu_suite_measures_and_serializes() {
+        let pool = Pool::new(2);
+        let opts = MeasureOpts { serial_sub_cap: 64, ..Default::default() };
+        let sizes = [256usize, 512];
+        let results: Vec<CpuSizeMeasurement> =
+            sizes.iter().map(|&n| measure_size_cpu(&pool, n, &opts)).collect();
+        for m in &results {
+            assert!(m.serial_ms.unwrap() > 0.0);
+            assert!(m.improved_exact.total_ms() > 0.0);
+            assert!(m.improved_paper1.total_ms() > 0.0);
+        }
+        let doc = cpu_bench_json(&results, pool.threads(), opts.seed);
+        let text = doc.to_string();
+        // round-trips as JSON and carries the schema the perf trajectory
+        // tooling greps for
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("bench").as_str(), Some("aidw"));
+        assert_eq!(back.get("backend").as_str(), Some("cpu"));
+        let arr = back.get("sizes").as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("n").as_usize(), Some(256));
+        assert!(arr[0]
+            .get("variants")
+            .get("improved_exact")
+            .get("knn_ms")
+            .as_f64()
+            .is_some());
     }
 }

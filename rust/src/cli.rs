@@ -93,6 +93,25 @@ impl Args {
         }
     }
 
+    /// Comma-separated u64 list flag (e.g. `--ids 3,17,9000`); None when
+    /// the flag is absent.
+    pub fn get_u64_list(&self, name: &str) -> Result<Option<Vec<u64>>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim().parse::<u64>().map_err(|_| {
+                        Error::InvalidArgument(format!(
+                            "--{name} expects comma-separated non-negative integers, got '{v}'"
+                        ))
+                    })
+                })
+                .collect::<Result<Vec<u64>>>()
+                .map(Some),
+        }
+    }
+
     /// Boolean switch presence.
     pub fn has(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
@@ -135,6 +154,15 @@ mod tests {
         assert_eq!(a.get_f64_list("missing").unwrap(), None);
         let bad = Args::parse(&sv(&["x", "--alpha-levels", "1,oops"]), &[]).unwrap();
         assert!(bad.get_f64_list("alpha-levels").is_err());
+    }
+
+    #[test]
+    fn u64_list_parses() {
+        let a = Args::parse(&sv(&["x", "--ids", "3, 17,9000"]), &[]).unwrap();
+        assert_eq!(a.get_u64_list("ids").unwrap(), Some(vec![3, 17, 9000]));
+        assert_eq!(a.get_u64_list("missing").unwrap(), None);
+        let bad = Args::parse(&sv(&["x", "--ids", "1,-2"]), &[]).unwrap();
+        assert!(bad.get_u64_list("ids").is_err());
     }
 
     #[test]

@@ -244,6 +244,31 @@ mod tests {
     }
 
     #[test]
+    fn epochs_never_share_a_batch() {
+        // the live subsystem stamps the dataset epoch into the resolved
+        // options at submit time; a compaction publish between two
+        // submissions must split them into separate batches
+        let q = JobQueue::new(BatchPolicy {
+            linger: Duration::from_millis(1),
+            ..Default::default()
+        });
+        let base = ResolvedOptions { epoch: Some(0), ..Default::default() };
+        let next = ResolvedOptions { epoch: Some(1), ..base };
+        let (j1, _r1) = job_with("a", 4, base);
+        let (j2, _r2) = job_with("a", 4, next);
+        let (j3, _r3) = job_with("a", 4, base);
+        for j in [j1, j2, j3] {
+            q.push(j).unwrap();
+        }
+        let b1 = q.next_batch().unwrap();
+        assert_eq!(b1.jobs.len(), 2, "same-epoch jobs coalesce");
+        assert_eq!(b1.options.epoch, Some(0));
+        let b2 = q.next_batch().unwrap();
+        assert_eq!(b2.jobs.len(), 1);
+        assert_eq!(b2.options.epoch, Some(1));
+    }
+
+    #[test]
     fn respects_max_queries() {
         let q = JobQueue::new(BatchPolicy {
             max_queries: 25,

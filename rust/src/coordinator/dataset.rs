@@ -55,9 +55,12 @@ impl DatasetRegistry {
         Self::default()
     }
 
-    /// Register (or replace) a dataset.
-    pub fn insert(&self, ds: Dataset) {
-        self.map.write().unwrap().insert(ds.name.clone(), Arc::new(ds));
+    /// Register (or replace) a dataset.  Returns the displaced entry when
+    /// the name was already registered, so callers (notably the live
+    /// compactor publishing a rebuilt epoch) can log/verify the retirement
+    /// of the old index instead of silently dropping it.
+    pub fn insert(&self, ds: Dataset) -> Option<Arc<Dataset>> {
+        self.map.write().unwrap().insert(ds.name.clone(), Arc::new(ds))
     }
 
     /// Fetch by name.
@@ -103,7 +106,7 @@ mod tests {
         let pts = workload::uniform_square(500, 50.0, 61);
         let ds = Dataset::build(&pool, "d1", pts, &GridConfig::default(), None).unwrap();
         assert!(ds.r_exp > 0.0);
-        reg.insert(ds);
+        assert!(reg.insert(ds).is_none(), "fresh insert displaces nothing");
         assert_eq!(reg.len(), 1);
         let got = reg.get("d1").unwrap();
         assert_eq!(got.points.len(), 500);
@@ -123,15 +126,22 @@ mod tests {
     }
 
     #[test]
-    fn replace_updates() {
+    fn replace_updates_and_returns_displaced() {
         let reg = DatasetRegistry::new();
         let pool = Pool::new(1);
+        let mut displaced = Vec::new();
         for n in [100usize, 200] {
             let pts = workload::uniform_square(n, 10.0, 62);
-            reg.insert(Dataset::build(&pool, "d", pts, &GridConfig::default(), None).unwrap());
+            displaced.push(
+                reg.insert(Dataset::build(&pool, "d", pts, &GridConfig::default(), None).unwrap()),
+            );
         }
         assert_eq!(reg.get("d").unwrap().points.len(), 200);
         assert_eq!(reg.len(), 1);
+        // the replace path hands back the retired epoch for verification
+        assert!(displaced[0].is_none());
+        let old = displaced[1].as_ref().expect("replace returns the old dataset");
+        assert_eq!(old.points.len(), 100);
     }
 
     #[test]

@@ -20,6 +20,16 @@
 //! only among option-identical jobs, and both stages read the batch's
 //! [`ResolvedOptions`] instead of the shared config, so one coordinator
 //! concurrently serves arbitrarily mixed tunings.
+//!
+//! Datasets are **live** ([`crate::live`]): appends and removals layer a
+//! small delta overlay over the immutable epoch grid, queries merge grid
+//! kNN over the epoch with brute force over the delta, and a background
+//! compactor folds the overlay into a new epoch.  Submit stamps the
+//! dataset's current epoch into the resolved options, so epoch changes
+//! partition batch admission (a batch never mixes epochs) and every
+//! response echoes the epoch it was served from.  Each batch is served
+//! from one snapshot taken at batch formation; in-flight batches keep
+//! their snapshot across a compaction publish.
 
 pub mod batcher;
 pub mod dataset;
@@ -39,6 +49,11 @@ use crate::error::{Error, Result};
 use crate::geom::PointSet;
 use crate::grid::GridConfig;
 use crate::knn::grid_knn::{grid_knn_avg_distances_on, GridKnnConfig, RingRule};
+use crate::knn::merged::merged_knn_avg_distances_on;
+use crate::live::{
+    AppendOutcome, CompactionReport, LiveConfig, LiveDataset, LiveRegistry, LiveSnapshot,
+    LiveStatus, RemoveOutcome,
+};
 use crate::pool::Pool;
 use crate::runtime::{AidwExecutor, Engine};
 
@@ -91,6 +106,13 @@ pub struct CoordinatorConfig {
     /// Stage 1 gathers the neighbor ids in the same grid pass that feeds
     /// alpha.  None = the paper's dense weighting.
     pub local_neighbors: Option<usize>,
+    /// Live-mutation durability directory: when set, registrations write
+    /// a snapshot, every append/remove appends to a per-dataset WAL, and
+    /// startup restores snapshot + WAL automatically.  None = in-memory
+    /// datasets (mutable, but lost on restart).
+    pub live_dir: Option<std::path::PathBuf>,
+    /// Live-mutation tunables (compaction threshold, WAL sync).
+    pub live: LiveConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -107,6 +129,8 @@ impl Default for CoordinatorConfig {
             stage1_threads: None,
             pipeline_depth: 2,
             local_neighbors: None,
+            live_dir: None,
+            live: LiveConfig::default(),
         }
     }
 }
@@ -118,12 +142,13 @@ struct Stage2Job {
     r_obs: Vec<f64>,
     /// Local mode only: row-major (queries x n) neighbor indices.
     neighbors: Option<(Vec<u32>, usize)>,
-    dataset: Arc<Dataset>,
+    /// The consistent live snapshot this whole batch is served from.
+    snap: Arc<LiveSnapshot>,
     knn_s: f64,
 }
 
 struct Shared {
-    registry: DatasetRegistry,
+    registry: LiveRegistry,
     queue: JobQueue,
     metrics: Metrics,
     config: CoordinatorConfig,
@@ -174,13 +199,29 @@ impl Coordinator {
             None => Pool::machine_sized(),
         };
         let shared = Arc::new(Shared {
-            registry: DatasetRegistry::new(),
+            registry: LiveRegistry::new(),
             queue: JobQueue::new(config.batch),
             metrics: Metrics::default(),
             config,
             pool,
             running: AtomicBool::new(true),
         });
+
+        // restore persisted live datasets (snapshot + WAL replay) before
+        // any request can arrive
+        if let Some(dir) = shared.config.live_dir.clone() {
+            for name in crate::live::wal::list_live(&dir)? {
+                let ds = LiveDataset::load(
+                    &shared.pool,
+                    &name,
+                    &dir,
+                    &shared.config.grid,
+                    shared.config.params.area,
+                    shared.config.live,
+                )?;
+                shared.registry.insert(ds);
+            }
+        }
 
         // stage-1 -> stage-2 bounded channel
         let (tx, rx) = mpsc::sync_channel::<Stage2Job>(shared.config.pipeline_depth);
@@ -219,22 +260,95 @@ impl Coordinator {
         &self.shared.config
     }
 
-    /// Register a dataset (builds its grid index now).
+    /// Register a dataset (builds its epoch-0 grid index now; with a
+    /// live directory configured, also writes the durable snapshot and a
+    /// fresh WAL).
     pub fn register_dataset(&self, name: &str, points: PointSet) -> Result<()> {
-        let ds = Dataset::build(
-            &self.shared.pool,
-            name,
-            points,
-            &self.shared.config.grid,
-            self.shared.config.params.area,
-        )?;
-        self.shared.registry.insert(ds);
+        let cfg = &self.shared.config;
+        // retire any existing entry *before* writing the replacement's
+        // durable files, so the old dataset's compactor can never clobber
+        // them afterwards
+        if let Ok(old) = self.shared.registry.get(name) {
+            old.retire();
+        }
+        let ds = match &cfg.live_dir {
+            Some(dir) => LiveDataset::build_persistent(
+                &self.shared.pool,
+                name,
+                points,
+                &cfg.grid,
+                cfg.params.area,
+                cfg.live,
+                dir,
+            )?,
+            None => LiveDataset::build(
+                &self.shared.pool,
+                name,
+                points,
+                &cfg.grid,
+                cfg.params.area,
+                cfg.live,
+            )?,
+        };
+        if let Some(old) = self.shared.registry.insert(ds) {
+            // deliberate epoch retirement (already detached from the
+            // durable files above; a concurrent register of the same name
+            // may hand us a not-yet-retired instance, so retire again)
+            old.retire();
+        }
         Ok(())
     }
 
-    /// Remove a dataset.
+    /// Remove a dataset (joins its compactor and deletes its durable
+    /// state so a restart does not resurrect it).
     pub fn drop_dataset(&self, name: &str) -> bool {
-        self.shared.registry.remove(name)
+        match self.shared.registry.remove(name) {
+            Some(ds) => {
+                // after retire() no compaction — background or an
+                // in-flight synchronous one — can re-create the files we
+                // are about to delete
+                ds.retire();
+                if let Some(dir) = &self.shared.config.live_dir {
+                    std::fs::remove_file(crate::live::wal::live_path(dir, name)).ok();
+                    std::fs::remove_file(crate::live::wal::wal_path(dir, name)).ok();
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Append points to a live dataset; may trigger background
+    /// compaction once the overlay crosses the configured threshold.
+    pub fn append_points(&self, name: &str, points: PointSet) -> Result<AppendOutcome> {
+        let ds = self.shared.registry.get(name)?;
+        let out = ds.append(&points)?;
+        LiveDataset::maybe_spawn_compaction(&ds);
+        Ok(out)
+    }
+
+    /// Tombstone live points by id (strict: all ids must be live).
+    pub fn remove_points(&self, name: &str, ids: &[u64]) -> Result<RemoveOutcome> {
+        let ds = self.shared.registry.get(name)?;
+        let out = ds.remove(ids)?;
+        LiveDataset::maybe_spawn_compaction(&ds);
+        Ok(out)
+    }
+
+    /// Synchronously compact a live dataset (fold overlay, bump epoch,
+    /// truncate WAL).
+    pub fn compact_dataset(&self, name: &str) -> Result<CompactionReport> {
+        self.shared.registry.get(name)?.compact_now()
+    }
+
+    /// Live mutation/compaction statistics for one dataset.
+    pub fn live_status(&self, name: &str) -> Result<LiveStatus> {
+        Ok(self.shared.registry.get(name)?.status())
+    }
+
+    /// Direct access to a live dataset (tests, advanced callers).
+    pub fn live_dataset(&self, name: &str) -> Result<Arc<LiveDataset>> {
+        self.shared.registry.get(name)
     }
 
     /// Registered dataset names.
@@ -252,10 +366,23 @@ impl Coordinator {
             return Err(Error::InvalidArgument("empty query list".into()));
         }
         // fail fast on unknown datasets (cheap read-lock check)
-        self.shared.registry.get(&request.dataset)?;
+        let live = self.shared.registry.get(&request.dataset)?;
         // resolve per-request options against config defaults and validate
-        let resolved = request.options.resolve(&self.shared.config);
+        let mut resolved = request.options.resolve(&self.shared.config);
         resolved.validate()?;
+        // stamp the dataset's current epoch into the admission key: jobs
+        // admitted against different epochs never share a batch, and the
+        // response echo reports the epoch a batch was served from
+        resolved.epoch = Some(live.epoch());
+        // local weighting needs per-id neighbor gathers the merged path
+        // does not provide yet; reject while the overlay is non-empty
+        if resolved.local_neighbors.is_some() && live.is_mutated() {
+            return Err(Error::InvalidArgument(format!(
+                "local weighting is unavailable while dataset '{}' has \
+                 uncompacted mutations; request dense weighting or compact first",
+                request.dataset
+            )));
+        }
         let n_queries = request.queries.len() as u64;
         let (tx, rx) = mpsc::channel();
         let job = Job {
@@ -292,14 +419,16 @@ impl Coordinator {
         Ok(self.interpolate(InterpolationRequest::new(dataset, queries))?.values)
     }
 
-    /// Persist every registered dataset to `<dir>/<name>.aidw`.
+    /// Persist every registered dataset to `<dir>/<name>.aidw` (the v1
+    /// portable export: the *live merged* point set, without ids — WAL
+    /// durability is the `live_dir` mechanism, this is for interchange).
     pub fn save_datasets(&self, dir: &std::path::Path) -> Result<usize> {
-        let names = self.shared.registry.names();
-        for name in &names {
-            let ds = self.shared.registry.get(name)?;
-            snapshot::save_dataset(dir, name, &ds.points)?;
+        let all = self.shared.registry.all();
+        for ds in &all {
+            let (pts, _ids) = ds.snapshot().live_points();
+            snapshot::save_dataset(dir, ds.name(), &pts)?;
         }
-        Ok(names.len())
+        Ok(all.len())
     }
 
     /// Register every snapshot found in `dir` (grid indexes are rebuilt).
@@ -322,7 +451,8 @@ impl Coordinator {
         self.shared.queue.depth()
     }
 
-    /// Graceful shutdown: drains queued work, then stops the threads.
+    /// Graceful shutdown: drains queued work, stops the pipeline threads,
+    /// and joins any background compactions.
     pub fn shutdown(&mut self) {
         if self.shared.running.swap(false, Ordering::SeqCst) {
             self.shared.queue.close();
@@ -332,6 +462,7 @@ impl Coordinator {
             if let Some(h) = self.stage2.take() {
                 let _ = h.join();
             }
+            self.shared.registry.shutdown_all();
         }
     }
 }
@@ -348,13 +479,16 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
     while let Some(batch) = shared.queue.next_batch() {
         shared.metrics.batches.fetch_add(1, Ordering::Relaxed);
 
-        let dataset = match shared.registry.get(&batch.dataset) {
+        let live = match shared.registry.get(&batch.dataset) {
             Ok(ds) => ds,
             Err(e) => {
                 fail_batch(&shared, batch, &e);
                 continue;
             }
         };
+        // one snapshot per batch: every member is served from the same
+        // epoch/overlay state, and keeps it across a compaction publish
+        let snap = live.snapshot();
 
         // concatenate all queries of the batch
         let mut queries = Vec::with_capacity(batch.total_queries);
@@ -363,34 +497,56 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
         }
 
         // STAGE 1: grid kNN (the paper's fast kNN search), driven by the
-        // batch's options.  In local mode the same grid pass also gathers
-        // each query's neighbor ids.
+        // batch's options.  A compacted snapshot takes the plain grid
+        // path (honoring the request's ring rule; in local mode the same
+        // grid pass also gathers neighbor ids).  A mutated snapshot takes
+        // the merged path: grid over the epoch base ∪ brute force over
+        // the delta, tombstones filtered, always the exact bound.
         let t0 = std::time::Instant::now();
         let opts = batch.options;
-        let k = opts.k.min(dataset.points.len()).max(1);
-        let (r_obs, neighbors) = match opts.local_neighbors {
-            Some(n) => {
-                let n = n.max(k);
-                let (idx, r_obs) = crate::knn::grid_knn::grid_knn_neighbors(
-                    &shared.pool,
-                    &dataset.grid,
-                    &queries,
-                    n,
-                    k,
-                    opts.ring_rule,
+        let k = opts.k.min(snap.live_len).max(1);
+        let (r_obs, neighbors) = if snap.is_compacted() {
+            match opts.local_neighbors {
+                Some(n) => {
+                    let n = n.max(k);
+                    let (idx, r_obs) = crate::knn::grid_knn::grid_knn_neighbors(
+                        &shared.pool,
+                        &snap.base.grid,
+                        &queries,
+                        n,
+                        k,
+                        opts.ring_rule,
+                    );
+                    (r_obs, Some((idx, n)))
+                }
+                None => {
+                    let knn_cfg = GridKnnConfig { k, rule: opts.ring_rule };
+                    let (r_obs, _) =
+                        grid_knn_avg_distances_on(&shared.pool, &snap.base.grid, &queries, &knn_cfg);
+                    (r_obs, None)
+                }
+            }
+        } else {
+            if opts.local_neighbors.is_some() {
+                // submit guards this; a mutation can still race in between
+                fail_batch(
+                    &shared,
+                    batch,
+                    &Error::InvalidArgument(format!(
+                        "local weighting is unavailable while dataset '{}' has \
+                         uncompacted mutations",
+                        snap.base.name
+                    )),
                 );
-                (r_obs, Some((idx, n)))
+                continue;
             }
-            None => {
-                let knn_cfg = GridKnnConfig { k, rule: opts.ring_rule };
-                let (r_obs, _) =
-                    grid_knn_avg_distances_on(&shared.pool, &dataset.grid, &queries, &knn_cfg);
-                (r_obs, None)
-            }
+            let view = snap.merged_view();
+            let r_obs = merged_knn_avg_distances_on(&shared.pool, &view, &queries, k);
+            (r_obs, None)
         };
         let knn_s = t0.elapsed().as_secs_f64();
 
-        let job = Stage2Job { batch, queries, r_obs, neighbors, dataset, knn_s };
+        let job = Stage2Job { batch, queries, r_obs, neighbors, snap, knn_s };
         if tx.send(job).is_err() {
             break; // stage 2 is gone
         }
@@ -424,10 +580,14 @@ fn stage2_loop(
             Ok((values, knn_extra_s, interp_s)) => {
                 let knn_s = sj.knn_s + knn_extra_s;
                 shared.metrics.add_stage_times(knn_s, interp_s);
-                respond_batch(&shared, sj, values, knn_s, interp_s, match engine {
-                    Some(_) => Backend::Pjrt,
-                    None => Backend::CpuFallback,
-                });
+                // merged (mutated-snapshot) batches run the CPU path even
+                // when artifacts are loaded; report what actually ran
+                let backend = if engine.is_some() && sj.snap.is_compacted() {
+                    Backend::Pjrt
+                } else {
+                    Backend::CpuFallback
+                };
+                respond_batch(&shared, sj, values, knn_s, interp_s, backend);
             }
             Err(e) => {
                 shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
@@ -441,12 +601,13 @@ fn stage2_loop(
 }
 
 /// The effective AIDW parameter block for a batch: resolved options with
-/// the dataset's area substituted when no explicit override was given and
-/// k clamped to the dataset size (what stage 1 actually searched with).
-fn effective_params(opts: &ResolvedOptions, dataset: &Dataset) -> AidwParams {
+/// the snapshot's live area substituted when no explicit override was
+/// given and k clamped to the live point count (what stage 1 actually
+/// searched with).
+fn effective_params(opts: &ResolvedOptions, snap: &LiveSnapshot) -> AidwParams {
     let mut p = opts.params();
-    p.k = opts.k.min(dataset.points.len()).max(1);
-    p.area = Some(opts.area.unwrap_or(dataset.area));
+    p.k = opts.k.min(snap.live_len).max(1);
+    p.area = Some(opts.area.unwrap_or_else(|| snap.area()));
     p
 }
 
@@ -457,7 +618,29 @@ fn run_stage2(
     sj: &Stage2Job,
 ) -> Result<(Vec<f64>, f64, f64)> {
     let opts = &sj.batch.options;
-    let params = effective_params(opts, &sj.dataset);
+    let params = effective_params(opts, &sj.snap);
+    if !sj.snap.is_compacted() {
+        // merged stage 2 on the CPU: Eq.-1 sums over base-live + delta
+        // points with r_exp recomputed from the live count/bounds.  The
+        // fixed-shape PJRT artifacts cannot see overlay deltas; the
+        // compactor restores the artifact path at the next epoch.
+        let r_exp = match opts.area {
+            Some(a) => alpha::expected_nn_distance(sj.snap.live_len as f64, a),
+            None => sj.snap.r_exp(),
+        };
+        let t0 = std::time::Instant::now();
+        let alphas: Vec<f64> = sj
+            .r_obs
+            .iter()
+            .map(|&ro| alpha::adaptive_alpha(ro, r_exp, &params))
+            .collect();
+        let alpha_s = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        let values =
+            crate::live::merged_weighted_stage_on(&shared.pool, &sj.snap, &sj.queries, &alphas);
+        return Ok((values, alpha_s, t1.elapsed().as_secs_f64()));
+    }
+    let dataset: &Dataset = &sj.snap.base;
     match engine {
         Some(engine) => {
             let exec = if shared.config.test_shapes {
@@ -467,7 +650,7 @@ fn run_stage2(
             };
             let (values, times) = match &sj.neighbors {
                 Some((idx, n)) => exec.local_aidw(
-                    &sj.dataset.points,
+                    &dataset.points,
                     &sj.queries,
                     &sj.r_obs,
                     idx,
@@ -475,7 +658,7 @@ fn run_stage2(
                     &params,
                 )?,
                 None => exec.improved_aidw(
-                    &sj.dataset.points,
+                    &dataset.points,
                     &sj.queries,
                     &sj.r_obs,
                     &params,
@@ -489,8 +672,8 @@ fn run_stage2(
             // overrode the area (else the dataset's cached Eq.-2 constant
             // is exact)
             let r_exp = match opts.area {
-                Some(a) => alpha::expected_nn_distance(sj.dataset.points.len() as f64, a),
-                None => sj.dataset.r_exp,
+                Some(a) => alpha::expected_nn_distance(dataset.points.len() as f64, a),
+                None => dataset.r_exp,
             };
             let t0 = std::time::Instant::now();
             let alphas: Vec<f64> = sj
@@ -502,9 +685,9 @@ fn run_stage2(
             let t1 = std::time::Instant::now();
             let values = match &sj.neighbors {
                 Some((idx, n)) => local_weighted_cpu(
-                    &shared.pool, &sj.dataset.points, &sj.queries, &alphas, idx, *n),
+                    &shared.pool, &dataset.points, &sj.queries, &alphas, idx, *n),
                 None => weighted_stage_on(
-                    &shared.pool, &sj.dataset.points, &sj.queries, &alphas),
+                    &shared.pool, &dataset.points, &sj.queries, &alphas),
             };
             Ok((values, alpha_s, t1.elapsed().as_secs_f64()))
         }
@@ -548,7 +731,8 @@ fn local_weighted_cpu(
 }
 
 /// Split batch results back per job and respond, echoing the resolved
-/// options (with the dataset's area substituted) for client-side audit.
+/// options (with the live area, clamped k, and served epoch substituted)
+/// for client-side audit.
 fn respond_batch(
     shared: &Shared,
     sj: Stage2Job,
@@ -558,9 +742,13 @@ fn respond_batch(
     backend: Backend,
 ) {
     let mut echoed = sj.batch.options;
-    echoed.area = Some(echoed.area.unwrap_or(sj.dataset.area));
-    // the audit record reports what ran: k is clamped to the dataset size
-    echoed.k = echoed.k.min(sj.dataset.points.len()).max(1);
+    echoed.area = Some(echoed.area.unwrap_or_else(|| sj.snap.area()));
+    // the audit record reports what ran: k is clamped to the live count,
+    // and the epoch is the snapshot the batch was served from (it may be
+    // newer than the admission epoch if a compaction published in between
+    // — still one single epoch for the whole batch)
+    echoed.k = echoed.k.min(sj.snap.live_len).max(1);
+    echoed.epoch = Some(sj.snap.epoch);
     let total = sj.queries.len();
     let mut offset = 0usize;
     for job in sj.batch.jobs {
@@ -802,6 +990,83 @@ mod tests {
         for (g, w) in resp.values.iter().zip(&want) {
             assert!((g - w).abs() < 1e-9, "{g} vs {w}");
         }
+    }
+
+    #[test]
+    fn mutated_dataset_serves_merged_and_echoes_epoch() {
+        let c = cpu_coordinator();
+        let pts = workload::uniform_square(400, 50.0, 91);
+        c.register_dataset("d", pts).unwrap();
+        let extra = workload::uniform_square(40, 50.0, 92);
+        let appended = c.append_points("d", extra).unwrap();
+        assert_eq!(appended.first_id, 400);
+        assert_eq!(appended.count, 40);
+        let removed = c.remove_points("d", &[0, 401]).unwrap();
+        assert_eq!(removed.removed, 2);
+        assert_eq!(c.live_status("d").unwrap().live_points, 438);
+
+        let queries = workload::uniform_square(30, 50.0, 93).xy();
+        let resp = c
+            .interpolate(InterpolationRequest::new("d", queries.clone()))
+            .unwrap();
+        assert_eq!(resp.options.epoch, Some(0), "epoch echoed for audit");
+        assert_eq!(resp.values.len(), 30);
+
+        // bit-identical to a fresh registration of the merged live set
+        let (merged, _) = c.live_dataset("d").unwrap().snapshot().live_points();
+        let c2 = cpu_coordinator();
+        c2.register_dataset("m", merged).unwrap();
+        let want = c2
+            .interpolate(InterpolationRequest::new("m", queries.clone()))
+            .unwrap();
+        assert_eq!(resp.values, want.values, "merged path must be exact");
+
+        // compaction bumps the epoch; answers stay bit-identical
+        let rep = c.compact_dataset("d").unwrap();
+        assert_eq!((rep.old_epoch, rep.new_epoch), (0, 1));
+        let resp2 = c
+            .interpolate(InterpolationRequest::new("d", queries))
+            .unwrap();
+        assert_eq!(resp2.options.epoch, Some(1));
+        assert_eq!(resp2.values, want.values);
+    }
+
+    #[test]
+    fn local_mode_rejected_on_mutated_dataset_until_compaction() {
+        let c = cpu_coordinator();
+        c.register_dataset("d", workload::uniform_square(300, 50.0, 94)).unwrap();
+        let q = vec![(1.0, 1.0)];
+        // local mode works while compacted
+        c.interpolate(
+            InterpolationRequest::new("d", q.clone())
+                .with_options(QueryOptions::new().local_neighbors(16)),
+        )
+        .unwrap();
+        c.append_points("d", workload::uniform_square(5, 50.0, 95)).unwrap();
+        let err = c
+            .submit(
+                InterpolationRequest::new("d", q.clone())
+                    .with_options(QueryOptions::new().local_neighbors(16)),
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidArgument(_)), "{err}");
+        // dense requests still fine, and compaction restores local mode
+        c.interpolate(InterpolationRequest::new("d", q.clone())).unwrap();
+        c.compact_dataset("d").unwrap();
+        c.interpolate(
+            InterpolationRequest::new("d", q)
+                .with_options(QueryOptions::new().local_neighbors(16)),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn mutations_on_unknown_dataset_fail_fast() {
+        let c = cpu_coordinator();
+        assert!(c.append_points("ghost", workload::uniform_square(3, 1.0, 96)).is_err());
+        assert!(c.remove_points("ghost", &[0]).is_err());
+        assert!(c.compact_dataset("ghost").is_err());
+        assert!(c.live_status("ghost").is_err());
     }
 
     #[test]

@@ -142,6 +142,7 @@ impl QueryOptions {
             r_min: self.r_min.unwrap_or(config.params.r_min),
             r_max: self.r_max.unwrap_or(config.params.r_max),
             area: self.area.or(config.params.area),
+            epoch: None,
         }
     }
 }
@@ -164,6 +165,15 @@ pub struct ResolvedOptions {
     /// `None` = the dataset's own bounding-box area (substituted in the
     /// response echo once the dataset is known).
     pub area: Option<f64>,
+    /// The dataset epoch this request was admitted against — **server
+    /// assigned** at submit time (never client settable; the wire decoder
+    /// ignores an incoming `epoch` field).  Because resolved equality keys
+    /// batch admission, including the epoch here guarantees a batch never
+    /// mixes jobs admitted against different epochs of a live dataset; the
+    /// response echo reports the epoch the batch was actually served from.
+    /// `None` for execution paths without epoch semantics (in-process
+    /// sessions).
+    pub epoch: Option<u64>,
 }
 
 impl Default for ResolvedOptions {
@@ -178,6 +188,7 @@ impl Default for ResolvedOptions {
             r_min: p.r_min,
             r_max: p.r_max,
             area: None,
+            epoch: None,
         }
     }
 }
@@ -302,5 +313,13 @@ mod tests {
             QueryOptions::new().ring_rule(RingRule::PaperPlusOne).resolve(&cfg),
             inherited
         );
+        // the dataset epoch separates too: jobs admitted before and after
+        // a compaction publish never share a batch
+        let e0 = ResolvedOptions { epoch: Some(0), ..inherited };
+        let e1 = ResolvedOptions { epoch: Some(1), ..inherited };
+        assert_ne!(e0, e1);
+        // client-side resolution never assigns an epoch; the coordinator
+        // stamps it at submit time
+        assert_eq!(inherited.epoch, None);
     }
 }

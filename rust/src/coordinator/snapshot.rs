@@ -65,11 +65,21 @@ pub fn read_points<R: Read>(r: &mut R) -> Result<PointSet> {
     Ok(PointSet::from_soa(xs, ys, zs))
 }
 
-/// Save one dataset to `<dir>/<name>.aidw`.
-pub fn save_dataset(dir: &Path, name: &str, pts: &PointSet) -> Result<()> {
-    if name.is_empty() || name.contains(['/', '\\', '\0']) {
+/// Validate a dataset name for on-disk persistence.  Path separators and
+/// NULs are unsafe; a leading `.` would publish a dot-file that collides
+/// with the `.<name>.aidw.tmp` / `.<name>.live.tmp` staging convention
+/// (and would be invisible to a plain `ls`).  Shared by the v1 snapshot
+/// writer and the live WAL/snapshot layer.
+pub fn validate_dataset_name(name: &str) -> Result<()> {
+    if name.is_empty() || name.contains(['/', '\\', '\0']) || name.starts_with('.') {
         return Err(Error::InvalidArgument(format!("unsafe dataset name '{name}'")));
     }
+    Ok(())
+}
+
+/// Save one dataset to `<dir>/<name>.aidw`.
+pub fn save_dataset(dir: &Path, name: &str, pts: &PointSet) -> Result<()> {
+    validate_dataset_name(name)?;
     std::fs::create_dir_all(dir)?;
     let tmp = dir.join(format!(".{name}.aidw.tmp"));
     {
@@ -184,6 +194,22 @@ mod tests {
         let pts = workload::uniform_square(5, 1.0, 405);
         assert!(save_dataset(&dir, "../evil", &pts).is_err());
         assert!(save_dataset(&dir, "", &pts).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dot_names_rejected() {
+        // a name like ".foo" would publish ".foo.aidw", colliding with the
+        // ".<name>.aidw.tmp" staging convention and silently showing up in
+        // load_dir
+        let dir = tmpdir("dotnames");
+        let pts = workload::uniform_square(5, 1.0, 406);
+        assert!(save_dataset(&dir, ".foo", &pts).is_err());
+        assert!(save_dataset(&dir, ".", &pts).is_err());
+        assert!(validate_dataset_name(".hidden").is_err());
+        assert!(validate_dataset_name("ok.name").is_ok());
+        // nothing was published
+        assert!(load_dir(&dir).unwrap().is_empty());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,256 @@
+//! kNN over a live dataset: grid search over the immutable epoch base
+//! **union** brute force over the small delta overlay, with tombstoned
+//! points filtered out of both.
+//!
+//! This is the hybrid the live subsystem is built on (cf. Gowanlock's
+//! hybrid kNN-join, arXiv:1810.04758, and Garcia's observation that brute
+//! force wins at small n, arXiv:0804.1448): the bulk of the points stay
+//! indexed by the epoch's [`EvenGrid`], while the recently-appended tail
+//! is scanned exhaustively — the delta is bounded by the compaction
+//! threshold, so the brute pass stays O(k·|delta|)-ish per query.
+//!
+//! **Termination is always the provably-exact bound**, regardless of the
+//! request's ring rule: the paper's "+1 ring" heuristic counts grid
+//! candidates to decide when to stop, and delta points are not in the
+//! grid, so the count that justifies the heuristic is ill-defined here.
+//! Upgrading to the exact rule makes merged results *identical* to a
+//! from-scratch grid over the merged point set queried with
+//! [`RingRule::Exact`](crate::knn::grid_knn::RingRule) — the equivalence
+//! the `it_live` property test pins down bit-for-bit.
+//!
+//! Delta candidates are inserted **before** ring expansion so the k-th
+//! distance bound is tight from the first ring.
+
+use std::collections::HashSet;
+
+use crate::geom::dist2;
+use crate::grid::EvenGrid;
+use crate::knn::kbuffer::KBufferIdx;
+use crate::pool::Pool;
+
+/// Borrowed view of one consistent live snapshot, as the search needs it.
+///
+/// Merged candidate indices are `u32`: a value `< n_base` is an original
+/// index into the base point set; `n_base + j` is position `j` in the
+/// delta append log.
+#[derive(Clone, Copy)]
+pub struct MergedView<'a> {
+    pub grid: &'a EvenGrid,
+    /// Original base indices that are tombstoned.
+    pub base_dead: &'a HashSet<u32>,
+    pub delta_xs: &'a [f64],
+    pub delta_ys: &'a [f64],
+    /// Delta append-log positions that are tombstoned.
+    pub delta_dead: &'a HashSet<u32>,
+}
+
+impl<'a> MergedView<'a> {
+    fn n_base(&self) -> usize {
+        self.grid.n_points()
+    }
+}
+
+/// One query's merged exact search; leaves the (d2, merged-index) buffer
+/// filled ascending.
+fn single_query_merged(view: &MergedView<'_>, qx: f64, qy: f64, buf: &mut KBufferIdx) {
+    buf.clear();
+    let n_base = view.n_base() as u32;
+    // brute pass over the live delta first: tightens kth_d2 before any
+    // ring is visited
+    for j in 0..view.delta_xs.len() {
+        let jj = j as u32;
+        if view.delta_dead.contains(&jj) {
+            continue;
+        }
+        buf.insert(dist2(qx, qy, view.delta_xs[j], view.delta_ys[j]), n_base + jj);
+    }
+    // grid pass over the epoch base, skipping tombstones, exact bound
+    let (row, col) = view.grid.locate(qx, qy);
+    let mut level = 0usize;
+    loop {
+        view.grid.for_ring(row, col, level, |xs, ys, _zs, idx| {
+            for j in 0..xs.len() {
+                if view.base_dead.contains(&idx[j]) {
+                    continue;
+                }
+                buf.insert(dist2(qx, qy, xs[j], ys[j]), idx[j]);
+            }
+        });
+        if view.grid.ring_exhausted(row, col, level) {
+            break;
+        }
+        if buf.full() {
+            match view.grid.min_dist_beyond(qx, qy, row, col, level) {
+                None => break,
+                Some(bound) => {
+                    if bound * bound >= buf.kth_d2() {
+                        break;
+                    }
+                }
+            }
+        }
+        level += 1;
+    }
+}
+
+/// Eq.-3 average distance to the k nearest **live** points for each query
+/// (the merged analog of
+/// [`grid_knn_avg_distances_on`](crate::knn::grid_knn::grid_knn_avg_distances_on)).
+/// Parallel across queries.
+pub fn merged_knn_avg_distances_on(
+    pool: &Pool,
+    view: &MergedView<'_>,
+    queries: &[(f64, f64)],
+    k: usize,
+) -> Vec<f64> {
+    let k = k.max(1);
+    let mut out = vec![0f64; queries.len()];
+    pool.for_each_slice_mut(&mut out, 64, |offset, chunk| {
+        let mut buf = KBufferIdx::new(k);
+        for (j, slot) in chunk.iter_mut().enumerate() {
+            let (qx, qy) = queries[offset + j];
+            single_query_merged(view, qx, qy, &mut buf);
+            *slot = buf.avg_distance(k);
+        }
+    });
+    out
+}
+
+/// The k nearest live points per query as ascending `(d2, merged_index)`
+/// pairs (fewer when fewer live points exist) — the oracle interface the
+/// incremental-vs-rebuild property test compares against a from-scratch
+/// grid.
+pub fn merged_knn_topk_on(
+    pool: &Pool,
+    view: &MergedView<'_>,
+    queries: &[(f64, f64)],
+    k: usize,
+) -> Vec<Vec<(f64, u32)>> {
+    let k = k.max(1);
+    let results = pool.map_ranges(queries.len(), 64, |r| {
+        let mut buf = KBufferIdx::new(k);
+        let mut local = Vec::with_capacity(r.end - r.start);
+        for qi in r {
+            let (qx, qy) = queries[qi];
+            single_query_merged(view, qx, qy, &mut buf);
+            let n = buf.len();
+            local.push(
+                buf.d2_slice()[..n]
+                    .iter()
+                    .copied()
+                    .zip(buf.idx_slice()[..n].iter().copied())
+                    .collect::<Vec<(f64, u32)>>(),
+            );
+        }
+        local
+    });
+    results.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::PointSet;
+    use crate::grid::{EvenGrid, GridConfig};
+    use crate::knn::brute;
+    use crate::workload;
+
+    /// Brute-force reference over the merged live point multiset.
+    fn merged_live_points(
+        base: &PointSet,
+        base_dead: &HashSet<u32>,
+        delta: &PointSet,
+        delta_dead: &HashSet<u32>,
+    ) -> PointSet {
+        let mut out = PointSet::default();
+        for i in 0..base.len() {
+            if !base_dead.contains(&(i as u32)) {
+                out.push(base.xs[i], base.ys[i], base.zs[i]);
+            }
+        }
+        for j in 0..delta.len() {
+            if !delta_dead.contains(&(j as u32)) {
+                out.push(delta.xs[j], delta.ys[j], delta.zs[j]);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn merged_matches_brute_force_with_tombstones() {
+        let base = workload::uniform_square(1500, 100.0, 701);
+        let delta = workload::uniform_square(90, 100.0, 702);
+        let base_dead: HashSet<u32> = (0..40u32).map(|i| i * 31 % 1500).collect();
+        let delta_dead: HashSet<u32> = [3u32, 17, 55].into_iter().collect();
+        let grid = EvenGrid::build(&base, None, &GridConfig::default()).unwrap();
+        let view = MergedView {
+            grid: &grid,
+            base_dead: &base_dead,
+            delta_xs: &delta.xs,
+            delta_ys: &delta.ys,
+            delta_dead: &delta_dead,
+        };
+        let queries = workload::uniform_square(200, 100.0, 703).xy();
+        let pool = Pool::new(2);
+        let merged = merged_live_points(&base, &base_dead, &delta, &delta_dead);
+
+        let got = merged_knn_avg_distances_on(&pool, &view, &queries, 10);
+        let want =
+            brute::brute_knn_avg_distances_on(&pool, &merged.xs, &merged.ys, &queries, 10);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-12, "{g} vs {w}");
+        }
+
+        let top = merged_knn_topk_on(&pool, &view, &queries, 10);
+        let want_top = brute::brute_knn_topk(&pool, &merged.xs, &merged.ys, &queries, 10);
+        for (qi, (g, w)) in top.iter().zip(&want_top).enumerate() {
+            assert_eq!(g.len(), 10);
+            for (slot, ((d2, _idx), wref)) in g.iter().zip(w).enumerate() {
+                assert!((d2 - wref).abs() < 1e-12, "q{qi} slot {slot}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_delta_equals_plain_grid_search() {
+        let base = workload::uniform_square(800, 50.0, 704);
+        let grid = EvenGrid::build(&base, None, &GridConfig::default()).unwrap();
+        let none_u32: HashSet<u32> = HashSet::new();
+        let view = MergedView {
+            grid: &grid,
+            base_dead: &none_u32,
+            delta_xs: &[],
+            delta_ys: &[],
+            delta_dead: &none_u32,
+        };
+        let queries = workload::uniform_square(60, 50.0, 705).xy();
+        let pool = Pool::new(2);
+        let got = merged_knn_avg_distances_on(&pool, &view, &queries, 10);
+        let cfg = crate::knn::grid_knn::GridKnnConfig::default();
+        let (want, _) =
+            crate::knn::grid_knn::grid_knn_avg_distances_on(&pool, &grid, &queries, &cfg);
+        assert_eq!(got, want, "merged search with no delta must be bit-identical");
+    }
+
+    #[test]
+    fn fully_tombstoned_base_serves_from_delta() {
+        let base = workload::uniform_square(50, 10.0, 706);
+        let delta = workload::uniform_square(8, 10.0, 707);
+        let base_dead: HashSet<u32> = (0..50u32).collect();
+        let delta_dead = HashSet::new();
+        let grid = EvenGrid::build(&base, None, &GridConfig::default()).unwrap();
+        let view = MergedView {
+            grid: &grid,
+            base_dead: &base_dead,
+            delta_xs: &delta.xs,
+            delta_ys: &delta.ys,
+            delta_dead: &delta_dead,
+        };
+        let pool = Pool::new(1);
+        let top = merged_knn_topk_on(&pool, &view, &[(5.0, 5.0)], 10);
+        assert_eq!(top[0].len(), 8, "only the 8 delta points are live");
+        for &(_, idx) in &top[0] {
+            assert!(idx >= 50, "all survivors come from the delta");
+        }
+    }
+}

@@ -1,21 +1,26 @@
 //! k-nearest-neighbor search engines.
 //!
-//! Two implementations, mirroring the paper's "original" vs "improved"
-//! algorithms:
+//! Three implementations:
 //!
 //! * [`brute`] — the original global scan: every data point streamed
 //!   through a per-query k-buffer (paper §2.3 / Mei et al. 2015);
 //! * [`grid_knn`] — the improved local search over the [`crate::grid`]
-//!   even grid with iterative ring expansion (paper §3.2.4).
+//!   even grid with iterative ring expansion (paper §3.2.4);
+//! * [`merged`] — the live-dataset hybrid: grid search over an immutable
+//!   epoch base unioned with a brute pass over the mutable delta overlay,
+//!   filtering tombstones (the serving form of Gowanlock's hybrid
+//!   kNN-join, arXiv:1810.04758).
 //!
-//! Both defer `sqrt` to the epilogue (squared distances throughout) and
+//! All defer `sqrt` to the epilogue (squared distances throughout) and
 //! share the [`kbuffer::KBuffer`] insertion structure — the paper's
 //! "compare with the k-th distance, replace, bubble into place" loop.
 
 pub mod brute;
 pub mod grid_knn;
 pub mod kbuffer;
+pub mod merged;
 
 pub use brute::brute_knn_avg_distances;
 pub use grid_knn::{grid_knn_avg_distances, GridKnnConfig, RingRule};
 pub use kbuffer::KBuffer;
+pub use merged::MergedView;

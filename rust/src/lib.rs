@@ -57,6 +57,7 @@ pub mod geom;
 pub mod grid;
 pub mod jsonio;
 pub mod knn;
+pub mod live;
 pub mod pool;
 pub mod primitives;
 pub mod proptest;
@@ -80,6 +81,7 @@ pub mod prelude {
     pub use crate::geom::{Aabb, PointSet};
     pub use crate::grid::EvenGrid;
     pub use crate::knn::{brute, grid_knn};
+    pub use crate::live::{LiveConfig, LiveDataset, LiveStatus};
     pub use crate::runtime::Engine;
     pub use crate::session::{AidwSession, SessionReply};
     pub use crate::workload;

@@ -1,0 +1,143 @@
+//! The delta overlay — the small mutable tail of a [`super::LiveDataset`].
+//!
+//! An overlay is immutable once published: every mutation builds a new
+//! overlay (copy-on-write) and swaps it in, so in-flight queries keep a
+//! consistent view.  Cloning is O(delta), and the delta is bounded by the
+//! compaction threshold, so mutation cost stays small and independent of
+//! the base size.
+//!
+//! Within one epoch the append log is strictly append-only: removing an
+//! appended point never shrinks `points`, it only tombstones the point's
+//! id.  That invariant is what lets the compactor diff "overlay now"
+//! against "overlay at capture" as a plain suffix + tombstone difference
+//! (see [`super::LiveDataset`] compaction).
+
+use std::collections::HashSet;
+
+use crate::geom::PointSet;
+
+/// Where a live id currently resolves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LiveLocation {
+    /// Original index into the epoch base point set.
+    Base(u32),
+    /// Position in the overlay append log.
+    Delta(u32),
+}
+
+/// Appended points + tombstones layered over an immutable epoch base.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaOverlay {
+    /// Appended points, in append order (append-only within an epoch).
+    pub points: PointSet,
+    /// Stable id of each appended point (strictly ascending).
+    pub ids: Vec<u64>,
+    /// Ids of removed live points (base or delta).
+    pub tombstones: HashSet<u64>,
+    /// Original base indices of tombstoned base points (query-time filter).
+    pub base_dead: HashSet<u32>,
+    /// Append-log positions of tombstoned delta points (query-time filter).
+    pub delta_dead: HashSet<u32>,
+}
+
+impl DeltaOverlay {
+    /// True when the overlay changes nothing about the base.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty() && self.tombstones.is_empty()
+    }
+
+    /// Appended points that are still live.
+    pub fn live_appends(&self) -> usize {
+        self.points.len() - self.delta_dead.len()
+    }
+
+    /// Compaction pressure: total overlay entries (appends + tombstones).
+    pub fn pressure(&self) -> usize {
+        self.points.len() + self.tombstones.len()
+    }
+
+    /// True when append-log position `pos` is still live.
+    #[inline]
+    pub fn delta_live(&self, pos: usize) -> bool {
+        !self.delta_dead.contains(&(pos as u32))
+    }
+
+    /// New overlay with `pts` appended under the given ids (parallel to
+    /// the points; must be ascending and above every existing id —
+    /// callers assign fresh ids or replay logged ones).
+    pub fn with_appends(&self, pts: &PointSet, ids: &[u64]) -> DeltaOverlay {
+        assert_eq!(pts.len(), ids.len(), "points/ids length mismatch");
+        let mut next = self.clone();
+        for i in 0..pts.len() {
+            next.points.push(pts.xs[i], pts.ys[i], pts.zs[i]);
+            next.ids.push(ids[i]);
+        }
+        next
+    }
+
+    /// New overlay with the given (id, location) pairs tombstoned.  The
+    /// caller has already resolved and validated every id against the
+    /// current snapshot.
+    pub fn with_removals(&self, removals: &[(u64, LiveLocation)]) -> DeltaOverlay {
+        let mut next = self.clone();
+        for &(id, loc) in removals {
+            next.tombstones.insert(id);
+            match loc {
+                LiveLocation::Base(idx) => {
+                    next.base_dead.insert(idx);
+                }
+                LiveLocation::Delta(pos) => {
+                    next.delta_dead.insert(pos);
+                }
+            }
+        }
+        next
+    }
+
+    /// Locate a live id inside the append log (ids are ascending, so this
+    /// is a binary search).  Returns the log position even if tombstoned;
+    /// callers check `delta_dead` themselves.
+    pub fn find_id(&self, id: u64) -> Option<u32> {
+        self.ids.binary_search(&id).ok().map(|p| p as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload;
+
+    #[test]
+    fn append_and_remove_are_copy_on_write() {
+        let base = DeltaOverlay::default();
+        assert!(base.is_empty());
+        let pts = workload::uniform_square(4, 10.0, 1);
+        let a = base.with_appends(&pts, &[100, 101, 102, 103]);
+        assert!(base.is_empty(), "original untouched");
+        assert_eq!(a.points.len(), 4);
+        assert_eq!(a.ids, vec![100, 101, 102, 103]);
+        assert_eq!(a.live_appends(), 4);
+        assert_eq!(a.pressure(), 4);
+
+        let b = a.with_removals(&[(101, LiveLocation::Delta(1)), (7, LiveLocation::Base(7))]);
+        assert_eq!(a.tombstones.len(), 0, "original untouched");
+        assert_eq!(b.points.len(), 4, "append log never shrinks in-epoch");
+        assert_eq!(b.live_appends(), 3);
+        assert!(b.tombstones.contains(&101));
+        assert!(b.base_dead.contains(&7));
+        assert!(b.delta_dead.contains(&1));
+        assert!(!b.delta_live(1));
+        assert!(b.delta_live(0));
+        assert_eq!(b.pressure(), 6);
+    }
+
+    #[test]
+    fn find_id_binary_search() {
+        let pts = workload::uniform_square(5, 10.0, 2);
+        let d = DeltaOverlay::default().with_appends(&pts, &[50, 51, 52, 53, 54]);
+        assert_eq!(d.find_id(50), Some(0));
+        assert_eq!(d.find_id(54), Some(4));
+        assert_eq!(d.find_id(49), None);
+        assert_eq!(d.find_id(55), None);
+    }
+}

@@ -1,0 +1,1270 @@
+//! Live dataset mutation: epoch-versioned grid index with a delta
+//! overlay, background compaction, and WAL-backed durability.
+//!
+//! The paper treats the even grid as a one-time construction cost
+//! (§3.2.1–3.2.3); [`crate::coordinator::Dataset`] accordingly freezes
+//! the index at registration.  A serving system under live sensor traffic
+//! cannot afford a full O(n log n) rebuild per update, so a
+//! [`LiveDataset`] splits the world in two:
+//!
+//! * an **immutable epoch** — `Arc<Dataset>` (points + `EvenGrid`), never
+//!   modified after publication, so in-flight queries keep a consistent
+//!   snapshot for as long as they hold the `Arc`;
+//! * a small **delta overlay** ([`delta::DeltaOverlay`]) — appended
+//!   points plus a tombstone set for removals, rebuilt copy-on-write per
+//!   mutation (O(delta), never O(n)).
+//!
+//! Queries merge grid-kNN results over the epoch with brute force over
+//! the delta ([`crate::knn::merged`]), filter tombstones from both sides,
+//! and recompute `r_exp` from the live count and bounds.  Once the
+//! overlay crosses `compact_threshold`, a background compactor rebuilds
+//! the grid over the merged point set off-thread and publishes the new
+//! epoch with an atomic pointer swap (`RwLock<Arc<_>>` held only for the
+//! swap itself — the ArcSwap idiom without the dependency).
+//!
+//! ## Choosing `compact_threshold`
+//!
+//! The threshold trades *query* cost against *compaction* cost.  Every
+//! query pays O(|delta|) for the brute pass and a hash-probe per grid
+//! candidate once tombstones exist, so a large threshold taxes every
+//! query a little; every compaction pays O(n log n) for the rebuild plus
+//! an O(n) durable snapshot write, so a small threshold taxes the write
+//! path a lot (and churns epochs, splitting batches keyed on the epoch).
+//! The default (4096) keeps the brute pass around the cost of visiting
+//! one-to-two extra grid rings at the paper's densities; latency-critical
+//! read-heavy deployments should lower it, ingest-heavy ones raise it.
+//! `pressure` = appends + tombstones is the trigger metric, so removal
+//! storms compact too (tombstones slow the grid pass even though they
+//! shrink the live set).
+//!
+//! ## Durability
+//!
+//! With a live directory attached, every mutation appends one record to a
+//! per-dataset WAL *before* it is applied in memory, and compaction
+//! truncates the WAL only after the rebuilt snapshot has been published
+//! by atomic rename ([`wal`] documents the formats and the idempotent
+//! replay that makes the publish sequence crash-safe).  Restart =
+//! snapshot load + WAL replay; the kill-and-restart integration test pins
+//! the result down bit-for-bit against a fresh build of the merged set.
+
+pub mod delta;
+pub mod registry;
+pub mod wal;
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+
+use crate::aidw::alpha;
+use crate::coordinator::dataset::Dataset;
+use crate::coordinator::snapshot::validate_dataset_name;
+use crate::error::{Error, Result};
+use crate::geom::{dist2, Aabb, PointSet, EPS_D2};
+use crate::grid::GridConfig;
+use crate::knn::merged::MergedView;
+use crate::pool::Pool;
+
+pub use delta::{DeltaOverlay, LiveLocation};
+pub use registry::LiveRegistry;
+pub use wal::{Wal, WalRecord};
+
+/// Tunables of the live mutation layer.
+#[derive(Debug, Clone, Copy)]
+pub struct LiveConfig {
+    /// Overlay pressure (appends + tombstones) that triggers background
+    /// compaction.  See the module docs for the trade-off.
+    pub compact_threshold: usize,
+    /// Spawn the background compactor automatically when the threshold is
+    /// crossed (`false` = only explicit `compact` requests compact).
+    pub auto_compact: bool,
+    /// `sync_data` every WAL record and snapshot (survives OS/power
+    /// failure, not just process death).  Off by default: one fsync per
+    /// mutation is the difference between ~10^5 and ~10^2 mutations/s on
+    /// commodity disks.
+    pub wal_sync: bool,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        LiveConfig { compact_threshold: 4096, auto_compact: true, wal_sync: false }
+    }
+}
+
+/// One immutable, consistent view of a live dataset.  Cheap to clone;
+/// in-flight requests hold it across a compaction publish unharmed.
+#[derive(Debug, Clone)]
+pub struct LiveSnapshot {
+    /// Epoch counter: bumped by every compaction publish, persisted.
+    pub epoch: u64,
+    /// The immutable epoch base (points + grid + cached r_exp).
+    pub base: Arc<Dataset>,
+    /// Stable id of each base point, aligned with the base point order
+    /// and strictly ascending (compaction preserves both invariants).
+    pub base_ids: Arc<Vec<u64>>,
+    /// The mutable tail: appends + tombstones.
+    pub delta: Arc<DeltaOverlay>,
+    /// Exact bounding box of the *live* point set (appends extend it;
+    /// boundary removals trigger a recompute).
+    pub live_bounds: Aabb,
+    /// Number of live points (base - tombstoned + live appends).
+    pub live_len: usize,
+    /// Explicit Eq.-2 area override, when configured.
+    pub area_override: Option<f64>,
+}
+
+impl LiveSnapshot {
+    /// True when the overlay is empty — queries may take the plain
+    /// grid-only fast path (including PJRT stage 2 and the request's own
+    /// ring rule).
+    pub fn is_compacted(&self) -> bool {
+        self.delta.is_empty()
+    }
+
+    /// The effective Eq.-2 study-region area of the live set (mirrors
+    /// [`Dataset::build`]'s default).
+    pub fn area(&self) -> f64 {
+        self.area_override
+            .unwrap_or_else(|| self.live_bounds.area().max(f64::MIN_POSITIVE))
+    }
+
+    /// Expected NN distance (Eq. 2) recomputed from the live count and
+    /// bounds — what the frozen `Dataset::r_exp` cannot track.
+    pub fn r_exp(&self) -> f64 {
+        alpha::expected_nn_distance(self.live_len as f64, self.area())
+    }
+
+    /// Borrowed view for the merged kNN search.
+    pub fn merged_view(&self) -> MergedView<'_> {
+        MergedView {
+            grid: &self.base.grid,
+            base_dead: &self.delta.base_dead,
+            delta_xs: &self.delta.points.xs,
+            delta_ys: &self.delta.points.ys,
+            delta_dead: &self.delta.delta_dead,
+        }
+    }
+
+    /// Materialize the live point set (base-live in base order, then live
+    /// appends in append order) with the matching ids.  This ordering is
+    /// the contract the bit-identity guarantee rests on: a fresh
+    /// registration of exactly this point set serves identical values.
+    pub fn live_points(&self) -> (PointSet, Vec<u64>) {
+        let base = &self.base.points;
+        let mut pts = PointSet::with_capacity(self.live_len);
+        let mut ids = Vec::with_capacity(self.live_len);
+        for i in 0..base.len() {
+            if self.delta.base_dead.contains(&(i as u32)) {
+                continue;
+            }
+            pts.push(base.xs[i], base.ys[i], base.zs[i]);
+            ids.push(self.base_ids[i]);
+        }
+        for p in 0..self.delta.points.len() {
+            if !self.delta.delta_live(p) {
+                continue;
+            }
+            pts.push(self.delta.points.xs[p], self.delta.points.ys[p], self.delta.points.zs[p]);
+            ids.push(self.delta.ids[p]);
+        }
+        (pts, ids)
+    }
+
+    /// Translate a merged candidate index (from
+    /// [`crate::knn::merged::merged_knn_topk_on`]) to the point's stable id.
+    pub fn merged_index_to_id(&self, idx: u32) -> u64 {
+        let n_base = self.base.points.len() as u32;
+        if idx < n_base {
+            self.base_ids[idx as usize]
+        } else {
+            self.delta.ids[(idx - n_base) as usize]
+        }
+    }
+}
+
+/// What an append did.
+#[derive(Debug, Clone, Copy)]
+pub struct AppendOutcome {
+    /// First assigned id; the batch occupies `first_id..first_id+count`.
+    pub first_id: u64,
+    pub count: usize,
+    pub epoch: u64,
+    pub live_points: usize,
+    pub delta_points: usize,
+    /// Overlay pressure after the append (compaction trigger metric).
+    pub pressure: usize,
+}
+
+/// What a remove did.
+#[derive(Debug, Clone, Copy)]
+pub struct RemoveOutcome {
+    pub removed: usize,
+    pub epoch: u64,
+    pub live_points: usize,
+    pub tombstones: usize,
+    pub pressure: usize,
+}
+
+/// Point-in-time mutation/compaction statistics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LiveStatus {
+    pub epoch: u64,
+    pub base_points: usize,
+    pub delta_points: usize,
+    pub live_appends: usize,
+    pub tombstones: usize,
+    pub live_points: usize,
+    pub next_id: u64,
+    pub wal_records: u64,
+    pub compactions: u64,
+    pub persistent: bool,
+    pub compacting: bool,
+}
+
+/// What one compaction folded and carried.
+#[derive(Debug, Clone, Copy)]
+pub struct CompactionReport {
+    pub old_epoch: u64,
+    pub new_epoch: u64,
+    /// Overlay entries folded into the new base.
+    pub folded_appends: usize,
+    pub folded_tombstones: usize,
+    /// Mutations that raced the compaction and survive in the new overlay.
+    pub carried_appends: usize,
+    pub carried_tombstones: usize,
+    /// `Arc` strong references still holding the retired epoch base at
+    /// publish time — epoch-retirement verification (1 = nothing but the
+    /// report holds it; more = in-flight batches still draining).
+    pub retired_refs: usize,
+    /// True when there was nothing to fold.
+    pub noop: bool,
+}
+
+/// A registered dataset that accepts appends/removals without blocking
+/// readers.  See the module docs.
+#[derive(Debug)]
+pub struct LiveDataset {
+    name: String,
+    grid_cfg: GridConfig,
+    area_override: Option<f64>,
+    config: LiveConfig,
+    /// The published snapshot; writers briefly take the write lock to
+    /// swap in a new `Arc`, readers clone it out.
+    state: RwLock<Arc<LiveSnapshot>>,
+    /// Append-ordered durable log (None = in-memory dataset).
+    wal: Mutex<Option<Wal>>,
+    dir: Option<PathBuf>,
+    next_id: AtomicU64,
+    compacting: AtomicBool,
+    /// Set by [`LiveDataset::retire`]: no further compaction may touch
+    /// the durable files (the registry dropped or replaced this entry).
+    retired: AtomicBool,
+    /// Serializes actual compaction work (sync `compact` vs background).
+    compact_gate: Mutex<()>,
+    compact_handle: Mutex<Option<JoinHandle<()>>>,
+    compactions: AtomicU64,
+}
+
+impl LiveDataset {
+    /// In-memory live dataset over a freshly built epoch-0 grid.
+    pub fn build(
+        pool: &Pool,
+        name: &str,
+        points: PointSet,
+        grid_cfg: &GridConfig,
+        area_override: Option<f64>,
+        config: LiveConfig,
+    ) -> Result<LiveDataset> {
+        let n = points.len() as u64;
+        let ids: Vec<u64> = (0..n).collect();
+        Self::from_epoch(pool, name, points, ids, 0, n, grid_cfg, area_override, config, None, None)
+    }
+
+    /// Durable live dataset: writes the epoch-0 snapshot and a fresh WAL
+    /// under `dir` before returning.
+    pub fn build_persistent(
+        pool: &Pool,
+        name: &str,
+        points: PointSet,
+        grid_cfg: &GridConfig,
+        area_override: Option<f64>,
+        config: LiveConfig,
+        dir: &Path,
+    ) -> Result<LiveDataset> {
+        validate_dataset_name(name)?;
+        std::fs::create_dir_all(dir)?;
+        let n = points.len() as u64;
+        let ids: Vec<u64> = (0..n).collect();
+        wal::save_live_snapshot(dir, name, 0, n, &points, &ids, config.wal_sync)?;
+        let w = Wal::create(&wal::wal_path(dir, name), config.wal_sync)?;
+        Self::from_epoch(
+            pool,
+            name,
+            points,
+            ids,
+            0,
+            n,
+            grid_cfg,
+            area_override,
+            config,
+            Some(dir.to_path_buf()),
+            Some(w),
+        )
+    }
+
+    /// Restore from `dir`: load the last compacted snapshot, replay the
+    /// WAL over it (idempotently, trimming any torn tail), and reattach
+    /// the WAL for further appends.
+    pub fn load(
+        pool: &Pool,
+        name: &str,
+        dir: &Path,
+        grid_cfg: &GridConfig,
+        area_override: Option<f64>,
+        config: LiveConfig,
+    ) -> Result<LiveDataset> {
+        validate_dataset_name(name)?;
+        let snap_file = wal::load_live_snapshot(dir, name)?;
+        let path = wal::wal_path(dir, name);
+        let readout = wal::read_wal(&path)?;
+        let ds = Self::from_epoch(
+            pool,
+            name,
+            snap_file.points,
+            snap_file.ids,
+            snap_file.epoch,
+            snap_file.next_id,
+            grid_cfg,
+            area_override,
+            config,
+            Some(dir.to_path_buf()),
+            None, // attached below, after replay
+        )?;
+        for rec in &readout.records {
+            ds.replay(rec)?;
+        }
+        let wal = if readout.existed {
+            Wal::open_after_replay(
+                &path,
+                config.wal_sync,
+                readout.records.len() as u64,
+                readout.clean_len,
+            )?
+        } else {
+            Wal::create(&path, config.wal_sync)?
+        };
+        *ds.wal.lock().unwrap() = Some(wal);
+        Ok(ds)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn from_epoch(
+        pool: &Pool,
+        name: &str,
+        points: PointSet,
+        ids: Vec<u64>,
+        epoch: u64,
+        next_id: u64,
+        grid_cfg: &GridConfig,
+        area_override: Option<f64>,
+        config: LiveConfig,
+        dir: Option<PathBuf>,
+        wal: Option<Wal>,
+    ) -> Result<LiveDataset> {
+        if points.len() != ids.len() {
+            return Err(Error::InvalidArgument(format!(
+                "dataset '{name}': {} points but {} ids",
+                points.len(),
+                ids.len()
+            )));
+        }
+        let base = Arc::new(Dataset::build(pool, name, points, grid_cfg, area_override)?);
+        let live_bounds = base.points.bounds();
+        let live_len = base.points.len();
+        let snap = LiveSnapshot {
+            epoch,
+            base,
+            base_ids: Arc::new(ids),
+            delta: Arc::new(DeltaOverlay::default()),
+            live_bounds,
+            live_len,
+            area_override,
+        };
+        Ok(LiveDataset {
+            name: name.to_string(),
+            grid_cfg: *grid_cfg,
+            area_override,
+            config,
+            state: RwLock::new(Arc::new(snap)),
+            wal: Mutex::new(wal),
+            dir,
+            next_id: AtomicU64::new(next_id),
+            compacting: AtomicBool::new(false),
+            retired: AtomicBool::new(false),
+            compact_gate: Mutex::new(()),
+            compact_handle: Mutex::new(None),
+            compactions: AtomicU64::new(0),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn config(&self) -> &LiveConfig {
+        &self.config
+    }
+
+    /// The current published snapshot (the reader entry point).
+    pub fn snapshot(&self) -> Arc<LiveSnapshot> {
+        self.state.read().unwrap().clone()
+    }
+
+    /// Current epoch (what batch admission keys on).
+    pub fn epoch(&self) -> u64 {
+        self.state.read().unwrap().epoch
+    }
+
+    /// True when the overlay is non-empty (queries take the merged path).
+    pub fn is_mutated(&self) -> bool {
+        !self.state.read().unwrap().delta.is_empty()
+    }
+
+    /// Append points; assigns consecutive stable ids and logs to the WAL
+    /// before publishing.
+    pub fn append(&self, pts: &PointSet) -> Result<AppendOutcome> {
+        self.apply_append(None, pts, true)
+    }
+
+    /// Tombstone live points by id.  Strict: every id must be live, or
+    /// the whole request is rejected and nothing mutates.
+    pub fn remove(&self, ids: &[u64]) -> Result<RemoveOutcome> {
+        self.apply_remove(ids, true, true)
+    }
+
+    /// Shared append core.  `explicit_ids` is the replay path (ids from
+    /// the log, possibly non-contiguous after per-point dedup); `None`
+    /// assigns a fresh consecutive range under the write lock.
+    fn apply_append(
+        &self,
+        explicit_ids: Option<&[u64]>,
+        pts: &PointSet,
+        log: bool,
+    ) -> Result<AppendOutcome> {
+        if pts.is_empty() {
+            return Err(Error::InvalidArgument("append of zero points".into()));
+        }
+        for v in pts.xs.iter().chain(&pts.ys).chain(&pts.zs) {
+            if !v.is_finite() {
+                return Err(Error::InvalidArgument("non-finite coordinate in append".into()));
+            }
+        }
+        let mut state = self.state.write().unwrap();
+        let cur = state.clone();
+        let ids: Vec<u64> = match explicit_ids {
+            Some(ids) => ids.to_vec(),
+            None => {
+                let first = self.next_id.load(Ordering::SeqCst);
+                (first..first + pts.len() as u64).collect()
+            }
+        };
+        let first_id = ids[0];
+        // WAL before memory: an IO failure must leave the dataset
+        // unchanged (public appends are contiguous by construction, so
+        // one record with first_id covers the whole batch)
+        if log {
+            if let Some(w) = self.wal.lock().unwrap().as_mut() {
+                w.append(&WalRecord::Append { first_id, points: pts.clone() })?;
+            }
+        }
+        self.next_id.fetch_max(ids[ids.len() - 1] + 1, Ordering::SeqCst);
+        let delta = Arc::new(cur.delta.with_appends(pts, &ids));
+        let mut bounds = cur.live_bounds;
+        for i in 0..pts.len() {
+            bounds.extend(pts.xs[i], pts.ys[i]);
+        }
+        let snap = LiveSnapshot {
+            epoch: cur.epoch,
+            base: cur.base.clone(),
+            base_ids: cur.base_ids.clone(),
+            live_bounds: bounds,
+            live_len: cur.live_len + pts.len(),
+            area_override: cur.area_override,
+            delta,
+        };
+        let out = AppendOutcome {
+            first_id,
+            count: pts.len(),
+            epoch: snap.epoch,
+            live_points: snap.live_len,
+            delta_points: snap.delta.points.len(),
+            pressure: snap.delta.pressure(),
+        };
+        *state = Arc::new(snap);
+        Ok(out)
+    }
+
+    fn resolve_live(&self, snap: &LiveSnapshot, id: u64) -> Option<LiveLocation> {
+        if let Ok(pos) = snap.base_ids.binary_search(&id) {
+            let idx = pos as u32;
+            if snap.delta.base_dead.contains(&idx) {
+                None
+            } else {
+                Some(LiveLocation::Base(idx))
+            }
+        } else if let Some(pos) = snap.delta.find_id(id) {
+            if snap.delta.delta_live(pos as usize) {
+                Some(LiveLocation::Delta(pos))
+            } else {
+                None
+            }
+        } else {
+            None
+        }
+    }
+
+    fn apply_remove(&self, ids: &[u64], log: bool, strict: bool) -> Result<RemoveOutcome> {
+        if ids.is_empty() {
+            return Err(Error::InvalidArgument("remove of zero ids".into()));
+        }
+        let mut state = self.state.write().unwrap();
+        let cur = state.clone();
+        let mut removals = Vec::with_capacity(ids.len());
+        let mut seen = HashSet::with_capacity(ids.len());
+        for &id in ids {
+            let duplicate = !seen.insert(id);
+            match self.resolve_live(&cur, id) {
+                Some(loc) if !duplicate => removals.push((id, loc)),
+                _ if strict => {
+                    return Err(Error::InvalidArgument(format!(
+                        "id {id} is not a live point of dataset '{}'",
+                        self.name
+                    )));
+                }
+                _ => {} // replay: already applied — skip
+            }
+        }
+        if removals.is_empty() {
+            // replay no-op
+            return Ok(RemoveOutcome {
+                removed: 0,
+                epoch: cur.epoch,
+                live_points: cur.live_len,
+                tombstones: cur.delta.tombstones.len(),
+                pressure: cur.delta.pressure(),
+            });
+        }
+        if cur.live_len <= removals.len() {
+            return Err(Error::InvalidArgument(format!(
+                "removing {} point(s) would leave dataset '{}' empty",
+                removals.len(),
+                self.name
+            )));
+        }
+        if log {
+            let logged: Vec<u64> = removals.iter().map(|&(id, _)| id).collect();
+            if let Some(w) = self.wal.lock().unwrap().as_mut() {
+                w.append(&WalRecord::Remove { ids: logged })?;
+            }
+        }
+        let delta = Arc::new(cur.delta.with_removals(&removals));
+        // the bounds shrink only if a removed point sat on the rectangle;
+        // recompute exactly in that case (O(live), rare)
+        let mut bounds = cur.live_bounds;
+        let on_boundary = removals.iter().any(|&(_, loc)| {
+            let (x, y) = match loc {
+                LiveLocation::Base(i) => {
+                    (cur.base.points.xs[i as usize], cur.base.points.ys[i as usize])
+                }
+                LiveLocation::Delta(p) => {
+                    (cur.delta.points.xs[p as usize], cur.delta.points.ys[p as usize])
+                }
+            };
+            x == bounds.min_x || x == bounds.max_x || y == bounds.min_y || y == bounds.max_y
+        });
+        if on_boundary {
+            bounds = live_bounds_of(&cur.base.points, &delta);
+        }
+        let snap = LiveSnapshot {
+            epoch: cur.epoch,
+            base: cur.base.clone(),
+            base_ids: cur.base_ids.clone(),
+            live_bounds: bounds,
+            live_len: cur.live_len - removals.len(),
+            area_override: cur.area_override,
+            delta,
+        };
+        let out = RemoveOutcome {
+            removed: removals.len(),
+            epoch: snap.epoch,
+            live_points: snap.live_len,
+            tombstones: snap.delta.tombstones.len(),
+            pressure: snap.delta.pressure(),
+        };
+        *state = Arc::new(snap);
+        Ok(out)
+    }
+
+    /// Idempotent application of one replayed WAL record.
+    fn replay(&self, rec: &WalRecord) -> Result<()> {
+        match rec {
+            WalRecord::Append { first_id, points } => {
+                // keep the id counter ahead even when skipping everything
+                self.next_id
+                    .fetch_max(first_id + points.len() as u64, Ordering::SeqCst);
+                // per-point idempotency: a crash between the compaction
+                // snapshot rename and the WAL reset leaves records whose
+                // batches are *partially* folded (a folded-then-removed id
+                // is in neither the base nor the delta).  Re-add exactly
+                // the absent ids; the Remove records that follow in the
+                // log re-tombstone any that were dead before the crash.
+                let snap = self.snapshot();
+                let mut pts = PointSet::default();
+                let mut ids = Vec::new();
+                for i in 0..points.len() {
+                    let id = first_id + i as u64;
+                    let present = snap.base_ids.binary_search(&id).is_ok()
+                        || snap.delta.find_id(id).is_some();
+                    if !present {
+                        pts.push(points.xs[i], points.ys[i], points.zs[i]);
+                        ids.push(id);
+                    }
+                }
+                if pts.is_empty() {
+                    return Ok(()); // fully folded already
+                }
+                self.apply_append(Some(&ids), &pts, false).map(|_| ())
+            }
+            WalRecord::Remove { ids } => self.apply_remove(ids, false, false).map(|_| ()),
+        }
+    }
+
+    /// Synchronously fold the overlay into a new epoch base, publish it
+    /// (memory + disk), and truncate the WAL to the mutations that raced
+    /// this compaction.  The grid rebuild, snapshot write, and fresh-WAL
+    /// staging all run off the state lock; the write-lock section is the
+    /// overlay diff, the (rare, small) carried-record appends, one
+    /// rename, and the pointer swap.
+    pub fn compact_now(&self) -> Result<CompactionReport> {
+        let _gate = self.compact_gate.lock().unwrap();
+        let snap = self.snapshot();
+        if self.retired.load(Ordering::SeqCst) || snap.delta.is_empty() {
+            return Ok(CompactionReport {
+                old_epoch: snap.epoch,
+                new_epoch: snap.epoch,
+                folded_appends: 0,
+                folded_tombstones: 0,
+                carried_appends: 0,
+                carried_tombstones: 0,
+                retired_refs: 0,
+                noop: true,
+            });
+        }
+        // 1. rebuild off-lock from the captured snapshot
+        let (merged, merged_ids) = snap.live_points();
+        let new_epoch = snap.epoch + 1;
+        let base = Arc::new(Dataset::build(
+            crate::pool::global(),
+            &self.name,
+            merged,
+            &self.grid_cfg,
+            self.area_override,
+        )?);
+        let base_ids = Arc::new(merged_ids);
+        // 2. durable publish (atomic rename) before the in-memory swap; a
+        //    crash after this point is healed by idempotent WAL replay.
+        //    The replacement WAL is *staged* here too (file create +
+        //    header + fsync off the hot lock); only the carried-record
+        //    appends and the rename happen under the lock below.
+        let mut staged_wal = match &self.dir {
+            Some(dir) => {
+                wal::save_live_snapshot(
+                    dir,
+                    &self.name,
+                    new_epoch,
+                    self.next_id.load(Ordering::SeqCst),
+                    &base.points,
+                    &base_ids,
+                    self.config.wal_sync,
+                )?;
+                Some(wal::StagedWal::stage(
+                    &wal::wal_path(dir, &self.name),
+                    self.config.wal_sync,
+                )?)
+            }
+            None => None,
+        };
+        // 3. swap: diff the overlay now against the captured one — the
+        //    in-epoch append-only invariant makes this a suffix + a
+        //    tombstone set difference
+        let mut state = self.state.write().unwrap();
+        let cur = state.clone();
+        let captured_appends = snap.delta.points.len();
+        let mut delta = DeltaOverlay::default();
+        for p in captured_appends..cur.delta.points.len() {
+            delta.points.push(
+                cur.delta.points.xs[p],
+                cur.delta.points.ys[p],
+                cur.delta.points.zs[p],
+            );
+            delta.ids.push(cur.delta.ids[p]);
+        }
+        let mut carried_tombs: Vec<u64> = cur
+            .delta
+            .tombstones
+            .difference(&snap.delta.tombstones)
+            .copied()
+            .collect();
+        carried_tombs.sort_unstable();
+        for &t in &carried_tombs {
+            delta.tombstones.insert(t);
+            if let Ok(pos) = base_ids.binary_search(&t) {
+                delta.base_dead.insert(pos as u32);
+            } else if let Some(pos) = delta.find_id(t) {
+                delta.delta_dead.insert(pos);
+            }
+        }
+        // reset the WAL to exactly the carried overlay: one append record
+        // per contiguous id run (runs are whole append batches in
+        // practice, but replayed WALs may carry gaps)
+        if let Some(staged) = staged_wal.as_mut() {
+            let mut run_start = 0usize;
+            for p in 0..=delta.points.len() {
+                let run_ends = p == delta.points.len()
+                    || (p > run_start && delta.ids[p] != delta.ids[p - 1] + 1);
+                if run_ends {
+                    if run_start < p {
+                        let mut pts = PointSet::with_capacity(p - run_start);
+                        for q in run_start..p {
+                            pts.push(delta.points.xs[q], delta.points.ys[q], delta.points.zs[q]);
+                        }
+                        staged.append(&WalRecord::Append {
+                            first_id: delta.ids[run_start],
+                            points: pts,
+                        })?;
+                    }
+                    run_start = p;
+                }
+            }
+            if !carried_tombs.is_empty() {
+                staged.append(&WalRecord::Remove { ids: carried_tombs.clone() })?;
+            }
+        }
+        if let Some(staged) = staged_wal.take() {
+            *self.wal.lock().unwrap() = Some(staged.publish()?);
+        }
+        let report = CompactionReport {
+            old_epoch: snap.epoch,
+            new_epoch,
+            folded_appends: captured_appends,
+            folded_tombstones: snap.delta.tombstones.len(),
+            carried_appends: delta.points.len(),
+            carried_tombstones: carried_tombs.len(),
+            // the epoch being retired: the captured snapshot's base
+            retired_refs: Arc::strong_count(&cur.base),
+            noop: false,
+        };
+        *state = Arc::new(LiveSnapshot {
+            epoch: new_epoch,
+            base,
+            base_ids,
+            delta: Arc::new(delta),
+            live_bounds: cur.live_bounds,
+            live_len: cur.live_len,
+            area_override: cur.area_override,
+        });
+        drop(state);
+        self.compactions.fetch_add(1, Ordering::SeqCst);
+        Ok(report)
+    }
+
+    /// Spawn a background compaction when auto-compaction is on, the
+    /// pressure threshold is crossed, and none is already running.
+    /// Returns whether one was spawned.
+    pub fn maybe_spawn_compaction(this: &Arc<LiveDataset>) -> bool {
+        if !this.config.auto_compact {
+            return false;
+        }
+        if this.snapshot().delta.pressure() < this.config.compact_threshold {
+            return false;
+        }
+        if this.compacting.swap(true, Ordering::SeqCst) {
+            return false; // already running
+        }
+        let mut slot = this.compact_handle.lock().unwrap();
+        if let Some(h) = slot.take() {
+            let _ = h.join(); // previous run already finished (flag was clear)
+        }
+        let me = this.clone();
+        match std::thread::Builder::new()
+            .name("aidw-compact".into())
+            .spawn(move || {
+                if let Err(e) = me.compact_now() {
+                    eprintln!("aidw: background compaction of '{}' failed: {e}", me.name);
+                }
+                me.compacting.store(false, Ordering::SeqCst);
+            }) {
+            Ok(h) => {
+                *slot = Some(h);
+                true
+            }
+            Err(_) => {
+                this.compacting.store(false, Ordering::SeqCst);
+                false
+            }
+        }
+    }
+
+    /// Mutation/compaction statistics.
+    pub fn status(&self) -> LiveStatus {
+        let snap = self.snapshot();
+        LiveStatus {
+            epoch: snap.epoch,
+            base_points: snap.base.points.len(),
+            delta_points: snap.delta.points.len(),
+            live_appends: snap.delta.live_appends(),
+            tombstones: snap.delta.tombstones.len(),
+            live_points: snap.live_len,
+            next_id: self.next_id.load(Ordering::SeqCst),
+            wal_records: self.wal.lock().unwrap().as_ref().map(|w| w.records()).unwrap_or(0),
+            compactions: self.compactions.load(Ordering::SeqCst),
+            persistent: self.dir.is_some(),
+            compacting: self.compacting.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Permanently detach this dataset from its durable files: after
+    /// `retire` returns, no compaction (background or an in-flight
+    /// synchronous one on another thread) will write the `.live`/`.wal`
+    /// files again, so the caller can safely delete or overwrite them.
+    /// Registry drop/replace paths call this before touching the disk.
+    pub fn retire(&self) {
+        self.retired.store(true, Ordering::SeqCst);
+        self.shutdown();
+        // wait out any synchronous compact_now already past the retired
+        // check — it holds the gate for its whole run, publish included
+        drop(self.compact_gate.lock().unwrap());
+    }
+
+    /// Join any in-flight background compaction (shutdown hygiene —
+    /// temp-dir tests and clean process exit must not race the WAL).
+    pub fn shutdown(&self) {
+        if let Some(h) = self.compact_handle.lock().unwrap().take() {
+            if h.thread().id() == std::thread::current().id() {
+                // the compactor itself dropped the last Arc: joining
+                // ourselves would deadlock, and there is nothing to wait
+                // for — the compaction already finished
+                return;
+            }
+            let _ = h.join();
+        }
+    }
+
+    /// The k nearest live points per query as ascending `(d2, stable id)`
+    /// pairs — the oracle the incremental-vs-rebuild property test uses.
+    pub fn knn_topk_ids(
+        &self,
+        pool: &Pool,
+        queries: &[(f64, f64)],
+        k: usize,
+    ) -> Vec<Vec<(f64, u64)>> {
+        let snap = self.snapshot();
+        let view = snap.merged_view();
+        crate::knn::merged::merged_knn_topk_on(pool, &view, queries, k)
+            .into_iter()
+            .map(|row| {
+                row.into_iter()
+                    .map(|(d2, idx)| (d2, snap.merged_index_to_id(idx)))
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+impl Drop for LiveDataset {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Exact bounds of the live point set (base minus tombstones, plus live
+/// appends), in the same fold order the fresh-registration path uses.
+fn live_bounds_of(base: &PointSet, delta: &DeltaOverlay) -> Aabb {
+    let mut b = Aabb::EMPTY;
+    for i in 0..base.len() {
+        if delta.base_dead.contains(&(i as u32)) {
+            continue;
+        }
+        b.extend(base.xs[i], base.ys[i]);
+    }
+    for p in 0..delta.points.len() {
+        if delta.delta_live(p) {
+            b.extend(delta.points.xs[p], delta.points.ys[p]);
+        }
+    }
+    b
+}
+
+/// Stage-2 dense weighting over the live set: Eq.-1 sums over base-live
+/// points in base order, then live appends in append order — the exact
+/// summation sequence `weighted_stage_on` would use over the materialized
+/// merged set, so live answers are bit-identical to a fresh registration.
+pub fn merged_weighted_stage_on(
+    pool: &Pool,
+    snap: &LiveSnapshot,
+    queries: &[(f64, f64)],
+    alphas: &[f64],
+) -> Vec<f64> {
+    assert_eq!(queries.len(), alphas.len());
+    let base = &snap.base.points;
+    let delta = &snap.delta;
+    let no_base_dead = delta.base_dead.is_empty();
+    let mut out = vec![0f64; queries.len()];
+    pool.for_each_slice_mut(&mut out, 16, |offset, chunk| {
+        for (j, slot) in chunk.iter_mut().enumerate() {
+            let (qx, qy) = queries[offset + j];
+            let a = alphas[offset + j];
+            let mut sw = 0.0f64;
+            let mut swz = 0.0f64;
+            if no_base_dead {
+                for i in 0..base.len() {
+                    let d2 = dist2(qx, qy, base.xs[i], base.ys[i]).max(EPS_D2);
+                    let w = (-0.5 * a * d2.ln()).exp();
+                    sw += w;
+                    swz += w * base.zs[i];
+                }
+            } else {
+                for i in 0..base.len() {
+                    if delta.base_dead.contains(&(i as u32)) {
+                        continue;
+                    }
+                    let d2 = dist2(qx, qy, base.xs[i], base.ys[i]).max(EPS_D2);
+                    let w = (-0.5 * a * d2.ln()).exp();
+                    sw += w;
+                    swz += w * base.zs[i];
+                }
+            }
+            for p in 0..delta.points.len() {
+                if !delta.delta_live(p) {
+                    continue;
+                }
+                let d2 =
+                    dist2(qx, qy, delta.points.xs[p], delta.points.ys[p]).max(EPS_D2);
+                let w = (-0.5 * a * d2.ln()).exp();
+                sw += w;
+                swz += w * delta.points.zs[p];
+            }
+            *slot = swz / sw;
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("aidw_live_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn build_mem(n: usize, seed: u64) -> LiveDataset {
+        let pool = Pool::new(2);
+        let pts = workload::uniform_square(n, 50.0, seed);
+        LiveDataset::build(&pool, "d", pts, &GridConfig::default(), None, LiveConfig::default())
+            .unwrap()
+    }
+
+    #[test]
+    fn append_remove_bookkeeping() {
+        let ds = build_mem(100, 801);
+        assert_eq!(ds.epoch(), 0);
+        assert!(!ds.is_mutated());
+        let extra = workload::uniform_square(10, 50.0, 802);
+        let a = ds.append(&extra).unwrap();
+        assert_eq!(a.first_id, 100);
+        assert_eq!(a.count, 10);
+        assert_eq!(a.live_points, 110);
+        assert!(ds.is_mutated());
+        // remove one base point and one appended point
+        let r = ds.remove(&[5, 103]).unwrap();
+        assert_eq!(r.removed, 2);
+        assert_eq!(r.live_points, 108);
+        assert_eq!(r.tombstones, 2);
+        // strict semantics: unknown, double-remove, and duplicate ids fail
+        assert!(ds.remove(&[5]).is_err(), "already removed");
+        assert!(ds.remove(&[9999]).is_err(), "unknown id");
+        assert!(ds.remove(&[7, 7]).is_err(), "duplicate in one request");
+        // the failed request mutated nothing
+        assert_eq!(ds.status().live_points, 108);
+        let st = ds.status();
+        assert_eq!(st.epoch, 0);
+        assert_eq!(st.base_points, 100);
+        assert_eq!(st.delta_points, 10);
+        assert_eq!(st.next_id, 110);
+        assert!(!st.persistent);
+    }
+
+    #[test]
+    fn cannot_remove_every_live_point() {
+        let pool = Pool::new(1);
+        let pts = workload::uniform_square(3, 10.0, 803);
+        let ds = LiveDataset::build(
+            &pool,
+            "d",
+            pts,
+            &GridConfig::default(),
+            None,
+            LiveConfig::default(),
+        )
+        .unwrap();
+        assert!(ds.remove(&[0, 1, 2]).is_err());
+        ds.remove(&[0, 1]).unwrap();
+        assert!(ds.remove(&[2]).is_err(), "last live point is protected");
+    }
+
+    #[test]
+    fn snapshot_isolation_across_mutations() {
+        let ds = build_mem(50, 804);
+        let before = ds.snapshot();
+        ds.append(&workload::uniform_square(5, 50.0, 805)).unwrap();
+        ds.remove(&[0]).unwrap();
+        assert_eq!(before.live_len, 50, "held snapshot is immutable");
+        assert!(before.delta.is_empty());
+        assert_eq!(ds.snapshot().live_len, 54);
+    }
+
+    #[test]
+    fn compaction_bumps_epoch_and_preserves_live_set() {
+        let ds = build_mem(200, 806);
+        let extra = workload::uniform_square(30, 50.0, 807);
+        ds.append(&extra).unwrap();
+        ds.remove(&[3, 7, 201]).unwrap();
+        let pool = Pool::new(2);
+        let queries = workload::uniform_square(40, 50.0, 808).xy();
+        let before = ds.knn_topk_ids(&pool, &queries, 10);
+        let (live_before, ids_before) = ds.snapshot().live_points();
+
+        let rep = ds.compact_now().unwrap();
+        assert!(!rep.noop);
+        assert_eq!((rep.old_epoch, rep.new_epoch), (0, 1));
+        assert_eq!(rep.folded_appends, 30);
+        assert_eq!(rep.folded_tombstones, 3);
+        assert_eq!(rep.carried_appends, 0);
+        assert!(rep.retired_refs >= 1);
+        assert_eq!(ds.epoch(), 1);
+        assert!(!ds.is_mutated());
+
+        let (live_after, ids_after) = ds.snapshot().live_points();
+        assert_eq!(live_before.xs, live_after.xs);
+        assert_eq!(live_before.zs, live_after.zs);
+        assert_eq!(ids_before, ids_after);
+        // kNN ids + distances identical across the epoch swap
+        let after = ds.knn_topk_ids(&pool, &queries, 10);
+        assert_eq!(before, after);
+        // idempotent: nothing left to fold
+        assert!(ds.compact_now().unwrap().noop);
+        // ids remain stable: removing a pre-compaction id still works
+        ds.remove(&[10]).unwrap();
+        assert!(ds.remove(&[3]).is_err(), "id folded away stays dead");
+    }
+
+    #[test]
+    fn bounds_shrink_when_boundary_point_removed() {
+        let pool = Pool::new(1);
+        let mut pts = PointSet::default();
+        for i in 0..20 {
+            pts.push(i as f64 % 5.0, (i / 5) as f64, 1.0);
+        }
+        pts.push(100.0, 100.0, 2.0); // the outlier, id 20
+        let ds = LiveDataset::build(
+            &pool,
+            "d",
+            pts,
+            &GridConfig::default(),
+            None,
+            LiveConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(ds.snapshot().live_bounds.max_x, 100.0);
+        ds.remove(&[20]).unwrap();
+        let snap = ds.snapshot();
+        assert_eq!(snap.live_bounds.max_x, 4.0);
+        assert_eq!(snap.live_bounds.max_y, 3.0);
+        // r_exp now reflects the shrunken live region exactly
+        let (live, _) = snap.live_points();
+        let fresh_area = live.bounds().area().max(f64::MIN_POSITIVE);
+        assert_eq!(snap.area(), fresh_area);
+    }
+
+    #[test]
+    fn persistence_roundtrip_with_wal_replay() {
+        let dir = tmpdir("roundtrip");
+        let pool = Pool::new(2);
+        let pts = workload::uniform_square(120, 50.0, 809);
+        let cfg = LiveConfig::default();
+        {
+            let ds = LiveDataset::build_persistent(
+                &pool,
+                "d",
+                pts.clone(),
+                &GridConfig::default(),
+                None,
+                cfg,
+                &dir,
+            )
+            .unwrap();
+            ds.append(&workload::uniform_square(15, 50.0, 810)).unwrap();
+            ds.remove(&[2, 11, 130]).unwrap();
+            // no graceful save: the WAL is the only record of the mutations
+        }
+        let back = LiveDataset::load(&pool, "d", &dir, &GridConfig::default(), None, cfg).unwrap();
+        let st = back.status();
+        assert_eq!(st.epoch, 0);
+        assert_eq!(st.live_points, 132);
+        assert_eq!(st.tombstones, 3);
+        assert_eq!(st.next_id, 135);
+        assert_eq!(st.wal_records, 2);
+        // a second replay cycle is byte-stable (idempotence)
+        drop(back);
+        let again = LiveDataset::load(&pool, "d", &dir, &GridConfig::default(), None, cfg).unwrap();
+        assert_eq!(again.status().live_points, 132);
+        // compaction truncates the WAL and survives restart
+        again.compact_now().unwrap();
+        assert_eq!(again.status().wal_records, 0);
+        drop(again);
+        let last = LiveDataset::load(&pool, "d", &dir, &GridConfig::default(), None, cfg).unwrap();
+        let st = last.status();
+        assert_eq!(st.epoch, 1);
+        assert_eq!(st.live_points, 132);
+        assert_eq!(st.tombstones, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crash_between_snapshot_publish_and_wal_reset_replays_clean() {
+        // the compaction publish sequence is: (1) rename new snapshot,
+        // (2) reset WAL.  A crash between the two leaves the *old* WAL
+        // next to the *new* snapshot; replay must not resurrect folded
+        // points — including the partial-fold case where some ids of an
+        // append batch were folded in and others were folded *away* by a
+        // pre-compaction removal.
+        let dir = tmpdir("crashwin");
+        let pool = Pool::new(2);
+        let cfg = LiveConfig::default();
+        let base = workload::uniform_square(50, 20.0, 821);
+        let ds = LiveDataset::build_persistent(
+            &pool,
+            "d",
+            base,
+            &GridConfig::default(),
+            None,
+            cfg,
+            &dir,
+        )
+        .unwrap();
+        ds.append(&workload::uniform_square(5, 20.0, 822)).unwrap(); // ids 50..55
+        ds.remove(&[50, 7]).unwrap(); // one delta id, one base id
+        let wal_file = wal::wal_path(&dir, "d");
+        let old_wal = std::fs::read(&wal_file).unwrap();
+        let live_before = ds.snapshot().live_points().0;
+
+        ds.compact_now().unwrap(); // snapshot renamed AND WAL reset...
+        std::fs::write(&wal_file, &old_wal).unwrap(); // ...un-reset: the crash window
+        drop(ds);
+
+        let back = LiveDataset::load(&pool, "d", &dir, &GridConfig::default(), None, cfg).unwrap();
+        let st = back.status();
+        assert_eq!(st.live_points, 53, "no duplicates, no resurrections");
+        let (live_after, ids_after) = back.snapshot().live_points();
+        assert_eq!(live_before.xs, live_after.xs, "replay over new snapshot is exact");
+        assert_eq!(live_before.zs, live_after.zs);
+        // ids are unique and the folded-away ones stay dead
+        let mut sorted = ids_after.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 53, "every live id appears exactly once");
+        assert!(back.remove(&[50]).is_err(), "folded-away delta id stays dead");
+        assert!(back.remove(&[7]).is_err(), "folded-away base id stays dead");
+        back.remove(&[51]).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retire_blocks_further_durable_writes() {
+        let dir = tmpdir("retire");
+        let pool = Pool::new(1);
+        let ds = LiveDataset::build_persistent(
+            &pool,
+            "d",
+            workload::uniform_square(40, 10.0, 823),
+            &GridConfig::default(),
+            None,
+            LiveConfig::default(),
+            &dir,
+        )
+        .unwrap();
+        ds.append(&workload::uniform_square(4, 10.0, 824)).unwrap();
+        ds.retire();
+        let rep = ds.compact_now().unwrap();
+        assert!(rep.noop, "retired datasets never compact");
+        // the registry-side deletion cannot be raced into resurrection
+        std::fs::remove_file(wal::live_path(&dir, "d")).unwrap();
+        std::fs::remove_file(wal::wal_path(&dir, "d")).unwrap();
+        assert!(ds.compact_now().unwrap().noop);
+        assert!(!wal::live_path(&dir, "d").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn auto_compaction_triggers_on_pressure() {
+        let pool = Pool::new(2);
+        let pts = workload::uniform_square(64, 50.0, 811);
+        let cfg = LiveConfig { compact_threshold: 8, ..Default::default() };
+        let ds = Arc::new(
+            LiveDataset::build(&pool, "d", pts, &GridConfig::default(), None, cfg).unwrap(),
+        );
+        ds.append(&workload::uniform_square(4, 50.0, 812)).unwrap();
+        assert!(!LiveDataset::maybe_spawn_compaction(&ds), "below threshold");
+        ds.append(&workload::uniform_square(4, 50.0, 813)).unwrap();
+        assert!(LiveDataset::maybe_spawn_compaction(&ds));
+        ds.shutdown(); // join the background run
+        assert_eq!(ds.epoch(), 1);
+        assert!(!ds.is_mutated());
+        assert_eq!(ds.status().compactions, 1);
+    }
+
+    #[test]
+    fn mutations_racing_compaction_are_carried_not_lost() {
+        // deterministic version of the race: mutate between the capture
+        // and the publish by mutating after snapshot() but calling the
+        // internals in the same order compact_now does — here we simply
+        // mutate from another thread while compacting repeatedly
+        let ds = Arc::new(build_mem(300, 814));
+        ds.append(&workload::uniform_square(20, 50.0, 815)).unwrap();
+        let writer = {
+            let ds = ds.clone();
+            std::thread::spawn(move || {
+                for i in 0..10 {
+                    ds.append(&workload::uniform_square(5, 50.0, 900 + i)).unwrap();
+                    ds.remove(&[i]).unwrap();
+                }
+            })
+        };
+        for _ in 0..5 {
+            ds.compact_now().unwrap();
+        }
+        writer.join().unwrap();
+        ds.compact_now().unwrap();
+        let st = ds.status();
+        // 300 + 20 + 50 appends − 10 removals
+        assert_eq!(st.live_points, 360);
+        assert_eq!(st.tombstones, 0, "fully folded");
+        let (live, _) = ds.snapshot().live_points();
+        assert_eq!(live.len(), 360);
+    }
+}

@@ -1,0 +1,125 @@
+//! Thread-safe name → [`LiveDataset`] map — the live counterpart of
+//! [`crate::coordinator::DatasetRegistry`], with the same replace-path
+//! contract: `insert` hands back the displaced entry so the caller can
+//! retire it deliberately (join its compactor, log the epoch) instead of
+//! silently dropping a dataset that may have a background thread and a
+//! WAL attached.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::error::{Error, Result};
+
+use super::LiveDataset;
+
+/// Thread-safe name -> live dataset map.
+#[derive(Debug, Default)]
+pub struct LiveRegistry {
+    map: RwLock<HashMap<String, Arc<LiveDataset>>>,
+}
+
+impl LiveRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or replace) a dataset; returns the displaced entry on
+    /// replace.
+    pub fn insert(&self, ds: LiveDataset) -> Option<Arc<LiveDataset>> {
+        let ds = Arc::new(ds);
+        self.map.write().unwrap().insert(ds.name().to_string(), ds)
+    }
+
+    /// Fetch by name.
+    pub fn get(&self, name: &str) -> Result<Arc<LiveDataset>> {
+        self.map
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::UnknownDataset(name.to_string()))
+    }
+
+    /// Remove a dataset, returning it so the caller can shut it down.
+    pub fn remove(&self, name: &str) -> Option<Arc<LiveDataset>> {
+        self.map.write().unwrap().remove(name)
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.map.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Every registered dataset (snapshot of the map).
+    pub fn all(&self) -> Vec<Arc<LiveDataset>> {
+        let mut v: Vec<(String, Arc<LiveDataset>)> = self
+            .map
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v.into_iter().map(|(_, ds)| ds).collect()
+    }
+
+    /// Join every dataset's background compactor (coordinator shutdown).
+    pub fn shutdown_all(&self) {
+        for ds in self.all() {
+            ds.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::GridConfig;
+    use crate::live::LiveConfig;
+    use crate::pool::Pool;
+    use crate::workload;
+
+    fn build(n: usize, seed: u64) -> LiveDataset {
+        let pool = Pool::new(1);
+        LiveDataset::build(
+            &pool,
+            "d",
+            workload::uniform_square(n, 10.0, seed),
+            &GridConfig::default(),
+            None,
+            LiveConfig::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn insert_get_replace_remove() {
+        let reg = LiveRegistry::new();
+        assert!(reg.is_empty());
+        assert!(reg.insert(build(50, 821)).is_none());
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.get("d").unwrap().snapshot().live_len, 50);
+        assert!(reg.get("nope").is_err());
+        // replace returns the displaced dataset for deliberate retirement
+        let old = reg.insert(build(80, 822)).expect("displaced");
+        assert_eq!(old.snapshot().live_len, 50);
+        old.shutdown();
+        assert_eq!(reg.get("d").unwrap().snapshot().live_len, 80);
+        assert_eq!(reg.names(), vec!["d".to_string()]);
+        let removed = reg.remove("d").expect("was registered");
+        removed.shutdown();
+        assert!(reg.remove("d").is_none());
+        assert!(reg.is_empty());
+        reg.shutdown_all();
+    }
+}

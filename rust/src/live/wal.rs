@@ -1,0 +1,579 @@
+//! Durability for live datasets: a per-dataset write-ahead log plus a
+//! compacted binary snapshot, in the `AIDWSNP1` spirit (little-endian,
+//! magic-tagged, no serde).
+//!
+//! On-disk layout per dataset under the live directory:
+//!
+//! ```text
+//! <name>.live   magic "AIDWLSS1" | u64 epoch | u64 next_id | u64 n
+//!               | n×f64 xs | n×f64 ys | n×f64 zs | n×u64 ids
+//! <name>.wal    magic "AIDWWAL1" | record*
+//! record        u8 tag | u64 payload_len | payload
+//!   tag 1       append: u64 first_id | u64 count | count×f64 xs|ys|zs
+//!   tag 2       remove: u64 count | count×u64 ids
+//! ```
+//!
+//! Restart replays the WAL over the last compacted snapshot.  Replay is
+//! **idempotent** (appends whose ids already exist and removes of absent
+//! ids are skipped), which makes the compaction publish sequence safe: a
+//! crash between the snapshot rename and the WAL reset merely re-applies
+//! records the new snapshot already folded in.  A torn tail (crash mid
+//! `write`) is detected and truncated on reopen, never propagated.
+//!
+//! Writers are unbuffered — one `write_all` per record — and optionally
+//! `sync_data` each record (`wal_sync`); without sync a flushed record
+//! still survives any process kill short of an OS/power failure.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::snapshot::validate_dataset_name;
+use crate::error::{Error, Result};
+use crate::geom::PointSet;
+
+const WAL_MAGIC: &[u8; 8] = b"AIDWWAL1";
+const SNAP_MAGIC: &[u8; 8] = b"AIDWLSS1";
+
+const TAG_APPEND: u8 = 1;
+const TAG_REMOVE: u8 = 2;
+
+/// Sanity cap shared with the v1 snapshot reader: reject obviously
+/// corrupt headers before allocating.
+const MAX_PLAUSIBLE: u64 = 1 << 33;
+
+/// One durable mutation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalRecord {
+    /// Points appended under consecutive ids starting at `first_id`.
+    Append { first_id: u64, points: PointSet },
+    /// Live ids tombstoned.
+    Remove { ids: Vec<u64> },
+}
+
+/// `<dir>/<name>.live` — the compacted snapshot.
+pub fn live_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{name}.live"))
+}
+
+/// `<dir>/<name>.wal` — the write-ahead log.
+pub fn wal_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{name}.wal"))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Dot-prefixed sibling used for atomic tmp-write-then-rename publishes.
+fn tmp_path(path: &Path) -> PathBuf {
+    let file = path
+        .file_name()
+        .and_then(|f| f.to_str())
+        .unwrap_or("live");
+    path.with_file_name(format!(".{file}.tmp"))
+}
+
+// ---- live snapshot ------------------------------------------------------
+
+/// A decoded `<name>.live` file.
+#[derive(Debug, Clone)]
+pub struct LiveSnapshotFile {
+    pub epoch: u64,
+    pub next_id: u64,
+    pub points: PointSet,
+    pub ids: Vec<u64>,
+}
+
+/// Atomically publish the compacted state of one dataset to
+/// `<dir>/<name>.live`.
+pub fn save_live_snapshot(
+    dir: &Path,
+    name: &str,
+    epoch: u64,
+    next_id: u64,
+    pts: &PointSet,
+    ids: &[u64],
+    sync: bool,
+) -> Result<()> {
+    validate_dataset_name(name)?;
+    assert_eq!(pts.len(), ids.len(), "points/ids length mismatch");
+    std::fs::create_dir_all(dir)?;
+    let path = live_path(dir, name);
+    let tmp = tmp_path(&path);
+    {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        w.write_all(SNAP_MAGIC)?;
+        w.write_all(&epoch.to_le_bytes())?;
+        w.write_all(&next_id.to_le_bytes())?;
+        w.write_all(&(pts.len() as u64).to_le_bytes())?;
+        for channel in [&pts.xs, &pts.ys, &pts.zs] {
+            for &v in channel.iter() {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        for &id in ids {
+            w.write_all(&id.to_le_bytes())?;
+        }
+        w.flush()?;
+        if sync {
+            w.get_ref().sync_data()?;
+        }
+    }
+    std::fs::rename(&tmp, &path)?;
+    Ok(())
+}
+
+/// Load `<dir>/<name>.live`.
+pub fn load_live_snapshot(dir: &Path, name: &str) -> Result<LiveSnapshotFile> {
+    let path = live_path(dir, name);
+    let mut r = std::io::BufReader::new(std::fs::File::open(&path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != SNAP_MAGIC {
+        return Err(Error::InvalidArgument(format!(
+            "{}: bad live-snapshot magic {:?} (expected {SNAP_MAGIC:?})",
+            path.display(),
+            &magic
+        )));
+    }
+    let epoch = read_u64(&mut r)?;
+    let next_id = read_u64(&mut r)?;
+    let n = read_u64(&mut r)?;
+    if n > MAX_PLAUSIBLE {
+        return Err(Error::InvalidArgument(format!(
+            "{}: implausible point count {n}",
+            path.display()
+        )));
+    }
+    let n = n as usize;
+    let mut read_f64s = |n: usize| -> Result<Vec<f64>> {
+        let mut buf = vec![0u8; n * 8];
+        r.read_exact(&mut buf)?;
+        Ok(buf
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    };
+    let xs = read_f64s(n)?;
+    let ys = read_f64s(n)?;
+    let zs = read_f64s(n)?;
+    for v in xs.iter().chain(&ys).chain(&zs) {
+        if !v.is_finite() {
+            return Err(Error::InvalidArgument(format!(
+                "{}: non-finite value in live snapshot",
+                path.display()
+            )));
+        }
+    }
+    let mut ids = Vec::with_capacity(n);
+    {
+        let mut buf = vec![0u8; n * 8];
+        r.read_exact(&mut buf)?;
+        for c in buf.chunks_exact(8) {
+            ids.push(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+    }
+    // ids must be strictly ascending (the id→index binary search relies
+    // on it) and below next_id
+    for w in ids.windows(2) {
+        if w[0] >= w[1] {
+            return Err(Error::InvalidArgument(format!(
+                "{}: live snapshot ids not strictly ascending",
+                path.display()
+            )));
+        }
+    }
+    if ids.last().is_some_and(|&last| last >= next_id) {
+        return Err(Error::InvalidArgument(format!(
+            "{}: live snapshot id exceeds next_id",
+            path.display()
+        )));
+    }
+    Ok(LiveSnapshotFile { epoch, next_id, points: PointSet::from_soa(xs, ys, zs), ids })
+}
+
+/// Names of every `*.live` snapshot in `dir`, sorted.
+pub fn list_live(dir: &Path) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    if !dir.exists() {
+        return Ok(out);
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("live") {
+            continue;
+        }
+        let Some(name) = path.file_stem().and_then(|s| s.to_str()) else {
+            continue;
+        };
+        if validate_dataset_name(name).is_ok() {
+            out.push(name.to_string());
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+// ---- the WAL ------------------------------------------------------------
+
+/// An open, appendable WAL.
+#[derive(Debug)]
+pub struct Wal {
+    file: std::fs::File,
+    records: u64,
+    sync: bool,
+}
+
+/// Everything `read_wal` learned about a WAL file.
+#[derive(Debug, Default)]
+pub struct WalReadout {
+    pub records: Vec<WalRecord>,
+    /// Byte length of the structurally-complete prefix.
+    pub clean_len: u64,
+    /// True when a torn tail (crash mid-write) was detected and skipped.
+    pub torn: bool,
+    /// False when the file did not exist.
+    pub existed: bool,
+}
+
+impl Wal {
+    /// Create (or truncate to) a fresh WAL holding only the magic header.
+    pub fn create(path: &Path, sync: bool) -> Result<Wal> {
+        let mut file = std::fs::OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        file.write_all(WAL_MAGIC)?;
+        if sync {
+            file.sync_data()?;
+        }
+        Ok(Wal { file, records: 0, sync })
+    }
+
+    /// Atomically replace the WAL at `path` with a fresh one pre-seeded
+    /// with `records` (the compactor re-logs the surviving overlay here),
+    /// returning the open handle.
+    pub fn write_fresh(path: &Path, records: &[WalRecord], sync: bool) -> Result<Wal> {
+        let mut staged = StagedWal::stage(path, sync)?;
+        for rec in records {
+            staged.append(rec)?;
+        }
+        staged.publish()
+    }
+
+    /// Reopen an existing WAL for appending after replay.  `clean_len`
+    /// (from [`read_wal`]) trims any torn tail before the first append.
+    pub fn open_after_replay(path: &Path, sync: bool, records: u64, clean_len: u64) -> Result<Wal> {
+        let file = std::fs::OpenOptions::new().write(true).open(path)?;
+        file.set_len(clean_len)?;
+        // append semantics: all writes land at the (now trimmed) end
+        let file = {
+            drop(file);
+            std::fs::OpenOptions::new().append(true).open(path)?
+        };
+        Ok(Wal { file, records, sync })
+    }
+
+    /// Records appended so far (including pre-seeded/replayed ones).
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    /// Durably append one record: a single `write_all`, plus `sync_data`
+    /// when the WAL runs in sync mode.
+    pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
+        let (tag, payload) = encode(rec);
+        let mut buf = Vec::with_capacity(9 + payload.len());
+        buf.push(tag);
+        buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        self.file.write_all(&buf)?;
+        if self.sync {
+            self.file.sync_data()?;
+        }
+        self.records += 1;
+        Ok(())
+    }
+}
+
+/// A fresh WAL staged at the dot-tmp sibling, not yet published.  The
+/// compactor creates it (file open + header write + optional fsync)
+/// *before* taking the snapshot-swap write lock, so the only file work
+/// under the lock is appending the rare carried records and one rename.
+#[derive(Debug)]
+pub struct StagedWal {
+    wal: Wal,
+    tmp: PathBuf,
+    dest: PathBuf,
+}
+
+impl StagedWal {
+    /// Create the staged file holding only the magic header.
+    pub fn stage(dest: &Path, sync: bool) -> Result<StagedWal> {
+        let tmp = tmp_path(dest);
+        let wal = Wal::create(&tmp, sync)?;
+        Ok(StagedWal { wal, tmp, dest: dest.to_path_buf() })
+    }
+
+    /// Append a record to the staged (unpublished) file.
+    pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
+        self.wal.append(rec)
+    }
+
+    /// Atomically publish over the destination, returning the open,
+    /// appendable handle (same inode — rename does not invalidate it).
+    pub fn publish(self) -> Result<Wal> {
+        if self.wal.sync {
+            self.wal.file.sync_data()?;
+        }
+        std::fs::rename(&self.tmp, &self.dest)?;
+        Ok(self.wal)
+    }
+}
+
+fn encode(rec: &WalRecord) -> (u8, Vec<u8>) {
+    match rec {
+        WalRecord::Append { first_id, points } => {
+            let mut p = Vec::with_capacity(16 + 24 * points.len());
+            p.extend_from_slice(&first_id.to_le_bytes());
+            p.extend_from_slice(&(points.len() as u64).to_le_bytes());
+            for channel in [&points.xs, &points.ys, &points.zs] {
+                for &v in channel.iter() {
+                    p.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            (TAG_APPEND, p)
+        }
+        WalRecord::Remove { ids } => {
+            let mut p = Vec::with_capacity(8 + 8 * ids.len());
+            p.extend_from_slice(&(ids.len() as u64).to_le_bytes());
+            for &id in ids {
+                p.extend_from_slice(&id.to_le_bytes());
+            }
+            (TAG_REMOVE, p)
+        }
+    }
+}
+
+/// Read every complete record of a WAL.  A missing file is an empty
+/// readout; a torn tail stops the scan (and is reported so the reopen can
+/// truncate it); a structurally-complete but invalid record is a hard
+/// error — that is corruption, not a crash artifact.
+pub fn read_wal(path: &Path) -> Result<WalReadout> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(WalReadout::default());
+        }
+        Err(e) => return Err(e.into()),
+    };
+    if bytes.len() < 8 || &bytes[..8] != WAL_MAGIC {
+        return Err(Error::InvalidArgument(format!(
+            "{}: bad WAL magic",
+            path.display()
+        )));
+    }
+    let mut out = WalReadout {
+        clean_len: 8,
+        existed: true,
+        ..Default::default()
+    };
+    let mut pos = 8usize;
+    loop {
+        if pos == bytes.len() {
+            break; // clean end
+        }
+        if pos + 9 > bytes.len() {
+            out.torn = true;
+            break;
+        }
+        let tag = bytes[pos];
+        let len = u64::from_le_bytes(bytes[pos + 1..pos + 9].try_into().unwrap());
+        if len > MAX_PLAUSIBLE * 24 {
+            return Err(Error::InvalidArgument(format!(
+                "{}: implausible WAL record length {len}",
+                path.display()
+            )));
+        }
+        let len = len as usize;
+        if pos + 9 + len > bytes.len() {
+            out.torn = true;
+            break;
+        }
+        let payload = &bytes[pos + 9..pos + 9 + len];
+        out.records.push(decode(path, tag, payload)?);
+        pos += 9 + len;
+        out.clean_len = pos as u64;
+    }
+    Ok(out)
+}
+
+fn decode(path: &Path, tag: u8, payload: &[u8]) -> Result<WalRecord> {
+    let bad = |m: &str| Error::InvalidArgument(format!("{}: {m}", path.display()));
+    let u64_at = |at: usize| u64::from_le_bytes(payload[at..at + 8].try_into().unwrap());
+    match tag {
+        TAG_APPEND => {
+            if payload.len() < 16 {
+                return Err(bad("short append record"));
+            }
+            let first_id = u64_at(0);
+            let count = u64_at(8);
+            if count > MAX_PLAUSIBLE || payload.len() != 16 + 24 * count as usize {
+                return Err(bad("append record length mismatch"));
+            }
+            let count = count as usize;
+            let f64s = |from: usize| -> Vec<f64> {
+                payload[from..from + 8 * count]
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                    .collect()
+            };
+            let xs = f64s(16);
+            let ys = f64s(16 + 8 * count);
+            let zs = f64s(16 + 16 * count);
+            if xs.iter().chain(&ys).chain(&zs).any(|v| !v.is_finite()) {
+                return Err(bad("non-finite value in append record"));
+            }
+            Ok(WalRecord::Append { first_id, points: PointSet::from_soa(xs, ys, zs) })
+        }
+        TAG_REMOVE => {
+            if payload.len() < 8 {
+                return Err(bad("short remove record"));
+            }
+            let count = u64_at(0);
+            if count > MAX_PLAUSIBLE || payload.len() != 8 + 8 * count as usize {
+                return Err(bad("remove record length mismatch"));
+            }
+            let ids = (0..count as usize).map(|i| u64_at(8 + 8 * i)).collect();
+            Ok(WalRecord::Remove { ids })
+        }
+        other => Err(bad(&format!("unknown WAL record tag {other}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("aidw_wal_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn wal_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let path = wal_path(&dir, "d");
+        let pts = workload::uniform_square(7, 10.0, 601);
+        {
+            let mut wal = Wal::create(&path, false).unwrap();
+            wal.append(&WalRecord::Append { first_id: 100, points: pts.clone() }).unwrap();
+            wal.append(&WalRecord::Remove { ids: vec![3, 101] }).unwrap();
+            assert_eq!(wal.records(), 2);
+        }
+        let back = read_wal(&path).unwrap();
+        assert!(back.existed);
+        assert!(!back.torn);
+        assert_eq!(back.records.len(), 2);
+        assert_eq!(
+            back.records[0],
+            WalRecord::Append { first_id: 100, points: pts }
+        );
+        assert_eq!(back.records[1], WalRecord::Remove { ids: vec![3, 101] });
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_trimmed_not_fatal() {
+        let dir = tmpdir("torn");
+        let path = wal_path(&dir, "d");
+        let pts = workload::uniform_square(5, 10.0, 602);
+        {
+            let mut wal = Wal::create(&path, false).unwrap();
+            wal.append(&WalRecord::Remove { ids: vec![1] }).unwrap();
+            wal.append(&WalRecord::Append { first_id: 9, points: pts }).unwrap();
+        }
+        let full = std::fs::metadata(&path).unwrap().len();
+        // crash mid-write of the second record
+        let clean = read_wal(&path).unwrap();
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .unwrap()
+            .set_len(full - 11)
+            .unwrap();
+        let torn = read_wal(&path).unwrap();
+        assert!(torn.torn);
+        assert_eq!(torn.records.len(), 1);
+        assert!(torn.clean_len < full);
+        // reopening truncates the tail; subsequent appends read back clean
+        let mut wal =
+            Wal::open_after_replay(&path, false, torn.records.len() as u64, torn.clean_len)
+                .unwrap();
+        wal.append(&WalRecord::Remove { ids: vec![7] }).unwrap();
+        let again = read_wal(&path).unwrap();
+        assert!(!again.torn);
+        assert_eq!(again.records.len(), 2);
+        assert_eq!(again.records[1], WalRecord::Remove { ids: vec![7] });
+        assert_eq!(clean.records.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_wal_is_empty_and_bad_magic_is_fatal() {
+        let dir = tmpdir("magic");
+        let missing = read_wal(&wal_path(&dir, "none")).unwrap();
+        assert!(!missing.existed);
+        assert!(missing.records.is_empty());
+        let path = wal_path(&dir, "bad");
+        std::fs::write(&path, b"NOTAWAL!").unwrap();
+        assert!(read_wal(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_fresh_reseeds_atomically() {
+        let dir = tmpdir("fresh");
+        let path = wal_path(&dir, "d");
+        {
+            let mut wal = Wal::create(&path, false).unwrap();
+            for i in 0..5 {
+                wal.append(&WalRecord::Remove { ids: vec![i] }).unwrap();
+            }
+        }
+        let surviving = vec![WalRecord::Remove { ids: vec![42] }];
+        let wal = Wal::write_fresh(&path, &surviving, false).unwrap();
+        assert_eq!(wal.records(), 1);
+        let back = read_wal(&path).unwrap();
+        assert_eq!(back.records, surviving);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn live_snapshot_roundtrip_and_validation() {
+        let dir = tmpdir("snap");
+        let pts = workload::uniform_square(20, 10.0, 603);
+        let ids: Vec<u64> = (5..25).collect();
+        save_live_snapshot(&dir, "d", 3, 25, &pts, &ids, false).unwrap();
+        let back = load_live_snapshot(&dir, "d").unwrap();
+        assert_eq!(back.epoch, 3);
+        assert_eq!(back.next_id, 25);
+        assert_eq!(back.ids, ids);
+        assert_eq!(back.points.xs, pts.xs);
+        assert_eq!(back.points.zs, pts.zs);
+        assert_eq!(list_live(&dir).unwrap(), vec!["d".to_string()]);
+        // dot names rejected (shared with the v1 snapshot convention)
+        assert!(save_live_snapshot(&dir, ".d", 0, 0, &pts, &ids, false).is_err());
+        // non-ascending ids rejected
+        let mut bad_ids = ids.clone();
+        bad_ids.swap(0, 1);
+        save_live_snapshot(&dir, "bad", 0, 25, &pts, &bad_ids, false).unwrap();
+        assert!(load_live_snapshot(&dir, "bad").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,8 +1,10 @@
 //! `aidw` — CLI for the AIDW interpolation service.
 //!
 //! Subcommands:
-//!   serve        start the TCP JSON service (protocol v2)
+//!   serve        start the TCP JSON service (protocol v2.1)
 //!   interpolate  one-shot interpolation over a generated/loaded workload
+//!   mutate       append/remove/compact/stat against a running service
+//!   bench        run the perf suite, emit BENCH_aidw.json
 //!   info         artifact + engine diagnostics
 //!   generate     write a synthetic workload to CSV
 //!
@@ -10,7 +12,8 @@
 //! `QueryOptions` (k, variant, ring rule, local mode, alpha levels, fuzzy
 //! bounds, area) has a flag on `interpolate`; `serve` flags set the
 //! coordinator *defaults* that protocol-v2 clients may override per
-//! request.
+//! request.  `serve --live-dir DIR` turns on WAL-backed durability for
+//! live dataset mutation.
 
 use std::sync::Arc;
 
@@ -32,6 +35,7 @@ aidw — Adaptive IDW interpolation with fast grid kNN search
 USAGE:
   aidw serve       [--addr 127.0.0.1:7878] [--cpu-only] [--k 10]
                    [--ring exact|paper+1] [--local N] [--snapshots DIR]
+                   [--live-dir DIR] [--compact-threshold N] [--wal-sync]
   aidw interpolate [--engine serving|pipeline|serial] [--cpu-only]
                    [--data N] [--queries N] [--side 100] [--seed 42]
                    [--variant naive|tiled] [--k 10] [--ring exact|paper+1]
@@ -39,6 +43,11 @@ USAGE:
                    [--rmin 0] [--rmax 2] [--area A]
                    [--dist uniform|clustered|terrain] [--file pts.csv]
                    [--out out.csv]
+  aidw mutate      --addr HOST:PORT --dataset NAME --action append|remove|compact|stat
+                   [--file pts.csv | --n N --side 100 --seed 42 --dist uniform]
+                   [--ids 3,17,9000]
+  aidw bench       [--sizes 1024,4096,16384] [--seed 42] [--threads N]
+                   [--serial-cap 2048] [--no-serial] [--out BENCH_aidw.json]
   aidw generate    [--n N] [--side 100] [--seed 42]
                    [--dist uniform|clustered|terrain|sensors] --out file.csv
   aidw info
@@ -46,7 +55,10 @@ USAGE:
 
 `serve` flags set coordinator defaults; `interpolate` flags are
 per-request QueryOptions (protocol v2 exposes the same fields on the
-wire).  `--local 0` forces dense weighting.
+wire).  `--local 0` forces dense weighting.  `serve --live-dir DIR`
+enables WAL-backed durable mutation (protocol v2.1 `mutate` op); `aidw
+mutate` is the matching client.  `aidw bench` writes the sizes x
+variants x stage-times JSON the repo tracks as its perf trajectory.
 ";
 
 fn main() {
@@ -61,10 +73,12 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["cpu-only", "verbose"])?;
+    let args = Args::parse(argv, &["cpu-only", "verbose", "wal-sync", "no-serial"])?;
     match args.subcommand.as_str() {
         "serve" => serve(&args),
         "interpolate" => interpolate(&args),
+        "mutate" => mutate(&args),
+        "bench" => bench(&args),
         "generate" => generate(&args),
         "info" => info(),
         "" | "help" => {
@@ -95,6 +109,15 @@ fn config_from(args: &Args) -> Result<CoordinatorConfig> {
         if n > 0 {
             cfg.local_neighbors = Some(n);
         }
+    }
+    // live mutation: durability directory + compaction tunables
+    if let Some(dir) = args.get("live-dir") {
+        cfg.live_dir = Some(std::path::PathBuf::from(dir));
+    }
+    cfg.live.compact_threshold =
+        args.get_usize("compact-threshold", cfg.live.compact_threshold)?;
+    if args.has("wal-sync") {
+        cfg.live.wal_sync = true;
     }
     Ok(cfg)
 }
@@ -142,9 +165,22 @@ fn options_from(args: &Args) -> Result<QueryOptions> {
 
 fn serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7878");
-    let session = AidwSession::serving(config_from(args)?)?;
+    let cfg = config_from(args)?;
+    let live_dir = cfg.live_dir.clone();
+    let session = AidwSession::serving(cfg)?;
     println!("aidw service: backend={}", session.backend_label());
-    // --snapshots DIR: restore persisted datasets at startup
+    if let Some(dir) = &live_dir {
+        // Coordinator::new already replayed snapshot + WAL for every
+        // dataset found under the live directory
+        let names = session.datasets();
+        println!(
+            "live dir {}: restored {} dataset(s){}",
+            dir.display(),
+            names.len(),
+            if names.is_empty() { String::new() } else { format!(" ({})", names.join(", ")) }
+        );
+    }
+    // --snapshots DIR: restore v1 portable snapshots at startup
     if let Some(dir) = args.get("snapshots") {
         let n = session
             .coordinator()
@@ -159,11 +195,129 @@ fn serve(args: &Args) -> Result<()> {
     };
     let server = Server::start(coord, &addr)?;
     println!("listening on {}", server.addr());
-    println!("protocol v2: newline-delimited JSON; see rust/src/service/protocol.rs");
+    println!("protocol v2.1: newline-delimited JSON; see rust/src/service/protocol.rs");
     // serve until killed
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// Thin TCP client for the v2.1 mutate ops.
+fn mutate(args: &Args) -> Result<()> {
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| Error::InvalidArgument("--addr is required".into()))?;
+    let dataset = args
+        .get("dataset")
+        .ok_or_else(|| Error::InvalidArgument("--dataset is required".into()))?;
+    let action = args
+        .get("action")
+        .ok_or_else(|| Error::InvalidArgument("--action is required".into()))?;
+    let mut client = aidw::service::Client::connect(addr)?;
+    match action {
+        "append" => {
+            let n = args.get_usize("n", 1024)?;
+            let side = args.get_f64("side", 100.0)?;
+            let seed = args.get_usize("seed", 42)? as u64;
+            let pts = load_or_make(args, n, side, seed)?;
+            let r = client.append(dataset, &pts)?;
+            println!(
+                "appended {} point(s) as ids {}..{} (epoch {}, {} live, {} in delta)",
+                r.count,
+                r.first_id,
+                r.first_id + r.count as u64,
+                r.epoch,
+                r.live_points,
+                r.delta_points
+            );
+        }
+        "remove" => {
+            let ids = args
+                .get_u64_list("ids")?
+                .ok_or_else(|| Error::InvalidArgument("--ids is required for remove".into()))?;
+            let r = client.remove(dataset, &ids)?;
+            println!(
+                "removed {} point(s) (epoch {}, {} live, {} tombstones)",
+                r.removed, r.epoch, r.live_points, r.tombstones
+            );
+        }
+        "compact" => {
+            let r = client.compact(dataset)?;
+            if r.noop {
+                println!("nothing to compact (epoch {})", r.epoch);
+            } else {
+                println!("compacted into epoch {}", r.epoch);
+            }
+        }
+        "stat" => {
+            let s = client.live_stat(dataset)?;
+            println!(
+                "epoch {}  live {}  base {}  delta {}  tombstones {}",
+                s.epoch, s.live_points, s.base_points, s.delta_points, s.tombstones
+            );
+            println!(
+                "wal_records {}  compactions {}  persistent {}  compacting {}",
+                s.wal_records, s.compactions, s.persistent, s.compacting
+            );
+        }
+        other => {
+            return Err(Error::InvalidArgument(format!(
+                "unknown action '{other}' (append|remove|compact|stat)"
+            )))
+        }
+    }
+    Ok(())
+}
+
+/// Run the perf suite and emit `BENCH_aidw.json` — the repo's perf
+/// trajectory artifact (sizes x variants x stage times).
+fn bench(args: &Args) -> Result<()> {
+    let sizes: Vec<usize> = match args.get("sizes") {
+        Some(s) => s
+            .split(',')
+            .map(|x| {
+                x.trim().parse::<usize>().map_err(|_| {
+                    Error::InvalidArgument(format!("--sizes expects integers, got '{x}'"))
+                })
+            })
+            .collect::<Result<_>>()?,
+        None => vec![1024, 4096, 16384],
+    };
+    let seed = args.get_usize("seed", 42)? as u64;
+    let opts = aidw::benchsuite::MeasureOpts {
+        serial: !args.has("no-serial"),
+        serial_sub_cap: args.get_usize("serial-cap", 2048)?,
+        seed,
+        side: args.get_f64("side", 100.0)?,
+    };
+    let pool = match args.get_usize("threads", 0)? {
+        0 => aidw::pool::Pool::machine_sized(),
+        n => aidw::pool::Pool::new(n),
+    };
+    let out_path = args.get_or("out", "BENCH_aidw.json");
+
+    let artifact_dir = aidw::runtime::default_artifact_dir();
+    let doc = if artifact_dir.join("manifest.json").exists() {
+        println!("bench: PJRT artifacts found — full five-version suite");
+        let engine = aidw::runtime::Engine::new(&artifact_dir)?;
+        let mut results = Vec::with_capacity(sizes.len());
+        for &n in &sizes {
+            println!("  measuring n = {} ...", aidw::benchsuite::size_label(n));
+            results.push(aidw::benchsuite::measure_size(&engine, &pool, n, &opts)?);
+        }
+        aidw::benchsuite::pjrt_bench_json(&results, pool.threads(), seed)
+    } else {
+        println!("bench: no artifacts — CPU suite (serial + improved pipeline)");
+        let mut results = Vec::with_capacity(sizes.len());
+        for &n in &sizes {
+            println!("  measuring n = {} ...", aidw::benchsuite::size_label(n));
+            results.push(aidw::benchsuite::measure_size_cpu(&pool, n, &opts));
+        }
+        aidw::benchsuite::cpu_bench_json(&results, pool.threads(), seed)
+    };
+    std::fs::write(&out_path, doc.to_string() + "\n")?;
+    println!("wrote {out_path}");
+    Ok(())
 }
 
 fn make_points(dist: &str, n: usize, side: f64, seed: u64) -> Result<PointSet> {

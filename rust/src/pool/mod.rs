@@ -3,7 +3,7 @@
 //! The paper's GPU launches (one CUDA thread per point, §4.1.2/§4.2.1) map
 //! here to chunked data-parallel loops across CPU cores.  No rayon/tokio in
 //! the offline vendor set, so this is a small from-scratch layer on
-//! crossbeam scoped threads:
+//! `std::thread::scope` (the crate has zero external dependencies):
 //!
 //! * [`Pool::parallel_for`] — run a closure over disjoint index ranges;
 //! * [`Pool::map_ranges`] — same, collecting one result per range;
@@ -55,13 +55,12 @@ impl Pool {
             0 => {}
             1 => f(ranges.into_iter().next().unwrap()),
             _ => {
-                crossbeam_utils::thread::scope(|s| {
+                std::thread::scope(|s| {
                     for r in ranges {
                         let f = &f;
-                        s.spawn(move |_| f(r));
+                        s.spawn(move || f(r));
                     }
-                })
-                .expect("pool worker panicked");
+                });
             }
         }
     }
@@ -76,17 +75,16 @@ impl Pool {
         match ranges.len() {
             0 => Vec::new(),
             1 => vec![f(ranges.into_iter().next().unwrap())],
-            _ => crossbeam_utils::thread::scope(|s| {
+            _ => std::thread::scope(|s| {
                 let handles: Vec<_> = ranges
                     .into_iter()
                     .map(|r| {
                         let f = &f;
-                        s.spawn(move |_| f(r))
+                        s.spawn(move || f(r))
                     })
                     .collect();
                 handles.into_iter().map(|h| h.join().unwrap()).collect()
-            })
-            .expect("pool worker panicked"),
+            }),
         }
     }
 
@@ -103,7 +101,7 @@ impl Pool {
             0 => {}
             1 => f(0, data),
             _ => {
-                crossbeam_utils::thread::scope(|s| {
+                std::thread::scope(|s| {
                     let mut rest = data;
                     let mut consumed = 0usize;
                     for r in ranges {
@@ -111,12 +109,11 @@ impl Pool {
                         let (head, tail) = rest.split_at_mut(take);
                         let f = &f;
                         let offset = consumed;
-                        s.spawn(move |_| f(offset, head));
+                        s.spawn(move || f(offset, head));
                         consumed += take;
                         rest = tail;
                     }
-                })
-                .expect("pool worker panicked");
+                });
             }
         }
     }

@@ -30,14 +30,14 @@ pub fn exclusive_scan(pool: &Pool, xs: &[u32], out: &mut [u32]) -> u32 {
     let totals: Vec<u32> = {
         // compute local scans into `out` in parallel
         let out_ptr = SendPtr(out.as_mut_ptr());
-        crossbeam_utils::thread::scope(|s| {
+        std::thread::scope(|s| {
             let handles: Vec<_> = ranges
                 .iter()
                 .cloned()
                 .map(|r| {
                     let xs = &xs[r.clone()];
                     let op = out_ptr;
-                    s.spawn(move |_| {
+                    s.spawn(move || {
                         let op = op;
                         let mut acc = 0u32;
                         for (i, &x) in xs.iter().enumerate() {
@@ -50,27 +50,25 @@ pub fn exclusive_scan(pool: &Pool, xs: &[u32], out: &mut [u32]) -> u32 {
                 .collect();
             handles.into_iter().map(|h| h.join().unwrap()).collect()
         })
-        .expect("scan worker panicked")
     };
     // Pass 2: offsets of each chunk, then parallel fix-up.
     let mut offsets = vec![0u32; totals.len()];
     let grand = exclusive_scan_serial(&totals, &mut offsets);
     let out_ptr = SendPtr(out.as_mut_ptr());
-    crossbeam_utils::thread::scope(|s| {
+    std::thread::scope(|s| {
         for (r, off) in ranges.iter().cloned().zip(offsets.iter().copied()) {
             if off == 0 {
                 continue;
             }
             let op = out_ptr;
-            s.spawn(move |_| {
+            s.spawn(move || {
                 let op = op;
                 for i in r {
                     unsafe { *op.0.add(i) += off };
                 }
             });
         }
-    })
-    .expect("scan fixup worker panicked");
+    });
     grand
 }
 

@@ -112,14 +112,14 @@ fn radix_pass(
         }
         v
     };
-    crossbeam_utils::thread::scope(|s| {
+    std::thread::scope(|s| {
         for (w, r) in ranges.into_iter().enumerate() {
             let mut base = bases[w];
             let dk = dst_k_ptr;
             let dv = dst_v_ptr;
             let src_k = &src_k[r.clone()];
             let src_v = &src_v[r];
-            s.spawn(move |_| {
+            s.spawn(move || {
                 let dk = dk; // move the Send wrapper into the thread
                 let dv = dv;
                 for (&k, &v) in src_k.iter().zip(src_v) {
@@ -133,8 +133,7 @@ fn radix_pass(
                 }
             });
         }
-    })
-    .expect("radix scatter worker panicked");
+    });
 }
 
 #[derive(Clone, Copy)]

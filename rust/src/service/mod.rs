@@ -1,11 +1,13 @@
-//! TCP interpolation service: newline-delimited JSON (protocol v2, see
+//! TCP interpolation service: newline-delimited JSON (protocol v2.1, see
 //! [`protocol`]) over a [`crate::coordinator::Coordinator`], plus the
 //! matching blocking client.
 //!
 //! One OS thread per connection (std-only; no tokio offline).  All heavy
 //! work is delegated to the coordinator's pipeline, so connection threads
 //! only parse/serialize.  Per-request tuning rides on the `interpolate`
-//! op's option fields and flows straight into [`QueryOptions`].
+//! op's option fields and flows straight into [`QueryOptions`]; live
+//! dataset mutation rides on the v2.1 `mutate` op (append / remove /
+//! compact / stat) and flows into [`crate::live`].
 
 pub mod protocol;
 
@@ -18,7 +20,7 @@ use crate::coordinator::{Coordinator, InterpolationRequest, QueryOptions, Resolv
 use crate::error::{Error, Result};
 use crate::geom::PointSet;
 use crate::jsonio::Json;
-use protocol::Request;
+use protocol::{MutateAction, Request};
 
 /// A running TCP server.
 pub struct Server {
@@ -132,6 +134,27 @@ fn dispatch(coord: &Coordinator, req: Request) -> String {
                 Err(e) => protocol::err_for(&e),
             }
         }
+        Request::Mutate { dataset, action } => match action {
+            MutateAction::Append { xs, ys, zs } => {
+                let pts = PointSet::from_soa(xs, ys, zs);
+                match coord.append_points(&dataset, pts) {
+                    Ok(out) => protocol::ok_append(&out),
+                    Err(e) => protocol::err_for(&e),
+                }
+            }
+            MutateAction::Remove { ids } => match coord.remove_points(&dataset, &ids) {
+                Ok(out) => protocol::ok_remove(&out),
+                Err(e) => protocol::err_for(&e),
+            },
+            MutateAction::Compact => match coord.compact_dataset(&dataset) {
+                Ok(rep) => protocol::ok_compact(&rep),
+                Err(e) => protocol::err_for(&e),
+            },
+            MutateAction::Stat => match coord.live_status(&dataset) {
+                Ok(st) => protocol::ok_live_stat(&st),
+                Err(e) => protocol::err_for(&e),
+            },
+        },
         Request::Drop { dataset } => {
             if coord.drop_dataset(&dataset) {
                 protocol::ok_empty()
@@ -269,4 +292,109 @@ impl Client {
     pub fn metrics(&mut self) -> Result<Json> {
         self.call(&Request::Metrics)
     }
+
+    /// Append points to a live dataset (protocol v2.1); returns the
+    /// assigned id range and the new live counts.
+    pub fn append(&mut self, dataset: &str, pts: &PointSet) -> Result<AppendReply> {
+        let v = self.call(&Request::Mutate {
+            dataset: dataset.to_string(),
+            action: MutateAction::Append {
+                xs: pts.xs.clone(),
+                ys: pts.ys.clone(),
+                zs: pts.zs.clone(),
+            },
+        })?;
+        Ok(AppendReply {
+            first_id: v.get("first_id").as_f64().unwrap_or(0.0) as u64,
+            count: v.get("count").as_usize().unwrap_or(0),
+            epoch: v.get("epoch").as_f64().unwrap_or(0.0) as u64,
+            live_points: v.get("live_points").as_usize().unwrap_or(0),
+            delta_points: v.get("delta_points").as_usize().unwrap_or(0),
+        })
+    }
+
+    /// Tombstone live points by id (protocol v2.1, strict).
+    pub fn remove(&mut self, dataset: &str, ids: &[u64]) -> Result<RemoveReply> {
+        let v = self.call(&Request::Mutate {
+            dataset: dataset.to_string(),
+            action: MutateAction::Remove { ids: ids.to_vec() },
+        })?;
+        Ok(RemoveReply {
+            removed: v.get("removed").as_usize().unwrap_or(0),
+            epoch: v.get("epoch").as_f64().unwrap_or(0.0) as u64,
+            live_points: v.get("live_points").as_usize().unwrap_or(0),
+            tombstones: v.get("tombstones").as_usize().unwrap_or(0),
+        })
+    }
+
+    /// Synchronously compact a live dataset (protocol v2.1).
+    pub fn compact(&mut self, dataset: &str) -> Result<CompactReply> {
+        let v = self.call(&Request::Mutate {
+            dataset: dataset.to_string(),
+            action: MutateAction::Compact,
+        })?;
+        Ok(CompactReply {
+            epoch: v.get("epoch").as_f64().unwrap_or(0.0) as u64,
+            noop: v.get("noop").as_bool().unwrap_or(false),
+        })
+    }
+
+    /// Live mutation statistics for one dataset (protocol v2.1).
+    pub fn live_stat(&mut self, dataset: &str) -> Result<LiveStatReply> {
+        let v = self.call(&Request::Mutate {
+            dataset: dataset.to_string(),
+            action: MutateAction::Stat,
+        })?;
+        Ok(LiveStatReply {
+            epoch: v.get("epoch").as_f64().unwrap_or(0.0) as u64,
+            base_points: v.get("base_points").as_usize().unwrap_or(0),
+            delta_points: v.get("delta_points").as_usize().unwrap_or(0),
+            tombstones: v.get("tombstones").as_usize().unwrap_or(0),
+            live_points: v.get("live_points").as_usize().unwrap_or(0),
+            wal_records: v.get("wal_records").as_f64().unwrap_or(0.0) as u64,
+            compactions: v.get("compactions").as_f64().unwrap_or(0.0) as u64,
+            persistent: v.get("persistent").as_bool().unwrap_or(false),
+            compacting: v.get("compacting").as_bool().unwrap_or(false),
+        })
+    }
+}
+
+/// A decoded v2.1 append reply.
+#[derive(Debug, Clone, Copy)]
+pub struct AppendReply {
+    pub first_id: u64,
+    pub count: usize,
+    pub epoch: u64,
+    pub live_points: usize,
+    pub delta_points: usize,
+}
+
+/// A decoded v2.1 remove reply.
+#[derive(Debug, Clone, Copy)]
+pub struct RemoveReply {
+    pub removed: usize,
+    pub epoch: u64,
+    pub live_points: usize,
+    pub tombstones: usize,
+}
+
+/// A decoded v2.1 compact reply.
+#[derive(Debug, Clone, Copy)]
+pub struct CompactReply {
+    pub epoch: u64,
+    pub noop: bool,
+}
+
+/// A decoded v2.1 stat reply.
+#[derive(Debug, Clone, Copy)]
+pub struct LiveStatReply {
+    pub epoch: u64,
+    pub base_points: usize,
+    pub delta_points: usize,
+    pub tombstones: usize,
+    pub live_points: usize,
+    pub wal_records: u64,
+    pub compactions: u64,
+    pub persistent: bool,
+    pub compacting: bool,
 }

@@ -1,4 +1,4 @@
-//! Wire protocol **v2**: newline-delimited JSON over TCP.
+//! Wire protocol **v2.1**: newline-delimited JSON over TCP.
 //!
 //! Requests:
 //! ```json
@@ -8,10 +8,27 @@
 //!  "variant":"tiled","k":10,
 //!  "ring":"exact","local_n":64,"alpha_levels":[0.5,1,2,3,4],
 //!  "r_min":0.0,"r_max":2.0,"area":1e4}
+//! {"op":"mutate","dataset":"d","action":"append","xs":[..],"ys":[..],"zs":[..]}
+//! {"op":"mutate","dataset":"d","action":"remove","ids":[3,17]}
+//! {"op":"mutate","dataset":"d","action":"compact"}
+//! {"op":"mutate","dataset":"d","action":"stat"}
 //! {"op":"drop","dataset":"d"}
 //! {"op":"datasets"}
 //! {"op":"metrics"}
 //! ```
+//!
+//! **v2.1 additions** (live dataset mutation, strictly additive over v2):
+//!
+//! * the `mutate` op — `append` assigns consecutive stable ids to the new
+//!   points and replies `{"ok":true,"first_id":N,"count":C,"epoch":E,
+//!   "live_points":L,"delta_points":D}`; `remove` tombstones live ids
+//!   (strict: every id must be live) and replies with the new counts;
+//!   `compact` synchronously folds the overlay into a new epoch;
+//!   `stat` reports epoch/base/delta/tombstone/WAL statistics;
+//! * successful `interpolate` responses additionally echo `epoch` inside
+//!   the `options` object — the epoch the serving snapshot belonged to
+//!   (one epoch per batch, by admission-key construction).  `epoch` is
+//!   server-assigned: an `epoch` field on a *request* is ignored.
 //!
 //! Every `interpolate` tuning field is optional and defaults to the
 //! serving coordinator's configuration ([`QueryOptions`] semantics):
@@ -47,7 +64,29 @@ use crate::coordinator::MetricsSnapshot;
 use crate::error::{Error, Result};
 use crate::jsonio::Json;
 use crate::knn::grid_knn::RingRule;
+use crate::live::{AppendOutcome, CompactionReport, LiveStatus, RemoveOutcome};
 use crate::runtime::Variant;
+
+/// A live-dataset mutation (protocol v2.1 `mutate` op).
+#[derive(Debug, Clone, PartialEq)]
+pub enum MutateAction {
+    Append { xs: Vec<f64>, ys: Vec<f64>, zs: Vec<f64> },
+    Remove { ids: Vec<u64> },
+    Compact,
+    Stat,
+}
+
+impl MutateAction {
+    /// Wire tag of the `action` field.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            MutateAction::Append { .. } => "append",
+            MutateAction::Remove { .. } => "remove",
+            MutateAction::Compact => "compact",
+            MutateAction::Stat => "stat",
+        }
+    }
+}
 
 /// A decoded client request.
 #[derive(Debug, Clone, PartialEq)]
@@ -55,6 +94,7 @@ pub enum Request {
     Ping,
     Register { dataset: String, xs: Vec<f64>, ys: Vec<f64>, zs: Vec<f64> },
     Interpolate { dataset: String, qx: Vec<f64>, qy: Vec<f64>, options: QueryOptions },
+    Mutate { dataset: String, action: MutateAction },
     Drop { dataset: String },
     Datasets,
     Metrics,
@@ -94,6 +134,30 @@ impl Request {
                 let options = decode_options(&v)?;
                 Ok(Request::Interpolate { dataset: dataset()?, qx, qy, options })
             }
+            "mutate" => {
+                let action = match v.get("action").as_str() {
+                    Some("append") => {
+                        let xs = v.get("xs").to_f64_vec()?;
+                        let ys = v.get("ys").to_f64_vec()?;
+                        let zs = v.get("zs").to_f64_vec()?;
+                        if xs.len() != ys.len() || xs.len() != zs.len() {
+                            return Err(Error::Service("xs/ys/zs length mismatch".into()));
+                        }
+                        MutateAction::Append { xs, ys, zs }
+                    }
+                    Some("remove") => MutateAction::Remove { ids: to_u64_vec(v.get("ids"))? },
+                    Some("compact") => MutateAction::Compact,
+                    Some("stat") => MutateAction::Stat,
+                    Some(other) => {
+                        return Err(Error::Service(format!(
+                            "unknown mutate action '{other}' \
+                             (append|remove|compact|stat)"
+                        )))
+                    }
+                    None => return Err(Error::Service("missing 'action'".into())),
+                };
+                Ok(Request::Mutate { dataset: dataset()?, action })
+            }
             "drop" => Ok(Request::Drop { dataset: dataset()? }),
             "datasets" => Ok(Request::Datasets),
             "metrics" => Ok(Request::Metrics),
@@ -123,6 +187,28 @@ impl Request {
                 encode_options(options, &mut fields);
                 Json::obj(fields).to_string()
             }
+            Request::Mutate { dataset, action } => {
+                let mut fields = vec![
+                    ("op", Json::Str("mutate".into())),
+                    ("dataset", Json::Str(dataset.clone())),
+                    ("action", Json::Str(action.tag().into())),
+                ];
+                match action {
+                    MutateAction::Append { xs, ys, zs } => {
+                        fields.push(("xs", Json::num_array(xs)));
+                        fields.push(("ys", Json::num_array(ys)));
+                        fields.push(("zs", Json::num_array(zs)));
+                    }
+                    MutateAction::Remove { ids } => {
+                        fields.push((
+                            "ids",
+                            Json::Arr(ids.iter().map(|&i| Json::Num(i as f64)).collect()),
+                        ));
+                    }
+                    MutateAction::Compact | MutateAction::Stat => {}
+                }
+                Json::obj(fields).to_string()
+            }
             Request::Drop { dataset } => Json::obj(vec![
                 ("op", Json::Str("drop".into())),
                 ("dataset", Json::Str(dataset.clone())),
@@ -143,6 +229,27 @@ fn opt_usize(v: &Json, key: &str) -> Result<Option<usize>> {
             Error::Service(format!("'{key}' must be a non-negative integer"))
         }),
     }
+}
+
+/// Array of non-negative integer ids (JSON numbers are f64; ids are
+/// exact up to 2^53, far beyond any live id this side of the heat death).
+fn to_u64_vec(v: &Json) -> Result<Vec<u64>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| Error::Service("'ids' must be an array".into()))?;
+    arr.iter()
+        .map(|x| {
+            let f = x
+                .as_f64()
+                .ok_or_else(|| Error::Service("'ids' entries must be numbers".into()))?;
+            if f < 0.0 || f.fract() != 0.0 || f > 9e15 {
+                return Err(Error::Service(format!(
+                    "'ids' entries must be non-negative integers, got {f}"
+                )));
+            }
+            Ok(f as u64)
+        })
+        .collect()
 }
 
 fn opt_f64(v: &Json, key: &str) -> Result<Option<f64>> {
@@ -248,6 +355,9 @@ pub fn options_json(o: &ResolvedOptions) -> Json {
     if let Some(a) = o.area {
         fields.push(("area", Json::Num(a)));
     }
+    if let Some(e) = o.epoch {
+        fields.push(("epoch", Json::Num(e as f64)));
+    }
     Json::obj(fields)
 }
 
@@ -271,6 +381,7 @@ pub fn options_from_json(v: &Json) -> Option<ResolvedOptions> {
         r_min: v.get("r_min").as_f64()?,
         r_max: v.get("r_max").as_f64()?,
         area: v.get("area").as_f64(),
+        epoch: v.get("epoch").as_f64().map(|e| e as u64),
     })
 }
 
@@ -325,6 +436,60 @@ pub fn ok_metrics(m: &MetricsSnapshot) -> String {
         ("interp_s", Json::Num(m.interp_s)),
         ("mean_latency_s", Json::Num(m.mean_latency_s)),
         ("p99_latency_s", Json::Num(m.p99_latency_s)),
+    ])
+    .to_string()
+}
+
+pub fn ok_append(out: &AppendOutcome) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("first_id", Json::Num(out.first_id as f64)),
+        ("count", Json::Num(out.count as f64)),
+        ("epoch", Json::Num(out.epoch as f64)),
+        ("live_points", Json::Num(out.live_points as f64)),
+        ("delta_points", Json::Num(out.delta_points as f64)),
+    ])
+    .to_string()
+}
+
+pub fn ok_remove(out: &RemoveOutcome) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("removed", Json::Num(out.removed as f64)),
+        ("epoch", Json::Num(out.epoch as f64)),
+        ("live_points", Json::Num(out.live_points as f64)),
+        ("tombstones", Json::Num(out.tombstones as f64)),
+    ])
+    .to_string()
+}
+
+pub fn ok_compact(rep: &CompactionReport) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("epoch", Json::Num(rep.new_epoch as f64)),
+        ("folded_appends", Json::Num(rep.folded_appends as f64)),
+        ("folded_tombstones", Json::Num(rep.folded_tombstones as f64)),
+        ("carried_appends", Json::Num(rep.carried_appends as f64)),
+        ("carried_tombstones", Json::Num(rep.carried_tombstones as f64)),
+        ("noop", Json::Bool(rep.noop)),
+    ])
+    .to_string()
+}
+
+pub fn ok_live_stat(st: &LiveStatus) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("epoch", Json::Num(st.epoch as f64)),
+        ("base_points", Json::Num(st.base_points as f64)),
+        ("delta_points", Json::Num(st.delta_points as f64)),
+        ("live_appends", Json::Num(st.live_appends as f64)),
+        ("tombstones", Json::Num(st.tombstones as f64)),
+        ("live_points", Json::Num(st.live_points as f64)),
+        ("next_id", Json::Num(st.next_id as f64)),
+        ("wal_records", Json::Num(st.wal_records as f64)),
+        ("compactions", Json::Num(st.compactions as f64)),
+        ("persistent", Json::Bool(st.persistent)),
+        ("compacting", Json::Bool(st.compacting)),
     ])
     .to_string()
 }
@@ -402,6 +567,21 @@ mod tests {
                 qy: vec![2.0],
                 options: QueryOptions::new().dense(),
             },
+            // v2.1 mutate ops
+            Request::Mutate {
+                dataset: "d".into(),
+                action: MutateAction::Append {
+                    xs: vec![1.0, 2.0],
+                    ys: vec![3.0, 4.0],
+                    zs: vec![5.0, 6.0],
+                },
+            },
+            Request::Mutate {
+                dataset: "d".into(),
+                action: MutateAction::Remove { ids: vec![0, 17, 9000] },
+            },
+            Request::Mutate { dataset: "d".into(), action: MutateAction::Compact },
+            Request::Mutate { dataset: "d".into(), action: MutateAction::Stat },
             Request::Drop { dataset: "d".into() },
             Request::Datasets,
             Request::Metrics,
@@ -466,6 +646,14 @@ mod tests {
         assert!(Request::decode(r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"r_min":"0"}"#).is_err());
         assert!(Request::decode(r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"variant":5}"#).is_err());
         assert!(Request::decode(r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"k":-1}"#).is_err());
+        // mutate validation
+        assert!(Request::decode(r#"{"op":"mutate","dataset":"d"}"#).is_err());
+        assert!(Request::decode(r#"{"op":"mutate","dataset":"d","action":"explode"}"#).is_err());
+        assert!(Request::decode(r#"{"op":"mutate","dataset":"d","action":"append","xs":[1],"ys":[],"zs":[]}"#).is_err());
+        assert!(Request::decode(r#"{"op":"mutate","dataset":"d","action":"remove","ids":[-1]}"#).is_err());
+        assert!(Request::decode(r#"{"op":"mutate","dataset":"d","action":"remove","ids":[1.5]}"#).is_err());
+        assert!(Request::decode(r#"{"op":"mutate","dataset":"d","action":"remove","ids":"nope"}"#).is_err());
+        assert!(Request::decode(r#"{"op":"mutate","action":"compact"}"#).is_err(), "missing dataset");
     }
 
     #[test]
@@ -492,11 +680,63 @@ mod tests {
             r_min: 0.25,
             r_max: 1.75,
             area: Some(1e4),
+            epoch: Some(3),
         };
         let j = options_json(&opts);
+        assert!(j.to_string().contains("\"epoch\":3"), "{j:?}");
         assert_eq!(options_from_json(&j), Some(opts));
         // absent/garbage -> None (v1 server)
         assert_eq!(options_from_json(&Json::Null), None);
+        // a v2 (pre-epoch) echo still parses, with epoch = None
+        let v2 = options_json(&ResolvedOptions::default());
+        let parsed = options_from_json(&v2).unwrap();
+        assert_eq!(parsed.epoch, None);
+    }
+
+    #[test]
+    fn mutate_response_lines_parse() {
+        let append = ok_append(&AppendOutcome {
+            first_id: 100,
+            count: 3,
+            epoch: 2,
+            live_points: 103,
+            delta_points: 3,
+            pressure: 3,
+        });
+        let v = Json::parse(&append).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true));
+        assert_eq!(v.get("first_id").as_usize(), Some(100));
+        assert_eq!(v.get("epoch").as_usize(), Some(2));
+        assert_eq!(v.get("live_points").as_usize(), Some(103));
+
+        let remove = ok_remove(&RemoveOutcome {
+            removed: 2,
+            epoch: 2,
+            live_points: 101,
+            tombstones: 2,
+            pressure: 5,
+        });
+        let v = Json::parse(&remove).unwrap();
+        assert_eq!(v.get("removed").as_usize(), Some(2));
+        assert_eq!(v.get("tombstones").as_usize(), Some(2));
+
+        let stat = ok_live_stat(&LiveStatus {
+            epoch: 4,
+            base_points: 1000,
+            delta_points: 12,
+            live_appends: 10,
+            tombstones: 5,
+            live_points: 1005,
+            next_id: 1012,
+            wal_records: 17,
+            compactions: 4,
+            persistent: true,
+            compacting: false,
+        });
+        let v = Json::parse(&stat).unwrap();
+        assert_eq!(v.get("epoch").as_usize(), Some(4));
+        assert_eq!(v.get("wal_records").as_usize(), Some(17));
+        assert_eq!(v.get("persistent").as_bool(), Some(true));
     }
 
     #[test]

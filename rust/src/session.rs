@@ -5,7 +5,9 @@
 //! [`crate::aidw::pipeline`] (pure-rust two-stage), [`crate::aidw::local`]
 //! (A5 localized weighting), and the serving
 //! [`crate::coordinator::Coordinator`].  Examples and the CLI hand-wired
-//! each.  `AidwSession` unifies them: register named datasets, then
+//! each.  `AidwSession` unifies them: register named datasets, mutate
+//! them in place ([`AidwSession::append`] / [`AidwSession::remove`],
+//! stable ids in every mode), then
 //! interpolate with per-request [`QueryOptions`] — the same options type
 //! the coordinator and the TCP protocol speak — and the session routes to
 //! the right implementation.
@@ -46,7 +48,18 @@ use crate::coordinator::{
 };
 use crate::error::{Error, Result};
 use crate::geom::PointSet;
+use crate::live::{AppendOutcome, RemoveOutcome};
 use crate::pool::Pool;
+
+/// In-process dataset entry: points plus the same stable-id bookkeeping
+/// the live serving path keeps, so `append`/`remove` behave identically
+/// across session modes (ids are assigned in insertion order and survive
+/// removals).
+struct InProcDataset {
+    points: Arc<PointSet>,
+    ids: Vec<u64>,
+    next_id: u64,
+}
 
 /// What a session interpolation ran and produced — the facade's common
 /// denominator of [`crate::coordinator::InterpolationResponse`].
@@ -79,7 +92,7 @@ pub struct AidwSession {
     /// coordinator does server-side).
     defaults: CoordinatorConfig,
     /// In-process dataset store (Serial / Pipeline modes only).
-    datasets: RwLock<HashMap<String, Arc<PointSet>>>,
+    datasets: RwLock<HashMap<String, InProcDataset>>,
 }
 
 impl AidwSession {
@@ -168,11 +181,99 @@ impl AidwSession {
                         "dataset '{name}' has no points"
                     )));
                 }
-                self.datasets
-                    .write()
-                    .unwrap()
-                    .insert(name.to_string(), Arc::new(points));
+                let n = points.len() as u64;
+                self.datasets.write().unwrap().insert(
+                    name.to_string(),
+                    InProcDataset {
+                        points: Arc::new(points),
+                        ids: (0..n).collect(),
+                        next_id: n,
+                    },
+                );
                 Ok(())
+            }
+        }
+    }
+
+    /// Append points to a registered dataset, assigning consecutive
+    /// stable ids.  Serving mode routes through the live mutation layer
+    /// (delta overlay + WAL); in-process modes rebuild the stored set.
+    pub fn append(&self, name: &str, points: &PointSet) -> Result<AppendOutcome> {
+        match &self.exec {
+            Exec::Serving(c) => c.append_points(name, points.clone()),
+            _ => {
+                if points.is_empty() {
+                    return Err(Error::InvalidArgument("append of zero points".into()));
+                }
+                let mut map = self.datasets.write().unwrap();
+                let entry = map
+                    .get_mut(name)
+                    .ok_or_else(|| Error::UnknownDataset(name.to_string()))?;
+                let first_id = entry.next_id;
+                let mut pts = (*entry.points).clone();
+                for i in 0..points.len() {
+                    pts.push(points.xs[i], points.ys[i], points.zs[i]);
+                    entry.ids.push(first_id + i as u64);
+                }
+                entry.next_id = first_id + points.len() as u64;
+                entry.points = Arc::new(pts);
+                Ok(AppendOutcome {
+                    first_id,
+                    count: points.len(),
+                    epoch: 0,
+                    live_points: entry.points.len(),
+                    delta_points: 0,
+                    pressure: 0,
+                })
+            }
+        }
+    }
+
+    /// Remove points by stable id (strict: every id must be live).
+    pub fn remove(&self, name: &str, ids: &[u64]) -> Result<RemoveOutcome> {
+        match &self.exec {
+            Exec::Serving(c) => c.remove_points(name, ids),
+            _ => {
+                if ids.is_empty() {
+                    return Err(Error::InvalidArgument("remove of zero ids".into()));
+                }
+                let mut map = self.datasets.write().unwrap();
+                let entry = map
+                    .get_mut(name)
+                    .ok_or_else(|| Error::UnknownDataset(name.to_string()))?;
+                let mut victims = std::collections::HashSet::with_capacity(ids.len());
+                for &id in ids {
+                    if entry.ids.binary_search(&id).is_err() || !victims.insert(id) {
+                        return Err(Error::InvalidArgument(format!(
+                            "id {id} is not a live point of dataset '{name}'"
+                        )));
+                    }
+                }
+                if victims.len() >= entry.points.len() {
+                    return Err(Error::InvalidArgument(format!(
+                        "removing {} point(s) would leave dataset '{name}' empty",
+                        victims.len()
+                    )));
+                }
+                let old = entry.points.clone();
+                let mut pts = PointSet::with_capacity(old.len() - victims.len());
+                let mut kept_ids = Vec::with_capacity(old.len() - victims.len());
+                for (i, &id) in entry.ids.iter().enumerate() {
+                    if victims.contains(&id) {
+                        continue;
+                    }
+                    pts.push(old.xs[i], old.ys[i], old.zs[i]);
+                    kept_ids.push(id);
+                }
+                entry.points = Arc::new(pts);
+                entry.ids = kept_ids;
+                Ok(RemoveOutcome {
+                    removed: victims.len(),
+                    epoch: 0,
+                    live_points: entry.points.len(),
+                    tombstones: 0,
+                    pressure: 0,
+                })
             }
         }
     }
@@ -254,7 +355,7 @@ impl AidwSession {
             .read()
             .unwrap()
             .get(dataset)
-            .cloned()
+            .map(|d| d.points.clone())
             .ok_or_else(|| Error::UnknownDataset(dataset.to_string()))?;
         let params = resolved.params();
 
@@ -366,6 +467,52 @@ mod tests {
         ));
         assert!(s.interpolate_values("d", &[], &QueryOptions::default()).is_err());
         assert!(s.register("empty", PointSet::default()).is_err());
+    }
+
+    #[test]
+    fn append_remove_agree_across_modes() {
+        let pts = data(); // 500 points -> ids 0..500
+        let extra = workload::uniform_square(20, 50.0, 403); // ids 500..520
+        let q = queries();
+
+        // expected live set: base minus id 3, then appends minus id 501
+        let mut expect = PointSet::default();
+        for i in 0..pts.len() {
+            if i != 3 {
+                expect.push(pts.xs[i], pts.ys[i], pts.zs[i]);
+            }
+        }
+        for i in 0..extra.len() {
+            if i != 1 {
+                expect.push(extra.xs[i], extra.ys[i], extra.zs[i]);
+            }
+        }
+        let want = serial::aidw_serial(&expect, &q, &AidwParams::default());
+
+        let serving = AidwSession::serving(CoordinatorConfig {
+            engine_mode: EngineMode::CpuOnly,
+            ..Default::default()
+        })
+        .unwrap();
+        for s in [AidwSession::serial(), AidwSession::in_process(), serving] {
+            s.register("d", pts.clone()).unwrap();
+            let a = s.append("d", &extra).unwrap();
+            assert_eq!(a.first_id, 500, "{}", s.backend_label());
+            assert_eq!(a.count, 20);
+            let r = s.remove("d", &[3, 501]).unwrap();
+            assert_eq!(r.removed, 2);
+            assert_eq!(r.live_points, 518);
+            // strict everywhere: unknown / double-removed ids fail
+            assert!(s.remove("d", &[3]).is_err(), "{}", s.backend_label());
+            assert!(s.remove("d", &[99999]).is_err());
+            assert!(s.append("ghost", &extra).is_err());
+            let got = s
+                .interpolate_values("d", &q, &QueryOptions::default())
+                .unwrap();
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-9, "{}: {g} vs {w}", s.backend_label());
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,430 @@
+//! Integration: the live mutation subsystem end to end.
+//!
+//! * kill-and-restart durability: append + remove over the wire, drop the
+//!   service without any graceful save (the WAL is the only record),
+//!   restart from snapshot + WAL replay, and every subsequent response is
+//!   **bit-identical** to a fresh service built from the merged point set;
+//! * concurrent interpolates during an in-progress compaction return
+//!   correct results from a single consistent epoch (verified via the
+//!   response options echo);
+//! * property test: `grid(base) ∪ brute(delta)` kNN (ids and distances)
+//!   exactly matches a from-scratch `EvenGrid` over the merged set, with
+//!   tombstones present; requests carrying either `RingRule` agree.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use aidw::aidw::serial;
+use aidw::aidw::params::AidwParams;
+use aidw::coordinator::{
+    Coordinator, CoordinatorConfig, EngineMode, InterpolationRequest, QueryOptions,
+};
+use aidw::geom::PointSet;
+use aidw::grid::{EvenGrid, GridConfig};
+use aidw::knn::grid_knn::RingRule;
+use aidw::live::{LiveConfig, LiveDataset};
+use aidw::pool::Pool;
+use aidw::prop_assert;
+use aidw::proptest::{check, pass, Config};
+use aidw::service::{Client, Server};
+use aidw::workload;
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("aidw_itlive_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn cpu_config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        engine_mode: EngineMode::CpuOnly,
+        ..Default::default()
+    }
+}
+
+/// The live merged set in the canonical order (base-live then live
+/// appends) — the ordering contract behind the bit-identity guarantee.
+fn merged_set(
+    base: &PointSet,
+    appended: &PointSet,
+    removed_base_idx: &HashSet<usize>,
+    removed_delta_idx: &HashSet<usize>,
+) -> PointSet {
+    let mut out = PointSet::default();
+    for i in 0..base.len() {
+        if !removed_base_idx.contains(&i) {
+            out.push(base.xs[i], base.ys[i], base.zs[i]);
+        }
+    }
+    for i in 0..appended.len() {
+        if !removed_delta_idx.contains(&i) {
+            out.push(appended.xs[i], appended.ys[i], appended.zs[i]);
+        }
+    }
+    out
+}
+
+#[test]
+fn kill_and_restart_is_bit_identical_to_fresh_build() {
+    let dir = scratch("restart");
+    let cfg = CoordinatorConfig {
+        live_dir: Some(dir.clone()),
+        ..cpu_config()
+    };
+    let base = workload::uniform_square(600, 50.0, 9101);
+    let appended = workload::uniform_square(80, 50.0, 9102);
+    // ids: base 0..600, appends 600..680; remove 4 base + 2 delta points
+    let remove_ids: Vec<u64> = vec![0, 7, 599, 42, 601, 650];
+    let removed_base_idx: HashSet<usize> = [0usize, 7, 599, 42].into_iter().collect();
+    let removed_delta_idx: HashSet<usize> = [1usize, 50].into_iter().collect();
+
+    // --- session 1: mutate over the wire, then die without saving -------
+    {
+        let coord = Arc::new(Coordinator::new(cfg.clone()).unwrap());
+        let server = Server::start(coord, "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(server.addr()).unwrap();
+        client.register("d", &base).unwrap();
+        let a = client.append("d", &appended).unwrap();
+        assert_eq!(a.first_id, 600);
+        assert_eq!(a.count, 80);
+        let r = client.remove("d", &remove_ids).unwrap();
+        assert_eq!(r.removed, 6);
+        assert_eq!(r.live_points, 674);
+        let st = client.live_stat("d").unwrap();
+        assert_eq!(st.epoch, 0);
+        assert_eq!(st.wal_records, 2, "one append + one remove record");
+        assert!(st.persistent);
+        // SIGKILL-equivalent: drop server + coordinator with NO explicit
+        // save — the mutation-time WAL writes are all the durability
+    }
+
+    // --- session 2: restart from snapshot + WAL replay ------------------
+    let coord2 = Arc::new(Coordinator::new(cfg.clone()).unwrap());
+    assert_eq!(coord2.datasets(), vec!["d".to_string()]);
+    let st = coord2.live_status("d").unwrap();
+    assert_eq!(st.live_points, 674);
+    assert_eq!(st.tombstones, 6);
+    assert_eq!(st.epoch, 0);
+    let server2 = Server::start(coord2.clone(), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(server2.addr()).unwrap();
+
+    // --- the fresh-build oracle ------------------------------------------
+    let merged = merged_set(&base, &appended, &removed_base_idx, &removed_delta_idx);
+    assert_eq!(merged.len(), 674);
+    let fresh = Arc::new(Coordinator::new(cpu_config()).unwrap());
+    fresh.register_dataset("m", merged.clone()).unwrap();
+    let fresh_server = Server::start(fresh.clone(), "127.0.0.1:0").unwrap();
+    let mut fresh_client = Client::connect(fresh_server.addr()).unwrap();
+
+    // every subsequent interpolate response is bit-identical
+    for (qseed, opts) in [
+        (9103u64, QueryOptions::default()),
+        (9104, QueryOptions::default()),
+        (9105, QueryOptions::new().k(5)),
+        (9106, QueryOptions::new().alpha_levels([1.0, 1.5, 2.5, 3.5, 4.5])),
+    ] {
+        let queries = workload::uniform_square(40, 50.0, qseed).xy();
+        let got = client.interpolate_with("d", &queries, opts.clone()).unwrap();
+        let want = fresh_client.interpolate_with("m", &queries, opts).unwrap();
+        assert_eq!(got.values, want.values, "qseed {qseed}: restart diverged");
+        let echoed = got.options.expect("v2.1 echo");
+        assert_eq!(echoed.epoch, Some(0), "served from the replayed epoch");
+    }
+
+    // compaction over the wire bumps the epoch; answers stay identical,
+    // and a second restart starts from the compacted snapshot
+    let c = client.compact("d").unwrap();
+    assert_eq!(c.epoch, 1);
+    let queries = workload::uniform_square(40, 50.0, 9107).xy();
+    let got = client
+        .interpolate_with("d", &queries, QueryOptions::default())
+        .unwrap();
+    let want = fresh_client
+        .interpolate_with("m", &queries, QueryOptions::default())
+        .unwrap();
+    assert_eq!(got.values, want.values);
+    assert_eq!(got.options.unwrap().epoch, Some(1));
+    let st = client.live_stat("d").unwrap();
+    assert_eq!((st.epoch, st.wal_records, st.tombstones), (1, 0, 0));
+
+    drop(client);
+    drop(server2);
+    drop(coord2);
+    let coord3 = Coordinator::new(cfg).unwrap();
+    let st = coord3.live_status("d").unwrap();
+    assert_eq!((st.epoch, st.live_points), (1, 674));
+    let resp = coord3
+        .interpolate(InterpolationRequest::new("d", queries))
+        .unwrap();
+    assert_eq!(resp.values, want.values, "third incarnation still identical");
+
+    drop(coord3);
+    drop(fresh_client);
+    drop(fresh_server);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn concurrent_interpolates_during_compaction_see_one_epoch() {
+    let coord = Arc::new(Coordinator::new(cpu_config()).unwrap());
+    let base = workload::uniform_square(3000, 80.0, 9201);
+    coord.register_dataset("d", base.clone()).unwrap();
+    let extra = workload::uniform_square(300, 80.0, 9202);
+    coord.append_points("d", extra.clone()).unwrap();
+
+    // the final live set is fixed before any query: responses must be
+    // correct whichever epoch serves them
+    let merged = merged_set(&base, &extra, &HashSet::new(), &HashSet::new());
+
+    let mut handles = Vec::new();
+    for t in 0..6u64 {
+        let coord = coord.clone();
+        let merged = merged.clone();
+        handles.push(std::thread::spawn(move || {
+            let queries = workload::uniform_square(20, 80.0, 9300 + t).xy();
+            let want = serial::aidw_serial(&merged, &queries, &AidwParams::default());
+            let mut epochs = Vec::new();
+            for _ in 0..4 {
+                let resp = coord
+                    .interpolate(InterpolationRequest::new("d", queries.clone()))
+                    .unwrap();
+                let epoch = resp.options.epoch.expect("epoch echoed");
+                epochs.push(epoch);
+                for (g, w) in resp.values.iter().zip(&want) {
+                    assert!(
+                        (g - w).abs() < 1e-9,
+                        "epoch {epoch}: {g} vs {w} (inconsistent snapshot?)"
+                    );
+                }
+            }
+            epochs
+        }));
+    }
+    // compact while the query threads are in flight
+    let rep = coord.compact_dataset("d").unwrap();
+    assert_eq!(rep.new_epoch, 1);
+    let mut seen = HashSet::new();
+    for h in handles {
+        for e in h.join().unwrap() {
+            seen.insert(e);
+        }
+    }
+    assert!(
+        seen.iter().all(|e| *e == 0 || *e == 1),
+        "responses must come from epoch 0 or 1, got {seen:?}"
+    );
+    // after the publish, new requests serve from the new epoch
+    let resp = coord
+        .interpolate(InterpolationRequest::new("d", vec![(1.0, 1.0)]))
+        .unwrap();
+    assert_eq!(resp.options.epoch, Some(1));
+}
+
+#[test]
+fn both_ring_rules_agree_on_mutated_dataset() {
+    // delta points are not in the grid, so the paper's +1 counting rule is
+    // ill-defined on the merged path; the live layer upgrades both rules
+    // to the provably-exact bound — requests carrying either rule must
+    // answer identically, and identically to a fresh exact build
+    let coord = Coordinator::new(cpu_config()).unwrap();
+    let base = workload::uniform_square(1200, 60.0, 9401);
+    coord.register_dataset("d", base.clone()).unwrap();
+    let extra = workload::uniform_square(90, 60.0, 9402);
+    coord.append_points("d", extra.clone()).unwrap();
+    coord.remove_points("d", &[10, 1201]).unwrap();
+
+    let merged = merged_set(
+        &base,
+        &extra,
+        &[10usize].into_iter().collect(),
+        &[1usize].into_iter().collect(),
+    );
+    let fresh = Coordinator::new(cpu_config()).unwrap();
+    fresh.register_dataset("m", merged).unwrap();
+
+    let queries = workload::uniform_square(50, 60.0, 9403).xy();
+    let exact = coord
+        .interpolate(
+            InterpolationRequest::new("d", queries.clone())
+                .with_options(QueryOptions::new().ring_rule(RingRule::Exact)),
+        )
+        .unwrap();
+    let paper = coord
+        .interpolate(
+            InterpolationRequest::new("d", queries.clone())
+                .with_options(QueryOptions::new().ring_rule(RingRule::PaperPlusOne)),
+        )
+        .unwrap();
+    assert_eq!(exact.values, paper.values, "rules must agree on the merged path");
+    assert_eq!(paper.options.ring_rule, RingRule::PaperPlusOne, "echo keeps the request's rule");
+    let want = fresh
+        .interpolate(
+            InterpolationRequest::new("m", queries)
+                .with_options(QueryOptions::new().ring_rule(RingRule::Exact)),
+        )
+        .unwrap();
+    assert_eq!(exact.values, want.values);
+}
+
+#[test]
+fn property_incremental_equals_rebuild() {
+    // grid(base) ∪ brute(delta) kNN — ids and distances — must exactly
+    // match a from-scratch EvenGrid over the merged point set, with
+    // tombstones present
+    let pool = Pool::new(2);
+
+    #[derive(Debug)]
+    struct Case {
+        base: PointSet,
+        delta: PointSet,
+        remove: Vec<u64>,
+        queries: Vec<(f64, f64)>,
+        k: usize,
+    }
+
+    check(
+        Config { cases: 24, seed: 0x11FE, max_size: 300 },
+        "incremental_vs_rebuild",
+        |rng, size| {
+            let n_base = 30 + (size % 300);
+            let n_delta = 1 + (size % 50);
+            let base = workload::uniform_square(n_base, 100.0, rng.next_u64());
+            let delta = workload::uniform_square(n_delta, 100.0, rng.next_u64());
+            // tombstone a few base and delta ids (never all of them)
+            let mut remove = Vec::new();
+            let mut taken = HashSet::new();
+            for _ in 0..rng.below(5) {
+                let id = rng.below(n_base as u32 - 1) as u64;
+                if taken.insert(id) {
+                    remove.push(id);
+                }
+            }
+            for _ in 0..rng.below(3) {
+                let id = n_base as u64 + rng.below(n_delta as u32) as u64;
+                if taken.insert(id) {
+                    remove.push(id);
+                }
+            }
+            let queries = workload::uniform_square(15, 100.0, rng.next_u64()).xy();
+            let k = [1usize, 4, 10][rng.below(3) as usize];
+            Case { base, delta, remove, queries, k }
+        },
+        |case| {
+            let live = LiveDataset::build(
+                &pool,
+                "p",
+                case.base.clone(),
+                &GridConfig::default(),
+                None,
+                LiveConfig::default(),
+            )
+            .unwrap();
+            live.append(&case.delta).unwrap();
+            if !case.remove.is_empty() {
+                live.remove(&case.remove).unwrap();
+            }
+            let snap = live.snapshot();
+            let (merged, merged_ids) = snap.live_points();
+
+            // live side: merged search (ids + distances + r_obs)
+            let got = live.knn_topk_ids(&pool, &case.queries, case.k);
+            let got_avg = aidw::knn::merged::merged_knn_avg_distances_on(
+                &pool,
+                &snap.merged_view(),
+                &case.queries,
+                case.k,
+            );
+
+            // rebuild side: from-scratch grid over the merged set
+            let grid = EvenGrid::build(&merged, None, &GridConfig::default()).unwrap();
+            let (idx, want_avg) = aidw::knn::grid_knn::grid_knn_neighbors(
+                &pool,
+                &grid,
+                &case.queries,
+                case.k,
+                case.k,
+                RingRule::Exact,
+            );
+
+            for (qi, &(qx, qy)) in case.queries.iter().enumerate() {
+                let live_row = &got[qi];
+                let fresh_row = &idx[qi * case.k..(qi + 1) * case.k];
+                let expect_len = case.k.min(merged.len());
+                prop_assert!(
+                    live_row.len() == expect_len,
+                    "q{qi}: live returned {} of {expect_len}",
+                    live_row.len()
+                );
+                for j in 0..expect_len {
+                    let fi = fresh_row[j];
+                    prop_assert!(fi != u32::MAX, "q{qi} slot {j}: fresh side padded");
+                    let fresh_d2 = {
+                        let i = fi as usize;
+                        let dx = qx - merged.xs[i];
+                        let dy = qy - merged.ys[i];
+                        dx * dx + dy * dy
+                    };
+                    let (live_d2, live_id) = live_row[j];
+                    prop_assert!(
+                        live_d2 == fresh_d2,
+                        "q{qi} slot {j}: d2 {live_d2} vs {fresh_d2}"
+                    );
+                    // ids must match wherever the distance is unique
+                    let tied = (j > 0 && live_row[j - 1].0 == live_d2)
+                        || (j + 1 < expect_len && live_row[j + 1].0 == live_d2);
+                    if !tied {
+                        let fresh_id = merged_ids[fi as usize];
+                        prop_assert!(
+                            live_id == fresh_id,
+                            "q{qi} slot {j}: id {live_id} vs {fresh_id}"
+                        );
+                    }
+                }
+                prop_assert!(
+                    got_avg[qi] == want_avg[qi],
+                    "q{qi}: r_obs {} vs {}",
+                    got_avg[qi],
+                    want_avg[qi]
+                );
+            }
+            pass()
+        },
+    );
+}
+
+#[test]
+fn mutate_error_codes_over_the_wire() {
+    use std::io::{BufRead, Write};
+    let coord = Arc::new(Coordinator::new(cpu_config()).unwrap());
+    let server = Server::start(coord, "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    client
+        .register("d", &workload::uniform_square(50, 10.0, 9501))
+        .unwrap();
+
+    // unknown dataset
+    let err = client
+        .append("ghost", &workload::uniform_square(2, 1.0, 9502))
+        .unwrap_err();
+    assert!(matches!(err, aidw::Error::UnknownDataset(_)), "{err}");
+    // dead / unknown id (strict remove)
+    let err = client.remove("d", &[12345]).unwrap_err();
+    assert!(matches!(err, aidw::Error::InvalidArgument(_)), "{err}");
+    // raw lines: malformed mutate is the client's fault
+    let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    stream
+        .write_all(b"{\"op\":\"mutate\",\"dataset\":\"d\",\"action\":\"append\",\"xs\":[1],\"ys\":[],\"zs\":[]}\n")
+        .unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"code\":\"bad_request\""), "{line}");
+    line.clear();
+    stream
+        .write_all(b"{\"op\":\"mutate\",\"dataset\":\"d\",\"action\":\"stat\"}\n")
+        .unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "{line}");
+    assert!(line.contains("\"live_points\":50"), "{line}");
+}
