@@ -16,12 +16,12 @@
 //! (`cargo bench --bench ablation_local`) quantifies the speed/accuracy
 //! trade across N.
 
-use crate::aidw::alpha;
 use crate::aidw::params::AidwParams;
+use crate::aidw::plan::{self, SearchKind, Stage1Plan};
 use crate::error::Result;
-use crate::geom::{dist2, PointSet, EPS_D2};
+use crate::geom::PointSet;
 use crate::grid::{EvenGrid, GridConfig};
-use crate::knn::grid_knn::{grid_knn_neighbors, RingRule};
+use crate::knn::grid_knn::RingRule;
 use crate::pool::{self, Pool};
 
 /// Local-AIDW configuration.
@@ -50,7 +50,9 @@ pub fn interpolate_local(
     interpolate_local_on(pool::global(), data, queries, params, cfg)
 }
 
-/// [`interpolate_local`] on an explicit pool.
+/// [`interpolate_local`] on an explicit pool: build the grid, execute a
+/// gathering [`Stage1Plan`], then run the local stage-2 weighting over
+/// the artifact — the same plan-IR pair the serving coordinator executes.
 pub fn interpolate_local_on(
     pool: &Pool,
     data: &PointSet,
@@ -61,40 +63,19 @@ pub fn interpolate_local_on(
     assert!(!data.is_empty(), "no data points");
     let grid = EvenGrid::build_on(pool, data, None, &GridConfig::default())?;
     let n = cfg.n_neighbors.max(params.k).max(1);
-    let k_alpha = params.k.min(data.len()).max(1);
-    let (nbr_idx, r_obs) = grid_knn_neighbors(pool, &grid, queries, n, k_alpha, cfg.rule);
-
     let area = params.area.unwrap_or_else(|| data.bounds().area());
-    let r_exp = alpha::expected_nn_distance(data.len() as f64, area);
-
-    let mut out = vec![0f64; queries.len()];
-    {
-        struct SendPtr<T>(*mut T);
-        unsafe impl<T> Send for SendPtr<T> {}
-        unsafe impl<T> Sync for SendPtr<T> {}
-        let out_ptr = SendPtr(out.as_mut_ptr());
-        pool.parallel_for(queries.len(), 64, |range| {
-            let op = &out_ptr;
-            for qi in range {
-                let (qx, qy) = queries[qi];
-                let a = alpha::adaptive_alpha(r_obs[qi], r_exp, params);
-                let mut sw = 0.0f64;
-                let mut swz = 0.0f64;
-                for &pid in &nbr_idx[qi * n..(qi + 1) * n] {
-                    if pid == u32::MAX {
-                        continue; // padding (fewer than N points exist)
-                    }
-                    let i = pid as usize;
-                    let d2 = dist2(qx, qy, data.xs[i], data.ys[i]).max(EPS_D2);
-                    let w = (-0.5 * a * d2.ln()).exp();
-                    sw += w;
-                    swz += w * data.zs[i];
-                }
-                unsafe { *op.0.add(qi) = swz / sw };
-            }
-        });
-    }
-    Ok(out)
+    let stage1 = Stage1Plan::new(
+        params.k,
+        cfg.rule,
+        Some(n),
+        params,
+        data.len(),
+        area,
+        SearchKind::Grid,
+    );
+    let artifact = stage1.execute_grid(pool, &grid, queries);
+    let table = artifact.neighbors.as_ref().expect("gathering plan produces a table");
+    Ok(plan::local_weighted_on(pool, data, queries, &artifact.alphas, table))
 }
 
 #[cfg(test)]

@@ -4,16 +4,27 @@
 //! * [`alpha`]  — the adaptive power-parameter pipeline (Eqs. 2-6), the
 //!   exact mirror of `python/compile/alpha.py` (cross-checked by the
 //!   integration tests against the PJRT `alpha_*` artifact);
+//! * [`plan`]   — the explicit two-stage plan IR: [`plan::Stage1Plan`]
+//!   (kNN search + alpha, over a grid or a merged live snapshot) produces
+//!   a reusable [`plan::NeighborArtifact`] that a [`plan::Stage2Plan`]
+//!   (dense or local weighting) consumes.  Every execution path below —
+//!   and the serving coordinator — runs through this seam, which is what
+//!   enables stage-level batch coalescing and epoch-keyed neighbor reuse;
 //! * [`serial`] — the double-precision serial CPU baseline (the paper's
 //!   Table-1 "CPU/Serial" column) plus standard IDW;
-//! * [`pipeline`] — the pure-rust *improved* pipeline (grid kNN + parallel
-//!   weighting): the CPU fallback when no PJRT artifacts are present, and
-//!   the reference the coordinator's PJRT path is validated against.
+//! * [`pipeline`] — the pure-rust *improved* pipeline: a thin driver that
+//!   builds a grid, executes a dense `Stage1Plan`, and runs the parallel
+//!   Eq.-1 weighting — the CPU fallback when no PJRT artifacts are
+//!   present, and the reference the coordinator's PJRT path is validated
+//!   against;
+//! * [`local`]  — the A5 localized-weighting extension, likewise a plan
+//!   builder + executor pair (gathering `Stage1Plan`, local `Stage2Plan`).
 
 pub mod alpha;
 pub mod local;
 pub mod params;
 pub mod pipeline;
+pub mod plan;
 pub mod serial;
 
 pub use params::AidwParams;

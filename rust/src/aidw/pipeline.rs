@@ -7,11 +7,11 @@
 //! (c) the stage-timing subject for Tables 2/3 style measurements when the
 //! PJRT engine is not the variable under test.
 
-use crate::aidw::alpha;
 use crate::aidw::params::AidwParams;
+use crate::aidw::plan::{SearchKind, Stage1Plan};
 use crate::geom::{dist2, PointSet, EPS_D2};
 use crate::grid::{EvenGrid, GridConfig};
-use crate::knn::grid_knn::{grid_knn_avg_distances_on, GridKnnConfig, RingRule};
+use crate::knn::grid_knn::RingRule;
 use crate::pool::{self, Pool};
 
 /// Timing breakdown of one improved-pipeline run (paper Table 2).
@@ -35,6 +35,11 @@ pub fn interpolate_improved(
 
 /// [`interpolate_improved`] with explicit pool and ring rule; returns the
 /// per-stage wall-clock breakdown.
+///
+/// This is the plan-IR driver form: build the grid, execute a dense
+/// [`Stage1Plan`], then run the Eq.-1 weighting over the artifact's
+/// alphas — the same two calls the coordinator's planner makes, so the
+/// in-process and serving paths cannot drift apart numerically.
 pub fn interpolate_improved_on(
     pool: &Pool,
     data: &PointSet,
@@ -45,21 +50,19 @@ pub fn interpolate_improved_on(
     assert!(!data.is_empty(), "no data points");
     let mut times = StageTimes::default();
 
-    // ---- Stage 1: grid + kNN + alpha -------------------------------
+    // ---- Stage 1: grid + kNN + alpha (one Stage1Plan execution) -----
     let t0 = std::time::Instant::now();
     let grid = EvenGrid::build_on(pool, data, None, &GridConfig::default())
         .expect("non-empty data");
-    let knn_cfg = GridKnnConfig { k: params.k.min(data.len()).max(1), rule };
-    let (r_obs, _) = grid_knn_avg_distances_on(pool, &grid, queries, &knn_cfg);
     let area = params.area.unwrap_or_else(|| data.bounds().area());
-    let r_exp = alpha::expected_nn_distance(data.len() as f64, area);
-    let alphas: Vec<f64> =
-        r_obs.iter().map(|&ro| alpha::adaptive_alpha(ro, r_exp, params)).collect();
+    let plan =
+        Stage1Plan::new(params.k, rule, None, params, data.len(), area, SearchKind::Grid);
+    let artifact = plan.execute_grid(pool, &grid, queries);
     times.knn_s = t0.elapsed().as_secs_f64();
 
     // ---- Stage 2: weighted interpolating ----------------------------
     let t1 = std::time::Instant::now();
-    let out = weighted_stage_on(pool, data, queries, &alphas);
+    let out = weighted_stage_on(pool, data, queries, &artifact.alphas);
     times.interp_s = t1.elapsed().as_secs_f64();
 
     (out, times)

@@ -1,0 +1,357 @@
+//! The two-stage execution plan IR — the paper's decomposition ("the
+//! improved algorithm is composed of the stages of kNN search and
+//! weighted interpolating") made explicit and reusable.
+//!
+//! Every execution path used to fuse both stages into one monolithic call
+//! per batch; this module splits them along the seam the paper draws:
+//!
+//! * a [`Stage1Plan`] describes the kNN search + adaptive-alpha stage —
+//!   which search strategy ([`SearchKind`]: grid over a compacted index,
+//!   merged base ∪ delta over a mutated live snapshot), the effective `k`
+//!   (clamped to the live count), the ring rule, whether neighbor indices
+//!   must be gathered for a local (A5) consumer, and the Eq.-2/-6 alpha
+//!   parameters.  Executing it yields a [`NeighborArtifact`];
+//! * the [`NeighborArtifact`] is the reusable stage-1 product: per-query
+//!   `r_obs` (Eq. 3), per-query adaptive alphas (Eqs. 2-6), and — in
+//!   local mode — the row-major neighbor-index table.  It is `Arc`-shared
+//!   by the coordinator across stage-2 variants of one batch and stored
+//!   in the `NeighborCache` for repeated rasters;
+//! * a [`Stage2Plan`] names the weighting that consumes the artifact —
+//!   dense Eq.-1 over every live point, or local over the gathered
+//!   neighbors.  (The kernel *variant* — naive vs tiled — is a stage-2
+//!   dispatch detail carried by
+//!   [`crate::coordinator::options::Stage2Key`], not by the plan: it
+//!   selects a PJRT artifact, never the numerics.)
+//!
+//! The seam is what lets the batcher coalesce jobs that differ only in
+//! stage-2 variant (one kNN sweep, several weightings), the coordinator
+//! cache stage-1 products keyed on `(dataset, epoch, stage1_key, query
+//! fingerprint)`, and local mode run on mutated datasets (the merged
+//! search gathers per-id neighbors, tombstone-filtered).
+//!
+//! Numerics contract: executing a plan is **bit-identical** to the
+//! monolithic paths it replaced — same search, same `r_exp` derivation,
+//! same alpha pipeline, same summation order in stage 2 (pinned by
+//! `tests/it_planner.rs`).  The one caveat is exact distance ties at a
+//! neighbor-gather cut boundary, where merged and grid searches may keep
+//! different tied points (see [`crate::knn::merged`]); distances, r_obs,
+//! and dense weighting are tie-insensitive.
+
+use crate::aidw::alpha;
+use crate::aidw::params::AidwParams;
+use crate::geom::{dist2, PointSet, EPS_D2};
+use crate::grid::EvenGrid;
+use crate::knn::grid_knn::{self, GridKnnConfig, RingRule};
+use crate::knn::merged::{self, MergedView};
+use crate::pool::Pool;
+
+/// Which neighbor-search strategy stage 1 runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchKind {
+    /// Ring expansion over a compacted [`EvenGrid`] index.
+    Grid,
+    /// Grid over the epoch base ∪ brute force over the delta overlay
+    /// (mutated live snapshots); always the provably-exact bound.
+    Merged,
+}
+
+/// The stage-1 plan: fully-concrete search + alpha parameters for one
+/// dataset snapshot.  Build with [`Stage1Plan::new`], execute with
+/// [`Stage1Plan::execute_grid`] / [`Stage1Plan::execute_merged`].
+#[derive(Debug, Clone)]
+pub struct Stage1Plan {
+    /// Effective k for the Eq.-3 statistic (clamped to the live count).
+    pub k: usize,
+    /// Ring-expansion rule (the merged executor always uses the exact
+    /// bound; see [`crate::knn::merged`] for why).
+    pub rule: RingRule,
+    /// `Some(n)` = also gather the n nearest neighbor indices (n >= k)
+    /// for a local stage-2 consumer.
+    pub gather: Option<usize>,
+    /// Eq.-2 expected NN distance for (live count, effective area).
+    pub r_exp: f64,
+    /// Alpha parameters (levels + fuzzy bounds), k clamped, area filled.
+    pub params: AidwParams,
+    pub search: SearchKind,
+}
+
+/// Row-major neighbor-index table gathered by a local-mode stage 1
+/// (`u32::MAX` = padding when fewer points exist).
+#[derive(Debug, Clone)]
+pub struct NeighborTable {
+    pub idx: Vec<u32>,
+    /// Row width (the gathered n).
+    pub width: usize,
+}
+
+/// The reusable stage-1 product: everything stage 2 needs, and nothing
+/// dataset-mutation-sensitive beyond the snapshot it was computed from.
+#[derive(Debug, Clone, Default)]
+pub struct NeighborArtifact {
+    /// Eq.-3 average distance to the k nearest live points, per query.
+    pub r_obs: Vec<f64>,
+    /// Adaptive alpha (Eqs. 2-6), per query.
+    pub alphas: Vec<f64>,
+    /// Neighbor indices (local mode only).  Grid artifacts hold original
+    /// base indices; merged artifacts hold merged candidate indices
+    /// (`< n_base` = base index, else `n_base + delta position`).
+    pub neighbors: Option<NeighborTable>,
+    /// Wall seconds spent producing this artifact (search + alpha).
+    pub stage1_s: f64,
+}
+
+/// The stage-2 plan: which weighting consumes the artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage2Plan {
+    /// The paper's Eq.-1 dense weighting over every live point.
+    Dense,
+    /// Weighting restricted to the artifact's gathered neighbors (A5).
+    Local,
+}
+
+impl Stage2Plan {
+    /// The plan a resolved local-mode knob implies.
+    pub fn for_local_neighbors(local_neighbors: Option<usize>) -> Stage2Plan {
+        match local_neighbors {
+            Some(_) => Stage2Plan::Local,
+            None => Stage2Plan::Dense,
+        }
+    }
+}
+
+impl Stage1Plan {
+    /// Build a stage-1 plan.  `k` and `gather` are clamped the way every
+    /// execution path historically clamped them (`k` to the live count,
+    /// `gather` up to at least `k`); `area` is the effective Eq.-2 area
+    /// (request override or dataset bounds); `params` supplies the alpha
+    /// levels and fuzzy bounds.
+    pub fn new(
+        k: usize,
+        rule: RingRule,
+        gather: Option<usize>,
+        params: &AidwParams,
+        n_live: usize,
+        area: f64,
+        search: SearchKind,
+    ) -> Stage1Plan {
+        let k = k.min(n_live).max(1);
+        let gather = gather.map(|n| n.max(k));
+        let mut params = params.clone();
+        params.k = k;
+        params.area = Some(area);
+        let r_exp = alpha::expected_nn_distance(n_live as f64, area);
+        Stage1Plan { k, rule, gather, r_exp, params, search }
+    }
+
+    /// The stage-2 plan this stage-1 plan was built to feed.
+    pub fn stage2(&self) -> Stage2Plan {
+        Stage2Plan::for_local_neighbors(self.gather)
+    }
+
+    /// Execute over a compacted grid index ([`SearchKind::Grid`]).
+    pub fn execute_grid(
+        &self,
+        pool: &Pool,
+        grid: &EvenGrid,
+        queries: &[(f64, f64)],
+    ) -> NeighborArtifact {
+        let t0 = std::time::Instant::now();
+        let (r_obs, neighbors) = match self.gather {
+            Some(n) => {
+                let (idx, r_obs) =
+                    grid_knn::grid_knn_neighbors(pool, grid, queries, n, self.k, self.rule);
+                (r_obs, Some(NeighborTable { idx, width: n }))
+            }
+            None => {
+                let cfg = GridKnnConfig { k: self.k, rule: self.rule };
+                let (r_obs, _) = grid_knn::grid_knn_avg_distances_on(pool, grid, queries, &cfg);
+                (r_obs, None)
+            }
+        };
+        self.finish(t0, r_obs, neighbors)
+    }
+
+    /// Execute over a mutated live snapshot ([`SearchKind::Merged`]):
+    /// grid over the epoch base ∪ brute over the delta, tombstones
+    /// filtered, exact termination bound regardless of [`Stage1Plan::rule`].
+    pub fn execute_merged(
+        &self,
+        pool: &Pool,
+        view: &MergedView<'_>,
+        queries: &[(f64, f64)],
+    ) -> NeighborArtifact {
+        let t0 = std::time::Instant::now();
+        let (r_obs, neighbors) = match self.gather {
+            Some(n) => {
+                let (idx, r_obs) = merged::merged_knn_neighbors_on(pool, view, queries, n, self.k);
+                (r_obs, Some(NeighborTable { idx, width: n }))
+            }
+            None => {
+                let r_obs = merged::merged_knn_avg_distances_on(pool, view, queries, self.k);
+                (r_obs, None)
+            }
+        };
+        self.finish(t0, r_obs, neighbors)
+    }
+
+    /// Alpha epilogue shared by both executors (Eqs. 2-6 over r_obs).
+    fn finish(
+        &self,
+        t0: std::time::Instant,
+        r_obs: Vec<f64>,
+        neighbors: Option<NeighborTable>,
+    ) -> NeighborArtifact {
+        let alphas = r_obs
+            .iter()
+            .map(|&ro| alpha::adaptive_alpha(ro, self.r_exp, &self.params))
+            .collect();
+        NeighborArtifact { r_obs, alphas, neighbors, stage1_s: t0.elapsed().as_secs_f64() }
+    }
+}
+
+/// The shared local (A5) stage-2 kernel: Eq.-1 weighting restricted to
+/// each query's gathered neighbor row, with neighbor-index resolution
+/// supplied by the caller (original base indices for grid artifacts,
+/// merged base ∪ delta candidate indices for live snapshots).  **One**
+/// kernel — one padding rule, one `EPS_D2` clamp, one summation order —
+/// is what the merged-vs-compacted bit-identity contract rests on; do
+/// not fork it per index space.
+pub fn local_weighted_with<F>(
+    pool: &Pool,
+    queries: &[(f64, f64)],
+    alphas: &[f64],
+    nbr_idx: &[u32],
+    width: usize,
+    resolve: F,
+) -> Vec<f64>
+where
+    F: Fn(u32) -> (f64, f64, f64) + Sync,
+{
+    assert_eq!(queries.len(), alphas.len());
+    assert_eq!(nbr_idx.len(), queries.len() * width);
+    let mut out = vec![0f64; queries.len()];
+    pool.for_each_slice_mut(&mut out, 64, |offset, chunk| {
+        for (j, slot) in chunk.iter_mut().enumerate() {
+            let qi = offset + j;
+            let (qx, qy) = queries[qi];
+            let a = alphas[qi];
+            let mut sw = 0.0f64;
+            let mut swz = 0.0f64;
+            for &pid in &nbr_idx[qi * width..(qi + 1) * width] {
+                if pid == u32::MAX {
+                    continue; // padding (fewer than n points exist)
+                }
+                let (x, y, z) = resolve(pid);
+                let d2 = dist2(qx, qy, x, y).max(EPS_D2);
+                let w = (-0.5 * a * d2.ln()).exp();
+                sw += w;
+                swz += w * z;
+            }
+            *slot = swz / sw;
+        }
+    });
+    out
+}
+
+/// Local (A5) CPU stage 2 over a plain point set: the artifact's rows
+/// hold original point indices (grid gathers).  Rows are consumed in
+/// ascending-distance order — see [`local_weighted_with`].
+pub fn local_weighted_on(
+    pool: &Pool,
+    data: &PointSet,
+    queries: &[(f64, f64)],
+    alphas: &[f64],
+    table: &NeighborTable,
+) -> Vec<f64> {
+    local_weighted_with(pool, queries, alphas, &table.idx, table.width, |pid| {
+        let i = pid as usize;
+        (data.xs[i], data.ys[i], data.zs[i])
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aidw::serial;
+    use crate::grid::GridConfig;
+    use crate::workload;
+
+    #[test]
+    fn grid_plan_matches_monolithic_dense_pipeline() {
+        let data = workload::uniform_square(700, 80.0, 971);
+        let queries = workload::uniform_square(90, 80.0, 972).xy();
+        let params = AidwParams::default();
+        let pool = Pool::new(2);
+        let grid = EvenGrid::build_on(&pool, &data, None, &GridConfig::default()).unwrap();
+        let area = data.bounds().area();
+        let plan = Stage1Plan::new(
+            params.k,
+            RingRule::Exact,
+            None,
+            &params,
+            data.len(),
+            area,
+            SearchKind::Grid,
+        );
+        assert_eq!(plan.stage2(), Stage2Plan::Dense);
+        let art = plan.execute_grid(&pool, &grid, &queries);
+        assert_eq!(art.r_obs.len(), queries.len());
+        assert_eq!(art.alphas.len(), queries.len());
+        assert!(art.neighbors.is_none());
+        let got = crate::aidw::pipeline::weighted_stage_on(&pool, &data, &queries, &art.alphas);
+        let want = serial::aidw_serial(&data, &queries, &params);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn local_plan_gathers_and_weights() {
+        let data = workload::uniform_square(900, 60.0, 973);
+        let queries = workload::uniform_square(50, 60.0, 974).xy();
+        let params = AidwParams::default();
+        let pool = Pool::new(2);
+        let grid = EvenGrid::build_on(&pool, &data, None, &GridConfig::default()).unwrap();
+        let plan = Stage1Plan::new(
+            params.k,
+            RingRule::Exact,
+            Some(48),
+            &params,
+            data.len(),
+            data.bounds().area(),
+            SearchKind::Grid,
+        );
+        assert_eq!(plan.stage2(), Stage2Plan::Local);
+        let art = plan.execute_grid(&pool, &grid, &queries);
+        let table = art.neighbors.as_ref().expect("local plan gathers");
+        assert_eq!(table.width, 48);
+        let got = local_weighted_on(&pool, &data, &queries, &art.alphas, table);
+        let want = crate::aidw::local::interpolate_local(
+            &data,
+            &queries,
+            &params,
+            &crate::aidw::local::LocalConfig { n_neighbors: 48, rule: RingRule::Exact },
+        )
+        .unwrap();
+        assert_eq!(got, want, "plan-IR local must be bit-identical");
+    }
+
+    #[test]
+    fn gather_clamps_below_k() {
+        let params = AidwParams::default(); // k = 10
+        let plan = Stage1Plan::new(
+            10,
+            RingRule::Exact,
+            Some(4),
+            &params,
+            1000,
+            100.0,
+            SearchKind::Grid,
+        );
+        assert_eq!(plan.gather, Some(10), "gather widens to at least k");
+        // and k clamps to the live count
+        let tiny = Stage1Plan::new(10, RingRule::Exact, None, &params, 3, 100.0, SearchKind::Grid);
+        assert_eq!(tiny.k, 3);
+        assert_eq!(tiny.params.k, 3);
+    }
+}

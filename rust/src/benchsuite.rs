@@ -19,7 +19,7 @@
 
 use crate::aidw::params::AidwParams;
 use crate::aidw::serial;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::geom::PointSet;
 use crate::grid::{EvenGrid, GridConfig};
 use crate::jsonio::Json;
@@ -216,6 +216,121 @@ pub fn measure_size_cpu(pool: &Pool, n: usize, opts: &MeasureOpts) -> CpuSizeMea
     }
 }
 
+/// Planner-path measurements at one size — the two-stage execution
+/// planner through a CPU-only coordinator: cold per-stage times from the
+/// response's stage split, a two-variant pair sharing one stage-1 sweep
+/// (stage-level coalescing), and a repeated identical raster served from
+/// the `NeighborCache`.
+#[derive(Debug, Clone, Copy)]
+pub struct PlannerMeasurement {
+    pub n: usize,
+    /// Cold stage-1 (kNN + alpha) ms of one n-query raster.
+    pub stage1_ms: f64,
+    /// Cold stage-2 (weighted interpolating) ms.
+    pub stage2_ms: f64,
+    /// Wall ms for a naive+tiled pair submitted together (one stage-1).
+    pub coalesce_pair_ms: f64,
+    /// Stage-1 executions the pair actually ran (1 = coalesced/reused).
+    pub coalesce_stage1_execs: u64,
+    /// Wall ms for the repeated identical raster (stage 1 skipped).
+    pub cache_hit_ms: f64,
+    /// Neighbor-cache hits observed during the repeat (1 expected).
+    pub cache_hits: u64,
+}
+
+/// Measure the planner suite at one size (CPU-only coordinator; results
+/// are asserted bit-identical between the cold and cached passes).
+pub fn measure_planner(
+    n: usize,
+    opts: &MeasureOpts,
+    threads: Option<usize>,
+) -> Result<PlannerMeasurement> {
+    use crate::coordinator::{
+        BatchPolicy, Coordinator, CoordinatorConfig, EngineMode, InterpolationRequest,
+    };
+    let cfg = CoordinatorConfig {
+        engine_mode: EngineMode::CpuOnly,
+        stage1_threads: threads,
+        batch: BatchPolicy {
+            linger: std::time::Duration::from_millis(20),
+            // the coalesce pair must fit one batch even at the largest
+            // bench sizes (the default 8192 cap would split n >= 4097)
+            max_queries: (2 * n).max(8192),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let coord = Coordinator::new(cfg)?;
+    let (data, queries) = standard_workload(n, opts);
+    coord.register_dataset("bench", data)?;
+
+    // cold pass: per-stage timings straight from the planner's response
+    let cold = coord.interpolate(InterpolationRequest::new("bench", queries.clone()))?;
+
+    // coalesce pass: two stage-2 variants on a fresh raster, submitted
+    // together — equal stage-1 keys, so the kNN sweep runs once.  The
+    // pair wall time includes the linger window.  `coalesce_stage1_execs
+    // == 1` holds even if the second submit misses the linger: the
+    // dispatcher is serial, so the first batch's artifact is cached
+    // before the second batch can form, which then hits the cache.
+    let q2 = workload::uniform_square(n, opts.side, opts.seed + 7).xy();
+    let m0 = coord.metrics();
+    let t0 = std::time::Instant::now();
+    let t_naive = coord.submit(
+        InterpolationRequest::new("bench", q2.clone()).with_variant(Variant::Naive),
+    )?;
+    let t_tiled =
+        coord.submit(InterpolationRequest::new("bench", q2).with_variant(Variant::Tiled))?;
+    t_naive.wait()?;
+    t_tiled.wait()?;
+    let coalesce_pair_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let m1 = coord.metrics();
+
+    // cache pass: repeat the cold raster bit-identically
+    let t1 = std::time::Instant::now();
+    let warm = coord.interpolate(InterpolationRequest::new("bench", queries))?;
+    let cache_hit_ms = t1.elapsed().as_secs_f64() * 1e3;
+    let m2 = coord.metrics();
+    if cold.values != warm.values {
+        return Err(Error::Service(
+            "cached raster diverged from the cold pass".into(),
+        ));
+    }
+    Ok(PlannerMeasurement {
+        n,
+        stage1_ms: cold.knn_s * 1e3,
+        stage2_ms: cold.interp_s * 1e3,
+        coalesce_pair_ms,
+        coalesce_stage1_execs: m1.stage1_execs - m0.stage1_execs,
+        cache_hit_ms,
+        cache_hits: m2.stage1_cache_hits - m1.stage1_cache_hits,
+    })
+}
+
+/// The `planner` section of `BENCH_aidw.json`.
+fn planner_json(planner: &[PlannerMeasurement]) -> Json {
+    Json::Arr(
+        planner
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("n", Json::Num(p.n as f64)),
+                    ("label", Json::Str(size_label(p.n))),
+                    ("stage1_ms", Json::Num(p.stage1_ms)),
+                    ("stage2_ms", Json::Num(p.stage2_ms)),
+                    ("coalesce_pair_ms", Json::Num(p.coalesce_pair_ms)),
+                    (
+                        "coalesce_stage1_execs",
+                        Json::Num(p.coalesce_stage1_execs as f64),
+                    ),
+                    ("cache_hit_ms", Json::Num(p.cache_hit_ms)),
+                    ("cache_hits", Json::Num(p.cache_hits as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 fn variant_json(v: &VariantTimes) -> Json {
     Json::obj(vec![
         ("knn_ms", Json::Num(v.knn_ms)),
@@ -225,8 +340,14 @@ fn variant_json(v: &VariantTimes) -> Json {
 }
 
 /// `BENCH_aidw.json` document for a CPU-only run: sizes × variants ×
-/// stage times, self-describing enough to diff across PRs.
-pub fn cpu_bench_json(results: &[CpuSizeMeasurement], threads: usize, seed: u64) -> Json {
+/// stage times plus the planner section (stage1/stage2/coalesce/
+/// cache-hit), self-describing enough to diff across PRs.
+pub fn cpu_bench_json(
+    results: &[CpuSizeMeasurement],
+    planner: &[PlannerMeasurement],
+    threads: usize,
+    seed: u64,
+) -> Json {
     Json::obj(vec![
         ("bench", Json::Str("aidw".into())),
         ("backend", Json::Str("cpu".into())),
@@ -234,6 +355,7 @@ pub fn cpu_bench_json(results: &[CpuSizeMeasurement], threads: usize, seed: u64)
         ("seed", Json::Num(seed as f64)),
         // the measurements run with the library defaults
         ("k", Json::Num(AidwParams::default().k as f64)),
+        ("planner", planner_json(planner)),
         (
             "sizes",
             Json::Arr(
@@ -267,8 +389,13 @@ pub fn cpu_bench_json(results: &[CpuSizeMeasurement], threads: usize, seed: u64)
 }
 
 /// `BENCH_aidw.json` document for a full PJRT run (all five paper
-/// versions per size).
-pub fn pjrt_bench_json(results: &[SizeMeasurement], threads: usize, seed: u64) -> Json {
+/// versions per size, plus the planner section).
+pub fn pjrt_bench_json(
+    results: &[SizeMeasurement],
+    planner: &[PlannerMeasurement],
+    threads: usize,
+    seed: u64,
+) -> Json {
     Json::obj(vec![
         ("bench", Json::Str("aidw".into())),
         ("backend", Json::Str("pjrt".into())),
@@ -276,6 +403,7 @@ pub fn pjrt_bench_json(results: &[SizeMeasurement], threads: usize, seed: u64) -
         ("seed", Json::Num(seed as f64)),
         // the measurements run with the library defaults
         ("k", Json::Num(AidwParams::default().k as f64)),
+        ("planner", planner_json(planner)),
         (
             "sizes",
             Json::Arr(
@@ -369,7 +497,16 @@ mod tests {
             assert!(m.improved_exact.total_ms() > 0.0);
             assert!(m.improved_paper1.total_ms() > 0.0);
         }
-        let doc = cpu_bench_json(&results, pool.threads(), opts.seed);
+        let planner: Vec<PlannerMeasurement> = sizes
+            .iter()
+            .map(|&n| measure_planner(n, &opts, Some(2)).unwrap())
+            .collect();
+        for p in &planner {
+            assert!(p.stage2_ms > 0.0);
+            assert_eq!(p.coalesce_stage1_execs, 1, "pair must share one stage-1");
+            assert_eq!(p.cache_hits, 1, "repeat raster must hit the cache");
+        }
+        let doc = cpu_bench_json(&results, &planner, pool.threads(), opts.seed);
         let text = doc.to_string();
         // round-trips as JSON and carries the schema the perf trajectory
         // tooling greps for
@@ -385,5 +522,10 @@ mod tests {
             .get("knn_ms")
             .as_f64()
             .is_some());
+        let pj = back.get("planner").as_arr().unwrap();
+        assert_eq!(pj.len(), 2);
+        assert_eq!(pj[0].get("coalesce_stage1_execs").as_usize(), Some(1));
+        assert_eq!(pj[0].get("cache_hits").as_usize(), Some(1));
+        assert!(pj[0].get("stage1_ms").as_f64().is_some());
     }
 }

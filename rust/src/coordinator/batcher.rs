@@ -1,19 +1,24 @@
 //! Dynamic batcher: bounded job queue with linger-based batch formation.
 //!
-//! Requests are coalesced into one batch only when they target the same
-//! dataset **and** resolve to identical [`ResolvedOptions`] — k, variant,
-//! ring rule, local mode, alpha levels, fuzzy bounds, and area all key the
-//! admission, because a batch runs one grid-kNN sweep and one stage-2
-//! launch whose semantics every member must share.  (The old key was just
-//! dataset + k, which would silently mis-serve mixed ring rules or local
-//! modes.)  A bounded queue provides backpressure: submissions beyond
-//! `max_queue` are rejected immediately rather than queued unboundedly.
+//! Requests are coalesced into one batch when they target the same
+//! dataset **and** agree on the **stage-1 key**
+//! ([`ResolvedOptions::stage1_key`]) — k, ring rule, local mode, alpha
+//! levels, fuzzy bounds, area, and epoch: everything that determines the
+//! kNN sweep and the alpha product.  The stage-2 kernel *variant* is
+//! deliberately **not** part of the admission key: jobs that differ only
+//! there share the batch's single stage-1 execution (the dominant cost in
+//! the paper's measurements) and are split into per-variant groups only
+//! for stage 2 ([`Batch::stage2_groups`]).  Under the old full-options
+//! admission, each variant paid its own kNN sweep.
+//!
+//! A bounded queue provides backpressure: submissions beyond `max_queue`
+//! are rejected immediately rather than queued unboundedly.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::options::ResolvedOptions;
+use crate::coordinator::options::{ResolvedOptions, Stage2Key};
 use crate::coordinator::request::Job;
 use crate::error::{Error, Result};
 
@@ -38,14 +43,34 @@ impl Default for BatchPolicy {
     }
 }
 
-/// A formed batch: option-compatible jobs to run together.
+/// A formed batch: stage-1-compatible jobs to run together.
 pub(crate) struct Batch {
     pub jobs: Vec<Job>,
     pub dataset: String,
-    /// The batch admission key: every member resolved to these options.
+    /// The first member's resolved options.  Every stage-1-relevant field
+    /// (the [`ResolvedOptions::stage1_key`] projection) is identical
+    /// across members by admission; the `variant` field is only the first
+    /// job's and must not drive stage 2 — use [`Batch::stage2_groups`]
+    /// and each job's own resolved options instead.
     pub options: ResolvedOptions,
     /// Total queries across jobs.
     pub total_queries: usize,
+}
+
+impl Batch {
+    /// Partition the jobs by stage-2 key, in first-seen order.  Returns
+    /// `(key, job indices)` per group; most batches have exactly one.
+    pub fn stage2_groups(&self) -> Vec<(Stage2Key, Vec<usize>)> {
+        let mut groups: Vec<(Stage2Key, Vec<usize>)> = Vec::new();
+        for (i, job) in self.jobs.iter().enumerate() {
+            let key = job.resolved.stage2_key();
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, idxs)) => idxs.push(i),
+                None => groups.push((key, vec![i])),
+            }
+        }
+        groups
+    }
 }
 
 /// The bounded, condvar-signalled job queue.
@@ -117,9 +142,12 @@ impl JobQueue {
     }
 
     /// Grow a batch around `first`, lingering for compatible arrivals.
+    /// Compatibility = same dataset + equal stage-1 key (stage-2 variants
+    /// may differ; they split only at stage 2).
     fn fill_batch(&self, first: Job) -> Batch {
         let dataset = first.request.dataset.clone();
         let options = first.resolved;
+        let stage1 = options.stage1_key();
         let mut total = first.request.queries.len();
         let mut jobs = vec![first];
         let deadline = Instant::now() + self.policy.linger;
@@ -133,7 +161,7 @@ impl JobQueue {
                 let compat = {
                     let j = &st.jobs[i];
                     j.request.dataset == dataset
-                        && j.resolved == options
+                        && j.resolved.stage1_key() == stage1
                         && total + j.request.queries.len() <= self.policy.max_queries
                 };
                 if compat {
@@ -241,6 +269,33 @@ mod tests {
             assert_eq!(b.jobs.len(), 1);
             assert_eq!(b.options, want);
         }
+    }
+
+    #[test]
+    fn variant_only_difference_coalesces_into_one_batch() {
+        // the stage-2 kernel variant is not part of the admission key:
+        // such jobs share one stage-1 sweep and split only at stage 2
+        let q = JobQueue::new(BatchPolicy {
+            linger: Duration::from_millis(1),
+            ..Default::default()
+        });
+        let base = ResolvedOptions::default(); // Variant::Tiled
+        let naive = ResolvedOptions { variant: crate::runtime::Variant::Naive, ..base };
+        let (j1, _r1) = job_with("a", 4, base);
+        let (j2, _r2) = job_with("a", 4, naive);
+        let (j3, _r3) = job_with("a", 4, base);
+        for j in [j1, j2, j3] {
+            q.push(j).unwrap();
+        }
+        let b = q.next_batch().unwrap();
+        assert_eq!(b.jobs.len(), 3, "variant-only differences coalesce");
+        assert_eq!(b.total_queries, 12);
+        let groups = b.stage2_groups();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].0, base.stage2_key());
+        assert_eq!(groups[0].1, vec![0, 2]);
+        assert_eq!(groups[1].0, naive.stage2_key());
+        assert_eq!(groups[1].1, vec![1]);
     }
 
     #[test]

@@ -1,0 +1,283 @@
+//! The epoch-keyed neighbor cache: a bounded LRU of stage-1 products
+//! ([`NeighborArtifact`]) so a repeated raster — the dominant serving
+//! pattern for DEM/tile workloads — skips the kNN search entirely.
+//!
+//! ## Key & invalidation rules
+//!
+//! An entry is keyed on `(dataset, served epoch, Stage1Key, query-set
+//! fingerprint, query count)`.  Correctness rests on three rules:
+//!
+//! 1. **Only compacted snapshots are cached or served from the cache.**
+//!    A mutated snapshot (non-empty delta overlay) changes with every
+//!    append/remove while keeping its epoch, so its stage-1 products are
+//!    never inserted and never looked up — any mutation therefore
+//!    invalidates the cache for that dataset *implicitly* (lookups bypass
+//!    it until the overlay is folded).
+//! 2. **Compaction bumps the epoch**, so post-compaction lookups miss the
+//!    pre-compaction entries by key; stale epochs age out of the LRU.
+//! 3. **Registering over or dropping a dataset purges its entries**
+//!    explicitly (same name + epoch 0 would otherwise collide with a
+//!    different point set).
+//!
+//! The store is a small `Mutex<VecDeque>` scanned linearly: capacities
+//! are tens of entries (each potentially megabytes of artifact), so a
+//! hash map would buy nothing — and `Stage1Key` holds `f64`s, which have
+//! no `Eq`/`Hash`.  Queries are identified by a 128-bit FNV-1a
+//! fingerprint of their raw bits plus the exact count; two distinct
+//! rasters colliding on both fingerprint halves is beyond-astronomical,
+//! and a false hit is the only way this cache could ever change answers.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::aidw::plan::NeighborArtifact;
+
+use super::options::Stage1Key;
+
+/// Full identity of one cached stage-1 product.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheKey {
+    pub dataset: String,
+    /// The epoch of the (compacted) snapshot the artifact was computed
+    /// from.
+    pub epoch: u64,
+    /// Identity of the epoch base ([`crate::coordinator::Dataset::uid`],
+    /// a process-unique monotonic counter): a backstop against the
+    /// register-over race where an in-flight batch of a displaced dataset
+    /// could insert under the same `(name, epoch)` as its replacement
+    /// after the purge.
+    pub instance: u64,
+    pub stage1: Stage1Key,
+    /// 128-bit query-set fingerprint (see [`query_fingerprint`]).
+    pub queries_fp: (u64, u64),
+    pub n_queries: usize,
+}
+
+/// Two independent 64-bit FNV-1a passes over the queries' raw f64 bits.
+pub fn query_fingerprint(queries: &[(f64, f64)]) -> (u64, u64) {
+    fn fnv(queries: &[(f64, f64)], mut h: u64) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01B3;
+        for &(x, y) in queries {
+            for b in x.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+            for b in y.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+        }
+        h
+    }
+    (
+        fnv(queries, 0xcbf2_9ce4_8422_2325),
+        fnv(queries, 0x9e37_79b9_7f4a_7c15),
+    )
+}
+
+/// Approximate heap bytes one artifact retains (the eviction weight).
+fn artifact_bytes(a: &NeighborArtifact) -> usize {
+    a.r_obs.len() * 8
+        + a.alphas.len() * 8
+        + a.neighbors.as_ref().map_or(0, |t| t.idx.len() * 4)
+}
+
+#[derive(Debug, Default)]
+struct CacheState {
+    /// Front = most recently used.  Each entry carries its byte weight.
+    entries: VecDeque<(CacheKey, Arc<NeighborArtifact>, usize)>,
+    bytes: usize,
+}
+
+/// Bounded LRU of stage-1 artifacts, capped both by entry count and by
+/// approximate resident bytes (large-raster artifacts are megabytes
+/// each; an entry-only bound would let memory scale with raster size).
+/// `capacity == 0` disables caching; an artifact larger than the whole
+/// byte budget is simply not cached.
+#[derive(Debug, Default)]
+pub struct NeighborCache {
+    inner: Mutex<CacheState>,
+    capacity: usize,
+    max_bytes: usize,
+}
+
+impl NeighborCache {
+    pub fn new(capacity: usize, max_bytes: usize) -> NeighborCache {
+        NeighborCache { inner: Mutex::new(CacheState::default()), capacity, max_bytes }
+    }
+
+    /// True when the cache can hold anything at all.
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// Look up an artifact; a hit is promoted to most-recently-used.
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<NeighborArtifact>> {
+        if self.capacity == 0 {
+            return None;
+        }
+        let mut st = self.inner.lock().unwrap();
+        let pos = st.entries.iter().position(|(k, _, _)| k == key)?;
+        let entry = st.entries.remove(pos).unwrap();
+        let art = entry.1.clone();
+        st.entries.push_front(entry);
+        Some(art)
+    }
+
+    /// Insert (or refresh) an artifact, evicting least-recently-used
+    /// entries beyond the entry or byte bound.
+    pub fn put(&self, key: CacheKey, artifact: Arc<NeighborArtifact>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let weight = artifact_bytes(&artifact);
+        if self.max_bytes > 0 && weight > self.max_bytes {
+            return; // would evict everything and still bust the budget
+        }
+        let mut st = self.inner.lock().unwrap();
+        if let Some(pos) = st.entries.iter().position(|(k, _, _)| *k == key) {
+            let (_, _, w) = st.entries.remove(pos).unwrap();
+            st.bytes -= w;
+        }
+        st.entries.push_front((key, artifact, weight));
+        st.bytes += weight;
+        while st.entries.len() > self.capacity
+            || (self.max_bytes > 0 && st.bytes > self.max_bytes)
+        {
+            match st.entries.pop_back() {
+                Some((_, _, w)) => st.bytes -= w,
+                None => break,
+            }
+        }
+    }
+
+    /// Drop every entry of one dataset (register-over / drop paths).
+    pub fn purge_dataset(&self, dataset: &str) {
+        let mut st = self.inner.lock().unwrap();
+        st.entries.retain(|(k, _, _)| k.dataset != dataset);
+        st.bytes = st.entries.iter().map(|(_, _, w)| *w).sum();
+    }
+
+    /// Entries currently held (diagnostics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Approximate resident bytes (diagnostics).
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::options::ResolvedOptions;
+
+    fn key(dataset: &str, epoch: u64, fp: u64) -> CacheKey {
+        CacheKey {
+            dataset: dataset.to_string(),
+            epoch,
+            instance: 7,
+            stage1: ResolvedOptions::default().stage1_key(),
+            queries_fp: (fp, fp ^ 0xABCD),
+            n_queries: 3,
+        }
+    }
+
+    fn artifact(tag: f64) -> Arc<NeighborArtifact> {
+        Arc::new(NeighborArtifact {
+            r_obs: vec![tag],
+            alphas: vec![tag],
+            neighbors: None,
+            stage1_s: 0.0,
+        })
+    }
+
+    const NO_BYTE_CAP: usize = usize::MAX;
+
+    #[test]
+    fn lru_evicts_oldest_and_promotes_hits() {
+        let c = NeighborCache::new(2, NO_BYTE_CAP);
+        assert!(c.enabled());
+        c.put(key("d", 0, 1), artifact(1.0));
+        c.put(key("d", 0, 2), artifact(2.0));
+        // touch entry 1 so entry 2 becomes the LRU victim
+        assert!(c.get(&key("d", 0, 1)).is_some());
+        c.put(key("d", 0, 3), artifact(3.0));
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&key("d", 0, 2)).is_none(), "LRU evicted");
+        assert!(c.get(&key("d", 0, 1)).is_some());
+        assert!(c.get(&key("d", 0, 3)).is_some());
+    }
+
+    #[test]
+    fn epoch_and_dataset_separate_entries() {
+        let c = NeighborCache::new(8, NO_BYTE_CAP);
+        c.put(key("d", 0, 1), artifact(1.0));
+        assert!(c.get(&key("d", 1, 1)).is_none(), "epoch mismatch misses");
+        assert!(c.get(&key("e", 0, 1)).is_none(), "dataset mismatch misses");
+        let hit = c.get(&key("d", 0, 1)).unwrap();
+        assert_eq!(hit.r_obs, vec![1.0]);
+    }
+
+    #[test]
+    fn purge_and_disable() {
+        let c = NeighborCache::new(4, NO_BYTE_CAP);
+        c.put(key("d", 0, 1), artifact(1.0));
+        c.put(key("e", 0, 1), artifact(2.0));
+        assert!(c.bytes() > 0);
+        c.purge_dataset("d");
+        assert!(c.get(&key("d", 0, 1)).is_none());
+        assert!(c.get(&key("e", 0, 1)).is_some());
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), 16, "one 1-query artifact (r_obs + alphas)");
+
+        let off = NeighborCache::new(0, NO_BYTE_CAP);
+        assert!(!off.enabled());
+        off.put(key("d", 0, 1), artifact(1.0));
+        assert!(off.get(&key("d", 0, 1)).is_none());
+        assert!(off.is_empty());
+    }
+
+    #[test]
+    fn byte_budget_bounds_memory() {
+        fn big(tag: f64, n: usize) -> Arc<NeighborArtifact> {
+            Arc::new(NeighborArtifact {
+                r_obs: vec![tag; n],
+                alphas: vec![tag; n],
+                neighbors: None,
+                stage1_s: 0.0,
+            })
+        }
+        // each 8-query artifact weighs 8 * 16 = 128 bytes; budget = 2
+        let c = NeighborCache::new(64, 256);
+        c.put(key("d", 0, 1), big(1.0, 8));
+        c.put(key("d", 0, 2), big(2.0, 8));
+        assert_eq!((c.len(), c.bytes()), (2, 256));
+        c.put(key("d", 0, 3), big(3.0, 8));
+        assert_eq!((c.len(), c.bytes()), (2, 256), "byte budget evicts the LRU");
+        assert!(c.get(&key("d", 0, 1)).is_none());
+        assert!(c.get(&key("d", 0, 3)).is_some());
+        // an artifact bigger than the whole budget is not cached at all
+        c.put(key("d", 0, 4), big(4.0, 1000));
+        assert!(c.get(&key("d", 0, 4)).is_none());
+        assert_eq!(c.len(), 2, "oversized artifact left the cache untouched");
+    }
+
+    #[test]
+    fn fingerprint_sensitivity() {
+        let a = query_fingerprint(&[(1.0, 2.0), (3.0, 4.0)]);
+        let b = query_fingerprint(&[(1.0, 2.0), (3.0, 4.0)]);
+        assert_eq!(a, b);
+        assert_ne!(a, query_fingerprint(&[(1.0, 2.0), (3.0, 4.000001)]));
+        assert_ne!(a, query_fingerprint(&[(3.0, 4.0), (1.0, 2.0)]), "order matters");
+        // -0.0 and 0.0 are different rasters bit-wise; the fingerprint
+        // distinguishes them (conservative: a miss merely recomputes)
+        assert_ne!(query_fingerprint(&[(0.0, 0.0)]), query_fingerprint(&[(-0.0, 0.0)]));
+    }
+}

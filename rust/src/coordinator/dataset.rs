@@ -5,6 +5,7 @@
 //! paper's one-time grid construction) and every request reuses it.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::aidw::alpha;
@@ -12,6 +13,9 @@ use crate::error::{Error, Result};
 use crate::geom::PointSet;
 use crate::grid::{EvenGrid, GridConfig};
 use crate::pool::Pool;
+
+/// Process-wide monotonic id source for [`Dataset::uid`].
+static NEXT_DATASET_UID: AtomicU64 = AtomicU64::new(1);
 
 /// A registered dataset: points + spatial index + cached Eq.-2 constant.
 #[derive(Debug)]
@@ -23,6 +27,12 @@ pub struct Dataset {
     pub r_exp: f64,
     /// Study-region area used for r_exp.
     pub area: f64,
+    /// Process-unique build id: every `Dataset::build` (registration or
+    /// compaction epoch) gets a fresh value, never reused.  The neighbor
+    /// cache keys on it so a stale entry of a displaced same-name dataset
+    /// can never be mistaken for its replacement (an allocation address
+    /// would be ABA-prone; a counter cannot repeat).
+    pub uid: u64,
 }
 
 impl Dataset {
@@ -40,7 +50,14 @@ impl Dataset {
         let grid = EvenGrid::build_on(pool, &points, None, grid_cfg)?;
         let area = area_override.unwrap_or_else(|| points.bounds().area().max(f64::MIN_POSITIVE));
         let r_exp = alpha::expected_nn_distance(points.len() as f64, area);
-        Ok(Dataset { name: name.to_string(), points, grid, r_exp, area })
+        Ok(Dataset {
+            name: name.to_string(),
+            points,
+            grid,
+            r_exp,
+            area,
+            uid: NEXT_DATASET_UID.fetch_add(1, Ordering::Relaxed),
+        })
     }
 }
 

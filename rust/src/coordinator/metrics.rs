@@ -61,6 +61,19 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub rejected: AtomicU64,
     pub errors: AtomicU64,
+    /// Stage-1 (kNN + alpha) executions actually run by the planner —
+    /// one per batch that missed the neighbor cache.  Two jobs coalesced
+    /// on an equal stage-1 key bump this once, not twice.
+    pub stage1_execs: AtomicU64,
+    /// Batches served straight from the [`super::cache::NeighborCache`]
+    /// (stage 1 skipped entirely).
+    pub stage1_cache_hits: AtomicU64,
+    /// Stage-2 executions (one per distinct stage-2 key per batch).
+    pub stage2_execs: AtomicU64,
+    /// Batches whose jobs spanned more than one stage-2 variant — the
+    /// coalescing the stage-key split makes possible (such jobs would
+    /// each have paid their own kNN sweep under full-options admission).
+    pub coalesced_batches: AtomicU64,
     /// Cumulative stage seconds (microsecond fixed point).
     knn_us: AtomicU64,
     interp_us: AtomicU64,
@@ -89,6 +102,10 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            stage1_execs: self.stage1_execs.load(Ordering::Relaxed),
+            stage1_cache_hits: self.stage1_cache_hits.load(Ordering::Relaxed),
+            stage2_execs: self.stage2_execs.load(Ordering::Relaxed),
+            coalesced_batches: self.coalesced_batches.load(Ordering::Relaxed),
             knn_s: self.knn_seconds(),
             interp_s: self.interp_seconds(),
             mean_latency_s: self.latency.mean_s(),
@@ -105,6 +122,14 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub rejected: u64,
     pub errors: u64,
+    /// Planner stage-1 executions (cache misses).
+    pub stage1_execs: u64,
+    /// Batches served from the neighbor cache.
+    pub stage1_cache_hits: u64,
+    /// Planner stage-2 executions (>= batches when variants coalesce).
+    pub stage2_execs: u64,
+    /// Batches that coalesced more than one stage-2 variant.
+    pub coalesced_batches: u64,
     pub knn_s: f64,
     pub interp_s: f64,
     pub mean_latency_s: f64,

@@ -16,10 +16,35 @@
 //!
 //! Every request carries its own [`QueryOptions`] — k, kernel variant,
 //! ring rule, local mode, alpha levels, fuzzy bounds, area — resolved
-//! against [`CoordinatorConfig`] defaults at submit time.  Batches form
-//! only among option-identical jobs, and both stages read the batch's
-//! [`ResolvedOptions`] instead of the shared config, so one coordinator
-//! concurrently serves arbitrarily mixed tunings.
+//! against [`CoordinatorConfig`] defaults at submit time.
+//!
+//! ## The Stage1/Stage2 seam
+//!
+//! Execution is planned along the paper's own decomposition
+//! ([`crate::aidw::plan`]): the dispatcher builds a
+//! [`crate::aidw::plan::Stage1Plan`] per batch (grid kNN over a compacted
+//! snapshot, merged base ∪ delta over a mutated one; local mode gathers
+//! neighbor ids in the same pass) whose product — the
+//! [`crate::aidw::plan::NeighborArtifact`] of per-query r_obs, alphas,
+//! and neighbor indices — is handed to the stage-2 thread.
+//!
+//! * **Admission** keys on [`ResolvedOptions::stage1_key`], *not* full
+//!   option equality: jobs that differ only in stage-2 kernel variant
+//!   share one batch, the kNN sweep (the dominant cost in the paper) runs
+//!   once, and stage 2 executes once per distinct variant group over that
+//!   group's query rows.
+//! * **Reuse**: the [`cache::NeighborCache`] holds recent artifacts keyed
+//!   on `(dataset, epoch, stage1_key, query fingerprint)`, so a repeated
+//!   raster on an unmutated dataset skips stage 1 entirely.  Cache
+//!   invalidation rules live in [`cache`]: mutated snapshots are never
+//!   cached (any append/remove implicitly invalidates), compaction bumps
+//!   the epoch out from under stale entries, and register/drop purge by
+//!   name.
+//!
+//! Responses echo each job's *own* resolved options (the batch may mix
+//! variants) plus the planner's coalescing/cache facts
+//! ([`InterpolationResponse::stage1_cache_hit`] /
+//! [`InterpolationResponse::stage2_groups`]).
 //!
 //! Datasets are **live** ([`crate::live`]): appends and removals layer a
 //! small delta overlay over the immutable epoch grid, queries merge grid
@@ -32,6 +57,7 @@
 //! their snapshot across a compaction publish.
 
 pub mod batcher;
+pub mod cache;
 pub mod dataset;
 pub mod metrics;
 pub mod options;
@@ -42,14 +68,13 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 
-use crate::aidw::alpha;
 use crate::aidw::params::AidwParams;
 use crate::aidw::pipeline::weighted_stage_on;
+use crate::aidw::plan::{self, NeighborArtifact, NeighborTable, SearchKind, Stage1Plan};
 use crate::error::{Error, Result};
 use crate::geom::PointSet;
 use crate::grid::GridConfig;
-use crate::knn::grid_knn::{grid_knn_avg_distances_on, GridKnnConfig, RingRule};
-use crate::knn::merged::merged_knn_avg_distances_on;
+use crate::knn::grid_knn::RingRule;
 use crate::live::{
     AppendOutcome, CompactionReport, LiveConfig, LiveDataset, LiveRegistry, LiveSnapshot,
     LiveStatus, RemoveOutcome,
@@ -59,12 +84,14 @@ use crate::runtime::{AidwExecutor, Engine};
 
 pub use crate::runtime::Variant;
 pub use batcher::BatchPolicy;
+pub use cache::NeighborCache;
 pub use dataset::{Dataset, DatasetRegistry};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use options::{LocalMode, QueryOptions, ResolvedOptions};
+pub use options::{LocalMode, QueryOptions, ResolvedOptions, Stage1Key, Stage2Key};
 pub use request::{Backend, InterpolationRequest, InterpolationResponse, Ticket};
 
 use batcher::{Batch, JobQueue};
+use cache::CacheKey;
 use request::Job;
 
 /// Stage-2 engine selection.
@@ -113,6 +140,13 @@ pub struct CoordinatorConfig {
     pub live_dir: Option<std::path::PathBuf>,
     /// Live-mutation tunables (compaction threshold, WAL sync).
     pub live: LiveConfig,
+    /// Capacity (entries) of the stage-1 [`NeighborCache`]; 0 disables
+    /// neighbor reuse.  See [`cache`] for the key and invalidation rules.
+    pub neighbor_cache: usize,
+    /// Approximate byte budget of the [`NeighborCache`] (large-raster
+    /// artifacts are megabytes each, so an entry bound alone would let
+    /// memory scale with raster size).  0 = entry bound only.
+    pub neighbor_cache_bytes: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -131,6 +165,8 @@ impl Default for CoordinatorConfig {
             local_neighbors: None,
             live_dir: None,
             live: LiveConfig::default(),
+            neighbor_cache: 64,
+            neighbor_cache_bytes: 256 << 20, // 256 MiB
         }
     }
 }
@@ -139,18 +175,20 @@ impl Default for CoordinatorConfig {
 struct Stage2Job {
     batch: Batch,
     queries: Vec<(f64, f64)>,
-    r_obs: Vec<f64>,
-    /// Local mode only: row-major (queries x n) neighbor indices.
-    neighbors: Option<(Vec<u32>, usize)>,
+    /// The stage-1 product (r_obs + alphas + neighbor table), shared with
+    /// the neighbor cache.
+    artifact: Arc<NeighborArtifact>,
     /// The consistent live snapshot this whole batch is served from.
     snap: Arc<LiveSnapshot>,
-    knn_s: f64,
+    /// True when the artifact came from the cache (stage 1 skipped).
+    cache_hit: bool,
 }
 
 struct Shared {
     registry: LiveRegistry,
     queue: JobQueue,
     metrics: Metrics,
+    cache: NeighborCache,
     config: CoordinatorConfig,
     pool: Pool,
     running: AtomicBool,
@@ -202,6 +240,7 @@ impl Coordinator {
             registry: LiveRegistry::new(),
             queue: JobQueue::new(config.batch),
             metrics: Metrics::default(),
+            cache: NeighborCache::new(config.neighbor_cache, config.neighbor_cache_bytes),
             config,
             pool,
             running: AtomicBool::new(true),
@@ -296,12 +335,19 @@ impl Coordinator {
             // may hand us a not-yet-retired instance, so retire again)
             old.retire();
         }
+        // stage-1 artifacts of the displaced dataset must not survive a
+        // same-name re-register (epoch numbering restarts at 0); purge
+        // *after* the insert so no pre-insert batch can re-populate
+        // between purge and publish (the epoch-base instance id in the
+        // cache key is the backstop for the remaining race)
+        self.shared.cache.purge_dataset(name);
         Ok(())
     }
 
     /// Remove a dataset (joins its compactor and deletes its durable
     /// state so a restart does not resurrect it).
     pub fn drop_dataset(&self, name: &str) -> bool {
+        self.shared.cache.purge_dataset(name);
         match self.shared.registry.remove(name) {
             Some(ds) => {
                 // after retire() no compaction — background or an
@@ -372,17 +418,10 @@ impl Coordinator {
         resolved.validate()?;
         // stamp the dataset's current epoch into the admission key: jobs
         // admitted against different epochs never share a batch, and the
-        // response echo reports the epoch a batch was served from
+        // response echo reports the epoch a batch was served from.
+        // (Local weighting on a mutated dataset is served by the merged
+        // per-id gather — the PR-2 rejection is gone.)
         resolved.epoch = Some(live.epoch());
-        // local weighting needs per-id neighbor gathers the merged path
-        // does not provide yet; reject while the overlay is non-empty
-        if resolved.local_neighbors.is_some() && live.is_mutated() {
-            return Err(Error::InvalidArgument(format!(
-                "local weighting is unavailable while dataset '{}' has \
-                 uncompacted mutations; request dense weighting or compact first",
-                request.dataset
-            )));
-        }
         let n_queries = request.queries.len() as u64;
         let (tx, rx) = mpsc::channel();
         let job = Job {
@@ -473,8 +512,11 @@ impl Drop for Coordinator {
     }
 }
 
-/// Dispatcher: batch formation + stage 1 (grid kNN) on the CPU pool, per
-/// the batch's resolved options.
+/// Dispatcher: batch formation + the planned stage 1 on the CPU pool.
+/// Builds a [`Stage1Plan`] from the batch's stage-1 key (grid over a
+/// compacted snapshot, merged over a mutated one; local mode gathers
+/// neighbor ids in the same pass), consults the [`NeighborCache`], and
+/// hands the resulting [`NeighborArtifact`] to stage 2.
 fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
     while let Some(batch) = shared.queue.next_batch() {
         shared.metrics.batches.fetch_add(1, Ordering::Relaxed);
@@ -496,57 +538,64 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
             queries.extend_from_slice(&job.request.queries);
         }
 
-        // STAGE 1: grid kNN (the paper's fast kNN search), driven by the
-        // batch's options.  A compacted snapshot takes the plain grid
-        // path (honoring the request's ring rule; in local mode the same
-        // grid pass also gathers neighbor ids).  A mutated snapshot takes
-        // the merged path: grid over the epoch base ∪ brute force over
-        // the delta, tombstones filtered, always the exact bound.
-        let t0 = std::time::Instant::now();
+        // STAGE 1 (planned): the paper's fast kNN search + adaptive
+        // alpha, one execution per batch regardless of how many stage-2
+        // variants the members carry.
         let opts = batch.options;
-        let k = opts.k.min(snap.live_len).max(1);
-        let (r_obs, neighbors) = if snap.is_compacted() {
-            match opts.local_neighbors {
-                Some(n) => {
-                    let n = n.max(k);
-                    let (idx, r_obs) = crate::knn::grid_knn::grid_knn_neighbors(
-                        &shared.pool,
-                        &snap.base.grid,
-                        &queries,
-                        n,
-                        k,
-                        opts.ring_rule,
-                    );
-                    (r_obs, Some((idx, n)))
-                }
-                None => {
-                    let knn_cfg = GridKnnConfig { k, rule: opts.ring_rule };
-                    let (r_obs, _) =
-                        grid_knn_avg_distances_on(&shared.pool, &snap.base.grid, &queries, &knn_cfg);
-                    (r_obs, None)
-                }
-            }
-        } else {
-            if opts.local_neighbors.is_some() {
-                // submit guards this; a mutation can still race in between
-                fail_batch(
-                    &shared,
-                    batch,
-                    &Error::InvalidArgument(format!(
-                        "local weighting is unavailable while dataset '{}' has \
-                         uncompacted mutations",
-                        snap.base.name
-                    )),
-                );
-                continue;
-            }
-            let view = snap.merged_view();
-            let r_obs = merged_knn_avg_distances_on(&shared.pool, &view, &queries, k);
-            (r_obs, None)
-        };
-        let knn_s = t0.elapsed().as_secs_f64();
+        let search = if snap.is_compacted() { SearchKind::Grid } else { SearchKind::Merged };
+        let area = opts.area.unwrap_or_else(|| snap.area());
+        let params = opts.params();
+        let stage1 = Stage1Plan::new(
+            opts.k,
+            opts.ring_rule,
+            opts.local_neighbors,
+            &params,
+            snap.live_len,
+            area,
+            search,
+        );
 
-        let job = Stage2Job { batch, queries, r_obs, neighbors, snap, knn_s };
+        // Neighbor reuse: compacted snapshots only (see cache.rs for the
+        // invalidation rules).  The key's stage-1 epoch is normalized to
+        // the snapshot actually served, so a compaction publishing
+        // between admission and formation cannot split cache identity.
+        let cache_key = if shared.cache.enabled() && snap.is_compacted() {
+            let mut s1 = opts.stage1_key();
+            s1.epoch = Some(snap.epoch);
+            Some(CacheKey {
+                dataset: batch.dataset.clone(),
+                epoch: snap.epoch,
+                instance: snap.base.uid,
+                stage1: s1,
+                queries_fp: cache::query_fingerprint(&queries),
+                n_queries: queries.len(),
+            })
+        } else {
+            None
+        };
+        let (artifact, cache_hit) = match cache_key.as_ref().and_then(|k| shared.cache.get(k)) {
+            Some(art) => {
+                shared.metrics.stage1_cache_hits.fetch_add(1, Ordering::Relaxed);
+                (art, true)
+            }
+            None => {
+                let art = Arc::new(match search {
+                    SearchKind::Grid => {
+                        stage1.execute_grid(&shared.pool, &snap.base.grid, &queries)
+                    }
+                    SearchKind::Merged => {
+                        stage1.execute_merged(&shared.pool, &snap.merged_view(), &queries)
+                    }
+                });
+                shared.metrics.stage1_execs.fetch_add(1, Ordering::Relaxed);
+                if let Some(key) = cache_key {
+                    shared.cache.put(key, art.clone());
+                }
+                (art, false)
+            }
+        };
+
+        let job = Stage2Job { batch, queries, artifact, snap, cache_hit };
         if tx.send(job).is_err() {
             break; // stage 2 is gone
         }
@@ -577,9 +626,18 @@ fn stage2_loop(
     while let Ok(sj) = rx.recv() {
         let result = run_stage2(&shared, &engine, &sj);
         match result {
-            Ok((values, knn_extra_s, interp_s)) => {
-                let knn_s = sj.knn_s + knn_extra_s;
-                shared.metrics.add_stage_times(knn_s, interp_s);
+            Ok(out) => {
+                // a cache-hit batch spent no stage-1 time of its own
+                let stage1_s = if sj.cache_hit { 0.0 } else { sj.artifact.stage1_s };
+                let knn_s = stage1_s + out.alpha_extra_s;
+                shared.metrics.add_stage_times(knn_s, out.interp_s);
+                shared
+                    .metrics
+                    .stage2_execs
+                    .fetch_add(out.groups as u64, Ordering::Relaxed);
+                if out.groups > 1 {
+                    shared.metrics.coalesced_batches.fetch_add(1, Ordering::Relaxed);
+                }
                 // merged (mutated-snapshot) batches run the CPU path even
                 // when artifacts are loaded; report what actually ran
                 let backend = if engine.is_some() && sj.snap.is_compacted() {
@@ -587,7 +645,7 @@ fn stage2_loop(
                 } else {
                     Backend::CpuFallback
                 };
-                respond_batch(&shared, sj, values, knn_s, interp_s, backend);
+                respond_batch(&shared, sj, out, knn_s, backend);
             }
             Err(e) => {
                 shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
@@ -611,34 +669,142 @@ fn effective_params(opts: &ResolvedOptions, snap: &LiveSnapshot) -> AidwParams {
     p
 }
 
-/// Execute stage 2 for one batch; returns (values, extra_knn_s, interp_s).
-fn run_stage2(
+/// What one batch's stage 2 produced.
+struct Stage2Outcome {
+    values: Vec<f64>,
+    /// Stage-1-attributed extra seconds (the PJRT path recomputes alpha
+    /// on-device from r_obs).
+    alpha_extra_s: f64,
+    interp_s: f64,
+    /// Distinct stage-2 executions this batch split into.
+    groups: usize,
+}
+
+/// Execute stage 2 for one batch: once per distinct stage-2 key, each
+/// group consuming its own rows of the shared [`NeighborArtifact`].
+fn run_stage2(shared: &Shared, engine: &Option<Engine>, sj: &Stage2Job) -> Result<Stage2Outcome> {
+    let opts = &sj.batch.options;
+    let art: &NeighborArtifact = &sj.artifact;
+    let params = effective_params(opts, &sj.snap);
+    let groups = sj.batch.stage2_groups();
+
+    // fast path (the overwhelmingly common single-variant batch): the
+    // one group *is* the whole contiguous block — execute over borrowed
+    // slices of the artifact, no gather/scatter copies
+    if groups.len() == 1 {
+        let (values, alpha_extra_s, interp_s) = run_stage2_group(
+            shared,
+            engine,
+            sj,
+            &params,
+            groups[0].0,
+            &sj.queries,
+            &art.alphas,
+            &art.r_obs,
+            art.neighbors.as_ref(),
+        )?;
+        return Ok(Stage2Outcome { values, alpha_extra_s, interp_s, groups: 1 });
+    }
+
+    // per-job row offsets into the concatenated query block
+    let mut offsets = Vec::with_capacity(sj.batch.jobs.len());
+    let mut off = 0usize;
+    for job in &sj.batch.jobs {
+        offsets.push(off);
+        off += job.request.queries.len();
+    }
+
+    let mut values = vec![0f64; sj.queries.len()];
+    let mut alpha_extra_s = 0.0f64;
+    let mut interp_s = 0.0f64;
+
+    for (key, members) in &groups {
+        // gather the group's rows (each job is contiguous; a group of
+        // several jobs may not be)
+        let rows: usize = members
+            .iter()
+            .map(|&m| sj.batch.jobs[m].request.queries.len())
+            .sum();
+        let mut g_queries = Vec::with_capacity(rows);
+        let mut g_alphas = Vec::with_capacity(rows);
+        let mut g_robs = Vec::with_capacity(rows);
+        for &m in members {
+            let start = offsets[m];
+            let len = sj.batch.jobs[m].request.queries.len();
+            g_queries.extend_from_slice(&sj.queries[start..start + len]);
+            g_alphas.extend_from_slice(&art.alphas[start..start + len]);
+            g_robs.extend_from_slice(&art.r_obs[start..start + len]);
+        }
+        let g_table = art.neighbors.as_ref().map(|t| {
+            let mut idx = Vec::with_capacity(rows * t.width);
+            for &m in members {
+                let start = offsets[m];
+                let len = sj.batch.jobs[m].request.queries.len();
+                idx.extend_from_slice(&t.idx[start * t.width..(start + len) * t.width]);
+            }
+            NeighborTable { idx, width: t.width }
+        });
+
+        let (out, a_s, i_s) = run_stage2_group(
+            shared,
+            engine,
+            sj,
+            &params,
+            *key,
+            &g_queries,
+            &g_alphas,
+            &g_robs,
+            g_table.as_ref(),
+        )?;
+        alpha_extra_s += a_s;
+        interp_s += i_s;
+
+        // scatter the group's rows back into batch order
+        let mut gi = 0usize;
+        for &m in members {
+            let start = offsets[m];
+            let len = sj.batch.jobs[m].request.queries.len();
+            values[start..start + len].copy_from_slice(&out[gi..gi + len]);
+            gi += len;
+        }
+    }
+
+    Ok(Stage2Outcome { values, alpha_extra_s, interp_s, groups: groups.len() })
+}
+
+/// One stage-2 group execution over (a slice of) the neighbor artifact;
+/// returns (values, alpha_extra_s, interp_s).
+#[allow(clippy::too_many_arguments)]
+fn run_stage2_group(
     shared: &Shared,
     engine: &Option<Engine>,
     sj: &Stage2Job,
+    params: &AidwParams,
+    key: options::Stage2Key,
+    queries: &[(f64, f64)],
+    alphas: &[f64],
+    r_obs: &[f64],
+    table: Option<&NeighborTable>,
 ) -> Result<(Vec<f64>, f64, f64)> {
-    let opts = &sj.batch.options;
-    let params = effective_params(opts, &sj.snap);
+    let t0 = std::time::Instant::now();
     if !sj.snap.is_compacted() {
-        // merged stage 2 on the CPU: Eq.-1 sums over base-live + delta
-        // points with r_exp recomputed from the live count/bounds.  The
-        // fixed-shape PJRT artifacts cannot see overlay deltas; the
-        // compactor restores the artifact path at the next epoch.
-        let r_exp = match opts.area {
-            Some(a) => alpha::expected_nn_distance(sj.snap.live_len as f64, a),
-            None => sj.snap.r_exp(),
+        // merged stage 2 on the CPU: the fixed-shape PJRT artifacts
+        // cannot see overlay deltas; the compactor restores the artifact
+        // path at the next epoch
+        let v = match table {
+            Some(t) => crate::live::merged_local_weighted_on(
+                &shared.pool,
+                &sj.snap,
+                queries,
+                alphas,
+                &t.idx,
+                t.width,
+            ),
+            None => {
+                crate::live::merged_weighted_stage_on(&shared.pool, &sj.snap, queries, alphas)
+            }
         };
-        let t0 = std::time::Instant::now();
-        let alphas: Vec<f64> = sj
-            .r_obs
-            .iter()
-            .map(|&ro| alpha::adaptive_alpha(ro, r_exp, &params))
-            .collect();
-        let alpha_s = t0.elapsed().as_secs_f64();
-        let t1 = std::time::Instant::now();
-        let values =
-            crate::live::merged_weighted_stage_on(&shared.pool, &sj.snap, &sj.queries, &alphas);
-        return Ok((values, alpha_s, t1.elapsed().as_secs_f64()));
+        return Ok((v, 0.0, t0.elapsed().as_secs_f64()));
     }
     let dataset: &Dataset = &sj.snap.base;
     match engine {
@@ -648,113 +814,47 @@ fn run_stage2(
             } else {
                 AidwExecutor::new(engine)
             };
-            let (values, times) = match &sj.neighbors {
-                Some((idx, n)) => exec.local_aidw(
-                    &dataset.points,
-                    &sj.queries,
-                    &sj.r_obs,
-                    idx,
-                    *n,
-                    &params,
-                )?,
-                None => exec.improved_aidw(
-                    &dataset.points,
-                    &sj.queries,
-                    &sj.r_obs,
-                    &params,
-                    opts.variant,
-                )?,
+            let (v, times) = match table {
+                Some(t) => {
+                    exec.local_aidw(&dataset.points, queries, r_obs, &t.idx, t.width, params)?
+                }
+                None => exec.improved_aidw(&dataset.points, queries, r_obs, params, key.variant)?,
             };
-            Ok((values, times.knn_s, times.interp_s))
+            Ok((v, times.knn_s, times.interp_s))
         }
         None => {
-            // pure-rust stage 2; recompute r_exp only when the request
-            // overrode the area (else the dataset's cached Eq.-2 constant
-            // is exact)
-            let r_exp = match opts.area {
-                Some(a) => alpha::expected_nn_distance(dataset.points.len() as f64, a),
-                None => dataset.r_exp,
+            // pure-rust stage 2 over the artifact's alphas
+            let v = match table {
+                Some(t) => {
+                    plan::local_weighted_on(&shared.pool, &dataset.points, queries, alphas, t)
+                }
+                None => weighted_stage_on(&shared.pool, &dataset.points, queries, alphas),
             };
-            let t0 = std::time::Instant::now();
-            let alphas: Vec<f64> = sj
-                .r_obs
-                .iter()
-                .map(|&ro| alpha::adaptive_alpha(ro, r_exp, &params))
-                .collect();
-            let alpha_s = t0.elapsed().as_secs_f64();
-            let t1 = std::time::Instant::now();
-            let values = match &sj.neighbors {
-                Some((idx, n)) => local_weighted_cpu(
-                    &shared.pool, &dataset.points, &sj.queries, &alphas, idx, *n),
-                None => weighted_stage_on(
-                    &shared.pool, &dataset.points, &sj.queries, &alphas),
-            };
-            Ok((values, alpha_s, t1.elapsed().as_secs_f64()))
+            Ok((v, 0.0, t0.elapsed().as_secs_f64()))
         }
     }
 }
 
-/// CPU local weighting with precomputed alphas (stage-2 fallback of the
-/// local mode; mirrors `aidw::local` but reuses this batch's stage-1
-/// neighbor gather instead of searching again).
-fn local_weighted_cpu(
-    pool: &Pool,
-    data: &crate::geom::PointSet,
-    queries: &[(f64, f64)],
-    alphas: &[f64],
-    nbr_idx: &[u32],
-    n: usize,
-) -> Vec<f64> {
-    use crate::geom::{dist2, EPS_D2};
-    let mut out = vec![0f64; queries.len()];
-    pool.for_each_slice_mut(&mut out, 64, |offset, chunk| {
-        for (j, slot) in chunk.iter_mut().enumerate() {
-            let qi = offset + j;
-            let (qx, qy) = queries[qi];
-            let a = alphas[qi];
-            let mut sw = 0.0f64;
-            let mut swz = 0.0f64;
-            for &pid in &nbr_idx[qi * n..(qi + 1) * n] {
-                if pid == u32::MAX {
-                    continue;
-                }
-                let i = pid as usize;
-                let d2 = dist2(qx, qy, data.xs[i], data.ys[i]).max(EPS_D2);
-                let w = (-0.5 * a * d2.ln()).exp();
-                sw += w;
-                swz += w * data.zs[i];
-            }
-            *slot = swz / sw;
-        }
-    });
-    out
-}
-
-/// Split batch results back per job and respond, echoing the resolved
-/// options (with the live area, clamped k, and served epoch substituted)
-/// for client-side audit.
-fn respond_batch(
-    shared: &Shared,
-    sj: Stage2Job,
-    values: Vec<f64>,
-    knn_s: f64,
-    interp_s: f64,
-    backend: Backend,
-) {
-    let mut echoed = sj.batch.options;
-    echoed.area = Some(echoed.area.unwrap_or_else(|| sj.snap.area()));
-    // the audit record reports what ran: k is clamped to the live count,
-    // and the epoch is the snapshot the batch was served from (it may be
-    // newer than the admission epoch if a compaction published in between
-    // — still one single epoch for the whole batch)
-    echoed.k = echoed.k.min(sj.snap.live_len).max(1);
-    echoed.epoch = Some(sj.snap.epoch);
+/// Split batch results back per job and respond.  Each job's echo is its
+/// *own* resolved options (a batch may mix stage-2 variants) with the
+/// live area, clamped k, and served epoch substituted for client-side
+/// audit, plus the planner facts (cache hit, stage-2 group count).
+fn respond_batch(shared: &Shared, sj: Stage2Job, out: Stage2Outcome, knn_s: f64, backend: Backend) {
     let total = sj.queries.len();
+    let stage2_groups = out.groups;
     let mut offset = 0usize;
     for job in sj.batch.jobs {
         let n = job.request.queries.len();
-        let slice = values[offset..offset + n].to_vec();
+        let slice = out.values[offset..offset + n].to_vec();
         offset += n;
+        let mut echoed = job.resolved;
+        echoed.area = Some(echoed.area.unwrap_or_else(|| sj.snap.area()));
+        // the audit record reports what ran: k is clamped to the live
+        // count, and the epoch is the snapshot the batch was served from
+        // (it may be newer than the admission epoch if a compaction
+        // published in between — still one single epoch for the batch)
+        echoed.k = echoed.k.min(sj.snap.live_len).max(1);
+        echoed.epoch = Some(sj.snap.epoch);
         shared
             .metrics
             .latency
@@ -762,10 +862,12 @@ fn respond_batch(
         let _ = job.respond.send(Ok(InterpolationResponse {
             values: slice,
             knn_s,
-            interp_s,
+            interp_s: out.interp_s,
             batch_queries: total,
             backend,
             options: echoed,
+            stage1_cache_hit: sj.cache_hit,
+            stage2_groups,
         }));
     }
 }
@@ -1032,32 +1134,40 @@ mod tests {
     }
 
     #[test]
-    fn local_mode_rejected_on_mutated_dataset_until_compaction() {
+    fn local_mode_works_on_mutated_dataset() {
+        // the PR-2 rejection is gone: the merged per-id gather serves A5
+        // on a mutated dataset, bit-identical to a fresh registration of
+        // the merged live set
         let c = cpu_coordinator();
-        c.register_dataset("d", workload::uniform_square(300, 50.0, 94)).unwrap();
-        let q = vec![(1.0, 1.0)];
+        let base = workload::uniform_square(300, 50.0, 94);
+        c.register_dataset("d", base).unwrap();
+        let q = workload::uniform_square(25, 50.0, 97).xy();
+        let local = QueryOptions::new().local_neighbors(16);
         // local mode works while compacted
         c.interpolate(
-            InterpolationRequest::new("d", q.clone())
-                .with_options(QueryOptions::new().local_neighbors(16)),
+            InterpolationRequest::new("d", q.clone()).with_options(local.clone()),
         )
         .unwrap();
         c.append_points("d", workload::uniform_square(5, 50.0, 95)).unwrap();
-        let err = c
-            .submit(
-                InterpolationRequest::new("d", q.clone())
-                    .with_options(QueryOptions::new().local_neighbors(16)),
-            )
-            .unwrap_err();
-        assert!(matches!(err, Error::InvalidArgument(_)), "{err}");
-        // dense requests still fine, and compaction restores local mode
-        c.interpolate(InterpolationRequest::new("d", q.clone())).unwrap();
+        c.remove_points("d", &[7]).unwrap();
+        let got = c
+            .interpolate(InterpolationRequest::new("d", q.clone()).with_options(local.clone()))
+            .unwrap();
+        assert_eq!(got.options.local_neighbors, Some(16));
+        // oracle: fresh registration of the materialized live set
+        let (merged, _) = c.live_dataset("d").unwrap().snapshot().live_points();
+        let c2 = cpu_coordinator();
+        c2.register_dataset("m", merged).unwrap();
+        let want = c2
+            .interpolate(InterpolationRequest::new("m", q.clone()).with_options(local.clone()))
+            .unwrap();
+        assert_eq!(got.values, want.values, "merged local must be exact");
+        // compaction changes nothing about the answers
         c.compact_dataset("d").unwrap();
-        c.interpolate(
-            InterpolationRequest::new("d", q)
-                .with_options(QueryOptions::new().local_neighbors(16)),
-        )
-        .unwrap();
+        let after = c
+            .interpolate(InterpolationRequest::new("d", q).with_options(local))
+            .unwrap();
+        assert_eq!(after.values, want.values);
     }
 
     #[test]

@@ -147,9 +147,15 @@ impl QueryOptions {
     }
 }
 
-/// Fully-resolved per-batch options: every knob concrete.  Doubles as the
-/// batch-admission key (jobs sharing a batch must be `==` here) and the
-/// audit record echoed on responses.
+/// Fully-resolved per-request options: every knob concrete.  The audit
+/// record echoed on responses.  Batch admission keys on the
+/// [`ResolvedOptions::stage1_key`] projection — **not** full equality:
+/// jobs that differ only in the stage-2 `variant` deliberately share a
+/// batch (one kNN sweep, per-variant stage-2 groups).  When adding a new
+/// option field, decide explicitly whether it belongs in [`Stage1Key`]
+/// (affects the search/alpha product — must separate batches) or is
+/// stage-2-only like `variant`; a field in neither place would silently
+/// coalesce jobs whose numerics differ.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ResolvedOptions {
     /// Clamped to the dataset size at execution time; the response echo
@@ -167,12 +173,11 @@ pub struct ResolvedOptions {
     pub area: Option<f64>,
     /// The dataset epoch this request was admitted against — **server
     /// assigned** at submit time (never client settable; the wire decoder
-    /// ignores an incoming `epoch` field).  Because resolved equality keys
-    /// batch admission, including the epoch here guarantees a batch never
-    /// mixes jobs admitted against different epochs of a live dataset; the
-    /// response echo reports the epoch the batch was actually served from.
-    /// `None` for execution paths without epoch semantics (in-process
-    /// sessions).
+    /// ignores an incoming `epoch` field).  The epoch is part of
+    /// [`Stage1Key`], so batch admission never mixes jobs admitted
+    /// against different epochs of a live dataset; the response echo
+    /// reports the epoch the batch was actually served from.  `None` for
+    /// execution paths without epoch semantics (in-process sessions).
     pub epoch: Option<u64>,
 }
 
@@ -193,7 +198,61 @@ impl Default for ResolvedOptions {
     }
 }
 
+/// The **stage-1 admission key**: every knob that determines the kNN
+/// search and the adaptive-alpha product (the paper's first stage).  Jobs
+/// whose options agree on this key can share one stage-1 execution — one
+/// grid/merged kNN sweep producing one reusable
+/// [`crate::aidw::plan::NeighborArtifact`] — even when their stage-2
+/// variants differ.  The batcher admits on this key; the coordinator's
+/// `NeighborCache` keys cached artifacts on it (plus the dataset, the
+/// served epoch, and a query-set fingerprint).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stage1Key {
+    pub k: usize,
+    pub ring_rule: RingRule,
+    /// `Some(n)` = stage 1 must also gather the n nearest neighbor
+    /// indices (local stage 2 consumes them); part of the key because a
+    /// dense artifact cannot serve a local consumer.
+    pub local_neighbors: Option<usize>,
+    pub alpha_levels: [f64; 5],
+    pub r_min: f64,
+    pub r_max: f64,
+    pub area: Option<f64>,
+    /// The admission epoch: stage-1 products from different epochs of a
+    /// live dataset never mix.
+    pub epoch: Option<u64>,
+}
+
+/// The **stage-2 execution key**: what remains once the neighbor artifact
+/// exists — the weighted-interpolation kernel variant.  Jobs in one batch
+/// may carry different stage-2 keys; the stage-2 executor runs once per
+/// distinct key over that group's query rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Stage2Key {
+    pub variant: Variant,
+}
+
 impl ResolvedOptions {
+    /// Project out the stage-1 admission key (everything but the stage-2
+    /// variant).  See [`Stage1Key`].
+    pub fn stage1_key(&self) -> Stage1Key {
+        Stage1Key {
+            k: self.k,
+            ring_rule: self.ring_rule,
+            local_neighbors: self.local_neighbors,
+            alpha_levels: self.alpha_levels,
+            r_min: self.r_min,
+            r_max: self.r_max,
+            area: self.area,
+            epoch: self.epoch,
+        }
+    }
+
+    /// Project out the stage-2 execution key.  See [`Stage2Key`].
+    pub fn stage2_key(&self) -> Stage2Key {
+        Stage2Key { variant: self.variant }
+    }
+
     /// The AIDW parameter block these options describe.
     pub fn params(&self) -> AidwParams {
         AidwParams {
@@ -301,25 +360,51 @@ mod tests {
     }
 
     #[test]
-    fn resolved_equality_is_the_batch_key() {
+    fn resolution_is_deterministic_and_stamps_no_epoch() {
         let cfg = config();
-        // explicit default == inherited default (they may share a batch)
+        // explicit default == inherited default (identical stage keys)
         let explicit = QueryOptions::new().k(cfg.params.k).resolve(&cfg);
         let inherited = QueryOptions::new().resolve(&cfg);
         assert_eq!(explicit, inherited);
-        // any differing knob separates
+        // differing knobs resolve to different option sets (admission
+        // itself keys on stage1_key(); see stage_keys_split_variant_…)
         assert_ne!(QueryOptions::new().k(11).resolve(&cfg), inherited);
         assert_ne!(
             QueryOptions::new().ring_rule(RingRule::PaperPlusOne).resolve(&cfg),
             inherited
         );
-        // the dataset epoch separates too: jobs admitted before and after
-        // a compaction publish never share a batch
+        // the dataset epoch is part of the stage-1 key: jobs admitted
+        // before and after a compaction publish never share a batch
         let e0 = ResolvedOptions { epoch: Some(0), ..inherited };
         let e1 = ResolvedOptions { epoch: Some(1), ..inherited };
-        assert_ne!(e0, e1);
+        assert_ne!(e0.stage1_key(), e1.stage1_key());
         // client-side resolution never assigns an epoch; the coordinator
         // stamps it at submit time
         assert_eq!(inherited.epoch, None);
+    }
+
+    #[test]
+    fn stage_keys_split_variant_from_search() {
+        let cfg = config();
+        let base = QueryOptions::new().resolve(&cfg);
+        // variant-only difference: same stage-1 key, different stage-2 key
+        let naive = ResolvedOptions { variant: Variant::Naive, ..base };
+        let tiled = ResolvedOptions { variant: Variant::Tiled, ..base };
+        assert_eq!(naive.stage1_key(), tiled.stage1_key());
+        assert_ne!(naive.stage2_key(), tiled.stage2_key());
+        // every search-affecting knob separates stage-1 keys
+        for other in [
+            ResolvedOptions { k: 3, ..base },
+            ResolvedOptions { ring_rule: RingRule::PaperPlusOne, ..base },
+            ResolvedOptions { local_neighbors: Some(32), ..base },
+            ResolvedOptions { alpha_levels: [1.0, 2.0, 3.0, 4.0, 5.0], ..base },
+            ResolvedOptions { r_min: 0.5, ..base },
+            ResolvedOptions { r_max: 3.0, ..base },
+            ResolvedOptions { area: Some(7.0), ..base },
+            ResolvedOptions { epoch: Some(1), ..base },
+        ] {
+            assert_ne!(other.stage1_key(), base.stage1_key(), "{other:?}");
+            assert_eq!(other.stage2_key(), base.stage2_key());
+        }
     }
 }

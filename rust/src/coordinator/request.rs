@@ -70,6 +70,13 @@ pub struct InterpolationResponse {
     /// The fully-resolved options this request actually ran with (the
     /// audit record: config defaults substituted, dataset area filled in).
     pub options: ResolvedOptions,
+    /// True when the batch was served from the coordinator's
+    /// `NeighborCache` (stage 1 skipped entirely; protocol v2.2).
+    pub stage1_cache_hit: bool,
+    /// How many stage-2 executions the batch split into — more than 1
+    /// means this request's kNN sweep was coalesced with jobs carrying a
+    /// different stage-2 variant (protocol v2.2).
+    pub stage2_groups: usize,
 }
 
 /// Stage-2 execution backend.

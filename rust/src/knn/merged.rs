@@ -116,6 +116,61 @@ pub fn merged_knn_avg_distances_on(
     out
 }
 
+/// Neighbor lists over the live merged set — the per-id gather that lets
+/// local (A5) weighting run on a *mutated* dataset without waiting for
+/// compaction: for each query, the `n_neighbors` nearest live points'
+/// **merged candidate indices** (row-major `(queries.len(), n_neighbors)`,
+/// ascending distance, `u32::MAX`-padded when fewer live points exist;
+/// `< n_base` = original base index, else `n_base + delta position`,
+/// tombstones filtered on both sides), plus the Eq.-3 average distance
+/// over the first `k_alpha` of them.
+///
+/// The merged analog of
+/// [`grid_knn_neighbors`](crate::knn::grid_knn::grid_knn_neighbors): one
+/// search serves both stage-1 products, and the ascending-distance row
+/// order is the summation order the local stage 2 consumes — which makes
+/// merged local answers bit-identical to a post-compaction run over the
+/// same live set.
+///
+/// **Tie caveat:** when two live points are *exactly* equidistant from a
+/// query and the tie straddles the last retained slot, which of the tied
+/// points is kept depends on visitation order (delta-first here; cell
+/// order in a compacted grid).  Distances — and hence the dense path and
+/// r_obs — are unaffected, but a gathered neighbor *set* can differ at
+/// such a tie, so the bit-identity guarantee for local answers assumes
+/// no two points share exact coordinates at the cut boundary (duplicate
+/// sensor positions with different readings are the one realistic way to
+/// manufacture this).
+pub fn merged_knn_neighbors_on(
+    pool: &Pool,
+    view: &MergedView<'_>,
+    queries: &[(f64, f64)],
+    n_neighbors: usize,
+    k_alpha: usize,
+) -> (Vec<u32>, Vec<f64>) {
+    assert!(n_neighbors >= 1 && k_alpha >= 1);
+    let width = n_neighbors.max(k_alpha);
+    let parts = pool.map_ranges(queries.len(), 64, |r| {
+        let mut buf = KBufferIdx::new(width);
+        let mut idx = Vec::with_capacity((r.end - r.start) * n_neighbors);
+        let mut r_obs = Vec::with_capacity(r.end - r.start);
+        for qi in r {
+            let (qx, qy) = queries[qi];
+            single_query_merged(view, qx, qy, &mut buf);
+            r_obs.push(buf.avg_distance(k_alpha));
+            idx.extend_from_slice(&buf.idx_slice()[..n_neighbors]);
+        }
+        (idx, r_obs)
+    });
+    let mut idx_out = Vec::with_capacity(queries.len() * n_neighbors);
+    let mut r_out = Vec::with_capacity(queries.len());
+    for (idx, r_obs) in parts {
+        idx_out.extend(idx);
+        r_out.extend(r_obs);
+    }
+    (idx_out, r_out)
+}
+
 /// The k nearest live points per query as ascending `(d2, merged_index)`
 /// pairs (fewer when fewer live points exist) — the oracle interface the
 /// incremental-vs-rebuild property test compares against a from-scratch
@@ -230,6 +285,64 @@ mod tests {
         let (want, _) =
             crate::knn::grid_knn::grid_knn_avg_distances_on(&pool, &grid, &queries, &cfg);
         assert_eq!(got, want, "merged search with no delta must be bit-identical");
+    }
+
+    #[test]
+    fn neighbor_gather_matches_topk_and_filters_tombstones() {
+        let base = workload::uniform_square(600, 60.0, 708);
+        let delta = workload::uniform_square(50, 60.0, 709);
+        let base_dead: HashSet<u32> = (0..20u32).map(|i| i * 17 % 600).collect();
+        let delta_dead: HashSet<u32> = [2u32, 30].into_iter().collect();
+        let grid = EvenGrid::build(&base, None, &GridConfig::default()).unwrap();
+        let view = MergedView {
+            grid: &grid,
+            base_dead: &base_dead,
+            delta_xs: &delta.xs,
+            delta_ys: &delta.ys,
+            delta_dead: &delta_dead,
+        };
+        let queries = workload::uniform_square(80, 60.0, 710).xy();
+        let pool = Pool::new(2);
+        let n = 12;
+        let k_alpha = 5;
+        let (idx, r_obs) = merged_knn_neighbors_on(&pool, &view, &queries, n, k_alpha);
+        assert_eq!(idx.len(), queries.len() * n);
+        let top = merged_knn_topk_on(&pool, &view, &queries, n);
+        let avg = merged_knn_avg_distances_on(&pool, &view, &queries, k_alpha);
+        for qi in 0..queries.len() {
+            let row = &idx[qi * n..(qi + 1) * n];
+            for (slot, &(_, want_idx)) in top[qi].iter().enumerate() {
+                assert_eq!(row[slot], want_idx, "q{qi} slot {slot}");
+                // tombstoned candidates never surface
+                let got = row[slot];
+                if (got as usize) < base.len() {
+                    assert!(!base_dead.contains(&got));
+                } else {
+                    assert!(!delta_dead.contains(&(got - base.len() as u32)));
+                }
+            }
+            assert_eq!(r_obs[qi], avg[qi], "q{qi}: r_obs must match the k_alpha average");
+        }
+    }
+
+    #[test]
+    fn neighbor_gather_pads_when_live_set_is_small() {
+        let base = workload::uniform_square(4, 10.0, 711);
+        let grid = EvenGrid::build(&base, None, &GridConfig::default()).unwrap();
+        let none: HashSet<u32> = HashSet::new();
+        let dead: HashSet<u32> = [1u32].into_iter().collect();
+        let view = MergedView {
+            grid: &grid,
+            base_dead: &dead,
+            delta_xs: &[],
+            delta_ys: &[],
+            delta_dead: &none,
+        };
+        let pool = Pool::new(1);
+        let (idx, r_obs) = merged_knn_neighbors_on(&pool, &view, &[(5.0, 5.0)], 8, 10);
+        assert_eq!(idx.len(), 8);
+        assert_eq!(idx.iter().filter(|&&i| i != u32::MAX).count(), 3);
+        assert!(r_obs[0] > 0.0);
     }
 
     #[test]

@@ -961,6 +961,37 @@ pub fn merged_weighted_stage_on(
     out
 }
 
+/// Local (A5) stage 2 over the live set: Eq.-1 weighting restricted to
+/// each query's gathered neighbors, with **merged candidate indices**
+/// (from [`crate::knn::merged::merged_knn_neighbors_on`]) resolved into
+/// base/delta coordinates.  Rows are consumed in the table's
+/// ascending-distance order — the same summation sequence
+/// [`crate::aidw::plan::local_weighted_on`] uses over a compacted index,
+/// so merged local answers are bit-identical to a post-compaction run
+/// over the same live set (pinned by `tests/it_live.rs`).
+pub fn merged_local_weighted_on(
+    pool: &Pool,
+    snap: &LiveSnapshot,
+    queries: &[(f64, f64)],
+    alphas: &[f64],
+    nbr_idx: &[u32],
+    width: usize,
+) -> Vec<f64> {
+    let base = &snap.base.points;
+    let n_base = base.len() as u32;
+    let delta = &snap.delta;
+    // the one shared A5 kernel, with merged-index resolution plugged in
+    crate::aidw::plan::local_weighted_with(pool, queries, alphas, nbr_idx, width, |pid| {
+        if pid < n_base {
+            let i = pid as usize;
+            (base.xs[i], base.ys[i], base.zs[i])
+        } else {
+            let p = (pid - n_base) as usize;
+            (delta.points.xs[p], delta.points.ys[p], delta.points.zs[p])
+        }
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1236,6 +1267,44 @@ mod tests {
         assert_eq!(ds.epoch(), 1);
         assert!(!ds.is_mutated());
         assert_eq!(ds.status().compactions, 1);
+    }
+
+    #[test]
+    fn merged_local_weighting_is_bit_identical_to_fresh_local() {
+        // gather + weight over a mutated snapshot must equal the plain
+        // local pipeline over the materialized live set, bit for bit
+        let ds = build_mem(500, 830);
+        ds.append(&workload::uniform_square(60, 50.0, 831)).unwrap();
+        ds.remove(&[3, 77, 502]).unwrap();
+        let pool = Pool::new(2);
+        let snap = ds.snapshot();
+        let queries = workload::uniform_square(40, 50.0, 832).xy();
+        let params = crate::aidw::AidwParams::default();
+        let n = 32;
+
+        let view = snap.merged_view();
+        let (idx, r_obs) =
+            crate::knn::merged::merged_knn_neighbors_on(&pool, &view, &queries, n, params.k);
+        let r_exp = snap.r_exp();
+        let alphas: Vec<f64> = r_obs
+            .iter()
+            .map(|&ro| alpha::adaptive_alpha(ro, r_exp, &params))
+            .collect();
+        let got = merged_local_weighted_on(&pool, &snap, &queries, &alphas, &idx, n);
+
+        let (live, _) = snap.live_points();
+        let want = crate::aidw::local::interpolate_local_on(
+            &pool,
+            &live,
+            &queries,
+            &params,
+            &crate::aidw::local::LocalConfig {
+                n_neighbors: n,
+                rule: crate::knn::grid_knn::RingRule::Exact,
+            },
+        )
+        .unwrap();
+        assert_eq!(got, want, "merged local weighting must be exact");
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! `aidw` — CLI for the AIDW interpolation service.
 //!
 //! Subcommands:
-//!   serve        start the TCP JSON service (protocol v2.1)
+//!   serve        start the TCP JSON service (protocol v2.2)
 //!   interpolate  one-shot interpolation over a generated/loaded workload
 //!   mutate       append/remove/compact/stat against a running service
 //!   bench        run the perf suite, emit BENCH_aidw.json
@@ -36,6 +36,7 @@ USAGE:
   aidw serve       [--addr 127.0.0.1:7878] [--cpu-only] [--k 10]
                    [--ring exact|paper+1] [--local N] [--snapshots DIR]
                    [--live-dir DIR] [--compact-threshold N] [--wal-sync]
+                   [--neighbor-cache N]
   aidw interpolate [--engine serving|pipeline|serial] [--cpu-only]
                    [--data N] [--queries N] [--side 100] [--seed 42]
                    [--variant naive|tiled] [--k 10] [--ring exact|paper+1]
@@ -110,6 +111,8 @@ fn config_from(args: &Args) -> Result<CoordinatorConfig> {
             cfg.local_neighbors = Some(n);
         }
     }
+    // planner: stage-1 neighbor-cache capacity (0 disables reuse)
+    cfg.neighbor_cache = args.get_usize("neighbor-cache", cfg.neighbor_cache)?;
     // live mutation: durability directory + compaction tunables
     if let Some(dir) = args.get("live-dir") {
         cfg.live_dir = Some(std::path::PathBuf::from(dir));
@@ -195,7 +198,7 @@ fn serve(args: &Args) -> Result<()> {
     };
     let server = Server::start(coord, &addr)?;
     println!("listening on {}", server.addr());
-    println!("protocol v2.1: newline-delimited JSON; see rust/src/service/protocol.rs");
+    println!("protocol v2.2: newline-delimited JSON; see rust/src/service/protocol.rs");
     // serve until killed
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -295,6 +298,18 @@ fn bench(args: &Args) -> Result<()> {
         n => aidw::pool::Pool::new(n),
     };
     let out_path = args.get_or("out", "BENCH_aidw.json");
+    let threads = match args.get_usize("threads", 0)? {
+        0 => None,
+        n => Some(n),
+    };
+
+    // planner suite (stage1/stage2/coalesce/cache-hit through the
+    // two-stage execution planner) runs on every backend
+    let mut planner = Vec::with_capacity(sizes.len());
+    for &n in &sizes {
+        println!("  planner n = {} ...", aidw::benchsuite::size_label(n));
+        planner.push(aidw::benchsuite::measure_planner(n, &opts, threads)?);
+    }
 
     let artifact_dir = aidw::runtime::default_artifact_dir();
     let doc = if artifact_dir.join("manifest.json").exists() {
@@ -305,7 +320,7 @@ fn bench(args: &Args) -> Result<()> {
             println!("  measuring n = {} ...", aidw::benchsuite::size_label(n));
             results.push(aidw::benchsuite::measure_size(&engine, &pool, n, &opts)?);
         }
-        aidw::benchsuite::pjrt_bench_json(&results, pool.threads(), seed)
+        aidw::benchsuite::pjrt_bench_json(&results, &planner, pool.threads(), seed)
     } else {
         println!("bench: no artifacts — CPU suite (serial + improved pipeline)");
         let mut results = Vec::with_capacity(sizes.len());
@@ -313,7 +328,7 @@ fn bench(args: &Args) -> Result<()> {
             println!("  measuring n = {} ...", aidw::benchsuite::size_label(n));
             results.push(aidw::benchsuite::measure_size_cpu(&pool, n, &opts));
         }
-        aidw::benchsuite::cpu_bench_json(&results, pool.threads(), seed)
+        aidw::benchsuite::cpu_bench_json(&results, &planner, pool.threads(), seed)
     };
     std::fs::write(&out_path, doc.to_string() + "\n")?;
     println!("wrote {out_path}");

@@ -154,8 +154,10 @@ impl<'e> AidwExecutor<'e> {
     // -----------------------------------------------------------------
 
     /// **Improved algorithm** (the paper's contribution): stage 1 = grid
-    /// kNN on the rust side (r_obs supplied by the caller's grid search),
-    /// alpha on PJRT; stage 2 = streamed weighted interpolation on PJRT.
+    /// kNN on the rust side — `r_obs` comes from the caller's
+    /// [`crate::aidw::plan::NeighborArtifact`] (one stage-1 execution may
+    /// feed several variant dispatches here) — alpha on PJRT; stage 2 =
+    /// streamed weighted interpolation on PJRT.
     pub fn improved_aidw(
         &self,
         data: &PointSet,
@@ -210,9 +212,13 @@ impl<'e> AidwExecutor<'e> {
     /// dispatch per query batch, no chunk streaming.
     ///
     /// `nbr_idx` is the row-major (queries × n_row) neighbor-index matrix
-    /// from [`crate::knn::grid_knn::grid_knn_neighbors`] (`u32::MAX` =
-    /// padding).  The first `min(n_row, panel)` ids per row feed the
-    /// compiled panel; the panel width comes from the manifest.
+    /// of a gathering stage-1 plan
+    /// ([`crate::aidw::plan::NeighborTable`], produced by
+    /// [`crate::knn::grid_knn::grid_knn_neighbors`]; `u32::MAX` =
+    /// padding).  Indices must be *base* point indices — merged-snapshot
+    /// gathers never reach this path (mutated batches run the CPU stage
+    /// 2).  The first `min(n_row, panel)` ids per row feed the compiled
+    /// panel; the panel width comes from the manifest.
     pub fn local_aidw(
         &self,
         data: &PointSet,

@@ -1,4 +1,4 @@
-//! TCP interpolation service: newline-delimited JSON (protocol v2.1, see
+//! TCP interpolation service: newline-delimited JSON (protocol v2.2, see
 //! [`protocol`]) over a [`crate::coordinator::Coordinator`], plus the
 //! matching blocking client.
 //!
@@ -130,6 +130,8 @@ fn dispatch(coord: &Coordinator, req: Request) -> String {
                     resp.interp_s,
                     resp.batch_queries,
                     &resp.options,
+                    resp.stage1_cache_hit,
+                    resp.stage2_groups,
                 ),
                 Err(e) => protocol::err_for(&e),
             }
@@ -174,6 +176,12 @@ pub struct InterpolationReply {
     pub knn_s: f64,
     pub interp_s: f64,
     pub batch_queries: usize,
+    /// v2.2: served from the server's stage-1 neighbor cache (false when
+    /// talking to an older server).
+    pub cache_hit: bool,
+    /// v2.2: stage-2 variant groups the batch split into (0 when talking
+    /// to an older server).
+    pub stage2_groups: usize,
     /// The server's fully-resolved options audit (None against a v1
     /// server that doesn't echo them).
     pub options: Option<ResolvedOptions>,
@@ -273,6 +281,8 @@ impl Client {
             knn_s: v.get("knn_s").as_f64().unwrap_or(0.0),
             interp_s: v.get("interp_s").as_f64().unwrap_or(0.0),
             batch_queries: v.get("batch_queries").as_usize().unwrap_or(0),
+            cache_hit: v.get("cache_hit").as_bool().unwrap_or(false),
+            stage2_groups: v.get("stage2_groups").as_usize().unwrap_or(0),
             options: protocol::options_from_json(v.get("options")),
         })
     }

@@ -1,4 +1,4 @@
-//! Wire protocol **v2.1**: newline-delimited JSON over TCP.
+//! Wire protocol **v2.2**: newline-delimited JSON over TCP.
 //!
 //! Requests:
 //! ```json
@@ -16,6 +16,17 @@
 //! {"op":"datasets"}
 //! {"op":"metrics"}
 //! ```
+//!
+//! **v2.2 additions** (two-stage planner observability, strictly additive
+//! over v2.1):
+//!
+//! * successful `interpolate` responses carry `cache_hit` (the batch was
+//!   served from the coordinator's stage-1 `NeighborCache` — the kNN
+//!   search was skipped) and `stage2_groups` (how many stage-2 variant
+//!   groups the batch's single kNN sweep fanned out to; > 1 means the
+//!   request was coalesced with jobs carrying a different variant);
+//! * `metrics` responses add the planner counters `stage1_execs`,
+//!   `stage1_cache_hits`, `stage2_execs`, and `coalesced_batches`.
 //!
 //! **v2.1 additions** (live dataset mutation, strictly additive over v2):
 //!
@@ -397,6 +408,8 @@ pub fn ok_values(
     interp_s: f64,
     batch_queries: usize,
     options: &ResolvedOptions,
+    cache_hit: bool,
+    stage2_groups: usize,
 ) -> String {
     Json::obj(vec![
         ("ok", Json::Bool(true)),
@@ -404,6 +417,8 @@ pub fn ok_values(
         ("knn_s", Json::Num(knn_s)),
         ("interp_s", Json::Num(interp_s)),
         ("batch_queries", Json::Num(batch_queries as f64)),
+        ("cache_hit", Json::Bool(cache_hit)),
+        ("stage2_groups", Json::Num(stage2_groups as f64)),
         ("options", options_json(options)),
     ])
     .to_string()
@@ -432,6 +447,10 @@ pub fn ok_metrics(m: &MetricsSnapshot) -> String {
         ("batches", Json::Num(m.batches as f64)),
         ("rejected", Json::Num(m.rejected as f64)),
         ("errors", Json::Num(m.errors as f64)),
+        ("stage1_execs", Json::Num(m.stage1_execs as f64)),
+        ("stage1_cache_hits", Json::Num(m.stage1_cache_hits as f64)),
+        ("stage2_execs", Json::Num(m.stage2_execs as f64)),
+        ("coalesced_batches", Json::Num(m.coalesced_batches as f64)),
         ("knn_s", Json::Num(m.knn_s)),
         ("interp_s", Json::Num(m.interp_s)),
         ("mean_latency_s", Json::Num(m.mean_latency_s)),
@@ -659,11 +678,14 @@ mod tests {
     #[test]
     fn response_lines_parse() {
         let opts = ResolvedOptions { area: Some(25.0), ..Default::default() };
-        let l = ok_values(&[1.0, 2.0], 0.1, 0.2, 64, &opts);
+        let l = ok_values(&[1.0, 2.0], 0.1, 0.2, 64, &opts, true, 2);
         let v = crate::jsonio::Json::parse(&l).unwrap();
         assert_eq!(v.get("ok").as_bool(), Some(true));
         assert_eq!(v.get("z").to_f64_vec().unwrap(), vec![1.0, 2.0]);
         assert_eq!(v.get("batch_queries").as_usize(), Some(64));
+        // v2.2 planner facts
+        assert_eq!(v.get("cache_hit").as_bool(), Some(true));
+        assert_eq!(v.get("stage2_groups").as_usize(), Some(2));
         // the options echo round-trips
         let echoed = options_from_json(v.get("options")).unwrap();
         assert_eq!(echoed, opts);

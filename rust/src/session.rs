@@ -38,13 +38,13 @@
 //! to 1e-9 with the exact ring rule).
 
 use std::collections::HashMap;
-use std::sync::{Arc, RwLock};
+use std::sync::{mpsc, Arc, RwLock};
 
 use crate::aidw::local::{interpolate_local_on, LocalConfig};
 use crate::aidw::pipeline::interpolate_improved_on;
 use crate::aidw::serial;
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, InterpolationRequest, QueryOptions, ResolvedOptions,
+    Coordinator, CoordinatorConfig, InterpolationRequest, QueryOptions, ResolvedOptions, Ticket,
 };
 use crate::error::{Error, Result};
 use crate::geom::PointSet;
@@ -75,6 +75,17 @@ pub struct SessionReply {
     pub options: ResolvedOptions,
 }
 
+impl SessionReply {
+    fn from_response(resp: crate::coordinator::InterpolationResponse) -> SessionReply {
+        SessionReply {
+            values: resp.values,
+            knn_s: resp.knn_s,
+            interp_s: resp.interp_s,
+            options: resp.options,
+        }
+    }
+}
+
 enum Exec {
     /// The paper's serial CPU baseline (reference numerics).
     Serial,
@@ -82,6 +93,51 @@ enum Exec {
     Pipeline(Pool),
     /// Full serving coordinator.
     Serving(Coordinator),
+}
+
+/// A mode-independent async handle for [`AidwSession::submit`]
+/// (ROADMAP follow-up 1(d)): the coordinator path wraps the pipeline
+/// [`Ticket`]; the in-process paths run on a detached worker thread and
+/// deliver over the same channel semantics, so `wait`/`try_wait` behave
+/// identically in every mode.
+pub struct SessionTicket {
+    inner: TicketInner,
+}
+
+enum TicketInner {
+    /// Serving mode: the coordinator's own ticket.
+    Coordinator(Ticket),
+    /// Serial/Pipeline modes: a worker thread's reply channel.
+    Thread(mpsc::Receiver<Result<SessionReply>>),
+}
+
+impl SessionTicket {
+    /// Block until the reply arrives.
+    pub fn wait(self) -> Result<SessionReply> {
+        match self.inner {
+            TicketInner::Coordinator(t) => t.wait().map(SessionReply::from_response),
+            TicketInner::Thread(rx) => rx.recv().map_err(|_| {
+                Error::Unavailable("session worker dropped the job".into())
+            })?,
+        }
+    }
+
+    /// Poll without blocking.  `None` strictly means *not finished yet*;
+    /// a dropped job surfaces as `Some(Err(Unavailable))`.
+    pub fn try_wait(&self) -> Option<Result<SessionReply>> {
+        match &self.inner {
+            TicketInner::Coordinator(t) => {
+                t.try_wait().map(|r| r.map(SessionReply::from_response))
+            }
+            TicketInner::Thread(rx) => match rx.try_recv() {
+                Ok(r) => Some(r),
+                Err(mpsc::TryRecvError::Empty) => None,
+                Err(mpsc::TryRecvError::Disconnected) => Some(Err(Error::Unavailable(
+                    "session worker dropped the job".into(),
+                ))),
+            },
+        }
+    }
 }
 
 /// One facade over serial / pipeline / local / coordinator execution.
@@ -93,6 +149,11 @@ pub struct AidwSession {
     defaults: CoordinatorConfig,
     /// In-process dataset store (Serial / Pipeline modes only).
     datasets: RwLock<HashMap<String, InProcDataset>>,
+    /// In-flight async in-process jobs — [`AidwSession::submit`]
+    /// backpressure for Serial/Pipeline modes, bounded by
+    /// `defaults.batch.max_queue` to mirror the coordinator's bounded
+    /// queue (Serving mode uses the coordinator's own limit).
+    inflight: Arc<std::sync::atomic::AtomicUsize>,
 }
 
 impl AidwSession {
@@ -107,6 +168,7 @@ impl AidwSession {
             exec: Exec::Serial,
             defaults,
             datasets: RwLock::new(HashMap::new()),
+            inflight: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
         }
     }
 
@@ -126,6 +188,7 @@ impl AidwSession {
             exec: Exec::Pipeline(pool),
             defaults,
             datasets: RwLock::new(HashMap::new()),
+            inflight: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
         }
     }
 
@@ -136,6 +199,7 @@ impl AidwSession {
             exec: Exec::Serving(Coordinator::new(config)?),
             defaults,
             datasets: RwLock::new(HashMap::new()),
+            inflight: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
         })
     }
 
@@ -315,17 +379,15 @@ impl AidwSession {
                     InterpolationRequest::new(dataset, queries.to_vec())
                         .with_options(options.clone()),
                 )?;
-                Ok(SessionReply {
-                    values: resp.values,
-                    knn_s: resp.knn_s,
-                    interp_s: resp.interp_s,
-                    options: resp.options,
-                })
+                Ok(SessionReply::from_response(resp))
             }
-            Exec::Serial => self.run_in_process(dataset, queries, options, None),
+            Exec::Serial => {
+                let (resolved, pts) = self.resolve_in_process(dataset, options)?;
+                exec_in_process(None, &pts, queries, resolved)
+            }
             Exec::Pipeline(pool) => {
-                // borrow the pool out of the enum for the run
-                self.run_in_process(dataset, queries, options, Some(pool))
+                let (resolved, pts) = self.resolve_in_process(dataset, options)?;
+                exec_in_process(Some(pool), &pts, queries, resolved)
             }
         }
     }
@@ -340,14 +402,72 @@ impl AidwSession {
         Ok(self.interpolate(dataset, queries, options)?.values)
     }
 
-    /// Shared Serial/Pipeline execution (pool = None -> serial paths).
-    fn run_in_process(
+    /// Submit asynchronously; returns a [`SessionTicket`] in **every**
+    /// mode (ROADMAP follow-up 1(d)).  Serving mode rides the
+    /// coordinator's pipeline ticket; Serial/Pipeline modes run the job
+    /// on a detached worker thread.  Fails fast — before any worker sees
+    /// the job — on empty queries, unknown datasets, and invalid options,
+    /// exactly like [`Coordinator::submit`].
+    pub fn submit(
         &self,
         dataset: &str,
         queries: &[(f64, f64)],
         options: &QueryOptions,
-        pool: Option<&Pool>,
-    ) -> Result<SessionReply> {
+    ) -> Result<SessionTicket> {
+        if queries.is_empty() {
+            return Err(Error::InvalidArgument("empty query list".into()));
+        }
+        match &self.exec {
+            Exec::Serving(c) => {
+                let ticket = c.submit(
+                    InterpolationRequest::new(dataset, queries.to_vec())
+                        .with_options(options.clone()),
+                )?;
+                Ok(SessionTicket { inner: TicketInner::Coordinator(ticket) })
+            }
+            _ => {
+                let (resolved, pts) = self.resolve_in_process(dataset, options)?;
+                // bounded in-flight jobs: one worker thread per accepted
+                // submission, rejected beyond the same queue depth the
+                // coordinator's bounded JobQueue enforces
+                use std::sync::atomic::Ordering;
+                let limit = self.defaults.batch.max_queue;
+                let prev = self.inflight.fetch_add(1, Ordering::SeqCst);
+                if prev >= limit {
+                    self.inflight.fetch_sub(1, Ordering::SeqCst);
+                    return Err(Error::Unavailable(format!(
+                        "session worker queue full ({prev} jobs); retry later"
+                    )));
+                }
+                // the slot is released on every exit path — normal
+                // completion, a panic inside the worker, or a failed
+                // spawn (dropping the unspawned closure drops the guard)
+                let slot = SlotGuard(self.inflight.clone());
+                let pool = match &self.exec {
+                    Exec::Pipeline(pool) => Some(pool.clone()),
+                    _ => None,
+                };
+                let queries = queries.to_vec();
+                let (tx, rx) = mpsc::channel();
+                std::thread::Builder::new()
+                    .name("aidw-session".into())
+                    .spawn(move || {
+                        let _slot = slot;
+                        let _ = tx.send(exec_in_process(pool.as_ref(), &pts, &queries, resolved));
+                    })
+                    .map_err(Error::Io)?;
+                Ok(SessionTicket { inner: TicketInner::Thread(rx) })
+            }
+        }
+    }
+
+    /// In-process fail-fast prologue: resolve + validate the options and
+    /// look the dataset up (Serial/Pipeline modes).
+    fn resolve_in_process(
+        &self,
+        dataset: &str,
+        options: &QueryOptions,
+    ) -> Result<(ResolvedOptions, Arc<PointSet>)> {
         let resolved = options.resolve(&self.defaults);
         resolved.validate()?;
         let pts = self
@@ -357,35 +477,56 @@ impl AidwSession {
             .get(dataset)
             .map(|d| d.points.clone())
             .ok_or_else(|| Error::UnknownDataset(dataset.to_string()))?;
-        let params = resolved.params();
-
-        let t0 = std::time::Instant::now();
-        let (values, knn_s, interp_s) = match (pool, resolved.local_neighbors) {
-            (None, None) => {
-                let v = serial::aidw_serial(&pts, queries, &params);
-                (v, 0.0, t0.elapsed().as_secs_f64())
-            }
-            (None, Some(n)) => {
-                // serial-flavored local run: single-thread pool
-                let cfg = LocalConfig { n_neighbors: n, rule: resolved.ring_rule };
-                let v = interpolate_local_on(&Pool::new(1), &pts, queries, &params, &cfg)?;
-                (v, 0.0, t0.elapsed().as_secs_f64())
-            }
-            (Some(pool), None) => {
-                let (v, times) =
-                    interpolate_improved_on(pool, &pts, queries, &params, resolved.ring_rule);
-                (v, times.knn_s, times.interp_s)
-            }
-            (Some(pool), Some(n)) => {
-                let cfg = LocalConfig { n_neighbors: n, rule: resolved.ring_rule };
-                let v = interpolate_local_on(pool, &pts, queries, &params, &cfg)?;
-                (v, 0.0, t0.elapsed().as_secs_f64())
-            }
-        };
-        let mut echoed = resolved;
-        echoed.area = Some(resolved.area.unwrap_or_else(|| pts.bounds().area()));
-        Ok(SessionReply { values, knn_s, interp_s, options: echoed })
+        Ok((resolved, pts))
     }
+}
+
+/// Releases one in-flight backpressure slot on drop (panic-safe: an
+/// unwinding worker or a dropped-unspawned closure still decrements).
+struct SlotGuard(Arc<std::sync::atomic::AtomicUsize>);
+
+impl Drop for SlotGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, std::sync::atomic::Ordering::SeqCst);
+    }
+}
+
+/// Shared Serial/Pipeline execution core (pool = None -> serial paths);
+/// free of `&self` so [`AidwSession::submit`] can run it on a worker
+/// thread.
+fn exec_in_process(
+    pool: Option<&Pool>,
+    pts: &PointSet,
+    queries: &[(f64, f64)],
+    resolved: ResolvedOptions,
+) -> Result<SessionReply> {
+    let params = resolved.params();
+    let t0 = std::time::Instant::now();
+    let (values, knn_s, interp_s) = match (pool, resolved.local_neighbors) {
+        (None, None) => {
+            let v = serial::aidw_serial(pts, queries, &params);
+            (v, 0.0, t0.elapsed().as_secs_f64())
+        }
+        (None, Some(n)) => {
+            // serial-flavored local run: single-thread pool
+            let cfg = LocalConfig { n_neighbors: n, rule: resolved.ring_rule };
+            let v = interpolate_local_on(&Pool::new(1), pts, queries, &params, &cfg)?;
+            (v, 0.0, t0.elapsed().as_secs_f64())
+        }
+        (Some(pool), None) => {
+            let (v, times) =
+                interpolate_improved_on(pool, pts, queries, &params, resolved.ring_rule);
+            (v, times.knn_s, times.interp_s)
+        }
+        (Some(pool), Some(n)) => {
+            let cfg = LocalConfig { n_neighbors: n, rule: resolved.ring_rule };
+            let v = interpolate_local_on(pool, pts, queries, &params, &cfg)?;
+            (v, 0.0, t0.elapsed().as_secs_f64())
+        }
+    };
+    let mut echoed = resolved;
+    echoed.area = Some(resolved.area.unwrap_or_else(|| pts.bounds().area()));
+    Ok(SessionReply { values, knn_s, interp_s, options: echoed })
 }
 
 #[cfg(test)]
@@ -525,6 +666,60 @@ mod tests {
         assert!(s.drop_dataset("a"));
         assert!(!s.drop_dataset("a"));
         assert!(s.coordinator().is_none());
+    }
+
+    #[test]
+    fn async_tickets_work_uniformly_across_modes() {
+        let pts = data();
+        let q = queries();
+        let want = serial::aidw_serial(&pts, &q, &AidwParams::default());
+        let serving = AidwSession::serving(CoordinatorConfig {
+            engine_mode: EngineMode::CpuOnly,
+            ..Default::default()
+        })
+        .unwrap();
+        for s in [AidwSession::serial(), AidwSession::in_process(), serving] {
+            s.register("d", pts.clone()).unwrap();
+            // fail fast before any worker runs, in every mode
+            assert!(s.submit("ghost", &q, &QueryOptions::default()).is_err());
+            assert!(s.submit("d", &[], &QueryOptions::default()).is_err());
+            assert!(s.submit("d", &q, &QueryOptions::new().k(0)).is_err());
+            // wait() resolves with the same numerics as the sync path
+            let t = s.submit("d", &q, &QueryOptions::default()).unwrap();
+            let reply = t.wait().unwrap();
+            for (g, w) in reply.values.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-9, "{}: {g} vs {w}", s.backend_label());
+            }
+            // try_wait polls to completion without hanging
+            let t = s.submit("d", &q, &QueryOptions::new().k(5)).unwrap();
+            let mut spins = 0usize;
+            let polled = loop {
+                match t.try_wait() {
+                    Some(r) => break r.unwrap(),
+                    None => {
+                        spins += 1;
+                        assert!(spins < 200_000, "{}: poller hung", s.backend_label());
+                        std::thread::sleep(std::time::Duration::from_micros(50));
+                    }
+                }
+            };
+            assert_eq!(polled.options.k, 5, "{}", s.backend_label());
+            assert_eq!(polled.values.len(), q.len());
+        }
+    }
+
+    #[test]
+    fn in_process_submit_applies_backpressure() {
+        // max_queue = 0: every async submission is rejected up front, so
+        // the in-process ticket path cannot spawn unbounded threads
+        let mut cfg = CoordinatorConfig::default();
+        cfg.batch.max_queue = 0;
+        let s = AidwSession::in_process_with(cfg);
+        s.register("d", data()).unwrap();
+        let err = s.submit("d", &queries(), &QueryOptions::default()).unwrap_err();
+        assert!(matches!(err, Error::Unavailable(_)), "{err}");
+        // the synchronous path is unaffected
+        assert!(s.interpolate("d", &queries(), &QueryOptions::default()).is_ok());
     }
 
     #[test]

@@ -394,6 +394,52 @@ fn property_incremental_equals_rebuild() {
 }
 
 #[test]
+fn mutate_then_local_mode_is_bit_identical_to_post_compaction() {
+    // PR 2 rejected local (A5) requests while a dataset had uncompacted
+    // mutations; the planner's merged per-id gather serves them now, and
+    // the answers are bit-identical both to a fresh registration of the
+    // merged live set and to the same request after compaction
+    let coord = Arc::new(Coordinator::new(cpu_config()).unwrap());
+    let server = Server::start(coord, "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    let base = workload::uniform_square(900, 70.0, 9601);
+    let extra = workload::uniform_square(70, 70.0, 9602);
+    client.register("d", &base).unwrap();
+    client.append("d", &extra).unwrap(); // ids 900..970
+    client.remove("d", &[5, 903]).unwrap(); // base idx 5, delta idx 3
+
+    let queries = workload::uniform_square(45, 70.0, 9603).xy();
+    let opts = QueryOptions::new().local_neighbors(32);
+    let live = client.interpolate_with("d", &queries, opts.clone()).unwrap();
+    let echoed = live.options.clone().expect("v2 echo");
+    assert_eq!(echoed.local_neighbors, Some(32));
+    assert_eq!(echoed.epoch, Some(0), "served from the mutated epoch-0 snapshot");
+
+    // oracle 1: fresh registration of the materialized live set
+    let merged = merged_set(
+        &base,
+        &extra,
+        &[5usize].into_iter().collect(),
+        &[3usize].into_iter().collect(),
+    );
+    let fresh = Arc::new(Coordinator::new(cpu_config()).unwrap());
+    fresh.register_dataset("m", merged).unwrap();
+    let fresh_server = Server::start(fresh, "127.0.0.1:0").unwrap();
+    let mut fresh_client = Client::connect(fresh_server.addr()).unwrap();
+    let want = fresh_client
+        .interpolate_with("m", &queries, opts.clone())
+        .unwrap();
+    assert_eq!(live.values, want.values, "merged A5 must equal a fresh build");
+
+    // oracle 2: the same request after compaction on the same server
+    let rep = client.compact("d").unwrap();
+    assert_eq!(rep.epoch, 1);
+    let after = client.interpolate_with("d", &queries, opts).unwrap();
+    assert_eq!(after.options.unwrap().epoch, Some(1));
+    assert_eq!(after.values, live.values, "pre/post-compaction A5 bit-identical");
+}
+
+#[test]
 fn mutate_error_codes_over_the_wire() {
     use std::io::{BufRead, Write};
     let coord = Arc::new(Coordinator::new(cpu_config()).unwrap());

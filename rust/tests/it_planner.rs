@@ -1,0 +1,302 @@
+//! Integration: the two-stage execution planner end to end.
+//!
+//! * **Coalescing**: two jobs with equal `stage1_key()` but different
+//!   stage-2 variants share one batch and execute stage 1 exactly once
+//!   (asserted via the coordinator's stage-1 execution counter);
+//! * **Neighbor reuse**: a repeated identical raster on an unmutated
+//!   dataset is served from the `NeighborCache` (hit counter + response
+//!   flag asserted) bit-identically; any mutation — append, remove,
+//!   compact, register-over — invalidates the cached artifacts for that
+//!   dataset (epoch/overlay mismatch);
+//! * **Property**: planned / coalesced / cached execution is
+//!   bit-identical to the monolithic in-process paths across stage-2
+//!   variants × (dense, local) × (clean, mutated) datasets.
+
+use std::sync::Arc;
+
+use aidw::aidw::local::{interpolate_local, LocalConfig};
+use aidw::aidw::params::AidwParams;
+use aidw::aidw::pipeline::interpolate_improved_on;
+use aidw::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, EngineMode, InterpolationRequest, QueryOptions,
+    Variant,
+};
+use aidw::geom::PointSet;
+use aidw::knn::grid_knn::RingRule;
+use aidw::pool::Pool;
+use aidw::prop_assert;
+use aidw::proptest::{check, pass, Config};
+use aidw::workload;
+
+fn cpu_config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        engine_mode: EngineMode::CpuOnly,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn variant_coalesced_jobs_run_stage1_exactly_once() {
+    // a generous linger plus a blocking batch in front makes the
+    // coalescing window deterministic: both variant jobs are queued
+    // before the dispatcher reaches them
+    let cfg = CoordinatorConfig {
+        batch: BatchPolicy {
+            linger: std::time::Duration::from_millis(300),
+            ..Default::default()
+        },
+        ..cpu_config()
+    };
+    let c = Arc::new(Coordinator::new(cfg).unwrap());
+    c.register_dataset("blk", workload::uniform_square(2000, 90.0, 801)).unwrap();
+    let pts = workload::uniform_square(800, 90.0, 802);
+    c.register_dataset("d", pts.clone()).unwrap();
+
+    let q = workload::uniform_square(40, 90.0, 803).xy();
+    let t_blk = c
+        .submit(InterpolationRequest::new(
+            "blk",
+            workload::uniform_square(500, 90.0, 804).xy(),
+        ))
+        .unwrap();
+    let t_naive = c
+        .submit(InterpolationRequest::new("d", q.clone()).with_variant(Variant::Naive))
+        .unwrap();
+    let t_tiled = c
+        .submit(InterpolationRequest::new("d", q.clone()).with_variant(Variant::Tiled))
+        .unwrap();
+    t_blk.wait().unwrap();
+    let naive = t_naive.wait().unwrap();
+    let tiled = t_tiled.wait().unwrap();
+
+    // the acceptance assertion: the pair paid for exactly one kNN sweep
+    let m = c.metrics();
+    assert_eq!(m.stage1_execs, 2, "one for blk, exactly one for the pair: {m:?}");
+    assert_eq!(m.batches, 2, "variant-only difference must share a batch");
+    assert_eq!(m.coalesced_batches, 1);
+    assert_eq!(m.stage2_execs, 3, "blk + one per variant group");
+    assert_eq!(m.stage1_cache_hits, 0);
+
+    // responses carry each job's own variant, the shared batch facts,
+    // and identical values (the CPU stage 2 is variant-independent)
+    assert_eq!(naive.options.variant, Variant::Naive);
+    assert_eq!(tiled.options.variant, Variant::Tiled);
+    assert_eq!(naive.stage2_groups, 2);
+    assert_eq!(tiled.stage2_groups, 2);
+    assert_eq!(naive.batch_queries, 80);
+    assert_eq!(naive.values, tiled.values, "same artifact, same numerics");
+    let want = interpolate_improved_on(
+        &Pool::new(2),
+        &pts,
+        &q,
+        &AidwParams::default(),
+        RingRule::Exact,
+    )
+    .0;
+    assert_eq!(naive.values, want, "coalesced run matches the monolithic pipeline");
+}
+
+#[test]
+fn repeated_raster_hits_cache_and_any_mutation_invalidates() {
+    let c = Coordinator::new(cpu_config()).unwrap();
+    c.register_dataset("d", workload::uniform_square(600, 50.0, 811)).unwrap();
+    let q = workload::uniform_square(50, 50.0, 812).xy();
+    let req = || InterpolationRequest::new("d", q.clone());
+
+    // cold -> miss, warm -> hit, bit-identical
+    let r1 = c.interpolate(req()).unwrap();
+    assert!(!r1.stage1_cache_hit);
+    let r2 = c.interpolate(req()).unwrap();
+    assert!(r2.stage1_cache_hit, "identical raster must be served from the cache");
+    assert_eq!(r1.values, r2.values, "cached artifact must be bit-identical");
+    let m = c.metrics();
+    assert_eq!((m.stage1_execs, m.stage1_cache_hits), (1, 1));
+
+    // a different stage-1 key misses (k override)
+    let r3 = c.interpolate(req().with_k(5)).unwrap();
+    assert!(!r3.stage1_cache_hit);
+    assert_eq!(c.metrics().stage1_execs, 2);
+
+    // append -> mutated snapshot: the cache is bypassed entirely
+    c.append_points("d", workload::uniform_square(10, 50.0, 813)).unwrap();
+    let r4 = c.interpolate(req()).unwrap();
+    assert!(!r4.stage1_cache_hit, "mutated datasets never serve cached artifacts");
+    assert_eq!(r4.options.epoch, Some(0), "epoch unchanged by the append");
+    assert_eq!(c.metrics().stage1_cache_hits, 1, "no new hits while mutated");
+
+    // compact -> epoch bump: the old epoch-0 entry cannot match
+    let rep = c.compact_dataset("d").unwrap();
+    assert_eq!(rep.new_epoch, 1);
+    let r5 = c.interpolate(req()).unwrap();
+    assert!(!r5.stage1_cache_hit, "epoch mismatch must miss");
+    assert_eq!(r5.options.epoch, Some(1));
+    assert_eq!(r4.values, r5.values, "merged vs compacted stays bit-identical");
+    let r6 = c.interpolate(req()).unwrap();
+    assert!(r6.stage1_cache_hit, "epoch-1 artifact now cached");
+    assert_eq!(r5.values, r6.values);
+
+    // remove -> mutated again; compact -> epoch 2 misses again
+    c.remove_points("d", &[0]).unwrap();
+    assert!(!c.interpolate(req()).unwrap().stage1_cache_hit);
+    c.compact_dataset("d").unwrap();
+    let r7 = c.interpolate(req()).unwrap();
+    assert!(!r7.stage1_cache_hit);
+    assert_eq!(r7.options.epoch, Some(2));
+
+    // register-over purges: same name, same epoch 0, different points
+    let other = workload::uniform_square(600, 50.0, 814);
+    c.register_dataset("d", other.clone()).unwrap();
+    let r8 = c.interpolate(req()).unwrap();
+    assert!(!r8.stage1_cache_hit, "re-registration must purge the cache");
+    assert_ne!(r8.values, r1.values, "answers come from the new dataset");
+}
+
+#[test]
+fn zero_capacity_disables_the_cache() {
+    let cfg = CoordinatorConfig { neighbor_cache: 0, ..cpu_config() };
+    let c = Coordinator::new(cfg).unwrap();
+    c.register_dataset("d", workload::uniform_square(300, 40.0, 821)).unwrap();
+    let q = workload::uniform_square(30, 40.0, 822).xy();
+    let r1 = c.interpolate(InterpolationRequest::new("d", q.clone())).unwrap();
+    let r2 = c.interpolate(InterpolationRequest::new("d", q)).unwrap();
+    assert!(!r1.stage1_cache_hit && !r2.stage1_cache_hit);
+    assert_eq!(r1.values, r2.values);
+    let m = c.metrics();
+    assert_eq!((m.stage1_execs, m.stage1_cache_hits), (2, 0));
+}
+
+#[test]
+fn property_planner_is_bit_identical_to_monolithic_paths() {
+    // planned (grid/merged), coalesced (both variants), and cached
+    // (repeat) execution must equal the in-process monolithic pipeline
+    // bit for bit, across dense/local × clean/mutated
+    let pool = Pool::new(2);
+
+    #[derive(Debug)]
+    struct Case {
+        base: PointSet,
+        delta: PointSet,
+        remove: Vec<u64>,
+        queries: Vec<(f64, f64)>,
+        k: usize,
+        local_n: Option<usize>,
+    }
+
+    check(
+        Config { cases: 18, seed: 0x51A6, max_size: 260 },
+        "planner_vs_monolithic",
+        |rng, size| {
+            let n_base = 40 + (size % 260);
+            let mutated = rng.below(2) == 0;
+            let n_delta = if mutated { 1 + (size % 40) } else { 0 };
+            let base = workload::uniform_square(n_base, 100.0, rng.next_u64());
+            let delta = workload::uniform_square(n_delta.max(1), 100.0, rng.next_u64());
+            let mut remove = Vec::new();
+            if mutated {
+                let mut taken = std::collections::HashSet::new();
+                for _ in 0..rng.below(4) {
+                    let id = rng.below(n_base as u32 - 1) as u64;
+                    if taken.insert(id) {
+                        remove.push(id);
+                    }
+                }
+            }
+            let queries = workload::uniform_square(12, 100.0, rng.next_u64()).xy();
+            let k = [1usize, 4, 10][rng.below(3) as usize];
+            let local_n = if rng.below(2) == 0 { Some(24) } else { None };
+            Case {
+                base,
+                delta: if mutated { delta } else { PointSet::default() },
+                remove,
+                queries,
+                k,
+                local_n,
+            }
+        },
+        |case| {
+            let c = Coordinator::new(cpu_config()).unwrap();
+            c.register_dataset("p", case.base.clone()).unwrap();
+            if !case.delta.is_empty() {
+                c.append_points("p", case.delta.clone()).unwrap();
+            }
+            if !case.remove.is_empty() {
+                c.remove_points("p", &case.remove).unwrap();
+            }
+            let (merged, _) = c.live_dataset("p").unwrap().snapshot().live_points();
+
+            // monolithic references over the materialized live set
+            let mut params = AidwParams::default();
+            params.k = case.k;
+            let want = match case.local_n {
+                Some(n) => interpolate_local(
+                    &merged,
+                    &case.queries,
+                    &params,
+                    &LocalConfig { n_neighbors: n, rule: RingRule::Exact },
+                )
+                .unwrap(),
+                None => {
+                    interpolate_improved_on(&pool, &merged, &case.queries, &params, RingRule::Exact)
+                        .0
+                }
+            };
+
+            // coalesced: both stage-2 variants submitted together
+            let mut opts = QueryOptions::new().k(case.k);
+            if let Some(n) = case.local_n {
+                opts = opts.local_neighbors(n);
+            }
+            let t_naive = c
+                .submit(
+                    InterpolationRequest::new("p", case.queries.clone())
+                        .with_options(opts.clone().variant(Variant::Naive)),
+                )
+                .unwrap();
+            let t_tiled = c
+                .submit(
+                    InterpolationRequest::new("p", case.queries.clone())
+                        .with_options(opts.clone().variant(Variant::Tiled)),
+                )
+                .unwrap();
+            let naive = t_naive.wait().unwrap();
+            let tiled = t_tiled.wait().unwrap();
+            prop_assert!(
+                naive.values == want,
+                "planned naive diverged from monolithic ({:?})",
+                case.local_n
+            );
+            prop_assert!(tiled.values == want, "planned tiled diverged from monolithic");
+
+            // cached repeats: the first repeat may miss when the pair
+            // coalesced (the pair batch cached the *concatenated* raster
+            // under a different fingerprint), but it then caches this
+            // exact raster, so the second repeat must hit on a clean
+            // dataset; mutated datasets always bypass the cache.  Values
+            // must never change either way.
+            let clean = case.delta.is_empty() && case.remove.is_empty();
+            let repeat = || {
+                c.interpolate(
+                    InterpolationRequest::new("p", case.queries.clone())
+                        .with_options(opts.clone().variant(Variant::Naive)),
+                )
+                .unwrap()
+            };
+            let again = repeat();
+            prop_assert!(again.values == want, "repeat run diverged");
+            let thrice = repeat();
+            prop_assert!(thrice.values == want, "cached run diverged");
+            if clean {
+                prop_assert!(
+                    thrice.stage1_cache_hit,
+                    "clean second repeat must be served from the cache"
+                );
+            } else {
+                prop_assert!(
+                    !again.stage1_cache_hit && !thrice.stage1_cache_hit,
+                    "mutated datasets must bypass the cache"
+                );
+            }
+            pass()
+        },
+    );
+}
