@@ -25,6 +25,23 @@ cargo test -q --test it_live
 echo "== cargo test -q --test it_planner =="
 cargo test -q --test it_planner
 
+# Overlay-versioned neighbor caching is tier-1: the mutated-snapshot
+# cache-hit / never-stale property coverage (mutate -> query -> mutate ->
+# query bit-identity) must never be silently dropped.
+echo "== cargo test -q --test it_cache_live =="
+cargo test -q --test it_cache_live
+
+# Protocol version drift check: the wire version constant and the
+# protocol.rs doc header must agree (both are client-facing contracts).
+echo "== protocol version drift check =="
+doc_ver=$(grep -m1 -oE 'Wire protocol \*\*v[0-9]+\.[0-9]+\*\*' src/service/protocol.rs | grep -oE '[0-9]+\.[0-9]+' || true)
+const_ver=$(grep -m1 -oE 'PROTOCOL_VERSION: &str = "[0-9]+\.[0-9]+"' src/service/protocol.rs | grep -oE '[0-9]+\.[0-9]+' || true)
+if [ -z "$doc_ver" ] || [ -z "$const_ver" ] || [ "$doc_ver" != "$const_ver" ]; then
+    echo "FAIL: protocol.rs doc header (v${doc_ver:-?}) and PROTOCOL_VERSION (v${const_ver:-?}) disagree"
+    exit 1
+fi
+echo "protocol v$const_ver: doc header and constant agree"
+
 # Lint gates.  Both run whenever the component is installed; they are
 # fatal under AIDW_CI_STRICT=1 and advisory otherwise, because rustfmt
 # output and clippy's lint set both drift across toolchain versions and

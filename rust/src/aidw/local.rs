@@ -75,7 +75,7 @@ pub fn interpolate_local_on(
     );
     let artifact = stage1.execute_grid(pool, &grid, queries);
     let table = artifact.neighbors.as_ref().expect("gathering plan produces a table");
-    Ok(plan::local_weighted_on(pool, data, queries, &artifact.alphas, table))
+    Ok(plan::local_weighted_on(pool, data, queries, artifact.alphas(), table))
 }
 
 #[cfg(test)]

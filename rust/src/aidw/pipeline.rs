@@ -58,11 +58,14 @@ pub fn interpolate_improved_on(
     let plan =
         Stage1Plan::new(params.k, rule, None, params, data.len(), area, SearchKind::Grid);
     let artifact = plan.execute_grid(pool, &grid, queries);
+    // materialize the lazy alphas inside the stage-1 window: the alpha
+    // pass is stage-1 work in the paper's decomposition
+    let alphas = artifact.alphas();
     times.knn_s = t0.elapsed().as_secs_f64();
 
     // ---- Stage 2: weighted interpolating ----------------------------
     let t1 = std::time::Instant::now();
-    let out = weighted_stage_on(pool, data, queries, &artifact.alphas);
+    let out = weighted_stage_on(pool, data, queries, alphas);
     times.interp_s = t1.elapsed().as_secs_f64();
 
     (out, times)

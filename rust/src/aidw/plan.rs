@@ -86,18 +86,96 @@ pub struct NeighborTable {
 
 /// The reusable stage-1 product: everything stage 2 needs, and nothing
 /// dataset-mutation-sensitive beyond the snapshot it was computed from.
+///
+/// The adaptive alphas are **lazy**: the artifact stores `r_obs` plus the
+/// `(r_exp, params)` pair the Eqs. 2-6 pipeline derives alpha from, and
+/// materializes the alpha vector on first [`NeighborArtifact::alphas`]
+/// call.  A PJRT stage 2 recomputes alpha on-device from `r_obs`, so on
+/// an artifact-backed coordinator the CPU alpha pass was dead work; CPU
+/// consumers pay it exactly once per artifact (cached artifacts keep the
+/// materialized vector).
 #[derive(Debug, Clone, Default)]
 pub struct NeighborArtifact {
     /// Eq.-3 average distance to the k nearest live points, per query.
     pub r_obs: Vec<f64>,
-    /// Adaptive alpha (Eqs. 2-6), per query.
-    pub alphas: Vec<f64>,
+    /// Lazily-materialized adaptive alphas — see [`NeighborArtifact::alphas`].
+    lazy_alphas: std::sync::OnceLock<Vec<f64>>,
+    /// Eq.-2 expected NN distance the lazy alphas derive from.
+    r_exp: f64,
+    /// Alpha parameters (levels + fuzzy bounds) the lazy alphas derive from.
+    params: AidwParams,
     /// Neighbor indices (local mode only).  Grid artifacts hold original
     /// base indices; merged artifacts hold merged candidate indices
     /// (`< n_base` = base index, else `n_base + delta position`).
     pub neighbors: Option<NeighborTable>,
-    /// Wall seconds spent producing this artifact (search + alpha).
+    /// Wall seconds spent producing this artifact (the search; the alpha
+    /// pass is lazy and timed by whichever consumer materializes it).
     pub stage1_s: f64,
+}
+
+impl NeighborArtifact {
+    /// Assemble an artifact from a finished stage-1 search.  `r_exp` and
+    /// `params` seed the lazy alpha materialization.
+    pub fn new(
+        r_obs: Vec<f64>,
+        r_exp: f64,
+        params: AidwParams,
+        neighbors: Option<NeighborTable>,
+        stage1_s: f64,
+    ) -> NeighborArtifact {
+        NeighborArtifact {
+            r_obs,
+            lazy_alphas: std::sync::OnceLock::new(),
+            r_exp,
+            params,
+            neighbors,
+            stage1_s,
+        }
+    }
+
+    /// Adaptive alpha (Eqs. 2-6), per query — materialized on first use
+    /// and cached on the artifact (thread-safe; every caller sees the
+    /// same vector).  The per-element function is deterministic in
+    /// `(r_obs[i], r_exp, params)`, so a lazily-recomputed vector is
+    /// bit-identical to an eagerly-computed one.
+    pub fn alphas(&self) -> &[f64] {
+        self.lazy_alphas.get_or_init(|| {
+            self.r_obs
+                .iter()
+                .map(|&ro| alpha::adaptive_alpha(ro, self.r_exp, &self.params))
+                .collect()
+        })
+    }
+
+    /// True when the lazy alpha vector has been materialized (memory
+    /// accounting and the PJRT dead-work regression test read this).
+    pub fn alphas_materialized(&self) -> bool {
+        self.lazy_alphas.get().is_some()
+    }
+
+    /// Row-gather: a new artifact holding row `rows[i]` of every
+    /// per-query buffer — the per-query-row subset reuse behind the
+    /// neighbor cache's subset hits.  Materialized alphas are gathered
+    /// directly; otherwise the subset recomputes them lazily from the
+    /// same `(r_exp, params)`, which is bit-identical either way.
+    pub fn subset_rows(&self, rows: &[u32]) -> NeighborArtifact {
+        let r_obs = rows.iter().map(|&r| self.r_obs[r as usize]).collect();
+        let neighbors = self.neighbors.as_ref().map(|t| {
+            let mut idx = Vec::with_capacity(rows.len() * t.width);
+            for &r in rows {
+                let at = r as usize * t.width;
+                idx.extend_from_slice(&t.idx[at..at + t.width]);
+            }
+            NeighborTable { idx, width: t.width }
+        });
+        let sub = NeighborArtifact::new(r_obs, self.r_exp, self.params.clone(), neighbors, 0.0);
+        if let Some(al) = self.lazy_alphas.get() {
+            let _ = sub
+                .lazy_alphas
+                .set(rows.iter().map(|&r| al[r as usize]).collect());
+        }
+        sub
+    }
 }
 
 /// The stage-2 plan: which weighting consumes the artifact.
@@ -194,18 +272,23 @@ impl Stage1Plan {
         self.finish(t0, r_obs, neighbors)
     }
 
-    /// Alpha epilogue shared by both executors (Eqs. 2-6 over r_obs).
+    /// Artifact epilogue shared by both executors: packages r_obs with
+    /// the `(r_exp, params)` pair the lazy alpha pass (Eqs. 2-6) derives
+    /// from.  Alpha itself materializes at the first CPU consumer — a
+    /// PJRT stage 2 recomputes it on-device and never pays the pass.
     fn finish(
         &self,
         t0: std::time::Instant,
         r_obs: Vec<f64>,
         neighbors: Option<NeighborTable>,
     ) -> NeighborArtifact {
-        let alphas = r_obs
-            .iter()
-            .map(|&ro| alpha::adaptive_alpha(ro, self.r_exp, &self.params))
-            .collect();
-        NeighborArtifact { r_obs, alphas, neighbors, stage1_s: t0.elapsed().as_secs_f64() }
+        NeighborArtifact::new(
+            r_obs,
+            self.r_exp,
+            self.params.clone(),
+            neighbors,
+            t0.elapsed().as_secs_f64(),
+        )
     }
 }
 
@@ -296,9 +379,11 @@ mod tests {
         assert_eq!(plan.stage2(), Stage2Plan::Dense);
         let art = plan.execute_grid(&pool, &grid, &queries);
         assert_eq!(art.r_obs.len(), queries.len());
-        assert_eq!(art.alphas.len(), queries.len());
+        assert!(!art.alphas_materialized(), "alpha is lazy until a CPU consumer asks");
+        assert_eq!(art.alphas().len(), queries.len());
+        assert!(art.alphas_materialized());
         assert!(art.neighbors.is_none());
-        let got = crate::aidw::pipeline::weighted_stage_on(&pool, &data, &queries, &art.alphas);
+        let got = crate::aidw::pipeline::weighted_stage_on(&pool, &data, &queries, art.alphas());
         let want = serial::aidw_serial(&data, &queries, &params);
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-9, "{g} vs {w}");
@@ -325,7 +410,7 @@ mod tests {
         let art = plan.execute_grid(&pool, &grid, &queries);
         let table = art.neighbors.as_ref().expect("local plan gathers");
         assert_eq!(table.width, 48);
-        let got = local_weighted_on(&pool, &data, &queries, &art.alphas, table);
+        let got = local_weighted_on(&pool, &data, &queries, art.alphas(), table);
         let want = crate::aidw::local::interpolate_local(
             &data,
             &queries,
@@ -334,6 +419,52 @@ mod tests {
         )
         .unwrap();
         assert_eq!(got, want, "plan-IR local must be bit-identical");
+    }
+
+    #[test]
+    fn lazy_alphas_match_eager_and_subset_rows_gather_exactly() {
+        let data = workload::uniform_square(400, 70.0, 975);
+        let queries = workload::uniform_square(30, 70.0, 976).xy();
+        let params = AidwParams::default();
+        let pool = Pool::new(2);
+        let grid = EvenGrid::build_on(&pool, &data, None, &GridConfig::default()).unwrap();
+        let area = data.bounds().area();
+        let plan = Stage1Plan::new(
+            params.k,
+            RingRule::Exact,
+            Some(16),
+            &params,
+            data.len(),
+            area,
+            SearchKind::Grid,
+        );
+        let art = plan.execute_grid(&pool, &grid, &queries);
+        // eager reference computed by hand from the same inputs
+        let want: Vec<f64> = art
+            .r_obs
+            .iter()
+            .map(|&ro| alpha::adaptive_alpha(ro, plan.r_exp, &plan.params))
+            .collect();
+
+        // subset BEFORE materialization: recomputes lazily, bit-identical
+        let rows: Vec<u32> = vec![5, 0, 29, 5, 17];
+        let sub_cold = art.subset_rows(&rows);
+        assert!(!sub_cold.alphas_materialized());
+        for (i, &r) in rows.iter().enumerate() {
+            assert_eq!(sub_cold.r_obs[i], art.r_obs[r as usize]);
+            assert_eq!(sub_cold.alphas()[i], want[r as usize]);
+            let w = art.neighbors.as_ref().unwrap().width;
+            assert_eq!(
+                sub_cold.neighbors.as_ref().unwrap().idx[i * w..(i + 1) * w],
+                art.neighbors.as_ref().unwrap().idx[r as usize * w..(r as usize + 1) * w]
+            );
+        }
+
+        // materialize on the source, then subset AFTER: gathered directly
+        assert_eq!(art.alphas(), want.as_slice());
+        let sub_warm = art.subset_rows(&rows);
+        assert!(sub_warm.alphas_materialized(), "materialized alphas are gathered, not redone");
+        assert_eq!(sub_warm.alphas(), sub_cold.alphas());
     }
 
     #[test]

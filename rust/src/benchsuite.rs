@@ -307,6 +307,109 @@ pub fn measure_planner(
     })
 }
 
+/// Mutated-dataset cache measurements at one size — the overlay-versioned
+/// neighbor cache's win made measurable: on an **uncompacted** (mutated)
+/// snapshot, a repeated identical raster must be served from the
+/// `NeighborCache` instead of re-running the merged kNN sweep, and the
+/// next mutation must invalidate exactly once.
+#[derive(Debug, Clone, Copy)]
+pub struct LiveCacheMeasurement {
+    pub n: usize,
+    /// Cold wall ms of one n-query raster on the mutated snapshot.
+    pub mutated_cold_ms: f64,
+    /// Wall ms of the identical repeat on the same overlay version.
+    pub mutated_warm_ms: f64,
+    /// Cache hits observed during the warm repeat (1 expected).
+    pub warm_hits: u64,
+    /// Stage-1 executions the post-mutation repeat ran (1 expected: the
+    /// overlay version bump must retire the cached artifact).
+    pub post_mutation_execs: u64,
+    /// Warm-over-cold hit rate proxy: cold ms / warm ms (>= 1 when the
+    /// cache wins; timing-noisy at small n).
+    pub speedup: f64,
+}
+
+/// Measure the mutated-dataset cache suite at one size (CPU-only
+/// coordinator; warm values are asserted bit-identical to cold).
+pub fn measure_live_cache(
+    n: usize,
+    opts: &MeasureOpts,
+    threads: Option<usize>,
+) -> Result<LiveCacheMeasurement> {
+    use crate::coordinator::{Coordinator, CoordinatorConfig, EngineMode, InterpolationRequest};
+    let cfg = CoordinatorConfig {
+        engine_mode: EngineMode::CpuOnly,
+        stage1_threads: threads,
+        // the point of this suite is the *mutated* snapshot: a background
+        // compaction folding the delta mid-measurement would undo it
+        live: crate::live::LiveConfig { auto_compact: false, ..Default::default() },
+        ..Default::default()
+    };
+    let coord = Coordinator::new(cfg)?;
+    let (data, queries) = standard_workload(n, opts);
+    coord.register_dataset("bench", data)?;
+    // mutate: append a delta tail (and tombstone one point) so the
+    // snapshot is uncompacted and stage 1 takes the merged path
+    let delta = workload::uniform_square((n / 16).max(1), opts.side, opts.seed + 11);
+    coord.append_points("bench", delta)?;
+    coord.remove_points("bench", &[0])?;
+
+    let t0 = std::time::Instant::now();
+    let cold = coord.interpolate(InterpolationRequest::new("bench", queries.clone()))?;
+    let mutated_cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+    if cold.stage1_cache_hit {
+        return Err(Error::Service("cold mutated raster cannot be a cache hit".into()));
+    }
+    let m0 = coord.metrics();
+
+    let t1 = std::time::Instant::now();
+    let warm = coord.interpolate(InterpolationRequest::new("bench", queries.clone()))?;
+    let mutated_warm_ms = t1.elapsed().as_secs_f64() * 1e3;
+    let m1 = coord.metrics();
+    if cold.values != warm.values {
+        return Err(Error::Service(
+            "cached mutated raster diverged from the cold pass".into(),
+        ));
+    }
+
+    // one more mutation: the overlay version bump must force exactly one
+    // stage-1 re-execution for the same raster
+    coord.append_points("bench", workload::uniform_square(1, opts.side, opts.seed + 13))?;
+    coord.interpolate(InterpolationRequest::new("bench", queries))?;
+    let m2 = coord.metrics();
+
+    Ok(LiveCacheMeasurement {
+        n,
+        mutated_cold_ms,
+        mutated_warm_ms,
+        warm_hits: m1.stage1_cache_hits - m0.stage1_cache_hits,
+        post_mutation_execs: m2.stage1_execs - m1.stage1_execs,
+        speedup: mutated_cold_ms / mutated_warm_ms.max(1e-9),
+    })
+}
+
+/// The `live_cache` section of `BENCH_aidw.json`.
+fn live_cache_json(live: &[LiveCacheMeasurement]) -> Json {
+    Json::Arr(
+        live.iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("n", Json::Num(l.n as f64)),
+                    ("label", Json::Str(size_label(l.n))),
+                    ("mutated_cold_ms", Json::Num(l.mutated_cold_ms)),
+                    ("mutated_warm_ms", Json::Num(l.mutated_warm_ms)),
+                    ("warm_hits", Json::Num(l.warm_hits as f64)),
+                    (
+                        "post_mutation_execs",
+                        Json::Num(l.post_mutation_execs as f64),
+                    ),
+                    ("speedup", Json::Num(l.speedup)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// The `planner` section of `BENCH_aidw.json`.
 fn planner_json(planner: &[PlannerMeasurement]) -> Json {
     Json::Arr(
@@ -341,10 +444,12 @@ fn variant_json(v: &VariantTimes) -> Json {
 
 /// `BENCH_aidw.json` document for a CPU-only run: sizes × variants ×
 /// stage times plus the planner section (stage1/stage2/coalesce/
-/// cache-hit), self-describing enough to diff across PRs.
+/// cache-hit) and the mutated-dataset cache section, self-describing
+/// enough to diff across PRs.
 pub fn cpu_bench_json(
     results: &[CpuSizeMeasurement],
     planner: &[PlannerMeasurement],
+    live_cache: &[LiveCacheMeasurement],
     threads: usize,
     seed: u64,
 ) -> Json {
@@ -356,6 +461,7 @@ pub fn cpu_bench_json(
         // the measurements run with the library defaults
         ("k", Json::Num(AidwParams::default().k as f64)),
         ("planner", planner_json(planner)),
+        ("live_cache", live_cache_json(live_cache)),
         (
             "sizes",
             Json::Arr(
@@ -389,10 +495,12 @@ pub fn cpu_bench_json(
 }
 
 /// `BENCH_aidw.json` document for a full PJRT run (all five paper
-/// versions per size, plus the planner section).
+/// versions per size, plus the planner and mutated-dataset cache
+/// sections).
 pub fn pjrt_bench_json(
     results: &[SizeMeasurement],
     planner: &[PlannerMeasurement],
+    live_cache: &[LiveCacheMeasurement],
     threads: usize,
     seed: u64,
 ) -> Json {
@@ -404,6 +512,7 @@ pub fn pjrt_bench_json(
         // the measurements run with the library defaults
         ("k", Json::Num(AidwParams::default().k as f64)),
         ("planner", planner_json(planner)),
+        ("live_cache", live_cache_json(live_cache)),
         (
             "sizes",
             Json::Arr(
@@ -506,7 +615,15 @@ mod tests {
             assert_eq!(p.coalesce_stage1_execs, 1, "pair must share one stage-1");
             assert_eq!(p.cache_hits, 1, "repeat raster must hit the cache");
         }
-        let doc = cpu_bench_json(&results, &planner, pool.threads(), opts.seed);
+        let live: Vec<LiveCacheMeasurement> = sizes
+            .iter()
+            .map(|&n| measure_live_cache(n, &opts, Some(2)).unwrap())
+            .collect();
+        for l in &live {
+            assert_eq!(l.warm_hits, 1, "mutated repeat raster must hit the cache");
+            assert_eq!(l.post_mutation_execs, 1, "a mutation must invalidate exactly once");
+        }
+        let doc = cpu_bench_json(&results, &planner, &live, pool.threads(), opts.seed);
         let text = doc.to_string();
         // round-trips as JSON and carries the schema the perf trajectory
         // tooling greps for
@@ -527,5 +644,10 @@ mod tests {
         assert_eq!(pj[0].get("coalesce_stage1_execs").as_usize(), Some(1));
         assert_eq!(pj[0].get("cache_hits").as_usize(), Some(1));
         assert!(pj[0].get("stage1_ms").as_f64().is_some());
+        let lc = back.get("live_cache").as_arr().unwrap();
+        assert_eq!(lc.len(), 2);
+        assert_eq!(lc[0].get("warm_hits").as_usize(), Some(1));
+        assert_eq!(lc[0].get("post_mutation_execs").as_usize(), Some(1));
+        assert!(lc[0].get("mutated_warm_ms").as_f64().is_some());
     }
 }

@@ -3,8 +3,8 @@
 //! Requests are coalesced into one batch when they target the same
 //! dataset **and** agree on the **stage-1 key**
 //! ([`ResolvedOptions::stage1_key`]) — k, ring rule, local mode, alpha
-//! levels, fuzzy bounds, area, and epoch: everything that determines the
-//! kNN sweep and the alpha product.  The stage-2 kernel *variant* is
+//! levels, fuzzy bounds, area, epoch, and overlay version: everything
+//! that determines the kNN sweep and the alpha product.  The stage-2 kernel *variant* is
 //! deliberately **not** part of the admission key: jobs that differ only
 //! there share the batch's single stage-1 execution (the dominant cost in
 //! the paper's measurements) and are split into per-variant groups only
@@ -321,6 +321,32 @@ mod tests {
         let b2 = q.next_batch().unwrap();
         assert_eq!(b2.jobs.len(), 1);
         assert_eq!(b2.options.epoch, Some(1));
+    }
+
+    #[test]
+    fn overlay_versions_never_share_a_batch() {
+        // submit stamps the snapshot's overlay version; a mutation
+        // between two submissions must split them into separate batches
+        // (their stage-1 products come from different overlay states)
+        let q = JobQueue::new(BatchPolicy {
+            linger: Duration::from_millis(1),
+            ..Default::default()
+        });
+        let base =
+            ResolvedOptions { epoch: Some(0), overlay: Some(0), ..Default::default() };
+        let bumped = ResolvedOptions { overlay: Some(1), ..base };
+        let (j1, _r1) = job_with("a", 4, base);
+        let (j2, _r2) = job_with("a", 4, bumped);
+        let (j3, _r3) = job_with("a", 4, base);
+        for j in [j1, j2, j3] {
+            q.push(j).unwrap();
+        }
+        let b1 = q.next_batch().unwrap();
+        assert_eq!(b1.jobs.len(), 2, "same-overlay jobs coalesce");
+        assert_eq!(b1.options.overlay, Some(0));
+        let b2 = q.next_batch().unwrap();
+        assert_eq!(b2.jobs.len(), 1);
+        assert_eq!(b2.options.overlay, Some(1));
     }
 
     #[test]

@@ -1,23 +1,41 @@
-//! The epoch-keyed neighbor cache: a bounded LRU of stage-1 products
-//! ([`NeighborArtifact`]) so a repeated raster — the dominant serving
-//! pattern for DEM/tile workloads — skips the kNN search entirely.
+//! The overlay-versioned neighbor cache: a bounded LRU of stage-1
+//! products ([`NeighborArtifact`]) so a repeated raster — the dominant
+//! serving pattern for DEM/tile workloads — skips the kNN search
+//! entirely, on compacted **and** mutated snapshots alike.
 //!
 //! ## Key & invalidation rules
 //!
-//! An entry is keyed on `(dataset, served epoch, Stage1Key, query-set
-//! fingerprint, query count)`.  Correctness rests on three rules:
+//! An entry is keyed on `(dataset, served epoch, epoch-base instance,
+//! overlay version, Stage1Key, query-set fingerprint, query count)`.
+//! Correctness rests on three rules:
 //!
-//! 1. **Only compacted snapshots are cached or served from the cache.**
-//!    A mutated snapshot (non-empty delta overlay) changes with every
-//!    append/remove while keeping its epoch, so its stage-1 products are
-//!    never inserted and never looked up — any mutation therefore
-//!    invalidates the cache for that dataset *implicitly* (lookups bypass
-//!    it until the overlay is folded).
-//! 2. **Compaction bumps the epoch**, so post-compaction lookups miss the
-//!    pre-compaction entries by key; stale epochs age out of the LRU.
+//! 1. **Mutation state is part of the key, not a reason to bypass.**
+//!    Every append/remove bumps the snapshot's
+//!    [`crate::live::DeltaOverlay::version`] (copy-on-write overlays make
+//!    `(epoch, version)` name exactly one overlay state), so artifacts
+//!    computed over a mutated snapshot — built via [`crate::knn::merged`]
+//!    — are cached and served exactly until the next mutation, whose
+//!    version bump retires them by key mismatch; stale versions age out
+//!    of the LRU.  (The PR-3 rule "only compacted snapshots are cached"
+//!    is gone: it degenerated live-feed workloads to re-running the
+//!    dominant kNN stage on every raster.)
+//! 2. **Compaction bumps the epoch** (and resets the overlay version),
+//!    so post-compaction lookups miss the pre-compaction entries by key.
 //! 3. **Registering over or dropping a dataset purges its entries**
 //!    explicitly (same name + epoch 0 would otherwise collide with a
-//!    different point set).
+//!    different point set); the epoch-base `instance` id backstops the
+//!    in-flight re-register race.
+//!
+//! ## Subset reuse
+//!
+//! A lookup that misses on the exact fingerprint still hits when some
+//! cached entry with the same `(dataset, epoch, instance, overlay,
+//! Stage1Key)` identity covers **every query row** of the new raster:
+//! stage-1 products are per-query functions of the snapshot, so the
+//! covering entry's rows are gathered (via
+//! [`NeighborArtifact::subset_rows`]) into a fresh artifact — row
+//! subsets, permutations, and sub-tiles of a cached raster all skip the
+//! kNN search.  Each entry carries a query→row index for the cover test.
 //!
 //! The store is a small `Mutex<VecDeque>` scanned linearly: capacities
 //! are tens of entries (each potentially megabytes of artifact), so a
@@ -25,9 +43,19 @@
 //! no `Eq`/`Hash`.  Queries are identified by a 128-bit FNV-1a
 //! fingerprint of their raw bits plus the exact count; two distinct
 //! rasters colliding on both fingerprint halves is beyond-astronomical,
-//! and a false hit is the only way this cache could ever change answers.
+//! and a false hit is the only way this cache could ever change answers
+//! (the subset path compares raw coordinate bits, not hashes).
+//!
+//! ## Accounting
+//!
+//! Entry weight = every buffer the entry can retain: `r_obs`, the lazy
+//! alpha vector **at its materialized size** (it may materialize while
+//! cached, so it is charged up front), the neighbor table, and the
+//! query→row subset index.  The eviction loop keeps
+//! `bytes <= max_bytes` after every insert, so the budget is exceeded
+//! only transiently, by at most the incoming entry's own weight.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 
 use crate::aidw::plan::NeighborArtifact;
@@ -38,8 +66,7 @@ use super::options::Stage1Key;
 #[derive(Debug, Clone, PartialEq)]
 pub struct CacheKey {
     pub dataset: String,
-    /// The epoch of the (compacted) snapshot the artifact was computed
-    /// from.
+    /// The epoch of the snapshot the artifact was computed from.
     pub epoch: u64,
     /// Identity of the epoch base ([`crate::coordinator::Dataset::uid`],
     /// a process-unique monotonic counter): a backstop against the
@@ -47,10 +74,27 @@ pub struct CacheKey {
     /// could insert under the same `(name, epoch)` as its replacement
     /// after the purge.
     pub instance: u64,
+    /// The overlay version of the snapshot the artifact was computed
+    /// from (0 = compacted).  Every append/remove bumps it, so mutated
+    /// snapshots cache safely — see module docs, rule 1.
+    pub overlay: u64,
     pub stage1: Stage1Key,
     /// 128-bit query-set fingerprint (see [`query_fingerprint`]).
     pub queries_fp: (u64, u64),
     pub n_queries: usize,
+}
+
+impl CacheKey {
+    /// Same snapshot + same stage-1 options — everything but the query
+    /// set.  Two keys agreeing here describe artifacts whose rows are
+    /// interchangeable per query coordinate (the subset-reuse precondition).
+    fn same_identity(&self, other: &CacheKey) -> bool {
+        self.dataset == other.dataset
+            && self.epoch == other.epoch
+            && self.instance == other.instance
+            && self.overlay == other.overlay
+            && self.stage1 == other.stage1
+    }
 }
 
 /// Two independent 64-bit FNV-1a passes over the queries' raw f64 bits.
@@ -75,18 +119,74 @@ pub fn query_fingerprint(queries: &[(f64, f64)]) -> (u64, u64) {
     )
 }
 
-/// Approximate heap bytes one artifact retains (the eviction weight).
+/// Heap bytes an artifact of `n_rows` query rows holds: r_obs + the lazy
+/// alpha vector at its materialized size (it may materialize while the
+/// entry is cached, so it is charged up front) + an optional width-`w`
+/// row-major neighbor table.  The single formula both [`artifact_bytes`]
+/// and the subset-hit charge derive from — keep them from drifting apart.
+fn artifact_row_bytes(n_rows: usize, table_width: Option<usize>) -> usize {
+    n_rows * 8 // r_obs
+        + n_rows * 8 // alphas (lazy; charged at materialized size)
+        + table_width.map_or(0, |w| n_rows * w * 4)
+}
+
+/// Heap bytes one artifact retains (the artifact half of the eviction
+/// weight).
 fn artifact_bytes(a: &NeighborArtifact) -> usize {
-    a.r_obs.len() * 8
-        + a.alphas.len() * 8
-        + a.neighbors.as_ref().map_or(0, |t| t.idx.len() * 4)
+    artifact_row_bytes(a.r_obs.len(), a.neighbors.as_ref().map(|t| t.width))
+}
+
+/// Approximate bytes per query→row index entry (two u64 key halves, a
+/// u32 row, and hash-map slot overhead).
+const ROW_INDEX_BYTES_PER_QUERY: usize = 24;
+
+/// One cached stage-1 product plus its subset-reuse row index.
+#[derive(Debug)]
+struct Entry {
+    key: CacheKey,
+    artifact: Arc<NeighborArtifact>,
+    /// Eviction weight (artifact buffers + row index), fixed at insert.
+    weight: usize,
+    /// Query coordinate bits → artifact row.  Duplicate coordinates in
+    /// the source raster collapse to one row, which is sound: stage-1
+    /// rows are per-query functions of the snapshot, so equal
+    /// coordinates hold bit-identical rows.
+    rows: HashMap<(u64, u64), u32>,
+}
+
+/// What a [`NeighborCache::lookup`] found.
+pub enum CacheOutcome {
+    /// Exact raster match: the cached artifact itself.
+    Hit(Arc<NeighborArtifact>),
+    /// A covering entry matched every query row: a freshly-gathered
+    /// subset artifact (the caller may re-insert it under its own key).
+    Subset(NeighborArtifact),
+    Miss,
+}
+
+/// Point-in-time cache statistics (protocol v2.3 metrics surface).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Entries currently resident (occupancy gauge).
+    pub entries: usize,
+    /// Approximate resident bytes (occupancy gauge).
+    pub bytes: usize,
+    /// Entries evicted by the LRU bounds since startup (purges excluded).
+    pub evictions: u64,
+    /// Artifact bytes served from the cache — `artifact_bytes` of the
+    /// served artifact (the cached one on exact hits, the gathered one
+    /// on subset hits); row-index overhead is excluded on both paths so
+    /// the two are directly comparable.
+    pub hit_bytes: u64,
 }
 
 #[derive(Debug, Default)]
 struct CacheState {
-    /// Front = most recently used.  Each entry carries its byte weight.
-    entries: VecDeque<(CacheKey, Arc<NeighborArtifact>, usize)>,
+    /// Front = most recently used.
+    entries: VecDeque<Entry>,
     bytes: usize,
+    evictions: u64,
+    hit_bytes: u64,
 }
 
 /// Bounded LRU of stage-1 artifacts, capped both by entry count and by
@@ -111,41 +211,110 @@ impl NeighborCache {
         self.capacity > 0
     }
 
-    /// Look up an artifact; a hit is promoted to most-recently-used.
-    pub fn get(&self, key: &CacheKey) -> Option<Arc<NeighborArtifact>> {
+    /// Look up an artifact for `key` / `queries` (the raster behind the
+    /// key's fingerprint).  An exact hit returns the cached artifact; a
+    /// subset hit gathers the covered rows out of a same-identity entry
+    /// (see module docs).  Either hit promotes the serving entry to
+    /// most-recently-used.
+    pub fn lookup(&self, key: &CacheKey, queries: &[(f64, f64)]) -> CacheOutcome {
         if self.capacity == 0 {
-            return None;
+            return CacheOutcome::Miss;
         }
         let mut st = self.inner.lock().unwrap();
-        let pos = st.entries.iter().position(|(k, _, _)| k == key)?;
-        let entry = st.entries.remove(pos).unwrap();
-        let art = entry.1.clone();
-        st.entries.push_front(entry);
-        Some(art)
+        if let Some(pos) = st.entries.iter().position(|e| e.key == *key) {
+            let entry = st.entries.remove(pos).unwrap();
+            let art = entry.artifact.clone();
+            st.hit_bytes += artifact_bytes(&art) as u64;
+            st.entries.push_front(entry);
+            return CacheOutcome::Hit(art);
+        }
+        if queries.is_empty() {
+            return CacheOutcome::Miss; // exact-key-only callers pass no raster
+        }
+        // subset pass: first same-identity entry covering every query row
+        let mut found: Option<(usize, Vec<u32>)> = None;
+        for (pos, entry) in st.entries.iter().enumerate() {
+            if !entry.key.same_identity(key) {
+                continue;
+            }
+            let mut rows = Vec::with_capacity(queries.len());
+            let covered = queries.iter().all(|&(x, y)| {
+                match entry.rows.get(&(x.to_bits(), y.to_bits())) {
+                    Some(&r) => {
+                        rows.push(r);
+                        true
+                    }
+                    None => false,
+                }
+            });
+            if covered {
+                found = Some((pos, rows));
+                break;
+            }
+        }
+        match found {
+            Some((pos, rows)) => {
+                let entry = st.entries.remove(pos).unwrap();
+                let art = entry.artifact.clone();
+                // charge the gathered artifact's bytes (known without
+                // building it — same formula as `artifact_bytes`)
+                let width = art.neighbors.as_ref().map(|t| t.width);
+                st.hit_bytes += artifact_row_bytes(rows.len(), width) as u64;
+                st.entries.push_front(entry);
+                // the row gather can be megabytes — run it off the lock
+                drop(st);
+                CacheOutcome::Subset(art.subset_rows(&rows))
+            }
+            None => CacheOutcome::Miss,
+        }
+    }
+
+    /// Exact-key lookup (tests and simple callers); a hit is promoted.
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<NeighborArtifact>> {
+        match self.lookup(key, &[]) {
+            CacheOutcome::Hit(art) => Some(art),
+            _ => None,
+        }
     }
 
     /// Insert (or refresh) an artifact, evicting least-recently-used
-    /// entries beyond the entry or byte bound.
-    pub fn put(&self, key: CacheKey, artifact: Arc<NeighborArtifact>) {
+    /// entries beyond the entry or byte bound.  `queries` must be the
+    /// raster the key's fingerprint was computed from; it seeds the
+    /// subset-reuse row index.
+    pub fn put(&self, key: CacheKey, queries: &[(f64, f64)], artifact: Arc<NeighborArtifact>) {
         if self.capacity == 0 {
             return;
         }
-        let weight = artifact_bytes(&artifact);
+        debug_assert_eq!(key.n_queries, queries.len(), "key/queries mismatch");
+        let art_bytes = artifact_bytes(&artifact);
+        if self.max_bytes > 0 && art_bytes > self.max_bytes {
+            return; // would evict everything and still bust the budget —
+                    // bail before building the O(n) row index
+        }
+        let rows: HashMap<(u64, u64), u32> = queries
+            .iter()
+            .enumerate()
+            .map(|(i, &(x, y))| ((x.to_bits(), y.to_bits()), i as u32))
+            .collect();
+        let weight = art_bytes + rows.len() * ROW_INDEX_BYTES_PER_QUERY;
         if self.max_bytes > 0 && weight > self.max_bytes {
-            return; // would evict everything and still bust the budget
+            return; // row-index overhead alone busts the budget
         }
         let mut st = self.inner.lock().unwrap();
-        if let Some(pos) = st.entries.iter().position(|(k, _, _)| *k == key) {
-            let (_, _, w) = st.entries.remove(pos).unwrap();
-            st.bytes -= w;
+        if let Some(pos) = st.entries.iter().position(|e| e.key == key) {
+            let old = st.entries.remove(pos).unwrap();
+            st.bytes -= old.weight;
         }
-        st.entries.push_front((key, artifact, weight));
+        st.entries.push_front(Entry { key, artifact, weight, rows });
         st.bytes += weight;
         while st.entries.len() > self.capacity
             || (self.max_bytes > 0 && st.bytes > self.max_bytes)
         {
             match st.entries.pop_back() {
-                Some((_, _, w)) => st.bytes -= w,
+                Some(victim) => {
+                    st.bytes -= victim.weight;
+                    st.evictions += 1;
+                }
                 None => break,
             }
         }
@@ -154,8 +323,8 @@ impl NeighborCache {
     /// Drop every entry of one dataset (register-over / drop paths).
     pub fn purge_dataset(&self, dataset: &str) {
         let mut st = self.inner.lock().unwrap();
-        st.entries.retain(|(k, _, _)| k.dataset != dataset);
-        st.bytes = st.entries.iter().map(|(_, _, w)| *w).sum();
+        st.entries.retain(|e| e.key.dataset != dataset);
+        st.bytes = st.entries.iter().map(|e| e.weight).sum();
     }
 
     /// Entries currently held (diagnostics).
@@ -171,31 +340,50 @@ impl NeighborCache {
     pub fn bytes(&self) -> usize {
         self.inner.lock().unwrap().bytes
     }
+
+    /// Occupancy gauges + eviction/hit-byte counters (protocol v2.3).
+    pub fn stats(&self) -> CacheStats {
+        let st = self.inner.lock().unwrap();
+        CacheStats {
+            entries: st.entries.len(),
+            bytes: st.bytes,
+            evictions: st.evictions,
+            hit_bytes: st.hit_bytes,
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::aidw::params::AidwParams;
+    use crate::aidw::plan::NeighborTable;
     use crate::coordinator::options::ResolvedOptions;
 
-    fn key(dataset: &str, epoch: u64, fp: u64) -> CacheKey {
+    fn key_for(dataset: &str, epoch: u64, overlay: u64, queries: &[(f64, f64)]) -> CacheKey {
         CacheKey {
             dataset: dataset.to_string(),
             epoch,
             instance: 7,
+            overlay,
             stage1: ResolvedOptions::default().stage1_key(),
-            queries_fp: (fp, fp ^ 0xABCD),
-            n_queries: 3,
+            queries_fp: query_fingerprint(queries),
+            n_queries: queries.len(),
         }
     }
 
-    fn artifact(tag: f64) -> Arc<NeighborArtifact> {
-        Arc::new(NeighborArtifact {
-            r_obs: vec![tag],
-            alphas: vec![tag],
-            neighbors: None,
-            stage1_s: 0.0,
-        })
+    fn raster(tag: u64, n: usize) -> Vec<(f64, f64)> {
+        (0..n).map(|i| (tag as f64 + i as f64, tag as f64 - i as f64)).collect()
+    }
+
+    fn artifact(tag: f64, n: usize) -> Arc<NeighborArtifact> {
+        Arc::new(NeighborArtifact::new(
+            vec![tag; n],
+            1.0,
+            AidwParams::default(),
+            None,
+            0.0,
+        ))
     }
 
     const NO_BYTE_CAP: usize = usize::MAX;
@@ -204,68 +392,134 @@ mod tests {
     fn lru_evicts_oldest_and_promotes_hits() {
         let c = NeighborCache::new(2, NO_BYTE_CAP);
         assert!(c.enabled());
-        c.put(key("d", 0, 1), artifact(1.0));
-        c.put(key("d", 0, 2), artifact(2.0));
+        let (q1, q2, q3) = (raster(1, 3), raster(2, 3), raster(3, 3));
+        c.put(key_for("d", 0, 0, &q1), &q1, artifact(1.0, 3));
+        c.put(key_for("d", 0, 0, &q2), &q2, artifact(2.0, 3));
         // touch entry 1 so entry 2 becomes the LRU victim
-        assert!(c.get(&key("d", 0, 1)).is_some());
-        c.put(key("d", 0, 3), artifact(3.0));
+        assert!(c.get(&key_for("d", 0, 0, &q1)).is_some());
+        c.put(key_for("d", 0, 0, &q3), &q3, artifact(3.0, 3));
         assert_eq!(c.len(), 2);
-        assert!(c.get(&key("d", 0, 2)).is_none(), "LRU evicted");
-        assert!(c.get(&key("d", 0, 1)).is_some());
-        assert!(c.get(&key("d", 0, 3)).is_some());
+        assert!(c.get(&key_for("d", 0, 0, &q2)).is_none(), "LRU evicted");
+        assert!(c.get(&key_for("d", 0, 0, &q1)).is_some());
+        assert!(c.get(&key_for("d", 0, 0, &q3)).is_some());
+        let stats = c.stats();
+        assert_eq!(stats.entries, 2);
+        assert_eq!(stats.evictions, 1, "the LRU victim counts as an eviction");
+        assert!(stats.hit_bytes > 0);
     }
 
     #[test]
-    fn epoch_and_dataset_separate_entries() {
+    fn epoch_overlay_and_dataset_separate_entries() {
         let c = NeighborCache::new(8, NO_BYTE_CAP);
-        c.put(key("d", 0, 1), artifact(1.0));
-        assert!(c.get(&key("d", 1, 1)).is_none(), "epoch mismatch misses");
-        assert!(c.get(&key("e", 0, 1)).is_none(), "dataset mismatch misses");
-        let hit = c.get(&key("d", 0, 1)).unwrap();
-        assert_eq!(hit.r_obs, vec![1.0]);
+        let q = raster(1, 2);
+        c.put(key_for("d", 0, 0, &q), &q, artifact(1.0, 2));
+        assert!(c.get(&key_for("d", 1, 0, &q)).is_none(), "epoch mismatch misses");
+        assert!(c.get(&key_for("d", 0, 1, &q)).is_none(), "overlay mismatch misses");
+        assert!(c.get(&key_for("e", 0, 0, &q)).is_none(), "dataset mismatch misses");
+        let hit = c.get(&key_for("d", 0, 0, &q)).unwrap();
+        assert_eq!(hit.r_obs, vec![1.0, 1.0]);
+        // mutated-snapshot (overlay > 0) entries cache and serve too
+        c.put(key_for("d", 0, 3, &q), &q, artifact(3.0, 2));
+        assert_eq!(c.get(&key_for("d", 0, 3, &q)).unwrap().r_obs, vec![3.0, 3.0]);
+        assert!(c.get(&key_for("d", 0, 4, &q)).is_none(), "next mutation retires it");
+    }
+
+    #[test]
+    fn subset_lookup_gathers_covered_rows() {
+        let c = NeighborCache::new(8, NO_BYTE_CAP);
+        let full = raster(5, 6);
+        let art = Arc::new(NeighborArtifact::new(
+            (0..6).map(|i| i as f64).collect(),
+            1.0,
+            AidwParams::default(),
+            Some(NeighborTable { idx: (0..12u32).collect(), width: 2 }),
+            0.0,
+        ));
+        c.put(key_for("d", 2, 4, &full), &full, art);
+        // a row subset in scrambled order hits via the covering entry
+        let sub = vec![full[4], full[1], full[4]];
+        match c.lookup(&key_for("d", 2, 4, &sub), &sub) {
+            CacheOutcome::Subset(got) => {
+                assert_eq!(got.r_obs, vec![4.0, 1.0, 4.0]);
+                let t = got.neighbors.unwrap();
+                assert_eq!(t.idx, vec![8, 9, 2, 3, 8, 9]);
+            }
+            _ => panic!("expected a subset hit"),
+        }
+        // identity must match: same rows at another overlay version miss
+        assert!(matches!(
+            c.lookup(&key_for("d", 2, 5, &sub), &sub),
+            CacheOutcome::Miss
+        ));
+        // a raster with any uncovered row misses
+        let stranger = vec![full[0], (999.0, 999.0)];
+        assert!(matches!(
+            c.lookup(&key_for("d", 2, 4, &stranger), &stranger),
+            CacheOutcome::Miss
+        ));
     }
 
     #[test]
     fn purge_and_disable() {
         let c = NeighborCache::new(4, NO_BYTE_CAP);
-        c.put(key("d", 0, 1), artifact(1.0));
-        c.put(key("e", 0, 1), artifact(2.0));
+        let q = raster(1, 1);
+        c.put(key_for("d", 0, 0, &q), &q, artifact(1.0, 1));
+        c.put(key_for("e", 0, 0, &q), &q, artifact(2.0, 1));
         assert!(c.bytes() > 0);
         c.purge_dataset("d");
-        assert!(c.get(&key("d", 0, 1)).is_none());
-        assert!(c.get(&key("e", 0, 1)).is_some());
+        assert!(c.get(&key_for("d", 0, 0, &q)).is_none());
+        assert!(c.get(&key_for("e", 0, 0, &q)).is_some());
         assert_eq!(c.len(), 1);
-        assert_eq!(c.bytes(), 16, "one 1-query artifact (r_obs + alphas)");
+        // one 1-query artifact: r_obs (8) + lazy alphas (8) + row index
+        assert_eq!(c.bytes(), 16 + ROW_INDEX_BYTES_PER_QUERY);
+        assert_eq!(c.stats().evictions, 0, "purges are not evictions");
 
         let off = NeighborCache::new(0, NO_BYTE_CAP);
         assert!(!off.enabled());
-        off.put(key("d", 0, 1), artifact(1.0));
-        assert!(off.get(&key("d", 0, 1)).is_none());
+        off.put(key_for("d", 0, 0, &q), &q, artifact(1.0, 1));
+        assert!(off.get(&key_for("d", 0, 0, &q)).is_none());
+        assert!(matches!(off.lookup(&key_for("d", 0, 0, &q), &q), CacheOutcome::Miss));
         assert!(off.is_empty());
     }
 
     #[test]
     fn byte_budget_bounds_memory() {
-        fn big(tag: f64, n: usize) -> Arc<NeighborArtifact> {
-            Arc::new(NeighborArtifact {
-                r_obs: vec![tag; n],
-                alphas: vec![tag; n],
-                neighbors: None,
-                stage1_s: 0.0,
-            })
+        // one 8-query artifact with a width-4 table, weighed truthfully:
+        // r_obs 64 + lazy alphas 64 + table 8*4*4=128 + row index 8*24=192
+        fn big(tag: f64) -> Arc<NeighborArtifact> {
+            Arc::new(NeighborArtifact::new(
+                vec![tag; 8],
+                1.0,
+                AidwParams::default(),
+                Some(NeighborTable { idx: vec![0; 32], width: 4 }),
+                0.0,
+            ))
         }
-        // each 8-query artifact weighs 8 * 16 = 128 bytes; budget = 2
-        let c = NeighborCache::new(64, 256);
-        c.put(key("d", 0, 1), big(1.0, 8));
-        c.put(key("d", 0, 2), big(2.0, 8));
-        assert_eq!((c.len(), c.bytes()), (2, 256));
-        c.put(key("d", 0, 3), big(3.0, 8));
-        assert_eq!((c.len(), c.bytes()), (2, 256), "byte budget evicts the LRU");
-        assert!(c.get(&key("d", 0, 1)).is_none());
-        assert!(c.get(&key("d", 0, 3)).is_some());
+        const W: usize = 64 + 64 + 128 + 8 * ROW_INDEX_BYTES_PER_QUERY;
+        let budget = 2 * W;
+        let c = NeighborCache::new(64, budget);
+        let (q1, q2, q3) = (raster(1, 8), raster(2, 8), raster(3, 8));
+        c.put(key_for("d", 0, 0, &q1), &q1, big(1.0));
+        assert_eq!(c.bytes(), W, "entry weight covers every retained buffer");
+        c.put(key_for("d", 0, 0, &q2), &q2, big(2.0));
+        assert_eq!((c.len(), c.bytes()), (2, budget));
+        c.put(key_for("d", 0, 0, &q3), &q3, big(3.0));
+        assert_eq!((c.len(), c.bytes()), (2, budget), "byte budget evicts the LRU");
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.get(&key_for("d", 0, 0, &q1)).is_none());
+        assert!(c.get(&key_for("d", 0, 0, &q3)).is_some());
+        // a full cache never exceeds max_bytes once an insert completes —
+        // even when the lazy alphas materialize only *after* insertion
+        // (their bytes were charged up front)
+        let hit = c.get(&key_for("d", 0, 0, &q2)).unwrap();
+        let _ = hit.alphas();
+        assert!(hit.alphas_materialized());
+        assert!(c.bytes() <= budget, "materializing alphas must not bust the budget");
+        assert_eq!(c.bytes(), budget, "alpha bytes were already accounted");
         // an artifact bigger than the whole budget is not cached at all
-        c.put(key("d", 0, 4), big(4.0, 1000));
-        assert!(c.get(&key("d", 0, 4)).is_none());
+        let huge = raster(4, 1000);
+        c.put(key_for("d", 0, 0, &huge), &huge, artifact(4.0, 1000));
+        assert!(c.get(&key_for("d", 0, 0, &huge)).is_none());
         assert_eq!(c.len(), 2, "oversized artifact left the cache untouched");
     }
 

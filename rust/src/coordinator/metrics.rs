@@ -66,8 +66,11 @@ pub struct Metrics {
     /// on an equal stage-1 key bump this once, not twice.
     pub stage1_execs: AtomicU64,
     /// Batches served straight from the [`super::cache::NeighborCache`]
-    /// (stage 1 skipped entirely).
+    /// (stage 1 skipped entirely) on an exact raster match.
     pub stage1_cache_hits: AtomicU64,
+    /// Batches served by gathering a row subset out of a covering cached
+    /// artifact (stage 1 equally skipped; per-query-row reuse).
+    pub stage1_subset_hits: AtomicU64,
     /// Stage-2 executions (one per distinct stage-2 key per batch).
     pub stage2_execs: AtomicU64,
     /// Batches whose jobs spanned more than one stage-2 variant — the
@@ -94,8 +97,15 @@ impl Metrics {
         self.interp_us.load(Ordering::Relaxed) as f64 / 1e6
     }
 
-    /// Plain-data snapshot for reporting.
+    /// Plain-data snapshot for reporting (cache gauges zeroed; the
+    /// coordinator composes them in via [`Metrics::snapshot_with`]).
     pub fn snapshot(&self) -> MetricsSnapshot {
+        self.snapshot_with(super::cache::CacheStats::default())
+    }
+
+    /// Snapshot with the neighbor-cache occupancy/eviction/hit-byte
+    /// gauges folded in (protocol v2.3 metrics surface).
+    pub fn snapshot_with(&self, cache: super::cache::CacheStats) -> MetricsSnapshot {
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             queries: self.queries.load(Ordering::Relaxed),
@@ -104,8 +114,13 @@ impl Metrics {
             errors: self.errors.load(Ordering::Relaxed),
             stage1_execs: self.stage1_execs.load(Ordering::Relaxed),
             stage1_cache_hits: self.stage1_cache_hits.load(Ordering::Relaxed),
+            stage1_subset_hits: self.stage1_subset_hits.load(Ordering::Relaxed),
             stage2_execs: self.stage2_execs.load(Ordering::Relaxed),
             coalesced_batches: self.coalesced_batches.load(Ordering::Relaxed),
+            cache_entries: cache.entries as u64,
+            cache_bytes: cache.bytes as u64,
+            cache_evictions: cache.evictions,
+            cache_hit_bytes: cache.hit_bytes,
             knn_s: self.knn_seconds(),
             interp_s: self.interp_seconds(),
             mean_latency_s: self.latency.mean_s(),
@@ -124,12 +139,22 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     /// Planner stage-1 executions (cache misses).
     pub stage1_execs: u64,
-    /// Batches served from the neighbor cache.
+    /// Batches served from the neighbor cache (exact raster match).
     pub stage1_cache_hits: u64,
+    /// Batches served by subset row-gather out of a cached artifact.
+    pub stage1_subset_hits: u64,
     /// Planner stage-2 executions (>= batches when variants coalesce).
     pub stage2_execs: u64,
     /// Batches that coalesced more than one stage-2 variant.
     pub coalesced_batches: u64,
+    /// Neighbor-cache occupancy: resident entries (gauge, v2.3).
+    pub cache_entries: u64,
+    /// Neighbor-cache occupancy: approximate resident bytes (gauge, v2.3).
+    pub cache_bytes: u64,
+    /// Entries evicted by the LRU bounds since startup (v2.3).
+    pub cache_evictions: u64,
+    /// Artifact bytes served from the cache since startup (v2.3).
+    pub cache_hit_bytes: u64,
     pub knn_s: f64,
     pub interp_s: f64,
     pub mean_latency_s: f64,

@@ -34,12 +34,15 @@
 //!   once, and stage 2 executes once per distinct variant group over that
 //!   group's query rows.
 //! * **Reuse**: the [`cache::NeighborCache`] holds recent artifacts keyed
-//!   on `(dataset, epoch, stage1_key, query fingerprint)`, so a repeated
-//!   raster on an unmutated dataset skips stage 1 entirely.  Cache
-//!   invalidation rules live in [`cache`]: mutated snapshots are never
-//!   cached (any append/remove implicitly invalidates), compaction bumps
-//!   the epoch out from under stale entries, and register/drop purge by
-//!   name.
+//!   on `(dataset, epoch, overlay version, stage1_key, query
+//!   fingerprint)`, so a repeated raster skips stage 1 entirely — on
+//!   mutated (uncompacted) snapshots too: every append/remove bumps the
+//!   overlay version, which retires stale artifacts by key instead of
+//!   bypassing the cache.  A raster whose rows are covered by a cached
+//!   artifact of the same snapshot is served by row-gather (subset
+//!   reuse).  Invalidation rules live in [`cache`]: mutation bumps the
+//!   overlay version, compaction bumps the epoch, and register/drop
+//!   purge by name.
 //!
 //! Responses echo each job's *own* resolved options (the batch may mix
 //! variants) plus the planner's coalescing/cache facts
@@ -416,12 +419,16 @@ impl Coordinator {
         // resolve per-request options against config defaults and validate
         let mut resolved = request.options.resolve(&self.shared.config);
         resolved.validate()?;
-        // stamp the dataset's current epoch into the admission key: jobs
-        // admitted against different epochs never share a batch, and the
-        // response echo reports the epoch a batch was served from.
-        // (Local weighting on a mutated dataset is served by the merged
-        // per-id gather — the PR-2 rejection is gone.)
-        resolved.epoch = Some(live.epoch());
+        // stamp the dataset's current (epoch, overlay version) pair into
+        // the admission key — read from one snapshot, so the pair is
+        // consistent: jobs admitted against different epochs *or* across
+        // a mutation never share a batch, and the response echo reports
+        // the pair a batch was served from.  (Local weighting on a
+        // mutated dataset is served by the merged per-id gather — the
+        // PR-2 rejection is gone.)
+        let snap = live.snapshot();
+        resolved.epoch = Some(snap.epoch);
+        resolved.overlay = Some(snap.overlay_version());
         let n_queries = request.queries.len() as u64;
         let (tx, rx) = mpsc::channel();
         let job = Job {
@@ -480,9 +487,9 @@ impl Coordinator {
         Ok(count)
     }
 
-    /// Metrics snapshot.
+    /// Metrics snapshot (planner counters + neighbor-cache occupancy).
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.shared.metrics.snapshot()
+        self.shared.metrics.snapshot_with(self.shared.cache.stats())
     }
 
     /// Current queue depth (diagnostics / backpressure observers).
@@ -555,17 +562,20 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
             search,
         );
 
-        // Neighbor reuse: compacted snapshots only (see cache.rs for the
-        // invalidation rules).  The key's stage-1 epoch is normalized to
-        // the snapshot actually served, so a compaction publishing
-        // between admission and formation cannot split cache identity.
-        let cache_key = if shared.cache.enabled() && snap.is_compacted() {
+        // Neighbor reuse on every snapshot, mutated or compacted (see
+        // cache.rs for the key and invalidation rules): the key's stage-1
+        // (epoch, overlay) pair is normalized to the snapshot actually
+        // served, so a compaction or mutation publishing between
+        // admission and formation cannot split cache identity.
+        let cache_key = if shared.cache.enabled() {
             let mut s1 = opts.stage1_key();
             s1.epoch = Some(snap.epoch);
+            s1.overlay = Some(snap.overlay_version());
             Some(CacheKey {
                 dataset: batch.dataset.clone(),
                 epoch: snap.epoch,
                 instance: snap.base.uid,
+                overlay: snap.overlay_version(),
                 stage1: s1,
                 queries_fp: cache::query_fingerprint(&queries),
                 n_queries: queries.len(),
@@ -573,12 +583,27 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
         } else {
             None
         };
-        let (artifact, cache_hit) = match cache_key.as_ref().and_then(|k| shared.cache.get(k)) {
-            Some(art) => {
+        let outcome = match cache_key.as_ref() {
+            Some(k) => shared.cache.lookup(k, &queries),
+            None => cache::CacheOutcome::Miss,
+        };
+        let (artifact, cache_hit) = match outcome {
+            cache::CacheOutcome::Hit(art) => {
                 shared.metrics.stage1_cache_hits.fetch_add(1, Ordering::Relaxed);
                 (art, true)
             }
-            None => {
+            cache::CacheOutcome::Subset(sub) => {
+                // a covering artifact served this raster's rows: no kNN
+                // sweep ran; re-insert under the exact key so repeats of
+                // this raster hit directly
+                shared.metrics.stage1_subset_hits.fetch_add(1, Ordering::Relaxed);
+                let art = Arc::new(sub);
+                if let Some(key) = cache_key {
+                    shared.cache.put(key, &queries, art.clone());
+                }
+                (art, true)
+            }
+            cache::CacheOutcome::Miss => {
                 let art = Arc::new(match search {
                     SearchKind::Grid => {
                         stage1.execute_grid(&shared.pool, &snap.base.grid, &queries)
@@ -589,7 +614,7 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
                 });
                 shared.metrics.stage1_execs.fetch_add(1, Ordering::Relaxed);
                 if let Some(key) = cache_key {
-                    shared.cache.put(key, art.clone());
+                    shared.cache.put(key, &queries, art.clone());
                 }
                 (art, false)
             }
@@ -688,6 +713,17 @@ fn run_stage2(shared: &Shared, engine: &Option<Engine>, sj: &Stage2Job) -> Resul
     let params = effective_params(opts, &sj.snap);
     let groups = sj.batch.stage2_groups();
 
+    // Lazy alphas: the PJRT stage 2 recomputes alpha on-device from
+    // r_obs, so only the CPU consumers — merged (mutated-snapshot)
+    // batches and the pure-rust fallback — materialize the vector.  The
+    // materialization is alpha work, i.e. stage-1-attributed time; a
+    // cache-hit artifact returns its already-materialized vector for
+    // free.
+    let needs_alphas = !sj.snap.is_compacted() || engine.is_none();
+    let t_alpha = std::time::Instant::now();
+    let alphas: &[f64] = if needs_alphas { art.alphas() } else { &[] };
+    let lazy_alpha_s = if needs_alphas { t_alpha.elapsed().as_secs_f64() } else { 0.0 };
+
     // fast path (the overwhelmingly common single-variant batch): the
     // one group *is* the whole contiguous block — execute over borrowed
     // slices of the artifact, no gather/scatter copies
@@ -699,11 +735,16 @@ fn run_stage2(shared: &Shared, engine: &Option<Engine>, sj: &Stage2Job) -> Resul
             &params,
             groups[0].0,
             &sj.queries,
-            &art.alphas,
+            alphas,
             &art.r_obs,
             art.neighbors.as_ref(),
         )?;
-        return Ok(Stage2Outcome { values, alpha_extra_s, interp_s, groups: 1 });
+        return Ok(Stage2Outcome {
+            values,
+            alpha_extra_s: alpha_extra_s + lazy_alpha_s,
+            interp_s,
+            groups: 1,
+        });
     }
 
     // per-job row offsets into the concatenated query block
@@ -715,7 +756,7 @@ fn run_stage2(shared: &Shared, engine: &Option<Engine>, sj: &Stage2Job) -> Resul
     }
 
     let mut values = vec![0f64; sj.queries.len()];
-    let mut alpha_extra_s = 0.0f64;
+    let mut alpha_extra_s = lazy_alpha_s;
     let mut interp_s = 0.0f64;
 
     for (key, members) in &groups {
@@ -726,13 +767,15 @@ fn run_stage2(shared: &Shared, engine: &Option<Engine>, sj: &Stage2Job) -> Resul
             .map(|&m| sj.batch.jobs[m].request.queries.len())
             .sum();
         let mut g_queries = Vec::with_capacity(rows);
-        let mut g_alphas = Vec::with_capacity(rows);
+        let mut g_alphas = Vec::with_capacity(if needs_alphas { rows } else { 0 });
         let mut g_robs = Vec::with_capacity(rows);
         for &m in members {
             let start = offsets[m];
             let len = sj.batch.jobs[m].request.queries.len();
             g_queries.extend_from_slice(&sj.queries[start..start + len]);
-            g_alphas.extend_from_slice(&art.alphas[start..start + len]);
+            if needs_alphas {
+                g_alphas.extend_from_slice(&alphas[start..start + len]);
+            }
             g_robs.extend_from_slice(&art.r_obs[start..start + len]);
         }
         let g_table = art.neighbors.as_ref().map(|t| {
@@ -850,11 +893,13 @@ fn respond_batch(shared: &Shared, sj: Stage2Job, out: Stage2Outcome, knn_s: f64,
         let mut echoed = job.resolved;
         echoed.area = Some(echoed.area.unwrap_or_else(|| sj.snap.area()));
         // the audit record reports what ran: k is clamped to the live
-        // count, and the epoch is the snapshot the batch was served from
-        // (it may be newer than the admission epoch if a compaction
-        // published in between — still one single epoch for the batch)
+        // count, and the (epoch, overlay) pair is the snapshot the batch
+        // was served from (it may be newer than the admission pair if a
+        // compaction or mutation published in between — still one single
+        // snapshot for the batch)
         echoed.k = echoed.k.min(sj.snap.live_len).max(1);
         echoed.epoch = Some(sj.snap.epoch);
+        echoed.overlay = Some(sj.snap.overlay_version());
         shared
             .metrics
             .latency

@@ -143,6 +143,7 @@ impl QueryOptions {
             r_max: self.r_max.unwrap_or(config.params.r_max),
             area: self.area.or(config.params.area),
             epoch: None,
+            overlay: None,
         }
     }
 }
@@ -179,6 +180,16 @@ pub struct ResolvedOptions {
     /// reports the epoch the batch was actually served from.  `None` for
     /// execution paths without epoch semantics (in-process sessions).
     pub epoch: Option<u64>,
+    /// The dataset's overlay version at admission — **server assigned**
+    /// like `epoch` (never client settable).  Bumped by every
+    /// append/remove and reset by compaction, it completes the mutation
+    /// half of stage-1 identity: jobs admitted across a mutation never
+    /// share a batch, and cached artifacts are keyed on it, so a mutated
+    /// (uncompacted) snapshot serves from the `NeighborCache` exactly
+    /// until the next mutation.  The response echo reports the overlay
+    /// version the batch was actually served from.  `None` for paths
+    /// without live-mutation semantics (in-process sessions).
+    pub overlay: Option<u64>,
 }
 
 impl Default for ResolvedOptions {
@@ -194,6 +205,7 @@ impl Default for ResolvedOptions {
             r_max: p.r_max,
             area: None,
             epoch: None,
+            overlay: None,
         }
     }
 }
@@ -221,6 +233,10 @@ pub struct Stage1Key {
     /// The admission epoch: stage-1 products from different epochs of a
     /// live dataset never mix.
     pub epoch: Option<u64>,
+    /// The admission overlay version: stage-1 products from different
+    /// overlay states of one epoch never mix either — this is what lets
+    /// mutated-snapshot artifacts be cached at all.
+    pub overlay: Option<u64>,
 }
 
 /// The **stage-2 execution key**: what remains once the neighbor artifact
@@ -245,6 +261,7 @@ impl ResolvedOptions {
             r_max: self.r_max,
             area: self.area,
             epoch: self.epoch,
+            overlay: self.overlay,
         }
     }
 
@@ -378,9 +395,15 @@ mod tests {
         let e0 = ResolvedOptions { epoch: Some(0), ..inherited };
         let e1 = ResolvedOptions { epoch: Some(1), ..inherited };
         assert_ne!(e0.stage1_key(), e1.stage1_key());
-        // client-side resolution never assigns an epoch; the coordinator
-        // stamps it at submit time
+        // same for the overlay version: jobs admitted before and after a
+        // mutation never share a batch (or a cached artifact)
+        let v0 = ResolvedOptions { overlay: Some(0), ..inherited };
+        let v1 = ResolvedOptions { overlay: Some(1), ..inherited };
+        assert_ne!(v0.stage1_key(), v1.stage1_key());
+        // client-side resolution never assigns epoch or overlay; the
+        // coordinator stamps both at submit time
         assert_eq!(inherited.epoch, None);
+        assert_eq!(inherited.overlay, None);
     }
 
     #[test]
@@ -402,6 +425,7 @@ mod tests {
             ResolvedOptions { r_max: 3.0, ..base },
             ResolvedOptions { area: Some(7.0), ..base },
             ResolvedOptions { epoch: Some(1), ..base },
+            ResolvedOptions { overlay: Some(1), ..base },
         ] {
             assert_ne!(other.stage1_key(), base.stage1_key(), "{other:?}");
             assert_eq!(other.stage2_key(), base.stage2_key());

@@ -71,7 +71,11 @@ pub struct InterpolationResponse {
     /// audit record: config defaults substituted, dataset area filled in).
     pub options: ResolvedOptions,
     /// True when the batch was served from the coordinator's
-    /// `NeighborCache` (stage 1 skipped entirely; protocol v2.2).
+    /// `NeighborCache` (stage 1 skipped entirely; protocol v2.2) —
+    /// either an exact raster match or a subset row-gather out of a
+    /// covering cached artifact (v2.3; the metrics counters distinguish
+    /// the two).  Mutated (uncompacted) snapshots hit too: the cache is
+    /// keyed on the overlay version.
     pub stage1_cache_hit: bool,
     /// How many stage-2 executions the batch split into — more than 1
     /// means this request's kNN sweep was coalesced with jobs carrying a

@@ -20,6 +20,12 @@
 //!
 //! Delta candidates are inserted **before** ring expansion so the k-th
 //! distance bound is tight from the first ring.
+//!
+//! Stage-1 products built from a merged search are **cacheable**: the
+//! coordinator's `NeighborCache` keys them on the snapshot's overlay
+//! version (every append/remove bumps it), so a repeated raster on a
+//! mutated dataset reuses the merged sweep instead of re-running it —
+//! the exact pathology fast kNN search exists to avoid.
 
 use std::collections::HashSet;
 

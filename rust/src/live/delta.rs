@@ -28,6 +28,14 @@ pub enum LiveLocation {
 /// Appended points + tombstones layered over an immutable epoch base.
 #[derive(Debug, Clone, Default)]
 pub struct DeltaOverlay {
+    /// Monotonic overlay version within the epoch: bumped by every
+    /// append/remove (each builds a new overlay, so equal `(epoch,
+    /// version)` implies the identical overlay state), reset by
+    /// compaction (to the carried-mutation count of the fresh overlay).
+    /// This is the mutation half of the stage-1 cache identity: artifacts
+    /// computed over a mutated snapshot stay valid exactly until the next
+    /// mutation, and the version bump is what retires them.
+    pub version: u64,
     /// Appended points, in append order (append-only within an epoch).
     pub points: PointSet,
     /// Stable id of each appended point (strictly ascending).
@@ -68,6 +76,7 @@ impl DeltaOverlay {
     pub fn with_appends(&self, pts: &PointSet, ids: &[u64]) -> DeltaOverlay {
         assert_eq!(pts.len(), ids.len(), "points/ids length mismatch");
         let mut next = self.clone();
+        next.version += 1;
         for i in 0..pts.len() {
             next.points.push(pts.xs[i], pts.ys[i], pts.zs[i]);
             next.ids.push(ids[i]);
@@ -80,6 +89,7 @@ impl DeltaOverlay {
     /// current snapshot.
     pub fn with_removals(&self, removals: &[(u64, LiveLocation)]) -> DeltaOverlay {
         let mut next = self.clone();
+        next.version += 1;
         for &(id, loc) in removals {
             next.tombstones.insert(id);
             match loc {
@@ -129,6 +139,20 @@ mod tests {
         assert!(!b.delta_live(1));
         assert!(b.delta_live(0));
         assert_eq!(b.pressure(), 6);
+    }
+
+    #[test]
+    fn every_mutation_bumps_the_version() {
+        let base = DeltaOverlay::default();
+        assert_eq!(base.version, 0);
+        let pts = workload::uniform_square(2, 10.0, 3);
+        let a = base.with_appends(&pts, &[10, 11]);
+        assert_eq!(a.version, 1);
+        let b = a.with_removals(&[(10, LiveLocation::Delta(0))]);
+        assert_eq!(b.version, 2);
+        let c = b.with_appends(&pts, &[12, 13]);
+        assert_eq!(c.version, 3);
+        assert_eq!(base.version, 0, "copy-on-write: originals keep their version");
     }
 
     #[test]

@@ -43,9 +43,13 @@
 //! per-dataset WAL *before* it is applied in memory, and compaction
 //! truncates the WAL only after the rebuilt snapshot has been published
 //! by atomic rename ([`wal`] documents the formats and the idempotent
-//! replay that makes the publish sequence crash-safe).  Restart =
-//! snapshot load + WAL replay; the kill-and-restart integration test pins
-//! the result down bit-for-bit against a fresh build of the merged set.
+//! replay that makes the publish sequence crash-safe).  Multi-record WAL
+//! writes (the compactor re-logging a carried overlay) are
+//! **group-committed** — all records of one logical commit in a single
+//! `write_all`, then at most one `sync_data` — so `wal_sync` costs one
+//! fsync per commit, not one per record.  Restart = snapshot load + WAL
+//! replay; the kill-and-restart integration test pins the result down
+//! bit-for-bit against a fresh build of the merged set.
 
 pub mod delta;
 pub mod registry;
@@ -120,6 +124,15 @@ impl LiveSnapshot {
     /// ring rule).
     pub fn is_compacted(&self) -> bool {
         self.delta.is_empty()
+    }
+
+    /// The overlay version this snapshot was published at — the mutation
+    /// half of stage-1 cache identity: `(epoch, overlay_version)` names
+    /// exactly one overlay state, so artifacts keyed on the pair stay
+    /// servable until the next append/remove bumps the version (or a
+    /// compaction bumps the epoch).
+    pub fn overlay_version(&self) -> u64 {
+        self.delta.version
     }
 
     /// The effective Eq.-2 study-region area of the live set (mirrors
@@ -725,10 +738,18 @@ impl LiveDataset {
                 delta.delta_dead.insert(pos);
             }
         }
+        // the carried overlay is a fresh chain head: its version must be
+        // non-zero exactly when it carries mutations, so a post-publish
+        // snapshot with racing mutations can never collide with the
+        // compacted (version 0) identity of the same epoch
+        delta.version = (delta.points.len() + carried_tombs.len()) as u64;
         // reset the WAL to exactly the carried overlay: one append record
         // per contiguous id run (runs are whole append batches in
-        // practice, but replayed WALs may carry gaps)
+        // practice, but replayed WALs may carry gaps).  The records are
+        // group-committed — one write, one fsync — instead of paying a
+        // `sync_data` per record under `wal_sync`.
         if let Some(staged) = staged_wal.as_mut() {
+            let mut carried_records = Vec::new();
             let mut run_start = 0usize;
             for p in 0..=delta.points.len() {
                 let run_ends = p == delta.points.len()
@@ -739,17 +760,18 @@ impl LiveDataset {
                         for q in run_start..p {
                             pts.push(delta.points.xs[q], delta.points.ys[q], delta.points.zs[q]);
                         }
-                        staged.append(&WalRecord::Append {
+                        carried_records.push(WalRecord::Append {
                             first_id: delta.ids[run_start],
                             points: pts,
-                        })?;
+                        });
                     }
                     run_start = p;
                 }
             }
             if !carried_tombs.is_empty() {
-                staged.append(&WalRecord::Remove { ids: carried_tombs.clone() })?;
+                carried_records.push(WalRecord::Remove { ids: carried_tombs.clone() });
             }
+            staged.append_batch(&carried_records)?;
         }
         if let Some(staged) = staged_wal.take() {
             *self.wal.lock().unwrap() = Some(staged.publish()?);
@@ -1102,6 +1124,63 @@ mod tests {
         // ids remain stable: removing a pre-compaction id still works
         ds.remove(&[10]).unwrap();
         assert!(ds.remove(&[3]).is_err(), "id folded away stays dead");
+    }
+
+    #[test]
+    fn overlay_version_tracks_mutations_and_resets_at_compaction() {
+        let ds = build_mem(120, 840);
+        assert_eq!(ds.snapshot().overlay_version(), 0);
+        ds.append(&workload::uniform_square(6, 50.0, 841)).unwrap();
+        assert_eq!(ds.snapshot().overlay_version(), 1);
+        ds.remove(&[3]).unwrap();
+        assert_eq!(ds.snapshot().overlay_version(), 2);
+        ds.append(&workload::uniform_square(2, 50.0, 842)).unwrap();
+        assert_eq!(ds.snapshot().overlay_version(), 3);
+        // full fold: the fresh overlay carries nothing -> version 0
+        ds.compact_now().unwrap();
+        let snap = ds.snapshot();
+        assert_eq!((snap.epoch, snap.overlay_version()), (1, 0));
+        assert!(snap.is_compacted());
+        // a failed (strict) remove publishes nothing: version unchanged
+        assert!(ds.remove(&[3]).is_err());
+        assert_eq!(ds.snapshot().overlay_version(), 0);
+    }
+
+    #[test]
+    fn carried_mutations_keep_a_nonzero_overlay_version() {
+        // mutations racing a compaction survive in the fresh overlay; its
+        // published version must be non-zero so the post-publish mutated
+        // state can never alias the compacted (version 0) cache identity
+        // of the same epoch.  The writer keeps bumping the version after
+        // the publish, so the observable invariant is a lower bound.
+        let ds = Arc::new(build_mem(200, 845));
+        ds.append(&workload::uniform_square(10, 50.0, 846)).unwrap();
+        let writer = {
+            let ds = ds.clone();
+            std::thread::spawn(move || {
+                for i in 0..20 {
+                    ds.append(&workload::uniform_square(3, 50.0, 900 + i)).unwrap();
+                }
+            })
+        };
+        for _ in 0..10 {
+            let rep = ds.compact_now().unwrap();
+            let carried = (rep.carried_appends + rep.carried_tombstones) as u64;
+            if carried > 0 {
+                let snap = ds.snapshot();
+                assert!(
+                    snap.overlay_version() >= carried,
+                    "carried overlay published version 0 ({} carried)",
+                    carried
+                );
+            }
+        }
+        writer.join().unwrap();
+        ds.compact_now().unwrap();
+        // regardless of interleavings, a fully-folded overlay is version 0
+        let snap = ds.snapshot();
+        assert!(snap.is_compacted());
+        assert_eq!(snap.overlay_version(), 0);
     }
 
     #[test]

@@ -20,9 +20,13 @@
 //! records the new snapshot already folded in.  A torn tail (crash mid
 //! `write`) is detected and truncated on reopen, never propagated.
 //!
-//! Writers are unbuffered — one `write_all` per record — and optionally
-//! `sync_data` each record (`wal_sync`); without sync a flushed record
-//! still survives any process kill short of an OS/power failure.
+//! Writers are unbuffered — one `write_all` per commit — and optionally
+//! `sync_data` each commit (`wal_sync`); without sync a flushed record
+//! still survives any process kill short of an OS/power failure.  A
+//! commit is one [`Wal::append`] (single record) or one
+//! [`Wal::append_batch`] **group commit** (all records of one logical
+//! mutation written together, then one fsync — the ingest-heavy path's
+//! answer to per-record `sync_data` cost).
 
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
@@ -255,12 +259,10 @@ impl Wal {
 
     /// Atomically replace the WAL at `path` with a fresh one pre-seeded
     /// with `records` (the compactor re-logs the surviving overlay here),
-    /// returning the open handle.
+    /// returning the open handle.  The seed records are group-committed.
     pub fn write_fresh(path: &Path, records: &[WalRecord], sync: bool) -> Result<Wal> {
         let mut staged = StagedWal::stage(path, sync)?;
-        for rec in records {
-            staged.append(rec)?;
-        }
+        staged.append_batch(records)?;
         staged.publish()
     }
 
@@ -285,16 +287,33 @@ impl Wal {
     /// Durably append one record: a single `write_all`, plus `sync_data`
     /// when the WAL runs in sync mode.
     pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
-        let (tag, payload) = encode(rec);
-        let mut buf = Vec::with_capacity(9 + payload.len());
-        buf.push(tag);
-        buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-        buf.extend_from_slice(&payload);
+        self.append_batch(std::slice::from_ref(rec))
+    }
+
+    /// **Group commit**: durably append every record of one logical
+    /// commit with a single `write_all` and at most one `sync_data` —
+    /// under `wal_sync`, an N-record commit costs one fsync instead of N.
+    /// The on-disk bytes are identical to N sequential [`Wal::append`]
+    /// calls (each record keeps its own frame, so a torn tail still
+    /// truncates at a record boundary on replay).  An empty batch is a
+    /// no-op (no write, no fsync).
+    pub fn append_batch(&mut self, recs: &[WalRecord]) -> Result<()> {
+        if recs.is_empty() {
+            return Ok(());
+        }
+        let mut buf = Vec::new();
+        for rec in recs {
+            let (tag, payload) = encode(rec);
+            buf.reserve(9 + payload.len());
+            buf.push(tag);
+            buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            buf.extend_from_slice(&payload);
+        }
         self.file.write_all(&buf)?;
         if self.sync {
             self.file.sync_data()?;
         }
-        self.records += 1;
+        self.records += recs.len() as u64;
         Ok(())
     }
 }
@@ -321,6 +340,12 @@ impl StagedWal {
     /// Append a record to the staged (unpublished) file.
     pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
         self.wal.append(rec)
+    }
+
+    /// Group-commit a batch of records to the staged file (one write, at
+    /// most one fsync — see [`Wal::append_batch`]).
+    pub fn append_batch(&mut self, recs: &[WalRecord]) -> Result<()> {
+        self.wal.append_batch(recs)
     }
 
     /// Atomically publish over the destination, returning the open,
@@ -521,6 +546,58 @@ mod tests {
         assert_eq!(again.records.len(), 2);
         assert_eq!(again.records[1], WalRecord::Remove { ids: vec![7] });
         assert_eq!(clean.records.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn group_commit_is_byte_identical_to_per_record_appends() {
+        // the group-commit regression: a batched commit must leave the
+        // exact bytes N sequential appends leave, so replay after the
+        // batched commit is identical to replay after per-record commits
+        let dir = tmpdir("group");
+        let pts_a = workload::uniform_square(6, 10.0, 604);
+        let pts_b = workload::uniform_square(3, 10.0, 605);
+        let records = vec![
+            WalRecord::Append { first_id: 10, points: pts_a },
+            WalRecord::Remove { ids: vec![2, 11] },
+            WalRecord::Append { first_id: 16, points: pts_b },
+            WalRecord::Remove { ids: vec![16] },
+        ];
+        let one_by_one = wal_path(&dir, "single");
+        {
+            let mut wal = Wal::create(&one_by_one, true).unwrap();
+            for rec in &records {
+                wal.append(rec).unwrap();
+            }
+            assert_eq!(wal.records(), 4);
+        }
+        let batched = wal_path(&dir, "batched");
+        {
+            let mut wal = Wal::create(&batched, true).unwrap();
+            wal.append_batch(&records).unwrap();
+            assert_eq!(wal.records(), 4);
+            wal.append_batch(&[]).unwrap(); // empty commit is a no-op
+            assert_eq!(wal.records(), 4);
+        }
+        assert_eq!(
+            std::fs::read(&one_by_one).unwrap(),
+            std::fs::read(&batched).unwrap(),
+            "group commit must not change the on-disk format"
+        );
+        let back = read_wal(&batched).unwrap();
+        assert!(!back.torn);
+        assert_eq!(back.records, records, "replay after the batched commit is identical");
+        // a tear inside the batch still truncates at a record boundary
+        let full = std::fs::metadata(&batched).unwrap().len();
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&batched)
+            .unwrap()
+            .set_len(full - 5)
+            .unwrap();
+        let torn = read_wal(&batched).unwrap();
+        assert!(torn.torn);
+        assert_eq!(torn.records, records[..3], "only the torn last record is dropped");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,7 +1,7 @@
 //! `aidw` — CLI for the AIDW interpolation service.
 //!
 //! Subcommands:
-//!   serve        start the TCP JSON service (protocol v2.2)
+//!   serve        start the TCP JSON service (protocol v2.3)
 //!   interpolate  one-shot interpolation over a generated/loaded workload
 //!   mutate       append/remove/compact/stat against a running service
 //!   bench        run the perf suite, emit BENCH_aidw.json
@@ -198,7 +198,10 @@ fn serve(args: &Args) -> Result<()> {
     };
     let server = Server::start(coord, &addr)?;
     println!("listening on {}", server.addr());
-    println!("protocol v2.2: newline-delimited JSON; see rust/src/service/protocol.rs");
+    println!(
+        "protocol v{}: newline-delimited JSON; see rust/src/service/protocol.rs",
+        aidw::service::protocol::PROTOCOL_VERSION
+    );
     // serve until killed
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -311,6 +314,14 @@ fn bench(args: &Args) -> Result<()> {
         planner.push(aidw::benchsuite::measure_planner(n, &opts, threads)?);
     }
 
+    // mutated-dataset cache suite: repeated rasters on an uncompacted
+    // snapshot must ride the overlay-versioned neighbor cache
+    let mut live_cache = Vec::with_capacity(sizes.len());
+    for &n in &sizes {
+        println!("  live-cache n = {} ...", aidw::benchsuite::size_label(n));
+        live_cache.push(aidw::benchsuite::measure_live_cache(n, &opts, threads)?);
+    }
+
     let artifact_dir = aidw::runtime::default_artifact_dir();
     let doc = if artifact_dir.join("manifest.json").exists() {
         println!("bench: PJRT artifacts found — full five-version suite");
@@ -320,7 +331,7 @@ fn bench(args: &Args) -> Result<()> {
             println!("  measuring n = {} ...", aidw::benchsuite::size_label(n));
             results.push(aidw::benchsuite::measure_size(&engine, &pool, n, &opts)?);
         }
-        aidw::benchsuite::pjrt_bench_json(&results, &planner, pool.threads(), seed)
+        aidw::benchsuite::pjrt_bench_json(&results, &planner, &live_cache, pool.threads(), seed)
     } else {
         println!("bench: no artifacts — CPU suite (serial + improved pipeline)");
         let mut results = Vec::with_capacity(sizes.len());
@@ -328,7 +339,7 @@ fn bench(args: &Args) -> Result<()> {
             println!("  measuring n = {} ...", aidw::benchsuite::size_label(n));
             results.push(aidw::benchsuite::measure_size_cpu(&pool, n, &opts));
         }
-        aidw::benchsuite::cpu_bench_json(&results, &planner, pool.threads(), seed)
+        aidw::benchsuite::cpu_bench_json(&results, &planner, &live_cache, pool.threads(), seed)
     };
     std::fs::write(&out_path, doc.to_string() + "\n")?;
     println!("wrote {out_path}");

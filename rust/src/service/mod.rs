@@ -1,4 +1,4 @@
-//! TCP interpolation service: newline-delimited JSON (protocol v2.2, see
+//! TCP interpolation service: newline-delimited JSON (protocol v2.3, see
 //! [`protocol`]) over a [`crate::coordinator::Coordinator`], plus the
 //! matching blocking client.
 //!
@@ -177,7 +177,8 @@ pub struct InterpolationReply {
     pub interp_s: f64,
     pub batch_queries: usize,
     /// v2.2: served from the server's stage-1 neighbor cache (false when
-    /// talking to an older server).
+    /// talking to an older server).  Since v2.3 this is true on mutated
+    /// snapshots and subset row-gathers too.
     pub cache_hit: bool,
     /// v2.2: stage-2 variant groups the batch split into (0 when talking
     /// to an older server).

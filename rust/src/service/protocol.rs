@@ -1,4 +1,4 @@
-//! Wire protocol **v2.2**: newline-delimited JSON over TCP.
+//! Wire protocol **v2.3**: newline-delimited JSON over TCP.
 //!
 //! Requests:
 //! ```json
@@ -16,6 +16,21 @@
 //! {"op":"datasets"}
 //! {"op":"metrics"}
 //! ```
+//!
+//! **v2.3 additions** (overlay-versioned neighbor caching, strictly
+//! additive over v2.2):
+//!
+//! * `metrics` responses add the neighbor-cache counters
+//!   `stage1_subset_hits` (rasters served by subset row-gather out of a
+//!   covering cached artifact), `cache_entries` / `cache_bytes`
+//!   (occupancy gauges), `cache_evictions`, and `cache_hit_bytes`;
+//! * successful `interpolate` responses additionally echo `overlay`
+//!   inside the `options` object — the overlay version of the serving
+//!   snapshot (0 = compacted; bumped by every append/remove).  Like
+//!   `epoch` it is server-assigned: an `overlay` field on a *request* is
+//!   ignored.  `cache_hit` is now also true on mutated (uncompacted)
+//!   snapshots — the cache keys on the overlay version instead of
+//!   bypassing mutated datasets.
 //!
 //! **v2.2 additions** (two-stage planner observability, strictly additive
 //! over v2.1):
@@ -77,6 +92,11 @@ use crate::jsonio::Json;
 use crate::knn::grid_knn::RingRule;
 use crate::live::{AppendOutcome, CompactionReport, LiveStatus, RemoveOutcome};
 use crate::runtime::Variant;
+
+/// The wire protocol version this module implements.  ci.sh drift-checks
+/// this constant against the module doc header ("Wire protocol
+/// **vX.Y**") so the two can never silently disagree.
+pub const PROTOCOL_VERSION: &str = "2.3";
 
 /// A live-dataset mutation (protocol v2.1 `mutate` op).
 #[derive(Debug, Clone, PartialEq)]
@@ -369,6 +389,9 @@ pub fn options_json(o: &ResolvedOptions) -> Json {
     if let Some(e) = o.epoch {
         fields.push(("epoch", Json::Num(e as f64)));
     }
+    if let Some(v) = o.overlay {
+        fields.push(("overlay", Json::Num(v as f64)));
+    }
     Json::obj(fields)
 }
 
@@ -393,6 +416,7 @@ pub fn options_from_json(v: &Json) -> Option<ResolvedOptions> {
         r_max: v.get("r_max").as_f64()?,
         area: v.get("area").as_f64(),
         epoch: v.get("epoch").as_f64().map(|e| e as u64),
+        overlay: v.get("overlay").as_f64().map(|o| o as u64),
     })
 }
 
@@ -449,8 +473,13 @@ pub fn ok_metrics(m: &MetricsSnapshot) -> String {
         ("errors", Json::Num(m.errors as f64)),
         ("stage1_execs", Json::Num(m.stage1_execs as f64)),
         ("stage1_cache_hits", Json::Num(m.stage1_cache_hits as f64)),
+        ("stage1_subset_hits", Json::Num(m.stage1_subset_hits as f64)),
         ("stage2_execs", Json::Num(m.stage2_execs as f64)),
         ("coalesced_batches", Json::Num(m.coalesced_batches as f64)),
+        ("cache_entries", Json::Num(m.cache_entries as f64)),
+        ("cache_bytes", Json::Num(m.cache_bytes as f64)),
+        ("cache_evictions", Json::Num(m.cache_evictions as f64)),
+        ("cache_hit_bytes", Json::Num(m.cache_hit_bytes as f64)),
         ("knn_s", Json::Num(m.knn_s)),
         ("interp_s", Json::Num(m.interp_s)),
         ("mean_latency_s", Json::Num(m.mean_latency_s)),
@@ -703,16 +732,60 @@ mod tests {
             r_max: 1.75,
             area: Some(1e4),
             epoch: Some(3),
+            overlay: Some(2),
         };
         let j = options_json(&opts);
         assert!(j.to_string().contains("\"epoch\":3"), "{j:?}");
+        assert!(j.to_string().contains("\"overlay\":2"), "{j:?}");
         assert_eq!(options_from_json(&j), Some(opts));
         // absent/garbage -> None (v1 server)
         assert_eq!(options_from_json(&Json::Null), None);
-        // a v2 (pre-epoch) echo still parses, with epoch = None
+        // a v2 (pre-epoch, pre-overlay) echo still parses, with both None
         let v2 = options_json(&ResolvedOptions::default());
         let parsed = options_from_json(&v2).unwrap();
         assert_eq!(parsed.epoch, None);
+        assert_eq!(parsed.overlay, None);
+    }
+
+    #[test]
+    fn version_constant_matches_doc_header() {
+        // the same drift check ci.sh performs, from inside the test
+        // suite: the module doc's "Wire protocol **vX.Y**" and
+        // PROTOCOL_VERSION must agree
+        let src = include_str!("protocol.rs");
+        let header = src
+            .lines()
+            .find_map(|l| {
+                let (_, rest) = l.split_once("Wire protocol **v")?;
+                rest.split_once("**").map(|(v, _)| v.to_string())
+            })
+            .expect("protocol.rs declares its version in the doc header");
+        assert_eq!(
+            header, PROTOCOL_VERSION,
+            "protocol.rs doc header and PROTOCOL_VERSION drifted apart"
+        );
+    }
+
+    #[test]
+    fn metrics_lines_carry_v23_cache_counters() {
+        let m = MetricsSnapshot {
+            requests: 5,
+            stage1_cache_hits: 2,
+            stage1_subset_hits: 1,
+            cache_entries: 3,
+            cache_bytes: 4096,
+            cache_evictions: 7,
+            cache_hit_bytes: 8192,
+            ..Default::default()
+        };
+        let v = Json::parse(&ok_metrics(&m)).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true));
+        assert_eq!(v.get("stage1_cache_hits").as_usize(), Some(2));
+        assert_eq!(v.get("stage1_subset_hits").as_usize(), Some(1));
+        assert_eq!(v.get("cache_entries").as_usize(), Some(3));
+        assert_eq!(v.get("cache_bytes").as_usize(), Some(4096));
+        assert_eq!(v.get("cache_evictions").as_usize(), Some(7));
+        assert_eq!(v.get("cache_hit_bytes").as_usize(), Some(8192));
     }
 
     #[test]

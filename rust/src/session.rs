@@ -73,6 +73,10 @@ pub struct SessionReply {
     pub interp_s: f64,
     /// The fully-resolved options the run used (audit record).
     pub options: ResolvedOptions,
+    /// True when the serving coordinator skipped stage 1 via its
+    /// `NeighborCache` (exact or subset hit).  Always false for the
+    /// in-process modes, which have no cache.
+    pub cache_hit: bool,
 }
 
 impl SessionReply {
@@ -82,6 +86,7 @@ impl SessionReply {
             knn_s: resp.knn_s,
             interp_s: resp.interp_s,
             options: resp.options,
+            cache_hit: resp.stage1_cache_hit,
         }
     }
 }
@@ -526,7 +531,7 @@ fn exec_in_process(
     };
     let mut echoed = resolved;
     echoed.area = Some(resolved.area.unwrap_or_else(|| pts.bounds().area()));
-    Ok(SessionReply { values, knn_s, interp_s, options: echoed })
+    Ok(SessionReply { values, knn_s, interp_s, options: echoed, cache_hit: false })
 }
 
 #[cfg(test)]
@@ -723,17 +728,26 @@ mod tests {
     }
 
     #[test]
-    fn serving_mode_exposes_coordinator() {
+    fn serving_mode_exposes_coordinator_and_cache_facts() {
         let s = AidwSession::serving(CoordinatorConfig {
             engine_mode: EngineMode::CpuOnly,
             ..Default::default()
         })
         .unwrap();
         s.register("d", data()).unwrap();
-        let _ = s
-            .interpolate_values("d", &queries(), &QueryOptions::default())
-            .unwrap();
+        let q = queries();
+        let cold = s.interpolate("d", &q, &QueryOptions::default()).unwrap();
+        assert!(!cold.cache_hit);
+        let warm = s.interpolate("d", &q, &QueryOptions::default()).unwrap();
+        assert!(warm.cache_hit, "repeat raster rides the neighbor cache");
+        assert_eq!(cold.values, warm.values);
         let m = s.coordinator().unwrap().metrics();
-        assert_eq!(m.requests, 1);
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.stage1_cache_hits, 1);
+        assert!(m.cache_entries >= 1, "occupancy gauge is live");
+        // in-process modes have no cache and always report false
+        let p = AidwSession::in_process();
+        p.register("d", data()).unwrap();
+        assert!(!p.interpolate("d", &q, &QueryOptions::default()).unwrap().cache_hit);
     }
 }

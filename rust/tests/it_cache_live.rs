@@ -1,0 +1,281 @@
+//! Integration: overlay-versioned neighbor caching on live (mutated)
+//! datasets end to end.
+//!
+//! * **Mutated-snapshot reuse** (the PR-4 acceptance criterion): on an
+//!   uncompacted dataset, a repeated identical raster is served from the
+//!   `NeighborCache` — observable via `stage1_cache_hits` in the v2.3
+//!   metrics and the response's `cache_hit` flag — and is bit-identical
+//!   to from-scratch evaluation of the materialized live set;
+//! * **Subset row reuse**: a raster whose rows are covered by a cached
+//!   artifact of the same snapshot (sub-tiles, permutations) skips the
+//!   kNN sweep via row-gather, counted in `stage1_subset_hits`;
+//! * **Property**: mutate → query → mutate → query sequences — random
+//!   append/remove/compact interleavings, dense and local stage 2 — are
+//!   bit-identical to from-scratch evaluation at every step, i.e. the
+//!   overlay-versioned cache can never serve a stale artifact, while
+//!   every immediate repeat *is* served from the cache;
+//! * **Wire surface**: the v2.3 `metrics` op carries the cache counters
+//!   and a mutated repeat reports `cache_hit` over TCP.
+
+use std::sync::Arc;
+
+use aidw::coordinator::{
+    Coordinator, CoordinatorConfig, EngineMode, InterpolationRequest, QueryOptions,
+};
+use aidw::geom::PointSet;
+use aidw::prop_assert;
+use aidw::proptest::{check, pass, Config};
+use aidw::service::{Client, Server};
+use aidw::workload;
+
+fn cpu_config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        engine_mode: EngineMode::CpuOnly,
+        ..Default::default()
+    }
+}
+
+/// From-scratch oracle: register the materialized live set on a fresh
+/// coordinator and evaluate there.
+fn from_scratch(c: &Coordinator, queries: &[(f64, f64)], opts: &QueryOptions) -> Vec<f64> {
+    let (merged, _) = c.live_dataset("p").unwrap().snapshot().live_points();
+    let fresh = Coordinator::new(cpu_config()).unwrap();
+    fresh.register_dataset("m", merged).unwrap();
+    fresh
+        .interpolate(InterpolationRequest::new("m", queries.to_vec()).with_options(opts.clone()))
+        .unwrap()
+        .values
+}
+
+#[test]
+fn mutated_repeat_raster_is_served_from_cache_bit_identically() {
+    let c = Coordinator::new(cpu_config()).unwrap();
+    c.register_dataset("p", workload::uniform_square(500, 60.0, 901)).unwrap();
+    c.append_points("p", workload::uniform_square(25, 60.0, 902)).unwrap();
+    c.remove_points("p", &[3, 501]).unwrap();
+    let q = workload::uniform_square(40, 60.0, 903).xy();
+    let req = || InterpolationRequest::new("p", q.clone());
+
+    let m0 = c.metrics();
+    let cold = c.interpolate(req()).unwrap();
+    assert!(!cold.stage1_cache_hit);
+    assert_eq!(cold.options.epoch, Some(0));
+    assert_eq!(cold.options.overlay, Some(2), "append + remove = two version bumps");
+
+    // the acceptance criterion: the second identical query on the
+    // *mutated* snapshot is a cache hit, observable in the metrics
+    let warm = c.interpolate(req()).unwrap();
+    assert!(warm.stage1_cache_hit, "mutated repeat must ride the NeighborCache");
+    let m1 = c.metrics();
+    assert_eq!(m1.stage1_cache_hits - m0.stage1_cache_hits, 1);
+    assert_eq!(m1.stage1_execs - m0.stage1_execs, 1, "one cold sweep, zero warm");
+    assert!(m1.cache_entries >= 1);
+    assert!(m1.cache_hit_bytes > 0, "hit bytes account the served artifact");
+    assert_eq!(cold.values, warm.values, "cached artifact must be bit-identical");
+
+    // ... and bit-identical to from-scratch evaluation of the live set
+    let oracle = from_scratch(&c, &q, &QueryOptions::default());
+    assert_eq!(warm.values, oracle, "mutated cache path must be exact");
+
+    // the same holds for local (A5) stage 2 over the merged gather
+    let local = QueryOptions::new().local_neighbors(24);
+    let lc = c.interpolate(req().with_options(local.clone())).unwrap();
+    assert!(!lc.stage1_cache_hit, "different stage-1 key: its own cold sweep");
+    let lw = c.interpolate(req().with_options(local.clone())).unwrap();
+    assert!(lw.stage1_cache_hit);
+    assert_eq!(lc.values, lw.values);
+    assert_eq!(lw.values, from_scratch(&c, &q, &local), "local mutated cache is exact");
+}
+
+#[test]
+fn subset_raster_reuses_cached_rows() {
+    let c = Coordinator::new(cpu_config()).unwrap();
+    c.register_dataset("p", workload::uniform_square(400, 50.0, 911)).unwrap();
+    // mutated on purpose: subset reuse must work on the merged path too
+    c.append_points("p", workload::uniform_square(15, 50.0, 912)).unwrap();
+    let full = workload::uniform_square(60, 50.0, 913).xy();
+    let cold = c.interpolate(InterpolationRequest::new("p", full.clone())).unwrap();
+    assert!(!cold.stage1_cache_hit);
+    let m0 = c.metrics();
+
+    // a scrambled sub-tile of the cached raster: rows 40..50 reversed
+    let sub: Vec<(f64, f64)> = full[40..50].iter().rev().copied().collect();
+    let subset = c.interpolate(InterpolationRequest::new("p", sub.clone())).unwrap();
+    assert!(subset.stage1_cache_hit, "covered rows must skip the kNN sweep");
+    let m1 = c.metrics();
+    assert_eq!(m1.stage1_subset_hits - m0.stage1_subset_hits, 1);
+    assert_eq!(m1.stage1_execs, m0.stage1_execs, "no stage-1 execution ran");
+    // row-gathered values equal the full run's corresponding rows ...
+    let want: Vec<f64> = (0..10).map(|i| cold.values[49 - i]).collect();
+    assert_eq!(subset.values, want, "subset rows must be bit-identical");
+    // ... and the from-scratch oracle
+    assert_eq!(subset.values, from_scratch(&c, &sub, &QueryOptions::default()));
+
+    // the subset raster was re-inserted under its own key: repeating it
+    // is now an exact hit, not another subset gather
+    let again = c.interpolate(InterpolationRequest::new("p", sub)).unwrap();
+    assert!(again.stage1_cache_hit);
+    let m2 = c.metrics();
+    assert_eq!(m2.stage1_subset_hits, m1.stage1_subset_hits);
+    assert_eq!(m2.stage1_cache_hits - m1.stage1_cache_hits, 1);
+
+    // an uncovered raster (one stranger row) misses
+    let mut stranger = full[..5].to_vec();
+    stranger.push((-1234.5, 999.75));
+    let miss = c.interpolate(InterpolationRequest::new("p", stranger)).unwrap();
+    assert!(!miss.stage1_cache_hit, "uncovered rows must re-run stage 1");
+}
+
+#[test]
+fn property_mutate_query_sequences_never_serve_stale() {
+    // the overlay-versioned cache can never serve a stale artifact:
+    // random mutate/compact/query interleavings are bit-identical to
+    // from-scratch evaluation at every step, while immediate repeats are
+    // always served from the cache
+    #[derive(Debug, Clone, Copy)]
+    enum Op {
+        Append(u64, usize),
+        Remove(u64),
+        Compact,
+        Query(u64, usize),
+    }
+
+    #[derive(Debug)]
+    struct Case {
+        n_base: usize,
+        seed: u64,
+        local: bool,
+        ops: Vec<Op>,
+    }
+
+    check(
+        Config { cases: 14, seed: 0xCAC4E, max_size: 200 },
+        "overlay_cache_vs_from_scratch",
+        |rng, size| {
+            let n_base = 60 + (size % 200);
+            let mut ops = Vec::new();
+            for _ in 0..(3 + rng.below(6)) {
+                ops.push(match rng.below(10) {
+                    0..=3 => Op::Append(rng.next_u64(), 1 + (rng.below(20) as usize)),
+                    4..=5 => Op::Remove(rng.next_u64()),
+                    6 => Op::Compact,
+                    _ => Op::Query(rng.next_u64(), 6 + (rng.below(14) as usize)),
+                });
+            }
+            // every sequence ends with a query so each case exercises the
+            // acceptance path at least once
+            ops.push(Op::Query(rng.next_u64(), 12));
+            Case { n_base, seed: rng.next_u64(), local: rng.below(2) == 0, ops }
+        },
+        |case| {
+            let c = Coordinator::new(cpu_config()).unwrap();
+            c.register_dataset("p", workload::uniform_square(case.n_base, 90.0, case.seed))
+                .unwrap();
+            let opts = if case.local {
+                QueryOptions::new().local_neighbors(16)
+            } else {
+                QueryOptions::default()
+            };
+            let mut next_seed = case.seed ^ 0xBEEF;
+            for op in &case.ops {
+                match *op {
+                    Op::Append(s, n) => {
+                        c.append_points("p", workload::uniform_square(n, 90.0, s)).unwrap();
+                    }
+                    Op::Remove(s) => {
+                        // remove an arbitrary *live* id (resolve via the
+                        // snapshot's id list; skip when nearly empty)
+                        let (live, ids) =
+                            c.live_dataset("p").unwrap().snapshot().live_points();
+                        if live.len() > 2 {
+                            let victim = ids[(s % ids.len() as u64) as usize];
+                            c.remove_points("p", &[victim]).unwrap();
+                        }
+                    }
+                    Op::Compact => {
+                        c.compact_dataset("p").unwrap();
+                    }
+                    Op::Query(s, nq) => {
+                        next_seed = next_seed.wrapping_add(s);
+                        let q = workload::uniform_square(nq, 90.0, next_seed).xy();
+                        let req = || {
+                            InterpolationRequest::new("p", q.clone())
+                                .with_options(opts.clone())
+                        };
+                        let got = c.interpolate(req()).unwrap();
+                        let want = from_scratch(&c, &q, &opts);
+                        prop_assert!(
+                            got.values == want,
+                            "live answer diverged from from-scratch (hit={})",
+                            got.stage1_cache_hit
+                        );
+                        // the immediate repeat must be a cache hit — on
+                        // mutated and compacted snapshots alike — and
+                        // bit-identical
+                        let again = c.interpolate(req()).unwrap();
+                        prop_assert!(
+                            again.stage1_cache_hit,
+                            "immediate repeat must be served from the cache"
+                        );
+                        prop_assert!(
+                            again.values == want,
+                            "cached repeat diverged from from-scratch"
+                        );
+                    }
+                }
+            }
+            // stage-1 executions are bounded by the non-repeat queries:
+            // the cache never re-ran a sweep for a repeat
+            let m = c.metrics();
+            let queries =
+                case.ops.iter().filter(|o| matches!(o, Op::Query(..))).count() as u64;
+            prop_assert!(
+                m.stage1_execs <= queries,
+                "repeats must not re-run stage 1 ({} execs for {} distinct queries)",
+                m.stage1_execs,
+                queries
+            );
+            pass()
+        },
+    );
+}
+
+#[test]
+fn v23_metrics_and_mutated_cache_hit_over_the_wire() {
+    let coord = Arc::new(Coordinator::new(cpu_config()).unwrap());
+    let server = Server::start(coord, "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    let mut pts = PointSet::default();
+    for i in 0..80 {
+        pts.push((i % 9) as f64, (i / 9) as f64, (i as f64).sin());
+    }
+    client.register("d", &pts).unwrap();
+    let mut delta = PointSet::default();
+    delta.push(2.5, 3.5, 1.25);
+    delta.push(4.5, 1.5, -0.5);
+    client.append("d", &delta).unwrap();
+
+    let queries: Vec<(f64, f64)> = (0..12).map(|i| (0.3 * i as f64, 0.7 * i as f64)).collect();
+    let cold = client
+        .interpolate_with("d", &queries, QueryOptions::default())
+        .unwrap();
+    assert!(!cold.cache_hit);
+    let echoed = cold.options.expect("v2.3 echoes options");
+    assert_eq!(echoed.epoch, Some(0));
+    assert_eq!(echoed.overlay, Some(1), "the overlay version rides the echo");
+
+    let warm = client
+        .interpolate_with("d", &queries, QueryOptions::default())
+        .unwrap();
+    assert!(warm.cache_hit, "mutated repeat reports cache_hit over the wire");
+    assert_eq!(cold.values, warm.values);
+
+    let m = client.metrics().unwrap();
+    assert_eq!(m.get("stage1_cache_hits").as_usize(), Some(1));
+    assert_eq!(m.get("stage1_subset_hits").as_usize(), Some(0));
+    assert!(m.get("cache_entries").as_usize().unwrap() >= 1);
+    assert!(m.get("cache_bytes").as_usize().unwrap() > 0);
+    assert!(m.get("cache_hit_bytes").as_usize().unwrap() > 0);
+    assert_eq!(m.get("cache_evictions").as_usize(), Some(0));
+}

@@ -3,11 +3,13 @@
 //! * **Coalescing**: two jobs with equal `stage1_key()` but different
 //!   stage-2 variants share one batch and execute stage 1 exactly once
 //!   (asserted via the coordinator's stage-1 execution counter);
-//! * **Neighbor reuse**: a repeated identical raster on an unmutated
-//!   dataset is served from the `NeighborCache` (hit counter + response
-//!   flag asserted) bit-identically; any mutation — append, remove,
-//!   compact, register-over — invalidates the cached artifacts for that
-//!   dataset (epoch/overlay mismatch);
+//! * **Neighbor reuse**: a repeated identical raster — on compacted AND
+//!   mutated (uncompacted) snapshots — is served from the
+//!   `NeighborCache` (hit counter + response flag asserted)
+//!   bit-identically; any mutation — append, remove, compact,
+//!   register-over — invalidates the previously cached artifacts for
+//!   that dataset (overlay-version/epoch mismatch or purge), after which
+//!   the new snapshot caches its own;
 //! * **Property**: planned / coalesced / cached execution is
 //!   bit-identical to the monolithic in-process paths across stage-2
 //!   variants × (dense, local) × (clean, mutated) datasets.
@@ -111,33 +113,46 @@ fn repeated_raster_hits_cache_and_any_mutation_invalidates() {
     assert_eq!(r1.values, r2.values, "cached artifact must be bit-identical");
     let m = c.metrics();
     assert_eq!((m.stage1_execs, m.stage1_cache_hits), (1, 1));
+    assert!(m.cache_entries >= 1, "occupancy gauge reflects the resident entry");
 
     // a different stage-1 key misses (k override)
     let r3 = c.interpolate(req().with_k(5)).unwrap();
     assert!(!r3.stage1_cache_hit);
     assert_eq!(c.metrics().stage1_execs, 2);
 
-    // append -> mutated snapshot: the cache is bypassed entirely
+    // append -> overlay version bump: the version-0 artifact is retired
+    // by key, and the *mutated* snapshot caches its own artifact
     c.append_points("d", workload::uniform_square(10, 50.0, 813)).unwrap();
     let r4 = c.interpolate(req()).unwrap();
-    assert!(!r4.stage1_cache_hit, "mutated datasets never serve cached artifacts");
+    assert!(!r4.stage1_cache_hit, "the mutation must invalidate the cached artifact");
     assert_eq!(r4.options.epoch, Some(0), "epoch unchanged by the append");
-    assert_eq!(c.metrics().stage1_cache_hits, 1, "no new hits while mutated");
+    assert_eq!(r4.options.overlay, Some(1), "the overlay version is the echo's audit fact");
+    let r4b = c.interpolate(req()).unwrap();
+    assert!(
+        r4b.stage1_cache_hit,
+        "a repeated raster on a mutated (uncompacted) snapshot is served from the cache"
+    );
+    assert_eq!(r4.values, r4b.values, "cached merged artifact must be bit-identical");
+    assert_eq!(c.metrics().stage1_cache_hits, 2);
 
-    // compact -> epoch bump: the old epoch-0 entry cannot match
+    // compact -> epoch bump (and overlay reset): neither the version-0
+    // nor the version-1 epoch-0 entry can match
     let rep = c.compact_dataset("d").unwrap();
     assert_eq!(rep.new_epoch, 1);
     let r5 = c.interpolate(req()).unwrap();
     assert!(!r5.stage1_cache_hit, "epoch mismatch must miss");
     assert_eq!(r5.options.epoch, Some(1));
+    assert_eq!(r5.options.overlay, Some(0));
     assert_eq!(r4.values, r5.values, "merged vs compacted stays bit-identical");
     let r6 = c.interpolate(req()).unwrap();
     assert!(r6.stage1_cache_hit, "epoch-1 artifact now cached");
     assert_eq!(r5.values, r6.values);
 
-    // remove -> mutated again; compact -> epoch 2 misses again
+    // remove -> version bump invalidates; the repeat hits again; compact
+    // -> epoch 2 misses again
     c.remove_points("d", &[0]).unwrap();
     assert!(!c.interpolate(req()).unwrap().stage1_cache_hit);
+    assert!(c.interpolate(req()).unwrap().stage1_cache_hit, "tombstoned overlay caches too");
     c.compact_dataset("d").unwrap();
     let r7 = c.interpolate(req()).unwrap();
     assert!(!r7.stage1_cache_hit);
@@ -267,13 +282,13 @@ fn property_planner_is_bit_identical_to_monolithic_paths() {
             );
             prop_assert!(tiled.values == want, "planned tiled diverged from monolithic");
 
-            // cached repeats: the first repeat may miss when the pair
-            // coalesced (the pair batch cached the *concatenated* raster
-            // under a different fingerprint), but it then caches this
-            // exact raster, so the second repeat must hit on a clean
-            // dataset; mutated datasets always bypass the cache.  Values
-            // must never change either way.
-            let clean = case.delta.is_empty() && case.remove.is_empty();
+            // cached repeats — clean AND mutated datasets alike (the
+            // overlay version is part of cache identity now).  When the
+            // pair coalesced, its batch cached the *concatenated* raster,
+            // which covers this raster's rows: the first repeat is served
+            // by subset row-gather; when it didn't coalesce, the second
+            // batch already hit the first's exact artifact.  Either way
+            // every repeat skips stage 1 and values never change.
             let repeat = || {
                 c.interpolate(
                     InterpolationRequest::new("p", case.queries.clone())
@@ -283,19 +298,15 @@ fn property_planner_is_bit_identical_to_monolithic_paths() {
             };
             let again = repeat();
             prop_assert!(again.values == want, "repeat run diverged");
+            prop_assert!(
+                again.stage1_cache_hit,
+                "repeat raster must be served from the cache (exact or subset), \
+                 mutated={}",
+                !case.delta.is_empty() || !case.remove.is_empty()
+            );
             let thrice = repeat();
             prop_assert!(thrice.values == want, "cached run diverged");
-            if clean {
-                prop_assert!(
-                    thrice.stage1_cache_hit,
-                    "clean second repeat must be served from the cache"
-                );
-            } else {
-                prop_assert!(
-                    !again.stage1_cache_hit && !thrice.stage1_cache_hit,
-                    "mutated datasets must bypass the cache"
-                );
-            }
+            prop_assert!(thrice.stage1_cache_hit, "second repeat must hit exactly");
             pass()
         },
     );
