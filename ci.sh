@@ -31,6 +31,31 @@ cargo test -q --test it_planner
 echo "== cargo test -q --test it_cache_live =="
 cargo test -q --test it_cache_live
 
+# The tiled streaming surface is tier-1: the streamed-equals-monolithic
+# bit-identity property, the v2.3 back-compat pin, and the bounded-buffer
+# acceptance assertion must never be silently dropped.
+echo "== cargo test -q --test it_stream =="
+cargo test -q --test it_stream
+
+# Every examples/*.rs must be a registered [[example]] compile target, or
+# `cargo build --examples` (and cargo test's example builds) silently
+# skip it and it rots.
+echo "== examples registration gate =="
+for f in ../examples/*.rs; do
+    name=$(basename "$f" .rs)
+    # match the example's path line, not just any name (a [[bench]] of
+    # the same name must not satisfy the gate)
+    if ! grep -q "path = \"../examples/$name.rs\"" Cargo.toml; then
+        echo "FAIL: examples/$name.rs is not listed as a [[example]] target in Cargo.toml"
+        exit 1
+    fi
+done
+echo "examples: all $(ls ../examples/*.rs | wc -l) source files are registered targets"
+if [ "${AIDW_CI_STRICT:-0}" = "1" ]; then
+    echo "== cargo build --examples (strict) =="
+    cargo build --examples
+fi
+
 # Protocol version drift check: the wire version constant and the
 # protocol.rs doc header must agree (both are client-facing contracts).
 echo "== protocol version drift check =="

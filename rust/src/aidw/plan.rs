@@ -178,6 +178,67 @@ impl NeighborArtifact {
     }
 }
 
+/// Tile-grained partition of a query raster's rows for stage-2
+/// execution and incremental delivery.
+///
+/// Stage 2 is row-independent — every weighting kernel (dense, local,
+/// merged, PJRT) computes each query row from that row's artifact entries
+/// alone — so executing stage 2 per tile over `[start, end)` row ranges
+/// and concatenating the tiles in order is **bit-identical** to one
+/// monolithic pass (pinned by `tests/it_stream.rs`).  Stage 1 is *not*
+/// tiled: it runs once per batch and every tile gathers from the shared
+/// [`NeighborArtifact`], which is also what makes tile-granular cache
+/// reuse sound (a tile's rows are a row subset of the batch artifact).
+///
+/// `tile_rows = None` means one tile spanning the whole raster — the
+/// back-compat default that makes the monolithic path a special case of
+/// the tiled one rather than a second code path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TilePlan {
+    n_rows: usize,
+    tile_rows: usize,
+}
+
+impl TilePlan {
+    /// Partition `n_rows` query rows into tiles of at most `tile_rows`
+    /// rows (`None` = one whole-raster tile).  A zero `tile_rows` is
+    /// clamped to 1; oversized tiles are clamped to the raster.
+    pub fn new(n_rows: usize, tile_rows: Option<usize>) -> TilePlan {
+        let tile_rows = tile_rows.unwrap_or(n_rows).max(1).min(n_rows.max(1));
+        TilePlan { n_rows, tile_rows }
+    }
+
+    /// Total rows across all tiles.
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Rows per tile (the last tile may be shorter).
+    pub fn tile_rows(&self) -> usize {
+        self.tile_rows
+    }
+
+    /// Number of tiles (0 only for an empty raster).
+    pub fn n_tiles(&self) -> usize {
+        if self.n_rows == 0 {
+            0
+        } else {
+            (self.n_rows + self.tile_rows - 1) / self.tile_rows
+        }
+    }
+
+    /// The `[start, end)` row range of one tile.
+    pub fn range(&self, tile: usize) -> std::ops::Range<usize> {
+        let start = tile * self.tile_rows;
+        start..(start + self.tile_rows).min(self.n_rows)
+    }
+
+    /// Tiles in row order.
+    pub fn iter(&self) -> impl Iterator<Item = std::ops::Range<usize>> + '_ {
+        (0..self.n_tiles()).map(move |t| self.range(t))
+    }
+}
+
 /// The stage-2 plan: which weighting consumes the artifact.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Stage2Plan {
@@ -465,6 +526,103 @@ mod tests {
         let sub_warm = art.subset_rows(&rows);
         assert!(sub_warm.alphas_materialized(), "materialized alphas are gathered, not redone");
         assert_eq!(sub_warm.alphas(), sub_cold.alphas());
+    }
+
+    #[test]
+    fn tile_plan_partitions_exactly() {
+        // whole-raster default: one tile
+        let whole = TilePlan::new(100, None);
+        assert_eq!(whole.n_tiles(), 1);
+        assert_eq!(whole.range(0), 0..100);
+        // even split
+        let even = TilePlan::new(100, Some(25));
+        assert_eq!(even.n_tiles(), 4);
+        assert_eq!(even.iter().collect::<Vec<_>>(), vec![0..25, 25..50, 50..75, 75..100]);
+        // ragged tail
+        let ragged = TilePlan::new(10, Some(4));
+        assert_eq!(ragged.n_tiles(), 3);
+        assert_eq!(ragged.range(2), 8..10);
+        // every row covered exactly once, in order
+        let mut covered = 0usize;
+        for r in ragged.iter() {
+            assert_eq!(r.start, covered);
+            covered = r.end;
+        }
+        assert_eq!(covered, 10);
+        // clamps: zero tile -> 1 row; oversized tile -> whole raster
+        assert_eq!(TilePlan::new(5, Some(0)).n_tiles(), 5);
+        assert_eq!(TilePlan::new(5, Some(99)).n_tiles(), 1);
+        // empty raster: no tiles (callers reject empty queries anyway)
+        assert_eq!(TilePlan::new(0, Some(4)).n_tiles(), 0);
+    }
+
+    #[test]
+    fn tiled_stage2_concatenation_is_bit_identical() {
+        // the contract the streaming surface rests on: per-tile stage-2
+        // execution over artifact row slices, concatenated in order,
+        // equals the monolithic pass bit for bit (dense and local)
+        let data = workload::uniform_square(600, 70.0, 977);
+        let queries = workload::uniform_square(53, 70.0, 978).xy();
+        let params = AidwParams::default();
+        let pool = Pool::new(2);
+        let grid = EvenGrid::build_on(&pool, &data, None, &GridConfig::default()).unwrap();
+        let area = data.bounds().area();
+
+        // dense
+        let plan = Stage1Plan::new(
+            params.k,
+            RingRule::Exact,
+            None,
+            &params,
+            data.len(),
+            area,
+            SearchKind::Grid,
+        );
+        let art = plan.execute_grid(&pool, &grid, &queries);
+        let alphas = art.alphas();
+        let whole = crate::aidw::pipeline::weighted_stage_on(&pool, &data, &queries, alphas);
+        let tiles = TilePlan::new(queries.len(), Some(7));
+        let mut tiled = Vec::with_capacity(queries.len());
+        for r in tiles.iter() {
+            tiled.extend(crate::aidw::pipeline::weighted_stage_on(
+                &pool,
+                &data,
+                &queries[r.clone()],
+                &alphas[r],
+            ));
+        }
+        assert_eq!(tiled, whole, "tiled dense stage 2 must be bit-identical");
+
+        // local (A5): tiles slice the gathered neighbor table row-wise
+        let lplan = Stage1Plan::new(
+            params.k,
+            RingRule::Exact,
+            Some(24),
+            &params,
+            data.len(),
+            area,
+            SearchKind::Grid,
+        );
+        let lart = lplan.execute_grid(&pool, &grid, &queries);
+        let table = lart.neighbors.as_ref().unwrap();
+        let lalphas = lart.alphas();
+        let lwhole = local_weighted_on(&pool, &data, &queries, lalphas, table);
+        let mut ltiled = Vec::with_capacity(queries.len());
+        for r in tiles.iter() {
+            let w = table.width;
+            ltiled.extend(local_weighted_with(
+                &pool,
+                &queries[r.clone()],
+                &lalphas[r.clone()],
+                &table.idx[r.start * w..r.end * w],
+                w,
+                |pid| {
+                    let i = pid as usize;
+                    (data.xs[i], data.ys[i], data.zs[i])
+                },
+            ));
+        }
+        assert_eq!(ltiled, lwhole, "tiled local stage 2 must be bit-identical");
     }
 
     #[test]

@@ -236,6 +236,9 @@ pub struct PlannerMeasurement {
     pub cache_hit_ms: f64,
     /// Neighbor-cache hits observed during the repeat (1 expected).
     pub cache_hits: u64,
+    /// Stage-1 wall ms the cache saved during the repeat — the served
+    /// entry's recorded build time (ROADMAP PR-4(b)).
+    pub cache_saved_ms: f64,
 }
 
 /// Measure the planner suite at one size (CPU-only coordinator; results
@@ -304,6 +307,7 @@ pub fn measure_planner(
         coalesce_stage1_execs: m1.stage1_execs - m0.stage1_execs,
         cache_hit_ms,
         cache_hits: m2.stage1_cache_hits - m1.stage1_cache_hits,
+        cache_saved_ms: m2.stage1_saved_ms - m1.stage1_saved_ms,
     })
 }
 
@@ -327,6 +331,9 @@ pub struct LiveCacheMeasurement {
     /// Warm-over-cold hit rate proxy: cold ms / warm ms (>= 1 when the
     /// cache wins; timing-noisy at small n).
     pub speedup: f64,
+    /// Stage-1 wall ms the cache reported saved during the warm repeat
+    /// (the merged sweep's recorded build time; ROADMAP PR-4(b)).
+    pub saved_ms: f64,
 }
 
 /// Measure the mutated-dataset cache suite at one size (CPU-only
@@ -385,6 +392,7 @@ pub fn measure_live_cache(
         warm_hits: m1.stage1_cache_hits - m0.stage1_cache_hits,
         post_mutation_execs: m2.stage1_execs - m1.stage1_execs,
         speedup: mutated_cold_ms / mutated_warm_ms.max(1e-9),
+        saved_ms: m1.stage1_saved_ms - m0.stage1_saved_ms,
     })
 }
 
@@ -404,6 +412,7 @@ fn live_cache_json(live: &[LiveCacheMeasurement]) -> Json {
                         Json::Num(l.post_mutation_execs as f64),
                     ),
                     ("speedup", Json::Num(l.speedup)),
+                    ("stage1_saved_ms", Json::Num(l.saved_ms)),
                 ])
             })
             .collect(),
@@ -428,6 +437,7 @@ fn planner_json(planner: &[PlannerMeasurement]) -> Json {
                     ),
                     ("cache_hit_ms", Json::Num(p.cache_hit_ms)),
                     ("cache_hits", Json::Num(p.cache_hits as f64)),
+                    ("stage1_saved_ms", Json::Num(p.cache_saved_ms)),
                 ])
             })
             .collect(),
@@ -614,6 +624,7 @@ mod tests {
             assert!(p.stage2_ms > 0.0);
             assert_eq!(p.coalesce_stage1_execs, 1, "pair must share one stage-1");
             assert_eq!(p.cache_hits, 1, "repeat raster must hit the cache");
+            assert!(p.cache_saved_ms >= 0.0, "saved-time counter is wired");
         }
         let live: Vec<LiveCacheMeasurement> = sizes
             .iter()
@@ -649,5 +660,7 @@ mod tests {
         assert_eq!(lc[0].get("warm_hits").as_usize(), Some(1));
         assert_eq!(lc[0].get("post_mutation_execs").as_usize(), Some(1));
         assert!(lc[0].get("mutated_warm_ms").as_f64().is_some());
+        assert!(lc[0].get("stage1_saved_ms").as_f64().is_some());
+        assert!(pj[0].get("stage1_saved_ms").as_f64().is_some());
     }
 }

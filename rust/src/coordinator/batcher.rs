@@ -95,10 +95,18 @@ impl JobQueue {
     }
 
     /// Enqueue a job; rejects when full or closed (backpressure).
+    ///
+    /// A full queue is first swept of **cancelled** jobs (tickets/streams
+    /// dropped without waiting): their slots belong to nobody, so a
+    /// dropped ticket can never leak queue capacity — a full-capacity
+    /// submit right after dropping one succeeds.
     pub fn push(&self, job: Job) -> Result<()> {
         let mut st = self.inner.lock().unwrap();
         if st.closed {
             return Err(Error::Unavailable("coordinator shut down".into()));
+        }
+        if st.jobs.len() >= self.policy.max_queue {
+            st.jobs.retain(|j| !j.cancelled());
         }
         if st.jobs.len() >= self.policy.max_queue {
             return Err(Error::Unavailable(format!(
@@ -130,7 +138,10 @@ impl JobQueue {
         let mut st = self.inner.lock().unwrap();
         // wait for a first job (or shutdown)
         loop {
-            if let Some(first) = st.jobs.pop_front() {
+            while let Some(first) = st.jobs.pop_front() {
+                if first.cancelled() {
+                    continue; // dropped ticket: free the slot, skip the work
+                }
                 drop(st);
                 return Some(self.fill_batch(first));
             }
@@ -158,6 +169,11 @@ impl JobQueue {
             // order of incompatible ones)
             let mut i = 0;
             while i < st.jobs.len() && total < self.policy.max_queries {
+                if st.jobs[i].cancelled() {
+                    // dropped ticket: drop the abandoned job on the floor
+                    st.jobs.remove(i);
+                    continue;
+                }
                 let compat = {
                     let j = &st.jobs[i];
                     j.request.dataset == dataset
@@ -193,11 +209,14 @@ impl JobQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::InterpolationRequest;
+    use crate::coordinator::request::{
+        FrameTx, InterpolationRequest, StreamFrame, StreamHandle,
+    };
     use crate::knn::grid_knn::RingRule;
-    use std::sync::mpsc;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::{mpsc, Arc};
 
-    type RespRx = mpsc::Receiver<Result<crate::coordinator::request::InterpolationResponse>>;
+    type RespRx = mpsc::Receiver<StreamFrame>;
 
     fn job_with(dataset: &str, nq: usize, resolved: ResolvedOptions) -> (Job, RespRx) {
         let (tx, rx) = mpsc::channel();
@@ -206,7 +225,12 @@ mod tests {
             Job {
                 request: InterpolationRequest::new(dataset, queries),
                 resolved,
-                respond: tx,
+                respond: StreamHandle {
+                    tx: FrameTx::Unbounded(tx),
+                    buffered: Arc::new(AtomicUsize::new(0)),
+                    bounded: false,
+                },
+                cancel: Arc::new(AtomicBool::new(false)),
                 enqueued: Instant::now(),
             },
             rx,
@@ -376,6 +400,52 @@ mod tests {
         q.push(j2).unwrap();
         assert!(matches!(q.push(j3), Err(Error::Unavailable(_))));
         assert_eq!(q.depth(), 2);
+    }
+
+    #[test]
+    fn dropped_ticket_frees_its_queue_slot() {
+        // the Ticket-drop leak fix: a queued job whose consumer dropped
+        // its ticket (cancel flag set) is swept when the queue is full,
+        // so a full-capacity submit right after the drop succeeds
+        let q = JobQueue::new(BatchPolicy { max_queue: 2, ..Default::default() });
+        let (j1, _r1) = job("a", 1);
+        let cancel1 = j1.cancel.clone();
+        let (j2, _r2) = job("a", 1);
+        q.push(j1).unwrap();
+        q.push(j2).unwrap();
+        // simulate `drop(ticket)` for the first job (TileStream::drop
+        // sets exactly this flag — pinned in request.rs tests)
+        cancel1.store(true, Ordering::Relaxed);
+        let (j3, _r3) = job("a", 1);
+        q.push(j3).unwrap();
+        assert_eq!(q.depth(), 2, "the cancelled job's slot was reclaimed");
+        // the cancelled job is also never executed: the surviving two
+        // jobs form the only batch
+        let b = q.next_batch().unwrap();
+        assert_eq!(b.jobs.len(), 2);
+        assert!(b.jobs.iter().all(|j| !j.cancelled()));
+    }
+
+    #[test]
+    fn cancelled_jobs_are_skipped_at_batch_formation() {
+        let q = JobQueue::new(BatchPolicy {
+            linger: Duration::from_millis(1),
+            ..Default::default()
+        });
+        let (j1, _r1) = job("a", 4);
+        let cancel1 = j1.cancel.clone();
+        let (j2, _r2) = job("a", 4);
+        let (j3, _r3) = job("a", 4);
+        let cancel3 = j3.cancel.clone();
+        q.push(j1).unwrap();
+        q.push(j2).unwrap();
+        q.push(j3).unwrap();
+        cancel1.store(true, Ordering::Relaxed); // cancelled while queued (head)
+        cancel3.store(true, Ordering::Relaxed); // cancelled while queued (tail)
+        let b = q.next_batch().unwrap();
+        assert_eq!(b.jobs.len(), 1, "only the live job executes");
+        assert_eq!(b.total_queries, 4);
+        assert_eq!(q.depth(), 0, "cancelled jobs were dropped, not left queued");
     }
 
     #[test]

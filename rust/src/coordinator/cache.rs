@@ -156,11 +156,18 @@ struct Entry {
 
 /// What a [`NeighborCache::lookup`] found.
 pub enum CacheOutcome {
-    /// Exact raster match: the cached artifact itself.
+    /// Exact raster match: the cached artifact itself (its `stage1_s` is
+    /// the build time this hit saved).
     Hit(Arc<NeighborArtifact>),
     /// A covering entry matched every query row: a freshly-gathered
     /// subset artifact (the caller may re-insert it under its own key).
-    Subset(NeighborArtifact),
+    Subset {
+        artifact: NeighborArtifact,
+        /// Stage-1 seconds the gather substituted for — the covering
+        /// entry's recorded build time scaled to the gathered row count
+        /// (feeds the `stage1_saved_ms` counter).
+        saved_s: f64,
+    },
     Miss,
 }
 
@@ -231,7 +238,47 @@ impl NeighborCache {
         if queries.is_empty() {
             return CacheOutcome::Miss; // exact-key-only callers pass no raster
         }
-        // subset pass: first same-identity entry covering every query row
+        match Self::find_covering(&mut st, key, queries) {
+            Some((art, rows, saved_s)) => {
+                // the row gather can be megabytes — run it off the lock
+                drop(st);
+                CacheOutcome::Subset { artifact: art.subset_rows(&rows), saved_s }
+            }
+            None => CacheOutcome::Miss,
+        }
+    }
+
+    /// Row-gather `queries` out of the first same-identity entry covering
+    /// every one of them; `None` when no entry covers the whole slice.
+    /// The caller picks the granularity: [`NeighborCache::lookup`] passes
+    /// the full raster (the classic subset hit), the dispatcher's
+    /// partial-cover pass calls this per tile so that only uncovered
+    /// tiles pay a kNN sweep (ROADMAP PR-4(a)).  A hit promotes the
+    /// serving entry and charges `hit_bytes`.
+    pub fn subset_for(
+        &self,
+        key: &CacheKey,
+        queries: &[(f64, f64)],
+    ) -> Option<(NeighborArtifact, f64)> {
+        if self.capacity == 0 || queries.is_empty() {
+            return None;
+        }
+        let mut st = self.inner.lock().unwrap();
+        let (art, rows, saved_s) = Self::find_covering(&mut st, key, queries)?;
+        drop(st); // the row gather can be megabytes — run it off the lock
+        Some((art.subset_rows(&rows), saved_s))
+    }
+
+    /// The shared subset scan: find a same-identity entry covering every
+    /// query row, promote it, and charge hit bytes.  Returns the covering
+    /// artifact, the row indices to gather, and the stage-1 seconds the
+    /// gather substitutes for (the entry's recorded build time scaled by
+    /// row fraction); the caller performs the gather off the lock.
+    fn find_covering(
+        st: &mut std::sync::MutexGuard<'_, CacheState>,
+        key: &CacheKey,
+        queries: &[(f64, f64)],
+    ) -> Option<(Arc<NeighborArtifact>, Vec<u32>, f64)> {
         let mut found: Option<(usize, Vec<u32>)> = None;
         for (pos, entry) in st.entries.iter().enumerate() {
             if !entry.key.same_identity(key) {
@@ -252,21 +299,17 @@ impl NeighborCache {
                 break;
             }
         }
-        match found {
-            Some((pos, rows)) => {
-                let entry = st.entries.remove(pos).unwrap();
-                let art = entry.artifact.clone();
-                // charge the gathered artifact's bytes (known without
-                // building it — same formula as `artifact_bytes`)
-                let width = art.neighbors.as_ref().map(|t| t.width);
-                st.hit_bytes += artifact_row_bytes(rows.len(), width) as u64;
-                st.entries.push_front(entry);
-                // the row gather can be megabytes — run it off the lock
-                drop(st);
-                CacheOutcome::Subset(art.subset_rows(&rows))
-            }
-            None => CacheOutcome::Miss,
-        }
+        let (pos, rows) = found?;
+        let entry = st.entries.remove(pos).unwrap();
+        let art = entry.artifact.clone();
+        // charge the gathered artifact's bytes (known without building
+        // it — same formula as `artifact_bytes`)
+        let width = art.neighbors.as_ref().map(|t| t.width);
+        st.hit_bytes += artifact_row_bytes(rows.len(), width) as u64;
+        let entry_rows = art.r_obs.len().max(1);
+        let saved_s = art.stage1_s * rows.len() as f64 / entry_rows as f64;
+        st.entries.push_front(entry);
+        Some((art, rows, saved_s))
     }
 
     /// Exact-key lookup (tests and simple callers); a hit is promoted.
@@ -433,19 +476,32 @@ mod tests {
             1.0,
             AidwParams::default(),
             Some(NeighborTable { idx: (0..12u32).collect(), width: 2 }),
-            0.0,
+            0.6, // recorded build time: 0.1 s per row
         ));
         c.put(key_for("d", 2, 4, &full), &full, art);
         // a row subset in scrambled order hits via the covering entry
         let sub = vec![full[4], full[1], full[4]];
         match c.lookup(&key_for("d", 2, 4, &sub), &sub) {
-            CacheOutcome::Subset(got) => {
+            CacheOutcome::Subset { artifact: got, saved_s } => {
                 assert_eq!(got.r_obs, vec![4.0, 1.0, 4.0]);
                 let t = got.neighbors.unwrap();
                 assert_eq!(t.idx, vec![8, 9, 2, 3, 8, 9]);
+                // saved time = entry build time scaled to 3 of 6 rows
+                assert!((saved_s - 0.3).abs() < 1e-12, "{saved_s}");
             }
             _ => panic!("expected a subset hit"),
         }
+        // tile-granular cover: subset_for serves an arbitrary slice
+        let tile = vec![full[2], full[0]];
+        let (tart, tsaved) = c
+            .subset_for(&key_for("d", 2, 4, &tile), &tile)
+            .expect("covered tile gathers");
+        assert_eq!(tart.r_obs, vec![2.0, 0.0]);
+        assert!((tsaved - 0.2).abs() < 1e-12, "{tsaved}");
+        // an uncovered tile is None — the caller sweeps it instead
+        assert!(c
+            .subset_for(&key_for("d", 2, 4, &[(77.0, 77.0)]), &[(77.0, 77.0)])
+            .is_none());
         // identity must match: same rows at another overlay version miss
         assert!(matches!(
             c.lookup(&key_for("d", 2, 5, &sub), &sub),

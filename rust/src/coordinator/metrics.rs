@@ -77,6 +77,20 @@ pub struct Metrics {
     /// coalescing the stage-key split makes possible (such jobs would
     /// each have paid their own kNN sweep under full-options admission).
     pub coalesced_batches: AtomicU64,
+    /// Tiles gathered out of covering cached artifacts during partial-
+    /// cover stage-1 reuse (protocol v2.4; the whole-raster subset hit
+    /// counts under `stage1_subset_hits` instead).
+    pub stage1_tile_gathers: AtomicU64,
+    /// Result tiles emitted by the stage-2 streaming executor (v2.4).
+    pub stream_tiles: AtomicU64,
+    /// Peak values buffered between the stage-2 executor and any bounded
+    /// stream consumer (gauge, v2.4): bounded by construction at
+    /// `stream_buffer_tiles x tile_rows` — this gauge is the receipt.
+    stream_peak_buffered: AtomicU64,
+    /// Stage-1 wall time *not spent* thanks to cache/subset hits,
+    /// accumulated from each served entry's recorded build time
+    /// (microsecond fixed point; protocol v2.4 `stage1_saved_ms`).
+    stage1_saved_us: AtomicU64,
     /// Cumulative stage seconds (microsecond fixed point).
     knn_us: AtomicU64,
     interp_us: AtomicU64,
@@ -95,6 +109,23 @@ impl Metrics {
 
     pub fn interp_seconds(&self) -> f64 {
         self.interp_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Credit stage-1 wall seconds a cache/subset hit did not spend.
+    pub fn add_stage1_saved(&self, seconds: f64) {
+        self.stage1_saved_us
+            .fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Stage-1 milliseconds saved by the cache so far.
+    pub fn stage1_saved_ms(&self) -> f64 {
+        self.stage1_saved_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Raise the buffered-values peak gauge to at least `buffered`.
+    pub fn note_stream_buffered(&self, buffered: usize) {
+        self.stream_peak_buffered
+            .fetch_max(buffered as u64, Ordering::Relaxed);
     }
 
     /// Plain-data snapshot for reporting (cache gauges zeroed; the
@@ -117,6 +148,10 @@ impl Metrics {
             stage1_subset_hits: self.stage1_subset_hits.load(Ordering::Relaxed),
             stage2_execs: self.stage2_execs.load(Ordering::Relaxed),
             coalesced_batches: self.coalesced_batches.load(Ordering::Relaxed),
+            stage1_tile_gathers: self.stage1_tile_gathers.load(Ordering::Relaxed),
+            stream_tiles: self.stream_tiles.load(Ordering::Relaxed),
+            stream_peak_buffered: self.stream_peak_buffered.load(Ordering::Relaxed),
+            stage1_saved_ms: self.stage1_saved_ms(),
             cache_entries: cache.entries as u64,
             cache_bytes: cache.bytes as u64,
             cache_evictions: cache.evictions,
@@ -147,6 +182,17 @@ pub struct MetricsSnapshot {
     pub stage2_execs: u64,
     /// Batches that coalesced more than one stage-2 variant.
     pub coalesced_batches: u64,
+    /// Tiles row-gathered out of covering cached artifacts during
+    /// partial-cover stage-1 reuse (v2.4).
+    pub stage1_tile_gathers: u64,
+    /// Result tiles emitted by the streaming stage-2 executor (v2.4).
+    pub stream_tiles: u64,
+    /// Peak values buffered toward any bounded stream consumer (v2.4).
+    pub stream_peak_buffered: u64,
+    /// Stage-1 wall milliseconds the neighbor cache saved (v2.4): each
+    /// hit credits the served entry's recorded build time, making the
+    /// cache's win directly visible in dashboards.
+    pub stage1_saved_ms: f64,
     /// Neighbor-cache occupancy: resident entries (gauge, v2.3).
     pub cache_entries: u64,
     /// Neighbor-cache occupancy: approximate resident bytes (gauge, v2.3).
@@ -186,6 +232,22 @@ mod tests {
         let h = LatencyHisto::default();
         assert_eq!(h.mean_s(), 0.0);
         assert_eq!(h.quantile_s(0.99), 0.0);
+    }
+
+    #[test]
+    fn stage1_saved_and_stream_gauges() {
+        let m = Metrics::default();
+        m.add_stage1_saved(0.002);
+        m.add_stage1_saved(0.0005);
+        assert!((m.stage1_saved_ms() - 2.5).abs() < 1e-6);
+        // the peak gauge only ever rises
+        m.note_stream_buffered(80);
+        m.note_stream_buffered(40);
+        let s = m.snapshot();
+        assert!((s.stage1_saved_ms - 2.5).abs() < 1e-6);
+        assert_eq!(s.stream_peak_buffered, 80);
+        assert_eq!(s.stream_tiles, 0);
+        assert_eq!(s.stage1_tile_gathers, 0);
     }
 
     #[test]

@@ -49,6 +49,21 @@
 //! ([`InterpolationResponse::stage1_cache_hit`] /
 //! [`InterpolationResponse::stage2_groups`]).
 //!
+//! ## Tiled, streamed delivery
+//!
+//! Stage 2 executes **per tile** ([`crate::aidw::plan::TilePlan`], sized
+//! by the resolved `tile_rows`) over borrowed row slices of the shared
+//! artifact and delivers every tile as a frame the moment it is
+//! computed.  [`Coordinator::submit_stream`] exposes the frames as a
+//! bounded [`TileStream`] (backpressure at
+//! [`CoordinatorConfig::stream_buffer_tiles`] outstanding tiles);
+//! [`Coordinator::submit`]'s [`Ticket`] concatenates the frames of an
+//! unbounded channel — the monolithic API is a view over the tiled one,
+//! so there is exactly one execution path and the two are bit-identical
+//! by construction.  Tiling is also the grain of partial-cover cache
+//! reuse: a raster that misses as a whole row-gathers the tiles a cached
+//! artifact covers and sweeps only the rest.
+//!
 //! Datasets are **live** ([`crate::live`]): appends and removals layer a
 //! small delta overlay over the immutable epoch grid, queries merge grid
 //! kNN over the epoch with brute force over the delta, and a background
@@ -67,13 +82,13 @@ pub mod options;
 pub mod request;
 pub mod snapshot;
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 
 use crate::aidw::params::AidwParams;
 use crate::aidw::pipeline::weighted_stage_on;
-use crate::aidw::plan::{self, NeighborArtifact, NeighborTable, SearchKind, Stage1Plan};
+use crate::aidw::plan::{self, NeighborArtifact, NeighborTable, SearchKind, Stage1Plan, TilePlan};
 use crate::error::{Error, Result};
 use crate::geom::PointSet;
 use crate::grid::GridConfig;
@@ -91,11 +106,14 @@ pub use cache::NeighborCache;
 pub use dataset::{Dataset, DatasetRegistry};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use options::{LocalMode, QueryOptions, ResolvedOptions, Stage1Key, Stage2Key};
-pub use request::{Backend, InterpolationRequest, InterpolationResponse, Ticket};
+pub use request::{
+    Backend, InterpolationRequest, InterpolationResponse, StreamSummary, Ticket, TileResult,
+    TileStream,
+};
 
 use batcher::{Batch, JobQueue};
 use cache::CacheKey;
-use request::Job;
+use request::{FrameTx, Job, StreamFrame, StreamHandle};
 
 /// Stage-2 engine selection.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -150,6 +168,19 @@ pub struct CoordinatorConfig {
     /// artifacts are megabytes each, so an entry bound alone would let
     /// memory scale with raster size).  0 = entry bound only.
     pub neighbor_cache_bytes: usize,
+    /// Default stage-2 tile size in query rows (requests may override via
+    /// [`QueryOptions::tile_rows`]).  `None` = one whole-raster tile —
+    /// the pre-streaming behaviour.  Tiling is numerics-neutral; it sets
+    /// execution/delivery granularity and the grain of partial-cover
+    /// cache reuse.
+    pub tile_rows: Option<usize>,
+    /// Bound on tiles in flight toward one stream consumer: the stage-2
+    /// executor blocks once this many tiles are unconsumed, so
+    /// service-side buffering stays at most
+    /// `stream_buffer_tiles x tile_rows` values per stream
+    /// (whole-raster tickets are exempt — they buffer freely so an
+    /// unconsumed ticket can never stall the pipeline).  Min 1.
+    pub stream_buffer_tiles: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -170,6 +201,8 @@ impl Default for CoordinatorConfig {
             live: LiveConfig::default(),
             neighbor_cache: 64,
             neighbor_cache_bytes: 256 << 20, // 256 MiB
+            tile_rows: None,
+            stream_buffer_tiles: 2,
         }
     }
 }
@@ -359,7 +392,9 @@ impl Coordinator {
                 ds.retire();
                 if let Some(dir) = &self.shared.config.live_dir {
                     std::fs::remove_file(crate::live::wal::live_path(dir, name)).ok();
-                    std::fs::remove_file(crate::live::wal::wal_path(dir, name)).ok();
+                    let base = crate::live::wal::wal_path(dir, name);
+                    crate::live::wal::remove_rotated_segments(&base);
+                    std::fs::remove_file(base).ok();
                 }
                 true
             }
@@ -410,7 +445,32 @@ impl Coordinator {
     /// Fails fast — before the job reaches any pipeline thread — on empty
     /// queries, unknown datasets, and invalid option overrides (`k == 0`,
     /// `r_max <= r_min`, non-positive alpha levels, ...).
+    ///
+    /// Internally this **is** a stream: execution is tiled and delivered
+    /// frame by frame, and the [`Ticket`] concatenates the tiles back —
+    /// one execution path for both APIs.  The ticket's channel is
+    /// unbounded, so an unconsumed ticket never blocks the pipeline, and
+    /// dropping the ticket without waiting cancels the job (a queued slot
+    /// is reclaimed; an executing job stops delivering).
     pub fn submit(&self, request: InterpolationRequest) -> Result<Ticket> {
+        Ok(Ticket::new(self.enqueue(request, false)?))
+    }
+
+    /// Submit for **incremental delivery**: the returned [`TileStream`]
+    /// yields in-order [`TileResult`]s as stage 2 computes them, then a
+    /// terminal [`StreamSummary`].  The channel is bounded at
+    /// [`CoordinatorConfig::stream_buffer_tiles`] tiles, so a slow
+    /// consumer backpressures the stage-2 executor instead of buffering
+    /// the raster — constant memory on both sides.  Consume promptly (or
+    /// drop to cancel): while one stream's frames are unconsumed, the
+    /// executor blocks and later batches wait behind it.
+    pub fn submit_stream(&self, request: InterpolationRequest) -> Result<TileStream> {
+        self.enqueue(request, true)
+    }
+
+    /// Shared submission prologue: validate, resolve, stamp the snapshot
+    /// identity, and enqueue with the requested delivery flavor.
+    fn enqueue(&self, request: InterpolationRequest, bounded: bool) -> Result<TileStream> {
         if request.queries.is_empty() {
             return Err(Error::InvalidArgument("empty query list".into()));
         }
@@ -430,11 +490,23 @@ impl Coordinator {
         resolved.epoch = Some(snap.epoch);
         resolved.overlay = Some(snap.overlay_version());
         let n_queries = request.queries.len() as u64;
-        let (tx, rx) = mpsc::channel();
+        let buffered = Arc::new(AtomicUsize::new(0));
+        let cancel = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let (tx, rx) = if bounded {
+            // capacity counts *queued* tiles; the executor's one in-flight
+            // tile makes the total outstanding exactly stream_buffer_tiles
+            let cap = self.shared.config.stream_buffer_tiles.max(1) - 1;
+            let (tx, rx) = mpsc::sync_channel(cap);
+            (FrameTx::Bounded(tx), rx)
+        } else {
+            let (tx, rx) = mpsc::channel();
+            (FrameTx::Unbounded(tx), rx)
+        };
         let job = Job {
             request,
             resolved,
-            respond: tx,
+            respond: StreamHandle { tx, buffered: buffered.clone(), bounded },
+            cancel: cancel.clone(),
             enqueued: std::time::Instant::now(),
         };
         match self.shared.queue.push(job) {
@@ -446,7 +518,7 @@ impl Coordinator {
                     .metrics
                     .queries
                     .fetch_add(n_queries, Ordering::Relaxed);
-                Ok(Ticket { rx })
+                Ok(TileStream::new(rx, buffered, cancel))
             }
             Err(e) => {
                 self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
@@ -590,13 +662,21 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
         let (artifact, cache_hit) = match outcome {
             cache::CacheOutcome::Hit(art) => {
                 shared.metrics.stage1_cache_hits.fetch_add(1, Ordering::Relaxed);
+                // the saved-seconds counter: this hit skipped a sweep that
+                // cost the entry's recorded build time (ROADMAP PR-4(b))
+                shared.metrics.add_stage1_saved(art.stage1_s);
                 (art, true)
             }
-            cache::CacheOutcome::Subset(sub) => {
+            cache::CacheOutcome::Subset { artifact: mut sub, saved_s } => {
                 // a covering artifact served this raster's rows: no kNN
                 // sweep ran; re-insert under the exact key so repeats of
                 // this raster hit directly
                 shared.metrics.stage1_subset_hits.fetch_add(1, Ordering::Relaxed);
+                shared.metrics.add_stage1_saved(saved_s);
+                // record the stage-1 cost this artifact substitutes for,
+                // so later exact hits on the re-inserted entry credit a
+                // realistic saving instead of the gather's ~0
+                sub.stage1_s = saved_s;
                 let art = Arc::new(sub);
                 if let Some(key) = cache_key {
                     shared.cache.put(key, &queries, art.clone());
@@ -604,19 +684,41 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
                 (art, true)
             }
             cache::CacheOutcome::Miss => {
-                let art = Arc::new(match search {
-                    SearchKind::Grid => {
-                        stage1.execute_grid(&shared.pool, &snap.base.grid, &queries)
-                    }
-                    SearchKind::Merged => {
-                        stage1.execute_merged(&shared.pool, &snap.merged_view(), &queries)
-                    }
+                // tile-granular partial cover (ROADMAP PR-4(a)): when the
+                // batch has a tile plan, tiles whose rows live inside a
+                // same-identity cached artifact row-gather; only the
+                // uncovered tiles pay a kNN sweep
+                let partial = cache_key.as_ref().and_then(|key| {
+                    stage1_partial_cover(&shared, key, &stage1, search, &snap, &queries, opts.tile_rows)
                 });
-                shared.metrics.stage1_execs.fetch_add(1, Ordering::Relaxed);
-                if let Some(key) = cache_key {
-                    shared.cache.put(key, &queries, art.clone());
+                match partial {
+                    Some((art, all_covered)) => {
+                        let art = Arc::new(art);
+                        if let Some(key) = cache_key {
+                            shared.cache.put(key, &queries, art.clone());
+                        }
+                        // `cache_hit` reports whether the request paid for
+                        // stage 1: true only when *every* tile gathered
+                        // (rows spanning several cached rasters) — a
+                        // partially-swept batch did pay (reduced) time
+                        (art, all_covered)
+                    }
+                    None => {
+                        let art = Arc::new(match search {
+                            SearchKind::Grid => {
+                                stage1.execute_grid(&shared.pool, &snap.base.grid, &queries)
+                            }
+                            SearchKind::Merged => {
+                                stage1.execute_merged(&shared.pool, &snap.merged_view(), &queries)
+                            }
+                        });
+                        shared.metrics.stage1_execs.fetch_add(1, Ordering::Relaxed);
+                        if let Some(key) = cache_key {
+                            shared.cache.put(key, &queries, art.clone());
+                        }
+                        (art, false)
+                    }
                 }
-                (art, false)
             }
         };
 
@@ -628,7 +730,113 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
     // dropping tx closes the stage-2 loop
 }
 
-/// Stage 2: adaptive alpha + streamed weighted interpolation.
+/// Tile-granular partial-cover stage 1 (ROADMAP PR-4(a)): when a raster
+/// misses the cache as a whole, check per tile whether a same-identity
+/// cached artifact covers the tile's rows — covered tiles row-gather via
+/// `subset_rows`, only the uncovered tiles run a kNN sweep, and the
+/// per-tile artifacts are stitched back in row order.  Bit-identity holds
+/// because stage-1 rows are per-query functions of the snapshot (the same
+/// property behind whole-raster subset reuse).
+///
+/// Returns `None` when tiling is off, there is only one tile (the
+/// whole-raster subset pass already ran), or no tile is covered — the
+/// caller then sweeps the whole raster as before.  On `Some`, the bool
+/// is true when **every** tile was gathered (no sweep ran at all — the
+/// caller reports it as a cache hit); the returned artifact's `stage1_s`
+/// is the wall time actually spent sweeping.
+fn stage1_partial_cover(
+    shared: &Shared,
+    key: &CacheKey,
+    stage1: &Stage1Plan,
+    search: SearchKind,
+    snap: &LiveSnapshot,
+    queries: &[(f64, f64)],
+    tile_rows: Option<usize>,
+) -> Option<(NeighborArtifact, bool)> {
+    let tr = tile_rows?;
+    let plan = TilePlan::new(queries.len(), Some(tr));
+    if plan.n_tiles() <= 1 {
+        return None;
+    }
+    // pass 1: gather every covered tile out of the cache
+    let mut parts: Vec<Option<NeighborArtifact>> = Vec::with_capacity(plan.n_tiles());
+    let mut covered_tiles = 0usize;
+    let mut saved_s = 0.0f64;
+    for range in plan.iter() {
+        match shared.cache.subset_for(key, &queries[range]) {
+            Some((art, s)) => {
+                covered_tiles += 1;
+                saved_s += s;
+                parts.push(Some(art));
+            }
+            None => parts.push(None),
+        }
+    }
+    if covered_tiles == 0 {
+        return None;
+    }
+    // pass 2: sweep only the uncovered tiles
+    let mut sweep_s = 0.0f64;
+    let mut swept_tiles = 0usize;
+    for (tile, part) in parts.iter_mut().enumerate() {
+        if part.is_some() {
+            continue;
+        }
+        let range = plan.range(tile);
+        let art = match search {
+            SearchKind::Grid => {
+                stage1.execute_grid(&shared.pool, &snap.base.grid, &queries[range])
+            }
+            SearchKind::Merged => {
+                stage1.execute_merged(&shared.pool, &snap.merged_view(), &queries[range])
+            }
+        };
+        sweep_s += art.stage1_s;
+        swept_tiles += 1;
+        *part = Some(art);
+    }
+    // stitch in row order; alphas stay lazy — recomputed from the same
+    // (r_exp, params), bit-identical whether a row was gathered or swept
+    let width = stage1.gather;
+    let mut r_obs = Vec::with_capacity(queries.len());
+    let mut idx: Option<Vec<u32>> = width.map(|w| Vec::with_capacity(queries.len() * w));
+    for part in parts {
+        let part = part.expect("every tile gathered or swept");
+        r_obs.extend_from_slice(&part.r_obs);
+        if let (Some(idx), Some(table)) = (idx.as_mut(), part.neighbors.as_ref()) {
+            idx.extend_from_slice(&table.idx);
+        }
+    }
+    let neighbors = match (idx, width) {
+        (Some(idx), Some(w)) => {
+            debug_assert_eq!(idx.len(), queries.len() * w);
+            Some(NeighborTable { idx, width: w })
+        }
+        _ => None,
+    };
+    shared
+        .metrics
+        .stage1_tile_gathers
+        .fetch_add(covered_tiles as u64, Ordering::Relaxed);
+    shared.metrics.add_stage1_saved(saved_s);
+    if swept_tiles > 0 {
+        shared.metrics.stage1_execs.fetch_add(1, Ordering::Relaxed);
+    } else {
+        // every tile was gathered (rows spanning several cached rasters):
+        // no sweep ran at all — a subset-reuse event
+        shared.metrics.stage1_subset_hits.fetch_add(1, Ordering::Relaxed);
+    }
+    Some((
+        NeighborArtifact::new(r_obs, stage1.r_exp, stage1.params.clone(), neighbors, sweep_s),
+        swept_tiles == 0,
+    ))
+}
+
+/// Stage 2: adaptive alpha + tiled, incrementally-delivered weighted
+/// interpolation.  Every batch is executed tile by tile per member job
+/// and delivered as frames; the whole-raster `submit` path consumes the
+/// same frames through its [`Ticket`], so there is exactly one execution
+/// path.
 fn stage2_loop(
     shared: Arc<Shared>,
     rx: mpsc::Receiver<Stage2Job>,
@@ -649,37 +857,7 @@ fn stage2_loop(
     };
 
     while let Ok(sj) = rx.recv() {
-        let result = run_stage2(&shared, &engine, &sj);
-        match result {
-            Ok(out) => {
-                // a cache-hit batch spent no stage-1 time of its own
-                let stage1_s = if sj.cache_hit { 0.0 } else { sj.artifact.stage1_s };
-                let knn_s = stage1_s + out.alpha_extra_s;
-                shared.metrics.add_stage_times(knn_s, out.interp_s);
-                shared
-                    .metrics
-                    .stage2_execs
-                    .fetch_add(out.groups as u64, Ordering::Relaxed);
-                if out.groups > 1 {
-                    shared.metrics.coalesced_batches.fetch_add(1, Ordering::Relaxed);
-                }
-                // merged (mutated-snapshot) batches run the CPU path even
-                // when artifacts are loaded; report what actually ran
-                let backend = if engine.is_some() && sj.snap.is_compacted() {
-                    Backend::Pjrt
-                } else {
-                    Backend::CpuFallback
-                };
-                respond_batch(&shared, sj, out, knn_s, backend);
-            }
-            Err(e) => {
-                shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
-                let msg = e.to_string();
-                for job in sj.batch.jobs {
-                    let _ = job.respond.send(Err(Error::Service(msg.clone())));
-                }
-            }
-        }
+        run_stage2_streamed(&shared, &engine, &sj);
     }
 }
 
@@ -694,24 +872,41 @@ fn effective_params(opts: &ResolvedOptions, snap: &LiveSnapshot) -> AidwParams {
     p
 }
 
-/// What one batch's stage 2 produced.
-struct Stage2Outcome {
-    values: Vec<f64>,
-    /// Stage-1-attributed extra seconds (the PJRT path recomputes alpha
-    /// on-device from r_obs).
-    alpha_extra_s: f64,
-    interp_s: f64,
-    /// Distinct stage-2 executions this batch split into.
-    groups: usize,
+/// The audit echo for one job: its *own* resolved options (the batch may
+/// mix variants) with the live area, clamped k, and the served
+/// (epoch, overlay) pair substituted.  The pair may be newer than the
+/// admission pair if a compaction or mutation published in between —
+/// still one single snapshot for the batch.
+fn echo_options(resolved: &ResolvedOptions, snap: &LiveSnapshot) -> ResolvedOptions {
+    let mut echoed = *resolved;
+    echoed.area = Some(echoed.area.unwrap_or_else(|| snap.area()));
+    echoed.k = echoed.k.min(snap.live_len).max(1);
+    echoed.epoch = Some(snap.epoch);
+    echoed.overlay = Some(snap.overlay_version());
+    echoed
 }
 
-/// Execute stage 2 for one batch: once per distinct stage-2 key, each
-/// group consuming its own rows of the shared [`NeighborArtifact`].
-fn run_stage2(shared: &Shared, engine: &Option<Engine>, sj: &Stage2Job) -> Result<Stage2Outcome> {
+/// Execute one batch's stage 2 **per member job, per tile**, delivering
+/// each tile as a frame the moment it is computed, then a terminal
+/// summary per job.
+///
+/// Tiling facts:
+/// * each job's [`TilePlan`] comes from its own resolved `tile_rows`
+///   (jobs in one batch may differ — tiling is not an admission key);
+/// * a tile executes over **borrowed row slices** of the shared
+///   [`NeighborArtifact`] — queries, alphas, r_obs, and the neighbor
+///   table rows are contiguous per job, so no gather/scatter copies;
+/// * peak stage-2 memory is one tile's values: nothing whole-raster is
+///   materialized here (the whole-raster `submit` concatenates
+///   client-side in its [`Ticket`]);
+/// * a bounded (explicit-stream) consumer backpressures the send once
+///   `stream_buffer_tiles` tiles are outstanding; an error mid-job emits
+///   a structured error frame for that job and moves on to the next job.
+fn run_stage2_streamed(shared: &Shared, engine: &Option<Engine>, sj: &Stage2Job) {
     let opts = &sj.batch.options;
     let art: &NeighborArtifact = &sj.artifact;
     let params = effective_params(opts, &sj.snap);
-    let groups = sj.batch.stage2_groups();
+    let stage2_groups = sj.batch.stage2_groups().len();
 
     // Lazy alphas: the PJRT stage 2 recomputes alpha on-device from
     // r_obs, so only the CPU consumers — merged (mutated-snapshot)
@@ -722,30 +917,18 @@ fn run_stage2(shared: &Shared, engine: &Option<Engine>, sj: &Stage2Job) -> Resul
     let needs_alphas = !sj.snap.is_compacted() || engine.is_none();
     let t_alpha = std::time::Instant::now();
     let alphas: &[f64] = if needs_alphas { art.alphas() } else { &[] };
-    let lazy_alpha_s = if needs_alphas { t_alpha.elapsed().as_secs_f64() } else { 0.0 };
+    let mut alpha_extra_s = if needs_alphas { t_alpha.elapsed().as_secs_f64() } else { 0.0 };
 
-    // fast path (the overwhelmingly common single-variant batch): the
-    // one group *is* the whole contiguous block — execute over borrowed
-    // slices of the artifact, no gather/scatter copies
-    if groups.len() == 1 {
-        let (values, alpha_extra_s, interp_s) = run_stage2_group(
-            shared,
-            engine,
-            sj,
-            &params,
-            groups[0].0,
-            &sj.queries,
-            alphas,
-            &art.r_obs,
-            art.neighbors.as_ref(),
-        )?;
-        return Ok(Stage2Outcome {
-            values,
-            alpha_extra_s: alpha_extra_s + lazy_alpha_s,
-            interp_s,
-            groups: 1,
-        });
-    }
+    // a cache-hit batch spent no stage-1 time of its own
+    let stage1_s = if sj.cache_hit { 0.0 } else { art.stage1_s };
+
+    // merged (mutated-snapshot) batches run the CPU path even when
+    // artifacts are loaded; report what actually ran
+    let backend = if engine.is_some() && sj.snap.is_compacted() {
+        Backend::Pjrt
+    } else {
+        Backend::CpuFallback
+    };
 
     // per-job row offsets into the concatenated query block
     let mut offsets = Vec::with_capacity(sj.batch.jobs.len());
@@ -755,70 +938,114 @@ fn run_stage2(shared: &Shared, engine: &Option<Engine>, sj: &Stage2Job) -> Resul
         off += job.request.queries.len();
     }
 
-    let mut values = vec![0f64; sj.queries.len()];
-    let mut alpha_extra_s = lazy_alpha_s;
+    let total = sj.queries.len();
     let mut interp_s = 0.0f64;
 
-    for (key, members) in &groups {
-        // gather the group's rows (each job is contiguous; a group of
-        // several jobs may not be)
-        let rows: usize = members
-            .iter()
-            .map(|&m| sj.batch.jobs[m].request.queries.len())
-            .sum();
-        let mut g_queries = Vec::with_capacity(rows);
-        let mut g_alphas = Vec::with_capacity(if needs_alphas { rows } else { 0 });
-        let mut g_robs = Vec::with_capacity(rows);
-        for &m in members {
-            let start = offsets[m];
-            let len = sj.batch.jobs[m].request.queries.len();
-            g_queries.extend_from_slice(&sj.queries[start..start + len]);
-            if needs_alphas {
-                g_alphas.extend_from_slice(&alphas[start..start + len]);
+    for (ji, job) in sj.batch.jobs.iter().enumerate() {
+        let start = offsets[ji];
+        let len = job.request.queries.len();
+        let key = job.resolved.stage2_key();
+        let plan = TilePlan::new(len, job.resolved.tile_rows);
+        let echoed = echo_options(&job.resolved, &sj.snap);
+        let mut delivered = true;
+        for (tile_index, range) in plan.iter().enumerate() {
+            if job.cancelled() {
+                delivered = false;
+                break; // consumer dropped its handle mid-stream
             }
-            g_robs.extend_from_slice(&art.r_obs[start..start + len]);
+            let gs = start + range.start;
+            let ge = start + range.end;
+            let q = &sj.queries[gs..ge];
+            let a: &[f64] = if needs_alphas { &alphas[gs..ge] } else { &[] };
+            let r = &art.r_obs[gs..ge];
+            let tbl = art
+                .neighbors
+                .as_ref()
+                .map(|t| (&t.idx[gs * t.width..ge * t.width], t.width));
+            match run_stage2_tile(shared, engine, sj, &params, key, q, a, r, tbl) {
+                Ok((values, a_s, i_s)) => {
+                    alpha_extra_s += a_s;
+                    interp_s += i_s;
+                    let n_vals = values.len();
+                    // gauge before send: "buffered" includes the frame the
+                    // (possibly blocked) send is carrying, so the recorded
+                    // peak is the true outstanding maximum
+                    job.respond.buffered.fetch_add(n_vals, Ordering::Relaxed);
+                    if job.respond.bounded {
+                        shared
+                            .metrics
+                            .note_stream_buffered(job.respond.buffered.load(Ordering::Relaxed));
+                    }
+                    let frame = StreamFrame::Tile(TileResult {
+                        tile_index,
+                        n_tiles: plan.n_tiles(),
+                        row_range: (range.start, range.end),
+                        values,
+                        options: echoed,
+                    });
+                    let alive =
+                        || !job.cancelled() && shared.running.load(Ordering::Relaxed);
+                    if job.respond.tx.send_while(frame, alive) {
+                        shared.metrics.stream_tiles.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        // consumer gone (dropped ticket/stream): undo the
+                        // gauge and skip this job's remaining tiles
+                        job.respond.buffered.fetch_sub(n_vals, Ordering::Relaxed);
+                        delivered = false;
+                        break;
+                    }
+                }
+                Err(e) => {
+                    // structured mid-stream error: this job fails (after
+                    // any tiles it already received); the batch's other
+                    // jobs still get their own tiles
+                    shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = job.respond.tx.send_while(
+                        StreamFrame::Err(Error::Service(e.to_string())),
+                        || !job.cancelled() && shared.running.load(Ordering::Relaxed),
+                    );
+                    delivered = false;
+                    break;
+                }
+            }
         }
-        let g_table = art.neighbors.as_ref().map(|t| {
-            let mut idx = Vec::with_capacity(rows * t.width);
-            for &m in members {
-                let start = offsets[m];
-                let len = sj.batch.jobs[m].request.queries.len();
-                idx.extend_from_slice(&t.idx[start * t.width..(start + len) * t.width]);
-            }
-            NeighborTable { idx, width: t.width }
-        });
-
-        let (out, a_s, i_s) = run_stage2_group(
-            shared,
-            engine,
-            sj,
-            &params,
-            *key,
-            &g_queries,
-            &g_alphas,
-            &g_robs,
-            g_table.as_ref(),
-        )?;
-        alpha_extra_s += a_s;
-        interp_s += i_s;
-
-        // scatter the group's rows back into batch order
-        let mut gi = 0usize;
-        for &m in members {
-            let start = offsets[m];
-            let len = sj.batch.jobs[m].request.queries.len();
-            values[start..start + len].copy_from_slice(&out[gi..gi + len]);
-            gi += len;
+        if delivered {
+            shared
+                .metrics
+                .latency
+                .record(job.enqueued.elapsed().as_secs_f64());
+            let _ = job.respond.tx.send_while(
+                StreamFrame::Done(StreamSummary {
+                    rows: len,
+                    n_tiles: plan.n_tiles(),
+                    knn_s: stage1_s + alpha_extra_s,
+                    interp_s,
+                    batch_queries: total,
+                    backend,
+                    options: echoed,
+                    stage1_cache_hit: sj.cache_hit,
+                    stage2_groups,
+                }),
+                || !job.cancelled() && shared.running.load(Ordering::Relaxed),
+            );
         }
     }
 
-    Ok(Stage2Outcome { values, alpha_extra_s, interp_s, groups: groups.len() })
+    shared.metrics.add_stage_times(stage1_s + alpha_extra_s, interp_s);
+    shared
+        .metrics
+        .stage2_execs
+        .fetch_add(stage2_groups as u64, Ordering::Relaxed);
+    if stage2_groups > 1 {
+        shared.metrics.coalesced_batches.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
-/// One stage-2 group execution over (a slice of) the neighbor artifact;
-/// returns (values, alpha_extra_s, interp_s).
+/// One stage-2 tile execution over borrowed row slices of the neighbor
+/// artifact; returns (values, alpha_extra_s, interp_s).  `table` is the
+/// tile's neighbor-index rows plus the row width.
 #[allow(clippy::too_many_arguments)]
-fn run_stage2_group(
+fn run_stage2_tile(
     shared: &Shared,
     engine: &Option<Engine>,
     sj: &Stage2Job,
@@ -827,7 +1054,7 @@ fn run_stage2_group(
     queries: &[(f64, f64)],
     alphas: &[f64],
     r_obs: &[f64],
-    table: Option<&NeighborTable>,
+    table: Option<(&[u32], usize)>,
 ) -> Result<(Vec<f64>, f64, f64)> {
     let t0 = std::time::Instant::now();
     if !sj.snap.is_compacted() {
@@ -835,13 +1062,13 @@ fn run_stage2_group(
         // cannot see overlay deltas; the compactor restores the artifact
         // path at the next epoch
         let v = match table {
-            Some(t) => crate::live::merged_local_weighted_on(
+            Some((idx, width)) => crate::live::merged_local_weighted_on(
                 &shared.pool,
                 &sj.snap,
                 queries,
                 alphas,
-                &t.idx,
-                t.width,
+                idx,
+                width,
             ),
             None => {
                 crate::live::merged_weighted_stage_on(&shared.pool, &sj.snap, queries, alphas)
@@ -858,18 +1085,22 @@ fn run_stage2_group(
                 AidwExecutor::new(engine)
             };
             let (v, times) = match table {
-                Some(t) => {
-                    exec.local_aidw(&dataset.points, queries, r_obs, &t.idx, t.width, params)?
+                Some((idx, width)) => {
+                    exec.local_aidw(&dataset.points, queries, r_obs, idx, width, params)?
                 }
                 None => exec.improved_aidw(&dataset.points, queries, r_obs, params, key.variant)?,
             };
             Ok((v, times.knn_s, times.interp_s))
         }
         None => {
-            // pure-rust stage 2 over the artifact's alphas
+            // pure-rust stage 2 over the artifact's alphas (the one
+            // shared A5 kernel for local mode — local_weighted_with)
             let v = match table {
-                Some(t) => {
-                    plan::local_weighted_on(&shared.pool, &dataset.points, queries, alphas, t)
+                Some((idx, width)) => {
+                    plan::local_weighted_with(&shared.pool, queries, alphas, idx, width, |pid| {
+                        let i = pid as usize;
+                        (dataset.points.xs[i], dataset.points.ys[i], dataset.points.zs[i])
+                    })
                 }
                 None => weighted_stage_on(&shared.pool, &dataset.points, queries, alphas),
             };
@@ -878,50 +1109,14 @@ fn run_stage2_group(
     }
 }
 
-/// Split batch results back per job and respond.  Each job's echo is its
-/// *own* resolved options (a batch may mix stage-2 variants) with the
-/// live area, clamped k, and served epoch substituted for client-side
-/// audit, plus the planner facts (cache hit, stage-2 group count).
-fn respond_batch(shared: &Shared, sj: Stage2Job, out: Stage2Outcome, knn_s: f64, backend: Backend) {
-    let total = sj.queries.len();
-    let stage2_groups = out.groups;
-    let mut offset = 0usize;
-    for job in sj.batch.jobs {
-        let n = job.request.queries.len();
-        let slice = out.values[offset..offset + n].to_vec();
-        offset += n;
-        let mut echoed = job.resolved;
-        echoed.area = Some(echoed.area.unwrap_or_else(|| sj.snap.area()));
-        // the audit record reports what ran: k is clamped to the live
-        // count, and the (epoch, overlay) pair is the snapshot the batch
-        // was served from (it may be newer than the admission pair if a
-        // compaction or mutation published in between — still one single
-        // snapshot for the batch)
-        echoed.k = echoed.k.min(sj.snap.live_len).max(1);
-        echoed.epoch = Some(sj.snap.epoch);
-        echoed.overlay = Some(sj.snap.overlay_version());
-        shared
-            .metrics
-            .latency
-            .record(job.enqueued.elapsed().as_secs_f64());
-        let _ = job.respond.send(Ok(InterpolationResponse {
-            values: slice,
-            knn_s,
-            interp_s: out.interp_s,
-            batch_queries: total,
-            backend,
-            options: echoed,
-            stage1_cache_hit: sj.cache_hit,
-            stage2_groups,
-        }));
-    }
-}
-
 fn fail_batch(shared: &Shared, batch: Batch, err: &Error) {
     shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
     let msg = err.to_string();
     for job in batch.jobs {
-        let _ = job.respond.send(Err(Error::Service(msg.clone())));
+        let _ = job.respond.tx.send_while(
+            StreamFrame::Err(Error::Service(msg.clone())),
+            || !job.cancelled() && shared.running.load(Ordering::Relaxed),
+        );
     }
 }
 

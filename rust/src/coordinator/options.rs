@@ -64,6 +64,13 @@ pub struct QueryOptions {
     pub r_max: Option<f64>,
     /// Explicit study-region area `A` of Eq. 2 (default: dataset bounds).
     pub area: Option<f64>,
+    /// Stage-2 tile size in query rows (protocol v2.4): results are
+    /// executed and delivered per tile of at most this many rows.  `None`
+    /// inherits the coordinator default (itself `None` = one whole-raster
+    /// tile).  Tiling never changes the numbers — tiles concatenated in
+    /// order are bit-identical to the monolithic pass — so it is part of
+    /// neither stage key.
+    pub tile_rows: Option<usize>,
 }
 
 impl QueryOptions {
@@ -122,6 +129,13 @@ impl QueryOptions {
         self
     }
 
+    /// Execute and deliver stage 2 per tile of at most `rows` query rows
+    /// (streaming granularity; numerics-neutral).
+    pub fn tile_rows(mut self, rows: usize) -> Self {
+        self.tile_rows = Some(rows);
+        self
+    }
+
     /// True when no field overrides the coordinator defaults.
     pub fn is_default(&self) -> bool {
         *self == QueryOptions::default()
@@ -142,6 +156,7 @@ impl QueryOptions {
             r_min: self.r_min.unwrap_or(config.params.r_min),
             r_max: self.r_max.unwrap_or(config.params.r_max),
             area: self.area.or(config.params.area),
+            tile_rows: self.tile_rows.or(config.tile_rows),
             epoch: None,
             overlay: None,
         }
@@ -172,6 +187,12 @@ pub struct ResolvedOptions {
     /// `None` = the dataset's own bounding-box area (substituted in the
     /// response echo once the dataset is known).
     pub area: Option<f64>,
+    /// Stage-2 tile size in query rows; `None` = one whole-raster tile.
+    /// Execution/delivery granularity only — tiles concatenated in order
+    /// are bit-identical to the monolithic pass, so this is deliberately
+    /// part of **neither** [`Stage1Key`] nor [`Stage2Key`] (requests
+    /// differing only here still coalesce and share cached artifacts).
+    pub tile_rows: Option<usize>,
     /// The dataset epoch this request was admitted against — **server
     /// assigned** at submit time (never client settable; the wire decoder
     /// ignores an incoming `epoch` field).  The epoch is part of
@@ -204,6 +225,7 @@ impl Default for ResolvedOptions {
             r_min: p.r_min,
             r_max: p.r_max,
             area: None,
+            tile_rows: None,
             epoch: None,
             overlay: None,
         }
@@ -290,6 +312,11 @@ impl ResolvedOptions {
                 "local_neighbors must be >= 1 (or unset for dense weighting)".into(),
             ));
         }
+        if self.tile_rows == Some(0) {
+            return Err(Error::InvalidArgument(
+                "tile_rows must be >= 1 (or unset for one whole-raster tile)".into(),
+            ));
+        }
         Ok(())
     }
 }
@@ -363,6 +390,26 @@ mod tests {
         let mut zero_local = QueryOptions::new();
         zero_local.local = Some(LocalMode::Nearest(0));
         assert!(zero_local.resolve(&cfg).validate().is_err());
+        assert!(QueryOptions::new().tile_rows(0).resolve(&cfg).validate().is_err());
+        assert!(QueryOptions::new().tile_rows(1).resolve(&cfg).validate().is_ok());
+    }
+
+    #[test]
+    fn tile_rows_is_in_neither_stage_key() {
+        // tiling is execution/delivery granularity, not numerics: jobs
+        // differing only in tile_rows must coalesce and share artifacts
+        let cfg = config();
+        let base = QueryOptions::new().resolve(&cfg);
+        let tiled = QueryOptions::new().tile_rows(64).resolve(&cfg);
+        assert_eq!(tiled.tile_rows, Some(64));
+        assert_ne!(base, tiled, "resolved sets differ");
+        assert_eq!(base.stage1_key(), tiled.stage1_key());
+        assert_eq!(base.stage2_key(), tiled.stage2_key());
+        // config default flows through when the request is silent
+        let mut cfg2 = config();
+        cfg2.tile_rows = Some(128);
+        assert_eq!(QueryOptions::new().resolve(&cfg2).tile_rows, Some(128));
+        assert_eq!(QueryOptions::new().tile_rows(8).resolve(&cfg2).tile_rows, Some(8));
     }
 
     #[test]

@@ -1,6 +1,18 @@
-//! Request/response types flowing through the coordinator.
+//! Request/response types flowing through the coordinator, including the
+//! tiled streaming surface.
+//!
+//! Every submission — streaming or not — is answered as a sequence of
+//! frames: zero or more in-order [`TileResult`]s, then one terminal
+//! [`StreamSummary`] (or an error).  [`Coordinator::submit_stream`]
+//! exposes the frames directly as a [`TileStream`]; the whole-raster
+//! [`Ticket`] is a thin wrapper that concatenates the tiles back into one
+//! [`InterpolationResponse`], so there is exactly **one** execution path
+//! (tiled) and the monolithic API is a view over it.
+//!
+//! [`Coordinator::submit_stream`]: super::Coordinator::submit_stream
 
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 
 use crate::error::{Error, Result};
 use crate::runtime::Variant;
@@ -53,15 +65,29 @@ impl InterpolationRequest {
         self.options.variant = Some(v);
         self
     }
+
+    /// Fluent shorthand for [`QueryOptions::tile_rows`].
+    pub fn with_tile_rows(mut self, rows: usize) -> Self {
+        self.options.tile_rows = Some(rows);
+        self
+    }
 }
 
 /// The prediction values plus execution metadata.
 #[derive(Debug, Clone)]
 pub struct InterpolationResponse {
     pub values: Vec<f64>,
-    /// Stage-1 (kNN + alpha) seconds for the batch this request rode in.
+    /// Stage-1 (kNN + alpha) seconds for the batch this request rode in,
+    /// measured up to this request's completion: delivery is per job —
+    /// each member's terminal frame is sent as soon as its own tiles are
+    /// done — so a later batch peer's on-device alpha seconds are not yet
+    /// included in an earlier peer's number (single-job batches, the
+    /// common case, are exact batch totals).
     pub knn_s: f64,
-    /// Stage-2 (weighted interpolating) seconds for the batch.
+    /// Stage-2 (weighted interpolating) seconds accumulated up to this
+    /// request's completion (see [`InterpolationResponse::knn_s`] for
+    /// the per-job delivery caveat; the `metrics` op reports exact
+    /// batch-level totals).
     pub interp_s: f64,
     /// Queries in the batch (how much sharing this request got).
     pub batch_queries: usize,
@@ -92,27 +118,313 @@ pub enum Backend {
     CpuFallback,
 }
 
-/// In-flight job: request + resolved options + response channel.
+/// One in-order tile of a (possibly streamed) interpolation: the values
+/// of query rows `row_range.0 .. row_range.1` in the *request's own* row
+/// space, plus the resolved-options audit echo (protocol v2.4).
+#[derive(Debug, Clone)]
+pub struct TileResult {
+    /// 0-based tile index; tiles arrive strictly in order.
+    pub tile_index: usize,
+    /// Total tiles this request splits into.
+    pub n_tiles: usize,
+    /// `[start, end)` query-row range this tile covers.
+    pub row_range: (usize, usize),
+    /// Predicted values for the covered rows.
+    pub values: Vec<f64>,
+    /// The fully-resolved options the request ran with (same audit echo
+    /// the whole-raster response carries: area filled, k clamped, served
+    /// epoch/overlay stamped).
+    pub options: ResolvedOptions,
+}
+
+/// The terminal frame of a stream: everything the whole-raster response
+/// reports except the values themselves.
+#[derive(Debug, Clone)]
+pub struct StreamSummary {
+    /// Query rows the stream delivered.
+    pub rows: usize,
+    /// Tiles the stream delivered.
+    pub n_tiles: usize,
+    /// Stage-1 (kNN + alpha) seconds for the batch this request rode in.
+    pub knn_s: f64,
+    /// Stage-2 seconds accumulated up to this request's completion.
+    pub interp_s: f64,
+    /// Queries in the batch (how much sharing this request got).
+    pub batch_queries: usize,
+    pub backend: Backend,
+    /// The resolved-options audit echo.
+    pub options: ResolvedOptions,
+    pub stage1_cache_hit: bool,
+    pub stage2_groups: usize,
+}
+
+/// A frame on the executor -> consumer channel.
+pub(crate) enum StreamFrame {
+    Tile(TileResult),
+    Done(StreamSummary),
+    Err(Error),
+}
+
+/// Sender half of a frame channel: bounded (explicit streams — the
+/// executor blocks once `stream_buffer_tiles` tiles are outstanding, the
+/// backpressure that keeps service-side buffering constant) or unbounded
+/// (whole-raster tickets — fire-and-forget like the pre-stream API, so an
+/// unconsumed ticket can never stall the pipeline).
+pub(crate) enum FrameTx {
+    Bounded(mpsc::SyncSender<StreamFrame>),
+    Unbounded(mpsc::Sender<StreamFrame>),
+}
+
+impl FrameTx {
+    /// Send one frame; `false` means the consumer is gone (dropped
+    /// ticket/stream) and the producer should stop delivering.  A
+    /// bounded send may block indefinitely on a live-but-idle consumer —
+    /// producers that must stay responsive (the coordinator's stage-2
+    /// thread, which `shutdown` joins) use [`FrameTx::send_while`].
+    pub fn send(&self, frame: StreamFrame) -> bool {
+        match self {
+            FrameTx::Bounded(tx) => tx.send(frame).is_ok(),
+            FrameTx::Unbounded(tx) => tx.send(frame).is_ok(),
+        }
+    }
+
+    /// Send one frame, but on a **full** bounded channel keep waiting
+    /// only while `keep_waiting()` holds (polled every few hundred
+    /// microseconds).  Returns `false` when the consumer is gone or the
+    /// wait was abandoned — either way the producer should stop
+    /// delivering to this consumer.  This is what keeps a held-but-idle
+    /// stream from wedging `Coordinator::shutdown`: the stage-2 thread
+    /// passes a predicate that clears on shutdown and on job
+    /// cancellation.
+    pub fn send_while(&self, frame: StreamFrame, keep_waiting: impl Fn() -> bool) -> bool {
+        match self {
+            FrameTx::Unbounded(tx) => tx.send(frame).is_ok(),
+            FrameTx::Bounded(tx) => {
+                let mut frame = frame;
+                loop {
+                    match tx.try_send(frame) {
+                        Ok(()) => return true,
+                        Err(mpsc::TrySendError::Full(f)) => {
+                            if !keep_waiting() {
+                                return false;
+                            }
+                            frame = f;
+                            std::thread::sleep(std::time::Duration::from_micros(200));
+                        }
+                        Err(mpsc::TrySendError::Disconnected(_)) => return false,
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The producer-side handle a [`Job`] carries: the frame sender plus the
+/// buffered-values gauge shared with the consuming [`TileStream`].
+pub(crate) struct StreamHandle {
+    pub tx: FrameTx,
+    /// Values sent but not yet received (shared with the receiver, which
+    /// decrements as it drains).
+    pub buffered: Arc<AtomicUsize>,
+    /// True for bounded (explicit-stream) channels — only those feed the
+    /// `stream_peak_buffered` gauge, because unbounded tickets buffer
+    /// arbitrarily by design.
+    pub bounded: bool,
+}
+
+/// In-flight job: request + resolved options + frame channel.
 pub(crate) struct Job {
     pub request: InterpolationRequest,
     /// Options resolved against the coordinator config at submit time —
     /// the batch-admission key.
     pub resolved: ResolvedOptions,
-    pub respond: mpsc::Sender<Result<InterpolationResponse>>,
+    pub respond: StreamHandle,
+    /// Set when the consumer dropped its ticket/stream without waiting:
+    /// the batcher sweeps cancelled jobs out of the queue (freeing their
+    /// backpressure slots) and the dispatcher skips them at batch
+    /// formation, so abandoned work is never executed.
+    pub cancel: Arc<AtomicBool>,
     pub enqueued: std::time::Instant,
 }
 
-/// Handle for awaiting an async submission.
+impl Job {
+    pub fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+}
+
+/// Consumer of a frame sequence: yields [`TileResult`]s strictly in
+/// order, then terminates with a [`StreamSummary`] (or an error).
+/// Dropping it before the terminal frame cancels the job — a queued job
+/// is swept (its backpressure slot freed), an executing one stops
+/// delivering at the next tile.
+pub struct TileStream {
+    rx: mpsc::Receiver<StreamFrame>,
+    buffered: Arc<AtomicUsize>,
+    cancel: Arc<AtomicBool>,
+    summary: Option<StreamSummary>,
+    finished: bool,
+    /// Tiles drained by non-blocking polls before the terminal frame.
+    collected: Vec<TileResult>,
+}
+
+impl TileStream {
+    pub(crate) fn new(
+        rx: mpsc::Receiver<StreamFrame>,
+        buffered: Arc<AtomicUsize>,
+        cancel: Arc<AtomicBool>,
+    ) -> TileStream {
+        TileStream {
+            rx,
+            buffered,
+            cancel,
+            summary: None,
+            finished: false,
+            collected: Vec::new(),
+        }
+    }
+
+    /// Block for the next tile.  `None` means the stream completed —
+    /// [`TileStream::summary`] then holds the terminal facts.  An error
+    /// (mid-stream or fail-stop) is yielded once, after which the stream
+    /// is finished.
+    pub fn next(&mut self) -> Option<Result<TileResult>> {
+        if self.finished {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(StreamFrame::Tile(t)) => {
+                self.buffered.fetch_sub(t.values.len(), Ordering::Relaxed);
+                Some(Ok(t))
+            }
+            Ok(StreamFrame::Done(s)) => {
+                self.summary = Some(s);
+                self.finished = true;
+                None
+            }
+            Ok(StreamFrame::Err(e)) => {
+                self.finished = true;
+                Some(Err(e))
+            }
+            Err(_) => {
+                self.finished = true;
+                Some(Err(Error::Unavailable(
+                    "coordinator dropped the job".into(),
+                )))
+            }
+        }
+    }
+
+    /// The terminal summary, once [`TileStream::next`] has returned
+    /// `None`.
+    pub fn summary(&self) -> Option<&StreamSummary> {
+        self.summary.as_ref()
+    }
+
+    /// Drain the whole stream and concatenate the tiles into the classic
+    /// whole-raster response (the monolithic API as a view over the tiled
+    /// one).
+    pub fn wait(mut self) -> Result<InterpolationResponse> {
+        let mut tiles = std::mem::take(&mut self.collected);
+        while let Some(next) = self.next() {
+            tiles.push(next?);
+        }
+        self.assemble(tiles)
+    }
+
+    /// Non-blocking poll toward the whole-raster response: drains every
+    /// available frame, returns `Some` once the terminal frame arrived.
+    /// `None` strictly means *not finished yet — poll again*; a dropped
+    /// job surfaces as `Some(Err(Unavailable))` instead of hanging the
+    /// poller forever.
+    pub fn try_collect(&mut self) -> Option<Result<InterpolationResponse>> {
+        loop {
+            if self.finished {
+                // terminal frame already consumed by an earlier poll
+                return Some(Err(Error::Unavailable(
+                    "response already taken from this ticket".into(),
+                )));
+            }
+            match self.rx.try_recv() {
+                Ok(StreamFrame::Tile(t)) => {
+                    self.buffered.fetch_sub(t.values.len(), Ordering::Relaxed);
+                    self.collected.push(t);
+                }
+                Ok(StreamFrame::Done(s)) => {
+                    self.summary = Some(s);
+                    self.finished = true;
+                    let tiles = std::mem::take(&mut self.collected);
+                    return Some(self.assemble(tiles));
+                }
+                Ok(StreamFrame::Err(e)) => {
+                    self.finished = true;
+                    return Some(Err(e));
+                }
+                Err(mpsc::TryRecvError::Empty) => return None,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    self.finished = true;
+                    return Some(Err(Error::Unavailable(
+                        "coordinator dropped the job".into(),
+                    )));
+                }
+            }
+        }
+    }
+
+    fn assemble(&mut self, tiles: Vec<TileResult>) -> Result<InterpolationResponse> {
+        let summary = self
+            .summary
+            .take()
+            .ok_or_else(|| Error::Unavailable("stream ended without a summary".into()))?;
+        let mut values = Vec::with_capacity(summary.rows);
+        for t in &tiles {
+            debug_assert_eq!(t.row_range.0, values.len(), "tiles must be contiguous");
+            values.extend_from_slice(&t.values);
+        }
+        debug_assert_eq!(values.len(), summary.rows);
+        Ok(InterpolationResponse {
+            values,
+            knn_s: summary.knn_s,
+            interp_s: summary.interp_s,
+            batch_queries: summary.batch_queries,
+            backend: summary.backend,
+            options: summary.options,
+            stage1_cache_hit: summary.stage1_cache_hit,
+            stage2_groups: summary.stage2_groups,
+        })
+    }
+}
+
+impl Drop for TileStream {
+    fn drop(&mut self) {
+        if !self.finished {
+            // dropped without draining: cancel the job so a queued slot is
+            // reclaimable and an executing producer stops delivering
+            self.cancel.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Handle for awaiting an async whole-raster submission: drains its
+/// underlying [`TileStream`] and concatenates the tiles.  Dropping it
+/// without waiting cancels the job (the batcher frees the queue slot).
 pub struct Ticket {
-    pub(crate) rx: mpsc::Receiver<Result<InterpolationResponse>>,
+    pub(crate) stream: Mutex<TileStream>,
 }
 
 impl Ticket {
+    pub(crate) fn new(stream: TileStream) -> Ticket {
+        Ticket { stream: Mutex::new(stream) }
+    }
+
+    /// The underlying frame stream (session-facade plumbing).
+    pub(crate) fn into_stream(self) -> TileStream {
+        self.stream.into_inner().unwrap()
+    }
+
     /// Block until the response arrives.
     pub fn wait(self) -> Result<InterpolationResponse> {
-        self.rx.recv().map_err(|_| {
-            crate::error::Error::Unavailable("coordinator dropped the job".into())
-        })?
+        self.into_stream().wait()
     }
 
     /// Poll without blocking.
@@ -121,13 +433,7 @@ impl Ticket {
     /// coordinator shut down or panicked before responding) surfaces as
     /// `Some(Err(Unavailable))` instead of hanging the poller forever.
     pub fn try_wait(&self) -> Option<Result<InterpolationResponse>> {
-        match self.rx.try_recv() {
-            Ok(r) => Some(r),
-            Err(mpsc::TryRecvError::Empty) => None,
-            Err(mpsc::TryRecvError::Disconnected) => Some(Err(Error::Unavailable(
-                "coordinator dropped the job".into(),
-            ))),
-        }
+        self.stream.lock().unwrap().try_collect()
     }
 }
 
@@ -135,27 +441,144 @@ impl Ticket {
 mod tests {
     use super::*;
 
+    fn parts() -> (mpsc::Sender<StreamFrame>, TileStream, Arc<AtomicBool>) {
+        let (tx, rx) = mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let stream = TileStream::new(rx, Arc::new(AtomicUsize::new(0)), cancel.clone());
+        (tx, stream, cancel)
+    }
+
+    fn tile(i: usize, n: usize, start: usize, values: Vec<f64>) -> TileResult {
+        let end = start + values.len();
+        TileResult {
+            tile_index: i,
+            n_tiles: n,
+            row_range: (start, end),
+            values,
+            options: ResolvedOptions::default(),
+        }
+    }
+
+    fn done(rows: usize, n_tiles: usize) -> StreamSummary {
+        StreamSummary {
+            rows,
+            n_tiles,
+            knn_s: 0.1,
+            interp_s: 0.2,
+            batch_queries: rows,
+            backend: Backend::CpuFallback,
+            options: ResolvedOptions::default(),
+            stage1_cache_hit: false,
+            stage2_groups: 1,
+        }
+    }
+
     #[test]
     fn builder_sets_options() {
         let req = InterpolationRequest::new("d", vec![(0.0, 0.0)])
             .with_k(5)
-            .with_variant(Variant::Naive);
+            .with_variant(Variant::Naive)
+            .with_tile_rows(16);
         assert_eq!(req.options.k, Some(5));
         assert_eq!(req.options.variant, Some(Variant::Naive));
+        assert_eq!(req.options.tile_rows, Some(16));
         assert_eq!(req.dataset, "d");
+    }
+
+    #[test]
+    fn ticket_concatenates_tiles_in_order() {
+        let (tx, stream, _cancel) = parts();
+        tx.send(StreamFrame::Tile(tile(0, 2, 0, vec![1.0, 2.0]))).unwrap();
+        tx.send(StreamFrame::Tile(tile(1, 2, 2, vec![3.0]))).unwrap();
+        tx.send(StreamFrame::Done(done(3, 2))).unwrap();
+        let resp = Ticket::new(stream).wait().unwrap();
+        assert_eq!(resp.values, vec![1.0, 2.0, 3.0]);
+        assert_eq!(resp.batch_queries, 3);
+        assert!((resp.knn_s - 0.1).abs() < 1e-12);
     }
 
     #[test]
     fn try_wait_distinguishes_pending_from_dropped() {
         // pending: sender alive, nothing sent
-        let (tx, rx) = mpsc::channel::<Result<InterpolationResponse>>();
-        let t = Ticket { rx };
+        let (tx, stream, _cancel) = parts();
+        let t = Ticket::new(stream);
         assert!(t.try_wait().is_none());
-        // dropped: sender gone without a response
+        // a tile alone is still pending (terminal frame not yet in)
+        tx.send(StreamFrame::Tile(tile(0, 2, 0, vec![1.0]))).unwrap();
+        assert!(t.try_wait().is_none());
+        // dropped: sender gone without a terminal frame
         drop(tx);
         match t.try_wait() {
             Some(Err(Error::Unavailable(_))) => {}
             other => panic!("expected Unavailable, got {:?}", other.map(|r| r.is_ok())),
         }
+    }
+
+    #[test]
+    fn try_wait_assembles_once_done_arrives() {
+        let (tx, stream, _cancel) = parts();
+        let t = Ticket::new(stream);
+        tx.send(StreamFrame::Tile(tile(0, 2, 0, vec![1.0, 2.0]))).unwrap();
+        tx.send(StreamFrame::Tile(tile(1, 2, 2, vec![3.0]))).unwrap();
+        tx.send(StreamFrame::Done(done(3, 2))).unwrap();
+        let resp = t.try_wait().expect("terminal frame arrived").unwrap();
+        assert_eq!(resp.values, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn stream_yields_tiles_then_summary() {
+        let (tx, mut stream, _cancel) = parts();
+        tx.send(StreamFrame::Tile(tile(0, 2, 0, vec![1.0]))).unwrap();
+        tx.send(StreamFrame::Tile(tile(1, 2, 1, vec![2.0]))).unwrap();
+        tx.send(StreamFrame::Done(done(2, 2))).unwrap();
+        let t0 = stream.next().unwrap().unwrap();
+        assert_eq!((t0.tile_index, t0.row_range), (0, (0, 1)));
+        let t1 = stream.next().unwrap().unwrap();
+        assert_eq!((t1.tile_index, t1.row_range), (1, (1, 2)));
+        assert!(stream.summary().is_none(), "summary only after exhaustion");
+        assert!(stream.next().is_none());
+        assert_eq!(stream.summary().unwrap().n_tiles, 2);
+        assert!(stream.next().is_none(), "finished streams stay finished");
+    }
+
+    #[test]
+    fn mid_stream_error_is_yielded_once() {
+        let (tx, mut stream, _cancel) = parts();
+        tx.send(StreamFrame::Tile(tile(0, 3, 0, vec![1.0]))).unwrap();
+        tx.send(StreamFrame::Err(Error::Service("boom".into()))).unwrap();
+        assert!(stream.next().unwrap().is_ok());
+        assert!(matches!(stream.next(), Some(Err(Error::Service(_)))));
+        assert!(stream.next().is_none());
+        assert!(stream.summary().is_none());
+    }
+
+    #[test]
+    fn drop_without_wait_cancels_the_job() {
+        let (_tx, stream, cancel) = parts();
+        assert!(!cancel.load(Ordering::Relaxed));
+        drop(stream);
+        assert!(cancel.load(Ordering::Relaxed), "drop must flag cancellation");
+        // a consumed ticket must NOT cancel (the job already completed)
+        let (tx, stream, cancel) = parts();
+        tx.send(StreamFrame::Done(done(0, 0))).unwrap();
+        let resp = Ticket::new(stream).wait().unwrap();
+        assert!(resp.values.is_empty());
+        assert!(!cancel.load(Ordering::Relaxed), "completed wait is not a cancel");
+    }
+
+    #[test]
+    fn buffered_gauge_decrements_as_tiles_drain() {
+        let (tx, rx) = mpsc::channel();
+        let buffered = Arc::new(AtomicUsize::new(0));
+        let cancel = Arc::new(AtomicBool::new(false));
+        let mut stream = TileStream::new(rx, buffered.clone(), cancel);
+        // producer side: count values in, send
+        buffered.fetch_add(2, Ordering::Relaxed);
+        tx.send(StreamFrame::Tile(tile(0, 1, 0, vec![1.0, 2.0]))).unwrap();
+        tx.send(StreamFrame::Done(done(2, 1))).unwrap();
+        assert_eq!(buffered.load(Ordering::Relaxed), 2);
+        stream.next().unwrap().unwrap();
+        assert_eq!(buffered.load(Ordering::Relaxed), 0, "receiver drains the gauge");
+        assert!(stream.next().is_none());
     }
 }

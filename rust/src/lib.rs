@@ -72,11 +72,11 @@ pub use error::{Error, Result};
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
-    pub use crate::aidw::plan::{NeighborArtifact, Stage1Plan, Stage2Plan};
+    pub use crate::aidw::plan::{NeighborArtifact, Stage1Plan, Stage2Plan, TilePlan};
     pub use crate::aidw::{params::AidwParams, pipeline, serial};
     pub use crate::coordinator::{
         Coordinator, CoordinatorConfig, InterpolationRequest, LocalMode, QueryOptions,
-        ResolvedOptions, Stage1Key, Stage2Key, Variant,
+        ResolvedOptions, Stage1Key, Stage2Key, StreamSummary, TileResult, TileStream, Variant,
     };
     pub use crate::error::{Error, Result};
     pub use crate::geom::{Aabb, PointSet};
@@ -84,6 +84,6 @@ pub mod prelude {
     pub use crate::knn::{brute, grid_knn};
     pub use crate::live::{LiveConfig, LiveDataset, LiveStatus};
     pub use crate::runtime::Engine;
-    pub use crate::session::{AidwSession, SessionReply, SessionTicket};
+    pub use crate::session::{AidwSession, SessionReply, SessionStream, SessionTicket};
     pub use crate::workload;
 }

@@ -59,9 +59,35 @@ pub fn live_path(dir: &Path, name: &str) -> PathBuf {
     dir.join(format!("{name}.live"))
 }
 
-/// `<dir>/<name>.wal` — the write-ahead log.
+/// `<dir>/<name>.wal` — the write-ahead log (segment 0; rotation appends
+/// `.1`, `.2`, ... siblings — see [`seg_path`]).
 pub fn wal_path(dir: &Path, name: &str) -> PathBuf {
     dir.join(format!("{name}.wal"))
+}
+
+/// Path of WAL segment `i`: segment 0 is the base `<name>.wal`, segment
+/// `i >= 1` is `<name>.wal.<i>`.  Segments are contiguous: replay walks
+/// 0, 1, 2, ... until the first missing index.
+pub fn seg_path(base: &Path, i: u64) -> PathBuf {
+    if i == 0 {
+        base.to_path_buf()
+    } else {
+        PathBuf::from(format!("{}.{i}", base.display()))
+    }
+}
+
+/// Delete every rotated segment (`.1` and up) of `base` — the compaction
+/// epilogue (the fresh WAL is re-seeded at segment 0) and the drop path.
+/// The base itself is left alone.
+pub fn remove_rotated_segments(base: &Path) {
+    let mut i = 1u64;
+    loop {
+        let p = seg_path(base, i);
+        if std::fs::remove_file(&p).is_err() {
+            break; // first missing index ends the contiguous run
+        }
+        i += 1;
+    }
 }
 
 fn read_u64<R: Read>(r: &mut R) -> std::io::Result<u64> {
@@ -222,29 +248,58 @@ pub fn list_live(dir: &Path) -> Result<Vec<String>> {
 
 // ---- the WAL ------------------------------------------------------------
 
-/// An open, appendable WAL.
+/// An open, appendable WAL — optionally **segment-rotating**: once the
+/// active segment grows past `seg_limit` bytes, the next append opens a
+/// fresh `<base>.wal.<i+1>` segment, so a single unbounded ingest feed
+/// never grows one giant file (ROADMAP PR-4(c)).  Records never split
+/// across segments (rotation happens between appends), replay walks the
+/// segments in index order, and compaction re-seeds segment 0 and
+/// deletes the obsolete siblings.
 #[derive(Debug)]
 pub struct Wal {
     file: std::fs::File,
     records: u64,
     sync: bool,
+    /// Segment-0 path; `None` = rotation disabled (ad-hoc WALs).
+    base: Option<PathBuf>,
+    /// Index of the active segment.
+    seg_index: u64,
+    /// Bytes written to the active segment so far (header included).
+    seg_bytes: u64,
+    /// Rotate once `seg_bytes` exceeds this; 0 = never rotate.
+    seg_limit: u64,
 }
 
-/// Everything `read_wal` learned about a WAL file.
+/// Everything `read_wal` / `read_wal_segments` learned about a WAL.
 #[derive(Debug, Default)]
 pub struct WalReadout {
     pub records: Vec<WalRecord>,
-    /// Byte length of the structurally-complete prefix.
+    /// Byte length of the structurally-complete prefix (of the **last**
+    /// segment when reading a segmented WAL).
     pub clean_len: u64,
     /// True when a torn tail (crash mid-write) was detected and skipped.
     pub torn: bool,
     /// False when the file did not exist.
     pub existed: bool,
+    /// Index of the last (active) segment; 0 for unrotated WALs.
+    pub last_segment: u64,
 }
 
 impl Wal {
-    /// Create (or truncate to) a fresh WAL holding only the magic header.
+    /// Create (or truncate to) a fresh WAL holding only the magic header
+    /// (rotation disabled — tests and ad-hoc logs).
     pub fn create(path: &Path, sync: bool) -> Result<Wal> {
+        Wal::create_rotating(path, sync, 0)
+    }
+
+    /// Create (or truncate to) a fresh segment-0 WAL that rotates past
+    /// `seg_limit` bytes (0 = never).  A fresh WAL is a fresh **chain**:
+    /// any rotated `.N` siblings left by a previous incarnation of the
+    /// same path (e.g. a same-name re-register) are deleted first, or
+    /// the next load would replay the old incarnation's records after
+    /// the new ones and resurrect foreign points.
+    pub fn create_rotating(path: &Path, sync: bool, seg_limit: u64) -> Result<Wal> {
+        remove_rotated_segments(path);
         let mut file = std::fs::OpenOptions::new()
             .write(true)
             .create(true)
@@ -254,7 +309,20 @@ impl Wal {
         if sync {
             file.sync_data()?;
         }
-        Ok(Wal { file, records: 0, sync })
+        Ok(Wal {
+            file,
+            records: 0,
+            sync,
+            base: Some(path.to_path_buf()),
+            seg_index: 0,
+            seg_bytes: WAL_MAGIC.len() as u64,
+            seg_limit,
+        })
+    }
+
+    /// Index of the active segment (diagnostics / compaction cleanup).
+    pub fn segment_index(&self) -> u64 {
+        self.seg_index
     }
 
     /// Atomically replace the WAL at `path` with a fresh one pre-seeded
@@ -266,17 +334,42 @@ impl Wal {
         staged.publish()
     }
 
-    /// Reopen an existing WAL for appending after replay.  `clean_len`
-    /// (from [`read_wal`]) trims any torn tail before the first append.
+    /// Reopen an existing single-segment WAL for appending after replay.
+    /// `clean_len` (from [`read_wal`]) trims any torn tail before the
+    /// first append.
     pub fn open_after_replay(path: &Path, sync: bool, records: u64, clean_len: u64) -> Result<Wal> {
-        let file = std::fs::OpenOptions::new().write(true).open(path)?;
+        Wal::open_after_replay_rotating(path, sync, records, 0, clean_len, 0)
+    }
+
+    /// Reopen a (possibly rotated) WAL for appending after replay: the
+    /// active segment is `last_segment` (from [`read_wal_segments`]),
+    /// trimmed to `clean_len`; subsequent appends rotate past
+    /// `seg_limit` bytes.
+    pub fn open_after_replay_rotating(
+        base: &Path,
+        sync: bool,
+        records: u64,
+        last_segment: u64,
+        clean_len: u64,
+        seg_limit: u64,
+    ) -> Result<Wal> {
+        let path = seg_path(base, last_segment);
+        let file = std::fs::OpenOptions::new().write(true).open(&path)?;
         file.set_len(clean_len)?;
         // append semantics: all writes land at the (now trimmed) end
         let file = {
             drop(file);
-            std::fs::OpenOptions::new().append(true).open(path)?
+            std::fs::OpenOptions::new().append(true).open(&path)?
         };
-        Ok(Wal { file, records, sync })
+        Ok(Wal {
+            file,
+            records,
+            sync,
+            base: Some(base.to_path_buf()),
+            seg_index: last_segment,
+            seg_bytes: clean_len,
+            seg_limit,
+        })
     }
 
     /// Records appended so far (including pre-seeded/replayed ones).
@@ -314,6 +407,45 @@ impl Wal {
             self.file.sync_data()?;
         }
         self.records += recs.len() as u64;
+        self.seg_bytes += buf.len() as u64;
+        self.maybe_rotate()?;
+        Ok(())
+    }
+
+    /// Open the next segment once the active one grew past the limit.
+    /// Rotation happens *between* commits, so a record never spans two
+    /// segments and a torn tail stays confined to the last segment.  The
+    /// new segment is staged at a dot-tmp sibling and **renamed into
+    /// place only after its magic header is written** (and fsynced under
+    /// `wal_sync`): a crash or write failure mid-rotation leaves at most
+    /// an invisible tmp file, never a magic-less `.wal.N` that would
+    /// make `read_wal_segments` reject the whole chain.  A rotation
+    /// failure (e.g. disk full) is non-fatal to the durable record
+    /// already written: the error propagates, but the WAL keeps
+    /// appending to the oversized segment on the next commit.
+    fn maybe_rotate(&mut self) -> Result<()> {
+        if self.seg_limit == 0 || self.seg_bytes <= self.seg_limit {
+            return Ok(());
+        }
+        let Some(base) = self.base.clone() else {
+            return Ok(());
+        };
+        let next = seg_path(&base, self.seg_index + 1);
+        let tmp = tmp_path(&next);
+        let mut file = std::fs::OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&tmp)?;
+        file.write_all(WAL_MAGIC)?;
+        if self.sync {
+            file.sync_data()?;
+        }
+        std::fs::rename(&tmp, &next)?;
+        // the handle follows the rename (same inode)
+        self.file = file;
+        self.seg_index += 1;
+        self.seg_bytes = WAL_MAGIC.len() as u64;
         Ok(())
     }
 }
@@ -327,14 +459,23 @@ pub struct StagedWal {
     wal: Wal,
     tmp: PathBuf,
     dest: PathBuf,
+    /// Applied at publish time — the staged file itself never rotates
+    /// (it holds at most the compactor's carried overlay).
+    seg_limit: u64,
 }
 
 impl StagedWal {
     /// Create the staged file holding only the magic header.
     pub fn stage(dest: &Path, sync: bool) -> Result<StagedWal> {
+        StagedWal::stage_rotating(dest, sync, 0)
+    }
+
+    /// Stage a fresh segment-0 WAL that, once published, rotates past
+    /// `seg_limit` bytes.
+    pub fn stage_rotating(dest: &Path, sync: bool, seg_limit: u64) -> Result<StagedWal> {
         let tmp = tmp_path(dest);
         let wal = Wal::create(&tmp, sync)?;
-        Ok(StagedWal { wal, tmp, dest: dest.to_path_buf() })
+        Ok(StagedWal { wal, tmp, dest: dest.to_path_buf(), seg_limit })
     }
 
     /// Append a record to the staged (unpublished) file.
@@ -350,12 +491,17 @@ impl StagedWal {
 
     /// Atomically publish over the destination, returning the open,
     /// appendable handle (same inode — rename does not invalidate it).
+    /// The handle is rebased to the destination and armed with the
+    /// staged rotation limit.
     pub fn publish(self) -> Result<Wal> {
         if self.wal.sync {
             self.wal.file.sync_data()?;
         }
         std::fs::rename(&self.tmp, &self.dest)?;
-        Ok(self.wal)
+        let mut wal = self.wal;
+        wal.base = Some(self.dest);
+        wal.seg_limit = self.seg_limit;
+        Ok(wal)
     }
 }
 
@@ -432,6 +578,40 @@ pub fn read_wal(path: &Path) -> Result<WalReadout> {
         out.records.push(decode(path, tag, payload)?);
         pos += 9 + len;
         out.clean_len = pos as u64;
+    }
+    Ok(out)
+}
+
+/// Read a (possibly rotated) WAL: walk segments `base`, `base.1`,
+/// `base.2`, ... in index order, concatenating their records.  Only the
+/// **last** segment may carry a torn tail (a crash tears only the active
+/// segment); a torn non-final segment is corruption and a hard error.
+/// `clean_len` and `last_segment` describe the active segment for
+/// [`Wal::open_after_replay_rotating`].
+pub fn read_wal_segments(base: &Path) -> Result<WalReadout> {
+    let mut out = read_wal(base)?;
+    if !out.existed {
+        return Ok(out);
+    }
+    let mut i = 1u64;
+    loop {
+        let p = seg_path(base, i);
+        if !p.exists() {
+            break;
+        }
+        if out.torn {
+            return Err(Error::InvalidArgument(format!(
+                "{}: torn WAL segment {} followed by segment {i}",
+                base.display(),
+                i - 1
+            )));
+        }
+        let seg = read_wal(&p)?;
+        out.records.extend(seg.records);
+        out.torn = seg.torn;
+        out.clean_len = seg.clean_len;
+        out.last_segment = i;
+        i += 1;
     }
     Ok(out)
 }
@@ -598,6 +778,112 @@ mod tests {
         let torn = read_wal(&batched).unwrap();
         assert!(torn.torn);
         assert_eq!(torn.records, records[..3], "only the torn last record is dropped");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rotation_splits_segments_and_replay_walks_them_in_order() {
+        let dir = tmpdir("rotate");
+        let base = wal_path(&dir, "d");
+        // tiny limit: every remove record (~9 + 16 bytes) crosses it
+        let mut wal = Wal::create_rotating(&base, false, 48).unwrap();
+        let records: Vec<WalRecord> =
+            (0..6).map(|i| WalRecord::Remove { ids: vec![i] }).collect();
+        for rec in &records {
+            wal.append(rec).unwrap();
+        }
+        assert!(wal.segment_index() >= 2, "tiny limit must have rotated");
+        assert!(seg_path(&base, 1).exists());
+        assert!(seg_path(&base, wal.segment_index()).exists());
+        // every record survives, in order, across the boundaries
+        let back = read_wal_segments(&base).unwrap();
+        assert!(back.existed);
+        assert!(!back.torn);
+        assert_eq!(back.records, records);
+        assert_eq!(back.last_segment, wal.segment_index());
+        // reopen-after-replay appends to the *last* segment and keeps
+        // rotating
+        drop(wal);
+        let mut wal = Wal::open_after_replay_rotating(
+            &base,
+            false,
+            back.records.len() as u64,
+            back.last_segment,
+            back.clean_len,
+            48,
+        )
+        .unwrap();
+        wal.append(&WalRecord::Remove { ids: vec![99] }).unwrap();
+        let again = read_wal_segments(&base).unwrap();
+        assert_eq!(again.records.len(), 7);
+        assert_eq!(again.records[6], WalRecord::Remove { ids: vec![99] });
+        // a torn tail in the *last* segment trims, as for unrotated WALs
+        let last = seg_path(&base, again.last_segment);
+        let full = std::fs::metadata(&last).unwrap().len();
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&last)
+            .unwrap()
+            .set_len(full - 3)
+            .unwrap();
+        let torn = read_wal_segments(&base).unwrap();
+        assert!(torn.torn);
+        assert!(torn.records.len() < again.records.len());
+        // rotated-segment cleanup removes every sibling but the base
+        remove_rotated_segments(&base);
+        assert!(base.exists());
+        assert!(!seg_path(&base, 1).exists());
+        let only_base = read_wal_segments(&base).unwrap();
+        assert_eq!(only_base.last_segment, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fresh_wal_deletes_stale_rotated_siblings() {
+        // a same-name re-register creates a fresh WAL at the same path;
+        // rotated segments of the previous incarnation must die with it,
+        // or the next load replays foreign records after the new ones
+        let dir = tmpdir("stale_sib");
+        let base = wal_path(&dir, "d");
+        {
+            let mut wal = Wal::create_rotating(&base, false, 32).unwrap();
+            for i in 0..3 {
+                wal.append(&WalRecord::Remove { ids: vec![i] }).unwrap();
+            }
+            assert!(seg_path(&base, 1).exists(), "old incarnation rotated");
+        }
+        // the "re-register": a fresh WAL at the same path
+        let mut wal = Wal::create_rotating(&base, false, 32).unwrap();
+        assert!(!seg_path(&base, 1).exists(), "stale siblings must be deleted");
+        wal.append(&WalRecord::Remove { ids: vec![42] }).unwrap();
+        let back = read_wal_segments(&base).unwrap();
+        assert_eq!(
+            back.records,
+            vec![WalRecord::Remove { ids: vec![42] }],
+            "only the new incarnation's records replay"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_middle_segment_is_corruption() {
+        let dir = tmpdir("torn_mid");
+        let base = wal_path(&dir, "d");
+        let mut wal = Wal::create_rotating(&base, false, 32).unwrap();
+        for i in 0..4 {
+            wal.append(&WalRecord::Remove { ids: vec![i] }).unwrap();
+        }
+        assert!(wal.segment_index() >= 1);
+        // tear segment 0 while later segments exist: not a crash
+        // artifact (crashes only tear the active tail) — hard error
+        let full = std::fs::metadata(&base).unwrap().len();
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&base)
+            .unwrap()
+            .set_len(full - 3)
+            .unwrap();
+        assert!(read_wal_segments(&base).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

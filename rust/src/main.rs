@@ -1,8 +1,10 @@
 //! `aidw` — CLI for the AIDW interpolation service.
 //!
 //! Subcommands:
-//!   serve        start the TCP JSON service (protocol v2.3)
+//!   serve        start the TCP JSON service (protocol v2.4)
 //!   interpolate  one-shot interpolation over a generated/loaded workload
+//!   query        interpolate against a running service over TCP
+//!                (--stream consumes the v2.4 tiled streaming response)
 //!   mutate       append/remove/compact/stat against a running service
 //!   bench        run the perf suite, emit BENCH_aidw.json
 //!   info         artifact + engine diagnostics
@@ -36,14 +38,19 @@ USAGE:
   aidw serve       [--addr 127.0.0.1:7878] [--cpu-only] [--k 10]
                    [--ring exact|paper+1] [--local N] [--snapshots DIR]
                    [--live-dir DIR] [--compact-threshold N] [--wal-sync]
-                   [--neighbor-cache N]
+                   [--neighbor-cache N] [--tile-rows N] [--stream-buffer N]
   aidw interpolate [--engine serving|pipeline|serial] [--cpu-only]
                    [--data N] [--queries N] [--side 100] [--seed 42]
                    [--variant naive|tiled] [--k 10] [--ring exact|paper+1]
                    [--local N] [--alpha-levels 0.5,1,2,3,4]
                    [--rmin 0] [--rmax 2] [--area A]
                    [--dist uniform|clustered|terrain] [--file pts.csv]
-                   [--out out.csv]
+                   [--out out.csv] [--tile-rows N]
+  aidw query       --addr HOST:PORT --dataset NAME [--queries N] [--side 100]
+                   [--seed 42] [--stream] [--tile-rows N] [--out out.csv]
+                   [--variant naive|tiled] [--k 10] [--ring exact|paper+1]
+                   [--local N] [--alpha-levels 0.5,1,2,3,4]
+                   [--rmin 0] [--rmax 2] [--area A]
   aidw mutate      --addr HOST:PORT --dataset NAME --action append|remove|compact|stat
                    [--file pts.csv | --n N --side 100 --seed 42 --dist uniform]
                    [--ids 3,17,9000]
@@ -58,7 +65,10 @@ USAGE:
 per-request QueryOptions (protocol v2 exposes the same fields on the
 wire).  `--local 0` forces dense weighting.  `serve --live-dir DIR`
 enables WAL-backed durable mutation (protocol v2.1 `mutate` op); `aidw
-mutate` is the matching client.  `aidw bench` writes the sizes x
+mutate` is the matching client.  `aidw query --stream` consumes the
+protocol-v2.4 tiled streaming response — tiles are printed/written as
+they arrive, so a raster larger than client memory streams through in
+constant space.  `aidw bench` writes the sizes x
 variants x stage-times JSON the repo tracks as its perf trajectory.
 ";
 
@@ -74,10 +84,11 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["cpu-only", "verbose", "wal-sync", "no-serial"])?;
+    let args = Args::parse(argv, &["cpu-only", "verbose", "wal-sync", "no-serial", "stream"])?;
     match args.subcommand.as_str() {
         "serve" => serve(&args),
         "interpolate" => interpolate(&args),
+        "query" => query(&args),
         "mutate" => mutate(&args),
         "bench" => bench(&args),
         "generate" => generate(&args),
@@ -113,6 +124,12 @@ fn config_from(args: &Args) -> Result<CoordinatorConfig> {
     }
     // planner: stage-1 neighbor-cache capacity (0 disables reuse)
     cfg.neighbor_cache = args.get_usize("neighbor-cache", cfg.neighbor_cache)?;
+    // streaming: default stage-2 tile size (0/absent = whole raster) and
+    // the per-stream buffered-tile bound
+    if let Some(t) = tile_rows_flag(args)? {
+        cfg.tile_rows = Some(t);
+    }
+    cfg.stream_buffer_tiles = args.get_usize("stream-buffer", cfg.stream_buffer_tiles)?;
     // live mutation: durability directory + compaction tunables
     if let Some(dir) = args.get("live-dir") {
         cfg.live_dir = Some(std::path::PathBuf::from(dir));
@@ -163,7 +180,25 @@ fn options_from(args: &Args) -> Result<QueryOptions> {
     if args.get("area").is_some() {
         o = o.area(args.get_f64("area", 0.0)?);
     }
+    if let Some(t) = tile_rows_flag(args)? {
+        o = o.tile_rows(t);
+    }
     Ok(o)
+}
+
+/// The one `--tile-rows` parse shared by `serve`, `interpolate`, and
+/// `query`, with one zero policy everywhere: `0` (like an absent flag)
+/// means one whole-raster tile rather than an invalid-argument error.
+fn tile_rows_flag(args: &Args) -> Result<Option<usize>> {
+    match args.get("tile-rows") {
+        None => Ok(None),
+        Some(t) => {
+            let t: usize = t.parse().map_err(|_| {
+                Error::InvalidArgument("--tile-rows expects an integer".into())
+            })?;
+            Ok(if t > 0 { Some(t) } else { None })
+        }
+    }
 }
 
 fn serve(args: &Args) -> Result<()> {
@@ -433,6 +468,112 @@ fn interpolate(args: &Args) -> Result<()> {
         let show = reply.values.len().min(5);
         println!("first {show} predictions: {:?}", &reply.values[..show]);
     }
+    Ok(())
+}
+
+/// Interpolate against a running service over TCP — the protocol-v2.4
+/// client path.  With `--stream`, tiles are consumed (and optionally
+/// written to `--out`) as they arrive off the socket: the client holds
+/// one tile at a time, so rasters far larger than memory stream through
+/// in constant space.
+fn query(args: &Args) -> Result<()> {
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| Error::InvalidArgument("--addr is required".into()))?;
+    let dataset = args
+        .get("dataset")
+        .ok_or_else(|| Error::InvalidArgument("--dataset is required".into()))?;
+    let n_queries = args.get_usize("queries", 4096)?;
+    let side = args.get_f64("side", 100.0)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let queries = workload::uniform_square(n_queries, side, seed + 1).xy();
+    let options = options_from(args)?;
+    let mut client = aidw::service::Client::connect(addr)?;
+
+    if !args.has("stream") {
+        let t0 = std::time::Instant::now();
+        let reply = client.interpolate_with(dataset, &queries, options)?;
+        println!(
+            "{} values in {:.3}s (stage1 {:.3}s, stage2 {:.3}s, cache_hit {})",
+            reply.values.len(),
+            t0.elapsed().as_secs_f64(),
+            reply.knn_s,
+            reply.interp_s,
+            reply.cache_hit
+        );
+        if let Some(out) = args.get("out") {
+            write_csv(out, &queries, &reply.values)?;
+            println!("wrote {out}");
+        }
+        return Ok(());
+    }
+
+    let t0 = std::time::Instant::now();
+    let mut stream = client.interpolate_stream(dataset, &queries, options)?;
+    println!(
+        "streaming {} rows as {} tile(s) of <= {} rows",
+        stream.rows, stream.n_tiles, stream.tile_rows
+    );
+    let n_tiles = stream.n_tiles;
+    let mut sink: Option<std::io::BufWriter<std::fs::File>> = match args.get("out") {
+        Some(out) => {
+            use std::io::Write;
+            let mut w = std::io::BufWriter::new(std::fs::File::create(out)?);
+            writeln!(w, "x,y,z").map_err(Error::Io)?;
+            Some(w)
+        }
+        None => None,
+    };
+    let mut rows = 0usize;
+    while let Some(tile) = stream.next_tile() {
+        let tile = tile?;
+        // constant memory: each tile is consumed (printed/written) and
+        // dropped before the next arrives
+        if let Some(w) = sink.as_mut() {
+            use std::io::Write;
+            for (q, z) in queries[tile.row0..tile.row0 + tile.values.len()]
+                .iter()
+                .zip(&tile.values)
+            {
+                writeln!(w, "{},{},{}", q.0, q.1, z).map_err(Error::Io)?;
+            }
+        }
+        rows += tile.values.len();
+        println!(
+            "  tile {}/{}: rows {}..{} ({:.1}%)",
+            tile.tile_index + 1,
+            n_tiles,
+            tile.row0,
+            tile.row0 + tile.values.len(),
+            100.0 * rows as f64 / queries.len() as f64
+        );
+        drop(tile);
+    }
+    let done = stream
+        .done()
+        .copied()
+        .ok_or_else(|| Error::Service("stream ended without a done frame".into()))?;
+    println!(
+        "done in {:.3}s: {} rows (stage1 {:.3}s, stage2 {:.3}s, cache_hit {})",
+        t0.elapsed().as_secs_f64(),
+        rows,
+        done.knn_s,
+        done.interp_s,
+        done.cache_hit
+    );
+    if let Some(out) = args.get("out") {
+        println!("wrote {out} (incrementally, one tile at a time)");
+    }
+    Ok(())
+}
+
+/// Shared CSV writer for the non-streaming paths.
+fn write_csv(path: &str, queries: &[(f64, f64)], values: &[f64]) -> Result<()> {
+    let mut csv = String::from("x,y,z\n");
+    for (q, z) in queries.iter().zip(values) {
+        csv.push_str(&format!("{},{},{}\n", q.0, q.1, z));
+    }
+    std::fs::write(path, csv)?;
     Ok(())
 }
 

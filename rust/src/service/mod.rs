@@ -98,20 +98,100 @@ fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match Request::decode(&line) {
+        match Request::decode(&line) {
             // anything unparseable is the client's fault: bad_request
-            Err(e) => protocol::err_line("bad_request", &e.to_string()),
-            Ok(req) => dispatch(&coord, req),
-        };
-        writer.write_all(reply.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+            Err(e) => {
+                write_line(&mut writer, &protocol::err_line("bad_request", &e.to_string()))?
+            }
+            Ok(req) => dispatch(&coord, req, &mut writer)?,
+        }
     }
     Ok(())
 }
 
-fn dispatch(coord: &Coordinator, req: Request) -> String {
-    match req {
+fn write_line(w: &mut BufWriter<TcpStream>, line: &str) -> std::io::Result<()> {
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()
+}
+
+/// Serve one streaming interpolate: header, tile lines as the
+/// coordinator's bounded [`TileStream`] yields them (each flushed
+/// immediately, so the client sees tiles while later ones are still
+/// computing), then the terminal done/error line.  The connection thread
+/// holds at most one tile at a time, and the coordinator holds at most
+/// `stream_buffer_tiles` — a raster much larger than either streams in
+/// constant memory end to end.
+fn serve_stream(
+    coord: &Coordinator,
+    req: InterpolationRequest,
+    w: &mut BufWriter<TcpStream>,
+) -> std::io::Result<()> {
+    let rows = req.queries.len();
+    let mut stream = match coord.submit_stream(req) {
+        Ok(s) => s,
+        // fail-fast errors (unknown dataset, bad options, backpressure)
+        // never start the stream: a plain v2.3-style error line
+        Err(e) => return write_line(w, &protocol::err_for(&e)),
+    };
+    let mut wrote_header = false;
+    loop {
+        match stream.next() {
+            Some(Ok(tile)) => {
+                if !wrote_header {
+                    let tile_rows = tile.options.tile_rows.unwrap_or(rows);
+                    write_line(
+                        w,
+                        &protocol::stream_header(rows, tile.n_tiles, tile_rows, &tile.options),
+                    )?;
+                    wrote_header = true;
+                }
+                write_line(
+                    w,
+                    &protocol::stream_tile(tile.tile_index, tile.row_range.0, &tile.values),
+                )?;
+            }
+            Some(Err(e)) => {
+                // before the header: the stream never started — plain
+                // error line; after it: structured mid-stream error frame
+                let line = if wrote_header {
+                    protocol::stream_err_done(&e)
+                } else {
+                    protocol::err_for(&e)
+                };
+                return write_line(w, &line);
+            }
+            None => {
+                let s = stream.summary().expect("finished stream has a summary");
+                if !wrote_header {
+                    // zero-tile streams cannot happen (empty queries are
+                    // rejected at submit), but keep the framing total
+                    write_line(
+                        w,
+                        &protocol::stream_header(rows, s.n_tiles, rows.max(1), &s.options),
+                    )?;
+                }
+                return write_line(
+                    w,
+                    &protocol::stream_done(
+                        s.knn_s,
+                        s.interp_s,
+                        s.batch_queries,
+                        s.stage1_cache_hit,
+                        s.stage2_groups,
+                    ),
+                );
+            }
+        }
+    }
+}
+
+fn dispatch(
+    coord: &Coordinator,
+    req: Request,
+    w: &mut BufWriter<TcpStream>,
+) -> std::io::Result<()> {
+    let line = match req {
         Request::Ping => protocol::ok_pong(),
         Request::Register { dataset, xs, ys, zs } => {
             let pts = PointSet::from_soa(xs, ys, zs);
@@ -120,9 +200,12 @@ fn dispatch(coord: &Coordinator, req: Request) -> String {
                 Err(e) => protocol::err_for(&e),
             }
         }
-        Request::Interpolate { dataset, qx, qy, options } => {
+        Request::Interpolate { dataset, qx, qy, options, stream } => {
             let queries: Vec<(f64, f64)> = qx.into_iter().zip(qy).collect();
             let req = InterpolationRequest::new(&dataset, queries).with_options(options);
+            if stream {
+                return serve_stream(coord, req, w);
+            }
             match coord.interpolate(req) {
                 Ok(resp) => protocol::ok_values(
                     &resp.values,
@@ -166,7 +249,8 @@ fn dispatch(coord: &Coordinator, req: Request) -> String {
         }
         Request::Datasets => protocol::ok_names(&coord.datasets()),
         Request::Metrics => protocol::ok_metrics(&coord.metrics()),
-    }
+    };
+    write_line(w, &line)
 }
 
 /// A successful `interpolate` reply, decoded (client side).
@@ -205,37 +289,27 @@ impl Client {
         })
     }
 
-    fn call(&mut self, req: &Request) -> Result<Json> {
-        let line = req.encode();
+    fn send_line(&mut self, line: &str) -> Result<()> {
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
+        Ok(())
+    }
+
+    fn read_json_line(&mut self) -> Result<Json> {
         let mut reply = String::new();
         self.reader.read_line(&mut reply)?;
         if reply.is_empty() {
             return Err(Error::Service("server closed connection".into()));
         }
-        let v = Json::parse(reply.trim_end())?;
+        Json::parse(reply.trim_end())
+    }
+
+    fn call(&mut self, req: &Request) -> Result<Json> {
+        self.send_line(&req.encode())?;
+        let v = self.read_json_line()?;
         if v.get("ok").as_bool() != Some(true) {
-            let msg = v.get("error").as_str().unwrap_or("unknown error");
-            // map the v2 machine code back onto typed errors, stripping
-            // the Display prefix the server baked into the message so the
-            // variant doesn't re-add it
-            fn strip(msg: &str, prefix: &str) -> String {
-                msg.strip_prefix(prefix).unwrap_or(msg).to_string()
-            }
-            return Err(match v.get("code").as_str() {
-                Some("unknown_dataset") => {
-                    Error::UnknownDataset(strip(msg, "unknown dataset: "))
-                }
-                Some("invalid_argument") => {
-                    Error::InvalidArgument(strip(msg, "invalid argument: "))
-                }
-                Some("unavailable") => {
-                    Error::Unavailable(strip(msg, "coordinator unavailable: "))
-                }
-                _ => Error::Service(msg.to_string()),
-            });
+            return Err(decode_error(&v));
         }
         Ok(v)
     }
@@ -276,6 +350,7 @@ impl Client {
             qx: queries.iter().map(|q| q.0).collect(),
             qy: queries.iter().map(|q| q.1).collect(),
             options,
+            stream: false,
         })?;
         Ok(InterpolationReply {
             values: v.get("z").to_f64_vec()?,
@@ -350,6 +425,49 @@ impl Client {
         })
     }
 
+    /// Interpolate with **streamed delivery** (protocol v2.4): sends
+    /// `stream: true` and returns a [`ClientStream`] that reads tiles
+    /// lazily off the socket — the client never holds more than one tile,
+    /// so a raster much larger than memory is consumed tile by tile.
+    /// Fail-fast server errors surface here; mid-stream errors surface
+    /// from [`ClientStream::next_tile`].
+    pub fn interpolate_stream(
+        &mut self,
+        dataset: &str,
+        queries: &[(f64, f64)],
+        options: QueryOptions,
+    ) -> Result<ClientStream<'_>> {
+        self.send_line(
+            &Request::Interpolate {
+                dataset: dataset.to_string(),
+                qx: queries.iter().map(|q| q.0).collect(),
+                qy: queries.iter().map(|q| q.1).collect(),
+                options,
+                stream: true,
+            }
+            .encode(),
+        )?;
+        // first line: the header, or a fail-fast error (no header)
+        let v = self.read_json_line()?;
+        if v.get("ok").as_bool() != Some(true) {
+            return Err(decode_error(&v));
+        }
+        if v.get("stream").as_bool() != Some(true) {
+            return Err(Error::Service(
+                "expected a v2.4 stream header (is the server older?)".into(),
+            ));
+        }
+        Ok(ClientStream {
+            rows: v.get("rows").as_usize().unwrap_or(0),
+            n_tiles: v.get("n_tiles").as_usize().unwrap_or(0),
+            tile_rows: v.get("tile_rows").as_usize().unwrap_or(0),
+            options: protocol::options_from_json(v.get("options")),
+            client: self,
+            done: None,
+            finished: false,
+        })
+    }
+
     /// Live mutation statistics for one dataset (protocol v2.1).
     pub fn live_stat(&mut self, dataset: &str) -> Result<LiveStatReply> {
         let v = self.call(&Request::Mutate {
@@ -367,6 +485,145 @@ impl Client {
             persistent: v.get("persistent").as_bool().unwrap_or(false),
             compacting: v.get("compacting").as_bool().unwrap_or(false),
         })
+    }
+}
+
+/// Map a server error line's v2 machine code back onto typed errors,
+/// stripping the Display prefix the server baked into the message so the
+/// variant doesn't re-add it.
+fn decode_error(v: &Json) -> Error {
+    let msg = v.get("error").as_str().unwrap_or("unknown error");
+    fn strip(msg: &str, prefix: &str) -> String {
+        msg.strip_prefix(prefix).unwrap_or(msg).to_string()
+    }
+    match v.get("code").as_str() {
+        Some("unknown_dataset") => Error::UnknownDataset(strip(msg, "unknown dataset: ")),
+        Some("invalid_argument") => Error::InvalidArgument(strip(msg, "invalid argument: ")),
+        Some("unavailable") => Error::Unavailable(strip(msg, "coordinator unavailable: ")),
+        _ => Error::Service(msg.to_string()),
+    }
+}
+
+/// One decoded tile line of a v2.4 stream.
+#[derive(Debug, Clone)]
+pub struct StreamTileReply {
+    pub tile_index: usize,
+    /// First query row this tile covers; it spans `row0 .. row0 + values.len()`.
+    pub row0: usize,
+    pub values: Vec<f64>,
+}
+
+/// The decoded terminal line of a successful v2.4 stream.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StreamDoneReply {
+    pub knn_s: f64,
+    pub interp_s: f64,
+    pub batch_queries: usize,
+    pub cache_hit: bool,
+    pub stage2_groups: usize,
+}
+
+/// A streaming interpolate in progress (protocol v2.4): the header is
+/// already decoded, tile lines are read lazily off the socket as
+/// [`ClientStream::next_tile`] is called — constant client-side memory
+/// regardless of raster size.  `None` from `next_tile` means the stream
+/// completed; [`ClientStream::done`] then holds the terminal metrics.
+pub struct ClientStream<'a> {
+    client: &'a mut Client,
+    /// Total query rows the stream will deliver (header).
+    pub rows: usize,
+    /// Total tiles (header).
+    pub n_tiles: usize,
+    /// Tile size in rows (header; the last tile may be shorter).
+    pub tile_rows: usize,
+    /// The server's resolved-options audit echo (header).
+    pub options: Option<ResolvedOptions>,
+    done: Option<StreamDoneReply>,
+    finished: bool,
+}
+
+impl ClientStream<'_> {
+    /// Read the next tile line.  `None` = the stream completed (see
+    /// [`ClientStream::done`]); a mid-stream error frame or transport
+    /// failure is yielded once as `Some(Err(..))`.
+    pub fn next_tile(&mut self) -> Option<Result<StreamTileReply>> {
+        if self.finished {
+            return None;
+        }
+        let v = match self.client.read_json_line() {
+            Ok(v) => v,
+            Err(e) => {
+                self.finished = true;
+                return Some(Err(e));
+            }
+        };
+        if v.get("done").as_bool() == Some(true) {
+            self.finished = true;
+            if v.get("ok").as_bool() == Some(true) {
+                self.done = Some(StreamDoneReply {
+                    knn_s: v.get("knn_s").as_f64().unwrap_or(0.0),
+                    interp_s: v.get("interp_s").as_f64().unwrap_or(0.0),
+                    batch_queries: v.get("batch_queries").as_usize().unwrap_or(0),
+                    cache_hit: v.get("cache_hit").as_bool().unwrap_or(false),
+                    stage2_groups: v.get("stage2_groups").as_usize().unwrap_or(0),
+                });
+                return None;
+            }
+            return Some(Err(decode_error(&v)));
+        }
+        let (Some(tile_index), Some(row0)) =
+            (v.get("tile").as_usize(), v.get("row0").as_usize())
+        else {
+            self.finished = true;
+            return Some(Err(Error::Service("malformed stream tile line".into())));
+        };
+        match v.get("z").to_f64_vec() {
+            Ok(values) => Some(Ok(StreamTileReply { tile_index, row0, values })),
+            Err(e) => {
+                self.finished = true;
+                Some(Err(e))
+            }
+        }
+    }
+
+    /// The terminal metrics, once [`ClientStream::next_tile`] returned
+    /// `None`.
+    pub fn done(&self) -> Option<&StreamDoneReply> {
+        self.done.as_ref()
+    }
+
+    /// Drain the stream, concatenating tiles in order (convenience for
+    /// callers that do want the whole raster).
+    pub fn collect_values(mut self) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(self.rows);
+        while let Some(tile) = self.next_tile() {
+            let tile = tile?;
+            debug_assert_eq!(tile.row0, out.len(), "tiles arrive in row order");
+            out.extend(tile.values);
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for ClientStream<'_> {
+    /// Abandoning a stream mid-flight must not desynchronize the
+    /// connection: the server writes every remaining tile plus the
+    /// terminal frame regardless, so an undrained socket would hand
+    /// those frames to the *next* request's reply parser.  Drain to the
+    /// terminal frame (skipping the payload) so the `Client` stays
+    /// usable; a transport error just means the connection is dead,
+    /// which is equally terminal.
+    fn drop(&mut self) {
+        while !self.finished {
+            match self.client.read_json_line() {
+                Ok(v) => {
+                    if v.get("done").as_bool() == Some(true) {
+                        self.finished = true;
+                    }
+                }
+                Err(_) => self.finished = true,
+            }
+        }
     }
 }
 

@@ -1,4 +1,5 @@
-//! Wire protocol **v2.3**: newline-delimited JSON over TCP.
+//! Wire protocol **v2.4**: newline-delimited JSON over TCP, now with
+//! chunked (tiled) streaming responses.
 //!
 //! Requests:
 //! ```json
@@ -7,7 +8,8 @@
 //! {"op":"interpolate","dataset":"d","qx":[..],"qy":[..],
 //!  "variant":"tiled","k":10,
 //!  "ring":"exact","local_n":64,"alpha_levels":[0.5,1,2,3,4],
-//!  "r_min":0.0,"r_max":2.0,"area":1e4}
+//!  "r_min":0.0,"r_max":2.0,"area":1e4,
+//!  "tile_rows":256,"stream":true}
 //! {"op":"mutate","dataset":"d","action":"append","xs":[..],"ys":[..],"zs":[..]}
 //! {"op":"mutate","dataset":"d","action":"remove","ids":[3,17]}
 //! {"op":"mutate","dataset":"d","action":"compact"}
@@ -16,6 +18,42 @@
 //! {"op":"datasets"}
 //! {"op":"metrics"}
 //! ```
+//!
+//! **v2.4 additions** (tiled streaming, strictly additive over v2.3):
+//!
+//! * `interpolate` accepts `tile_rows` (execute/deliver stage 2 per tile
+//!   of at most that many query rows; numerics-neutral) and
+//!   `stream: true`.  **Without** a `stream` field the response is the
+//!   single v2.3 line, byte-identical to the pre-v2.4 server.  With
+//!   `stream: true` the response becomes a **frame sequence**, one JSON
+//!   line each:
+//!
+//!   1. a header line
+//!      `{"ok":true,"stream":true,"rows":R,"n_tiles":T,"tile_rows":W,
+//!        "options":{..}}` — the resolved-options audit echo (incl. the
+//!      served `epoch`/`overlay`) up front;
+//!   2. one line per tile, in row order:
+//!      `{"tile":i,"row0":S,"z":[..]}` — rows `S .. S+len(z)` of the
+//!      raster;
+//!   3. a terminal line `{"ok":true,"done":true,"knn_s":..,"interp_s":..,
+//!      "batch_queries":..,"cache_hit":..,"stage2_groups":..}`.
+//!
+//!   Tiles concatenated in order are **bit-identical** to the
+//!   non-streaming response for the same request.  A failure *before*
+//!   any frame is a plain `{"ok":false,..}` error line (no header); a
+//!   mid-stream failure is a terminal
+//!   `{"ok":false,"done":true,"code":..,"error":..}` frame after the
+//!   tiles already delivered.  Server-side buffering per connection is
+//!   bounded by the coordinator's `stream_buffer_tiles x tile_rows`
+//!   values — large rasters stream in constant memory on both sides;
+//! * `metrics` responses add `stage1_saved_ms` (stage-1 wall time the
+//!   neighbor cache saved, accumulated from each served entry's recorded
+//!   build time), `stage1_tile_gathers` (tiles served by row-gather
+//!   during partial-cover reuse — a raster that misses as a whole now
+//!   sweeps only the tiles no cached artifact covers), `stream_tiles`,
+//!   and `stream_peak_buffered`;
+//! * successful `interpolate` responses (and stream headers) echo
+//!   `tile_rows` inside `options` when tiling was in effect.
 //!
 //! **v2.3 additions** (overlay-versioned neighbor caching, strictly
 //! additive over v2.2):
@@ -96,7 +134,7 @@ use crate::runtime::Variant;
 /// The wire protocol version this module implements.  ci.sh drift-checks
 /// this constant against the module doc header ("Wire protocol
 /// **vX.Y**") so the two can never silently disagree.
-pub const PROTOCOL_VERSION: &str = "2.3";
+pub const PROTOCOL_VERSION: &str = "2.4";
 
 /// A live-dataset mutation (protocol v2.1 `mutate` op).
 #[derive(Debug, Clone, PartialEq)]
@@ -124,7 +162,16 @@ impl MutateAction {
 pub enum Request {
     Ping,
     Register { dataset: String, xs: Vec<f64>, ys: Vec<f64>, zs: Vec<f64> },
-    Interpolate { dataset: String, qx: Vec<f64>, qy: Vec<f64>, options: QueryOptions },
+    Interpolate {
+        dataset: String,
+        qx: Vec<f64>,
+        qy: Vec<f64>,
+        options: QueryOptions,
+        /// v2.4: deliver the response as a header + tile frames + done
+        /// line instead of one monolithic line.  Absent on the wire =
+        /// `false` = exact v2.3 behaviour.
+        stream: bool,
+    },
     Mutate { dataset: String, action: MutateAction },
     Drop { dataset: String },
     Datasets,
@@ -163,7 +210,13 @@ impl Request {
                     return Err(Error::Service("qx/qy length mismatch".into()));
                 }
                 let options = decode_options(&v)?;
-                Ok(Request::Interpolate { dataset: dataset()?, qx, qy, options })
+                let stream = match v.get("stream") {
+                    Json::Null => false,
+                    x => x.as_bool().ok_or_else(|| {
+                        Error::Service("'stream' must be a boolean".into())
+                    })?,
+                };
+                Ok(Request::Interpolate { dataset: dataset()?, qx, qy, options, stream })
             }
             "mutate" => {
                 let action = match v.get("action").as_str() {
@@ -208,7 +261,7 @@ impl Request {
                 ("zs", Json::num_array(zs)),
             ])
             .to_string(),
-            Request::Interpolate { dataset, qx, qy, options } => {
+            Request::Interpolate { dataset, qx, qy, options, stream } => {
                 let mut fields = vec![
                     ("op", Json::Str("interpolate".into())),
                     ("dataset", Json::Str(dataset.clone())),
@@ -216,6 +269,10 @@ impl Request {
                     ("qy", Json::num_array(qy)),
                 ];
                 encode_options(options, &mut fields);
+                if *stream {
+                    // emitted only when set — v2.3 byte compatibility
+                    fields.push(("stream", Json::Bool(true)));
+                }
                 Json::obj(fields).to_string()
             }
             Request::Mutate { dataset, action } => {
@@ -333,6 +390,14 @@ fn decode_options(v: &Json) -> Result<QueryOptions> {
     o.r_min = opt_f64(v, "r_min")?;
     o.r_max = opt_f64(v, "r_max")?;
     o.area = opt_f64(v, "area")?;
+    match opt_usize(v, "tile_rows")? {
+        Some(0) => {
+            return Err(Error::Service(
+                "'tile_rows' must be >= 1 (omit for one whole-raster tile)".into(),
+            ))
+        }
+        t => o.tile_rows = t,
+    }
     Ok(o)
 }
 
@@ -367,6 +432,9 @@ fn encode_options(o: &QueryOptions, fields: &mut Vec<(&str, Json)>) {
     if let Some(a) = o.area {
         fields.push(("area", Json::Num(a)));
     }
+    if let Some(t) = o.tile_rows {
+        fields.push(("tile_rows", Json::Num(t as f64)));
+    }
 }
 
 /// The resolved-options audit object echoed on interpolate responses.
@@ -385,6 +453,9 @@ pub fn options_json(o: &ResolvedOptions) -> Json {
     ];
     if let Some(a) = o.area {
         fields.push(("area", Json::Num(a)));
+    }
+    if let Some(t) = o.tile_rows {
+        fields.push(("tile_rows", Json::Num(t as f64)));
     }
     if let Some(e) = o.epoch {
         fields.push(("epoch", Json::Num(e as f64)));
@@ -415,6 +486,7 @@ pub fn options_from_json(v: &Json) -> Option<ResolvedOptions> {
         r_min: v.get("r_min").as_f64()?,
         r_max: v.get("r_max").as_f64()?,
         area: v.get("area").as_f64(),
+        tile_rows: v.get("tile_rows").as_usize(),
         epoch: v.get("epoch").as_f64().map(|e| e as u64),
         overlay: v.get("overlay").as_f64().map(|o| o as u64),
     })
@@ -448,6 +520,65 @@ pub fn ok_values(
     .to_string()
 }
 
+// ---- v2.4 streaming frames ----------------------------------------------
+
+/// The stream header line: raster shape + the resolved-options echo.
+pub fn stream_header(rows: usize, n_tiles: usize, tile_rows: usize, o: &ResolvedOptions) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("stream", Json::Bool(true)),
+        ("rows", Json::Num(rows as f64)),
+        ("n_tiles", Json::Num(n_tiles as f64)),
+        ("tile_rows", Json::Num(tile_rows as f64)),
+        ("options", options_json(o)),
+    ])
+    .to_string()
+}
+
+/// One tile line: tile index, first covered row, and its values.
+pub fn stream_tile(tile_index: usize, row0: usize, values: &[f64]) -> String {
+    Json::obj(vec![
+        ("tile", Json::Num(tile_index as f64)),
+        ("row0", Json::Num(row0 as f64)),
+        ("z", Json::num_array(values)),
+    ])
+    .to_string()
+}
+
+/// The terminal line of a successful stream (the v2.3 response metadata
+/// minus the values, which the tiles already carried).
+pub fn stream_done(
+    knn_s: f64,
+    interp_s: f64,
+    batch_queries: usize,
+    cache_hit: bool,
+    stage2_groups: usize,
+) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("done", Json::Bool(true)),
+        ("knn_s", Json::Num(knn_s)),
+        ("interp_s", Json::Num(interp_s)),
+        ("batch_queries", Json::Num(batch_queries as f64)),
+        ("cache_hit", Json::Bool(cache_hit)),
+        ("stage2_groups", Json::Num(stage2_groups as f64)),
+    ])
+    .to_string()
+}
+
+/// The terminal line of a **failed** stream (mid-stream error): carries
+/// the structured error code plus `done:true` so clients always see a
+/// terminal frame after the header.
+pub fn stream_err_done(e: &Error) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("done", Json::Bool(true)),
+        ("code", Json::Str(code_for(e).into())),
+        ("error", Json::Str(e.to_string())),
+    ])
+    .to_string()
+}
+
 pub fn ok_pong() -> String {
     Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]).to_string()
 }
@@ -476,6 +607,10 @@ pub fn ok_metrics(m: &MetricsSnapshot) -> String {
         ("stage1_subset_hits", Json::Num(m.stage1_subset_hits as f64)),
         ("stage2_execs", Json::Num(m.stage2_execs as f64)),
         ("coalesced_batches", Json::Num(m.coalesced_batches as f64)),
+        ("stage1_saved_ms", Json::Num(m.stage1_saved_ms)),
+        ("stage1_tile_gathers", Json::Num(m.stage1_tile_gathers as f64)),
+        ("stream_tiles", Json::Num(m.stream_tiles as f64)),
+        ("stream_peak_buffered", Json::Num(m.stream_peak_buffered as f64)),
         ("cache_entries", Json::Num(m.cache_entries as f64)),
         ("cache_bytes", Json::Num(m.cache_bytes as f64)),
         ("cache_evictions", Json::Num(m.cache_evictions as f64)),
@@ -587,12 +722,14 @@ mod tests {
                 qx: vec![0.5],
                 qy: vec![1.5],
                 options: QueryOptions::new().variant(Variant::Tiled).k(5),
+                stream: false,
             },
             Request::Interpolate {
                 dataset: "d".into(),
                 qx: vec![],
                 qy: vec![],
                 options: QueryOptions::default(),
+                stream: false,
             },
             // full v2 option surface
             Request::Interpolate {
@@ -606,7 +743,17 @@ mod tests {
                     .local_neighbors(64)
                     .alpha_levels([0.5, 1.0, 2.0, 3.0, 4.0])
                     .r_bounds(0.25, 1.75)
-                    .area(1e4),
+                    .area(1e4)
+                    .tile_rows(128),
+                stream: false,
+            },
+            // v2.4 streaming request
+            Request::Interpolate {
+                dataset: "d".into(),
+                qx: vec![1.0],
+                qy: vec![2.0],
+                options: QueryOptions::new().tile_rows(64),
+                stream: true,
             },
             // forced-dense override (local_n = 0 on the wire)
             Request::Interpolate {
@@ -614,6 +761,7 @@ mod tests {
                 qx: vec![1.0],
                 qy: vec![2.0],
                 options: QueryOptions::new().dense(),
+                stream: false,
             },
             // v2.1 mutate ops
             Request::Mutate {
@@ -653,6 +801,7 @@ mod tests {
                     qx: vec![0.5],
                     qy: vec![1.5],
                     options: QueryOptions::new().variant(Variant::Tiled).k(5),
+                    stream: false,
                 },
             ),
             (
@@ -662,6 +811,7 @@ mod tests {
                     qx: vec![],
                     qy: vec![],
                     options: QueryOptions::default(),
+                    stream: false,
                 },
             ),
             (
@@ -731,12 +881,14 @@ mod tests {
             r_min: 0.25,
             r_max: 1.75,
             area: Some(1e4),
+            tile_rows: Some(256),
             epoch: Some(3),
             overlay: Some(2),
         };
         let j = options_json(&opts);
         assert!(j.to_string().contains("\"epoch\":3"), "{j:?}");
         assert!(j.to_string().contains("\"overlay\":2"), "{j:?}");
+        assert!(j.to_string().contains("\"tile_rows\":256"), "{j:?}");
         assert_eq!(options_from_json(&j), Some(opts));
         // absent/garbage -> None (v1 server)
         assert_eq!(options_from_json(&Json::Null), None);
@@ -745,6 +897,69 @@ mod tests {
         let parsed = options_from_json(&v2).unwrap();
         assert_eq!(parsed.epoch, None);
         assert_eq!(parsed.overlay, None);
+        assert_eq!(parsed.tile_rows, None, "untiled echo omits tile_rows");
+    }
+
+    #[test]
+    fn stream_frames_parse() {
+        let opts = ResolvedOptions { tile_rows: Some(10), area: Some(4.0), ..Default::default() };
+        let h = Json::parse(&stream_header(35, 4, 10, &opts)).unwrap();
+        assert_eq!(h.get("ok").as_bool(), Some(true));
+        assert_eq!(h.get("stream").as_bool(), Some(true));
+        assert_eq!(h.get("rows").as_usize(), Some(35));
+        assert_eq!(h.get("n_tiles").as_usize(), Some(4));
+        assert_eq!(h.get("tile_rows").as_usize(), Some(10));
+        assert_eq!(options_from_json(h.get("options")).unwrap(), opts);
+
+        let t = Json::parse(&stream_tile(2, 20, &[1.5, 2.5])).unwrap();
+        assert_eq!(t.get("tile").as_usize(), Some(2));
+        assert_eq!(t.get("row0").as_usize(), Some(20));
+        assert_eq!(t.get("z").to_f64_vec().unwrap(), vec![1.5, 2.5]);
+        assert!(t.get("done").as_bool().is_none(), "tile lines carry no done marker");
+
+        let d = Json::parse(&stream_done(0.1, 0.2, 35, true, 1)).unwrap();
+        assert_eq!(d.get("ok").as_bool(), Some(true));
+        assert_eq!(d.get("done").as_bool(), Some(true));
+        assert_eq!(d.get("batch_queries").as_usize(), Some(35));
+        assert_eq!(d.get("cache_hit").as_bool(), Some(true));
+
+        let e = Json::parse(&stream_err_done(&Error::Unavailable("gone".into()))).unwrap();
+        assert_eq!(e.get("ok").as_bool(), Some(false));
+        assert_eq!(e.get("done").as_bool(), Some(true));
+        assert_eq!(e.get("code").as_str(), Some("unavailable"));
+    }
+
+    #[test]
+    fn stream_and_tile_rows_decode_strictly() {
+        // absent stream field -> plain (non-streaming) request
+        let r = Request::decode(r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1]}"#)
+            .unwrap();
+        assert!(matches!(r, Request::Interpolate { stream: false, .. }));
+        // explicit stream:true
+        let r = Request::decode(
+            r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"stream":true,"tile_rows":4}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Interpolate { stream, options, .. } => {
+                assert!(stream);
+                assert_eq!(options.tile_rows, Some(4));
+            }
+            other => panic!("{other:?}"),
+        }
+        // mistyped fields are the client's error, not silent defaults
+        assert!(Request::decode(
+            r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"stream":"yes"}"#
+        )
+        .is_err());
+        assert!(Request::decode(
+            r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"tile_rows":0}"#
+        )
+        .is_err());
+        assert!(Request::decode(
+            r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"tile_rows":2.5}"#
+        )
+        .is_err());
     }
 
     #[test]
@@ -786,6 +1001,22 @@ mod tests {
         assert_eq!(v.get("cache_bytes").as_usize(), Some(4096));
         assert_eq!(v.get("cache_evictions").as_usize(), Some(7));
         assert_eq!(v.get("cache_hit_bytes").as_usize(), Some(8192));
+    }
+
+    #[test]
+    fn metrics_lines_carry_v24_stream_and_saved_counters() {
+        let m = MetricsSnapshot {
+            stage1_saved_ms: 12.5,
+            stage1_tile_gathers: 4,
+            stream_tiles: 9,
+            stream_peak_buffered: 80,
+            ..Default::default()
+        };
+        let v = Json::parse(&ok_metrics(&m)).unwrap();
+        assert_eq!(v.get("stage1_saved_ms").as_f64(), Some(12.5));
+        assert_eq!(v.get("stage1_tile_gathers").as_usize(), Some(4));
+        assert_eq!(v.get("stream_tiles").as_usize(), Some(9));
+        assert_eq!(v.get("stream_peak_buffered").as_usize(), Some(80));
     }
 
     #[test]

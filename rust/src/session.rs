@@ -38,16 +38,19 @@
 //! to 1e-9 with the exact ring rule).
 
 use std::collections::HashMap;
-use std::sync::{mpsc, Arc, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 
-use crate::aidw::local::{interpolate_local_on, LocalConfig};
-use crate::aidw::pipeline::interpolate_improved_on;
+use crate::aidw::plan::{local_weighted_with, SearchKind, Stage1Plan, TilePlan};
 use crate::aidw::serial;
+use crate::coordinator::request::{FrameTx, StreamFrame, StreamHandle};
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, InterpolationRequest, QueryOptions, ResolvedOptions, Ticket,
+    Backend, Coordinator, CoordinatorConfig, InterpolationRequest, QueryOptions, ResolvedOptions,
+    StreamSummary, TileResult, TileStream,
 };
 use crate::error::{Error, Result};
 use crate::geom::PointSet;
+use crate::grid::{EvenGrid, GridConfig};
 use crate::live::{AppendOutcome, RemoveOutcome};
 use crate::pool::Pool;
 
@@ -101,47 +104,66 @@ enum Exec {
 }
 
 /// A mode-independent async handle for [`AidwSession::submit`]
-/// (ROADMAP follow-up 1(d)): the coordinator path wraps the pipeline
-/// [`Ticket`]; the in-process paths run on a detached worker thread and
-/// deliver over the same channel semantics, so `wait`/`try_wait` behave
-/// identically in every mode.
+/// (ROADMAP follow-up 1(d)).  Every mode now produces the same thing — a
+/// frame stream ([`TileStream`]): the coordinator path takes the pipeline
+/// ticket's stream, the in-process paths run the tiled core on a
+/// detached worker thread feeding an identical channel, so `wait` /
+/// `try_wait` behave identically everywhere.  Dropping a ticket without
+/// waiting cancels the job in every mode (the coordinator sweeps the
+/// queue slot; an in-process worker stops at the next tile).
 pub struct SessionTicket {
-    inner: TicketInner,
-}
-
-enum TicketInner {
-    /// Serving mode: the coordinator's own ticket.
-    Coordinator(Ticket),
-    /// Serial/Pipeline modes: a worker thread's reply channel.
-    Thread(mpsc::Receiver<Result<SessionReply>>),
+    stream: Mutex<TileStream>,
 }
 
 impl SessionTicket {
+    fn new(stream: TileStream) -> SessionTicket {
+        SessionTicket { stream: Mutex::new(stream) }
+    }
+
     /// Block until the reply arrives.
     pub fn wait(self) -> Result<SessionReply> {
-        match self.inner {
-            TicketInner::Coordinator(t) => t.wait().map(SessionReply::from_response),
-            TicketInner::Thread(rx) => rx.recv().map_err(|_| {
-                Error::Unavailable("session worker dropped the job".into())
-            })?,
-        }
+        self.stream
+            .into_inner()
+            .unwrap()
+            .wait()
+            .map(SessionReply::from_response)
     }
 
     /// Poll without blocking.  `None` strictly means *not finished yet*;
     /// a dropped job surfaces as `Some(Err(Unavailable))`.
     pub fn try_wait(&self) -> Option<Result<SessionReply>> {
-        match &self.inner {
-            TicketInner::Coordinator(t) => {
-                t.try_wait().map(|r| r.map(SessionReply::from_response))
-            }
-            TicketInner::Thread(rx) => match rx.try_recv() {
-                Ok(r) => Some(r),
-                Err(mpsc::TryRecvError::Empty) => None,
-                Err(mpsc::TryRecvError::Disconnected) => Some(Err(Error::Unavailable(
-                    "session worker dropped the job".into(),
-                ))),
-            },
-        }
+        self.stream
+            .lock()
+            .unwrap()
+            .try_collect()
+            .map(|r| r.map(SessionReply::from_response))
+    }
+}
+
+/// A mode-independent incremental handle for [`AidwSession::submit_stream`]:
+/// yields in-order [`TileResult`]s as stage 2 computes them, then a
+/// terminal [`StreamSummary`].  Backed by the coordinator's bounded
+/// stream in Serving mode and by an identically-bounded worker channel in
+/// the in-process modes, so consumers are mode-agnostic.
+pub struct SessionStream {
+    stream: TileStream,
+}
+
+impl SessionStream {
+    /// Block for the next tile; `None` once the stream completed
+    /// ([`SessionStream::summary`] then holds the terminal facts).
+    pub fn next(&mut self) -> Option<Result<TileResult>> {
+        self.stream.next()
+    }
+
+    /// The terminal summary, once [`SessionStream::next`] returned `None`.
+    pub fn summary(&self) -> Option<&StreamSummary> {
+        self.stream.summary()
+    }
+
+    /// Drain and concatenate into a whole-raster reply.
+    pub fn wait(self) -> Result<SessionReply> {
+        self.stream.wait().map(SessionReply::from_response)
     }
 }
 
@@ -428,42 +450,101 @@ impl AidwSession {
                     InterpolationRequest::new(dataset, queries.to_vec())
                         .with_options(options.clone()),
                 )?;
-                Ok(SessionTicket { inner: TicketInner::Coordinator(ticket) })
+                Ok(SessionTicket::new(ticket.into_stream()))
             }
-            _ => {
-                let (resolved, pts) = self.resolve_in_process(dataset, options)?;
-                // bounded in-flight jobs: one worker thread per accepted
-                // submission, rejected beyond the same queue depth the
-                // coordinator's bounded JobQueue enforces
-                use std::sync::atomic::Ordering;
-                let limit = self.defaults.batch.max_queue;
-                let prev = self.inflight.fetch_add(1, Ordering::SeqCst);
-                if prev >= limit {
-                    self.inflight.fetch_sub(1, Ordering::SeqCst);
-                    return Err(Error::Unavailable(format!(
-                        "session worker queue full ({prev} jobs); retry later"
-                    )));
-                }
-                // the slot is released on every exit path — normal
-                // completion, a panic inside the worker, or a failed
-                // spawn (dropping the unspawned closure drops the guard)
-                let slot = SlotGuard(self.inflight.clone());
-                let pool = match &self.exec {
-                    Exec::Pipeline(pool) => Some(pool.clone()),
-                    _ => None,
-                };
-                let queries = queries.to_vec();
-                let (tx, rx) = mpsc::channel();
-                std::thread::Builder::new()
-                    .name("aidw-session".into())
-                    .spawn(move || {
-                        let _slot = slot;
-                        let _ = tx.send(exec_in_process(pool.as_ref(), &pts, &queries, resolved));
-                    })
-                    .map_err(Error::Io)?;
-                Ok(SessionTicket { inner: TicketInner::Thread(rx) })
-            }
+            _ => Ok(SessionTicket::new(self.spawn_in_process(
+                dataset, queries, options, false,
+            )?)),
         }
+    }
+
+    /// Submit for **incremental delivery** in any mode: the returned
+    /// [`SessionStream`] yields tiles as stage 2 computes them, bounded
+    /// at `stream_buffer_tiles` outstanding tiles (backpressure — a slow
+    /// consumer blocks the producer instead of buffering the raster).
+    /// Fails fast exactly like [`AidwSession::submit`].
+    pub fn submit_stream(
+        &self,
+        dataset: &str,
+        queries: &[(f64, f64)],
+        options: &QueryOptions,
+    ) -> Result<SessionStream> {
+        if queries.is_empty() {
+            return Err(Error::InvalidArgument("empty query list".into()));
+        }
+        match &self.exec {
+            Exec::Serving(c) => {
+                let stream = c.submit_stream(
+                    InterpolationRequest::new(dataset, queries.to_vec())
+                        .with_options(options.clone()),
+                )?;
+                Ok(SessionStream { stream })
+            }
+            _ => Ok(SessionStream {
+                stream: self.spawn_in_process(dataset, queries, options, true)?,
+            }),
+        }
+    }
+
+    /// Shared Serial/Pipeline async prologue: fail fast, claim a bounded
+    /// in-flight slot, and run the tiled in-process core on a detached
+    /// worker thread feeding a frame channel (bounded for explicit
+    /// streams, unbounded for tickets — mirroring the coordinator).
+    fn spawn_in_process(
+        &self,
+        dataset: &str,
+        queries: &[(f64, f64)],
+        options: &QueryOptions,
+        bounded: bool,
+    ) -> Result<TileStream> {
+        let (resolved, pts) = self.resolve_in_process(dataset, options)?;
+        // bounded in-flight jobs: one worker thread per accepted
+        // submission, rejected beyond the same queue depth the
+        // coordinator's bounded JobQueue enforces
+        let limit = self.defaults.batch.max_queue;
+        let prev = self.inflight.fetch_add(1, Ordering::SeqCst);
+        if prev >= limit {
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            return Err(Error::Unavailable(format!(
+                "session worker queue full ({prev} jobs); retry later"
+            )));
+        }
+        // the slot is released on every exit path — normal completion, a
+        // panic inside the worker, or a failed spawn (dropping the
+        // unspawned closure drops the guard)
+        let slot = SlotGuard(self.inflight.clone());
+        let pool = match &self.exec {
+            Exec::Pipeline(pool) => Some(pool.clone()),
+            _ => None,
+        };
+        let queries = queries.to_vec();
+        let buffered = Arc::new(AtomicUsize::new(0));
+        let cancel = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = if bounded {
+            // queued capacity + the worker's one in-flight tile =
+            // stream_buffer_tiles outstanding, same bound the
+            // coordinator's streams enforce
+            let cap = self.defaults.stream_buffer_tiles.max(1) - 1;
+            let (tx, rx) = mpsc::sync_channel(cap);
+            (FrameTx::Bounded(tx), rx)
+        } else {
+            let (tx, rx) = mpsc::channel();
+            (FrameTx::Unbounded(tx), rx)
+        };
+        let handle = StreamHandle { tx, buffered: buffered.clone(), bounded };
+        let worker_cancel = cancel.clone();
+        std::thread::Builder::new()
+            .name("aidw-session".into())
+            .spawn(move || {
+                let _slot = slot;
+                if let Err(e) =
+                    exec_in_process_stream(pool.as_ref(), &pts, &queries, resolved, &handle, &worker_cancel)
+                {
+                    let _ = handle.tx.send(StreamFrame::Err(e));
+                }
+            })
+            .map_err(Error::Io)?;
+        Ok(TileStream::new(rx, buffered, cancel))
     }
 
     /// In-process fail-fast prologue: resolve + validate the options and
@@ -496,47 +577,216 @@ impl Drop for SlotGuard {
     }
 }
 
-/// Shared Serial/Pipeline execution core (pool = None -> serial paths);
-/// free of `&self` so [`AidwSession::submit`] can run it on a worker
-/// thread.
+/// Shared Serial/Pipeline execution core (pool = None -> serial paths):
+/// the sync entry point is "stream into one collector and concatenate",
+/// so the in-process modes have exactly one execution path — the tiled
+/// [`exec_in_process_stream`] — like the coordinator.
 fn exec_in_process(
     pool: Option<&Pool>,
     pts: &PointSet,
     queries: &[(f64, f64)],
     resolved: ResolvedOptions,
 ) -> Result<SessionReply> {
-    let params = resolved.params();
-    let t0 = std::time::Instant::now();
-    let (values, knn_s, interp_s) = match (pool, resolved.local_neighbors) {
-        (None, None) => {
-            let v = serial::aidw_serial(pts, queries, &params);
-            (v, 0.0, t0.elapsed().as_secs_f64())
-        }
-        (None, Some(n)) => {
-            // serial-flavored local run: single-thread pool
-            let cfg = LocalConfig { n_neighbors: n, rule: resolved.ring_rule };
-            let v = interpolate_local_on(&Pool::new(1), pts, queries, &params, &cfg)?;
-            (v, 0.0, t0.elapsed().as_secs_f64())
-        }
-        (Some(pool), None) => {
-            let (v, times) =
-                interpolate_improved_on(pool, pts, queries, &params, resolved.ring_rule);
-            (v, times.knn_s, times.interp_s)
-        }
-        (Some(pool), Some(n)) => {
-            let cfg = LocalConfig { n_neighbors: n, rule: resolved.ring_rule };
-            let v = interpolate_local_on(pool, pts, queries, &params, &cfg)?;
-            (v, 0.0, t0.elapsed().as_secs_f64())
-        }
+    let (tx, rx) = mpsc::channel();
+    let buffered = Arc::new(AtomicUsize::new(0));
+    let cancel = Arc::new(AtomicBool::new(false));
+    let handle = StreamHandle {
+        tx: FrameTx::Unbounded(tx),
+        buffered: buffered.clone(),
+        bounded: false,
     };
+    if let Err(e) = exec_in_process_stream(pool, pts, queries, resolved, &handle, &cancel) {
+        let _ = handle.tx.send(StreamFrame::Err(e));
+    }
+    drop(handle); // close the channel so the collector terminates
+    TileStream::new(rx, buffered, cancel)
+        .wait()
+        .map(SessionReply::from_response)
+}
+
+/// The tiled in-process execution core behind every Serial/Pipeline
+/// entry point (sync, async ticket, and stream): stage 1 runs **once**
+/// over the whole raster, stage 2 executes and emits per tile of the
+/// resolved `tile_rows` — the same shape the serving coordinator
+/// executes, with the same bit-identity argument (stage 2 is
+/// row-independent).  Emits `Tile*` frames then one `Done`; stops early
+/// (without `Done`) when the consumer cancelled or went away.
+fn exec_in_process_stream(
+    pool: Option<&Pool>,
+    pts: &PointSet,
+    queries: &[(f64, f64)],
+    resolved: ResolvedOptions,
+    handle: &StreamHandle,
+    cancel: &AtomicBool,
+) -> Result<()> {
+    let params = resolved.params();
+    let plan = TilePlan::new(queries.len(), resolved.tile_rows);
+    let n_tiles = plan.n_tiles();
     let mut echoed = resolved;
     echoed.area = Some(resolved.area.unwrap_or_else(|| pts.bounds().area()));
-    Ok(SessionReply { values, knn_s, interp_s, options: echoed, cache_hit: false })
+    let serial_mode = pool.is_none();
+
+    // emit one tile; false = consumer gone, stop producing
+    let emit = |tile_index: usize, range: std::ops::Range<usize>, values: Vec<f64>| -> bool {
+        let n_vals = values.len();
+        handle.buffered.fetch_add(n_vals, Ordering::Relaxed);
+        let ok = handle.tx.send(StreamFrame::Tile(TileResult {
+            tile_index,
+            n_tiles,
+            row_range: (range.start, range.end),
+            values,
+            options: echoed,
+        }));
+        if !ok {
+            handle.buffered.fetch_sub(n_vals, Ordering::Relaxed);
+        }
+        ok
+    };
+
+    let mut stage1_s = 0.0f64;
+    let mut stage2_s = 0.0f64;
+    let mut alive = true;
+
+    match (pool, resolved.local_neighbors) {
+        (None, None) => {
+            // the serial reference interleaves the stages per query, and
+            // its per-query math depends only on (data, params) — tiling
+            // the query list is bit-identical to one pass
+            for (i, range) in plan.iter().enumerate() {
+                if cancel.load(Ordering::Relaxed) {
+                    alive = false;
+                    break;
+                }
+                let t = std::time::Instant::now();
+                let vals = serial::aidw_serial(pts, &queries[range.clone()], &params);
+                stage2_s += t.elapsed().as_secs_f64();
+                if !emit(i, range, vals) {
+                    alive = false;
+                    break;
+                }
+            }
+        }
+        (maybe_pool, Some(n)) => {
+            // local (A5) — serial mode runs the same plan on a
+            // single-thread pool, exactly like interpolate_local_on did
+            let one;
+            let pool = match maybe_pool {
+                Some(p) => p,
+                None => {
+                    one = Pool::new(1);
+                    &one
+                }
+            };
+            let t0 = std::time::Instant::now();
+            let grid = EvenGrid::build_on(pool, pts, None, &GridConfig::default())?;
+            let n2 = n.max(params.k).max(1);
+            let area = params.area.unwrap_or_else(|| pts.bounds().area());
+            let stage1 = Stage1Plan::new(
+                params.k,
+                resolved.ring_rule,
+                Some(n2),
+                &params,
+                pts.len(),
+                area,
+                SearchKind::Grid,
+            );
+            let art = stage1.execute_grid(pool, &grid, queries);
+            let alphas = art.alphas();
+            stage1_s = t0.elapsed().as_secs_f64();
+            let table = art.neighbors.as_ref().expect("gathering plan produces a table");
+            let w = table.width;
+            for (i, range) in plan.iter().enumerate() {
+                if cancel.load(Ordering::Relaxed) {
+                    alive = false;
+                    break;
+                }
+                let t = std::time::Instant::now();
+                let vals = local_weighted_with(
+                    pool,
+                    &queries[range.clone()],
+                    &alphas[range.clone()],
+                    &table.idx[range.start * w..range.end * w],
+                    w,
+                    |pid| {
+                        let i = pid as usize;
+                        (pts.xs[i], pts.ys[i], pts.zs[i])
+                    },
+                );
+                stage2_s += t.elapsed().as_secs_f64();
+                if !emit(i, range, vals) {
+                    alive = false;
+                    break;
+                }
+            }
+        }
+        (Some(pool), None) => {
+            // the improved pipeline: grid + dense stage 1 once (alpha
+            // materialized inside the stage-1 window, as before), Eq.-1
+            // weighting per tile
+            let t0 = std::time::Instant::now();
+            let grid = EvenGrid::build_on(pool, pts, None, &GridConfig::default())?;
+            let area = params.area.unwrap_or_else(|| pts.bounds().area());
+            let stage1 = Stage1Plan::new(
+                params.k,
+                resolved.ring_rule,
+                None,
+                &params,
+                pts.len(),
+                area,
+                SearchKind::Grid,
+            );
+            let art = stage1.execute_grid(pool, &grid, queries);
+            let alphas = art.alphas();
+            stage1_s = t0.elapsed().as_secs_f64();
+            for (i, range) in plan.iter().enumerate() {
+                if cancel.load(Ordering::Relaxed) {
+                    alive = false;
+                    break;
+                }
+                let t = std::time::Instant::now();
+                let vals = crate::aidw::pipeline::weighted_stage_on(
+                    pool,
+                    pts,
+                    &queries[range.clone()],
+                    &alphas[range.clone()],
+                );
+                stage2_s += t.elapsed().as_secs_f64();
+                if !emit(i, range, vals) {
+                    alive = false;
+                    break;
+                }
+            }
+        }
+    }
+
+    if !alive {
+        return Ok(()); // cancelled / consumer gone: no terminal frame
+    }
+    // the serial reference reports all wall time as interp_s (its stages
+    // interleave per query) — preserved from the pre-stream facade
+    let (knn_s, interp_s) = if serial_mode {
+        (0.0, stage1_s + stage2_s)
+    } else {
+        (stage1_s, stage2_s)
+    };
+    let _ = handle.tx.send(StreamFrame::Done(StreamSummary {
+        rows: queries.len(),
+        n_tiles,
+        knn_s,
+        interp_s,
+        batch_queries: queries.len(),
+        backend: Backend::CpuFallback,
+        options: echoed,
+        stage1_cache_hit: false,
+        stage2_groups: 1,
+    }));
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::aidw::local::LocalConfig;
     use crate::aidw::params::AidwParams;
     use crate::coordinator::EngineMode;
     use crate::workload;
@@ -710,6 +960,78 @@ mod tests {
             };
             assert_eq!(polled.options.k, 5, "{}", s.backend_label());
             assert_eq!(polled.values.len(), q.len());
+        }
+    }
+
+    #[test]
+    fn streams_agree_with_sync_in_all_modes() {
+        let pts = data();
+        let q = queries(); // 40 rows -> 6 tiles of <= 7
+        let serving = AidwSession::serving(CoordinatorConfig {
+            engine_mode: EngineMode::CpuOnly,
+            ..Default::default()
+        })
+        .unwrap();
+        for s in [AidwSession::serial(), AidwSession::in_process(), serving] {
+            s.register("d", pts.clone()).unwrap();
+            for opts in [
+                QueryOptions::new().tile_rows(7),
+                QueryOptions::new().tile_rows(7).local_neighbors(24),
+            ] {
+                let want = s.interpolate("d", &q, &opts).unwrap();
+                let mut stream = s.submit_stream("d", &q, &opts).unwrap();
+                let mut got = Vec::new();
+                let mut tiles = 0usize;
+                while let Some(t) = stream.next() {
+                    let t = t.unwrap();
+                    assert_eq!(t.tile_index, tiles, "{}", s.backend_label());
+                    assert_eq!(t.row_range.0, got.len(), "tiles arrive in row order");
+                    got.extend(t.values);
+                    tiles += 1;
+                }
+                let summary = stream.summary().expect("summary after exhaustion");
+                assert_eq!(summary.n_tiles, tiles);
+                assert_eq!(tiles, 6);
+                assert_eq!(summary.rows, q.len());
+                assert_eq!(
+                    got, want.values,
+                    "{}: streamed tiles must concatenate bit-identically",
+                    s.backend_label()
+                );
+            }
+            // streams fail fast like submit
+            assert!(s.submit_stream("ghost", &q, &QueryOptions::default()).is_err());
+            assert!(s.submit_stream("d", &[], &QueryOptions::default()).is_err());
+        }
+    }
+
+    #[test]
+    fn dropped_in_process_ticket_releases_its_slot() {
+        // the Ticket-drop leak fix, session flavor: with a 1-slot queue,
+        // repeatedly submitting and dropping must never wedge — each
+        // dropped ticket's worker notices the dead consumer and frees the
+        // in-flight slot
+        let mut cfg = CoordinatorConfig::default();
+        cfg.batch.max_queue = 1;
+        let s = AidwSession::in_process_with(cfg);
+        s.register("d", data()).unwrap();
+        let q = queries();
+        for round in 0..6 {
+            let mut spins = 0usize;
+            let t = loop {
+                match s.submit("d", &q, &QueryOptions::default()) {
+                    Ok(t) => break t,
+                    Err(_) => {
+                        spins += 1;
+                        assert!(
+                            spins < 100_000,
+                            "round {round}: dropped tickets leaked the in-flight slot"
+                        );
+                        std::thread::sleep(std::time::Duration::from_micros(100));
+                    }
+                }
+            };
+            drop(t); // never waited
         }
     }
 

@@ -1,0 +1,402 @@
+//! Integration: the tiled streaming query surface end to end.
+//!
+//! * **Acceptance**: a streaming interpolate over TCP with
+//!   `tile_rows = N/8` yields >= 8 in-order tile frames whose
+//!   concatenation is bit-identical to the non-streaming v2.3 response
+//!   for the same request, while the server's peak buffered values stay
+//!   <= `stream_buffer_tiles x tile_rows` (the `stream_peak_buffered`
+//!   metrics receipt);
+//! * **Back-compat**: a request line with no `stream` field returns the
+//!   exact single-line v2.3 response shape — no streaming keys leak;
+//! * **Property**: streamed tiles concatenated in order are bit-identical
+//!   to the monolithic response across dense/local x clean/mutated x
+//!   cached/uncached;
+//! * **Snapshot isolation**: an in-flight stream keeps serving its
+//!   admitted (epoch, overlay) snapshot across a concurrent mutation;
+//! * **Partial-cover reuse** (ROADMAP PR-4(a)): tiles covered by a cached
+//!   artifact row-gather; only uncovered tiles sweep;
+//! * **Hygiene**: dropping a stream mid-flight cancels cleanly.
+
+use std::sync::Arc;
+
+use aidw::coordinator::{
+    Coordinator, CoordinatorConfig, EngineMode, InterpolationRequest, QueryOptions,
+};
+use aidw::jsonio::Json;
+use aidw::service::{Client, Server};
+use aidw::workload;
+
+fn cpu_config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        engine_mode: EngineMode::CpuOnly,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn acceptance_streaming_over_tcp_is_tiled_in_order_and_bit_identical() {
+    const ROWS: usize = 320;
+    const TILE: usize = ROWS / 8; // 40 -> exactly 8 tiles
+    const BUFFER: usize = 2;
+    let coord = Arc::new(Coordinator::new(CoordinatorConfig {
+        stream_buffer_tiles: BUFFER,
+        ..cpu_config()
+    })
+    .unwrap());
+    let server = Server::start(coord, "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    client.register("d", &workload::uniform_square(500, 60.0, 1201)).unwrap();
+    let queries = workload::uniform_square(ROWS, 60.0, 1202).xy();
+    let opts = QueryOptions::new().tile_rows(TILE);
+
+    // the reference: the non-streaming (v2.3-shaped) response
+    let whole = client.interpolate_with("d", &queries, opts.clone()).unwrap();
+    assert_eq!(whole.values.len(), ROWS);
+    assert_eq!(
+        whole.options.as_ref().unwrap().tile_rows,
+        Some(TILE),
+        "v2.4: the options echo reports the tile size"
+    );
+
+    // the stream: header, 8 in-order tiles, done
+    let mut stream = client.interpolate_stream("d", &queries, opts).unwrap();
+    assert_eq!(stream.rows, ROWS);
+    assert_eq!(stream.n_tiles, 8, "tile_rows = N/8 must yield 8 tiles");
+    assert_eq!(stream.tile_rows, TILE);
+    let header_opts = stream.options.expect("header echoes resolved options");
+    assert_eq!(header_opts.epoch, Some(0), "epoch echoed up front");
+    assert_eq!(header_opts.overlay, Some(0));
+    let mut got = Vec::with_capacity(ROWS);
+    let mut tiles = 0usize;
+    while let Some(tile) = stream.next_tile() {
+        let tile = tile.unwrap();
+        assert_eq!(tile.tile_index, tiles, "tiles arrive strictly in order");
+        assert_eq!(tile.row0, tiles * TILE);
+        assert_eq!(tile.values.len(), TILE);
+        got.extend(tile.values);
+        tiles += 1;
+    }
+    assert_eq!(tiles, 8, "at least 8 in-order tile frames");
+    let done = *stream.done().expect("terminal done frame");
+    drop(stream); // release the connection borrow (Drop drains leftovers)
+    assert!(done.cache_hit, "the repeat raster rides the neighbor cache");
+    assert_eq!(done.batch_queries, ROWS);
+    assert_eq!(
+        got, whole.values,
+        "streamed tiles must concatenate bit-identically to the v2.3 response"
+    );
+
+    // the backpressure receipt: peak service-side buffered values stayed
+    // within stream_buffer_tiles x tile_rows
+    let m = client.metrics().unwrap();
+    let peak = m.get("stream_peak_buffered").as_usize().unwrap();
+    assert!(peak > 0, "streaming must have exercised the gauge");
+    assert!(
+        peak <= BUFFER * TILE,
+        "peak buffered {peak} values exceeds the {BUFFER} x {TILE} bound"
+    );
+    assert!(m.get("stream_tiles").as_usize().unwrap() >= 8);
+    // ... and the saved-time counter moved when the cache served stage 1
+    assert!(m.get("stage1_saved_ms").as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn v23_request_without_stream_field_keeps_the_exact_response_shape() {
+    let coord = Arc::new(Coordinator::new(cpu_config()).unwrap());
+    let server = Server::start(coord, "127.0.0.1:0").unwrap();
+    use std::io::{BufRead, Write};
+    let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+
+    stream
+        .write_all(
+            b"{\"op\":\"register\",\"dataset\":\"d\",\"xs\":[0,1,0,1],\"ys\":[0,0,1,1],\"zs\":[1,2,3,4]}\n",
+        )
+        .unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "{line}");
+
+    // a verbatim pre-v2.4 line: one response line, the v2.3 field set,
+    // none of the streaming keys
+    stream
+        .write_all(b"{\"op\":\"interpolate\",\"dataset\":\"d\",\"qx\":[0.5,0.2],\"qy\":[0.5,0.8],\"k\":2}\n")
+        .unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(line.trim_end()).unwrap();
+    assert_eq!(v.get("ok").as_bool(), Some(true), "{line}");
+    assert_eq!(v.get("z").to_f64_vec().unwrap().len(), 2);
+    for key in ["knn_s", "interp_s", "batch_queries"] {
+        assert!(v.get(key).as_f64().is_some(), "v1 field '{key}' retained");
+    }
+    assert!(v.get("cache_hit").as_bool().is_some(), "v2.2 field retained");
+    assert!(v.get("stage2_groups").as_usize().is_some());
+    assert_eq!(v.get("options").get("k").as_usize(), Some(2));
+    for absent in ["stream", "n_tiles", "done", "tile", "row0", "rows"] {
+        assert!(
+            matches!(v.get(absent), Json::Null),
+            "streaming key '{absent}' must not leak into the v2.3 shape: {line}"
+        );
+    }
+    // the untiled echo carries no tile_rows either
+    assert!(matches!(v.get("options").get("tile_rows"), Json::Null));
+    // and exactly ONE line was sent: a ping answers next, in order
+    stream.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"pong\""), "{line}");
+}
+
+/// From-scratch oracle: register the materialized live set on a fresh
+/// coordinator and evaluate monolithically there.
+fn from_scratch(c: &Coordinator, queries: &[(f64, f64)], opts: &QueryOptions) -> Vec<f64> {
+    let (merged, _) = c.live_dataset("p").unwrap().snapshot().live_points();
+    let fresh = Coordinator::new(cpu_config()).unwrap();
+    fresh.register_dataset("m", merged).unwrap();
+    let mut o = opts.clone();
+    o.tile_rows = None; // the oracle runs monolithically
+    fresh
+        .interpolate(InterpolationRequest::new("m", queries.to_vec()).with_options(o))
+        .unwrap()
+        .values
+}
+
+fn drain(c: &Coordinator, queries: &[(f64, f64)], opts: &QueryOptions) -> (Vec<f64>, bool) {
+    let mut stream = c
+        .submit_stream(
+            InterpolationRequest::new("p", queries.to_vec()).with_options(opts.clone()),
+        )
+        .unwrap();
+    let mut got = Vec::with_capacity(queries.len());
+    while let Some(tile) = stream.next() {
+        let tile = tile.unwrap();
+        assert_eq!(tile.row_range.0, got.len(), "in-order contiguous tiles");
+        got.extend(tile.values);
+    }
+    let summary = stream.summary().expect("summary");
+    assert_eq!(summary.rows, queries.len());
+    (got, summary.stage1_cache_hit)
+}
+
+#[test]
+fn property_streamed_equals_monolithic_across_modes() {
+    // dense/local x clean/mutated x cached/uncached, with a tile size
+    // that does not divide the raster (ragged tail included)
+    for mutated in [false, true] {
+        for local in [false, true] {
+            let c = Coordinator::new(cpu_config()).unwrap();
+            c.register_dataset("p", workload::uniform_square(400, 50.0, 1301)).unwrap();
+            if mutated {
+                c.append_points("p", workload::uniform_square(30, 50.0, 1302)).unwrap();
+                c.remove_points("p", &[5, 403]).unwrap();
+            }
+            let queries = workload::uniform_square(45, 50.0, 1303).xy();
+            let mut opts = QueryOptions::new().tile_rows(7);
+            if local {
+                opts = opts.local_neighbors(24);
+            }
+
+            // uncached: the stream's own batch runs stage 1
+            let (cold, cold_hit) = drain(&c, &queries, &opts);
+            assert!(!cold_hit, "mutated={mutated} local={local}: first pass is cold");
+            let oracle = from_scratch(&c, &queries, &opts);
+            assert_eq!(
+                cold, oracle,
+                "mutated={mutated} local={local}: streamed-cold == monolithic"
+            );
+
+            // cached: the identical raster streams from the cached artifact
+            let (warm, warm_hit) = drain(&c, &queries, &opts);
+            assert!(warm_hit, "mutated={mutated} local={local}: repeat rides the cache");
+            assert_eq!(warm, cold, "cached stream must be bit-identical");
+
+            // and the monolithic API over the same coordinator agrees
+            let whole = c
+                .interpolate(
+                    InterpolationRequest::new("p", queries.clone()).with_options(opts.clone()),
+                )
+                .unwrap();
+            assert_eq!(whole.values, cold);
+        }
+    }
+}
+
+#[test]
+fn in_flight_stream_keeps_its_admitted_snapshot_across_mutation() {
+    let c = Coordinator::new(CoordinatorConfig {
+        // rendezvous delivery: the executor computes tile i+1 only after
+        // tile i is consumed, so the later tiles are provably computed
+        // *after* the mutation below — from the held snapshot
+        stream_buffer_tiles: 1,
+        ..cpu_config()
+    })
+    .unwrap();
+    let base = workload::uniform_square(300, 40.0, 1401);
+    c.register_dataset("p", base.clone()).unwrap();
+    let queries = workload::uniform_square(40, 40.0, 1402).xy();
+    let mut stream = c
+        .submit_stream(
+            InterpolationRequest::new("p", queries.clone())
+                .with_options(QueryOptions::new().tile_rows(10)),
+        )
+        .unwrap();
+
+    // consume one tile, then mutate the dataset under the stream
+    let first = stream.next().unwrap().unwrap();
+    assert_eq!(first.row_range, (0, 10));
+    assert_eq!(first.options.epoch, Some(0));
+    assert_eq!(first.options.overlay, Some(0));
+    c.append_points("p", workload::uniform_square(20, 40.0, 1403)).unwrap();
+    c.remove_points("p", &[1]).unwrap();
+
+    let mut got = first.values.clone();
+    while let Some(tile) = stream.next() {
+        let tile = tile.unwrap();
+        // every tile echoes the *admitted* snapshot, not the mutated one
+        assert_eq!(tile.options.epoch, Some(0));
+        assert_eq!(tile.options.overlay, Some(0));
+        got.extend(tile.values);
+    }
+    let summary = stream.summary().unwrap();
+    assert_eq!(summary.options.overlay, Some(0));
+
+    // oracle: the ORIGINAL point set, monolithically, on a fresh server
+    let fresh = Coordinator::new(cpu_config()).unwrap();
+    fresh.register_dataset("orig", base).unwrap();
+    let want = fresh.interpolate_values("orig", queries.clone()).unwrap();
+    assert_eq!(got, want, "in-flight stream must serve the admitted snapshot");
+
+    // a NEW request sees the mutation
+    let after = c
+        .interpolate(InterpolationRequest::new("p", queries))
+        .unwrap();
+    assert_eq!(after.options.overlay, Some(2));
+    assert_ne!(after.values, want, "the mutation does change new answers");
+}
+
+#[test]
+fn partial_cover_gathers_covered_tiles_and_sweeps_the_rest() {
+    let c = Coordinator::new(cpu_config()).unwrap();
+    c.register_dataset("p", workload::uniform_square(400, 50.0, 1501)).unwrap();
+    // mutated on purpose: partial cover must work on the merged path too
+    c.append_points("p", workload::uniform_square(12, 50.0, 1502)).unwrap();
+    let full = workload::uniform_square(64, 50.0, 1503).xy();
+    let cold = c
+        .interpolate(InterpolationRequest::new("p", full.clone()))
+        .unwrap();
+    assert!(!cold.stage1_cache_hit);
+    let m0 = c.metrics();
+
+    // a new raster of 48 rows in 16-row tiles: tile 0 and tile 2 are
+    // (scrambled) rows of the cached raster, tile 1 is entirely fresh
+    let mut mixed: Vec<(f64, f64)> = Vec::with_capacity(48);
+    mixed.extend(full[0..16].iter().rev());
+    let fresh_rows = workload::uniform_square(16, 50.0, 1504).xy();
+    mixed.extend(&fresh_rows);
+    mixed.extend(&full[32..48]);
+    let resp = c
+        .interpolate(
+            InterpolationRequest::new("p", mixed.clone())
+                .with_options(QueryOptions::new().tile_rows(16)),
+        )
+        .unwrap();
+    let m1 = c.metrics();
+    assert_eq!(
+        m1.stage1_tile_gathers - m0.stage1_tile_gathers,
+        2,
+        "two covered tiles row-gather"
+    );
+    assert_eq!(
+        m1.stage1_execs - m0.stage1_execs,
+        1,
+        "one (reduced) sweep for the uncovered tile"
+    );
+    assert!(m1.stage1_saved_ms > m0.stage1_saved_ms, "gathers credit saved time");
+
+    // bit-identity: covered rows equal the cold run's rows, the whole
+    // raster equals from-scratch evaluation
+    for i in 0..16 {
+        assert_eq!(resp.values[i], cold.values[15 - i], "tile 0 is full[0..16] reversed");
+        assert_eq!(resp.values[32 + i], cold.values[32 + i], "tile 2 is full[32..48]");
+    }
+    assert_eq!(resp.values, from_scratch(&c, &mixed, &QueryOptions::new()));
+
+    // the stitched artifact was cached under the mixed raster's key:
+    // an identical repeat is now an exact hit
+    let again = c
+        .interpolate(
+            InterpolationRequest::new("p", mixed).with_options(QueryOptions::new().tile_rows(16)),
+        )
+        .unwrap();
+    assert!(again.stage1_cache_hit);
+    assert_eq!(again.values, resp.values);
+}
+
+#[test]
+fn bounded_buffer_backpressures_a_slow_consumer() {
+    const TILE: usize = 8;
+    const BUFFER: usize = 2;
+    let c = Coordinator::new(CoordinatorConfig {
+        stream_buffer_tiles: BUFFER,
+        ..cpu_config()
+    })
+    .unwrap();
+    c.register_dataset("p", workload::uniform_square(200, 30.0, 1601)).unwrap();
+    let queries = workload::uniform_square(96, 30.0, 1602).xy(); // 12 tiles
+    let mut stream = c
+        .submit_stream(
+            InterpolationRequest::new("p", queries)
+                .with_options(QueryOptions::new().tile_rows(TILE)),
+        )
+        .unwrap();
+    let mut rows = 0usize;
+    while let Some(tile) = stream.next() {
+        rows += tile.unwrap().values.len();
+        // a deliberately slow consumer: the executor races ahead until
+        // the bounded channel blocks it
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert_eq!(rows, 96);
+    let m = c.metrics();
+    assert!(
+        m.stream_peak_buffered as usize <= BUFFER * TILE,
+        "peak {} exceeds the {} x {} bound",
+        m.stream_peak_buffered,
+        BUFFER,
+        TILE
+    );
+    assert!(
+        m.stream_peak_buffered as usize >= TILE,
+        "the slow consumer must have left at least one full tile buffered"
+    );
+    assert_eq!(m.stream_tiles, 12);
+}
+
+#[test]
+fn dropped_stream_cancels_cleanly_and_the_pipeline_stays_healthy() {
+    let c = Coordinator::new(CoordinatorConfig {
+        stream_buffer_tiles: 1,
+        ..cpu_config()
+    })
+    .unwrap();
+    c.register_dataset("p", workload::uniform_square(300, 30.0, 1701)).unwrap();
+    let queries = workload::uniform_square(60, 30.0, 1702).xy();
+    {
+        let mut stream = c
+            .submit_stream(
+                InterpolationRequest::new("p", queries.clone())
+                    .with_options(QueryOptions::new().tile_rows(5)),
+            )
+            .unwrap();
+        // take one tile, then walk away mid-stream
+        assert!(stream.next().unwrap().is_ok());
+    } // drop: cancels the remaining tiles
+    // the executor must not be wedged: fresh requests complete normally
+    let resp = c
+        .interpolate(InterpolationRequest::new("p", queries))
+        .unwrap();
+    assert_eq!(resp.values.len(), 60);
+    // an abandoned stream is not an error
+    assert_eq!(c.metrics().errors, 0);
+}
