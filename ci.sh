@@ -37,6 +37,13 @@ cargo test -q --test it_cache_live
 echo "== cargo test -q --test it_stream =="
 cargo test -q --test it_stream
 
+# Incremental raster subscriptions are tier-1: the materialized-view
+# bit-identity property (random mutate/compact sequences vs a
+# from-scratch oracle), the dirty-footprint soundness scan, and the
+# drop/retire sweep coverage must never be silently dropped.
+echo "== cargo test -q --test it_subscribe =="
+cargo test -q --test it_subscribe
+
 # Every examples/*.rs must be a registered [[example]] compile target, or
 # `cargo build --examples` (and cargo test's example builds) silently
 # skip it and it rots.

@@ -396,6 +396,128 @@ pub fn measure_live_cache(
     })
 }
 
+/// Subscription measurements at one size — the dirty-tile win of the
+/// incremental raster subscriptions (ROADMAP PR-6) made measurable: a
+/// **localized** append against a standing raster must push only the
+/// tiles the mutated point's kNN termination-bound footprint touches,
+/// at a fraction of the cost of recomputing the whole raster.
+#[derive(Debug, Clone, Copy)]
+pub struct SubscribeMeasurement {
+    pub n: usize,
+    /// Wall ms to materialize the initial raster (update 0).
+    pub initial_ms: f64,
+    /// Wall ms from a localized one-point append to the applied
+    /// incremental update (dirty tiles only).
+    pub update_dirty_ms: f64,
+    /// Wall ms of a from-scratch raster at the mutated snapshot — what
+    /// the update avoided.
+    pub full_recompute_ms: f64,
+    /// Dirty tiles the update pushed.
+    pub dirty_tiles: usize,
+    /// Tiles the dirty-footprint bound proved clean (not recomputed).
+    pub skipped_clean: usize,
+}
+
+/// Measure the subscription suite at one size (CPU-only coordinator,
+/// exact-local options so the dirty-footprint fast path serves; the
+/// incrementally-maintained raster is asserted bit-identical to a
+/// from-scratch query at the mutated snapshot).
+pub fn measure_subscribe(
+    n: usize,
+    opts: &MeasureOpts,
+    threads: Option<usize>,
+) -> Result<SubscribeMeasurement> {
+    use crate::coordinator::{
+        Coordinator, CoordinatorConfig, EngineMode, InterpolationRequest, QueryOptions,
+    };
+    let cfg = CoordinatorConfig {
+        engine_mode: EngineMode::CpuOnly,
+        stage1_threads: threads,
+        // a background compaction mid-measurement would fold the delta
+        // and change which execution path serves the update
+        live: crate::live::LiveConfig { auto_compact: false, ..Default::default() },
+        ..Default::default()
+    };
+    let coord = Coordinator::new(cfg)?;
+    let (data, queries) = standard_workload(n, opts);
+    coord.register_dataset("bench", data)?;
+    // exact local mode + 16-way tiling: the configuration whose
+    // termination bound lets clean tiles be proven clean.  k = 16 keeps
+    // the Eq.-4 statistic saturated above r_max for uniform data, so a
+    // far row's alpha survives the per-mutation r_exp drift bitwise —
+    // with the default k = 10 a visible fraction of rows sits on the
+    // alpha slope and every append would dirty them all.
+    let options = QueryOptions::new()
+        .k(16)
+        .local_neighbors(32)
+        .tile_rows((n / 16).max(1));
+
+    let t0 = std::time::Instant::now();
+    let mut sub = coord.subscribe(
+        InterpolationRequest::new("bench", queries.clone()).with_options(options.clone()),
+    )?;
+    let initial = sub.next_update()?;
+    let mut raster = vec![0.0f64; queries.len()];
+    initial.apply(&mut raster);
+    let initial_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // localized mutation: one point in a corner of the region, so most
+    // tiles' reach bounds never see it
+    let corner = PointSet::from_soa(
+        vec![opts.side * 0.02],
+        vec![opts.side * 0.02],
+        vec![1.0],
+    );
+    let t1 = std::time::Instant::now();
+    coord.append_points("bench", corner)?;
+    let update = sub.next_update()?;
+    update.apply(&mut raster);
+    let update_dirty_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+    // what the update avoided: a from-scratch raster at the same snapshot
+    let t2 = std::time::Instant::now();
+    let full = coord.interpolate(
+        InterpolationRequest::new("bench", queries).with_options(options),
+    )?;
+    let full_recompute_ms = t2.elapsed().as_secs_f64() * 1e3;
+    if full.values != raster {
+        return Err(Error::Service(
+            "incrementally-maintained raster diverged from the from-scratch query".into(),
+        ));
+    }
+    Ok(SubscribeMeasurement {
+        n,
+        initial_ms,
+        update_dirty_ms,
+        full_recompute_ms,
+        dirty_tiles: update.tiles.len(),
+        skipped_clean: update.skipped_clean,
+    })
+}
+
+/// The `subscribe` section of `BENCH_aidw.json`.
+fn subscribe_json(subs: &[SubscribeMeasurement]) -> Json {
+    Json::Arr(
+        subs.iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("n", Json::Num(s.n as f64)),
+                    ("label", Json::Str(size_label(s.n))),
+                    ("initial_ms", Json::Num(s.initial_ms)),
+                    ("update_dirty_ms", Json::Num(s.update_dirty_ms)),
+                    ("full_recompute_ms", Json::Num(s.full_recompute_ms)),
+                    ("dirty_tiles", Json::Num(s.dirty_tiles as f64)),
+                    ("skipped_clean", Json::Num(s.skipped_clean as f64)),
+                    (
+                        "speedup",
+                        Json::Num(s.full_recompute_ms / s.update_dirty_ms.max(1e-9)),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// The `live_cache` section of `BENCH_aidw.json`.
 fn live_cache_json(live: &[LiveCacheMeasurement]) -> Json {
     Json::Arr(
@@ -460,6 +582,7 @@ pub fn cpu_bench_json(
     results: &[CpuSizeMeasurement],
     planner: &[PlannerMeasurement],
     live_cache: &[LiveCacheMeasurement],
+    subscribe: &[SubscribeMeasurement],
     threads: usize,
     seed: u64,
 ) -> Json {
@@ -472,6 +595,7 @@ pub fn cpu_bench_json(
         ("k", Json::Num(AidwParams::default().k as f64)),
         ("planner", planner_json(planner)),
         ("live_cache", live_cache_json(live_cache)),
+        ("subscribe", subscribe_json(subscribe)),
         (
             "sizes",
             Json::Arr(
@@ -511,6 +635,7 @@ pub fn pjrt_bench_json(
     results: &[SizeMeasurement],
     planner: &[PlannerMeasurement],
     live_cache: &[LiveCacheMeasurement],
+    subscribe: &[SubscribeMeasurement],
     threads: usize,
     seed: u64,
 ) -> Json {
@@ -523,6 +648,7 @@ pub fn pjrt_bench_json(
         ("k", Json::Num(AidwParams::default().k as f64)),
         ("planner", planner_json(planner)),
         ("live_cache", live_cache_json(live_cache)),
+        ("subscribe", subscribe_json(subscribe)),
         (
             "sizes",
             Json::Arr(
@@ -634,7 +760,18 @@ mod tests {
             assert_eq!(l.warm_hits, 1, "mutated repeat raster must hit the cache");
             assert_eq!(l.post_mutation_execs, 1, "a mutation must invalidate exactly once");
         }
-        let doc = cpu_bench_json(&results, &planner, &live, pool.threads(), opts.seed);
+        let subs: Vec<SubscribeMeasurement> = sizes
+            .iter()
+            .map(|&n| measure_subscribe(n, &opts, Some(2)).unwrap())
+            .collect();
+        for s in &subs {
+            assert!(s.dirty_tiles >= 1, "the mutated corner tile must be pushed");
+            assert!(
+                s.skipped_clean >= 1,
+                "a localized append must leave some tile provably clean"
+            );
+        }
+        let doc = cpu_bench_json(&results, &planner, &live, &subs, pool.threads(), opts.seed);
         let text = doc.to_string();
         // round-trips as JSON and carries the schema the perf trajectory
         // tooling greps for
@@ -662,5 +799,10 @@ mod tests {
         assert!(lc[0].get("mutated_warm_ms").as_f64().is_some());
         assert!(lc[0].get("stage1_saved_ms").as_f64().is_some());
         assert!(pj[0].get("stage1_saved_ms").as_f64().is_some());
+        let sj = back.get("subscribe").as_arr().unwrap();
+        assert_eq!(sj.len(), 2);
+        assert!(sj[0].get("update_dirty_ms").as_f64().is_some());
+        assert!(sj[0].get("full_recompute_ms").as_f64().is_some());
+        assert!(sj[0].get("skipped_clean").as_usize().unwrap() >= 1);
     }
 }

@@ -37,14 +37,23 @@
 //! subsets, permutations, and sub-tiles of a cached raster all skip the
 //! kNN search.  Each entry carries a query→row index for the cover test.
 //!
-//! The store is a small `Mutex<VecDeque>` scanned linearly: capacities
-//! are tens of entries (each potentially megabytes of artifact), so a
-//! hash map would buy nothing — and `Stage1Key` holds `f64`s, which have
-//! no `Eq`/`Hash`.  Queries are identified by a 128-bit FNV-1a
-//! fingerprint of their raw bits plus the exact count; two distinct
-//! rasters colliding on both fingerprint halves is beyond-astronomical,
-//! and a false hit is the only way this cache could ever change answers
-//! (the subset path compares raw coordinate bits, not hashes).
+//! The store is a small `Mutex<VecDeque>` scanned linearly for exact-key
+//! hits: capacities are tens of entries (each potentially megabytes of
+//! artifact), so a hash map would buy nothing — and `Stage1Key` holds
+//! `f64`s, which have no `Eq`/`Hash`.  Queries are identified by a
+//! 128-bit FNV-1a fingerprint of their raw bits plus the exact count;
+//! two distinct rasters colliding on both fingerprint halves is
+//! beyond-astronomical, and a false hit is the only way this cache could
+//! ever change answers (the subset path compares raw coordinate bits,
+//! not hashes).
+//!
+//! Covering-entry probes (subset and tile-granular partial cover — and
+//! the per-tile lookups the subscription worker issues on every dirty
+//! push) go through a **coordinate-bits index**: `coordinate → entry
+//! uids` postings, so a probe inspects only the entries that actually
+//! contain its first query coordinate instead of walking the whole LRU.
+//! Any entry covering *every* probe row necessarily contains the first
+//! one, so the posting list is a complete candidate set.
 //!
 //! ## Accounting
 //!
@@ -136,15 +145,19 @@ fn artifact_bytes(a: &NeighborArtifact) -> usize {
     artifact_row_bytes(a.r_obs.len(), a.neighbors.as_ref().map(|t| t.width))
 }
 
-/// Approximate bytes per query→row index entry (two u64 key halves, a
-/// u32 row, and hash-map slot overhead).
-const ROW_INDEX_BYTES_PER_QUERY: usize = 24;
+/// Approximate bytes per indexed query coordinate: the per-entry
+/// query→row slot (two u64 key halves + a u32 row) plus the cache-wide
+/// coordinate-index posting (key + entry uid), with hash-map overhead.
+const ROW_INDEX_BYTES_PER_QUERY: usize = 48;
 
 /// One cached stage-1 product plus its subset-reuse row index.
 #[derive(Debug)]
 struct Entry {
     key: CacheKey,
     artifact: Arc<NeighborArtifact>,
+    /// Stable insert-order id — the coordinate index's handle on this
+    /// entry (positions shift on every LRU promotion, uids never do).
+    uid: u64,
     /// Eviction weight (artifact buffers + row index), fixed at insert.
     weight: usize,
     /// Query coordinate bits → artifact row.  Duplicate coordinates in
@@ -191,9 +204,35 @@ pub struct CacheStats {
 struct CacheState {
     /// Front = most recently used.
     entries: VecDeque<Entry>,
+    /// Coordinate bits → uids of entries whose row index contains that
+    /// coordinate.  Covering probes walk one posting list instead of the
+    /// whole LRU; maintained on insert, replace, eviction, and purge.
+    by_coord: HashMap<(u64, u64), Vec<u64>>,
+    next_uid: u64,
     bytes: usize,
     evictions: u64,
     hit_bytes: u64,
+}
+
+impl CacheState {
+    /// Add one entry's coordinates to the coordinate index.
+    fn index_entry(&mut self, e: &Entry) {
+        for coord in e.rows.keys() {
+            self.by_coord.entry(*coord).or_default().push(e.uid);
+        }
+    }
+
+    /// Remove one entry's postings (replace / eviction / purge).
+    fn deindex_entry(&mut self, e: &Entry) {
+        for coord in e.rows.keys() {
+            if let Some(uids) = self.by_coord.get_mut(coord) {
+                uids.retain(|&u| u != e.uid);
+                if uids.is_empty() {
+                    self.by_coord.remove(coord);
+                }
+            }
+        }
+    }
 }
 
 /// Bounded LRU of stage-1 artifacts, capped both by entry count and by
@@ -279,25 +318,30 @@ impl NeighborCache {
         key: &CacheKey,
         queries: &[(f64, f64)],
     ) -> Option<(Arc<NeighborArtifact>, Vec<u32>, f64)> {
+        // a covering entry must contain the first query coordinate, so
+        // its posting list is a complete candidate set — the probe walks
+        // candidates that share that coordinate, not the whole LRU
+        let (x0, y0) = queries[0];
+        let candidates = st.by_coord.get(&(x0.to_bits(), y0.to_bits()))?.clone();
         let mut found: Option<(usize, Vec<u32>)> = None;
-        for (pos, entry) in st.entries.iter().enumerate() {
+        'candidate: for uid in candidates {
+            let Some(pos) = st.entries.iter().position(|e| e.uid == uid) else {
+                debug_assert!(false, "coordinate index points at a missing entry");
+                continue;
+            };
+            let entry = &st.entries[pos];
             if !entry.key.same_identity(key) {
                 continue;
             }
             let mut rows = Vec::with_capacity(queries.len());
-            let covered = queries.iter().all(|&(x, y)| {
+            for &(x, y) in queries {
                 match entry.rows.get(&(x.to_bits(), y.to_bits())) {
-                    Some(&r) => {
-                        rows.push(r);
-                        true
-                    }
-                    None => false,
+                    Some(&r) => rows.push(r),
+                    None => continue 'candidate,
                 }
-            });
-            if covered {
-                found = Some((pos, rows));
-                break;
             }
+            found = Some((pos, rows));
+            break;
         }
         let (pos, rows) = found?;
         let entry = st.entries.remove(pos).unwrap();
@@ -347,8 +391,13 @@ impl NeighborCache {
         if let Some(pos) = st.entries.iter().position(|e| e.key == key) {
             let old = st.entries.remove(pos).unwrap();
             st.bytes -= old.weight;
+            st.deindex_entry(&old);
         }
-        st.entries.push_front(Entry { key, artifact, weight, rows });
+        let uid = st.next_uid;
+        st.next_uid += 1;
+        let entry = Entry { key, artifact, uid, weight, rows };
+        st.index_entry(&entry);
+        st.entries.push_front(entry);
         st.bytes += weight;
         while st.entries.len() > self.capacity
             || (self.max_bytes > 0 && st.bytes > self.max_bytes)
@@ -356,6 +405,7 @@ impl NeighborCache {
             match st.entries.pop_back() {
                 Some(victim) => {
                     st.bytes -= victim.weight;
+                    st.deindex_entry(&victim);
                     st.evictions += 1;
                 }
                 None => break,
@@ -366,7 +416,15 @@ impl NeighborCache {
     /// Drop every entry of one dataset (register-over / drop paths).
     pub fn purge_dataset(&self, dataset: &str) {
         let mut st = self.inner.lock().unwrap();
-        st.entries.retain(|e| e.key.dataset != dataset);
+        let mut kept = VecDeque::with_capacity(st.entries.len());
+        while let Some(e) = st.entries.pop_front() {
+            if e.key.dataset == dataset {
+                st.deindex_entry(&e);
+            } else {
+                kept.push_back(e);
+            }
+        }
+        st.entries = kept;
         st.bytes = st.entries.iter().map(|e| e.weight).sum();
     }
 
@@ -577,6 +635,50 @@ mod tests {
         c.put(key_for("d", 0, 0, &huge), &huge, artifact(4.0, 1000));
         assert!(c.get(&key_for("d", 0, 0, &huge)).is_none());
         assert_eq!(c.len(), 2, "oversized artifact left the cache untouched");
+    }
+
+    #[test]
+    fn coord_index_survives_replace_evict_and_purge() {
+        let c = NeighborCache::new(2, NO_BYTE_CAP);
+        let (q1, q2) = (raster(1, 4), raster(2, 4));
+        c.put(key_for("d", 0, 0, &q1), &q1, artifact(1.0, 4));
+        c.put(key_for("e", 0, 0, &q2), &q2, artifact(2.0, 4));
+        // covering probe resolves through the coordinate index
+        let sub = vec![q1[2], q1[0]];
+        assert!(matches!(
+            c.lookup(&key_for("d", 0, 0, &sub), &sub),
+            CacheOutcome::Subset { .. }
+        ));
+        // same-key replace: the fresh artifact serves (no stale posting)
+        c.put(key_for("d", 0, 0, &q1), &q1, artifact(9.0, 4));
+        match c.lookup(&key_for("d", 0, 0, &sub), &sub) {
+            CacheOutcome::Subset { artifact: got, .. } => {
+                assert_eq!(got.r_obs, vec![9.0, 9.0]);
+            }
+            _ => panic!("replaced entry must still cover"),
+        }
+        // evict both original entries (capacity 2) with two new rasters
+        let (q3, q4) = (raster(3, 4), raster(4, 4));
+        c.put(key_for("f", 0, 0, &q3), &q3, artifact(3.0, 4));
+        c.put(key_for("g", 0, 0, &q4), &q4, artifact(4.0, 4));
+        assert!(
+            matches!(c.lookup(&key_for("d", 0, 0, &sub), &sub), CacheOutcome::Miss),
+            "an evicted entry must not serve via a stale index posting"
+        );
+        // purge one dataset: its postings vanish, the survivor's keep serving
+        c.purge_dataset("g");
+        let sub4 = vec![q4[0]];
+        assert!(matches!(
+            c.lookup(&key_for("g", 0, 0, &sub4), &sub4),
+            CacheOutcome::Miss
+        ));
+        let sub3 = vec![q3[3], q3[1]];
+        match c.lookup(&key_for("f", 0, 0, &sub3), &sub3) {
+            CacheOutcome::Subset { artifact: got, .. } => {
+                assert_eq!(got.r_obs, vec![3.0, 3.0]);
+            }
+            _ => panic!("survivor must still cover after a purge"),
+        }
     }
 
     #[test]

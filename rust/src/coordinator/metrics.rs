@@ -83,6 +83,19 @@ pub struct Metrics {
     pub stage1_tile_gathers: AtomicU64,
     /// Result tiles emitted by the stage-2 streaming executor (v2.4).
     pub stream_tiles: AtomicU64,
+    /// Live raster subscriptions currently registered (gauge, v2.5).
+    pub subs_active: AtomicU64,
+    /// Post-mutation update pushes delivered to subscriptions (v2.5);
+    /// a burst of mutations coalesces into one update.
+    pub sub_updates: AtomicU64,
+    /// Tiles pushed over subscription streams, initial + updates (v2.5).
+    pub tiles_pushed: AtomicU64,
+    /// Update tiles recomputed because the dirty-footprint bound flagged
+    /// at least one of their rows (v2.5; excludes initial-raster tiles).
+    pub tiles_dirty: AtomicU64,
+    /// Update tiles *proven clean* and skipped — the subscriber kept its
+    /// materialized values and no stage ran for them (v2.5).
+    pub tiles_skipped_clean: AtomicU64,
     /// Peak values buffered between the stage-2 executor and any bounded
     /// stream consumer (gauge, v2.4): bounded by construction at
     /// `stream_buffer_tiles x tile_rows` — this gauge is the receipt.
@@ -150,6 +163,11 @@ impl Metrics {
             coalesced_batches: self.coalesced_batches.load(Ordering::Relaxed),
             stage1_tile_gathers: self.stage1_tile_gathers.load(Ordering::Relaxed),
             stream_tiles: self.stream_tiles.load(Ordering::Relaxed),
+            subs_active: self.subs_active.load(Ordering::Relaxed),
+            sub_updates: self.sub_updates.load(Ordering::Relaxed),
+            tiles_pushed: self.tiles_pushed.load(Ordering::Relaxed),
+            tiles_dirty: self.tiles_dirty.load(Ordering::Relaxed),
+            tiles_skipped_clean: self.tiles_skipped_clean.load(Ordering::Relaxed),
             stream_peak_buffered: self.stream_peak_buffered.load(Ordering::Relaxed),
             stage1_saved_ms: self.stage1_saved_ms(),
             cache_entries: cache.entries as u64,
@@ -187,6 +205,17 @@ pub struct MetricsSnapshot {
     pub stage1_tile_gathers: u64,
     /// Result tiles emitted by the streaming stage-2 executor (v2.4).
     pub stream_tiles: u64,
+    /// Live raster subscriptions currently registered (gauge, v2.5).
+    pub subs_active: u64,
+    /// Post-mutation update pushes delivered to subscriptions (v2.5).
+    pub sub_updates: u64,
+    /// Tiles pushed over subscription streams, initial + updates (v2.5).
+    pub tiles_pushed: u64,
+    /// Update tiles recomputed as dirty (v2.5).
+    pub tiles_dirty: u64,
+    /// Update tiles proven clean and skipped (v2.5): the receipt that
+    /// incremental maintenance did less work than a full recompute.
+    pub tiles_skipped_clean: u64,
     /// Peak values buffered toward any bounded stream consumer (v2.4).
     pub stream_peak_buffered: u64,
     /// Stage-1 wall milliseconds the neighbor cache saved (v2.4): each
@@ -259,5 +288,22 @@ mod tests {
         assert_eq!(s.requests, 3);
         assert!((s.knn_s - 1.5).abs() < 1e-5);
         assert!((s.interp_s - 2.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn subscription_counters_snapshot() {
+        let m = Metrics::default();
+        m.subs_active.fetch_add(2, Ordering::Relaxed);
+        m.sub_updates.fetch_add(5, Ordering::Relaxed);
+        m.tiles_pushed.fetch_add(9, Ordering::Relaxed);
+        m.tiles_dirty.fetch_add(4, Ordering::Relaxed);
+        m.tiles_skipped_clean.fetch_add(11, Ordering::Relaxed);
+        m.subs_active.fetch_sub(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.subs_active, 1, "gauge settles on unregister");
+        assert_eq!(s.sub_updates, 5);
+        assert_eq!(s.tiles_pushed, 9);
+        assert_eq!(s.tiles_dirty, 4);
+        assert_eq!(s.tiles_skipped_clean, 11);
     }
 }

@@ -220,14 +220,17 @@ struct Stage2Job {
     cache_hit: bool,
 }
 
-struct Shared {
-    registry: LiveRegistry,
-    queue: JobQueue,
-    metrics: Metrics,
-    cache: NeighborCache,
-    config: CoordinatorConfig,
-    pool: Pool,
-    running: AtomicBool,
+pub(crate) struct Shared {
+    pub(crate) registry: LiveRegistry,
+    pub(crate) queue: JobQueue,
+    pub(crate) metrics: Metrics,
+    pub(crate) cache: NeighborCache,
+    pub(crate) config: CoordinatorConfig,
+    pub(crate) pool: Pool,
+    pub(crate) running: AtomicBool,
+    /// Live raster subscriptions (incremental dirty-tile push) — see
+    /// [`crate::subscribe`].
+    pub(crate) subs: crate::subscribe::SubscriptionRegistry,
 }
 
 /// The interpolation service coordinator.  See module docs.
@@ -235,6 +238,8 @@ pub struct Coordinator {
     shared: Arc<Shared>,
     dispatcher: Option<JoinHandle<()>>,
     stage2: Option<JoinHandle<()>>,
+    /// The subscription worker (dirty-tile classification + push).
+    subs_worker: Option<JoinHandle<()>>,
     /// Which backend stage 2 is using (resolved at startup).
     backend: Backend,
 }
@@ -280,6 +285,7 @@ impl Coordinator {
             config,
             pool,
             running: AtomicBool::new(true),
+            subs: crate::subscribe::SubscriptionRegistry::default(),
         });
 
         // restore persisted live datasets (snapshot + WAL replay) before
@@ -317,7 +323,25 @@ impl Coordinator {
                 .map_err(Error::Io)?
         };
 
-        Ok(Coordinator { shared, dispatcher: Some(dispatcher), stage2: Some(stage2), backend })
+        // subscription worker: initial-raster pushes + dirty-tile
+        // recompute after mutations (see crate::subscribe)
+        let (sub_tx, sub_rx) = mpsc::channel::<crate::subscribe::SubEvent>();
+        shared.subs.attach(sub_tx);
+        let subs_worker = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("aidw-subs".into())
+                .spawn(move || crate::subscribe::worker_loop(shared, sub_rx))
+                .map_err(Error::Io)?
+        };
+
+        Ok(Coordinator {
+            shared,
+            dispatcher: Some(dispatcher),
+            stage2: Some(stage2),
+            subs_worker: Some(subs_worker),
+            backend,
+        })
     }
 
     /// Coordinator with default config.
@@ -343,6 +367,7 @@ impl Coordinator {
         // retire any existing entry *before* writing the replacement's
         // durable files, so the old dataset's compactor can never clobber
         // them afterwards
+        let displaced = self.shared.registry.get(name).is_ok();
         if let Ok(old) = self.shared.registry.get(name) {
             old.retire();
         }
@@ -377,6 +402,14 @@ impl Coordinator {
         // between purge and publish (the epoch-base instance id in the
         // cache key is the backstop for the remaining race)
         self.shared.cache.purge_dataset(name);
+        // displaced-epoch retirement: subscriptions on the old instance
+        // must terminate with a structured error, not serve the new one
+        if displaced && self.shared.subs.active_on(name) {
+            self.shared.subs.notify(crate::subscribe::SubEvent::Retired {
+                dataset: name.to_string(),
+                replaced: true,
+            });
+        }
         Ok(())
     }
 
@@ -396,6 +429,12 @@ impl Coordinator {
                     crate::live::wal::remove_rotated_segments(&base);
                     std::fs::remove_file(base).ok();
                 }
+                if self.shared.subs.active_on(name) {
+                    self.shared.subs.notify(crate::subscribe::SubEvent::Retired {
+                        dataset: name.to_string(),
+                        replaced: false,
+                    });
+                }
                 true
             }
             None => false,
@@ -406,7 +445,17 @@ impl Coordinator {
     /// compaction once the overlay crosses the configured threshold.
     pub fn append_points(&self, name: &str, points: PointSet) -> Result<AppendOutcome> {
         let ds = self.shared.registry.get(name)?;
+        // dirty-footprint event for live subscriptions (datasets without
+        // subscribers pay only the active_on check)
+        let watched = self.shared.subs.active_on(name);
         let out = ds.append(&points)?;
+        if watched {
+            let coords = points.xs.iter().zip(&points.ys).map(|(&x, &y)| (x, y)).collect();
+            self.shared.subs.notify(crate::subscribe::SubEvent::Mutated {
+                dataset: name.to_string(),
+                coords,
+            });
+        }
         LiveDataset::maybe_spawn_compaction(&ds);
         Ok(out)
     }
@@ -414,7 +463,29 @@ impl Coordinator {
     /// Tombstone live points by id (strict: all ids must be live).
     pub fn remove_points(&self, name: &str, ids: &[u64]) -> Result<RemoveOutcome> {
         let ds = self.shared.registry.get(name)?;
+        // capture the victims' coordinates *before* the tombstones land
+        // (afterwards they are no longer in the live view)
+        let coords = if self.shared.subs.active_on(name) {
+            let want: std::collections::HashSet<u64> = ids.iter().copied().collect();
+            let (pts, live_ids) = ds.snapshot().live_points();
+            Some(
+                live_ids
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, id)| want.contains(id))
+                    .map(|(i, _)| (pts.xs[i], pts.ys[i]))
+                    .collect::<Vec<_>>(),
+            )
+        } else {
+            None
+        };
         let out = ds.remove(ids)?;
+        if let Some(coords) = coords {
+            self.shared.subs.notify(crate::subscribe::SubEvent::Mutated {
+                dataset: name.to_string(),
+                coords,
+            });
+        }
         LiveDataset::maybe_spawn_compaction(&ds);
         Ok(out)
     }
@@ -422,7 +493,15 @@ impl Coordinator {
     /// Synchronously compact a live dataset (fold overlay, bump epoch,
     /// truncate WAL).
     pub fn compact_dataset(&self, name: &str) -> Result<CompactionReport> {
-        self.shared.registry.get(name)?.compact_now()
+        let report = self.shared.registry.get(name)?.compact_now()?;
+        // compaction is value-identical: subscriptions get a zero-tile
+        // identity refresh carrying the new epoch
+        if self.shared.subs.active_on(name) {
+            self.shared
+                .subs
+                .notify(crate::subscribe::SubEvent::Compacted { dataset: name.to_string() });
+        }
+        Ok(report)
     }
 
     /// Live mutation/compaction statistics for one dataset.
@@ -466,6 +545,75 @@ impl Coordinator {
     /// executor blocks and later batches wait behind it.
     pub fn submit_stream(&self, request: InterpolationRequest) -> Result<TileStream> {
         self.enqueue(request, true)
+    }
+
+    /// Register a **standing raster**: the returned
+    /// [`crate::subscribe::SubscriptionStream`] first delivers the full
+    /// initial raster (update 0) as tile frames, then, after every
+    /// mutation of the dataset, an update containing only the **dirty
+    /// tiles** recomputed against the new `(epoch, overlay)` snapshot —
+    /// clean tiles are never recomputed (protocol v2.5 `subscribe`).
+    /// Updates coalesce rapid mutation bursts into one push.  Dropping
+    /// the stream unsubscribes; if the dataset is dropped or
+    /// registered-over, the stream terminates with a structured error
+    /// frame.  See [`crate::subscribe`] for the dirty-footprint bound.
+    pub fn subscribe(
+        &self,
+        request: InterpolationRequest,
+    ) -> Result<crate::subscribe::SubscriptionStream> {
+        use crate::subscribe::{NewSub, SubEvent, SubscriptionStream};
+        if request.queries.is_empty() {
+            return Err(Error::InvalidArgument("empty query list".into()));
+        }
+        let live = self.shared.registry.get(&request.dataset)?;
+        let mut resolved = request.options.resolve(&self.shared.config);
+        resolved.validate()?;
+        let snap = live.snapshot();
+        resolved.epoch = Some(snap.epoch);
+        resolved.overlay = Some(snap.overlay_version());
+        let rows = request.queries.len();
+        let plan = TilePlan::new(rows, resolved.tile_rows);
+        let events = self
+            .shared
+            .subs
+            .sender()
+            .ok_or_else(|| Error::Unavailable("subscription worker not running".into()))?;
+        // bounded frame queue: a slow subscriber backpressures its own
+        // pushes (the worker waits in a cancellable poll loop)
+        let (tx, rx) = mpsc::sync_channel(self.shared.config.stream_buffer_tiles.max(2));
+        let id = self.shared.subs.next_id();
+        let cancel = Arc::new(AtomicBool::new(false));
+        self.shared.subs.register(id, &request.dataset, cancel.clone());
+        self.shared.metrics.subs_active.fetch_add(1, Ordering::Relaxed);
+        let sub = NewSub {
+            id,
+            dataset: request.dataset.clone(),
+            queries: request.queries,
+            resolved,
+            tx,
+            cancel: cancel.clone(),
+        };
+        if events.send(SubEvent::Subscribe(Box::new(sub))).is_err() {
+            if self.shared.subs.unregister(id) {
+                self.shared.metrics.subs_active.fetch_sub(1, Ordering::Relaxed);
+            }
+            return Err(Error::Unavailable("subscription worker stopped".into()));
+        }
+        Ok(SubscriptionStream::new(
+            rx,
+            rows,
+            plan.n_tiles(),
+            plan.tile_rows(),
+            echo_options(&resolved, &snap),
+            id,
+            cancel,
+            events,
+        ))
+    }
+
+    /// Registered-but-unswept subscription count (diagnostics/tests).
+    pub fn subscriptions(&self) -> usize {
+        self.shared.subs.len()
     }
 
     /// Shared submission prologue: validate, resolve, stamp the snapshot
@@ -578,6 +726,13 @@ impl Coordinator {
                 let _ = h.join();
             }
             if let Some(h) = self.stage2.take() {
+                let _ = h.join();
+            }
+            // terminate every subscription with a structured error and
+            // stop the worker; running=false already unwedged any push
+            // blocked on a full frame queue
+            self.shared.subs.shutdown();
+            if let Some(h) = self.subs_worker.take() {
                 let _ = h.join();
             }
             self.shared.registry.shutdown_all();

@@ -66,6 +66,7 @@ pub mod rng;
 pub mod runtime;
 pub mod service;
 pub mod session;
+pub mod subscribe;
 pub mod workload;
 
 pub use error::{Error, Result};
@@ -85,5 +86,6 @@ pub mod prelude {
     pub use crate::live::{LiveConfig, LiveDataset, LiveStatus};
     pub use crate::runtime::Engine;
     pub use crate::session::{AidwSession, SessionReply, SessionStream, SessionTicket};
+    pub use crate::subscribe::{SubTile, SubUpdate, SubUpdateStart, SubscriptionFrame, SubscriptionStream};
     pub use crate::workload;
 }

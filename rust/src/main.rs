@@ -1,10 +1,12 @@
 //! `aidw` — CLI for the AIDW interpolation service.
 //!
 //! Subcommands:
-//!   serve        start the TCP JSON service (protocol v2.4)
+//!   serve        start the TCP JSON service (protocol v2.5)
 //!   interpolate  one-shot interpolation over a generated/loaded workload
 //!   query        interpolate against a running service over TCP
 //!                (--stream consumes the v2.4 tiled streaming response)
+//!   subscribe    hold a standing raster against a running service and
+//!                print incremental dirty-tile updates (protocol v2.5)
 //!   mutate       append/remove/compact/stat against a running service
 //!   bench        run the perf suite, emit BENCH_aidw.json
 //!   info         artifact + engine diagnostics
@@ -51,6 +53,10 @@ USAGE:
                    [--variant naive|tiled] [--k 10] [--ring exact|paper+1]
                    [--local N] [--alpha-levels 0.5,1,2,3,4]
                    [--rmin 0] [--rmax 2] [--area A]
+  aidw subscribe   --addr HOST:PORT --dataset NAME [--queries N] [--side 100]
+                   [--seed 42] [--updates N] [--out out.csv]
+                   [--variant naive|tiled] [--k 10] [--ring exact|paper+1]
+                   [--local N] [--tile-rows N] [--area A]
   aidw mutate      --addr HOST:PORT --dataset NAME --action append|remove|compact|stat
                    [--file pts.csv | --n N --side 100 --seed 42 --dist uniform]
                    [--ids 3,17,9000]
@@ -68,8 +74,13 @@ enables WAL-backed durable mutation (protocol v2.1 `mutate` op); `aidw
 mutate` is the matching client.  `aidw query --stream` consumes the
 protocol-v2.4 tiled streaming response — tiles are printed/written as
 they arrive, so a raster larger than client memory streams through in
-constant space.  `aidw bench` writes the sizes x
-variants x stage-times JSON the repo tracks as its perf trajectory.
+constant space.  `aidw subscribe` registers a protocol-v2.5 standing
+raster: after the initial materialization, every server-side mutation
+pushes only the dirty tiles (exact-kNN termination-bound footprint),
+applied to a client-side raster kept bit-identical to a from-scratch
+query; `--updates N` unsubscribes after N incremental updates.  `aidw
+bench` writes the sizes x variants x stage-times JSON the repo tracks
+as its perf trajectory.
 ";
 
 fn main() {
@@ -89,6 +100,7 @@ fn run(argv: &[String]) -> Result<()> {
         "serve" => serve(&args),
         "interpolate" => interpolate(&args),
         "query" => query(&args),
+        "subscribe" => subscribe(&args),
         "mutate" => mutate(&args),
         "bench" => bench(&args),
         "generate" => generate(&args),
@@ -357,6 +369,14 @@ fn bench(args: &Args) -> Result<()> {
         live_cache.push(aidw::benchsuite::measure_live_cache(n, &opts, threads)?);
     }
 
+    // subscription suite: dirty-tile incremental update vs a from-scratch
+    // raster at the same snapshot (both bit-identical by construction)
+    let mut subscribe = Vec::with_capacity(sizes.len());
+    for &n in &sizes {
+        println!("  subscribe n = {} ...", aidw::benchsuite::size_label(n));
+        subscribe.push(aidw::benchsuite::measure_subscribe(n, &opts, threads)?);
+    }
+
     let artifact_dir = aidw::runtime::default_artifact_dir();
     let doc = if artifact_dir.join("manifest.json").exists() {
         println!("bench: PJRT artifacts found — full five-version suite");
@@ -366,7 +386,14 @@ fn bench(args: &Args) -> Result<()> {
             println!("  measuring n = {} ...", aidw::benchsuite::size_label(n));
             results.push(aidw::benchsuite::measure_size(&engine, &pool, n, &opts)?);
         }
-        aidw::benchsuite::pjrt_bench_json(&results, &planner, &live_cache, pool.threads(), seed)
+        aidw::benchsuite::pjrt_bench_json(
+            &results,
+            &planner,
+            &live_cache,
+            &subscribe,
+            pool.threads(),
+            seed,
+        )
     } else {
         println!("bench: no artifacts — CPU suite (serial + improved pipeline)");
         let mut results = Vec::with_capacity(sizes.len());
@@ -374,7 +401,14 @@ fn bench(args: &Args) -> Result<()> {
             println!("  measuring n = {} ...", aidw::benchsuite::size_label(n));
             results.push(aidw::benchsuite::measure_size_cpu(&pool, n, &opts));
         }
-        aidw::benchsuite::cpu_bench_json(&results, &planner, &live_cache, pool.threads(), seed)
+        aidw::benchsuite::cpu_bench_json(
+            &results,
+            &planner,
+            &live_cache,
+            &subscribe,
+            pool.threads(),
+            seed,
+        )
     };
     std::fs::write(&out_path, doc.to_string() + "\n")?;
     println!("wrote {out_path}");
@@ -563,6 +597,68 @@ fn query(args: &Args) -> Result<()> {
     );
     if let Some(out) = args.get("out") {
         println!("wrote {out} (incrementally, one tile at a time)");
+    }
+    Ok(())
+}
+
+/// Hold a standing raster against a running service (protocol v2.5):
+/// subscribe, materialize the initial raster, then print each pushed
+/// update — only the dirty tiles travel, and the client-side raster
+/// stays bit-identical to a from-scratch query at the served snapshot.
+fn subscribe(args: &Args) -> Result<()> {
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| Error::InvalidArgument("--addr is required".into()))?;
+    let dataset = args
+        .get("dataset")
+        .ok_or_else(|| Error::InvalidArgument("--dataset is required".into()))?;
+    let n_queries = args.get_usize("queries", 1024)?;
+    let side = args.get_f64("side", 100.0)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let queries = workload::uniform_square(n_queries, side, seed + 1).xy();
+    let options = options_from(args)?;
+    // 0 = stay subscribed until the server terminates the feed
+    let max_updates = args.get_usize("updates", 0)?;
+
+    let mut client = aidw::service::Client::connect(addr)?;
+    let mut sub = client.subscribe(dataset, &queries, options)?;
+    println!(
+        "subscription {}: {} rows as {} tile(s) of <= {} rows",
+        sub.sub, sub.rows, sub.n_tiles, sub.tile_rows
+    );
+    let mut raster = vec![f64::NAN; sub.rows];
+    let mut incremental = 0usize;
+    loop {
+        let u = match sub.next_update() {
+            Ok(u) => u,
+            Err(e) => {
+                println!("subscription terminated: {e}");
+                break;
+            }
+        };
+        u.apply(&mut raster);
+        if u.update == 0 {
+            println!("initial raster materialized ({} tiles)", u.tiles.len());
+        } else {
+            incremental += 1;
+            println!(
+                "update {}: epoch {} overlay {} — {} dirty tile(s) pushed, {} clean skipped",
+                u.update,
+                u.epoch,
+                u.overlay,
+                u.tiles.len(),
+                u.skipped_clean
+            );
+        }
+        if max_updates > 0 && incremental >= max_updates {
+            sub.unsubscribe()?;
+            println!("unsubscribed after {incremental} incremental update(s)");
+            break;
+        }
+    }
+    if let Some(out) = args.get("out") {
+        write_csv(out, &queries, &raster)?;
+        println!("wrote {out} (the last materialized raster)");
     }
     Ok(())
 }

@@ -1,4 +1,4 @@
-//! TCP interpolation service: newline-delimited JSON (protocol v2.3, see
+//! TCP interpolation service: newline-delimited JSON (protocol v2.5, see
 //! [`protocol`]) over a [`crate::coordinator::Coordinator`], plus the
 //! matching blocking client.
 //!
@@ -8,6 +8,12 @@
 //! op's option fields and flows straight into [`QueryOptions`]; live
 //! dataset mutation rides on the v2.1 `mutate` op (append / remove /
 //! compact / stat) and flows into [`crate::live`].
+//!
+//! The v2.5 `subscribe` op flips a connection into a long-lived push
+//! feed: the connection thread interleaves draining the coordinator's
+//! subscription frames (via [`crate::subscribe::SubscriptionStream`])
+//! with polling the socket for an `unsubscribe` line, using a short read
+//! timeout so neither side starves the other.
 
 pub mod protocol;
 
@@ -20,6 +26,7 @@ use crate::coordinator::{Coordinator, InterpolationRequest, QueryOptions, Resolv
 use crate::error::{Error, Result};
 use crate::geom::PointSet;
 use crate::jsonio::Json;
+use crate::subscribe::SubscriptionFrame;
 use protocol::{MutateAction, Request};
 
 /// A running TCP server.
@@ -91,22 +98,34 @@ impl Drop for Server {
 
 fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
     stream.set_nodelay(true).ok();
-    let reader = BufReader::new(stream.try_clone()?);
+    let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // EOF: client closed
+        }
         if line.trim().is_empty() {
             continue;
         }
-        match Request::decode(&line) {
+        match Request::decode(line.trim_end()) {
             // anything unparseable is the client's fault: bad_request
             Err(e) => {
                 write_line(&mut writer, &protocol::err_line("bad_request", &e.to_string()))?
             }
+            // v2.5: flips the connection into subscription mode until the
+            // client unsubscribes or the subscription terminates
+            Ok(Request::Subscribe { dataset, qx, qy, options }) => {
+                serve_subscription(&coord, dataset, qx, qy, options, &mut reader, &mut writer)?
+            }
+            Ok(Request::Unsubscribe) => write_line(
+                &mut writer,
+                &protocol::err_line("bad_request", "no active subscription"),
+            )?,
             Ok(req) => dispatch(&coord, req, &mut writer)?,
         }
     }
-    Ok(())
 }
 
 fn write_line(w: &mut BufWriter<TcpStream>, line: &str) -> std::io::Result<()> {
@@ -184,6 +203,104 @@ fn serve_stream(
             }
         }
     }
+}
+
+/// Serve one v2.5 subscription: header, then a loop interleaving (a)
+/// draining frames the coordinator's subscription worker pushed —
+/// update lines and dirty-tile lines, flushed as they arrive — with (b)
+/// polling the socket for a client line.  The socket runs with a 25 ms
+/// read timeout for the duration (the only pacing in the loop: no
+/// frames + no client bytes = one short blocking read), restored to
+/// blocking mode before the connection returns to request/response
+/// mode.  `unsubscribe` tears the subscription down and is acknowledged
+/// *after* the stream is dropped, so the ack is the last frame;
+/// terminal errors (dataset dropped / registered over / shutdown)
+/// arrive as structured `{"ok":false,"done":true,..}` frames.  Any
+/// other op while subscribed is answered with `bad_request` without
+/// disturbing the feed.
+fn serve_subscription(
+    coord: &Coordinator,
+    dataset: String,
+    qx: Vec<f64>,
+    qy: Vec<f64>,
+    options: QueryOptions,
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut BufWriter<TcpStream>,
+) -> std::io::Result<()> {
+    let queries: Vec<(f64, f64)> = qx.into_iter().zip(qy).collect();
+    let req = InterpolationRequest::new(&dataset, queries).with_options(options);
+    let mut sub = match coord.subscribe(req) {
+        Ok(s) => s,
+        // fail-fast errors (unknown dataset, bad options) never start the
+        // feed: a plain error line, connection stays in request mode
+        Err(e) => return write_line(writer, &protocol::err_for(&e)),
+    };
+    write_line(
+        writer,
+        &protocol::sub_header(sub.id(), sub.rows, sub.n_tiles, sub.tile_rows, &sub.options),
+    )?;
+    reader
+        .get_ref()
+        .set_read_timeout(Some(std::time::Duration::from_millis(25)))
+        .ok();
+    let mut line = String::new();
+    let outcome = loop {
+        // (a) drain everything the worker has pushed so far
+        let mut terminated = false;
+        while let Some(frame) = sub.try_next() {
+            match frame {
+                Ok(SubscriptionFrame::Update(u)) => write_line(writer, &protocol::sub_update(&u))?,
+                Ok(SubscriptionFrame::Tile(t)) => {
+                    write_line(writer, &protocol::stream_tile(t.tile_index, t.row0, &t.values))?
+                }
+                Ok(SubscriptionFrame::Err(e)) | Err(e) => {
+                    write_line(writer, &protocol::stream_err_done(&e))?;
+                    terminated = true;
+                    break;
+                }
+            }
+        }
+        if terminated {
+            break Ok(());
+        }
+        // (b) poll the socket; `line` accumulates across timeouts so a
+        // request split over packets is not lost (read_line appends)
+        match reader.read_line(&mut line) {
+            Ok(0) => break Ok(()), // disconnect: dropping `sub` cancels
+            Ok(_) if !line.ends_with('\n') => break Ok(()), // EOF mid-line
+            Ok(_) => {
+                let decoded = Request::decode(line.trim_end());
+                let blank = line.trim().is_empty();
+                line.clear();
+                if blank {
+                    continue;
+                }
+                match decoded {
+                    Ok(Request::Unsubscribe) => {
+                        // drop first: the worker sweeps the slot and no
+                        // further frames can be queued, so the ack is the
+                        // feed's final line
+                        drop(sub);
+                        reader.get_ref().set_read_timeout(None).ok();
+                        return write_line(writer, &protocol::sub_unsubscribed());
+                    }
+                    _ => write_line(
+                        writer,
+                        &protocol::err_line(
+                            "bad_request",
+                            "only 'unsubscribe' is valid while subscribed",
+                        ),
+                    )?,
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => break Err(e),
+        }
+    };
+    reader.get_ref().set_read_timeout(None).ok();
+    outcome
 }
 
 fn dispatch(
@@ -468,6 +585,48 @@ impl Client {
         })
     }
 
+    /// Register a standing raster (protocol v2.5): sends `subscribe` and
+    /// returns a [`ClientSubscription`] whose first
+    /// [`ClientSubscription::next_update`] is the initial materialization
+    /// (update 0, every tile) and whose subsequent updates carry only the
+    /// dirty tiles each server-side mutation invalidated.  Fail-fast
+    /// server errors (unknown dataset, bad options) surface here;
+    /// mid-feed terminations surface from `next_update`.
+    pub fn subscribe(
+        &mut self,
+        dataset: &str,
+        queries: &[(f64, f64)],
+        options: QueryOptions,
+    ) -> Result<ClientSubscription<'_>> {
+        self.send_line(
+            &Request::Subscribe {
+                dataset: dataset.to_string(),
+                qx: queries.iter().map(|q| q.0).collect(),
+                qy: queries.iter().map(|q| q.1).collect(),
+                options,
+            }
+            .encode(),
+        )?;
+        let v = self.read_json_line()?;
+        if v.get("ok").as_bool() != Some(true) {
+            return Err(decode_error(&v));
+        }
+        if v.get("stream").as_bool() != Some(true) || v.get("sub").as_f64().is_none() {
+            return Err(Error::Service(
+                "expected a v2.5 subscription header (is the server older?)".into(),
+            ));
+        }
+        Ok(ClientSubscription {
+            sub: v.get("sub").as_f64().unwrap_or(0.0) as u64,
+            rows: v.get("rows").as_usize().unwrap_or(0),
+            n_tiles: v.get("n_tiles").as_usize().unwrap_or(0),
+            tile_rows: v.get("tile_rows").as_usize().unwrap_or(0),
+            options: protocol::options_from_json(v.get("options")),
+            client: self,
+            finished: false,
+        })
+    }
+
     /// Live mutation statistics for one dataset (protocol v2.1).
     pub fn live_stat(&mut self, dataset: &str) -> Result<LiveStatReply> {
         let v = self.call(&Request::Mutate {
@@ -624,6 +783,166 @@ impl Drop for ClientStream<'_> {
                 Err(_) => self.finished = true,
             }
         }
+    }
+}
+
+/// One decoded v2.5 update block: the serving snapshot identity plus the
+/// dirty tiles that changed under it.
+#[derive(Debug, Clone)]
+pub struct ClientUpdate {
+    /// Monotonic per-subscription sequence number (0 = initial raster).
+    pub update: u64,
+    /// Epoch of the serving snapshot.
+    pub epoch: u64,
+    /// Overlay version of the serving snapshot.
+    pub overlay: u64,
+    /// Tiles the dirty-footprint bound proved clean (not recomputed, not
+    /// resent).
+    pub skipped_clean: usize,
+    /// The dirty tiles, in tile order.
+    pub tiles: Vec<StreamTileReply>,
+}
+
+impl ClientUpdate {
+    /// Overlay this update's tiles onto a materialized raster (row-major,
+    /// `rows` long).  Applying every update in sequence keeps the raster
+    /// bit-identical to a from-scratch interpolation at this update's
+    /// `(epoch, overlay)` snapshot.
+    pub fn apply(&self, raster: &mut [f64]) {
+        for t in &self.tiles {
+            raster[t.row0..t.row0 + t.values.len()].copy_from_slice(&t.values);
+        }
+    }
+}
+
+/// A live subscription feed (protocol v2.5): the header is already
+/// decoded; update blocks are read off the socket as
+/// [`ClientSubscription::next_update`] is called.  Dropping the value
+/// unsubscribes and drains the feed so the underlying [`Client`] stays
+/// usable for further requests.
+pub struct ClientSubscription<'a> {
+    client: &'a mut Client,
+    /// Server-assigned subscription id (header).
+    pub sub: u64,
+    /// Query rows in the standing raster (header).
+    pub rows: usize,
+    /// Tiles the raster splits into (header; fixed for the feed's life).
+    pub n_tiles: usize,
+    /// Tile size in rows (header; the last tile may be shorter).
+    pub tile_rows: usize,
+    /// The server's resolved-options audit echo (header).
+    pub options: Option<ResolvedOptions>,
+    finished: bool,
+}
+
+impl ClientSubscription<'_> {
+    /// Block until the next complete update block (update line + its
+    /// dirty tiles) arrives.  A structured terminal frame — dataset
+    /// dropped, registered over, server shut down — surfaces as the
+    /// typed error and finishes the feed; the connection is then back in
+    /// request/response mode.
+    pub fn next_update(&mut self) -> Result<ClientUpdate> {
+        if self.finished {
+            return Err(Error::Unavailable("subscription already terminated".into()));
+        }
+        let v = match self.client.read_json_line() {
+            Ok(v) => v,
+            Err(e) => {
+                self.finished = true;
+                return Err(e);
+            }
+        };
+        if v.get("ok").as_bool() == Some(false) {
+            self.finished = true;
+            return Err(decode_error(&v));
+        }
+        let Some(h) = protocol::sub_update_from_json(&v) else {
+            self.finished = true;
+            return Err(Error::Service("malformed subscription update line".into()));
+        };
+        let mut tiles = Vec::with_capacity(h.dirty_tiles);
+        for _ in 0..h.dirty_tiles {
+            let v = match self.client.read_json_line() {
+                Ok(v) => v,
+                Err(e) => {
+                    self.finished = true;
+                    return Err(e);
+                }
+            };
+            if v.get("ok").as_bool() == Some(false) {
+                // the subscription died mid-block; the tiles already
+                // received must not be applied (partial snapshot)
+                self.finished = true;
+                return Err(decode_error(&v));
+            }
+            let (Some(tile_index), Some(row0)) =
+                (v.get("tile").as_usize(), v.get("row0").as_usize())
+            else {
+                self.finished = true;
+                return Err(Error::Service("malformed subscription tile line".into()));
+            };
+            match v.get("z").to_f64_vec() {
+                Ok(values) => tiles.push(StreamTileReply { tile_index, row0, values }),
+                Err(e) => {
+                    self.finished = true;
+                    return Err(e);
+                }
+            }
+        }
+        Ok(ClientUpdate {
+            update: h.update,
+            epoch: h.epoch,
+            overlay: h.overlay,
+            skipped_clean: h.skipped_clean,
+            tiles,
+        })
+    }
+
+    /// Tear the subscription down and return the connection to
+    /// request/response mode.  Frames already in flight when the
+    /// `unsubscribe` op lands are skipped (they may include a partial
+    /// update block — the reason teardown invalidates, rather than
+    /// finishes, the in-progress materialization).
+    pub fn unsubscribe(mut self) -> Result<()> {
+        self.client.send_line(&Request::Unsubscribe.encode())?;
+        self.drain_to_ack()?;
+        Ok(())
+    }
+
+    /// Skip pushed frames until the server acknowledges the teardown.  A
+    /// terminal error frame can race the unsubscribe op — the server is
+    /// then already back in request mode and answers the op itself
+    /// (`bad_request`, no `done` marker); both shapes end the feed.
+    fn drain_to_ack(&mut self) -> Result<()> {
+        loop {
+            let v = self.client.read_json_line()?;
+            if v.get("unsubscribed").as_bool() == Some(true) {
+                self.finished = true;
+                return Ok(());
+            }
+            if v.get("ok").as_bool() == Some(false) && v.get("done").as_bool() != Some(true) {
+                self.finished = true;
+                return Ok(());
+            }
+        }
+    }
+}
+
+impl Drop for ClientSubscription<'_> {
+    /// Abandoning the feed must not desynchronize the connection: pushed
+    /// frames would otherwise be handed to the next request's reply
+    /// parser.  Best-effort unsubscribe + drain; a transport error means
+    /// the connection is dead, which is equally terminal.
+    fn drop(&mut self) {
+        if self.finished {
+            return;
+        }
+        if self.client.send_line(&Request::Unsubscribe.encode()).is_err() {
+            self.finished = true;
+            return;
+        }
+        let _ = self.drain_to_ack();
+        self.finished = true;
     }
 }
 

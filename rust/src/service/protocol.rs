@@ -1,5 +1,5 @@
-//! Wire protocol **v2.4**: newline-delimited JSON over TCP, now with
-//! chunked (tiled) streaming responses.
+//! Wire protocol **v2.5**: newline-delimited JSON over TCP, with chunked
+//! (tiled) streaming responses and incremental raster subscriptions.
 //!
 //! Requests:
 //! ```json
@@ -17,7 +17,50 @@
 //! {"op":"drop","dataset":"d"}
 //! {"op":"datasets"}
 //! {"op":"metrics"}
+//! {"op":"subscribe","dataset":"d","qx":[..],"qy":[..],"k":10,"tile_rows":256}
+//! {"op":"unsubscribe"}
 //! ```
+//!
+//! **v2.5 additions** (incremental raster subscriptions, strictly
+//! additive over v2.4):
+//!
+//! * the `subscribe` op registers a **standing raster**: it takes the
+//!   same query grid and tuning fields as `interpolate` (every
+//!   [`QueryOptions`] field, `stream` implied) and turns the connection
+//!   into a long-lived subscription feed.  The response opens with a
+//!   v2.4-style header line that additionally carries the subscription
+//!   id: `{"ok":true,"stream":true,"sub":N,"rows":R,"n_tiles":T,
+//!   "tile_rows":W,"options":{..}}`.  After the header the server pushes
+//!   **update blocks**, each one:
+//!
+//!   1. an update line `{"update":u,"epoch":e,"overlay":v,"tiles":d,
+//!      "skipped":s}` — the serving snapshot identity `(epoch, overlay)`
+//!      plus how many tiles follow (`tiles`) and how many were proven
+//!      clean and skipped (`skipped`); update `0` is the initial
+//!      materialization (every tile, `skipped: 0`);
+//!   2. `tiles` v2.4 tile lines `{"tile":i,"row0":S,"z":[..]}` — only
+//!      the **dirty** tiles, rows whose exact kNN termination bound
+//!      intersects some mutated point's footprint (approximate ring
+//!      rules and dense weighting conservatively recompute everything).
+//!
+//!   Applying each update's tiles over the previously materialized
+//!   raster yields a raster **bit-identical** to a from-scratch
+//!   `interpolate` against the same `(epoch, overlay)` snapshot.  A
+//!   mutation burst may be coalesced into one update block; an update
+//!   with `tiles: 0` is an identity refresh (snapshot advanced, e.g. by
+//!   compaction, with no value changes).  Mid-stream failures — the
+//!   dataset was dropped, or registered over, displacing the serving
+//!   lineage — terminate the subscription with the v2.4 structured
+//!   terminal frame `{"ok":false,"done":true,"code":..,"error":..}`;
+//! * the `unsubscribe` op (only valid while subscribed) tears the
+//!   subscription down; the server acknowledges with
+//!   `{"ok":true,"unsubscribed":true}` after the last pushed frame and
+//!   the connection returns to plain request/response mode.  Closing
+//!   the connection implicitly unsubscribes;
+//! * `metrics` responses add the subscription counters `subs_active`
+//!   (gauge), `sub_updates` (update blocks pushed), `tiles_pushed`,
+//!   `tiles_dirty`, and `tiles_skipped_clean` (tiles proven clean by
+//!   the dirty-footprint bound — recompute work avoided).
 //!
 //! **v2.4 additions** (tiled streaming, strictly additive over v2.3):
 //!
@@ -130,11 +173,12 @@ use crate::jsonio::Json;
 use crate::knn::grid_knn::RingRule;
 use crate::live::{AppendOutcome, CompactionReport, LiveStatus, RemoveOutcome};
 use crate::runtime::Variant;
+use crate::subscribe::SubUpdateStart;
 
 /// The wire protocol version this module implements.  ci.sh drift-checks
 /// this constant against the module doc header ("Wire protocol
 /// **vX.Y**") so the two can never silently disagree.
-pub const PROTOCOL_VERSION: &str = "2.4";
+pub const PROTOCOL_VERSION: &str = "2.5";
 
 /// A live-dataset mutation (protocol v2.1 `mutate` op).
 #[derive(Debug, Clone, PartialEq)]
@@ -176,6 +220,12 @@ pub enum Request {
     Drop { dataset: String },
     Datasets,
     Metrics,
+    /// v2.5: register a standing raster and switch the connection into a
+    /// long-lived subscription feed (header + pushed update blocks).
+    Subscribe { dataset: String, qx: Vec<f64>, qy: Vec<f64>, options: QueryOptions },
+    /// v2.5: tear down the connection's active subscription (only valid
+    /// while subscribed).
+    Unsubscribe,
 }
 
 impl Request {
@@ -245,6 +295,16 @@ impl Request {
             "drop" => Ok(Request::Drop { dataset: dataset()? }),
             "datasets" => Ok(Request::Datasets),
             "metrics" => Ok(Request::Metrics),
+            "subscribe" => {
+                let qx = v.get("qx").to_f64_vec()?;
+                let qy = v.get("qy").to_f64_vec()?;
+                if qx.len() != qy.len() {
+                    return Err(Error::Service("qx/qy length mismatch".into()));
+                }
+                let options = decode_options(&v)?;
+                Ok(Request::Subscribe { dataset: dataset()?, qx, qy, options })
+            }
+            "unsubscribe" => Ok(Request::Unsubscribe),
             other => Err(Error::Service(format!("unknown op '{other}'"))),
         }
     }
@@ -304,6 +364,19 @@ impl Request {
             .to_string(),
             Request::Datasets => Json::obj(vec![("op", Json::Str("datasets".into()))]).to_string(),
             Request::Metrics => Json::obj(vec![("op", Json::Str("metrics".into()))]).to_string(),
+            Request::Subscribe { dataset, qx, qy, options } => {
+                let mut fields = vec![
+                    ("op", Json::Str("subscribe".into())),
+                    ("dataset", Json::Str(dataset.clone())),
+                    ("qx", Json::num_array(qx)),
+                    ("qy", Json::num_array(qy)),
+                ];
+                encode_options(options, &mut fields);
+                Json::obj(fields).to_string()
+            }
+            Request::Unsubscribe => {
+                Json::obj(vec![("op", Json::Str("unsubscribe".into()))]).to_string()
+            }
         }
     }
 }
@@ -579,6 +652,65 @@ pub fn stream_err_done(e: &Error) -> String {
     .to_string()
 }
 
+// ---- v2.5 subscription frames -------------------------------------------
+
+/// The subscription header line: the v2.4 stream header plus the
+/// server-assigned subscription id.
+pub fn sub_header(
+    sub: u64,
+    rows: usize,
+    n_tiles: usize,
+    tile_rows: usize,
+    o: &ResolvedOptions,
+) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("stream", Json::Bool(true)),
+        ("sub", Json::Num(sub as f64)),
+        ("rows", Json::Num(rows as f64)),
+        ("n_tiles", Json::Num(n_tiles as f64)),
+        ("tile_rows", Json::Num(tile_rows as f64)),
+        ("options", options_json(o)),
+    ])
+    .to_string()
+}
+
+/// One update line: the serving snapshot identity plus how many tile
+/// lines follow (`tiles`) and how many tiles the dirty-footprint bound
+/// proved clean (`skipped`).
+pub fn sub_update(u: &SubUpdateStart) -> String {
+    Json::obj(vec![
+        ("update", Json::Num(u.update as f64)),
+        ("epoch", Json::Num(u.epoch as f64)),
+        ("overlay", Json::Num(u.overlay as f64)),
+        ("tiles", Json::Num(u.dirty_tiles as f64)),
+        ("skipped", Json::Num(u.skipped_clean as f64)),
+    ])
+    .to_string()
+}
+
+/// Parse an update line back (client side); `None` when the line is not
+/// an update header (e.g. a terminal error frame).
+pub fn sub_update_from_json(v: &Json) -> Option<SubUpdateStart> {
+    Some(SubUpdateStart {
+        update: v.get("update").as_f64()? as u64,
+        epoch: v.get("epoch").as_f64()? as u64,
+        overlay: v.get("overlay").as_f64()? as u64,
+        dirty_tiles: v.get("tiles").as_usize()?,
+        skipped_clean: v.get("skipped").as_usize()?,
+    })
+}
+
+/// Acknowledgement that an `unsubscribe` op tore the subscription down
+/// and the connection is back in request/response mode.
+pub fn sub_unsubscribed() -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("unsubscribed", Json::Bool(true)),
+    ])
+    .to_string()
+}
+
 pub fn ok_pong() -> String {
     Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]).to_string()
 }
@@ -611,6 +743,11 @@ pub fn ok_metrics(m: &MetricsSnapshot) -> String {
         ("stage1_tile_gathers", Json::Num(m.stage1_tile_gathers as f64)),
         ("stream_tiles", Json::Num(m.stream_tiles as f64)),
         ("stream_peak_buffered", Json::Num(m.stream_peak_buffered as f64)),
+        ("subs_active", Json::Num(m.subs_active as f64)),
+        ("sub_updates", Json::Num(m.sub_updates as f64)),
+        ("tiles_pushed", Json::Num(m.tiles_pushed as f64)),
+        ("tiles_dirty", Json::Num(m.tiles_dirty as f64)),
+        ("tiles_skipped_clean", Json::Num(m.tiles_skipped_clean as f64)),
         ("cache_entries", Json::Num(m.cache_entries as f64)),
         ("cache_bytes", Json::Num(m.cache_bytes as f64)),
         ("cache_evictions", Json::Num(m.cache_evictions as f64)),
@@ -781,6 +918,20 @@ mod tests {
             Request::Drop { dataset: "d".into() },
             Request::Datasets,
             Request::Metrics,
+            // v2.5 subscription ops
+            Request::Subscribe {
+                dataset: "d".into(),
+                qx: vec![1.0, 2.0],
+                qy: vec![3.0, 4.0],
+                options: QueryOptions::new().k(8).local_neighbors(32).tile_rows(64),
+            },
+            Request::Subscribe {
+                dataset: "d".into(),
+                qx: vec![0.5],
+                qy: vec![1.5],
+                options: QueryOptions::default(),
+            },
+            Request::Unsubscribe,
         ];
         for r in cases {
             let line = r.encode();
@@ -960,6 +1111,89 @@ mod tests {
             r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"tile_rows":2.5}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn subscription_frames_parse() {
+        let opts = ResolvedOptions { tile_rows: Some(8), area: Some(4.0), ..Default::default() };
+        let h = Json::parse(&sub_header(3, 20, 3, 8, &opts)).unwrap();
+        assert_eq!(h.get("ok").as_bool(), Some(true));
+        assert_eq!(h.get("stream").as_bool(), Some(true));
+        assert_eq!(h.get("sub").as_usize(), Some(3));
+        assert_eq!(h.get("rows").as_usize(), Some(20));
+        assert_eq!(h.get("n_tiles").as_usize(), Some(3));
+        assert_eq!(h.get("tile_rows").as_usize(), Some(8));
+        assert_eq!(options_from_json(h.get("options")).unwrap(), opts);
+
+        let start = SubUpdateStart {
+            update: 4,
+            epoch: 2,
+            overlay: 7,
+            dirty_tiles: 1,
+            skipped_clean: 2,
+        };
+        let u = Json::parse(&sub_update(&start)).unwrap();
+        assert_eq!(u.get("update").as_usize(), Some(4));
+        assert_eq!(u.get("epoch").as_usize(), Some(2));
+        assert_eq!(u.get("overlay").as_usize(), Some(7));
+        assert_eq!(u.get("tiles").as_usize(), Some(1));
+        assert_eq!(u.get("skipped").as_usize(), Some(2));
+        assert_eq!(sub_update_from_json(&u), Some(start));
+        // a terminal error frame is not an update header
+        let err = Json::parse(&stream_err_done(&Error::Unavailable("gone".into()))).unwrap();
+        assert_eq!(sub_update_from_json(&err), None);
+
+        let a = Json::parse(&sub_unsubscribed()).unwrap();
+        assert_eq!(a.get("ok").as_bool(), Some(true));
+        assert_eq!(a.get("unsubscribed").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn subscribe_decode_validates_like_interpolate() {
+        let r = Request::decode(
+            r#"{"op":"subscribe","dataset":"d","qx":[1],"qy":[2],"k":4,"tile_rows":16}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Subscribe { dataset, qx, qy, options } => {
+                assert_eq!(dataset, "d");
+                assert_eq!(qx, vec![1.0]);
+                assert_eq!(qy, vec![2.0]);
+                assert_eq!(options.k, Some(4));
+                assert_eq!(options.tile_rows, Some(16));
+            }
+            other => panic!("{other:?}"),
+        }
+        // same strictness as interpolate: mismatched grids and mistyped
+        // tuning fields are the client's error
+        assert!(Request::decode(r#"{"op":"subscribe","dataset":"d","qx":[1],"qy":[]}"#).is_err());
+        assert!(Request::decode(r#"{"op":"subscribe","qx":[1],"qy":[1]}"#).is_err());
+        assert!(Request::decode(
+            r#"{"op":"subscribe","dataset":"d","qx":[1],"qy":[1],"k":"16"}"#
+        )
+        .is_err());
+        assert!(Request::decode(
+            r#"{"op":"subscribe","dataset":"d","qx":[1],"qy":[1],"tile_rows":0}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn metrics_lines_carry_v25_subscription_counters() {
+        let m = MetricsSnapshot {
+            subs_active: 2,
+            sub_updates: 5,
+            tiles_pushed: 17,
+            tiles_dirty: 9,
+            tiles_skipped_clean: 31,
+            ..Default::default()
+        };
+        let v = Json::parse(&ok_metrics(&m)).unwrap();
+        assert_eq!(v.get("subs_active").as_usize(), Some(2));
+        assert_eq!(v.get("sub_updates").as_usize(), Some(5));
+        assert_eq!(v.get("tiles_pushed").as_usize(), Some(17));
+        assert_eq!(v.get("tiles_dirty").as_usize(), Some(9));
+        assert_eq!(v.get("tiles_skipped_clean").as_usize(), Some(31));
     }
 
     #[test]

@@ -486,6 +486,30 @@ impl AidwSession {
         }
     }
 
+    /// Register a standing raster over a live dataset (Serving mode
+    /// only): the returned [`crate::subscribe::SubscriptionStream`]
+    /// delivers the initial materialization as update 0 and then, after
+    /// every `append`/`remove`/`compact`, an incremental update carrying
+    /// only the dirty tiles — see [`crate::subscribe`].  The in-process
+    /// modes have no mutation event stream to drive a subscription, so
+    /// they fail with `InvalidArgument` rather than silently polling.
+    pub fn subscribe(
+        &self,
+        dataset: &str,
+        queries: &[(f64, f64)],
+        options: &QueryOptions,
+    ) -> Result<crate::subscribe::SubscriptionStream> {
+        match &self.exec {
+            Exec::Serving(c) => c.subscribe(
+                InterpolationRequest::new(dataset, queries.to_vec())
+                    .with_options(options.clone()),
+            ),
+            _ => Err(Error::InvalidArgument(
+                "subscriptions need a serving session (AidwSession::serving)".into(),
+            )),
+        }
+    }
+
     /// Shared Serial/Pipeline async prologue: fail fast, claim a bounded
     /// in-flight slot, and run the tiled in-process core on a detached
     /// worker thread feeding a frame channel (bounded for explicit
@@ -1047,6 +1071,38 @@ mod tests {
         assert!(matches!(err, Error::Unavailable(_)), "{err}");
         // the synchronous path is unaffected
         assert!(s.interpolate("d", &queries(), &QueryOptions::default()).is_ok());
+    }
+
+    #[test]
+    fn subscribe_serves_initial_raster_and_rejects_in_process_modes() {
+        let q = queries();
+        // in-process modes cannot drive a subscription
+        for s in [AidwSession::serial(), AidwSession::in_process()] {
+            s.register("d", data()).unwrap();
+            assert!(matches!(
+                s.subscribe("d", &q, &QueryOptions::default()),
+                Err(Error::InvalidArgument(_)),
+            ));
+        }
+        // serving mode: update 0 is the full raster, bit-identical to a
+        // plain interpolation at the same snapshot
+        let s = AidwSession::serving(CoordinatorConfig {
+            engine_mode: EngineMode::CpuOnly,
+            ..Default::default()
+        })
+        .unwrap();
+        s.register("d", data()).unwrap();
+        let opts = QueryOptions::new().local_neighbors(32).tile_rows(16);
+        let want = s.interpolate_values("d", &q, &opts).unwrap();
+        let mut sub = s.subscribe("d", &q, &opts).unwrap();
+        assert_eq!(sub.rows, q.len());
+        let initial = sub.next_update().unwrap();
+        assert_eq!(initial.update, 0);
+        assert_eq!(initial.tiles.len(), sub.n_tiles);
+        let mut raster = vec![f64::NAN; q.len()];
+        initial.apply(&mut raster);
+        assert_eq!(raster, want, "initial materialization matches interpolate");
+        assert!(s.subscribe("ghost", &q, &opts).is_err());
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! Dirty-footprint classification for incremental raster subscriptions.
+//!
+//! After a mutation, a subscription only needs to recompute the query rows
+//! whose stage-1 result could have changed.  For a row interpolated in
+//! local A5 mode with the **exact** ring rule, the gathered neighbor set is
+//! exactly the `g` nearest live points, so the row is insulated from a
+//! mutation at coordinate `c` unless `c` falls within the row's *reach* —
+//! the distance to its farthest gathered neighbor:
+//!
+//! * an **append** at `c` can only displace a gathered neighbor if
+//!   `d(q, c) <= reach(q)` (ties break toward the incumbent lower index,
+//!   so `<` would also be safe; `<=` keeps the bound conservative),
+//! * a **removal** only changes the gathered set if the removed point was
+//!   itself gathered, i.e. `d(q, c) <= reach(q)`.
+//!
+//! Two situations void the geometric argument and force a dirty verdict:
+//!
+//! * the row's neighbor table was padded (`u32::MAX` sentinel) because
+//!   fewer than `g` live points existed — its reach is unbounded, and
+//! * the mutation changed `r_exp` (Eq. 2 depends on the live count and
+//!   area), which can shift the row's adaptive alpha even when its kNN
+//!   set is intact.  Rows whose alpha is bitwise unchanged under the new
+//!   `r_exp` stay clean; the recheck is a couple of flops per row, far
+//!   cheaper than a stage-1 re-execution.
+//!
+//! The approximate `RingRule::PaperPlusOne` expansion and the dense
+//! variant offer no such bound — callers fall back to all-dirty there
+//! (see [`super`]).  All comparisons are on squared distances; no sqrt.
+
+use crate::aidw::alpha;
+use crate::aidw::params::AidwParams;
+
+/// Per-row state a subscription carries to classify mutations.
+#[derive(Debug, Clone, Default)]
+pub struct DirtyCheck {
+    /// Squared distance from each query row to its farthest gathered
+    /// neighbor; `f64::INFINITY` for padded rows.
+    pub reach2: Vec<f64>,
+    /// Observed mean kNN distance per row (Eq. 3 input), from stage 1.
+    pub r_obs: Vec<f64>,
+    /// Adaptive alpha per row at the subscribed snapshot.
+    pub alphas: Vec<f64>,
+    /// Eq.-2 expected NN distance at the subscribed snapshot.
+    pub r_exp: f64,
+}
+
+impl DirtyCheck {
+    /// Classify every query row against a batch of mutated coordinates
+    /// under the post-mutation `r_exp_new`.  Returns one flag per row;
+    /// `true` means the row's value may have changed and its tile must be
+    /// recomputed.
+    pub fn dirty_rows(
+        &self,
+        queries: &[(f64, f64)],
+        coords: &[(f64, f64)],
+        r_exp_new: f64,
+        params: &AidwParams,
+    ) -> Vec<bool> {
+        debug_assert_eq!(queries.len(), self.reach2.len());
+        let r_exp_changed = r_exp_new.to_bits() != self.r_exp.to_bits();
+        let n = self.reach2.len();
+        let mut dirty = vec![false; n];
+        for i in 0..n {
+            let reach2 = self.reach2[i];
+            if reach2.is_infinite() {
+                dirty[i] = true;
+                continue;
+            }
+            if r_exp_changed {
+                let a = alpha::adaptive_alpha(self.r_obs[i], r_exp_new, params);
+                if a.to_bits() != self.alphas[i].to_bits() {
+                    dirty[i] = true;
+                    continue;
+                }
+            }
+            let (qx, qy) = queries[i];
+            for &(cx, cy) in coords {
+                let dx = qx - cx;
+                let dy = qy - cy;
+                if dx * dx + dy * dy <= reach2 {
+                    dirty[i] = true;
+                    break;
+                }
+            }
+        }
+        dirty
+    }
+}
+
+/// Squared reach per row from a stage-1 neighbor table: the max squared
+/// distance from the query to any gathered neighbor, `INFINITY` when the
+/// row carries the `u32::MAX` padding sentinel.  `resolve` maps a point id
+/// (merged-index convention: `< n_base` is base, else delta position) to
+/// its coordinates.
+pub fn reach2_from_table(
+    queries: &[(f64, f64)],
+    idx: &[u32],
+    width: usize,
+    mut resolve: impl FnMut(u32) -> (f64, f64),
+) -> Vec<f64> {
+    debug_assert_eq!(if width == 0 { 0 } else { idx.len() / width }, queries.len());
+    let mut out = vec![0.0f64; queries.len()];
+    for (i, r2) in out.iter_mut().enumerate() {
+        let row = &idx[i * width..(i + 1) * width];
+        let (qx, qy) = queries[i];
+        let mut max2 = 0.0f64;
+        for &pid in row {
+            if pid == u32::MAX {
+                max2 = f64::INFINITY;
+                break;
+            }
+            let (px, py) = resolve(pid);
+            let dx = qx - px;
+            let dy = qy - py;
+            let d2 = dx * dx + dy * dy;
+            if d2 > max2 {
+                max2 = d2;
+            }
+        }
+        *r2 = max2;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(reach2: Vec<f64>, r_obs: Vec<f64>, r_exp: f64, params: &AidwParams) -> DirtyCheck {
+        let alphas = r_obs.iter().map(|&r| alpha::adaptive_alpha(r, r_exp, params)).collect();
+        DirtyCheck { reach2, r_obs, alphas, r_exp }
+    }
+
+    #[test]
+    fn reach_bound_classifies_by_distance() {
+        let params = AidwParams::default();
+        let q = [(0.0, 0.0), (10.0, 0.0)];
+        let chk = check(vec![4.0, 4.0], vec![1.0, 1.0], 1.0, &params);
+        // mutation at (1, 0): inside row 0's reach (d2=1 <= 4), outside row 1's (d2=81).
+        let d = chk.dirty_rows(&q, &[(1.0, 0.0)], 1.0, &params);
+        assert_eq!(d, vec![true, false]);
+        // exactly on the reach boundary counts as dirty (conservative <=).
+        let d = chk.dirty_rows(&q, &[(12.0, 0.0)], 1.0, &params);
+        assert_eq!(d, vec![false, true]);
+        // any coord in the batch suffices.
+        let d = chk.dirty_rows(&q, &[(50.0, 50.0), (9.0, 0.0)], 1.0, &params);
+        assert_eq!(d, vec![false, true]);
+    }
+
+    #[test]
+    fn padded_rows_are_always_dirty() {
+        let params = AidwParams::default();
+        let chk = check(vec![f64::INFINITY], vec![1.0], 1.0, &params);
+        let d = chk.dirty_rows(&[(0.0, 0.0)], &[(1e9, 1e9)], 1.0, &params);
+        assert_eq!(d, vec![true]);
+    }
+
+    #[test]
+    fn r_exp_shift_dirties_only_alpha_flips() {
+        let params = AidwParams::default();
+        // Row 0 sits mid-ramp (R near 1), so a small r_exp change moves its
+        // alpha; row 1 is deeply clustered (R << r_min), pinned at the
+        // lowest level, so the same change leaves its alpha bit-identical.
+        let chk = check(vec![1.0, 1.0], vec![1.0, 1e-6], 1.0, &params);
+        let q = [(0.0, 0.0), (5.0, 0.0)];
+        let far = [(1e9, 1e9)]; // outside every reach
+        let d = chk.dirty_rows(&q, &far, 1.01, &params);
+        assert_eq!(d, vec![true, false]);
+        // identical r_exp: neither row is dirtied by the faraway coord.
+        let d = chk.dirty_rows(&q, &far, 1.0, &params);
+        assert_eq!(d, vec![false, false]);
+    }
+
+    #[test]
+    fn reach2_from_table_max_and_padding() {
+        let pts = [(0.0, 0.0), (3.0, 0.0), (0.0, 4.0)];
+        let resolve = |pid: u32| pts[pid as usize];
+        let q = [(0.0, 0.0), (0.0, 0.0)];
+        #[rustfmt::skip]
+        let idx = vec![
+            0, 1, 2,          // farthest is (0,4): d2 = 16
+            0, 1, u32::MAX,   // padded row
+        ];
+        let r2 = reach2_from_table(&q, &idx, 3, resolve);
+        assert_eq!(r2[0], 16.0);
+        assert!(r2[1].is_infinite());
+    }
+
+    #[test]
+    fn empty_width_yields_empty() {
+        let r2 = reach2_from_table(&[], &[], 0, |_| (0.0, 0.0));
+        assert!(r2.is_empty());
+    }
+}

@@ -1,0 +1,997 @@
+//! Incremental raster subscriptions — live materialized views with
+//! dirty-tile recompute (protocol v2.5).
+//!
+//! A subscription registers a standing raster + resolved [`QueryOptions`]
+//! against a live dataset.  The subscriber first receives the full
+//! initial raster as tile frames (update 0), then, after every mutation,
+//! an update push containing **only the dirty tiles** — the tiles with at
+//! least one query row whose stage-1 result could have changed —
+//! recomputed against the new `(epoch, overlay_version)` snapshot.  Tiles
+//! outside every mutation's footprint are skipped and the client keeps
+//! its materialized values for them; the correctness invariant (pinned by
+//! `tests/it_subscribe.rs`) is that the materialized raster is
+//! **bit-identical** to a from-scratch query at the current snapshot
+//! after every update.
+//!
+//! ## Dirty classification
+//!
+//! The exact footprint bound (see [`dirty`]) applies when the
+//! subscription runs local A5 weighting with [`RingRule::Exact`]: a row
+//! is dirty iff a mutated coordinate falls within its kNN reach, its
+//! neighbor table was padded, or the mutation shifted Eq.-2 `r_exp`
+//! enough to flip the row's adaptive alpha.  Dense weighting sums over
+//! *every* live point and the `PaperPlusOne` ring rule is approximate, so
+//! those configurations fall back to all-tiles-dirty — a full recompute,
+//! which is trivially bit-identical.  Compaction is value-identical by
+//! the live-layer contract, so a compaction alone pushes a zero-tile
+//! identity refresh.
+//!
+//! ## Execution & architecture
+//!
+//! One worker thread (`aidw-subs`, spawned by the coordinator) owns every
+//! subscription's state and serializes all pushes.  Events arrive over an
+//! mpsc channel; each wake-up drains the queue and **coalesces** all
+//! pending mutations per dataset into a single classify + push, so a
+//! rapid mutation burst costs one update, not one per append.  Dirty
+//! tiles re-run the two-stage pipeline per tile on the coordinator's CPU
+//! pool — the same merged/grid kernels the serving path uses on mutated
+//! snapshots, consulting (and feeding) the shared `NeighborCache` — so a
+//! subscription's values are bit-identical to `Coordinator::interpolate`
+//! at the same snapshot.  PJRT is not used here: update tiles are small
+//! and mutated snapshots run on the CPU in the serving path too.
+//!
+//! Frame delivery is bounded (per-subscription `sync_channel`); a send to
+//! a full queue waits in a cancellable 200 µs poll loop, so a dropped or
+//! cancelled subscriber — or coordinator shutdown — can never wedge the
+//! worker.  Dropping a [`SubscriptionStream`] sets the cancel flag *and*
+//! sends a `Cancelled` event, so the registry slot is swept promptly even
+//! if the dataset never mutates again.  A v1 caveat: pushes are
+//! serialized on one worker, so one slow-but-live consumer delays other
+//! subscriptions' updates (mirror of the stage-2 stream contract — drain
+//! promptly).
+//!
+//! [`QueryOptions`]: crate::coordinator::QueryOptions
+//! [`RingRule::Exact`]: crate::knn::grid_knn::RingRule
+
+pub mod dirty;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::aidw::pipeline::weighted_stage_on;
+use crate::aidw::plan::{self, NeighborArtifact, SearchKind, Stage1Plan, TilePlan};
+use crate::coordinator::cache::{self, CacheKey, CacheOutcome};
+use crate::coordinator::{ResolvedOptions, Shared};
+use crate::error::{Error, Result};
+use crate::knn::grid_knn::RingRule;
+use crate::live::LiveSnapshot;
+
+pub use dirty::DirtyCheck;
+
+/// Events feeding the subscription worker.  Mutation/compaction events
+/// are emitted by the coordinator's mutation entry points (gated on
+/// [`SubscriptionRegistry::active_on`], so datasets without subscribers
+/// pay nothing); `Subscribe`/`Cancelled` come from the submission path
+/// and from [`SubscriptionStream`] drops.
+pub(crate) enum SubEvent {
+    /// Start a new subscription (compute + push the initial raster).
+    Subscribe(Box<NewSub>),
+    /// Points were appended or removed at the given live coordinates.
+    Mutated { dataset: String, coords: Vec<(f64, f64)> },
+    /// The overlay was folded into a new epoch (value-identical).
+    Compacted { dataset: String },
+    /// The dataset was dropped (`replaced: false`) or registered over
+    /// (`replaced: true`); dependent subscriptions terminate with a
+    /// structured error frame.
+    Retired { dataset: String, replaced: bool },
+    /// A [`SubscriptionStream`] was dropped — sweep its registry slot.
+    Cancelled { id: u64 },
+    /// Coordinator shutdown: terminate every subscription and exit.
+    Shutdown,
+}
+
+/// Everything the worker needs to start one subscription.
+pub(crate) struct NewSub {
+    pub id: u64,
+    pub dataset: String,
+    pub queries: Vec<(f64, f64)>,
+    pub resolved: ResolvedOptions,
+    pub tx: mpsc::SyncSender<SubscriptionFrame>,
+    pub cancel: Arc<AtomicBool>,
+}
+
+/// Header frame opening one update push: the serving snapshot identity
+/// plus how many tile frames follow.  `update == 0` is the initial
+/// full-raster push (every tile "dirty"); later updates carry only the
+/// dirty tiles.  A zero-tile update is an identity refresh (e.g. a
+/// compaction, which changes the epoch but no values).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubUpdateStart {
+    /// Monotonic per-subscription update sequence number.
+    pub update: u64,
+    /// Epoch of the snapshot this update was computed from.
+    pub epoch: u64,
+    /// Overlay version of the snapshot this update was computed from.
+    pub overlay: u64,
+    /// Tile frames that follow this header.
+    pub dirty_tiles: usize,
+    /// Tiles proven clean and *not* recomputed (client keeps its values).
+    pub skipped_clean: usize,
+}
+
+/// One recomputed tile of an update push.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubTile {
+    /// The update this tile belongs to.
+    pub update: u64,
+    /// Tile index in the subscription's fixed [`TilePlan`].
+    pub tile_index: usize,
+    /// First query row the tile covers.
+    pub row0: usize,
+    /// Fresh values for rows `row0 .. row0 + values.len()`.
+    pub values: Vec<f64>,
+}
+
+/// A frame on the worker -> subscriber channel.
+#[derive(Debug)]
+pub enum SubscriptionFrame {
+    /// Opens an update push; `dirty_tiles` tile frames follow.
+    Update(SubUpdateStart),
+    Tile(SubTile),
+    /// Terminal: the subscription is over (dataset dropped/replaced,
+    /// coordinator shutdown, ...).  No frames follow.
+    Err(Error),
+}
+
+/// One fully-assembled update (header + its tiles), as returned by
+/// [`SubscriptionStream::next_update`].
+#[derive(Debug, Clone)]
+pub struct SubUpdate {
+    pub update: u64,
+    pub epoch: u64,
+    pub overlay: u64,
+    pub dirty_tiles: usize,
+    pub skipped_clean: usize,
+    pub tiles: Vec<SubTile>,
+}
+
+impl SubUpdate {
+    /// Scatter the update's tiles into a client-side materialized raster.
+    pub fn apply(&self, raster: &mut [f64]) {
+        for t in &self.tiles {
+            raster[t.row0..t.row0 + t.values.len()].copy_from_slice(&t.values);
+        }
+    }
+}
+
+/// Client handle of one subscription: a bounded frame stream plus the
+/// fixed raster geometry.  Dropping it cancels the subscription (the
+/// worker sweeps its slot; mirror of [`crate::coordinator::Ticket`]
+/// drop-cancellation).
+pub struct SubscriptionStream {
+    rx: mpsc::Receiver<SubscriptionFrame>,
+    /// Query rows in the subscribed raster.
+    pub rows: usize,
+    /// Tiles the raster splits into (fixed for the subscription's life).
+    pub n_tiles: usize,
+    /// Rows per tile (the last tile may be shorter).
+    pub tile_rows: usize,
+    /// The fully-resolved options audit echo (area filled, k clamped,
+    /// admission epoch/overlay stamped).
+    pub options: ResolvedOptions,
+    id: u64,
+    cancel: Arc<AtomicBool>,
+    events: mpsc::Sender<SubEvent>,
+    finished: bool,
+}
+
+impl SubscriptionStream {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        rx: mpsc::Receiver<SubscriptionFrame>,
+        rows: usize,
+        n_tiles: usize,
+        tile_rows: usize,
+        options: ResolvedOptions,
+        id: u64,
+        cancel: Arc<AtomicBool>,
+        events: mpsc::Sender<SubEvent>,
+    ) -> SubscriptionStream {
+        SubscriptionStream { rx, rows, n_tiles, tile_rows, options, id, cancel, events, finished: false }
+    }
+
+    /// The subscription id (diagnostics; the wire header echoes it).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// True once a terminal error frame was consumed (or the worker went
+    /// away): no further updates will arrive.
+    pub fn finished(&self) -> bool {
+        self.finished
+    }
+
+    /// Block for the next complete update (header + all its tiles).
+    /// Update 0 is the initial full raster; apply each update in order to
+    /// a `rows`-sized buffer via [`SubUpdate::apply`] to materialize the
+    /// live view.
+    pub fn next_update(&mut self) -> Result<SubUpdate> {
+        if self.finished {
+            return Err(Error::Unavailable("subscription already terminated".into()));
+        }
+        loop {
+            match self.rx.recv() {
+                Ok(SubscriptionFrame::Update(h)) => {
+                    let mut tiles = Vec::with_capacity(h.dirty_tiles);
+                    while tiles.len() < h.dirty_tiles {
+                        match self.rx.recv() {
+                            Ok(SubscriptionFrame::Tile(t)) => tiles.push(t),
+                            Ok(SubscriptionFrame::Err(e)) => {
+                                self.finished = true;
+                                return Err(e);
+                            }
+                            Ok(SubscriptionFrame::Update(_)) => {
+                                self.finished = true;
+                                return Err(Error::Service(
+                                    "subscription frames out of order".into(),
+                                ));
+                            }
+                            Err(_) => {
+                                self.finished = true;
+                                return Err(Error::Unavailable(
+                                    "subscription worker stopped mid-update".into(),
+                                ));
+                            }
+                        }
+                    }
+                    return Ok(SubUpdate {
+                        update: h.update,
+                        epoch: h.epoch,
+                        overlay: h.overlay,
+                        dirty_tiles: h.dirty_tiles,
+                        skipped_clean: h.skipped_clean,
+                        tiles,
+                    });
+                }
+                // stray tile (only possible if a caller mixed try_next
+                // with next_update mid-update): resync on the next header
+                Ok(SubscriptionFrame::Tile(_)) => continue,
+                Ok(SubscriptionFrame::Err(e)) => {
+                    self.finished = true;
+                    return Err(e);
+                }
+                Err(_) => {
+                    self.finished = true;
+                    return Err(Error::Unavailable("subscription terminated".into()));
+                }
+            }
+        }
+    }
+
+    /// Non-blocking frame poll (the service layer interleaves this with
+    /// reading the client socket).  `None` = nothing pending right now; a
+    /// terminal error is yielded once, after which the stream is finished.
+    pub fn try_next(&mut self) -> Option<Result<SubscriptionFrame>> {
+        if self.finished {
+            return None;
+        }
+        match self.rx.try_recv() {
+            Ok(SubscriptionFrame::Err(e)) => {
+                self.finished = true;
+                Some(Err(e))
+            }
+            Ok(f) => Some(Ok(f)),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                self.finished = true;
+                Some(Err(Error::Unavailable("subscription terminated".into())))
+            }
+        }
+    }
+}
+
+impl Drop for SubscriptionStream {
+    fn drop(&mut self) {
+        if !self.finished {
+            // flag first (an in-flight push bails at its next frame), then
+            // nudge the worker so the slot is swept even if the dataset
+            // never mutates again; best-effort — a stopped worker already
+            // swept everything
+            self.cancel.store(true, Ordering::Relaxed);
+            let _ = self.events.send(SubEvent::Cancelled { id: self.id });
+        }
+    }
+}
+
+struct ActiveSub {
+    dataset: String,
+    cancel: Arc<AtomicBool>,
+}
+
+/// Coordinator-owned registry of live subscriptions: id allocation, the
+/// worker event channel, and the id -> (dataset, cancel flag) map that
+/// lets mutation entry points skip event emission for datasets nobody
+/// watches.
+#[derive(Default)]
+pub struct SubscriptionRegistry {
+    next_id: AtomicU64,
+    events: Mutex<Option<mpsc::Sender<SubEvent>>>,
+    active: Mutex<HashMap<u64, ActiveSub>>,
+}
+
+impl SubscriptionRegistry {
+    pub(crate) fn next_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Attach the worker's event sender (coordinator startup).
+    pub(crate) fn attach(&self, tx: mpsc::Sender<SubEvent>) {
+        *self.events.lock().unwrap() = Some(tx);
+    }
+
+    /// A clone of the worker's event sender (each [`SubscriptionStream`]
+    /// carries one for its drop-time `Cancelled` nudge); `None` after
+    /// shutdown.
+    pub(crate) fn sender(&self) -> Option<mpsc::Sender<SubEvent>> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Best-effort event emission; `false` when no worker is attached (or
+    /// it stopped).
+    pub(crate) fn notify(&self, ev: SubEvent) -> bool {
+        match self.events.lock().unwrap().as_ref() {
+            Some(tx) => tx.send(ev).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Shutdown: ask the worker to terminate every subscription and exit,
+    /// then detach the sender.  Idempotent.
+    pub(crate) fn shutdown(&self) {
+        let tx = self.events.lock().unwrap().take();
+        if let Some(tx) = tx {
+            let _ = tx.send(SubEvent::Shutdown);
+        }
+    }
+
+    pub(crate) fn register(&self, id: u64, dataset: &str, cancel: Arc<AtomicBool>) {
+        self.active
+            .lock()
+            .unwrap()
+            .insert(id, ActiveSub { dataset: dataset.to_string(), cancel });
+    }
+
+    /// Remove one subscription; `true` when it was present (the caller
+    /// then decrements the `subs_active` gauge exactly once).
+    pub(crate) fn unregister(&self, id: u64) -> bool {
+        self.active.lock().unwrap().remove(&id).is_some()
+    }
+
+    /// True when at least one *live* (uncancelled) subscription watches
+    /// `dataset` — the cheap gate on mutation-path event emission.
+    pub(crate) fn active_on(&self, dataset: &str) -> bool {
+        self.active
+            .lock()
+            .unwrap()
+            .values()
+            .any(|s| s.dataset == dataset && !s.cancel.load(Ordering::Relaxed))
+    }
+
+    /// Registered (not yet swept) subscriptions.
+    pub fn len(&self) -> usize {
+        self.active.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Per-subscription worker state: the fixed raster + tile plan, and the
+/// per-row stage-1 state ([`DirtyCheck`]) the classifier runs against.
+struct SubState {
+    id: u64,
+    dataset: String,
+    queries: Vec<(f64, f64)>,
+    resolved: ResolvedOptions,
+    tx: mpsc::SyncSender<SubscriptionFrame>,
+    cancel: Arc<AtomicBool>,
+    plan: TilePlan,
+    /// Exact footprint bound available: local A5 + exact ring rule.
+    exact_local: bool,
+    chk: DirtyCheck,
+    /// Effective (clamped) k / gather at the last served snapshot: a
+    /// change in either voids every row's reach bound (all dirty).
+    k_eff: usize,
+    gather_eff: Option<usize>,
+    /// Identity of the last served snapshot.
+    epoch: u64,
+    overlay: u64,
+    update_seq: u64,
+}
+
+/// One tile's recompute product: fresh values plus the per-row state the
+/// next classification round needs.
+struct TileCompute {
+    values: Vec<f64>,
+    r_obs: Vec<f64>,
+    alphas: Vec<f64>,
+    reach2: Vec<f64>,
+}
+
+/// The subscription worker loop (thread `aidw-subs`).  Each wake-up
+/// drains the event queue, starts/sweeps subscriptions, and coalesces all
+/// pending mutations per dataset into one classify + push.
+pub(crate) fn worker_loop(shared: Arc<Shared>, rx: mpsc::Receiver<SubEvent>) {
+    let mut subs: Vec<SubState> = Vec::new();
+    'outer: loop {
+        let first = match rx.recv() {
+            Ok(ev) => ev,
+            Err(_) => break 'outer, // coordinator gone without a Shutdown
+        };
+        let mut batch = vec![first];
+        while let Ok(ev) = rx.try_recv() {
+            batch.push(ev);
+        }
+        // pending mutation footprint per dataset; an entry with no coords
+        // (compaction only) is a value-identical identity refresh
+        let mut dirt: HashMap<String, Vec<(f64, f64)>> = HashMap::new();
+        for ev in batch {
+            match ev {
+                SubEvent::Subscribe(ns) => {
+                    if let Some(st) = start_subscription(&shared, *ns) {
+                        subs.push(st);
+                    }
+                }
+                SubEvent::Cancelled { id } => {
+                    subs.retain(|s| s.id != id);
+                    drop_slot(&shared, id);
+                }
+                SubEvent::Mutated { dataset, coords } => {
+                    dirt.entry(dataset).or_default().extend(coords);
+                }
+                SubEvent::Compacted { dataset } => {
+                    dirt.entry(dataset).or_default();
+                }
+                SubEvent::Retired { dataset, replaced } => {
+                    // the old instance's pending dirt is meaningless now
+                    dirt.remove(&dataset);
+                    terminate_dataset(&shared, &mut subs, &dataset, replaced);
+                }
+                SubEvent::Shutdown => {
+                    break 'outer;
+                }
+            }
+        }
+        // flush: one push per affected subscription per wake-up
+        // (mutation coalescing)
+        for (dataset, coords) in dirt {
+            let mut i = 0;
+            while i < subs.len() {
+                if subs[i].dataset != dataset {
+                    i += 1;
+                    continue;
+                }
+                if subs[i].cancel.load(Ordering::Relaxed) || !push_update(&shared, &mut subs[i], &coords)
+                {
+                    let id = subs[i].id;
+                    subs.remove(i);
+                    drop_slot(&shared, id);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    // terminate every remaining subscription with a structured error
+    for st in subs.drain(..) {
+        let _ = st
+            .tx
+            .try_send(SubscriptionFrame::Err(Error::Unavailable(
+                "coordinator shut down".into(),
+            )));
+        drop_slot(&shared, st.id);
+    }
+}
+
+/// Sweep one registry slot and settle the `subs_active` gauge.
+fn drop_slot(shared: &Shared, id: u64) {
+    if shared.subs.unregister(id) {
+        shared.metrics.subs_active.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Terminate every subscription on `dataset` with a structured error
+/// frame: `replaced` distinguishes a register-over (displaced-epoch
+/// retirement) from a drop.
+fn terminate_dataset(shared: &Shared, subs: &mut Vec<SubState>, dataset: &str, replaced: bool) {
+    let mut i = 0;
+    while i < subs.len() {
+        if subs[i].dataset != dataset {
+            i += 1;
+            continue;
+        }
+        let st = subs.remove(i);
+        let err = if replaced {
+            Error::Unavailable(format!(
+                "dataset '{dataset}' was registered over; subscription retired"
+            ))
+        } else {
+            Error::UnknownDataset(dataset.to_string())
+        };
+        // best-effort: a stalled consumer must not wedge the sweep
+        let _ = st.tx.try_send(SubscriptionFrame::Err(err));
+        drop_slot(shared, st.id);
+    }
+}
+
+/// Cancellable bounded send: waits on a full frame queue in a 200 µs poll
+/// loop while the subscription is live and the coordinator is running —
+/// the same anti-wedge contract as the stage-2 `FrameTx::send_while`.
+fn send_frame(shared: &Shared, st: &SubState, frame: SubscriptionFrame) -> bool {
+    let mut frame = frame;
+    loop {
+        match st.tx.try_send(frame) {
+            Ok(()) => return true,
+            Err(mpsc::TrySendError::Full(f)) => {
+                if st.cancel.load(Ordering::Relaxed) || !shared.running.load(Ordering::Relaxed) {
+                    return false;
+                }
+                frame = f;
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => return false,
+        }
+    }
+}
+
+/// Start one subscription: compute the full raster at the current
+/// snapshot and push it as update 0.  Returns the live state, or `None`
+/// when the subscription ended before it began (unknown dataset, dropped
+/// consumer) — its slot is swept here.
+fn start_subscription(shared: &Arc<Shared>, ns: NewSub) -> Option<SubState> {
+    let live = match shared.registry.get(&ns.dataset) {
+        Ok(ds) => ds,
+        Err(e) => {
+            let _ = ns.tx.try_send(SubscriptionFrame::Err(e));
+            drop_slot(shared, ns.id);
+            return None;
+        }
+    };
+    let snap = live.snapshot();
+    let plan = TilePlan::new(ns.queries.len(), ns.resolved.tile_rows);
+    let stage1 = stage1_for(&ns.resolved, &snap);
+    let mut st = SubState {
+        id: ns.id,
+        dataset: ns.dataset,
+        queries: ns.queries,
+        resolved: ns.resolved,
+        tx: ns.tx,
+        cancel: ns.cancel,
+        plan,
+        exact_local: ns.resolved.local_neighbors.is_some()
+            && ns.resolved.ring_rule == RingRule::Exact,
+        chk: DirtyCheck {
+            reach2: vec![0.0; 0],
+            r_obs: vec![0.0; 0],
+            alphas: vec![0.0; 0],
+            r_exp: stage1.r_exp,
+        },
+        k_eff: stage1.k,
+        gather_eff: stage1.gather,
+        epoch: snap.epoch,
+        overlay: snap.overlay_version(),
+        update_seq: 0,
+    };
+    let n = st.queries.len();
+    st.chk.reach2 = vec![f64::INFINITY; n];
+    st.chk.r_obs = vec![0.0; n];
+    st.chk.alphas = vec![0.0; n];
+    let header = SubscriptionFrame::Update(SubUpdateStart {
+        update: 0,
+        epoch: snap.epoch,
+        overlay: snap.overlay_version(),
+        dirty_tiles: st.plan.n_tiles(),
+        skipped_clean: 0,
+    });
+    if !send_frame(shared, &st, header) {
+        drop_slot(shared, st.id);
+        return None;
+    }
+    for tile in 0..st.plan.n_tiles() {
+        let range = st.plan.range(tile);
+        let tc = compute_tile(shared, &st.dataset, &snap, &st.resolved, &st.queries[range.clone()]);
+        scatter(&mut st.chk, range.start, &tc);
+        let frame = SubscriptionFrame::Tile(SubTile {
+            update: 0,
+            tile_index: tile,
+            row0: range.start,
+            values: tc.values,
+        });
+        if !send_frame(shared, &st, frame) {
+            drop_slot(shared, st.id);
+            return None;
+        }
+        shared.metrics.tiles_pushed.fetch_add(1, Ordering::Relaxed);
+    }
+    Some(st)
+}
+
+/// Classify + recompute + push one coalesced update for one subscription.
+/// `coords` is the union of mutated coordinates since the last push
+/// (empty = compaction-only, a value-identical identity refresh).
+/// Returns `false` when the subscription ended (consumer gone or dataset
+/// missing) and the caller should sweep it.
+fn push_update(shared: &Shared, st: &mut SubState, coords: &[(f64, f64)]) -> bool {
+    let live = match shared.registry.get(&st.dataset) {
+        Ok(ds) => ds,
+        Err(e) => {
+            let _ = st.tx.try_send(SubscriptionFrame::Err(e));
+            return false;
+        }
+    };
+    let snap = live.snapshot();
+    if snap.epoch == st.epoch && snap.overlay_version() == st.overlay {
+        return true; // the batch's mutations were already served
+    }
+    let stage1 = stage1_for(&st.resolved, &snap);
+    let n_tiles = st.plan.n_tiles();
+    let dirty_tiles: Vec<usize> = if coords.is_empty() {
+        // compaction alone: value-identical by the live-layer contract
+        Vec::new()
+    } else if !st.exact_local || stage1.k != st.k_eff || stage1.gather != st.gather_eff {
+        // no exact footprint bound (dense / approximate ring rule), or
+        // the clamped k / gather width changed: every row is suspect
+        (0..n_tiles).collect()
+    } else {
+        let flags = st.chk.dirty_rows(&st.queries, coords, stage1.r_exp, &stage1.params);
+        (0..n_tiles)
+            .filter(|&t| st.plan.range(t).any(|row| flags[row]))
+            .collect()
+    };
+    st.update_seq += 1;
+    let header = SubscriptionFrame::Update(SubUpdateStart {
+        update: st.update_seq,
+        epoch: snap.epoch,
+        overlay: snap.overlay_version(),
+        dirty_tiles: dirty_tiles.len(),
+        skipped_clean: n_tiles - dirty_tiles.len(),
+    });
+    if !send_frame(shared, st, header) {
+        return false;
+    }
+    shared.metrics.sub_updates.fetch_add(1, Ordering::Relaxed);
+    shared
+        .metrics
+        .tiles_skipped_clean
+        .fetch_add((n_tiles - dirty_tiles.len()) as u64, Ordering::Relaxed);
+    for &tile in &dirty_tiles {
+        let range = st.plan.range(tile);
+        let tc = compute_tile(shared, &st.dataset, &snap, &st.resolved, &st.queries[range.clone()]);
+        scatter(&mut st.chk, range.start, &tc);
+        let frame = SubscriptionFrame::Tile(SubTile {
+            update: st.update_seq,
+            tile_index: tile,
+            row0: range.start,
+            values: tc.values,
+        });
+        if !send_frame(shared, st, frame) {
+            return false;
+        }
+        shared.metrics.tiles_pushed.fetch_add(1, Ordering::Relaxed);
+        shared.metrics.tiles_dirty.fetch_add(1, Ordering::Relaxed);
+    }
+    st.chk.r_exp = stage1.r_exp;
+    st.k_eff = stage1.k;
+    st.gather_eff = stage1.gather;
+    st.epoch = snap.epoch;
+    st.overlay = snap.overlay_version();
+    true
+}
+
+/// The stage-1 plan a subscription's options imply at one snapshot —
+/// built exactly like the dispatcher builds it, so `r_exp`, the clamped
+/// `k`, and the gather width are bitwise the serving path's values.
+fn stage1_for(resolved: &ResolvedOptions, snap: &LiveSnapshot) -> Stage1Plan {
+    let search = if snap.is_compacted() { SearchKind::Grid } else { SearchKind::Merged };
+    let area = resolved.area.unwrap_or_else(|| snap.area());
+    let params = resolved.params();
+    Stage1Plan::new(
+        resolved.k,
+        resolved.ring_rule,
+        resolved.local_neighbors,
+        &params,
+        snap.live_len,
+        area,
+        search,
+    )
+}
+
+/// Scatter one tile's fresh per-row state into the subscription's
+/// classifier buffers.
+fn scatter(chk: &mut DirtyCheck, row0: usize, tc: &TileCompute) {
+    let n = tc.r_obs.len();
+    chk.r_obs[row0..row0 + n].copy_from_slice(&tc.r_obs);
+    chk.alphas[row0..row0 + n].copy_from_slice(&tc.alphas);
+    chk.reach2[row0..row0 + n].copy_from_slice(&tc.reach2);
+}
+
+/// Run the two-stage pipeline for one tile of one subscription at one
+/// snapshot: stage 1 through the shared [`cache::NeighborCache`] (exact
+/// hit, covering-entry row-gather, or a fresh sweep that feeds the
+/// cache), stage 2 on the CPU pool via the same merged/grid kernels the
+/// serving path uses — so tile values are bit-identical to
+/// `Coordinator::interpolate` over the same rows at the same snapshot.
+fn compute_tile(
+    shared: &Shared,
+    dataset: &str,
+    snap: &LiveSnapshot,
+    resolved: &ResolvedOptions,
+    queries: &[(f64, f64)],
+) -> TileCompute {
+    let stage1 = stage1_for(resolved, snap);
+    let search = stage1.search;
+    let cache_key = if shared.cache.enabled() {
+        let mut s1 = resolved.stage1_key();
+        s1.epoch = Some(snap.epoch);
+        s1.overlay = Some(snap.overlay_version());
+        Some(CacheKey {
+            dataset: dataset.to_string(),
+            epoch: snap.epoch,
+            instance: snap.base.uid,
+            overlay: snap.overlay_version(),
+            stage1: s1,
+            queries_fp: cache::query_fingerprint(queries),
+            n_queries: queries.len(),
+        })
+    } else {
+        None
+    };
+    let outcome = match cache_key.as_ref() {
+        Some(k) => shared.cache.lookup(k, queries),
+        None => CacheOutcome::Miss,
+    };
+    let art: Arc<NeighborArtifact> = match outcome {
+        CacheOutcome::Hit(a) => {
+            shared.metrics.stage1_cache_hits.fetch_add(1, Ordering::Relaxed);
+            shared.metrics.add_stage1_saved(a.stage1_s);
+            a
+        }
+        CacheOutcome::Subset { artifact: mut sub, saved_s } => {
+            shared.metrics.stage1_subset_hits.fetch_add(1, Ordering::Relaxed);
+            shared.metrics.add_stage1_saved(saved_s);
+            sub.stage1_s = saved_s;
+            let a = Arc::new(sub);
+            if let Some(key) = cache_key {
+                shared.cache.put(key, queries, a.clone());
+            }
+            a
+        }
+        CacheOutcome::Miss => {
+            let a = Arc::new(match search {
+                SearchKind::Grid => stage1.execute_grid(&shared.pool, &snap.base.grid, queries),
+                SearchKind::Merged => {
+                    stage1.execute_merged(&shared.pool, &snap.merged_view(), queries)
+                }
+            });
+            shared.metrics.stage1_execs.fetch_add(1, Ordering::Relaxed);
+            if let Some(key) = cache_key {
+                shared.cache.put(key, queries, a.clone());
+            }
+            a
+        }
+    };
+    let alphas = art.alphas().to_vec();
+    let values = match (snap.is_compacted(), art.neighbors.as_ref()) {
+        (false, Some(t)) => crate::live::merged_local_weighted_on(
+            &shared.pool,
+            snap,
+            queries,
+            &alphas,
+            &t.idx,
+            t.width,
+        ),
+        (false, None) => crate::live::merged_weighted_stage_on(&shared.pool, snap, queries, &alphas),
+        (true, Some(t)) => {
+            let pts = &snap.base.points;
+            plan::local_weighted_with(&shared.pool, queries, &alphas, &t.idx, t.width, |pid| {
+                let i = pid as usize;
+                (pts.xs[i], pts.ys[i], pts.zs[i])
+            })
+        }
+        (true, None) => weighted_stage_on(&shared.pool, &snap.base.points, queries, &alphas),
+    };
+    let reach2 = match art.neighbors.as_ref() {
+        Some(t) => {
+            // resolve merged candidate indices (grid artifacts only ever
+            // hold base indices, which the same rule covers)
+            let base = &snap.base.points;
+            let delta = &snap.delta.points;
+            let n_base = base.len() as u32;
+            dirty::reach2_from_table(queries, &t.idx, t.width, |pid| {
+                if pid < n_base {
+                    let i = pid as usize;
+                    (base.xs[i], base.ys[i])
+                } else {
+                    let p = (pid - n_base) as usize;
+                    (delta.xs[p], delta.ys[p])
+                }
+            })
+        }
+        // dense weighting: every live point contributes, no finite reach
+        None => vec![f64::INFINITY; queries.len()],
+    };
+    TileCompute { values, r_obs: art.r_obs.clone(), alphas, reach2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_slots_and_active_gate() {
+        let reg = SubscriptionRegistry::default();
+        assert!(reg.is_empty());
+        let id1 = reg.next_id();
+        let id2 = reg.next_id();
+        assert_ne!(id1, id2);
+        let c1 = Arc::new(AtomicBool::new(false));
+        reg.register(id1, "d", c1.clone());
+        reg.register(id2, "e", Arc::new(AtomicBool::new(false)));
+        assert_eq!(reg.len(), 2);
+        assert!(reg.active_on("d"));
+        assert!(reg.active_on("e"));
+        assert!(!reg.active_on("ghost"));
+        // a cancelled subscription no longer gates mutation events
+        c1.store(true, Ordering::Relaxed);
+        assert!(!reg.active_on("d"));
+        assert!(reg.unregister(id1));
+        assert!(!reg.unregister(id1), "double unregister is a no-op");
+        assert_eq!(reg.len(), 1);
+        // no worker attached: notify reports failure instead of stalling
+        assert!(!reg.notify(SubEvent::Compacted { dataset: "e".into() }));
+        let (tx, rx) = mpsc::channel();
+        reg.attach(tx);
+        assert!(reg.notify(SubEvent::Compacted { dataset: "e".into() }));
+        assert!(matches!(rx.recv().unwrap(), SubEvent::Compacted { .. }));
+        reg.shutdown();
+        assert!(matches!(rx.recv().unwrap(), SubEvent::Shutdown));
+        assert!(!reg.notify(SubEvent::Compacted { dataset: "e".into() }), "detached");
+    }
+
+    #[test]
+    fn update_apply_scatters_tiles() {
+        let up = SubUpdate {
+            update: 3,
+            epoch: 1,
+            overlay: 2,
+            dirty_tiles: 2,
+            skipped_clean: 1,
+            tiles: vec![
+                SubTile { update: 3, tile_index: 0, row0: 0, values: vec![1.0, 2.0] },
+                SubTile { update: 3, tile_index: 2, row0: 4, values: vec![5.0] },
+            ],
+        };
+        let mut raster = vec![0.0; 5];
+        up.apply(&mut raster);
+        assert_eq!(raster, vec![1.0, 2.0, 0.0, 0.0, 5.0]);
+    }
+
+    fn test_stream(
+        frame_cap: usize,
+    ) -> (mpsc::SyncSender<SubscriptionFrame>, SubscriptionStream, Arc<AtomicBool>, mpsc::Receiver<SubEvent>)
+    {
+        let (ftx, frx) = mpsc::sync_channel(frame_cap);
+        let (etx, erx) = mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let stream = SubscriptionStream::new(
+            frx,
+            4,
+            2,
+            2,
+            ResolvedOptions::default(),
+            9,
+            cancel.clone(),
+            etx,
+        );
+        (ftx, stream, cancel, erx)
+    }
+
+    #[test]
+    fn drop_flags_cancel_and_emits_cancelled() {
+        let (_ftx, stream, cancel, erx) = test_stream(4);
+        assert_eq!(stream.id(), 9);
+        drop(stream);
+        assert!(cancel.load(Ordering::Relaxed), "drop must flag cancellation");
+        match erx.recv().unwrap() {
+            SubEvent::Cancelled { id } => assert_eq!(id, 9),
+            _ => panic!("expected a Cancelled event"),
+        }
+    }
+
+    #[test]
+    fn finished_stream_does_not_cancel_on_drop() {
+        let (ftx, mut stream, cancel, erx) = test_stream(4);
+        ftx.send(SubscriptionFrame::Err(Error::Unavailable("over".into()))).unwrap();
+        assert!(stream.next_update().is_err());
+        assert!(stream.finished());
+        drop(stream);
+        assert!(!cancel.load(Ordering::Relaxed), "terminated stream must not re-cancel");
+        assert!(erx.try_recv().is_err(), "no Cancelled event after termination");
+    }
+
+    #[test]
+    fn next_update_assembles_header_and_tiles() {
+        let (ftx, mut stream, _cancel, _erx) = test_stream(8);
+        ftx.send(SubscriptionFrame::Update(SubUpdateStart {
+            update: 0,
+            epoch: 0,
+            overlay: 0,
+            dirty_tiles: 2,
+            skipped_clean: 0,
+        }))
+        .unwrap();
+        ftx.send(SubscriptionFrame::Tile(SubTile {
+            update: 0,
+            tile_index: 0,
+            row0: 0,
+            values: vec![1.0, 2.0],
+        }))
+        .unwrap();
+        ftx.send(SubscriptionFrame::Tile(SubTile {
+            update: 0,
+            tile_index: 1,
+            row0: 2,
+            values: vec![3.0, 4.0],
+        }))
+        .unwrap();
+        let up = stream.next_update().unwrap();
+        assert_eq!((up.update, up.dirty_tiles, up.skipped_clean), (0, 2, 0));
+        let mut raster = vec![0.0; 4];
+        up.apply(&mut raster);
+        assert_eq!(raster, vec![1.0, 2.0, 3.0, 4.0]);
+        // a zero-tile identity refresh assembles with no tile frames
+        ftx.send(SubscriptionFrame::Update(SubUpdateStart {
+            update: 1,
+            epoch: 1,
+            overlay: 0,
+            dirty_tiles: 0,
+            skipped_clean: 2,
+        }))
+        .unwrap();
+        let up = stream.next_update().unwrap();
+        assert_eq!((up.update, up.epoch, up.tiles.len()), (1, 1, 0));
+        // worker gone: a blocking wait surfaces Unavailable, then the
+        // stream is finished
+        drop(ftx);
+        assert!(matches!(stream.next_update(), Err(Error::Unavailable(_))));
+        assert!(stream.finished());
+        assert!(stream.try_next().is_none());
+    }
+
+    #[test]
+    fn try_next_polls_without_blocking() {
+        let (ftx, mut stream, _cancel, _erx) = test_stream(4);
+        assert!(stream.try_next().is_none(), "nothing pending yet");
+        ftx.send(SubscriptionFrame::Update(SubUpdateStart {
+            update: 0,
+            epoch: 0,
+            overlay: 0,
+            dirty_tiles: 0,
+            skipped_clean: 1,
+        }))
+        .unwrap();
+        assert!(matches!(
+            stream.try_next(),
+            Some(Ok(SubscriptionFrame::Update(h))) if h.update == 0
+        ));
+        ftx.send(SubscriptionFrame::Err(Error::UnknownDataset("d".into()))).unwrap();
+        assert!(matches!(
+            stream.try_next(),
+            Some(Err(Error::UnknownDataset(_)))
+        ));
+        assert!(stream.finished());
+        assert!(stream.try_next().is_none(), "errors are yielded once");
+    }
+}

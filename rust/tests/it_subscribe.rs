@@ -1,0 +1,361 @@
+//! Integration: incremental raster subscriptions (protocol v2.5).
+//!
+//! * **Acceptance**: a TCP subscription materializes the initial raster
+//!   from tile frames, then — across append / remove / compact — receives
+//!   only the dirty tiles, each update stamped with the serving
+//!   `(epoch, overlay)` identity, and the maintained raster stays
+//!   bit-identical to a from-scratch query; `tiles_skipped_clean` proves
+//!   the clean tiles were never recomputed;
+//! * **Property**: a random mutation sequence leaves the materialized
+//!   view bit-identical to a from-scratch oracle at *every* step;
+//! * **Soundness**: every row whose value changed lies inside a pushed
+//!   tile (a skipped tile is provably clean), and the dense variant falls
+//!   back to pushing everything rather than guessing;
+//! * **Hygiene**: a dropped subscription sweeps its slot without leaking
+//!   the `subs_active` gauge or wedging `Coordinator::shutdown`;
+//! * **Retirement**: dropping or registering over a dataset terminates
+//!   its subscriptions with a structured error frame, in process and over
+//!   the wire — never a silent stall.
+
+use std::sync::Arc;
+
+use aidw::coordinator::{
+    Coordinator, CoordinatorConfig, EngineMode, InterpolationRequest, QueryOptions,
+};
+use aidw::live::LiveConfig;
+use aidw::rng::Pcg32;
+use aidw::service::{Client, Server};
+use aidw::workload;
+use aidw::Error;
+
+fn cpu_config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        engine_mode: EngineMode::CpuOnly,
+        // explicit compactions only: each step of a test mutation script
+        // maps to exactly one pushed update
+        live: LiveConfig { auto_compact: false, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// From-scratch oracle: register the materialized live set on a fresh
+/// coordinator and evaluate monolithically there.
+fn from_scratch(c: &Coordinator, name: &str, queries: &[(f64, f64)], opts: &QueryOptions) -> Vec<f64> {
+    let (merged, _) = c.live_dataset(name).unwrap().snapshot().live_points();
+    let fresh = Coordinator::new(cpu_config()).unwrap();
+    fresh.register_dataset("oracle", merged).unwrap();
+    let mut o = opts.clone();
+    o.tile_rows = None; // the oracle runs monolithically
+    fresh
+        .interpolate(InterpolationRequest::new("oracle", queries.to_vec()).with_options(o))
+        .unwrap()
+        .values
+}
+
+/// The worker sweeps asynchronously; poll instead of sleeping blind.
+fn wait_for(what: &str, mut cond: impl FnMut() -> bool) {
+    for _ in 0..1000 {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+#[test]
+fn acceptance_tcp_subscription_pushes_only_dirty_tiles_with_snapshot_identity() {
+    const ROWS: usize = 256;
+    const TILE: usize = 16; // 16 tiles
+    let coord = Arc::new(Coordinator::new(cpu_config()).unwrap());
+    let server = Server::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let mut mutator = Client::connect(server.addr()).unwrap();
+    mutator.register("d", &workload::uniform_square(4000, 100.0, 2101)).unwrap();
+    let queries = workload::uniform_square(ROWS, 100.0, 2102).xy();
+    // exact local-neighbor mode: the per-row kNN termination bound is the
+    // dirty footprint; k = 16 keeps the Eq.-4 statistic saturated for
+    // uniform data, so far rows survive the r_exp drift bitwise
+    let opts = QueryOptions::new().k(16).local_neighbors(32).tile_rows(TILE);
+
+    let mut feed = Client::connect(server.addr()).unwrap();
+    let mut sub = feed.subscribe("d", &queries, opts.clone()).unwrap();
+    assert_eq!((sub.rows, sub.n_tiles, sub.tile_rows), (ROWS, 16, TILE));
+    let echoed = sub.options.as_ref().expect("v2.5 header echoes resolved options");
+    assert_eq!(echoed.epoch, Some(0), "admission epoch stamped up front");
+    assert_eq!(echoed.overlay, Some(0));
+
+    // update 0: the full initial raster, bit-identical to a plain query
+    let mut raster = vec![f64::NAN; ROWS];
+    let initial = sub.next_update().unwrap();
+    assert_eq!(initial.update, 0);
+    assert_eq!((initial.epoch, initial.overlay), (0, 0));
+    assert_eq!(initial.tiles.len(), 16, "update 0 pushes every tile");
+    assert_eq!(initial.skipped_clean, 0);
+    initial.apply(&mut raster);
+    let whole = mutator.interpolate_with("d", &queries, opts.clone()).unwrap();
+    assert_eq!(raster, whole.values, "initial materialization == monolithic query");
+
+    // a localized burst in one corner: most of the raster is provably clean
+    mutator.append("d", &workload::uniform_square(40, 8.0, 2103)).unwrap();
+    let u1 = sub.next_update().unwrap();
+    assert_eq!(u1.update, 1);
+    assert_eq!((u1.epoch, u1.overlay), (0, 1), "update stamped with the mutated overlay");
+    assert_eq!(u1.tiles.len() + u1.skipped_clean, 16);
+    assert!(!u1.tiles.is_empty(), "the corner tiles did change");
+    assert!(u1.skipped_clean >= 1, "a corner burst must leave provably-clean tiles");
+    u1.apply(&mut raster);
+    assert_eq!(
+        raster,
+        mutator.interpolate_with("d", &queries, opts.clone()).unwrap().values,
+        "dirty-tile update reproduces the mutated raster bit for bit"
+    );
+
+    // a removal is a second overlay version
+    let rm = mutator.remove("d", &[10, 11, 12]).unwrap();
+    assert_eq!(rm.removed, 3);
+    let u2 = sub.next_update().unwrap();
+    assert_eq!((u2.update, u2.epoch, u2.overlay), (2, 0, 2));
+    u2.apply(&mut raster);
+
+    // compaction is value-identical: a zero-tile identity refresh
+    mutator.compact("d").unwrap();
+    let u3 = sub.next_update().unwrap();
+    assert_eq!((u3.epoch, u3.overlay), (1, 0), "the fold publishes a fresh epoch");
+    assert_eq!(u3.tiles.len(), 0, "no values changed, no tiles pushed");
+    assert_eq!(u3.skipped_clean, 16);
+    assert_eq!(
+        raster,
+        mutator.interpolate_with("d", &queries, opts.clone()).unwrap().values,
+        "the view carries across the epoch fold untouched"
+    );
+
+    // the metrics receipt: clean tiles were skipped, not recomputed
+    let m = mutator.metrics().unwrap();
+    assert_eq!(m.get("subs_active").as_usize(), Some(1));
+    assert!(m.get("sub_updates").as_usize().unwrap() >= 3);
+    assert!(m.get("tiles_skipped_clean").as_usize().unwrap() >= 17);
+    assert_eq!(
+        m.get("tiles_pushed").as_usize().unwrap(),
+        16 + u1.tiles.len() + u2.tiles.len(),
+        "pushed = every dirty tile across updates 1.., plus the 16 initial"
+    );
+
+    // graceful teardown: the ack ends the feed and the connection reverts
+    // to request/response mode
+    sub.unsubscribe().unwrap();
+    feed.ping().unwrap();
+    wait_for("the slot sweep", || coord.subscriptions() == 0);
+    assert_eq!(coord.metrics().subs_active, 0);
+}
+
+#[test]
+fn property_materialized_view_stays_bit_identical_under_random_mutations() {
+    let c = Coordinator::new(cpu_config()).unwrap();
+    c.register_dataset("p", workload::uniform_square(600, 50.0, 2201)).unwrap();
+    let queries = workload::uniform_square(90, 50.0, 2202).xy();
+    // ragged tiling on purpose: 90 rows in 7-row tiles -> 13 tiles
+    let opts = QueryOptions::new().k(12).local_neighbors(24).tile_rows(7);
+    let mut sub = c
+        .subscribe(InterpolationRequest::new("p", queries.clone()).with_options(opts.clone()))
+        .unwrap();
+    assert_eq!(sub.n_tiles, 13);
+    let mut raster = vec![f64::NAN; sub.rows];
+    sub.next_update().unwrap().apply(&mut raster);
+    assert_eq!(raster, from_scratch(&c, "p", &queries, &opts));
+
+    let mut rng = Pcg32::seeded(2203);
+    let mut next_remove = 0u64; // retire original ids front to back
+    let mut overlay_dirty = false; // a clean overlay makes compaction a no-op
+    for step in 0..12u64 {
+        match (rng.uniform(0.0, 3.0) as usize).min(2) {
+            2 if overlay_dirty => {
+                c.compact_dataset("p").unwrap();
+                overlay_dirty = false;
+            }
+            1 => {
+                let ids: Vec<u64> = (next_remove..next_remove + 3).collect();
+                next_remove += 3;
+                assert_eq!(c.remove_points("p", &ids).unwrap().removed, 3);
+                overlay_dirty = true;
+            }
+            _ => {
+                let n = 4 + rng.uniform(0.0, 16.0) as usize;
+                c.append_points("p", workload::uniform_square(n, 50.0, 3000 + step)).unwrap();
+                overlay_dirty = true;
+            }
+        }
+        let u = sub.next_update().unwrap();
+        assert_eq!(u.update, step + 1, "one update per mutation step");
+        assert_eq!(u.tiles.len() + u.skipped_clean, 13);
+        u.apply(&mut raster);
+        assert_eq!(
+            raster,
+            from_scratch(&c, "p", &queries, &opts),
+            "step {step}: the materialized view drifted from the from-scratch oracle"
+        );
+    }
+}
+
+#[test]
+fn dirty_footprint_is_sound_and_clean_tiles_skip_recompute() {
+    let c = Coordinator::new(cpu_config()).unwrap();
+    c.register_dataset("p", workload::uniform_square(3000, 100.0, 2301)).unwrap();
+    let queries = workload::uniform_square(240, 100.0, 2302).xy();
+    let opts = QueryOptions::new().k(16).local_neighbors(32).tile_rows(12); // 20 tiles
+    let mut sub = c
+        .subscribe(InterpolationRequest::new("p", queries.clone()).with_options(opts.clone()))
+        .unwrap();
+    let mut raster = vec![f64::NAN; sub.rows];
+    sub.next_update().unwrap().apply(&mut raster);
+    let before = raster.clone();
+    let m0 = c.metrics();
+
+    // a tight corner burst: only the rows whose kNN termination ball
+    // touches [0,6]^2 may change
+    c.append_points("p", workload::uniform_square(30, 6.0, 2303)).unwrap();
+    let u = sub.next_update().unwrap();
+    assert!(u.skipped_clean >= 1, "the far tiles must be proven clean");
+    assert_eq!(u.tiles.len() + u.skipped_clean, sub.n_tiles);
+    u.apply(&mut raster);
+    let oracle = from_scratch(&c, "p", &queries, &opts);
+    assert_eq!(raster, oracle, "applied dirty tiles reproduce the oracle");
+
+    // soundness scan: every changed row lies inside a pushed tile
+    let mut pushed = vec![false; sub.rows];
+    for t in &u.tiles {
+        for row in t.row0..t.row0 + t.values.len() {
+            pushed[row] = true;
+        }
+    }
+    for row in 0..sub.rows {
+        if oracle[row].to_bits() != before[row].to_bits() {
+            assert!(pushed[row], "row {row} changed but its tile was skipped as clean");
+        }
+    }
+
+    // the skip is real — the counters moved by exactly the tile split
+    let m1 = c.metrics();
+    assert_eq!(m1.tiles_dirty - m0.tiles_dirty, u.tiles.len() as u64);
+    assert_eq!(m1.tiles_pushed - m0.tiles_pushed, u.tiles.len() as u64);
+    assert_eq!(m1.tiles_skipped_clean - m0.tiles_skipped_clean, u.skipped_clean as u64);
+    drop(sub);
+    wait_for("the slot sweep", || c.subscriptions() == 0);
+
+    // dense mode has no per-row termination bound: the safe fallback is
+    // to treat every row as suspect and push the full raster
+    let dense = QueryOptions::new().tile_rows(12);
+    let mut dsub = c
+        .subscribe(InterpolationRequest::new("p", queries.clone()).with_options(dense.clone()))
+        .unwrap();
+    let mut draster = vec![f64::NAN; dsub.rows];
+    dsub.next_update().unwrap().apply(&mut draster);
+    c.append_points("p", workload::uniform_square(5, 6.0, 2304)).unwrap();
+    let du = dsub.next_update().unwrap();
+    assert_eq!(du.tiles.len(), dsub.n_tiles, "dense mode falls back to all-dirty");
+    assert_eq!(du.skipped_clean, 0);
+    du.apply(&mut draster);
+    assert_eq!(draster, from_scratch(&c, "p", &queries, &dense));
+}
+
+#[test]
+fn dropped_subscription_sweeps_cleanly_and_shutdown_is_not_wedged() {
+    let mut c = Coordinator::new(cpu_config()).unwrap();
+    c.register_dataset("p", workload::uniform_square(300, 30.0, 2401)).unwrap();
+    let queries = workload::uniform_square(48, 30.0, 2402).xy();
+    let opts = QueryOptions::new().local_neighbors(16).tile_rows(8);
+    {
+        let mut sub = c
+            .subscribe(InterpolationRequest::new("p", queries.clone()).with_options(opts.clone()))
+            .unwrap();
+        assert_eq!(c.subscriptions(), 1);
+        assert_eq!(c.metrics().subs_active, 1);
+        sub.next_update().unwrap();
+        // walk away with a push still pending: the worker may be blocked
+        // mid-update on this subscription's bounded queue
+        c.append_points("p", workload::uniform_square(10, 30.0, 2403)).unwrap();
+    } // drop: cancels, the worker sweeps the slot
+    wait_for("the dropped slot to sweep", || c.subscriptions() == 0);
+    assert_eq!(c.metrics().subs_active, 0, "the gauge settles with the sweep");
+
+    // the worker is not wedged: a fresh subscription serves normally
+    let mut sub2 = c
+        .subscribe(InterpolationRequest::new("p", queries.clone()).with_options(opts.clone()))
+        .unwrap();
+    let first = sub2.next_update().unwrap();
+    assert_eq!(first.tiles.len(), sub2.n_tiles);
+
+    // shutdown with a live feed: a structured terminal frame, then join —
+    // never a hang on the subscription worker
+    c.shutdown();
+    assert!(matches!(sub2.next_update(), Err(Error::Unavailable(_))));
+    assert!(sub2.finished());
+}
+
+#[test]
+fn dataset_drop_and_register_over_terminate_with_structured_errors() {
+    let c = Coordinator::new(cpu_config()).unwrap();
+    c.register_dataset("a", workload::uniform_square(200, 20.0, 2501)).unwrap();
+    c.register_dataset("b", workload::uniform_square(200, 20.0, 2502)).unwrap();
+    let queries = workload::uniform_square(32, 20.0, 2503).xy();
+    let sub_req = |name: &str| {
+        InterpolationRequest::new(name, queries.clone())
+            .with_options(QueryOptions::new().local_neighbors(16).tile_rows(8))
+    };
+    let mut sa = c.subscribe(sub_req("a")).unwrap();
+    let mut sb = c.subscribe(sub_req("b")).unwrap();
+    sa.next_update().unwrap();
+    sb.next_update().unwrap();
+    assert_eq!(c.subscriptions(), 2);
+
+    // dropping the dataset kills its subscription with UnknownDataset ...
+    assert!(c.drop_dataset("a"));
+    match sa.next_update() {
+        Err(Error::UnknownDataset(name)) => assert_eq!(name, "a"),
+        other => panic!("expected UnknownDataset, got {other:?}"),
+    }
+    assert!(sa.finished());
+    // ... and only its subscription
+    wait_for("the retired slot to sweep", || c.subscriptions() == 1);
+
+    // registering over a dataset retires the old instance's feeds
+    c.register_dataset("b", workload::uniform_square(150, 20.0, 2504)).unwrap();
+    match sb.next_update() {
+        Err(Error::Unavailable(msg)) => {
+            assert!(msg.contains("registered over"), "unexpected message: {msg}")
+        }
+        other => panic!("expected Unavailable, got {other:?}"),
+    }
+    wait_for("the displaced slot to sweep", || c.subscriptions() == 0);
+
+    // the replacement instance subscribes fresh
+    let mut sb2 = c.subscribe(sub_req("b")).unwrap();
+    let u = sb2.next_update().unwrap();
+    assert_eq!((u.update, u.epoch, u.overlay), (0, 0, 0));
+}
+
+#[test]
+fn tcp_feed_surfaces_mid_stream_retirement_as_a_structured_error_frame() {
+    let coord = Arc::new(Coordinator::new(cpu_config()).unwrap());
+    let server = Server::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let mut admin = Client::connect(server.addr()).unwrap();
+    admin.register("d", &workload::uniform_square(400, 40.0, 2601)).unwrap();
+    let queries = workload::uniform_square(40, 40.0, 2602).xy();
+
+    let mut feed = Client::connect(server.addr()).unwrap();
+    let mut sub = feed
+        .subscribe("d", &queries, QueryOptions::new().local_neighbors(16).tile_rows(10))
+        .unwrap();
+    sub.next_update().unwrap();
+
+    // the dataset vanishes mid-subscription: a structured error frame
+    // terminates the feed instead of a silent stall
+    assert!(coord.drop_dataset("d"));
+    match sub.next_update() {
+        Err(Error::UnknownDataset(name)) => assert_eq!(name, "d"),
+        other => panic!("expected UnknownDataset over the wire, got {other:?}"),
+    }
+    drop(sub);
+    // the connection is back in request/response mode, in sync
+    feed.ping().unwrap();
+    wait_for("the retired slot to sweep", || coord.subscriptions() == 0);
+}
