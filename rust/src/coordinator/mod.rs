@@ -454,6 +454,7 @@ impl Coordinator {
             self.shared.subs.notify(crate::subscribe::SubEvent::Mutated {
                 dataset: name.to_string(),
                 coords,
+                seq: out.mut_seq,
             });
         }
         LiveDataset::maybe_spawn_compaction(&ds);
@@ -463,29 +464,20 @@ impl Coordinator {
     /// Tombstone live points by id (strict: all ids must be live).
     pub fn remove_points(&self, name: &str, ids: &[u64]) -> Result<RemoveOutcome> {
         let ds = self.shared.registry.get(name)?;
-        // capture the victims' coordinates *before* the tombstones land
-        // (afterwards they are no longer in the live view)
-        let coords = if self.shared.subs.active_on(name) {
-            let want: std::collections::HashSet<u64> = ids.iter().copied().collect();
-            let (pts, live_ids) = ds.snapshot().live_points();
-            Some(
-                live_ids
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, id)| want.contains(id))
-                    .map(|(i, _)| (pts.xs[i], pts.ys[i]))
-                    .collect::<Vec<_>>(),
-            )
-        } else {
-            None
-        };
-        let out = ds.remove(ids)?;
-        if let Some(coords) = coords {
+        let out = if self.shared.subs.active_on(name) {
+            // the victims' coordinates are the dirty footprint; the live
+            // layer resolves them per id under its write lock — exact and
+            // O(ids · log n), never a full live scan
+            let (out, coords) = ds.remove_traced(ids)?;
             self.shared.subs.notify(crate::subscribe::SubEvent::Mutated {
                 dataset: name.to_string(),
                 coords,
+                seq: out.mut_seq,
             });
-        }
+            out
+        } else {
+            ds.remove(ids)?
+        };
         LiveDataset::maybe_spawn_compaction(&ds);
         Ok(out)
     }
@@ -557,6 +549,12 @@ impl Coordinator {
     /// the stream unsubscribes; if the dataset is dropped or
     /// registered-over, the stream terminates with a structured error
     /// frame.  See [`crate::subscribe`] for the dirty-footprint bound.
+    ///
+    /// The echoed options stamp the `(epoch, overlay)` observed at
+    /// **admission**; under concurrent mutation the worker may compute
+    /// update 0 from a later snapshot.  Each update's header — update 0
+    /// included — is the authoritative serving-snapshot identity; the
+    /// echo is an audit of what admission saw, like the serving path's.
     pub fn subscribe(
         &self,
         request: InterpolationRequest,

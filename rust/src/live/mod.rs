@@ -127,6 +127,15 @@ pub struct LiveSnapshot {
     pub live_len: usize,
     /// Explicit Eq.-2 area override, when configured.
     pub area_override: Option<f64>,
+    /// Count of mutations (appends + removes) ever applied to this
+    /// dataset instance — assigned under the write lock, **carried
+    /// across compactions** (unlike the per-epoch overlay version,
+    /// whose renumbering at a fold makes cross-epoch gap detection
+    /// ambiguous).  Consumers that must account for *every* mutation —
+    /// the subscription worker's dirty-footprint ledger — key on this:
+    /// two snapshots with equal `mut_seq` are value-identical up to
+    /// compaction.
+    pub mut_seq: u64,
 }
 
 impl LiveSnapshot {
@@ -218,6 +227,10 @@ pub struct AppendOutcome {
     pub delta_points: usize,
     /// Overlay pressure after the append (compaction trigger metric).
     pub pressure: usize,
+    /// The dataset's mutation count *after* this append (see
+    /// [`LiveSnapshot::mut_seq`]) — read under the same write lock, so
+    /// it names exactly the snapshot this append published.
+    pub mut_seq: u64,
 }
 
 /// What a remove did.
@@ -228,6 +241,9 @@ pub struct RemoveOutcome {
     pub live_points: usize,
     pub tombstones: usize,
     pub pressure: usize,
+    /// The dataset's mutation count *after* this removal (see
+    /// [`LiveSnapshot::mut_seq`]).
+    pub mut_seq: u64,
 }
 
 /// Point-in-time mutation/compaction statistics.
@@ -420,6 +436,7 @@ impl LiveDataset {
             live_bounds,
             live_len,
             area_override,
+            mut_seq: 0,
         };
         Ok(LiveDataset {
             name: name.to_string(),
@@ -470,7 +487,17 @@ impl LiveDataset {
     /// Tombstone live points by id.  Strict: every id must be live, or
     /// the whole request is rejected and nothing mutates.
     pub fn remove(&self, ids: &[u64]) -> Result<RemoveOutcome> {
-        self.apply_remove(ids, true, true)
+        Ok(self.apply_remove(ids, true, true, false)?.0)
+    }
+
+    /// [`remove`](Self::remove), additionally reporting each victim's
+    /// coordinates.  The trace is resolved from the id indexes under the
+    /// same write lock that applies the tombstones — O(ids · log n) and
+    /// exact even under concurrent mutation — so it is the
+    /// dirty-footprint feed for raster subscriptions.
+    pub fn remove_traced(&self, ids: &[u64]) -> Result<(RemoveOutcome, Vec<(f64, f64)>)> {
+        let (out, coords) = self.apply_remove(ids, true, true, true)?;
+        Ok((out, coords.unwrap_or_default()))
     }
 
     /// Shared append core.  `explicit_ids` is the replay path (ids from
@@ -522,6 +549,7 @@ impl LiveDataset {
             live_len: cur.live_len + pts.len(),
             area_override: cur.area_override,
             delta,
+            mut_seq: cur.mut_seq + 1,
         };
         let out = AppendOutcome {
             first_id,
@@ -530,6 +558,7 @@ impl LiveDataset {
             live_points: snap.live_len,
             delta_points: snap.delta.points.len(),
             pressure: snap.delta.pressure(),
+            mut_seq: snap.mut_seq,
         };
         *state = Arc::new(snap);
         Ok(out)
@@ -554,7 +583,13 @@ impl LiveDataset {
         }
     }
 
-    fn apply_remove(&self, ids: &[u64], log: bool, strict: bool) -> Result<RemoveOutcome> {
+    fn apply_remove(
+        &self,
+        ids: &[u64],
+        log: bool,
+        strict: bool,
+        trace_coords: bool,
+    ) -> Result<(RemoveOutcome, Option<Vec<(f64, f64)>>)> {
         if ids.is_empty() {
             return Err(Error::InvalidArgument("remove of zero ids".into()));
         }
@@ -577,13 +612,17 @@ impl LiveDataset {
         }
         if removals.is_empty() {
             // replay no-op
-            return Ok(RemoveOutcome {
-                removed: 0,
-                epoch: cur.epoch,
-                live_points: cur.live_len,
-                tombstones: cur.delta.tombstones.len(),
-                pressure: cur.delta.pressure(),
-            });
+            return Ok((
+                RemoveOutcome {
+                    removed: 0,
+                    epoch: cur.epoch,
+                    live_points: cur.live_len,
+                    tombstones: cur.delta.tombstones.len(),
+                    pressure: cur.delta.pressure(),
+                    mut_seq: cur.mut_seq,
+                },
+                trace_coords.then(Vec::new),
+            ));
         }
         if cur.live_len <= removals.len() {
             return Err(Error::InvalidArgument(format!(
@@ -599,18 +638,21 @@ impl LiveDataset {
             }
         }
         let delta = Arc::new(cur.delta.with_removals(&removals));
+        let coord_of = |loc: LiveLocation| match loc {
+            LiveLocation::Base(i) => {
+                (cur.base.points.xs[i as usize], cur.base.points.ys[i as usize])
+            }
+            LiveLocation::Delta(p) => {
+                (cur.delta.points.xs[p as usize], cur.delta.points.ys[p as usize])
+            }
+        };
+        let trace =
+            trace_coords.then(|| removals.iter().map(|&(_, loc)| coord_of(loc)).collect());
         // the bounds shrink only if a removed point sat on the rectangle;
         // recompute exactly in that case (O(live), rare)
         let mut bounds = cur.live_bounds;
         let on_boundary = removals.iter().any(|&(_, loc)| {
-            let (x, y) = match loc {
-                LiveLocation::Base(i) => {
-                    (cur.base.points.xs[i as usize], cur.base.points.ys[i as usize])
-                }
-                LiveLocation::Delta(p) => {
-                    (cur.delta.points.xs[p as usize], cur.delta.points.ys[p as usize])
-                }
-            };
+            let (x, y) = coord_of(loc);
             x == bounds.min_x || x == bounds.max_x || y == bounds.min_y || y == bounds.max_y
         });
         if on_boundary {
@@ -624,6 +666,7 @@ impl LiveDataset {
             live_len: cur.live_len - removals.len(),
             area_override: cur.area_override,
             delta,
+            mut_seq: cur.mut_seq + 1,
         };
         let out = RemoveOutcome {
             removed: removals.len(),
@@ -631,9 +674,10 @@ impl LiveDataset {
             live_points: snap.live_len,
             tombstones: snap.delta.tombstones.len(),
             pressure: snap.delta.pressure(),
+            mut_seq: snap.mut_seq,
         };
         *state = Arc::new(snap);
-        Ok(out)
+        Ok((out, trace))
     }
 
     /// Idempotent application of one replayed WAL record.
@@ -666,7 +710,7 @@ impl LiveDataset {
                 }
                 self.apply_append(Some(&ids), &pts, false).map(|_| ())
             }
-            WalRecord::Remove { ids } => self.apply_remove(ids, false, false).map(|_| ()),
+            WalRecord::Remove { ids } => self.apply_remove(ids, false, false, false).map(|_| ()),
         }
     }
 
@@ -836,6 +880,9 @@ impl LiveDataset {
             live_bounds: cur.live_bounds,
             live_len: cur.live_len,
             area_override: cur.area_override,
+            // compaction is not a mutation: the ledger carries across the
+            // fold (racing mutations already bumped `cur`'s count)
+            mut_seq: cur.mut_seq,
         });
         drop(state);
         self.compactions.fetch_add(1, Ordering::SeqCst);
@@ -1185,6 +1232,52 @@ mod tests {
         // a failed (strict) remove publishes nothing: version unchanged
         assert!(ds.remove(&[3]).is_err());
         assert_eq!(ds.snapshot().overlay_version(), 0);
+    }
+
+    #[test]
+    fn mut_seq_counts_every_mutation_and_carries_across_compaction() {
+        let ds = build_mem(120, 860);
+        assert_eq!(ds.snapshot().mut_seq, 0);
+        let a = ds.append(&workload::uniform_square(6, 50.0, 861)).unwrap();
+        assert_eq!((a.mut_seq, ds.snapshot().mut_seq), (1, 1));
+        let r = ds.remove(&[2]).unwrap();
+        assert_eq!((r.mut_seq, ds.snapshot().mut_seq), (2, 2));
+        // compaction renumbers the overlay version but is not a mutation:
+        // the ledger carries across the fold unchanged
+        ds.compact_now().unwrap();
+        let snap = ds.snapshot();
+        assert_eq!((snap.epoch, snap.overlay_version(), snap.mut_seq), (1, 0, 2));
+        let a = ds.append(&workload::uniform_square(2, 50.0, 862)).unwrap();
+        assert_eq!(a.mut_seq, 3, "the ledger keeps counting in the new epoch");
+        // a failed (strict) remove publishes nothing
+        assert!(ds.remove(&[2]).is_err());
+        assert_eq!(ds.snapshot().mut_seq, 3);
+    }
+
+    #[test]
+    fn remove_traced_reports_victim_coordinates_from_base_and_delta() {
+        let pool = Pool::new(1);
+        let mut pts = PointSet::default();
+        for i in 0..12 {
+            pts.push(i as f64, 2.0 * i as f64, 1.0); // ids 0..12 (base)
+        }
+        let ds = LiveDataset::build(
+            &pool,
+            "d",
+            pts,
+            &GridConfig::default(),
+            None,
+            LiveConfig::default(),
+        )
+        .unwrap();
+        let mut extra = PointSet::default();
+        extra.push(50.0, 60.0, 2.0); // id 12 (delta)
+        ds.append(&extra).unwrap();
+        let (out, coords) = ds.remove_traced(&[3, 12, 7]).unwrap();
+        assert_eq!(out.removed, 3);
+        assert_eq!(out.mut_seq, 2);
+        // trace order follows the request order, base and delta alike
+        assert_eq!(coords, vec![(3.0, 6.0), (50.0, 60.0), (7.0, 14.0)]);
     }
 
     #[test]

@@ -37,7 +37,11 @@
 //!      "skipped":s}` — the serving snapshot identity `(epoch, overlay)`
 //!      plus how many tiles follow (`tiles`) and how many were proven
 //!      clean and skipped (`skipped`); update `0` is the initial
-//!      materialization (every tile, `skipped: 0`);
+//!      materialization (every tile, `skipped: 0`).  The update line is
+//!      **authoritative** for the serving snapshot: the header's
+//!      `options` echo stamps the `(epoch, overlay)` observed at
+//!      admission, and under concurrent mutation update `0` may already
+//!      be computed from a later snapshot;
 //!   2. `tiles` v2.4 tile lines `{"tile":i,"row0":S,"z":[..]}` — only
 //!      the **dirty** tiles, rows whose exact kNN termination bound
 //!      intersects some mutated point's footprint (approximate ring
@@ -1262,6 +1266,7 @@ mod tests {
             live_points: 103,
             delta_points: 3,
             pressure: 3,
+            mut_seq: 3,
         });
         let v = Json::parse(&append).unwrap();
         assert_eq!(v.get("ok").as_bool(), Some(true));
@@ -1275,6 +1280,7 @@ mod tests {
             live_points: 101,
             tombstones: 2,
             pressure: 5,
+            mut_seq: 5,
         });
         let v = Json::parse(&remove).unwrap();
         assert_eq!(v.get("removed").as_usize(), Some(2));

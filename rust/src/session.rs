@@ -315,6 +315,7 @@ impl AidwSession {
                     live_points: entry.points.len(),
                     delta_points: 0,
                     pressure: 0,
+                    mut_seq: 0,
                 })
             }
         }
@@ -364,6 +365,7 @@ impl AidwSession {
                     live_points: entry.points.len(),
                     tombstones: 0,
                     pressure: 0,
+                    mut_seq: 0,
                 })
             }
         }

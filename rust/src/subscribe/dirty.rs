@@ -30,6 +30,14 @@
 use crate::aidw::alpha;
 use crate::aidw::params::AidwParams;
 
+/// Largest coalesced mutation footprint worth classifying row by row.
+/// [`DirtyCheck::dirty_rows`] is O(rows × coords); past a few hundred
+/// coordinates (one bulk append, or a long coalesced burst) the
+/// classification itself rivals the full recompute it exists to avoid, so
+/// callers fall back to all-tiles-dirty — the same conservative fallback
+/// the dense and approximate-ring configurations use.
+pub const MAX_CLASSIFIED_COORDS: usize = 256;
+
 /// Per-row state a subscription carries to classify mutations.
 #[derive(Debug, Clone, Default)]
 pub struct DirtyCheck {

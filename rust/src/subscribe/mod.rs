@@ -32,7 +32,16 @@
 //! subscription's state and serializes all pushes.  Events arrive over an
 //! mpsc channel; each wake-up drains the queue and **coalesces** all
 //! pending mutations per dataset into a single classify + push, so a
-//! rapid mutation burst costs one update, not one per append.  Dirty
+//! rapid mutation burst costs one update, not one per append.  Each
+//! `Mutated` event carries the post-mutation ledger stamp
+//! ([`LiveSnapshot::mut_seq`], assigned under the live write lock); a
+//! push trusts the coalesced footprint only when the stamps cover every
+//! mutation the served snapshot folded in (`seqs_cover`), falling back
+//! to all-tiles-dirty on any gap — a mutation racing the snapshot read,
+//! an out-of-order event — so no tile is ever left stale.  The same
+//! fallback caps footprint size ([`dirty::MAX_CLASSIFIED_COORDS`]): a
+//! bulk append recomputes everything instead of paying an O(rows ×
+//! coords) classification that would rival it.  Dirty
 //! tiles re-run the two-stage pipeline per tile on the coordinator's CPU
 //! pool — the same merged/grid kernels the serving path uses on mutated
 //! snapshots, consulting (and feeding) the shared `NeighborCache` — so a
@@ -78,7 +87,11 @@ pub(crate) enum SubEvent {
     /// Start a new subscription (compute + push the initial raster).
     Subscribe(Box<NewSub>),
     /// Points were appended or removed at the given live coordinates.
-    Mutated { dataset: String, coords: Vec<(f64, f64)> },
+    /// `seq` is the dataset's post-mutation [`LiveSnapshot::mut_seq`],
+    /// read under the same write lock that published the mutation — the
+    /// worker's ledger entry for proving its coalesced footprint covers
+    /// *every* mutation folded into a served snapshot.
+    Mutated { dataset: String, coords: Vec<(f64, f64)>, seq: u64 },
     /// The overlay was folded into a new epoch (value-identical).
     Compacted { dataset: String },
     /// The dataset was dropped (`replaced: false`) or registered over
@@ -408,7 +421,45 @@ struct SubState {
     /// Identity of the last served snapshot.
     epoch: u64,
     overlay: u64,
+    /// Mutation ledger position: every mutation with
+    /// `seq <= mut_seq` is *accounted* — its rows were recomputed, either
+    /// classified by its footprint or swept by an all-dirty fallback.
+    mut_seq: u64,
     update_seq: u64,
+}
+
+/// One wake-up's coalesced mutation state for one dataset.
+#[derive(Default)]
+struct PendingDirt {
+    /// Union of the batched mutations' footprints.
+    coords: Vec<(f64, f64)>,
+    /// The batched `Mutated` events' ledger stamps (see
+    /// [`SubEvent::Mutated`]); footprint classification is only sound
+    /// when these cover every mutation the served snapshot folded in.
+    seqs: Vec<u64>,
+}
+
+/// True when `seqs` (the batch's `Mutated` stamps) account for **every**
+/// mutation in `(served, snap_seq]` — the precondition for
+/// footprint-based dirty classification.  Mutation sequence numbers are
+/// consecutive and unique (assigned under the live write lock), so the
+/// distinct stamps inside the window must number exactly its width; a
+/// mutation that committed between the worker's queue drain and the
+/// snapshot read — included in the snapshot, its event still in flight —
+/// leaves a gap, and the caller must fall back to all-tiles-dirty.
+/// Stamps at or below `served` (late arrivals whose mutations a previous
+/// push already accounted for) are ignored.
+fn seqs_cover(seqs: &[u64], served: u64, snap_seq: u64) -> bool {
+    if snap_seq < served {
+        // a replacement instance's ledger restarted below ours (its
+        // Retired event is still in flight): nothing is provable
+        return false;
+    }
+    let mut fresh: Vec<u64> =
+        seqs.iter().copied().filter(|&s| s > served && s <= snap_seq).collect();
+    fresh.sort_unstable();
+    fresh.dedup();
+    fresh.len() as u64 == snap_seq - served
 }
 
 /// One tile's recompute product: fresh values plus the per-row state the
@@ -434,9 +485,10 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, rx: mpsc::Receiver<SubEvent>) {
         while let Ok(ev) = rx.try_recv() {
             batch.push(ev);
         }
-        // pending mutation footprint per dataset; an entry with no coords
-        // (compaction only) is a value-identical identity refresh
-        let mut dirt: HashMap<String, Vec<(f64, f64)>> = HashMap::new();
+        // pending mutation footprint + ledger stamps per dataset; an
+        // entry with no coords (compaction only) is a value-identical
+        // identity refresh
+        let mut dirt: HashMap<String, PendingDirt> = HashMap::new();
         for ev in batch {
             match ev {
                 SubEvent::Subscribe(ns) => {
@@ -448,8 +500,10 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, rx: mpsc::Receiver<SubEvent>) {
                     subs.retain(|s| s.id != id);
                     drop_slot(&shared, id);
                 }
-                SubEvent::Mutated { dataset, coords } => {
-                    dirt.entry(dataset).or_default().extend(coords);
+                SubEvent::Mutated { dataset, coords, seq } => {
+                    let d = dirt.entry(dataset).or_default();
+                    d.coords.extend(coords);
+                    d.seqs.push(seq);
                 }
                 SubEvent::Compacted { dataset } => {
                     dirt.entry(dataset).or_default();
@@ -466,14 +520,14 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, rx: mpsc::Receiver<SubEvent>) {
         }
         // flush: one push per affected subscription per wake-up
         // (mutation coalescing)
-        for (dataset, coords) in dirt {
+        for (dataset, pending) in dirt {
             let mut i = 0;
             while i < subs.len() {
                 if subs[i].dataset != dataset {
                     i += 1;
                     continue;
                 }
-                if subs[i].cancel.load(Ordering::Relaxed) || !push_update(&shared, &mut subs[i], &coords)
+                if subs[i].cancel.load(Ordering::Relaxed) || !push_update(&shared, &mut subs[i], &pending)
                 {
                     let id = subs[i].id;
                     subs.remove(i);
@@ -582,6 +636,7 @@ fn start_subscription(shared: &Arc<Shared>, ns: NewSub) -> Option<SubState> {
         gather_eff: stage1.gather,
         epoch: snap.epoch,
         overlay: snap.overlay_version(),
+        mut_seq: snap.mut_seq,
         update_seq: 0,
     };
     let n = st.queries.len();
@@ -619,11 +674,21 @@ fn start_subscription(shared: &Arc<Shared>, ns: NewSub) -> Option<SubState> {
 }
 
 /// Classify + recompute + push one coalesced update for one subscription.
-/// `coords` is the union of mutated coordinates since the last push
-/// (empty = compaction-only, a value-identical identity refresh).
-/// Returns `false` when the subscription ended (consumer gone or dataset
-/// missing) and the caller should sweep it.
-fn push_update(shared: &Shared, st: &mut SubState, coords: &[(f64, f64)]) -> bool {
+/// `pending` is the union of mutated coordinates since the last push plus
+/// their ledger stamps (no coords = compaction-only, a value-identical
+/// identity refresh).  Returns `false` when the subscription ended
+/// (consumer gone or dataset missing) and the caller should sweep it.
+///
+/// The footprint classification is only trusted when the stamps prove the
+/// batch accounts for **every** mutation the served snapshot folded in
+/// (`seqs_cover`).  A mutation that commits between the worker's queue
+/// drain and the `snapshot()` read below is *inside* the snapshot while
+/// its event is still in flight; without the ledger its rows would be
+/// served stale and its late event dropped by the nothing-new early
+/// return — the lost-update race.  With it, the gap forces an all-dirty
+/// sweep, and the late event (stamp <= the swept `mut_seq`) is then
+/// provably already accounted for.
+fn push_update(shared: &Shared, st: &mut SubState, pending: &PendingDirt) -> bool {
     let live = match shared.registry.get(&st.dataset) {
         Ok(ds) => ds,
         Err(e) => {
@@ -632,20 +697,33 @@ fn push_update(shared: &Shared, st: &mut SubState, coords: &[(f64, f64)]) -> boo
         }
     };
     let snap = live.snapshot();
-    if snap.epoch == st.epoch && snap.overlay_version() == st.overlay {
-        return true; // the batch's mutations were already served
+    if snap.mut_seq == st.mut_seq && snap.epoch == st.epoch && snap.overlay_version() == st.overlay
+    {
+        // nothing new: every batched stamp is <= the accounted mut_seq
+        // (events always trail their mutations), and the identity did
+        // not move either — safe to drop the batch
+        return true;
     }
     let stage1 = stage1_for(&st.resolved, &snap);
     let n_tiles = st.plan.n_tiles();
-    let dirty_tiles: Vec<usize> = if coords.is_empty() {
-        // compaction alone: value-identical by the live-layer contract
+    let dirty_tiles: Vec<usize> = if snap.mut_seq == st.mut_seq {
+        // identity moved with no new mutation (compaction alone):
+        // value-identical by the live-layer contract
         Vec::new()
-    } else if !st.exact_local || stage1.k != st.k_eff || stage1.gather != st.gather_eff {
-        // no exact footprint bound (dense / approximate ring rule), or
-        // the clamped k / gather width changed: every row is suspect
+    } else if !seqs_cover(&pending.seqs, st.mut_seq, snap.mut_seq)
+        || pending.coords.len() > dirty::MAX_CLASSIFIED_COORDS
+        || !st.exact_local
+        || stage1.k != st.k_eff
+        || stage1.gather != st.gather_eff
+    {
+        // the footprint is incomplete (a mutation raced the snapshot) or
+        // too large to classify cheaply, there is no exact footprint
+        // bound (dense / approximate ring rule), or the clamped k /
+        // gather width changed: every row is suspect
         (0..n_tiles).collect()
     } else {
-        let flags = st.chk.dirty_rows(&st.queries, coords, stage1.r_exp, &stage1.params);
+        let flags =
+            st.chk.dirty_rows(&st.queries, &pending.coords, stage1.r_exp, &stage1.params);
         (0..n_tiles)
             .filter(|&t| st.plan.range(t).any(|row| flags[row]))
             .collect()
@@ -687,6 +765,7 @@ fn push_update(shared: &Shared, st: &mut SubState, coords: &[(f64, f64)]) -> boo
     st.gather_eff = stage1.gather;
     st.epoch = snap.epoch;
     st.overlay = snap.overlay_version();
+    st.mut_seq = snap.mut_seq;
     true
 }
 
@@ -858,6 +937,31 @@ mod tests {
         reg.shutdown();
         assert!(matches!(rx.recv().unwrap(), SubEvent::Shutdown));
         assert!(!reg.notify(SubEvent::Compacted { dataset: "e".into() }), "detached");
+    }
+
+    #[test]
+    fn seqs_cover_demands_every_mutation_in_the_window() {
+        // exact cover, any arrival order, duplicates tolerated
+        assert!(seqs_cover(&[3, 4, 5], 2, 5));
+        assert!(seqs_cover(&[5, 3, 4], 2, 5));
+        assert!(seqs_cover(&[4, 3, 5, 4], 2, 5));
+        // the lost-update shape: the snapshot folded in mutation 5 but
+        // its event has not arrived — classification must not be trusted
+        assert!(!seqs_cover(&[3, 4], 2, 5));
+        // a gap in the middle (out-of-order arrival split across batches)
+        assert!(!seqs_cover(&[3, 5], 2, 5));
+        // late arrivals at or below the accounted ledger position are
+        // ignored, not counted toward the window
+        assert!(seqs_cover(&[1, 2, 3], 2, 3));
+        assert!(!seqs_cover(&[1, 2], 2, 3));
+        // stamps beyond the snapshot (impossible by construction) must
+        // never satisfy the window either
+        assert!(!seqs_cover(&[3, 6], 2, 4));
+        // empty window: a compaction-only batch is trivially covered
+        assert!(seqs_cover(&[], 7, 7));
+        assert!(seqs_cover(&[7], 7, 7));
+        // a replacement instance's restarted ledger proves nothing
+        assert!(!seqs_cover(&[1], 5, 2));
     }
 
     #[test]

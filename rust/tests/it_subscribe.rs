@@ -258,6 +258,105 @@ fn dirty_footprint_is_sound_and_clean_tiles_skip_recompute() {
 }
 
 #[test]
+fn concurrent_mutation_storm_never_leaves_stale_tiles() {
+    // Writers race the worker's drain -> snapshot window on purpose: a
+    // mutation that commits in that gap is folded into the served
+    // snapshot while its event is still in flight.  The mutation ledger
+    // (`mut_seq` stamps) must detect the gap and sweep all tiles rather
+    // than serve the snapshot with the racing mutation's rows stale —
+    // the sequential tests above can never open this window.
+    let c = Arc::new(Coordinator::new(cpu_config()).unwrap());
+    c.register_dataset("s", workload::uniform_square(1500, 80.0, 2701)).unwrap();
+    let queries = workload::uniform_square(120, 80.0, 2702).xy();
+    let opts = QueryOptions::new().k(12).local_neighbors(24).tile_rows(10); // 12 tiles
+    let mut sub = c
+        .subscribe(InterpolationRequest::new("s", queries.clone()).with_options(opts.clone()))
+        .unwrap();
+    let mut raster = vec![f64::NAN; sub.rows];
+    sub.next_update().unwrap().apply(&mut raster);
+
+    let appender = {
+        let c = c.clone();
+        std::thread::spawn(move || {
+            for i in 0..30u64 {
+                // localized bursts keep the classifier on the footprint
+                // path (an all-dirty storm would mask a ledger bug)
+                c.append_points("s", workload::uniform_square(3, 10.0, 4000 + i)).unwrap();
+            }
+        })
+    };
+    let remover = {
+        let c = c.clone();
+        std::thread::spawn(move || {
+            for i in 0..20u64 {
+                let ids: Vec<u64> = (i * 4..i * 4 + 4).collect(); // original ids
+                c.remove_points("s", &ids).unwrap();
+            }
+        })
+    };
+    appender.join().unwrap();
+    remover.join().unwrap();
+    // sentinel mutation: the worker is guaranteed to deliver at least one
+    // update stamped with the final snapshot identity at or after it
+    c.append_points("s", workload::uniform_square(2, 10.0, 4999)).unwrap();
+    let fin = c.live_dataset("s").unwrap().snapshot();
+    let fin_id = (fin.epoch, fin.overlay_version());
+    let oracle = from_scratch(&c, "s", &queries, &opts);
+
+    // drain on a guarded thread: a regression shows up as a missed final
+    // update (hang) or a stale raster, never a silent pass
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    let drainer = std::thread::spawn(move || {
+        loop {
+            let u = sub.next_update().unwrap();
+            u.apply(&mut raster);
+            if (u.epoch, u.overlay) == fin_id {
+                break;
+            }
+        }
+        done_tx.send(raster).unwrap();
+    });
+    let raster = done_rx
+        .recv_timeout(std::time::Duration::from_secs(120))
+        .expect("subscription never reached the final snapshot identity");
+    drainer.join().unwrap();
+    assert_eq!(
+        raster, oracle,
+        "a mutation racing the snapshot read left stale tiles in the materialized view"
+    );
+}
+
+#[test]
+fn oversized_mutation_footprint_falls_back_to_full_recompute() {
+    use aidw::subscribe::dirty::MAX_CLASSIFIED_COORDS;
+    let c = Coordinator::new(cpu_config()).unwrap();
+    c.register_dataset("b", workload::uniform_square(2000, 100.0, 2801)).unwrap();
+    let queries = workload::uniform_square(96, 100.0, 2802).xy();
+    let opts = QueryOptions::new().k(16).local_neighbors(32).tile_rows(8); // 12 tiles
+    let mut sub = c
+        .subscribe(InterpolationRequest::new("b", queries.clone()).with_options(opts.clone()))
+        .unwrap();
+    let mut raster = vec![f64::NAN; sub.rows];
+    sub.next_update().unwrap().apply(&mut raster);
+
+    // under the cap a corner burst is classified and far tiles skipped
+    c.append_points("b", workload::uniform_square(20, 5.0, 2803)).unwrap();
+    let u = sub.next_update().unwrap();
+    assert!(u.skipped_clean >= 1, "a capped corner burst must skip clean tiles");
+    u.apply(&mut raster);
+
+    // past the cap even a localized burst recomputes everything: the
+    // O(rows x coords) classification would rival the recompute it avoids
+    c.append_points("b", workload::uniform_square(MAX_CLASSIFIED_COORDS + 44, 5.0, 2804))
+        .unwrap();
+    let u = sub.next_update().unwrap();
+    assert_eq!(u.tiles.len(), sub.n_tiles, "past the cap the push is all-dirty");
+    assert_eq!(u.skipped_clean, 0);
+    u.apply(&mut raster);
+    assert_eq!(raster, from_scratch(&c, "b", &queries, &opts));
+}
+
+#[test]
 fn dropped_subscription_sweeps_cleanly_and_shutdown_is_not_wedged() {
     let mut c = Coordinator::new(cpu_config()).unwrap();
     c.register_dataset("p", workload::uniform_square(300, 30.0, 2401)).unwrap();
