@@ -44,6 +44,19 @@ cargo test -q --test it_stream
 echo "== cargo test -q --test it_subscribe =="
 cargo test -q --test it_subscribe
 
+# Observability is tier-1: the traced-timeline acceptance, the v2.5
+# byte-compat pin for untraced replies, the journal loss-detection
+# property, and the sub-lag exposition coverage must never be silently
+# dropped.
+echo "== cargo test -q --test it_obs =="
+cargo test -q --test it_obs
+
+# Metrics-exposition parity gate: every MetricsSnapshot field must appear
+# in BOTH the JSON `metrics` op and the Prometheus-style `metrics_text`
+# exposition, or a new counter silently ships half-observable.
+echo "== metrics exposition parity gate =="
+cargo test -q --lib metrics_parity
+
 # Every examples/*.rs must be a registered [[example]] compile target, or
 # `cargo build --examples` (and cargo test's example builds) silently
 # skip it and it rots.

@@ -55,6 +55,11 @@ pub(crate) struct Batch {
     pub options: ResolvedOptions,
     /// Total queries across jobs.
     pub total_queries: usize,
+    /// When batch formation finished (the linger window closed).  With
+    /// each job's `admitted` stamp this bounds the trace's coalesce-wait
+    /// span; stamped unconditionally (one `Instant::now()` per batch, not
+    /// per job, so the untraced path stays allocation- and lock-free).
+    pub formed: Instant,
 }
 
 impl Batch {
@@ -155,13 +160,15 @@ impl JobQueue {
     /// Grow a batch around `first`, lingering for compatible arrivals.
     /// Compatibility = same dataset + equal stage-1 key (stage-2 variants
     /// may differ; they split only at stage 2).
-    fn fill_batch(&self, first: Job) -> Batch {
+    fn fill_batch(&self, mut first: Job) -> Batch {
         let dataset = first.request.dataset.clone();
         let options = first.resolved;
         let stage1 = options.stage1_key();
+        let now = Instant::now();
+        first.admitted = Some(now);
         let mut total = first.request.queries.len();
         let mut jobs = vec![first];
-        let deadline = Instant::now() + self.policy.linger;
+        let deadline = now + self.policy.linger;
 
         loop {
             let mut st = self.inner.lock().unwrap();
@@ -181,7 +188,8 @@ impl JobQueue {
                         && total + j.request.queries.len() <= self.policy.max_queries
                 };
                 if compat {
-                    let j = st.jobs.remove(i).unwrap();
+                    let mut j = st.jobs.remove(i).unwrap();
+                    j.admitted = Some(Instant::now());
                     total += j.request.queries.len();
                     jobs.push(j);
                 } else {
@@ -202,7 +210,7 @@ impl JobQueue {
                 break;
             }
         }
-        Batch { jobs, dataset, options, total_queries: total }
+        Batch { jobs, dataset, options, total_queries: total, formed: Instant::now() }
     }
 }
 
@@ -232,6 +240,7 @@ mod tests {
                 },
                 cancel: Arc::new(AtomicBool::new(false)),
                 enqueued: Instant::now(),
+                admitted: None,
             },
             rx,
         )
@@ -260,6 +269,28 @@ mod tests {
         let b2 = q.next_batch().unwrap();
         assert_eq!(b2.dataset, "b");
         assert_eq!(b2.total_queries, 5);
+    }
+
+    #[test]
+    fn batch_formation_stamps_admission_instants() {
+        // the trace's admission/coalesce spans derive from these stamps:
+        // enqueued <= admitted <= formed for every member
+        let q = JobQueue::new(BatchPolicy {
+            linger: Duration::from_millis(1),
+            ..Default::default()
+        });
+        let (j1, _r1) = job("a", 1);
+        assert!(j1.admitted.is_none(), "admission stamps only at batch formation");
+        let (j2, _r2) = job("a", 1);
+        q.push(j1).unwrap();
+        q.push(j2).unwrap();
+        let b = q.next_batch().unwrap();
+        assert_eq!(b.jobs.len(), 2);
+        for j in &b.jobs {
+            let admitted = j.admitted.expect("every batched job is stamped");
+            assert!(admitted >= j.enqueued);
+            assert!(b.formed >= admitted);
+        }
     }
 
     #[test]

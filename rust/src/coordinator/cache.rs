@@ -367,16 +367,23 @@ impl NeighborCache {
     /// Insert (or refresh) an artifact, evicting least-recently-used
     /// entries beyond the entry or byte bound.  `queries` must be the
     /// raster the key's fingerprint was computed from; it seeds the
-    /// subset-reuse row index.
-    pub fn put(&self, key: CacheKey, queries: &[(f64, f64)], artifact: Arc<NeighborArtifact>) {
+    /// subset-reuse row index.  Returns how many entries the insert
+    /// evicted (the coordinator journals evictions; 0 when the insert was
+    /// skipped or nothing had to go).
+    pub fn put(
+        &self,
+        key: CacheKey,
+        queries: &[(f64, f64)],
+        artifact: Arc<NeighborArtifact>,
+    ) -> usize {
         if self.capacity == 0 {
-            return;
+            return 0;
         }
         debug_assert_eq!(key.n_queries, queries.len(), "key/queries mismatch");
         let art_bytes = artifact_bytes(&artifact);
         if self.max_bytes > 0 && art_bytes > self.max_bytes {
-            return; // would evict everything and still bust the budget —
-                    // bail before building the O(n) row index
+            return 0; // would evict everything and still bust the budget —
+                      // bail before building the O(n) row index
         }
         let rows: HashMap<(u64, u64), u32> = queries
             .iter()
@@ -385,7 +392,7 @@ impl NeighborCache {
             .collect();
         let weight = art_bytes + rows.len() * ROW_INDEX_BYTES_PER_QUERY;
         if self.max_bytes > 0 && weight > self.max_bytes {
-            return; // row-index overhead alone busts the budget
+            return 0; // row-index overhead alone busts the budget
         }
         let mut st = self.inner.lock().unwrap();
         if let Some(pos) = st.entries.iter().position(|e| e.key == key) {
@@ -399,6 +406,7 @@ impl NeighborCache {
         st.index_entry(&entry);
         st.entries.push_front(entry);
         st.bytes += weight;
+        let mut evicted = 0usize;
         while st.entries.len() > self.capacity
             || (self.max_bytes > 0 && st.bytes > self.max_bytes)
         {
@@ -407,15 +415,19 @@ impl NeighborCache {
                     st.bytes -= victim.weight;
                     st.deindex_entry(&victim);
                     st.evictions += 1;
+                    evicted += 1;
                 }
                 None => break,
             }
         }
+        evicted
     }
 
     /// Drop every entry of one dataset (register-over / drop paths).
-    pub fn purge_dataset(&self, dataset: &str) {
+    /// Returns how many entries were purged (journaled by the caller).
+    pub fn purge_dataset(&self, dataset: &str) -> usize {
         let mut st = self.inner.lock().unwrap();
+        let before = st.entries.len();
         let mut kept = VecDeque::with_capacity(st.entries.len());
         while let Some(e) = st.entries.pop_front() {
             if e.key.dataset == dataset {
@@ -426,6 +438,7 @@ impl NeighborCache {
         }
         st.entries = kept;
         st.bytes = st.entries.iter().map(|e| e.weight).sum();
+        before - st.entries.len()
     }
 
     /// Entries currently held (diagnostics).

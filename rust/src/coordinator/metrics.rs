@@ -35,21 +35,49 @@ impl LatencyHisto {
         self.sum_us.load(Ordering::Relaxed) as f64 / c as f64 / 1e6
     }
 
-    /// Approximate quantile (bucket upper bound), seconds.
+    /// Approximate quantile, seconds, interpolated within the matched
+    /// bucket.  (The pre-v2.6 version returned the bucket *upper* bound,
+    /// which overstated p99 by up to 2x on power-of-two buckets — a
+    /// sample at 1100us reported as 2048us.)
     pub fn quantile_s(&self, q: f64) -> f64 {
         let total = self.count();
         if total == 0 {
             return 0.0;
         }
-        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
         let mut seen = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return (1u64 << (i + 1)) as f64 / 1e6;
+            let c = b.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
             }
+            if seen + c >= target {
+                // bucket i spans [2^i, 2^(i+1)) us: place the quantile at
+                // the rank's fraction through the bucket instead of its
+                // upper edge (bucket 29 is the clamped catch-all; its
+                // nominal width keeps the estimate finite)
+                let lo = (1u64 << i) as f64;
+                let frac = (target - seen) as f64 / c as f64;
+                return (lo + frac * lo) / 1e6;
+            }
+            seen += c;
         }
         (1u64 << 30) as f64 / 1e6
+    }
+
+    /// Plain copy of the per-bucket counts (bucket i counts samples in
+    /// [2^i, 2^(i+1)) us) — the exposition surface protocol v2.6 opens.
+    pub fn bucket_counts(&self) -> [u64; 30] {
+        let mut out = [0u64; 30];
+        for (o, b) in out.iter_mut().zip(self.buckets.iter()) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Upper bound of bucket `i` in seconds (the Prometheus `le` label).
+    pub fn bucket_le_s(i: usize) -> f64 {
+        (1u64 << (i + 1)) as f64 / 1e6
     }
 }
 
@@ -108,6 +136,10 @@ pub struct Metrics {
     knn_us: AtomicU64,
     interp_us: AtomicU64,
     pub latency: LatencyHisto,
+    /// Subscription push lag: mutation capture instant → update frames
+    /// delivered (v2.6).  Answers "how stale is this feed?" — the gap the
+    /// ROADMAP's scale-out work needs visible before sharding.
+    pub sub_lag: LatencyHisto,
 }
 
 impl Metrics {
@@ -177,7 +209,14 @@ impl Metrics {
             knn_s: self.knn_seconds(),
             interp_s: self.interp_seconds(),
             mean_latency_s: self.latency.mean_s(),
+            p50_latency_s: self.latency.quantile_s(0.50),
+            p90_latency_s: self.latency.quantile_s(0.90),
             p99_latency_s: self.latency.quantile_s(0.99),
+            sub_lag_mean_s: self.sub_lag.mean_s(),
+            sub_lag_p99_s: self.sub_lag.quantile_s(0.99),
+            sub_lag_count: self.sub_lag.count(),
+            latency_buckets: self.latency.bucket_counts(),
+            sub_lag_buckets: self.sub_lag.bucket_counts(),
         }
     }
 }
@@ -233,7 +272,100 @@ pub struct MetricsSnapshot {
     pub knn_s: f64,
     pub interp_s: f64,
     pub mean_latency_s: f64,
+    /// Median request latency, interpolated within its bucket (v2.6).
+    pub p50_latency_s: f64,
+    /// 90th-percentile request latency (v2.6).
+    pub p90_latency_s: f64,
     pub p99_latency_s: f64,
+    /// Mean subscription push lag, mutation capture → update delivered
+    /// (v2.6; 0 until a mutate→push cycle has completed).
+    pub sub_lag_mean_s: f64,
+    /// 99th-percentile subscription push lag (v2.6).
+    pub sub_lag_p99_s: f64,
+    /// Subscription push-lag samples recorded (v2.6).
+    pub sub_lag_count: u64,
+    /// Request-latency histogram buckets, bucket i = [2^i, 2^(i+1)) us
+    /// (v2.6; previously private to [`LatencyHisto`]).
+    pub latency_buckets: [u64; 30],
+    /// Subscription push-lag histogram buckets (v2.6).
+    pub sub_lag_buckets: [u64; 30],
+}
+
+/// Prometheus-style text exposition of a snapshot (protocol v2.6
+/// `metrics_text` op and `aidw serve --metrics-text`).
+///
+/// Every scalar [`MetricsSnapshot`] field becomes one `aidw_<field>`
+/// sample; the two histograms become cumulative `aidw_<field>{le="..."}`
+/// series (plus `+Inf`) the way Prometheus histograms expect, so
+/// `histogram_quantile()` works unmodified.  The metrics-parity CI gate
+/// checks every snapshot field surfaces here *and* in the JSON `metrics`
+/// op — adding a field without exporting it fails the build.
+pub fn prometheus_text(s: &MetricsSnapshot) -> String {
+    let mut out = String::with_capacity(2048);
+    let mut scalar = |name: &str, v: f64| {
+        out.push_str("aidw_");
+        out.push_str(name);
+        out.push(' ');
+        out.push_str(&format_sample(v));
+        out.push('\n');
+    };
+    scalar("requests", s.requests as f64);
+    scalar("queries", s.queries as f64);
+    scalar("batches", s.batches as f64);
+    scalar("rejected", s.rejected as f64);
+    scalar("errors", s.errors as f64);
+    scalar("stage1_execs", s.stage1_execs as f64);
+    scalar("stage1_cache_hits", s.stage1_cache_hits as f64);
+    scalar("stage1_subset_hits", s.stage1_subset_hits as f64);
+    scalar("stage2_execs", s.stage2_execs as f64);
+    scalar("coalesced_batches", s.coalesced_batches as f64);
+    scalar("stage1_tile_gathers", s.stage1_tile_gathers as f64);
+    scalar("stream_tiles", s.stream_tiles as f64);
+    scalar("subs_active", s.subs_active as f64);
+    scalar("sub_updates", s.sub_updates as f64);
+    scalar("tiles_pushed", s.tiles_pushed as f64);
+    scalar("tiles_dirty", s.tiles_dirty as f64);
+    scalar("tiles_skipped_clean", s.tiles_skipped_clean as f64);
+    scalar("stream_peak_buffered", s.stream_peak_buffered as f64);
+    scalar("stage1_saved_ms", s.stage1_saved_ms);
+    scalar("cache_entries", s.cache_entries as f64);
+    scalar("cache_bytes", s.cache_bytes as f64);
+    scalar("cache_evictions", s.cache_evictions as f64);
+    scalar("cache_hit_bytes", s.cache_hit_bytes as f64);
+    scalar("knn_s", s.knn_s);
+    scalar("interp_s", s.interp_s);
+    scalar("mean_latency_s", s.mean_latency_s);
+    scalar("p50_latency_s", s.p50_latency_s);
+    scalar("p90_latency_s", s.p90_latency_s);
+    scalar("p99_latency_s", s.p99_latency_s);
+    scalar("sub_lag_mean_s", s.sub_lag_mean_s);
+    scalar("sub_lag_p99_s", s.sub_lag_p99_s);
+    scalar("sub_lag_count", s.sub_lag_count as f64);
+    histogram(&mut out, "latency_buckets", &s.latency_buckets);
+    histogram(&mut out, "sub_lag_buckets", &s.sub_lag_buckets);
+    out
+}
+
+fn histogram(out: &mut String, name: &str, buckets: &[u64; 30]) {
+    let mut cumulative = 0u64;
+    for (i, &c) in buckets.iter().enumerate() {
+        cumulative += c;
+        out.push_str(&format!(
+            "aidw_{name}{{le=\"{}\"}} {cumulative}\n",
+            format_sample(LatencyHisto::bucket_le_s(i))
+        ));
+    }
+    out.push_str(&format!("aidw_{name}{{le=\"+Inf\"}} {cumulative}\n"));
+}
+
+/// Render a sample value: integers without a decimal point, everything
+/// else via shortest-roundtrip float formatting.
+fn format_sample(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9.007_199_254_740_992e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
 }
 
 #[cfg(test)]
@@ -261,6 +393,99 @@ mod tests {
         let h = LatencyHisto::default();
         assert_eq!(h.mean_s(), 0.0);
         assert_eq!(h.quantile_s(0.99), 0.0);
+    }
+
+    #[test]
+    fn quantile_interpolates_within_bucket() {
+        // pre-v2.6 this returned the bucket upper bound: 100 identical
+        // 1000us samples reported p99 = 2048us, a 2x overstatement
+        let h = LatencyHisto::default();
+        for _ in 0..100 {
+            h.record(0.001); // 1000us -> bucket 9 = [512, 1024)us
+        }
+        let p99 = h.quantile_s(0.99);
+        assert!(p99 < 1024.0 / 1e6, "p99 {p99} must stay inside the bucket");
+        assert!(p99 >= 512.0 / 1e6, "p99 {p99} below bucket lower bound");
+        // a single sample lands mid-estimate, not at the upper edge
+        let one = LatencyHisto::default();
+        one.record(0.001);
+        assert!(one.quantile_s(0.5) < 1024.0 / 1e6);
+        // quantile ordering holds under interpolation
+        let mixed = LatencyHisto::default();
+        for _ in 0..90 {
+            mixed.record(0.001);
+        }
+        for _ in 0..10 {
+            mixed.record(0.1);
+        }
+        assert!(mixed.quantile_s(0.5) <= mixed.quantile_s(0.9));
+        assert!(mixed.quantile_s(0.9) <= mixed.quantile_s(0.99));
+    }
+
+    #[test]
+    fn bucket_counts_surface_in_snapshot() {
+        let m = Metrics::default();
+        m.latency.record(0.001); // bucket 9
+        m.sub_lag.record(0.004); // 4000us -> bucket 11
+        let s = m.snapshot();
+        assert_eq!(s.latency_buckets[9], 1);
+        assert_eq!(s.latency_buckets.iter().sum::<u64>(), 1);
+        assert_eq!(s.sub_lag_buckets[11], 1);
+        assert_eq!(s.sub_lag_count, 1);
+        assert!(s.sub_lag_mean_s > 0.0);
+        assert!(s.sub_lag_p99_s > 0.0);
+        assert!(s.p50_latency_s > 0.0 && s.p50_latency_s <= s.p90_latency_s);
+        assert!(s.p90_latency_s <= s.p99_latency_s);
+    }
+
+    #[test]
+    fn prometheus_text_shapes() {
+        let m = Metrics::default();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.latency.record(0.001);
+        let text = prometheus_text(&m.snapshot());
+        assert!(text.contains("aidw_requests 3\n"));
+        // cumulative histogram with +Inf terminator
+        assert!(text.contains("aidw_latency_buckets{le=\"+Inf\"} 1\n"));
+        // bucket 9's upper bound (1024us = 0.001024s) carries the sample
+        assert!(text.contains("aidw_latency_buckets{le=\"0.001024\"} 1\n"), "{text}");
+        // every line is `name[{labels}] value`
+        for line in text.lines() {
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "unparseable sample: {line}");
+            assert!(parts.next().unwrap().starts_with("aidw_"), "{line}");
+        }
+    }
+
+    #[test]
+    fn metrics_parity_every_snapshot_field_in_both_encoders() {
+        // the CI metrics-parity gate: introspect MetricsSnapshot's field
+        // names out of its Debug rendering and require each to surface in
+        // BOTH the JSON `metrics` op response and the Prometheus text
+        // exposition — a field added to the snapshot but forgotten by an
+        // encoder fails here, not in a dashboard weeks later
+        let m = Metrics::default();
+        m.latency.record(0.001);
+        m.sub_lag.record(0.002);
+        let s = m.snapshot();
+        let debug = format!("{s:?}");
+        let mut fields: Vec<String> = Vec::new();
+        for tok in debug.split_whitespace() {
+            if let Some(name) = tok.strip_suffix(':') {
+                if name.chars().next().is_some_and(|c| c.is_ascii_alphabetic()) {
+                    fields.push(name.to_string());
+                }
+            }
+        }
+        assert!(fields.len() >= 30, "Debug introspection broke: {fields:?}");
+        assert!(fields.iter().any(|f| f == "sub_lag_p99_s"));
+        let json = crate::service::protocol::ok_metrics(&s);
+        let text = prometheus_text(&s);
+        for f in &fields {
+            assert!(json.contains(&format!("\"{f}\"")), "metrics op response missing field {f}");
+            assert!(text.contains(&format!("aidw_{f}")), "metrics_text exposition missing {f}");
+        }
     }
 
     #[test]

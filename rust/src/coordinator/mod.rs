@@ -181,6 +181,11 @@ pub struct CoordinatorConfig {
     /// (whole-raster tickets are exempt — they buffer freely so an
     /// unconsumed ticket can never stall the pipeline).  Min 1.
     pub stream_buffer_tiles: usize,
+    /// Capacity (events) of the structured [`crate::obs::Journal`] ring —
+    /// the `events` op's backing store (protocol v2.6).  Older events are
+    /// dropped (and counted) once the ring is full; 0 keeps sequencing
+    /// but retains nothing.
+    pub journal_capacity: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -203,8 +208,21 @@ impl Default for CoordinatorConfig {
             neighbor_cache_bytes: 256 << 20, // 256 MiB
             tile_rows: None,
             stream_buffer_tiles: 2,
+            journal_capacity: 1024,
         }
     }
+}
+
+/// How a batch's stage-1 artifact was obtained (drives the trace's
+/// stage-1 span; `saved_s` is the sweep time the cache substituted for).
+#[derive(Debug, Clone, Copy)]
+enum Stage1Info {
+    /// The kNN + alpha sweep actually ran.
+    Swept,
+    /// Exact neighbor-cache hit.
+    CacheHit { saved_s: f64 },
+    /// Subset row-gather out of one or more covering cached artifacts.
+    SubsetHit { saved_s: f64 },
 }
 
 /// A batch after stage 1, waiting for stage 2.
@@ -218,6 +236,8 @@ struct Stage2Job {
     snap: Arc<LiveSnapshot>,
     /// True when the artifact came from the cache (stage 1 skipped).
     cache_hit: bool,
+    /// How stage 1 was satisfied (trace detail behind `cache_hit`).
+    stage1: Stage1Info,
 }
 
 pub(crate) struct Shared {
@@ -231,6 +251,10 @@ pub(crate) struct Shared {
     /// Live raster subscriptions (incremental dirty-tile push) — see
     /// [`crate::subscribe`].
     pub(crate) subs: crate::subscribe::SubscriptionRegistry,
+    /// Structured event journal (protocol v2.6 `events` op): mutations,
+    /// compactions, cache churn, subscription lifecycle, WAL rotation —
+    /// everything that used to be an `eprintln!` or invisible.
+    pub(crate) journal: Arc<crate::obs::Journal>,
 }
 
 /// The interpolation service coordinator.  See module docs.
@@ -277,6 +301,7 @@ impl Coordinator {
             Some(n) => Pool::new(n),
             None => Pool::machine_sized(),
         };
+        let journal = Arc::new(crate::obs::Journal::new(config.journal_capacity));
         let shared = Arc::new(Shared {
             registry: LiveRegistry::new(),
             queue: JobQueue::new(config.batch),
@@ -286,6 +311,7 @@ impl Coordinator {
             pool,
             running: AtomicBool::new(true),
             subs: crate::subscribe::SubscriptionRegistry::default(),
+            journal,
         });
 
         // restore persisted live datasets (snapshot + WAL replay) before
@@ -300,6 +326,12 @@ impl Coordinator {
                     shared.config.params.area,
                     shared.config.live,
                 )?;
+                attach_observer(&shared, &ds);
+                shared.journal.info(
+                    "dataset_load",
+                    Some(&name),
+                    format!("restored from {} (snapshot + WAL replay)", dir.display()),
+                );
                 shared.registry.insert(ds);
             }
         }
@@ -390,18 +422,32 @@ impl Coordinator {
                 cfg.live,
             )?,
         };
+        attach_observer(&self.shared, &ds);
+        let n_points = ds.snapshot().live_len;
         if let Some(old) = self.shared.registry.insert(ds) {
             // deliberate epoch retirement (already detached from the
             // durable files above; a concurrent register of the same name
             // may hand us a not-yet-retired instance, so retire again)
             old.retire();
         }
+        self.shared.journal.info(
+            "dataset_register",
+            Some(name),
+            format!("{n_points} points{}", if displaced { " (replaced existing)" } else { "" }),
+        );
         // stage-1 artifacts of the displaced dataset must not survive a
         // same-name re-register (epoch numbering restarts at 0); purge
         // *after* the insert so no pre-insert batch can re-populate
         // between purge and publish (the epoch-base instance id in the
         // cache key is the backstop for the remaining race)
-        self.shared.cache.purge_dataset(name);
+        let purged = self.shared.cache.purge_dataset(name);
+        if purged > 0 {
+            self.shared.journal.info(
+                "cache_purge",
+                Some(name),
+                format!("{purged} stage-1 entries dropped on re-register"),
+            );
+        }
         // displaced-epoch retirement: subscriptions on the old instance
         // must terminate with a structured error, not serve the new one
         if displaced && self.shared.subs.active_on(name) {
@@ -416,7 +462,14 @@ impl Coordinator {
     /// Remove a dataset (joins its compactor and deletes its durable
     /// state so a restart does not resurrect it).
     pub fn drop_dataset(&self, name: &str) -> bool {
-        self.shared.cache.purge_dataset(name);
+        let purged = self.shared.cache.purge_dataset(name);
+        if purged > 0 {
+            self.shared.journal.info(
+                "cache_purge",
+                Some(name),
+                format!("{purged} stage-1 entries dropped with dataset"),
+            );
+        }
         match self.shared.registry.remove(name) {
             Some(ds) => {
                 // after retire() no compaction — background or an
@@ -435,6 +488,7 @@ impl Coordinator {
                         replaced: false,
                     });
                 }
+                self.shared.journal.info("dataset_drop", Some(name), String::new());
                 true
             }
             None => false,
@@ -449,12 +503,20 @@ impl Coordinator {
         // subscribers pay only the active_on check)
         let watched = self.shared.subs.active_on(name);
         let out = ds.append(&points)?;
+        self.shared.journal.record(
+            crate::obs::Severity::Info,
+            "mutation_append",
+            Some(name),
+            format!("{} points (ids {}..)", out.count, out.first_id),
+            Some(out.mut_seq),
+        );
         if watched {
             let coords = points.xs.iter().zip(&points.ys).map(|(&x, &y)| (x, y)).collect();
             self.shared.subs.notify(crate::subscribe::SubEvent::Mutated {
                 dataset: name.to_string(),
                 coords,
                 seq: out.mut_seq,
+                at: std::time::Instant::now(),
             });
         }
         LiveDataset::maybe_spawn_compaction(&ds);
@@ -473,27 +535,30 @@ impl Coordinator {
                 dataset: name.to_string(),
                 coords,
                 seq: out.mut_seq,
+                at: std::time::Instant::now(),
             });
             out
         } else {
             ds.remove(ids)?
         };
+        self.shared.journal.record(
+            crate::obs::Severity::Info,
+            "mutation_remove",
+            Some(name),
+            format!("{} points tombstoned", out.removed),
+            Some(out.mut_seq),
+        );
         LiveDataset::maybe_spawn_compaction(&ds);
         Ok(out)
     }
 
     /// Synchronously compact a live dataset (fold overlay, bump epoch,
-    /// truncate WAL).
+    /// truncate WAL).  The subscription identity refresh and journal
+    /// events ride the dataset's compaction observer ([`attach_observer`])
+    /// — the same path background compactions take, so sync and
+    /// background compactions are indistinguishable downstream.
     pub fn compact_dataset(&self, name: &str) -> Result<CompactionReport> {
-        let report = self.shared.registry.get(name)?.compact_now()?;
-        // compaction is value-identical: subscriptions get a zero-tile
-        // identity refresh carrying the new epoch
-        if self.shared.subs.active_on(name) {
-            self.shared
-                .subs
-                .notify(crate::subscribe::SubEvent::Compacted { dataset: name.to_string() });
-        }
-        Ok(report)
+        self.shared.registry.get(name)?.compact_now()
     }
 
     /// Live mutation/compaction statistics for one dataset.
@@ -583,6 +648,11 @@ impl Coordinator {
         let cancel = Arc::new(AtomicBool::new(false));
         self.shared.subs.register(id, &request.dataset, cancel.clone());
         self.shared.metrics.subs_active.fetch_add(1, Ordering::Relaxed);
+        self.shared.journal.info(
+            "sub_register",
+            Some(&request.dataset),
+            format!("feed {id}: {rows} rows, {} tiles", plan.n_tiles()),
+        );
         let sub = NewSub {
             id,
             dataset: request.dataset.clone(),
@@ -654,6 +724,7 @@ impl Coordinator {
             respond: StreamHandle { tx, buffered: buffered.clone(), bounded },
             cancel: cancel.clone(),
             enqueued: std::time::Instant::now(),
+            admitted: None,
         };
         match self.shared.queue.push(job) {
             Ok(()) => {
@@ -710,6 +781,24 @@ impl Coordinator {
         self.shared.metrics.snapshot_with(self.shared.cache.stats())
     }
 
+    /// Prometheus-style text exposition of the metrics snapshot —
+    /// protocol v2.6 `metrics_text` op and `aidw serve --metrics-text`.
+    pub fn metrics_text(&self) -> String {
+        metrics::prometheus_text(&self.metrics())
+    }
+
+    /// The structured event journal (advanced callers / tests; the
+    /// `events` op is the usual consumer).
+    pub fn journal(&self) -> Arc<crate::obs::Journal> {
+        self.shared.journal.clone()
+    }
+
+    /// Journal page: events with `seq >= since`, oldest first, at most
+    /// `max` (0 = no cap) — the protocol v2.6 `events` op.
+    pub fn events(&self, since: u64, max: usize) -> crate::obs::EventsPage {
+        self.shared.journal.events_since(since, max)
+    }
+
     /// Current queue depth (diagnostics / backpressure observers).
     pub fn queue_depth(&self) -> usize {
         self.shared.queue.depth()
@@ -741,6 +830,51 @@ impl Coordinator {
 impl Drop for Coordinator {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+/// Wire a live dataset's compaction lifecycle into the coordinator's
+/// observability plane.  The dataset's own threads — the background
+/// compactor included — journal compaction start/finish/fail through the
+/// attached journal, and every *published* compaction invokes the hook,
+/// which notifies the subscription worker so standing feeds refresh
+/// their serving `(epoch, overlay)` identity without waiting for the
+/// next mutation (ROADMAP PR-6 follow-up (b)).  Synchronous
+/// `compact_dataset` calls ride the same path, so sync and background
+/// compactions are indistinguishable downstream.
+fn attach_observer(shared: &Arc<Shared>, ds: &LiveDataset) {
+    // Weak: the hook lives inside the dataset, which the Shared registry
+    // owns — a strong Arc here would cycle and leak the coordinator.
+    let weak = Arc::downgrade(shared);
+    ds.attach_observer(shared.journal.clone(), move |name, _report| {
+        if let Some(sh) = weak.upgrade() {
+            if sh.subs.active_on(name) {
+                sh.subs.notify(crate::subscribe::SubEvent::Compacted {
+                    dataset: name.to_string(),
+                });
+            }
+        }
+    });
+}
+
+/// Insert a freshly built stage-1 artifact into the neighbor cache and
+/// journal the insert — plus any evictions the insert forced — so cache
+/// churn is reconstructable from the event log.  Runs once per batch
+/// miss, never on the per-query hot path.
+fn journal_cache_insert(
+    shared: &Shared,
+    dataset: &str,
+    key: CacheKey,
+    queries: &[(f64, f64)],
+    art: Arc<NeighborArtifact>,
+) {
+    let detail = format!("rows={} stage1_s={:.6}", queries.len(), art.stage1_s);
+    let evicted = shared.cache.put(key, queries, art);
+    shared.journal.info("cache_insert", Some(dataset), detail);
+    if evicted > 0 {
+        shared
+            .journal
+            .info("cache_evict", Some(dataset), format!("evicted={evicted}"));
     }
 }
 
@@ -812,13 +946,14 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
             Some(k) => shared.cache.lookup(k, &queries),
             None => cache::CacheOutcome::Miss,
         };
-        let (artifact, cache_hit) = match outcome {
+        let (artifact, cache_hit, stage1_info) = match outcome {
             cache::CacheOutcome::Hit(art) => {
                 shared.metrics.stage1_cache_hits.fetch_add(1, Ordering::Relaxed);
                 // the saved-seconds counter: this hit skipped a sweep that
                 // cost the entry's recorded build time (ROADMAP PR-4(b))
                 shared.metrics.add_stage1_saved(art.stage1_s);
-                (art, true)
+                let saved_s = art.stage1_s;
+                (art, true, Stage1Info::CacheHit { saved_s })
             }
             cache::CacheOutcome::Subset { artifact: mut sub, saved_s } => {
                 // a covering artifact served this raster's rows: no kNN
@@ -832,9 +967,9 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
                 sub.stage1_s = saved_s;
                 let art = Arc::new(sub);
                 if let Some(key) = cache_key {
-                    shared.cache.put(key, &queries, art.clone());
+                    journal_cache_insert(&shared, &batch.dataset, key, &queries, art.clone());
                 }
-                (art, true)
+                (art, true, Stage1Info::SubsetHit { saved_s })
             }
             cache::CacheOutcome::Miss => {
                 // tile-granular partial cover (ROADMAP PR-4(a)): when the
@@ -845,16 +980,21 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
                     stage1_partial_cover(&shared, key, &stage1, search, &snap, &queries, opts.tile_rows)
                 });
                 match partial {
-                    Some((art, all_covered)) => {
+                    Some((art, all_covered, gathered_saved_s)) => {
                         let art = Arc::new(art);
                         if let Some(key) = cache_key {
-                            shared.cache.put(key, &queries, art.clone());
+                            journal_cache_insert(&shared, &batch.dataset, key, &queries, art.clone());
                         }
                         // `cache_hit` reports whether the request paid for
                         // stage 1: true only when *every* tile gathered
                         // (rows spanning several cached rasters) — a
                         // partially-swept batch did pay (reduced) time
-                        (art, all_covered)
+                        let info = if all_covered {
+                            Stage1Info::SubsetHit { saved_s: gathered_saved_s }
+                        } else {
+                            Stage1Info::Swept
+                        };
+                        (art, all_covered, info)
                     }
                     None => {
                         let art = Arc::new(match search {
@@ -867,15 +1007,22 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
                         });
                         shared.metrics.stage1_execs.fetch_add(1, Ordering::Relaxed);
                         if let Some(key) = cache_key {
-                            shared.cache.put(key, &queries, art.clone());
+                            journal_cache_insert(&shared, &batch.dataset, key, &queries, art.clone());
                         }
-                        (art, false)
+                        (art, false, Stage1Info::Swept)
                     }
                 }
             }
         };
 
-        let job = Stage2Job { batch, queries, artifact, snap, cache_hit };
+        let job = Stage2Job {
+            batch,
+            queries,
+            artifact,
+            snap,
+            cache_hit,
+            stage1: stage1_info,
+        };
         if tx.send(job).is_err() {
             break; // stage 2 is gone
         }
@@ -896,7 +1043,8 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
 /// caller then sweeps the whole raster as before.  On `Some`, the bool
 /// is true when **every** tile was gathered (no sweep ran at all — the
 /// caller reports it as a cache hit); the returned artifact's `stage1_s`
-/// is the wall time actually spent sweeping.
+/// is the wall time actually spent sweeping, and the final `f64` is the
+/// stage-1 cost credited from gathered tiles (for trace saved-s).
 fn stage1_partial_cover(
     shared: &Shared,
     key: &CacheKey,
@@ -905,7 +1053,7 @@ fn stage1_partial_cover(
     snap: &LiveSnapshot,
     queries: &[(f64, f64)],
     tile_rows: Option<usize>,
-) -> Option<(NeighborArtifact, bool)> {
+) -> Option<(NeighborArtifact, bool, f64)> {
     let tr = tile_rows?;
     let plan = TilePlan::new(queries.len(), Some(tr));
     if plan.n_tiles() <= 1 {
@@ -982,6 +1130,7 @@ fn stage1_partial_cover(
     Some((
         NeighborArtifact::new(r_obs, stage1.r_exp, stage1.params.clone(), neighbors, sweep_s),
         swept_tiles == 0,
+        saved_s,
     ))
 }
 
@@ -1002,7 +1151,11 @@ fn stage2_loop(
         Backend::Pjrt => match Engine::new(&artifact_dir) {
             Ok(e) => Some(e),
             Err(err) => {
-                eprintln!("aidw: engine init failed ({err}); using CPU fallback");
+                shared.journal.error(
+                    "engine_fallback",
+                    None,
+                    format!("engine init failed ({err}); using CPU fallback"),
+                );
                 None
             }
         },
@@ -1070,7 +1223,8 @@ fn run_stage2_streamed(shared: &Shared, engine: &Option<Engine>, sj: &Stage2Job)
     let needs_alphas = !sj.snap.is_compacted() || engine.is_none();
     let t_alpha = std::time::Instant::now();
     let alphas: &[f64] = if needs_alphas { art.alphas() } else { &[] };
-    let mut alpha_extra_s = if needs_alphas { t_alpha.elapsed().as_secs_f64() } else { 0.0 };
+    let alpha_init_s = if needs_alphas { t_alpha.elapsed().as_secs_f64() } else { 0.0 };
+    let mut alpha_extra_s = alpha_init_s;
 
     // a cache-hit batch spent no stage-1 time of its own
     let stage1_s = if sj.cache_hit { 0.0 } else { art.stage1_s };
@@ -1100,6 +1254,43 @@ fn run_stage2_streamed(shared: &Shared, engine: &Option<Engine>, sj: &Stage2Job)
         let key = job.resolved.stage2_key();
         let plan = TilePlan::new(len, job.resolved.tile_rows);
         let echoed = echo_options(&job.resolved, &sj.snap);
+        // Per-request trace (protocol v2.6): opt-in per job.  With
+        // tracing off this is `None` and the loop below touches only the
+        // pre-existing atomics — no allocation, no locks, no extra
+        // timestamps on the hot path.
+        let mut trace = if job.resolved.trace {
+            let fp = crate::obs::fnv1a_64(format!("{:?}", job.resolved.stage1_key()).as_bytes());
+            let mut t =
+                crate::obs::Trace::new(&sj.batch.dataset, echoed.epoch, echoed.overlay, fp);
+            // admission wait: enqueue -> taken into a forming batch;
+            // coalesce wait: taken -> batch sealed.  A job missing its
+            // admission stamp (shouldn't happen) charges the whole wait
+            // to admission.
+            let admitted = job.admitted.unwrap_or(sj.batch.formed);
+            t.push(
+                crate::obs::SpanKind::AdmissionWait,
+                admitted.duration_since(job.enqueued).as_secs_f64(),
+            );
+            t.push(
+                crate::obs::SpanKind::CoalesceWait,
+                sj.batch.formed.duration_since(admitted).as_secs_f64(),
+            );
+            match sj.stage1 {
+                Stage1Info::Swept => {
+                    t.push(crate::obs::SpanKind::Stage1Knn, stage1_s + alpha_init_s)
+                }
+                Stage1Info::CacheHit { saved_s } => {
+                    t.push_saved(crate::obs::SpanKind::Stage1CacheHit, saved_s)
+                }
+                Stage1Info::SubsetHit { saved_s } => {
+                    t.push_saved(crate::obs::SpanKind::Stage1SubsetHit, saved_s)
+                }
+            }
+            Some(t)
+        } else {
+            None
+        };
+        let mut buffer_wait_s = 0.0f64;
         let mut delivered = true;
         for (tile_index, range) in plan.iter().enumerate() {
             if job.cancelled() {
@@ -1119,6 +1310,9 @@ fn run_stage2_streamed(shared: &Shared, engine: &Option<Engine>, sj: &Stage2Job)
                 Ok((values, a_s, i_s)) => {
                     alpha_extra_s += a_s;
                     interp_s += i_s;
+                    if let Some(t) = trace.as_mut() {
+                        t.push_tile(tile_index, a_s + i_s);
+                    }
                     let n_vals = values.len();
                     // gauge before send: "buffered" includes the frame the
                     // (possibly blocked) send is carrying, so the recorded
@@ -1138,7 +1332,17 @@ fn run_stage2_streamed(shared: &Shared, engine: &Option<Engine>, sj: &Stage2Job)
                     });
                     let alive =
                         || !job.cancelled() && shared.running.load(Ordering::Relaxed);
-                    if job.respond.tx.send_while(frame, alive) {
+                    // stream-buffer wait is only timed when traced: the
+                    // extra Instant pair stays off the untraced path
+                    let sent = if trace.is_some() {
+                        let t_send = std::time::Instant::now();
+                        let ok = job.respond.tx.send_while(frame, alive);
+                        buffer_wait_s += t_send.elapsed().as_secs_f64();
+                        ok
+                    } else {
+                        job.respond.tx.send_while(frame, alive)
+                    };
+                    if sent {
                         shared.metrics.stream_tiles.fetch_add(1, Ordering::Relaxed);
                     } else {
                         // consumer gone (dropped ticket/stream): undo the
@@ -1167,6 +1371,9 @@ fn run_stage2_streamed(shared: &Shared, engine: &Option<Engine>, sj: &Stage2Job)
                 .metrics
                 .latency
                 .record(job.enqueued.elapsed().as_secs_f64());
+            if let Some(t) = trace.as_mut() {
+                t.push(crate::obs::SpanKind::StreamBufferWait, buffer_wait_s);
+            }
             let _ = job.respond.tx.send_while(
                 StreamFrame::Done(StreamSummary {
                     rows: len,
@@ -1178,6 +1385,7 @@ fn run_stage2_streamed(shared: &Shared, engine: &Option<Engine>, sj: &Stage2Job)
                     options: echoed,
                     stage1_cache_hit: sj.cache_hit,
                     stage2_groups,
+                    trace: trace.take(),
                 }),
                 || !job.cancelled() && shared.running.load(Ordering::Relaxed),
             );

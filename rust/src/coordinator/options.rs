@@ -71,6 +71,11 @@ pub struct QueryOptions {
     /// order are bit-identical to the monolithic pass — so it is part of
     /// neither stage key.
     pub tile_rows: Option<usize>,
+    /// Request a per-stage span timeline on the response (protocol v2.6
+    /// `"trace":true`).  Pure observability: like `tile_rows` it changes
+    /// no numerics, so it is part of neither stage key — a traced and an
+    /// untraced request still coalesce and share cached artifacts.
+    pub trace: Option<bool>,
 }
 
 impl QueryOptions {
@@ -136,6 +141,12 @@ impl QueryOptions {
         self
     }
 
+    /// Request a per-stage span timeline on the response (protocol v2.6).
+    pub fn trace(mut self, on: bool) -> Self {
+        self.trace = Some(on);
+        self
+    }
+
     /// True when no field overrides the coordinator defaults.
     pub fn is_default(&self) -> bool {
         *self == QueryOptions::default()
@@ -159,6 +170,7 @@ impl QueryOptions {
             tile_rows: self.tile_rows.or(config.tile_rows),
             epoch: None,
             overlay: None,
+            trace: self.trace.unwrap_or(false),
         }
     }
 }
@@ -211,6 +223,12 @@ pub struct ResolvedOptions {
     /// version the batch was actually served from.  `None` for paths
     /// without live-mutation semantics (in-process sessions).
     pub overlay: Option<u64>,
+    /// Emit a per-stage span timeline on the response (protocol v2.6).
+    /// Observability only — no numerics — so like `tile_rows` it belongs
+    /// to **neither** stage key: traced and untraced requests coalesce
+    /// into one batch and share cached stage-1 artifacts.  The disabled
+    /// path tests this single bool and does nothing else.
+    pub trace: bool,
 }
 
 impl Default for ResolvedOptions {
@@ -228,6 +246,7 @@ impl Default for ResolvedOptions {
             tile_rows: None,
             epoch: None,
             overlay: None,
+            trace: false,
         }
     }
 }
@@ -410,6 +429,23 @@ mod tests {
         cfg2.tile_rows = Some(128);
         assert_eq!(QueryOptions::new().resolve(&cfg2).tile_rows, Some(128));
         assert_eq!(QueryOptions::new().tile_rows(8).resolve(&cfg2).tile_rows, Some(8));
+    }
+
+    #[test]
+    fn trace_is_in_neither_stage_key() {
+        // tracing is observability, not numerics: a traced and an
+        // untraced request must coalesce and share cached artifacts
+        let cfg = config();
+        let base = QueryOptions::new().resolve(&cfg);
+        assert!(!base.trace, "tracing is opt-in");
+        let traced = QueryOptions::new().trace(true).resolve(&cfg);
+        assert!(traced.trace);
+        assert_ne!(base, traced, "resolved sets differ");
+        assert_eq!(base.stage1_key(), traced.stage1_key());
+        assert_eq!(base.stage2_key(), traced.stage2_key());
+        assert!(traced.validate().is_ok());
+        // explicit false == absent
+        assert_eq!(QueryOptions::new().trace(false).resolve(&cfg), base);
     }
 
     #[test]

@@ -107,6 +107,9 @@ pub struct InterpolationResponse {
     /// means this request's kNN sweep was coalesced with jobs carrying a
     /// different stage-2 variant (protocol v2.2).
     pub stage2_groups: usize,
+    /// Per-stage span timeline (protocol v2.6), present exactly when the
+    /// request opted in via `QueryOptions::trace`.
+    pub trace: Option<crate::obs::Trace>,
 }
 
 /// Stage-2 execution backend.
@@ -156,6 +159,9 @@ pub struct StreamSummary {
     pub options: ResolvedOptions,
     pub stage1_cache_hit: bool,
     pub stage2_groups: usize,
+    /// Per-stage span timeline (protocol v2.6), present exactly when the
+    /// request opted in via `QueryOptions::trace`.
+    pub trace: Option<crate::obs::Trace>,
 }
 
 /// A frame on the executor -> consumer channel.
@@ -245,6 +251,11 @@ pub(crate) struct Job {
     /// formation, so abandoned work is never executed.
     pub cancel: Arc<AtomicBool>,
     pub enqueued: std::time::Instant,
+    /// When the dispatcher admitted this job into a batch (popped or
+    /// linger-taken) — the end of the admission-wait span and the start
+    /// of the coalesce-wait span.  `None` until batch formation; only
+    /// consulted when `resolved.trace` is set.
+    pub admitted: Option<std::time::Instant>,
 }
 
 impl Job {
@@ -391,6 +402,7 @@ impl TileStream {
             options: summary.options,
             stage1_cache_hit: summary.stage1_cache_hit,
             stage2_groups: summary.stage2_groups,
+            trace: summary.trace,
         })
     }
 }
@@ -470,6 +482,7 @@ mod tests {
             options: ResolvedOptions::default(),
             stage1_cache_hit: false,
             stage2_groups: 1,
+            trace: None,
         }
     }
 

@@ -58,6 +58,7 @@ pub mod grid;
 pub mod jsonio;
 pub mod knn;
 pub mod live;
+pub mod obs;
 pub mod pool;
 pub mod primitives;
 pub mod proptest;

@@ -281,6 +281,22 @@ pub struct CompactionReport {
     pub noop: bool,
 }
 
+/// Observability sinks a coordinator attaches after construction (and
+/// before registry insert): the structured event journal plus a hook
+/// fired after every non-noop compaction publish — background *and*
+/// synchronous runs, so downstream consumers (subscription feeds) see
+/// one notification per epoch change regardless of who triggered it.
+struct LiveObserver {
+    journal: Arc<crate::obs::Journal>,
+    on_compacted: Box<dyn Fn(&str, &CompactionReport) + Send + Sync>,
+}
+
+impl std::fmt::Debug for LiveObserver {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LiveObserver").finish_non_exhaustive()
+    }
+}
+
 /// A registered dataset that accepts appends/removals without blocking
 /// readers.  See the module docs.
 #[derive(Debug)]
@@ -304,6 +320,9 @@ pub struct LiveDataset {
     compact_gate: Mutex<()>,
     compact_handle: Mutex<Option<JoinHandle<()>>>,
     compactions: AtomicU64,
+    /// Event journal + compaction hook (None until a coordinator calls
+    /// [`LiveDataset::attach_observer`]; standalone datasets run silent).
+    observer: RwLock<Option<LiveObserver>>,
 }
 
 impl LiveDataset {
@@ -452,7 +471,26 @@ impl LiveDataset {
             compact_gate: Mutex::new(()),
             compact_handle: Mutex::new(None),
             compactions: AtomicU64::new(0),
+            observer: RwLock::new(None),
         })
+    }
+
+    /// Attach the structured event journal and a compaction-completion
+    /// hook.  Called once by the owning coordinator before the dataset
+    /// becomes reachable; later mutations/compactions journal through it.
+    pub fn attach_observer(
+        &self,
+        journal: Arc<crate::obs::Journal>,
+        on_compacted: impl Fn(&str, &CompactionReport) + Send + Sync + 'static,
+    ) {
+        *self.observer.write().unwrap() =
+            Some(LiveObserver { journal, on_compacted: Box::new(on_compacted) });
+    }
+
+    /// The attached journal, if any (background threads clone it out so
+    /// they never hold the observer lock across IO).
+    fn journal(&self) -> Option<Arc<crate::obs::Journal>> {
+        self.observer.read().unwrap().as_ref().map(|o| o.journal.clone())
     }
 
     pub fn name(&self) -> &str {
@@ -532,7 +570,18 @@ impl LiveDataset {
         // one record with first_id covers the whole batch)
         if log {
             if let Some(w) = self.wal.lock().unwrap().as_mut() {
+                let seg_before = w.segment_index();
                 w.append(&WalRecord::Append { first_id, points: pts.clone() })?;
+                let seg = w.segment_index();
+                if seg != seg_before {
+                    if let Some(j) = self.journal() {
+                        j.info(
+                            "wal_rotate",
+                            Some(&self.name),
+                            format!("segment {seg_before} -> {seg}"),
+                        );
+                    }
+                }
             }
         }
         self.next_id.fetch_max(ids[ids.len() - 1] + 1, Ordering::SeqCst);
@@ -634,7 +683,18 @@ impl LiveDataset {
         if log {
             let logged: Vec<u64> = removals.iter().map(|&(id, _)| id).collect();
             if let Some(w) = self.wal.lock().unwrap().as_mut() {
+                let seg_before = w.segment_index();
                 w.append(&WalRecord::Remove { ids: logged })?;
+                let seg = w.segment_index();
+                if seg != seg_before {
+                    if let Some(j) = self.journal() {
+                        j.info(
+                            "wal_rotate",
+                            Some(&self.name),
+                            format!("segment {seg_before} -> {seg}"),
+                        );
+                    }
+                }
             }
         }
         let delta = Arc::new(cur.delta.with_removals(&removals));
@@ -734,6 +794,19 @@ impl LiveDataset {
                 retired_refs: 0,
                 noop: true,
             });
+        }
+        if let Some(j) = self.journal() {
+            j.info(
+                "compaction_start",
+                Some(&self.name),
+                format!(
+                    "epoch {} pressure {:.3} ({} appends, {} tombstones)",
+                    snap.epoch,
+                    snap.delta.pressure(),
+                    snap.delta.points.len(),
+                    snap.delta.tombstones.len()
+                ),
+            );
         }
         // 1. rebuild off-lock from the captured snapshot
         let (merged, merged_ids) = snap.live_points();
@@ -886,6 +959,25 @@ impl LiveDataset {
         });
         drop(state);
         self.compactions.fetch_add(1, Ordering::SeqCst);
+        // journal + completion hook after publish: observers see the new
+        // epoch the moment they react.  Fires for sync and background
+        // runs alike — this is the single compaction-completion signal.
+        if let Some(obs) = self.observer.read().unwrap().as_ref() {
+            obs.journal.info(
+                "compaction_finish",
+                Some(&self.name),
+                format!(
+                    "epoch {} -> {} (folded {}+{}, carried {}+{})",
+                    report.old_epoch,
+                    report.new_epoch,
+                    report.folded_appends,
+                    report.folded_tombstones,
+                    report.carried_appends,
+                    report.carried_tombstones
+                ),
+            );
+            (obs.on_compacted)(&self.name, &report);
+        }
         Ok(report)
     }
 
@@ -911,7 +1003,21 @@ impl LiveDataset {
             .name("aidw-compact".into())
             .spawn(move || {
                 if let Err(e) = me.compact_now() {
-                    eprintln!("aidw: background compaction of '{}' failed: {e}", me.name);
+                    // swallowed before PR 7: a failed background fold now
+                    // leaves an Error event queryable via the `events` op
+                    match me.journal() {
+                        Some(j) => {
+                            j.error(
+                                "compaction_fail",
+                                Some(&me.name),
+                                format!("background compaction failed: {e}"),
+                            );
+                        }
+                        None => eprintln!(
+                            "aidw: background compaction of '{}' failed: {e}",
+                            me.name
+                        ),
+                    }
                 }
                 me.compacting.store(false, Ordering::SeqCst);
             }) {

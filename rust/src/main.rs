@@ -1,13 +1,16 @@
 //! `aidw` — CLI for the AIDW interpolation service.
 //!
 //! Subcommands:
-//!   serve        start the TCP JSON service (protocol v2.5)
+//!   serve        start the TCP JSON service (protocol v2.6)
 //!   interpolate  one-shot interpolation over a generated/loaded workload
 //!   query        interpolate against a running service over TCP
-//!                (--stream consumes the v2.4 tiled streaming response)
+//!                (--stream consumes the v2.4 tiled streaming response;
+//!                --trace prints the server's v2.6 span timeline)
 //!   subscribe    hold a standing raster against a running service and
 //!                print incremental dirty-tile updates (protocol v2.5)
 //!   mutate       append/remove/compact/stat against a running service
+//!   events       page a running service's structured event journal
+//!                (protocol v2.6)
 //!   bench        run the perf suite, emit BENCH_aidw.json
 //!   info         artifact + engine diagnostics
 //!   generate     write a synthetic workload to CSV
@@ -41,6 +44,7 @@ USAGE:
                    [--ring exact|paper+1] [--local N] [--snapshots DIR]
                    [--live-dir DIR] [--compact-threshold N] [--wal-sync]
                    [--neighbor-cache N] [--tile-rows N] [--stream-buffer N]
+                   [--journal N] [--metrics-text]
   aidw interpolate [--engine serving|pipeline|serial] [--cpu-only]
                    [--data N] [--queries N] [--side 100] [--seed 42]
                    [--variant naive|tiled] [--k 10] [--ring exact|paper+1]
@@ -49,7 +53,8 @@ USAGE:
                    [--dist uniform|clustered|terrain] [--file pts.csv]
                    [--out out.csv] [--tile-rows N]
   aidw query       --addr HOST:PORT --dataset NAME [--queries N] [--side 100]
-                   [--seed 42] [--stream] [--tile-rows N] [--out out.csv]
+                   [--seed 42] [--stream] [--trace] [--tile-rows N]
+                   [--out out.csv]
                    [--variant naive|tiled] [--k 10] [--ring exact|paper+1]
                    [--local N] [--alpha-levels 0.5,1,2,3,4]
                    [--rmin 0] [--rmax 2] [--area A]
@@ -60,6 +65,7 @@ USAGE:
   aidw mutate      --addr HOST:PORT --dataset NAME --action append|remove|compact|stat
                    [--file pts.csv | --n N --side 100 --seed 42 --dist uniform]
                    [--ids 3,17,9000]
+  aidw events      --addr HOST:PORT [--since N] [--max 100]
   aidw bench       [--sizes 1024,4096,16384] [--seed 42] [--threads N]
                    [--serial-cap 2048] [--no-serial] [--out BENCH_aidw.json]
   aidw generate    [--n N] [--side 100] [--seed 42]
@@ -81,6 +87,16 @@ applied to a client-side raster kept bit-identical to a from-scratch
 query; `--updates N` unsubscribes after N incremental updates.  `aidw
 bench` writes the sizes x variants x stage-times JSON the repo tracks
 as its perf trajectory.
+
+Observability (protocol v2.6): `aidw query --trace` asks the server for
+a per-request span timeline (admission wait, coalesce wait, stage-1 kNN
+or cache credit, per-tile stage 2, stream-buffer wait, serialization)
+stamped with the serving snapshot, and prints it after the reply.
+`aidw events` pages the server's bounded event journal (mutations,
+compactions, cache and subscription activity); poll with `--since
+NEXT_SEQ` to tail it.  `serve --journal N` sizes the journal ring
+buffer; `serve --metrics-text` prints a Prometheus-style metrics
+rendering every 60s (the same text the v2.6 `metrics_text` op returns).
 ";
 
 fn main() {
@@ -95,13 +111,17 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["cpu-only", "verbose", "wal-sync", "no-serial", "stream"])?;
+    let args = Args::parse(
+        argv,
+        &["cpu-only", "verbose", "wal-sync", "no-serial", "stream", "trace", "metrics-text"],
+    )?;
     match args.subcommand.as_str() {
         "serve" => serve(&args),
         "interpolate" => interpolate(&args),
         "query" => query(&args),
         "subscribe" => subscribe(&args),
         "mutate" => mutate(&args),
+        "events" => events(&args),
         "bench" => bench(&args),
         "generate" => generate(&args),
         "info" => info(),
@@ -151,6 +171,8 @@ fn config_from(args: &Args) -> Result<CoordinatorConfig> {
     if args.has("wal-sync") {
         cfg.live.wal_sync = true;
     }
+    // observability: event-journal ring-buffer capacity
+    cfg.journal_capacity = args.get_usize("journal", cfg.journal_capacity)?;
     Ok(cfg)
 }
 
@@ -194,6 +216,9 @@ fn options_from(args: &Args) -> Result<QueryOptions> {
     }
     if let Some(t) = tile_rows_flag(args)? {
         o = o.tile_rows(t);
+    }
+    if args.has("trace") {
+        o = o.trace(true);
     }
     Ok(o)
 }
@@ -243,15 +268,22 @@ fn serve(args: &Args) -> Result<()> {
         Some(c) => Arc::new(c),
         None => unreachable!("serving session always has a coordinator"),
     };
-    let server = Server::start(coord, &addr)?;
+    let server = Server::start(coord.clone(), &addr)?;
     println!("listening on {}", server.addr());
     println!(
         "protocol v{}: newline-delimited JSON; see rust/src/service/protocol.rs",
         aidw::service::protocol::PROTOCOL_VERSION
     );
-    // serve until killed
+    // serve until killed; --metrics-text prints the Prometheus-style
+    // exposition (the same text the `metrics_text` op returns) every 60s
+    let metrics_text = args.has("metrics-text");
     loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+        if metrics_text {
+            std::thread::sleep(std::time::Duration::from_secs(60));
+            print!("{}", coord.metrics_text());
+        } else {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
     }
 }
 
@@ -535,6 +567,9 @@ fn query(args: &Args) -> Result<()> {
             reply.interp_s,
             reply.cache_hit
         );
+        if let Some(t) = &reply.trace {
+            print_trace(t);
+        }
         if let Some(out) = args.get("out") {
             write_csv(out, &queries, &reply.values)?;
             println!("wrote {out}");
@@ -585,7 +620,7 @@ fn query(args: &Args) -> Result<()> {
     }
     let done = stream
         .done()
-        .copied()
+        .cloned()
         .ok_or_else(|| Error::Service("stream ended without a done frame".into()))?;
     println!(
         "done in {:.3}s: {} rows (stage1 {:.3}s, stage2 {:.3}s, cache_hit {})",
@@ -595,9 +630,67 @@ fn query(args: &Args) -> Result<()> {
         done.interp_s,
         done.cache_hit
     );
+    if let Some(t) = &done.trace {
+        print_trace(t);
+    }
     if let Some(out) = args.get("out") {
         println!("wrote {out} (incrementally, one tile at a time)");
     }
+    Ok(())
+}
+
+/// Print a v2.6 span timeline (the `--trace` output).
+fn print_trace(t: &aidw::obs::Trace) {
+    println!(
+        "trace: dataset={} epoch={} overlay={} stage1_fp={:016x}",
+        t.dataset,
+        t.epoch.map_or_else(|| "-".to_string(), |e| e.to_string()),
+        t.overlay.map_or_else(|| "-".to_string(), |v| v.to_string()),
+        t.stage1_fp
+    );
+    for s in &t.spans {
+        let note = match (s.tile, s.saved_s) {
+            (Some(tile), _) => format!("  (tile {tile})"),
+            (None, Some(saved)) => format!("  (saved {saved:.6}s)"),
+            (None, None) => String::new(),
+        };
+        println!("  {:<18} {:>12.6}s{note}", s.kind.tag(), s.seconds);
+    }
+    println!("  {:<18} {:>12.6}s", "total", t.total_s());
+}
+
+/// Page a running service's structured event journal (protocol v2.6).
+fn events(args: &Args) -> Result<()> {
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| Error::InvalidArgument("--addr is required".into()))?;
+    let since = args.get_usize("since", 0)? as u64;
+    let max = args.get_usize("max", 100)?;
+    let mut client = aidw::service::Client::connect(addr)?;
+    let page = client.events(since, max)?;
+    if page.dropped > 0 {
+        println!(
+            "(journal ring buffer has overwritten {} event(s) since startup)",
+            page.dropped
+        );
+    }
+    for e in &page.events {
+        println!(
+            "{:>6}  {:>13}  {:<5}  {:<18}  {:<12}  {}{}",
+            e.seq,
+            e.unix_ms,
+            e.severity,
+            e.kind,
+            e.dataset.as_deref().unwrap_or("-"),
+            e.detail,
+            e.mut_seq.map_or_else(String::new, |s| format!("  [mut_seq {s}]")),
+        );
+    }
+    println!(
+        "{} event(s); poll again with --since {} to tail",
+        page.events.len(),
+        page.next_seq
+    );
     Ok(())
 }
 

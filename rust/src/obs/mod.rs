@@ -1,0 +1,443 @@
+//! Observability: per-request trace spans and the structured event
+//! journal (protocol v2.6).
+//!
+//! The paper's entire argument is a stage-level cost breakdown — kNN
+//! search vs weighted interpolating — yet until this module the server
+//! could only report process-wide counter totals.  Two primitives fix
+//! that:
+//!
+//! * [`Trace`] — an opt-in per-request span timeline.  When a request
+//!   sets `QueryOptions::trace`, every execution stage it passes through
+//!   appends a [`Span`]: admission wait (enqueue → batch pop),
+//!   batch-coalesce wait (pop → batch formed), stage-1 kNN (or a
+//!   cache/subset hit with the stage-1 seconds it *saved*), each stage-2
+//!   tile, stream-buffer wait, and response serialization.  The trace is
+//!   stamped with the serving identity — dataset, `(epoch, overlay)`,
+//!   and a stage-1-key fingerprint — so a slow request can be pinned to
+//!   the exact snapshot and plan that served it.  **The disabled path
+//!   costs one branch on a `bool` inside `ResolvedOptions`: no
+//!   allocation, no lock, no atomics** — tracing-off overhead is
+//!   unmeasurable, which is what lets the flag ride on every request
+//!   struct unconditionally.
+//!
+//! * [`Journal`] — a bounded ring buffer of structured [`Event`]s with a
+//!   **monotonic sequence number** assigned under the ring lock.  Every
+//!   state transition the server used to report via `eprintln!` (or not
+//!   at all) lands here: mutations (with `mut_seq`), compaction
+//!   start/finish/**fail**, cache insert/evict/purge, subscription
+//!   register/push/terminate, WAL segment rotation, engine-init
+//!   fallback.  The ring drops the oldest events under pressure and
+//!   counts what it dropped; because sequences are dense, a reader that
+//!   polls `events` can *prove* loss (gap in `seq`) instead of silently
+//!   missing diagnostics — the property `journal_sequences_are_dense`
+//!   pins.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+// ---- trace spans ---------------------------------------------------------
+
+/// What one [`Span`] measured.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Enqueue → the dispatcher popped the job off the queue.
+    AdmissionWait,
+    /// Queue pop → batch formation finished (linger spent coalescing
+    /// compatible jobs; the price of sharing one kNN sweep).
+    CoalesceWait,
+    /// The stage-1 kNN + alpha sweep actually ran (cache miss).
+    Stage1Knn,
+    /// Stage 1 skipped: exact neighbor-cache hit.  `saved_s` carries the
+    /// build time the hit substituted for.
+    Stage1CacheHit,
+    /// Stage 1 skipped: subset row-gather out of a covering cached
+    /// artifact.  `saved_s` carries the scaled build-time credit.
+    Stage1SubsetHit,
+    /// One stage-2 weighting tile (`tile` = tile index).
+    Stage2Tile,
+    /// Blocked handing a finished tile to a full bounded stream buffer.
+    StreamBufferWait,
+    /// Serializing the response (values → JSON bytes).
+    Serialize,
+}
+
+impl SpanKind {
+    /// Wire tag (protocol v2.6 `trace.spans[].kind`).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            SpanKind::AdmissionWait => "admission_wait",
+            SpanKind::CoalesceWait => "coalesce_wait",
+            SpanKind::Stage1Knn => "stage1_knn",
+            SpanKind::Stage1CacheHit => "stage1_cache_hit",
+            SpanKind::Stage1SubsetHit => "stage1_subset_hit",
+            SpanKind::Stage2Tile => "stage2_tile",
+            SpanKind::StreamBufferWait => "stream_buffer_wait",
+            SpanKind::Serialize => "serialize",
+        }
+    }
+
+    /// Parse a wire tag back (client side).
+    pub fn from_tag(tag: &str) -> Option<SpanKind> {
+        Some(match tag {
+            "admission_wait" => SpanKind::AdmissionWait,
+            "coalesce_wait" => SpanKind::CoalesceWait,
+            "stage1_knn" => SpanKind::Stage1Knn,
+            "stage1_cache_hit" => SpanKind::Stage1CacheHit,
+            "stage1_subset_hit" => SpanKind::Stage1SubsetHit,
+            "stage2_tile" => SpanKind::Stage2Tile,
+            "stream_buffer_wait" => SpanKind::StreamBufferWait,
+            "serialize" => SpanKind::Serialize,
+            _ => return None,
+        })
+    }
+}
+
+/// One measured stage of a traced request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// Wall seconds this stage took (0 for skipped stages — the credit
+    /// is in `saved_s`).
+    pub seconds: f64,
+    /// Tile index for [`SpanKind::Stage2Tile`] spans.
+    pub tile: Option<usize>,
+    /// Stage-1 seconds a cache/subset hit substituted for.
+    pub saved_s: Option<f64>,
+}
+
+/// The span timeline of one traced request, stamped with the serving
+/// identity.  Built only when `QueryOptions::trace` is set; the hot path
+/// for untraced requests never constructs one.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    /// Dataset the request ran against.
+    pub dataset: String,
+    /// Epoch of the serving snapshot (None outside the live/serving path).
+    pub epoch: Option<u64>,
+    /// Overlay version of the serving snapshot.
+    pub overlay: Option<u64>,
+    /// FNV-1a fingerprint of the stage-1 admission key — two traces with
+    /// equal fingerprints shared (or could have shared) one kNN sweep.
+    pub stage1_fp: u64,
+    pub spans: Vec<Span>,
+}
+
+impl Trace {
+    /// A trace stamped with the serving identity, no spans yet.
+    pub fn new(dataset: &str, epoch: Option<u64>, overlay: Option<u64>, stage1_fp: u64) -> Trace {
+        Trace { dataset: dataset.to_string(), epoch, overlay, stage1_fp, spans: Vec::new() }
+    }
+
+    /// Append a plain span.
+    pub fn push(&mut self, kind: SpanKind, seconds: f64) {
+        self.spans.push(Span { kind, seconds, tile: None, saved_s: None });
+    }
+
+    /// Append a per-tile stage-2 span.
+    pub fn push_tile(&mut self, tile: usize, seconds: f64) {
+        self.spans
+            .push(Span { kind: SpanKind::Stage2Tile, seconds, tile: Some(tile), saved_s: None });
+    }
+
+    /// Append a skipped-stage-1 span carrying its saved-seconds credit.
+    pub fn push_saved(&mut self, kind: SpanKind, saved_s: f64) {
+        self.spans.push(Span { kind, seconds: 0.0, tile: None, saved_s: Some(saved_s) });
+    }
+
+    /// Sum of measured span seconds (excludes `saved_s` credits): by
+    /// construction ≤ the request's wall time, since every span measures
+    /// a disjoint slice of it.
+    pub fn total_s(&self) -> f64 {
+        self.spans.iter().map(|s| s.seconds).sum()
+    }
+
+    /// The spans of one kind.
+    pub fn spans_of(&self, kind: SpanKind) -> impl Iterator<Item = &Span> {
+        self.spans.iter().filter(move |s| s.kind == kind)
+    }
+}
+
+/// 64-bit FNV-1a over arbitrary bytes — the stage-1-key fingerprint
+/// helper ([`Trace::stage1_fp`]).  Fingerprints are identity stamps, not
+/// security tokens; FNV's distribution is plenty for "did these two
+/// requests share an admission key".
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+// ---- event journal -------------------------------------------------------
+
+/// Event severity (protocol v2.6 `events` op).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+
+    pub fn from_tag(tag: &str) -> Option<Severity> {
+        Some(match tag {
+            "info" => Severity::Info,
+            "warn" => Severity::Warn,
+            "error" => Severity::Error,
+            _ => return None,
+        })
+    }
+}
+
+/// One structured journal entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    /// Dense monotonic sequence (0-based).  A gap between consecutive
+    /// events a reader receives proves the ring dropped entries in
+    /// between — loss is detectable, never silent.
+    pub seq: u64,
+    /// Wall-clock milliseconds since the Unix epoch at record time.
+    pub unix_ms: u64,
+    pub severity: Severity,
+    /// Machine-readable kind tag, e.g. `"compaction_fail"`,
+    /// `"cache_evict"`, `"sub_push"`.
+    pub kind: &'static str,
+    /// Dataset the event concerns, when there is one.
+    pub dataset: Option<String>,
+    /// Human-readable detail.
+    pub detail: String,
+    /// The dataset's mutation ledger position, for mutation events.
+    pub mut_seq: Option<u64>,
+}
+
+/// A page of journal events (the `events` op response shape).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EventsPage {
+    /// Events with `seq >= since`, oldest first, at most `max`.
+    pub events: Vec<Event>,
+    /// The sequence the *next* recorded event will get — poll with
+    /// `since = next_seq` to tail the journal.
+    pub next_seq: u64,
+    /// Total events the ring has dropped since startup.
+    pub dropped: u64,
+}
+
+#[derive(Debug, Default)]
+struct Ring {
+    events: VecDeque<Event>,
+    next_seq: u64,
+    dropped: u64,
+}
+
+/// Bounded ring-buffer event journal.  `record` is a short critical
+/// section (assign seq, push, trim); readers copy a page out.  Capacity
+/// 0 keeps sequencing/drop accounting but retains nothing.
+#[derive(Debug)]
+pub struct Journal {
+    inner: Mutex<Ring>,
+    capacity: usize,
+}
+
+impl Default for Journal {
+    fn default() -> Self {
+        Journal::new(1024)
+    }
+}
+
+impl Journal {
+    pub fn new(capacity: usize) -> Journal {
+        Journal { inner: Mutex::new(Ring::default()), capacity }
+    }
+
+    /// Record one event; returns its sequence number.
+    pub fn record(
+        &self,
+        severity: Severity,
+        kind: &'static str,
+        dataset: Option<&str>,
+        detail: String,
+        mut_seq: Option<u64>,
+    ) -> u64 {
+        let unix_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let mut st = self.inner.lock().unwrap();
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.events.push_back(Event {
+            seq,
+            unix_ms,
+            severity,
+            kind,
+            dataset: dataset.map(str::to_string),
+            detail,
+            mut_seq,
+        });
+        while st.events.len() > self.capacity {
+            st.events.pop_front();
+            st.dropped += 1;
+        }
+        seq
+    }
+
+    /// Convenience: an informational event.
+    pub fn info(&self, kind: &'static str, dataset: Option<&str>, detail: String) -> u64 {
+        self.record(Severity::Info, kind, dataset, detail, None)
+    }
+
+    /// Convenience: a warning.
+    pub fn warn(&self, kind: &'static str, dataset: Option<&str>, detail: String) -> u64 {
+        self.record(Severity::Warn, kind, dataset, detail, None)
+    }
+
+    /// Convenience: an error.
+    pub fn error(&self, kind: &'static str, dataset: Option<&str>, detail: String) -> u64 {
+        self.record(Severity::Error, kind, dataset, detail, None)
+    }
+
+    /// Copy out the events with `seq >= since`, oldest first, capped at
+    /// `max` (0 = no cap).
+    pub fn events_since(&self, since: u64, max: usize) -> EventsPage {
+        let st = self.inner.lock().unwrap();
+        let mut events: Vec<Event> =
+            st.events.iter().filter(|e| e.seq >= since).cloned().collect();
+        if max > 0 && events.len() > max {
+            events.truncate(max);
+        }
+        EventsPage { events, next_seq: st.next_seq, dropped: st.dropped }
+    }
+
+    /// Total events ever recorded (== the next sequence number).
+    pub fn recorded(&self) -> u64 {
+        self.inner.lock().unwrap().next_seq
+    }
+
+    /// Total events the ring has dropped since startup.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_accumulates_and_sums() {
+        let mut t = Trace::new("d", Some(2), Some(1), 0xfeed);
+        t.push(SpanKind::AdmissionWait, 0.001);
+        t.push_saved(SpanKind::Stage1CacheHit, 0.5);
+        t.push_tile(0, 0.002);
+        t.push_tile(1, 0.003);
+        t.push(SpanKind::Serialize, 0.0005);
+        assert_eq!(t.dataset, "d");
+        assert_eq!((t.epoch, t.overlay), (Some(2), Some(1)));
+        // saved_s credits are NOT wall time and must not inflate the sum
+        assert!((t.total_s() - 0.0065).abs() < 1e-12, "{}", t.total_s());
+        assert_eq!(t.spans_of(SpanKind::Stage2Tile).count(), 2);
+        let hit = t.spans_of(SpanKind::Stage1CacheHit).next().unwrap();
+        assert_eq!(hit.saved_s, Some(0.5));
+        assert_eq!(hit.seconds, 0.0);
+        let tiles: Vec<_> =
+            t.spans_of(SpanKind::Stage2Tile).map(|s| s.tile.unwrap()).collect();
+        assert_eq!(tiles, vec![0, 1]);
+    }
+
+    #[test]
+    fn span_kind_tags_roundtrip() {
+        for kind in [
+            SpanKind::AdmissionWait,
+            SpanKind::CoalesceWait,
+            SpanKind::Stage1Knn,
+            SpanKind::Stage1CacheHit,
+            SpanKind::Stage1SubsetHit,
+            SpanKind::Stage2Tile,
+            SpanKind::StreamBufferWait,
+            SpanKind::Serialize,
+        ] {
+            assert_eq!(SpanKind::from_tag(kind.tag()), Some(kind));
+        }
+        assert_eq!(SpanKind::from_tag("bogus"), None);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        assert_eq!(fnv1a_64(b"abc"), fnv1a_64(b"abc"));
+        assert_ne!(fnv1a_64(b"abc"), fnv1a_64(b"abd"));
+        assert_ne!(fnv1a_64(b""), fnv1a_64(b"\0"));
+    }
+
+    #[test]
+    fn journal_sequences_are_dense() {
+        // the loss-detection property: sequences are dense, so after the
+        // ring wraps, the reader sees (a) a first seq > its last-seen + 1
+        // and (b) a dropped count that accounts exactly for the gap
+        let j = Journal::new(4);
+        for i in 0..10u64 {
+            let seq = j.info("tick", None, format!("event {i}"));
+            assert_eq!(seq, i, "sequences assign densely");
+        }
+        let page = j.events_since(0, 0);
+        assert_eq!(page.next_seq, 10);
+        assert_eq!(page.dropped, 6, "ring of 4 dropped the first 6");
+        let seqs: Vec<u64> = page.events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "survivors are the dense tail");
+        // a reader that last saw seq 2 can prove it lost 3..=5
+        let resumed = j.events_since(3, 0);
+        assert_eq!(resumed.events.first().unwrap().seq, 6, "gap proves loss");
+    }
+
+    #[test]
+    fn journal_pages_and_tails() {
+        let j = Journal::new(64);
+        for i in 0..5u64 {
+            j.record(Severity::Warn, "w", Some("d"), format!("#{i}"), Some(i));
+        }
+        let page = j.events_since(2, 2);
+        assert_eq!(page.events.len(), 2, "max caps the page");
+        assert_eq!(page.events[0].seq, 2);
+        assert_eq!(page.events[0].mut_seq, Some(2));
+        assert_eq!(page.events[0].dataset.as_deref(), Some("d"));
+        assert_eq!(page.events[0].severity, Severity::Warn);
+        // tailing: poll from next_seq → empty until something new lands
+        let tail = j.events_since(page.next_seq, 0);
+        assert!(tail.events.is_empty());
+        j.error("boom", None, "late".into());
+        let tail = j.events_since(page.next_seq, 0);
+        assert_eq!(tail.events.len(), 1);
+        assert_eq!(tail.events[0].kind, "boom");
+        assert_eq!(tail.events[0].severity, Severity::Error);
+    }
+
+    #[test]
+    fn zero_capacity_journal_counts_but_keeps_nothing() {
+        let j = Journal::new(0);
+        j.info("a", None, String::new());
+        j.info("b", None, String::new());
+        let page = j.events_since(0, 0);
+        assert!(page.events.is_empty());
+        assert_eq!(page.next_seq, 2);
+        assert_eq!(page.dropped, 2);
+    }
+
+    #[test]
+    fn severity_tags_roundtrip() {
+        for s in [Severity::Info, Severity::Warn, Severity::Error] {
+            assert_eq!(Severity::from_tag(s.tag()), Some(s));
+        }
+        assert_eq!(Severity::from_tag("fatal"), None);
+        assert!(Severity::Error > Severity::Warn && Severity::Warn > Severity::Info);
+    }
+}

@@ -1,4 +1,4 @@
-//! TCP interpolation service: newline-delimited JSON (protocol v2.5, see
+//! TCP interpolation service: newline-delimited JSON (protocol v2.6, see
 //! [`protocol`]) over a [`crate::coordinator::Coordinator`], plus the
 //! matching blocking client.
 //!
@@ -14,6 +14,11 @@
 //! subscription frames (via [`crate::subscribe::SubscriptionStream`])
 //! with polling the socket for an `unsubscribe` line, using a short read
 //! timeout so neither side starves the other.
+//!
+//! v2.6 adds observability: `"trace":true` on `interpolate` attaches a
+//! per-request span timeline to the response (or done frame), and the
+//! `events` / `metrics_text` ops expose the coordinator's event journal
+//! and a Prometheus-style metrics rendering.
 
 pub mod protocol;
 
@@ -190,16 +195,41 @@ fn serve_stream(
                         &protocol::stream_header(rows, s.n_tiles, rows.max(1), &s.options),
                     )?;
                 }
-                return write_line(
-                    w,
-                    &protocol::stream_done(
+                let line = match &s.trace {
+                    Some(tr) => {
+                        // the measured span is the encode cost of the
+                        // frame itself; traced requests pay one probe
+                        // encode to obtain it before the real one
+                        let mut t = tr.clone();
+                        let t0 = std::time::Instant::now();
+                        let _ = protocol::stream_done(
+                            s.knn_s,
+                            s.interp_s,
+                            s.batch_queries,
+                            s.stage1_cache_hit,
+                            s.stage2_groups,
+                            None,
+                        );
+                        t.push(crate::obs::SpanKind::Serialize, t0.elapsed().as_secs_f64());
+                        protocol::stream_done(
+                            s.knn_s,
+                            s.interp_s,
+                            s.batch_queries,
+                            s.stage1_cache_hit,
+                            s.stage2_groups,
+                            Some(&t),
+                        )
+                    }
+                    None => protocol::stream_done(
                         s.knn_s,
                         s.interp_s,
                         s.batch_queries,
                         s.stage1_cache_hit,
                         s.stage2_groups,
+                        None,
                     ),
-                );
+                };
+                return write_line(w, &line);
             }
         }
     }
@@ -324,15 +354,46 @@ fn dispatch(
                 return serve_stream(coord, req, w);
             }
             match coord.interpolate(req) {
-                Ok(resp) => protocol::ok_values(
-                    &resp.values,
-                    resp.knn_s,
-                    resp.interp_s,
-                    resp.batch_queries,
-                    &resp.options,
-                    resp.stage1_cache_hit,
-                    resp.stage2_groups,
-                ),
+                Ok(resp) => match &resp.trace {
+                    Some(tr) => {
+                        // the Serialize span is measured on a probe
+                        // encode of the same payload (the values array
+                        // dominates); only traced requests pay it
+                        let mut t = tr.clone();
+                        let t0 = std::time::Instant::now();
+                        let _ = protocol::ok_values(
+                            &resp.values,
+                            resp.knn_s,
+                            resp.interp_s,
+                            resp.batch_queries,
+                            &resp.options,
+                            resp.stage1_cache_hit,
+                            resp.stage2_groups,
+                            None,
+                        );
+                        t.push(crate::obs::SpanKind::Serialize, t0.elapsed().as_secs_f64());
+                        protocol::ok_values(
+                            &resp.values,
+                            resp.knn_s,
+                            resp.interp_s,
+                            resp.batch_queries,
+                            &resp.options,
+                            resp.stage1_cache_hit,
+                            resp.stage2_groups,
+                            Some(&t),
+                        )
+                    }
+                    None => protocol::ok_values(
+                        &resp.values,
+                        resp.knn_s,
+                        resp.interp_s,
+                        resp.batch_queries,
+                        &resp.options,
+                        resp.stage1_cache_hit,
+                        resp.stage2_groups,
+                        None,
+                    ),
+                },
                 Err(e) => protocol::err_for(&e),
             }
         }
@@ -366,6 +427,13 @@ fn dispatch(
         }
         Request::Datasets => protocol::ok_names(&coord.datasets()),
         Request::Metrics => protocol::ok_metrics(&coord.metrics()),
+        Request::MetricsText => protocol::ok_metrics_text(&coord.metrics_text()),
+        Request::Events { since, max } => protocol::ok_events(&coord.events(since, max)),
+        // intercepted in `handle_connection` before dispatch; kept for
+        // match exhaustiveness
+        Request::Subscribe { .. } | Request::Unsubscribe => {
+            protocol::err_line("bad_request", "subscription ops are connection-level")
+        }
     };
     write_line(w, &line)
 }
@@ -387,6 +455,9 @@ pub struct InterpolationReply {
     /// The server's fully-resolved options audit (None against a v1
     /// server that doesn't echo them).
     pub options: Option<ResolvedOptions>,
+    /// v2.6: the per-request span timeline (present only when the
+    /// request opted in with `QueryOptions::trace`).
+    pub trace: Option<crate::obs::Trace>,
 }
 
 /// Blocking client for the JSON-line protocol.
@@ -477,6 +548,7 @@ impl Client {
             cache_hit: v.get("cache_hit").as_bool().unwrap_or(false),
             stage2_groups: v.get("stage2_groups").as_usize().unwrap_or(0),
             options: protocol::options_from_json(v.get("options")),
+            trace: protocol::trace_from_json(v.get("trace")),
         })
     }
 
@@ -494,6 +566,44 @@ impl Client {
     /// Fetch metrics as raw JSON.
     pub fn metrics(&mut self) -> Result<Json> {
         self.call(&Request::Metrics)
+    }
+
+    /// Fetch metrics as Prometheus-style exposition text (protocol v2.6).
+    pub fn metrics_text(&mut self) -> Result<String> {
+        let v = self.call(&Request::MetricsText)?;
+        v.get("text")
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| Error::Service("metrics_text reply missing 'text'".into()))
+    }
+
+    /// Page the server's structured event journal (protocol v2.6):
+    /// events with `seq >= since`, oldest first, at most `max` of them
+    /// (0 = uncapped).  Poll with `since = reply.next_seq` to tail the
+    /// journal; a gap between the requested `since` and the first
+    /// event's `seq` means the ring buffer overwrote the missing ones.
+    pub fn events(&mut self, since: u64, max: usize) -> Result<EventsReply> {
+        let v = self.call(&Request::Events { since, max })?;
+        let events = v
+            .get("events")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|e| EventReply {
+                seq: e.get("seq").as_f64().unwrap_or(0.0) as u64,
+                unix_ms: e.get("ms").as_f64().unwrap_or(0.0) as u64,
+                severity: e.get("severity").as_str().unwrap_or("info").to_string(),
+                kind: e.get("kind").as_str().unwrap_or("").to_string(),
+                dataset: e.get("dataset").as_str().map(str::to_string),
+                detail: e.get("detail").as_str().unwrap_or("").to_string(),
+                mut_seq: e.get("mut_seq").as_f64().map(|s| s as u64),
+            })
+            .collect();
+        Ok(EventsReply {
+            next_seq: v.get("next_seq").as_f64().unwrap_or(0.0) as u64,
+            dropped: v.get("dropped").as_f64().unwrap_or(0.0) as u64,
+            events,
+        })
     }
 
     /// Append points to a live dataset (protocol v2.1); returns the
@@ -673,13 +783,16 @@ pub struct StreamTileReply {
 }
 
 /// The decoded terminal line of a successful v2.4 stream.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct StreamDoneReply {
     pub knn_s: f64,
     pub interp_s: f64,
     pub batch_queries: usize,
     pub cache_hit: bool,
     pub stage2_groups: usize,
+    /// v2.6: the per-request span timeline (present only when the
+    /// request opted in with `QueryOptions::trace`).
+    pub trace: Option<crate::obs::Trace>,
 }
 
 /// A streaming interpolate in progress (protocol v2.4): the header is
@@ -725,6 +838,7 @@ impl ClientStream<'_> {
                     batch_queries: v.get("batch_queries").as_usize().unwrap_or(0),
                     cache_hit: v.get("cache_hit").as_bool().unwrap_or(false),
                     stage2_groups: v.get("stage2_groups").as_usize().unwrap_or(0),
+                    trace: protocol::trace_from_json(v.get("trace")),
                 });
                 return None;
             }
@@ -944,6 +1058,36 @@ impl Drop for ClientSubscription<'_> {
         let _ = self.drain_to_ack();
         self.finished = true;
     }
+}
+
+/// One decoded journal event (protocol v2.6 `events` op).
+#[derive(Debug, Clone)]
+pub struct EventReply {
+    /// Dense monotonic sequence number (gaps = ring-buffer loss).
+    pub seq: u64,
+    /// Wall-clock capture time, milliseconds since the Unix epoch.
+    pub unix_ms: u64,
+    /// `"info"` / `"warn"` / `"error"`.
+    pub severity: String,
+    /// Machine-stable event kind, e.g. `"compaction_finish"`.
+    pub kind: String,
+    /// Dataset the event concerns, when it concerns one.
+    pub dataset: Option<String>,
+    /// Human-readable detail line.
+    pub detail: String,
+    /// Mutation sequence for mutation events.
+    pub mut_seq: Option<u64>,
+}
+
+/// A decoded v2.6 `events` reply page.
+#[derive(Debug, Clone)]
+pub struct EventsReply {
+    /// Pass as the next poll's `since` to tail the journal.
+    pub next_seq: u64,
+    /// Total events the ring buffer has overwritten since startup.
+    pub dropped: u64,
+    /// The page, oldest first.
+    pub events: Vec<EventReply>,
 }
 
 /// A decoded v2.1 append reply.

@@ -1,5 +1,7 @@
-//! Wire protocol **v2.5**: newline-delimited JSON over TCP, with chunked
-//! (tiled) streaming responses and incremental raster subscriptions.
+//! Wire protocol **v2.6**: newline-delimited JSON over TCP, with chunked
+//! (tiled) streaming responses, incremental raster subscriptions, and
+//! end-to-end observability (per-request traces, the structured event
+//! journal, Prometheus-style metrics exposition).
 //!
 //! Requests:
 //! ```json
@@ -9,7 +11,7 @@
 //!  "variant":"tiled","k":10,
 //!  "ring":"exact","local_n":64,"alpha_levels":[0.5,1,2,3,4],
 //!  "r_min":0.0,"r_max":2.0,"area":1e4,
-//!  "tile_rows":256,"stream":true}
+//!  "tile_rows":256,"stream":true,"trace":true}
 //! {"op":"mutate","dataset":"d","action":"append","xs":[..],"ys":[..],"zs":[..]}
 //! {"op":"mutate","dataset":"d","action":"remove","ids":[3,17]}
 //! {"op":"mutate","dataset":"d","action":"compact"}
@@ -17,9 +19,49 @@
 //! {"op":"drop","dataset":"d"}
 //! {"op":"datasets"}
 //! {"op":"metrics"}
+//! {"op":"metrics_text"}
+//! {"op":"events","since":0,"max":100}
 //! {"op":"subscribe","dataset":"d","qx":[..],"qy":[..],"k":10,"tile_rows":256}
 //! {"op":"unsubscribe"}
 //! ```
+//!
+//! **v2.6 additions** (observability, strictly additive over v2.5):
+//!
+//! * `interpolate` accepts `trace: true` — the response (or the stream's
+//!   terminal `done` frame) then carries a `trace` object: the request's
+//!   span timeline through the pipeline, stamped with the serving
+//!   identity.  Shape:
+//!   `{"dataset":"d","epoch":E,"overlay":V,"stage1_fp":"<16-hex>",
+//!   "spans":[{"kind":"admission_wait","s":..}, ...]}` where `stage1_fp`
+//!   is the FNV-64 fingerprint of the batch-admission stage-1 key and
+//!   each span carries its wall seconds `s`, an optional `tile` index
+//!   (`stage2_tile` spans), and an optional `saved_s` (stage-1 wall time
+//!   a cache/subset hit substituted for — `s` is then 0).  Span kinds:
+//!   `admission_wait`, `coalesce_wait`, `stage1_knn`,
+//!   `stage1_cache_hit`, `stage1_subset_hit`, `stage2_tile`,
+//!   `stream_buffer_wait`, `serialize`.  **Without** `trace: true` every
+//!   response line is byte-identical to the v2.5 server;
+//! * the `events` op pages the coordinator's bounded structured event
+//!   journal: mutations (with their `mut_seq` ledger stamp), compaction
+//!   start/finish/fail, neighbor-cache insert/evict/purge, subscription
+//!   register/push/terminate, WAL segment rotation, engine fallback.
+//!   Request fields `since` (return events with `seq >= since`, default
+//!   0) and `max` (cap the page, default 0 = uncapped); response
+//!   `{"ok":true,"next_seq":S,"dropped":D,"events":[{"seq":..,"ms":..,
+//!   "severity":"info|warn|error","kind":"..","dataset":"..",
+//!   "detail":"..","mut_seq":..},..]}`.  Event sequence numbers are
+//!   dense and monotonic, so a gap between `since` and the first
+//!   returned `seq` (or a nonzero `dropped`) proves ring-buffer loss;
+//! * the `metrics_text` op returns the full metrics snapshot rendered as
+//!   Prometheus-style exposition text under `{"ok":true,"text":".."}` —
+//!   every scalar as `aidw_<field> <value>` plus cumulative
+//!   `aidw_latency_buckets{le="..."}` / `aidw_sub_lag_buckets{le="..."}`
+//!   histogram series;
+//! * `metrics` responses add `p50_latency_s` / `p90_latency_s`
+//!   (bucket-interpolated, like the corrected `p99_latency_s`), the
+//!   subscription push-lag figures `sub_lag_mean_s` / `sub_lag_p99_s` /
+//!   `sub_lag_count` (mutation capture to push completion), and the raw
+//!   histogram bucket arrays `latency_buckets` / `sub_lag_buckets`.
 //!
 //! **v2.5 additions** (incremental raster subscriptions, strictly
 //! additive over v2.4):
@@ -182,7 +224,7 @@ use crate::subscribe::SubUpdateStart;
 /// The wire protocol version this module implements.  ci.sh drift-checks
 /// this constant against the module doc header ("Wire protocol
 /// **vX.Y**") so the two can never silently disagree.
-pub const PROTOCOL_VERSION: &str = "2.5";
+pub const PROTOCOL_VERSION: &str = "2.6";
 
 /// A live-dataset mutation (protocol v2.1 `mutate` op).
 #[derive(Debug, Clone, PartialEq)]
@@ -224,6 +266,11 @@ pub enum Request {
     Drop { dataset: String },
     Datasets,
     Metrics,
+    /// v2.6: the metrics snapshot as Prometheus-style exposition text.
+    MetricsText,
+    /// v2.6: page the structured event journal — events with
+    /// `seq >= since`, at most `max` of them (0 = uncapped).
+    Events { since: u64, max: usize },
     /// v2.5: register a standing raster and switch the connection into a
     /// long-lived subscription feed (header + pushed update blocks).
     Subscribe { dataset: String, qx: Vec<f64>, qy: Vec<f64>, options: QueryOptions },
@@ -299,6 +346,11 @@ impl Request {
             "drop" => Ok(Request::Drop { dataset: dataset()? }),
             "datasets" => Ok(Request::Datasets),
             "metrics" => Ok(Request::Metrics),
+            "metrics_text" => Ok(Request::MetricsText),
+            "events" => Ok(Request::Events {
+                since: opt_usize(&v, "since")?.unwrap_or(0) as u64,
+                max: opt_usize(&v, "max")?.unwrap_or(0),
+            }),
             "subscribe" => {
                 let qx = v.get("qx").to_f64_vec()?;
                 let qy = v.get("qy").to_f64_vec()?;
@@ -368,6 +420,21 @@ impl Request {
             .to_string(),
             Request::Datasets => Json::obj(vec![("op", Json::Str("datasets".into()))]).to_string(),
             Request::Metrics => Json::obj(vec![("op", Json::Str("metrics".into()))]).to_string(),
+            Request::MetricsText => {
+                Json::obj(vec![("op", Json::Str("metrics_text".into()))]).to_string()
+            }
+            Request::Events { since, max } => {
+                let mut fields = vec![("op", Json::Str("events".into()))];
+                // zero is the decode default for both — emitted only when
+                // set, so the minimal request is `{"op":"events"}`
+                if *since != 0 {
+                    fields.push(("since", Json::Num(*since as f64)));
+                }
+                if *max != 0 {
+                    fields.push(("max", Json::Num(*max as f64)));
+                }
+                Json::obj(fields).to_string()
+            }
             Request::Subscribe { dataset, qx, qy, options } => {
                 let mut fields = vec![
                     ("op", Json::Str("subscribe".into())),
@@ -475,6 +542,14 @@ fn decode_options(v: &Json) -> Result<QueryOptions> {
         }
         t => o.tile_rows = t,
     }
+    match v.get("trace") {
+        Json::Null => {}
+        x => {
+            o.trace = Some(x.as_bool().ok_or_else(|| {
+                Error::Service("'trace' must be a boolean".into())
+            })?);
+        }
+    }
     Ok(o)
 }
 
@@ -512,6 +587,9 @@ fn encode_options(o: &QueryOptions, fields: &mut Vec<(&str, Json)>) {
     if let Some(t) = o.tile_rows {
         fields.push(("tile_rows", Json::Num(t as f64)));
     }
+    if let Some(t) = o.trace {
+        fields.push(("trace", Json::Bool(t)));
+    }
 }
 
 /// The resolved-options audit object echoed on interpolate responses.
@@ -540,6 +618,10 @@ pub fn options_json(o: &ResolvedOptions) -> Json {
     if let Some(v) = o.overlay {
         fields.push(("overlay", Json::Num(v as f64)));
     }
+    // emitted only when tracing was on — v2.5 byte compatibility
+    if o.trace {
+        fields.push(("trace", Json::Bool(true)));
+    }
     Json::obj(fields)
 }
 
@@ -566,6 +648,69 @@ pub fn options_from_json(v: &Json) -> Option<ResolvedOptions> {
         tile_rows: v.get("tile_rows").as_usize(),
         epoch: v.get("epoch").as_f64().map(|e| e as u64),
         overlay: v.get("overlay").as_f64().map(|o| o as u64),
+        trace: v.get("trace").as_bool().unwrap_or(false),
+    })
+}
+
+// ---- v2.6 trace objects ---------------------------------------------------
+
+/// The per-request trace object attached to responses when the request
+/// set `trace: true` (see the v2.6 doc section for the shape).
+pub fn trace_json(t: &crate::obs::Trace) -> Json {
+    let spans = t
+        .spans
+        .iter()
+        .map(|s| {
+            let mut f = vec![
+                ("kind", Json::Str(s.kind.tag().into())),
+                ("s", Json::Num(s.seconds)),
+            ];
+            if let Some(tile) = s.tile {
+                f.push(("tile", Json::Num(tile as f64)));
+            }
+            if let Some(sv) = s.saved_s {
+                f.push(("saved_s", Json::Num(sv)));
+            }
+            Json::obj(f)
+        })
+        .collect();
+    let mut fields = vec![("dataset", Json::Str(t.dataset.clone()))];
+    if let Some(e) = t.epoch {
+        fields.push(("epoch", Json::Num(e as f64)));
+    }
+    if let Some(v) = t.overlay {
+        fields.push(("overlay", Json::Num(v as f64)));
+    }
+    // hex string: a u64 fingerprint does not survive the f64 wire type
+    fields.push(("stage1_fp", Json::Str(format!("{:016x}", t.stage1_fp))));
+    fields.push(("spans", Json::Arr(spans)));
+    Json::obj(fields)
+}
+
+/// Parse a trace object back (client side); `None` when absent or
+/// malformed (e.g. talking to a pre-v2.6 server).
+pub fn trace_from_json(v: &Json) -> Option<crate::obs::Trace> {
+    let dataset = v.get("dataset").as_str()?.to_string();
+    let stage1_fp = u64::from_str_radix(v.get("stage1_fp").as_str()?, 16).ok()?;
+    let spans = v
+        .get("spans")
+        .as_arr()?
+        .iter()
+        .map(|s| {
+            Some(crate::obs::Span {
+                kind: crate::obs::SpanKind::from_tag(s.get("kind").as_str()?)?,
+                seconds: s.get("s").as_f64()?,
+                tile: s.get("tile").as_usize(),
+                saved_s: s.get("saved_s").as_f64(),
+            })
+        })
+        .collect::<Option<Vec<_>>>()?;
+    Some(crate::obs::Trace {
+        dataset,
+        epoch: v.get("epoch").as_f64().map(|e| e as u64),
+        overlay: v.get("overlay").as_f64().map(|o| o as u64),
+        stage1_fp,
+        spans,
     })
 }
 
@@ -575,6 +720,7 @@ pub fn ok_empty() -> String {
     Json::obj(vec![("ok", Json::Bool(true))]).to_string()
 }
 
+#[allow(clippy::too_many_arguments)]
 pub fn ok_values(
     values: &[f64],
     knn_s: f64,
@@ -583,8 +729,9 @@ pub fn ok_values(
     options: &ResolvedOptions,
     cache_hit: bool,
     stage2_groups: usize,
+    trace: Option<&crate::obs::Trace>,
 ) -> String {
-    Json::obj(vec![
+    let mut fields = vec![
         ("ok", Json::Bool(true)),
         ("z", Json::num_array(values)),
         ("knn_s", Json::Num(knn_s)),
@@ -593,8 +740,12 @@ pub fn ok_values(
         ("cache_hit", Json::Bool(cache_hit)),
         ("stage2_groups", Json::Num(stage2_groups as f64)),
         ("options", options_json(options)),
-    ])
-    .to_string()
+    ];
+    // appended only when the request opted in — v2.5 byte compatibility
+    if let Some(t) = trace {
+        fields.push(("trace", trace_json(t)));
+    }
+    Json::obj(fields).to_string()
 }
 
 // ---- v2.4 streaming frames ----------------------------------------------
@@ -630,8 +781,9 @@ pub fn stream_done(
     batch_queries: usize,
     cache_hit: bool,
     stage2_groups: usize,
+    trace: Option<&crate::obs::Trace>,
 ) -> String {
-    Json::obj(vec![
+    let mut fields = vec![
         ("ok", Json::Bool(true)),
         ("done", Json::Bool(true)),
         ("knn_s", Json::Num(knn_s)),
@@ -639,8 +791,11 @@ pub fn stream_done(
         ("batch_queries", Json::Num(batch_queries as f64)),
         ("cache_hit", Json::Bool(cache_hit)),
         ("stage2_groups", Json::Num(stage2_groups as f64)),
-    ])
-    .to_string()
+    ];
+    if let Some(t) = trace {
+        fields.push(("trace", trace_json(t)));
+    }
+    Json::obj(fields).to_string()
 }
 
 /// The terminal line of a **failed** stream (mid-stream error): carries
@@ -759,9 +914,61 @@ pub fn ok_metrics(m: &MetricsSnapshot) -> String {
         ("knn_s", Json::Num(m.knn_s)),
         ("interp_s", Json::Num(m.interp_s)),
         ("mean_latency_s", Json::Num(m.mean_latency_s)),
+        ("p50_latency_s", Json::Num(m.p50_latency_s)),
+        ("p90_latency_s", Json::Num(m.p90_latency_s)),
         ("p99_latency_s", Json::Num(m.p99_latency_s)),
+        ("sub_lag_mean_s", Json::Num(m.sub_lag_mean_s)),
+        ("sub_lag_p99_s", Json::Num(m.sub_lag_p99_s)),
+        ("sub_lag_count", Json::Num(m.sub_lag_count as f64)),
+        (
+            "latency_buckets",
+            Json::Arr(m.latency_buckets.iter().map(|&c| Json::Num(c as f64)).collect()),
+        ),
+        (
+            "sub_lag_buckets",
+            Json::Arr(m.sub_lag_buckets.iter().map(|&c| Json::Num(c as f64)).collect()),
+        ),
     ])
     .to_string()
+}
+
+/// The `events` response: one journal page plus the loss accounting
+/// (`dropped` ring evictions since startup; `next_seq` is the cursor for
+/// the next request's `since`).
+pub fn ok_events(page: &crate::obs::EventsPage) -> String {
+    let events = page
+        .events
+        .iter()
+        .map(|e| {
+            let mut f = vec![
+                ("seq", Json::Num(e.seq as f64)),
+                ("ms", Json::Num(e.unix_ms as f64)),
+                ("severity", Json::Str(e.severity.tag().into())),
+                ("kind", Json::Str(e.kind.into())),
+            ];
+            if let Some(d) = &e.dataset {
+                f.push(("dataset", Json::Str(d.clone())));
+            }
+            f.push(("detail", Json::Str(e.detail.clone())));
+            if let Some(ms) = e.mut_seq {
+                f.push(("mut_seq", Json::Num(ms as f64)));
+            }
+            Json::obj(f)
+        })
+        .collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("next_seq", Json::Num(page.next_seq as f64)),
+        ("dropped", Json::Num(page.dropped as f64)),
+        ("events", Json::Arr(events)),
+    ])
+    .to_string()
+}
+
+/// The `metrics_text` response: Prometheus-style exposition wrapped in
+/// the protocol's JSON line envelope.
+pub fn ok_metrics_text(text: &str) -> String {
+    Json::obj(vec![("ok", Json::Bool(true)), ("text", Json::Str(text.into()))]).to_string()
 }
 
 pub fn ok_append(out: &AppendOutcome) -> String {
@@ -922,6 +1129,18 @@ mod tests {
             Request::Drop { dataset: "d".into() },
             Request::Datasets,
             Request::Metrics,
+            // v2.6 observability ops
+            Request::MetricsText,
+            Request::Events { since: 0, max: 0 },
+            Request::Events { since: 42, max: 100 },
+            // v2.6 traced request
+            Request::Interpolate {
+                dataset: "d".into(),
+                qx: vec![1.0],
+                qy: vec![2.0],
+                options: QueryOptions::new().trace(true),
+                stream: false,
+            },
             // v2.5 subscription ops
             Request::Subscribe {
                 dataset: "d".into(),
@@ -1012,7 +1231,8 @@ mod tests {
     #[test]
     fn response_lines_parse() {
         let opts = ResolvedOptions { area: Some(25.0), ..Default::default() };
-        let l = ok_values(&[1.0, 2.0], 0.1, 0.2, 64, &opts, true, 2);
+        let l = ok_values(&[1.0, 2.0], 0.1, 0.2, 64, &opts, true, 2, None);
+        assert!(!l.contains("\"trace\""), "untraced response carries no trace key");
         let v = crate::jsonio::Json::parse(&l).unwrap();
         assert_eq!(v.get("ok").as_bool(), Some(true));
         assert_eq!(v.get("z").to_f64_vec().unwrap(), vec![1.0, 2.0]);
@@ -1039,12 +1259,19 @@ mod tests {
             tile_rows: Some(256),
             epoch: Some(3),
             overlay: Some(2),
+            trace: false,
         };
         let j = options_json(&opts);
         assert!(j.to_string().contains("\"epoch\":3"), "{j:?}");
         assert!(j.to_string().contains("\"overlay\":2"), "{j:?}");
         assert!(j.to_string().contains("\"tile_rows\":256"), "{j:?}");
+        assert!(!j.to_string().contains("\"trace\""), "trace off is not echoed");
         assert_eq!(options_from_json(&j), Some(opts));
+        // a traced request's echo carries (and round-trips) the flag
+        let traced = ResolvedOptions { trace: true, ..opts };
+        let jt = options_json(&traced);
+        assert!(jt.to_string().contains("\"trace\":true"), "{jt:?}");
+        assert_eq!(options_from_json(&jt), Some(traced));
         // absent/garbage -> None (v1 server)
         assert_eq!(options_from_json(&Json::Null), None);
         // a v2 (pre-epoch, pre-overlay) echo still parses, with both None
@@ -1072,7 +1299,7 @@ mod tests {
         assert_eq!(t.get("z").to_f64_vec().unwrap(), vec![1.5, 2.5]);
         assert!(t.get("done").as_bool().is_none(), "tile lines carry no done marker");
 
-        let d = Json::parse(&stream_done(0.1, 0.2, 35, true, 1)).unwrap();
+        let d = Json::parse(&stream_done(0.1, 0.2, 35, true, 1, None)).unwrap();
         assert_eq!(d.get("ok").as_bool(), Some(true));
         assert_eq!(d.get("done").as_bool(), Some(true));
         assert_eq!(d.get("batch_queries").as_usize(), Some(35));
@@ -1198,6 +1425,90 @@ mod tests {
         assert_eq!(v.get("tiles_pushed").as_usize(), Some(17));
         assert_eq!(v.get("tiles_dirty").as_usize(), Some(9));
         assert_eq!(v.get("tiles_skipped_clean").as_usize(), Some(31));
+    }
+
+    #[test]
+    fn trace_objects_roundtrip() {
+        use crate::obs::{SpanKind, Trace};
+        let mut t = Trace::new("d", Some(3), Some(2), 0xdead_beef_cafe_f00d);
+        t.push(SpanKind::AdmissionWait, 0.001);
+        t.push(SpanKind::CoalesceWait, 0.0005);
+        t.push_saved(SpanKind::Stage1CacheHit, 0.25);
+        t.push_tile(0, 0.01);
+        t.push_tile(1, 0.02);
+        t.push(SpanKind::StreamBufferWait, 0.0);
+        t.push(SpanKind::Serialize, 0.0002);
+        let j = trace_json(&t);
+        let s = j.to_string();
+        assert!(s.contains("\"stage1_fp\":\"deadbeefcafef00d\""), "{s}");
+        assert!(s.contains("\"kind\":\"stage2_tile\""), "{s}");
+        assert!(s.contains("\"saved_s\":0.25"), "{s}");
+        let back = trace_from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back, t);
+        // pre-v2.6 server: no trace object -> None, not a parse error
+        assert_eq!(trace_from_json(&Json::Null), None);
+        // a traced done-frame carries the object
+        let d = stream_done(0.1, 0.2, 8, false, 1, Some(&t));
+        let v = Json::parse(&d).unwrap();
+        assert_eq!(trace_from_json(v.get("trace")), Some(t));
+    }
+
+    #[test]
+    fn events_and_metrics_text_lines_parse() {
+        let journal = crate::obs::Journal::new(8);
+        journal.info("dataset_register", Some("d"), "100 points".into());
+        journal.record(
+            crate::obs::Severity::Info,
+            "mutation_append",
+            Some("d"),
+            "3 points (ids 100..)".into(),
+            Some(7),
+        );
+        journal.error("compaction_fail", Some("d"), "disk full".into());
+        let page = journal.events_since(0, 0);
+        let v = Json::parse(&ok_events(&page)).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true));
+        assert_eq!(v.get("next_seq").as_usize(), Some(3));
+        assert_eq!(v.get("dropped").as_usize(), Some(0));
+        let events = v.get("events").as_arr().unwrap();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].get("seq").as_usize(), Some(0));
+        assert_eq!(events[0].get("kind").as_str(), Some("dataset_register"));
+        assert_eq!(events[0].get("severity").as_str(), Some("info"));
+        assert_eq!(events[0].get("dataset").as_str(), Some("d"));
+        assert_eq!(events[1].get("mut_seq").as_usize(), Some(7));
+        assert!(events[0].get("mut_seq").as_f64().is_none(), "absent unless a mutation");
+        assert_eq!(events[2].get("severity").as_str(), Some("error"));
+
+        let l = ok_metrics_text("aidw_requests 5\naidw_errors 0\n");
+        let v = Json::parse(&l).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true));
+        assert_eq!(v.get("text").as_str(), Some("aidw_requests 5\naidw_errors 0\n"));
+    }
+
+    #[test]
+    fn metrics_lines_carry_v26_latency_and_lag_figures() {
+        let mut m = MetricsSnapshot {
+            p50_latency_s: 0.001,
+            p90_latency_s: 0.005,
+            sub_lag_mean_s: 0.002,
+            sub_lag_p99_s: 0.004,
+            sub_lag_count: 6,
+            ..Default::default()
+        };
+        m.latency_buckets[3] = 9;
+        m.sub_lag_buckets[5] = 2;
+        let v = Json::parse(&ok_metrics(&m)).unwrap();
+        assert_eq!(v.get("p50_latency_s").as_f64(), Some(0.001));
+        assert_eq!(v.get("p90_latency_s").as_f64(), Some(0.005));
+        assert_eq!(v.get("sub_lag_mean_s").as_f64(), Some(0.002));
+        assert_eq!(v.get("sub_lag_p99_s").as_f64(), Some(0.004));
+        assert_eq!(v.get("sub_lag_count").as_usize(), Some(6));
+        let lat = v.get("latency_buckets").to_f64_vec().unwrap();
+        assert_eq!(lat.len(), 30);
+        assert_eq!(lat[3], 9.0);
+        let lag = v.get("sub_lag_buckets").to_f64_vec().unwrap();
+        assert_eq!(lag[5], 2.0);
     }
 
     #[test]

@@ -80,6 +80,12 @@ pub struct SessionReply {
     /// `NeighborCache` (exact or subset hit).  Always false for the
     /// in-process modes, which have no cache.
     pub cache_hit: bool,
+    /// The per-request span timeline, when the request opted in via
+    /// [`QueryOptions::trace`].  Serving mode records the full pipeline
+    /// timeline (admission, coalesce, stage 1 or cache credit, per-tile
+    /// stage 2); the in-process modes synthesize a minimal stage-1 +
+    /// per-tile timeline with no snapshot stamp.
+    pub trace: Option<crate::obs::Trace>,
 }
 
 impl SessionReply {
@@ -90,6 +96,7 @@ impl SessionReply {
             interp_s: resp.interp_s,
             options: resp.options,
             cache_hit: resp.stage1_cache_hit,
+            trace: resp.trace,
         }
     }
 }
@@ -412,11 +419,11 @@ impl AidwSession {
             }
             Exec::Serial => {
                 let (resolved, pts) = self.resolve_in_process(dataset, options)?;
-                exec_in_process(None, &pts, queries, resolved)
+                exec_in_process(None, dataset, &pts, queries, resolved)
             }
             Exec::Pipeline(pool) => {
                 let (resolved, pts) = self.resolve_in_process(dataset, options)?;
-                exec_in_process(Some(pool), &pts, queries, resolved)
+                exec_in_process(Some(pool), dataset, &pts, queries, resolved)
             }
         }
     }
@@ -543,6 +550,7 @@ impl AidwSession {
             Exec::Pipeline(pool) => Some(pool.clone()),
             _ => None,
         };
+        let dataset = dataset.to_string();
         let queries = queries.to_vec();
         let buffered = Arc::new(AtomicUsize::new(0));
         let cancel = Arc::new(AtomicBool::new(false));
@@ -563,9 +571,15 @@ impl AidwSession {
             .name("aidw-session".into())
             .spawn(move || {
                 let _slot = slot;
-                if let Err(e) =
-                    exec_in_process_stream(pool.as_ref(), &pts, &queries, resolved, &handle, &worker_cancel)
-                {
+                if let Err(e) = exec_in_process_stream(
+                    pool.as_ref(),
+                    &dataset,
+                    &pts,
+                    &queries,
+                    resolved,
+                    &handle,
+                    &worker_cancel,
+                ) {
                     let _ = handle.tx.send(StreamFrame::Err(e));
                 }
             })
@@ -609,6 +623,7 @@ impl Drop for SlotGuard {
 /// [`exec_in_process_stream`] — like the coordinator.
 fn exec_in_process(
     pool: Option<&Pool>,
+    dataset: &str,
     pts: &PointSet,
     queries: &[(f64, f64)],
     resolved: ResolvedOptions,
@@ -621,7 +636,8 @@ fn exec_in_process(
         buffered: buffered.clone(),
         bounded: false,
     };
-    if let Err(e) = exec_in_process_stream(pool, pts, queries, resolved, &handle, &cancel) {
+    if let Err(e) = exec_in_process_stream(pool, dataset, pts, queries, resolved, &handle, &cancel)
+    {
         let _ = handle.tx.send(StreamFrame::Err(e));
     }
     drop(handle); // close the channel so the collector terminates
@@ -639,6 +655,7 @@ fn exec_in_process(
 /// (without `Done`) when the consumer cancelled or went away.
 fn exec_in_process_stream(
     pool: Option<&Pool>,
+    dataset: &str,
     pts: &PointSet,
     queries: &[(f64, f64)],
     resolved: ResolvedOptions,
@@ -671,6 +688,8 @@ fn exec_in_process_stream(
 
     let mut stage1_s = 0.0f64;
     let mut stage2_s = 0.0f64;
+    // per-tile stage-2 seconds, collected only when the request traces
+    let mut tile_spans: Vec<f64> = Vec::new();
     let mut alive = true;
 
     match (pool, resolved.local_neighbors) {
@@ -685,7 +704,11 @@ fn exec_in_process_stream(
                 }
                 let t = std::time::Instant::now();
                 let vals = serial::aidw_serial(pts, &queries[range.clone()], &params);
-                stage2_s += t.elapsed().as_secs_f64();
+                let dt = t.elapsed().as_secs_f64();
+                stage2_s += dt;
+                if resolved.trace {
+                    tile_spans.push(dt);
+                }
                 if !emit(i, range, vals) {
                     alive = false;
                     break;
@@ -738,7 +761,11 @@ fn exec_in_process_stream(
                         (pts.xs[i], pts.ys[i], pts.zs[i])
                     },
                 );
-                stage2_s += t.elapsed().as_secs_f64();
+                let dt = t.elapsed().as_secs_f64();
+                stage2_s += dt;
+                if resolved.trace {
+                    tile_spans.push(dt);
+                }
                 if !emit(i, range, vals) {
                     alive = false;
                     break;
@@ -776,7 +803,11 @@ fn exec_in_process_stream(
                     &queries[range.clone()],
                     &alphas[range.clone()],
                 );
-                stage2_s += t.elapsed().as_secs_f64();
+                let dt = t.elapsed().as_secs_f64();
+                stage2_s += dt;
+                if resolved.trace {
+                    tile_spans.push(dt);
+                }
                 if !emit(i, range, vals) {
                     alive = false;
                     break;
@@ -795,6 +826,20 @@ fn exec_in_process_stream(
     } else {
         (stage1_s, stage2_s)
     };
+    // minimal in-process timeline: stage 1 + per-tile stage 2.  No
+    // snapshot stamp (the in-process modes have no epoch/overlay) and no
+    // admission/coalesce spans (there is no queue).
+    let trace = if resolved.trace {
+        let fp = crate::obs::fnv1a_64(format!("{:?}", resolved.stage1_key()).as_bytes());
+        let mut t = crate::obs::Trace::new(dataset, None, None, fp);
+        t.push(crate::obs::SpanKind::Stage1Knn, stage1_s);
+        for (i, &s) in tile_spans.iter().enumerate() {
+            t.push_tile(i, s);
+        }
+        Some(t)
+    } else {
+        None
+    };
     let _ = handle.tx.send(StreamFrame::Done(StreamSummary {
         rows: queries.len(),
         n_tiles,
@@ -805,6 +850,7 @@ fn exec_in_process_stream(
         options: echoed,
         stage1_cache_hit: false,
         stage2_groups: 1,
+        trace,
     }));
     Ok(())
 }
@@ -1105,6 +1151,33 @@ mod tests {
         initial.apply(&mut raster);
         assert_eq!(raster, want, "initial materialization matches interpolate");
         assert!(s.subscribe("ghost", &q, &opts).is_err());
+    }
+
+    #[test]
+    fn trace_opt_in_works_across_modes() {
+        let pts = data();
+        let q = queries();
+        let serving = AidwSession::serving(CoordinatorConfig {
+            engine_mode: EngineMode::CpuOnly,
+            ..Default::default()
+        })
+        .unwrap();
+        for s in [AidwSession::serial(), AidwSession::in_process(), serving] {
+            s.register("d", pts.clone()).unwrap();
+            let plain = s.interpolate("d", &q, &QueryOptions::default()).unwrap();
+            assert!(plain.trace.is_none(), "{}: trace is opt-in", s.backend_label());
+            let traced = s
+                .interpolate("d", &q, &QueryOptions::new().trace(true))
+                .unwrap();
+            let t = traced.trace.expect("opt-in trace present");
+            assert_eq!(t.dataset, "d", "{}", s.backend_label());
+            assert!(
+                t.spans_of(crate::obs::SpanKind::Stage2Tile).count() >= 1,
+                "{}: at least one stage-2 tile span",
+                s.backend_label()
+            );
+            assert_eq!(traced.values, plain.values, "tracing never changes numerics");
+        }
     }
 
     #[test]

@@ -90,8 +90,10 @@ pub(crate) enum SubEvent {
     /// `seq` is the dataset's post-mutation [`LiveSnapshot::mut_seq`],
     /// read under the same write lock that published the mutation — the
     /// worker's ledger entry for proving its coalesced footprint covers
-    /// *every* mutation folded into a served snapshot.
-    Mutated { dataset: String, coords: Vec<(f64, f64)>, seq: u64 },
+    /// *every* mutation folded into a served snapshot.  `at` is the
+    /// capture instant (stamped at the mutation entry point), the anchor
+    /// for the mutation-to-push lag metric (`sub_lag_*`).
+    Mutated { dataset: String, coords: Vec<(f64, f64)>, seq: u64, at: std::time::Instant },
     /// The overlay was folded into a new epoch (value-identical).
     Compacted { dataset: String },
     /// The dataset was dropped (`replaced: false`) or registered over
@@ -437,6 +439,10 @@ struct PendingDirt {
     /// [`SubEvent::Mutated`]); footprint classification is only sound
     /// when these cover every mutation the served snapshot folded in.
     seqs: Vec<u64>,
+    /// Capture instant of the *oldest* coalesced mutation: the push lag
+    /// reported for this batch is measured from the mutation that has
+    /// been waiting longest (coalescing must not hide queueing delay).
+    earliest: Option<std::time::Instant>,
 }
 
 /// True when `seqs` (the batch's `Mutated` stamps) account for **every**
@@ -500,10 +506,14 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, rx: mpsc::Receiver<SubEvent>) {
                     subs.retain(|s| s.id != id);
                     drop_slot(&shared, id);
                 }
-                SubEvent::Mutated { dataset, coords, seq } => {
+                SubEvent::Mutated { dataset, coords, seq, at } => {
                     let d = dirt.entry(dataset).or_default();
                     d.coords.extend(coords);
                     d.seqs.push(seq);
+                    d.earliest = Some(match d.earliest {
+                        Some(e) => e.min(at),
+                        None => at,
+                    });
                 }
                 SubEvent::Compacted { dataset } => {
                     dirt.entry(dataset).or_default();
@@ -549,10 +559,14 @@ pub(crate) fn worker_loop(shared: Arc<Shared>, rx: mpsc::Receiver<SubEvent>) {
     }
 }
 
-/// Sweep one registry slot and settle the `subs_active` gauge.
+/// Sweep one registry slot and settle the `subs_active` gauge.  Every
+/// termination path funnels through here (and `unregister` is true
+/// exactly once per id), so the journal sees one `sub_terminate` per
+/// subscription lifetime.
 fn drop_slot(shared: &Shared, id: u64) {
     if shared.subs.unregister(id) {
         shared.metrics.subs_active.fetch_sub(1, Ordering::Relaxed);
+        shared.journal.info("sub_terminate", None, format!("subscription {id} terminated"));
     }
 }
 
@@ -766,6 +780,26 @@ fn push_update(shared: &Shared, st: &mut SubState, pending: &PendingDirt) -> boo
     st.epoch = snap.epoch;
     st.overlay = snap.overlay_version();
     st.mut_seq = snap.mut_seq;
+    // push lag: capture instant of the oldest coalesced mutation to the
+    // moment its recomputed tiles finished sending — the figure
+    // `sub_lag_p99` summarizes.  Compaction-only refreshes carry no
+    // capture instant and are not lag samples.
+    if let Some(at) = pending.earliest {
+        let lag_s = at.elapsed().as_secs_f64();
+        shared.metrics.sub_lag.record(lag_s);
+        shared.journal.info(
+            "sub_push",
+            Some(&st.dataset),
+            format!(
+                "sub {} update {} lag {:.6}s ({} dirty, {} clean)",
+                st.id,
+                st.update_seq,
+                lag_s,
+                dirty_tiles.len(),
+                n_tiles - dirty_tiles.len()
+            ),
+        );
+    }
     true
 }
 

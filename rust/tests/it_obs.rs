@@ -1,0 +1,281 @@
+//! Integration: end-to-end observability (protocol v2.6).
+//!
+//! * **Acceptance**: a traced interpolate over TCP returns a span
+//!   timeline — admission wait, coalesce wait, stage-1 kNN (or a cache
+//!   credit carrying the saved seconds), per-tile stage 2, stream-buffer
+//!   wait, serialization — stamped with the serving `(epoch, overlay)`
+//!   snapshot identity, and the measured spans sum to no more than the
+//!   request's wall time;
+//! * **Compatibility**: with tracing off the response line is shaped
+//!   exactly like v2.5 — no `trace` key, no new top-level keys — so old
+//!   clients parse new servers byte-for-byte;
+//! * **Journal**: sequence numbers are dense, so a gap between the
+//!   requested `since` and the first returned event *is* the loss
+//!   signal; the `events` op surfaces mutations (with `mut_seq`),
+//!   compaction start/finish, and a forced *background* compaction
+//!   failure that was silently eprintln'd before;
+//! * **Lag**: a mutate -> push cycle leaves a nonzero subscription-lag
+//!   sample visible in the JSON `metrics` op and the Prometheus-style
+//!   `metrics_text` exposition alike.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use aidw::coordinator::{Coordinator, CoordinatorConfig, EngineMode, QueryOptions};
+use aidw::jsonio::Json;
+use aidw::live::LiveConfig;
+use aidw::obs::{Journal, Severity, SpanKind};
+use aidw::service::{Client, Server};
+use aidw::workload;
+
+fn cpu_config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        engine_mode: EngineMode::CpuOnly,
+        // explicit compactions only, except where a test opts back in
+        live: LiveConfig { auto_compact: false, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("aidw_itobs_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::remove_file(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Background work lands asynchronously; poll instead of sleeping blind.
+fn wait_for(what: &str, mut cond: impl FnMut() -> bool) {
+    for _ in 0..1000 {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+#[test]
+fn acceptance_traced_query_over_tcp_returns_stamped_span_timeline() {
+    let coord = Arc::new(Coordinator::new(cpu_config()).unwrap());
+    let server = Server::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    client
+        .register("d", &workload::uniform_square(3000, 100.0, 7101))
+        .unwrap();
+    let queries = workload::uniform_square(96, 100.0, 7102).xy();
+    let opts = QueryOptions::new().k(12).tile_rows(16).trace(true);
+
+    let t0 = std::time::Instant::now();
+    let cold = client.interpolate_with("d", &queries, opts.clone()).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    let trace = cold.trace.expect("traced request returns a timeline");
+    assert_eq!(trace.dataset, "d");
+    assert!(
+        trace.epoch.is_some() && trace.overlay.is_some(),
+        "timeline is stamped with the serving snapshot identity: {trace:?}"
+    );
+    assert_eq!(
+        trace.spans_of(SpanKind::Stage1Knn).count(),
+        1,
+        "a cold request runs a real stage-1 sweep: {trace:?}"
+    );
+    assert_eq!(trace.spans_of(SpanKind::Stage2Tile).count(), 6, "96 rows / 16 = 6 tiles");
+    assert_eq!(trace.spans_of(SpanKind::AdmissionWait).count(), 1);
+    assert_eq!(trace.spans_of(SpanKind::CoalesceWait).count(), 1);
+    assert_eq!(trace.spans_of(SpanKind::Serialize).count(), 1);
+    assert!(
+        trace.total_s() <= wall,
+        "measured spans ({:.6}s) cannot exceed the request wall time ({wall:.6}s)",
+        trace.total_s()
+    );
+
+    // the same raster again rides the neighbor cache: the sweep span is
+    // replaced by a credit carrying the seconds the cache saved
+    let warm = client.interpolate_with("d", &queries, opts).unwrap();
+    assert!(warm.cache_hit);
+    let wt = warm.trace.expect("traced request returns a timeline");
+    assert_eq!(wt.spans_of(SpanKind::Stage1Knn).count(), 0, "{wt:?}");
+    let credits: Vec<_> = wt.spans_of(SpanKind::Stage1CacheHit).collect();
+    assert_eq!(credits.len(), 1, "{wt:?}");
+    assert!(
+        credits[0].saved_s.unwrap_or(0.0) > 0.0,
+        "the cache-hit span carries the saved stage-1 seconds: {:?}",
+        credits[0]
+    );
+    assert_eq!(wt.spans_of(SpanKind::Stage2Tile).count(), 6);
+    assert_eq!(cold.values, warm.values, "tracing never changes numerics");
+}
+
+#[test]
+fn tracing_off_keeps_the_v25_wire_shape() {
+    let coord = Arc::new(Coordinator::new(cpu_config()).unwrap());
+    let server = Server::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    client
+        .register("d", &workload::uniform_square(500, 50.0, 7201))
+        .unwrap();
+
+    // a raw socket speaking exactly what a v2.5 client would send
+    let sock = TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+    let mut writer = sock;
+    writer
+        .write_all(
+            b"{\"op\":\"interpolate\",\"dataset\":\"d\",\"qx\":[1.0,2.0,3.0],\"qy\":[1.5,2.5,3.5]}\n",
+        )
+        .unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    assert!(
+        !reply.contains("trace"),
+        "an untraced reply must not mention tracing anywhere: {reply}"
+    );
+    let v = Json::parse(reply.trim_end()).unwrap();
+    let keys: Vec<&str> = v.as_obj().unwrap().keys().map(|k| k.as_str()).collect();
+    assert_eq!(
+        keys,
+        ["batch_queries", "cache_hit", "interp_s", "knn_s", "ok", "options", "stage2_groups", "z"],
+        "the v2.5 top-level key set, nothing more"
+    );
+}
+
+#[test]
+fn journal_sequences_stay_dense_and_loss_is_detectable() {
+    let j = Journal::new(4);
+    for i in 0..11 {
+        j.info("tick", None, format!("event {i}"));
+    }
+    let page = j.events_since(0, 0);
+    assert_eq!(page.next_seq, 11);
+    assert_eq!(page.dropped, 7, "11 events through a 4-slot ring drop 7");
+    assert_eq!(page.events.len(), 4);
+    assert_eq!(
+        page.events[0].seq, 7,
+        "the gap between the requested 0 and the first seq IS the loss signal"
+    );
+    for w in page.events.windows(2) {
+        assert_eq!(w[1].seq, w[0].seq + 1, "sequences are dense within a page");
+    }
+    // tailing: polling from next_seq returns only what happened since
+    let tail = j.events_since(9, 0);
+    assert_eq!(tail.events.len(), 2);
+    assert_eq!(tail.events[0].seq, 9);
+    assert!(j.events_since(page.next_seq, 0).events.is_empty());
+}
+
+#[test]
+fn events_op_surfaces_mutations_compaction_and_background_failure() {
+    let dir = scratch("events");
+    let cfg = CoordinatorConfig {
+        engine_mode: EngineMode::CpuOnly,
+        live_dir: Some(dir.clone()),
+        live: LiveConfig { auto_compact: true, compact_threshold: 8, ..Default::default() },
+        ..Default::default()
+    };
+    let coord = Arc::new(Coordinator::new(cfg).unwrap());
+    let server = Server::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    client
+        .register("d", &workload::uniform_square(64, 50.0, 7301))
+        .unwrap();
+    client
+        .append("d", &workload::uniform_square(4, 50.0, 7302))
+        .unwrap();
+    let rep = client.compact("d").unwrap();
+    assert!(!rep.noop);
+
+    let page = client.events(0, 0).unwrap();
+    let kinds: Vec<&str> = page.events.iter().map(|e| e.kind.as_str()).collect();
+    for want in ["dataset_register", "mutation_append", "compaction_start", "compaction_finish"] {
+        assert!(kinds.contains(&want), "missing {want} in {kinds:?}");
+    }
+    let append_ev = page
+        .events
+        .iter()
+        .find(|e| e.kind == "mutation_append")
+        .unwrap();
+    assert!(append_ev.mut_seq.is_some(), "mutation events carry the ledger seq");
+    assert_eq!(append_ev.dataset.as_deref(), Some("d"));
+
+    // force the *background* compactor to fail: replace the live dir
+    // with a plain file, so the new-epoch snapshot cannot be created
+    // (the open WAL handle keeps appends working).  Before PR 7 this
+    // failure vanished into stderr; now it is a queryable Error event.
+    std::fs::remove_dir_all(&dir).unwrap();
+    std::fs::write(&dir, b"not a directory").unwrap();
+    client
+        .append("d", &workload::uniform_square(16, 50.0, 7303))
+        .unwrap(); // pressure 16 >= threshold 8: spawns the compactor
+    wait_for("compaction_fail journal event", || {
+        coord.events(0, 0).events.iter().any(|e| e.kind == "compaction_fail")
+    });
+    let page = coord.events(0, 0);
+    let fail = page
+        .events
+        .iter()
+        .rev()
+        .find(|e| e.kind == "compaction_fail")
+        .unwrap();
+    assert_eq!(fail.severity, Severity::Error);
+    assert_eq!(fail.dataset.as_deref(), Some("d"));
+    std::fs::remove_file(&dir).ok();
+}
+
+#[test]
+fn subscription_push_lag_reaches_metrics_and_both_expositions() {
+    let coord = Arc::new(Coordinator::new(cpu_config()).unwrap());
+    let server = Server::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let mut mutator = Client::connect(server.addr()).unwrap();
+    mutator
+        .register("d", &workload::uniform_square(2000, 100.0, 7401))
+        .unwrap();
+    let queries = workload::uniform_square(128, 100.0, 7402).xy();
+    let opts = QueryOptions::new().k(12).local_neighbors(24).tile_rows(16);
+
+    let mut feed = Client::connect(server.addr()).unwrap();
+    let mut sub = feed.subscribe("d", &queries, opts).unwrap();
+    let initial = sub.next_update().unwrap();
+    assert_eq!(initial.update, 0);
+    assert_eq!(
+        coord.metrics().sub_lag_count,
+        0,
+        "the initial materialization is not a mutation push — no lag sample"
+    );
+
+    mutator
+        .append("d", &workload::uniform_square(8, 100.0, 7403))
+        .unwrap();
+    let update = sub.next_update().unwrap();
+    assert!(update.update >= 1);
+    // the lag sample is recorded at the end of the push; poll past the race
+    wait_for("sub-lag sample", || coord.metrics().sub_lag_count >= 1);
+    let m = coord.metrics();
+    assert!(m.sub_lag_mean_s > 0.0, "capture -> push lag is a real duration");
+    assert!(m.sub_lag_p99_s > 0.0, "p99 nonzero after one mutate -> push cycle");
+
+    // the same figures through both wire expositions
+    let json = mutator.metrics().unwrap();
+    assert!(json.get("sub_lag_p99_s").as_f64().unwrap() > 0.0);
+    assert!(json.get("sub_lag_count").as_usize().unwrap() >= 1);
+    let text = mutator.metrics_text().unwrap();
+    assert!(text.contains("aidw_sub_lag_p99_s"), "{text}");
+    assert!(text.contains("aidw_sub_lag_buckets{le=\"+Inf\"}"), "{text}");
+    let count_line = text
+        .lines()
+        .find(|l| l.starts_with("aidw_sub_lag_count "))
+        .expect("sub_lag_count sample in the exposition");
+    assert!(
+        count_line.split(' ').nth(1).unwrap().parse::<f64>().unwrap() >= 1.0,
+        "{count_line}"
+    );
+
+    // the journal saw the push and will see the teardown
+    assert!(coord.events(0, 0).events.iter().any(|e| e.kind == "sub_push"));
+    drop(sub);
+    wait_for("sub_terminate journal event", || {
+        coord.events(0, 0).events.iter().any(|e| e.kind == "sub_terminate")
+    });
+}
