@@ -60,6 +60,21 @@ pub fn interpolate_local_on(
     params: &AidwParams,
     cfg: &LocalConfig,
 ) -> Result<Vec<f64>> {
+    interpolate_local_layout_on(pool, data, queries, params, cfg, plan::Layout::Aos)
+}
+
+/// [`interpolate_local_on`] with an explicit stage-2 [`plan::Layout`]:
+/// the blocked layouts gather each row's neighbors into columnar scratch
+/// and run the blocked weighting — bit-identical to the scalar reference
+/// for every layout (the bench ablation drives this entry point).
+pub fn interpolate_local_layout_on(
+    pool: &Pool,
+    data: &PointSet,
+    queries: &[(f64, f64)],
+    params: &AidwParams,
+    cfg: &LocalConfig,
+    layout: plan::Layout,
+) -> Result<Vec<f64>> {
     assert!(!data.is_empty(), "no data points");
     let grid = EvenGrid::build_on(pool, data, None, &GridConfig::default())?;
     let n = cfg.n_neighbors.max(params.k).max(1);
@@ -75,7 +90,7 @@ pub fn interpolate_local_on(
     );
     let artifact = stage1.execute_grid(pool, &grid, queries);
     let table = artifact.neighbors.as_ref().expect("gathering plan produces a table");
-    Ok(plan::local_weighted_on(pool, data, queries, artifact.alphas(), table))
+    Ok(plan::local_weighted_layout_on(pool, data, queries, artifact.alphas(), table, layout))
 }
 
 #[cfg(test)]

@@ -8,8 +8,8 @@
 //! PJRT engine is not the variable under test.
 
 use crate::aidw::params::AidwParams;
-use crate::aidw::plan::{SearchKind, Stage1Plan};
-use crate::geom::{dist2, PointSet, EPS_D2};
+use crate::aidw::plan::{self, Layout, SearchKind, Stage1Plan};
+use crate::geom::{dist2, Columns, PointSet, EPS_D2};
 use crate::grid::{EvenGrid, GridConfig};
 use crate::knn::grid_knn::RingRule;
 use crate::pool::{self, Pool};
@@ -98,6 +98,106 @@ pub fn weighted_stage_on(
     out
 }
 
+/// Query rows one cache panel is shared across in the blocked dense walk
+/// (panel loop outside, row group inside — the panel's columns stay hot
+/// while every row in the group consumes them).
+const DENSE_ROW_GROUP: usize = 8;
+
+/// Data points per cache panel of the blocked dense walk (3 columns ×
+/// 4096 × 8 B = 96 KiB, sized to sit in L2 while a row group re-reads
+/// it).
+const DENSE_PANEL: usize = 4096;
+
+/// Layout-parameterized stage 2: [`Layout::Aos`] is exactly
+/// [`weighted_stage_on`]; the blocked layouts walk the dataset's
+/// columnar view ([`PointSet::columns`], free — storage is already SoA)
+/// as panel-outside/row-group-inside cache-blocked loops with
+/// [`plan::accumulate_row_blocked`] micro-blocks inside each panel.
+///
+/// Each row still accumulates panels in ascending point order (panel 0's
+/// micro-blocks, then panel 1's, ...), i.e. the same f64 additions in
+/// the same order as the scalar reference — **bit-identical** for every
+/// layout (pinned by `tests/it_layout.rs`).
+pub fn weighted_stage_layout_on(
+    pool: &Pool,
+    data: &PointSet,
+    queries: &[(f64, f64)],
+    alphas: &[f64],
+    layout: Layout,
+) -> Vec<f64> {
+    if layout == Layout::Aos {
+        return weighted_stage_on(pool, data, queries, alphas);
+    }
+    let empty = Columns::new(&[], &[], &[]);
+    blocked_dense_on(pool, data.columns(), empty, queries, alphas, layout.micro_width())
+}
+
+/// The shared blocked dense core: Eq.-1 over `main` then `tail`, both in
+/// ascending index order per row.  `tail` carries a live snapshot's
+/// gathered delta appends (empty for compacted data) so the merged-live
+/// path reuses this exact loop instead of forking it.  Rows are grouped
+/// ([`DENSE_ROW_GROUP`]) and points are paneled ([`DENSE_PANEL`]) so a
+/// panel's columns stay cache-hot while the whole group consumes them;
+/// within a row the panels are visited in order, which keeps the
+/// summation sequence identical to the scalar reference.
+pub(crate) fn blocked_dense_on(
+    pool: &Pool,
+    main: Columns<'_>,
+    tail: Columns<'_>,
+    queries: &[(f64, f64)],
+    alphas: &[f64],
+    block: usize,
+) -> Vec<f64> {
+    assert_eq!(queries.len(), alphas.len());
+    let n = main.len();
+    let mut out = vec![0f64; queries.len()];
+    pool.for_each_slice_mut(&mut out, 16, |offset, chunk| {
+        let mut g0 = 0usize;
+        while g0 < chunk.len() {
+            let g1 = (g0 + DENSE_ROW_GROUP).min(chunk.len());
+            let mut sw = [0.0f64; DENSE_ROW_GROUP];
+            let mut swz = [0.0f64; DENSE_ROW_GROUP];
+            let mut p0 = 0usize;
+            while p0 < n {
+                let p1 = (p0 + DENSE_PANEL).min(n);
+                let panel = main.sub(p0, p1);
+                for j in g0..g1 {
+                    let (qx, qy) = queries[offset + j];
+                    let a = alphas[offset + j];
+                    plan::accumulate_row_blocked(
+                        qx,
+                        qy,
+                        a,
+                        panel,
+                        block,
+                        &mut sw[j - g0],
+                        &mut swz[j - g0],
+                    );
+                }
+                p0 = p1;
+            }
+            for j in g0..g1 {
+                if !tail.is_empty() {
+                    let (qx, qy) = queries[offset + j];
+                    let a = alphas[offset + j];
+                    plan::accumulate_row_blocked(
+                        qx,
+                        qy,
+                        a,
+                        tail,
+                        block,
+                        &mut sw[j - g0],
+                        &mut swz[j - g0],
+                    );
+                }
+                chunk[j] = swz[j - g0] / sw[j - g0];
+            }
+            g0 = g1;
+        }
+    });
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,5 +248,31 @@ mod tests {
         let data = workload::uniform_square(100, 10.0, 57);
         let out = interpolate_improved(&data, &[], &AidwParams::default());
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn blocked_dense_kernel_is_bit_identical() {
+        let pool = Pool::new(2);
+        // sizes straddle the micro-block, row-group, and panel boundaries
+        // (ragged tails everywhere)
+        for (n_data, n_q, seed) in [(37usize, 5usize, 58u64), (501, 67, 59), (4099, 19, 60)] {
+            let data = workload::uniform_square(n_data, 50.0, seed);
+            let queries = workload::uniform_square(n_q, 50.0, seed + 100).xy();
+            let alphas: Vec<f64> =
+                (0..n_q).map(|i| 0.5 + 0.3 * ((i % 7) as f64)).collect();
+            let want = weighted_stage_on(&pool, &data, &queries, &alphas);
+            for layout in [
+                Layout::Soa,
+                Layout::AosoaTiles { width: 1 },
+                Layout::AosoaTiles { width: 13 },
+                Layout::AosoaTiles { width: 64 },
+            ] {
+                let got = weighted_stage_layout_on(&pool, &data, &queries, &alphas, layout);
+                assert_eq!(got, want, "{} n={n_data} q={n_q}", layout.tag());
+            }
+            // Aos routes to the reference itself
+            let aos = weighted_stage_layout_on(&pool, &data, &queries, &alphas, Layout::Aos);
+            assert_eq!(aos, want);
+        }
     }
 }

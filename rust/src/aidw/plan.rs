@@ -21,7 +21,21 @@
 //!   neighbors.  (The kernel *variant* — naive vs tiled — is a stage-2
 //!   dispatch detail carried by
 //!   [`crate::coordinator::options::Stage2Key`], not by the plan: it
-//!   selects a PJRT artifact, never the numerics.)
+//!   selects a PJRT artifact, never the numerics.);
+//! * a [`Layout`] is the stage-2 plan's *data-access schedule*: how the
+//!   CPU weighting kernels walk the snapshot.  `Aos` is the scalar
+//!   reference loop; `Soa` streams the epoch's columnar view
+//!   ([`crate::geom::Columns`] — free, because `PointSet` is SoA and the
+//!   view is built once per epoch and carried through compaction) in
+//!   cache-blocked, explicitly vectorizable fixed-width blocks;
+//!   `AosoaTiles{width}` is the same blocked walk at a caller-chosen
+//!   micro-tile width (the bench ablation axis).  The planner picks a
+//!   layout per request at stage-2 planning time ([`Layout::choose`]:
+//!   by stage-2 work size, with a per-request/config override), and the
+//!   choice is stamped on the request trace.  Layout is in **neither**
+//!   stage key — it never changes the numerics (blocked kernels keep the
+//!   reference summation order, see [`accumulate_row_blocked`]), so jobs
+//!   that differ only in layout still coalesce and share cache entries.
 //!
 //! The seam is what lets the batcher coalesce jobs that differ only in
 //! stage-2 variant (one kNN sweep, several weightings), the coordinator
@@ -32,14 +46,15 @@
 //! Numerics contract: executing a plan is **bit-identical** to the
 //! monolithic paths it replaced — same search, same `r_exp` derivation,
 //! same alpha pipeline, same summation order in stage 2 (pinned by
-//! `tests/it_planner.rs`).  The one caveat is exact distance ties at a
-//! neighbor-gather cut boundary, where merged and grid searches may keep
-//! different tied points (see [`crate::knn::merged`]); distances, r_obs,
-//! and dense weighting are tie-insensitive.
+//! `tests/it_planner.rs`; layout bit-identity by `tests/it_layout.rs`).
+//! The one caveat is exact distance ties at a neighbor-gather cut
+//! boundary, where merged and grid searches may keep different tied
+//! points (see [`crate::knn::merged`]); distances, r_obs, and dense
+//! weighting are tie-insensitive.
 
 use crate::aidw::alpha;
 use crate::aidw::params::AidwParams;
-use crate::geom::{dist2, PointSet, EPS_D2};
+use crate::geom::{dist2, Columns, PointSet, EPS_D2};
 use crate::grid::EvenGrid;
 use crate::knn::grid_knn::{self, GridKnnConfig, RingRule};
 use crate::knn::merged::{self, MergedView};
@@ -258,6 +273,169 @@ impl Stage2Plan {
     }
 }
 
+/// Widest micro-block the blocked kernels support (the per-row `d²`
+/// scratch is a stack array of this size; `AosoaTiles` widths clamp to
+/// it).
+pub const MAX_BLOCK: usize = 64;
+
+/// The stage-2 plan's data-access schedule: how the CPU weighting
+/// kernels walk the snapshot.  Layout never changes the numerics — the
+/// blocked walks keep the scalar reference's per-row summation order
+/// ([`accumulate_row_blocked`]) — so it lives in **neither** stage key:
+/// jobs that differ only in layout coalesce, and cached artifacts are
+/// shared across layouts.  The PJRT stage-2 path has its own fixed
+/// device layout and ignores this knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Layout {
+    /// Scalar reference loop (one point at a time, AoS-style access).
+    #[default]
+    Aos,
+    /// Cache-blocked columnar walk at the default micro width
+    /// ([`Layout::SOA_BLOCK`]).
+    Soa,
+    /// Cache-blocked columnar walk at an explicit micro-tile width
+    /// (1..=[`MAX_BLOCK`]) — the bench ablation axis.
+    AosoaTiles {
+        /// Points per micro-tile.
+        width: usize,
+    },
+}
+
+impl Layout {
+    /// Micro width `AosoaTiles` defaults to when parsed as plain
+    /// `"aosoa"`.
+    pub const DEFAULT_AOSOA_WIDTH: usize = 16;
+    /// Micro width the `Soa` schedule blocks by.
+    pub const SOA_BLOCK: usize = 64;
+
+    /// Points the planner wants per stage-2 job before it switches from
+    /// the scalar reference to the blocked columnar walk (rows ×
+    /// points-per-row; below this the blocking setup outweighs the win).
+    pub const AUTO_SOA_WORK: usize = 32_768;
+
+    /// Wire/CLI tag (protocol v2.7 `layout` field): `aos`, `soa`, or
+    /// `aosoa:<width>`.
+    pub fn tag(&self) -> String {
+        match self {
+            Layout::Aos => "aos".to_string(),
+            Layout::Soa => "soa".to_string(),
+            Layout::AosoaTiles { width } => format!("aosoa:{width}"),
+        }
+    }
+
+    /// Micro-block width the blocked kernels run at (1 = scalar
+    /// reference).
+    pub fn micro_width(&self) -> usize {
+        match self {
+            Layout::Aos => 1,
+            Layout::Soa => Layout::SOA_BLOCK,
+            Layout::AosoaTiles { width } => (*width).clamp(1, MAX_BLOCK),
+        }
+    }
+
+    /// True when the `AosoaTiles` width is representable (validation for
+    /// programmatic construction; [`std::str::FromStr`] enforces it for
+    /// wire/CLI input).
+    pub fn is_valid(&self) -> bool {
+        match self {
+            Layout::AosoaTiles { width } => (1..=MAX_BLOCK).contains(width),
+            _ => true,
+        }
+    }
+
+    /// Stage-2 planning policy: the explicit override wins; otherwise
+    /// pick by job size (`n_rows × points_per_row` — live count for
+    /// dense, gathered width for local).  Deterministic in its inputs,
+    /// so a given request always runs the same schedule.  Auto never
+    /// picks `AosoaTiles`; explicit widths exist for the bench ablation
+    /// and for callers that have measured their own sweet spot.
+    pub fn choose(requested: Option<Layout>, n_rows: usize, points_per_row: usize) -> Layout {
+        if let Some(l) = requested {
+            return l;
+        }
+        if n_rows.saturating_mul(points_per_row) < Layout::AUTO_SOA_WORK {
+            Layout::Aos
+        } else {
+            Layout::Soa
+        }
+    }
+}
+
+impl std::str::FromStr for Layout {
+    type Err = crate::error::Error;
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "aos" => Ok(Layout::Aos),
+            "soa" => Ok(Layout::Soa),
+            "aosoa" => Ok(Layout::AosoaTiles { width: Layout::DEFAULT_AOSOA_WIDTH }),
+            other => {
+                if let Some(w) = other.strip_prefix("aosoa:") {
+                    let width: usize = w.parse().map_err(|_| {
+                        crate::error::Error::InvalidArgument(format!(
+                            "bad aosoa tile width '{w}' (expected an integer)"
+                        ))
+                    })?;
+                    if !(1..=MAX_BLOCK).contains(&width) {
+                        return Err(crate::error::Error::InvalidArgument(format!(
+                            "aosoa tile width {width} out of range 1..={MAX_BLOCK}"
+                        )));
+                    }
+                    Ok(Layout::AosoaTiles { width })
+                } else {
+                    Err(crate::error::Error::InvalidArgument(format!(
+                        "unknown layout '{other}' (expected 'aos', 'soa', or 'aosoa[:width]')"
+                    )))
+                }
+            }
+        }
+    }
+}
+
+/// One query row's Eq.-1 accumulation over a columnar range, in
+/// fixed-width blocks: pass 1 fills a stack block of clamped `d²` (a
+/// straight-line loop over the `xs`/`ys` slices the optimizer can
+/// vectorize), pass 2 folds `w = exp(-½·α·ln d²)` into `(sw, swz)`.
+/// No per-row allocation — the scratch is a `[f64; MAX_BLOCK]` on the
+/// stack.
+///
+/// **Bit-identity:** every per-point value is computed by the same
+/// expression as the scalar reference, and the fold visits points in
+/// ascending index order within and across blocks — the same sequence of
+/// f64 additions in the same order, hence the same bits for any block
+/// width.  Pinned (blocked vs scalar, all layouts) by
+/// `tests/it_layout.rs`.
+#[inline]
+pub fn accumulate_row_blocked(
+    qx: f64,
+    qy: f64,
+    a: f64,
+    cols: Columns<'_>,
+    block: usize,
+    sw: &mut f64,
+    swz: &mut f64,
+) {
+    let block = block.clamp(1, MAX_BLOCK);
+    let mut scratch = [0.0f64; MAX_BLOCK];
+    let n = cols.len();
+    let mut at = 0usize;
+    while at < n {
+        let b = block.min(n - at);
+        let xs = &cols.xs[at..at + b];
+        let ys = &cols.ys[at..at + b];
+        let zs = &cols.zs[at..at + b];
+        let d2s = &mut scratch[..b];
+        for (d, (&x, &y)) in d2s.iter_mut().zip(xs.iter().zip(ys)) {
+            *d = dist2(qx, qy, x, y).max(EPS_D2);
+        }
+        for (&d2, &z) in d2s.iter().zip(zs) {
+            let w = (-0.5 * a * d2.ln()).exp();
+            *sw += w;
+            *swz += w * z;
+        }
+        at += b;
+    }
+}
+
 impl Stage1Plan {
     /// Build a stage-1 plan.  `k` and `gather` are clamped the way every
     /// execution path historically clamped them (`k` to the live count,
@@ -408,6 +586,79 @@ pub fn local_weighted_on(
     table: &NeighborTable,
 ) -> Vec<f64> {
     local_weighted_with(pool, queries, alphas, &table.idx, table.width, |pid| {
+        let i = pid as usize;
+        (data.xs[i], data.ys[i], data.zs[i])
+    })
+}
+
+/// Layout-parameterized local (A5) stage-2 kernel.  `Aos` is exactly
+/// [`local_weighted_with`]; the blocked layouts first gather each row's
+/// live neighbors through `resolve` into per-worker columnar scratch
+/// (three `Vec`s allocated once per worker chunk and reused across its
+/// rows — no per-row allocation), then run [`accumulate_row_blocked`]
+/// over the gathered columns.  The gather keeps table order and drops
+/// padding exactly where the scalar loop skips it, so the weight fold
+/// visits the same points in the same order — **bit-identical** to the
+/// reference for every layout (all-padding rows produce the same 0/0).
+pub fn local_weighted_with_layout<F>(
+    pool: &Pool,
+    queries: &[(f64, f64)],
+    alphas: &[f64],
+    nbr_idx: &[u32],
+    width: usize,
+    layout: Layout,
+    resolve: F,
+) -> Vec<f64>
+where
+    F: Fn(u32) -> (f64, f64, f64) + Sync,
+{
+    if layout == Layout::Aos {
+        return local_weighted_with(pool, queries, alphas, nbr_idx, width, resolve);
+    }
+    let block = layout.micro_width();
+    assert_eq!(queries.len(), alphas.len());
+    assert_eq!(nbr_idx.len(), queries.len() * width);
+    let mut out = vec![0f64; queries.len()];
+    pool.for_each_slice_mut(&mut out, 64, |offset, chunk| {
+        let mut gx = vec![0f64; width];
+        let mut gy = vec![0f64; width];
+        let mut gz = vec![0f64; width];
+        for (j, slot) in chunk.iter_mut().enumerate() {
+            let qi = offset + j;
+            let (qx, qy) = queries[qi];
+            let a = alphas[qi];
+            let mut live = 0usize;
+            for &pid in &nbr_idx[qi * width..(qi + 1) * width] {
+                if pid == u32::MAX {
+                    continue; // padding (fewer than n points exist)
+                }
+                let (x, y, z) = resolve(pid);
+                gx[live] = x;
+                gy[live] = y;
+                gz[live] = z;
+                live += 1;
+            }
+            let cols = Columns::new(&gx[..live], &gy[..live], &gz[..live]);
+            let mut sw = 0.0f64;
+            let mut swz = 0.0f64;
+            accumulate_row_blocked(qx, qy, a, cols, block, &mut sw, &mut swz);
+            *slot = swz / sw;
+        }
+    });
+    out
+}
+
+/// Layout-parameterized twin of [`local_weighted_on`] (original point
+/// indices, compacted snapshots).
+pub fn local_weighted_layout_on(
+    pool: &Pool,
+    data: &PointSet,
+    queries: &[(f64, f64)],
+    alphas: &[f64],
+    table: &NeighborTable,
+    layout: Layout,
+) -> Vec<f64> {
+    local_weighted_with_layout(pool, queries, alphas, &table.idx, table.width, layout, |pid| {
         let i = pid as usize;
         (data.xs[i], data.ys[i], data.zs[i])
     })
@@ -642,5 +893,73 @@ mod tests {
         let tiny = Stage1Plan::new(10, RingRule::Exact, None, &params, 3, 100.0, SearchKind::Grid);
         assert_eq!(tiny.k, 3);
         assert_eq!(tiny.params.k, 3);
+    }
+
+    #[test]
+    fn layout_tags_roundtrip_and_parse_rejects_garbage() {
+        for (l, tag) in [
+            (Layout::Aos, "aos"),
+            (Layout::Soa, "soa"),
+            (Layout::AosoaTiles { width: 8 }, "aosoa:8"),
+            (Layout::AosoaTiles { width: 64 }, "aosoa:64"),
+        ] {
+            assert_eq!(l.tag(), tag);
+            assert_eq!(tag.parse::<Layout>().unwrap(), l);
+            assert!(l.is_valid());
+        }
+        // bare "aosoa" defaults its width
+        assert_eq!(
+            "aosoa".parse::<Layout>().unwrap(),
+            Layout::AosoaTiles { width: Layout::DEFAULT_AOSOA_WIDTH }
+        );
+        for bad in ["", "soaos", "aosoa:", "aosoa:0", "aosoa:65", "aosoa:x"] {
+            assert!(bad.parse::<Layout>().is_err(), "{bad:?} must not parse");
+        }
+        assert!(!Layout::AosoaTiles { width: 0 }.is_valid());
+        assert_eq!(Layout::AosoaTiles { width: 500 }.micro_width(), MAX_BLOCK);
+    }
+
+    #[test]
+    fn layout_choose_is_override_then_size() {
+        // override always wins
+        assert_eq!(Layout::choose(Some(Layout::Aos), 1 << 20, 1 << 20), Layout::Aos);
+        let aosoa = Layout::AosoaTiles { width: 8 };
+        assert_eq!(Layout::choose(Some(aosoa), 1, 1), aosoa);
+        // auto: small work scalar, big work blocked, never AosoaTiles
+        assert_eq!(Layout::choose(None, 3, 500), Layout::Aos);
+        assert_eq!(Layout::choose(None, 4096, 4096), Layout::Soa);
+        // exact threshold boundary
+        assert_eq!(Layout::choose(None, 1, Layout::AUTO_SOA_WORK - 1), Layout::Aos);
+        assert_eq!(Layout::choose(None, 1, Layout::AUTO_SOA_WORK), Layout::Soa);
+    }
+
+    #[test]
+    fn blocked_local_kernel_is_bit_identical_including_padding() {
+        let data = workload::uniform_square(37, 50.0, 979); // fewer points than gather width
+        let queries = workload::uniform_square(40, 50.0, 980).xy();
+        let params = AidwParams::default();
+        let pool = Pool::new(2);
+        let grid = EvenGrid::build_on(&pool, &data, None, &GridConfig::default()).unwrap();
+        let plan = Stage1Plan::new(
+            params.k,
+            RingRule::Exact,
+            Some(48), // > 37 live points -> padded rows
+            &params,
+            data.len(),
+            data.bounds().area(),
+            SearchKind::Grid,
+        );
+        let art = plan.execute_grid(&pool, &grid, &queries);
+        let table = art.neighbors.as_ref().unwrap();
+        let want = local_weighted_on(&pool, &data, &queries, art.alphas(), table);
+        for layout in [
+            Layout::Soa,
+            Layout::AosoaTiles { width: 1 },
+            Layout::AosoaTiles { width: 7 },
+            Layout::AosoaTiles { width: 64 },
+        ] {
+            let got = local_weighted_layout_on(&pool, &data, &queries, art.alphas(), table, layout);
+            assert_eq!(got, want, "{} must be bit-identical to aos", layout.tag());
+        }
     }
 }

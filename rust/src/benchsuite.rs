@@ -67,12 +67,50 @@ pub struct MeasureOpts {
     pub seed: u64,
     /// Region side length.
     pub side: f64,
+    /// Timed repetitions per measurement; the reported run is the one
+    /// with the **median** primary time (all of a run's fields stay
+    /// coherent — no mixing of fields across reps).
+    pub reps: usize,
+    /// Discarded warmup runs before the timed reps (cold caches, lazy
+    /// pool spin-up, first-touch page faults).
+    pub warmup: usize,
 }
 
 impl Default for MeasureOpts {
     fn default() -> Self {
-        MeasureOpts { serial: true, serial_sub_cap: 2048, seed: 42, side: 100.0 }
+        MeasureOpts {
+            serial: true,
+            serial_sub_cap: 2048,
+            seed: 42,
+            side: 100.0,
+            reps: 3,
+            warmup: 1,
+        }
     }
+}
+
+/// Timing hygiene shared by every `measure_*` section: run `f` `warmup`
+/// times discarded, then `reps` times (at least once), and return the
+/// run whose `time_of` value is the median.  Returning a whole run —
+/// rather than a per-field median — keeps each measurement's counters
+/// and timings from the *same* execution, so invariants like "exactly
+/// one cache hit" still hold on the reported numbers.
+pub fn median_rep<T, E>(
+    warmup: usize,
+    reps: usize,
+    mut f: impl FnMut() -> std::result::Result<T, E>,
+    time_of: impl Fn(&T) -> f64,
+) -> std::result::Result<T, E> {
+    for _ in 0..warmup {
+        std::hint::black_box(f()?);
+    }
+    let mut runs: Vec<T> = Vec::with_capacity(reps.max(1));
+    for _ in 0..reps.max(1) {
+        runs.push(f()?);
+    }
+    runs.sort_by(|a, b| time_of(a).total_cmp(&time_of(b)));
+    let mid = (runs.len() - 1) / 2;
+    Ok(runs.swap_remove(mid))
 }
 
 /// The paper's size label ("10K" = 10*1024 points).
@@ -495,6 +533,242 @@ pub fn measure_subscribe(
     })
 }
 
+// ---- warmup + median-of-N wrappers (one per measure_* section) ---------
+
+/// [`measure_size`] under the [`median_rep`] hygiene (primary time: the
+/// improved tiled total, the headline number of the paper's Table 2).
+pub fn measure_size_reps(
+    engine: &Engine,
+    pool: &Pool,
+    n: usize,
+    opts: &MeasureOpts,
+) -> Result<SizeMeasurement> {
+    median_rep(
+        opts.warmup,
+        opts.reps,
+        || measure_size(engine, pool, n, opts),
+        |m| m.improved_tiled.total_ms(),
+    )
+}
+
+/// [`measure_size_cpu`] under the [`median_rep`] hygiene (primary time:
+/// the exact-ring improved total).
+pub fn measure_size_cpu_reps(pool: &Pool, n: usize, opts: &MeasureOpts) -> CpuSizeMeasurement {
+    let r: std::result::Result<CpuSizeMeasurement, std::convert::Infallible> = median_rep(
+        opts.warmup,
+        opts.reps,
+        || Ok(measure_size_cpu(pool, n, opts)),
+        |m| m.improved_exact.total_ms(),
+    );
+    match r {
+        Ok(m) => m,
+        Err(e) => match e {},
+    }
+}
+
+/// [`measure_planner`] under the [`median_rep`] hygiene (primary time:
+/// the cold stage-1 + stage-2 sum).
+pub fn measure_planner_reps(
+    n: usize,
+    opts: &MeasureOpts,
+    threads: Option<usize>,
+) -> Result<PlannerMeasurement> {
+    median_rep(
+        opts.warmup,
+        opts.reps,
+        || measure_planner(n, opts, threads),
+        |m| m.stage1_ms + m.stage2_ms,
+    )
+}
+
+/// [`measure_live_cache`] under the [`median_rep`] hygiene (primary
+/// time: the cold mutated raster).
+pub fn measure_live_cache_reps(
+    n: usize,
+    opts: &MeasureOpts,
+    threads: Option<usize>,
+) -> Result<LiveCacheMeasurement> {
+    median_rep(
+        opts.warmup,
+        opts.reps,
+        || measure_live_cache(n, opts, threads),
+        |m| m.mutated_cold_ms,
+    )
+}
+
+/// [`measure_subscribe`] under the [`median_rep`] hygiene (primary time:
+/// the localized dirty update).
+pub fn measure_subscribe_reps(
+    n: usize,
+    opts: &MeasureOpts,
+    threads: Option<usize>,
+) -> Result<SubscribeMeasurement> {
+    median_rep(
+        opts.warmup,
+        opts.reps,
+        || measure_subscribe(n, opts, threads),
+        |m| m.update_dirty_ms,
+    )
+}
+
+// ---- stage-2 layout ablation (PR 8 tentpole) ----------------------------
+
+/// One layout's stage-2 times at one size.
+#[derive(Debug, Clone)]
+pub struct LayoutTimes {
+    /// Wire tag ("aos" / "soa" / "aosoa:16").
+    pub layout: String,
+    /// Dense (all-points) stage-2 ms.
+    pub dense_ms: f64,
+    /// Local (A5, gathered-neighbor) stage-2 ms.
+    pub local_ms: f64,
+}
+
+/// Stage-2 layout ablation at one size: the dense and local weighting
+/// kernels under each [`crate::aidw::plan::Layout`], every non-AoS
+/// result asserted **bit-identical** to the AoS reference before its
+/// time is reported (a layout that broke the summation-order contract
+/// would fail the bench, not just the tests).
+#[derive(Debug, Clone)]
+pub struct LayoutMeasurement {
+    pub n: usize,
+    /// In fixed aos / soa / aosoa:16 order.
+    pub layouts: Vec<LayoutTimes>,
+}
+
+/// Measure the layout ablation at one size.  Stage 1 runs once per mode
+/// (dense alphas; gathered table for local) outside the clock — only the
+/// weighting stage differs between layouts, so only it is timed.
+pub fn measure_layouts(pool: &Pool, n: usize, opts: &MeasureOpts) -> Result<LayoutMeasurement> {
+    use crate::aidw::plan::{self, Layout, SearchKind, Stage1Plan};
+    let params = AidwParams::default();
+    let (data, queries) = standard_workload(n, opts);
+    let grid = EvenGrid::build_on(pool, &data, None, &GridConfig::default())?;
+    let area = data.bounds().area();
+    let dense_art = Stage1Plan::new(
+        params.k,
+        RingRule::Exact,
+        None,
+        &params,
+        data.len(),
+        area,
+        SearchKind::Grid,
+    )
+    .execute_grid(pool, &grid, &queries);
+    let local_art = Stage1Plan::new(
+        params.k,
+        RingRule::Exact,
+        Some(32usize.max(params.k)),
+        &params,
+        data.len(),
+        area,
+        SearchKind::Grid,
+    )
+    .execute_grid(pool, &grid, &queries);
+    let table = local_art.neighbors.as_ref().expect("gathering plan produces a table");
+
+    let dense_ref = crate::aidw::pipeline::weighted_stage_layout_on(
+        pool,
+        &data,
+        &queries,
+        dense_art.alphas(),
+        Layout::Aos,
+    );
+    let local_ref = plan::local_weighted_layout_on(
+        pool,
+        &data,
+        &queries,
+        local_art.alphas(),
+        table,
+        Layout::Aos,
+    );
+
+    let mut layouts = Vec::new();
+    for layout in [
+        Layout::Aos,
+        Layout::Soa,
+        Layout::AosoaTiles { width: Layout::DEFAULT_AOSOA_WIDTH },
+    ] {
+        let (dense_ms, dense_out) = median_rep(
+            opts.warmup,
+            opts.reps,
+            || -> Result<(f64, Vec<f64>)> {
+                let t0 = std::time::Instant::now();
+                let v = crate::aidw::pipeline::weighted_stage_layout_on(
+                    pool,
+                    &data,
+                    &queries,
+                    dense_art.alphas(),
+                    layout,
+                );
+                Ok((t0.elapsed().as_secs_f64() * 1e3, v))
+            },
+            |r| r.0,
+        )?;
+        if dense_out != dense_ref {
+            return Err(Error::Service(format!(
+                "dense layout {} diverged bitwise from AoS",
+                layout.tag()
+            )));
+        }
+        let (local_ms, local_out) = median_rep(
+            opts.warmup,
+            opts.reps,
+            || -> Result<(f64, Vec<f64>)> {
+                let t0 = std::time::Instant::now();
+                let v = plan::local_weighted_layout_on(
+                    pool,
+                    &data,
+                    &queries,
+                    local_art.alphas(),
+                    table,
+                    layout,
+                );
+                Ok((t0.elapsed().as_secs_f64() * 1e3, v))
+            },
+            |r| r.0,
+        )?;
+        if local_out != local_ref {
+            return Err(Error::Service(format!(
+                "local layout {} diverged bitwise from AoS",
+                layout.tag()
+            )));
+        }
+        layouts.push(LayoutTimes { layout: layout.tag(), dense_ms, local_ms });
+    }
+    Ok(LayoutMeasurement { n, layouts })
+}
+
+/// The `layout` section of `BENCH_aidw.json`.
+fn layout_json(layouts: &[LayoutMeasurement]) -> Json {
+    Json::Arr(
+        layouts
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("n", Json::Num(m.n as f64)),
+                    ("label", Json::Str(size_label(m.n))),
+                    (
+                        "layouts",
+                        Json::Arr(
+                            m.layouts
+                                .iter()
+                                .map(|l| {
+                                    Json::obj(vec![
+                                        ("layout", Json::Str(l.layout.clone())),
+                                        ("dense_stage2_ms", Json::Num(l.dense_ms)),
+                                        ("local_stage2_ms", Json::Num(l.local_ms)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// The `subscribe` section of `BENCH_aidw.json`.
 fn subscribe_json(subs: &[SubscribeMeasurement]) -> Json {
     Json::Arr(
@@ -578,11 +852,13 @@ fn variant_json(v: &VariantTimes) -> Json {
 /// stage times plus the planner section (stage1/stage2/coalesce/
 /// cache-hit) and the mutated-dataset cache section, self-describing
 /// enough to diff across PRs.
+#[allow(clippy::too_many_arguments)]
 pub fn cpu_bench_json(
     results: &[CpuSizeMeasurement],
     planner: &[PlannerMeasurement],
     live_cache: &[LiveCacheMeasurement],
     subscribe: &[SubscribeMeasurement],
+    layouts: &[LayoutMeasurement],
     threads: usize,
     seed: u64,
 ) -> Json {
@@ -596,6 +872,7 @@ pub fn cpu_bench_json(
         ("planner", planner_json(planner)),
         ("live_cache", live_cache_json(live_cache)),
         ("subscribe", subscribe_json(subscribe)),
+        ("layout", layout_json(layouts)),
         (
             "sizes",
             Json::Arr(
@@ -631,11 +908,13 @@ pub fn cpu_bench_json(
 /// `BENCH_aidw.json` document for a full PJRT run (all five paper
 /// versions per size, plus the planner and mutated-dataset cache
 /// sections).
+#[allow(clippy::too_many_arguments)]
 pub fn pjrt_bench_json(
     results: &[SizeMeasurement],
     planner: &[PlannerMeasurement],
     live_cache: &[LiveCacheMeasurement],
     subscribe: &[SubscribeMeasurement],
+    layouts: &[LayoutMeasurement],
     threads: usize,
     seed: u64,
 ) -> Json {
@@ -649,6 +928,7 @@ pub fn pjrt_bench_json(
         ("planner", planner_json(planner)),
         ("live_cache", live_cache_json(live_cache)),
         ("subscribe", subscribe_json(subscribe)),
+        ("layout", layout_json(layouts)),
         (
             "sizes",
             Json::Arr(
@@ -731,12 +1011,30 @@ mod tests {
     }
 
     #[test]
+    fn median_rep_returns_the_median_run_after_warmup() {
+        let mut calls = 0u32;
+        // times 30, 10, 20 after one discarded warmup -> median run is 20
+        let times = [99.0, 30.0, 10.0, 20.0];
+        let got: std::result::Result<f64, std::convert::Infallible> =
+            median_rep(1, 3, || { let t = times[calls as usize]; calls += 1; Ok(t) }, |t| *t);
+        assert_eq!(calls, 4, "1 warmup + 3 reps");
+        assert_eq!(got.unwrap(), 20.0);
+        // reps = 0 still measures once
+        let one: std::result::Result<f64, std::convert::Infallible> =
+            median_rep(0, 0, || Ok(7.0), |t| *t);
+        assert_eq!(one.unwrap(), 7.0);
+    }
+
+    #[test]
     fn cpu_suite_measures_and_serializes() {
         let pool = Pool::new(2);
-        let opts = MeasureOpts { serial_sub_cap: 64, ..Default::default() };
+        // keep the suite test fast: single rep, no warmup (the hygiene
+        // path itself is covered above)
+        let opts =
+            MeasureOpts { serial_sub_cap: 64, reps: 1, warmup: 0, ..Default::default() };
         let sizes = [256usize, 512];
         let results: Vec<CpuSizeMeasurement> =
-            sizes.iter().map(|&n| measure_size_cpu(&pool, n, &opts)).collect();
+            sizes.iter().map(|&n| measure_size_cpu_reps(&pool, n, &opts)).collect();
         for m in &results {
             assert!(m.serial_ms.unwrap() > 0.0);
             assert!(m.improved_exact.total_ms() > 0.0);
@@ -744,7 +1042,7 @@ mod tests {
         }
         let planner: Vec<PlannerMeasurement> = sizes
             .iter()
-            .map(|&n| measure_planner(n, &opts, Some(2)).unwrap())
+            .map(|&n| measure_planner_reps(n, &opts, Some(2)).unwrap())
             .collect();
         for p in &planner {
             assert!(p.stage2_ms > 0.0);
@@ -754,7 +1052,7 @@ mod tests {
         }
         let live: Vec<LiveCacheMeasurement> = sizes
             .iter()
-            .map(|&n| measure_live_cache(n, &opts, Some(2)).unwrap())
+            .map(|&n| measure_live_cache_reps(n, &opts, Some(2)).unwrap())
             .collect();
         for l in &live {
             assert_eq!(l.warm_hits, 1, "mutated repeat raster must hit the cache");
@@ -762,7 +1060,7 @@ mod tests {
         }
         let subs: Vec<SubscribeMeasurement> = sizes
             .iter()
-            .map(|&n| measure_subscribe(n, &opts, Some(2)).unwrap())
+            .map(|&n| measure_subscribe_reps(n, &opts, Some(2)).unwrap())
             .collect();
         for s in &subs {
             assert!(s.dirty_tiles >= 1, "the mutated corner tile must be pushed");
@@ -771,7 +1069,21 @@ mod tests {
                 "a localized append must leave some tile provably clean"
             );
         }
-        let doc = cpu_bench_json(&results, &planner, &live, &subs, pool.threads(), opts.seed);
+        let layouts: Vec<LayoutMeasurement> = sizes
+            .iter()
+            .map(|&n| measure_layouts(&pool, n, &opts).unwrap())
+            .collect();
+        for m in &layouts {
+            assert_eq!(m.layouts.len(), 3, "aos, soa, aosoa:16");
+            assert_eq!(m.layouts[0].layout, "aos");
+            assert_eq!(m.layouts[1].layout, "soa");
+            assert_eq!(m.layouts[2].layout, "aosoa:16");
+            for l in &m.layouts {
+                assert!(l.dense_ms > 0.0 && l.local_ms > 0.0, "{}", l.layout);
+            }
+        }
+        let doc =
+            cpu_bench_json(&results, &planner, &live, &subs, &layouts, pool.threads(), opts.seed);
         let text = doc.to_string();
         // round-trips as JSON and carries the schema the perf trajectory
         // tooling greps for
@@ -804,5 +1116,12 @@ mod tests {
         assert!(sj[0].get("update_dirty_ms").as_f64().is_some());
         assert!(sj[0].get("full_recompute_ms").as_f64().is_some());
         assert!(sj[0].get("skipped_clean").as_usize().unwrap() >= 1);
+        let ly = back.get("layout").as_arr().unwrap();
+        assert_eq!(ly.len(), 2);
+        let per = ly[0].get("layouts").as_arr().unwrap();
+        assert_eq!(per.len(), 3);
+        assert_eq!(per[1].get("layout").as_str(), Some("soa"));
+        assert!(per[1].get("dense_stage2_ms").as_f64().is_some());
+        assert!(per[1].get("local_stage2_ms").as_f64().is_some());
     }
 }

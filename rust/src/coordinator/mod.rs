@@ -87,7 +87,7 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 
 use crate::aidw::params::AidwParams;
-use crate::aidw::pipeline::weighted_stage_on;
+use crate::aidw::pipeline::weighted_stage_layout_on;
 use crate::aidw::plan::{self, NeighborArtifact, NeighborTable, SearchKind, Stage1Plan, TilePlan};
 use crate::error::{Error, Result};
 use crate::geom::PointSet;
@@ -105,7 +105,7 @@ pub use batcher::BatchPolicy;
 pub use cache::NeighborCache;
 pub use dataset::{Dataset, DatasetRegistry};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use options::{LocalMode, QueryOptions, ResolvedOptions, Stage1Key, Stage2Key};
+pub use options::{Layout, LocalMode, QueryOptions, ResolvedOptions, Stage1Key, Stage2Key};
 pub use request::{
     Backend, InterpolationRequest, InterpolationResponse, StreamSummary, Ticket, TileResult,
     TileStream,
@@ -186,6 +186,11 @@ pub struct CoordinatorConfig {
     /// dropped (and counted) once the ring is full; 0 keeps sequencing
     /// but retains nothing.
     pub journal_capacity: usize,
+    /// Default CPU stage-2 data-access schedule (requests may override
+    /// via [`QueryOptions::layout`], protocol v2.7).  `None` = the
+    /// planner picks per job by stage-2 work size at planning time.
+    /// Numerics-neutral: every layout is bit-identical.
+    pub layout: Option<crate::aidw::plan::Layout>,
 }
 
 impl Default for CoordinatorConfig {
@@ -209,6 +214,7 @@ impl Default for CoordinatorConfig {
             tile_rows: None,
             stream_buffer_tiles: 2,
             journal_capacity: 1024,
+            layout: None,
         }
     }
 }
@@ -1254,6 +1260,14 @@ fn run_stage2_streamed(shared: &Shared, engine: &Option<Engine>, sj: &Stage2Job)
         let key = job.resolved.stage2_key();
         let plan = TilePlan::new(len, job.resolved.tile_rows);
         let echoed = echo_options(&job.resolved, &sj.snap);
+        // Stage-2 planning: pick this job's CPU data-access schedule —
+        // the request/config override, or by job size (rows × points
+        // each row sums: gathered width in local mode, the live count
+        // dense).  Bit-identical by contract, so per-job choice inside
+        // one coalesced batch is sound.
+        let points_per_row =
+            art.neighbors.as_ref().map(|t| t.width).unwrap_or(sj.snap.live_len);
+        let layout = plan::Layout::choose(job.resolved.layout, len, points_per_row);
         // Per-request trace (protocol v2.6): opt-in per job.  With
         // tracing off this is `None` and the loop below touches only the
         // pre-existing atomics — no allocation, no locks, no extra
@@ -1262,6 +1276,10 @@ fn run_stage2_streamed(shared: &Shared, engine: &Option<Engine>, sj: &Stage2Job)
             let fp = crate::obs::fnv1a_64(format!("{:?}", job.resolved.stage1_key()).as_bytes());
             let mut t =
                 crate::obs::Trace::new(&sj.batch.dataset, echoed.epoch, echoed.overlay, fp);
+            // the schedule the stage-2 planner actually chose — auditable
+            // even when the request didn't pin one (the options echo only
+            // carries explicit overrides, for v2.6 byte-compat)
+            t.layout = Some(layout.tag());
             // admission wait: enqueue -> taken into a forming batch;
             // coalesce wait: taken -> batch sealed.  A job missing its
             // admission stamp (shouldn't happen) charges the whole wait
@@ -1306,7 +1324,7 @@ fn run_stage2_streamed(shared: &Shared, engine: &Option<Engine>, sj: &Stage2Job)
                 .neighbors
                 .as_ref()
                 .map(|t| (&t.idx[gs * t.width..ge * t.width], t.width));
-            match run_stage2_tile(shared, engine, sj, &params, key, q, a, r, tbl) {
+            match run_stage2_tile(shared, engine, sj, &params, key, layout, q, a, r, tbl) {
                 Ok((values, a_s, i_s)) => {
                     alpha_extra_s += a_s;
                     interp_s += i_s;
@@ -1412,6 +1430,7 @@ fn run_stage2_tile(
     sj: &Stage2Job,
     params: &AidwParams,
     key: options::Stage2Key,
+    layout: plan::Layout,
     queries: &[(f64, f64)],
     alphas: &[f64],
     r_obs: &[f64],
@@ -1423,23 +1442,30 @@ fn run_stage2_tile(
         // cannot see overlay deltas; the compactor restores the artifact
         // path at the next epoch
         let v = match table {
-            Some((idx, width)) => crate::live::merged_local_weighted_on(
+            Some((idx, width)) => crate::live::merged_local_weighted_layout_on(
                 &shared.pool,
                 &sj.snap,
                 queries,
                 alphas,
                 idx,
                 width,
+                layout,
             ),
-            None => {
-                crate::live::merged_weighted_stage_on(&shared.pool, &sj.snap, queries, alphas)
-            }
+            None => crate::live::merged_weighted_stage_layout_on(
+                &shared.pool,
+                &sj.snap,
+                queries,
+                alphas,
+                layout,
+            ),
         };
         return Ok((v, 0.0, t0.elapsed().as_secs_f64()));
     }
     let dataset: &Dataset = &sj.snap.base;
     match engine {
         Some(engine) => {
+            // the device path has its own fixed layout; the CPU schedule
+            // knob does not apply here
             let exec = if shared.config.test_shapes {
                 AidwExecutor::new_test_shapes(engine)
             } else {
@@ -1455,15 +1481,23 @@ fn run_stage2_tile(
         }
         None => {
             // pure-rust stage 2 over the artifact's alphas (the one
-            // shared A5 kernel for local mode — local_weighted_with)
+            // shared A5 kernel for local mode, layout-dispatched)
             let v = match table {
-                Some((idx, width)) => {
-                    plan::local_weighted_with(&shared.pool, queries, alphas, idx, width, |pid| {
+                Some((idx, width)) => plan::local_weighted_with_layout(
+                    &shared.pool,
+                    queries,
+                    alphas,
+                    idx,
+                    width,
+                    layout,
+                    |pid| {
                         let i = pid as usize;
                         (dataset.points.xs[i], dataset.points.ys[i], dataset.points.zs[i])
-                    })
+                    },
+                ),
+                None => {
+                    weighted_stage_layout_on(&shared.pool, &dataset.points, queries, alphas, layout)
                 }
-                None => weighted_stage_on(&shared.pool, &dataset.points, queries, alphas),
             };
             Ok((v, 0.0, t0.elapsed().as_secs_f64()))
         }

@@ -28,6 +28,8 @@ use crate::error::{Error, Result};
 use crate::knn::grid_knn::RingRule;
 use crate::runtime::Variant;
 
+pub use crate::aidw::plan::Layout;
+
 use super::CoordinatorConfig;
 
 /// Stage-2 weighting scope override.
@@ -76,6 +78,12 @@ pub struct QueryOptions {
     /// no numerics, so it is part of neither stage key — a traced and an
     /// untraced request still coalesce and share cached artifacts.
     pub trace: Option<bool>,
+    /// Pin the CPU stage-2 data-access schedule (protocol v2.7 `layout`
+    /// field).  `None` inherits the coordinator default (itself `None` =
+    /// the planner picks by stage-2 work size at planning time).  The
+    /// blocked layouts are bit-identical to the scalar reference, so
+    /// like `tile_rows`/`trace` this is part of neither stage key.
+    pub layout: Option<Layout>,
 }
 
 impl QueryOptions {
@@ -147,6 +155,13 @@ impl QueryOptions {
         self
     }
 
+    /// Pin the CPU stage-2 data-access schedule (protocol v2.7;
+    /// numerics-neutral — every layout is bit-identical).
+    pub fn layout(mut self, layout: Layout) -> Self {
+        self.layout = Some(layout);
+        self
+    }
+
     /// True when no field overrides the coordinator defaults.
     pub fn is_default(&self) -> bool {
         *self == QueryOptions::default()
@@ -171,6 +186,7 @@ impl QueryOptions {
             epoch: None,
             overlay: None,
             trace: self.trace.unwrap_or(false),
+            layout: self.layout.or(config.layout),
         }
     }
 }
@@ -229,6 +245,15 @@ pub struct ResolvedOptions {
     /// into one batch and share cached stage-1 artifacts.  The disabled
     /// path tests this single bool and does nothing else.
     pub trace: bool,
+    /// The pinned CPU stage-2 data-access schedule, if the request (or
+    /// the coordinator config) pinned one; `None` = the planner chooses
+    /// per job at stage-2 planning time ([`Layout::choose`]) and records
+    /// the choice on the request trace, not here — which is what keeps
+    /// the no-override options echo byte-identical to v2.6.  Every
+    /// layout is bit-identical to the scalar reference, so this belongs
+    /// to **neither** stage key: jobs differing only in layout coalesce
+    /// and share cached artifacts.
+    pub layout: Option<Layout>,
 }
 
 impl Default for ResolvedOptions {
@@ -247,6 +272,7 @@ impl Default for ResolvedOptions {
             epoch: None,
             overlay: None,
             trace: false,
+            layout: None,
         }
     }
 }
@@ -335,6 +361,15 @@ impl ResolvedOptions {
             return Err(Error::InvalidArgument(
                 "tile_rows must be >= 1 (or unset for one whole-raster tile)".into(),
             ));
+        }
+        if let Some(l) = self.layout {
+            if !l.is_valid() {
+                return Err(Error::InvalidArgument(format!(
+                    "layout {} has an out-of-range tile width (1..={})",
+                    l.tag(),
+                    crate::aidw::plan::MAX_BLOCK
+                )));
+            }
         }
         Ok(())
     }
@@ -446,6 +481,35 @@ mod tests {
         assert!(traced.validate().is_ok());
         // explicit false == absent
         assert_eq!(QueryOptions::new().trace(false).resolve(&cfg), base);
+    }
+
+    #[test]
+    fn layout_is_in_neither_stage_key() {
+        // layout is a data-access schedule, bit-identical by contract:
+        // jobs differing only in layout must coalesce and share artifacts
+        let cfg = config();
+        let base = QueryOptions::new().resolve(&cfg);
+        assert_eq!(base.layout, None, "layout is planner-auto by default");
+        let soa = QueryOptions::new().layout(Layout::Soa).resolve(&cfg);
+        assert_eq!(soa.layout, Some(Layout::Soa));
+        assert_ne!(base, soa, "resolved sets differ");
+        assert_eq!(base.stage1_key(), soa.stage1_key());
+        assert_eq!(base.stage2_key(), soa.stage2_key());
+        assert!(soa.validate().is_ok());
+        // config default flows through when the request is silent
+        let mut cfg2 = config();
+        cfg2.layout = Some(Layout::AosoaTiles { width: 8 });
+        assert_eq!(
+            QueryOptions::new().resolve(&cfg2).layout,
+            Some(Layout::AosoaTiles { width: 8 })
+        );
+        assert_eq!(
+            QueryOptions::new().layout(Layout::Aos).resolve(&cfg2).layout,
+            Some(Layout::Aos)
+        );
+        // programmatic out-of-range AosoaTiles width fails validation
+        let bad = QueryOptions::new().layout(Layout::AosoaTiles { width: 0 }).resolve(&cfg);
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -154,6 +154,15 @@ impl PointSet {
         Aabb::from_points(&self.xs, &self.ys)
     }
 
+    /// Borrowed columnar view of the whole set.  Because `PointSet` is
+    /// already SoA, this is a zero-cost reborrow — the "columnar view
+    /// built once per epoch" that the layout-parameterized stage-2
+    /// kernels consume, carried through compaction for free (compaction
+    /// rebuilds the `PointSet` itself, and the view borrows from it).
+    pub fn columns(&self) -> Columns<'_> {
+        Columns { xs: &self.xs, ys: &self.ys, zs: &self.zs }
+    }
+
     /// Min/max of the value channel, or None if empty.
     pub fn z_range(&self) -> Option<(f64, f64)> {
         if self.is_empty() {
@@ -166,6 +175,46 @@ impl PointSet {
             hi = hi.max(z);
         }
         Some((lo, hi))
+    }
+}
+
+/// Borrowed columnar (SoA) view over a contiguous range of samples.
+///
+/// The layout-parameterized stage-2 kernels walk these parallel slices in
+/// fixed-width blocks; slicing a view (`sub`) is how cache-blocked loops
+/// carve L1/L2-resident panels out of a full epoch without copying.
+#[derive(Debug, Clone, Copy)]
+pub struct Columns<'a> {
+    pub xs: &'a [f64],
+    pub ys: &'a [f64],
+    pub zs: &'a [f64],
+}
+
+impl<'a> Columns<'a> {
+    /// View over parallel slices (must be equal length).
+    pub fn new(xs: &'a [f64], ys: &'a [f64], zs: &'a [f64]) -> Columns<'a> {
+        assert_eq!(xs.len(), ys.len());
+        assert_eq!(xs.len(), zs.len());
+        Columns { xs, ys, zs }
+    }
+
+    /// Number of samples in view.
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// True when the view covers no samples.
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Sub-view over `[start, end)` (a cache panel).
+    pub fn sub(&self, start: usize, end: usize) -> Columns<'a> {
+        Columns {
+            xs: &self.xs[start..end],
+            ys: &self.ys[start..end],
+            zs: &self.zs[start..end],
+        }
     }
 }
 
@@ -226,5 +275,30 @@ mod tests {
     #[should_panic]
     fn pointset_soa_length_mismatch_panics() {
         let _ = PointSet::from_soa(vec![1.0], vec![1.0, 2.0], vec![1.0]);
+    }
+
+    #[test]
+    fn columns_view_and_sub() {
+        let mut p = PointSet::with_capacity(3);
+        p.push(1.0, 2.0, 3.0);
+        p.push(4.0, 5.0, 6.0);
+        p.push(7.0, 8.0, 9.0);
+        let c = p.columns();
+        assert_eq!(c.len(), 3);
+        assert!(!c.is_empty());
+        let s = c.sub(1, 3);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.xs, &[4.0, 7.0]);
+        assert_eq!(s.ys, &[5.0, 8.0]);
+        assert_eq!(s.zs, &[6.0, 9.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn columns_length_mismatch_panics() {
+        let xs = [1.0];
+        let ys = [1.0, 2.0];
+        let zs = [1.0];
+        let _ = Columns::new(&xs, &ys, &zs);
     }
 }

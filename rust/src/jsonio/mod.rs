@@ -43,13 +43,7 @@ impl Json {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
-                    let _ = write!(out, "{}", *n as i64);
-                } else {
-                    let _ = write!(out, "{n}");
-                }
-            }
+            Json::Num(n) => write_num(out, *n),
             Json::Str(s) => write_escaped(s, out),
             Json::Arr(xs) => {
                 out.push('[');
@@ -147,6 +141,20 @@ impl Json {
                     .ok_or_else(|| Error::Json { offset: 0, message: "expected number".into() })
             })
             .collect()
+    }
+}
+
+/// Append a JSON number exactly as [`Json::Num`] serializes it: integral
+/// values inside the exactly-representable i64 window print without a
+/// fraction, everything else via Rust's shortest-roundtrip `{n}` format.
+/// The zero-copy protocol writers ([`crate::service::protocol`]) call this
+/// directly so their hand-built frames stay byte-identical to Json-built
+/// ones.
+pub fn write_num(out: &mut String, n: f64) {
+    if n.fract() == 0.0 && n.abs() < 9e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
     }
 }
 
@@ -429,5 +437,28 @@ mod tests {
     fn num_array_builder() {
         let v = Json::num_array(&[1.0, 2.5]);
         assert_eq!(v.to_string(), "[1,2.5]");
+    }
+
+    #[test]
+    fn write_num_matches_json_num() {
+        let cases = [
+            0.0,
+            -0.0,
+            5.0,
+            -5.0,
+            5.5,
+            -1.25,
+            1e-12,
+            8.9e15,
+            9.1e15, // above the i64-safe window: keeps float form
+            f64::MAX,
+            1234567890.0,
+            0.1 + 0.2, // shortest-roundtrip form
+        ];
+        for n in cases {
+            let mut s = String::new();
+            write_num(&mut s, n);
+            assert_eq!(s, Json::Num(n).to_string(), "n={n}");
+        }
     }
 }

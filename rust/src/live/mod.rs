@@ -65,7 +65,7 @@ use crate::aidw::alpha;
 use crate::coordinator::dataset::Dataset;
 use crate::coordinator::snapshot::validate_dataset_name;
 use crate::error::{Error, Result};
-use crate::geom::{dist2, Aabb, PointSet, EPS_D2};
+use crate::geom::{dist2, Aabb, Columns, PointSet, EPS_D2};
 use crate::grid::GridConfig;
 use crate::knn::merged::MergedView;
 use crate::pool::Pool;
@@ -1193,19 +1193,95 @@ pub fn merged_local_weighted_on(
     nbr_idx: &[u32],
     width: usize,
 ) -> Vec<f64> {
+    merged_local_weighted_layout_on(
+        pool,
+        snap,
+        queries,
+        alphas,
+        nbr_idx,
+        width,
+        crate::aidw::plan::Layout::Aos,
+    )
+}
+
+/// Layout-parameterized twin of [`merged_local_weighted_on`]: the same
+/// merged-index resolution plugged into the layout-dispatching A5 kernel
+/// ([`crate::aidw::plan::local_weighted_with_layout`]) — `Aos` is the
+/// scalar reference, the blocked layouts gather each row's live
+/// neighbors into per-worker columnar scratch first.  Bit-identical for
+/// every layout.
+pub fn merged_local_weighted_layout_on(
+    pool: &Pool,
+    snap: &LiveSnapshot,
+    queries: &[(f64, f64)],
+    alphas: &[f64],
+    nbr_idx: &[u32],
+    width: usize,
+    layout: crate::aidw::plan::Layout,
+) -> Vec<f64> {
     let base = &snap.base.points;
     let n_base = base.len() as u32;
     let delta = &snap.delta;
     // the one shared A5 kernel, with merged-index resolution plugged in
-    crate::aidw::plan::local_weighted_with(pool, queries, alphas, nbr_idx, width, |pid| {
-        if pid < n_base {
-            let i = pid as usize;
-            (base.xs[i], base.ys[i], base.zs[i])
-        } else {
-            let p = (pid - n_base) as usize;
-            (delta.points.xs[p], delta.points.ys[p], delta.points.zs[p])
+    crate::aidw::plan::local_weighted_with_layout(
+        pool,
+        queries,
+        alphas,
+        nbr_idx,
+        width,
+        layout,
+        |pid| {
+            if pid < n_base {
+                let i = pid as usize;
+                (base.xs[i], base.ys[i], base.zs[i])
+            } else {
+                let p = (pid - n_base) as usize;
+                (delta.points.xs[p], delta.points.ys[p], delta.points.zs[p])
+            }
+        },
+    )
+}
+
+/// Layout-parameterized twin of [`merged_weighted_stage_on`].  For the
+/// blocked layouts the live appends are gathered into columnar scratch
+/// **once per call** (append order preserved, off the per-row path) and
+/// handed to the shared blocked dense core as the tail range, so each
+/// row still sums base-live points in base order then live appends in
+/// append order — bit-identical to the scalar merged reference.
+/// Tombstoned bases (`base_dead` non-empty — a transient state between
+/// delete and compaction) fall back to the scalar reference: soundness
+/// over cleverness, same as the subscription dirty bound.
+pub fn merged_weighted_stage_layout_on(
+    pool: &Pool,
+    snap: &LiveSnapshot,
+    queries: &[(f64, f64)],
+    alphas: &[f64],
+    layout: crate::aidw::plan::Layout,
+) -> Vec<f64> {
+    use crate::aidw::plan::Layout;
+    let delta = &snap.delta;
+    if layout == Layout::Aos || !delta.base_dead.is_empty() {
+        return merged_weighted_stage_on(pool, snap, queries, alphas);
+    }
+    let n_delta_live = (0..delta.points.len()).filter(|&p| delta.delta_live(p)).count();
+    let mut dx = Vec::with_capacity(n_delta_live);
+    let mut dy = Vec::with_capacity(n_delta_live);
+    let mut dz = Vec::with_capacity(n_delta_live);
+    for p in 0..delta.points.len() {
+        if delta.delta_live(p) {
+            dx.push(delta.points.xs[p]);
+            dy.push(delta.points.ys[p]);
+            dz.push(delta.points.zs[p]);
         }
-    })
+    }
+    crate::aidw::pipeline::blocked_dense_on(
+        pool,
+        snap.base.points.columns(),
+        Columns::new(&dx, &dy, &dz),
+        queries,
+        alphas,
+        layout.micro_width(),
+    )
 }
 
 #[cfg(test)]

@@ -1,7 +1,7 @@
 //! `aidw` — CLI for the AIDW interpolation service.
 //!
 //! Subcommands:
-//!   serve        start the TCP JSON service (protocol v2.6)
+//!   serve        start the TCP JSON service (protocol v2.7)
 //!   interpolate  one-shot interpolation over a generated/loaded workload
 //!   query        interpolate against a running service over TCP
 //!                (--stream consumes the v2.4 tiled streaming response;
@@ -44,20 +44,20 @@ USAGE:
                    [--ring exact|paper+1] [--local N] [--snapshots DIR]
                    [--live-dir DIR] [--compact-threshold N] [--wal-sync]
                    [--neighbor-cache N] [--tile-rows N] [--stream-buffer N]
-                   [--journal N] [--metrics-text]
+                   [--journal N] [--metrics-text] [--layout aos|soa|aosoa:N]
   aidw interpolate [--engine serving|pipeline|serial] [--cpu-only]
                    [--data N] [--queries N] [--side 100] [--seed 42]
                    [--variant naive|tiled] [--k 10] [--ring exact|paper+1]
                    [--local N] [--alpha-levels 0.5,1,2,3,4]
                    [--rmin 0] [--rmax 2] [--area A]
                    [--dist uniform|clustered|terrain] [--file pts.csv]
-                   [--out out.csv] [--tile-rows N]
+                   [--out out.csv] [--tile-rows N] [--layout aos|soa|aosoa:N]
   aidw query       --addr HOST:PORT --dataset NAME [--queries N] [--side 100]
                    [--seed 42] [--stream] [--trace] [--tile-rows N]
                    [--out out.csv]
                    [--variant naive|tiled] [--k 10] [--ring exact|paper+1]
                    [--local N] [--alpha-levels 0.5,1,2,3,4]
-                   [--rmin 0] [--rmax 2] [--area A]
+                   [--rmin 0] [--rmax 2] [--area A] [--layout aos|soa|aosoa:N]
   aidw subscribe   --addr HOST:PORT --dataset NAME [--queries N] [--side 100]
                    [--seed 42] [--updates N] [--out out.csv]
                    [--variant naive|tiled] [--k 10] [--ring exact|paper+1]
@@ -66,8 +66,9 @@ USAGE:
                    [--file pts.csv | --n N --side 100 --seed 42 --dist uniform]
                    [--ids 3,17,9000]
   aidw events      --addr HOST:PORT [--since N] [--max 100]
-  aidw bench       [--sizes 1024,4096,16384] [--seed 42] [--threads N]
-                   [--serial-cap 2048] [--no-serial] [--out BENCH_aidw.json]
+  aidw bench       [--sizes 1024,4096,16384 | --sizes small] [--seed 42]
+                   [--threads N] [--serial-cap 2048] [--no-serial]
+                   [--reps 3] [--warmup 1] [--out BENCH_aidw.json]
   aidw generate    [--n N] [--side 100] [--seed 42]
                    [--dist uniform|clustered|terrain|sensors] --out file.csv
   aidw info
@@ -97,6 +98,14 @@ compactions, cache and subscription activity); poll with `--since
 NEXT_SEQ` to tail it.  `serve --journal N` sizes the journal ring
 buffer; `serve --metrics-text` prints a Prometheus-style metrics
 rendering every 60s (the same text the v2.6 `metrics_text` op returns).
+
+Stage-2 layout (protocol v2.7): `--layout aos|soa|aosoa:N` pins the
+weighting kernel's memory schedule (bit-identical output either way);
+absent, the planner picks per request by raster size and records its
+choice on the `--trace` timeline.  `aidw bench` times every layout in
+the `layout` section of BENCH_aidw.json; `--sizes small` is shorthand
+for a quick 256,512 run, and `--reps/--warmup` set the median-of-N
+timing hygiene every bench section uses.
 ";
 
 fn main() {
@@ -173,6 +182,10 @@ fn config_from(args: &Args) -> Result<CoordinatorConfig> {
     }
     // observability: event-journal ring-buffer capacity
     cfg.journal_capacity = args.get_usize("journal", cfg.journal_capacity)?;
+    // v2.7: default stage-2 layout (absent = per-request planner choice)
+    if let Some(l) = args.get("layout") {
+        cfg.layout = Some(l.parse::<aidw::coordinator::Layout>()?);
+    }
     Ok(cfg)
 }
 
@@ -219,6 +232,10 @@ fn options_from(args: &Args) -> Result<QueryOptions> {
     }
     if args.has("trace") {
         o = o.trace(true);
+    }
+    // v2.7: pin the stage-2 layout (absent = planner's choice)
+    if let Some(l) = args.get("layout") {
+        o = o.layout(l.parse::<aidw::coordinator::Layout>()?);
     }
     Ok(o)
 }
@@ -358,6 +375,8 @@ fn mutate(args: &Args) -> Result<()> {
 /// trajectory artifact (sizes x variants x stage times).
 fn bench(args: &Args) -> Result<()> {
     let sizes: Vec<usize> = match args.get("sizes") {
+        // `small` = the CI bench-smoke sizes: fast enough to gate on
+        Some("small") => vec![256, 512],
         Some(s) => s
             .split(',')
             .map(|x| {
@@ -374,6 +393,8 @@ fn bench(args: &Args) -> Result<()> {
         serial_sub_cap: args.get_usize("serial-cap", 2048)?,
         seed,
         side: args.get_f64("side", 100.0)?,
+        reps: args.get_usize("reps", 3)?.max(1),
+        warmup: args.get_usize("warmup", 1)?,
     };
     let pool = match args.get_usize("threads", 0)? {
         0 => aidw::pool::Pool::machine_sized(),
@@ -390,7 +411,7 @@ fn bench(args: &Args) -> Result<()> {
     let mut planner = Vec::with_capacity(sizes.len());
     for &n in &sizes {
         println!("  planner n = {} ...", aidw::benchsuite::size_label(n));
-        planner.push(aidw::benchsuite::measure_planner(n, &opts, threads)?);
+        planner.push(aidw::benchsuite::measure_planner_reps(n, &opts, threads)?);
     }
 
     // mutated-dataset cache suite: repeated rasters on an uncompacted
@@ -398,7 +419,7 @@ fn bench(args: &Args) -> Result<()> {
     let mut live_cache = Vec::with_capacity(sizes.len());
     for &n in &sizes {
         println!("  live-cache n = {} ...", aidw::benchsuite::size_label(n));
-        live_cache.push(aidw::benchsuite::measure_live_cache(n, &opts, threads)?);
+        live_cache.push(aidw::benchsuite::measure_live_cache_reps(n, &opts, threads)?);
     }
 
     // subscription suite: dirty-tile incremental update vs a from-scratch
@@ -406,7 +427,15 @@ fn bench(args: &Args) -> Result<()> {
     let mut subscribe = Vec::with_capacity(sizes.len());
     for &n in &sizes {
         println!("  subscribe n = {} ...", aidw::benchsuite::size_label(n));
-        subscribe.push(aidw::benchsuite::measure_subscribe(n, &opts, threads)?);
+        subscribe.push(aidw::benchsuite::measure_subscribe_reps(n, &opts, threads)?);
+    }
+
+    // layout ablation (PR 8): dense + local stage-2 under every stage-2
+    // layout, bit-identity asserted inside the measurement
+    let mut layouts = Vec::with_capacity(sizes.len());
+    for &n in &sizes {
+        println!("  layout n = {} ...", aidw::benchsuite::size_label(n));
+        layouts.push(aidw::benchsuite::measure_layouts(&pool, n, &opts)?);
     }
 
     let artifact_dir = aidw::runtime::default_artifact_dir();
@@ -416,13 +445,14 @@ fn bench(args: &Args) -> Result<()> {
         let mut results = Vec::with_capacity(sizes.len());
         for &n in &sizes {
             println!("  measuring n = {} ...", aidw::benchsuite::size_label(n));
-            results.push(aidw::benchsuite::measure_size(&engine, &pool, n, &opts)?);
+            results.push(aidw::benchsuite::measure_size_reps(&engine, &pool, n, &opts)?);
         }
         aidw::benchsuite::pjrt_bench_json(
             &results,
             &planner,
             &live_cache,
             &subscribe,
+            &layouts,
             pool.threads(),
             seed,
         )
@@ -431,13 +461,14 @@ fn bench(args: &Args) -> Result<()> {
         let mut results = Vec::with_capacity(sizes.len());
         for &n in &sizes {
             println!("  measuring n = {} ...", aidw::benchsuite::size_label(n));
-            results.push(aidw::benchsuite::measure_size_cpu(&pool, n, &opts));
+            results.push(aidw::benchsuite::measure_size_cpu_reps(&pool, n, &opts));
         }
         aidw::benchsuite::cpu_bench_json(
             &results,
             &planner,
             &live_cache,
             &subscribe,
+            &layouts,
             pool.threads(),
             seed,
         )

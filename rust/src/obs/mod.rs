@@ -120,13 +120,26 @@ pub struct Trace {
     /// FNV-1a fingerprint of the stage-1 admission key — two traces with
     /// equal fingerprints shared (or could have shared) one kNN sweep.
     pub stage1_fp: u64,
+    /// The CPU stage-2 data-access schedule the planner chose for this
+    /// request (protocol v2.7: `"aos"`, `"soa"`, `"aosoa:<width>"`).
+    /// Recorded here — not on the options echo, which only carries an
+    /// explicit override — so auto-planned requests stay byte-identical
+    /// to v2.6 while the choice is still auditable per request.
+    pub layout: Option<String>,
     pub spans: Vec<Span>,
 }
 
 impl Trace {
     /// A trace stamped with the serving identity, no spans yet.
     pub fn new(dataset: &str, epoch: Option<u64>, overlay: Option<u64>, stage1_fp: u64) -> Trace {
-        Trace { dataset: dataset.to_string(), epoch, overlay, stage1_fp, spans: Vec::new() }
+        Trace {
+            dataset: dataset.to_string(),
+            epoch,
+            overlay,
+            stage1_fp,
+            layout: None,
+            spans: Vec::new(),
+        }
     }
 
     /// Append a plain span.

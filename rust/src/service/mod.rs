@@ -1,4 +1,4 @@
-//! TCP interpolation service: newline-delimited JSON (protocol v2.6, see
+//! TCP interpolation service: newline-delimited JSON (protocol v2.7, see
 //! [`protocol`]) over a [`crate::coordinator::Coordinator`], plus the
 //! matching blocking client.
 //!
@@ -19,6 +19,13 @@
 //! per-request span timeline to the response (or done frame), and the
 //! `events` / `metrics_text` ops expose the coordinator's event journal
 //! and a Prometheus-style metrics rendering.
+//!
+//! v2.7 makes the tile hot path allocation-free: every tile frame —
+//! streamed or pushed — is serialized by [`protocol::stream_tile_into`]
+//! into one per-connection scratch `String` that is cleared and reused
+//! across frames (byte-identical output; see the protocol module's
+//! compatibility contract), and the client reuses one line buffer
+//! across replies instead of allocating per line.
 
 pub mod protocol;
 
@@ -106,6 +113,10 @@ fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     let mut line = String::new();
+    // one reusable serialization buffer for the connection's lifetime:
+    // the tile hot paths (stream + subscription) serialize every frame
+    // into it instead of allocating a String per frame (v2.7)
+    let mut scratch = String::new();
     loop {
         line.clear();
         if reader.read_line(&mut line)? == 0 {
@@ -121,14 +132,21 @@ fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
             }
             // v2.5: flips the connection into subscription mode until the
             // client unsubscribes or the subscription terminates
-            Ok(Request::Subscribe { dataset, qx, qy, options }) => {
-                serve_subscription(&coord, dataset, qx, qy, options, &mut reader, &mut writer)?
-            }
+            Ok(Request::Subscribe { dataset, qx, qy, options }) => serve_subscription(
+                &coord,
+                dataset,
+                qx,
+                qy,
+                options,
+                &mut reader,
+                &mut writer,
+                &mut scratch,
+            )?,
             Ok(Request::Unsubscribe) => write_line(
                 &mut writer,
                 &protocol::err_line("bad_request", "no active subscription"),
             )?,
-            Ok(req) => dispatch(&coord, req, &mut writer)?,
+            Ok(req) => dispatch(&coord, req, &mut writer, &mut scratch)?,
         }
     }
 }
@@ -150,6 +168,7 @@ fn serve_stream(
     coord: &Coordinator,
     req: InterpolationRequest,
     w: &mut BufWriter<TcpStream>,
+    scratch: &mut String,
 ) -> std::io::Result<()> {
     let rows = req.queries.len();
     let mut stream = match coord.submit_stream(req) {
@@ -170,10 +189,11 @@ fn serve_stream(
                     )?;
                     wrote_header = true;
                 }
-                write_line(
-                    w,
-                    &protocol::stream_tile(tile.tile_index, tile.row_range.0, &tile.values),
-                )?;
+                // v2.7 zero-copy tile path: serialize into the reused
+                // per-connection buffer, no per-frame String
+                scratch.clear();
+                protocol::stream_tile_into(scratch, tile.tile_index, tile.row_range.0, &tile.values);
+                write_line(w, scratch)?;
             }
             Some(Err(e)) => {
                 // before the header: the stream never started — plain
@@ -248,6 +268,7 @@ fn serve_stream(
 /// arrive as structured `{"ok":false,"done":true,..}` frames.  Any
 /// other op while subscribed is answered with `bad_request` without
 /// disturbing the feed.
+#[allow(clippy::too_many_arguments)]
 fn serve_subscription(
     coord: &Coordinator,
     dataset: String,
@@ -256,6 +277,7 @@ fn serve_subscription(
     options: QueryOptions,
     reader: &mut BufReader<TcpStream>,
     writer: &mut BufWriter<TcpStream>,
+    scratch: &mut String,
 ) -> std::io::Result<()> {
     let queries: Vec<(f64, f64)> = qx.into_iter().zip(qy).collect();
     let req = InterpolationRequest::new(&dataset, queries).with_options(options);
@@ -281,7 +303,12 @@ fn serve_subscription(
             match frame {
                 Ok(SubscriptionFrame::Update(u)) => write_line(writer, &protocol::sub_update(&u))?,
                 Ok(SubscriptionFrame::Tile(t)) => {
-                    write_line(writer, &protocol::stream_tile(t.tile_index, t.row0, &t.values))?
+                    // v2.7 zero-copy tile path (same buffer the stream
+                    // path reuses; the connection serves one mode at a
+                    // time)
+                    scratch.clear();
+                    protocol::stream_tile_into(scratch, t.tile_index, t.row0, &t.values);
+                    write_line(writer, scratch)?
                 }
                 Ok(SubscriptionFrame::Err(e)) | Err(e) => {
                     write_line(writer, &protocol::stream_err_done(&e))?;
@@ -337,6 +364,7 @@ fn dispatch(
     coord: &Coordinator,
     req: Request,
     w: &mut BufWriter<TcpStream>,
+    scratch: &mut String,
 ) -> std::io::Result<()> {
     let line = match req {
         Request::Ping => protocol::ok_pong(),
@@ -351,7 +379,7 @@ fn dispatch(
             let queries: Vec<(f64, f64)> = qx.into_iter().zip(qy).collect();
             let req = InterpolationRequest::new(&dataset, queries).with_options(options);
             if stream {
-                return serve_stream(coord, req, w);
+                return serve_stream(coord, req, w, scratch);
             }
             match coord.interpolate(req) {
                 Ok(resp) => match &resp.trace {
@@ -464,6 +492,9 @@ pub struct InterpolationReply {
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    /// Reused reply-line buffer (v2.7): one allocation per connection,
+    /// not one per reply — tile-heavy streams read thousands of lines.
+    line_buf: String,
 }
 
 impl Client {
@@ -474,6 +505,7 @@ impl Client {
         Ok(Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
+            line_buf: String::new(),
         })
     }
 
@@ -485,12 +517,12 @@ impl Client {
     }
 
     fn read_json_line(&mut self) -> Result<Json> {
-        let mut reply = String::new();
-        self.reader.read_line(&mut reply)?;
-        if reply.is_empty() {
+        self.line_buf.clear();
+        self.reader.read_line(&mut self.line_buf)?;
+        if self.line_buf.is_empty() {
             return Err(Error::Service("server closed connection".into()));
         }
-        Json::parse(reply.trim_end())
+        Json::parse(self.line_buf.trim_end())
     }
 
     fn call(&mut self, req: &Request) -> Result<Json> {

@@ -1,7 +1,8 @@
-//! Wire protocol **v2.6**: newline-delimited JSON over TCP, with chunked
-//! (tiled) streaming responses, incremental raster subscriptions, and
+//! Wire protocol **v2.7**: newline-delimited JSON over TCP, with chunked
+//! (tiled) streaming responses, incremental raster subscriptions,
 //! end-to-end observability (per-request traces, the structured event
-//! journal, Prometheus-style metrics exposition).
+//! journal, Prometheus-style metrics exposition), and per-request
+//! stage-2 layout control.
 //!
 //! Requests:
 //! ```json
@@ -11,7 +12,7 @@
 //!  "variant":"tiled","k":10,
 //!  "ring":"exact","local_n":64,"alpha_levels":[0.5,1,2,3,4],
 //!  "r_min":0.0,"r_max":2.0,"area":1e4,
-//!  "tile_rows":256,"stream":true,"trace":true}
+//!  "tile_rows":256,"stream":true,"trace":true,"layout":"soa"}
 //! {"op":"mutate","dataset":"d","action":"append","xs":[..],"ys":[..],"zs":[..]}
 //! {"op":"mutate","dataset":"d","action":"remove","ids":[3,17]}
 //! {"op":"mutate","dataset":"d","action":"compact"}
@@ -24,6 +25,25 @@
 //! {"op":"subscribe","dataset":"d","qx":[..],"qy":[..],"k":10,"tile_rows":256}
 //! {"op":"unsubscribe"}
 //! ```
+//!
+//! **v2.7 additions** (stage-2 layout control, strictly additive over
+//! v2.6):
+//!
+//! * `interpolate`/`stream`/`subscribe` accept `layout` — pin the CPU
+//!   stage-2 data-access schedule: `"aos"` (scalar reference loop),
+//!   `"soa"` (cache-blocked columnar walk), or `"aosoa:<width>"`
+//!   (blocked walk at an explicit micro-tile width, 1..=64; bare
+//!   `"aosoa"` defaults the width to 16).  Every layout is
+//!   **bit-identical** to the reference — the blocked kernels keep the
+//!   scalar summation order — so layout is not an admission key:
+//!   requests differing only here coalesce and share cached stage-1
+//!   artifacts.  The options echo carries `layout` back **only when the
+//!   request (or server config) pinned one**; without the field the
+//!   planner picks a schedule per request by stage-2 work size and every
+//!   reply line stays byte-identical to v2.6.  The planner's actual
+//!   choice is always auditable via `trace: true`: the trace object
+//!   gains a `layout` field (`{"..","layout":"soa","spans":[..]}`)
+//!   recording the schedule that served the request.
 //!
 //! **v2.6 additions** (observability, strictly additive over v2.5):
 //!
@@ -224,7 +244,7 @@ use crate::subscribe::SubUpdateStart;
 /// The wire protocol version this module implements.  ci.sh drift-checks
 /// this constant against the module doc header ("Wire protocol
 /// **vX.Y**") so the two can never silently disagree.
-pub const PROTOCOL_VERSION: &str = "2.6";
+pub const PROTOCOL_VERSION: &str = "2.7";
 
 /// A live-dataset mutation (protocol v2.1 `mutate` op).
 #[derive(Debug, Clone, PartialEq)]
@@ -550,6 +570,9 @@ fn decode_options(v: &Json) -> Result<QueryOptions> {
             })?);
         }
     }
+    if let Some(s) = opt_str(v, "layout")? {
+        o.layout = Some(s.parse::<crate::coordinator::options::Layout>()?);
+    }
     Ok(o)
 }
 
@@ -590,6 +613,9 @@ fn encode_options(o: &QueryOptions, fields: &mut Vec<(&str, Json)>) {
     if let Some(t) = o.trace {
         fields.push(("trace", Json::Bool(t)));
     }
+    if let Some(l) = o.layout {
+        fields.push(("layout", Json::Str(l.tag())));
+    }
 }
 
 /// The resolved-options audit object echoed on interpolate responses.
@@ -622,6 +648,11 @@ pub fn options_json(o: &ResolvedOptions) -> Json {
     if o.trace {
         fields.push(("trace", Json::Bool(true)));
     }
+    // emitted only when the request/config pinned a layout — v2.6 byte
+    // compatibility (planner-auto choices are recorded on the trace)
+    if let Some(l) = o.layout {
+        fields.push(("layout", Json::Str(l.tag())));
+    }
     Json::obj(fields)
 }
 
@@ -649,6 +680,10 @@ pub fn options_from_json(v: &Json) -> Option<ResolvedOptions> {
         epoch: v.get("epoch").as_f64().map(|e| e as u64),
         overlay: v.get("overlay").as_f64().map(|o| o as u64),
         trace: v.get("trace").as_bool().unwrap_or(false),
+        layout: v
+            .get("layout")
+            .as_str()
+            .and_then(|s| s.parse::<crate::coordinator::options::Layout>().ok()),
     })
 }
 
@@ -683,6 +718,10 @@ pub fn trace_json(t: &crate::obs::Trace) -> Json {
     }
     // hex string: a u64 fingerprint does not survive the f64 wire type
     fields.push(("stage1_fp", Json::Str(format!("{:016x}", t.stage1_fp))));
+    // v2.7: the stage-2 schedule the planner chose for this request
+    if let Some(l) = &t.layout {
+        fields.push(("layout", Json::Str(l.clone())));
+    }
     fields.push(("spans", Json::Arr(spans)));
     Json::obj(fields)
 }
@@ -710,6 +749,7 @@ pub fn trace_from_json(v: &Json) -> Option<crate::obs::Trace> {
         epoch: v.get("epoch").as_f64().map(|e| e as u64),
         overlay: v.get("overlay").as_f64().map(|o| o as u64),
         stage1_fp,
+        layout: v.get("layout").as_str().map(|s| s.to_string()),
         spans,
     })
 }
@@ -765,12 +805,36 @@ pub fn stream_header(rows: usize, n_tiles: usize, tile_rows: usize, o: &Resolved
 
 /// One tile line: tile index, first covered row, and its values.
 pub fn stream_tile(tile_index: usize, row0: usize, values: &[f64]) -> String {
-    Json::obj(vec![
-        ("tile", Json::Num(tile_index as f64)),
-        ("row0", Json::Num(row0 as f64)),
-        ("z", Json::num_array(values)),
-    ])
-    .to_string()
+    let mut buf = String::new();
+    stream_tile_into(&mut buf, tile_index, row0, values);
+    buf
+}
+
+/// Zero-copy variant of [`stream_tile`] (v2.7, ROADMAP PR-5(b)): serialize
+/// the tile frame straight into a caller-owned buffer instead of building
+/// a `Json` tree (one `BTreeMap` + one boxed `Json::Num` per value) and a
+/// fresh `String` per tile.  The connection loop clears and reuses one
+/// buffer per connection, so steady-state streaming allocates nothing per
+/// frame beyond occasional buffer growth.
+///
+/// Byte-compatibility contract: the output must be identical to the
+/// Json-built line — keys in `BTreeMap` (alphabetical) order
+/// (`row0`, `tile`, `z`) and numbers via [`jsonio::write_num`], the same
+/// routine `Json::Num` uses.  `stream_tile_into_matches_json_builder`
+/// pins this.
+pub fn stream_tile_into(buf: &mut String, tile_index: usize, row0: usize, values: &[f64]) {
+    buf.push_str("{\"row0\":");
+    crate::jsonio::write_num(buf, row0 as f64);
+    buf.push_str(",\"tile\":");
+    crate::jsonio::write_num(buf, tile_index as f64);
+    buf.push_str(",\"z\":[");
+    for (i, &v) in values.iter().enumerate() {
+        if i > 0 {
+            buf.push(',');
+        }
+        crate::jsonio::write_num(buf, v);
+    }
+    buf.push_str("]}");
 }
 
 /// The terminal line of a successful stream (the v2.3 response metadata
@@ -1260,6 +1324,7 @@ mod tests {
             epoch: Some(3),
             overlay: Some(2),
             trace: false,
+            layout: None,
         };
         let j = options_json(&opts);
         assert!(j.to_string().contains("\"epoch\":3"), "{j:?}");
@@ -1451,6 +1516,68 @@ mod tests {
         let d = stream_done(0.1, 0.2, 8, false, 1, Some(&t));
         let v = Json::parse(&d).unwrap();
         assert_eq!(trace_from_json(v.get("trace")), Some(t));
+    }
+
+    #[test]
+    fn layout_rides_echo_only_when_pinned_and_trace_always() {
+        use crate::coordinator::options::Layout;
+        // unpinned layout: the echo is byte-identical to a v2.6 echo
+        let auto = ResolvedOptions::default();
+        assert!(!options_json(&auto).to_string().contains("layout"));
+        // pinned layout: echoed, round-trips, and decodes from a request
+        let pinned = ResolvedOptions {
+            layout: Some(Layout::AosoaTiles { width: 16 }),
+            ..Default::default()
+        };
+        let j = options_json(&pinned);
+        assert!(j.to_string().contains("\"layout\":\"aosoa:16\""), "{j:?}");
+        assert_eq!(options_from_json(&j), Some(pinned));
+        let r = Request::decode(
+            r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"layout":"soa"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Interpolate { options, .. } => {
+                assert_eq!(options.layout, Some(Layout::Soa));
+            }
+            other => panic!("{other:?}"),
+        }
+        // a malformed layout string is the client's error
+        assert!(Request::decode(
+            r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"layout":"rowwise"}"#
+        )
+        .is_err());
+        // the trace object always records the planner's choice
+        let mut t = crate::obs::Trace::new("d", None, None, 1);
+        t.layout = Some("soa".into());
+        let s = trace_json(&t).to_string();
+        assert!(s.contains("\"layout\":\"soa\""), "{s}");
+        assert_eq!(trace_from_json(&Json::parse(&s).unwrap()), Some(t));
+    }
+
+    #[test]
+    fn stream_tile_into_matches_json_builder() {
+        // the zero-copy writer must be byte-identical to the Json tree it
+        // replaced: same key order (BTreeMap: row0 < tile < z), same
+        // number formatting
+        let cases: Vec<(usize, usize, Vec<f64>)> = vec![
+            (0, 0, vec![]),
+            (2, 20, vec![1.5, 2.5]),
+            (7, 1024, vec![0.0, -0.0, 3.0, -1.25, 1e-12, 9.1e15, 0.1 + 0.2]),
+        ];
+        for (tile, row0, values) in cases {
+            let reference = Json::obj(vec![
+                ("tile", Json::Num(tile as f64)),
+                ("row0", Json::Num(row0 as f64)),
+                ("z", Json::num_array(&values)),
+            ])
+            .to_string();
+            let mut buf = String::from("leftover from the previous frame");
+            buf.clear();
+            stream_tile_into(&mut buf, tile, row0, &values);
+            assert_eq!(buf, reference, "tile={tile}");
+            assert_eq!(stream_tile(tile, row0, &values), reference);
+        }
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! Integration: layout-parameterized stage-2 engine (protocol v2.7).
+//!
+//! * **Bit-identity**: every stage-2 layout (SoA, AoSoA tiles) produces
+//!   **bitwise-identical** rasters to the AoS reference — across dense
+//!   and local (A5) weighting, clean / append-mutated / tombstoned
+//!   snapshots, and cold vs neighbor-cache-served artifacts.  The
+//!   layouts change the memory schedule, never the summation order;
+//! * **Wire compatibility**: a request that does not pin a layout gets a
+//!   reply shaped exactly like v2.6 — same top-level key set, no
+//!   `layout` key inside the options echo — while a pinned layout is
+//!   echoed back and its values stay bitwise-equal to the unpinned run;
+//! * **Traceability**: the planner's per-request layout choice is
+//!   recorded on the v2.6 span timeline (`trace.layout`), pinned or
+//!   auto.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use aidw::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, EngineMode, InterpolationRequest, Layout,
+    QueryOptions,
+};
+use aidw::jsonio::Json;
+use aidw::live::LiveConfig;
+use aidw::service::{Client, Server};
+use aidw::workload;
+
+fn cpu_config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        engine_mode: EngineMode::CpuOnly,
+        // keep mutated snapshots mutated: the test wants the merged
+        // (delta/tombstone) stage-2 paths, not a compacted base
+        live: LiveConfig { auto_compact: false, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// One interpolate with an explicit layout override; returns (values,
+/// cache_hit, echoed layout).
+fn run(
+    coord: &Coordinator,
+    queries: &[(f64, f64)],
+    base: &QueryOptions,
+    layout: Layout,
+) -> (Vec<f64>, bool, Option<Layout>) {
+    let resp = coord
+        .interpolate(
+            InterpolationRequest::new("d", queries.to_vec())
+                .with_options(base.clone().layout(layout)),
+        )
+        .unwrap();
+    (resp.values, resp.stage1_cache_hit, resp.options.layout)
+}
+
+#[test]
+fn layouts_are_bit_identical_across_modes_snapshots_and_cache_states() {
+    let coord = Coordinator::new(cpu_config()).unwrap();
+    coord
+        .register_dataset("d", workload::uniform_square(700, 60.0, 8101))
+        .unwrap();
+    let queries = workload::uniform_square(160, 60.0, 8102).xy();
+
+    let modes: [(&str, QueryOptions); 2] = [
+        ("dense", QueryOptions::new().dense()),
+        ("local", QueryOptions::new().local_neighbors(48)),
+    ];
+    let layouts = [Layout::Soa, Layout::AosoaTiles { width: 16 }, Layout::AosoaTiles { width: 7 }];
+
+    // three snapshot states, visited in order: clean (compacted base),
+    // append-mutated (delta tail drives the blocked merged path), then
+    // tombstoned (base_dead non-empty: the documented scalar fallback)
+    for state in ["clean", "appended", "tombstoned"] {
+        match state {
+            "clean" => {}
+            "appended" => {
+                coord
+                    .append_points("d", workload::uniform_square(90, 60.0, 8103))
+                    .unwrap();
+            }
+            "tombstoned" => {
+                coord.remove_points("d", &[3, 11]).unwrap();
+            }
+            _ => unreachable!(),
+        }
+        for (mode, base) in &modes {
+            // cold pass per layout, then a repeat served from the
+            // neighbor cache — all six bitwise-equal to the AoS run
+            let (reference, _, echoed) = run(&coord, &queries, base, Layout::Aos);
+            assert_eq!(echoed, Some(Layout::Aos), "override is echoed ({state}/{mode})");
+            for layout in layouts {
+                let (cold, _, echoed) = run(&coord, &queries, base, layout);
+                assert_eq!(echoed, Some(layout), "{state}/{mode}/{}", layout.tag());
+                assert_eq!(
+                    cold,
+                    reference,
+                    "cold {} diverged bitwise ({state}/{mode})",
+                    layout.tag()
+                );
+                let (warm, hit, _) = run(&coord, &queries, base, layout);
+                assert!(hit, "repeat raster must ride the cache ({state}/{mode})");
+                assert_eq!(
+                    warm,
+                    reference,
+                    "cached {} diverged bitwise ({state}/{mode})",
+                    layout.tag()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn layout_is_not_an_admission_key() {
+    // jobs differing only in layout must coalesce onto one stage-1
+    // artifact: the layout lives in neither stage key.  A generous
+    // linger plus a blocking batch in front makes the coalescing window
+    // deterministic (same idiom as the variant-coalescing test).
+    let cfg = CoordinatorConfig {
+        batch: BatchPolicy {
+            linger: std::time::Duration::from_millis(300),
+            ..Default::default()
+        },
+        ..cpu_config()
+    };
+    let coord = Coordinator::new(cfg).unwrap();
+    coord
+        .register_dataset("blk", workload::uniform_square(2000, 90.0, 8203))
+        .unwrap();
+    coord
+        .register_dataset("d", workload::uniform_square(400, 50.0, 8201))
+        .unwrap();
+    let queries = workload::uniform_square(120, 50.0, 8202).xy();
+
+    let t_blk = coord
+        .submit(InterpolationRequest::new(
+            "blk",
+            workload::uniform_square(500, 90.0, 8204).xy(),
+        ))
+        .unwrap();
+    let t_aos = coord
+        .submit(
+            InterpolationRequest::new("d", queries.clone())
+                .with_options(QueryOptions::new().layout(Layout::Aos)),
+        )
+        .unwrap();
+    let t_soa = coord
+        .submit(
+            InterpolationRequest::new("d", queries)
+                .with_options(QueryOptions::new().layout(Layout::Soa)),
+        )
+        .unwrap();
+    t_blk.wait().unwrap();
+    let a = t_aos.wait().unwrap();
+    let b = t_soa.wait().unwrap();
+
+    assert_eq!(a.values, b.values, "layouts agree bitwise");
+    // each response echoes its own pin, even though the pair coalesced
+    assert_eq!(a.options.layout, Some(Layout::Aos));
+    assert_eq!(b.options.layout, Some(Layout::Soa));
+    let m = coord.metrics();
+    assert_eq!(
+        m.stage1_execs, 2,
+        "one sweep for blk, exactly one shared by the layout pair: {m:?}"
+    );
+    assert_eq!(m.stage1_cache_hits, 0, "shared via coalescing, not the cache");
+}
+
+#[test]
+fn wire_stays_v26_without_override_and_echoes_when_pinned() {
+    let coord = Arc::new(Coordinator::new(cpu_config()).unwrap());
+    let server = Server::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    client
+        .register("d", &workload::uniform_square(500, 50.0, 8301))
+        .unwrap();
+
+    let sock = TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+    let mut writer = sock;
+
+    // 1) no layout on the request: the reply is shaped exactly like v2.6
+    writer
+        .write_all(
+            b"{\"op\":\"interpolate\",\"dataset\":\"d\",\"qx\":[1.0,2.0,3.0],\"qy\":[1.5,2.5,3.5]}\n",
+        )
+        .unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    assert!(
+        !reply.contains("layout"),
+        "an unpinned reply must not mention layout anywhere: {reply}"
+    );
+    let v = Json::parse(reply.trim_end()).unwrap();
+    let keys: Vec<&str> = v.as_obj().unwrap().keys().map(|k| k.as_str()).collect();
+    assert_eq!(
+        keys,
+        ["batch_queries", "cache_hit", "interp_s", "knn_s", "ok", "options", "stage2_groups", "z"],
+        "the v2.6 top-level key set, nothing more"
+    );
+    let z_auto = v.get("z").to_f64_vec().unwrap();
+
+    // 2) pinned layout: echoed in the options audit, values bitwise-equal
+    writer
+        .write_all(
+            b"{\"op\":\"interpolate\",\"dataset\":\"d\",\"qx\":[1.0,2.0,3.0],\"qy\":[1.5,2.5,3.5],\"layout\":\"soa\"}\n",
+        )
+        .unwrap();
+    let mut reply2 = String::new();
+    reader.read_line(&mut reply2).unwrap();
+    let v2 = Json::parse(reply2.trim_end()).unwrap();
+    assert_eq!(v2.get("options").get("layout").as_str(), Some("soa"));
+    assert_eq!(v2.get("z").to_f64_vec().unwrap(), z_auto, "soa agrees bitwise with auto");
+
+    // 3) a malformed layout is the client's error, not a dropped line
+    writer
+        .write_all(
+            b"{\"op\":\"interpolate\",\"dataset\":\"d\",\"qx\":[1.0],\"qy\":[1.0],\"layout\":\"rowwise\"}\n",
+        )
+        .unwrap();
+    let mut reply3 = String::new();
+    reader.read_line(&mut reply3).unwrap();
+    let v3 = Json::parse(reply3.trim_end()).unwrap();
+    assert_eq!(v3.get("ok").as_bool(), Some(false));
+    assert_eq!(v3.get("code").as_str(), Some("bad_request"));
+}
+
+#[test]
+fn trace_records_the_planners_layout_choice() {
+    let coord = Arc::new(Coordinator::new(cpu_config()).unwrap());
+    let server = Server::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    client
+        .register("d", &workload::uniform_square(500, 50.0, 8401))
+        .unwrap();
+    let queries = workload::uniform_square(12, 50.0, 8402).xy();
+
+    // auto: a tiny raster is below the SoA work threshold -> "aos"
+    let auto = client
+        .interpolate_with("d", &queries, QueryOptions::new().trace(true))
+        .unwrap();
+    let t = auto.trace.expect("traced request returns a timeline");
+    assert_eq!(t.layout.as_deref(), Some("aos"), "auto choice is recorded");
+    assert_eq!(auto.options.unwrap().layout, None, "auto is not echoed as an override");
+
+    // pinned: the override is both echoed and recorded on the trace
+    let pinned = client
+        .interpolate_with(
+            "d",
+            &queries,
+            QueryOptions::new().trace(true).layout(Layout::AosoaTiles { width: 16 }),
+        )
+        .unwrap();
+    let t = pinned.trace.expect("traced request returns a timeline");
+    assert_eq!(t.layout.as_deref(), Some("aosoa:16"));
+    assert_eq!(
+        pinned.options.unwrap().layout,
+        Some(Layout::AosoaTiles { width: 16 })
+    );
+    assert_eq!(pinned.values, auto.values, "layouts agree bitwise over TCP");
+}
