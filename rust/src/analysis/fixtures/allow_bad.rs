@@ -1,0 +1,8 @@
+// tidy:allow(print_hygiene) -- nothing on the next line triggers it
+fn g() {}
+// tidy:allow(bogus_rule) -- not a registered rule
+fn h() {}
+// tidy:allow(print_hygiene)
+fn i() {
+    eprintln!("x");
+}

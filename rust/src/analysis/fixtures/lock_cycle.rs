@@ -1,0 +1,23 @@
+// tidy fail-fixture (never compiled): two functions acquire the same two
+// annotated locks in opposite orders — the lock_order rule must report
+// the cycle alpha -> beta -> alpha.
+pub struct S {
+    // lock-order: alpha
+    a: Mutex<u32>,
+    // lock-order: beta
+    b: Mutex<u32>,
+}
+impl S {
+    fn one(&self) {
+        let g = self.a.lock().unwrap();
+        let h = self.b.lock().unwrap();
+        drop(h);
+        drop(g);
+    }
+    fn two(&self) {
+        let g = self.b.lock().unwrap();
+        let h = self.a.lock().unwrap();
+        drop(h);
+        drop(g);
+    }
+}

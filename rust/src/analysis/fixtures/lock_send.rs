@@ -1,0 +1,15 @@
+// tidy fail-fixture (never compiled): a guard held across a bounded-
+// channel send_while (backpressure can stall every peer of the lock),
+// plus a lock field declared without a lock-order annotation.
+pub struct S {
+    // lock-order: gamma
+    q: Mutex<Vec<u32>>,
+    u: RwLock<u8>,
+}
+impl S {
+    fn push(&self, tx: &FrameTx) {
+        let g = self.q.lock().unwrap();
+        let _ = tx.send_while(g.len() as u32, || true);
+        drop(g);
+    }
+}

@@ -1,0 +1,14 @@
+// tidy fail-fixture (never compiled): three panic paths in service/
+// scope — unwrap, expect, panic! — while the poisoned-lock idiom stays
+// exempt.
+fn f(x: Option<u32>) -> u32 {
+    let v = x.unwrap();
+    let w = x.expect("boom");
+    if v > w {
+        panic!("no");
+    }
+    v
+}
+fn ok(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}

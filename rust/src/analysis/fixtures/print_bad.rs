@@ -1,0 +1,9 @@
+// tidy fail-fixture (never compiled): three stderr prints outside
+// main.rs/cli.rs; the middle one carries a justified allow directive and
+// must be suppressed by the allowlist pass (raw rule counts all three).
+fn f() {
+    eprintln!("oops");
+    // tidy:allow(print_hygiene) -- fixture demonstrates a justified allow
+    eprint!("allowed");
+    dbg!(42);
+}

@@ -1,0 +1,35 @@
+//! Fixture for the `protocol_drift` rule: the version banner disagrees
+//! with `PROTOCOL_VERSION`, the request example advertises a key no
+//! decoder reads, and a decoder reads a key the example never shows.
+//!
+//! Wire protocol **v9.1** — one JSON request object per line:
+//!
+//! ```json
+//! {"op": "query", "dataset": "dem", "k": 8,"ghost_key":1}
+//! ```
+
+pub const PROTOCOL_VERSION: &str = "9.0";
+
+fn field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let at = line.find(key)?;
+    line[at + key.len()..].split('"').nth(2)
+}
+
+pub fn decode(line: &str) -> Option<String> {
+    let op = field(line, "op")?;
+    if op != "query" {
+        return None;
+    }
+    let dataset = field(line, "dataset")?;
+    Some(format!("{op} on {dataset}"))
+}
+
+pub fn decode_options(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for key in ["k", "rogue_key"] {
+        if let Some(v) = field(line, key) {
+            out.push(v.to_string());
+        }
+    }
+    out
+}

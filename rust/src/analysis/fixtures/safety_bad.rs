@@ -1,0 +1,7 @@
+pub fn f(p: *mut u32) {
+    unsafe { *p = 1 };
+    // SAFETY: fixture pointer is valid for writes by construction
+    unsafe { *p = 2 };
+}
+struct P(*mut u32);
+unsafe impl Send for P {}

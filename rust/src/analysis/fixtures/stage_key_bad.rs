@@ -1,0 +1,30 @@
+// tidy fail-fixture (never compiled): a new ResolvedOptions field
+// (`frobnicate`) added without classifying it into stage1_key(),
+// stage2_key(), or NEITHER_STAGE_KEY — the stage_key rule must fire.
+pub struct QueryOptions {
+    pub k: Option<usize>,
+    pub local: Option<usize>,
+}
+pub struct ResolvedOptions {
+    pub k: usize,
+    pub variant: usize,
+    pub local_neighbors: Option<usize>,
+    pub frobnicate: bool,
+}
+pub struct Stage1Key {
+    pub k: usize,
+    pub local_neighbors: Option<usize>,
+}
+pub struct Stage2Key {
+    pub variant: usize,
+}
+pub const NEITHER_STAGE_KEY: &[&str] = &[];
+pub const QUERY_FIELD_ALIASES: &[(&str, &str)] = &[("local", "local_neighbors")];
+impl ResolvedOptions {
+    pub fn stage1_key(&self) -> Stage1Key {
+        Stage1Key { k: self.k, local_neighbors: self.local_neighbors }
+    }
+    pub fn stage2_key(&self) -> Stage2Key {
+        Stage2Key { variant: self.variant }
+    }
+}

@@ -1,0 +1,257 @@
+//! Rules `panic_hygiene`, `print_hygiene`, `safety_comments`.
+//!
+//! * **panic_hygiene** — `service/`, `subscribe/` and
+//!   `coordinator/batcher.rs` run inside connection handlers and worker
+//!   threads: a panic there kills a thread the process never restarts
+//!   (or poisons a lock every peer then trips over).  No `unwrap`,
+//!   `expect`, `panic!`, `unreachable!`, `todo!`, `unimplemented!`
+//!   outside tests.  Exemption: `.lock().unwrap()` (and `.read()`,
+//!   `.write()`, condvar `.wait(..)`/`.wait_timeout(..)`) — a poisoned
+//!   lock means another thread already panicked, and propagating is the
+//!   std-documented idiom.
+//! * **print_hygiene** — no `eprintln!`/`eprint!`/`dbg!` outside
+//!   `main.rs`/`cli.rs`: the server reports state through the event
+//!   journal (PR 7), not a stderr nobody tails.
+//! * **safety_comments** — every `unsafe` keyword (block or
+//!   `unsafe impl`) carries a `// SAFETY:` comment on the same line or
+//!   in the comment block directly above, stating the invariant that
+//!   makes it sound.
+
+use super::lexer::tokens;
+use super::{Finding, SourceFile};
+
+fn panic_scope(path: &str) -> bool {
+    path.starts_with("service/")
+        || path.starts_with("subscribe/")
+        || path == "coordinator/batcher.rs"
+}
+
+fn print_allowed(path: &str) -> bool {
+    path == "main.rs" || path == "cli.rs"
+}
+
+pub fn check(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        let toks = tokens(&f.lex.masked);
+        let t = |i: usize| toks.get(i).map(|t| t.text.as_str()).unwrap_or("");
+        let masked_lines: Vec<&str> = f.lex.masked.lines().collect();
+
+        for i in 0..toks.len() {
+            let line = toks[i].line;
+            match t(i) {
+                // ---- panic_hygiene ----
+                w @ ("unwrap" | "expect")
+                    if panic_scope(&f.path)
+                        && !f.lex.is_test_line(line)
+                        && i >= 1
+                        && t(i - 1) == "."
+                        && !lock_idiom(&toks, i) =>
+                {
+                    out.push(Finding::new(
+                        "panic_hygiene",
+                        &f.path,
+                        line,
+                        format!(
+                            ".{w}() in a worker/decode path — return an Error (or \
+                             justify with tidy:allow); a panic here kills a thread \
+                             the process never restarts"
+                        ),
+                    ));
+                }
+                w @ ("panic" | "unreachable" | "todo" | "unimplemented")
+                    if panic_scope(&f.path)
+                        && !f.lex.is_test_line(line)
+                        && t(i + 1) == "!" =>
+                {
+                    out.push(Finding::new(
+                        "panic_hygiene",
+                        &f.path,
+                        line,
+                        format!("{w}! in a worker/decode path — return an Error instead"),
+                    ));
+                }
+                // ---- print_hygiene ----
+                w @ ("eprintln" | "eprint" | "dbg")
+                    if !print_allowed(&f.path)
+                        && !f.lex.is_test_line(line)
+                        && t(i + 1) == "!" =>
+                {
+                    out.push(Finding::new(
+                        "print_hygiene",
+                        &f.path,
+                        line,
+                        format!(
+                            "{w}! outside main.rs/cli.rs — report through the event \
+                             journal (obs), not stderr"
+                        ),
+                    ));
+                }
+                // ---- safety_comments ----
+                "unsafe" => {
+                    if !has_safety_comment(f, &masked_lines, line) {
+                        out.push(Finding::new(
+                            "safety_comments",
+                            &f.path,
+                            line,
+                            "unsafe without a `// SAFETY:` comment — state the \
+                             invariant that makes this sound"
+                                .to_string(),
+                        ));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+/// `.unwrap()`/`.expect(..)` directly chained onto a lock/condvar
+/// acquisition: `<recv>.lock().unwrap()`, `cond.wait(st).unwrap()`, …
+/// Walks back over the acquisition's argument parens.
+fn lock_idiom(toks: &[super::lexer::Tok], i: usize) -> bool {
+    let t = |j: usize| toks.get(j).map(|t| t.text.as_str()).unwrap_or("");
+    // toks[i] is unwrap/expect, toks[i-1] is `.`; before that must sit
+    // `<acq> ( .. )` with balanced parens
+    if i < 2 || t(i - 2) != ")" {
+        return false;
+    }
+    let mut depth = 0usize;
+    let mut j = i - 2;
+    loop {
+        match t(j) {
+            ")" => depth += 1,
+            "(" => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+        if j == 0 {
+            return false;
+        }
+        j -= 1;
+    }
+    j >= 2
+        && matches!(t(j - 1), "lock" | "read" | "write" | "wait" | "wait_timeout")
+        && t(j - 2) == "."
+}
+
+/// A `SAFETY:` comment on the same line, or in the contiguous
+/// comment-only block directly above it.
+fn has_safety_comment(f: &SourceFile, masked_lines: &[&str], line: usize) -> bool {
+    let is_safety = |l: usize| {
+        f.lex
+            .comments_on(l)
+            .any(|c| c.text.trim_start().starts_with("SAFETY:"))
+    };
+    if is_safety(line) {
+        return true;
+    }
+    let mut l = line.saturating_sub(1);
+    while l >= 1 {
+        let code_blank = masked_lines
+            .get(l - 1)
+            .map(|s| s.trim().is_empty())
+            .unwrap_or(true);
+        let has_comment = f.lex.comments_on(l).next().is_some();
+        if !code_blank || !has_comment {
+            return false;
+        }
+        if is_safety(l) {
+            return true;
+        }
+        l -= 1;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SourceFile;
+    use super::*;
+
+    #[test]
+    fn panic_rule_fires_on_fixture_and_exempts_lock_idiom() {
+        let f = SourceFile::new("service/fixture.rs", include_str!("fixtures/panic_bad.rs"));
+        let findings = check(&[f]);
+        let panics: Vec<_> =
+            findings.iter().filter(|f| f.rule == "panic_hygiene").collect();
+        assert_eq!(panics.len(), 3, "findings: {findings:?}");
+        assert!(panics.iter().any(|f| f.message.contains(".unwrap()")));
+        assert!(panics.iter().any(|f| f.message.contains(".expect()")));
+        assert!(panics.iter().any(|f| f.message.contains("panic!")));
+    }
+
+    #[test]
+    fn panic_rule_ignores_out_of_scope_and_tests() {
+        // same content, non-scoped path: silent
+        let f = SourceFile::new("aidw/fixture.rs", include_str!("fixtures/panic_bad.rs"));
+        assert!(check(&[f]).iter().all(|f| f.rule != "panic_hygiene"));
+        // scoped path but inside #[cfg(test)]: silent
+        let src = "#[cfg(test)]\nmod tests {\n    fn t(x: Option<u32>) { x.unwrap(); }\n}\n";
+        let f = SourceFile::new("service/x.rs", src);
+        assert!(check(&[f]).is_empty());
+    }
+
+    #[test]
+    fn multiline_lock_chain_is_exempt() {
+        let src = "\
+fn f(m: &std::sync::RwLock<u32>) -> u32 {
+    *m
+        .read()
+        .unwrap()
+}
+fn g(c: &std::sync::Condvar, m: &std::sync::Mutex<bool>) {
+    let st = m.lock().unwrap();
+    let _st = c.wait(st).unwrap();
+}
+";
+        let f = SourceFile::new("service/x.rs", src);
+        let findings = check(&[f]);
+        assert!(findings.is_empty(), "findings: {findings:?}");
+    }
+
+    #[test]
+    fn print_rule_fires_on_fixture() {
+        let f = SourceFile::new("live/fixture.rs", include_str!("fixtures/print_bad.rs"));
+        let findings = check(&[f]);
+        let prints: Vec<_> = findings.iter().filter(|f| f.rule == "print_hygiene").collect();
+        assert_eq!(prints.len(), 3, "findings: {findings:?}");
+        // main.rs/cli.rs are exempt
+        let f = SourceFile::new("main.rs", include_str!("fixtures/print_bad.rs"));
+        assert!(check(&[f]).iter().all(|f| f.rule != "print_hygiene"));
+    }
+
+    #[test]
+    fn safety_rule_fires_on_fixture() {
+        let f = SourceFile::new(
+            "primitives/fixture.rs",
+            include_str!("fixtures/safety_bad.rs"),
+        );
+        let findings = check(&[f]);
+        let safety: Vec<_> =
+            findings.iter().filter(|f| f.rule == "safety_comments").collect();
+        assert_eq!(safety.len(), 2, "findings: {findings:?}");
+        // the commented site (line 4) is not among them
+        assert!(safety.iter().all(|f| f.line != 4), "findings: {findings:?}");
+    }
+
+    #[test]
+    fn safety_comment_above_multiline_block_counts() {
+        let src = "\
+pub fn f(p: *mut u32, n: usize) {
+    // SAFETY: p is valid for n writes; indices below are < n by the
+    // loop bound, so each write hits a distinct in-bounds slot
+    unsafe {
+        *p.add(n - 1) = 0;
+    }
+}
+";
+        let f = SourceFile::new("primitives/x.rs", src);
+        assert!(check(&[f]).is_empty());
+    }
+}

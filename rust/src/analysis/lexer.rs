@@ -1,0 +1,449 @@
+//! A small masking lexer for `aidw tidy` (see the module docs in
+//! [`crate::analysis`]).
+//!
+//! The rules in this suite are lexical: they match tokens, comments and
+//! string literals, never a full AST.  To keep that sound, every rule
+//! reads sources through [`lex`], which produces:
+//!
+//! * `masked` — the source with every comment, string literal and char
+//!   literal replaced by spaces (newlines preserved, so byte offsets and
+//!   line numbers stay aligned with the original).  Token scans over
+//!   `masked` can never be fooled by the word `unwrap` inside a doc
+//!   comment or an error message.
+//! * `comments` — the comment *text* (what the mask erased), line-stamped,
+//!   so annotation rules (`// lock-order:`, `// SAFETY:`,
+//!   `// tidy:allow(..)`) and doc-header parsing still see it.
+//! * `strings` — every string literal's value with its line and the byte
+//!   offset of its opening quote, so rules that care about literals in a
+//!   specific region (protocol keys inside `fn decode`, the
+//!   `NEITHER_STAGE_KEY` table) can range-filter them.
+//! * `test_lines` — per-line flags marking `#[cfg(test)] mod` regions,
+//!   which most rules skip (tests may unwrap and print freely).
+//!
+//! The state machine understands line comments, nested block comments,
+//! plain/byte/raw strings (any `#` count), char literals vs lifetimes,
+//! and escape sequences.  It is deliberately *not* a full Rust lexer:
+//! anything it does not recognize passes through unmasked, which fails
+//! toward a rule firing (visible) rather than being silently skipped.
+
+/// A comment's text (everything after `//`, or inside `/* */`), stamped
+/// with the line its first character appears on.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: usize,
+    pub text: String,
+}
+
+/// A string literal's contents (escapes left raw), with the line and byte
+/// offset of its opening quote in the original source.
+#[derive(Debug, Clone)]
+pub struct StrLit {
+    pub line: usize,
+    pub offset: usize,
+    pub value: String,
+}
+
+/// One token of the masked source: a maximal `[A-Za-z0-9_]+` word or a
+/// single punctuation character.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub text: String,
+    pub line: usize,
+    pub offset: usize,
+}
+
+/// The lexer's full output for one file.  See the module docs.
+#[derive(Debug, Clone)]
+pub struct Lexed {
+    pub masked: String,
+    pub comments: Vec<Comment>,
+    pub strings: Vec<StrLit>,
+    /// `test_lines[line]` (1-indexed; index 0 unused) is true inside a
+    /// `#[cfg(test)]`-gated region.
+    pub test_lines: Vec<bool>,
+}
+
+impl Lexed {
+    /// True when `line` lies inside a `#[cfg(test)]` region.
+    pub fn is_test_line(&self, line: usize) -> bool {
+        self.test_lines.get(line).copied().unwrap_or(false)
+    }
+
+    /// All comments attached to `line`.
+    pub fn comments_on(&self, line: usize) -> impl Iterator<Item = &Comment> {
+        self.comments.iter().filter(move |c| c.line == line)
+    }
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into masked code + comments + strings + test-line flags.
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut masked = String::with_capacity(src.len());
+    let mut comments = Vec::new();
+    let mut strings = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    // Byte offset of the char at index `i` in `masked` equals masked.len()
+    // because masking writes exactly one byte (space/newline/ASCII char)
+    // per source char for everything we erase, and copies code chars
+    // verbatim.  Rust code outside strings/comments is ASCII in this
+    // repository; a stray non-ASCII code char would shift offsets by the
+    // UTF-8 width difference, which only loosens range filters.
+    macro_rules! mask_char {
+        ($c:expr) => {
+            if $c == '\n' {
+                masked.push('\n');
+            } else {
+                masked.push(' ');
+            }
+        };
+    }
+
+    while i < n {
+        let c = chars[i];
+        let next = if i + 1 < n { chars[i + 1] } else { '\0' };
+        if c == '\n' {
+            masked.push('\n');
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == '/' && next == '/' {
+            // line comment: capture text after the `//`, mask it all
+            let start_line = line;
+            let mut text = String::new();
+            masked.push(' ');
+            masked.push(' ');
+            i += 2;
+            while i < n && chars[i] != '\n' {
+                text.push(chars[i]);
+                masked.push(' ');
+                i += 1;
+            }
+            comments.push(Comment { line: start_line, text });
+            continue;
+        }
+        if c == '/' && next == '*' {
+            // block comment, nested
+            let start_line = line;
+            let mut text = String::new();
+            let mut depth = 1usize;
+            masked.push(' ');
+            masked.push(' ');
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    text.push_str("/*");
+                    masked.push(' ');
+                    masked.push(' ');
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    if depth > 0 {
+                        text.push_str("*/");
+                    }
+                    masked.push(' ');
+                    masked.push(' ');
+                    i += 2;
+                } else {
+                    if chars[i] == '\n' {
+                        line += 1;
+                    }
+                    text.push(chars[i]);
+                    mask_char!(chars[i]);
+                    i += 1;
+                }
+            }
+            comments.push(Comment { line: start_line, text });
+            continue;
+        }
+        // raw strings: r"..." / r#"..."# / br"..." — only when `r`/`b`
+        // starts a token (the previous char is not an ident char)
+        let prev_ident = i > 0 && is_ident_char(chars[i - 1]);
+        if !prev_ident && (c == 'r' || (c == 'b' && next == 'r')) {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while j < n && chars[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && chars[j] == '"' {
+                // it is a raw string: copy the prefix, mask the contents
+                for k in i..=j {
+                    masked.push(chars[k]);
+                }
+                let start_line = line;
+                let offset = masked.len() - 1; // the opening quote
+                let mut value = String::new();
+                i = j + 1;
+                loop {
+                    if i >= n {
+                        break;
+                    }
+                    if chars[i] == '"' {
+                        let mut h = 0usize;
+                        while h < hashes && i + 1 + h < n && chars[i + 1 + h] == '#' {
+                            h += 1;
+                        }
+                        if h == hashes {
+                            masked.push('"');
+                            for _ in 0..hashes {
+                                masked.push('#');
+                            }
+                            i += 1 + hashes;
+                            break;
+                        }
+                    }
+                    if chars[i] == '\n' {
+                        line += 1;
+                    }
+                    value.push(chars[i]);
+                    mask_char!(chars[i]);
+                    i += 1;
+                }
+                strings.push(StrLit { line: start_line, offset, value });
+                continue;
+            }
+            // not a raw string: fall through and copy the char below
+        }
+        if c == '"' || (!prev_ident && c == 'b' && next == '"') {
+            // plain or byte string
+            if c == 'b' {
+                masked.push('b');
+                i += 1;
+            }
+            masked.push('"');
+            let start_line = line;
+            let offset = masked.len() - 1;
+            let mut value = String::new();
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' && i + 1 < n {
+                    value.push(chars[i]);
+                    value.push(chars[i + 1]);
+                    masked.push(' ');
+                    if chars[i + 1] == '\n' {
+                        masked.push('\n');
+                        line += 1;
+                    } else {
+                        masked.push(' ');
+                    }
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '"' {
+                    masked.push('"');
+                    i += 1;
+                    break;
+                }
+                if chars[i] == '\n' {
+                    line += 1;
+                }
+                value.push(chars[i]);
+                mask_char!(chars[i]);
+                i += 1;
+            }
+            strings.push(StrLit { line: start_line, offset, value });
+            continue;
+        }
+        if c == '\'' || (!prev_ident && c == 'b' && next == '\'') {
+            // char literal vs lifetime: `'x'` / `'\..'` are literals,
+            // `'ident` (no closing quote right after) is a lifetime
+            let q = if c == 'b' { i + 1 } else { i };
+            let is_char_lit = q + 1 < n
+                && (chars[q + 1] == '\\' || (q + 2 < n && chars[q + 2] == '\''));
+            if is_char_lit {
+                if c == 'b' {
+                    masked.push('b');
+                    i += 1;
+                }
+                masked.push('\'');
+                i += 1;
+                while i < n {
+                    if chars[i] == '\\' && i + 1 < n {
+                        masked.push(' ');
+                        masked.push(' ');
+                        i += 2;
+                        continue;
+                    }
+                    if chars[i] == '\'' {
+                        masked.push('\'');
+                        i += 1;
+                        break;
+                    }
+                    if chars[i] == '\n' {
+                        line += 1;
+                    }
+                    mask_char!(chars[i]);
+                    i += 1;
+                }
+                continue;
+            }
+            // lifetime: copy the quote and fall through
+            masked.push('\'');
+            i += 1;
+            continue;
+        }
+        masked.push(c);
+        i += 1;
+    }
+
+    let test_lines = mark_test_lines(&masked);
+    Lexed { masked, comments, strings, test_lines }
+}
+
+/// Mark lines covered by a `#[cfg(test)]`-gated item: from the attribute
+/// line through the matching close brace of the next block that opens.
+fn mark_test_lines(masked: &str) -> Vec<bool> {
+    let n_lines = masked.lines().count();
+    let mut flags = vec![false; n_lines + 2];
+    let mut depth = 0usize;
+    // pending: saw the attribute, waiting for the `{` that opens the
+    // gated item; active: Some(depth at which the region closes)
+    let mut pending = false;
+    let mut active: Option<usize> = None;
+
+    let lines: Vec<&str> = masked.lines().collect();
+    for (li, ltext) in lines.iter().enumerate() {
+        let line = li + 1;
+        if ltext.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        if pending || active.is_some() {
+            flags[line] = true;
+        }
+        for ch in ltext.chars() {
+            if ch == '{' {
+                depth += 1;
+                if pending {
+                    pending = false;
+                    active = Some(depth);
+                    flags[line] = true;
+                }
+            } else if ch == '}' {
+                if let Some(d) = active {
+                    if depth == d {
+                        active = None;
+                        flags[line] = true;
+                    }
+                }
+                depth = depth.saturating_sub(1);
+            }
+        }
+    }
+    flags
+}
+
+/// Tokenize a masked source: ident/number words and single-char puncts,
+/// whitespace skipped, each stamped with line and byte offset.
+pub fn tokens(masked: &str) -> Vec<Tok> {
+    let mut out = Vec::new();
+    let mut line = 1usize;
+    let bytes = masked.as_bytes();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        if is_ident_char(c) {
+            let start = i;
+            while i < bytes.len() && is_ident_char(bytes[i] as char) {
+                i += 1;
+            }
+            out.push(Tok {
+                text: masked[start..i].to_string(),
+                line,
+                offset: start,
+            });
+            continue;
+        }
+        out.push(Tok { text: c.to_string(), line, offset: i });
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_comments_and_strings() {
+        let src = "let x = \"unwrap()\"; // unwrap() here\nlet y = 1;\n";
+        let lx = lex(src);
+        assert!(!lx.masked.contains("unwrap"));
+        assert_eq!(lx.comments.len(), 1);
+        assert_eq!(lx.comments[0].line, 1);
+        assert!(lx.comments[0].text.contains("unwrap() here"));
+        assert_eq!(lx.strings.len(), 1);
+        assert_eq!(lx.strings[0].value, "unwrap()");
+        // newlines preserved: same line structure
+        assert_eq!(lx.masked.lines().count(), src.lines().count());
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let src = "let a = r#\"has \"quotes\" and unwrap()\"#; let b = \"esc \\\" quote\";";
+        let lx = lex(src);
+        assert!(!lx.masked.contains("unwrap"));
+        assert_eq!(lx.strings.len(), 2);
+        assert!(lx.strings[0].value.contains("\"quotes\""));
+        assert!(lx.strings[1].value.contains("\\\""));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { let c = 'x'; let d = '\\n'; }";
+        let lx = lex(src);
+        // lifetimes survive masking, char-literal contents do not
+        assert!(lx.masked.contains("'a str"));
+        assert!(!lx.masked.contains("'x'"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still comment */ fn real() {}";
+        let lx = lex(src);
+        assert!(lx.masked.contains("fn real"));
+        assert!(!lx.masked.contains("outer"));
+        assert_eq!(lx.comments.len(), 1);
+        assert!(lx.comments[0].text.contains("inner"));
+    }
+
+    #[test]
+    fn test_region_marking() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let lx = lex(src);
+        assert!(!lx.is_test_line(1));
+        assert!(lx.is_test_line(2));
+        assert!(lx.is_test_line(3));
+        assert!(lx.is_test_line(4));
+        assert!(lx.is_test_line(5));
+        assert!(!lx.is_test_line(6));
+    }
+
+    #[test]
+    fn token_lines_and_offsets() {
+        let src = "ab.cd()\nef";
+        let toks = tokens(&lex(src).masked);
+        let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["ab", ".", "cd", "(", ")", "ef"]);
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[5].line, 2);
+        assert_eq!(toks[0].offset, 0);
+    }
+}

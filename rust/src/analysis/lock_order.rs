@@ -1,0 +1,463 @@
+//! Rule `lock_order`: lock discipline across `live/`, `subscribe/` and
+//! `coordinator/`.
+//!
+//! Every `Mutex`/`RwLock` *field declaration* in scope must carry a
+//! `// lock-order: <name>` annotation (same line or the line above) that
+//! names the lock.  The rule then scans the lexical nesting of
+//! `.lock()` / `.read()` / `.write()` acquisitions:
+//!
+//! * a `let <ident> = <recv>.lock().unwrap();` binding is a *held* guard
+//!   from its binding until its scope's closing brace or an explicit
+//!   `drop(<ident>)`; chained acquisitions
+//!   (`x.lock().unwrap().take()`) are transient temporaries;
+//! * acquiring lock B while holding guard A records the edge A → B; the
+//!   union of observed edges over all scope files must be acyclic (and a
+//!   lock is never re-acquired while already held — `std::sync` locks
+//!   are not reentrant);
+//! * no guard may be lexically held across a *blocking* channel op:
+//!   `send_while(` (the bounded-stream backpressure helper), `.recv()`,
+//!   `.recv_timeout(`.  Plain `.send(` is exempt — the subsystems use it
+//!   only on unbounded `mpsc::Sender`s, which cannot block.
+//!
+//! The approximation is intra-procedural and lexical: closures inherit
+//! the guards of their enclosing scope (conservative — a spawned closure
+//! runs elsewhere, but lexical acquisitions inside one are rare and the
+//! conservative edge is the safe direction), and cross-function holds
+//! are invisible (each function contributes its own edges; the global
+//! graph still catches two functions that nest in opposite orders).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{tokens, Tok};
+use super::{Finding, SourceFile};
+
+const RULE: &str = "lock_order";
+
+fn in_scope(path: &str) -> bool {
+    path.starts_with("live/") || path.starts_with("subscribe/") || path.starts_with("coordinator/")
+}
+
+const ACQUIRE: &[&str] = &["lock", "read", "write"];
+
+pub fn check(files: &[SourceFile]) -> Vec<Finding> {
+    let scope: Vec<&SourceFile> = files.iter().filter(|f| in_scope(&f.path)).collect();
+    if scope.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+
+    // pass 1: annotations + declaration coverage
+    // (file, field) -> lock name; field -> set of names (global fallback)
+    let mut by_field_file: BTreeMap<(String, String), String> = BTreeMap::new();
+    let mut by_field: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for f in &scope {
+        let lines: Vec<&str> = f.lex.masked.lines().collect();
+        for c in &f.lex.comments {
+            let Some(pos) = c.text.find("lock-order:") else { continue };
+            let name: String = c.text[pos + "lock-order:".len()..]
+                .trim()
+                .chars()
+                .take_while(|ch| ch.is_ascii_alphanumeric() || *ch == '_')
+                .collect();
+            if name.is_empty() {
+                out.push(Finding::new(
+                    RULE,
+                    &f.path,
+                    c.line,
+                    "empty lock-order annotation — `// lock-order: <name>`".to_string(),
+                ));
+                continue;
+            }
+            // the annotated declaration: this line or the next few
+            // (skipping further comment-only lines)
+            let mut decl = None;
+            for l in c.line..=(c.line + 3).min(lines.len()) {
+                if let Some(field) = decl_field(lines[l - 1]) {
+                    decl = Some((field, l));
+                    break;
+                }
+            }
+            match decl {
+                Some((field, _)) => {
+                    by_field_file.insert((f.path.clone(), field.clone()), name.clone());
+                    by_field.entry(field).or_default().insert(name);
+                }
+                None => out.push(Finding::new(
+                    RULE,
+                    &f.path,
+                    c.line,
+                    format!("lock-order annotation '{name}' has no Mutex/RwLock field declaration"),
+                )),
+            }
+        }
+        for (li, line) in lines.iter().enumerate() {
+            let lineno = li + 1;
+            if f.lex.is_test_line(lineno) {
+                continue;
+            }
+            if let Some(field) = decl_field(line) {
+                if !by_field_file.contains_key(&(f.path.clone(), field.clone())) {
+                    out.push(Finding::new(
+                        RULE,
+                        &f.path,
+                        lineno,
+                        format!(
+                            "lock field '{field}' lacks a `// lock-order: <name>` annotation"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // pass 2: acquisition nesting + blocking ops under a guard
+    let mut edges: BTreeMap<(String, String), (String, usize)> = BTreeMap::new();
+    for f in &scope {
+        scan_file(f, &by_field_file, &by_field, &mut edges, &mut out);
+    }
+
+    // cycle detection over the observed edge set
+    for cycle in find_cycles(&edges) {
+        let (file, line) = edges
+            .get(&(cycle[0].clone(), cycle[1].clone()))
+            .cloned()
+            .unwrap_or_else(|| (scope[0].path.clone(), 1));
+        out.push(Finding::new(
+            RULE,
+            &file,
+            line,
+            format!(
+                "lock acquisition cycle: {} — pick one order and stick to it",
+                cycle.join(" -> ")
+            ),
+        ));
+    }
+
+    out
+}
+
+/// `<field>: Mutex<..>` / `<field>: RwLock<..>` (optionally `std::sync::`
+/// qualified) on a struct-field line.  `&Mutex<..>` parameter types do
+/// not match.
+fn decl_field(line: &str) -> Option<String> {
+    for pat in [": Mutex<", ": RwLock<", ": std::sync::Mutex<", ": std::sync::RwLock<"] {
+        if let Some(pos) = line.find(pat) {
+            let head = &line[..pos];
+            let field: String = head
+                .chars()
+                .rev()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect::<Vec<_>>()
+                .into_iter()
+                .rev()
+                .collect();
+            if !field.is_empty() {
+                return Some(field);
+            }
+        }
+    }
+    None
+}
+
+struct Guard {
+    ident: String,
+    lock: String,
+    depth: usize,
+    line: usize,
+}
+
+fn resolve(
+    file: &str,
+    field: &str,
+    by_field_file: &BTreeMap<(String, String), String>,
+    by_field: &BTreeMap<String, BTreeSet<String>>,
+) -> Option<String> {
+    if let Some(n) = by_field_file.get(&(file.to_string(), field.to_string())) {
+        return Some(n.clone());
+    }
+    match by_field.get(field) {
+        Some(names) if names.len() == 1 => names.iter().next().cloned(),
+        _ => None,
+    }
+}
+
+fn scan_file(
+    f: &SourceFile,
+    by_field_file: &BTreeMap<(String, String), String>,
+    by_field: &BTreeMap<String, BTreeSet<String>>,
+    edges: &mut BTreeMap<(String, String), (String, usize)>,
+    out: &mut Vec<Finding>,
+) {
+    let toks = tokens(&f.lex.masked);
+    let mut depth = 0usize;
+    let mut live: Vec<Guard> = Vec::new();
+    let t = |i: usize| toks.get(i).map(|t| t.text.as_str()).unwrap_or("");
+
+    for i in 0..toks.len() {
+        let in_test = f.lex.is_test_line(toks[i].line);
+        match t(i) {
+            "{" => depth += 1,
+            "}" => {
+                depth = depth.saturating_sub(1);
+                live.retain(|g| g.depth <= depth);
+            }
+            "drop" if t(i + 1) == "(" && t(i + 3) == ")" => {
+                let ident = t(i + 2).to_string();
+                live.retain(|g| g.ident != ident);
+            }
+            w if ACQUIRE.contains(&w) && t(i + 1) == "(" && t(i + 2) == ")" && i >= 2 => {
+                if in_test || t(i - 1) != "." {
+                    continue;
+                }
+                let recv = t(i - 2);
+                let Some(lock) = resolve(&f.path, recv, by_field_file, by_field) else {
+                    continue;
+                };
+                let line = toks[i].line;
+                for g in &live {
+                    if g.lock == lock {
+                        out.push(Finding::new(
+                            RULE,
+                            &f.path,
+                            line,
+                            format!(
+                                "lock '{lock}' re-acquired while already held (bound at \
+                                 line {}) — std::sync locks are not reentrant",
+                                g.line
+                            ),
+                        ));
+                    } else {
+                        edges
+                            .entry((g.lock.clone(), lock.clone()))
+                            .or_insert((f.path.clone(), line));
+                    }
+                }
+                // held guard: `let [mut] <ident> = <chain>.lock().unwrap();`
+                if let Some(ident) = guard_binding(&toks, i) {
+                    live.push(Guard { ident, lock, depth, line });
+                }
+            }
+            w @ ("send_while" | "recv" | "recv_timeout") if i >= 1 && t(i - 1) == "." => {
+                if in_test {
+                    continue;
+                }
+                if w == "recv" && !(t(i + 1) == "(" && t(i + 2) == ")") {
+                    continue;
+                }
+                if let Some(g) = live.first() {
+                    out.push(Finding::new(
+                        RULE,
+                        &f.path,
+                        toks[i].line,
+                        format!(
+                            "blocking channel op `.{w}(..)` while holding lock '{}' \
+                             (bound at line {}) — release the guard first, or the \
+                             channel's backpressure stalls every peer of the lock",
+                            g.lock, g.line
+                        ),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// For the acquisition token at `i` (`lock`/`read`/`write`), detect the
+/// held-guard shape: statement `let [mut] IDENT = <recv chain>.lock()
+/// .unwrap();` — the chain is `ident (. ident)*` back from the receiver,
+/// and nothing but `.unwrap()` follows before the `;`.
+fn guard_binding(toks: &[Tok], i: usize) -> Option<String> {
+    let t = |j: usize| toks.get(j).map(|t| t.text.as_str()).unwrap_or("");
+    // forward: `. unwrap ( ) ;`
+    if !(t(i + 3) == "." && t(i + 4) == "unwrap" && t(i + 5) == "(" && t(i + 6) == ")" && t(i + 7) == ";")
+    {
+        return None;
+    }
+    // backward over the receiver chain: i-1 is `.`, i-2 the receiver
+    let mut j = i - 2; // first chain ident
+    while j >= 2 && t(j - 1) == "." {
+        j -= 2; // previous chain ident
+    }
+    if j < 3 || t(j - 1) != "=" {
+        return None;
+    }
+    let mut k = j - 2; // binding ident
+    let ident = t(k).to_string();
+    if ident.is_empty() || !ident.chars().next().map(|c| c.is_ascii_alphabetic() || c == '_').unwrap_or(false) {
+        return None;
+    }
+    if t(k - 1) == "mut" {
+        k -= 1;
+    }
+    if k >= 1 && t(k - 1) == "let" {
+        Some(ident)
+    } else {
+        None
+    }
+}
+
+/// Every elementary cycle's node path (each reported once, smallest node
+/// first), via DFS from each node.
+fn find_cycles(edges: &BTreeMap<(String, String), (String, usize)>) -> Vec<Vec<String>> {
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for (a, b) in edges.keys() {
+        adj.entry(a.as_str()).or_default().push(b.as_str());
+    }
+    let mut cycles: BTreeSet<Vec<String>> = BTreeSet::new();
+    let nodes: Vec<&str> = adj.keys().copied().collect();
+    for &start in &nodes {
+        let mut stack: Vec<&str> = vec![start];
+        dfs(start, start, &adj, &mut stack, &mut cycles);
+    }
+    cycles.into_iter().collect()
+}
+
+fn dfs<'a>(
+    start: &'a str,
+    node: &'a str,
+    adj: &BTreeMap<&'a str, Vec<&'a str>>,
+    stack: &mut Vec<&'a str>,
+    cycles: &mut BTreeSet<Vec<String>>,
+) {
+    for &next in adj.get(node).into_iter().flatten() {
+        if next == start {
+            // canonical form: rotate so the smallest node leads
+            let min = stack.iter().enumerate().min_by_key(|(_, s)| **s).map(|(i, _)| i).unwrap_or(0);
+            let mut path: Vec<String> =
+                stack[min..].iter().chain(stack[..min].iter()).map(|s| s.to_string()).collect();
+            path.push(path[0].clone());
+            cycles.insert(path);
+        } else if !stack.contains(&next) {
+            stack.push(next);
+            dfs(start, next, adj, stack, cycles);
+            stack.pop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SourceFile;
+    use super::*;
+
+    #[test]
+    fn fires_on_cycle_fixture() {
+        let f = SourceFile::new("live/fixture.rs", include_str!("fixtures/lock_cycle.rs"));
+        let findings = check(&[f]);
+        assert_eq!(findings.len(), 1, "findings: {findings:?}");
+        assert!(findings[0].message.contains("cycle"), "{}", findings[0].message);
+        assert!(findings[0].message.contains("alpha -> beta -> alpha"), "{}", findings[0].message);
+    }
+
+    #[test]
+    fn fires_on_send_under_lock_and_missing_annotation() {
+        let f = SourceFile::new("subscribe/fixture.rs", include_str!("fixtures/lock_send.rs"));
+        let findings = check(&[f]);
+        let msgs: Vec<&str> = findings.iter().map(|f| f.message.as_str()).collect();
+        assert!(
+            msgs.iter().any(|m| m.contains("send_while") && m.contains("gamma")),
+            "{msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("lacks a `// lock-order:")),
+            "{msgs:?}"
+        );
+        assert_eq!(findings.len(), 2, "{msgs:?}");
+    }
+
+    #[test]
+    fn consistent_order_and_transient_chains_are_clean() {
+        let src = "\
+pub struct S {
+    // lock-order: alpha
+    a: Mutex<u32>,
+    // lock-order: beta
+    b: Mutex<u32>,
+}
+impl S {
+    fn consistent(&self) {
+        let g = self.a.lock().unwrap();
+        let h = self.b.lock().unwrap();
+        drop(h);
+        drop(g);
+    }
+    fn also_a_then_b(&self) {
+        let g = self.a.lock().unwrap();
+        {
+            let h = self.b.lock().unwrap();
+            let _ = *h;
+        }
+        drop(g);
+    }
+    fn transient(&self) -> u32 {
+        // chained temporary: not a held guard, orders freely
+        *self.b.lock().unwrap()
+    }
+    fn plain_send_ok(&self, tx: &std::sync::mpsc::Sender<u32>) {
+        let g = self.a.lock().unwrap();
+        let _ = tx.send(*g);
+    }
+}
+";
+        let f = SourceFile::new("live/ok.rs", src);
+        let findings = check(&[f]);
+        assert!(findings.is_empty(), "findings: {findings:?}");
+    }
+
+    #[test]
+    fn guard_released_by_drop_does_not_edge() {
+        let src = "\
+pub struct S {
+    // lock-order: alpha
+    a: Mutex<u32>,
+    // lock-order: beta
+    b: Mutex<u32>,
+}
+impl S {
+    fn one(&self) {
+        let g = self.a.lock().unwrap();
+        drop(g);
+        let h = self.b.lock().unwrap();
+        drop(h);
+    }
+    fn two(&self) {
+        let g = self.b.lock().unwrap();
+        drop(g);
+        let h = self.a.lock().unwrap();
+        drop(h);
+    }
+}
+";
+        let f = SourceFile::new("live/ok2.rs", src);
+        let findings = check(&[f]);
+        assert!(findings.is_empty(), "findings: {findings:?}");
+    }
+
+    #[test]
+    fn reacquisition_of_same_lock_fires() {
+        let src = "\
+pub struct S {
+    // lock-order: alpha
+    a: Mutex<u32>,
+}
+impl S {
+    fn oops(&self) {
+        let g = self.a.lock().unwrap();
+        let h = self.a.lock().unwrap();
+        let _ = (g, h);
+    }
+}
+";
+        let f = SourceFile::new("live/ok3.rs", src);
+        let findings = check(&[f]);
+        assert_eq!(findings.len(), 1, "findings: {findings:?}");
+        assert!(findings[0].message.contains("re-acquired"));
+    }
+
+    #[test]
+    fn out_of_scope_files_are_ignored() {
+        let f = SourceFile::new("aidw/fixture.rs", include_str!("fixtures/lock_cycle.rs"));
+        assert!(check(&[f]).is_empty());
+    }
+}

@@ -1,0 +1,406 @@
+//! `aidw tidy` — a zero-dependency, rustc-`tidy`-style static analysis
+//! suite that enforces this repository's cross-cutting invariants.  Run
+//! it with `aidw tidy [--json] [--root PATH]`; ci.sh runs it as a fatal
+//! tier-1 gate.  The checks are *lexical* (see [`lexer`]): they scan
+//! masked tokens, comments and string literals — no AST, no external
+//! crates — which keeps them fast, dependency-free, and robust to code
+//! that does not compile yet.
+//!
+//! # Rules
+//!
+//! | rule | what it enforces |
+//! |------|------------------|
+//! | `stage_key` | Every `ResolvedOptions` field in `coordinator/options.rs` is classified into exactly one of `stage1_key()`, `stage2_key()`, or the declared `NEITHER_STAGE_KEY` table; `QueryOptions` fields map onto resolved fields (via `QUERY_FIELD_ALIASES`); the `Stage1Key`/`Stage2Key` structs stay in sync with their projection functions.  A new knob cannot silently skew batch admission or cache identity. |
+//! | `lock_order` | In `live/`, `subscribe/` and `coordinator/`: every `Mutex`/`RwLock` field declaration carries a `// lock-order: <name>` annotation; the observed lexical nesting of `.lock()`/`.read()`/`.write()` acquisitions forms an acyclic graph over those names; no guard is held across a blocking channel op (`send_while`, `.recv()`, `.recv_timeout(`) — plain `.send(` on an unbounded channel is deliberately exempt. |
+//! | `protocol_drift` | `service/protocol.rs`: the doc-header `Wire protocol **vX.Y**` matches `PROTOCOL_VERSION`; every request key read in `fn decode`/`fn decode_options` appears in the header's request-example block, and vice versa (keys, `op` values and `action` values). |
+//! | `panic_hygiene` | No `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/`unimplemented!` in `service/`, `subscribe/` or `coordinator/batcher.rs` outside tests.  The poisoned-lock idiom (`.lock().unwrap()`, `.read()`, `.write()`, condvar `.wait(..)`/`.wait_timeout(..)`) is exempt: lock poisoning is already a crashed thread. |
+//! | `print_hygiene` | No `eprintln!`/`eprint!`/`dbg!` outside `main.rs`/`cli.rs` — the event journal (PR 7) is where the server reports state. |
+//! | `safety_comments` | Every `unsafe` keyword (blocks and `unsafe impl`) carries a `// SAFETY:` comment on the same line or the comment block immediately above. |
+//!
+//! Two audit rules fire on the allowlist itself: `allow_syntax`
+//! (malformed or unknown-rule directives) and `allow_unused` (a
+//! directive that suppressed nothing — stale allows rot).
+//!
+//! # Allowlist etiquette
+//!
+//! A finding is suppressed by a justification-carrying directive on the
+//! same line or the line directly above it:
+//!
+//! ```text
+//! // tidy:allow(print_hygiene) -- standalone datasets have no journal;
+//! eprintln!("...");
+//! ```
+//!
+//! The rule name must be real, the ` -- reason` is mandatory, and an
+//! allow that stops matching anything becomes an `allow_unused` finding
+//! — delete it.  Directives are only read from plain `//` comments (doc
+//! comments like this one may show the syntax without enacting it).
+//! Prefer fixing the code; allow only what is genuinely intentional,
+//! and say *why*, not *what*.
+//!
+//! # Adding a rule
+//!
+//! 1. Write `fn check(files: &[SourceFile]) -> Vec<Finding>` in a new
+//!    submodule, reading only `SourceFile::lex` (masked text, tokens,
+//!    comments, strings).  Scope it by path prefix; skip
+//!    `lex.is_test_line(..)` lines unless tests are genuinely in scope.
+//! 2. Register its name in [`RULES`] and call it from [`run_rules`].
+//! 3. Ship a fail-fixture under `analysis/fixtures/` (excluded from the
+//!    tree walk, pulled in with `include_str!`) and a test asserting the
+//!    rule fires on it — and stays silent on the live tree (the
+//!    `live_tree_is_clean` test covers every registered rule).
+//! 4. Document it in the table above.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::jsonio::Json;
+
+pub mod hygiene;
+pub mod lexer;
+pub mod lock_order;
+pub mod protocol_drift;
+pub mod stage_key;
+
+/// Every registered rule name.  `tidy:allow(..)` directives must name one
+/// of these (the two allow-audit rules are implicit and not allowable).
+pub const RULES: &[&str] = &[
+    "stage_key",
+    "lock_order",
+    "protocol_drift",
+    "panic_hygiene",
+    "print_hygiene",
+    "safety_comments",
+];
+
+/// One source file, path-relative to `rust/src` (forward slashes), with
+/// its lexer output.
+pub struct SourceFile {
+    pub path: String,
+    pub lex: lexer::Lexed,
+}
+
+impl SourceFile {
+    pub fn new(path: &str, text: &str) -> SourceFile {
+        SourceFile { path: path.to_string(), lex: lexer::lex(text) }
+    }
+}
+
+/// One rule violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(rule: &'static str, file: &str, line: usize, message: String) -> Finding {
+        Finding { rule, file: file.to_string(), line, message }
+    }
+}
+
+/// The result of a full tidy run: file count + post-allowlist findings.
+pub struct TidyReport {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+}
+
+impl TidyReport {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Machine-readable form, built on the repo's own [`Json`] (BTreeMap
+    /// object keys make the serialization deterministic).
+    pub fn to_json(&self) -> Json {
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("rule", Json::Str(f.rule.to_string())),
+                    ("file", Json::Str(f.file.clone())),
+                    ("line", Json::Num(f.line as f64)),
+                    ("message", Json::Str(f.message.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("tidy", Json::obj(vec![
+                ("files", Json::Num(self.files_scanned as f64)),
+                ("findings", Json::Arr(findings)),
+            ])),
+            ("clean", Json::Bool(self.clean())),
+        ])
+    }
+
+    /// Human-readable form, one `file:line: [rule] message` per finding.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+        }
+        out.push_str(&format!(
+            "tidy: {} file(s) scanned, {} finding(s)\n",
+            self.files_scanned,
+            self.findings.len()
+        ));
+        out
+    }
+}
+
+/// Run every registered rule over `files` (no allowlist applied).
+pub fn run_rules(files: &[SourceFile]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    findings.extend(stage_key::check(files));
+    findings.extend(lock_order::check(files));
+    findings.extend(protocol_drift::check(files));
+    findings.extend(hygiene::check(files));
+    findings
+}
+
+struct Allow {
+    file: String,
+    line: usize,
+    rule: String,
+    used: bool,
+}
+
+/// Collect `tidy:allow` directives, flagging malformed ones.
+fn collect_allows(files: &[SourceFile]) -> (Vec<Allow>, Vec<Finding>) {
+    let mut allows = Vec::new();
+    let mut bad = Vec::new();
+    for f in files {
+        for c in &f.lex.comments {
+            // directives live in plain `//` comments only: doc comments
+            // (`///`, `//!`) may *show* the syntax without enacting it
+            if c.text.starts_with('/') || c.text.starts_with('!') {
+                continue;
+            }
+            let Some(pos) = c.text.find("tidy:allow") else { continue };
+            let rest = &c.text[pos + "tidy:allow".len()..];
+            let parsed = (|| {
+                let rest = rest.strip_prefix('(')?;
+                let close = rest.find(')')?;
+                let rule = rest[..close].trim().to_string();
+                let after = rest[close + 1..].trim_start();
+                let reason = after.strip_prefix("--")?.trim();
+                if reason.is_empty() {
+                    return None;
+                }
+                Some(rule)
+            })();
+            match parsed {
+                Some(rule) if RULES.contains(&rule.as_str()) => {
+                    allows.push(Allow { file: f.path.clone(), line: c.line, rule, used: false });
+                }
+                Some(rule) => bad.push(Finding::new(
+                    "allow_syntax",
+                    &f.path,
+                    c.line,
+                    format!("tidy:allow names unknown rule '{rule}'"),
+                )),
+                None => bad.push(Finding::new(
+                    "allow_syntax",
+                    &f.path,
+                    c.line,
+                    "malformed tidy:allow — expected `tidy:allow(<rule>) -- <reason>`".to_string(),
+                )),
+            }
+        }
+    }
+    (allows, bad)
+}
+
+/// Apply the allowlist: drop suppressed findings, add allow-audit
+/// findings, sort deterministically.
+pub fn apply_allows(files: &[SourceFile], raw: Vec<Finding>) -> Vec<Finding> {
+    let (mut allows, mut out) = collect_allows(files);
+    for f in raw {
+        let hit = allows.iter_mut().find(|a| {
+            a.rule == f.rule && a.file == f.file && (a.line == f.line || a.line + 1 == f.line)
+        });
+        match hit {
+            Some(a) => a.used = true,
+            None => out.push(f),
+        }
+    }
+    for a in &allows {
+        if !a.used {
+            out.push(Finding::new(
+                "allow_unused",
+                &a.file,
+                a.line,
+                format!("tidy:allow({}) suppresses nothing — delete it", a.rule),
+            ));
+        }
+    }
+    out.sort_by(|x, y| (&x.file, x.line, x.rule).cmp(&(&y.file, y.line, y.rule)));
+    out
+}
+
+/// Load every `.rs` file under `src_dir` (recursively, sorted), skipping
+/// `analysis/fixtures/` — the fixtures are deliberate rule violations.
+pub fn scan_tree(src_dir: &Path) -> io::Result<Vec<SourceFile>> {
+    let mut paths = Vec::new();
+    walk(src_dir, src_dir, &mut paths)?;
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for rel in paths {
+        let text = fs::read_to_string(src_dir.join(&rel))?;
+        let rel_str = rel
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        files.push(SourceFile::new(&rel_str, &text));
+    }
+    Ok(files)
+}
+
+fn walk(base: &Path, dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            if path.file_name().map(|n| n == "fixtures").unwrap_or(false) {
+                continue;
+            }
+            walk(base, &path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            if let Ok(rel) = path.strip_prefix(base) {
+                out.push(rel.to_path_buf());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Full run over a source tree: scan, all rules, allowlist.
+pub fn run(src_dir: &Path) -> io::Result<TidyReport> {
+    let files = scan_tree(src_dir)?;
+    let raw = run_rules(&files);
+    let findings = apply_allows(&files, raw);
+    Ok(TidyReport { files_scanned: files.len(), findings })
+}
+
+/// Locate the `rust/src` tree to scan.  `root_override` (the CLI's
+/// `--root`) names the repo root; otherwise try the working directory as
+/// repo root, as the `rust/` directory, and as `rust/src` itself, then
+/// one level up — covers invocation from the repo root, from `rust/`
+/// (where cargo runs), and from `rust/src`.
+pub fn locate_src_dir(root_override: Option<&str>) -> Option<PathBuf> {
+    let candidates: Vec<PathBuf> = match root_override {
+        Some(r) => vec![Path::new(r).join("rust/src"), Path::new(r).join("src"), PathBuf::from(r)],
+        None => vec![
+            PathBuf::from("rust/src"),
+            PathBuf::from("src"),
+            PathBuf::from("."),
+            PathBuf::from("../rust/src"),
+            PathBuf::from("../src"),
+        ],
+    };
+    candidates.into_iter().find(|c| c.join("lib.rs").is_file())
+}
+
+/// The allow-audit findings keyed for tests.
+pub fn findings_by_rule(findings: &[Finding]) -> BTreeMap<&'static str, usize> {
+    let mut m = BTreeMap::new();
+    for f in findings {
+        *m.entry(f.rule).or_insert(0) += 1;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn live_tree() -> Vec<SourceFile> {
+        let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        scan_tree(&src).expect("scan rust/src")
+    }
+
+    /// The headline gate: every rule, run over this repository's own
+    /// sources, after the allowlist — zero findings.
+    #[test]
+    fn live_tree_is_clean() {
+        let files = live_tree();
+        assert!(files.len() > 20, "tree walk found only {} files", files.len());
+        let findings = apply_allows(&files, run_rules(&files));
+        assert!(
+            findings.is_empty(),
+            "tidy findings on the live tree:\n{}",
+            findings
+                .iter()
+                .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message))
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+
+    #[test]
+    fn fixtures_are_excluded_from_the_walk() {
+        let files = live_tree();
+        assert!(files.iter().all(|f| !f.path.contains("fixtures/")));
+        assert!(files.iter().any(|f| f.path == "analysis/mod.rs"));
+        assert!(files.iter().any(|f| f.path == "coordinator/options.rs"));
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let report = TidyReport {
+            files_scanned: 3,
+            findings: vec![
+                Finding::new("print_hygiene", "live/mod.rs", 12, "no printing".to_string()),
+                Finding::new("stage_key", "coordinator/options.rs", 7, "classify 'x'".to_string()),
+            ],
+        };
+        let text = report.to_json().to_string();
+        let back = Json::parse(&text).expect("tidy JSON parses");
+        assert_eq!(back.get("clean").as_bool(), Some(false));
+        let tidy = back.get("tidy");
+        assert_eq!(tidy.get("files").as_usize(), Some(3));
+        let arr = tidy.get("findings").as_arr().expect("findings array");
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("rule").as_str(), Some("print_hygiene"));
+        assert_eq!(arr[0].get("file").as_str(), Some("live/mod.rs"));
+        assert_eq!(arr[0].get("line").as_usize(), Some(12));
+        assert_eq!(arr[1].get("message").as_str(), Some("classify 'x'"));
+        // clean report serializes clean:true
+        let clean = TidyReport { files_scanned: 1, findings: vec![] };
+        let j = Json::parse(&clean.to_json().to_string()).expect("parses");
+        assert_eq!(j.get("clean").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn allow_audit_fires_on_fixture() {
+        let f = SourceFile::new(
+            "live/fixture2.rs",
+            include_str!("fixtures/allow_bad.rs"),
+        );
+        let files = vec![f];
+        let findings = apply_allows(&files, run_rules(&files));
+        let by_rule = findings_by_rule(&findings);
+        assert_eq!(by_rule.get("allow_unused"), Some(&1), "findings: {findings:?}");
+        assert_eq!(by_rule.get("allow_syntax"), Some(&2), "findings: {findings:?}");
+        // the malformed (reason-less) allow must NOT suppress the print
+        assert_eq!(by_rule.get("print_hygiene"), Some(&1), "findings: {findings:?}");
+    }
+
+    #[test]
+    fn valid_allow_suppresses_and_counts_as_used() {
+        let f = SourceFile::new("live/fixture.rs", include_str!("fixtures/print_bad.rs"));
+        let files = vec![f];
+        let raw = run_rules(&files);
+        assert_eq!(raw.len(), 3, "raw print findings: {raw:?}");
+        let findings = apply_allows(&files, raw);
+        // one of the three is allowlisted; no allow_unused appears
+        assert_eq!(findings.len(), 2, "post-allow findings: {findings:?}");
+        assert!(findings.iter().all(|f| f.rule == "print_hygiene"));
+    }
+}

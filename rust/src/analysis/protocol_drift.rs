@@ -1,0 +1,275 @@
+//! Rule `protocol_drift`: `service/protocol.rs`'s doc header is a
+//! *contract*, not prose — this rule keeps it honest (and replaces the
+//! old ci.sh shell-grep version check).
+//!
+//! Three comparisons, all against the module's leading `//!` header:
+//!
+//! * the header's `Wire protocol **vX.Y**` banner equals the
+//!   `PROTOCOL_VERSION` constant;
+//! * every identifier-like string literal inside `fn decode` /
+//!   `fn decode_options` (the request keys, `op` values and `action`
+//!   values the server actually reads) appears in the header's first
+//!   fenced ```json request-example block;
+//! * and the reverse: every key / `op` value / `action` value the block
+//!   advertises is really read by the decoders — documentation cannot
+//!   promise a field the server ignores.
+
+use std::collections::BTreeSet;
+
+use super::lexer::tokens;
+use super::{Finding, SourceFile};
+
+const RULE: &str = "protocol_drift";
+
+pub fn check(files: &[SourceFile]) -> Vec<Finding> {
+    let Some(file) = files.iter().find(|f| f.path.ends_with("service/protocol.rs")) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    let toks = tokens(&file.lex.masked);
+
+    // the doc header: every comment above the first code token
+    let first_code_line = toks.first().map(|t| t.line).unwrap_or(usize::MAX);
+    let header: String = file
+        .lex
+        .comments
+        .iter()
+        .filter(|c| c.line < first_code_line)
+        .map(|c| c.text.strip_prefix('!').unwrap_or(&c.text).to_string())
+        .collect::<Vec<_>>()
+        .join("\n");
+
+    // 1. version banner vs PROTOCOL_VERSION
+    let doc_ver = header
+        .split("Wire protocol **v")
+        .nth(1)
+        .and_then(|rest| rest.split("**").next())
+        .map(|v| v.trim().to_string());
+    let const_ver = find_seq(&toks, &["const", "PROTOCOL_VERSION"]).and_then(|i| {
+        let from = toks[i].offset;
+        file.lex.strings.iter().find(|s| s.offset > from).map(|s| s.value.clone())
+    });
+    match (&doc_ver, &const_ver) {
+        (Some(d), Some(c)) if d != c => out.push(Finding::new(
+            RULE,
+            &file.path,
+            1,
+            format!("doc header says wire protocol v{d} but PROTOCOL_VERSION is \"{c}\""),
+        )),
+        (None, _) => out.push(Finding::new(
+            RULE,
+            &file.path,
+            1,
+            "doc header has no `Wire protocol **vX.Y**` banner".to_string(),
+        )),
+        (_, None) => out.push(Finding::new(
+            RULE,
+            &file.path,
+            1,
+            "no PROTOCOL_VERSION string constant found".to_string(),
+        )),
+        _ => {}
+    }
+
+    // 2. the header's first fenced json block: advertised request keys
+    //    plus the op/action verb values
+    let block = header
+        .split("```json")
+        .nth(1)
+        .and_then(|rest| rest.split("```").next())
+        .unwrap_or("");
+    if block.is_empty() {
+        out.push(Finding::new(
+            RULE,
+            &file.path,
+            1,
+            "doc header has no fenced ```json request-example block".to_string(),
+        ));
+        return out;
+    }
+    let mut doc_terms: BTreeSet<String> = BTreeSet::new();
+    for (key, value) in json_pairs(block) {
+        if is_key_like(&key) {
+            doc_terms.insert(key.clone());
+        }
+        if (key == "op" || key == "action") && is_key_like(&value) {
+            doc_terms.insert(value);
+        }
+    }
+
+    // 3. what the decoders actually read: identifier-like string
+    //    literals inside fn decode / fn decode_options
+    let mut code_terms: BTreeSet<String> = BTreeSet::new();
+    let mut code_lines: Vec<(String, usize)> = Vec::new();
+    for name in ["decode", "decode_options"] {
+        let Some(start) = find_seq(&toks, &["fn", name]) else {
+            out.push(Finding::new(
+                RULE,
+                &file.path,
+                1,
+                format!("protocol.rs has no `fn {name}`"),
+            ));
+            continue;
+        };
+        let Some((from, to)) = body_range(&toks, start) else { continue };
+        for s in &file.lex.strings {
+            if s.offset > from && s.offset < to && is_key_like(&s.value) {
+                code_terms.insert(s.value.clone());
+                code_lines.push((s.value.clone(), s.line));
+            }
+        }
+    }
+
+    for term in code_terms.difference(&doc_terms) {
+        let line = code_lines.iter().find(|(t, _)| t == term).map(|(_, l)| *l).unwrap_or(1);
+        out.push(Finding::new(
+            RULE,
+            &file.path,
+            line,
+            format!(
+                "decoder reads \"{term}\" but the doc header's request examples \
+                 never mention it — document the field"
+            ),
+        ));
+    }
+    for term in doc_terms.difference(&code_terms) {
+        out.push(Finding::new(
+            RULE,
+            &file.path,
+            1,
+            format!(
+                "doc header advertises \"{term}\" but neither decoder reads it — \
+                 stale documentation or a missing decode arm"
+            ),
+        ));
+    }
+
+    out
+}
+
+/// `"key": <value>` pairs in a json-ish text; values captured only when
+/// they are themselves quoted strings (enough for `op`/`action` verbs).
+fn json_pairs(block: &str) -> Vec<(String, String)> {
+    let mut pairs = Vec::new();
+    let chars: Vec<char> = block.chars().collect();
+    let mut i = 0usize;
+    while i < chars.len() {
+        if chars[i] != '"' {
+            i += 1;
+            continue;
+        }
+        let start = i + 1;
+        let mut j = start;
+        while j < chars.len() && chars[j] != '"' {
+            j += 1;
+        }
+        if j >= chars.len() {
+            break;
+        }
+        let word: String = chars[start..j].iter().collect();
+        let mut k = j + 1;
+        while k < chars.len() && chars[k].is_whitespace() {
+            k += 1;
+        }
+        if k < chars.len() && chars[k] == ':' {
+            // a key: its value may be a quoted string
+            k += 1;
+            while k < chars.len() && chars[k].is_whitespace() {
+                k += 1;
+            }
+            let mut value = String::new();
+            if k < chars.len() && chars[k] == '"' {
+                let vstart = k + 1;
+                let mut v = vstart;
+                while v < chars.len() && chars[v] != '"' {
+                    v += 1;
+                }
+                if v < chars.len() {
+                    value = chars[vstart..v].iter().collect();
+                }
+            }
+            pairs.push((word, value));
+        }
+        i = j + 1;
+    }
+    pairs
+}
+
+/// Lowercase snake-case identifiers — protocol keys and verbs.  Filters
+/// out prose, numbers and format-string fragments.
+fn is_key_like(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().map(|c| c.is_ascii_lowercase() || c == '_').unwrap_or(false)
+        && s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+fn find_seq(toks: &[super::lexer::Tok], seq: &[&str]) -> Option<usize> {
+    (0..toks.len().saturating_sub(seq.len() - 1))
+        .find(|&i| seq.iter().enumerate().all(|(j, s)| toks[i + j].text == *s))
+}
+
+/// Byte range of the brace-delimited body of the item starting at token
+/// `start`.
+fn body_range(toks: &[super::lexer::Tok], start: usize) -> Option<(usize, usize)> {
+    let open = (start..toks.len()).find(|&i| toks[i].text == "{")?;
+    let mut depth = 0usize;
+    for i in open..toks.len() {
+        match toks[i].text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((toks[open].offset, toks[i].offset));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SourceFile;
+    use super::*;
+
+    #[test]
+    fn fires_on_drift_fixture() {
+        let f = SourceFile::new(
+            "service/protocol.rs",
+            include_str!("fixtures/protocol_drift.rs"),
+        );
+        let findings = check(&[f]);
+        let msgs: Vec<&str> = findings.iter().map(|f| f.message.as_str()).collect();
+        assert!(
+            msgs.iter().any(|m| m.contains("v9.1") && m.contains("9.0")),
+            "version drift not caught: {msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("\"ghost_key\"") && m.contains("advertises")),
+            "doc-only key not caught: {msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("\"rogue_key\"") && m.contains("never mention")),
+            "code-only key not caught: {msgs:?}"
+        );
+        assert_eq!(findings.len(), 3, "{msgs:?}");
+    }
+
+    #[test]
+    fn clean_when_doc_and_code_agree() {
+        let fixed = include_str!("fixtures/protocol_drift.rs")
+            .replace("**v9.1**", "**v9.0**")
+            .replace(",\"ghost_key\":1", "")
+            .replace(", \"rogue_key\"", "");
+        let f = SourceFile::new("service/protocol.rs", &fixed);
+        let findings = check(&[f]);
+        assert!(findings.is_empty(), "findings: {findings:?}");
+    }
+
+    #[test]
+    fn absent_protocol_file_is_a_no_op() {
+        let f = SourceFile::new("live/mod.rs", "pub fn x() {}\n");
+        assert!(check(&[f]).is_empty());
+    }
+}

@@ -1,0 +1,384 @@
+//! Rule `stage_key`: the coalescing contract of `coordinator/options.rs`.
+//!
+//! Batch admission and cache identity hinge on every options field being
+//! consciously classified: a field in `stage1_key()` separates batches
+//! and cache entries, a field in `stage2_key()` separates stage-2 kernel
+//! groups, and a field in `NEITHER_STAGE_KEY` is a declaration that it
+//! never changes the numbers (tiling, tracing, layout).  A field in
+//! *none* of the three would silently coalesce jobs whose numerics
+//! differ — the exact failure mode PRs 3/7/8 document.  This rule makes
+//! that a build error:
+//!
+//! * every `ResolvedOptions` field appears in exactly one of
+//!   `stage1_key()` / `stage2_key()` / `NEITHER_STAGE_KEY`;
+//! * `NEITHER_STAGE_KEY` names only real fields (no stale entries);
+//! * every `QueryOptions` field maps onto a `ResolvedOptions` field,
+//!   directly or via `QUERY_FIELD_ALIASES`;
+//! * the `Stage1Key`/`Stage2Key` struct fields match exactly what their
+//!   projection functions read from `self` — the key type and the
+//!   projection cannot drift apart.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{tokens, Tok};
+use super::{Finding, SourceFile};
+
+const RULE: &str = "stage_key";
+const OPTIONS_PATH: &str = "coordinator/options.rs";
+
+pub fn check(files: &[SourceFile]) -> Vec<Finding> {
+    let Some(file) = files.iter().find(|f| f.path.ends_with(OPTIONS_PATH)) else {
+        // single-file fixture runs need not include options.rs; the CLI
+        // and the live-tree test always scan the whole tree
+        return Vec::new();
+    };
+    let toks = tokens(&file.lex.masked);
+    let mut out = Vec::new();
+
+    let q_fields = struct_fields(&toks, "QueryOptions");
+    let r_fields = struct_fields(&toks, "ResolvedOptions");
+    let s1_fields = struct_fields(&toks, "Stage1Key");
+    let s2_fields = struct_fields(&toks, "Stage2Key");
+    let s1_refs = self_refs(&toks, "stage1_key");
+    let s2_refs = self_refs(&toks, "stage2_key");
+    let neither = const_strings(file, &toks, "NEITHER_STAGE_KEY");
+    let aliases = const_strings(file, &toks, "QUERY_FIELD_ALIASES");
+
+    let mut missing = Vec::new();
+    for (name, present) in [
+        ("struct QueryOptions", q_fields.is_some()),
+        ("struct ResolvedOptions", r_fields.is_some()),
+        ("struct Stage1Key", s1_fields.is_some()),
+        ("struct Stage2Key", s2_fields.is_some()),
+        ("fn stage1_key", s1_refs.is_some()),
+        ("fn stage2_key", s2_refs.is_some()),
+        ("const NEITHER_STAGE_KEY", neither.is_some()),
+        ("const QUERY_FIELD_ALIASES", aliases.is_some()),
+    ] {
+        if !present {
+            missing.push(name);
+        }
+    }
+    if !missing.is_empty() {
+        out.push(Finding::new(
+            RULE,
+            &file.path,
+            1,
+            format!("options.rs is missing: {}", missing.join(", ")),
+        ));
+        return out;
+    }
+    let q_fields = q_fields.unwrap_or_default();
+    let r_fields = r_fields.unwrap_or_default();
+    let s1_fields = s1_fields.unwrap_or_default();
+    let s2_fields = s2_fields.unwrap_or_default();
+    let s1_refs = s1_refs.unwrap_or_default();
+    let s2_refs = s2_refs.unwrap_or_default();
+    let neither = neither.unwrap_or_default();
+    let aliases = aliases.unwrap_or_default();
+
+    if aliases.len() % 2 != 0 {
+        out.push(Finding::new(
+            RULE,
+            &file.path,
+            1,
+            "QUERY_FIELD_ALIASES must hold (query_field, resolved_field) pairs".to_string(),
+        ));
+    }
+    let alias_pairs: Vec<(&str, &str)> = aliases
+        .chunks_exact(2)
+        .map(|c| (c[0].as_str(), c[1].as_str()))
+        .collect();
+
+    let r_names: BTreeSet<&str> = r_fields.iter().map(|(n, _)| n.as_str()).collect();
+    let q_names: BTreeSet<&str> = q_fields.iter().map(|(n, _)| n.as_str()).collect();
+    let neither_set: BTreeSet<&str> = neither.iter().map(|s| s.as_str()).collect();
+
+    // 1. every ResolvedOptions field in exactly one bucket
+    for (name, line) in &r_fields {
+        let in_s1 = s1_refs.contains(name);
+        let in_s2 = s2_refs.contains(name);
+        let in_neither = neither_set.contains(name.as_str());
+        let count = in_s1 as usize + in_s2 as usize + in_neither as usize;
+        if count == 0 {
+            out.push(Finding::new(
+                RULE,
+                &file.path,
+                *line,
+                format!(
+                    "ResolvedOptions field '{name}' is in none of stage1_key(), \
+                     stage2_key(), NEITHER_STAGE_KEY — unclassified fields silently \
+                     coalesce jobs whose numerics may differ; classify it"
+                ),
+            ));
+        } else if count > 1 {
+            let mut places = Vec::new();
+            if in_s1 {
+                places.push("stage1_key()");
+            }
+            if in_s2 {
+                places.push("stage2_key()");
+            }
+            if in_neither {
+                places.push("NEITHER_STAGE_KEY");
+            }
+            out.push(Finding::new(
+                RULE,
+                &file.path,
+                *line,
+                format!(
+                    "ResolvedOptions field '{name}' is classified more than once: {}",
+                    places.join(" and ")
+                ),
+            ));
+        }
+    }
+
+    // 2. no stale NEITHER entries
+    for entry in &neither {
+        if !r_names.contains(entry.as_str()) {
+            out.push(Finding::new(
+                RULE,
+                &file.path,
+                1,
+                format!("NEITHER_STAGE_KEY entry '{entry}' is not a ResolvedOptions field"),
+            ));
+        }
+    }
+
+    // 3. every QueryOptions field maps onto a ResolvedOptions field
+    for (name, line) in &q_fields {
+        let resolved = alias_pairs
+            .iter()
+            .find(|(q, _)| q == name)
+            .map(|(_, r)| *r)
+            .unwrap_or(name.as_str());
+        if !r_names.contains(resolved) {
+            out.push(Finding::new(
+                RULE,
+                &file.path,
+                *line,
+                format!(
+                    "QueryOptions field '{name}' has no ResolvedOptions counterpart \
+                     '{resolved}' (add the field, or a QUERY_FIELD_ALIASES entry)"
+                ),
+            ));
+        }
+    }
+
+    // 4. alias table hygiene
+    for (q, r) in &alias_pairs {
+        if !q_names.contains(q) {
+            out.push(Finding::new(
+                RULE,
+                &file.path,
+                1,
+                format!("QUERY_FIELD_ALIASES maps '{q}' which is not a QueryOptions field"),
+            ));
+        }
+        if !r_names.contains(r) {
+            out.push(Finding::new(
+                RULE,
+                &file.path,
+                1,
+                format!("QUERY_FIELD_ALIASES target '{r}' is not a ResolvedOptions field"),
+            ));
+        }
+    }
+
+    // 5. key structs match their projections exactly
+    for (struct_name, fields, refs, fn_name) in [
+        ("Stage1Key", &s1_fields, &s1_refs, "stage1_key()"),
+        ("Stage2Key", &s2_fields, &s2_refs, "stage2_key()"),
+    ] {
+        let field_set: BTreeSet<&str> = fields.iter().map(|(n, _)| n.as_str()).collect();
+        let ref_set: BTreeSet<&str> = refs.iter().map(|s| s.as_str()).collect();
+        for f in field_set.difference(&ref_set) {
+            out.push(Finding::new(
+                RULE,
+                &file.path,
+                1,
+                format!("{struct_name} field '{f}' is never read by {fn_name}"),
+            ));
+        }
+        for f in ref_set.difference(&field_set) {
+            out.push(Finding::new(
+                RULE,
+                &file.path,
+                1,
+                format!("{fn_name} reads self.{f} but {struct_name} has no such field"),
+            ));
+        }
+    }
+
+    out
+}
+
+/// Fields of `struct <name> { .. }`: idents followed by a single `:` at
+/// brace depth 1, preceded by `{`, `,` or `pub`.
+fn struct_fields(toks: &[Tok], name: &str) -> Option<Vec<(String, usize)>> {
+    let start = find_seq(toks, &["struct", name])?;
+    let open = (start + 2..toks.len()).find(|&i| toks[i].text == "{")?;
+    let mut fields = Vec::new();
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            ":" if depth == 1 && i >= 2 => {
+                let next_is_colon = toks.get(i + 1).map(|t| t.text == ":").unwrap_or(false);
+                let prev_ident = i > open + 1
+                    && toks[i - 1].text.chars().next().map(|c| c.is_ascii_lowercase() || c == '_')
+                        == Some(true);
+                let before = &toks[i - 2].text;
+                if !next_is_colon
+                    && prev_ident
+                    && (before == "{" || before == "," || before == "pub")
+                {
+                    fields.push((toks[i - 1].text.clone(), toks[i - 1].line));
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    Some(fields)
+}
+
+/// `self.<field>` reads inside `fn <name>`'s body (method calls on self
+/// excluded).
+fn self_refs(toks: &[Tok], name: &str) -> Option<BTreeSet<String>> {
+    let start = find_seq(toks, &["fn", name])?;
+    let open = (start + 2..toks.len()).find(|&i| toks[i].text == "{")?;
+    let mut refs = BTreeSet::new();
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            "self" => {
+                if toks.get(i + 1).map(|t| t.text == ".").unwrap_or(false) {
+                    if let Some(field) = toks.get(i + 2) {
+                        let is_call =
+                            toks.get(i + 3).map(|t| t.text == "(").unwrap_or(false);
+                        if !is_call {
+                            refs.insert(field.text.clone());
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    Some(refs)
+}
+
+/// String literals between `const <name>` and its terminating `;`.
+fn const_strings(file: &SourceFile, toks: &[Tok], name: &str) -> Option<Vec<String>> {
+    let start = find_seq(toks, &["const", name])?;
+    let from = toks[start].offset;
+    let to = (start..toks.len())
+        .find(|&i| toks[i].text == ";")
+        .map(|i| toks[i].offset)
+        .unwrap_or(usize::MAX);
+    Some(
+        file.lex
+            .strings
+            .iter()
+            .filter(|s| s.offset > from && s.offset < to)
+            .map(|s| s.value.clone())
+            .collect(),
+    )
+}
+
+fn find_seq(toks: &[Tok], seq: &[&str]) -> Option<usize> {
+    (0..toks.len().saturating_sub(seq.len() - 1))
+        .find(|&i| seq.iter().enumerate().all(|(j, s)| toks[i + j].text == *s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SourceFile;
+    use super::*;
+
+    #[test]
+    fn fires_on_unclassified_field_fixture() {
+        // the acceptance-criterion pin: a new ResolvedOptions field with
+        // no classification fails the build
+        let f = SourceFile::new(
+            "coordinator/options.rs",
+            include_str!("fixtures/stage_key_bad.rs"),
+        );
+        let findings = check(&[f]);
+        assert_eq!(findings.len(), 1, "findings: {findings:?}");
+        assert!(findings[0].message.contains("frobnicate"), "{}", findings[0].message);
+        assert!(findings[0].message.contains("unclassified") || findings[0].message.contains("none of"));
+    }
+
+    #[test]
+    fn clean_when_every_field_is_classified() {
+        let fixed = include_str!("fixtures/stage_key_bad.rs")
+            .replace("&[];", "&[\"frobnicate\"];");
+        let f = SourceFile::new("coordinator/options.rs", &fixed);
+        let findings = check(&[f]);
+        assert!(findings.is_empty(), "findings: {findings:?}");
+    }
+
+    #[test]
+    fn stale_neither_entry_and_bad_alias_fire() {
+        let fixed = include_str!("fixtures/stage_key_bad.rs")
+            .replace("&[];", "&[\"frobnicate\", \"ghost\"];")
+            .replace(
+                "&[(\"local\", \"local_neighbors\")];",
+                "&[(\"local\", \"local_neighbors\"), (\"phantom\", \"k\")];",
+            );
+        let f = SourceFile::new("coordinator/options.rs", &fixed);
+        let findings = check(&[f]);
+        let msgs: Vec<&str> = findings.iter().map(|f| f.message.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("'ghost'")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("'phantom'")), "{msgs:?}");
+        assert_eq!(findings.len(), 2, "{msgs:?}");
+    }
+
+    #[test]
+    fn key_struct_projection_drift_fires() {
+        // stage1_key() stops reading a field the struct still declares
+        let broken = include_str!("fixtures/stage_key_bad.rs")
+            .replace("&[];", "&[\"frobnicate\"];")
+            .replace(
+                "Stage1Key { k: self.k, local_neighbors: self.local_neighbors }",
+                "Stage1Key { k: self.k, local_neighbors: None }",
+            );
+        let f = SourceFile::new("coordinator/options.rs", &broken);
+        let findings = check(&[f]);
+        // local_neighbors: no longer read by stage1_key → both the
+        // struct-sync check and the classification check fire
+        assert!(
+            findings.iter().any(|f| f.message.contains("never read by stage1_key()")),
+            "findings: {findings:?}"
+        );
+        assert!(
+            findings.iter().any(|f| f.message.contains("'local_neighbors'")),
+            "findings: {findings:?}"
+        );
+    }
+
+    #[test]
+    fn absent_options_file_is_a_no_op() {
+        let f = SourceFile::new("live/mod.rs", "pub fn x() {}\n");
+        assert!(check(&[f]).is_empty());
+    }
+}

@@ -80,6 +80,7 @@ impl Batch {
 
 /// The bounded, condvar-signalled job queue.
 pub(crate) struct JobQueue {
+    // lock-order: job_queue
     inner: Mutex<QueueState>,
     cond: Condvar,
     policy: BatchPolicy,
@@ -188,7 +189,9 @@ impl JobQueue {
                         && total + j.request.queries.len() <= self.policy.max_queries
                 };
                 if compat {
-                    let mut j = st.jobs.remove(i).unwrap();
+                    // i < len is loop-invariant, so remove cannot miss;
+                    // spelled as let-else to keep this path panic-free
+                    let Some(mut j) = st.jobs.remove(i) else { break };
                     j.admitted = Some(Instant::now());
                     total += j.request.queries.len();
                     jobs.push(j);

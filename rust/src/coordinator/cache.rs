@@ -242,6 +242,7 @@ impl CacheState {
 /// byte budget is simply not cached.
 #[derive(Debug, Default)]
 pub struct NeighborCache {
+    // lock-order: neighbor_cache
     inner: Mutex<CacheState>,
     capacity: usize,
     max_bytes: usize,

@@ -64,6 +64,7 @@ impl Dataset {
 /// Thread-safe name -> dataset map.
 #[derive(Debug, Default)]
 pub struct DatasetRegistry {
+    // lock-order: dataset_registry
     map: RwLock<HashMap<String, Arc<Dataset>>>,
 }
 

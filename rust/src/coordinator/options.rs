@@ -315,6 +315,31 @@ pub struct Stage2Key {
     pub variant: Variant,
 }
 
+/// [`ResolvedOptions`] fields that are deliberately part of **neither**
+/// stage key: changing them never changes the numbers, so jobs differing
+/// only here still coalesce into one batch and share cached stage-1
+/// artifacts.  This table is the third bucket of the classification
+/// contract enforced by `aidw tidy` (rule `stage_key`): every resolved
+/// field must appear in `stage1_key()`, `stage2_key()`, or here —
+/// adding a knob without classifying it fails the build.
+pub const NEITHER_STAGE_KEY: &[&str] = &[
+    // execution/delivery granularity (protocol v2.4): tiles concatenated
+    // in order are bit-identical to the monolithic pass
+    "tile_rows",
+    // observability only (protocol v2.6): a traced and an untraced
+    // request produce byte-identical numeric results
+    "trace",
+    // data-access schedule (protocol v2.7): every layout replays the
+    // scalar reference's summation order bit-identically
+    "layout",
+];
+
+/// [`QueryOptions`] fields whose [`ResolvedOptions`] counterpart has a
+/// different name, as `(query_field, resolved_field)` pairs.  Consumed by
+/// `aidw tidy` (rule `stage_key`) when mapping the request surface onto
+/// the resolved classification.
+pub const QUERY_FIELD_ALIASES: &[(&str, &str)] = &[("local", "local_neighbors")];
+
 impl ResolvedOptions {
     /// Project out the stage-1 admission key (everything but the stage-2
     /// variant).  See [`Stage1Key`].
@@ -446,6 +471,25 @@ mod tests {
         assert!(zero_local.resolve(&cfg).validate().is_err());
         assert!(QueryOptions::new().tile_rows(0).resolve(&cfg).validate().is_err());
         assert!(QueryOptions::new().tile_rows(1).resolve(&cfg).validate().is_ok());
+    }
+
+    #[test]
+    fn neither_stage_key_table_matches_behavior() {
+        // the declared third bucket (enforced structurally by `aidw
+        // tidy`) pinned behaviorally: perturbing each listed field moves
+        // neither stage key
+        assert_eq!(NEITHER_STAGE_KEY, &["tile_rows", "trace", "layout"]);
+        let cfg = config();
+        let base = QueryOptions::new().resolve(&cfg);
+        let mut perturbed = base;
+        perturbed.tile_rows = Some(7);
+        perturbed.trace = true;
+        perturbed.layout = Some(Layout::Soa);
+        assert_ne!(base, perturbed);
+        assert_eq!(base.stage1_key(), perturbed.stage1_key());
+        assert_eq!(base.stage2_key(), perturbed.stage2_key());
+        // alias table: the one renamed field, no duplicates
+        assert_eq!(QUERY_FIELD_ALIASES, &[("local", "local_neighbors")]);
     }
 
     #[test]

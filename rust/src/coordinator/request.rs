@@ -421,6 +421,7 @@ impl Drop for TileStream {
 /// underlying [`TileStream`] and concatenates the tiles.  Dropping it
 /// without waiting cancels the job (the batcher frees the queue slot).
 pub struct Ticket {
+    // lock-order: tile_stream
     pub(crate) stream: Mutex<TileStream>,
 }
 

@@ -125,6 +125,9 @@ impl EvenGrid {
                 for i in r {
                     let (row, col) =
                         locate(xs[i], ys[i], &bounds, cell_width, n_rows, n_cols);
+                    // SAFETY: keys has n slots and parallel_for hands
+                    // each worker a disjoint range of i, so every write
+                    // is in-bounds and race-free
                     unsafe { *kp.0.add(i) = (row * n_cols + col) as u32 };
                 }
             });
@@ -162,6 +165,9 @@ impl EvenGrid {
                 let (gx, gy, gz) = (gx, gy, gz);
                 for i in r {
                     let src = idx[i] as usize;
+                    // SAFETY: the gathered vectors have n slots and the
+                    // ranges partition 0..n, so each i is written once
+                    // by one worker; src is a permutation index < n
                     unsafe {
                         *gx.0.add(i) = sx[src];
                         *gy.0.add(i) = sy[src];
@@ -363,7 +369,10 @@ fn locate(x: f64, y: f64, b: &Aabb, w: f64, n_rows: usize, n_cols: usize) -> (us
 
 #[derive(Clone, Copy)]
 struct SendPtr<T>(*mut T);
+// SAFETY: the wrapped pointer is only dereferenced inside scoped-thread
+// loops that partition the output into disjoint index ranges per worker
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: as above — shared across workers, written at disjoint indices
 unsafe impl<T> Sync for SendPtr<T> {}
 
 #[cfg(test)]

@@ -114,6 +114,9 @@ pub fn grid_knn_avg_distances_on(
             for qi in r {
                 let (qx, qy) = queries[qi];
                 let avg = single_query(grid, qx, qy, cfg, &mut buf, &mut stats);
+                // SAFETY: out has queries.len() slots and map_ranges
+                // hands each worker a disjoint qi range, so every write
+                // is in-bounds and race-free
                 unsafe { *op.0.add(qi) = avg };
             }
             stats
@@ -182,6 +185,10 @@ pub fn grid_knn_neighbors(
             for qi in range {
                 let (qx, qy) = queries[qi];
                 single_query_idx(grid, qx, qy, &cfg, &mut buf, &mut stats);
+                // SAFETY: r_obs has queries.len() slots and idx_out has
+                // queries.len()*n_neighbors; ranges are disjoint per
+                // worker and buf holds >= n_neighbors indices, so every
+                // write is in-bounds and race-free
                 unsafe {
                     *rp.0.add(qi) = buf.avg_distance(k_alpha);
                     let dst = ip.0.add(qi * n_neighbors);
@@ -314,7 +321,10 @@ fn single_query(
 
 #[derive(Clone, Copy)]
 struct SendPtr<T>(*mut T);
+// SAFETY: the wrapped pointer is only dereferenced inside scoped-thread
+// loops that partition the output into disjoint index ranges per worker
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: as above — shared across workers, written at disjoint indices
 unsafe impl<T> Sync for SendPtr<T> {}
 
 #[cfg(test)]

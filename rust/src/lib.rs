@@ -48,6 +48,7 @@
 //! [`service::protocol`]).  See `examples/quickstart.rs`.
 
 pub mod aidw;
+pub mod analysis;
 pub mod benchlib;
 pub mod benchsuite;
 pub mod cli;

@@ -307,8 +307,10 @@ pub struct LiveDataset {
     config: LiveConfig,
     /// The published snapshot; writers briefly take the write lock to
     /// swap in a new `Arc`, readers clone it out.
+    // lock-order: live_state
     state: RwLock<Arc<LiveSnapshot>>,
     /// Append-ordered durable log (None = in-memory dataset).
+    // lock-order: live_wal
     wal: Mutex<Option<Wal>>,
     dir: Option<PathBuf>,
     next_id: AtomicU64,
@@ -317,11 +319,17 @@ pub struct LiveDataset {
     /// the durable files (the registry dropped or replaced this entry).
     retired: AtomicBool,
     /// Serializes actual compaction work (sync `compact` vs background).
+    /// Acquired before any other lock on this type: the observed order
+    /// is compact_gate < live_state < live_wal, compact_gate <
+    /// live_observer.
+    // lock-order: compact_gate
     compact_gate: Mutex<()>,
+    // lock-order: compact_handle
     compact_handle: Mutex<Option<JoinHandle<()>>>,
     compactions: AtomicU64,
     /// Event journal + compaction hook (None until a coordinator calls
     /// [`LiveDataset::attach_observer`]; standalone datasets run silent).
+    // lock-order: live_observer
     observer: RwLock<Option<LiveObserver>>,
 }
 
@@ -1013,6 +1021,7 @@ impl LiveDataset {
                                 format!("background compaction failed: {e}"),
                             );
                         }
+                        // tidy:allow(print_hygiene) -- standalone dataset: no journal is attached, stderr is the only sink for a failed background fold
                         None => eprintln!(
                             "aidw: background compaction of '{}' failed: {e}",
                             me.name

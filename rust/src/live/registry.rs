@@ -15,6 +15,7 @@ use super::LiveDataset;
 /// Thread-safe name -> live dataset map.
 #[derive(Debug, Default)]
 pub struct LiveRegistry {
+    // lock-order: live_registry
     map: RwLock<HashMap<String, Arc<LiveDataset>>>,
 }
 

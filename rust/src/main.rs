@@ -14,6 +14,8 @@
 //!   bench        run the perf suite, emit BENCH_aidw.json
 //!   info         artifact + engine diagnostics
 //!   generate     write a synthetic workload to CSV
+//!   tidy         repo-invariant static analysis over this crate's
+//!                own sources (tier-1 gate; see src/analysis/)
 //!
 //! Run `aidw help` for flags.  Every per-request tuning knob of
 //! `QueryOptions` (k, variant, ring rule, local mode, alpha levels, fuzzy
@@ -71,6 +73,7 @@ USAGE:
                    [--reps 3] [--warmup 1] [--out BENCH_aidw.json]
   aidw generate    [--n N] [--side 100] [--seed 42]
                    [--dist uniform|clustered|terrain|sensors] --out file.csv
+  aidw tidy        [--json] [--root DIR]
   aidw info
   aidw help
 
@@ -106,6 +109,13 @@ choice on the `--trace` timeline.  `aidw bench` times every layout in
 the `layout` section of BENCH_aidw.json; `--sizes small` is shorthand
 for a quick 256,512 run, and `--reps/--warmup` set the median-of-N
 timing hygiene every bench section uses.
+
+`aidw tidy` runs the repo-invariant static analyzer over this crate's
+own sources (stage-key classification, lock-order graph, protocol doc
+drift, panic/print hygiene, SAFETY comments — see src/analysis/) and
+exits nonzero on any unallowlisted finding; `--json` emits the
+machine-readable findings report, `--root DIR` points at a checkout
+other than the working directory.  ci.sh runs it as a fatal gate.
 ";
 
 fn main() {
@@ -122,7 +132,7 @@ fn main() {
 fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
-        &["cpu-only", "verbose", "wal-sync", "no-serial", "stream", "trace", "metrics-text"],
+        &["cpu-only", "verbose", "wal-sync", "no-serial", "stream", "trace", "metrics-text", "json"],
     )?;
     match args.subcommand.as_str() {
         "serve" => serve(&args),
@@ -133,6 +143,7 @@ fn run(argv: &[String]) -> Result<()> {
         "events" => events(&args),
         "bench" => bench(&args),
         "generate" => generate(&args),
+        "tidy" => tidy(&args),
         "info" => info(),
         "" | "help" => {
             print!("{HELP}");
@@ -813,6 +824,34 @@ fn generate(args: &Args) -> Result<()> {
     std::fs::write(out, csv)?;
     println!("wrote {n} {dist} points to {out}");
     Ok(())
+}
+
+/// `aidw tidy` — run the repo-invariant static analyzer (src/analysis/)
+/// over this crate's own sources and exit nonzero on any finding.
+fn tidy(args: &Args) -> Result<()> {
+    let src = aidw::analysis::locate_src_dir(args.get("root")).ok_or_else(|| {
+        Error::InvalidArgument(
+            "tidy: cannot find the crate sources (expected rust/src or src \
+             with lib.rs; point --root at a checkout)"
+                .into(),
+        )
+    })?;
+    let report = aidw::analysis::run(&src)
+        .map_err(|e| Error::Service(format!("tidy: walking {}: {e}", src.display())))?;
+    if args.has("json") {
+        println!("{}", report.to_json().to_string());
+    } else {
+        print!("{}", report.render_text());
+    }
+    if report.clean() {
+        Ok(())
+    } else {
+        Err(Error::Service(format!(
+            "tidy: {} finding(s) in {}",
+            report.findings.len(),
+            src.display()
+        )))
+    }
 }
 
 fn info() -> Result<()> {

@@ -41,6 +41,9 @@ pub fn exclusive_scan(pool: &Pool, xs: &[u32], out: &mut [u32]) -> u32 {
                         let op = op;
                         let mut acc = 0u32;
                         for (i, &x) in xs.iter().enumerate() {
+                            // SAFETY: out has xs.len() slots and the
+                            // ranges partition it, so r.start+i is
+                            // in-bounds and private to this worker
                             unsafe { *op.0.add(r.start + i) = acc };
                             acc += x;
                         }
@@ -64,6 +67,8 @@ pub fn exclusive_scan(pool: &Pool, xs: &[u32], out: &mut [u32]) -> u32 {
             s.spawn(move || {
                 let op = op;
                 for i in r {
+                    // SAFETY: same partitioning as pass 1 — i stays
+                    // inside this worker's private in-bounds range
                     unsafe { *op.0.add(i) += off };
                 }
             });
@@ -83,7 +88,10 @@ pub fn inclusive_scan(pool: &Pool, xs: &[u32], out: &mut [u32]) -> u32 {
 
 #[derive(Clone, Copy)]
 struct SendPtr<T>(*mut T);
+// SAFETY: the wrapped pointer is only dereferenced inside scoped-thread
+// loops that partition the output into disjoint index ranges per worker
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: as above — shared across workers, written at disjoint indices
 unsafe impl<T> Sync for SendPtr<T> {}
 
 #[cfg(test)]

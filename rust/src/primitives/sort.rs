@@ -126,6 +126,9 @@ fn radix_pass(
                     let d = digit(k);
                     let at = base[d] as usize;
                     base[d] += 1;
+                    // SAFETY: `at` walks this chunk's private slice of
+                    // the per-digit layout computed by the counting pass,
+                    // so chunks write disjoint in-bounds destinations
                     unsafe {
                         *dk.0.add(at) = k;
                         *dv.0.add(at) = v;
@@ -138,7 +141,10 @@ fn radix_pass(
 
 #[derive(Clone, Copy)]
 struct SendPtr<T>(*mut T);
+// SAFETY: the wrapped pointer is only dereferenced inside scoped-thread
+// loops that partition the output into disjoint index ranges per worker
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: as above — shared across workers, written at disjoint indices
 unsafe impl<T> Sync for SendPtr<T> {}
 
 fn parallel_max(pool: &Pool, xs: &[u32]) -> u32 {

@@ -54,15 +54,15 @@ impl Server {
     pub fn start(coordinator: Arc<Coordinator>, addr: &str) -> Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
+        // nonblocking accepts so the stop flag is observed; set before
+        // the thread spawns so a failure surfaces as a start() error
+        // instead of a panic in the accept loop
+        listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let accept_thread = std::thread::Builder::new()
             .name("aidw-accept".into())
             .spawn(move || {
-                // short accept timeout so the stop flag is observed
-                listener
-                    .set_nonblocking(true)
-                    .expect("nonblocking listener");
                 let mut conn_threads = Vec::new();
                 while !stop2.load(Ordering::Relaxed) {
                     match listener.accept() {
@@ -206,7 +206,18 @@ fn serve_stream(
                 return write_line(w, &line);
             }
             None => {
-                let s = stream.summary().expect("finished stream has a summary");
+                // a finished stream always carries a summary; if that
+                // invariant ever breaks, answer with a structured error
+                // instead of panicking the connection thread
+                let Some(s) = stream.summary() else {
+                    let e = Error::Service("stream finished without a summary".into());
+                    let line = if wrote_header {
+                        protocol::stream_err_done(&e)
+                    } else {
+                        protocol::err_for(&e)
+                    };
+                    return write_line(w, &line);
+                };
                 if !wrote_header {
                     // zero-tile streams cannot happen (empty queries are
                     // rejected at submit), but keep the framing total

@@ -331,7 +331,9 @@ struct ActiveSub {
 #[derive(Default)]
 pub struct SubscriptionRegistry {
     next_id: AtomicU64,
+    // lock-order: sub_events
     events: Mutex<Option<mpsc::Sender<SubEvent>>>,
+    // lock-order: sub_active
     active: Mutex<HashMap<u64, ActiveSub>>,
 }
 
