@@ -62,6 +62,15 @@ cargo test -q --test it_obs
 echo "== cargo test -q --test it_layout =="
 cargo test -q --test it_layout
 
+# Sharded stage 1 + multi-tenant admission (v2.8) is tier-1: the
+# sharded-equals-unsharded bit-identity property (dense/local,
+# clean/mutated, shard counts {1,2,7}), the cross-shard escalation
+# exactness check, the per-tenant fail-closed quota coverage (in process
+# and over a raw socket), and the DRR no-starvation assertion must never
+# be silently dropped.
+echo "== cargo test -q --test it_shard =="
+cargo test -q --test it_shard
+
 # Metrics-exposition parity gate: every MetricsSnapshot field must appear
 # in BOTH the JSON `metrics` op and the Prometheus-style `metrics_text`
 # exposition, or a new counter silently ships half-observable.

@@ -109,6 +109,14 @@ pub struct NeighborTable {
 /// an artifact-backed coordinator the CPU alpha pass was dead work; CPU
 /// consumers pay it exactly once per artifact (cached artifacts keep the
 /// materialized vector).
+///
+/// This type is also the **gather seam** of the sharded stage 1
+/// ([`crate::shard`], protocol v2.8): the shard engine scatters a raster
+/// across spatial shards and gathers the per-row results into one
+/// `NeighborArtifact` bit-identical to a whole-grid sweep's, so stage 2,
+/// the neighbor cache, streaming, and subscriptions consume sharded and
+/// unsharded stage-1 output interchangeably — none of them can tell
+/// which path produced it.
 #[derive(Debug, Clone, Default)]
 pub struct NeighborArtifact {
     /// Eq.-3 average distance to the k nearest live points, per query.

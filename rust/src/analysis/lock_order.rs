@@ -1,5 +1,5 @@
-//! Rule `lock_order`: lock discipline across `live/`, `subscribe/` and
-//! `coordinator/`.
+//! Rule `lock_order`: lock discipline across `live/`, `subscribe/`,
+//! `coordinator/` and `shard/`.
 //!
 //! Every `Mutex`/`RwLock` *field declaration* in scope must carry a
 //! `// lock-order: <name>` annotation (same line or the line above) that
@@ -34,7 +34,10 @@ use super::{Finding, SourceFile};
 const RULE: &str = "lock_order";
 
 fn in_scope(path: &str) -> bool {
-    path.starts_with("live/") || path.starts_with("subscribe/") || path.starts_with("coordinator/")
+    path.starts_with("live/")
+        || path.starts_with("subscribe/")
+        || path.starts_with("coordinator/")
+        || path.starts_with("shard/")
 }
 
 const ACQUIRE: &[&str] = &["lock", "read", "write"];

@@ -11,7 +11,7 @@
 //! | rule | what it enforces |
 //! |------|------------------|
 //! | `stage_key` | Every `ResolvedOptions` field in `coordinator/options.rs` is classified into exactly one of `stage1_key()`, `stage2_key()`, or the declared `NEITHER_STAGE_KEY` table; `QueryOptions` fields map onto resolved fields (via `QUERY_FIELD_ALIASES`); the `Stage1Key`/`Stage2Key` structs stay in sync with their projection functions.  A new knob cannot silently skew batch admission or cache identity. |
-//! | `lock_order` | In `live/`, `subscribe/` and `coordinator/`: every `Mutex`/`RwLock` field declaration carries a `// lock-order: <name>` annotation; the observed lexical nesting of `.lock()`/`.read()`/`.write()` acquisitions forms an acyclic graph over those names; no guard is held across a blocking channel op (`send_while`, `.recv()`, `.recv_timeout(`) — plain `.send(` on an unbounded channel is deliberately exempt. |
+//! | `lock_order` | In `live/`, `subscribe/`, `coordinator/` and `shard/`: every `Mutex`/`RwLock` field declaration carries a `// lock-order: <name>` annotation; the observed lexical nesting of `.lock()`/`.read()`/`.write()` acquisitions forms an acyclic graph over those names; no guard is held across a blocking channel op (`send_while`, `.recv()`, `.recv_timeout(`) — plain `.send(` on an unbounded channel is deliberately exempt. |
 //! | `protocol_drift` | `service/protocol.rs`: the doc-header `Wire protocol **vX.Y**` matches `PROTOCOL_VERSION`; every request key read in `fn decode`/`fn decode_options` appears in the header's request-example block, and vice versa (keys, `op` values and `action` values). |
 //! | `panic_hygiene` | No `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/`unimplemented!` in `service/`, `subscribe/` or `coordinator/batcher.rs` outside tests.  The poisoned-lock idiom (`.lock().unwrap()`, `.read()`, `.write()`, condvar `.wait(..)`/`.wait_timeout(..)`) is exempt: lock poisoning is already a crashed thread. |
 //! | `print_hygiene` | No `eprintln!`/`eprint!`/`dbg!` outside `main.rs`/`cli.rs` — the event journal (PR 7) is where the server reports state. |

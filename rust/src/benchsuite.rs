@@ -739,6 +739,145 @@ pub fn measure_layouts(pool: &Pool, n: usize, opts: &MeasureOpts) -> Result<Layo
     Ok(LayoutMeasurement { n, layouts })
 }
 
+// ---- sharded stage-1 sweep (PR 10 tentpole) -----------------------------
+
+/// One shard count's stage-1 time at one size.
+#[derive(Debug, Clone)]
+pub struct ShardTimes {
+    /// Shard count the engine ran with.
+    pub shards: usize,
+    /// Full stage-1 sweep (scatter + per-shard kNN + gather) ms.
+    pub stage1_ms: f64,
+    /// Rows whose termination ball escaped the shard halo and re-ran
+    /// cross-shard (per sweep).
+    pub escalated: u64,
+    /// Per-shard tasks the worker pool executed (per sweep).
+    pub tasks: u64,
+}
+
+/// Sharded stage-1 ablation at one size: the same exact-ring sweep under
+/// each shard count, every sharded artifact asserted **bit-identical**
+/// to the unsharded reference before its time is reported — the bench
+/// enforces the scatter/gather exactness contract, not just the tests.
+#[derive(Debug, Clone)]
+pub struct ShardMeasurement {
+    pub n: usize,
+    /// The unsharded (single-sweep) stage-1 reference ms.
+    pub unsharded_ms: f64,
+    /// In fixed 2 / 4 / 8 shard order.
+    pub counts: Vec<ShardTimes>,
+}
+
+/// Measure the sharded stage-1 sweep at one size.  The dataset goes
+/// through [`LiveDataset`] so the snapshot is the serving path's compacted
+/// grid; gather width 32 exercises the neighbor-table merge path too.
+pub fn measure_shards(pool: &Pool, n: usize, opts: &MeasureOpts) -> Result<ShardMeasurement> {
+    use crate::aidw::plan::{SearchKind, Stage1Plan};
+    use crate::live::{LiveConfig, LiveDataset};
+    use crate::shard::{ShardEngine, TenantPolicy, TenantTag, DEFAULT_QUANTUM};
+    use std::sync::Arc;
+
+    let params = AidwParams::default();
+    let (data, queries) = standard_workload(n, opts);
+    let ds = LiveDataset::build(pool, "bench", data, &GridConfig::default(), None, LiveConfig::default())?;
+    let snap = ds.snapshot();
+    let queries = Arc::new(queries);
+    let plan = Stage1Plan::new(
+        params.k,
+        RingRule::Exact,
+        Some(32usize.max(params.k)),
+        &params,
+        snap.live_len,
+        snap.area(),
+        SearchKind::Grid,
+    );
+    let (unsharded_ms, want) = median_rep(
+        opts.warmup,
+        opts.reps,
+        || -> Result<(f64, crate::aidw::plan::NeighborArtifact)> {
+            let t0 = std::time::Instant::now();
+            let art = plan.execute_grid(pool, &snap.base.grid, &queries);
+            Ok((t0.elapsed().as_secs_f64() * 1e3, art))
+        },
+        |r| r.0,
+    )?;
+    let mut counts = Vec::new();
+    for shards in [2usize, 4, 8] {
+        let engine = ShardEngine::new(Some(shards), pool.threads(), DEFAULT_QUANTUM, TenantPolicy::default());
+        let measured = median_rep(
+            opts.warmup,
+            opts.reps,
+            || -> Result<(f64, crate::aidw::plan::NeighborArtifact, crate::shard::SweepStats)> {
+                let t0 = std::time::Instant::now();
+                let (art, stats) =
+                    engine.execute_grid(&plan, &snap, &queries, pool, TenantTag::default());
+                Ok((t0.elapsed().as_secs_f64() * 1e3, art, stats))
+            },
+            |r| r.0,
+        );
+        let (stage1_ms, art, stats) = match measured {
+            Ok(m) => m,
+            Err(e) => {
+                engine.shutdown();
+                return Err(e);
+            }
+        };
+        engine.shutdown();
+        if art.r_obs != want.r_obs
+            || art.alphas() != want.alphas()
+            || art.neighbors.as_ref().map(|t| (&t.idx, t.width))
+                != want.neighbors.as_ref().map(|t| (&t.idx, t.width))
+        {
+            return Err(Error::Service(format!(
+                "sharded stage 1 ({shards} shards) diverged bitwise from the unsharded sweep"
+            )));
+        }
+        counts.push(ShardTimes {
+            shards,
+            stage1_ms,
+            escalated: stats.escalated,
+            tasks: stats.tasks,
+        });
+    }
+    Ok(ShardMeasurement { n, unsharded_ms, counts })
+}
+
+/// The `shard` section of `BENCH_aidw.json`.
+fn shard_json(shards: &[ShardMeasurement]) -> Json {
+    Json::Arr(
+        shards
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("n", Json::Num(m.n as f64)),
+                    ("label", Json::Str(size_label(m.n))),
+                    ("unsharded_stage1_ms", Json::Num(m.unsharded_ms)),
+                    (
+                        "counts",
+                        Json::Arr(
+                            m.counts
+                                .iter()
+                                .map(|s| {
+                                    Json::obj(vec![
+                                        ("shards", Json::Num(s.shards as f64)),
+                                        ("stage1_ms", Json::Num(s.stage1_ms)),
+                                        ("escalated_rows", Json::Num(s.escalated as f64)),
+                                        ("shard_tasks", Json::Num(s.tasks as f64)),
+                                        (
+                                            "speedup",
+                                            Json::Num(m.unsharded_ms / s.stage1_ms.max(1e-9)),
+                                        ),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// The `layout` section of `BENCH_aidw.json`.
 fn layout_json(layouts: &[LayoutMeasurement]) -> Json {
     Json::Arr(
@@ -859,6 +998,7 @@ pub fn cpu_bench_json(
     live_cache: &[LiveCacheMeasurement],
     subscribe: &[SubscribeMeasurement],
     layouts: &[LayoutMeasurement],
+    shards: &[ShardMeasurement],
     threads: usize,
     seed: u64,
 ) -> Json {
@@ -873,6 +1013,7 @@ pub fn cpu_bench_json(
         ("live_cache", live_cache_json(live_cache)),
         ("subscribe", subscribe_json(subscribe)),
         ("layout", layout_json(layouts)),
+        ("shard", shard_json(shards)),
         (
             "sizes",
             Json::Arr(
@@ -915,6 +1056,7 @@ pub fn pjrt_bench_json(
     live_cache: &[LiveCacheMeasurement],
     subscribe: &[SubscribeMeasurement],
     layouts: &[LayoutMeasurement],
+    shards: &[ShardMeasurement],
     threads: usize,
     seed: u64,
 ) -> Json {
@@ -929,6 +1071,7 @@ pub fn pjrt_bench_json(
         ("live_cache", live_cache_json(live_cache)),
         ("subscribe", subscribe_json(subscribe)),
         ("layout", layout_json(layouts)),
+        ("shard", shard_json(shards)),
         (
             "sizes",
             Json::Arr(
@@ -1082,8 +1225,32 @@ mod tests {
                 assert!(l.dense_ms > 0.0 && l.local_ms > 0.0, "{}", l.layout);
             }
         }
-        let doc =
-            cpu_bench_json(&results, &planner, &live, &subs, &layouts, pool.threads(), opts.seed);
+        let shard: Vec<ShardMeasurement> = sizes
+            .iter()
+            .map(|&n| measure_shards(&pool, n, &opts).unwrap())
+            .collect();
+        for m in &shard {
+            assert!(m.unsharded_ms > 0.0);
+            assert_eq!(
+                m.counts.iter().map(|s| s.shards).collect::<Vec<_>>(),
+                vec![2, 4, 8]
+            );
+            for s in &m.counts {
+                // bit-identity already asserted inside the measurement;
+                // here: the sharded path really ran (it produced tasks)
+                assert!(s.stage1_ms > 0.0 && s.tasks > 0, "{} shards", s.shards);
+            }
+        }
+        let doc = cpu_bench_json(
+            &results,
+            &planner,
+            &live,
+            &subs,
+            &layouts,
+            &shard,
+            pool.threads(),
+            opts.seed,
+        );
         let text = doc.to_string();
         // round-trips as JSON and carries the schema the perf trajectory
         // tooling greps for
@@ -1123,5 +1290,14 @@ mod tests {
         assert_eq!(per[1].get("layout").as_str(), Some("soa"));
         assert!(per[1].get("dense_stage2_ms").as_f64().is_some());
         assert!(per[1].get("local_stage2_ms").as_f64().is_some());
+        let sh = back.get("shard").as_arr().unwrap();
+        assert_eq!(sh.len(), 2);
+        assert!(sh[0].get("unsharded_stage1_ms").as_f64().is_some());
+        let per_count = sh[0].get("counts").as_arr().unwrap();
+        assert_eq!(per_count.len(), 3);
+        assert_eq!(per_count[1].get("shards").as_usize(), Some(4));
+        assert!(per_count[1].get("stage1_ms").as_f64().is_some());
+        assert!(per_count[1].get("escalated_rows").as_usize().is_some());
+        assert!(per_count[1].get("shard_tasks").as_usize().is_some());
     }
 }

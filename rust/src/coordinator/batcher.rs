@@ -11,6 +11,13 @@
 //! for stage 2 ([`Batch::stage2_groups`]).  Under the old full-options
 //! admission, each variant paid its own kNN sweep.
 //!
+//! Batches additionally partition on the **tenant** (protocol v2.8) even
+//! though it is numerics-neutral and deliberately *not* a stage-1 key
+//! member: a batch is the unit of shard-pool scheduling, so single-tenant
+//! batches keep deficit-round-robin costs attributable to the tenant that
+//! incurred them.  Cached artifacts still flow across tenants — the cache
+//! key derives from the stage-1 key alone.
+//!
 //! A bounded queue provides backpressure: submissions beyond `max_queue`
 //! are rejected immediately rather than queued unboundedly.
 
@@ -186,6 +193,10 @@ impl JobQueue {
                     let j = &st.jobs[i];
                     j.request.dataset == dataset
                         && j.resolved.stage1_key() == stage1
+                        // tenant partition (v2.8): numerics-neutral, but a
+                        // batch is one shard-pool schedule unit — keep its
+                        // DRR cost attributable to a single tenant
+                        && j.resolved.tenant == options.tenant
                         && total + j.request.queries.len() <= self.policy.max_queries
                 };
                 if compat {
@@ -244,6 +255,7 @@ mod tests {
                 cancel: Arc::new(AtomicBool::new(false)),
                 enqueued: Instant::now(),
                 admitted: None,
+                admit: None,
             },
             rx,
         )
@@ -354,6 +366,35 @@ mod tests {
         assert_eq!(groups[0].1, vec![0, 2]);
         assert_eq!(groups[1].0, naive.stage2_key());
         assert_eq!(groups[1].1, vec![1]);
+    }
+
+    #[test]
+    fn tenants_never_share_a_batch() {
+        // the tenant is numerics-neutral (not a stage-1 key member) but
+        // still partitions batches: one batch = one shard-pool schedule
+        // unit, attributed to exactly one tenant
+        let q = JobQueue::new(BatchPolicy {
+            linger: Duration::from_millis(1),
+            ..Default::default()
+        });
+        let base = ResolvedOptions::default(); // anonymous tenant
+        let acme = ResolvedOptions {
+            tenant: Some(crate::shard::TenantTag::new("acme").unwrap()),
+            ..base
+        };
+        assert_eq!(base.stage1_key(), acme.stage1_key(), "tenant is numerics-neutral");
+        let (j1, _r1) = job_with("a", 4, base);
+        let (j2, _r2) = job_with("a", 4, acme);
+        let (j3, _r3) = job_with("a", 4, base);
+        for j in [j1, j2, j3] {
+            q.push(j).unwrap();
+        }
+        let b1 = q.next_batch().unwrap();
+        assert_eq!(b1.jobs.len(), 2, "same-tenant jobs coalesce");
+        assert_eq!(b1.options.tenant, None);
+        let b2 = q.next_batch().unwrap();
+        assert_eq!(b2.jobs.len(), 1);
+        assert_eq!(b2.options.tenant.unwrap().as_str(), "acme");
     }
 
     #[test]

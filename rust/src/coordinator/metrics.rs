@@ -140,6 +140,19 @@ pub struct Metrics {
     /// delivered (v2.6).  Answers "how stale is this feed?" — the gap the
     /// ROADMAP's scale-out work needs visible before sharding.
     pub sub_lag: LatencyHisto,
+    /// Requests/subscriptions rejected by tenant admission — token
+    /// bucket exhausted or in-flight quota reached (v2.8, fail-closed).
+    pub over_quota: AtomicU64,
+    /// Per-shard sweep tasks executed by the shard worker pool (v2.8;
+    /// one chunked scatter task per counted unit, not one per batch).
+    pub shard_stage1_tasks: AtomicU64,
+    /// Query rows whose exact termination ball escaped their shard's
+    /// clip region and re-ran against the whole grid (v2.8) — the
+    /// correctness escape hatch that keeps sharding bit-identical.
+    pub shard_escalated_rows: AtomicU64,
+    /// Subscription dirty-tile recomputes executed on the shard worker
+    /// pool instead of the subscription worker thread (v2.8).
+    pub shard_sub_recomputes: AtomicU64,
 }
 
 impl Metrics {
@@ -171,6 +184,17 @@ impl Metrics {
     pub fn note_stream_buffered(&self, buffered: usize) {
         self.stream_peak_buffered
             .fetch_max(buffered as u64, Ordering::Relaxed);
+    }
+
+    /// Fold one sharded stage-1 execution's facts into the counters
+    /// (no-op for unsharded passthroughs, which submit no pool tasks).
+    pub fn record_shard_sweep(&self, sweep: &crate::shard::SweepStats) {
+        if !sweep.sharded {
+            return;
+        }
+        self.shard_stage1_tasks.fetch_add(sweep.tasks, Ordering::Relaxed);
+        self.shard_escalated_rows
+            .fetch_add(sweep.escalated, Ordering::Relaxed);
     }
 
     /// Plain-data snapshot for reporting (cache gauges zeroed; the
@@ -215,6 +239,10 @@ impl Metrics {
             sub_lag_mean_s: self.sub_lag.mean_s(),
             sub_lag_p99_s: self.sub_lag.quantile_s(0.99),
             sub_lag_count: self.sub_lag.count(),
+            over_quota: self.over_quota.load(Ordering::Relaxed),
+            shard_stage1_tasks: self.shard_stage1_tasks.load(Ordering::Relaxed),
+            shard_escalated_rows: self.shard_escalated_rows.load(Ordering::Relaxed),
+            shard_sub_recomputes: self.shard_sub_recomputes.load(Ordering::Relaxed),
             latency_buckets: self.latency.bucket_counts(),
             sub_lag_buckets: self.sub_lag.bucket_counts(),
         }
@@ -284,6 +312,15 @@ pub struct MetricsSnapshot {
     pub sub_lag_p99_s: f64,
     /// Subscription push-lag samples recorded (v2.6).
     pub sub_lag_count: u64,
+    /// Tenant-admission rejections, fail-closed (v2.8).
+    pub over_quota: u64,
+    /// Per-shard sweep tasks run by the shard worker pool (v2.8).
+    pub shard_stage1_tasks: u64,
+    /// Rows escalated from a shard clip to the whole grid (v2.8) — the
+    /// audit trail of the bit-identity escape hatch.
+    pub shard_escalated_rows: u64,
+    /// Subscription dirty-tile recomputes served by the shard pool (v2.8).
+    pub shard_sub_recomputes: u64,
     /// Request-latency histogram buckets, bucket i = [2^i, 2^(i+1)) us
     /// (v2.6; previously private to [`LatencyHisto`]).
     pub latency_buckets: [u64; 30],
@@ -341,6 +378,10 @@ pub fn prometheus_text(s: &MetricsSnapshot) -> String {
     scalar("sub_lag_mean_s", s.sub_lag_mean_s);
     scalar("sub_lag_p99_s", s.sub_lag_p99_s);
     scalar("sub_lag_count", s.sub_lag_count as f64);
+    scalar("over_quota", s.over_quota as f64);
+    scalar("shard_stage1_tasks", s.shard_stage1_tasks as f64);
+    scalar("shard_escalated_rows", s.shard_escalated_rows as f64);
+    scalar("shard_sub_recomputes", s.shard_sub_recomputes as f64);
     histogram(&mut out, "latency_buckets", &s.latency_buckets);
     histogram(&mut out, "sub_lag_buckets", &s.sub_lag_buckets);
     out
@@ -480,7 +521,7 @@ mod tests {
         }
         assert!(fields.len() >= 30, "Debug introspection broke: {fields:?}");
         assert!(fields.iter().any(|f| f == "sub_lag_p99_s"));
-        let json = crate::service::protocol::ok_metrics(&s);
+        let json = crate::service::protocol::ok_metrics(&s, &[]);
         let text = prometheus_text(&s);
         for f in &fields {
             assert!(json.contains(&format!("\"{f}\"")), "metrics op response missing field {f}");
@@ -502,6 +543,32 @@ mod tests {
         assert_eq!(s.stream_peak_buffered, 80);
         assert_eq!(s.stream_tiles, 0);
         assert_eq!(s.stage1_tile_gathers, 0);
+    }
+
+    #[test]
+    fn shard_counters_snapshot() {
+        let m = Metrics::default();
+        // unsharded passthrough: nothing recorded
+        m.record_shard_sweep(&crate::shard::SweepStats::default());
+        let s = m.snapshot();
+        assert_eq!(s.shard_stage1_tasks, 0);
+        assert_eq!(s.shard_escalated_rows, 0);
+        // sharded sweep: tasks + escalations fold in
+        m.record_shard_sweep(&crate::shard::SweepStats {
+            sharded: true,
+            shards: 4,
+            tasks: 7,
+            escalated: 2,
+            scatter_s: 0.001,
+            gather_s: 0.002,
+        });
+        m.over_quota.fetch_add(3, Ordering::Relaxed);
+        m.shard_sub_recomputes.fetch_add(5, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.shard_stage1_tasks, 7);
+        assert_eq!(s.shard_escalated_rows, 2);
+        assert_eq!(s.over_quota, 3);
+        assert_eq!(s.shard_sub_recomputes, 5);
     }
 
     #[test]

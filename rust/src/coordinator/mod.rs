@@ -191,6 +191,21 @@ pub struct CoordinatorConfig {
     /// planner picks per job by stage-2 work size at planning time.
     /// Numerics-neutral: every layout is bit-identical.
     pub layout: Option<crate::aidw::plan::Layout>,
+    /// Spatial shard count for grid-search stage 1 (protocol v2.8):
+    /// partition each dataset's grid into this many contiguous cell-row
+    /// bands and sweep them on the shard worker pool.  `None` = auto per
+    /// dataset by point count ([`crate::shard::ShardPlan::auto_count`]);
+    /// `Some(1)` forces the unsharded passthrough.  Bit-identical either
+    /// way (see [`crate::shard`] for the halo/escalation proof).
+    pub shards: Option<usize>,
+    /// Worker threads of the shard pool — per-shard stage-1 sweeps and
+    /// subscription dirty-tile recomputes.  `None` = machine-sized.
+    pub shard_threads: Option<usize>,
+    /// Per-tenant admission policy (protocol v2.8): token-bucket rate
+    /// limit and in-flight quota, fail-closed with the structured
+    /// `over_quota` error.  The default is fully open — pre-v2.8
+    /// behavior.
+    pub tenant_policy: crate::shard::TenantPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -215,6 +230,9 @@ impl Default for CoordinatorConfig {
             stream_buffer_tiles: 2,
             journal_capacity: 1024,
             layout: None,
+            shards: None,
+            shard_threads: None,
+            tenant_policy: crate::shard::TenantPolicy::default(),
         }
     }
 }
@@ -234,7 +252,7 @@ enum Stage1Info {
 /// A batch after stage 1, waiting for stage 2.
 struct Stage2Job {
     batch: Batch,
-    queries: Vec<(f64, f64)>,
+    queries: Arc<Vec<(f64, f64)>>,
     /// The stage-1 product (r_obs + alphas + neighbor table), shared with
     /// the neighbor cache.
     artifact: Arc<NeighborArtifact>,
@@ -244,6 +262,9 @@ struct Stage2Job {
     cache_hit: bool,
     /// How stage 1 was satisfied (trace detail behind `cache_hit`).
     stage1: Stage1Info,
+    /// Shard scatter/gather facts when the sweep took the sharded path
+    /// (all-default on cache hits and unsharded passthroughs).
+    shard: crate::shard::SweepStats,
 }
 
 pub(crate) struct Shared {
@@ -261,6 +282,10 @@ pub(crate) struct Shared {
     /// compactions, cache churn, subscription lifecycle, WAL rotation —
     /// everything that used to be an `eprintln!` or invisible.
     pub(crate) journal: Arc<crate::obs::Journal>,
+    /// Sharded stage-1 engine + tenant admission gate (protocol v2.8):
+    /// the dispatcher scatters grid sweeps through it and the
+    /// subscription worker submits dirty-tile recomputes to its pool.
+    pub(crate) shard: crate::shard::ShardEngine,
 }
 
 /// The interpolation service coordinator.  See module docs.
@@ -308,6 +333,15 @@ impl Coordinator {
             None => Pool::machine_sized(),
         };
         let journal = Arc::new(crate::obs::Journal::new(config.journal_capacity));
+        let shard_threads = config.shard_threads.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        });
+        let shard = crate::shard::ShardEngine::new(
+            config.shards,
+            shard_threads,
+            crate::shard::DEFAULT_QUANTUM,
+            config.tenant_policy,
+        );
         let shared = Arc::new(Shared {
             registry: LiveRegistry::new(),
             queue: JobQueue::new(config.batch),
@@ -318,6 +352,7 @@ impl Coordinator {
             running: AtomicBool::new(true),
             subs: crate::subscribe::SubscriptionRegistry::default(),
             journal,
+            shard,
         });
 
         // restore persisted live datasets (snapshot + WAL replay) before
@@ -637,6 +672,19 @@ impl Coordinator {
         let live = self.shared.registry.get(&request.dataset)?;
         let mut resolved = request.options.resolve(&self.shared.config);
         resolved.validate()?;
+        // v2.8 admission: subscriptions are long-lived, so they hold no
+        // in-flight slot — only the tenant's token bucket is charged
+        // (one token per subscribe; dirty-tile pushes ride free).
+        let tenant = resolved.tenant.unwrap_or_default();
+        if let Err(e) = self.shared.shard.governor().admit_transient(tenant) {
+            self.shared.metrics.over_quota.fetch_add(1, Ordering::Relaxed);
+            self.shared.journal.info(
+                "over_quota",
+                Some(&request.dataset),
+                format!("subscribe rejected for tenant {tenant}"),
+            );
+            return Err(e);
+        }
         let snap = live.snapshot();
         resolved.epoch = Some(snap.epoch);
         resolved.overlay = Some(snap.overlay_version());
@@ -711,6 +759,23 @@ impl Coordinator {
         let snap = live.snapshot();
         resolved.epoch = Some(snap.epoch);
         resolved.overlay = Some(snap.overlay_version());
+        // v2.8 admission: charge the tenant's token bucket and claim an
+        // in-flight slot.  Fail-closed: over-quota is a structured error
+        // before the job touches the queue.  The guard rides the job and
+        // frees the slot wherever the job ends (served, failed, swept).
+        let tenant = resolved.tenant.unwrap_or_default();
+        let admit = match self.shared.shard.governor().admit(tenant) {
+            Ok(guard) => Some(guard),
+            Err(e) => {
+                self.shared.metrics.over_quota.fetch_add(1, Ordering::Relaxed);
+                self.shared.journal.info(
+                    "over_quota",
+                    Some(&request.dataset),
+                    format!("request rejected for tenant {tenant}"),
+                );
+                return Err(e);
+            }
+        };
         let n_queries = request.queries.len() as u64;
         let buffered = Arc::new(AtomicUsize::new(0));
         let cancel = Arc::new(std::sync::atomic::AtomicBool::new(false));
@@ -731,6 +796,7 @@ impl Coordinator {
             cancel: cancel.clone(),
             enqueued: std::time::Instant::now(),
             admitted: None,
+            admit,
         };
         match self.shared.queue.push(job) {
             Ok(()) => {
@@ -793,6 +859,13 @@ impl Coordinator {
         metrics::prometheus_text(&self.metrics())
     }
 
+    /// Per-tenant admission counters (protocol v2.8): one entry per
+    /// tenant lane the governor has seen — admitted / rejected /
+    /// currently in-flight — for diagnostics and the fairness tests.
+    pub fn tenant_stats(&self) -> Vec<crate::shard::TenantStat> {
+        self.shared.shard.governor().stats()
+    }
+
     /// The structured event journal (advanced callers / tests; the
     /// `events` op is the usual consumer).
     pub fn journal(&self) -> Arc<crate::obs::Journal> {
@@ -828,6 +901,10 @@ impl Coordinator {
             if let Some(h) = self.subs_worker.take() {
                 let _ = h.join();
             }
+            // drain + join the shard workers after every producer of
+            // shard tasks (dispatcher, stage 2, subscription worker) has
+            // stopped, and before the datasets they read go away
+            self.shared.shard.shutdown();
             self.shared.registry.shutdown_all();
         }
     }
@@ -904,11 +981,13 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
         // epoch/overlay state, and keeps it across a compaction publish
         let snap = live.snapshot();
 
-        // concatenate all queries of the batch
+        // concatenate all queries of the batch (Arc: the raster is shared
+        // with the shard engine's scatter tasks and the stage-2 job)
         let mut queries = Vec::with_capacity(batch.total_queries);
         for job in &batch.jobs {
             queries.extend_from_slice(&job.request.queries);
         }
+        let queries = Arc::new(queries);
 
         // STAGE 1 (planned): the paper's fast kNN search + adaptive
         // alpha, one execution per batch regardless of how many stage-2
@@ -952,14 +1031,17 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
             Some(k) => shared.cache.lookup(k, &queries),
             None => cache::CacheOutcome::Miss,
         };
-        let (artifact, cache_hit, stage1_info) = match outcome {
+        // the batcher partitions on tenant, so the whole batch shares one
+        // admission identity (anonymous when the field is absent)
+        let tenant = opts.tenant.unwrap_or_default();
+        let (artifact, cache_hit, stage1_info, sweep) = match outcome {
             cache::CacheOutcome::Hit(art) => {
                 shared.metrics.stage1_cache_hits.fetch_add(1, Ordering::Relaxed);
                 // the saved-seconds counter: this hit skipped a sweep that
                 // cost the entry's recorded build time (ROADMAP PR-4(b))
                 shared.metrics.add_stage1_saved(art.stage1_s);
                 let saved_s = art.stage1_s;
-                (art, true, Stage1Info::CacheHit { saved_s })
+                (art, true, Stage1Info::CacheHit { saved_s }, crate::shard::SweepStats::default())
             }
             cache::CacheOutcome::Subset { artifact: mut sub, saved_s } => {
                 // a covering artifact served this raster's rows: no kNN
@@ -975,7 +1057,7 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
                 if let Some(key) = cache_key {
                     journal_cache_insert(&shared, &batch.dataset, key, &queries, art.clone());
                 }
-                (art, true, Stage1Info::SubsetHit { saved_s })
+                (art, true, Stage1Info::SubsetHit { saved_s }, crate::shard::SweepStats::default())
             }
             cache::CacheOutcome::Miss => {
                 // tile-granular partial cover (ROADMAP PR-4(a)): when the
@@ -983,10 +1065,12 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
                 // same-identity cached artifact row-gather; only the
                 // uncovered tiles pay a kNN sweep
                 let partial = cache_key.as_ref().and_then(|key| {
-                    stage1_partial_cover(&shared, key, &stage1, search, &snap, &queries, opts.tile_rows)
+                    stage1_partial_cover(
+                        &shared, key, &stage1, search, &snap, &queries, opts.tile_rows, tenant,
+                    )
                 });
                 match partial {
-                    Some((art, all_covered, gathered_saved_s)) => {
+                    Some((art, all_covered, gathered_saved_s, sweep)) => {
                         let art = Arc::new(art);
                         if let Some(key) = cache_key {
                             journal_cache_insert(&shared, &batch.dataset, key, &queries, art.clone());
@@ -1000,22 +1084,30 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
                         } else {
                             Stage1Info::Swept
                         };
-                        (art, all_covered, info)
+                        (art, all_covered, info, sweep)
                     }
                     None => {
-                        let art = Arc::new(match search {
-                            SearchKind::Grid => {
-                                stage1.execute_grid(&shared.pool, &snap.base.grid, &queries)
-                            }
-                            SearchKind::Merged => {
-                                stage1.execute_merged(&shared.pool, &snap.merged_view(), &queries)
-                            }
-                        });
+                        // grid search scatters across the shard engine
+                        // (bit-identical to the direct sweep — see
+                        // crate::shard); merged search stays on the
+                        // unsharded path (overlay rows have no band
+                        // locality)
+                        let (art, sweep) = match search {
+                            SearchKind::Grid => shared
+                                .shard
+                                .execute_grid(&stage1, &snap, &queries, &shared.pool, tenant),
+                            SearchKind::Merged => (
+                                stage1.execute_merged(&shared.pool, &snap.merged_view(), &queries),
+                                crate::shard::SweepStats::default(),
+                            ),
+                        };
+                        let art = Arc::new(art);
                         shared.metrics.stage1_execs.fetch_add(1, Ordering::Relaxed);
+                        shared.metrics.record_shard_sweep(&sweep);
                         if let Some(key) = cache_key {
                             journal_cache_insert(&shared, &batch.dataset, key, &queries, art.clone());
                         }
-                        (art, false, Stage1Info::Swept)
+                        (art, false, Stage1Info::Swept, sweep)
                     }
                 }
             }
@@ -1028,6 +1120,7 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: mpsc::SyncSender<Stage2Job>) {
             snap,
             cache_hit,
             stage1: stage1_info,
+            shard: sweep,
         };
         if tx.send(job).is_err() {
             break; // stage 2 is gone
@@ -1056,10 +1149,11 @@ fn stage1_partial_cover(
     key: &CacheKey,
     stage1: &Stage1Plan,
     search: SearchKind,
-    snap: &LiveSnapshot,
+    snap: &Arc<LiveSnapshot>,
     queries: &[(f64, f64)],
     tile_rows: Option<usize>,
-) -> Option<(NeighborArtifact, bool, f64)> {
+    tenant: crate::shard::TenantTag,
+) -> Option<(NeighborArtifact, bool, f64, crate::shard::SweepStats)> {
     let tr = tile_rows?;
     let plan = TilePlan::new(queries.len(), Some(tr));
     if plan.n_tiles() <= 1 {
@@ -1082,9 +1176,12 @@ fn stage1_partial_cover(
     if covered_tiles == 0 {
         return None;
     }
-    // pass 2: sweep only the uncovered tiles
+    // pass 2: sweep only the uncovered tiles (grid tiles scatter across
+    // the shard engine just like whole-raster sweeps; the per-tile copy
+    // is bounded by tile_rows)
     let mut sweep_s = 0.0f64;
     let mut swept_tiles = 0usize;
+    let mut sweep = crate::shard::SweepStats::default();
     for (tile, part) in parts.iter_mut().enumerate() {
         if part.is_some() {
             continue;
@@ -1092,7 +1189,11 @@ fn stage1_partial_cover(
         let range = plan.range(tile);
         let art = match search {
             SearchKind::Grid => {
-                stage1.execute_grid(&shared.pool, &snap.base.grid, &queries[range])
+                let tile_queries = Arc::new(queries[range].to_vec());
+                let (art, s) =
+                    shared.shard.execute_grid(stage1, snap, &tile_queries, &shared.pool, tenant);
+                sweep.merge(&s);
+                art
             }
             SearchKind::Merged => {
                 stage1.execute_merged(&shared.pool, &snap.merged_view(), &queries[range])
@@ -1133,10 +1234,12 @@ fn stage1_partial_cover(
         // no sweep ran at all — a subset-reuse event
         shared.metrics.stage1_subset_hits.fetch_add(1, Ordering::Relaxed);
     }
+    shared.metrics.record_shard_sweep(&sweep);
     Some((
         NeighborArtifact::new(r_obs, stage1.r_exp, stage1.params.clone(), neighbors, sweep_s),
         swept_tiles == 0,
         saved_s,
+        sweep,
     ))
 }
 
@@ -1303,6 +1406,12 @@ fn run_stage2_streamed(shared: &Shared, engine: &Option<Engine>, sj: &Stage2Job)
                 Stage1Info::SubsetHit { saved_s } => {
                     t.push_saved(crate::obs::SpanKind::Stage1SubsetHit, saved_s)
                 }
+            }
+            // v2.8: when the sweep took the sharded path, break its wall
+            // time into the scatter and gather legs
+            if sj.shard.sharded {
+                t.push(crate::obs::SpanKind::ShardScatter, sj.shard.scatter_s);
+                t.push(crate::obs::SpanKind::ShardGather, sj.shard.gather_s);
             }
             Some(t)
         } else {

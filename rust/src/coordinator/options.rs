@@ -27,6 +27,7 @@ use crate::aidw::params::AidwParams;
 use crate::error::{Error, Result};
 use crate::knn::grid_knn::RingRule;
 use crate::runtime::Variant;
+use crate::shard::TenantTag;
 
 pub use crate::aidw::plan::Layout;
 
@@ -84,6 +85,11 @@ pub struct QueryOptions {
     /// blocked layouts are bit-identical to the scalar reference, so
     /// like `tile_rows`/`trace` this is part of neither stage key.
     pub layout: Option<Layout>,
+    /// Admission identity (protocol v2.8 `tenant` field): the tenant
+    /// whose rate limit, in-flight quota, and fair-scheduling lane this
+    /// request consumes.  `None` = the anonymous tenant.  Numerics-
+    /// neutral, so part of neither stage key.
+    pub tenant: Option<TenantTag>,
 }
 
 impl QueryOptions {
@@ -162,6 +168,13 @@ impl QueryOptions {
         self
     }
 
+    /// Attribute this request to a tenant for admission control and fair
+    /// scheduling (protocol v2.8; numerics-neutral).
+    pub fn tenant(mut self, tenant: TenantTag) -> Self {
+        self.tenant = Some(tenant);
+        self
+    }
+
     /// True when no field overrides the coordinator defaults.
     pub fn is_default(&self) -> bool {
         *self == QueryOptions::default()
@@ -187,6 +200,7 @@ impl QueryOptions {
             overlay: None,
             trace: self.trace.unwrap_or(false),
             layout: self.layout.or(config.layout),
+            tenant: self.tenant,
         }
     }
 }
@@ -254,6 +268,16 @@ pub struct ResolvedOptions {
     /// to **neither** stage key: jobs differing only in layout coalesce
     /// and share cached artifacts.
     pub layout: Option<Layout>,
+    /// The tenant this request was admitted under (protocol v2.8
+    /// `tenant` field); `None` = the anonymous tenant.  Pure
+    /// admission/scheduling identity — rate limits, in-flight quotas, and
+    /// deficit-round-robin fairness on the shard worker pool — with no
+    /// effect on any numeric result, so it belongs to **neither** stage
+    /// key.  The batcher still partitions batches on it *separately*
+    /// (batch membership must be single-tenant so DRR costs are
+    /// attributable), but two tenants' identical rasters share cached
+    /// stage-1 artifacts.
+    pub tenant: Option<TenantTag>,
 }
 
 impl Default for ResolvedOptions {
@@ -273,6 +297,7 @@ impl Default for ResolvedOptions {
             overlay: None,
             trace: false,
             layout: None,
+            tenant: None,
         }
     }
 }
@@ -332,6 +357,13 @@ pub const NEITHER_STAGE_KEY: &[&str] = &[
     // data-access schedule (protocol v2.7): every layout replays the
     // scalar reference's summation order bit-identically
     "layout",
+    // admission identity (protocol v2.8): rate limits, quotas, and fair
+    // scheduling never change a number — two tenants' identical rasters
+    // share one sweep and one cached artifact.  The batcher partitions
+    // batches on tenant *separately* (single-tenant batches keep DRR
+    // costs attributable), which is stricter than a stage-key split and
+    // still numerics-neutral.
+    "tenant",
 ];
 
 /// [`QueryOptions`] fields whose [`ResolvedOptions`] counterpart has a
@@ -478,13 +510,14 @@ mod tests {
         // the declared third bucket (enforced structurally by `aidw
         // tidy`) pinned behaviorally: perturbing each listed field moves
         // neither stage key
-        assert_eq!(NEITHER_STAGE_KEY, &["tile_rows", "trace", "layout"]);
+        assert_eq!(NEITHER_STAGE_KEY, &["tile_rows", "trace", "layout", "tenant"]);
         let cfg = config();
         let base = QueryOptions::new().resolve(&cfg);
         let mut perturbed = base;
         perturbed.tile_rows = Some(7);
         perturbed.trace = true;
         perturbed.layout = Some(Layout::Soa);
+        perturbed.tenant = Some(TenantTag::new("acme").unwrap());
         assert_ne!(base, perturbed);
         assert_eq!(base.stage1_key(), perturbed.stage1_key());
         assert_eq!(base.stage2_key(), perturbed.stage2_key());
@@ -554,6 +587,24 @@ mod tests {
         // programmatic out-of-range AosoaTiles width fails validation
         let bad = QueryOptions::new().layout(Layout::AosoaTiles { width: 0 }).resolve(&cfg);
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn tenant_is_in_neither_stage_key() {
+        // tenancy is admission identity, not numerics: two tenants'
+        // identical rasters share one stage-1 sweep and cached artifact
+        // (the batcher's single-tenant partition is pinned in batcher.rs)
+        let cfg = config();
+        let base = QueryOptions::new().resolve(&cfg);
+        assert_eq!(base.tenant, None, "anonymous by default");
+        let acme = QueryOptions::new()
+            .tenant(TenantTag::new("acme").unwrap())
+            .resolve(&cfg);
+        assert_eq!(acme.tenant, Some(TenantTag::new("acme").unwrap()));
+        assert_ne!(base, acme, "resolved sets differ");
+        assert_eq!(base.stage1_key(), acme.stage1_key());
+        assert_eq!(base.stage2_key(), acme.stage2_key());
+        assert!(acme.validate().is_ok());
     }
 
     #[test]

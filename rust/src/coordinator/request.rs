@@ -256,6 +256,11 @@ pub(crate) struct Job {
     /// of the coalesce-wait span.  `None` until batch formation; only
     /// consulted when `resolved.trace` is set.
     pub admitted: Option<std::time::Instant>,
+    /// The tenant's in-flight slot (protocol v2.8): an RAII guard claimed
+    /// at submission and released by Drop wherever the job ends — served,
+    /// failed, cancelled, or swept.  `None` only in tests that bypass
+    /// `enqueue`.
+    pub admit: Option<crate::shard::AdmitGuard>,
 }
 
 impl Job {

@@ -30,6 +30,11 @@ pub enum Error {
     /// The coordinator is shutting down / queue closed / job dropped.
     Unavailable(String),
 
+    /// A tenant exceeded its admission quota (token-bucket rate or
+    /// in-flight cap) — the structured fail-closed rejection of the
+    /// multi-tenant admission layer (protocol v2.8 code `over_quota`).
+    OverQuota(String),
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -49,6 +54,7 @@ impl fmt::Display for Error {
             }
             Error::Service(m) => write!(f, "service error: {m}"),
             Error::Unavailable(m) => write!(f, "coordinator unavailable: {m}"),
+            Error::OverQuota(m) => write!(f, "over quota: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }

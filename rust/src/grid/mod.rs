@@ -281,6 +281,61 @@ impl EvenGrid {
         seen
     }
 
+    /// Row-clipped [`EvenGrid::for_ring`]: visit the same ring cells in the
+    /// same order, skipping any cell whose row lies outside
+    /// `[row_lo, row_hi)`.  The visit sequence is exactly the `for_ring`
+    /// sequence restricted to the clip band — the property the sharded
+    /// stage-1 bit-identity proof rests on (`crate::shard`): tied
+    /// candidates inside the band keep their relative offer order.
+    pub fn for_ring_rows<F>(
+        &self,
+        row: usize,
+        col: usize,
+        level: usize,
+        row_lo: usize,
+        row_hi: usize,
+        mut f: F,
+    ) -> usize
+    where
+        F: FnMut(&[f64], &[f64], &[f64], &[u32]),
+    {
+        if row_lo == 0 && row_hi >= self.n_rows {
+            return self.for_ring(row, col, level, f);
+        }
+        let (r0, c0) = (row as isize, col as isize);
+        let lv = level as isize;
+        let mut seen = 0usize;
+        let visit = |r: isize, c: isize, f: &mut F, seen: &mut usize| {
+            if r < 0
+                || c < 0
+                || r >= self.n_rows as isize
+                || c >= self.n_cols as isize
+                || r < row_lo as isize
+                || r >= row_hi as isize
+            {
+                return;
+            }
+            let (xs, ys, zs, idx) = self.cell_points(r as usize, c as usize);
+            *seen += xs.len();
+            if !xs.is_empty() {
+                f(xs, ys, zs, idx);
+            }
+        };
+        if level == 0 {
+            visit(r0, c0, &mut f, &mut seen);
+            return seen;
+        }
+        for c in (c0 - lv)..=(c0 + lv) {
+            visit(r0 - lv, c, &mut f, &mut seen);
+            visit(r0 + lv, c, &mut f, &mut seen);
+        }
+        for r in (r0 - lv + 1)..=(r0 + lv - 1) {
+            visit(r, c0 - lv, &mut f, &mut seen);
+            visit(r, c0 + lv, &mut f, &mut seen);
+        }
+        seen
+    }
+
     /// True when the square of Chebyshev radius `level` around (row, col)
     /// covers the whole grid — no point lies outside it.
     pub fn ring_exhausted(&self, row: usize, col: usize, level: usize) -> bool {

@@ -212,13 +212,35 @@ fn single_query_idx(
     buf: &mut crate::knn::kbuffer::KBufferIdx,
     stats: &mut KnnStats,
 ) {
+    single_query_idx_rows(grid, qx, qy, cfg, buf, stats, 0, usize::MAX);
+}
+
+/// Row-clipped [`single_query_idx`]: identical ring expansion, candidate
+/// order, and termination logic, but only cells with row in
+/// `[row_lo, row_hi)` contribute candidates — the per-shard sweep of
+/// [`crate::shard`].  With the full row range this *is* the unsharded
+/// search (the clipped ring visitor delegates).  The termination bound
+/// ([`EvenGrid::min_dist_beyond`]) and exhaustion test stay whole-grid:
+/// both remain valid (conservative) lower bounds for the clipped point
+/// set, so the search is exact over clip points for [`RingRule::Exact`].
+#[allow(clippy::too_many_arguments)]
+pub fn single_query_idx_rows(
+    grid: &EvenGrid,
+    qx: f64,
+    qy: f64,
+    cfg: &GridKnnConfig,
+    buf: &mut crate::knn::kbuffer::KBufferIdx,
+    stats: &mut KnnStats,
+    row_lo: usize,
+    row_hi: usize,
+) {
     buf.clear();
     let (row, col) = grid.locate(qx, qy);
     let mut level = 0usize;
     let mut k_level: Option<usize> = None;
     let mut seen = 0usize;
     loop {
-        seen += grid.for_ring(row, col, level, |xs, ys, _zs, idx| {
+        seen += grid.for_ring_rows(row, col, level, row_lo, row_hi, |xs, ys, _zs, idx| {
             for j in 0..xs.len() {
                 buf.insert(dist2(qx, qy, xs[j], ys[j]), idx[j]);
             }
@@ -266,6 +288,22 @@ fn single_query(
     buf: &mut KBuffer,
     stats: &mut KnnStats,
 ) -> f64 {
+    single_query_rows(grid, qx, qy, cfg, buf, stats, 0, usize::MAX)
+}
+
+/// Row-clipped [`single_query`] (no index tracking) — see
+/// [`single_query_idx_rows`] for the clipping contract.
+#[allow(clippy::too_many_arguments)]
+pub fn single_query_rows(
+    grid: &EvenGrid,
+    qx: f64,
+    qy: f64,
+    cfg: &GridKnnConfig,
+    buf: &mut KBuffer,
+    stats: &mut KnnStats,
+    row_lo: usize,
+    row_hi: usize,
+) -> f64 {
     buf.clear();
     let (row, col) = grid.locate(qx, qy);
     let mut level = 0usize;
@@ -275,7 +313,7 @@ fn single_query(
     let mut seen = 0usize;
 
     loop {
-        seen += grid.for_ring(row, col, level, |xs, ys, _zs, _idx| {
+        seen += grid.for_ring_rows(row, col, level, row_lo, row_hi, |xs, ys, _zs, _idx| {
             for j in 0..xs.len() {
                 buf.insert(dist2(qx, qy, xs[j], ys[j]));
             }

@@ -68,6 +68,7 @@ pub mod rng;
 pub mod runtime;
 pub mod service;
 pub mod session;
+pub mod shard;
 pub mod subscribe;
 pub mod workload;
 
@@ -88,6 +89,7 @@ pub mod prelude {
     pub use crate::live::{LiveConfig, LiveDataset, LiveStatus};
     pub use crate::runtime::Engine;
     pub use crate::session::{AidwSession, SessionReply, SessionStream, SessionTicket};
+    pub use crate::shard::{SweepStats, TenantPolicy, TenantTag};
     pub use crate::subscribe::{SubTile, SubUpdate, SubUpdateStart, SubscriptionFrame, SubscriptionStream};
     pub use crate::workload;
 }

@@ -1,7 +1,7 @@
 //! `aidw` — CLI for the AIDW interpolation service.
 //!
 //! Subcommands:
-//!   serve        start the TCP JSON service (protocol v2.7)
+//!   serve        start the TCP JSON service (protocol v2.8)
 //!   interpolate  one-shot interpolation over a generated/loaded workload
 //!   query        interpolate against a running service over TCP
 //!                (--stream consumes the v2.4 tiled streaming response;
@@ -47,6 +47,8 @@ USAGE:
                    [--live-dir DIR] [--compact-threshold N] [--wal-sync]
                    [--neighbor-cache N] [--tile-rows N] [--stream-buffer N]
                    [--journal N] [--metrics-text] [--layout aos|soa|aosoa:N]
+                   [--shards N] [--shard-threads N] [--tenant-rate R]
+                   [--tenant-burst B] [--tenant-inflight N]
   aidw interpolate [--engine serving|pipeline|serial] [--cpu-only]
                    [--data N] [--queries N] [--side 100] [--seed 42]
                    [--variant naive|tiled] [--k 10] [--ring exact|paper+1]
@@ -56,12 +58,12 @@ USAGE:
                    [--out out.csv] [--tile-rows N] [--layout aos|soa|aosoa:N]
   aidw query       --addr HOST:PORT --dataset NAME [--queries N] [--side 100]
                    [--seed 42] [--stream] [--trace] [--tile-rows N]
-                   [--out out.csv]
+                   [--out out.csv] [--tenant NAME]
                    [--variant naive|tiled] [--k 10] [--ring exact|paper+1]
                    [--local N] [--alpha-levels 0.5,1,2,3,4]
                    [--rmin 0] [--rmax 2] [--area A] [--layout aos|soa|aosoa:N]
   aidw subscribe   --addr HOST:PORT --dataset NAME [--queries N] [--side 100]
-                   [--seed 42] [--updates N] [--out out.csv]
+                   [--seed 42] [--updates N] [--out out.csv] [--tenant NAME]
                    [--variant naive|tiled] [--k 10] [--ring exact|paper+1]
                    [--local N] [--tile-rows N] [--area A]
   aidw mutate      --addr HOST:PORT --dataset NAME --action append|remove|compact|stat
@@ -109,6 +111,21 @@ choice on the `--trace` timeline.  `aidw bench` times every layout in
 the `layout` section of BENCH_aidw.json; `--sizes small` is shorthand
 for a quick 256,512 run, and `--reps/--warmup` set the median-of-N
 timing hygiene every bench section uses.
+
+Sharding & multi-tenancy (protocol v2.8): `serve --shards N` partitions
+each dataset's grid into N row bands and runs stage-1 kNN per shard on
+a dedicated worker pool (absent = auto by point count, 1 = the
+unsharded sweep); results are bit-identical either way — a row whose
+exact termination ball escapes its shard's halo is transparently
+re-run cross-shard.  `--shard-threads N` sizes the pool (default:
+machine cores); the same pool recomputes subscription dirty tiles.
+Requests may carry `--tenant NAME` (lowercase [a-z0-9_.-], <= 24
+chars); the server schedules tenants' work deficit-round-robin and
+enforces `--tenant-rate R` (requests/s refill), `--tenant-burst B`
+(token-bucket depth), and `--tenant-inflight N` (concurrent requests
+per tenant) fail-closed: over-quota requests get a structured
+`over_quota` error and never enter the queue.  Absent flags leave that
+limit off; anonymous requests share one default tenant lane.
 
 `aidw tidy` runs the repo-invariant static analyzer over this crate's
 own sources (stage-key classification, lock-order graph, protocol doc
@@ -197,6 +214,31 @@ fn config_from(args: &Args) -> Result<CoordinatorConfig> {
     if let Some(l) = args.get("layout") {
         cfg.layout = Some(l.parse::<aidw::coordinator::Layout>()?);
     }
+    // v2.8: spatial shard count (absent = auto by point count, 1 = off),
+    // shard worker-pool width, and the per-tenant admission policy
+    if args.get("shards").is_some() {
+        cfg.shards = Some(args.get_usize("shards", 0)?.max(1));
+    }
+    if args.get("shard-threads").is_some() {
+        cfg.shard_threads = Some(args.get_usize("shard-threads", 0)?.max(1));
+    }
+    if args.get("tenant-rate").is_some() {
+        let r = args.get_f64("tenant-rate", 0.0)?;
+        if r <= 0.0 {
+            return Err(Error::InvalidArgument("--tenant-rate expects a positive rate".into()));
+        }
+        cfg.tenant_policy.rate_per_s = Some(r);
+    }
+    cfg.tenant_policy.burst = args.get_f64("tenant-burst", cfg.tenant_policy.burst)?;
+    if args.get("tenant-inflight").is_some() {
+        let n = args.get_usize("tenant-inflight", 0)?;
+        if n == 0 {
+            return Err(Error::InvalidArgument(
+                "--tenant-inflight expects a positive count".into(),
+            ));
+        }
+        cfg.tenant_policy.max_in_flight = Some(n);
+    }
     Ok(cfg)
 }
 
@@ -247,6 +289,10 @@ fn options_from(args: &Args) -> Result<QueryOptions> {
     // v2.7: pin the stage-2 layout (absent = planner's choice)
     if let Some(l) = args.get("layout") {
         o = o.layout(l.parse::<aidw::coordinator::Layout>()?);
+    }
+    // v2.8: bill this request to a tenant lane (absent = anonymous)
+    if let Some(t) = args.get("tenant") {
+        o = o.tenant(aidw::shard::TenantTag::new(t)?);
     }
     Ok(o)
 }
@@ -449,6 +495,14 @@ fn bench(args: &Args) -> Result<()> {
         layouts.push(aidw::benchsuite::measure_layouts(&pool, n, &opts)?);
     }
 
+    // sharded stage-1 sweep (PR 10): per-shard-count times with the
+    // bit-identity contract asserted inside the measurement
+    let mut shards = Vec::with_capacity(sizes.len());
+    for &n in &sizes {
+        println!("  shard n = {} ...", aidw::benchsuite::size_label(n));
+        shards.push(aidw::benchsuite::measure_shards(&pool, n, &opts)?);
+    }
+
     let artifact_dir = aidw::runtime::default_artifact_dir();
     let doc = if artifact_dir.join("manifest.json").exists() {
         println!("bench: PJRT artifacts found — full five-version suite");
@@ -464,6 +518,7 @@ fn bench(args: &Args) -> Result<()> {
             &live_cache,
             &subscribe,
             &layouts,
+            &shards,
             pool.threads(),
             seed,
         )
@@ -480,6 +535,7 @@ fn bench(args: &Args) -> Result<()> {
             &live_cache,
             &subscribe,
             &layouts,
+            &shards,
             pool.threads(),
             seed,
         )

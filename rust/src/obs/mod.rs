@@ -60,6 +60,12 @@ pub enum SpanKind {
     StreamBufferWait,
     /// Serializing the response (values → JSON bytes).
     Serialize,
+    /// Sharded stage 1 (v2.8): partitioning the raster and submitting
+    /// per-shard chunk tasks to the shard worker pool.
+    ShardScatter,
+    /// Sharded stage 1 (v2.8): collecting chunk results, stitching them
+    /// in row order, and re-running any escalated rows.
+    ShardGather,
 }
 
 impl SpanKind {
@@ -74,6 +80,8 @@ impl SpanKind {
             SpanKind::Stage2Tile => "stage2_tile",
             SpanKind::StreamBufferWait => "stream_buffer_wait",
             SpanKind::Serialize => "serialize",
+            SpanKind::ShardScatter => "shard_scatter",
+            SpanKind::ShardGather => "shard_gather",
         }
     }
 
@@ -88,6 +96,8 @@ impl SpanKind {
             "stage2_tile" => SpanKind::Stage2Tile,
             "stream_buffer_wait" => SpanKind::StreamBufferWait,
             "serialize" => SpanKind::Serialize,
+            "shard_scatter" => SpanKind::ShardScatter,
+            "shard_gather" => SpanKind::ShardGather,
             _ => return None,
         })
     }
@@ -379,6 +389,8 @@ mod tests {
             SpanKind::Stage2Tile,
             SpanKind::StreamBufferWait,
             SpanKind::Serialize,
+            SpanKind::ShardScatter,
+            SpanKind::ShardGather,
         ] {
             assert_eq!(SpanKind::from_tag(kind.tag()), Some(kind));
         }

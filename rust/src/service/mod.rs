@@ -465,7 +465,7 @@ fn dispatch(
             }
         }
         Request::Datasets => protocol::ok_names(&coord.datasets()),
-        Request::Metrics => protocol::ok_metrics(&coord.metrics()),
+        Request::Metrics => protocol::ok_metrics(&coord.metrics(), &coord.tenant_stats()),
         Request::MetricsText => protocol::ok_metrics_text(&coord.metrics_text()),
         Request::Events { since, max } => protocol::ok_events(&coord.events(since, max)),
         // intercepted in `handle_connection` before dispatch; kept for
@@ -812,6 +812,7 @@ fn decode_error(v: &Json) -> Error {
         Some("unknown_dataset") => Error::UnknownDataset(strip(msg, "unknown dataset: ")),
         Some("invalid_argument") => Error::InvalidArgument(strip(msg, "invalid argument: ")),
         Some("unavailable") => Error::Unavailable(strip(msg, "coordinator unavailable: ")),
+        Some("over_quota") => Error::OverQuota(strip(msg, "over quota: ")),
         _ => Error::Service(msg.to_string()),
     }
 }

@@ -1,8 +1,8 @@
-//! Wire protocol **v2.7**: newline-delimited JSON over TCP, with chunked
+//! Wire protocol **v2.8**: newline-delimited JSON over TCP, with chunked
 //! (tiled) streaming responses, incremental raster subscriptions,
 //! end-to-end observability (per-request traces, the structured event
-//! journal, Prometheus-style metrics exposition), and per-request
-//! stage-2 layout control.
+//! journal, Prometheus-style metrics exposition), per-request stage-2
+//! layout control, and multi-tenant admission.
 //!
 //! Requests:
 //! ```json
@@ -12,7 +12,8 @@
 //!  "variant":"tiled","k":10,
 //!  "ring":"exact","local_n":64,"alpha_levels":[0.5,1,2,3,4],
 //!  "r_min":0.0,"r_max":2.0,"area":1e4,
-//!  "tile_rows":256,"stream":true,"trace":true,"layout":"soa"}
+//!  "tile_rows":256,"stream":true,"trace":true,"layout":"soa",
+//!  "tenant":"acme"}
 //! {"op":"mutate","dataset":"d","action":"append","xs":[..],"ys":[..],"zs":[..]}
 //! {"op":"mutate","dataset":"d","action":"remove","ids":[3,17]}
 //! {"op":"mutate","dataset":"d","action":"compact"}
@@ -25,6 +26,39 @@
 //! {"op":"subscribe","dataset":"d","qx":[..],"qy":[..],"k":10,"tile_rows":256}
 //! {"op":"unsubscribe"}
 //! ```
+//!
+//! **v2.8 additions** (multi-tenant admission + sharded stage 1,
+//! strictly additive over v2.7):
+//!
+//! * `interpolate`/`stream`/`subscribe` accept `tenant` — an admission
+//!   identity of 1..=24 chars from `[a-z0-9_.-]`.  The field is
+//!   **numerics-neutral**: it is not a batch stage-1 key member, cached
+//!   stage-1 artifacts flow across tenants, and the interpolated values
+//!   are byte-identical with or without it.  It drives admission only:
+//!   each tenant passes a token bucket (sustained rate + burst) and an
+//!   in-flight quota, and admitted work is scheduled across the shard
+//!   worker pool by deficit round-robin so one flooding tenant cannot
+//!   starve another.  Over-quota submissions **fail closed** with the
+//!   structured error code `over_quota` (a plain error line — never a
+//!   degraded or partial result).  Requests without the field are the
+//!   anonymous tenant; their request *and* response lines stay
+//!   byte-identical to v2.7.  The options echo carries `tenant` back
+//!   only when the request set it;
+//! * stage 1 grid sweeps execute sharded: the dataset's grid is
+//!   partitioned into contiguous cell-row bands swept concurrently, each
+//!   restricted to its band plus a kNN halo, with rows whose exact
+//!   termination ball escapes the halo escalated to a whole-grid sweep —
+//!   the raster stays **bit-identical** to the unsharded path (pinned by
+//!   the `it_shard` integration suite).  Traced requests gain
+//!   `shard_scatter` / `shard_gather` spans when the sharded path ran;
+//! * `metrics` responses add `over_quota` (admission rejections),
+//!   `shard_stage1_tasks` (pool tasks run for sharded sweeps),
+//!   `shard_escalated_rows` (rows that took the whole-grid escape
+//!   hatch), `shard_sub_recomputes` (subscription dirty-tile
+//!   recomputes served by the shard pool), and a `tenants` array — one
+//!   `{"tenant","admitted","rejected","in_flight"}` object per tenant
+//!   lane the governor has seen, sorted by label (the anonymous lane
+//!   reports as `""`).
 //!
 //! **v2.7 additions** (stage-2 layout control, strictly additive over
 //! v2.6):
@@ -220,7 +254,8 @@
 //! `{"ok":false,"code":"<machine_code>","error":"<message>"}`.  Error
 //! codes: `bad_request` (malformed line / unknown op / bad field),
 //! `unknown_dataset`, `invalid_argument` (option validation),
-//! `unavailable` (backpressure or shutdown), `internal` (pipeline
+//! `unavailable` (backpressure or shutdown), `over_quota` (tenant
+//! admission rejected the submission, v2.8), `internal` (pipeline
 //! failure).  Successful `interpolate` responses echo the fully-resolved
 //! options under `"options"` so clients can audit what actually ran.
 //!
@@ -244,7 +279,7 @@ use crate::subscribe::SubUpdateStart;
 /// The wire protocol version this module implements.  ci.sh drift-checks
 /// this constant against the module doc header ("Wire protocol
 /// **vX.Y**") so the two can never silently disagree.
-pub const PROTOCOL_VERSION: &str = "2.7";
+pub const PROTOCOL_VERSION: &str = "2.8";
 
 /// A live-dataset mutation (protocol v2.1 `mutate` op).
 #[derive(Debug, Clone, PartialEq)]
@@ -573,6 +608,9 @@ fn decode_options(v: &Json) -> Result<QueryOptions> {
     if let Some(s) = opt_str(v, "layout")? {
         o.layout = Some(s.parse::<crate::coordinator::options::Layout>()?);
     }
+    if let Some(s) = opt_str(v, "tenant")? {
+        o.tenant = Some(crate::shard::TenantTag::new(s)?);
+    }
     Ok(o)
 }
 
@@ -616,6 +654,9 @@ fn encode_options(o: &QueryOptions, fields: &mut Vec<(&str, Json)>) {
     if let Some(l) = o.layout {
         fields.push(("layout", Json::Str(l.tag())));
     }
+    if let Some(t) = o.tenant {
+        fields.push(("tenant", Json::Str(t.as_str().into())));
+    }
 }
 
 /// The resolved-options audit object echoed on interpolate responses.
@@ -653,6 +694,11 @@ pub fn options_json(o: &ResolvedOptions) -> Json {
     if let Some(l) = o.layout {
         fields.push(("layout", Json::Str(l.tag())));
     }
+    // emitted only when the request carried a tenant — v2.7 byte
+    // compatibility (the anonymous tenant has no wire presence)
+    if let Some(t) = o.tenant {
+        fields.push(("tenant", Json::Str(t.as_str().into())));
+    }
     Json::obj(fields)
 }
 
@@ -684,6 +730,10 @@ pub fn options_from_json(v: &Json) -> Option<ResolvedOptions> {
             .get("layout")
             .as_str()
             .and_then(|s| s.parse::<crate::coordinator::options::Layout>().ok()),
+        tenant: v
+            .get("tenant")
+            .as_str()
+            .and_then(|s| crate::shard::TenantTag::new(s).ok()),
     })
 }
 
@@ -949,7 +999,18 @@ pub fn ok_names(names: &[String]) -> String {
     .to_string()
 }
 
-pub fn ok_metrics(m: &MetricsSnapshot) -> String {
+pub fn ok_metrics(m: &MetricsSnapshot, tenants: &[crate::shard::TenantStat]) -> String {
+    let tenant_arr = tenants
+        .iter()
+        .map(|t| {
+            Json::obj(vec![
+                ("tenant", Json::Str(t.tenant.clone())),
+                ("admitted", Json::Num(t.admitted as f64)),
+                ("rejected", Json::Num(t.rejected as f64)),
+                ("in_flight", Json::Num(t.in_flight as f64)),
+            ])
+        })
+        .collect();
     Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("requests", Json::Num(m.requests as f64)),
@@ -984,6 +1045,10 @@ pub fn ok_metrics(m: &MetricsSnapshot) -> String {
         ("sub_lag_mean_s", Json::Num(m.sub_lag_mean_s)),
         ("sub_lag_p99_s", Json::Num(m.sub_lag_p99_s)),
         ("sub_lag_count", Json::Num(m.sub_lag_count as f64)),
+        ("over_quota", Json::Num(m.over_quota as f64)),
+        ("shard_stage1_tasks", Json::Num(m.shard_stage1_tasks as f64)),
+        ("shard_escalated_rows", Json::Num(m.shard_escalated_rows as f64)),
+        ("shard_sub_recomputes", Json::Num(m.shard_sub_recomputes as f64)),
         (
             "latency_buckets",
             Json::Arr(m.latency_buckets.iter().map(|&c| Json::Num(c as f64)).collect()),
@@ -992,6 +1057,7 @@ pub fn ok_metrics(m: &MetricsSnapshot) -> String {
             "sub_lag_buckets",
             Json::Arr(m.sub_lag_buckets.iter().map(|&c| Json::Num(c as f64)).collect()),
         ),
+        ("tenants", Json::Arr(tenant_arr)),
     ])
     .to_string()
 }
@@ -1095,6 +1161,7 @@ pub fn code_for(e: &Error) -> &'static str {
         Error::UnknownDataset(_) => "unknown_dataset",
         Error::InvalidArgument(_) | Error::InsufficientData { .. } => "invalid_argument",
         Error::Unavailable(_) => "unavailable",
+        Error::OverQuota(_) => "over_quota",
         Error::Json { .. } => "bad_request",
         _ => "internal",
     }
@@ -1325,6 +1392,7 @@ mod tests {
             overlay: Some(2),
             trace: false,
             layout: None,
+            tenant: None,
         };
         let j = options_json(&opts);
         assert!(j.to_string().contains("\"epoch\":3"), "{j:?}");
@@ -1484,7 +1552,7 @@ mod tests {
             tiles_skipped_clean: 31,
             ..Default::default()
         };
-        let v = Json::parse(&ok_metrics(&m)).unwrap();
+        let v = Json::parse(&ok_metrics(&m, &[])).unwrap();
         assert_eq!(v.get("subs_active").as_usize(), Some(2));
         assert_eq!(v.get("sub_updates").as_usize(), Some(5));
         assert_eq!(v.get("tiles_pushed").as_usize(), Some(17));
@@ -1553,6 +1621,113 @@ mod tests {
         let s = trace_json(&t).to_string();
         assert!(s.contains("\"layout\":\"soa\""), "{s}");
         assert_eq!(trace_from_json(&Json::parse(&s).unwrap()), Some(t));
+    }
+
+    #[test]
+    fn tenant_rides_echo_only_when_set_and_decodes() {
+        use crate::shard::TenantTag;
+        // anonymous: request and echo lines are byte-identical to v2.7
+        let anon = ResolvedOptions::default();
+        assert!(!options_json(&anon).to_string().contains("tenant"));
+        // tenant set: echoed, round-trips, and decodes from a request
+        let tagged = ResolvedOptions {
+            tenant: Some(TenantTag::new("acme-01").unwrap()),
+            ..Default::default()
+        };
+        let j = options_json(&tagged);
+        assert!(j.to_string().contains("\"tenant\":\"acme-01\""), "{j:?}");
+        assert_eq!(options_from_json(&j), Some(tagged));
+        let r = Request::decode(
+            r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"tenant":"acme-01"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Interpolate { options, .. } => {
+                assert_eq!(options.tenant.unwrap().as_str(), "acme-01");
+                // and the client encoder round-trips the field
+                let again = Request::decode(
+                    &Request::Interpolate {
+                        dataset: "d".into(),
+                        qx: vec![1.0],
+                        qy: vec![1.0],
+                        options,
+                        stream: false,
+                    }
+                    .encode(),
+                )
+                .unwrap();
+                match again {
+                    Request::Interpolate { options, .. } => {
+                        assert_eq!(options.tenant.unwrap().as_str(), "acme-01")
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        // subscribe carries it too
+        let r = Request::decode(
+            r#"{"op":"subscribe","dataset":"d","qx":[1],"qy":[1],"tenant":"trial"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Subscribe { options, .. } => {
+                assert_eq!(options.tenant.unwrap().as_str(), "trial")
+            }
+            other => panic!("{other:?}"),
+        }
+        // malformed tenants are the client's error, fail-closed at decode
+        for bad in [
+            r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"tenant":""}"#,
+            r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"tenant":"UPPER"}"#,
+            r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"tenant":"way-too-long-for-the-24-char-cap"}"#,
+            r#"{"op":"interpolate","dataset":"d","qx":[1],"qy":[1],"tenant":7}"#,
+        ] {
+            assert!(Request::decode(bad).is_err(), "{bad}");
+        }
+        // the over_quota rejection is a structured error line
+        let l = err_for(&Error::OverQuota("tenant acme-01: in-flight quota (2) reached".into()));
+        let v = Json::parse(&l).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(false));
+        assert_eq!(v.get("code").as_str(), Some("over_quota"));
+    }
+
+    #[test]
+    fn metrics_lines_carry_v28_shard_counters() {
+        let m = MetricsSnapshot {
+            over_quota: 3,
+            shard_stage1_tasks: 12,
+            shard_escalated_rows: 4,
+            shard_sub_recomputes: 9,
+            ..Default::default()
+        };
+        let lanes = vec![
+            crate::shard::TenantStat {
+                tenant: String::new(),
+                admitted: 7,
+                rejected: 0,
+                in_flight: 1,
+            },
+            crate::shard::TenantStat {
+                tenant: "acme".into(),
+                admitted: 5,
+                rejected: 3,
+                in_flight: 0,
+            },
+        ];
+        let v = Json::parse(&ok_metrics(&m, &lanes)).unwrap();
+        assert_eq!(v.get("over_quota").as_usize(), Some(3));
+        assert_eq!(v.get("shard_stage1_tasks").as_usize(), Some(12));
+        assert_eq!(v.get("shard_escalated_rows").as_usize(), Some(4));
+        assert_eq!(v.get("shard_sub_recomputes").as_usize(), Some(9));
+        let tenants = v.get("tenants");
+        let arr = tenants.as_arr().expect("tenants array present");
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("tenant").as_str(), Some(""), "anonymous lane first");
+        assert_eq!(arr[1].get("tenant").as_str(), Some("acme"));
+        assert_eq!(arr[1].get("admitted").as_usize(), Some(5));
+        assert_eq!(arr[1].get("rejected").as_usize(), Some(3));
+        assert_eq!(arr[1].get("in_flight").as_usize(), Some(0));
     }
 
     #[test]
@@ -1625,7 +1800,7 @@ mod tests {
         };
         m.latency_buckets[3] = 9;
         m.sub_lag_buckets[5] = 2;
-        let v = Json::parse(&ok_metrics(&m)).unwrap();
+        let v = Json::parse(&ok_metrics(&m, &[])).unwrap();
         assert_eq!(v.get("p50_latency_s").as_f64(), Some(0.001));
         assert_eq!(v.get("p90_latency_s").as_f64(), Some(0.005));
         assert_eq!(v.get("sub_lag_mean_s").as_f64(), Some(0.002));
@@ -1669,7 +1844,7 @@ mod tests {
             cache_hit_bytes: 8192,
             ..Default::default()
         };
-        let v = Json::parse(&ok_metrics(&m)).unwrap();
+        let v = Json::parse(&ok_metrics(&m, &[])).unwrap();
         assert_eq!(v.get("ok").as_bool(), Some(true));
         assert_eq!(v.get("stage1_cache_hits").as_usize(), Some(2));
         assert_eq!(v.get("stage1_subset_hits").as_usize(), Some(1));
@@ -1688,7 +1863,7 @@ mod tests {
             stream_peak_buffered: 80,
             ..Default::default()
         };
-        let v = Json::parse(&ok_metrics(&m)).unwrap();
+        let v = Json::parse(&ok_metrics(&m, &[])).unwrap();
         assert_eq!(v.get("stage1_saved_ms").as_f64(), Some(12.5));
         assert_eq!(v.get("stage1_tile_gathers").as_usize(), Some(4));
         assert_eq!(v.get("stream_tiles").as_usize(), Some(9));

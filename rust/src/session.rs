@@ -260,6 +260,20 @@ impl AidwSession {
         }
     }
 
+    /// Per-tenant admission counters (protocol v2.8).  The in-process
+    /// modes have no admission layer — every request runs inline on the
+    /// caller's thread — so they report no tenant lanes; a serving
+    /// session reports one entry per tenant its governor has seen.
+    /// [`QueryOptions::tenant`] is still accepted in every mode (it is
+    /// numerics-neutral and merely rides the resolved-options audit
+    /// record outside serving mode).
+    pub fn tenant_stats(&self) -> Vec<crate::shard::TenantStat> {
+        match &self.exec {
+            Exec::Serving(c) => c.tenant_stats(),
+            _ => Vec::new(),
+        }
+    }
+
     /// Consume the session, returning the owned coordinator (Serving
     /// mode only) — e.g. to hand to [`crate::service::Server::start`].
     pub fn into_coordinator(self) -> Option<Coordinator> {
@@ -918,6 +932,32 @@ mod tests {
         for (g, w) in reply.values.iter().zip(&want) {
             assert!((g - w).abs() < 1e-9, "{g} vs {w}");
         }
+    }
+
+    #[test]
+    fn tenant_option_books_a_lane_in_serving_mode_only() {
+        let tag = crate::shard::TenantTag::new("acme").unwrap();
+        let opts = QueryOptions::new().tenant(tag);
+        let q = queries();
+
+        let inproc = AidwSession::in_process();
+        inproc.register("d", data()).unwrap();
+        let reply = inproc.interpolate("d", &q, &opts).unwrap();
+        assert_eq!(reply.options.tenant, Some(tag), "tenant rides the audit record");
+        assert!(inproc.tenant_stats().is_empty(), "no admission layer in-process");
+
+        let serving = AidwSession::serving(CoordinatorConfig {
+            engine_mode: EngineMode::CpuOnly,
+            ..Default::default()
+        })
+        .unwrap();
+        serving.register("d", data()).unwrap();
+        serving.interpolate_values("d", &q, &opts).unwrap();
+        let stats = serving.tenant_stats();
+        let lane = stats.iter().find(|s| s.tenant == "acme").expect("acme lane booked");
+        assert_eq!(lane.admitted, 1);
+        assert_eq!(lane.rejected, 0);
+        assert_eq!(lane.in_flight, 0, "slot released when the job finished");
     }
 
     #[test]

@@ -1,0 +1,500 @@
+//! Spatially sharded, multi-tenant stage-1 execution (PR 10).
+//!
+//! The even-grid kNN search is embarrassingly partitionable: every query
+//! row's Exact-rule search terminates with a ball of radius
+//! `r = sqrt(kth_d2)` that provably contains all of its neighbors.  This
+//! module partitions each dataset's grid into contiguous cell-row bands
+//! ([`ShardPlan`]), scatters a batch's query rows to their owning shards,
+//! and runs each shard's rows on an owned persistent worker pool
+//! ([`ShardPool`]) that searches only the shard's *clip* — its band plus
+//! a halo margin.  Rows whose termination ball escapes the clip escalate
+//! to the unsharded whole-grid sweep; the gather stitches per-row results
+//! into the existing [`NeighborArtifact`] seam, so stage 2, the neighbor
+//! cache, streaming, and subscriptions are untouched consumers.
+//!
+//! ## Why the sharded sweep is bit-identical
+//!
+//! The k-buffer keeps the stable k-smallest candidates by
+//! `(d², offer order)`: an insert is accepted only on strict improvement,
+//! so among equal distances the first-offered candidate wins.  The
+//! clipped search ([`crate::knn::grid_knn::single_query_idx_rows`]) walks
+//! the *same* ring sequence as the unsharded search restricted to the
+//! clip band, so clip candidates keep their relative offer order; its
+//! termination bound (whole-grid [`crate::grid::EvenGrid::min_dist_beyond`])
+//! stays a valid lower bound for the clip's points, so the clipped result
+//! is the exact stable k-smallest over clip points.  If the ball of
+//! radius `r_clip + margin` (where `r_clip² = ` the clipped buffer's kth
+//! distance) lies inside the clip band, every whole-grid point within
+//! `r_clip + margin` of the query is a clip point — so the whole-grid
+//! stable k-smallest *are* the clip's stable k-smallest, tied candidates
+//! included: identical distances, identical indices, identical
+//! [`Eq.-3`](crate::knn::kbuffer::KBuffer::avg_distance) sum order.  When
+//! the test fails (including an under-filled buffer, whose kth distance
+//! is `+inf`), the row escalates and reruns the literal unsharded
+//! per-row search — escalating more than necessary is always sound, so
+//! the float-margin test only needs to be conservative.  The heuristic
+//! [`RingRule::PaperPlusOne`] has no per-row termination ball, so those
+//! requests (and mutated/merged snapshots) take the unsharded
+//! passthrough unchanged.
+//!
+//! ## Multi-tenancy
+//!
+//! In front of the pool sits a per-tenant admission layer
+//! ([`TenantGovernor`]: token-bucket rates + in-flight quotas,
+//! fail-closed `over_quota` errors), and the pool schedules admitted
+//! work by deficit round robin across tenant lanes ([`ShardPool`]).  The
+//! same pool serves subscription dirty-tile recomputes, so one slow or
+//! flooding consumer can no longer starve its peers (ROADMAP PR-5(a) and
+//! PR-6(a)).
+
+mod plan;
+mod pool;
+mod tenant;
+
+pub use plan::{ShardPlan, AUTO_POINTS_PER_SHARD, DEFAULT_HALO_ROWS, MAX_AUTO_SHARDS};
+pub use pool::{ShardPool, DEFAULT_QUANTUM};
+pub use tenant::{
+    AdmitGuard, TenantGovernor, TenantPolicy, TenantStat, TenantTag, MAX_TENANT_LEN,
+};
+
+use crate::aidw::plan::{NeighborArtifact, NeighborTable, Stage1Plan};
+use crate::grid::EvenGrid;
+use crate::knn::grid_knn::{self, GridKnnConfig, KnnStats, RingRule};
+use crate::knn::kbuffer::{KBuffer, KBufferIdx};
+use crate::live::LiveSnapshot;
+use crate::pool::Pool;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+/// Query rows per shard task — small enough to spread one raster over
+/// the pool, big enough to amortize scheduling.
+const CHUNK_ROWS: usize = 256;
+
+/// Outcome counters for one sharded (or passthrough) stage-1 execution.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SweepStats {
+    /// True when the scatter/gather path ran (false = unsharded
+    /// passthrough: 1 shard, paper+1 rule, or empty raster).
+    pub sharded: bool,
+    /// Shards in the plan.
+    pub shards: usize,
+    /// Pool tasks submitted.
+    pub tasks: u64,
+    /// Rows whose termination ball escaped their clip and reran the
+    /// whole-grid search.
+    pub escalated: u64,
+    /// Wall seconds partitioning + submitting (the scatter span).
+    pub scatter_s: f64,
+    /// Wall seconds collecting + stitching results (the gather span).
+    pub gather_s: f64,
+}
+
+impl SweepStats {
+    /// Fold another sweep's facts into this one (used when a batch is
+    /// served as several per-tile sweeps): counters add, spans add, and
+    /// the shard count keeps the widest plan seen.
+    pub fn merge(&mut self, other: &SweepStats) {
+        self.sharded |= other.sharded;
+        self.shards = self.shards.max(other.shards);
+        self.tasks += other.tasks;
+        self.escalated += other.escalated;
+        self.scatter_s += other.scatter_s;
+        self.gather_s += other.gather_s;
+    }
+}
+
+/// The sharded stage-1 engine: plan geometry, the owned worker pool, and
+/// the tenant admission gate, shared by the coordinator's dispatcher and
+/// the subscription worker.
+pub struct ShardEngine {
+    pool: ShardPool,
+    shards: Option<usize>,
+    governor: Arc<TenantGovernor>,
+}
+
+impl ShardEngine {
+    /// Build the engine: `shards = None` lets [`ShardPlan::auto_count`]
+    /// pick per dataset by point count.
+    pub fn new(
+        shards: Option<usize>,
+        threads: usize,
+        quantum: u64,
+        policy: TenantPolicy,
+    ) -> ShardEngine {
+        ShardEngine {
+            pool: ShardPool::new(threads, quantum),
+            shards,
+            governor: Arc::new(TenantGovernor::new(policy)),
+        }
+    }
+
+    /// The admission gate.
+    pub fn governor(&self) -> &Arc<TenantGovernor> {
+        &self.governor
+    }
+
+    /// The worker pool (subscription recomputes submit here directly).
+    pub fn pool(&self) -> &ShardPool {
+        &self.pool
+    }
+
+    /// Configured shard count override (`None` = auto per dataset).
+    pub fn shards(&self) -> Option<usize> {
+        self.shards
+    }
+
+    /// Stop the worker pool (idempotent; called from coordinator
+    /// shutdown after the dispatcher and subscription worker are joined).
+    pub fn shutdown(&self) {
+        self.pool.shutdown();
+    }
+
+    /// Execute a grid-search stage 1 through the shard pool: scatter the
+    /// batch's rows to shards, sweep each clip, escalate escaped rows,
+    /// gather into a [`NeighborArtifact`] bit-identical to
+    /// [`Stage1Plan::execute_grid`] (see module docs for the proof).
+    ///
+    /// `fallback` is the coordinator's fork-join pool, used verbatim for
+    /// the unsharded passthrough (1 shard, paper+1 rule, empty raster).
+    pub fn execute_grid(
+        &self,
+        stage1: &Stage1Plan,
+        snap: &Arc<LiveSnapshot>,
+        queries: &Arc<Vec<(f64, f64)>>,
+        fallback: &Pool,
+        tenant: TenantTag,
+    ) -> (NeighborArtifact, SweepStats) {
+        let grid = &snap.base.grid;
+        let (rows, _) = grid.dims();
+        let plan = ShardPlan::new(rows, self.shards, grid.n_points());
+        if plan.n_shards() == 1 || stage1.rule != RingRule::Exact || queries.is_empty() {
+            let art = stage1.execute_grid(fallback, grid, queries);
+            let stats =
+                SweepStats { sharded: false, shards: 1, ..SweepStats::default() };
+            return (art, stats);
+        }
+
+        let t_start = Instant::now();
+        let nq = queries.len();
+        let width = stage1.gather;
+
+        // scatter: group rows by owning shard, chunk, submit
+        let mut groups: Vec<Vec<u32>> = vec![Vec::new(); plan.n_shards()];
+        for (qi, &(qx, qy)) in queries.iter().enumerate() {
+            let (row, _) = grid.locate(qx, qy);
+            groups[plan.shard_of_row(row)].push(qi as u32);
+        }
+        let (tx, rx) = mpsc::channel::<ChunkOut>();
+        let mut tasks = 0u64;
+        for (s, qis) in groups.iter().enumerate() {
+            if qis.is_empty() {
+                continue;
+            }
+            let clip = plan.clip(s);
+            for chunk in qis.chunks(CHUNK_ROWS) {
+                let chunk = chunk.to_vec();
+                let snap = Arc::clone(snap);
+                let queries = Arc::clone(queries);
+                let stage1 = stage1.clone();
+                let tx = tx.clone();
+                tasks += 1;
+                self.pool.submit(tenant, chunk.len() as u64, move || {
+                    let out = sweep_chunk(&stage1, &snap.base.grid, &queries, &chunk, clip);
+                    let _ = tx.send(out);
+                });
+            }
+        }
+        drop(tx);
+        let scatter_s = t_start.elapsed().as_secs_f64();
+
+        // gather: stitch per-chunk results back into row order
+        let t_gather = Instant::now();
+        let mut r_obs = vec![0f64; nq];
+        let mut idx = width.map(|w| vec![u32::MAX; nq * w]);
+        let mut done = vec![false; nq];
+        let mut escalated = 0u64;
+        let mut received = 0u64;
+        while let Ok(out) = rx.recv() {
+            received += 1;
+            escalated += out.escalated as u64;
+            for (j, &qi) in out.qis.iter().enumerate() {
+                let qi = qi as usize;
+                r_obs[qi] = out.r_obs[j];
+                done[qi] = true;
+                if let (Some(w), Some(src), Some(dst)) =
+                    (width, out.idx.as_ref(), idx.as_mut())
+                {
+                    dst[qi * w..(qi + 1) * w].copy_from_slice(&src[j * w..(j + 1) * w]);
+                }
+            }
+        }
+        if received < tasks {
+            // pool shut down mid-run (only reachable in teardown races):
+            // finish the missing rows inline with the whole-grid search,
+            // which is the escalation path and therefore still exact
+            let missing: Vec<u32> =
+                (0..nq).filter(|&qi| !done[qi]).map(|qi| qi as u32).collect();
+            let out = sweep_chunk(stage1, grid, queries, &missing, (0, rows));
+            for (j, &qi) in out.qis.iter().enumerate() {
+                let qi = qi as usize;
+                r_obs[qi] = out.r_obs[j];
+                if let (Some(w), Some(src), Some(dst)) =
+                    (width, out.idx.as_ref(), idx.as_mut())
+                {
+                    dst[qi * w..(qi + 1) * w].copy_from_slice(&src[j * w..(j + 1) * w]);
+                }
+            }
+        }
+        let gather_s = t_gather.elapsed().as_secs_f64();
+
+        let neighbors = match (width, idx) {
+            (Some(w), Some(idx)) => Some(NeighborTable { idx, width: w }),
+            _ => None,
+        };
+        let art = NeighborArtifact::new(
+            r_obs,
+            stage1.r_exp,
+            stage1.params.clone(),
+            neighbors,
+            t_start.elapsed().as_secs_f64(),
+        );
+        let stats = SweepStats {
+            sharded: true,
+            shards: plan.n_shards(),
+            tasks,
+            escalated,
+            scatter_s,
+            gather_s,
+        };
+        (art, stats)
+    }
+}
+
+impl std::fmt::Debug for ShardEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardEngine")
+            .field("shards", &self.shards)
+            .field("threads", &self.pool.threads())
+            .finish()
+    }
+}
+
+/// One shard task's output: results for a chunk of query rows.
+struct ChunkOut {
+    qis: Vec<u32>,
+    r_obs: Vec<f64>,
+    idx: Option<Vec<u32>>,
+    escalated: u32,
+}
+
+/// True when the ball of radius `sqrt(kth_d2) + margin` around the query
+/// row lies inside the clip band in y (the only clipped axis — bands are
+/// full-width in x).  `margin` is one millionth of a cell width: orders
+/// of magnitude above coordinate rounding, and escalating a borderline
+/// row is always sound.
+fn ball_in_clip(grid: &EvenGrid, qy: f64, kth_d2: f64, full: bool, clip: (usize, usize)) -> bool {
+    if !full {
+        return false;
+    }
+    let (rows, _) = grid.dims();
+    let w = grid.cell_width();
+    let min_y = grid.bounds().min_y;
+    let r = kth_d2.sqrt() + w * 1e-6;
+    let lo_ok = clip.0 == 0 || qy - r > min_y + clip.0 as f64 * w;
+    let hi_ok = clip.1 >= rows || qy + r < min_y + clip.1 as f64 * w;
+    lo_ok && hi_ok
+}
+
+/// Sweep one chunk of query rows against a shard clip, escalating rows
+/// whose termination ball escapes it.  Mirrors the per-row bodies of
+/// [`crate::knn::grid_knn::grid_knn_neighbors`] (gather mode) and
+/// [`crate::knn::grid_knn::grid_knn_avg_distances_on`] (dense mode)
+/// exactly — same buffer widths, same Eq.-3 epilogue.
+fn sweep_chunk(
+    stage1: &Stage1Plan,
+    grid: &EvenGrid,
+    queries: &[(f64, f64)],
+    qis: &[u32],
+    clip: (usize, usize),
+) -> ChunkOut {
+    let (rows, _) = grid.dims();
+    let mut stats = KnnStats::default();
+    let mut out = ChunkOut {
+        qis: qis.to_vec(),
+        r_obs: Vec::with_capacity(qis.len()),
+        idx: None,
+        escalated: 0,
+    };
+    match stage1.gather {
+        Some(n) => {
+            let cfg = GridKnnConfig { k: n, rule: stage1.rule };
+            let mut buf = KBufferIdx::new(n);
+            let mut idx = Vec::with_capacity(qis.len() * n);
+            for &qi in qis {
+                let (qx, qy) = queries[qi as usize];
+                grid_knn::single_query_idx_rows(
+                    grid, qx, qy, &cfg, &mut buf, &mut stats, clip.0, clip.1,
+                );
+                if !ball_in_clip(grid, qy, buf.kth_d2(), buf.full(), clip) {
+                    out.escalated += 1;
+                    grid_knn::single_query_idx_rows(
+                        grid, qx, qy, &cfg, &mut buf, &mut stats, 0, rows,
+                    );
+                }
+                out.r_obs.push(buf.avg_distance(stage1.k));
+                idx.extend_from_slice(&buf.idx_slice()[..n]);
+            }
+            out.idx = Some(idx);
+        }
+        None => {
+            let cfg = GridKnnConfig { k: stage1.k, rule: stage1.rule };
+            let mut buf = KBuffer::new(stage1.k);
+            for &qi in qis {
+                let (qx, qy) = queries[qi as usize];
+                let mut avg = grid_knn::single_query_rows(
+                    grid, qx, qy, &cfg, &mut buf, &mut stats, clip.0, clip.1,
+                );
+                if !ball_in_clip(grid, qy, buf.kth_d2(), buf.full(), clip) {
+                    out.escalated += 1;
+                    avg = grid_knn::single_query_rows(
+                        grid, qx, qy, &cfg, &mut buf, &mut stats, 0, rows,
+                    );
+                }
+                out.r_obs.push(avg);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aidw::params::AidwParams;
+    use crate::aidw::plan::SearchKind;
+    use crate::grid::GridConfig;
+    use crate::live::{LiveConfig, LiveDataset};
+    use crate::workload;
+
+    fn snapshot_of(n: usize, seed: u64) -> Arc<LiveSnapshot> {
+        let pts = workload::uniform_square(n, 100.0, seed);
+        let pool = Pool::new(2);
+        let ds = LiveDataset::build(
+            &pool,
+            "t",
+            pts,
+            &GridConfig::default(),
+            None,
+            LiveConfig::default(),
+        )
+        .unwrap();
+        ds.snapshot()
+    }
+
+    fn stage1(k: usize, gather: Option<usize>, snap: &LiveSnapshot) -> Stage1Plan {
+        let params = AidwParams::default();
+        Stage1Plan::new(
+            k,
+            RingRule::Exact,
+            gather,
+            &params,
+            snap.live_len,
+            snap.area(),
+            SearchKind::Grid,
+        )
+    }
+
+    #[test]
+    fn sharded_sweep_is_bit_identical_to_unsharded() {
+        let snap = snapshot_of(3000, 41);
+        let queries = Arc::new(workload::uniform_square(400, 100.0, 42).xy());
+        let fallback = Pool::new(2);
+        for shards in [2usize, 3, 7] {
+            for gather in [None, Some(24)] {
+                let engine =
+                    ShardEngine::new(Some(shards), 3, DEFAULT_QUANTUM, TenantPolicy::default());
+                let plan = stage1(10, gather, &snap);
+                let (art, stats) = engine.execute_grid(
+                    &plan,
+                    &snap,
+                    &queries,
+                    &fallback,
+                    TenantTag::default(),
+                );
+                let want = plan.execute_grid(&fallback, &snap.base.grid, &queries);
+                assert!(stats.sharded, "shards={shards} must take the sharded path");
+                assert_eq!(art.r_obs, want.r_obs, "shards={shards} gather={gather:?}");
+                assert_eq!(
+                    art.neighbors.as_ref().map(|t| (&t.idx, t.width)),
+                    want.neighbors.as_ref().map(|t| (&t.idx, t.width)),
+                    "shards={shards} gather={gather:?}"
+                );
+                assert_eq!(art.alphas(), want.alphas());
+                engine.shutdown();
+            }
+        }
+    }
+
+    #[test]
+    fn paper_rule_and_single_shard_pass_through() {
+        let snap = snapshot_of(500, 43);
+        let queries = Arc::new(workload::uniform_square(50, 100.0, 44).xy());
+        let fallback = Pool::new(1);
+        let engine = ShardEngine::new(Some(4), 2, DEFAULT_QUANTUM, TenantPolicy::default());
+        let params = AidwParams::default();
+        let paper = Stage1Plan::new(
+            10,
+            RingRule::PaperPlusOne,
+            None,
+            &params,
+            snap.live_len,
+            snap.area(),
+            SearchKind::Grid,
+        );
+        let (_, stats) =
+            engine.execute_grid(&paper, &snap, &queries, &fallback, TenantTag::default());
+        assert!(!stats.sharded, "paper+1 has no exact termination ball");
+        let single = ShardEngine::new(Some(1), 2, DEFAULT_QUANTUM, TenantPolicy::default());
+        let plan = stage1(10, None, &snap);
+        let (_, stats) =
+            single.execute_grid(&plan, &snap, &queries, &fallback, TenantTag::default());
+        assert!(!stats.sharded);
+        engine.shutdown();
+        single.shutdown();
+    }
+
+    #[test]
+    fn boundary_heavy_raster_escalates_and_stays_exact() {
+        // all queries on interior band boundaries with a huge k: most
+        // termination balls must escape their clip
+        let snap = snapshot_of(800, 45);
+        let grid = &snap.base.grid;
+        let (rows, _) = grid.dims();
+        let plan_geo = ShardPlan::new(rows, Some(4), grid.n_points());
+        let b = grid.bounds();
+        let w = grid.cell_width();
+        let mut qs = Vec::new();
+        for s in 0..plan_geo.n_shards() {
+            let (lo, _) = plan_geo.band(s);
+            let y = b.min_y + lo as f64 * w;
+            for i in 0..20 {
+                qs.push((b.min_x + i as f64 * (b.max_x - b.min_x) / 20.0, y));
+            }
+        }
+        let queries = Arc::new(qs);
+        let engine = ShardEngine::new(Some(4), 2, DEFAULT_QUANTUM, TenantPolicy::default());
+        let fallback = Pool::new(2);
+        let plan = stage1(64, Some(64), &snap);
+        let (art, stats) =
+            engine.execute_grid(&plan, &snap, &queries, &fallback, TenantTag::default());
+        let want = plan.execute_grid(&fallback, grid, &queries);
+        assert!(stats.sharded);
+        assert!(stats.escalated > 0, "boundary raster with k=64 must escalate rows");
+        assert_eq!(art.r_obs, want.r_obs);
+        assert_eq!(
+            art.neighbors.as_ref().map(|t| &t.idx),
+            want.neighbors.as_ref().map(|t| &t.idx)
+        );
+        engine.shutdown();
+    }
+}

@@ -1,0 +1,153 @@
+//! Spatial shard geometry: contiguous cell-row bands over the even grid.
+//!
+//! A shard owns a contiguous range of grid cell rows (hence a contiguous
+//! range of CSR cell indices `[lo*n_cols, hi*n_cols)`), and searches a
+//! *clip* band widened by a halo margin on each side.  Band + halo is
+//! pure geometry; correctness never depends on the halo width — a row
+//! whose exact termination ball escapes its clip escalates to the
+//! unsharded sweep (see [`crate::shard`] module docs) — so the halo only
+//! tunes how often that happens.
+
+/// Cell rows of halo margin on each side of a shard's band.
+pub const DEFAULT_HALO_ROWS: usize = 2;
+
+/// Auto-sharding density: one shard per this many indexed points.
+pub const AUTO_POINTS_PER_SHARD: usize = 200_000;
+
+/// Auto-sharding cap.
+pub const MAX_AUTO_SHARDS: usize = 16;
+
+/// Row-band partition of a grid into spatial shards.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    n_rows: usize,
+    /// `[lo, hi)` cell-row bands, contiguous and covering `0..n_rows`.
+    bands: Vec<(usize, usize)>,
+    halo: usize,
+}
+
+impl ShardPlan {
+    /// Partition `n_rows` grid cell rows into `requested` shards (`None`
+    /// = [`ShardPlan::auto_count`] from the point count).  The count is
+    /// clamped to `[1, n_rows]` so every band owns at least one row.
+    pub fn new(n_rows: usize, requested: Option<usize>, n_points: usize) -> ShardPlan {
+        let n_rows = n_rows.max(1);
+        let count = requested.unwrap_or_else(|| Self::auto_count(n_points)).clamp(1, n_rows);
+        let base = n_rows / count;
+        let extra = n_rows % count;
+        let mut bands = Vec::with_capacity(count);
+        let mut at = 0usize;
+        for s in 0..count {
+            let len = base + usize::from(s < extra);
+            bands.push((at, at + len));
+            at += len;
+        }
+        debug_assert_eq!(at, n_rows);
+        ShardPlan { n_rows, bands, halo: DEFAULT_HALO_ROWS }
+    }
+
+    /// Shard count chosen from the indexed point count: one shard per
+    /// [`AUTO_POINTS_PER_SHARD`] points, capped at [`MAX_AUTO_SHARDS`].
+    /// Small datasets get 1 shard — the unsharded passthrough.
+    pub fn auto_count(n_points: usize) -> usize {
+        (n_points / AUTO_POINTS_PER_SHARD).clamp(1, MAX_AUTO_SHARDS)
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.bands.len()
+    }
+
+    /// Total cell rows partitioned.
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Halo rows on each side of a band.
+    pub fn halo_rows(&self) -> usize {
+        self.halo
+    }
+
+    /// The `[lo, hi)` cell-row band shard `s` owns.
+    pub fn band(&self, s: usize) -> (usize, usize) {
+        self.bands[s]
+    }
+
+    /// The `[lo, hi)` cell-row clip (band ± halo, clamped to the grid)
+    /// shard `s` searches.
+    pub fn clip(&self, s: usize) -> (usize, usize) {
+        let (lo, hi) = self.bands[s];
+        (lo.saturating_sub(self.halo), (hi + self.halo).min(self.n_rows))
+    }
+
+    /// The shard owning cell row `row` (rows past the grid clamp to the
+    /// last shard; queries are located with the grid's own clamping, so
+    /// this never triggers in practice).
+    pub fn shard_of_row(&self, row: usize) -> usize {
+        self.bands
+            .partition_point(|&(_, hi)| hi <= row)
+            .min(self.bands.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bands_cover_rows_contiguously() {
+        for (rows, req) in [(10, Some(3)), (7, Some(7)), (100, Some(16)), (5, Some(1)), (1, Some(4))] {
+            let plan = ShardPlan::new(rows, req, 0);
+            assert!(plan.n_shards() <= rows.max(1));
+            let mut at = 0usize;
+            for s in 0..plan.n_shards() {
+                let (lo, hi) = plan.band(s);
+                assert_eq!(lo, at, "bands must be contiguous");
+                assert!(hi > lo, "bands must be non-empty");
+                at = hi;
+            }
+            assert_eq!(at, rows.max(1), "bands must cover every row");
+        }
+    }
+
+    #[test]
+    fn shard_of_row_matches_bands() {
+        let plan = ShardPlan::new(10, Some(3), 0);
+        for row in 0..10 {
+            let s = plan.shard_of_row(row);
+            let (lo, hi) = plan.band(s);
+            assert!((lo..hi).contains(&row), "row {row} -> shard {s} ({lo}..{hi})");
+        }
+        // past-the-end rows clamp to the last shard
+        assert_eq!(plan.shard_of_row(99), plan.n_shards() - 1);
+    }
+
+    #[test]
+    fn clip_adds_halo_clamped() {
+        let plan = ShardPlan::new(20, Some(4), 0);
+        let (b0_lo, b0_hi) = plan.band(0);
+        assert_eq!(plan.clip(0), (0, b0_hi + plan.halo_rows()), "first clip clamps at 0");
+        let last = plan.n_shards() - 1;
+        let (bl_lo, _) = plan.band(last);
+        assert_eq!(
+            plan.clip(last),
+            (bl_lo - plan.halo_rows(), 20),
+            "last clip clamps at n_rows"
+        );
+        assert_eq!(b0_lo, 0);
+    }
+
+    #[test]
+    fn auto_count_scales_with_points() {
+        assert_eq!(ShardPlan::auto_count(0), 1);
+        assert_eq!(ShardPlan::auto_count(AUTO_POINTS_PER_SHARD - 1), 1);
+        assert_eq!(ShardPlan::auto_count(AUTO_POINTS_PER_SHARD * 3), 3);
+        assert_eq!(ShardPlan::auto_count(usize::MAX / 2), MAX_AUTO_SHARDS);
+    }
+
+    #[test]
+    fn requested_count_clamps_to_rows() {
+        let plan = ShardPlan::new(3, Some(50), 10_000_000);
+        assert_eq!(plan.n_shards(), 3, "cannot have more shards than rows");
+    }
+}

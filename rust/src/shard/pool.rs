@@ -1,0 +1,343 @@
+//! The owned shard worker pool: persistent threads draining a
+//! deficit-round-robin (DRR) scheduler keyed by tenant.
+//!
+//! Unlike [`crate::pool::Pool`] (scoped fork-join data parallelism), this
+//! pool owns long-lived threads and accepts `'static` tasks: per-shard
+//! stage-1 sweeps from the dispatcher and per-dataset subscription
+//! recomputes from the subscription worker.  Both kinds of work are
+//! tagged with a tenant, and workers pick the next task by DRR across
+//! per-tenant lanes — a flooding tenant's backlog cannot starve another
+//! tenant's queued task, and a slow subscription consumer only occupies
+//! its own lane.
+//!
+//! Scheduling cost model: callers pass a task's cost (query rows for
+//! stage-1 chunks, tiles for recomputes).  Each lane accumulates one
+//! quantum of credit per scheduler visit and pays a task's cost to run
+//! it, so tenants receive service proportional to visits, not to how
+//! coarsely their work is chunked.
+//!
+//! Lock discipline: the scheduler mutex is a leaf — workers release it
+//! before running a task (no guard is ever held across task execution or
+//! any blocking call), and waiting is a condvar wait, never a channel
+//! recv.
+
+use crate::shard::tenant::TenantTag;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Default DRR quantum (cost units of service credit per scheduler
+/// visit).
+pub const DEFAULT_QUANTUM: u64 = 1024;
+
+/// Cap on a single task's cost, in quanta — bounds the scheduler scan
+/// and keeps one giant task from hoarding unbounded credit.
+const COST_CAP_QUANTA: u64 = 64;
+
+struct TenantLane {
+    deficit: u64,
+    tasks: VecDeque<(u64, Task)>,
+}
+
+struct Sched {
+    lanes: Vec<TenantLane>,
+    slot_of: HashMap<TenantTag, usize>,
+    cursor: usize,
+    quantum: u64,
+    queued: usize,
+}
+
+impl Sched {
+    /// DRR pop: starting at the cursor, grant each visited non-empty lane
+    /// one quantum until some lane's deficit covers its front task's
+    /// cost.  Costs are capped at [`COST_CAP_QUANTA`] quanta, so the scan
+    /// is bounded; returns `None` only when every lane is empty.
+    fn pop_next(&mut self) -> Option<Task> {
+        if self.queued == 0 || self.lanes.is_empty() {
+            return None;
+        }
+        let n = self.lanes.len();
+        for _ in 0..n * (COST_CAP_QUANTA as usize + 2) {
+            let i = self.cursor % n;
+            let lane = &mut self.lanes[i];
+            let Some(&(cost, _)) = lane.tasks.front() else {
+                // an idle lane forfeits accumulated credit (classic DRR)
+                lane.deficit = 0;
+                self.cursor += 1;
+                continue;
+            };
+            if lane.deficit >= cost {
+                lane.deficit -= cost;
+                let (_, task) = lane.tasks.pop_front()?;
+                self.queued -= 1;
+                return Some(task);
+            }
+            lane.deficit += self.quantum;
+            self.cursor += 1;
+        }
+        // unreachable with capped costs; fail safe rather than spin
+        None
+    }
+
+    fn push(&mut self, tenant: TenantTag, cost: u64, task: Task) {
+        let slot = match self.slot_of.get(&tenant) {
+            Some(&s) => s,
+            None => {
+                let s = self.lanes.len();
+                self.lanes.push(TenantLane { deficit: 0, tasks: VecDeque::new() });
+                self.slot_of.insert(tenant, s);
+                s
+            }
+        };
+        let cost = cost.max(1).min(self.quantum.saturating_mul(COST_CAP_QUANTA));
+        self.lanes[slot].tasks.push_back((cost, task));
+        self.queued += 1;
+    }
+}
+
+struct PoolShared {
+    /// Leaf lock: released before any task runs; workers block only on
+    /// the condvar, never on a channel recv, while holding it.
+    // lock-order: shard_sched
+    sched: Mutex<Sched>,
+    ready: Condvar,
+    running: AtomicBool,
+    tasks_run: AtomicU64,
+}
+
+/// Persistent tenant-fair worker pool (see module docs).
+pub struct ShardPool {
+    inner: Arc<PoolShared>,
+    /// Held only by [`ShardPool::shutdown`] while joining exited workers;
+    /// never nested inside any other lock.
+    // lock-order: shard_workers
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    threads: usize,
+}
+
+impl ShardPool {
+    /// Spawn `threads` workers (at least 1) with the given DRR quantum.
+    pub fn new(threads: usize, quantum: u64) -> ShardPool {
+        let threads = threads.max(1);
+        let inner = Arc::new(PoolShared {
+            sched: Mutex::new(Sched {
+                lanes: Vec::new(),
+                slot_of: HashMap::new(),
+                cursor: 0,
+                quantum: quantum.max(1),
+                queued: 0,
+            }),
+            ready: Condvar::new(),
+            running: AtomicBool::new(true),
+            tasks_run: AtomicU64::new(0),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("aidw-shard-{i}"))
+                    .spawn(move || worker_loop(inner))
+                    .expect("spawn shard worker")
+            })
+            .collect();
+        ShardPool { inner, workers: Mutex::new(workers), threads }
+    }
+
+    /// Worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Tasks executed since startup.
+    pub fn tasks_run(&self) -> u64 {
+        self.inner.tasks_run.load(Ordering::Relaxed)
+    }
+
+    /// Enqueue a task on `tenant`'s lane with the given DRR cost.
+    /// Returns `false` (dropping the task) once the pool is shut down.
+    pub fn submit(&self, tenant: TenantTag, cost: u64, task: impl FnOnce() + Send + 'static) -> bool {
+        if !self.inner.running.load(Ordering::Acquire) {
+            return false;
+        }
+        {
+            let mut sched = self.inner.sched.lock().unwrap();
+            sched.push(tenant, cost, Box::new(task));
+        }
+        self.inner.ready.notify_one();
+        true
+    }
+
+    /// Stop accepting work, drop queued tasks, and join the workers
+    /// (idempotent).  In-progress tasks finish first.
+    pub fn shutdown(&self) {
+        if !self.inner.running.swap(false, Ordering::AcqRel) {
+            return;
+        }
+        {
+            let mut sched = self.inner.sched.lock().unwrap();
+            for lane in &mut sched.lanes {
+                lane.tasks.clear();
+            }
+            sched.queued = 0;
+        }
+        self.inner.ready.notify_all();
+        {
+            let mut workers = self.workers.lock().unwrap();
+            for w in workers.drain(..) {
+                let _ = w.join();
+            }
+        }
+        // a submit racing the shutdown may have enqueued after the clear
+        // above; drop any such straggler so its captures (e.g. an
+        // Arc<Shared> cycle through the coordinator) cannot leak
+        let mut sched = self.inner.sched.lock().unwrap();
+        for lane in &mut sched.lanes {
+            lane.tasks.clear();
+        }
+        sched.queued = 0;
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(inner: Arc<PoolShared>) {
+    loop {
+        let task = {
+            let mut sched = inner.sched.lock().unwrap();
+            loop {
+                if !inner.running.load(Ordering::Acquire) {
+                    return;
+                }
+                match sched.pop_next() {
+                    Some(t) => break t,
+                    None => sched = inner.ready.wait(sched).unwrap(),
+                }
+            }
+        };
+        task();
+        inner.tasks_run.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn tag(s: &str) -> TenantTag {
+        TenantTag::new(s).unwrap()
+    }
+
+    #[test]
+    fn runs_submitted_tasks() {
+        let pool = ShardPool::new(2, DEFAULT_QUANTUM);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..16u32 {
+            let tx = tx.clone();
+            assert!(pool.submit(TenantTag::default(), 1, move || {
+                let _ = tx.send(i);
+            }));
+        }
+        drop(tx);
+        let mut got: Vec<u32> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..16).collect::<Vec<_>>());
+        assert_eq!(pool.tasks_run(), 16);
+        pool.shutdown();
+        assert!(!pool.submit(TenantTag::default(), 1, || {}), "post-shutdown submit drops");
+    }
+
+    #[test]
+    fn drr_interleaves_a_flooded_lane_with_a_small_one() {
+        // single worker, gated so the queue builds deterministically:
+        // tenant A floods 50 equal-cost tasks, then tenant B submits one.
+        // DRR must run B's task long before A's backlog drains.
+        let pool = ShardPool::new(1, 8);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        {
+            let gate = Arc::clone(&gate);
+            pool.submit(tag("warm"), 1, move || {
+                let (lock, cv) = &*gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+            });
+        }
+        let order = Arc::new(Mutex::new(Vec::<&'static str>::new()));
+        for _ in 0..50 {
+            let order = Arc::clone(&order);
+            pool.submit(tag("flood"), 8, move || {
+                order.lock().unwrap().push("flood");
+            });
+        }
+        {
+            let order = Arc::clone(&order);
+            pool.submit(tag("small"), 8, move || {
+                order.lock().unwrap().push("small");
+            });
+        }
+        // open the gate and let the queue drain
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            if order.lock().unwrap().len() == 51 {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "pool stalled");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let order = order.lock().unwrap();
+        let small_at = order.iter().position(|&t| t == "small").unwrap();
+        assert!(
+            small_at <= 2,
+            "DRR must schedule the small tenant within a round, ran at {small_at} of 51"
+        );
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drops_queued_tasks_and_joins() {
+        let pool = ShardPool::new(1, DEFAULT_QUANTUM);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let ran = Arc::new(AtomicU64::new(0));
+        {
+            let gate = Arc::clone(&gate);
+            pool.submit(TenantTag::default(), 1, move || {
+                let (lock, cv) = &*gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+            });
+        }
+        for _ in 0..8 {
+            let ran = Arc::clone(&ran);
+            pool.submit(TenantTag::default(), 1, move || {
+                ran.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        pool.shutdown();
+        assert!(
+            ran.load(Ordering::Relaxed) <= 8,
+            "queued tasks are dropped, never double-run"
+        );
+        // second shutdown is a no-op
+        pool.shutdown();
+    }
+}

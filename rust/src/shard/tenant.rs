@@ -1,0 +1,353 @@
+//! Multi-tenant admission: tenant identity, token-bucket rate limits,
+//! and in-flight quotas (protocol v2.8).
+//!
+//! Every request may carry an optional `tenant` label.  Admission is
+//! **fail-closed**: a request that exceeds its tenant's token-bucket
+//! rate or in-flight cap is rejected immediately with the structured
+//! [`Error::OverQuota`] (wire code `over_quota`) instead of queueing
+//! behind the flood.  Requests without a tenant share the anonymous
+//! tenant `""` and are governed by the same policy, so an unlabelled
+//! flood cannot bypass admission.
+//!
+//! The governor only *admits*; fairness among admitted work is the
+//! deficit-round-robin scheduler in [`crate::shard::pool`].
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Maximum tenant-label length (bytes).  Small enough that the tag stays
+/// `Copy` and lives inline in `ResolvedOptions`.
+pub const MAX_TENANT_LEN: usize = 24;
+
+/// A tenant label: 1..=[`MAX_TENANT_LEN`] chars of `[a-z0-9_.-]`, stored
+/// inline so `ResolvedOptions` stays `Copy`.  The default tag is the
+/// anonymous tenant (empty label) every unlabelled request maps to.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct TenantTag {
+    bytes: [u8; MAX_TENANT_LEN],
+    len: u8,
+}
+
+impl TenantTag {
+    /// Parse and validate a tenant label.
+    pub fn new(s: &str) -> Result<TenantTag> {
+        if s.is_empty() || s.len() > MAX_TENANT_LEN {
+            return Err(Error::InvalidArgument(format!(
+                "tenant label must be 1..={MAX_TENANT_LEN} bytes, got {}",
+                s.len()
+            )));
+        }
+        if !s
+            .bytes()
+            .all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || matches!(b, b'_' | b'-' | b'.'))
+        {
+            return Err(Error::InvalidArgument(format!(
+                "tenant label '{s}' has invalid characters (allowed: [a-z0-9_.-])"
+            )));
+        }
+        let mut bytes = [0u8; MAX_TENANT_LEN];
+        bytes[..s.len()].copy_from_slice(s.as_bytes());
+        Ok(TenantTag { bytes, len: s.len() as u8 })
+    }
+
+    /// The label (empty for the anonymous tenant).
+    pub fn as_str(&self) -> &str {
+        std::str::from_utf8(&self.bytes[..self.len as usize]).unwrap_or("")
+    }
+
+    /// True for the anonymous (unlabelled) tenant.
+    pub fn is_anonymous(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl std::fmt::Debug for TenantTag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TenantTag({:?})", self.as_str())
+    }
+}
+
+impl std::fmt::Display for TenantTag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Per-tenant admission policy (one policy applies to every tenant; the
+/// default is fully open, matching pre-v2.8 behavior).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantPolicy {
+    /// Token-bucket refill rate in requests/second (`None` = unlimited).
+    pub rate_per_s: Option<f64>,
+    /// Token-bucket capacity (burst size) when a rate is set.
+    pub burst: f64,
+    /// Cap on concurrently in-flight interpolation jobs per tenant
+    /// (`None` = unlimited).
+    pub max_in_flight: Option<usize>,
+}
+
+impl Default for TenantPolicy {
+    fn default() -> Self {
+        TenantPolicy { rate_per_s: None, burst: 8.0, max_in_flight: None }
+    }
+}
+
+/// One tenant's admission ledger.
+#[derive(Debug, Clone)]
+struct TenantBook {
+    tokens: f64,
+    last_refill: Instant,
+    in_flight: usize,
+    admitted: u64,
+    rejected: u64,
+}
+
+impl TenantBook {
+    fn new(policy: &TenantPolicy) -> TenantBook {
+        TenantBook {
+            tokens: policy.burst,
+            last_refill: Instant::now(),
+            in_flight: 0,
+            admitted: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Refill the bucket, then try to take one token.
+    fn take_token(&mut self, policy: &TenantPolicy) -> bool {
+        let Some(rate) = policy.rate_per_s else {
+            return true;
+        };
+        let now = Instant::now();
+        let dt = now.duration_since(self.last_refill).as_secs_f64();
+        self.last_refill = now;
+        self.tokens = (self.tokens + dt * rate).min(policy.burst);
+        if self.tokens < 1.0 {
+            return false;
+        }
+        self.tokens -= 1.0;
+        true
+    }
+}
+
+/// Point-in-time per-tenant counters (the v2.8 `metrics` op breakdown).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantStat {
+    /// Tenant label (empty = anonymous).
+    pub tenant: String,
+    /// Requests admitted since startup.
+    pub admitted: u64,
+    /// Requests rejected over-quota since startup.
+    pub rejected: u64,
+    /// Interpolation jobs currently in flight.
+    pub in_flight: usize,
+}
+
+/// The admission gate in front of the shard pool.
+#[derive(Debug)]
+pub struct TenantGovernor {
+    policy: TenantPolicy,
+    /// Leaf lock (never held while taking any other lock, and no
+    /// blocking call runs under it).
+    // lock-order: tenant_books
+    books: Mutex<HashMap<TenantTag, TenantBook>>,
+}
+
+impl TenantGovernor {
+    pub fn new(policy: TenantPolicy) -> TenantGovernor {
+        TenantGovernor { policy, books: Mutex::new(HashMap::new()) }
+    }
+
+    /// The active policy.
+    pub fn policy(&self) -> &TenantPolicy {
+        &self.policy
+    }
+
+    /// Admit one interpolation job: token bucket + in-flight cap.  The
+    /// returned guard releases the in-flight slot on drop, wherever the
+    /// job ends (completed, failed, or swept while cancelled).
+    pub fn admit(self: &Arc<Self>, tenant: TenantTag) -> Result<AdmitGuard> {
+        let mut books = self.books.lock().unwrap();
+        let book = books.entry(tenant).or_insert_with(|| TenantBook::new(&self.policy));
+        if !book.take_token(&self.policy) {
+            book.rejected += 1;
+            return Err(over_quota_rate(tenant, &self.policy));
+        }
+        if let Some(cap) = self.policy.max_in_flight {
+            if book.in_flight >= cap {
+                book.rejected += 1;
+                return Err(Error::OverQuota(format!(
+                    "tenant '{tenant}' at in-flight cap ({cap} jobs)"
+                )));
+            }
+        }
+        book.in_flight += 1;
+        book.admitted += 1;
+        Ok(AdmitGuard { governor: Arc::clone(self), tenant })
+    }
+
+    /// Admit one long-lived registration (subscriptions): token bucket
+    /// only, no in-flight slot is held.
+    pub fn admit_transient(&self, tenant: TenantTag) -> Result<()> {
+        let mut books = self.books.lock().unwrap();
+        let book = books.entry(tenant).or_insert_with(|| TenantBook::new(&self.policy));
+        if !book.take_token(&self.policy) {
+            book.rejected += 1;
+            return Err(over_quota_rate(tenant, &self.policy));
+        }
+        book.admitted += 1;
+        Ok(())
+    }
+
+    fn release(&self, tenant: TenantTag) {
+        let mut books = self.books.lock().unwrap();
+        if let Some(book) = books.get_mut(&tenant) {
+            book.in_flight = book.in_flight.saturating_sub(1);
+        }
+    }
+
+    /// Total over-quota rejections across tenants.
+    pub fn rejected_total(&self) -> u64 {
+        self.books.lock().unwrap().values().map(|b| b.rejected).sum()
+    }
+
+    /// Per-tenant counters, sorted by label for deterministic exposition.
+    pub fn stats(&self) -> Vec<TenantStat> {
+        let books = self.books.lock().unwrap();
+        let mut out: Vec<TenantStat> = books
+            .iter()
+            .map(|(tag, b)| TenantStat {
+                tenant: tag.as_str().to_string(),
+                admitted: b.admitted,
+                rejected: b.rejected,
+                in_flight: b.in_flight,
+            })
+            .collect();
+        drop(books);
+        out.sort_by(|a, b| a.tenant.cmp(&b.tenant));
+        out
+    }
+}
+
+fn over_quota_rate(tenant: TenantTag, policy: &TenantPolicy) -> Error {
+    let rate = policy.rate_per_s.unwrap_or(f64::INFINITY);
+    Error::OverQuota(format!("tenant '{tenant}' exceeded rate limit ({rate} req/s)"))
+}
+
+/// RAII in-flight slot: dropping it (with the owning job, however that
+/// job ends) releases the tenant's slot — no leak on cancel/sweep paths.
+#[derive(Debug)]
+pub struct AdmitGuard {
+    governor: Arc<TenantGovernor>,
+    tenant: TenantTag,
+}
+
+impl AdmitGuard {
+    /// The tenant the slot belongs to.
+    pub fn tenant(&self) -> TenantTag {
+        self.tenant
+    }
+}
+
+impl Drop for AdmitGuard {
+    fn drop(&mut self) {
+        self.governor.release(self.tenant);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tag_validates_and_roundtrips() {
+        let t = TenantTag::new("acme-corp_1.eu").unwrap();
+        assert_eq!(t.as_str(), "acme-corp_1.eu");
+        assert!(!t.is_anonymous());
+        assert!(TenantTag::default().is_anonymous());
+        assert_eq!(TenantTag::default().as_str(), "");
+        for bad in ["", "UPPER", "sp ace", "x".repeat(25).as_str(), "héh"] {
+            assert!(TenantTag::new(bad).is_err(), "{bad:?} must not parse");
+        }
+        // max length is accepted
+        assert!(TenantTag::new(&"y".repeat(24)).is_ok());
+    }
+
+    #[test]
+    fn open_policy_admits_everything() {
+        let gov = Arc::new(TenantGovernor::new(TenantPolicy::default()));
+        let t = TenantTag::new("a").unwrap();
+        let guards: Vec<_> = (0..100).map(|_| gov.admit(t).unwrap()).collect();
+        assert_eq!(gov.stats()[0].in_flight, 100);
+        drop(guards);
+        assert_eq!(gov.stats()[0].in_flight, 0);
+        assert_eq!(gov.rejected_total(), 0);
+    }
+
+    #[test]
+    fn token_bucket_fails_closed_and_counts() {
+        // effectively-zero refill rate: exactly `burst` admissions pass
+        let gov = Arc::new(TenantGovernor::new(TenantPolicy {
+            rate_per_s: Some(1e-12),
+            burst: 3.0,
+            max_in_flight: None,
+        }));
+        let t = TenantTag::new("flood").unwrap();
+        let mut ok = 0;
+        let mut rejected = 0;
+        let mut guards = Vec::new();
+        for _ in 0..10 {
+            match gov.admit(t) {
+                Ok(g) => {
+                    ok += 1;
+                    guards.push(g);
+                }
+                Err(Error::OverQuota(msg)) => {
+                    rejected += 1;
+                    assert!(msg.contains("flood"), "{msg}");
+                }
+                Err(e) => panic!("wrong error: {e}"),
+            }
+        }
+        assert_eq!((ok, rejected), (3, 7));
+        assert_eq!(gov.rejected_total(), 7);
+        // an unrelated tenant has its own bucket
+        let other = TenantTag::new("calm").unwrap();
+        assert!(gov.admit(other).is_ok());
+    }
+
+    #[test]
+    fn in_flight_cap_releases_on_drop() {
+        let gov = Arc::new(TenantGovernor::new(TenantPolicy {
+            rate_per_s: None,
+            burst: 8.0,
+            max_in_flight: Some(2),
+        }));
+        let t = TenantTag::new("t").unwrap();
+        let g1 = gov.admit(t).unwrap();
+        let _g2 = gov.admit(t).unwrap();
+        match gov.admit(t) {
+            Err(Error::OverQuota(msg)) => assert!(msg.contains("in-flight"), "{msg}"),
+            other => panic!("expected over-quota, got {other:?}"),
+        }
+        drop(g1);
+        assert!(gov.admit(t).is_ok(), "slot released by guard drop");
+    }
+
+    #[test]
+    fn transient_admission_skips_in_flight() {
+        let gov = Arc::new(TenantGovernor::new(TenantPolicy {
+            rate_per_s: None,
+            burst: 8.0,
+            max_in_flight: Some(1),
+        }));
+        let t = TenantTag::new("subs").unwrap();
+        let _g = gov.admit(t).unwrap();
+        // at the in-flight cap, but transient (subscribe) admission only
+        // consults the token bucket
+        assert!(gov.admit_transient(t).is_ok());
+        assert_eq!(gov.stats()[0].in_flight, 1);
+    }
+}

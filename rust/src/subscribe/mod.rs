@@ -41,13 +41,20 @@
 //! an out-of-order event — so no tile is ever left stale.  The same
 //! fallback caps footprint size ([`dirty::MAX_CLASSIFIED_COORDS`]): a
 //! bulk append recomputes everything instead of paying an O(rows ×
-//! coords) classification that would rival it.  Dirty
-//! tiles re-run the two-stage pipeline per tile on the coordinator's CPU
-//! pool — the same merged/grid kernels the serving path uses on mutated
-//! snapshots, consulting (and feeding) the shared `NeighborCache` — so a
-//! subscription's values are bit-identical to `Coordinator::interpolate`
-//! at the same snapshot.  PJRT is not used here: update tiles are small
-//! and mutated snapshots run on the CPU in the serving path too.
+//! coords) classification that would rival it.  Dirty tiles re-run the
+//! two-stage pipeline per tile — the same merged/grid kernels the
+//! serving path uses on mutated snapshots, consulting (and feeding) the
+//! shared `NeighborCache` — so a subscription's values are bit-identical
+//! to `Coordinator::interpolate` at the same snapshot.  Since v2.8 the
+//! per-tile recomputes are fanned across the coordinator's **shard
+//! worker pool** ([`crate::shard::ShardPool`]) as DRR-scheduled tasks
+//! billed to the subscription's tenant, then gathered back in tile order
+//! before any frame is sent — the `aidw-subs` thread still owns all
+//! state and serializes all pushes, so the frame stream is unchanged,
+//! but a mutation burst recomputes its tiles in parallel and one
+//! tenant's subscription churn cannot monopolize recompute capacity.
+//! PJRT is not used here: update tiles are small and mutated snapshots
+//! run on the CPU in the serving path too.
 //!
 //! Frame delivery is bounded (per-subscription `sync_channel`); a send to
 //! a full queue waits in a cancellable 200 µs poll loop, so a dropped or
@@ -670,9 +677,9 @@ fn start_subscription(shared: &Arc<Shared>, ns: NewSub) -> Option<SubState> {
         drop_slot(shared, st.id);
         return None;
     }
-    for tile in 0..st.plan.n_tiles() {
+    let tiles: Vec<usize> = (0..st.plan.n_tiles()).collect();
+    for (tile, tc) in compute_tiles_pooled(shared, &st, &snap, &tiles) {
         let range = st.plan.range(tile);
-        let tc = compute_tile(shared, &st.dataset, &snap, &st.resolved, &st.queries[range.clone()]);
         scatter(&mut st.chk, range.start, &tc);
         let frame = SubscriptionFrame::Tile(SubTile {
             update: 0,
@@ -704,7 +711,7 @@ fn start_subscription(shared: &Arc<Shared>, ns: NewSub) -> Option<SubState> {
 /// return — the lost-update race.  With it, the gap forces an all-dirty
 /// sweep, and the late event (stamp <= the swept `mut_seq`) is then
 /// provably already accounted for.
-fn push_update(shared: &Shared, st: &mut SubState, pending: &PendingDirt) -> bool {
+fn push_update(shared: &Arc<Shared>, st: &mut SubState, pending: &PendingDirt) -> bool {
     let live = match shared.registry.get(&st.dataset) {
         Ok(ds) => ds,
         Err(e) => {
@@ -760,9 +767,8 @@ fn push_update(shared: &Shared, st: &mut SubState, pending: &PendingDirt) -> boo
         .metrics
         .tiles_skipped_clean
         .fetch_add((n_tiles - dirty_tiles.len()) as u64, Ordering::Relaxed);
-    for &tile in &dirty_tiles {
+    for (tile, tc) in compute_tiles_pooled(shared, st, &snap, &dirty_tiles) {
         let range = st.plan.range(tile);
-        let tc = compute_tile(shared, &st.dataset, &snap, &st.resolved, &st.queries[range.clone()]);
         scatter(&mut st.chk, range.start, &tc);
         let frame = SubscriptionFrame::Tile(SubTile {
             update: st.update_seq,
@@ -803,6 +809,62 @@ fn push_update(shared: &Shared, st: &mut SubState, pending: &PendingDirt) -> boo
         );
     }
     true
+}
+
+/// Fan one update's dirty tiles across the shard worker pool and gather
+/// the results back **in tile order** (protocol v2.8).  Each tile
+/// recompute is one DRR-scheduled task billed to the subscription's
+/// tenant with cost = rows, so a tenant flooding the coordinator with
+/// mutations pays for its own recomputes and cannot starve another
+/// tenant's queries or subscriptions.  [`compute_tile`] is pure with
+/// respect to the snapshot (the shared `NeighborCache` it consults is
+/// thread-safe), so computing tiles concurrently and pushing them
+/// sequentially afterwards yields a frame stream byte-identical to the
+/// old inline loop.  If the pool has already shut down (coordinator
+/// teardown racing a final push), the tile is computed inline on the
+/// `aidw-subs` thread so the sweep still terminates correctly.
+fn compute_tiles_pooled(
+    shared: &Arc<Shared>,
+    st: &SubState,
+    snap: &Arc<LiveSnapshot>,
+    tiles: &[usize],
+) -> Vec<(usize, TileCompute)> {
+    let tenant = st.resolved.tenant.unwrap_or_default();
+    let (tx, rx) = mpsc::channel();
+    let mut pooled = 0u64;
+    let mut out: Vec<(usize, TileCompute)> = Vec::with_capacity(tiles.len());
+    for &tile in tiles {
+        let range = st.plan.range(tile);
+        let task_tx = tx.clone();
+        let task_shared = Arc::clone(shared);
+        let task_snap = Arc::clone(snap);
+        let dataset = st.dataset.clone();
+        let resolved = st.resolved;
+        let queries = st.queries[range.clone()].to_vec();
+        let submitted = shared.shard.pool().submit(tenant, range.len() as u64, move || {
+            let tc = compute_tile(&task_shared, &dataset, &task_snap, &resolved, &queries);
+            let _ = task_tx.send((tile, tc));
+        });
+        if submitted {
+            pooled += 1;
+        } else {
+            let tc =
+                compute_tile(shared, &st.dataset, snap, &st.resolved, &st.queries[range.clone()]);
+            out.push((tile, tc));
+        }
+    }
+    drop(tx);
+    for _ in 0..pooled {
+        // no lock is held here: the pool owns its queues and the sender
+        // side hangs up once every submitted task has run
+        match rx.recv() {
+            Ok(pair) => out.push(pair),
+            Err(_) => break,
+        }
+    }
+    shared.metrics.shard_sub_recomputes.fetch_add(pooled, Ordering::Relaxed);
+    out.sort_by_key(|&(tile, _)| tile);
+    out
 }
 
 /// The stage-1 plan a subscription's options imply at one snapshot —

@@ -1,0 +1,322 @@
+//! Integration: sharded stage 1 + multi-tenant admission (protocol v2.8).
+//!
+//! * **Property**: with sharding active, interpolated values are
+//!   bit-identical to a single-shard (passthrough) coordinator across
+//!   dense/local weighting, clean/mutated/recompacted dataset states,
+//!   and shard counts {1, 2, 7} — the kNN-halo scatter plus the exact
+//!   termination-ball containment check loses nothing;
+//! * **Escalation**: a raster whose termination balls outgrow their
+//!   band∪halo clip takes the cross-shard escape hatch
+//!   (`shard_escalated_rows > 0`) and *still* matches the oracle;
+//! * **Admission**: the token bucket is per-tenant and fail-closed — a
+//!   flooding tenant exhausts its own lane (structured
+//!   [`Error::OverQuota`], in process and as a `over_quota` error line
+//!   over a raw socket) without touching another tenant's budget;
+//! * **Fairness**: on a single shard-pool worker, deficit round-robin
+//!   interleaves a one-task tenant ahead of a 40-task flood instead of
+//!   draining FIFO;
+//! * **Subscriptions**: dirty-tile recomputes ride the shard pool
+//!   (`shard_sub_recomputes` advances with every pushed update).
+
+use std::sync::{mpsc, Arc, Mutex};
+
+use aidw::coordinator::{
+    Coordinator, CoordinatorConfig, EngineMode, InterpolationRequest, QueryOptions,
+};
+use aidw::live::LiveConfig;
+use aidw::service::Server;
+use aidw::shard::{ShardPool, TenantPolicy, TenantTag};
+use aidw::workload;
+use aidw::Error;
+
+fn shard_config(shards: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        engine_mode: EngineMode::CpuOnly,
+        // explicit compactions only: the test controls exactly when the
+        // snapshot folds back to a compacted (Grid-searchable) state
+        live: LiveConfig { auto_compact: false, ..Default::default() },
+        shards: Some(shards),
+        ..Default::default()
+    }
+}
+
+fn values(c: &Coordinator, queries: &[(f64, f64)], opts: &QueryOptions) -> Vec<f64> {
+    c.interpolate(InterpolationRequest::new("d", queries.to_vec()).with_options(opts.clone()))
+        .unwrap()
+        .values
+}
+
+/// The shard pool runs tasks asynchronously; poll instead of sleeping blind.
+fn wait_for(what: &str, mut cond: impl FnMut() -> bool) {
+    for _ in 0..1000 {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+#[test]
+fn sharded_stage1_is_bit_identical_to_unsharded_property() {
+    let data = workload::uniform_square(3000, 100.0, 9101);
+    let queries = workload::uniform_square(300, 100.0, 9102).xy();
+    let modes = [
+        ("dense", QueryOptions::new().k(12)),
+        ("local", QueryOptions::new().k(12).local_neighbors(24)),
+    ];
+    for count in [2usize, 7] {
+        // a fresh single-shard oracle per count: Some(1) forces the
+        // unsharded passthrough, so `count` vs 1 covers {1, 2, 7}
+        let oracle = Coordinator::new(shard_config(1)).unwrap();
+        oracle.register_dataset("d", data.clone()).unwrap();
+        let coord = Coordinator::new(shard_config(count)).unwrap();
+        coord.register_dataset("d", data.clone()).unwrap();
+
+        // clean state: compacted snapshot, grid search, sharding active
+        for (label, opts) in &modes {
+            assert_eq!(
+                values(&coord, &queries, opts),
+                values(&oracle, &queries, opts),
+                "clean {label} raster diverged at {count} shards"
+            );
+        }
+        let after_clean = coord.metrics().shard_stage1_tasks;
+        assert!(
+            after_clean >= count as u64,
+            "{count}-shard sweeps must run per-shard pool tasks, saw {after_clean}"
+        );
+
+        // mutated state: the overlay forces the Merged search, which
+        // takes the unsharded passthrough — values must still agree
+        let burst = workload::uniform_square(60, 30.0, 9103);
+        coord.append_points("d", burst.clone()).unwrap();
+        oracle.append_points("d", burst).unwrap();
+        coord.remove_points("d", &[5, 17, 123]).unwrap();
+        oracle.remove_points("d", &[5, 17, 123]).unwrap();
+        for (label, opts) in &modes {
+            assert_eq!(
+                values(&coord, &queries, opts),
+                values(&oracle, &queries, opts),
+                "mutated {label} raster diverged at {count} shards"
+            );
+        }
+
+        // recompacted: back on the sharded grid path over the folded set
+        coord.compact_dataset("d").unwrap();
+        oracle.compact_dataset("d").unwrap();
+        for (label, opts) in &modes {
+            assert_eq!(
+                values(&coord, &queries, opts),
+                values(&oracle, &queries, opts),
+                "recompacted {label} raster diverged at {count} shards"
+            );
+        }
+        assert!(
+            coord.metrics().shard_stage1_tasks > after_clean,
+            "post-compaction sweeps must shard again"
+        );
+        assert_eq!(
+            oracle.metrics().shard_stage1_tasks,
+            0,
+            "the single-shard oracle never touches the pool"
+        );
+    }
+}
+
+#[test]
+fn boundary_rasters_escalate_cross_shard_and_stay_exact() {
+    // k = 64 over 800 points: the exact termination ball covers ~8% of
+    // the domain, far wider than one of 7 bands plus its 2-row halo, so
+    // rows near band edges must take the whole-grid escape hatch
+    let data = workload::uniform_square(800, 100.0, 9201);
+    let queries = workload::uniform_square(400, 100.0, 9202).xy();
+    let opts = QueryOptions::new().k(64).local_neighbors(64);
+    let oracle = Coordinator::new(shard_config(1)).unwrap();
+    oracle.register_dataset("d", data.clone()).unwrap();
+    let coord = Coordinator::new(shard_config(7)).unwrap();
+    coord.register_dataset("d", data).unwrap();
+
+    assert_eq!(
+        values(&coord, &queries, &opts),
+        values(&oracle, &queries, &opts),
+        "escalated rows must gather bit-identically"
+    );
+    let m = coord.metrics();
+    assert!(m.shard_stage1_tasks > 0, "the sweep must actually shard");
+    assert!(
+        m.shard_escalated_rows > 0,
+        "k=64 termination balls must escape a 7-band clip somewhere"
+    );
+    assert_eq!(oracle.metrics().shard_escalated_rows, 0);
+}
+
+#[test]
+fn tenant_quota_is_per_lane_and_fail_closed() {
+    // a near-zero refill rate makes the bucket exactly its burst: two
+    // admits per tenant, then fail-closed rejection
+    let cfg = CoordinatorConfig {
+        tenant_policy: TenantPolicy {
+            rate_per_s: Some(1e-9),
+            burst: 2.0,
+            max_in_flight: None,
+        },
+        ..shard_config(2)
+    };
+    let coord = Coordinator::new(cfg).unwrap();
+    coord
+        .register_dataset("d", workload::uniform_square(500, 100.0, 9211))
+        .unwrap();
+    let queries = workload::uniform_square(16, 100.0, 9212).xy();
+    let flood = QueryOptions::new().tenant(TenantTag::new("flood").unwrap());
+    let calm = QueryOptions::new().tenant(TenantTag::new("calm").unwrap());
+
+    values(&coord, &queries, &flood);
+    values(&coord, &queries, &flood);
+    let err = coord
+        .interpolate(InterpolationRequest::new("d", queries.clone()).with_options(flood.clone()))
+        .unwrap_err();
+    match &err {
+        Error::OverQuota(msg) => assert!(msg.contains("flood"), "{msg}"),
+        other => panic!("expected OverQuota, got {other:?}"),
+    }
+
+    // the flooding lane's exhaustion is invisible to every other lane
+    values(&coord, &queries, &calm);
+    values(&coord, &queries, &QueryOptions::new()); // anonymous lane
+
+    let stats = coord.tenant_stats();
+    let lane = |t: &str| stats.iter().find(|s| s.tenant == t).unwrap();
+    assert_eq!((lane("flood").admitted, lane("flood").rejected), (2, 1));
+    assert_eq!((lane("calm").admitted, lane("calm").rejected), (1, 0));
+    assert_eq!(lane("").admitted, 1, "anonymous tenant books its own lane");
+    assert!(stats.iter().all(|s| s.in_flight == 0), "slots released: {stats:?}");
+    assert_eq!(coord.metrics().over_quota, 1);
+}
+
+#[test]
+fn over_quota_is_a_structured_error_on_the_wire() {
+    use std::io::{BufRead, Write};
+    let cfg = CoordinatorConfig {
+        engine_mode: EngineMode::CpuOnly,
+        tenant_policy: TenantPolicy {
+            rate_per_s: Some(1e-9),
+            burst: 2.0,
+            max_in_flight: None,
+        },
+        ..Default::default()
+    };
+    let coord = Arc::new(Coordinator::new(cfg).unwrap());
+    let server = Server::start(coord, "127.0.0.1:0").unwrap();
+    let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+
+    stream
+        .write_all(b"{\"op\":\"register\",\"dataset\":\"d\",\"xs\":[0,1,0,1],\"ys\":[0,0,1,1],\"zs\":[1,2,3,4]}\n")
+        .unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "{line}");
+
+    // the flooding tenant spends its burst, then gets a structured
+    // error *line* — fail-closed, but never a dropped connection
+    let flood = b"{\"op\":\"interpolate\",\"dataset\":\"d\",\"qx\":[0.5],\"qy\":[0.5],\"k\":2,\"tenant\":\"flood\"}\n";
+    for round in 0..2 {
+        stream.write_all(flood).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true"), "round {round}: {line}");
+    }
+    stream.write_all(flood).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let v = aidw::jsonio::Json::parse(line.trim_end()).unwrap();
+    assert_eq!(v.get("ok").as_bool(), Some(false), "{line}");
+    assert_eq!(v.get("code").as_str(), Some("over_quota"), "{line}");
+    assert!(v.get("error").as_str().unwrap().contains("flood"), "{line}");
+
+    // same socket, different tenant: admitted — quota is per lane
+    stream
+        .write_all(b"{\"op\":\"interpolate\",\"dataset\":\"d\",\"qx\":[0.5],\"qy\":[0.5],\"k\":2,\"tenant\":\"calm\"}\n")
+        .unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let v = aidw::jsonio::Json::parse(line.trim_end()).unwrap();
+    assert_eq!(v.get("ok").as_bool(), Some(true), "{line}");
+    assert_eq!(
+        v.get("options").get("tenant").as_str(),
+        Some("calm"),
+        "the tenant rides the resolved-options echo: {line}"
+    );
+}
+
+#[test]
+fn drr_scheduling_keeps_a_flooded_tenant_from_starving_another() {
+    // one worker, quantum == task cost: every scheduler visit grants a
+    // lane exactly one task, so round-robin order is fully deterministic
+    let pool = ShardPool::new(1, 8);
+    let flood = TenantTag::new("flood").unwrap();
+    let calm = TenantTag::new("calm").unwrap();
+    let order: Arc<Mutex<Vec<&'static str>>> = Arc::new(Mutex::new(Vec::new()));
+
+    // the blocker parks the single worker so the queue builds up behind
+    // it and both lanes are populated before anything is scheduled
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    assert!(pool.submit(TenantTag::new("gate").unwrap(), 1, move || {
+        gate_rx.recv().ok();
+    }));
+    for _ in 0..40 {
+        let o = Arc::clone(&order);
+        assert!(pool.submit(flood, 8, move || o.lock().unwrap().push("flood")));
+    }
+    let o = Arc::clone(&order);
+    assert!(pool.submit(calm, 8, move || o.lock().unwrap().push("calm")));
+
+    gate_tx.send(()).unwrap();
+    wait_for("the queued tasks to drain", || pool.tasks_run() >= 42);
+    pool.shutdown();
+
+    let order = order.lock().unwrap();
+    assert_eq!(order.iter().filter(|s| **s == "flood").count(), 40);
+    let calm_at = order.iter().position(|s| *s == "calm").unwrap();
+    assert!(
+        calm_at <= 2,
+        "DRR must interleave the one-task lane with the flood, ran at {calm_at}: FIFO \
+         would have run it last"
+    );
+}
+
+#[test]
+fn subscription_dirty_tiles_ride_the_shard_pool() {
+    let c = Coordinator::new(shard_config(2)).unwrap();
+    c.register_dataset("p", workload::uniform_square(2000, 100.0, 9301))
+        .unwrap();
+    let queries = workload::uniform_square(128, 100.0, 9302).xy();
+    let opts = QueryOptions::new().k(16).local_neighbors(32).tile_rows(32);
+    let mut sub = c
+        .subscribe(InterpolationRequest::new("p", queries).with_options(opts))
+        .unwrap();
+
+    // update 0: all 4 initial tiles fan out as pool tasks
+    sub.next_update().unwrap();
+    let m0 = c.metrics();
+    assert!(
+        m0.shard_sub_recomputes >= 4,
+        "initial tiles must compute on the shard pool, saw {}",
+        m0.shard_sub_recomputes
+    );
+
+    // a localized burst dirties at least one tile; its recompute is
+    // billed to the pool too
+    c.append_points("p", workload::uniform_square(30, 10.0, 9303))
+        .unwrap();
+    sub.next_update().unwrap();
+    let m1 = c.metrics();
+    assert!(
+        m1.shard_sub_recomputes > m0.shard_sub_recomputes,
+        "dirty-tile recomputes must ride the pool ({} -> {})",
+        m0.shard_sub_recomputes,
+        m1.shard_sub_recomputes
+    );
+    assert!(m1.tiles_pushed > m0.tiles_pushed);
+}
